@@ -1,0 +1,54 @@
+//! Autonomous-system example (paper §3.2, Fig. 3b).
+//!
+//! A 30 fps camera stream with dynamically triggered vision/ML tasks,
+//! comparing the baseline CGRA (one task at a time, AXI4-Lite DPR)
+//! against flexible-shape regions with fast-DPR — the paper's 60.8 %
+//! latency-reduction experiment, plus a live render of the slice maps
+//! over the first frames.
+//!
+//! ```sh
+//! cargo run --release --example autonomous_edge
+//! ```
+
+use cgra_mte::config::{presets, RegionPolicyKind, WorkloadConfig};
+use cgra_mte::metrics::Table;
+use cgra_mte::sim::run_edge;
+
+fn main() -> cgra_mte::Result<()> {
+    let mut table = Table::new(
+        "autonomous system — mean frame latency (600 frames @ 30 fps)",
+        &["mechanism", "DPR", "mean (ms)", "p99 (ms)", "reconfig share", "vs baseline"],
+    );
+
+    let mut baseline_ms = None;
+    for policy in RegionPolicyKind::ALL {
+        let mut cfg = presets::edge_scenario(policy);
+        if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+            e.frames = 600;
+        }
+        let clk = cfg.arch.core_clock_mhz;
+        let report = run_edge(&cfg)?;
+        let mean_ms = report.mean_latency_ms(clk);
+        let p99_ms = report.latency.p99_total() / (clk as f64 * 1e3);
+        if policy == RegionPolicyKind::Baseline {
+            baseline_ms = Some(mean_ms);
+        }
+        let vs = baseline_ms
+            .map(|b| format!("{:+.1}%", (mean_ms / b - 1.0) * 100.0))
+            .unwrap_or_default();
+        table.row(&[
+            policy.name().to_string(),
+            format!("{:?}", report.dpr_mode),
+            format!("{mean_ms:.3}"),
+            format!("{p99_ms:.3}"),
+            format!("{:.1}%", report.latency.reconfig_share() * 100.0),
+            vs,
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\npaper's Fig. 5: flexible+fast-DPR cuts mean latency ~60.8% and\n\
+         reconfiguration falls from 14.4% of latency to <5%."
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart: the hardware abstraction in five minutes.
+//!
+//! Builds the paper's CGRA, shows the slice abstraction, allocates
+//! execution regions under the four mechanisms (Fig. 2), runs a fast-DPR
+//! reconfiguration, and simulates a small multi-task burst.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use cgra_mte::abstraction::SliceDemand;
+use cgra_mte::arch::Geometry;
+use cgra_mte::compiler::generate_bitstream;
+use cgra_mte::config::{presets, ArchConfig, RegionPolicyKind, SchedulerConfig};
+use cgra_mte::dpr::{DprEngine, DprMode};
+use cgra_mte::regions::RegionManager;
+use cgra_mte::sim::run_cloud;
+use cgra_mte::tasks::{TaskId, TaskLibrary};
+
+fn main() -> cgra_mte::Result<()> {
+    // 1. The baseline CGRA (paper §2.1, Fig. 1): 32×16 tiles, 32 GLB banks.
+    let arch = ArchConfig::default();
+    let geom = Geometry::new(&arch)?;
+    println!(
+        "CGRA: {} PE + {} MEM tiles, {} GLB banks ⇒ {} array-slices + {} GLB-slices\n",
+        arch.pe_tiles(),
+        arch.mem_tiles(),
+        arch.glb_banks,
+        arch.array_slices(),
+        arch.glb_slices()
+    );
+    assert!(geom.slices_homogeneous(), "slices must be interchangeable");
+
+    // 2. The abstraction (§2.2): tasks are quantized into slice demands.
+    let lib = TaskLibrary::table1();
+    let conv2 = lib.get(&TaskId::new("resnet18.conv2_x"))?;
+    for v in &conv2.variants {
+        println!(
+            "conv2_x variant {}: {:>3} MACs/cycle on {} (exec {:.2} ms @500 MHz)",
+            v.ver,
+            v.throughput,
+            v.demand,
+            conv2.exec_cycles(v) as f64 / 500e3
+        );
+    }
+
+    // 3. Flexible-shape regions (§2.3): GLB and array decoupled.
+    let sched_cfg = SchedulerConfig::default();
+    let mut mgr = RegionManager::new(&arch, &sched_cfg);
+    let r1 = mgr
+        .try_allocate(&SliceDemand::new(20, 2)) // conv5_x a: GLB-heavy
+        .expect_allocated("conv5_x");
+    let r2 = mgr
+        .try_allocate(&SliceDemand::new(7, 4)) // harris b: array-heavy
+        .expect_allocated("harris b");
+    println!("\ncoexisting regions (impossible under coupled mechanisms):");
+    println!("  {r1}\n  {r2}");
+    println!("{}", mgr.render());
+
+    // 4. fast-DPR (§2.3): preloaded, region-agnostic, microseconds.
+    let dpr_cfg = cgra_mte::config::DprConfig::default();
+    let bs = generate_bitstream("resnet18.conv2_x", 'a', &SliceDemand::new(7, 2), &arch, &dpr_cfg);
+    let mut fast = DprEngine::new(&arch, &dpr_cfg, DprMode::Fast);
+    let mut axi = DprEngine::new(&arch, &dpr_cfg, DprMode::Axi4Lite);
+    fast.preload(&bs);
+    let dest = r1.array[0];
+    let f = fast.reconfigure(&bs, &dest);
+    let a = axi.reconfigure(&bs, &dest);
+    println!(
+        "DPR for a 2-slice bitstream: AXI4-Lite {:.1} µs vs fast-DPR {:.1} µs ({}x)",
+        a.cycles as f64 / 500.0,
+        f.cycles as f64 / 500.0,
+        a.cycles / f.cycles.max(1)
+    );
+
+    // 5. A small cloud burst end-to-end (timing model only; see
+    //    examples/cloud_multitenant.rs for the PJRT functional path).
+    let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+    if let cgra_mte::config::WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = 300.0;
+    }
+    let report = run_cloud(&cfg)?;
+    println!(
+        "\n300 ms cloud burst (flexible): {} requests, mean NTAT {:.2}, array util {:.0}%",
+        report.completed,
+        report.mean_ntat_across_apps(),
+        report.array_utilization * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! TCP client demo: drive the coordinator's serving front end-to-end.
+//!
+//! Starts an in-process [`cgra_mte::coordinator::Server`] on an ephemeral
+//! port (the same binary `cgra-mte serve-tcp` exposes), then acts as an
+//! external tenant: submits a burst of requests over the socket and
+//! prints the replies — scheduling, slice allocation, fast-DPR accounting
+//! and PJRT execution all happen server-side per request.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example tcp_client
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+
+use cgra_mte::config::presets;
+use cgra_mte::coordinator::Server;
+
+fn main() -> cgra_mte::Result<()> {
+    let mut cfg = presets::paper_default();
+    cfg.artifacts_dir = std::env::var("CGRA_MTE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    println!("starting server (compiles all artifacts once)...");
+    let server = Server::start(&cfg, "127.0.0.1:0")?;
+    println!("server on {}\n", server.addr);
+
+    let stream = std::net::TcpStream::connect(server.addr)
+        .map_err(|e| cgra_mte::Error::io(server.addr.to_string(), e))?;
+    let mut writer = stream.try_clone().map_err(|e| cgra_mte::Error::io("clone", e))?;
+    let mut reader = BufReader::new(stream);
+
+    let mut send = |line: &str| -> cgra_mte::Result<String> {
+        writer
+            .write_all(format!("{line}\n").as_bytes())
+            .map_err(|e| cgra_mte::Error::io("write", e))?;
+        let mut reply = String::new();
+        reader
+            .read_line(&mut reply)
+            .map_err(|e| cgra_mte::Error::io("read", e))?;
+        Ok(reply.trim_end().to_string())
+    };
+
+    // one request per tenant/app, plus a deliberate protocol error
+    for line in [
+        "SUBMIT 0 resnet18",
+        "SUBMIT 1 mobilenet",
+        "SUBMIT 2 camera",
+        "SUBMIT 3 harris",
+        "SUBMIT 7 camera", // bad tenant → ERR
+        "STATS",
+    ] {
+        let reply = send(line)?;
+        println!("> {line}\n< {reply}");
+    }
+    let bye = send("QUIT")?;
+    println!("> QUIT\n< {bye}");
+
+    server.shutdown();
+    println!("\nserver drained and shut down cleanly");
+    Ok(())
+}

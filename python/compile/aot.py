@@ -1,0 +1,381 @@
+"""AOT lowering: JAX/Pallas task graphs → HLO text artifacts + manifest.
+
+This is the only place Python touches the system.  ``make artifacts`` runs
+it once; the Rust coordinator (rust/src/runtime) then loads
+``artifacts/*.hlo.txt`` through the PJRT C API and Python never appears on
+the request path again.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+IMPORTANT — weights are runtime *arguments*, never baked constants: the
+HLO text printer elides large literals (``constant({...})``), so a baked
+weight tensor silently round-trips as zeros.  Every input (activations
+and weights) is instead synthesized deterministically on both sides from
+the same low-discrepancy fill (`golden_input`, mirrored bit-for-bit by
+rust/src/runtime/inputs.rs), and the manifest records a golden output
+checksum for end-to-end verification.
+
+One artifact is emitted per Table 1 task *variant*.  Variants of the same
+task share weight seeds and differ in their batch axis — the functional
+analogue of the paper's unroll factor; the *timing* difference between
+variants lives in the Rust task library.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+MANIFEST_VERSION = 3
+
+# ---------------------------------------------------------------------------
+# HLO text emission (the aot_recipe.md / xla-example bridge)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def assert_no_elided_constants(text: str, name: str) -> None:
+    """Guard against the large-constant elision failure mode."""
+    if "constant({...})" in text or "constant({ ... })" in text:
+        raise RuntimeError(
+            f"artifact {name}: HLO text contains an elided large constant; "
+            "pass the tensor as an argument instead of baking it"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Deterministic input synthesis (mirrored by rust/src/runtime/inputs.rs)
+# ---------------------------------------------------------------------------
+
+_PHI = 0.6180339887498949  # 1/golden-ratio; low-discrepancy fill
+_SALT_STRIDE = 1_000_003   # distinct streams per argument index
+
+
+def golden_input(
+    shape: tuple[int, ...], *, lo: float = -1.0, hi: float = 1.0, salt: int = 0
+) -> np.ndarray:
+    """Low-discrepancy deterministic fill, bit-identical in Rust.
+
+    value(i) = lo + (hi-lo) * frac((salt*1_000_003 + i + 1) * PHI),
+    computed in f64 and cast to f32.
+    """
+    n = int(np.prod(shape)) if shape else 1
+    idx = np.arange(1, n + 1, dtype=np.float64) + float(salt * _SALT_STRIDE)
+    frac = np.modf(idx * _PHI)[0]
+    vals = lo + (hi - lo) * frac
+    return vals.astype(np.float32).reshape(shape)
+
+
+def checksum(arr: np.ndarray) -> dict:
+    """Summary stats for golden verification (tolerant compare in Rust)."""
+    flat = np.asarray(arr, dtype=np.float64).ravel()
+    return {
+        "sum": float(flat.sum()),
+        "abs_sum": float(np.abs(flat).sum()),
+        "head": [float(v) for v in flat[:8]],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TensorIn:
+    """One runtime input: shape + deterministic fill range."""
+
+    shape: tuple[int, ...]
+    lo: float = -1.0
+    hi: float = 1.0
+    role: str = "activation"  # or "weight" — documentation only
+
+
+def weight_in(shape: tuple[int, ...], fan_in: int) -> TensorIn:
+    """He-scaled uniform fill for a weight tensor."""
+    s = float(np.sqrt(2.0 / max(fan_in, 1)))
+    return TensorIn(shape, lo=-s, hi=s, role="weight")
+
+
+@dataclass
+class Artifact:
+    """One AOT-lowered task variant."""
+
+    name: str            # e.g. "resnet_conv2_b"
+    task: str            # Table-1 task id, e.g. "resnet18.conv2_x"
+    variant: str         # "a" | "b" | "c"
+    fn: Callable         # positional args match `inputs`
+    inputs: list[TensorIn]
+    tags: tuple[str, ...] = ()
+
+
+def _resnet_artifacts(size: str) -> list[Artifact]:
+    """ResNet-18 conv2_x..conv5_x stages, variants a (batch 1) / b (batch 4).
+
+    Spatial dims and channel counts are scaled down from the paper's
+    224×224 deployment so the CPU-PJRT functional path stays fast; the
+    stage structure (two basic blocks, downsampling at stage entry for
+    conv3..5) is faithful.
+    """
+    spec = {
+        # stage: (cin, cout, hw_in, downsample)
+        "small": {
+            "conv2": (16, 16, 16, False),
+            "conv3": (16, 32, 16, True),
+            "conv4": (32, 64, 8, True),
+            "conv5": (64, 128, 4, True),
+        },
+        "tiny": {
+            "conv2": (8, 8, 8, False),
+            "conv3": (8, 16, 8, True),
+            "conv4": (16, 32, 4, True),
+            "conv5": (32, 64, 4, True),
+        },
+    }[size]
+    arts = []
+    for stage, (cin, cout, hw, down) in spec.items():
+        # weight argument order is fixed: b1w1, b1w2, [b1proj], b2w1, b2w2
+        w_ins = [
+            weight_in((3, 3, cin, cout), 9 * cin),
+            weight_in((3, 3, cout, cout), 9 * cout),
+        ]
+        if down:
+            w_ins.append(weight_in((1, 1, cin, cout), cin))
+        w_ins += [
+            weight_in((3, 3, cout, cout), 9 * cout),
+            weight_in((3, 3, cout, cout), 9 * cout),
+        ]
+
+        def make(down=down):
+            def fn(x, *ws):
+                if down:
+                    params = {
+                        "b1w1": ws[0], "b1w2": ws[1], "b1proj": ws[2],
+                        "b2w1": ws[3], "b2w2": ws[4],
+                    }
+                else:
+                    params = {"b1w1": ws[0], "b1w2": ws[1], "b2w1": ws[2], "b2w2": ws[3]}
+                return model.resnet_stage(x, params, downsample=down)
+
+            return fn
+
+        for variant, batch in (("a", 1), ("b", 4)):
+            arts.append(
+                Artifact(
+                    name=f"resnet_{stage}_{variant}",
+                    task=f"resnet18.{stage}_x",
+                    variant=variant,
+                    fn=make(),
+                    inputs=[TensorIn((batch, hw, hw, cin))] + list(w_ins),
+                    tags=("ml", "resnet18"),
+                )
+            )
+    return arts
+
+
+def _mobilenet_artifacts(size: str) -> list[Artifact]:
+    """MobileNet conv_dw_pw stages 2/3/4, variants a / b (Table 1)."""
+    spec = {
+        "small": {
+            "dw_pw_2": (16, 32, 16),
+            "dw_pw_3": (32, 64, 8),
+            "dw_pw_4": (64, 128, 4),
+        },
+        "tiny": {
+            "dw_pw_2": (8, 16, 8),
+            "dw_pw_3": (16, 32, 4),
+            "dw_pw_4": (32, 64, 4),
+        },
+    }[size]
+    arts = []
+    for stage, (cin, cout, hw) in spec.items():
+
+        def fn(x, wdw, wpw):
+            return model.batched(lambda xi: model.mobilenet_dw_pw(xi, wdw, wpw))(x)
+
+        w_ins = [weight_in((3, 3, cin), 9), weight_in((cin, cout), cin)]
+        for variant, batch in (("a", 1), ("b", 2)):
+            arts.append(
+                Artifact(
+                    name=f"mobilenet_{stage}_{variant}",
+                    task=f"mobilenet.conv_{stage}_x",
+                    variant=variant,
+                    fn=fn,
+                    inputs=[TensorIn((batch, hw, hw, cin))] + list(w_ins),
+                    tags=("ml", "mobilenet"),
+                )
+            )
+    return arts
+
+
+def _camera_artifacts(size: str) -> list[Artifact]:
+    hw = {"small": 64, "tiny": 32}[size]
+    fn = model.batched(model.camera_pipeline)
+    arts = []
+    for variant, batch in (("a", 1), ("b", 4)):
+        arts.append(
+            Artifact(
+                name=f"camera_pipeline_{variant}",
+                task="camera.pipeline",
+                variant=variant,
+                fn=fn,
+                inputs=[TensorIn((batch, hw, hw), lo=0.0, hi=1.0)],
+                tags=("image", "camera"),
+            )
+        )
+    return arts
+
+
+def _harris_artifacts(size: str) -> list[Artifact]:
+    hw = {"small": 64, "tiny": 32}[size]
+    fn = model.batched(model.harris_detect)
+    arts = []
+    for variant, batch in (("a", 1), ("b", 2), ("c", 4)):
+        arts.append(
+            Artifact(
+                name=f"harris_{variant}",
+                task="harris.corner",
+                variant=variant,
+                fn=fn,
+                inputs=[TensorIn((batch, hw, hw), lo=0.0, hi=1.0)],
+                tags=("image", "harris"),
+            )
+        )
+    return arts
+
+
+def _micro_artifacts(size: str) -> list[Artifact]:
+    """Plain Pallas-matmul artifact for runtime microbenchmarks."""
+    n = {"small": 128, "tiny": 32}[size]
+
+    def fn(x, w):
+        from .kernels import matmul_mac
+
+        return matmul_mac(x, w)
+
+    return [
+        Artifact(
+            name=f"matmul_{n}",
+            task="micro.matmul",
+            variant="a",
+            fn=fn,
+            inputs=[TensorIn((n, n)), TensorIn((n, n), role="weight")],
+            tags=("micro",),
+        )
+    ]
+
+
+def build_registry(size: str) -> list[Artifact]:
+    return (
+        _resnet_artifacts(size)
+        + _mobilenet_artifacts(size)
+        + _camera_artifacts(size)
+        + _harris_artifacts(size)
+        + _micro_artifacts(size)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def golden_args(art: Artifact) -> list[np.ndarray]:
+    """Deterministic argument set; arg k uses salt k."""
+    return [
+        golden_input(t.shape, lo=t.lo, hi=t.hi, salt=k)
+        for k, t in enumerate(art.inputs)
+    ]
+
+
+def lower_artifact(art: Artifact, out_dir: str) -> dict:
+    """Lower one artifact; returns its manifest entry."""
+    specs = [jax.ShapeDtypeStruct(t.shape, jnp.float32) for t in art.inputs]
+    lowered = jax.jit(art.fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    assert_no_elided_constants(text, art.name)
+    fname = f"{art.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    # Golden run on the deterministic inputs for end-to-end verification.
+    args = golden_args(art)
+    y = np.asarray(jax.jit(art.fn)(*args))
+
+    return {
+        "name": art.name,
+        "file": fname,
+        "task": art.task,
+        "variant": art.variant,
+        "tags": list(art.tags),
+        "inputs": [
+            {
+                "shape": list(t.shape),
+                "dtype": "f32",
+                "range": [t.lo, t.hi],
+                "salt": k,
+                "role": t.role,
+            }
+            for k, t in enumerate(art.inputs)
+        ],
+        "output": {"shape": list(y.shape), "dtype": "f32"},
+        "golden": checksum(y),
+        "hlo_bytes": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--size", choices=("small", "tiny"), default="small")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    registry = build_registry(args.size)
+    if args.only:
+        registry = [a for a in registry if args.only in a.name]
+
+    entries = []
+    for art in registry:
+        entry = lower_artifact(art, args.out_dir)
+        entries.append(entry)
+        print(
+            f"  {art.name:<24} in={entry['inputs'][0]['shape']} "
+            f"out={entry['output']['shape']} hlo={entry['hlo_bytes']//1024}KiB "
+            f"args={len(entry['inputs'])}"
+        )
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "size": args.size,
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

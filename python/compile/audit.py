@@ -1,0 +1,91 @@
+"""L2 HLO audit: op-level cost profile of the lowered artifacts.
+
+Part of the §Perf method (EXPERIMENTS.md): after lowering, inspect each
+artifact's HLO for the structures that dominate execution under the
+pinned XLA 0.5.1 CPU backend — while-loops (interpret-mode Pallas grids),
+dynamic-update-slices (grid output writes), convolutions (accidental —
+e.g. `conv_general_dilated_patches` lowers to a real convolution), and
+transcendentals.  Run:
+
+    python -m compile.audit [--out-dir ../artifacts]
+
+The audit enforces two invariants the perf pass established:
+  * no artifact contains an elided large constant, and
+  * no artifact lowers to a `convolution` op (conv must go through the
+    Pallas matmul path, not a library conv).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+
+INTERESTING = (
+    "while(",
+    "dynamic-update-slice",
+    "dynamic-slice",
+    "convolution(",
+    "dot(",
+    "power(",
+    "concatenate(",
+    "fusion(",
+)
+
+
+def audit_text(name: str, text: str) -> dict:
+    """Count interesting ops in one HLO text module."""
+    counts = {op.strip("("): text.count(op) for op in INTERESTING}
+    counts["lines"] = text.count("\n")
+    counts["bytes"] = len(text)
+    counts["elided_constants"] = len(re.findall(r"constant\(\{\s*\.\.\.\s*\}\)", text))
+    counts["name"] = name
+    return counts
+
+
+def check(counts: dict) -> list[str]:
+    """Invariant violations for one artifact."""
+    problems = []
+    if counts["elided_constants"]:
+        problems.append(f"{counts['name']}: {counts['elided_constants']} elided constants")
+    if counts["convolution"]:
+        problems.append(
+            f"{counts['name']}: {counts['convolution']} convolution ops "
+            "(patch extraction must use slices, not conv)"
+        )
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    header = f"{'artifact':<24} {'while':>5} {'dus':>4} {'dyn-slice':>9} {'dot':>4} {'conv':>4} {'pow':>4} {'KiB':>5}"
+    print(header)
+    print("-" * len(header))
+    problems: list[str] = []
+    for fname in sorted(os.listdir(args.out_dir)):
+        if not fname.endswith(".hlo.txt"):
+            continue
+        with open(os.path.join(args.out_dir, fname)) as f:
+            text = f.read()
+        c = audit_text(fname.removesuffix(".hlo.txt"), text)
+        problems += check(c)
+        print(
+            f"{c['name']:<24} {c['while']:>5} {c['dynamic-update-slice']:>4} "
+            f"{c['dynamic-slice']:>9} {c['dot']:>4} {c['convolution']:>4} "
+            f"{c['power']:>4} {c['bytes'] // 1024:>5}"
+        )
+    if problems:
+        print("\nINVARIANT VIOLATIONS:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall artifacts pass the L2 audit")
+
+
+if __name__ == "__main__":
+    main()

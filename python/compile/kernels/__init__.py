@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels for the CGRA-MTE benchmark tasks.
+
+Each kernel is the compute hot-spot of one benchmark task from Table 1 of
+the paper, rethought for a TPU-shaped machine (see DESIGN.md
+S Hardware-Adaptation): the CGRA's PE-tile MAC fabric maps onto MXU matmul
+tiles, MEM-tile scratchpads onto VMEM blocks, and the GLB bank streaming
+schedule onto ``BlockSpec`` index maps.
+
+All kernels are lowered with ``interpret=True`` -- the CPU PJRT plugin used
+by the Rust runtime cannot execute Mosaic custom-calls.  Correctness is
+asserted against the pure-jnp oracles in :mod:`ref` by the pytest suite.
+"""
+
+from .matmul import matmul_mac
+from .conv2d import conv2d_im2col
+from .depthwise import depthwise_conv
+from .demosaic import demosaic_rggb
+from .harris import harris_response
+
+__all__ = [
+    "matmul_mac",
+    "conv2d_im2col",
+    "depthwise_conv",
+    "demosaic_rggb",
+    "harris_response",
+]

@@ -1,0 +1,88 @@
+"""2-D convolution lowered to im2col × Pallas matmul.
+
+On the paper's CGRA a conv layer is mapped spatially: PE tiles form a MAC
+network fed by MEM-tile line buffers.  On a TPU-shaped machine the same
+arithmetic is expressed as an im2col patch-matrix multiplied on the MXU —
+the ``MACs/cycle`` column of Table 1 corresponds to the matmul tile
+throughput here (DESIGN.md §Hardware-Adaptation).
+
+The patch extraction is plain lax (it lowers to cheap reshapes/slices and
+fuses in XLA); the arithmetically dominant matmul runs in the Pallas MAC
+kernel from :mod:`matmul`.
+"""
+
+import functools
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+
+from .matmul import matmul_mac
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> jax.Array:
+    """NHWC image → (N*OH*OW, KH*KW*C) patch matrix.
+
+    Built from `kh*kw` strided slices concatenated on the channel axis
+    (KH,KW,C feature order, matching a flattened HWIO weight).  Perf note
+    (EXPERIMENTS.md §Perf): `lax.conv_general_dilated_patches` lowers to
+    a real convolution, which the pinned XLA 0.5.1 CPU backend executes
+    ~10x slower than these pure slice/concat ops.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    hp, wp = h + 2 * padding, w + 2 * padding
+    oh = (hp - kh) // stride + 1
+    ow = (wp - kw) // stride + 1
+    taps = []
+    for di in range(kh):
+        for dj in range(kw):
+            taps.append(
+                lax.slice(
+                    xp,
+                    (0, di, dj, 0),
+                    (n, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    patches = jnp.concatenate(taps, axis=-1)  # (n, oh, ow, kh*kw*c)
+    return patches.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "block_m", "block_n", "block_k", "interpret"),
+)
+def conv2d_im2col(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """NHWC conv with HWIO weights via im2col + Pallas MAC matmul.
+
+    ``x``: (N, H, W, C_in); ``w``: (KH, KW, C_in, C_out).
+    Returns (N, OH, OW, C_out) float32.
+    """
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d_im2col expects NHWC x HWIO, got {x.shape}, {w.shape}")
+    kh, kw, cin, cout = w.shape
+    if x.shape[-1] != cin:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+
+    cols, (n, oh, ow) = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = matmul_mac(
+        cols,
+        wmat,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out.reshape(n, oh, ow, cout)

@@ -1,0 +1,108 @@
+"""Bayer RGGB bilinear demosaic Pallas kernel (camera-pipeline front end).
+
+The camera-pipeline task in Table 1 ingests RAW sensor data in RGGB Bayer
+layout and produces RGB.  On the CGRA this is a line-buffered stencil over
+MEM tiles; here the kernel reconstructs the three colour planes with
+phase-aware bilinear averages over a row band held in VMEM.
+
+The grid iterates over row bands — the unrollable axis (more array-slices
+⇒ more bands in flight), matching how the compiler unrolls the camera
+pipeline from 4 to 6 slices in the paper's variably-sized-region example.
+Bands overlap by a 1-pixel halo, so the kernel dynamically slices its band
+out of the full padded plane (the Pallas idiom for overlapping stencil
+blocks).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _demosaic_kernel(raw_ref, o_ref, *, block_h: int):
+    """raw_ref: full (HP+2, W+2) padded plane; o_ref: (block_h, W, 3) band.
+
+    Phase layout (RGGB, even rows R G, odd rows G B):
+      (0,0)=R  (0,1)=G  (1,0)=G  (1,1)=B
+    Bilinear reconstruction via the standard shifted-average masks.
+    ``block_h`` is even, so every band starts on an even Bayer row and the
+    in-band parity masks are band-invariant.
+    """
+    bh = o_ref.shape[0]
+    w = o_ref.shape[1]
+    row0 = pl.program_id(0) * block_h
+    x = pl.load(raw_ref, (pl.dslice(row0, bh + 2), slice(None))).astype(jnp.float32)
+
+    def sh(di, dj):
+        # neighbour plane at offset (di, dj) for the interior (1..bh, 1..w)
+        return jax.lax.dynamic_slice(x, (1 + di, 1 + dj), (bh, w))
+
+    c = sh(0, 0)
+    horiz = (sh(0, -1) + sh(0, 1)) * 0.5
+    vert = (sh(-1, 0) + sh(1, 0)) * 0.5
+    cross = (sh(0, -1) + sh(0, 1) + sh(-1, 0) + sh(1, 0)) * 0.25
+    diag = (sh(-1, -1) + sh(-1, 1) + sh(1, -1) + sh(1, 1)) * 0.25
+
+    row_idx = jax.lax.broadcasted_iota(jnp.int32, (bh, w), 0)
+    col_idx = jax.lax.broadcasted_iota(jnp.int32, (bh, w), 1)
+    even_r = (row_idx % 2) == 0
+    even_c = (col_idx % 2) == 0
+
+    at_r = even_r & even_c        # red site
+    at_gr = even_r & ~even_c      # green on red row
+    at_gb = ~even_r & even_c      # green on blue row
+    at_b = ~even_r & ~even_c      # blue site
+
+    r = jnp.where(at_r, c, jnp.where(at_gr, horiz, jnp.where(at_gb, vert, diag)))
+    g = jnp.where(at_r | at_b, cross, c)
+    b = jnp.where(at_b, c, jnp.where(at_gb, horiz, jnp.where(at_gr, vert, diag)))
+
+    o_ref[...] = jnp.stack([r, g, b], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def demosaic_rggb(
+    raw: jax.Array,
+    *,
+    block_h: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bilinear-demosaic an (H, W) RGGB RAW plane to (H, W, 3) float32.
+
+    H and W must be even (whole Bayer quads); rows are processed in
+    ``block_h``-row bands with a 1-pixel reflect-padded halo.  ``block_h``
+    must be even so every band starts on the same Bayer phase.
+    """
+    if raw.ndim != 2:
+        raise ValueError(f"demosaic_rggb expects (H, W) RAW, got {raw.shape}")
+    h, w = raw.shape
+    if block_h is None:
+        # single-band fast path when the plane fits a VMEM-sized budget
+        # (EXPERIMENTS.md §Perf: the interpret-mode grid loop is costly
+        # under the pinned XLA); otherwise 32-row bands.
+        hp2 = (h + 1) // 2 * 2
+        block_h = hp2 if hp2 * w * 3 <= 4_000_000 else 32
+    if block_h % 2 != 0:
+        raise ValueError(f"block_h must be even, got {block_h}")
+    if h % 2 or w % 2:
+        raise ValueError(f"RAW dims must be even (Bayer quads), got {raw.shape}")
+
+    hp = (h + block_h - 1) // block_h * block_h
+    # reflect-pad: 1-px halo + bottom fill to a whole number of bands
+    xp = jnp.pad(raw, ((1, 1 + hp - h), (1, 1)), mode="reflect")
+
+    grid = (hp // block_h,)
+    out = pl.pallas_call(
+        functools.partial(_demosaic_kernel, block_h=block_h),
+        grid=grid,
+        in_specs=[
+            # every band sees the whole padded plane and slices its halo
+            # window dynamically (overlapping-stencil idiom)
+            pl.BlockSpec(xp.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_h, w, 3), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, w, 3), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:h]

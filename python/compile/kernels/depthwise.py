@@ -1,0 +1,74 @@
+"""Depthwise 3x3 convolution Pallas kernel (MobileNet ``conv_dw`` half).
+
+A depthwise conv has no channel contraction, so it does not map onto the
+MXU; on the CGRA it occupies PE tiles doing independent per-channel MACs.
+On a TPU-shaped machine it is a VPU (vector) stencil: the kernel holds a
+``(H+2, W+2, block_c)`` halo block in VMEM and accumulates the nine
+shifted element-wise products.  The grid iterates over channel blocks —
+the axis the scheduler's unroll factor widens (more array-slices ⇒ more
+channel blocks in flight).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int):
+    """x_ref: (H+kh-1, W+kw-1, C_blk) halo block; w_ref: (kh, kw, C_blk)."""
+    oh = o_ref.shape[0]
+    ow = o_ref.shape[1]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            window = x_ref[di : di + oh, dj : dj + ow, :].astype(jnp.float32)
+            acc += window * w_ref[di, dj, :].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def depthwise_conv(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_c: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Depthwise conv, stride 1, SAME padding.
+
+    ``x``: (H, W, C); ``w``: (KH, KW, C).  Returns (H, W, C) float32.
+    """
+    if x.ndim != 3 or w.ndim != 3:
+        raise ValueError(f"depthwise_conv expects (H,W,C) x (KH,KW,C), got {x.shape}, {w.shape}")
+    h, wd, c = x.shape
+    kh, kw, cw = w.shape
+    if c != cw:
+        raise ValueError(f"channel mismatch: {x.shape} vs {w.shape}")
+    ph, pw = kh // 2, kw // 2
+
+    if block_c is None:
+        # single-block fast path when the halo block fits a VMEM-sized
+        # budget (see matmul._auto_block; EXPERIMENTS.md §Perf) — the
+        # interpret-mode grid loop is expensive under the pinned XLA.
+        cp8 = (c + 7) // 8 * 8
+        block_c = cp8 if (h + kh - 1) * (wd + kw - 1) * cp8 <= 4_000_000 else 16
+
+    cp = (c + block_c - 1) // block_c * block_c
+    xp = jnp.pad(x, ((ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, cp - c)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cp - c)))
+
+    grid = (cp // block_c,)
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, kh=kh, kw=kw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h + kh - 1, wd + kw - 1, block_c), lambda ci: (0, 0, ci)),
+            pl.BlockSpec((kh, kw, block_c), lambda ci: (0, 0, ci)),
+        ],
+        out_specs=pl.BlockSpec((h, wd, block_c), lambda ci: (0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((h, wd, cp), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:, :, :c]

@@ -1,0 +1,98 @@
+"""Harris corner-response Pallas kernel.
+
+Implements the Harris task of Table 1: Sobel gradients, 3x3 box-windowed
+structure tensor, and the corner response R = det(M) − k·trace(M)².  On
+the CGRA this is a deep stencil pipeline across PE tiles with MEM-tile
+line buffers; here it is a VPU stencil over a VMEM-resident row band with
+a 2-pixel halo (1 for Sobel + 1 for the window sum).
+
+Grid = row bands (the unrollable axis: the paper's Harris variants a/b/c
+scale 2→4→7 array-slices for 1→2→4 pixels/cycle).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Harris sensitivity constant (standard value, also used by ref.py).
+HARRIS_K = 0.04
+
+
+def _harris_kernel(img_ref, o_ref, *, block_h: int, k: float):
+    """img_ref: full (HP+4, W+4) padded plane; o_ref: (block_h, W) band."""
+    bh = o_ref.shape[0]
+    w = o_ref.shape[1]
+    row0 = pl.program_id(0) * block_h
+    x = pl.load(img_ref, (pl.dslice(row0, bh + 4), slice(None))).astype(jnp.float32)
+
+    def sh(a, di, dj, h_, w_):
+        return jax.lax.dynamic_slice(a, (di, dj), (h_, w_))
+
+    # Sobel gradients on the interior (bh+2, w+2) region.
+    gh, gw = bh + 2, w + 2
+
+    def grad(weights):
+        # 3x3 correlation, skipping zero taps
+        acc = jnp.zeros((gh, gw), jnp.float32)
+        for di in range(3):
+            for dj in range(3):
+                wgt = weights[di][dj]
+                if wgt != 0.0:
+                    acc += wgt * sh(x, di, dj, gh, gw)
+        return acc
+
+    sobel_x = ((-1.0, 0.0, 1.0), (-2.0, 0.0, 2.0), (-1.0, 0.0, 1.0))
+    sobel_y = ((-1.0, -2.0, -1.0), (0.0, 0.0, 0.0), (1.0, 2.0, 1.0))
+    ix = grad(sobel_x)
+    iy = grad(sobel_y)
+
+    ixx, iyy, ixy = ix * ix, iy * iy, ix * iy
+
+    def window(a):
+        # 3x3 box sum over the (bh, w) interior of a (bh+2, w+2) plane
+        acc = jnp.zeros((bh, w), jnp.float32)
+        for di in range(3):
+            for dj in range(3):
+                acc += sh(a, di, dj, bh, w)
+        return acc
+
+    sxx, syy, sxy = window(ixx), window(iyy), window(ixy)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    o_ref[...] = det - k * tr * tr
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def harris_response(
+    img: jax.Array,
+    *,
+    k: float = HARRIS_K,
+    block_h: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Harris corner response of a grayscale (H, W) image, float32 (H, W).
+
+    Border handling: reflect padding (2 px: Sobel + window halos).
+    """
+    if img.ndim != 2:
+        raise ValueError(f"harris_response expects (H, W) grayscale, got {img.shape}")
+    h, w = img.shape
+    if block_h is None:
+        # single-band fast path (see demosaic; EXPERIMENTS.md §Perf)
+        block_h = h if h * w * 6 <= 4_000_000 else 32
+
+    hp = (h + block_h - 1) // block_h * block_h
+    xp = jnp.pad(img, ((2, 2 + hp - h), (2, 2)), mode="reflect")
+
+    grid = (hp // block_h,)
+    out = pl.pallas_call(
+        functools.partial(_harris_kernel, block_h=block_h, k=float(k)),
+        grid=grid,
+        in_specs=[pl.BlockSpec(xp.shape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_h, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, w), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:h]

@@ -1,0 +1,116 @@
+"""Tiled matmul-MAC Pallas kernel.
+
+This is the workhorse of the ML-domain tasks (ResNet-18 / MobileNet conv
+stages are lowered to im2col matmuls, see :mod:`conv2d`).  The block
+decomposition deliberately mirrors the paper's hardware abstraction:
+
+* one grid step along ``m`` plays the role of one *array-slice* worth of
+  PE-tile MACs (the scheduler's unroll factor widens this axis),
+* the ``(block_m, block_k)`` / ``(block_k, block_n)`` operand blocks are
+  the VMEM-resident working set, standing in for MEM-tile scratchpads,
+* the ``k`` grid axis is the GLB→array streaming schedule: operand blocks
+  stream in while partial sums accumulate in the output block.
+
+The kernel accumulates in ``float32`` regardless of input dtype, matching
+the PE tile's widened MAC accumulator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """Accumulating matmul tile: o[m,n] += x[m,k] @ w[k,n]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped MAC: always accumulate in f32 (the PE accumulator width).
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _ceil_to(value: int, mult: int) -> int:
+    return (value + mult - 1) // mult * mult
+
+
+def _auto_block(dim: int, cap: int) -> int:
+    """Shape-adaptive block size: whole (8-padded) dim up to `cap`.
+
+    Perf note (EXPERIMENTS.md §Perf): interpret-mode Pallas executes the
+    grid as an XLA while-loop of dynamic-slice + dot steps, so per-step
+    overhead dominates small blocks.  Sweeping the Table-1 conv shapes
+    showed 5–13x speedups moving from fixed 32³ blocks to blocks that
+    cover the (padded) dimension up to {M,N}≤128 / K≤512 — on a real TPU
+    the same shapes stay comfortably inside VMEM (≤ ~80 KiB per operand
+    block) and multiples of the 128-lane MXU tile.
+    """
+    return min(cap, _ceil_to(dim, 8))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul_mac(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute ``x @ w`` with a tiled Pallas MAC kernel.
+
+    Inputs of any ``(M, K) x (K, N)`` shape are zero-padded up to block
+    multiples; the result is sliced back to ``(M, N)``.  Output dtype is
+    float32 (the accumulator dtype).  Block sizes default to a
+    shape-adaptive choice (see `_auto_block`); pass them explicitly to
+    pin a tiling.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul_mac expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+
+    # Single-block fast path: when every operand block fits a VMEM-sized
+    # budget (16 MB f32 ≈ 4M elements), run the whole matmul as one grid
+    # step.  Perf iteration 2 (EXPERIMENTS.md §Perf): the interpret-mode
+    # grid lowers to an XLA while-loop whose carried buffers the pinned
+    # XLA 0.5.1 CPU backend copies every iteration — grid=1 removes the
+    # loop entirely (conv-shaped matmuls: 0.97 → 0.55 ms under old XLA).
+    mp8, kp8, np8 = _ceil_to(m, 8), _ceil_to(k, 8), _ceil_to(n, 8)
+    if block_m is None and block_n is None and block_k is None:
+        total = mp8 * kp8 + kp8 * np8 + mp8 * np8
+        if total <= 4_000_000:
+            block_m, block_k, block_n = mp8, kp8, np8
+    block_m = block_m or _auto_block(m, 128)
+    block_n = block_n or _auto_block(n, 128)
+    block_k = block_k or _auto_block(k, 512)
+
+    mp, kp, np_ = _ceil_to(m, block_m), _ceil_to(k, block_k), _ceil_to(n, block_n)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]

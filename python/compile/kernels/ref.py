@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the correctness contracts: the pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-driven shape and
+dtype sweeps.  Keep these boring and obviously correct — no Pallas, no
+tiling, just textbook jnp.
+"""
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+
+HARRIS_K = 0.04
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """f32-accumulated matmul."""
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1, padding: int = 1) -> jax.Array:
+    """NHWC x HWIO conv, f32 accumulation."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def depthwise_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(H,W,C) x (KH,KW,C) depthwise conv, stride 1, SAME padding."""
+    h, wd, c = x.shape
+    kh, kw, _ = w.shape
+    out = lax.conv_general_dilated(
+        x[None].astype(jnp.float32),
+        w[:, :, None, :].astype(jnp.float32),  # HWIO with I=1, one group/channel
+        window_strides=(1, 1),
+        padding=((kh // 2, kh - 1 - kh // 2), (kw // 2, kw - 1 - kw // 2)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out[0]
+
+
+def demosaic_ref(raw: jax.Array) -> jax.Array:
+    """Bilinear RGGB demosaic, reflect borders. (H,W) -> (H,W,3) f32."""
+    h, w = raw.shape
+    x = jnp.pad(raw, 1, mode="reflect").astype(jnp.float32)
+
+    def sh(di, dj):
+        return x[1 + di : 1 + di + h, 1 + dj : 1 + dj + w]
+
+    c = sh(0, 0)
+    horiz = (sh(0, -1) + sh(0, 1)) * 0.5
+    vert = (sh(-1, 0) + sh(1, 0)) * 0.5
+    cross = (sh(0, -1) + sh(0, 1) + sh(-1, 0) + sh(1, 0)) * 0.25
+    diag = (sh(-1, -1) + sh(-1, 1) + sh(1, -1) + sh(1, 1)) * 0.25
+
+    rows = jnp.arange(h)[:, None]
+    cols = jnp.arange(w)[None, :]
+    even_r = (rows % 2) == 0
+    even_c = (cols % 2) == 0
+    at_r = even_r & even_c
+    at_gr = even_r & ~even_c
+    at_gb = ~even_r & even_c
+    at_b = ~even_r & ~even_c
+
+    r = jnp.where(at_r, c, jnp.where(at_gr, horiz, jnp.where(at_gb, vert, diag)))
+    g = jnp.where(at_r | at_b, cross, c)
+    b = jnp.where(at_b, c, jnp.where(at_gb, horiz, jnp.where(at_gr, vert, diag)))
+    return jnp.stack([r, g, b], axis=-1)
+
+
+def harris_ref(img: jax.Array, *, k: float = HARRIS_K) -> jax.Array:
+    """Harris response: Sobel grads, 3x3 box window, det - k*tr^2."""
+    h, w = img.shape
+    x = jnp.pad(img, 2, mode="reflect").astype(jnp.float32)
+
+    def corr3(a, weights, oh, ow):
+        acc = jnp.zeros((oh, ow), jnp.float32)
+        for di in range(3):
+            for dj in range(3):
+                wgt = weights[di][dj]
+                if wgt != 0.0:
+                    acc = acc + wgt * a[di : di + oh, dj : dj + ow]
+        return acc
+
+    sobel_x = ((-1.0, 0.0, 1.0), (-2.0, 0.0, 2.0), (-1.0, 0.0, 1.0))
+    sobel_y = ((-1.0, -2.0, -1.0), (0.0, 0.0, 0.0), (1.0, 2.0, 1.0))
+    box = ((1.0, 1.0, 1.0), (1.0, 1.0, 1.0), (1.0, 1.0, 1.0))
+
+    ix = corr3(x, sobel_x, h + 2, w + 2)
+    iy = corr3(x, sobel_y, h + 2, w + 2)
+    sxx = corr3(ix * ix, box, h, w)
+    syy = corr3(iy * iy, box, h, w)
+    sxy = corr3(ix * iy, box, h, w)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    return det - k * tr * tr

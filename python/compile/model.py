@@ -1,0 +1,194 @@
+"""Layer-2 JAX compute graphs for the four benchmark applications.
+
+These are the *functional* bodies of the tasks in Table 1 of the paper:
+
+* ResNet-18 conv stages (``conv2_x`` … ``conv5_x``) — residual blocks of
+  3x3 convs, built on the Pallas im2col MAC kernel.
+* MobileNet ``conv_dw_pw`` stages — depthwise 3x3 (Pallas stencil) +
+  pointwise 1x1 (Pallas matmul).
+* Camera pipeline — Bayer demosaic (Pallas stencil) → white balance →
+  3x3 colour-correction matrix → gamma.
+* Harris corner detector — Pallas Harris-response stencil + threshold.
+
+Everything here is traced once by ``aot.py`` and lowered to HLO text; the
+Rust coordinator executes the artifacts through PJRT.  The *timing* of the
+simulated CGRA comes from Table 1 throughputs (rust/src/tasks); these
+graphs provide the *numerics* at a configurable, reduced resolution (the
+substitution table in DESIGN.md explains why that preserves the paper's
+evaluation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    conv2d_im2col,
+    demosaic_rggb,
+    depthwise_conv,
+    harris_response,
+    matmul_mac,
+)
+
+# ---------------------------------------------------------------------------
+# ResNet-18 conv stages
+# ---------------------------------------------------------------------------
+
+
+def residual_block(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    wproj: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    interpret: bool = True,
+) -> jax.Array:
+    """One ResNet basic block: conv3x3 → relu → conv3x3 (+skip) → relu."""
+    y = conv2d_im2col(x, w1, stride=stride, padding=1, interpret=interpret)
+    y = jax.nn.relu(y)
+    y = conv2d_im2col(y, w2, stride=1, padding=1, interpret=interpret)
+    if wproj is not None:
+        # 1x1 strided projection on the skip path (stage entry).
+        skip = conv2d_im2col(x, wproj, stride=stride, padding=0, interpret=interpret)
+    else:
+        skip = x
+    return jax.nn.relu(y + skip.astype(y.dtype))
+
+
+def resnet_stage(
+    x: jax.Array,
+    params: dict[str, jax.Array],
+    *,
+    downsample: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """A ResNet-18 conv stage = two basic blocks (conv{2..5}_x in Table 1).
+
+    ``params`` keys: b1w1, b1w2, b1proj (absent if not downsampling),
+    b2w1, b2w2.
+    """
+    stride = 2 if downsample else 1
+    proj = params.get("b1proj")
+    x = residual_block(
+        x, params["b1w1"], params["b1w2"], proj, stride=stride, interpret=interpret
+    )
+    x = residual_block(x, params["b2w1"], params["b2w2"], None, stride=1, interpret=interpret)
+    return x
+
+
+def resnet_stage_params(
+    key: jax.Array, cin: int, cout: int, *, downsample: bool = True
+) -> dict[str, jax.Array]:
+    """He-init weights for one stage (deterministic given ``key``)."""
+    k = jax.random.split(key, 5)
+
+    def he(kk, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(kk, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    params = {
+        "b1w1": he(k[0], (3, 3, cin, cout)),
+        "b1w2": he(k[1], (3, 3, cout, cout)),
+        "b2w1": he(k[2], (3, 3, cout, cout)),
+        "b2w2": he(k[3], (3, 3, cout, cout)),
+    }
+    if downsample:
+        params["b1proj"] = he(k[4], (1, 1, cin, cout))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MobileNet conv_dw_pw stages
+# ---------------------------------------------------------------------------
+
+
+def mobilenet_dw_pw(
+    x: jax.Array,
+    wdw: jax.Array,
+    wpw: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Merged depthwise-3x3 + pointwise-1x1 stage (``conv_dw_pw`` in Table 1).
+
+    ``x``: (H, W, C_in); ``wdw``: (3, 3, C_in); ``wpw``: (C_in, C_out).
+    """
+    y = depthwise_conv(x, wdw, interpret=interpret)
+    y = jax.nn.relu(y)
+    h, w, c = y.shape
+    y = matmul_mac(y.reshape(h * w, c), wpw, interpret=interpret)
+    y = y.reshape(h, w, wpw.shape[1])
+    return jax.nn.relu(y)
+
+
+def mobilenet_stage_params(key: jax.Array, cin: int, cout: int) -> dict[str, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    wdw = jax.random.normal(k1, (3, 3, cin), jnp.float32) * jnp.sqrt(2.0 / 9.0)
+    wpw = jax.random.normal(k2, (cin, cout), jnp.float32) * jnp.sqrt(2.0 / cin)
+    return {"wdw": wdw, "wpw": wpw}
+
+
+# ---------------------------------------------------------------------------
+# Camera pipeline
+# ---------------------------------------------------------------------------
+
+#: Default white-balance gains (R, G, B) and colour-correction matrix —
+#: plausible daylight values; the CCM rows sum to 1 so grey stays grey.
+WB_GAINS = (2.0, 1.0, 1.6)
+CCM = (
+    (1.7, -0.5, -0.2),
+    (-0.3, 1.6, -0.3),
+    (-0.1, -0.6, 1.7),
+)
+GAMMA = 1.0 / 2.2
+
+
+def camera_pipeline(raw: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """RAW RGGB (H, W) in [0,1] → display RGB (H, W, 3) in [0,1].
+
+    Stages: Pallas bilinear demosaic → white balance → CCM → gamma.
+    """
+    rgb = demosaic_rggb(raw, interpret=interpret)
+    gains = jnp.asarray(WB_GAINS, jnp.float32)
+    rgb = rgb * gains
+    ccm = jnp.asarray(CCM, jnp.float32)
+    rgb = rgb @ ccm.T
+    rgb = jnp.clip(rgb, 0.0, 1.0)
+    return jnp.power(rgb, GAMMA)
+
+
+# ---------------------------------------------------------------------------
+# Harris corner detector
+# ---------------------------------------------------------------------------
+
+
+def harris_detect(img: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Grayscale (H, W) → Harris response map, normalized to [-1, 1].
+
+    The normalization keeps the artifact's output scale independent of
+    image contrast so the Rust integration tests can use fixed tolerances.
+    """
+    resp = harris_response(img, interpret=interpret)
+    scale = jnp.maximum(jnp.max(jnp.abs(resp)), 1e-12)
+    return resp / scale
+
+
+# ---------------------------------------------------------------------------
+# Whole-app wrappers used by aot.py (one artifact per task variant)
+# ---------------------------------------------------------------------------
+
+
+def batched(fn):
+    """vmap a single-sample graph over a leading batch axis.
+
+    Variant ``b`` of an ML task in Table 1 is the same graph unrolled; at
+    the functional level unrolling is a batch axis (the simulated timing
+    difference lives in rust/src/tasks).
+    """
+
+    def wrapper(x, *args, **kwargs):
+        return jax.vmap(lambda xi: fn(xi, *args, **kwargs))(x)
+
+    return wrapper

@@ -1,0 +1,128 @@
+"""AOT pipeline checks: registry coverage, golden inputs, HLO emission."""
+
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_golden_input_deterministic_and_in_range():
+    a = aot.golden_input((3, 5, 7), lo=0.0, hi=1.0)
+    b = aot.golden_input((3, 5, 7), lo=0.0, hi=1.0)
+    assert a.dtype == np.float32
+    assert (a == b).all()
+    assert a.min() >= 0.0 and a.max() <= 1.0
+
+
+def test_golden_input_matches_reference_expression():
+    """Pin the exact fill expression — rust/src/runtime/inputs.rs mirrors it."""
+    a = aot.golden_input((4,), lo=-1.0, hi=1.0)
+    phi = 0.6180339887498949
+    for i in range(4):
+        frac = math.modf((i + 1) * phi)[0]
+        assert a[i] == np.float32(-1.0 + 2.0 * frac)
+
+
+def test_golden_input_salt_streams():
+    """Salted streams are distinct, reproducible, and offset-based."""
+    a = aot.golden_input((8,), salt=0)
+    b = aot.golden_input((8,), salt=1)
+    assert (a != b).any()
+    assert (b == aot.golden_input((8,), salt=1)).all()
+    phi = 0.6180339887498949
+    x = (1_000_003 + 1) * phi
+    assert b[0] == np.float32(-1.0 + 2.0 * math.modf(x)[0])
+
+
+def test_checksum_fields():
+    cs = aot.checksum(np.asarray([[1.0, -2.0], [3.0, -4.0]]))
+    assert cs["sum"] == -2.0
+    assert cs["abs_sum"] == 10.0
+    assert cs["head"] == [1.0, -2.0, 3.0, -4.0]
+
+
+def test_registry_covers_table1_tasks():
+    """Every Table-1 task family must have artifacts; variant counts match."""
+    reg = aot.build_registry("tiny")
+    by_task = {}
+    for art in reg:
+        by_task.setdefault(art.task, []).append(art.variant)
+    # ResNet-18: 4 stages x {a,b}
+    for s in ("conv2", "conv3", "conv4", "conv5"):
+        assert sorted(by_task[f"resnet18.{s}_x"]) == ["a", "b"]
+    # MobileNet: 3 stages x {a,b}
+    for s in ("dw_pw_2", "dw_pw_3", "dw_pw_4"):
+        assert sorted(by_task[f"mobilenet.conv_{s}_x"]) == ["a", "b"]
+    assert sorted(by_task["camera.pipeline"]) == ["a", "b"]
+    assert sorted(by_task["harris.corner"]) == ["a", "b", "c"]
+
+
+def test_artifact_names_unique():
+    reg = aot.build_registry("tiny")
+    names = [a.name for a in reg]
+    assert len(names) == len(set(names))
+
+
+def test_lower_artifact_emits_parseable_hlo(tmp_path):
+    reg = [a for a in aot.build_registry("tiny") if a.name == "harris_a"]
+    assert len(reg) == 1
+    entry = aot.lower_artifact(reg[0], str(tmp_path))
+    text = (tmp_path / entry["file"]).read_text()
+    # HLO text module header + an entry computation
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert entry["golden"]["abs_sum"] > 0.0
+    assert all(i["dtype"] == "f32" for i in entry["inputs"])
+
+
+def test_lowered_variant_b_scales_batch(tmp_path):
+    arts = {a.name: a for a in aot.build_registry("tiny")}
+    a, b = arts["resnet_conv2_a"], arts["resnet_conv2_b"]
+    assert b.inputs[0].shape[0] == 4 * a.inputs[0].shape[0]
+    assert a.inputs[0].shape[1:] == b.inputs[0].shape[1:]
+    # weight arguments identical across variants of a task
+    assert [t.shape for t in a.inputs[1:]] == [t.shape for t in b.inputs[1:]]
+
+
+def test_weights_are_arguments_not_constants():
+    """Guard the constant-elision failure mode: every artifact's weights
+    must be runtime arguments."""
+    for art in aot.build_registry("tiny"):
+        if art.task.startswith(("resnet18", "mobilenet", "micro")):
+            assert len(art.inputs) >= 2, art.name
+            assert any(t.role == "weight" for t in art.inputs[1:]), art.name
+
+
+def test_golden_checksum_reproducible():
+    """Lowered fn on golden input must give identical checksum across runs."""
+    art = [a for a in aot.build_registry("tiny") if a.name == "camera_pipeline_a"][0]
+    args = aot.golden_args(art)
+    y1 = np.asarray(jax.jit(art.fn)(*args))
+    y2 = np.asarray(jax.jit(art.fn)(*args))
+    assert aot.checksum(y1) == aot.checksum(y2)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_manifest_consistent():
+    """If `make artifacts` has run, the manifest must match files on disk."""
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == aot.MANIFEST_VERSION
+    for entry in man["artifacts"]:
+        path = os.path.join(root, entry["file"])
+        assert os.path.exists(path), entry["file"]
+        assert entry["hlo_bytes"] == os.path.getsize(path)
+        assert all(i["dtype"] == "f32" for i in entry["inputs"])
+        assert len(entry["golden"]["head"]) <= 8
+        text = open(path).read()
+        assert "constant({...})" not in text, entry["name"]

@@ -1,0 +1,61 @@
+"""Tests for the L2 HLO audit (compile.audit)."""
+
+import os
+
+import pytest
+
+from compile import audit
+
+
+def test_audit_text_counts_ops():
+    text = (
+        "HloModule m\n"
+        "  while.1 = while(x), body=b\n"
+        "  d = f32[2] dynamic-slice(a, c)\n"
+        "  e = f32[2] dynamic-update-slice(a, b, c)\n"
+        "  f = f32[2,2] dot(g, h)\n"
+        "  p = f32[2] power(a, b)\n"
+    )
+    c = audit.audit_text("demo", text)
+    assert c["while"] == 1
+    assert c["dynamic-slice"] == 1
+    assert c["dynamic-update-slice"] == 1
+    assert c["dot"] == 1
+    assert c["power"] == 1
+    assert c["convolution"] == 0
+    assert c["elided_constants"] == 0
+
+
+def test_check_flags_elided_constants():
+    c = audit.audit_text("bad", "x = f32[128,128] constant({...})\n")
+    problems = audit.check(c)
+    assert len(problems) == 1
+    assert "elided" in problems[0]
+
+
+def test_check_flags_convolutions():
+    c = audit.audit_text("conv", "y = f32[1,2,2,3] convolution(a, b)\n")
+    problems = audit.check(c)
+    assert len(problems) == 1
+    assert "convolution" in problems[0]
+
+
+def test_clean_module_passes():
+    c = audit.audit_text("ok", "HloModule m\n  f = f32[2,2] dot(g, h)\n")
+    assert audit.check(c) == []
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_artifacts_pass_audit():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    for fname in sorted(os.listdir(root)):
+        if not fname.endswith(".hlo.txt"):
+            continue
+        with open(os.path.join(root, fname)) as f:
+            counts = audit.audit_text(fname, f.read())
+        assert audit.check(counts) == [], fname
+        # every artifact's compute is dot/stencil structured: bounded loops
+        assert counts["while"] <= 4, f"{fname}: {counts['while']} loops"

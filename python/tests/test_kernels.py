@@ -1,0 +1,211 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Hypothesis sweeps shapes (and block sizes, so padding/ragged-edge paths are
+exercised) and asserts allclose against the pure-jnp oracles in ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    conv2d_im2col,
+    demosaic_rggb,
+    depthwise_conv,
+    harris_response,
+    matmul_mac,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    got = matmul_mac(x, w)
+    want = ref.matmul_ref(x, w)
+    assert got.shape == (m, n)
+    assert got.dtype == jnp.float32
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 16, 32, 64]),
+    bn=st.sampled_from([8, 16, 32, 64]),
+    bk=st.sampled_from([8, 16, 32, 64]),
+)
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the tiling (the scheduler's unroll knob)."""
+    x = _rand(7, (45, 37))
+    w = _rand(8, (37, 51))
+    got = matmul_mac(x, w, block_m=bm, block_n=bn, block_k=bk)
+    assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul_mac(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        matmul_mac(jnp.zeros((2, 3, 4)), jnp.zeros((4, 5)))
+
+
+def test_matmul_bf16_inputs_accumulate_f32():
+    x = _rand(3, (33, 17)).astype(jnp.bfloat16)
+    w = _rand(4, (17, 9)).astype(jnp.bfloat16)
+    got = matmul_mac(x, w)
+    assert got.dtype == jnp.float32
+    assert_allclose(got, ref.matmul_ref(x, w), rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(4, 20),
+    cin=st.integers(1, 12),
+    cout=st.integers(1, 12),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, hw, cin, cout, stride, seed):
+    x = _rand(seed, (n, hw, hw, cin))
+    w = _rand(seed + 1, (3, 3, cin, cout))
+    got = conv2d_im2col(x, w, stride=stride)
+    want = ref.conv2d_ref(x, w, stride=stride)
+    assert got.shape == want.shape
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_1x1_projection():
+    """The ResNet skip-path projection: 1x1, stride 2, no padding."""
+    x = _rand(11, (2, 8, 8, 6))
+    w = _rand(12, (1, 1, 6, 10))
+    got = conv2d_im2col(x, w, stride=2, padding=0)
+    want = ref.conv2d_ref(x, w, stride=2, padding=0)
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_rejects_channel_mismatch():
+    with pytest.raises(ValueError):
+        conv2d_im2col(jnp.zeros((1, 4, 4, 3)), jnp.zeros((3, 3, 5, 2)))
+
+
+# ---------------------------------------------------------------------------
+# depthwise
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(3, 24),
+    w=st.integers(3, 24),
+    c=st.integers(1, 40),
+    bc=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_matches_ref(h, w, c, bc, seed):
+    x = _rand(seed, (h, w, c))
+    wts = _rand(seed + 1, (3, 3, c))
+    got = depthwise_conv(x, wts, block_c=bc)
+    assert got.shape == (h, w, c)
+    assert_allclose(got, ref.depthwise_ref(x, wts), rtol=1e-5, atol=1e-5)
+
+
+def test_depthwise_5x5_taps():
+    x = _rand(21, (10, 11, 6))
+    wts = _rand(22, (5, 5, 6))
+    got = depthwise_conv(x, wts)
+    assert_allclose(got, ref.depthwise_ref(x, wts), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# demosaic
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(2, 32).map(lambda v: v * 2),
+    w=st.integers(2, 32).map(lambda v: v * 2),
+    bh=st.sampled_from([2, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_demosaic_matches_ref(h, w, bh, seed):
+    raw = _rand(seed, (h, w), 0.0, 1.0)
+    got = demosaic_rggb(raw, block_h=bh)
+    assert got.shape == (h, w, 3)
+    assert_allclose(got, ref.demosaic_ref(raw), rtol=1e-5, atol=1e-6)
+
+
+def test_demosaic_constant_raw_is_constant_rgb():
+    """A flat RAW field must demosaic to a flat image in every channel."""
+    raw = jnp.full((16, 16), 0.25, jnp.float32)
+    rgb = demosaic_rggb(raw, block_h=8)
+    assert_allclose(rgb, jnp.full((16, 16, 3), 0.25), atol=1e-6)
+
+
+def test_demosaic_rejects_odd_dims():
+    with pytest.raises(ValueError):
+        demosaic_rggb(jnp.zeros((15, 16)))
+    with pytest.raises(ValueError):
+        demosaic_rggb(jnp.zeros((16, 16)), block_h=7)
+
+
+# ---------------------------------------------------------------------------
+# harris
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(5, 48),
+    w=st.integers(5, 48),
+    bh=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_harris_matches_ref(h, w, bh, seed):
+    img = _rand(seed, (h, w), 0.0, 1.0)
+    got = harris_response(img, block_h=bh)
+    assert got.shape == (h, w)
+    assert_allclose(got, ref.harris_ref(img), rtol=1e-3, atol=1e-4)
+
+
+def test_harris_flat_image_zero_response():
+    img = jnp.full((24, 24), 0.5, jnp.float32)
+    resp = harris_response(img)
+    assert_allclose(resp, jnp.zeros((24, 24)), atol=1e-5)
+
+
+def test_harris_corner_peaks_at_corner():
+    """A bright quadrant's corner should out-score its edges."""
+    img = jnp.zeros((32, 32), jnp.float32).at[16:, 16:].set(1.0)
+    resp = np.asarray(harris_response(img))
+    corner = resp[14:19, 14:19].max()
+    edge = resp[14:19, 24:29].max()  # pure edge region
+    assert corner > edge
+    assert corner > 0.0

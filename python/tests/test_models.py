@@ -1,0 +1,135 @@
+"""Layer-2 model-graph checks: shapes, ranges, determinism, composition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# ResNet stages
+# ---------------------------------------------------------------------------
+
+
+def test_resnet_stage_shapes_no_downsample():
+    p = model.resnet_stage_params(KEY, 8, 8, downsample=False)
+    x = jax.random.normal(KEY, (2, 16, 16, 8), jnp.float32)
+    y = model.resnet_stage(x, p, downsample=False)
+    assert y.shape == (2, 16, 16, 8)
+
+
+def test_resnet_stage_shapes_downsample():
+    p = model.resnet_stage_params(KEY, 8, 16, downsample=True)
+    x = jax.random.normal(KEY, (1, 16, 16, 8), jnp.float32)
+    y = model.resnet_stage(x, p, downsample=True)
+    assert y.shape == (1, 8, 8, 16)
+
+
+def test_resnet_stage_chain_composes():
+    """conv2_x → conv3_x → conv4_x → conv5_x like the app DAG in rust."""
+    x = jax.random.normal(KEY, (1, 16, 16, 8), jnp.float32)
+    chans = [(8, 8, False), (8, 16, True), (16, 32, True), (32, 64, True)]
+    for i, (cin, cout, down) in enumerate(chans):
+        p = model.resnet_stage_params(jax.random.PRNGKey(i), cin, cout, downsample=down)
+        x = model.resnet_stage(x, p, downsample=down)
+    assert x.shape == (1, 2, 2, 64)
+
+
+def test_resnet_stage_relu_output_nonnegative():
+    p = model.resnet_stage_params(KEY, 4, 4, downsample=False)
+    x = jax.random.normal(KEY, (1, 8, 8, 4), jnp.float32)
+    y = model.resnet_stage(x, p, downsample=False)
+    assert float(jnp.min(y)) >= 0.0
+
+
+def test_resnet_params_deterministic():
+    p1 = model.resnet_stage_params(KEY, 4, 8)
+    p2 = model.resnet_stage_params(KEY, 4, 8)
+    for k in p1:
+        assert_allclose(p1[k], p2[k])
+
+
+# ---------------------------------------------------------------------------
+# MobileNet stages
+# ---------------------------------------------------------------------------
+
+
+def test_mobilenet_stage_shape_and_range():
+    p = model.mobilenet_stage_params(KEY, 8, 16)
+    x = jax.random.normal(KEY, (12, 10, 8), jnp.float32)
+    y = model.mobilenet_dw_pw(x, p["wdw"], p["wpw"])
+    assert y.shape == (12, 10, 16)
+    assert float(jnp.min(y)) >= 0.0  # relu
+
+
+def test_mobilenet_batched_matches_loop():
+    p = model.mobilenet_stage_params(KEY, 4, 8)
+    xb = jax.random.normal(KEY, (3, 8, 8, 4), jnp.float32)
+    fn = model.batched(lambda xi: model.mobilenet_dw_pw(xi, p["wdw"], p["wpw"]))
+    yb = fn(xb)
+    for i in range(3):
+        yi = model.mobilenet_dw_pw(xb[i], p["wdw"], p["wpw"])
+        assert_allclose(yb[i], yi, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Camera pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_camera_pipeline_output_in_unit_range():
+    raw = jax.random.uniform(KEY, (32, 32), jnp.float32)
+    rgb = model.camera_pipeline(raw)
+    assert rgb.shape == (32, 32, 3)
+    assert float(jnp.min(rgb)) >= 0.0
+    assert float(jnp.max(rgb)) <= 1.0
+
+
+def test_camera_pipeline_grey_world_stays_grey():
+    """CCM rows sum to 1, so a WB-corrected grey field stays grey."""
+    # Construct RAW whose demosaic+WB gives equal R=G=B everywhere:
+    # set R sites to g/2.0, B sites to g/1.6, G sites to g (inverse gains).
+    g = 0.4
+    rows = jnp.arange(16)[:, None]
+    cols = jnp.arange(16)[None, :]
+    even_r, even_c = (rows % 2) == 0, (cols % 2) == 0
+    raw = jnp.where(
+        even_r & even_c, g / 2.0, jnp.where(~even_r & ~even_c, g / 1.6, g)
+    ).astype(jnp.float32)
+    rgb = np.asarray(model.camera_pipeline(raw))
+    spread = rgb.max(axis=-1) - rgb.min(axis=-1)
+    assert spread.max() < 1e-3
+
+
+def test_camera_pipeline_monotone_in_exposure():
+    raw_lo = jnp.full((16, 16), 0.2, jnp.float32)
+    raw_hi = jnp.full((16, 16), 0.4, jnp.float32)
+    lo = np.asarray(model.camera_pipeline(raw_lo))
+    hi = np.asarray(model.camera_pipeline(raw_hi))
+    assert (hi >= lo - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Harris detector
+# ---------------------------------------------------------------------------
+
+
+def test_harris_detect_normalized():
+    img = jax.random.uniform(KEY, (40, 40), jnp.float32)
+    resp = model.harris_detect(img)
+    assert resp.shape == (40, 40)
+    assert float(jnp.max(jnp.abs(resp))) <= 1.0 + 1e-6
+
+
+def test_harris_detect_scale_invariant():
+    """Normalization makes the response contrast-invariant."""
+    img = jax.random.uniform(KEY, (24, 24), jnp.float32)
+    r1 = model.harris_detect(img)
+    r2 = model.harris_detect(img * 3.0)
+    assert_allclose(r1, r2, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,40 @@
+//! Ablation (DESIGN.md §6.4) — bitstream relocation on/off.
+//!
+//! The paper's addition over Amber's DPR is *region-agnostic* bitstreams
+//! plus a destination register: a cached bitstream maps to any free
+//! region.  Without relocation (Amber-style), a cached image only
+//! matches the region it was compiled for, so most placements pay the
+//! host-DMA miss penalty.  Measured on the autonomous scenario, where
+//! reconfiguration sits on the frame-latency path.
+
+use cgra_mte::config::{presets, RegionPolicyKind, WorkloadConfig};
+use cgra_mte::metrics::Table;
+use cgra_mte::sim::run_edge;
+
+fn main() {
+    let mut table = Table::new(
+        "relocation ablation (flexible regions + fast-DPR, autonomous scenario)",
+        &["relocation", "mean latency ms", "reconfig share", "dpr hit-rate"],
+    );
+    for relocation in [true, false] {
+        let mut cfg = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.dpr.relocation = relocation;
+        if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+            e.frames = 600;
+        }
+        let clk = cfg.arch.core_clock_mhz;
+        let report = run_edge(&cfg).expect("runs");
+        table.row(&[
+            if relocation { "on (paper)" } else { "off (Amber-style)" }.to_string(),
+            format!("{:.3}", report.mean_latency_ms(clk)),
+            format!("{:.1}%", report.latency.reconfig_share() * 100.0),
+            format!("{:.0}%", report.dpr_stats.hit_rate() * 100.0),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "shape: without relocation the preloaded cache only hits when a\n\
+         task happens to land on its home region — hit-rate collapses and\n\
+         the reconfiguration share of latency rises toward the AXI regime."
+    );
+}

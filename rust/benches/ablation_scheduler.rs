@@ -1,0 +1,70 @@
+//! Ablation (DESIGN.md §6.3) — scheduler policy on top of the same
+//! abstraction: greedy highest-throughput (paper) vs FCFS-first-fit vs
+//! fair-share round-robin.  The point: the slice abstraction is
+//! scheduler-agnostic; policies trade NTAT for fairness.
+
+use cgra_mte::config::{presets, RegionPolicyKind, SchedulerPolicyKind, WorkloadConfig};
+use cgra_mte::metrics::Table;
+use cgra_mte::sim::run_cloud;
+use cgra_mte::tasks::AppId;
+
+fn main() {
+    let mut table = Table::new(
+        "scheduler-policy ablation (flexible regions, cloud scenario)",
+        &["policy", "mean NTAT", "worst-app NTAT", "NTAT spread", "rel tput", "array util"],
+    );
+    let mut first_tputs: Option<Vec<f64>> = None;
+    for policy in [
+        SchedulerPolicyKind::GreedyThroughput,
+        SchedulerPolicyKind::FcfsFirstFit,
+        SchedulerPolicyKind::FairShare,
+        SchedulerPolicyKind::ShortestJobFirst,
+    ] {
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.scheduler.policy = policy;
+        if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.duration_ms = 3000.0;
+            c.mean_interarrival_ms = [30.0, 15.0, 12.0, 15.0];
+        }
+        let report = run_cloud(&cfg).expect("runs");
+        let svc = report.throughput.service_throughput();
+        let tputs: Vec<f64> = AppId::ALL
+            .iter()
+            .map(|a| svc.get(a).copied().unwrap_or(0.0))
+            .collect();
+        let rel = match &first_tputs {
+            None => {
+                first_tputs = Some(tputs.clone());
+                1.0
+            }
+            Some(base) => {
+                tputs.iter().zip(base).map(|(t, b)| t / b.max(1e-12)).sum::<f64>() / 4.0
+            }
+        };
+        let per_app = report.ntat.mean_ntat();
+        let worst = AppId::ALL
+            .iter()
+            .map(|a| per_app.get(a).copied().unwrap_or(0.0))
+            .fold(0.0f64, f64::max);
+        let best = AppId::ALL
+            .iter()
+            .map(|a| per_app.get(a).copied().unwrap_or(f64::INFINITY))
+            .fold(f64::INFINITY, f64::min);
+        table.row(&[
+            policy.name().to_string(),
+            format!("{:.2}", report.mean_ntat_across_apps()),
+            format!("{:.2}", worst),
+            format!("{:.2}", worst / best.max(1e-9)),
+            format!("{rel:.2}x"),
+            format!("{:.0}%", report.array_utilization * 100.0),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "shape: the abstraction is scheduler-agnostic — all three policies\n\
+         run unmodified on the same slice currency.  greedy buys the best\n\
+         per-request service throughput by taking big variants, at the\n\
+         price of more blocking (higher NTAT) than footprint-frugal fcfs;\n\
+         fair-share pays NTAT for rotation fairness."
+    );
+}

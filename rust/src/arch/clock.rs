@@ -1,0 +1,119 @@
+//! Clock domains and cycle-count conversion.
+//!
+//! The CGRA has two clocks the mechanisms care about: the core clock
+//! (tile array, GLB streaming, fast-DPR — paper quotes throughputs at
+//! 500 MHz) and the AXI configuration-bus clock (baseline DPR).  Every
+//! latency in the simulator is expressed in *core* cycles; this module
+//! centralizes the conversions (previously inlined in the DPR engines)
+//! and provides the cycle⇄wall-time helpers metrics/reporting use.
+
+use crate::config::ArchConfig;
+
+/// A clock domain with an integer MHz frequency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Clock {
+    /// Frequency in MHz.
+    pub mhz: u32,
+}
+
+impl Clock {
+    /// New domain; frequency must be positive.
+    pub fn new(mhz: u32) -> Clock {
+        assert!(mhz > 0, "zero-frequency clock");
+        Clock { mhz }
+    }
+
+    /// Cycles → seconds.
+    pub fn to_secs(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.mhz as f64 * 1e6)
+    }
+
+    /// Cycles → milliseconds.
+    pub fn to_ms(&self, cycles: u64) -> f64 {
+        self.to_secs(cycles) * 1e3
+    }
+
+    /// Cycles → microseconds.
+    pub fn to_us(&self, cycles: u64) -> f64 {
+        self.to_secs(cycles) * 1e6
+    }
+
+    /// Seconds → cycles (rounded up: a partial cycle still occupies one).
+    pub fn from_secs(&self, secs: f64) -> u64 {
+        debug_assert!(secs >= 0.0);
+        (secs * self.mhz as f64 * 1e6).ceil() as u64
+    }
+
+    /// Milliseconds → cycles.
+    pub fn from_ms(&self, ms: f64) -> u64 {
+        self.from_secs(ms / 1e3)
+    }
+
+    /// Convert a cycle count from this domain into `other`'s cycles,
+    /// rounding up (crossing domains can only add latency).
+    pub fn convert_to(&self, cycles: u64, other: &Clock) -> u64 {
+        // ceil(cycles * other.mhz / self.mhz) in integer arithmetic
+        let num = cycles as u128 * other.mhz as u128;
+        num.div_ceil(self.mhz as u128) as u64
+    }
+}
+
+/// The CGRA's two clock domains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClockTree {
+    /// Tile array / GLB / fast-DPR domain.
+    pub core: Clock,
+    /// AXI4-Lite configuration bus domain.
+    pub axi: Clock,
+}
+
+impl ClockTree {
+    /// Build from architecture parameters.
+    pub fn new(arch: &ArchConfig) -> ClockTree {
+        ClockTree {
+            core: Clock::new(arch.core_clock_mhz),
+            axi: Clock::new(arch.axi_clock_mhz),
+        }
+    }
+
+    /// Express AXI-domain cycles in core cycles (the simulator's unit).
+    pub fn axi_to_core(&self, axi_cycles: u64) -> u64 {
+        self.axi.convert_to(axi_cycles, &self.core)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_time_round_trip() {
+        let c = Clock::new(500);
+        assert_eq!(c.to_ms(500_000), 1.0);
+        assert_eq!(c.from_ms(1.0), 500_000);
+        assert_eq!(c.from_secs(0.0), 0);
+        assert!((c.to_us(500) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_cycles_round_up() {
+        let c = Clock::new(500);
+        assert_eq!(c.from_secs(1e-9), 1); // 0.5 cycles → 1
+    }
+
+    #[test]
+    fn domain_conversion_matches_dpr_math() {
+        // 100 MHz AXI → 500 MHz core: 1 bus cycle = 5 core cycles.
+        let t = ClockTree::new(&ArchConfig::default());
+        assert_eq!(t.axi_to_core(1), 5);
+        assert_eq!(t.axi_to_core(79_872), 399_360);
+        // rounding: 3 core cycles at 500 → 1 axi cycle (ceil of 0.6)
+        assert_eq!(t.core.convert_to(3, &t.axi), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_frequency_rejected() {
+        Clock::new(0);
+    }
+}

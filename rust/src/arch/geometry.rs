@@ -1,0 +1,197 @@
+//! Array geometry: tile layout and slice carving.
+
+use crate::abstraction::ArraySliceId;
+use crate::config::ArchConfig;
+use crate::error::{Error, Result};
+
+use super::tile::{Tile, TileCoord, TileKind};
+
+/// Fully-elaborated tile-array geometry.
+#[derive(Clone, Debug)]
+pub struct Geometry {
+    arch: ArchConfig,
+    /// col-major tile matrix, `cols × rows`.
+    tiles: Vec<Tile>,
+}
+
+/// Per-slice structural summary; all slices must be identical
+/// (homogeneity is what makes slices interchangeable for relocation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SliceGeometry {
+    /// PE tiles per slice.
+    pub pe_tiles: u32,
+    /// MEM tiles per slice.
+    pub mem_tiles: u32,
+    /// Columns per slice.
+    pub cols: u32,
+    /// GLB banks fronting the slice.
+    pub glb_banks: u32,
+}
+
+impl Geometry {
+    /// Elaborate from a validated config.
+    pub fn new(arch: &ArchConfig) -> Result<Geometry> {
+        arch.validate()?;
+        let mut tiles = Vec::with_capacity((arch.cols * arch.rows) as usize);
+        for col in 0..arch.cols {
+            // every `mem_col_period`-th column is a MEM column; the last
+            // column of each period so a slice reads P P P M (Amber-like).
+            let is_mem = (col + 1) % arch.mem_col_period == 0;
+            for row in 0..arch.rows {
+                let kind = if is_mem { TileKind::Mem } else { TileKind::Pe };
+                tiles.push(Tile { kind, coord: TileCoord { col, row } });
+            }
+        }
+        Ok(Geometry { arch: arch.clone(), tiles })
+    }
+
+    /// Architecture parameters this geometry was built from.
+    pub fn arch(&self) -> &ArchConfig {
+        &self.arch
+    }
+
+    /// Tile at a coordinate.
+    pub fn tile(&self, coord: TileCoord) -> Result<&Tile> {
+        if coord.col >= self.arch.cols || coord.row >= self.arch.rows {
+            return Err(Error::Config(format!("tile {coord} out of bounds")));
+        }
+        Ok(&self.tiles[(coord.col * self.arch.rows + coord.row) as usize])
+    }
+
+    /// All tiles, col-major.
+    pub fn tiles(&self) -> &[Tile] {
+        &self.tiles
+    }
+
+    /// Column range `[start, end)` of an array-slice.
+    pub fn slice_cols(&self, slice: ArraySliceId) -> std::ops::Range<u32> {
+        let start = slice.0 * self.arch.slice_cols;
+        start..start + self.arch.slice_cols
+    }
+
+    /// The array-slice owning a column.
+    pub fn slice_of_col(&self, col: u32) -> ArraySliceId {
+        ArraySliceId(col / self.arch.slice_cols)
+    }
+
+    /// Tiles belonging to one array-slice.
+    pub fn slice_tiles(&self, slice: ArraySliceId) -> impl Iterator<Item = &Tile> {
+        let cols = self.slice_cols(slice);
+        self.tiles
+            .iter()
+            .filter(move |t| cols.contains(&t.coord.col))
+    }
+
+    /// Structural summary of one slice.
+    pub fn slice_geometry(&self, slice: ArraySliceId) -> SliceGeometry {
+        let (mut pe, mut mem) = (0u32, 0u32);
+        for t in self.slice_tiles(slice) {
+            match t.kind {
+                TileKind::Pe => pe += 1,
+                TileKind::Mem => mem += 1,
+                TileKind::Io => {}
+            }
+        }
+        SliceGeometry {
+            pe_tiles: pe,
+            mem_tiles: mem,
+            cols: self.arch.slice_cols,
+            glb_banks: self.arch.glb_banks / self.arch.array_slices(),
+        }
+    }
+
+    /// Check every slice is structurally identical — the precondition for
+    /// region-agnostic bitstreams (paper §2.3 relocation).
+    pub fn slices_homogeneous(&self) -> bool {
+        let n = self.arch.array_slices();
+        if n == 0 {
+            return true;
+        }
+        let first = self.slice_geometry(ArraySliceId(0));
+        (1..n).all(|i| self.slice_geometry(ArraySliceId(i)) == first)
+    }
+
+    /// ASCII render of the tile array (Fig. 1 style), one row per line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for row in 0..self.arch.rows {
+            for col in 0..self.arch.cols {
+                let t = &self.tiles[(col * self.arch.rows + row) as usize];
+                out.push(t.kind.glyph());
+                if (col + 1) % self.arch.slice_cols == 0 && col + 1 != self.arch.cols {
+                    out.push('|'); // slice boundary
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_geom() -> Geometry {
+        Geometry::new(&ArchConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn paper_tile_counts() {
+        let g = paper_geom();
+        let pe = g.tiles().iter().filter(|t| t.kind == TileKind::Pe).count();
+        let mem = g.tiles().iter().filter(|t| t.kind == TileKind::Mem).count();
+        assert_eq!(pe, 384);
+        assert_eq!(mem, 128);
+    }
+
+    #[test]
+    fn slice_geometry_matches_paper() {
+        let g = paper_geom();
+        let sg = g.slice_geometry(ArraySliceId(0));
+        assert_eq!(sg.pe_tiles, 48);
+        assert_eq!(sg.mem_tiles, 16);
+        assert_eq!(sg.cols, 4);
+        assert_eq!(sg.glb_banks, 4);
+    }
+
+    #[test]
+    fn slices_are_homogeneous() {
+        assert!(paper_geom().slices_homogeneous());
+    }
+
+    #[test]
+    fn slice_col_mapping() {
+        let g = paper_geom();
+        assert_eq!(g.slice_cols(ArraySliceId(0)), 0..4);
+        assert_eq!(g.slice_cols(ArraySliceId(7)), 28..32);
+        assert_eq!(g.slice_of_col(0), ArraySliceId(0));
+        assert_eq!(g.slice_of_col(31), ArraySliceId(7));
+    }
+
+    #[test]
+    fn tile_lookup_bounds() {
+        let g = paper_geom();
+        assert!(g.tile(TileCoord { col: 31, row: 15 }).is_ok());
+        assert!(g.tile(TileCoord { col: 32, row: 0 }).is_err());
+        assert!(g.tile(TileCoord { col: 0, row: 16 }).is_err());
+    }
+
+    #[test]
+    fn mem_columns_every_fourth() {
+        let g = paper_geom();
+        for col in 0..32u32 {
+            let expect_mem = (col + 1) % 4 == 0;
+            let t = g.tile(TileCoord { col, row: 0 }).unwrap();
+            assert_eq!(t.kind == TileKind::Mem, expect_mem, "col {col}");
+        }
+    }
+
+    #[test]
+    fn render_has_slice_separators() {
+        let g = paper_geom();
+        let render = g.render();
+        let first_line = render.lines().next().unwrap();
+        assert_eq!(first_line, "PPPM|PPPM|PPPM|PPPM|PPPM|PPPM|PPPM|PPPM");
+    }
+}

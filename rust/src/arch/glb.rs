@@ -1,0 +1,177 @@
+//! Global buffer: banks, bank state, and the GLB⇄slice association.
+//!
+//! Each GLB bank (paper: 32 × 128 KB SRAM) plays three roles the
+//! mechanisms care about:
+//!  * data staging for the task mapped to the region it belongs to,
+//!  * bitstream storage for fast-DPR (a bank can cache a pre-loaded
+//!    bitstream and stream it into an array-slice, §2.3), and
+//!  * host DMA endpoint.
+
+use crate::abstraction::{ArraySliceId, GlbSliceId};
+use crate::config::ArchConfig;
+use crate::error::{Error, Result};
+
+/// What a bank's SRAM currently holds (coarse; capacity accounting only).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GlbBank {
+    /// Bytes of task data resident.
+    pub data_bytes: u64,
+    /// Bytes of cached bitstream resident (fast-DPR storage role).
+    pub bitstream_bytes: u64,
+    /// Capacity in bytes.
+    pub capacity: u64,
+}
+
+impl GlbBank {
+    /// Empty bank of `capacity` bytes.
+    pub fn new(capacity: u64) -> Self {
+        GlbBank { data_bytes: 0, bitstream_bytes: 0, capacity }
+    }
+
+    /// Bytes still free.
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity.saturating_sub(self.data_bytes + self.bitstream_bytes)
+    }
+
+    /// Reserve task-data bytes.
+    pub fn alloc_data(&mut self, bytes: u64) -> Result<()> {
+        if bytes > self.free_bytes() {
+            return Err(Error::Alloc(format!(
+                "GLB bank overflow: want {bytes} B, free {} B",
+                self.free_bytes()
+            )));
+        }
+        self.data_bytes += bytes;
+        Ok(())
+    }
+
+    /// Release task-data bytes.
+    pub fn free_data(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.data_bytes, "freeing more data than allocated");
+        self.data_bytes = self.data_bytes.saturating_sub(bytes);
+    }
+
+    /// Reserve bitstream-cache bytes (fast-DPR preload).
+    pub fn alloc_bitstream(&mut self, bytes: u64) -> Result<()> {
+        if bytes > self.free_bytes() {
+            return Err(Error::Alloc(format!(
+                "GLB bank bitstream overflow: want {bytes} B, free {} B",
+                self.free_bytes()
+            )));
+        }
+        self.bitstream_bytes += bytes;
+        Ok(())
+    }
+
+    /// Evict cached bitstream bytes.
+    pub fn free_bitstream(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.bitstream_bytes);
+        self.bitstream_bytes = self.bitstream_bytes.saturating_sub(bytes);
+    }
+}
+
+/// The whole GLB: `glb_banks` banks plus the static bank→slice topology.
+#[derive(Clone, Debug)]
+pub struct GlobalBuffer {
+    banks: Vec<GlbBank>,
+    banks_per_slice: u32,
+}
+
+impl GlobalBuffer {
+    /// Build from architecture parameters.
+    pub fn new(arch: &ArchConfig) -> GlobalBuffer {
+        let banks = (0..arch.glb_banks)
+            .map(|_| GlbBank::new(arch.glb_slice_bytes()))
+            .collect();
+        GlobalBuffer { banks, banks_per_slice: arch.glb_banks / arch.array_slices() }
+    }
+
+    /// Bank count.
+    pub fn len(&self) -> u32 {
+        self.banks.len() as u32
+    }
+
+    /// True if the GLB has no banks (degenerate configs only).
+    pub fn is_empty(&self) -> bool {
+        self.banks.is_empty()
+    }
+
+    /// Bank accessor.
+    pub fn bank(&self, id: GlbSliceId) -> Result<&GlbBank> {
+        self.banks
+            .get(id.0 as usize)
+            .ok_or_else(|| Error::Config(format!("GLB bank {id} out of range")))
+    }
+
+    /// Mutable bank accessor.
+    pub fn bank_mut(&mut self, id: GlbSliceId) -> Result<&mut GlbBank> {
+        self.banks
+            .get_mut(id.0 as usize)
+            .ok_or_else(|| Error::Config(format!("GLB bank {id} out of range")))
+    }
+
+    /// The bank that streams configuration into `slice` under fast-DPR
+    /// (paper §2.3: "one GLB bank streams configuration into one
+    /// array-slice") — the first bank of the slice's static bank group.
+    pub fn dpr_bank_for(&self, slice: ArraySliceId) -> GlbSliceId {
+        GlbSliceId(slice.0 * self.banks_per_slice)
+    }
+
+    /// The array-slice a bank sits above (static topology).
+    pub fn slice_above(&self, bank: GlbSliceId) -> ArraySliceId {
+        ArraySliceId(bank.0 / self.banks_per_slice)
+    }
+
+    /// Total free bytes across all banks.
+    pub fn total_free(&self) -> u64 {
+        self.banks.iter().map(|b| b.free_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn glb() -> GlobalBuffer {
+        GlobalBuffer::new(&ArchConfig::default())
+    }
+
+    #[test]
+    fn paper_bank_count_and_capacity() {
+        let g = glb();
+        assert_eq!(g.len(), 32);
+        assert_eq!(g.bank(GlbSliceId(0)).unwrap().capacity, 128 * 1024);
+        assert!(g.bank(GlbSliceId(32)).is_err());
+    }
+
+    #[test]
+    fn bank_alloc_and_overflow() {
+        let mut b = GlbBank::new(1000);
+        b.alloc_data(600).unwrap();
+        b.alloc_bitstream(300).unwrap();
+        assert_eq!(b.free_bytes(), 100);
+        assert!(b.alloc_data(200).is_err());
+        b.free_data(600);
+        b.free_bitstream(300);
+        assert_eq!(b.free_bytes(), 1000);
+    }
+
+    #[test]
+    fn dpr_bank_topology() {
+        let g = glb();
+        // 32 banks / 8 slices = 4 banks per slice; DPR bank is the first.
+        assert_eq!(g.dpr_bank_for(ArraySliceId(0)), GlbSliceId(0));
+        assert_eq!(g.dpr_bank_for(ArraySliceId(1)), GlbSliceId(4));
+        assert_eq!(g.dpr_bank_for(ArraySliceId(7)), GlbSliceId(28));
+        assert_eq!(g.slice_above(GlbSliceId(5)), ArraySliceId(1));
+        assert_eq!(g.slice_above(GlbSliceId(31)), ArraySliceId(7));
+    }
+
+    #[test]
+    fn total_free_accounting() {
+        let mut g = glb();
+        let total = g.total_free();
+        g.bank_mut(GlbSliceId(3)).unwrap().alloc_data(1024).unwrap();
+        assert_eq!(g.total_free(), total - 1024);
+    }
+}

@@ -1,0 +1,111 @@
+//! Statically-configured mesh interconnect (paper §2.1).
+//!
+//! Five tracks per direction; switch boxes route incoming→outgoing
+//! tracks, connection boxes tap tracks into tile cores.  The simulator
+//! works at slice granularity, so this model answers only the questions
+//! the rest of the system asks:
+//!  * how many config words does routing contribute to a bitstream, and
+//!  * is a route between a GLB column and a region feasible / how long —
+//!    used by the flexible-shape mechanism to cost non-square regions
+//!    (the paper flags GLB↔array communication as the price of
+//!    decoupling, §2.3).
+
+use crate::config::ArchConfig;
+
+/// Mesh interconnect parameters.
+#[derive(Clone, Debug)]
+pub struct Interconnect {
+    tracks_per_dir: u32,
+    cols: u32,
+    rows: u32,
+}
+
+/// Result of a route estimate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RouteEstimate {
+    /// Manhattan hop count from the source IO column to the region.
+    pub hops: u32,
+    /// Whether the route fits in the available track budget.
+    pub feasible: bool,
+}
+
+impl Interconnect {
+    /// Build from architecture parameters.
+    pub fn new(arch: &ArchConfig) -> Self {
+        Interconnect {
+            tracks_per_dir: arch.tracks_per_dir,
+            cols: arch.cols,
+            rows: arch.rows,
+        }
+    }
+
+    /// Tracks per direction (paper: 5).
+    pub fn tracks_per_dir(&self) -> u32 {
+        self.tracks_per_dir
+    }
+
+    /// Estimate a route from a GLB IO column to a destination column.
+    ///
+    /// Data enters at the top of `io_col` and travels horizontally along
+    /// the top row then down the destination column; each extra
+    /// concurrent stream through the same corridor consumes one track.
+    pub fn route(&self, io_col: u32, dest_col: u32, concurrent_streams: u32) -> RouteEstimate {
+        let io_col = io_col.min(self.cols.saturating_sub(1));
+        let dest_col = dest_col.min(self.cols.saturating_sub(1));
+        let horiz = io_col.abs_diff(dest_col);
+        let hops = horiz + self.rows / 2; // average vertical descent
+        RouteEstimate { hops, feasible: concurrent_streams < self.tracks_per_dir }
+    }
+
+    /// Config words contributed by routing per tile (switch box +
+    /// connection boxes); scales with track count.
+    pub fn route_words_per_tile(&self, base_words: u32) -> u32 {
+        // base is calibrated for 5 tracks; scale linearly.
+        (base_words * self.tracks_per_dir).div_ceil(5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ic() -> Interconnect {
+        Interconnect::new(&ArchConfig::default())
+    }
+
+    #[test]
+    fn straight_down_route_is_short() {
+        let r = ic().route(4, 4, 0);
+        assert!(r.feasible);
+        assert_eq!(r.hops, 8); // vertical average only
+    }
+
+    #[test]
+    fn horizontal_distance_adds_hops() {
+        let near = ic().route(0, 2, 0).hops;
+        let far = ic().route(0, 30, 0).hops;
+        assert!(far > near);
+        assert_eq!(far - near, 28);
+    }
+
+    #[test]
+    fn track_budget_limits_streams() {
+        let i = ic();
+        assert!(i.route(0, 8, 4).feasible);
+        assert!(!i.route(0, 8, 5).feasible);
+    }
+
+    #[test]
+    fn route_words_scale_with_tracks() {
+        let mut arch = ArchConfig::default();
+        assert_eq!(Interconnect::new(&arch).route_words_per_tile(32), 32);
+        arch.tracks_per_dir = 10;
+        assert_eq!(Interconnect::new(&arch).route_words_per_tile(32), 64);
+    }
+
+    #[test]
+    fn out_of_range_cols_clamped() {
+        let r = ic().route(999, 999, 0);
+        assert_eq!(r.hops, 8);
+    }
+}

@@ -1,0 +1,21 @@
+//! Structural model of the baseline CGRA (paper §2.1, Fig. 1).
+//!
+//! This is the substrate under the slice abstraction: a 32×16 tile array
+//! of PE and MEM tiles on a statically-configured mesh, fronted by a
+//! 32-bank global buffer whose banks talk to the array through IO tiles.
+//! The simulator never needs per-tile cycle behaviour (scheduling and DPR
+//! operate at slice granularity), but the structural model grounds the
+//! bitstream sizes, slice homogeneity checks, and the Fig. 1 / Fig. 2
+//! renders, and gives the compiler real tile coordinates to map onto.
+
+mod clock;
+mod geometry;
+mod glb;
+mod interconnect;
+mod tile;
+
+pub use clock::{Clock, ClockTree};
+pub use geometry::{Geometry, SliceGeometry};
+pub use glb::{GlbBank, GlobalBuffer};
+pub use interconnect::{Interconnect, RouteEstimate};
+pub use tile::{Tile, TileCoord, TileKind};

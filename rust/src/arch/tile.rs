@@ -1,0 +1,71 @@
+//! Tiles: the unit cells of the CGRA array.
+
+use std::fmt;
+
+/// What a tile does (paper §2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TileKind {
+    /// Processing element: word-level ALU extended with MAC (Amber-style).
+    Pe,
+    /// Memory tile: small scratchpad SRAM used as line/double buffers.
+    Mem,
+    /// IO tile: sits at the top row of a column group, bridges a GLB bank
+    /// to the array.
+    Io,
+}
+
+impl TileKind {
+    /// Short glyph for array renders.
+    pub fn glyph(&self) -> char {
+        match self {
+            TileKind::Pe => 'P',
+            TileKind::Mem => 'M',
+            TileKind::Io => 'I',
+        }
+    }
+}
+
+/// Column/row coordinate in the tile array (col-major like the paper's
+/// column-oriented configuration streaming).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TileCoord {
+    /// Column index (0-based, left to right).
+    pub col: u32,
+    /// Row index (0-based, top to bottom).
+    pub row: u32,
+}
+
+impl fmt::Display for TileCoord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{})", self.col, self.row)
+    }
+}
+
+/// One tile instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// Function of the tile.
+    pub kind: TileKind,
+    /// Position.
+    pub coord: TileCoord,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glyphs_are_distinct() {
+        let glyphs = [TileKind::Pe.glyph(), TileKind::Mem.glyph(), TileKind::Io.glyph()];
+        let mut dedup = glyphs.to_vec();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 3);
+    }
+
+    #[test]
+    fn coord_ordering_is_col_major() {
+        let a = TileCoord { col: 0, row: 5 };
+        let b = TileCoord { col: 1, row: 0 };
+        assert!(a < b);
+    }
+}

@@ -1,0 +1,142 @@
+//! Mini benchmarking harness (`criterion` is unavailable offline).
+//!
+//! [`Bencher`] runs warmup + timed samples of a closure and reports
+//! mean/median/σ/min; bench binaries (`benches/*.rs`, `harness = false`)
+//! use it together with [`crate::metrics::Table`] to print the paper's
+//! tables and figures.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Sample count.
+    pub samples: usize,
+    /// Mean per-iteration time, nanoseconds.
+    pub mean_ns: f64,
+    /// Median per-iteration time, nanoseconds.
+    pub median_ns: f64,
+    /// Standard deviation, nanoseconds.
+    pub stddev_ns: f64,
+    /// Minimum, nanoseconds.
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    /// Human-readable time formatting.
+    pub fn fmt_ns(ns: f64) -> String {
+        if ns >= 1e9 {
+            format!("{:.2} s", ns / 1e9)
+        } else if ns >= 1e6 {
+            format!("{:.2} ms", ns / 1e6)
+        } else if ns >= 1e3 {
+            format!("{:.2} µs", ns / 1e3)
+        } else {
+            format!("{ns:.0} ns")
+        }
+    }
+
+    /// One-line summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>12} ±{:>10}  (median {:>12}, min {:>12}, n={})",
+            self.name,
+            Self::fmt_ns(self.mean_ns),
+            Self::fmt_ns(self.stddev_ns),
+            Self::fmt_ns(self.median_ns),
+            Self::fmt_ns(self.min_ns),
+            self.samples
+        )
+    }
+}
+
+/// Benchmark runner with warmup and adaptive batching.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    /// Warmup iterations before sampling.
+    pub warmup_iters: u32,
+    /// Timed samples to collect.
+    pub samples: u32,
+    /// Iterations per sample (amortizes timer overhead); 0 = auto.
+    pub iters_per_sample: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, samples: 20, iters_per_sample: 0 }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for slow end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 }
+    }
+
+    /// Run `f` and report statistics.  `f` should return something so
+    /// the optimizer can't elide it; the value is black-boxed.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        // auto-batch: target ≥ 100 µs per sample
+        let iters = if self.iters_per_sample > 0 {
+            self.iters_per_sample
+        } else {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            let one = t0.elapsed().as_nanos().max(1) as u64;
+            ((100_000 / one).clamp(1, 10_000)) as u32
+        };
+        let mut summary = Summary::new();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            summary.add(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let mut s = summary.clone();
+        BenchResult {
+            name: name.to_string(),
+            samples: s.count(),
+            mean_ns: s.mean(),
+            median_ns: s.median(),
+            stddev_ns: s.stddev(),
+            min_ns: s.min(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_cheap_closure() {
+        let b = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 100 };
+        let r = b.run("noop-ish", || 1 + 1);
+        assert_eq!(r.samples, 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.mean_ns + 1.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(BenchResult::fmt_ns(500.0), "500 ns");
+        assert_eq!(BenchResult::fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(BenchResult::fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(BenchResult::fmt_ns(3.2e9), "3.20 s");
+    }
+
+    #[test]
+    fn line_contains_name() {
+        let b = Bencher { warmup_iters: 0, samples: 2, iters_per_sample: 10 };
+        let r = b.run("my-bench", || 42);
+        assert!(r.line().contains("my-bench"));
+    }
+}

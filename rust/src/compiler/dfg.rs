@@ -1,0 +1,283 @@
+//! Dataflow-graph IR.
+//!
+//! "When a task is compiled in the Amber toolchain, a compiler converts
+//! it into a dataflow graph where each node and edge represents a
+//! hardware resource and communication, respectively." (§2.2)
+//!
+//! Nodes model the three resource classes the abstraction cares about;
+//! edges carry bytes-per-invocation so GLB bandwidth can be derived.
+
+use crate::error::{Error, Result};
+use crate::tasks::workload;
+
+/// One resource node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DfgNode {
+    /// GLB bank usage: staging buffer of `bytes` capacity.
+    GlbBuffer {
+        /// Capacity required in bytes.
+        bytes: u64,
+    },
+    /// PE compute: `macs` multiply-accumulates per invocation, to be
+    /// spread over `lanes` parallel PE lanes (1 lane ≈ 1 PE tile's MAC).
+    PeCompute {
+        /// MACs per invocation.
+        macs: u64,
+        /// Spatial lanes the mapping unrolls across.
+        lanes: u32,
+    },
+    /// MEM-tile scratchpad (line buffers, double buffers).
+    MemBuffer {
+        /// Capacity in bytes.
+        bytes: u64,
+        /// Number of independent banks needed (line-buffer rows etc.).
+        banks: u32,
+    },
+}
+
+/// Producer → consumer edge carrying data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DfgEdge {
+    /// Producer node index.
+    pub from: usize,
+    /// Consumer node index.
+    pub to: usize,
+    /// Bytes moved per invocation.
+    pub bytes: u64,
+}
+
+/// A task's dataflow graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dfg {
+    /// Human-readable task name.
+    pub name: String,
+    /// Resource nodes.
+    pub nodes: Vec<DfgNode>,
+    /// Communication edges.
+    pub edges: Vec<DfgEdge>,
+    /// Invocations per second the task must sustain (drives bandwidth).
+    pub invocations_per_sec: f64,
+}
+
+impl Dfg {
+    /// Validate edge indices.
+    pub fn validate(&self) -> Result<()> {
+        for e in &self.edges {
+            if e.from >= self.nodes.len() || e.to >= self.nodes.len() {
+                return Err(Error::Config(format!(
+                    "DFG '{}' edge {}→{} out of range",
+                    self.name, e.from, e.to
+                )));
+            }
+            if e.from == e.to {
+                return Err(Error::Config(format!("DFG '{}' self-edge at {}", self.name, e.from)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total MACs per invocation.
+    pub fn total_macs(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| match n {
+                DfgNode::PeCompute { macs, .. } => *macs,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total GLB bytes.
+    pub fn glb_bytes(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| match n {
+                DfgNode::GlbBuffer { bytes } => *bytes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Bytes crossing GLB↔array per invocation (edges touching GLB nodes).
+    pub fn glb_traffic_bytes(&self) -> u64 {
+        self.edges
+            .iter()
+            .filter(|e| {
+                matches!(self.nodes[e.from], DfgNode::GlbBuffer { .. })
+                    || matches!(self.nodes[e.to], DfgNode::GlbBuffer { .. })
+            })
+            .map(|e| e.bytes)
+            .sum()
+    }
+}
+
+/// Build the canonical DFG of a ResNet-18 stage (`conv{n}_x`).
+///
+/// Weights + activations stage through the GLB; the four (five with
+/// projection) convs run as PE compute fed by MEM line buffers.
+pub fn resnet_stage_dfg(stage: u32) -> Dfg {
+    let macs = workload::resnet18_stage_macs(stage);
+    // activation sizes at the stage's working resolution (f32)
+    let (hw, ch): (u64, u64) = match stage {
+        2 => (56, 64),
+        3 => (28, 128),
+        4 => (14, 256),
+        5 => (7, 512),
+        _ => panic!("stage 2..=5"),
+    };
+    // Amber is a 16-bit-word CGRA: 2 bytes per activation/weight.
+    let act_bytes = hw * hw * ch * 2;
+    // weights: 4 convs of 3x3xCxC (+ a 1x1 projection for stages 3-5).
+    // Deep-stage weights exceed the GLB, so the mapping streams them as
+    // double-buffered panels (≤256 KB resident) — this is why Table 1's
+    // GLB columns do not grow with layer depth.
+    let w_in = if stage == 2 { ch } else { ch / 2 };
+    let weight_bytes = (3 * 3 * w_in * ch + 3 * 3 * ch * ch * 3
+        + if stage == 2 { 0 } else { w_in * ch }) * 2;
+    let weight_panel = weight_bytes.min(256 * 1024) * 2; // double-buffered
+    let nodes = vec![
+        DfgNode::GlbBuffer { bytes: weight_panel },           // 0: weight panels
+        DfgNode::GlbBuffer { bytes: act_bytes },              // 1: act ping-pong
+        // 16 line/weight-panel buffers per stage (paper's worked example
+        // counts 17 MEM tiles for conv2_x).
+        DfgNode::MemBuffer { bytes: hw * ch * 2 * 6, banks: 16 }, // 2: line buffers
+        DfgNode::PeCompute { macs, lanes: 64 },               // 3: MAC network
+    ];
+    let edges = vec![
+        DfgEdge { from: 0, to: 3, bytes: weight_bytes },
+        DfgEdge { from: 1, to: 2, bytes: act_bytes },
+        DfgEdge { from: 2, to: 3, bytes: act_bytes },
+        DfgEdge { from: 3, to: 1, bytes: act_bytes },
+    ];
+    Dfg {
+        name: format!("resnet18.conv{stage}_x"),
+        nodes,
+        edges,
+        // one inference stream at 30 inf/s is the sizing point
+        invocations_per_sec: 30.0,
+    }
+}
+
+/// Build the canonical DFG of a MobileNet merged dw+pw group.
+pub fn mobilenet_group_dfg(group: u32) -> Dfg {
+    let macs = workload::mobilenet_group_macs(group);
+    let (hw, ch): (u64, u64) = match group {
+        2 => (56, 128),
+        3 => (28, 256),
+        4 => (14, 512),
+        _ => panic!("group 2..=4"),
+    };
+    let act_bytes = hw * hw * ch * 2;
+    let weight_bytes = (9 * ch / 2 + (ch / 2) * ch + 9 * ch + ch * ch) * 2;
+    let weight_panel = weight_bytes.min(128 * 1024) * 2;
+    let nodes = vec![
+        DfgNode::GlbBuffer { bytes: weight_panel },
+        // depthwise stages stream activations band-wise: half-tensor
+        // staging is enough (the dw stencil is row-local).
+        DfgNode::GlbBuffer { bytes: act_bytes / 2 },
+        DfgNode::MemBuffer { bytes: hw * ch * 2 * 3, banks: 4 },
+        DfgNode::PeCompute { macs, lanes: 52 },
+    ];
+    let edges = vec![
+        DfgEdge { from: 0, to: 3, bytes: weight_bytes },
+        DfgEdge { from: 1, to: 2, bytes: act_bytes },
+        DfgEdge { from: 2, to: 3, bytes: act_bytes },
+        DfgEdge { from: 3, to: 1, bytes: act_bytes },
+    ];
+    Dfg {
+        name: format!("mobilenet.conv_dw_pw_{group}_x"),
+        nodes,
+        edges,
+        invocations_per_sec: 30.0,
+    }
+}
+
+/// Build the camera-pipeline DFG (RAW in, RGB out, stencil stages).
+pub fn camera_dfg() -> Dfg {
+    let px = workload::frame_pixels();
+    let raw_bytes = px; // 8-bit RAW
+    let rgb_bytes = px * 3;
+    let nodes = vec![
+        DfgNode::GlbBuffer { bytes: 256 * 1024 },             // 0: tile staging
+        DfgNode::MemBuffer { bytes: 1920 * 2 * 4, banks: 8 }, // 1: line buffers
+        DfgNode::PeCompute { macs: px * 12, lanes: 3 },       // 2: demosaic+wb+ccm+gamma
+    ];
+    let edges = vec![
+        DfgEdge { from: 0, to: 1, bytes: raw_bytes },
+        DfgEdge { from: 1, to: 2, bytes: raw_bytes },
+        DfgEdge { from: 2, to: 0, bytes: rgb_bytes },
+    ];
+    Dfg { name: "camera.pipeline".into(), nodes, edges, invocations_per_sec: 30.0 }
+}
+
+/// Build the Harris corner-detector DFG.
+pub fn harris_dfg() -> Dfg {
+    let px = workload::frame_pixels();
+    let nodes = vec![
+        DfgNode::GlbBuffer { bytes: 256 * 1024 },
+        DfgNode::MemBuffer { bytes: 1920 * 4 * 4, banks: 10 }, // deeper stencil
+        DfgNode::PeCompute { macs: px * 18, lanes: 1 },        // grads+tensor+window+R
+    ];
+    let edges = vec![
+        DfgEdge { from: 0, to: 1, bytes: px },
+        DfgEdge { from: 1, to: 2, bytes: px },
+        DfgEdge { from: 2, to: 0, bytes: px * 4 },
+    ];
+    Dfg { name: "harris.corner".into(), nodes, edges, invocations_per_sec: 30.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_canonical_dfgs_validate() {
+        for stage in 2..=5 {
+            resnet_stage_dfg(stage).validate().unwrap();
+        }
+        for group in 2..=4 {
+            mobilenet_group_dfg(group).validate().unwrap();
+        }
+        camera_dfg().validate().unwrap();
+        harris_dfg().validate().unwrap();
+    }
+
+    #[test]
+    fn resnet_macs_match_workload() {
+        assert_eq!(resnet_stage_dfg(2).total_macs(), workload::resnet18_stage_macs(2));
+    }
+
+    #[test]
+    fn conv2x_glb_footprint_near_paper_750kb() {
+        // §2.2: "a conv2_x layer utilizes 750KB of GLB memory capacity".
+        // Our stage-level model (weight panels + act ping-pong) lands in
+        // the same regime; Table 1 remains the authoritative slice count.
+        let kb = resnet_stage_dfg(2).glb_bytes() / 1024;
+        assert!((600..=1100).contains(&kb), "{kb} KB");
+    }
+
+    #[test]
+    fn glb_traffic_counts_only_glb_edges() {
+        let d = camera_dfg();
+        // raw in (via edge 0→1) + rgb out (2→0)
+        assert_eq!(d.glb_traffic_bytes(), workload::frame_pixels() * 4);
+    }
+
+    #[test]
+    fn invalid_edges_rejected() {
+        let bad = Dfg {
+            name: "bad".into(),
+            nodes: vec![DfgNode::GlbBuffer { bytes: 1 }],
+            edges: vec![DfgEdge { from: 0, to: 1, bytes: 1 }],
+            invocations_per_sec: 1.0,
+        };
+        assert!(bad.validate().is_err());
+        let selfloop = Dfg {
+            name: "self".into(),
+            nodes: vec![DfgNode::GlbBuffer { bytes: 1 }, DfgNode::GlbBuffer { bytes: 1 }],
+            edges: vec![DfgEdge { from: 1, to: 1, bytes: 1 }],
+            invocations_per_sec: 1.0,
+        };
+        assert!(selfloop.validate().is_err());
+    }
+}

@@ -1,0 +1,33 @@
+//! The coarse-grained "compiler" side of the abstraction (§2.2).
+//!
+//! The real Amber toolchain compiles a task into a dataflow graph whose
+//! nodes are hardware resources; this module reproduces the parts of
+//! that flow the paper's mechanisms depend on:
+//!
+//! 1. [`dfg`] — a dataflow-graph IR whose nodes are GLB banks, PE ops,
+//!    and MEM buffers, built from real layer shapes for each Table 1 task.
+//! 2. [`mapper`] — derives the raw resource usage (bytes, bandwidth, tile
+//!    counts) of a DFG and quantizes it into a
+//!    [`crate::abstraction::SliceDemand`] — the §2.2 worked example.
+//! 3. [`unroll`] — the variant generator: replicates the compute subgraph
+//!    for k× throughput (Fig. 2b's parallel mapping).
+//! 4. [`timemux`] — the optimization the variably-sized mechanism
+//!    enables: time-multiplexing PE tiles across the merged region so an
+//!    unrolled task needs fewer slices than naive replication (the
+//!    paper's camera-pipeline 16 → 6 array-slice example).
+//! 5. [`bitgen`] — emits region-agnostic [`crate::dpr::Bitstream`]s sized
+//!    from per-tile config-register counts.
+
+pub mod bitgen;
+pub mod dfg;
+pub mod mapper;
+pub mod place;
+pub mod timemux;
+pub mod unroll;
+
+pub use bitgen::generate_bitstream;
+pub use dfg::{Dfg, DfgEdge, DfgNode};
+pub use mapper::{map_dfg, CompiledVariant};
+pub use place::{place_leftmost, relocate, verify_placement, PlacedTile, Placement};
+pub use timemux::time_multiplex;
+pub use unroll::unroll;

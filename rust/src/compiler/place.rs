@@ -1,0 +1,191 @@
+//! Physical placement: slice allocation → tile coordinates.
+//!
+//! The coarse mapper hands the scheduler slice *counts*; this pass pins a
+//! variant's tiles to concrete columns once a region is allocated.  It is
+//! also where bitstream relocation becomes concrete (§2.3): the compiler
+//! places every task against the **leftmost** region (region-agnostic
+//! column ids 0..n), and [`relocate`] shifts the placement to the
+//! destination slice — exactly what the destination-region register does
+//! in hardware when a GLB bank streams the cached bitstream.
+
+use crate::abstraction::{ArraySliceId, SliceDemand, SliceRange};
+use crate::arch::{Geometry, TileCoord, TileKind};
+use crate::error::{Error, Result};
+
+/// One placed tile assignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacedTile {
+    /// Physical coordinate.
+    pub coord: TileCoord,
+    /// Role the mapping assigns (PE compute lane or MEM buffer).
+    pub kind: TileKind,
+}
+
+/// A variant's physical placement: the tiles it occupies, in the
+/// column-major streaming order fast-DPR configures them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    /// Occupied tiles, column-major.
+    pub tiles: Vec<PlacedTile>,
+    /// Array-slices covered (contiguous).
+    pub slices: SliceRange,
+}
+
+impl Placement {
+    /// Number of PE tiles placed.
+    pub fn pe_count(&self) -> usize {
+        self.tiles.iter().filter(|t| t.kind == TileKind::Pe).count()
+    }
+
+    /// Number of MEM tiles placed.
+    pub fn mem_count(&self) -> usize {
+        self.tiles.iter().filter(|t| t.kind == TileKind::Mem).count()
+    }
+
+    /// Leftmost column used.
+    pub fn min_col(&self) -> u32 {
+        self.tiles.iter().map(|t| t.coord.col).min().unwrap_or(0)
+    }
+
+    /// Rightmost column used.
+    pub fn max_col(&self) -> u32 {
+        self.tiles.iter().map(|t| t.coord.col).max().unwrap_or(0)
+    }
+}
+
+/// Place a variant's demand against the leftmost region (region-agnostic
+/// placement, the compiler's output).  Tiles fill column-major across
+/// the demanded array-slices — the order the per-slice DPR streams walk.
+pub fn place_leftmost(geom: &Geometry, demand: &SliceDemand) -> Result<Placement> {
+    let slices = demand.array_slices.max(1);
+    if slices > geom.arch().array_slices() {
+        return Err(Error::Alloc(format!(
+            "demand of {} array slices exceeds the {}-slice array",
+            slices,
+            geom.arch().array_slices()
+        )));
+    }
+    let mut tiles = Vec::new();
+    for s in 0..slices {
+        for tile in geom.slice_tiles(ArraySliceId(s)) {
+            tiles.push(PlacedTile { coord: tile.coord, kind: tile.kind });
+        }
+    }
+    tiles.sort_by_key(|t| t.coord);
+    Ok(Placement { tiles, slices: SliceRange::new(0, slices) })
+}
+
+/// Relocate a leftmost placement to `dest` — the software model of the
+/// destination-region register.  Requires homogeneous slices (checked at
+/// geometry build); the shift is a pure column offset.
+pub fn relocate(geom: &Geometry, placement: &Placement, dest: &SliceRange) -> Result<Placement> {
+    if placement.slices.start != 0 {
+        return Err(Error::Dpr("relocate() expects a leftmost placement".into()));
+    }
+    if dest.len != placement.slices.len {
+        return Err(Error::Dpr(format!(
+            "destination {} does not match placement width {}",
+            dest, placement.slices.len
+        )));
+    }
+    if dest.end() > geom.arch().array_slices() {
+        return Err(Error::Dpr(format!("destination {dest} out of range")));
+    }
+    let col_shift = dest.start * geom.arch().slice_cols;
+    let tiles = placement
+        .tiles
+        .iter()
+        .map(|t| PlacedTile {
+            coord: TileCoord { col: t.coord.col + col_shift, row: t.coord.row },
+            kind: t.kind,
+        })
+        .collect();
+    Ok(Placement { tiles, slices: *dest })
+}
+
+/// Verify a relocated placement is physically valid: every tile lands on
+/// a tile of the same kind (this is exactly the homogeneity property
+/// that makes region-agnostic bitstreams sound).
+pub fn verify_placement(geom: &Geometry, placement: &Placement) -> Result<()> {
+    for t in &placement.tiles {
+        let phys = geom.tile(t.coord)?;
+        if phys.kind != t.kind {
+            return Err(Error::Dpr(format!(
+                "placement kind mismatch at {}: wants {:?}, tile is {:?}",
+                t.coord, t.kind, phys.kind
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+
+    fn geom() -> Geometry {
+        Geometry::new(&ArchConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn leftmost_placement_counts_match_slice_geometry() {
+        let g = geom();
+        let p = place_leftmost(&g, &SliceDemand::new(7, 2)).unwrap();
+        assert_eq!(p.pe_count(), 96); // 2 slices × 48
+        assert_eq!(p.mem_count(), 32);
+        assert_eq!(p.min_col(), 0);
+        assert_eq!(p.max_col(), 7); // 2 slices × 4 cols − 1
+        verify_placement(&g, &p).unwrap();
+    }
+
+    #[test]
+    fn relocation_shifts_columns_and_stays_valid() {
+        let g = geom();
+        let p = place_leftmost(&g, &SliceDemand::new(4, 2)).unwrap();
+        for dest_start in 0..=6u32 {
+            let dest = SliceRange::new(dest_start, 2);
+            let moved = relocate(&g, &p, &dest).unwrap();
+            assert_eq!(moved.min_col(), dest_start * 4);
+            assert_eq!(moved.pe_count(), p.pe_count());
+            // homogeneity ⇒ every destination is physically valid
+            verify_placement(&g, &moved).unwrap();
+        }
+    }
+
+    #[test]
+    fn relocation_rejects_bad_destinations() {
+        let g = geom();
+        let p = place_leftmost(&g, &SliceDemand::new(4, 2)).unwrap();
+        assert!(relocate(&g, &p, &SliceRange::new(7, 2)).is_err()); // off the edge
+        assert!(relocate(&g, &p, &SliceRange::new(0, 3)).is_err()); // width mismatch
+        let moved = relocate(&g, &p, &SliceRange::new(2, 2)).unwrap();
+        assert!(relocate(&g, &moved, &SliceRange::new(0, 2)).is_err()); // not leftmost
+    }
+
+    #[test]
+    fn oversized_demand_rejected() {
+        let g = geom();
+        assert!(place_leftmost(&g, &SliceDemand::new(4, 9)).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_shift_would_be_caught() {
+        // shift by a non-slice multiple misaligns PE/MEM columns; build
+        // such a placement by hand and confirm verify_placement rejects.
+        let g = geom();
+        let p = place_leftmost(&g, &SliceDemand::new(4, 1)).unwrap();
+        let skewed = Placement {
+            tiles: p
+                .tiles
+                .iter()
+                .map(|t| PlacedTile {
+                    coord: TileCoord { col: t.coord.col + 1, row: t.coord.row },
+                    kind: t.kind,
+                })
+                .collect(),
+            slices: SliceRange::new(0, 1),
+        };
+        assert!(verify_placement(&g, &skewed).is_err());
+    }
+}

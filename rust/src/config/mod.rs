@@ -1,0 +1,16 @@
+//! Configuration system: a TOML-subset parser plus typed schemas.
+//!
+//! Everything tunable in the reproduction — CGRA geometry, clocks, DPR
+//! engine parameters, workload intensities, scheduler policy — lives in a
+//! config file so experiments are declarative.  `presets` carries the
+//! paper-faithful defaults (Amber-like 32×16 array, 32-bank GLB, 500 MHz).
+
+pub mod presets;
+pub mod schema;
+pub mod toml;
+
+pub use schema::{
+    ArchConfig, CloudWorkloadConfig, Config, DprConfig, EdgeWorkloadConfig, RegionPolicyKind,
+    SchedulerConfig, SchedulerPolicyKind, WorkloadConfig,
+};
+pub use toml::TomlValue;

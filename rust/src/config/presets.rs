@@ -1,0 +1,107 @@
+//! Canonical configuration presets used by examples, benches, and tests.
+
+use crate::config::schema::{
+    CloudWorkloadConfig, Config, EdgeWorkloadConfig, RegionPolicyKind, SchedulerPolicyKind,
+    WorkloadConfig,
+};
+
+/// Paper-faithful configuration: Amber-like geometry, flexible-shape
+/// regions, greedy scheduler, cloud workload.
+pub fn paper_default() -> Config {
+    Config::default()
+}
+
+/// The paper's cloud scenario (§3.1) under a given region mechanism.
+pub fn cloud_scenario(policy: RegionPolicyKind) -> Config {
+    let mut cfg = Config::default();
+    cfg.scheduler.region_policy = policy;
+    cfg.workload = WorkloadConfig::Cloud(CloudWorkloadConfig::default());
+    cfg
+}
+
+/// The paper's autonomous-system scenario (§3.2).
+///
+/// Per Fig. 5's caption, the baseline uses AXI4-Lite DPR while the
+/// partitioned mechanisms use fast-DPR; the DPR engine choice is made by
+/// the simulator from the region policy, not here.
+pub fn edge_scenario(policy: RegionPolicyKind) -> Config {
+    let mut cfg = Config::default();
+    cfg.scheduler.region_policy = policy;
+    // Embedded baseline: one standard bitstream per task (the variant
+    // library of §2.2 only exists with the proposed abstraction).
+    cfg.scheduler.baseline_single_mapping = true;
+    // Unit regions sized to the edge task set's variant-a demands
+    // (camera a = 4 GLB + 4 array) per "the largest task determines the
+    // size" (§2.3).
+    cfg.scheduler.unit_glb_slices = 4;
+    cfg.scheduler.unit_array_slices = 4;
+    cfg.workload = WorkloadConfig::Edge(EdgeWorkloadConfig::default());
+    cfg
+}
+
+/// Ablation: array-slice width (4/8/16 columns, DESIGN.md §6.1).
+///
+/// Widths must contain whole MEM-column periods (multiples of 4) or the
+/// slices are not homogeneous and relocation would be unsound.
+pub fn slice_width_ablation(slice_cols: u32) -> Config {
+    let mut cfg = Config::default();
+    cfg.arch.slice_cols = slice_cols;
+    cfg
+}
+
+/// Ablation: scheduler policy (DESIGN.md §6.3).
+pub fn scheduler_ablation(policy: SchedulerPolicyKind) -> Config {
+    let mut cfg = Config::default();
+    cfg.scheduler.policy = policy;
+    cfg
+}
+
+/// Ablation: fast-DPR without bitstream relocation (DESIGN.md §6.4).
+pub fn no_relocation() -> Config {
+    let mut cfg = Config::default();
+    cfg.dpr.relocation = false;
+    cfg
+}
+
+/// A reduced geometry for fast unit tests (4 slices, 8 banks).
+pub fn test_small() -> Config {
+    let mut cfg = Config::default();
+    cfg.arch.cols = 16;
+    cfg.arch.rows = 8;
+    cfg.arch.glb_banks = 8;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        paper_default().validate().unwrap();
+        for kind in RegionPolicyKind::ALL {
+            cloud_scenario(kind).validate().unwrap();
+            edge_scenario(kind).validate().unwrap();
+        }
+        for w in [4, 8, 16] {
+            slice_width_ablation(w).validate().unwrap();
+        }
+        scheduler_ablation(SchedulerPolicyKind::FcfsFirstFit).validate().unwrap();
+        no_relocation().validate().unwrap();
+        test_small().validate().unwrap();
+    }
+
+    #[test]
+    fn slice_width_changes_slice_count() {
+        assert_eq!(slice_width_ablation(4).arch.array_slices(), 8);
+        assert_eq!(slice_width_ablation(8).arch.array_slices(), 4);
+        assert_eq!(slice_width_ablation(16).arch.array_slices(), 2);
+    }
+
+    #[test]
+    fn test_small_is_smaller() {
+        let cfg = test_small();
+        assert_eq!(cfg.arch.array_slices(), 4);
+        assert_eq!(cfg.arch.glb_slices(), 8);
+    }
+}

@@ -1,0 +1,698 @@
+//! Typed configuration schema, populated from the TOML-subset parser.
+
+use std::path::Path;
+
+use crate::config::toml::TomlValue;
+use crate::error::{Error, Result};
+
+/// CGRA architecture parameters (paper §2.1, Amber-like defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchConfig {
+    /// Tile-array columns (paper: 32).
+    pub cols: u32,
+    /// Tile-array rows (paper: 16).
+    pub rows: u32,
+    /// Every `mem_col_period`-th column holds MEM tiles (paper: 4 ⇒
+    /// 384 PE + 128 MEM tiles).
+    pub mem_col_period: u32,
+    /// GLB bank count (paper: 32).
+    pub glb_banks: u32,
+    /// SRAM capacity per GLB bank in KiB (paper: 128).
+    pub glb_bank_kib: u32,
+    /// Peak GLB bandwidth per bank, bytes/cycle (Amber: 8 B/cycle stream).
+    pub glb_bank_bytes_per_cycle: u32,
+    /// Core clock in MHz (paper quotes throughput at 500 MHz).
+    pub core_clock_mhz: u32,
+    /// AXI4-Lite configuration bus clock in MHz (baseline DPR path).
+    pub axi_clock_mhz: u32,
+    /// Routing tracks per direction in the mesh (paper: 5).
+    pub tracks_per_dir: u32,
+    /// Columns per array-slice (paper: 4 ⇒ 48 PE + 16 MEM per slice).
+    pub slice_cols: u32,
+}
+
+impl ArchConfig {
+    /// Total number of array-slices.
+    pub fn array_slices(&self) -> u32 {
+        self.cols / self.slice_cols
+    }
+
+    /// Total number of GLB-slices (one per bank, paper §2.2).
+    pub fn glb_slices(&self) -> u32 {
+        self.glb_banks
+    }
+
+    /// MEM-tile columns in the whole array.
+    pub fn mem_cols(&self) -> u32 {
+        self.cols / self.mem_col_period
+    }
+
+    /// PE tiles in the whole array.
+    pub fn pe_tiles(&self) -> u32 {
+        (self.cols - self.mem_cols()) * self.rows
+    }
+
+    /// MEM tiles in the whole array.
+    pub fn mem_tiles(&self) -> u32 {
+        self.mem_cols() * self.rows
+    }
+
+    /// PE tiles per array-slice.
+    pub fn pe_tiles_per_slice(&self) -> u32 {
+        self.pe_tiles() / self.array_slices()
+    }
+
+    /// MEM tiles per array-slice.
+    pub fn mem_tiles_per_slice(&self) -> u32 {
+        self.mem_tiles() / self.array_slices()
+    }
+
+    /// GLB capacity per slice in bytes.
+    pub fn glb_slice_bytes(&self) -> u64 {
+        self.glb_bank_kib as u64 * 1024
+    }
+
+    /// GLB bandwidth per slice in bytes/second.
+    pub fn glb_slice_bw_bytes_per_sec(&self) -> f64 {
+        self.glb_bank_bytes_per_cycle as f64 * self.core_clock_mhz as f64 * 1e6
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        let err = |m: String| Err(Error::Config(m));
+        if self.cols == 0 || self.rows == 0 {
+            return err("array dimensions must be positive".into());
+        }
+        if self.slice_cols == 0 || self.cols % self.slice_cols != 0 {
+            return err(format!(
+                "cols ({}) must be a positive multiple of slice_cols ({})",
+                self.cols, self.slice_cols
+            ));
+        }
+        if self.mem_col_period == 0 || self.cols % self.mem_col_period != 0 {
+            return err(format!(
+                "cols ({}) must be a multiple of mem_col_period ({})",
+                self.cols, self.mem_col_period
+            ));
+        }
+        if self.slice_cols % self.mem_col_period != 0 {
+            return err(format!(
+                "slice_cols ({}) must contain whole MEM periods ({}) so slices are homogeneous",
+                self.slice_cols, self.mem_col_period
+            ));
+        }
+        if self.glb_banks == 0 || self.glb_banks % self.array_slices() != 0 {
+            return err(format!(
+                "glb_banks ({}) must be a multiple of the array-slice count ({})",
+                self.glb_banks,
+                self.array_slices()
+            ));
+        }
+        if self.core_clock_mhz == 0 || self.axi_clock_mhz == 0 {
+            return err("clocks must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for ArchConfig {
+    /// Paper-faithful Amber-like geometry.
+    fn default() -> Self {
+        ArchConfig {
+            cols: 32,
+            rows: 16,
+            mem_col_period: 4,
+            glb_banks: 32,
+            glb_bank_kib: 128,
+            glb_bank_bytes_per_cycle: 8,
+            core_clock_mhz: 500,
+            axi_clock_mhz: 100,
+            tracks_per_dir: 5,
+            slice_cols: 4,
+        }
+    }
+}
+
+/// DPR engine parameters (paper §2.3 "Dynamic Partial Reconfiguration").
+#[derive(Clone, Debug, PartialEq)]
+pub struct DprConfig {
+    /// AXI4-Lite data width in bits (baseline DPR).
+    pub axi_word_bits: u32,
+    /// Bus cycles per AXI4-Lite write (address + data phases).
+    pub axi_cycles_per_word: u32,
+    /// fast-DPR stream width in bits per cycle per GLB bank (Amber: 64).
+    pub fast_word_bits: u32,
+    /// Config words (32-bit) per PE tile.
+    pub pe_config_words: u32,
+    /// Config words per MEM tile.
+    pub mem_config_words: u32,
+    /// Config words per tile for interconnect (switch + connection boxes).
+    pub route_config_words: u32,
+    /// Whether region-agnostic bitstream relocation is available (paper's
+    /// addition over Amber; turning it off is the §6.4 ablation).
+    pub relocation: bool,
+}
+
+impl Default for DprConfig {
+    fn default() -> Self {
+        DprConfig {
+            axi_word_bits: 32,
+            axi_cycles_per_word: 2,
+            fast_word_bits: 64,
+            pe_config_words: 64,
+            mem_config_words: 96,
+            route_config_words: 32,
+            relocation: true,
+        }
+    }
+}
+
+impl DprConfig {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.axi_word_bits == 0
+            || self.axi_cycles_per_word == 0
+            || self.fast_word_bits == 0
+        {
+            return Err(Error::Config("DPR widths/cycles must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Execution-region formation mechanism (paper Fig. 2 a–d).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RegionPolicyKind {
+    /// Whole CGRA is one region; tasks run one at a time (Fig. 2a).
+    Baseline,
+    /// Fixed-size regions; unrolled tasks span several (Fig. 2b).
+    FixedSize,
+    /// Adjacent unit regions merge into larger ones (Fig. 2c).
+    VariableSize,
+    /// GLB-slices and array-slices decoupled (Fig. 2d, the contribution).
+    FlexibleShape,
+}
+
+impl RegionPolicyKind {
+    /// All mechanisms, in the paper's presentation order.
+    pub const ALL: [RegionPolicyKind; 4] = [
+        RegionPolicyKind::Baseline,
+        RegionPolicyKind::FixedSize,
+        RegionPolicyKind::VariableSize,
+        RegionPolicyKind::FlexibleShape,
+    ];
+
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RegionPolicyKind::Baseline => "baseline",
+            RegionPolicyKind::FixedSize => "fixed",
+            RegionPolicyKind::VariableSize => "variable",
+            RegionPolicyKind::FlexibleShape => "flexible",
+        }
+    }
+
+    /// Parse a config name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "baseline" => Ok(RegionPolicyKind::Baseline),
+            "fixed" => Ok(RegionPolicyKind::FixedSize),
+            "variable" => Ok(RegionPolicyKind::VariableSize),
+            "flexible" => Ok(RegionPolicyKind::FlexibleShape),
+            other => Err(Error::Config(format!("unknown region policy '{other}'"))),
+        }
+    }
+}
+
+/// Task-selection policy for the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerPolicyKind {
+    /// Paper's policy: among runnable variants, pick highest throughput.
+    GreedyThroughput,
+    /// First-fit in arrival order, lowest-throughput variant that fits.
+    FcfsFirstFit,
+    /// Round-robin across tenants, greedy variant choice within a tenant.
+    FairShare,
+    /// Shortest-job-first: ready tasks ordered by their minimum execution
+    /// time (favors the short vision tasks whose NTAT is wait-dominated).
+    ShortestJobFirst,
+}
+
+impl SchedulerPolicyKind {
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerPolicyKind::GreedyThroughput => "greedy",
+            SchedulerPolicyKind::FcfsFirstFit => "fcfs",
+            SchedulerPolicyKind::FairShare => "fair",
+            SchedulerPolicyKind::ShortestJobFirst => "sjf",
+        }
+    }
+
+    /// Parse a config name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "greedy" => Ok(SchedulerPolicyKind::GreedyThroughput),
+            "fcfs" => Ok(SchedulerPolicyKind::FcfsFirstFit),
+            "fair" => Ok(SchedulerPolicyKind::FairShare),
+            "sjf" => Ok(SchedulerPolicyKind::ShortestJobFirst),
+            other => Err(Error::Config(format!("unknown scheduler policy '{other}'"))),
+        }
+    }
+}
+
+/// Scheduler + region-mechanism configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerConfig {
+    /// Region formation mechanism.
+    pub region_policy: RegionPolicyKind,
+    /// Task/variant selection policy.
+    pub policy: SchedulerPolicyKind,
+    /// Unit region size for fixed/variable mechanisms: GLB slices.
+    pub unit_glb_slices: u32,
+    /// Unit region size for fixed/variable mechanisms: array slices.
+    pub unit_array_slices: u32,
+    /// When true, the baseline mechanism runs each task's single
+    /// standard mapping (variant `a`) instead of choosing among the
+    /// pre-compiled variants.  The variant library is part of the
+    /// proposed abstraction (§2.2), so an embedded baseline deployment
+    /// (Fig. 5) has exactly one bitstream per task; the cloud comparison
+    /// (Fig. 4) keeps the generous any-variant baseline so its margins
+    /// are conservative.
+    pub baseline_single_mapping: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            region_policy: RegionPolicyKind::FlexibleShape,
+            policy: SchedulerPolicyKind::GreedyThroughput,
+            // Unit region sized so the *typical* Table 1 variant-a task
+            // fits ("the largest task … determines the size", §2.3):
+            // (8 GLB, 2 array) ⇒ 4 units.  The conv5_x / camera outliers
+            // fall back to exclusive execution under fixed-size.
+            unit_glb_slices: 8,
+            unit_array_slices: 2,
+            baseline_single_mapping: false,
+        }
+    }
+}
+
+/// Cloud scenario workload (paper §3.1, Fig. 3a).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CloudWorkloadConfig {
+    /// Mean request inter-arrival time per tenant, in milliseconds.
+    pub mean_interarrival_ms: [f64; 4],
+    /// Simulated wall-clock duration in milliseconds.
+    pub duration_ms: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for CloudWorkloadConfig {
+    fn default() -> Self {
+        CloudWorkloadConfig {
+            // Tenants: ResNet-18, MobileNet, camera pipeline, Harris.
+            // Rates chosen to load the 8-slice array near saturation
+            // (EXPERIMENTS.md records the sweep).
+            mean_interarrival_ms: [40.0, 25.0, 40.0, 30.0],
+            duration_ms: 10_000.0,
+            seed: 0xC6_5A_2023,
+        }
+    }
+}
+
+/// Autonomous-system scenario workload (paper §3.2, Fig. 3b).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EdgeWorkloadConfig {
+    /// Camera frame rate (paper: 30 fps).
+    pub fps: f64,
+    /// Number of simulated frames.
+    pub frames: u32,
+    /// Event period bounds in frames (paper: uniform 3–7).
+    pub event_period_frames: (u32, u32),
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for EdgeWorkloadConfig {
+    fn default() -> Self {
+        EdgeWorkloadConfig {
+            fps: 30.0,
+            frames: 600,
+            event_period_frames: (3, 7),
+            seed: 0xED_6E_2023,
+        }
+    }
+}
+
+/// Which workload a run drives.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadConfig {
+    /// Multi-tenant cloud scenario.
+    Cloud(CloudWorkloadConfig),
+    /// Autonomous edge scenario.
+    Edge(EdgeWorkloadConfig),
+}
+
+/// Root configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    /// Architecture geometry.
+    pub arch: ArchConfig,
+    /// DPR engines.
+    pub dpr: DprConfig,
+    /// Scheduler + region mechanism.
+    pub scheduler: SchedulerConfig,
+    /// Workload.
+    pub workload: WorkloadConfig,
+    /// Directory containing AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            arch: ArchConfig::default(),
+            dpr: DprConfig::default(),
+            scheduler: SchedulerConfig::default(),
+            workload: WorkloadConfig::Cloud(CloudWorkloadConfig::default()),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse from TOML text; unspecified fields keep paper defaults.
+    pub fn from_toml_text(text: &str) -> Result<Config> {
+        let root = TomlValue::parse(text)?;
+        Config::from_toml(&root)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Config::from_toml_text(&text)
+    }
+
+    /// Populate from a parsed TOML table.
+    pub fn from_toml(root: &TomlValue) -> Result<Config> {
+        let mut cfg = Config::default();
+
+        if let Some(arch) = root.get("arch") {
+            let a = &mut cfg.arch;
+            read_u32(arch, "cols", &mut a.cols)?;
+            read_u32(arch, "rows", &mut a.rows)?;
+            read_u32(arch, "mem_col_period", &mut a.mem_col_period)?;
+            read_u32(arch, "glb_banks", &mut a.glb_banks)?;
+            read_u32(arch, "glb_bank_kib", &mut a.glb_bank_kib)?;
+            read_u32(arch, "glb_bank_bytes_per_cycle", &mut a.glb_bank_bytes_per_cycle)?;
+            read_u32(arch, "core_clock_mhz", &mut a.core_clock_mhz)?;
+            read_u32(arch, "axi_clock_mhz", &mut a.axi_clock_mhz)?;
+            read_u32(arch, "tracks_per_dir", &mut a.tracks_per_dir)?;
+            read_u32(arch, "slice_cols", &mut a.slice_cols)?;
+        }
+
+        if let Some(dpr) = root.get("dpr") {
+            let d = &mut cfg.dpr;
+            read_u32(dpr, "axi_word_bits", &mut d.axi_word_bits)?;
+            read_u32(dpr, "axi_cycles_per_word", &mut d.axi_cycles_per_word)?;
+            read_u32(dpr, "fast_word_bits", &mut d.fast_word_bits)?;
+            read_u32(dpr, "pe_config_words", &mut d.pe_config_words)?;
+            read_u32(dpr, "mem_config_words", &mut d.mem_config_words)?;
+            read_u32(dpr, "route_config_words", &mut d.route_config_words)?;
+            read_bool(dpr, "relocation", &mut d.relocation)?;
+        }
+
+        if let Some(sched) = root.get("scheduler") {
+            let s = &mut cfg.scheduler;
+            if let Some(v) = sched.get("region_policy") {
+                s.region_policy = RegionPolicyKind::from_name(str_of(v, "scheduler.region_policy")?)?;
+            }
+            if let Some(v) = sched.get("policy") {
+                s.policy = SchedulerPolicyKind::from_name(str_of(v, "scheduler.policy")?)?;
+            }
+            read_u32(sched, "unit_glb_slices", &mut s.unit_glb_slices)?;
+            read_u32(sched, "unit_array_slices", &mut s.unit_array_slices)?;
+        }
+
+        if let Some(wl) = root.get("workload") {
+            let kind = wl
+                .get("kind")
+                .map(|v| str_of(v, "workload.kind"))
+                .transpose()?
+                .unwrap_or("cloud");
+            match kind {
+                "cloud" => {
+                    let mut c = CloudWorkloadConfig::default();
+                    read_f64(wl, "duration_ms", &mut c.duration_ms)?;
+                    read_u64(wl, "seed", &mut c.seed)?;
+                    if let Some(v) = wl.get("mean_interarrival_ms") {
+                        let arr = v.as_arr().ok_or_else(|| {
+                            Error::Config("mean_interarrival_ms must be an array".into())
+                        })?;
+                        if arr.len() != 4 {
+                            return Err(Error::Config(
+                                "mean_interarrival_ms needs 4 tenant entries".into(),
+                            ));
+                        }
+                        for (i, item) in arr.iter().enumerate() {
+                            c.mean_interarrival_ms[i] = item.as_float().ok_or_else(|| {
+                                Error::Config("mean_interarrival_ms entries must be numbers".into())
+                            })?;
+                        }
+                    }
+                    cfg.workload = WorkloadConfig::Cloud(c);
+                }
+                "edge" => {
+                    let mut e = EdgeWorkloadConfig::default();
+                    read_f64(wl, "fps", &mut e.fps)?;
+                    read_u32(wl, "frames", &mut e.frames)?;
+                    read_u64(wl, "seed", &mut e.seed)?;
+                    if let Some(v) = wl.get("event_period_frames") {
+                        let arr = v.as_arr().ok_or_else(|| {
+                            Error::Config("event_period_frames must be an array".into())
+                        })?;
+                        if arr.len() != 2 {
+                            return Err(Error::Config("event_period_frames needs [lo, hi]".into()));
+                        }
+                        let lo = arr[0].as_int().unwrap_or(-1);
+                        let hi = arr[1].as_int().unwrap_or(-1);
+                        if lo < 0 || hi < lo {
+                            return Err(Error::Config("bad event_period_frames bounds".into()));
+                        }
+                        e.event_period_frames = (lo as u32, hi as u32);
+                    }
+                    cfg.workload = WorkloadConfig::Edge(e);
+                }
+                other => return Err(Error::Config(format!("unknown workload kind '{other}'"))),
+            }
+        }
+
+        if let Some(v) = root.lookup("runtime.artifacts_dir") {
+            cfg.artifacts_dir = str_of(v, "runtime.artifacts_dir")?.to_string();
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate the whole configuration.
+    pub fn validate(&self) -> Result<()> {
+        self.arch.validate()?;
+        self.dpr.validate()?;
+        let s = &self.scheduler;
+        if s.unit_array_slices == 0 || s.unit_glb_slices == 0 {
+            return Err(Error::Config("unit region sizes must be positive".into()));
+        }
+        if s.unit_array_slices > self.arch.array_slices() {
+            return Err(Error::Config(format!(
+                "unit_array_slices ({}) exceeds total array slices ({})",
+                s.unit_array_slices,
+                self.arch.array_slices()
+            )));
+        }
+        if s.unit_glb_slices > self.arch.glb_slices() {
+            return Err(Error::Config(format!(
+                "unit_glb_slices ({}) exceeds total GLB slices ({})",
+                s.unit_glb_slices,
+                self.arch.glb_slices()
+            )));
+        }
+        match &self.workload {
+            WorkloadConfig::Cloud(c) => {
+                if c.duration_ms <= 0.0 || c.mean_interarrival_ms.iter().any(|&r| r <= 0.0) {
+                    return Err(Error::Config("cloud workload rates must be positive".into()));
+                }
+            }
+            WorkloadConfig::Edge(e) => {
+                if e.fps <= 0.0 || e.frames == 0 {
+                    return Err(Error::Config("edge workload needs fps > 0, frames > 0".into()));
+                }
+                if e.event_period_frames.0 > e.event_period_frames.1 {
+                    return Err(Error::Config("event period lo > hi".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn str_of<'a>(v: &'a TomlValue, what: &str) -> Result<&'a str> {
+    v.as_str()
+        .ok_or_else(|| Error::Config(format!("{what} must be a string")))
+}
+
+fn read_u32(table: &TomlValue, key: &str, out: &mut u32) -> Result<()> {
+    if let Some(v) = table.get(key) {
+        let i = v
+            .as_int()
+            .ok_or_else(|| Error::Config(format!("{key} must be an integer")))?;
+        if i < 0 || i > u32::MAX as i64 {
+            return Err(Error::Config(format!("{key} out of range: {i}")));
+        }
+        *out = i as u32;
+    }
+    Ok(())
+}
+
+fn read_u64(table: &TomlValue, key: &str, out: &mut u64) -> Result<()> {
+    if let Some(v) = table.get(key) {
+        let i = v
+            .as_int()
+            .ok_or_else(|| Error::Config(format!("{key} must be an integer")))?;
+        if i < 0 {
+            return Err(Error::Config(format!("{key} must be non-negative")));
+        }
+        *out = i as u64;
+    }
+    Ok(())
+}
+
+fn read_f64(table: &TomlValue, key: &str, out: &mut f64) -> Result<()> {
+    if let Some(v) = table.get(key) {
+        *out = v
+            .as_float()
+            .ok_or_else(|| Error::Config(format!("{key} must be a number")))?;
+    }
+    Ok(())
+}
+
+fn read_bool(table: &TomlValue, key: &str, out: &mut bool) -> Result<()> {
+    if let Some(v) = table.get(key) {
+        *out = v
+            .as_bool()
+            .ok_or_else(|| Error::Config(format!("{key} must be a boolean")))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_geometry() {
+        let a = ArchConfig::default();
+        a.validate().unwrap();
+        assert_eq!(a.pe_tiles(), 384);
+        assert_eq!(a.mem_tiles(), 128);
+        assert_eq!(a.array_slices(), 8);
+        assert_eq!(a.glb_slices(), 32);
+        assert_eq!(a.pe_tiles_per_slice(), 48);
+        assert_eq!(a.mem_tiles_per_slice(), 16);
+        assert_eq!(a.glb_slice_bytes(), 128 * 1024);
+    }
+
+    #[test]
+    fn default_config_validates() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let cfg = Config::from_toml_text(
+            "[arch]\ncols = 16\nglb_banks = 16\n[scheduler]\nregion_policy = \"fixed\"\npolicy = \"fcfs\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.arch.cols, 16);
+        assert_eq!(cfg.arch.array_slices(), 4);
+        assert_eq!(cfg.scheduler.region_policy, RegionPolicyKind::FixedSize);
+        assert_eq!(cfg.scheduler.policy, SchedulerPolicyKind::FcfsFirstFit);
+    }
+
+    #[test]
+    fn edge_workload_parse() {
+        let cfg = Config::from_toml_text(
+            "[workload]\nkind = \"edge\"\nfps = 60.0\nframes = 100\nevent_period_frames = [2, 5]\n",
+        )
+        .unwrap();
+        match cfg.workload {
+            WorkloadConfig::Edge(e) => {
+                assert_eq!(e.fps, 60.0);
+                assert_eq!(e.frames, 100);
+                assert_eq!(e.event_period_frames, (2, 5));
+            }
+            _ => panic!("expected edge workload"),
+        }
+    }
+
+    #[test]
+    fn cloud_workload_rates_parse() {
+        let cfg = Config::from_toml_text(
+            "[workload]\nkind = \"cloud\"\nmean_interarrival_ms = [10.0, 20.0, 30.0, 40.0]\n",
+        )
+        .unwrap();
+        match cfg.workload {
+            WorkloadConfig::Cloud(c) => assert_eq!(c.mean_interarrival_ms, [10.0, 20.0, 30.0, 40.0]),
+            _ => panic!("expected cloud workload"),
+        }
+    }
+
+    #[test]
+    fn invalid_geometry_rejected() {
+        // cols not a multiple of slice_cols
+        assert!(Config::from_toml_text("[arch]\ncols = 30\n").is_err());
+        // glb banks don't divide across slices
+        assert!(Config::from_toml_text("[arch]\nglb_banks = 30\n").is_err());
+        // zero clocks
+        assert!(Config::from_toml_text("[arch]\ncore_clock_mhz = 0\n").is_err());
+    }
+
+    #[test]
+    fn invalid_policy_rejected() {
+        assert!(Config::from_toml_text("[scheduler]\nregion_policy = \"magic\"\n").is_err());
+        assert!(Config::from_toml_text("[scheduler]\npolicy = \"magic\"\n").is_err());
+    }
+
+    #[test]
+    fn invalid_workload_rejected() {
+        assert!(Config::from_toml_text("[workload]\nkind = \"cloud\"\nduration_ms = -5.0\n").is_err());
+        assert!(Config::from_toml_text("[workload]\nkind = \"edge\"\nframes = 0\n").is_err());
+        assert!(
+            Config::from_toml_text("[workload]\nkind = \"cloud\"\nmean_interarrival_ms = [1.0]\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn region_policy_names_round_trip() {
+        for kind in RegionPolicyKind::ALL {
+            assert_eq!(RegionPolicyKind::from_name(kind.name()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn scheduler_policy_names_round_trip() {
+        for kind in [
+            SchedulerPolicyKind::GreedyThroughput,
+            SchedulerPolicyKind::FcfsFirstFit,
+            SchedulerPolicyKind::FairShare,
+            SchedulerPolicyKind::ShortestJobFirst,
+        ] {
+            assert_eq!(SchedulerPolicyKind::from_name(kind.name()).unwrap(), kind);
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! A strict parser for the TOML subset the config files use.
+//!
+//! Supported: `[table]` / `[nested.table]` headers, `key = value` pairs,
+//! strings (basic, with escapes), integers, floats, booleans, and
+//! homogeneous arrays, plus `#` comments.  Unsupported TOML (dates,
+//! inline tables, arrays-of-tables, dotted keys) is rejected with a
+//! line-numbered error rather than silently misparsed.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Basic string.
+    Str(String),
+    /// 64-bit integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous array.
+    Arr(Vec<TomlValue>),
+    /// Table (from `[header]` sections or the root).
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    /// Parse a complete document into the root table.
+    pub fn parse(text: &str) -> Result<TomlValue> {
+        let mut root = BTreeMap::new();
+        let mut current_path: Vec<String> = Vec::new();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let loc = || format!("toml:{}", lineno + 1);
+
+            if let Some(header) = line.strip_prefix('[') {
+                let header = header
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::parse(loc(), "unterminated table header"))?;
+                if header.starts_with('[') {
+                    return Err(Error::parse(loc(), "arrays of tables are not supported"));
+                }
+                let path: Vec<String> = header.split('.').map(|s| s.trim().to_string()).collect();
+                if path.iter().any(|p| p.is_empty() || !is_bare_key(p)) {
+                    return Err(Error::parse(loc(), format!("invalid table name '{header}'")));
+                }
+                // create intermediate tables
+                ensure_table(&mut root, &path, &loc())?;
+                current_path = path;
+            } else if let Some(eq) = find_unquoted(line, '=') {
+                let key = line[..eq].trim();
+                if !is_bare_key(key) {
+                    return Err(Error::parse(loc(), format!("invalid key '{key}'")));
+                }
+                let value = parse_value(line[eq + 1..].trim(), &loc())?;
+                let table = navigate(&mut root, &current_path).expect("tables pre-created");
+                if table.insert(key.to_string(), value).is_some() {
+                    return Err(Error::parse(loc(), format!("duplicate key '{key}'")));
+                }
+            } else {
+                return Err(Error::parse(loc(), format!("cannot parse line '{line}'")));
+            }
+        }
+        Ok(TomlValue::Table(root))
+    }
+
+    /// Look up a dotted path (`"arch.glb_banks"`).
+    pub fn lookup(&self, dotted: &str) -> Option<&TomlValue> {
+        let mut cur = self;
+        for part in dotted.split('.') {
+            match cur {
+                TomlValue::Table(m) => cur = m.get(part)?,
+                _ => return None,
+            }
+        }
+        Some(cur)
+    }
+
+    /// Table field access.
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        match self {
+            TomlValue::Table(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// String payload.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer payload.
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Float payload (integers coerce).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Boolean payload.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array payload.
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_unquoted(line: &str, target: char) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            c if c == target && !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    loc: &str,
+) -> Result<&'a mut BTreeMap<String, TomlValue>> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        match entry {
+            TomlValue::Table(m) => cur = m,
+            _ => {
+                return Err(Error::parse(
+                    loc.to_string(),
+                    format!("'{part}' is already a non-table value"),
+                ))
+            }
+        }
+    }
+    Ok(cur)
+}
+
+fn navigate<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+) -> Option<&'a mut BTreeMap<String, TomlValue>> {
+    let mut cur = root;
+    for part in path {
+        match cur.get_mut(part) {
+            Some(TomlValue::Table(m)) => cur = m,
+            _ => return None,
+        }
+    }
+    Some(cur)
+}
+
+fn parse_value(text: &str, loc: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        return Err(Error::parse(loc.to_string(), "missing value"));
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| Error::parse(loc.to_string(), "unterminated string"))?;
+        return Ok(TomlValue::Str(unescape(inner, loc)?));
+    }
+    if text.starts_with('[') {
+        let inner = text
+            .strip_prefix('[')
+            .and_then(|t| t.strip_suffix(']'))
+            .ok_or_else(|| Error::parse(loc.to_string(), "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, loc)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(Error::parse(
+        loc.to_string(),
+        format!("cannot parse value '{text}'"),
+    ))
+}
+
+fn unescape(s: &str, loc: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => {
+                return Err(Error::parse(
+                    loc.to_string(),
+                    format!("invalid escape '\\{}'", other.map(String::from).unwrap_or_default()),
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Split an array body on commas not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0i32, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let doc = "a = 1\nb = 2.5\nc = \"hi\"\nd = true\n";
+        let v = TomlValue::parse(doc).unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_float(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("hi"));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_tables_and_nesting() {
+        let doc = "[arch]\nbanks = 32\n[workload.cloud]\nrate = 0.5\n";
+        let v = TomlValue::parse(doc).unwrap();
+        assert_eq!(v.lookup("arch.banks").unwrap().as_int(), Some(32));
+        assert_eq!(v.lookup("workload.cloud.rate").unwrap().as_float(), Some(0.5));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = "xs = [1, 2, 3]\nnames = [\"a\", \"b\"]\nnested = [[1], [2, 3]]\n";
+        let v = TomlValue::parse(doc).unwrap();
+        assert_eq!(v.get("xs").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("names").unwrap().as_arr().unwrap()[1].as_str(), Some("b"));
+        assert_eq!(v.get("nested").unwrap().as_arr().unwrap()[1].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = "# header\n\na = 1 # trailing\nb = \"with # hash\"\n";
+        let v = TomlValue::parse(doc).unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("with # hash"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let v = TomlValue::parse("big = 1_000_000\n").unwrap();
+        assert_eq!(v.get("big").unwrap().as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let v = TomlValue::parse("a = -5\nb = -2.5e-3\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(-5));
+        assert!((v.get("b").unwrap().as_float().unwrap() + 0.0025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlValue::parse("a =").is_err());
+        assert!(TomlValue::parse("[unclosed\n").is_err());
+        assert!(TomlValue::parse("just a line\n").is_err());
+        assert!(TomlValue::parse("a = \"unterminated\n").is_err());
+        assert!(TomlValue::parse("[[aot]]\n").is_err());
+        assert!(TomlValue::parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_table_scalar_conflict() {
+        assert!(TomlValue::parse("a = 1\n[a]\nb = 2\n").is_err());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = TomlValue::parse(r#"s = "line\nnext\t\"q\"""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("line\nnext\t\"q\""));
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let v = TomlValue::parse("i = 3\n").unwrap();
+        assert_eq!(v.get("i").unwrap().as_float(), Some(3.0));
+        assert_eq!(v.get("i").unwrap().as_str(), None);
+    }
+}

@@ -1,0 +1,102 @@
+//! Task ⇄ artifact binding: functional execution of scheduled tasks.
+//!
+//! When the leader launches a task variant, the binding resolves its AOT
+//! artifact (from the Table 1 library's `artifact` field), executes it
+//! through PJRT, and optionally verifies the golden checksum — giving the
+//! live coordinator bit-real task outputs next to the slice-level timing
+//! model.
+
+use crate::error::{Error, Result};
+use crate::runtime::{ExecOutput, RuntimeClient};
+use crate::tasks::{TaskId, TaskLibrary, VariantId};
+
+/// Executes launched tasks against their artifacts.
+pub struct TaskBinding {
+    runtime: RuntimeClient,
+    lib: TaskLibrary,
+    /// verify golden checksums on every execution (cheap; on by default).
+    pub verify: bool,
+}
+
+impl TaskBinding {
+    /// Bind a runtime client to the task library.
+    pub fn new(runtime: RuntimeClient, lib: TaskLibrary) -> TaskBinding {
+        TaskBinding { runtime, lib, verify: true }
+    }
+
+    /// Artifact name for a (task, variant).
+    pub fn artifact_name(&self, task: &TaskId, ver: VariantId) -> Result<String> {
+        let spec = self.lib.get(task)?;
+        let v = spec
+            .variant(ver)
+            .ok_or_else(|| Error::Sched(format!("{task} has no variant {ver}")))?;
+        v.artifact
+            .clone()
+            .ok_or_else(|| Error::Artifact(format!("{task}:{ver} has no artifact")))
+    }
+
+    /// Pre-compile every artifact the library references (startup cost,
+    /// keeps the request path compile-free).  Returns total compile ms.
+    pub fn warmup(&mut self) -> Result<f64> {
+        let mut total_us = 0.0;
+        let names: Vec<String> = self
+            .lib
+            .iter()
+            .flat_map(|t| t.variants.iter().filter_map(|v| v.artifact.clone()))
+            .collect();
+        for name in names {
+            total_us += self.runtime.ensure_compiled(&name)?;
+        }
+        Ok(total_us / 1e3)
+    }
+
+    /// Execute a (task, variant) on deterministic inputs; verifies the
+    /// golden checksum when `verify` is set.
+    pub fn execute(&mut self, task: &TaskId, ver: VariantId) -> Result<ExecOutput> {
+        let name = self.artifact_name(task, ver)?;
+        if self.verify {
+            self.runtime.verify_golden(&name)
+        } else {
+            self.runtime.execute_golden(&name)
+        }
+    }
+
+    /// The underlying runtime (stats).
+    pub fn runtime(&self) -> &RuntimeClient {
+        &self.runtime
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn binding() -> Option<TaskBinding> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let rt = RuntimeClient::from_dir(&dir).unwrap();
+        Some(TaskBinding::new(rt, TaskLibrary::table1()))
+    }
+
+    #[test]
+    fn resolves_artifact_names() {
+        let Some(b) = binding() else { return };
+        assert_eq!(
+            b.artifact_name(&TaskId::new("camera.pipeline"), VariantId('b')).unwrap(),
+            "camera_pipeline_b"
+        );
+        assert!(b.artifact_name(&TaskId::new("camera.pipeline"), VariantId('z')).is_err());
+        assert!(b.artifact_name(&TaskId::new("nope"), VariantId('a')).is_err());
+    }
+
+    #[test]
+    fn executes_and_verifies_a_task() {
+        let Some(mut b) = binding() else { return };
+        let out = b.execute(&TaskId::new("harris.corner"), VariantId('a')).unwrap();
+        assert_eq!(out.shape, vec![1, 64, 64]);
+        assert!(out.exec_us > 0.0);
+    }
+}

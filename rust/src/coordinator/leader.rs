@@ -1,0 +1,228 @@
+//! The leader loop: the deployable end-to-end serving path.
+//!
+//! Drives the identical scheduler/region/DPR machinery as the simulator,
+//! but every launch also executes its artifact through PJRT so the
+//! output tensors are real.  Virtual time (cycles) carries the paper's
+//! timing model; wall time measures the actual compute cost of the
+//! functional layer.  This is what `examples/cloud_multitenant.rs` runs
+//! and what EXPERIMENTS.md §End-to-end records.
+
+use std::collections::BTreeMap;
+
+use crate::config::Config;
+use crate::dpr::DprMode;
+use crate::error::{Error, Result};
+use crate::metrics::{NtatRecord, NtatTracker};
+use crate::regions::RegionId;
+use crate::scheduler::{RequestQueue, Scheduler};
+use crate::sim::EventQueue;
+use crate::tasks::{AppId, TaskLibrary};
+
+use super::binding::TaskBinding;
+use super::router::{Router, TenantId};
+
+/// One served request's outcome.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    /// Request sequence number.
+    pub seq: u64,
+    /// Submitting tenant.
+    pub tenant: TenantId,
+    /// Application.
+    pub app: AppId,
+    /// Virtual-time turn-around (cycles).
+    pub tat_cycles: u64,
+    /// Virtual-time NTAT.
+    pub ntat: f64,
+    /// Wall-clock microseconds spent in PJRT execution for this request.
+    pub compute_us: f64,
+    /// Output checksum of the request's final task (functional result).
+    pub final_output_sum: f64,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Completed requests in completion order.
+    pub outcomes: Vec<ServeOutcome>,
+    /// Virtual-time NTAT tracker (per-app summaries).
+    pub ntat: NtatTracker,
+    /// Total PJRT wall time (µs).
+    pub total_compute_us: f64,
+    /// Total task launches.
+    pub launches: u64,
+    /// Warmup (compile) wall time, ms.
+    pub warmup_ms: f64,
+}
+
+/// The live coordinator.
+pub struct Leader {
+    sched: Scheduler,
+    queue: RequestQueue,
+    router: Router,
+    binding: TaskBinding,
+    stats: ServeStats,
+}
+
+enum Ev {
+    Completion(RegionId),
+}
+
+impl Leader {
+    /// Build a leader: scheduler per `cfg`, artifacts from
+    /// `cfg.artifacts_dir`, all artifacts pre-compiled (warmup).
+    pub fn new(cfg: &Config) -> Result<Leader> {
+        let lib = TaskLibrary::table1();
+        let mut sched = Scheduler::new(cfg, lib.clone(), DprMode::Fast);
+        sched.preload_all();
+        let runtime = crate::runtime::RuntimeClient::from_dir(&cfg.artifacts_dir)?;
+        let mut binding = TaskBinding::new(runtime, lib);
+        let warmup_ms = binding.warmup()?;
+        Ok(Leader {
+            sched,
+            queue: RequestQueue::new(),
+            router: Router::new(64),
+            binding,
+            stats: ServeStats { warmup_ms, ..ServeStats::default() },
+        })
+    }
+
+    /// Serve a batch of (tenant, app) submissions arriving at the given
+    /// virtual cycles, running every launched task's artifact.  Returns
+    /// when all requests have completed.
+    pub fn serve(&mut self, submissions: &[(TenantId, AppId, u64)]) -> Result<&ServeStats> {
+        // request bookkeeping: seq → (app, arrival, exec cycles, compute µs, last sum)
+        let mut inflight: BTreeMap<u64, (AppId, u64, u64, f64, f64)> = BTreeMap::new();
+        let mut events: EventQueue<Ev> = EventQueue::new();
+        // launch bookkeeping for completion events: region → (seq, dpr+exec)
+        let mut region_info: BTreeMap<RegionId, u64> = BTreeMap::new();
+
+        let mut arrivals: Vec<&(TenantId, AppId, u64)> = submissions.iter().collect();
+        arrivals.sort_by_key(|(_, _, at)| *at);
+        let mut next_arrival = 0usize;
+        let mut now = 0u64;
+
+        loop {
+            // admit every arrival due at or before `now`
+            while next_arrival < arrivals.len() && arrivals[next_arrival].2 <= now {
+                let (tenant, app, at) = *arrivals[next_arrival];
+                let seq = self.router.submit(&mut self.queue, tenant, app, at)?;
+                inflight.insert(seq, (app, at, 0, 0.0, 0.0));
+                next_arrival += 1;
+            }
+
+            // schedule + functionally execute every launch
+            for launch in self.sched.schedule(&mut self.queue, now) {
+                self.stats.launches += 1;
+                let out = self.binding.execute(&launch.task, launch.ver)?;
+                let entry = inflight.get_mut(&launch.instance.request).ok_or_else(|| {
+                    Error::SimInvariant(format!("launch for unknown request {}", launch.instance))
+                })?;
+                entry.2 += launch.dpr_cycles + launch.exec_cycles;
+                entry.3 += out.exec_us;
+                entry.4 = out.checksum().sum;
+                self.stats.total_compute_us += out.exec_us;
+                region_info.insert(launch.region, launch.finish);
+                events.push(launch.finish, Ev::Completion(launch.region));
+            }
+
+            // advance to the next event: completion or arrival
+            let next_event = events.peek_time();
+            let next_arr = arrivals.get(next_arrival).map(|(_, _, at)| *at);
+            match (next_event, next_arr) {
+                (None, None) => break,
+                (Some(e), Some(a)) if a < e => {
+                    now = a;
+                    continue;
+                }
+                (None, Some(a)) => {
+                    now = a;
+                    continue;
+                }
+                _ => {}
+            }
+            let (t, Ev::Completion(region)) = events.pop().expect("peeked");
+            now = t;
+            region_info.remove(&region);
+            let inst = self.sched.complete(region)?;
+            if let Some(done) = self.queue.mark_complete(inst, now)? {
+                let (app, arrival, exec, compute_us, last_sum) =
+                    inflight.remove(&done.seq).expect("inflight");
+                let tenant = self.router.complete(done.seq)?;
+                let tat = now - arrival;
+                let ntat = tat as f64 / exec.max(1) as f64;
+                self.stats.ntat.record(NtatRecord {
+                    app,
+                    arrival,
+                    completion: now,
+                    exec_cycles: exec.max(1),
+                });
+                self.stats.outcomes.push(ServeOutcome {
+                    seq: done.seq,
+                    tenant,
+                    app,
+                    tat_cycles: tat,
+                    ntat,
+                    compute_us,
+                    final_output_sum: last_sum,
+                });
+            }
+        }
+        Ok(&self.stats)
+    }
+
+    /// Serving statistics so far.
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// The scheduler (region/DPR inspection).
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.sched
+    }
+
+    /// The artifact binding (runtime stats).
+    pub fn binding(&self) -> &TaskBinding {
+        &self.binding
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn serves_a_mixed_batch_end_to_end() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut cfg = presets::paper_default();
+        cfg.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        let mut leader = Leader::new(&cfg).unwrap();
+        let cycles_per_ms = 500_000;
+        let subs = vec![
+            (TenantId(2), AppId::Camera, 0),
+            (TenantId(3), AppId::Harris, cycles_per_ms / 2),
+            (TenantId(1), AppId::MobileNet, cycles_per_ms),
+        ];
+        let stats = leader.serve(&subs).unwrap();
+        assert_eq!(stats.outcomes.len(), 3);
+        // camera (1 task) + harris (1) + mobilenet (3 chained)
+        assert_eq!(stats.launches, 5);
+        assert!(stats.total_compute_us > 0.0);
+        assert!(stats.warmup_ms > 0.0);
+        for o in &stats.outcomes {
+            assert!(o.ntat >= 1.0, "{o:?}");
+            assert!(o.final_output_sum.is_finite());
+        }
+        // every region released at the end
+        assert_eq!(leader.scheduler().regions().active_count(), 0);
+    }
+}

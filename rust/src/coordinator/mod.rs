@@ -1,0 +1,19 @@
+//! The live (non-simulated) multi-tenant coordinator.
+//!
+//! While [`crate::sim`] reproduces the paper's evaluation in virtual
+//! time, this module is the deployable serving path: tenants submit
+//! application requests, the scheduler places them on the slice-level
+//! abstraction exactly as in the simulation, and every launched task
+//! *actually executes* its AOT artifact through the PJRT runtime —
+//! the CGRA's functional behaviour with the paper's timing model
+//! alongside.  Python never runs here.
+
+mod binding;
+mod leader;
+mod router;
+pub mod server;
+
+pub use binding::TaskBinding;
+pub use leader::{Leader, ServeOutcome, ServeStats};
+pub use router::{Router, RouterStats, TenantId};
+pub use server::{Server, parse_app};

@@ -1,0 +1,139 @@
+//! Multi-tenant request router and admission.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::scheduler::RequestQueue;
+use crate::tasks::{AppGraph, AppId, AppRequest};
+
+/// Tenant identity (the cloud scenario has four, Fig. 3a).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u32);
+
+/// Per-tenant counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Requests admitted.
+    pub admitted: u64,
+    /// Requests rejected by the admission limit.
+    pub rejected: u64,
+    /// Requests fully completed.
+    pub completed: u64,
+}
+
+/// Routes tenant submissions into the scheduler's request queue with
+/// per-tenant bookkeeping and a simple per-tenant admission limit.
+#[derive(Clone, Debug)]
+pub struct Router {
+    next_seq: u64,
+    /// in-flight request count per tenant.
+    inflight: BTreeMap<TenantId, u64>,
+    stats: BTreeMap<TenantId, RouterStats>,
+    /// per-tenant cap on in-flight requests (backpressure).
+    max_inflight: u64,
+    /// request seq → tenant (for completion accounting).
+    owner: BTreeMap<u64, TenantId>,
+}
+
+impl Router {
+    /// Router with a per-tenant in-flight cap.
+    pub fn new(max_inflight: u64) -> Router {
+        Router {
+            next_seq: 0,
+            inflight: BTreeMap::new(),
+            stats: BTreeMap::new(),
+            max_inflight: max_inflight.max(1),
+            owner: BTreeMap::new(),
+        }
+    }
+
+    /// Submit an application request for a tenant at cycle `now`.
+    /// Returns the request sequence number, or an error when the
+    /// tenant's in-flight window is full (caller applies backpressure).
+    pub fn submit(
+        &mut self,
+        queue: &mut RequestQueue,
+        tenant: TenantId,
+        app: AppId,
+        now: u64,
+    ) -> Result<u64> {
+        let inflight = self.inflight.entry(tenant).or_insert(0);
+        let stats = self.stats.entry(tenant).or_default();
+        if *inflight >= self.max_inflight {
+            stats.rejected += 1;
+            return Err(Error::Sched(format!(
+                "tenant {} at in-flight limit {}",
+                tenant.0, self.max_inflight
+            )));
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        *inflight += 1;
+        stats.admitted += 1;
+        self.owner.insert(seq, tenant);
+        queue.submit(AppRequest::new(seq, tenant.0, app, now));
+        Ok(seq)
+    }
+
+    /// Record a request completion (by seq).
+    pub fn complete(&mut self, seq: u64) -> Result<TenantId> {
+        let tenant = self
+            .owner
+            .remove(&seq)
+            .ok_or_else(|| Error::Sched(format!("completion for unknown request {seq}")))?;
+        *self.inflight.get_mut(&tenant).expect("owner implies inflight") -= 1;
+        self.stats.get_mut(&tenant).expect("stats exist").completed += 1;
+        Ok(tenant)
+    }
+
+    /// Stats for a tenant.
+    pub fn stats(&self, tenant: TenantId) -> RouterStats {
+        self.stats.get(&tenant).copied().unwrap_or_default()
+    }
+
+    /// Total in-flight requests.
+    pub fn inflight_total(&self) -> u64 {
+        self.inflight.values().sum()
+    }
+
+    /// Number of task nodes an app expands to (capacity planning).
+    pub fn app_tasks(app: AppId) -> usize {
+        AppGraph::of(app).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_complete_cycle() {
+        let mut r = Router::new(2);
+        let mut q = RequestQueue::new();
+        let s0 = r.submit(&mut q, TenantId(0), AppId::Camera, 0).unwrap();
+        let s1 = r.submit(&mut q, TenantId(0), AppId::Camera, 5).unwrap();
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(r.inflight_total(), 2);
+        // window full
+        assert!(r.submit(&mut q, TenantId(0), AppId::Camera, 6).is_err());
+        assert_eq!(r.stats(TenantId(0)).rejected, 1);
+        // other tenants unaffected
+        r.submit(&mut q, TenantId(1), AppId::Harris, 7).unwrap();
+
+        assert_eq!(r.complete(s0).unwrap(), TenantId(0));
+        assert_eq!(r.stats(TenantId(0)).completed, 1);
+        r.submit(&mut q, TenantId(0), AppId::Camera, 8).unwrap();
+    }
+
+    #[test]
+    fn unknown_completion_errors() {
+        let mut r = Router::new(1);
+        assert!(r.complete(99).is_err());
+    }
+
+    #[test]
+    fn app_task_counts() {
+        assert_eq!(Router::app_tasks(AppId::ResNet18), 4);
+        assert_eq!(Router::app_tasks(AppId::Camera), 1);
+    }
+}

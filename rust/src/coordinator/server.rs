@@ -1,0 +1,268 @@
+//! Minimal TCP serving front for the live coordinator.
+//!
+//! A line protocol good enough to drive the leader from external load
+//! generators (and to demonstrate the system as a deployable service —
+//! the request path is: socket → router → scheduler → slice allocation →
+//! fast-DPR accounting → PJRT execution → reply):
+//!
+//! ```text
+//! SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris>
+//!   → OK seq=<n> ntat=<x> tat_ms=<x> compute_us=<x> sum=<x>
+//! STATS
+//!   → STATS inflight=<n> served=<n> launches=<n> compute_ms=<x>
+//! QUIT
+//!   → BYE (closes the connection)
+//! ```
+//!
+//! Each SUBMIT is served synchronously (batch of one) — the protocol is
+//! deliberately simple; batching across connections is the scheduler's
+//! job in the simulated scenarios.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::tasks::AppId;
+
+use super::leader::Leader;
+use super::router::TenantId;
+
+/// Parse an application name from the wire.
+pub fn parse_app(name: &str) -> Option<AppId> {
+    match name.to_ascii_lowercase().as_str() {
+        "resnet18" | "resnet-18" | "resnet" => Some(AppId::ResNet18),
+        "mobilenet" => Some(AppId::MobileNet),
+        "camera" | "camera_pipeline" => Some(AppId::Camera),
+        "harris" => Some(AppId::Harris),
+        _ => None,
+    }
+}
+
+/// Handle one protocol line; returns the reply (without newline) and
+/// whether the connection should close.
+pub fn handle_line(leader: &mut Leader, line: &str) -> (String, bool) {
+    let mut parts = line.split_whitespace();
+    match parts.next().map(|s| s.to_ascii_uppercase()).as_deref() {
+        Some("SUBMIT") => {
+            let tenant = match parts.next().and_then(|t| t.parse::<u32>().ok()) {
+                Some(t) if t < 4 => TenantId(t),
+                _ => return ("ERR bad tenant (0-3)".into(), false),
+            };
+            let app = match parts.next().and_then(parse_app) {
+                Some(a) => a,
+                None => return ("ERR bad app (resnet18|mobilenet|camera|harris)".into(), false),
+            };
+            match leader.serve(&[(tenant, app, 0)]) {
+                Ok(stats) => match stats.outcomes.last() {
+                    Some(o) => (
+                        format!(
+                            "OK seq={} ntat={:.2} tat_ms={:.3} compute_us={:.0} sum={:+.4}",
+                            o.seq,
+                            o.ntat,
+                            o.tat_cycles as f64 / 500e3,
+                            o.compute_us,
+                            o.final_output_sum
+                        ),
+                        false,
+                    ),
+                    None => ("ERR request did not complete".into(), false),
+                },
+                Err(e) => (format!("ERR {e}"), false),
+            }
+        }
+        Some("STATS") => {
+            let s = leader.stats();
+            (
+                format!(
+                    "STATS served={} launches={} compute_ms={:.1} warmup_ms={:.0}",
+                    s.outcomes.len(),
+                    s.launches,
+                    s.total_compute_us / 1e3,
+                    s.warmup_ms
+                ),
+                false,
+            )
+        }
+        Some("QUIT") => ("BYE".into(), true),
+        Some(other) => (format!("ERR unknown command '{other}'"), false),
+        None => ("ERR empty command".into(), false),
+    }
+}
+
+/// A running server handle.
+pub struct Server {
+    /// Bound local address (useful with port 0).
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving on `bind` (e.g. `127.0.0.1:0` for an ephemeral
+    /// port).  The leader (whose PJRT client is not `Send`) is built and
+    /// owned by a single server thread, which handles connections
+    /// sequentially — the serving model of the simulated scenarios, where
+    /// one coordinator owns the machine.
+    pub fn start(cfg: &Config, bind: &str) -> Result<Server> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| Error::io(bind.to_string(), e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::io(bind.to_string(), e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::io(bind.to_string(), e))?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let cfg = cfg.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::spawn(move || {
+            // Leader lives entirely on this thread (PJRT client is !Send).
+            let mut leader = match Leader::new(&cfg) {
+                Ok(l) => {
+                    let _ = ready_tx.send(Ok(()));
+                    l
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while !stop_flag.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = handle_connection(stream, &mut leader, &stop_flag);
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Server { addr, stop, thread: Some(thread) }),
+            Ok(Err(e)) => {
+                let _ = thread.join();
+                Err(e)
+            }
+            Err(_) => Err(Error::Runtime("server thread died during startup".into())),
+        }
+    }
+
+    /// Signal shutdown and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    leader: &mut Leader,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100))).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {
+                let (reply, close) = handle_line(leader, line.trim_end());
+                writer.write_all(reply.as_bytes())?;
+                writer.write_all(b"\n")?;
+                if close {
+                    break;
+                }
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // timeout tick: re-check stop flag
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use std::io::{BufRead, BufReader, Write};
+
+    #[test]
+    fn parse_app_names() {
+        assert_eq!(parse_app("resnet18"), Some(AppId::ResNet18));
+        assert_eq!(parse_app("ResNet-18"), Some(AppId::ResNet18));
+        assert_eq!(parse_app("CAMERA"), Some(AppId::Camera));
+        assert_eq!(parse_app("nope"), None);
+    }
+
+    fn artifacts_available() -> Option<String> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| dir.display().to_string())
+    }
+
+    #[test]
+    fn protocol_errors_without_socket() {
+        let Some(dir) = artifacts_available() else { return };
+        let mut cfg = presets::paper_default();
+        cfg.artifacts_dir = dir;
+        let mut leader = Leader::new(&cfg).unwrap();
+        assert!(handle_line(&mut leader, "SUBMIT 9 camera").0.starts_with("ERR"));
+        assert!(handle_line(&mut leader, "SUBMIT 1 nope").0.starts_with("ERR"));
+        assert!(handle_line(&mut leader, "FROB").0.starts_with("ERR"));
+        assert!(handle_line(&mut leader, "").0.starts_with("ERR"));
+        let (bye, close) = handle_line(&mut leader, "QUIT");
+        assert_eq!(bye, "BYE");
+        assert!(close);
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let Some(dir) = artifacts_available() else { return };
+        let mut cfg = presets::paper_default();
+        cfg.artifacts_dir = dir;
+        let server = Server::start(&cfg, "127.0.0.1:0").unwrap();
+
+        let stream = std::net::TcpStream::connect(server.addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+
+        writer.write_all(b"SUBMIT 3 harris\n").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("OK seq=0"), "{reply}");
+        assert!(reply.contains("ntat="), "{reply}");
+
+        writer.write_all(b"STATS\n").unwrap();
+        let mut stats = String::new();
+        reader.read_line(&mut stats).unwrap();
+        assert!(stats.contains("served=1"), "{stats}");
+
+        writer.write_all(b"QUIT\n").unwrap();
+        let mut bye = String::new();
+        reader.read_line(&mut bye).unwrap();
+        assert_eq!(bye.trim(), "BYE");
+
+        server.shutdown();
+    }
+}

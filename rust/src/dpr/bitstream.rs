@@ -1,0 +1,93 @@
+//! Bitstream model.
+
+use std::fmt;
+
+/// Identifier of a compiled bitstream: task id + variant letter.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BitstreamId {
+    /// Task identifier (e.g. `resnet18.conv2_x`).
+    pub task: String,
+    /// Variant letter.
+    pub ver: char,
+}
+
+impl BitstreamId {
+    /// Convenience constructor.
+    pub fn new(task: impl Into<String>, ver: char) -> Self {
+        BitstreamId { task: task.into(), ver }
+    }
+}
+
+impl fmt::Display for BitstreamId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.task, self.ver)
+    }
+}
+
+/// A compiled configuration bitstream.
+///
+/// Produced by `compiler::bitgen` from a variant's slice demand and the
+/// per-tile config-register counts; consumed by the DPR engines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bitstream {
+    /// Identity (task + variant).
+    pub id: BitstreamId,
+    /// Total 32-bit configuration words.
+    pub words: u64,
+    /// Array-slices this bitstream configures.
+    pub array_slices: u32,
+    /// Whether the bitstream is region-agnostic (compiled for the
+    /// leftmost region, relocatable via the destination register —
+    /// paper §2.3).  Amber-style region-aware bitstreams are pinned to
+    /// one region.
+    pub region_agnostic: bool,
+    /// For region-aware bitstreams: the array-slice index the column ids
+    /// were baked for.  Ignored when `region_agnostic`.
+    pub home_slice: u32,
+}
+
+impl Bitstream {
+    /// Size in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.words * 4
+    }
+
+    /// Config words per array-slice (fast-DPR streams these in parallel).
+    pub fn words_per_slice(&self) -> u64 {
+        debug_assert!(self.array_slices > 0);
+        self.words.div_ceil(self.array_slices as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bs(words: u64, slices: u32) -> Bitstream {
+        Bitstream {
+            id: BitstreamId::new("t", 'a'),
+            words,
+            array_slices: slices,
+            region_agnostic: true,
+            home_slice: 0,
+        }
+    }
+
+    #[test]
+    fn bytes_and_per_slice_words() {
+        let b = bs(6656 * 2, 2);
+        assert_eq!(b.bytes(), 6656 * 8);
+        assert_eq!(b.words_per_slice(), 6656);
+    }
+
+    #[test]
+    fn ragged_slice_division_rounds_up() {
+        let b = bs(100, 3);
+        assert_eq!(b.words_per_slice(), 34);
+    }
+
+    #[test]
+    fn id_display() {
+        assert_eq!(BitstreamId::new("camera.pipeline", 'b').to_string(), "camera.pipeline:b");
+    }
+}

@@ -1,0 +1,195 @@
+//! GLB-resident bitstream cache.
+//!
+//! Fast-DPR requires the bitstream to already sit in GLB SRAM (paper
+//! §2.3: GLB banks "store and stream bitstreams to the tile array").
+//! Cached bitstreams consume real bank capacity, so the cache has a
+//! budget: a fraction of total GLB bytes reserved for configuration
+//! storage (Amber dedicates every other bank; we default to half).
+//! Eviction is LRU.
+
+use std::collections::VecDeque;
+
+use crate::config::ArchConfig;
+
+use super::bitstream::{Bitstream, BitstreamId};
+
+/// Hit/miss counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Reconfigurations served from GLB-resident bitstreams.
+    pub hits: u64,
+    /// Reconfigurations that had to DMA from the host first.
+    pub misses: u64,
+    /// Entries evicted to make room.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction (0 when no lookups yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// LRU bitstream cache with a byte budget.
+#[derive(Clone, Debug)]
+pub struct BitstreamCache {
+    /// LRU order: front = least recently used.
+    entries: VecDeque<(BitstreamId, u64)>,
+    capacity_bytes: u64,
+    used_bytes: u64,
+    stats: CacheStats,
+}
+
+impl BitstreamCache {
+    /// Budget = half the GLB, matching Amber's every-other-bank scheme.
+    pub fn new(arch: &ArchConfig) -> Self {
+        let capacity = arch.glb_slices() as u64 * arch.glb_slice_bytes() / 2;
+        BitstreamCache::with_capacity(capacity)
+    }
+
+    /// Explicit byte budget.
+    pub fn with_capacity(capacity_bytes: u64) -> Self {
+        BitstreamCache {
+            entries: VecDeque::new(),
+            capacity_bytes,
+            used_bytes: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Bytes currently cached.
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    /// Budget in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Cached entry count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Counters.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Whether `id` is resident; refreshes LRU position when it is.
+    pub fn lookup(&mut self, id: &BitstreamId) -> bool {
+        if let Some(pos) = self.entries.iter().position(|(e, _)| e == id) {
+            let entry = self.entries.remove(pos).expect("position valid");
+            self.entries.push_back(entry);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Insert (idempotent), evicting LRU entries to fit the budget.
+    /// Bitstreams larger than the whole budget are not cached.
+    pub fn insert(&mut self, bs: &Bitstream) {
+        if self.entries.iter().any(|(e, _)| *e == bs.id) {
+            return;
+        }
+        let bytes = bs.bytes();
+        if bytes > self.capacity_bytes {
+            return;
+        }
+        while self.used_bytes + bytes > self.capacity_bytes {
+            let (_, evicted) = self.entries.pop_front().expect("used>0 implies entries");
+            self.used_bytes -= evicted;
+            self.stats.evictions += 1;
+        }
+        self.entries.push_back((bs.id.clone(), bytes));
+        self.used_bytes += bytes;
+    }
+
+    /// Record a hit (engine bookkeeping).
+    pub fn record_hit(&mut self) {
+        self.stats.hits += 1;
+    }
+
+    /// Record a miss.
+    pub fn record_miss(&mut self) {
+        self.stats.misses += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bs(name: &str, words: u64) -> Bitstream {
+        Bitstream {
+            id: BitstreamId::new(name, 'a'),
+            words,
+            array_slices: 1,
+            region_agnostic: true,
+            home_slice: 0,
+        }
+    }
+
+    #[test]
+    fn default_budget_is_half_glb() {
+        let c = BitstreamCache::new(&ArchConfig::default());
+        assert_eq!(c.capacity_bytes(), 32 * 128 * 1024 / 2);
+    }
+
+    #[test]
+    fn insert_lookup_cycle() {
+        let mut c = BitstreamCache::with_capacity(1024);
+        assert!(!c.lookup(&BitstreamId::new("x", 'a')));
+        c.insert(&bs("x", 10));
+        assert!(c.lookup(&BitstreamId::new("x", 'a')));
+        assert_eq!(c.used_bytes(), 40);
+        // idempotent
+        c.insert(&bs("x", 10));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = BitstreamCache::with_capacity(120);
+        c.insert(&bs("a", 10)); // 40 B
+        c.insert(&bs("b", 10));
+        c.insert(&bs("c", 10)); // full: a,b,c
+        assert!(c.lookup(&BitstreamId::new("a", 'a'))); // refresh a
+        c.insert(&bs("d", 10)); // evicts b (LRU)
+        assert!(!c.lookup(&BitstreamId::new("b", 'a')));
+        assert!(c.lookup(&BitstreamId::new("a", 'a')));
+        assert!(c.lookup(&BitstreamId::new("c", 'a')));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_bitstream_not_cached() {
+        let mut c = BitstreamCache::with_capacity(100);
+        c.insert(&bs("huge", 1000));
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let mut c = BitstreamCache::with_capacity(100);
+        assert_eq!(c.stats().hit_rate(), 0.0);
+        c.record_hit();
+        c.record_hit();
+        c.record_miss();
+        assert!((c.stats().hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

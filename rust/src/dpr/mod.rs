@@ -1,0 +1,28 @@
+//! Dynamic partial reconfiguration: the paper's second mechanism (§2.3).
+//!
+//! Two engines are modeled:
+//!
+//! * [`Axi4LiteDpr`] — the baseline: the host writes configuration
+//!   registers one 32-bit word at a time over an AXI4-Lite bus (two bus
+//!   beats per write) at bus clock.  Reconfiguring the whole array this
+//!   way costs ~milliseconds — 14.4 % of the baseline autonomous-system
+//!   latency in the paper's Fig. 5.
+//! * [`FastDpr`] — the proposal, following Amber's DPR design: each GLB
+//!   bank streams a cached, *region-agnostic* bitstream into its
+//!   array-slice at 64 bit/cycle at core clock, all slices in parallel;
+//!   a destination-region register relocates the stream to any free
+//!   slice (bitstream relocation).  Reconfiguration drops to
+//!   microseconds (<5 % of latency in Fig. 5).
+//!
+//! [`BitstreamCache`] models the GLB's bitstream-storage role: preloaded
+//! bitstreams occupy real bank capacity; without relocation (the
+//! DESIGN.md §6.4 ablation) a cached bitstream only matches the region it
+//! was compiled for and any other destination is a miss.
+
+mod bitstream;
+mod cache;
+mod engine;
+
+pub use bitstream::{Bitstream, BitstreamId};
+pub use cache::{BitstreamCache, CacheStats};
+pub use engine::{Axi4LiteDpr, DprEngine, DprMode, DprOutcome, FastDpr};

@@ -1,0 +1,75 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for every layer of the coordinator.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Malformed or inconsistent configuration.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Config / manifest parse errors (TOML-subset or JSON).
+    #[error("parse error at {location}: {message}")]
+    Parse {
+        /// `file:line:col` or a JSON pointer-ish path.
+        location: String,
+        /// Human-readable cause.
+        message: String,
+    },
+
+    /// Resource allocation failures (no free slices, contiguity violated…).
+    #[error("allocation error: {0}")]
+    Alloc(String),
+
+    /// Scheduler-level failures (unknown task, dependency cycle…).
+    #[error("scheduling error: {0}")]
+    Sched(String),
+
+    /// DPR engine failures (bitstream missing, bad destination…).
+    #[error("DPR error: {0}")]
+    Dpr(String),
+
+    /// PJRT runtime failures, wrapping the `xla` crate's error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact registry problems (missing file, manifest mismatch…).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Simulation invariant violations — always a bug, never user input.
+    #[error("simulation invariant violated: {0}")]
+    SimInvariant(String),
+
+    /// I/O with context.
+    #[error("io error on {path}: {source}")]
+    Io {
+        /// Offending path.
+        path: String,
+        /// Underlying error.
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Attach a path to an `io::Error`.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+
+    /// Parse error helper.
+    pub fn parse(location: impl Into<String>, message: impl Into<String>) -> Self {
+        Error::Parse { location: location.into(), message: message.into() }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

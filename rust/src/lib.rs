@@ -1,0 +1,43 @@
+//! # cgra-mte — Multi-Task Execution on Coarse-Grained Reconfigurable Arrays
+//!
+//! A full-system reproduction of *"Hardware Abstractions and Hardware
+//! Mechanisms to Support Multi-Task Execution on Coarse-Grained
+//! Reconfigurable Arrays"* (Kong et al., Stanford, 2023).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1/L2 (build time, Python)** — the benchmark tasks of the paper's
+//!   Table 1 (ResNet-18 / MobileNet conv stages, camera pipeline, Harris)
+//!   written in JAX over Pallas kernels and AOT-lowered to HLO text in
+//!   `artifacts/` (`make artifacts`).
+//! * **L3 (this crate, Rust)** — the paper's actual contribution: the
+//!   slice-granular hardware abstraction ([`abstraction`]), flexible-shape
+//!   execution regions ([`regions`]), fast dynamic partial reconfiguration
+//!   ([`dpr`]), the greedy multi-task scheduler ([`scheduler`]), the
+//!   discrete-event CGRA timing model ([`sim`]), and the multi-tenant
+//!   request coordinator ([`coordinator`]).
+//! * **Runtime** — [`runtime`] loads the AOT artifacts through the PJRT C
+//!   API (`xla` crate) and executes them on the request path; Python never
+//!   runs at serve time.
+//!
+//! See `DESIGN.md` for the architecture inventory and the experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod abstraction;
+pub mod arch;
+pub mod bench;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod dpr;
+pub mod error;
+pub mod metrics;
+pub mod regions;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod tasks;
+pub mod testutil;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,387 @@
+//! cgra-mte — leader entrypoint + CLI.
+//!
+//! Subcommands (hand-rolled parsing; `clap` is unavailable offline):
+//!
+//! ```text
+//! cgra-mte simulate-cloud [--policy P] [--duration-ms N] [--seed S] [--config F]
+//! cgra-mte simulate-edge  [--policy P] [--frames N] [--seed S] [--config F]
+//! cgra-mte serve          [--requests N] [--artifacts DIR]
+//! cgra-mte verify-artifacts [--artifacts DIR]
+//! cgra-mte table1
+//! cgra-mte render-arch
+//! ```
+
+use cgra_mte::config::{presets, Config, RegionPolicyKind, WorkloadConfig};
+use cgra_mte::coordinator::{Leader, TenantId};
+use cgra_mte::metrics::Table;
+use cgra_mte::sim::{run_cloud, run_edge};
+use cgra_mte::tasks::{AppId, TaskLibrary};
+use cgra_mte::util::logging;
+use cgra_mte::util::rng::Rng;
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> cgra_mte::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "simulate-cloud" => simulate_cloud(&flags),
+        "simulate-edge" => simulate_edge(&flags),
+        "serve" => serve(&flags),
+        "serve-tcp" => serve_tcp(&flags),
+        "sweep" => sweep(&flags),
+        "verify-artifacts" => verify_artifacts(&flags),
+        "table1" => table1(),
+        "render-arch" => render_arch(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(cgra_mte::Error::Config(format!("unknown subcommand '{other}'"))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "cgra-mte — multi-task execution on CGRAs (paper reproduction)\n\
+         \n\
+         USAGE: cgra-mte <subcommand> [flags]\n\
+         \n\
+         SUBCOMMANDS\n\
+           simulate-cloud     cloud scenario (§3.1 / Fig. 4)\n\
+           simulate-edge      autonomous scenario (§3.2 / Fig. 5)\n\
+           serve              live coordinator: schedule + execute artifacts\n\
+           serve-tcp          TCP front (--bind 127.0.0.1:7070): SUBMIT/STATS/QUIT\n\
+           verify-artifacts   golden-check every AOT artifact via PJRT\n\
+           table1             print the Table 1 task library\n\
+           render-arch        render the CGRA tile array (Fig. 1)\n\
+           sweep              load-calibration sweep (EXPERIMENTS.md Fig. 4)\n\
+         \n\
+         FLAGS\n\
+           --policy P         baseline | fixed | variable | flexible (default flexible)\n\
+           --duration-ms N    cloud arrival window (default 10000)\n\
+           --frames N         edge frames (default 600)\n\
+           --seed S           workload RNG seed\n\
+           --requests N       serve: number of requests (default 12)\n\
+           --artifacts DIR    artifacts directory (default artifacts)\n\
+           --config F         TOML config file (overrides defaults)\n\
+           --export FILE      write per-request/per-frame CSV (simulate-*)\n\
+           --bind ADDR        serve-tcp bind address (default 127.0.0.1:7070)"
+    );
+}
+
+/// Minimal --key value flag parser.
+struct Flags {
+    pairs: Vec<(String, String)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> cgra_mte::Result<Flags> {
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let key = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| cgra_mte::Error::Config(format!("expected --flag, got '{}'", args[i])))?;
+            let value = args
+                .get(i + 1)
+                .ok_or_else(|| cgra_mte::Error::Config(format!("--{key} needs a value")))?;
+            pairs.push((key.to_string(), value.clone()));
+            i += 2;
+        }
+        Ok(Flags { pairs })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_u64(&self, key: &str) -> cgra_mte::Result<Option<u64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<u64>()
+                    .map_err(|_| cgra_mte::Error::Config(format!("--{key} must be an integer")))
+            })
+            .transpose()
+    }
+
+    fn policy(&self) -> cgra_mte::Result<RegionPolicyKind> {
+        match self.get("policy") {
+            Some(name) => RegionPolicyKind::from_name(name),
+            None => Ok(RegionPolicyKind::FlexibleShape),
+        }
+    }
+
+    fn base_config(&self, default: Config) -> cgra_mte::Result<Config> {
+        match self.get("config") {
+            Some(path) => Config::from_file(path),
+            None => Ok(default),
+        }
+    }
+}
+
+fn simulate_cloud(flags: &Flags) -> cgra_mte::Result<()> {
+    let policy = flags.policy()?;
+    let mut cfg = flags.base_config(presets::cloud_scenario(policy))?;
+    cfg.scheduler.region_policy = policy;
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        if let Some(d) = flags.get_u64("duration-ms")? {
+            c.duration_ms = d as f64;
+        }
+        if let Some(s) = flags.get_u64("seed")? {
+            c.seed = s;
+        }
+    }
+    let report = run_cloud(&cfg)?;
+    let mut table = Table::new(
+        format!("cloud scenario — {} regions", policy.name()),
+        &["app", "requests", "mean NTAT", "svc tput (u/cyc)"],
+    );
+    let ntat = report.ntat.mean_ntat();
+    let tput = report.throughput.service_throughput();
+    for app in AppId::ALL {
+        table.row(&[
+            app.name().to_string(),
+            report.ntat.count(app).to_string(),
+            format!("{:.3}", ntat.get(&app).copied().unwrap_or(0.0)),
+            format!("{:.2}", tput.get(&app).copied().unwrap_or(0.0)),
+        ]);
+    }
+    print!("{}", table.render());
+    if let Some(path) = flags.get("export") {
+        cgra_mte::metrics::export::write_file(path, &cgra_mte::metrics::export::ntat_csv(&report.ntat))?;
+        println!("wrote per-request CSV to {path}");
+    }
+    println!(
+        "completed {}/{} requests; array util {:.1}%; glb util {:.1}%; dpr hit-rate {:.0}%",
+        report.completed,
+        report.submitted,
+        report.array_utilization * 100.0,
+        report.glb_utilization * 100.0,
+        report.dpr_stats.hit_rate() * 100.0,
+    );
+    Ok(())
+}
+
+fn simulate_edge(flags: &Flags) -> cgra_mte::Result<()> {
+    let policy = flags.policy()?;
+    let mut cfg = flags.base_config(presets::edge_scenario(policy))?;
+    cfg.scheduler.region_policy = policy;
+    if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+        if let Some(f) = flags.get_u64("frames")? {
+            e.frames = f as u32;
+        }
+        if let Some(s) = flags.get_u64("seed")? {
+            e.seed = s;
+        }
+    }
+    let report = run_edge(&cfg)?;
+    let clk = cfg.arch.core_clock_mhz;
+    println!(
+        "edge scenario — {} regions, {:?} DPR\n\
+         frames: {}   event requests: {}\n\
+         mean latency: {:.3} ms   (reconfig {:.1}%, wait+exec {:.1}%)\n\
+         p99 latency: {:.3} ms",
+        report.policy.name(),
+        report.dpr_mode,
+        report.frames,
+        report.event_requests,
+        report.mean_latency_ms(clk),
+        report.latency.reconfig_share() * 100.0,
+        (1.0 - report.latency.reconfig_share()) * 100.0,
+        report.latency.p99_total() / (clk as f64 * 1e3),
+    );
+    if let Some(path) = flags.get("export") {
+        cgra_mte::metrics::export::write_file(
+            path,
+            &cgra_mte::metrics::export::latency_csv(&report.latency),
+        )?;
+        println!("wrote per-frame CSV to {path}");
+    }
+    Ok(())
+}
+
+fn serve(flags: &Flags) -> cgra_mte::Result<()> {
+    let mut cfg = flags.base_config(presets::paper_default())?;
+    if let Some(dir) = flags.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    let n = flags.get_u64("requests")?.unwrap_or(12);
+    let mut leader = Leader::new(&cfg)?;
+    println!("warmup: compiled all artifacts in {:.0} ms", leader.stats().warmup_ms);
+
+    // synth a mixed submission batch: tenants round-robin, 2ms apart
+    let mut rng = Rng::new(flags.get_u64("seed")?.unwrap_or(42));
+    let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
+    let subs: Vec<(TenantId, AppId, u64)> = (0..n)
+        .map(|i| {
+            let tenant = (i % 4) as u32;
+            let jitter = rng.below(cycles_per_ms);
+            (TenantId(tenant), AppId::ALL[tenant as usize], i * 2 * cycles_per_ms + jitter)
+        })
+        .collect();
+    let stats = leader.serve(&subs)?;
+    let mut table = Table::new(
+        "served requests",
+        &["seq", "tenant", "app", "TAT (ms)", "NTAT", "compute (µs)", "output Σ"],
+    );
+    for o in &stats.outcomes {
+        table.row(&[
+            o.seq.to_string(),
+            o.tenant.0.to_string(),
+            o.app.name().to_string(),
+            format!("{:.3}", o.tat_cycles as f64 / cycles_per_ms as f64),
+            format!("{:.2}", o.ntat),
+            format!("{:.0}", o.compute_us),
+            format!("{:+.3}", o.final_output_sum),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "launches: {}   total PJRT compute: {:.1} ms",
+        stats.launches,
+        stats.total_compute_us / 1e3
+    );
+    Ok(())
+}
+
+/// Load-calibration sweep: baseline vs flexible across arrival scales —
+/// regenerates the table EXPERIMENTS.md's Fig. 4 calibration came from.
+fn sweep(flags: &Flags) -> cgra_mte::Result<()> {
+    let duration = flags.get_u64("duration-ms")?.unwrap_or(3000) as f64;
+    let base_rates = [45.0, 25.0, 30.0, 28.0];
+    let mut table = Table::new(
+        "load sweep — mean NTAT and flexible:baseline ratios",
+        &["arrival scale", "base NTAT", "flex NTAT", "NTAT ratio", "tput ratio (mean)"],
+    );
+    for scale in [2.0, 1.5, 1.0, 0.75, 0.5] {
+        let mut results = Vec::new();
+        for policy in [RegionPolicyKind::Baseline, RegionPolicyKind::FlexibleShape] {
+            let mut cfg = presets::cloud_scenario(policy);
+            if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+                c.duration_ms = duration;
+                for (slot, base) in c.mean_interarrival_ms.iter_mut().zip(base_rates) {
+                    *slot = base * scale;
+                }
+            }
+            results.push(run_cloud(&cfg)?);
+        }
+        let (base, flex) = (&results[0], &results[1]);
+        let bt = base.throughput.service_throughput();
+        let ft = flex.throughput.service_throughput();
+        let tput_ratio = AppId::ALL
+            .iter()
+            .map(|a| ft.get(a).copied().unwrap_or(0.0) / bt.get(a).copied().unwrap_or(1.0).max(1e-12))
+            .sum::<f64>()
+            / 4.0;
+        table.row(&[
+            format!("{scale:.2}x"),
+            format!("{:.2}", base.mean_ntat_across_apps()),
+            format!("{:.2}", flex.mean_ntat_across_apps()),
+            format!("{:.2}", flex.mean_ntat_across_apps() / base.mean_ntat_across_apps()),
+            format!("{tput_ratio:.2}x"),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("scale 1.00x is the Fig. 4 calibration point (see EXPERIMENTS.md §Notes).");
+    Ok(())
+}
+
+fn serve_tcp(flags: &Flags) -> cgra_mte::Result<()> {
+    let mut cfg = flags.base_config(presets::paper_default())?;
+    if let Some(dir) = flags.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    let bind = flags.get("bind").unwrap_or("127.0.0.1:7070");
+    println!("compiling artifacts + binding {bind} ...");
+    let server = cgra_mte::coordinator::Server::start(&cfg, bind)?;
+    println!(
+        "listening on {} — protocol: SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris> | STATS | QUIT",
+        server.addr
+    );
+    println!("press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn verify_artifacts(flags: &Flags) -> cgra_mte::Result<()> {
+    let dir = flags.get("artifacts").unwrap_or("artifacts");
+    let mut rt = cgra_mte::runtime::RuntimeClient::from_dir(dir)?;
+    rt.manifest().verify_files()?;
+    let names: Vec<String> = rt.manifest().iter().map(|a| a.name.clone()).collect();
+    let mut failures = 0;
+    for name in &names {
+        match rt.verify_golden(name) {
+            Ok(out) => println!("OK   {name:<24} exec={:>8.0} µs", out.exec_us),
+            Err(e) => {
+                failures += 1;
+                println!("FAIL {name:<24} {e}");
+            }
+        }
+    }
+    if failures > 0 {
+        return Err(cgra_mte::Error::Artifact(format!("{failures} artifacts failed verification")));
+    }
+    println!("all {} artifacts verified", names.len());
+    Ok(())
+}
+
+fn table1() -> cgra_mte::Result<()> {
+    let lib = TaskLibrary::table1();
+    let mut table = Table::new(
+        "Table 1 — task variants",
+        &["task", "ver", "tpt (u/cyc)", "array slices", "GLB slices", "work/invocation", "artifact"],
+    );
+    for t in lib.iter() {
+        for v in &t.variants {
+            table.row(&[
+                t.id.to_string(),
+                v.ver.to_string(),
+                format!("{}", v.throughput),
+                v.demand.array_slices.to_string(),
+                v.demand.glb_slices.to_string(),
+                format!("{} {}", t.work, t.unit.name()),
+                v.artifact.clone().unwrap_or_default(),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn render_arch() -> cgra_mte::Result<()> {
+    let arch = cgra_mte::config::ArchConfig::default();
+    let geom = cgra_mte::arch::Geometry::new(&arch)?;
+    println!(
+        "CGRA {}x{} — {} PE, {} MEM tiles; {} GLB banks x {} KiB; {} array-slices ({} cols each)",
+        arch.cols,
+        arch.rows,
+        arch.pe_tiles(),
+        arch.mem_tiles(),
+        arch.glb_banks,
+        arch.glb_bank_kib,
+        arch.array_slices(),
+        arch.slice_cols,
+    );
+    print!("{}", geom.render());
+    Ok(())
+}

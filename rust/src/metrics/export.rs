@@ -1,0 +1,150 @@
+//! Machine-readable result export (CSV + JSON lines).
+//!
+//! Bench targets print human tables; experiment pipelines want files.
+//! `cgra-mte simulate-* --export out.csv` and the examples use these to
+//! dump per-request / per-frame records for external plotting.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::metrics::{LatencyBreakdown, NtatTracker};
+use crate::tasks::AppId;
+
+/// Escape one CSV field (RFC 4180 quoting).
+pub fn csv_field(s: &str) -> String {
+    if s.contains([',', '"', '\n']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Serialize rows to CSV text.
+pub fn to_csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{}", headers.iter().map(|h| csv_field(h)).collect::<Vec<_>>().join(","));
+    for row in rows {
+        debug_assert_eq!(row.len(), headers.len());
+        let _ = writeln!(out, "{}", row.iter().map(|c| csv_field(c)).collect::<Vec<_>>().join(","));
+    }
+    out
+}
+
+/// Per-request NTAT records as CSV (`app,arrival,completion,exec,tat,ntat`).
+pub fn ntat_csv(tracker: &NtatTracker) -> String {
+    let rows: Vec<Vec<String>> = tracker
+        .records()
+        .iter()
+        .map(|r| {
+            vec![
+                r.app.name().to_string(),
+                r.arrival.to_string(),
+                r.completion.to_string(),
+                r.exec_cycles.to_string(),
+                r.tat().to_string(),
+                format!("{:.6}", r.ntat()),
+            ]
+        })
+        .collect();
+    to_csv(&["app", "arrival_cycle", "completion_cycle", "exec_cycles", "tat_cycles", "ntat"], &rows)
+}
+
+/// Per-app NTAT summary as one JSON object per line.
+pub fn ntat_jsonl(tracker: &NtatTracker) -> String {
+    let mut out = String::new();
+    let means = tracker.mean_ntat();
+    for app in AppId::ALL {
+        if let Some(mean) = means.get(&app) {
+            let mut s = tracker.summary(app);
+            let _ = writeln!(
+                out,
+                r#"{{"app":"{}","requests":{},"mean_ntat":{:.6},"p95_ntat":{:.6},"max_ntat":{:.6}}}"#,
+                app.name(),
+                tracker.count(app),
+                mean,
+                s.percentile(95.0),
+                s.max(),
+            );
+        }
+    }
+    out
+}
+
+/// Frame latency breakdown as CSV (`frame,reconfig,wait_exec,total`).
+pub fn latency_csv(breakdown: &LatencyBreakdown) -> String {
+    let rows: Vec<Vec<String>> = breakdown
+        .frames()
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            vec![
+                i.to_string(),
+                f.reconfig_cycles.to_string(),
+                f.wait_exec_cycles.to_string(),
+                f.total().to_string(),
+            ]
+        })
+        .collect();
+    to_csv(&["frame", "reconfig_cycles", "wait_exec_cycles", "total_cycles"], &rows)
+}
+
+/// Write text to a file with contextual errors.
+pub fn write_file(path: impl AsRef<Path>, text: &str) -> Result<()> {
+    let path = path.as_ref();
+    std::fs::write(path, text).map_err(|e| Error::io(path.display().to_string(), e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NtatRecord;
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn csv_round_trip_shape() {
+        let text = to_csv(&["a", "b"], &[vec!["1".into(), "x,y".into()]]);
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some("a,b"));
+        assert_eq!(lines.next(), Some("1,\"x,y\""));
+        assert_eq!(lines.next(), None);
+    }
+
+    #[test]
+    fn ntat_exports() {
+        let mut t = NtatTracker::new();
+        t.record(NtatRecord { app: AppId::Camera, arrival: 0, completion: 200, exec_cycles: 100 });
+        t.record(NtatRecord { app: AppId::Harris, arrival: 50, completion: 150, exec_cycles: 100 });
+        let csv = ntat_csv(&t);
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("Camera pipeline,0,200,100,200,2.000000"));
+        let jsonl = ntat_jsonl(&t);
+        assert_eq!(jsonl.lines().count(), 2);
+        // each line parses as JSON with our own parser
+        for line in jsonl.lines() {
+            let v = crate::util::json::Json::parse(line).unwrap();
+            assert!(v.get("app").is_some());
+            assert!(v.req_f64("mean_ntat").unwrap() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn latency_export() {
+        use crate::metrics::FrameLatency;
+        let mut b = LatencyBreakdown::new();
+        b.record(FrameLatency { reconfig_cycles: 5, wait_exec_cycles: 95 });
+        let csv = latency_csv(&b);
+        assert!(csv.contains("0,5,95,100"), "{csv}");
+    }
+
+    #[test]
+    fn write_file_errors_on_bad_path() {
+        assert!(write_file("/nonexistent-dir/x.csv", "x").is_err());
+    }
+}

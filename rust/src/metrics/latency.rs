@@ -1,0 +1,122 @@
+//! Frame-latency breakdown for the autonomous scenario (paper Fig. 5).
+//!
+//! Figure 5 splits each bar into reconfiguration time (red) and
+//! wait + execution time (blue); we track both per frame and report
+//! averages and the reconfiguration share.
+
+use crate::util::stats::Summary;
+
+/// Latency of one frame's task set.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FrameLatency {
+    /// Cycles spent reconfiguring (sum over the frame's launches).
+    pub reconfig_cycles: u64,
+    /// Wait + execution cycles: frame completion − frame start −
+    /// reconfig.
+    pub wait_exec_cycles: u64,
+}
+
+impl FrameLatency {
+    /// Total frame latency.
+    pub fn total(&self) -> u64 {
+        self.reconfig_cycles + self.wait_exec_cycles
+    }
+}
+
+/// Accumulates frame latencies.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyBreakdown {
+    frames: Vec<FrameLatency>,
+}
+
+impl LatencyBreakdown {
+    /// Empty breakdown.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one frame.
+    pub fn record(&mut self, frame: FrameLatency) {
+        self.frames.push(frame);
+    }
+
+    /// Frame count.
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Whether no frames were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Mean total latency in cycles (Fig. 5 bar height).
+    pub fn mean_total(&self) -> f64 {
+        Summary::from_iter(self.frames.iter().map(|f| f.total() as f64)).mean()
+    }
+
+    /// Mean reconfiguration cycles (red portion).
+    pub fn mean_reconfig(&self) -> f64 {
+        Summary::from_iter(self.frames.iter().map(|f| f.reconfig_cycles as f64)).mean()
+    }
+
+    /// Mean wait+exec cycles (blue portion).
+    pub fn mean_wait_exec(&self) -> f64 {
+        Summary::from_iter(self.frames.iter().map(|f| f.wait_exec_cycles as f64)).mean()
+    }
+
+    /// Reconfiguration share of total latency (paper: 14.4 % baseline,
+    /// <5 % with fast-DPR).
+    pub fn reconfig_share(&self) -> f64 {
+        let total = self.mean_total();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.mean_reconfig() / total
+        }
+    }
+
+    /// All recorded frames, in order.
+    pub fn frames(&self) -> &[FrameLatency] {
+        &self.frames
+    }
+
+    /// p99 of total frame latency.
+    pub fn p99_total(&self) -> f64 {
+        Summary::from_iter(self.frames.iter().map(|f| f.total() as f64)).percentile(99.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means_and_share() {
+        let mut b = LatencyBreakdown::new();
+        b.record(FrameLatency { reconfig_cycles: 10, wait_exec_cycles: 90 });
+        b.record(FrameLatency { reconfig_cycles: 30, wait_exec_cycles: 70 });
+        assert_eq!(b.len(), 2);
+        assert!((b.mean_total() - 100.0).abs() < 1e-12);
+        assert!((b.mean_reconfig() - 20.0).abs() < 1e-12);
+        assert!((b.reconfig_share() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_breakdown_is_safe() {
+        let b = LatencyBreakdown::new();
+        assert!(b.is_empty());
+        assert_eq!(b.mean_total(), 0.0);
+        assert_eq!(b.reconfig_share(), 0.0);
+    }
+
+    #[test]
+    fn p99_tracks_tail() {
+        let mut b = LatencyBreakdown::new();
+        for _ in 0..99 {
+            b.record(FrameLatency { reconfig_cycles: 0, wait_exec_cycles: 100 });
+        }
+        b.record(FrameLatency { reconfig_cycles: 0, wait_exec_cycles: 1000 });
+        assert!(b.p99_total() > 100.0);
+    }
+}

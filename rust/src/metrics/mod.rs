@@ -1,0 +1,15 @@
+//! Evaluation metrics (§3): NTAT, throughput, latency breakdown,
+//! utilization, and paper-style report tables.
+
+pub mod export;
+mod latency;
+mod ntat;
+mod report;
+mod throughput;
+mod utilization;
+
+pub use latency::{FrameLatency, LatencyBreakdown};
+pub use ntat::{NtatRecord, NtatTracker};
+pub use report::{normalize, percent, ratio, Table};
+pub use throughput::ThroughputTracker;
+pub use utilization::UtilizationTracker;

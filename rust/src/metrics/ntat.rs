@@ -1,0 +1,131 @@
+//! Normalized Turn-Around Time (paper Eq. 1–2).
+//!
+//! `TAT = wait_time + execution_time`; `NTAT = TAT / execution_time` —
+//! the relative delay a request experiences.  Computed per request and
+//! arithmetically averaged per application (§3.1 Metrics).
+
+use std::collections::BTreeMap;
+
+use crate::tasks::AppId;
+use crate::util::stats::Summary;
+
+/// Completed-request record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NtatRecord {
+    /// Application the request belongs to.
+    pub app: AppId,
+    /// Arrival cycle.
+    pub arrival: u64,
+    /// Completion cycle (last task of the request).
+    pub completion: u64,
+    /// Sum of serviced cycles (DPR + execution across the app's tasks).
+    pub exec_cycles: u64,
+}
+
+impl NtatRecord {
+    /// Turn-around time in cycles.
+    pub fn tat(&self) -> u64 {
+        self.completion - self.arrival
+    }
+
+    /// NTAT (≥ 1; exactly 1 means zero waiting).
+    pub fn ntat(&self) -> f64 {
+        debug_assert!(self.exec_cycles > 0);
+        self.tat() as f64 / self.exec_cycles as f64
+    }
+}
+
+/// Accumulates per-app NTAT summaries.
+#[derive(Clone, Debug, Default)]
+pub struct NtatTracker {
+    records: Vec<NtatRecord>,
+}
+
+impl NtatTracker {
+    /// Empty tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed request.
+    pub fn record(&mut self, rec: NtatRecord) {
+        debug_assert!(rec.completion >= rec.arrival, "completion before arrival");
+        debug_assert!(rec.exec_cycles > 0, "zero exec time");
+        self.records.push(rec);
+    }
+
+    /// All records.
+    pub fn records(&self) -> &[NtatRecord] {
+        &self.records
+    }
+
+    /// Completed-request count per app.
+    pub fn count(&self, app: AppId) -> usize {
+        self.records.iter().filter(|r| r.app == app).count()
+    }
+
+    /// Mean NTAT per app (paper's Fig. 4a series).
+    pub fn mean_ntat(&self) -> BTreeMap<AppId, f64> {
+        let mut by_app: BTreeMap<AppId, Summary> = BTreeMap::new();
+        for r in &self.records {
+            by_app.entry(r.app).or_default().add(r.ntat());
+        }
+        by_app.into_iter().map(|(app, s)| (app, s.mean())).collect()
+    }
+
+    /// Full NTAT summary for one app.
+    pub fn summary(&self, app: AppId) -> Summary {
+        Summary::from_iter(self.records.iter().filter(|r| r.app == app).map(|r| r.ntat()))
+    }
+
+    /// Overall mean NTAT across all requests.
+    pub fn overall_mean(&self) -> f64 {
+        Summary::from_iter(self.records.iter().map(|r| r.ntat())).mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(app: AppId, arrival: u64, completion: u64, exec: u64) -> NtatRecord {
+        NtatRecord { app, arrival, completion, exec_cycles: exec }
+    }
+
+    #[test]
+    fn ntat_is_one_without_waiting() {
+        let r = rec(AppId::Camera, 100, 150, 50);
+        assert_eq!(r.tat(), 50);
+        assert!((r.ntat() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ntat_reflects_waiting() {
+        let r = rec(AppId::Harris, 0, 300, 100);
+        assert!((r.ntat() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_app_means_are_separate() {
+        let mut t = NtatTracker::new();
+        t.record(rec(AppId::Camera, 0, 100, 100)); // ntat 1
+        t.record(rec(AppId::Camera, 0, 300, 100)); // ntat 3
+        t.record(rec(AppId::Harris, 0, 500, 100)); // ntat 5
+        let means = t.mean_ntat();
+        assert!((means[&AppId::Camera] - 2.0).abs() < 1e-12);
+        assert!((means[&AppId::Harris] - 5.0).abs() < 1e-12);
+        assert_eq!(t.count(AppId::Camera), 2);
+        assert!((t.overall_mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentiles_available() {
+        let mut t = NtatTracker::new();
+        for i in 1..=10 {
+            t.record(rec(AppId::MobileNet, 0, i * 100, 100));
+        }
+        let mut s = t.summary(AppId::MobileNet);
+        assert_eq!(s.count(), 10);
+        assert!(s.max() >= 9.9);
+    }
+}

@@ -1,0 +1,100 @@
+//! Per-application throughput (paper Fig. 4b).
+//!
+//! Two views are tracked:
+//!
+//! * **service throughput** — work / TAT per request, averaged per app:
+//!   the rate a tenant experiences end-to-end (this is what Fig. 4b's
+//!   normalized ratios respond to at moderate load), and
+//! * **aggregate rate** — total completed work per simulated second:
+//!   saturation-sensitive machine goodput.
+
+use std::collections::BTreeMap;
+
+use crate::tasks::AppId;
+use crate::util::stats::Summary;
+
+/// Accumulates per-app throughput.
+#[derive(Clone, Debug, Default)]
+pub struct ThroughputTracker {
+    /// (app, work units, tat cycles)
+    completed: Vec<(AppId, u64, u64)>,
+}
+
+impl ThroughputTracker {
+    /// Empty tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed request: total work units and its TAT.
+    pub fn record(&mut self, app: AppId, work: u64, tat_cycles: u64) {
+        debug_assert!(tat_cycles > 0);
+        self.completed.push((app, work, tat_cycles));
+    }
+
+    /// Mean service throughput per app (work units / cycle).
+    pub fn service_throughput(&self) -> BTreeMap<AppId, f64> {
+        let mut by_app: BTreeMap<AppId, Summary> = BTreeMap::new();
+        for &(app, work, tat) in &self.completed {
+            by_app.entry(app).or_default().add(work as f64 / tat as f64);
+        }
+        by_app.into_iter().map(|(a, s)| (a, s.mean())).collect()
+    }
+
+    /// Aggregate completed work per app over `duration_cycles`
+    /// (units/cycle).
+    pub fn aggregate_rate(&self, duration_cycles: u64) -> BTreeMap<AppId, f64> {
+        debug_assert!(duration_cycles > 0);
+        let mut by_app: BTreeMap<AppId, u64> = BTreeMap::new();
+        for &(app, work, _) in &self.completed {
+            *by_app.entry(app).or_default() += work;
+        }
+        by_app
+            .into_iter()
+            .map(|(a, w)| (a, w as f64 / duration_cycles as f64))
+            .collect()
+    }
+
+    /// Completed request count per app.
+    pub fn counts(&self) -> BTreeMap<AppId, usize> {
+        let mut by_app: BTreeMap<AppId, usize> = BTreeMap::new();
+        for &(app, _, _) in &self.completed {
+            *by_app.entry(app).or_default() += 1;
+        }
+        by_app
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_throughput_averages_per_request() {
+        let mut t = ThroughputTracker::new();
+        t.record(AppId::Camera, 1000, 100); // 10/cyc
+        t.record(AppId::Camera, 1000, 500); // 2/cyc
+        let s = t.service_throughput();
+        assert!((s[&AppId::Camera] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_rate_sums_work() {
+        let mut t = ThroughputTracker::new();
+        t.record(AppId::Harris, 300, 10);
+        t.record(AppId::Harris, 700, 10);
+        let a = t.aggregate_rate(1000);
+        assert!((a[&AppId::Harris] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counts_by_app() {
+        let mut t = ThroughputTracker::new();
+        t.record(AppId::ResNet18, 1, 1);
+        t.record(AppId::ResNet18, 1, 1);
+        t.record(AppId::MobileNet, 1, 1);
+        let c = t.counts();
+        assert_eq!(c[&AppId::ResNet18], 2);
+        assert_eq!(c[&AppId::MobileNet], 1);
+    }
+}

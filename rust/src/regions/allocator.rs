@@ -1,0 +1,483 @@
+//! The region manager: allocation under the four mechanisms of Fig. 2.
+
+use std::collections::BTreeMap;
+
+use crate::abstraction::{SliceDemand, SliceMap, SliceRange};
+use crate::config::{ArchConfig, RegionPolicyKind, SchedulerConfig};
+use crate::error::{Error, Result};
+
+use super::region::{ExecutionRegion, RegionId};
+
+/// Result of an allocation attempt.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AllocOutcome {
+    /// Region allocated; slices are now busy.
+    Allocated(ExecutionRegion),
+    /// Cannot fit *right now* — retry when a region is released.
+    NoFit,
+    /// Can never fit under this mechanism/geometry (the scheduler must
+    /// pick another variant or fall back to exclusive execution).
+    NeverFits,
+}
+
+impl AllocOutcome {
+    /// Unwrap an allocation, panicking otherwise (test helper).
+    pub fn expect_allocated(self, msg: &str) -> ExecutionRegion {
+        match self {
+            AllocOutcome::Allocated(r) => r,
+            other => panic!("{msg}: got {other:?}"),
+        }
+    }
+}
+
+/// Slice-granular allocator implementing the four region mechanisms.
+#[derive(Clone, Debug)]
+pub struct RegionManager {
+    policy: RegionPolicyKind,
+    glb: SliceMap,
+    array: SliceMap,
+    /// Unit region size (fixed / variable mechanisms).
+    unit: SliceDemand,
+    regions: BTreeMap<RegionId, ExecutionRegion>,
+    next_id: u64,
+}
+
+impl RegionManager {
+    /// Build from architecture + scheduler configuration.
+    pub fn new(arch: &ArchConfig, sched: &SchedulerConfig) -> RegionManager {
+        RegionManager {
+            policy: sched.region_policy,
+            glb: SliceMap::new(arch.glb_slices()),
+            array: SliceMap::new(arch.array_slices()),
+            unit: SliceDemand::new(sched.unit_glb_slices, sched.unit_array_slices),
+            regions: BTreeMap::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Active mechanism.
+    pub fn policy(&self) -> RegionPolicyKind {
+        self.policy
+    }
+
+    /// Unit region size (meaningful for fixed/variable).
+    pub fn unit(&self) -> SliceDemand {
+        self.unit
+    }
+
+    /// Number of pre-carved unit regions under fixed/variable.
+    pub fn unit_count(&self) -> u32 {
+        (self.glb.len() / self.unit.glb_slices).min(self.array.len() / self.unit.array_slices)
+    }
+
+    /// Currently allocated regions.
+    pub fn active(&self) -> impl Iterator<Item = &ExecutionRegion> {
+        self.regions.values()
+    }
+
+    /// Number of active regions.
+    pub fn active_count(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Whether the machine is completely idle.
+    pub fn idle(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    /// (glb, array) busy fractions.
+    pub fn utilization(&self) -> (f64, f64) {
+        (
+            self.glb.busy_count() as f64 / self.glb.len().max(1) as f64,
+            self.array.busy_count() as f64 / self.array.len().max(1) as f64,
+        )
+    }
+
+    /// (glb, array) external fragmentation.
+    pub fn fragmentation(&self) -> (f64, f64) {
+        (self.glb.fragmentation(), self.array.fragmentation())
+    }
+
+    /// Whether `demand` could ever be satisfied by this mechanism on an
+    /// idle machine (feasibility, not current availability).
+    pub fn can_ever_fit(&self, demand: &SliceDemand) -> bool {
+        match self.policy {
+            RegionPolicyKind::Baseline | RegionPolicyKind::FlexibleShape => {
+                demand.glb_slices <= self.glb.len() && demand.array_slices <= self.array.len()
+            }
+            RegionPolicyKind::FixedSize => demand.fits_within(&self.unit),
+            RegionPolicyKind::VariableSize => {
+                let k = self.units_needed(demand);
+                k > 0 && k <= self.unit_count()
+            }
+        }
+    }
+
+    /// Units needed to cover `demand` when merging (variable mechanism):
+    /// both slice classes must be covered by the *same* k (the merged
+    /// region keeps the unit's GLB:array ratio, §2.3).
+    pub fn units_needed(&self, demand: &SliceDemand) -> u32 {
+        let kg = demand.glb_slices.div_ceil(self.unit.glb_slices);
+        let ka = demand.array_slices.div_ceil(self.unit.array_slices);
+        kg.max(ka).max(1)
+    }
+
+    /// Attempt to allocate a region for `demand` under the mechanism.
+    pub fn try_allocate(&mut self, demand: &SliceDemand) -> AllocOutcome {
+        match self.policy {
+            RegionPolicyKind::Baseline => self.alloc_baseline(demand),
+            RegionPolicyKind::FixedSize => self.alloc_fixed(demand, 1),
+            RegionPolicyKind::VariableSize => self.alloc_variable(demand),
+            RegionPolicyKind::FlexibleShape => self.alloc_flexible(demand),
+        }
+    }
+
+    /// Fixed-size only: allocate up to `max_replicas` unit copies
+    /// (Fig. 2b's parallel unroll).  Returns as many units as are free,
+    /// capped at `max_replicas`; at least one unit must be free.
+    pub fn try_allocate_replicated(
+        &mut self,
+        demand: &SliceDemand,
+        max_replicas: u32,
+    ) -> AllocOutcome {
+        debug_assert_eq!(self.policy, RegionPolicyKind::FixedSize);
+        self.alloc_fixed(demand, max_replicas.max(1))
+    }
+
+    /// Exclusive whole-machine allocation — the baseline path, also the
+    /// fixed-size fallback for tasks that fit no unit.  Requires idle.
+    pub fn try_allocate_exclusive(&mut self, demand: &SliceDemand) -> AllocOutcome {
+        if demand.glb_slices > self.glb.len() || demand.array_slices > self.array.len() {
+            return AllocOutcome::NeverFits;
+        }
+        if !self.idle() {
+            return AllocOutcome::NoFit;
+        }
+        let glb = SliceRange::new(0, self.glb.len());
+        let array = SliceRange::new(0, self.array.len());
+        AllocOutcome::Allocated(self.commit(vec![glb], vec![array], 1))
+    }
+
+    /// Release a region's slices.
+    pub fn release(&mut self, id: RegionId) -> Result<()> {
+        let region = self
+            .regions
+            .remove(&id)
+            .ok_or_else(|| Error::Alloc(format!("release of unknown region {id}")))?;
+        for r in &region.glb {
+            self.glb.release(r);
+        }
+        for r in &region.array {
+            self.array.release(r);
+        }
+        Ok(())
+    }
+
+    /// Render occupancy maps (Fig. 2-style dump).
+    pub fn render(&self) -> String {
+        format!("GLB   {}\nARRAY {}", self.glb.render(), self.array.render())
+    }
+
+    // ---------------------------------------------------------------- impl
+
+    fn commit(
+        &mut self,
+        glb: Vec<SliceRange>,
+        array: Vec<SliceRange>,
+        replicas: u32,
+    ) -> ExecutionRegion {
+        for r in &glb {
+            self.glb.occupy(r);
+        }
+        for r in &array {
+            self.array.occupy(r);
+        }
+        let id = RegionId(self.next_id);
+        self.next_id += 1;
+        let region = ExecutionRegion { id, glb, array, replicas };
+        self.regions.insert(id, region.clone());
+        region
+    }
+
+    fn alloc_baseline(&mut self, demand: &SliceDemand) -> AllocOutcome {
+        // Fig. 2a: the whole CGRA is one region; a task takes everything.
+        self.try_allocate_exclusive(demand)
+    }
+
+    fn alloc_fixed(&mut self, demand: &SliceDemand, max_replicas: u32) -> AllocOutcome {
+        if !demand.fits_within(&self.unit) {
+            return AllocOutcome::NeverFits;
+        }
+        // Pre-carved unit positions: unit i owns glb [i·ug, ug) and
+        // array [i·ua, ua).
+        let mut free_units = Vec::new();
+        for i in 0..self.unit_count() {
+            let g = SliceRange::new(i * self.unit.glb_slices, self.unit.glb_slices);
+            let a = SliceRange::new(i * self.unit.array_slices, self.unit.array_slices);
+            if self.glb.range_free(&g) && self.array.range_free(&a) {
+                free_units.push((g, a));
+                if free_units.len() as u32 == max_replicas {
+                    break;
+                }
+            }
+        }
+        if free_units.is_empty() {
+            return AllocOutcome::NoFit;
+        }
+        let replicas = free_units.len() as u32;
+        let (glb, array): (Vec<_>, Vec<_>) = free_units.into_iter().unzip();
+        AllocOutcome::Allocated(self.commit(glb, array, replicas))
+    }
+
+    fn alloc_variable(&mut self, demand: &SliceDemand) -> AllocOutcome {
+        let k = self.units_needed(demand);
+        if k > self.unit_count() {
+            return AllocOutcome::NeverFits;
+        }
+        // k *adjacent* units merge into one region (Fig. 2c).
+        let total = self.unit_count();
+        for start in 0..=(total - k) {
+            let g = SliceRange::new(start * self.unit.glb_slices, k * self.unit.glb_slices);
+            let a = SliceRange::new(start * self.unit.array_slices, k * self.unit.array_slices);
+            if self.glb.range_free(&g) && self.array.range_free(&a) {
+                return AllocOutcome::Allocated(self.commit(vec![g], vec![a], 1));
+            }
+        }
+        AllocOutcome::NoFit
+    }
+
+    fn alloc_flexible(&mut self, demand: &SliceDemand) -> AllocOutcome {
+        if demand.glb_slices > self.glb.len() || demand.array_slices > self.array.len() {
+            return AllocOutcome::NeverFits;
+        }
+        // Decoupled, exact, contiguous allocation (Fig. 2d).  Prefer to
+        // anchor the GLB range near the array range's IO columns: first
+        // place the array run, then look for a GLB run starting at the
+        // proportional bank index, falling back to anywhere.
+        let array = match self.array.find_free_run(demand.array_slices) {
+            Some(r) => r,
+            None => return AllocOutcome::NoFit,
+        };
+        let banks_per_slice = (self.glb.len() / self.array.len().max(1)).max(1);
+        let preferred = array.start * banks_per_slice;
+        let glb = self
+            .glb
+            .find_free_run_from(preferred, demand.glb_slices)
+            .or_else(|| self.glb.find_free_run(demand.glb_slices));
+        let glb = match glb {
+            Some(r) => r,
+            None => return AllocOutcome::NoFit,
+        };
+        AllocOutcome::Allocated(self.commit(vec![glb], vec![array], 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(policy: RegionPolicyKind) -> RegionManager {
+        let arch = ArchConfig::default(); // 32 GLB slices, 8 array slices
+        let sched = SchedulerConfig {
+            region_policy: policy,
+            unit_glb_slices: 4,
+            unit_array_slices: 1,
+            ..SchedulerConfig::default()
+        };
+        RegionManager::new(&arch, &sched)
+    }
+
+    // --------------------------------------------------------- baseline
+
+    #[test]
+    fn baseline_serializes_tasks() {
+        let mut m = mgr(RegionPolicyKind::Baseline);
+        let d = SliceDemand::new(7, 2);
+        let r1 = m.try_allocate(&d).expect_allocated("first task");
+        // whole machine taken regardless of demand
+        assert_eq!(r1.footprint(), SliceDemand::new(32, 8));
+        assert_eq!(m.try_allocate(&d), AllocOutcome::NoFit);
+        m.release(r1.id).unwrap();
+        m.try_allocate(&d).expect_allocated("after release");
+    }
+
+    #[test]
+    fn baseline_rejects_oversized() {
+        let mut m = mgr(RegionPolicyKind::Baseline);
+        assert_eq!(m.try_allocate(&SliceDemand::new(33, 2)), AllocOutcome::NeverFits);
+    }
+
+    // --------------------------------------------------------- fixed
+
+    #[test]
+    fn fixed_carves_eight_units() {
+        let m = mgr(RegionPolicyKind::FixedSize);
+        assert_eq!(m.unit_count(), 8);
+    }
+
+    #[test]
+    fn fixed_rejects_demand_larger_than_unit() {
+        let mut m = mgr(RegionPolicyKind::FixedSize);
+        assert_eq!(m.try_allocate(&SliceDemand::new(7, 1)), AllocOutcome::NeverFits);
+        assert_eq!(m.try_allocate(&SliceDemand::new(4, 2)), AllocOutcome::NeverFits);
+    }
+
+    #[test]
+    fn fixed_allocates_units_until_exhausted() {
+        let mut m = mgr(RegionPolicyKind::FixedSize);
+        let d = SliceDemand::new(4, 1);
+        for _ in 0..8 {
+            m.try_allocate(&d).expect_allocated("unit");
+        }
+        assert_eq!(m.try_allocate(&d), AllocOutcome::NoFit);
+        let (ug, ua) = m.utilization();
+        assert_eq!((ug, ua), (1.0, 1.0));
+    }
+
+    #[test]
+    fn fixed_replication_takes_free_units() {
+        let mut m = mgr(RegionPolicyKind::FixedSize);
+        let d = SliceDemand::new(2, 1);
+        let r = m.try_allocate_replicated(&d, 3).expect_allocated("unroll x3");
+        assert_eq!(r.replicas, 3);
+        // each replica owns a whole unit
+        assert_eq!(r.footprint(), SliceDemand::new(12, 3));
+        let r2 = m.try_allocate_replicated(&d, 100).expect_allocated("rest");
+        assert_eq!(r2.replicas, 5);
+        assert_eq!(m.try_allocate(&d), AllocOutcome::NoFit);
+    }
+
+    #[test]
+    fn fixed_exclusive_fallback_needs_idle() {
+        let mut m = mgr(RegionPolicyKind::FixedSize);
+        let big = SliceDemand::new(20, 2); // conv5_x: fits no unit
+        assert_eq!(m.try_allocate(&big), AllocOutcome::NeverFits);
+        let r = m.try_allocate_exclusive(&big).expect_allocated("exclusive");
+        assert_eq!(r.footprint(), SliceDemand::new(32, 8));
+        assert_eq!(m.try_allocate(&SliceDemand::new(2, 1)), AllocOutcome::NoFit);
+        m.release(r.id).unwrap();
+        m.try_allocate(&SliceDemand::new(2, 1)).expect_allocated("unit after");
+    }
+
+    // --------------------------------------------------------- variable
+
+    #[test]
+    fn variable_merges_adjacent_units() {
+        let mut m = mgr(RegionPolicyKind::VariableSize);
+        // conv2_x b: 7 GLB + 6 array ⇒ k = max(ceil(7/4), ceil(6/1)) = 6
+        let d = SliceDemand::new(7, 6);
+        assert_eq!(m.units_needed(&d), 6);
+        let r = m.try_allocate(&d).expect_allocated("merged");
+        // merged region keeps the unit ratio: 6 units = 24 GLB + 6 array
+        assert_eq!(r.footprint(), SliceDemand::new(24, 6));
+        assert!(r.is_contiguous());
+    }
+
+    #[test]
+    fn variable_internal_fragmentation_is_real() {
+        // The paper's critique of variable-size (§2.3): GLB:array ratio is
+        // fixed, so a GLB-heavy task wastes array slices.  Harris c needs
+        // 14 GLB + 7 array ⇒ k=7 under (4,1) units ⇒ 28 GLB slices held.
+        let mut m = mgr(RegionPolicyKind::VariableSize);
+        let d = SliceDemand::new(14, 7);
+        let r = m.try_allocate(&d).expect_allocated("harris c");
+        assert_eq!(r.footprint(), SliceDemand::new(28, 7));
+        // ...leaving no room for camera b (14 GLB + 6 array ⇒ k=6)
+        assert_eq!(m.try_allocate(&SliceDemand::new(14, 6)), AllocOutcome::NoFit);
+    }
+
+    #[test]
+    fn variable_adjacency_constraint() {
+        let mut m = mgr(RegionPolicyKind::VariableSize);
+        let unit = SliceDemand::new(4, 1);
+        // occupy units 0,1 then 3 — leaving 2 and 4..8 free
+        let a = m.try_allocate(&SliceDemand::new(8, 2)).expect_allocated("u01");
+        let _b = m.try_allocate(&unit).expect_allocated("u2");
+        let c = m.try_allocate(&unit).expect_allocated("u3");
+        m.release(_b.id).unwrap();
+        // need 4 adjacent units: only 4..8 qualifies (2 is isolated)
+        let big = m.try_allocate(&SliceDemand::new(16, 4)).expect_allocated("u4..8");
+        assert_eq!(big.array[0], SliceRange::new(4, 4));
+        m.release(a.id).unwrap();
+        m.release(c.id).unwrap();
+        assert_eq!(m.active_count(), 1);
+    }
+
+    #[test]
+    fn variable_never_fits_when_over_machine() {
+        let mut m = mgr(RegionPolicyKind::VariableSize);
+        // 9 array slices would need 9 units > 8
+        assert_eq!(m.try_allocate(&SliceDemand::new(4, 9)), AllocOutcome::NeverFits);
+    }
+
+    // --------------------------------------------------------- flexible
+
+    #[test]
+    fn flexible_allocates_exact_demand() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        let d = SliceDemand::new(7, 2);
+        let r = m.try_allocate(&d).expect_allocated("conv2_x a");
+        assert_eq!(r.footprint(), d);
+        let (ug, ua) = m.utilization();
+        assert!((ug - 7.0 / 32.0).abs() < 1e-12);
+        assert!((ua - 2.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flexible_decouples_glb_and_array() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        // GLB-heavy + array-heavy coexist: conv5_x a (20g,2a) + harris b (7g,4a)
+        let r1 = m.try_allocate(&SliceDemand::new(20, 2)).expect_allocated("conv5 a");
+        let r2 = m.try_allocate(&SliceDemand::new(7, 4)).expect_allocated("harris b");
+        assert_eq!(m.active_count(), 2);
+        assert!(!r1.array[0].overlaps(&r2.array[0]));
+        assert!(!r1.glb[0].overlaps(&r2.glb[0]));
+        // the same pair can NOT coexist under variable-size (4,1) units:
+        // conv5a needs k=5 (20 glb), harris b needs k=4 ⇒ 9 units > 8.
+    }
+
+    #[test]
+    fn flexible_prefers_colocated_glb() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        // Occupy array slices 0..2 and glb 0..8 first.
+        let _r1 = m.try_allocate(&SliceDemand::new(8, 2)).expect_allocated("first");
+        // Next region gets array 2..4; preferred GLB start = 2*4 = 8.
+        let r2 = m.try_allocate(&SliceDemand::new(4, 2)).expect_allocated("second");
+        assert_eq!(r2.array[0], SliceRange::new(2, 2));
+        assert_eq!(r2.glb[0], SliceRange::new(8, 4));
+    }
+
+    #[test]
+    fn flexible_no_fit_vs_never_fits() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        let _ = m.try_allocate(&SliceDemand::new(30, 7)).expect_allocated("hog");
+        assert_eq!(m.try_allocate(&SliceDemand::new(4, 2)), AllocOutcome::NoFit);
+        assert_eq!(m.try_allocate(&SliceDemand::new(33, 1)), AllocOutcome::NeverFits);
+    }
+
+    // --------------------------------------------------------- common
+
+    #[test]
+    fn release_unknown_region_errors() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        assert!(m.release(RegionId(99)).is_err());
+    }
+
+    #[test]
+    fn render_shows_occupancy() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        let _ = m.try_allocate(&SliceDemand::new(2, 1)).expect_allocated("r");
+        let dump = m.render();
+        assert!(dump.contains("GLB   ##"));
+        assert!(dump.contains("ARRAY #"));
+    }
+
+    #[test]
+    fn can_ever_fit_matrix() {
+        let conv5a = SliceDemand::new(20, 2);
+        assert!(mgr(RegionPolicyKind::Baseline).can_ever_fit(&conv5a));
+        assert!(!mgr(RegionPolicyKind::FixedSize).can_ever_fit(&conv5a));
+        assert!(mgr(RegionPolicyKind::VariableSize).can_ever_fit(&conv5a)); // k=5 ≤ 8
+        assert!(mgr(RegionPolicyKind::FlexibleShape).can_ever_fit(&conv5a));
+    }
+}

@@ -1,0 +1,29 @@
+//! Execution regions: the paper's first hardware mechanism (§2.3, Fig. 2).
+//!
+//! An *execution region* is the set of GLB-slices and array-slices a
+//! single task runs on.  Four formation mechanisms are modeled, matching
+//! Fig. 2 exactly:
+//!
+//! * [`crate::config::RegionPolicyKind::Baseline`] — the whole CGRA is one
+//!   region; subsequent tasks wait (Fig. 2a).
+//! * [`crate::config::RegionPolicyKind::FixedSize`] — pre-carved unit
+//!   regions; a task takes the best variant that fits one unit and may be
+//!   *replicated* into several free units for linear throughput
+//!   (Fig. 2b's "unrolled by three").  Tasks that fit no unit fall back
+//!   to exclusive whole-machine execution (see DESIGN.md §regions).
+//! * [`crate::config::RegionPolicyKind::VariableSize`] — adjacent units
+//!   merge into a larger region whose GLB:array ratio stays fixed
+//!   (Fig. 2c); any variant fitting the merged budget can be chosen.
+//! * [`crate::config::RegionPolicyKind::FlexibleShape`] — GLB-slices and
+//!   array-slices are allocated independently and exactly (Fig. 2d, the
+//!   paper's contribution).
+//!
+//! The manager enforces the paper's contiguity restriction ("we limit
+//! the placement of GLB-slices and array-slices within an execution
+//! region to be contiguous").
+
+mod allocator;
+mod region;
+
+pub use allocator::{AllocOutcome, RegionManager};
+pub use region::{ExecutionRegion, RegionId};

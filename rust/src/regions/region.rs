@@ -1,0 +1,102 @@
+//! Execution-region value types.
+
+use std::fmt;
+
+use crate::abstraction::{SliceDemand, SliceRange};
+
+/// Opaque region handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegionId(pub u64);
+
+impl fmt::Display for RegionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "R{}", self.0)
+    }
+}
+
+/// One allocated execution region.
+///
+/// Under the fixed-size mechanism a region may span several disjoint unit
+/// ranges (a task replicated into k units, Fig. 2b); the other mechanisms
+/// always allocate a single contiguous range per slice class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecutionRegion {
+    /// Handle.
+    pub id: RegionId,
+    /// GLB-slice ranges owned by the region.
+    pub glb: Vec<SliceRange>,
+    /// Array-slice ranges owned by the region.
+    pub array: Vec<SliceRange>,
+    /// Replication factor: number of independent task copies mapped
+    /// (1 except for fixed-size unrolling).
+    pub replicas: u32,
+}
+
+impl ExecutionRegion {
+    /// Total GLB slices owned.
+    pub fn glb_slices(&self) -> u32 {
+        self.glb.iter().map(|r| r.len).sum()
+    }
+
+    /// Total array slices owned.
+    pub fn array_slices(&self) -> u32 {
+        self.array.iter().map(|r| r.len).sum()
+    }
+
+    /// Owned resources as a demand vector (for accounting).
+    pub fn footprint(&self) -> SliceDemand {
+        SliceDemand::new(self.glb_slices(), self.array_slices())
+    }
+
+    /// Whether the region's ranges are each contiguous single runs.
+    pub fn is_contiguous(&self) -> bool {
+        self.glb.len() <= 1 && self.array.len() <= 1
+    }
+}
+
+impl fmt::Display for ExecutionRegion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} glb", self.id)?;
+        for r in &self.glb {
+            write!(f, "{r}")?;
+        }
+        write!(f, " arr")?;
+        for r in &self.array {
+            write!(f, "{r}")?;
+        }
+        if self.replicas > 1 {
+            write!(f, " x{}", self.replicas)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprint_sums_ranges() {
+        let r = ExecutionRegion {
+            id: RegionId(1),
+            glb: vec![SliceRange::new(0, 2), SliceRange::new(4, 2)],
+            array: vec![SliceRange::new(0, 1)],
+            replicas: 2,
+        };
+        assert_eq!(r.glb_slices(), 4);
+        assert_eq!(r.array_slices(), 1);
+        assert_eq!(r.footprint(), SliceDemand::new(4, 1));
+        assert!(!r.is_contiguous());
+    }
+
+    #[test]
+    fn display_is_compact() {
+        let r = ExecutionRegion {
+            id: RegionId(3),
+            glb: vec![SliceRange::new(0, 2)],
+            array: vec![SliceRange::new(2, 1)],
+            replicas: 1,
+        };
+        assert_eq!(r.to_string(), "R3 glb[0..2) arr[2..3)");
+    }
+}

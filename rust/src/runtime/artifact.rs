@@ -1,0 +1,319 @@
+//! Artifact manifest: the contract between `aot.py` and the runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One runtime input tensor: shape, dtype, deterministic-fill parameters.
+///
+/// Weights are runtime arguments (never baked constants — the HLO text
+/// printer elides large literals), so every input carries the `[lo, hi]`
+/// range and `salt` of the low-discrepancy fill both sides regenerate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// Element type name (`"f32"`).
+    pub dtype: String,
+    /// Fill range `[lo, hi]`.
+    pub range: (f64, f64),
+    /// Fill stream salt (argument index).
+    pub salt: u64,
+    /// `"activation"` or `"weight"` (documentation only).
+    pub role: String,
+}
+
+impl TensorSpec {
+    /// Element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Golden checksum captured by `aot.py` on the deterministic inputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Golden {
+    /// Sum of all output elements (f64 accumulation).
+    pub sum: f64,
+    /// Sum of absolute values.
+    pub abs_sum: f64,
+    /// First eight output elements.
+    pub head: Vec<f64>,
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    /// Artifact name (e.g. `resnet_conv2_a`).
+    pub name: String,
+    /// HLO text file name within the artifacts dir.
+    pub file: String,
+    /// Owning Table 1 task id.
+    pub task: String,
+    /// Variant letter.
+    pub variant: String,
+    /// Input tensors, in argument order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor (shape + dtype; range/salt unused).
+    pub output_shape: Vec<usize>,
+    /// Golden checksum.
+    pub golden: Golden,
+    /// HLO text size in bytes (consistency check).
+    pub hlo_bytes: u64,
+}
+
+impl ArtifactSpec {
+    /// Output element count.
+    pub fn output_elements(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// Manifest schema version.
+    pub version: u64,
+    /// Artifact size class (`small` / `tiny`).
+    pub size: String,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+/// Manifest schema version this runtime understands.
+pub const SUPPORTED_VERSION: u64 = 3;
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Manifest::parse(dir, &text)
+    }
+
+    /// Parse manifest text (factored out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let version = root.req_u64("version")?;
+        if version != SUPPORTED_VERSION {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported (runtime expects {SUPPORTED_VERSION}; \
+                 re-run `make artifacts`)"
+            )));
+        }
+        let size = root.req_str("size")?.to_string();
+        let mut artifacts = BTreeMap::new();
+        for entry in root.req("artifacts")?.items() {
+            let spec = parse_artifact(entry)?;
+            if artifacts.insert(spec.name.clone(), spec).is_some() {
+                return Err(Error::Artifact("duplicate artifact name in manifest".into()));
+            }
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("manifest lists no artifacts".into()));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), version, size, artifacts })
+    }
+
+    /// Artifact lookup by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact '{name}'")))
+    }
+
+    /// All artifacts, name-ordered.
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.artifacts.values()
+    }
+
+    /// Artifact count.
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    /// Whether the manifest is empty (never true after `load`).
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Verify files exist and sizes match the manifest.
+    pub fn verify_files(&self) -> Result<()> {
+        for spec in self.iter() {
+            let path = self.hlo_path(spec);
+            let meta = std::fs::metadata(&path)
+                .map_err(|e| Error::io(path.display().to_string(), e))?;
+            if meta.len() != spec.hlo_bytes {
+                return Err(Error::Artifact(format!(
+                    "{}: size {} != manifest {}",
+                    spec.name,
+                    meta.len(),
+                    spec.hlo_bytes
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_input(v: &Json) -> Result<TensorSpec> {
+    let shape = v
+        .req("shape")?
+        .items()
+        .iter()
+        .map(|d| {
+            d.as_u64()
+                .map(|u| u as usize)
+                .ok_or_else(|| Error::parse("input.shape", "bad shape dim"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let range = v.req("range")?.items();
+    if range.len() != 2 {
+        return Err(Error::Artifact("input.range must be [lo, hi]".into()));
+    }
+    Ok(TensorSpec {
+        shape,
+        dtype: v.req_str("dtype")?.to_string(),
+        range: (
+            range[0].as_f64().ok_or_else(|| Error::Artifact("bad range lo".into()))?,
+            range[1].as_f64().ok_or_else(|| Error::Artifact("bad range hi".into()))?,
+        ),
+        salt: v.req_u64("salt")?,
+        role: v
+            .get("role")
+            .and_then(|r| r.as_str())
+            .unwrap_or("activation")
+            .to_string(),
+    })
+}
+
+fn parse_artifact(entry: &Json) -> Result<ArtifactSpec> {
+    let inputs = entry
+        .req("inputs")?
+        .items()
+        .iter()
+        .map(parse_input)
+        .collect::<Result<Vec<_>>>()?;
+    if inputs.is_empty() {
+        return Err(Error::Artifact("artifact with no inputs".into()));
+    }
+    let output_shape = entry
+        .req("output")?
+        .req("shape")?
+        .items()
+        .iter()
+        .map(|d| {
+            d.as_u64()
+                .map(|u| u as usize)
+                .ok_or_else(|| Error::parse("output.shape", "bad shape dim"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let golden_json = entry.req("golden")?;
+    Ok(ArtifactSpec {
+        name: entry.req_str("name")?.to_string(),
+        file: entry.req_str("file")?.to_string(),
+        task: entry.req_str("task")?.to_string(),
+        variant: entry.req_str("variant")?.to_string(),
+        inputs,
+        output_shape,
+        golden: Golden {
+            sum: golden_json.req_f64("sum")?,
+            abs_sum: golden_json.req_f64("abs_sum")?,
+            head: golden_json
+                .req("head")?
+                .items()
+                .iter()
+                .map(|h| h.as_f64().ok_or_else(|| Error::Artifact("bad golden head".into())))
+                .collect::<Result<Vec<_>>>()?,
+        },
+        hlo_bytes: entry.req_u64("hlo_bytes")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 3, "size": "tiny",
+      "artifacts": [
+        {"name": "demo_a", "file": "demo_a.hlo.txt", "task": "demo.t", "variant": "a",
+         "tags": [],
+         "inputs": [
+            {"shape": [2, 3], "dtype": "f32", "range": [0.0, 1.0], "salt": 0, "role": "activation"},
+            {"shape": [3, 4], "dtype": "f32", "range": [-0.5, 0.5], "salt": 1, "role": "weight"}
+         ],
+         "output": {"shape": [2, 4], "dtype": "f32"},
+         "golden": {"sum": 1.5, "abs_sum": 2.0, "head": [0.1, 0.2]},
+         "hlo_bytes": 123}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.version, 3);
+        assert_eq!(m.len(), 1);
+        let a = m.get("demo_a").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[1].role, "weight");
+        assert_eq!(a.inputs[1].salt, 1);
+        assert_eq!(a.output_elements(), 8);
+        assert!(m.get("nope").is_err());
+        assert_eq!(m.hlo_path(a), Path::new("/tmp/a/demo_a.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let old = SAMPLE.replace("\"version\": 3", "\"version\": 2");
+        let err = Manifest::parse(Path::new("."), &old).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse(Path::new("."), "{}").is_err());
+        assert!(
+            Manifest::parse(Path::new("."), r#"{"version":3,"size":"s","artifacts":[]}"#).is_err()
+        );
+        let no_inputs = SAMPLE.replace(
+            r#""inputs": [
+            {"shape": [2, 3], "dtype": "f32", "range": [0.0, 1.0], "salt": 0, "role": "activation"},
+            {"shape": [3, 4], "dtype": "f32", "range": [-0.5, 0.5], "salt": 1, "role": "weight"}
+         ]"#,
+            r#""inputs": []"#,
+        );
+        assert!(Manifest::parse(Path::new("."), &no_inputs).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration sanity: when `make artifacts` has run, the real
+        // manifest must parse and cover every Table 1 artifact name used
+        // by the task library.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.len() >= 19, "{}", m.len());
+        m.verify_files().unwrap();
+        for t in crate::tasks::TaskLibrary::table1().iter() {
+            for v in &t.variants {
+                let name = v.artifact.as_ref().unwrap();
+                assert!(m.get(name).is_ok(), "missing artifact {name}");
+            }
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Deterministic input synthesis — bit-identical to `aot.golden_input`.
+//!
+//! Both sides compute `lo + (hi-lo) * frac((i+1)·φ)` in f64 and cast to
+//! f32, so the Rust runtime can regenerate the exact tensors the Python
+//! golden checksums were computed on, without shipping tensors around.
+
+/// 1/golden-ratio, the low-discrepancy multiplier (matches aot.py).
+pub const PHI: f64 = 0.618_033_988_749_894_9;
+
+/// Distinct fill stream per argument index (matches aot._SALT_STRIDE).
+pub const SALT_STRIDE: u64 = 1_000_003;
+
+/// Fill `n` f32 values over `[lo, hi)` deterministically; `salt` selects
+/// an independent stream per artifact argument.
+pub fn golden_input(n: usize, lo: f64, hi: f64, salt: u64) -> Vec<f32> {
+    let offset = (salt * SALT_STRIDE) as f64;
+    (0..n)
+        .map(|i| {
+            let x = (offset + i as f64 + 1.0) * PHI;
+            let frac = x - x.trunc();
+            (lo + (hi - lo) * frac) as f32
+        })
+        .collect()
+}
+
+/// Output summary mirroring `aot.checksum` (f64 accumulation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checksum {
+    /// Σ x
+    pub sum: f64,
+    /// Σ |x|
+    pub abs_sum: f64,
+    /// first 8 values
+    pub head: Vec<f64>,
+}
+
+/// Compute the checksum of an f32 buffer.
+pub fn checksum_of(values: &[f32]) -> Checksum {
+    let mut sum = 0.0f64;
+    let mut abs_sum = 0.0f64;
+    for &v in values {
+        sum += v as f64;
+        abs_sum += (v as f64).abs();
+    }
+    Checksum {
+        sum,
+        abs_sum,
+        head: values.iter().take(8).map(|&v| v as f64).collect(),
+    }
+}
+
+impl Checksum {
+    /// Tolerant comparison against a manifest golden.
+    ///
+    /// `rel` bounds the relative error of the aggregate sums; heads are
+    /// compared element-wise with a mixed abs/rel tolerance.  CPU PJRT
+    /// executes the same HLO the golden was produced with, so mismatches
+    /// indicate a loading/layout bug, not float noise — tolerances are
+    /// tight.
+    pub fn close_to(&self, sum: f64, abs_sum: f64, head: &[f64], rel: f64) -> bool {
+        let rel_ok = |a: f64, b: f64| {
+            let scale = a.abs().max(b.abs()).max(1e-6);
+            (a - b).abs() <= rel * scale
+        };
+        if !rel_ok(self.sum, sum) || !rel_ok(self.abs_sum, abs_sum) {
+            return false;
+        }
+        if self.head.len() < head.len().min(8) {
+            return false;
+        }
+        head.iter()
+            .zip(self.head.iter())
+            .all(|(&a, &b)| (a - b).abs() <= rel * a.abs().max(b.abs()).max(1e-4))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_python_expression() {
+        // pinned by python/tests/test_aot.py::test_golden_input_matches_reference_expression
+        let v = golden_input(4, -1.0, 1.0, 0);
+        let expect = |i: usize| {
+            let x = (i as f64 + 1.0) * PHI;
+            (-1.0 + 2.0 * (x - x.trunc())) as f32
+        };
+        for i in 0..4 {
+            assert_eq!(v[i], expect(i));
+        }
+    }
+
+    #[test]
+    fn salted_streams_differ() {
+        let a = golden_input(16, 0.0, 1.0, 0);
+        let b = golden_input(16, 0.0, 1.0, 1);
+        assert_ne!(a, b);
+        // and are each reproducible
+        assert_eq!(b, golden_input(16, 0.0, 1.0, 1));
+    }
+
+    #[test]
+    fn range_respected() {
+        let v = golden_input(1000, 0.0, 1.0, 0);
+        assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+        // low-discrepancy: mean near 0.5
+        let mean: f32 = v.iter().sum::<f32>() / 1000.0;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn checksum_math() {
+        let c = checksum_of(&[1.0, -2.0, 3.0]);
+        assert_eq!(c.sum, 2.0);
+        assert_eq!(c.abs_sum, 6.0);
+        assert_eq!(c.head, vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn close_to_tolerances() {
+        let c = checksum_of(&[1.0, 2.0, 3.0]);
+        assert!(c.close_to(6.0, 6.0, &[1.0, 2.0, 3.0], 1e-5));
+        assert!(c.close_to(6.0 + 3e-5, 6.0, &[1.0, 2.0, 3.0], 1e-4));
+        assert!(!c.close_to(7.0, 6.0, &[1.0, 2.0, 3.0], 1e-5));
+        assert!(!c.close_to(6.0, 6.0, &[9.0, 2.0, 3.0], 1e-5));
+    }
+}

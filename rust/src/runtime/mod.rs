@@ -1,0 +1,21 @@
+//! PJRT runtime: executes the AOT-compiled task artifacts (Layer 1/2).
+//!
+//! `make artifacts` lowers every Table 1 task variant from JAX/Pallas to
+//! HLO **text** (see `python/compile/aot.py`); this module loads those
+//! files through the `xla` crate's PJRT C API bindings, compiles them
+//! once, and executes them on the request path.  Python never runs at
+//! serve time.
+//!
+//! * [`Manifest`] / [`ArtifactSpec`] — parsed `artifacts/manifest.json`.
+//! * [`golden_input`] — bit-identical mirror of the Python deterministic
+//!   input generator, enabling end-to-end numerics verification against
+//!   the manifest's golden checksums.
+//! * [`RuntimeClient`] — PJRT CPU client with an executable cache.
+
+mod artifact;
+mod client;
+mod inputs;
+
+pub use artifact::{ArtifactSpec, Golden, Manifest, TensorSpec};
+pub use client::{ExecOutput, RuntimeClient};
+pub use inputs::{checksum_of, golden_input, Checksum};

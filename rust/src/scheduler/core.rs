@@ -1,0 +1,472 @@
+//! The scheduler core: policy-driven variant selection + region binding.
+
+use std::collections::BTreeMap;
+
+use crate::abstraction::SliceRange;
+use crate::compiler::generate_bitstream;
+use crate::config::{Config, RegionPolicyKind, SchedulerPolicyKind};
+use crate::dpr::{Bitstream, BitstreamId, DprEngine, DprMode};
+use crate::error::{Error, Result};
+use crate::regions::{AllocOutcome, ExecutionRegion, RegionId, RegionManager};
+use crate::tasks::{TaskId, TaskInstanceId, TaskLibrary, VariantId};
+
+use super::queue::{ReadyTask, RequestQueue};
+
+/// One successfully launched task instance.
+#[derive(Clone, Debug)]
+pub struct Launch {
+    /// Which instance.
+    pub instance: TaskInstanceId,
+    /// Task id.
+    pub task: TaskId,
+    /// Chosen variant.
+    pub ver: VariantId,
+    /// Allocated region.
+    pub region: RegionId,
+    /// Replication factor (fixed-size unrolling; 1 otherwise).
+    pub replicas: u32,
+    /// Launch cycle.
+    pub start: u64,
+    /// Reconfiguration cycles charged before execution.
+    pub dpr_cycles: u64,
+    /// Execution cycles (work / effective throughput).
+    pub exec_cycles: u64,
+    /// `start + dpr_cycles + exec_cycles`.
+    pub finish: u64,
+    /// Whether the bitstream was GLB-resident (fast-DPR hit).
+    pub cache_hit: bool,
+}
+
+/// A variant option considered by the policy, with effective throughput.
+#[derive(Clone, Debug)]
+struct Option_ {
+    ver: VariantId,
+    eff_throughput: f64,
+    /// Replication request (fixed-size only; 0 = plain allocation).
+    replicate: u32,
+    /// Fall back to exclusive whole-machine allocation.
+    exclusive: bool,
+}
+
+/// Event-driven scheduler implementing the paper's greedy policy plus
+/// FCFS and fair-share ablations.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    lib: TaskLibrary,
+    mgr: RegionManager,
+    dpr: DprEngine,
+    policy: SchedulerPolicyKind,
+    baseline_single_mapping: bool,
+    /// region → instance, for completion handling.
+    running: BTreeMap<RegionId, TaskInstanceId>,
+    /// fair-share rotation cursor.
+    rr_cursor: u32,
+    /// pre-generated bitstreams per (task, variant).
+    bitstreams: BTreeMap<BitstreamId, Bitstream>,
+}
+
+impl Scheduler {
+    /// Build from a config; `mode` selects the DPR path (Fig. 5 compares
+    /// AXI4-Lite for the baseline vs fast-DPR for the mechanisms).
+    pub fn new(cfg: &Config, lib: TaskLibrary, mode: DprMode) -> Scheduler {
+        let mgr = RegionManager::new(&cfg.arch, &cfg.scheduler);
+        let dpr = DprEngine::new(&cfg.arch, &cfg.dpr, mode);
+        let mut bitstreams = BTreeMap::new();
+        for t in lib.iter() {
+            for v in &t.variants {
+                let bs = generate_bitstream(&t.id.0, v.ver.0, &v.demand, &cfg.arch, &cfg.dpr);
+                bitstreams.insert(bs.id.clone(), bs);
+            }
+        }
+        Scheduler {
+            lib,
+            mgr,
+            dpr,
+            policy: cfg.scheduler.policy,
+            baseline_single_mapping: cfg.scheduler.baseline_single_mapping,
+            running: BTreeMap::new(),
+            rr_cursor: 0,
+            bitstreams,
+        }
+    }
+
+    /// Task library in use.
+    pub fn library(&self) -> &TaskLibrary {
+        &self.lib
+    }
+
+    /// Region manager (metrics want utilization/fragmentation).
+    pub fn regions(&self) -> &RegionManager {
+        &self.mgr
+    }
+
+    /// DPR engine (cache stats).
+    pub fn dpr(&self) -> &DprEngine {
+        &self.dpr
+    }
+
+    /// Preload every variant's bitstream into the GLB cache — the
+    /// paper's "pre-load bitstreams of the next task in advance".
+    pub fn preload_all(&mut self) {
+        let all: Vec<Bitstream> = self.bitstreams.values().cloned().collect();
+        for bs in &all {
+            self.dpr.preload(bs);
+        }
+    }
+
+    /// Scheduling step: launch every ready task that can be placed.
+    /// Called on arrival and completion events.
+    pub fn schedule(&mut self, queue: &mut RequestQueue, now: u64) -> Vec<Launch> {
+        // Single pass: no completions happen inside a step, so resource
+        // availability only shrinks — a task that failed to place cannot
+        // succeed later in the same step, and tasks are independent.
+        // (§Perf L3: a rescan-after-every-launch variant was O(ready²)
+        // and dominated heavy-backlog simulations.)
+        let ready = self.order_ready(queue.ready_tasks());
+        let mut launches = Vec::new();
+        for rt in ready {
+            if let Some(launch) = self.try_launch(&rt, now) {
+                queue.mark_launched(rt.instance).expect("ready implies launchable");
+                launches.push(launch);
+            }
+        }
+        if self.policy == SchedulerPolicyKind::FairShare {
+            self.rr_cursor = self.rr_cursor.wrapping_add(1);
+        }
+        launches
+    }
+
+    /// Handle a task completion: free its region.  Returns the instance
+    /// that was running there.
+    pub fn complete(&mut self, region: RegionId) -> Result<TaskInstanceId> {
+        let inst = self
+            .running
+            .remove(&region)
+            .ok_or_else(|| Error::Sched(format!("completion for idle region {region}")))?;
+        self.mgr.release(region)?;
+        Ok(inst)
+    }
+
+    /// Number of running tasks.
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    // ------------------------------------------------------------- policy
+
+    /// Order the ready list according to the task-selection policy.
+    fn order_ready(&self, mut ready: Vec<ReadyTask>) -> Vec<ReadyTask> {
+        match self.policy {
+            // arrival order (request seq, then node) — queue order.
+            SchedulerPolicyKind::GreedyThroughput | SchedulerPolicyKind::FcfsFirstFit => ready,
+            SchedulerPolicyKind::FairShare => {
+                // rotate tenants so each gets the head slot in turn
+                let cursor = self.rr_cursor % 4;
+                ready.sort_by_key(|r| ((r.tenant + 4 - cursor) % 4, r.instance));
+                ready
+            }
+            SchedulerPolicyKind::ShortestJobFirst => {
+                // shortest minimum execution time first; arrival breaks ties
+                ready.sort_by_key(|r| {
+                    let est = self
+                        .lib
+                        .get(&r.task)
+                        .map(|t| t.exec_cycles(t.fastest()))
+                        .unwrap_or(u64::MAX);
+                    (est, r.instance)
+                });
+                ready
+            }
+        }
+    }
+
+    /// Enumerate variant options for a task in policy preference order.
+    fn options_for(&self, task: &TaskId) -> Vec<Option_> {
+        let spec = match self.lib.get(task) {
+            Ok(s) => s,
+            Err(_) => return Vec::new(),
+        };
+        let mut opts: Vec<Option_> = Vec::new();
+        match self.mgr.policy() {
+            RegionPolicyKind::Baseline => {
+                // Whole machine per task.  With `baseline_single_mapping`
+                // (the embedded Fig. 5 baseline) only the standard
+                // variant-a bitstream exists; otherwise the baseline may
+                // use any pre-compiled mapping (the generous cloud
+                // baseline — keeps Fig. 4 margins conservative).
+                if self.baseline_single_mapping {
+                    let v = spec.smallest();
+                    opts.push(Option_ {
+                        ver: v.ver,
+                        eff_throughput: v.throughput,
+                        replicate: 0,
+                        exclusive: true,
+                    });
+                } else {
+                    for v in &spec.variants {
+                        opts.push(Option_ {
+                            ver: v.ver,
+                            eff_throughput: v.throughput,
+                            replicate: 0,
+                            exclusive: true,
+                        });
+                    }
+                }
+            }
+            RegionPolicyKind::FixedSize => {
+                let unit = self.mgr.unit();
+                let best_tpt = spec.fastest().throughput;
+                for v in &spec.variants {
+                    if v.demand.fits_within(&unit) {
+                        opts.push(Option_ {
+                            ver: v.ver,
+                            eff_throughput: v.throughput,
+                            replicate: 0,
+                            exclusive: false,
+                        });
+                        // replication option: unroll copies across units
+                        // up to the best pre-compiled mapping's speedup
+                        // (no point unrolling beyond what variant b/c
+                        // achieves with optimization).
+                        let cap = (best_tpt / v.throughput).ceil() as u32;
+                        if cap > 1 {
+                            opts.push(Option_ {
+                                ver: v.ver,
+                                eff_throughput: v.throughput * cap as f64,
+                                replicate: cap,
+                                exclusive: false,
+                            });
+                        }
+                    }
+                }
+                if opts.is_empty() {
+                    // fits no unit: exclusive whole-machine fallback with
+                    // every variant as a candidate.
+                    for v in &spec.variants {
+                        opts.push(Option_ {
+                            ver: v.ver,
+                            eff_throughput: v.throughput,
+                            replicate: 0,
+                            exclusive: true,
+                        });
+                    }
+                }
+            }
+            RegionPolicyKind::VariableSize | RegionPolicyKind::FlexibleShape => {
+                for v in &spec.variants {
+                    opts.push(Option_ {
+                        ver: v.ver,
+                        eff_throughput: v.throughput,
+                        replicate: 0,
+                        exclusive: false,
+                    });
+                }
+            }
+        }
+        match self.policy {
+            SchedulerPolicyKind::GreedyThroughput
+            | SchedulerPolicyKind::FairShare
+            | SchedulerPolicyKind::ShortestJobFirst => {
+                // paper: highest throughput first
+                opts.sort_by(|a, b| b.eff_throughput.partial_cmp(&a.eff_throughput).unwrap());
+            }
+            SchedulerPolicyKind::FcfsFirstFit => {
+                // smallest footprint first (ascending throughput proxy)
+                opts.sort_by(|a, b| a.eff_throughput.partial_cmp(&b.eff_throughput).unwrap());
+            }
+        }
+        opts
+    }
+
+    /// Try to launch one ready task; `None` if nothing fits right now.
+    fn try_launch(&mut self, rt: &ReadyTask, now: u64) -> Option<Launch> {
+        let options = self.options_for(&rt.task);
+        for opt in options {
+            let spec = self.lib.get(&rt.task).expect("options imply spec");
+            let variant = spec.variant(opt.ver).expect("option from spec").clone();
+            let outcome = if opt.exclusive {
+                self.mgr.try_allocate_exclusive(&variant.demand)
+            } else if opt.replicate > 1 {
+                self.mgr.try_allocate_replicated(&variant.demand, opt.replicate)
+            } else {
+                self.mgr.try_allocate(&variant.demand)
+            };
+            let region: ExecutionRegion = match outcome {
+                AllocOutcome::Allocated(r) => r,
+                AllocOutcome::NoFit | AllocOutcome::NeverFits => continue,
+            };
+
+            // DPR: stream the variant's bitstream into the region.
+            let bs_id = BitstreamId::new(rt.task.0.clone(), opt.ver.0);
+            let bs = self.bitstreams.get(&bs_id).expect("pre-generated").clone();
+            let dest = region.array.first().copied().unwrap_or(SliceRange::empty());
+            let dpr_out = self.dpr.reconfigure(&bs, &dest);
+
+            let replicas = region.replicas.max(1);
+            let eff_tpt = variant.throughput * replicas as f64;
+            let exec_cycles = (spec.work as f64 / eff_tpt).ceil() as u64;
+            let finish = now + dpr_out.cycles + exec_cycles;
+
+            self.running.insert(region.id, rt.instance);
+            return Some(Launch {
+                instance: rt.instance,
+                task: rt.task.clone(),
+                ver: opt.ver,
+                region: region.id,
+                replicas,
+                start: now,
+                dpr_cycles: dpr_out.cycles,
+                exec_cycles,
+                finish,
+                cache_hit: dpr_out.cache_hit,
+            });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::tasks::{AppId, AppRequest};
+
+    fn sched(policy: RegionPolicyKind) -> Scheduler {
+        let cfg = presets::cloud_scenario(policy);
+        Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast)
+    }
+
+    fn submit(q: &mut RequestQueue, seq: u64, tenant: u32, app: AppId, at: u64) {
+        q.submit(AppRequest::new(seq, tenant, app, at));
+    }
+
+    #[test]
+    fn greedy_picks_fastest_variant_when_idle() {
+        let mut s = sched(RegionPolicyKind::FlexibleShape);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 0, AppId::Harris, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 1);
+        assert_eq!(launches[0].ver, VariantId('c')); // 4 px/cyc, fastest
+        assert!(launches[0].cache_hit);
+        assert_eq!(s.running_count(), 1);
+    }
+
+    #[test]
+    fn greedy_falls_back_to_smaller_variant_under_pressure() {
+        let mut s = sched(RegionPolicyKind::FlexibleShape);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        // camera b takes 14 GLB + 6 array; harris c (14 GLB + 7 array)
+        // can then never fit (8 array total) — greedy drops to b then a.
+        submit(&mut q, 0, 2, AppId::Camera, 0);
+        submit(&mut q, 1, 3, AppId::Harris, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 2);
+        assert_eq!(launches[0].task.0, "camera.pipeline");
+        assert_eq!(launches[0].ver, VariantId('b'));
+        assert_eq!(launches[1].task.0, "harris.corner");
+        // 2 array slices remain ⇒ only variant a (2 slices, 4 GLB) fits
+        assert_eq!(launches[1].ver, VariantId('a'));
+    }
+
+    #[test]
+    fn baseline_runs_one_task_at_a_time() {
+        let mut s = sched(RegionPolicyKind::Baseline);
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 0, AppId::Camera, 0);
+        submit(&mut q, 1, 1, AppId::Harris, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 1); // second task must wait
+        assert_eq!(q.ready_count(), 1);
+
+        // complete the first; next schedule launches the second
+        let region = launches[0].region;
+        let inst = s.complete(region).unwrap();
+        q.mark_complete(inst, launches[0].finish).unwrap();
+        let launches2 = s.schedule(&mut q, launches[0].finish);
+        assert_eq!(launches2.len(), 1);
+        assert_eq!(launches2[0].task.0, "harris.corner");
+    }
+
+    #[test]
+    fn fixed_size_replicates_small_variants() {
+        let mut s = sched(RegionPolicyKind::FixedSize);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 1, AppId::MobileNet, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 1);
+        let l = &launches[0];
+        // group 2's variant b (208 = 4×52) needs 5 array slices > unit;
+        // greedy instead replicates variant a across 4 units (4×52=208).
+        assert_eq!(l.ver, VariantId('a'));
+        assert_eq!(l.replicas, 4);
+    }
+
+    #[test]
+    fn fixed_size_exclusive_fallback_for_oversized() {
+        let mut s = sched(RegionPolicyKind::FixedSize);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        // camera a needs (4 GLB, 4 array) > unit (8, 2) in array dim
+        submit(&mut q, 0, 2, AppId::Camera, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 1);
+        // exclusive: the whole machine is taken
+        assert_eq!(s.regions().active_count(), 1);
+        let (ug, ua) = s.regions().utilization();
+        assert_eq!((ug, ua), (1.0, 1.0));
+    }
+
+    #[test]
+    fn completion_unblocks_chain_successor() {
+        let mut s = sched(RegionPolicyKind::FlexibleShape);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 0, AppId::ResNet18, 0);
+        let l1 = s.schedule(&mut q, 0);
+        assert_eq!(l1.len(), 1);
+        assert_eq!(l1[0].task.0, "resnet18.conv2_x");
+        // conv3 not ready until conv2 completes
+        assert_eq!(q.ready_count(), 0);
+        let inst = s.complete(l1[0].region).unwrap();
+        q.mark_complete(inst, l1[0].finish).unwrap();
+        let l2 = s.schedule(&mut q, l1[0].finish);
+        assert_eq!(l2.len(), 1);
+        assert_eq!(l2[0].task.0, "resnet18.conv3_x");
+    }
+
+    #[test]
+    fn fcfs_policy_prefers_smallest_variant() {
+        let cfg = {
+            let mut c = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+            c.scheduler.policy = SchedulerPolicyKind::FcfsFirstFit;
+            c
+        };
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches[0].ver, VariantId('a'));
+    }
+
+    #[test]
+    fn complete_unknown_region_errors() {
+        let mut s = sched(RegionPolicyKind::FlexibleShape);
+        assert!(s.complete(RegionId(42)).is_err());
+    }
+
+    #[test]
+    fn exec_cycles_match_table1_math() {
+        let mut s = sched(RegionPolicyKind::FlexibleShape);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 2, AppId::Camera, 0);
+        let l = &s.schedule(&mut q, 0)[0];
+        // camera b: 2,073,600 px / 12 px-per-cycle = 172,800 cycles
+        assert_eq!(l.exec_cycles, 172_800);
+        assert_eq!(l.finish, l.start + l.dpr_cycles + l.exec_cycles);
+    }
+}

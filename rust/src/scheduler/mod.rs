@@ -1,0 +1,23 @@
+//! Run-time scheduler: allocates slices to ready tasks (§2.2–3.1).
+//!
+//! "At run time, a scheduler leverages the hardware slice abstraction to
+//! decide which variant of tasks to choose, which resources to allocate,
+//! and when to execute."
+//!
+//! The scheduler is event-driven: the simulation (or the live
+//! coordinator) calls [`Scheduler::schedule`] whenever a task arrives or
+//! finishes (§3.1: "whenever a new task arrives, or an existing task
+//! finishes, the scheduler is triggered"), and the scheduler launches
+//! every ready task it can place, going through:
+//!
+//! 1. variant selection under the configured policy (paper: greedy
+//!    highest-throughput-that-fits),
+//! 2. region allocation under the configured mechanism ([`crate::regions`]),
+//! 3. DPR cost accounting ([`crate::dpr`]), and
+//! 4. execution-time computation from Table 1 throughputs.
+
+mod core;
+mod queue;
+
+pub use core::{Launch, Scheduler};
+pub use queue::{ReadyTask, RequestQueue};

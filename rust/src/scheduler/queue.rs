@@ -1,0 +1,188 @@
+//! Request queue with dependency tracking.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::tasks::{AppGraph, AppRequest, TaskId, TaskInstanceId};
+
+/// A task whose dependencies are satisfied and which awaits resources.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReadyTask {
+    /// Instance identity (request seq + node index).
+    pub instance: TaskInstanceId,
+    /// Task to run.
+    pub task: TaskId,
+    /// Submitting tenant.
+    pub tenant: u32,
+    /// Cycle at which the instance became ready (dependencies met).
+    pub ready_cycle: u64,
+    /// Cycle at which the *request* arrived (for TAT).
+    pub arrival_cycle: u64,
+}
+
+/// In-flight application requests and their ready frontier.
+#[derive(Clone, Debug, Default)]
+pub struct RequestQueue {
+    requests: BTreeMap<u64, AppRequest>,
+    graphs: BTreeMap<u64, AppGraph>,
+    /// instance → ready cycle, for instances whose deps are met and which
+    /// haven't been launched yet.
+    ready: BTreeMap<TaskInstanceId, u64>,
+    /// instances currently running (launched, not complete).
+    running: BTreeMap<TaskInstanceId, ()>,
+}
+
+impl RequestQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit a request; its root task(s) become ready immediately.
+    pub fn submit(&mut self, req: AppRequest) {
+        let graph = AppGraph::of(req.app);
+        for node in req.ready_nodes(&graph) {
+            self.ready
+                .insert(TaskInstanceId { request: req.seq, node }, req.arrival_cycle);
+        }
+        self.graphs.insert(req.seq, graph);
+        self.requests.insert(req.seq, req);
+    }
+
+    /// Ready tasks in arrival order (request seq, then node index).
+    pub fn ready_tasks(&self) -> Vec<ReadyTask> {
+        self.ready
+            .iter()
+            .map(|(inst, &ready_cycle)| {
+                let req = &self.requests[&inst.request];
+                let graph = &self.graphs[&inst.request];
+                ReadyTask {
+                    instance: *inst,
+                    task: graph.nodes[inst.node].clone(),
+                    tenant: req.tenant,
+                    ready_cycle,
+                    arrival_cycle: req.arrival_cycle,
+                }
+            })
+            .collect()
+    }
+
+    /// Number of ready (waiting) tasks.
+    pub fn ready_count(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Number of running tasks.
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Number of incomplete requests.
+    pub fn open_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Mark an instance as launched (moves ready → running).
+    pub fn mark_launched(&mut self, inst: TaskInstanceId) -> Result<()> {
+        self.ready
+            .remove(&inst)
+            .ok_or_else(|| Error::Sched(format!("{inst} launched but not ready")))?;
+        self.running.insert(inst, ());
+        Ok(())
+    }
+
+    /// Mark an instance complete at `now`; newly-unblocked successors
+    /// become ready.  Returns the owning request when it fully completed.
+    pub fn mark_complete(&mut self, inst: TaskInstanceId, now: u64) -> Result<Option<AppRequest>> {
+        self.running
+            .remove(&inst)
+            .ok_or_else(|| Error::Sched(format!("{inst} completed but not running")))?;
+        let req = self
+            .requests
+            .get_mut(&inst.request)
+            .ok_or_else(|| Error::Sched(format!("{inst} has no request")))?;
+        if req.done[inst.node] {
+            return Err(Error::SimInvariant(format!("{inst} completed twice")));
+        }
+        req.done[inst.node] = true;
+        let graph = &self.graphs[&inst.request];
+        // successors whose deps are all met and not yet ready/running
+        for node in req.ready_nodes(graph) {
+            let succ = TaskInstanceId { request: inst.request, node };
+            if !self.running.contains_key(&succ) {
+                self.ready.entry(succ).or_insert(now);
+            }
+        }
+        if req.complete() {
+            let done = self.requests.remove(&inst.request).expect("present");
+            self.graphs.remove(&inst.request);
+            Ok(Some(done))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::AppId;
+
+    #[test]
+    fn chain_progresses_node_by_node() {
+        let mut q = RequestQueue::new();
+        q.submit(AppRequest::new(0, 2, AppId::MobileNet, 100));
+        assert_eq!(q.ready_count(), 1);
+        let r = &q.ready_tasks()[0];
+        assert_eq!(r.task.0, "mobilenet.conv_dw_pw_2_x");
+        assert_eq!(r.ready_cycle, 100);
+        assert_eq!(r.tenant, 2);
+
+        let inst = r.instance;
+        q.mark_launched(inst).unwrap();
+        assert_eq!(q.ready_count(), 0);
+        assert_eq!(q.running_count(), 1);
+
+        let done = q.mark_complete(inst, 500).unwrap();
+        assert!(done.is_none());
+        assert_eq!(q.ready_count(), 1);
+        let r2 = &q.ready_tasks()[0];
+        assert_eq!(r2.task.0, "mobilenet.conv_dw_pw_3_x");
+        assert_eq!(r2.ready_cycle, 500); // becomes ready at completion time
+        assert_eq!(r2.arrival_cycle, 100); // TAT anchored to request arrival
+    }
+
+    #[test]
+    fn request_completion_returned() {
+        let mut q = RequestQueue::new();
+        q.submit(AppRequest::new(7, 0, AppId::Camera, 0));
+        let inst = q.ready_tasks()[0].instance;
+        q.mark_launched(inst).unwrap();
+        let done = q.mark_complete(inst, 42).unwrap().expect("request complete");
+        assert_eq!(done.seq, 7);
+        assert_eq!(q.open_requests(), 0);
+    }
+
+    #[test]
+    fn multiple_requests_ready_in_arrival_order() {
+        let mut q = RequestQueue::new();
+        q.submit(AppRequest::new(0, 0, AppId::Harris, 10));
+        q.submit(AppRequest::new(1, 1, AppId::Camera, 20));
+        let ready = q.ready_tasks();
+        assert_eq!(ready.len(), 2);
+        assert_eq!(ready[0].instance.request, 0);
+        assert_eq!(ready[1].instance.request, 1);
+    }
+
+    #[test]
+    fn protocol_violations_error() {
+        let mut q = RequestQueue::new();
+        q.submit(AppRequest::new(0, 0, AppId::Camera, 0));
+        let inst = q.ready_tasks()[0].instance;
+        assert!(q.mark_complete(inst, 1).is_err()); // not launched yet
+        q.mark_launched(inst).unwrap();
+        assert!(q.mark_launched(inst).is_err()); // double launch
+        q.mark_complete(inst, 1).unwrap();
+        assert!(q.mark_complete(inst, 2).is_err()); // double complete
+    }
+}

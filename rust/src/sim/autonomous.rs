@@ -1,0 +1,239 @@
+//! Autonomous-system scenario (paper §3.2, Fig. 3b / Fig. 5).
+//!
+//! A camera feeds RAW frames at 30 fps; every frame runs the camera
+//! pipeline, and event streams (following [30]'s methodology) trigger
+//! additional applications with a uniform 3–7-frame period per event
+//! type.  The baseline CGRA maps one task at a time and reconfigures
+//! over AXI4-Lite; the partitioned mechanisms run tasks concurrently and
+//! use fast-DPR (Fig. 5's caption).
+
+use std::collections::BTreeMap;
+
+use crate::config::{Config, EdgeWorkloadConfig, RegionPolicyKind, WorkloadConfig};
+use crate::dpr::{CacheStats, DprMode};
+use crate::error::{Error, Result};
+use crate::metrics::{FrameLatency, LatencyBreakdown};
+use crate::regions::RegionId;
+use crate::scheduler::{RequestQueue, Scheduler};
+use crate::tasks::{AppId, AppRequest, TaskLibrary};
+use crate::util::rng::Rng;
+
+use super::engine::{Cycle, EventQueue};
+
+/// Event-triggered applications: Harris (e.g. feature tracking on a
+/// detected object) and MobileNet (e.g. classification of a detected
+/// region).  The paper simplified its task set similarly (§3.2 fn. 2).
+pub const EVENT_APPS: [AppId; 2] = [AppId::Harris, AppId::MobileNet];
+
+#[derive(Clone, Debug)]
+enum Event {
+    /// Start of frame `k`.
+    Frame(u32),
+    /// Task completion on a region.
+    Completion(RegionId),
+}
+
+/// Result of one autonomous run.
+#[derive(Clone, Debug)]
+pub struct EdgeReport {
+    /// Mechanism the run used.
+    pub policy: RegionPolicyKind,
+    /// DPR mode the run used.
+    pub dpr_mode: DprMode,
+    /// Per-frame latency breakdown (Fig. 5 bars).
+    pub latency: LatencyBreakdown,
+    /// DPR cache counters.
+    pub dpr_stats: CacheStats,
+    /// Frames simulated.
+    pub frames: u32,
+    /// Total event-triggered requests.
+    pub event_requests: u64,
+}
+
+impl EdgeReport {
+    /// Mean frame latency in milliseconds.
+    pub fn mean_latency_ms(&self, core_clock_mhz: u32) -> f64 {
+        self.latency.mean_total() / (core_clock_mhz as f64 * 1e3)
+    }
+}
+
+/// DPR mode Fig. 5 assigns to each mechanism: AXI4-Lite for the
+/// baseline, fast-DPR for every partitioned mechanism.
+pub fn dpr_mode_for(policy: RegionPolicyKind) -> DprMode {
+    match policy {
+        RegionPolicyKind::Baseline => DprMode::Axi4Lite,
+        _ => DprMode::Fast,
+    }
+}
+
+/// Run the autonomous scenario under `cfg`.
+pub fn run_edge(cfg: &Config) -> Result<EdgeReport> {
+    run_edge_with(cfg, TaskLibrary::table1())
+}
+
+/// [`run_edge`] with an explicit task library (used by ablations).
+pub fn run_edge_with(cfg: &Config, lib: TaskLibrary) -> Result<EdgeReport> {
+    let wl: &EdgeWorkloadConfig = match &cfg.workload {
+        WorkloadConfig::Edge(e) => e,
+        WorkloadConfig::Cloud(_) => {
+            return Err(Error::Config("run_edge requires an edge workload".into()))
+        }
+    };
+    let mode = dpr_mode_for(cfg.scheduler.region_policy);
+    let mut sched = Scheduler::new(cfg, lib, mode);
+    if mode == DprMode::Fast {
+        sched.preload_all();
+    }
+
+    let frame_cycles = (cfg.arch.core_clock_mhz as f64 * 1e6 / wl.fps) as u64;
+    let mut rng = Rng::new(wl.seed);
+    // next trigger frame per event stream
+    let (lo, hi) = wl.event_period_frames;
+    let mut next_trigger: Vec<u32> = EVENT_APPS
+        .iter()
+        .map(|_| rng.range_inclusive(lo as u64, hi as u64) as u32)
+        .collect();
+
+    let mut events: EventQueue<Event> = EventQueue::new();
+    events.push(0, Event::Frame(0));
+
+    let mut queue = RequestQueue::new();
+    let mut seq = 0u64;
+    let mut event_requests = 0u64;
+
+    // request seq → owning frame
+    let mut frame_of: BTreeMap<u64, u32> = BTreeMap::new();
+    // frame → (start cycle, open request count, reconfig cycles, last completion)
+    let mut frames: BTreeMap<u32, (Cycle, u32, u64, Cycle)> = BTreeMap::new();
+
+    let mut latency = LatencyBreakdown::new();
+
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            Event::Frame(k) => {
+                let entry = frames.entry(k).or_insert((now, 0, 0, now));
+                // camera pipeline runs every frame
+                queue.submit(AppRequest::new(seq, 2, AppId::Camera, now));
+                frame_of.insert(seq, k);
+                entry.1 += 1;
+                seq += 1;
+                // event streams
+                for (i, app) in EVENT_APPS.iter().enumerate() {
+                    if next_trigger[i] == k {
+                        queue.submit(AppRequest::new(seq, i as u32, *app, now));
+                        frame_of.insert(seq, k);
+                        frames.get_mut(&k).expect("inserted").1 += 1;
+                        seq += 1;
+                        event_requests += 1;
+                        let step = rng.range_inclusive(lo as u64, hi as u64) as u32;
+                        next_trigger[i] = k + step;
+                    }
+                }
+                if k + 1 < wl.frames {
+                    events.push(now + frame_cycles, Event::Frame(k + 1));
+                }
+            }
+            Event::Completion(region) => {
+                let inst = sched.complete(region)?;
+                if let Some(done) = queue.mark_complete(inst, now)? {
+                    let k = frame_of.remove(&done.seq).ok_or_else(|| {
+                        Error::SimInvariant(format!("request {} has no frame", done.seq))
+                    })?;
+                    let entry = frames.get_mut(&k).expect("frame exists");
+                    entry.1 -= 1;
+                    entry.3 = entry.3.max(now);
+                    if entry.1 == 0 {
+                        // frame complete: record its latency breakdown
+                        let (start, _, reconfig, last) = *entry;
+                        frames.remove(&k);
+                        let total = last - start;
+                        latency.record(FrameLatency {
+                            reconfig_cycles: reconfig.min(total),
+                            wait_exec_cycles: total.saturating_sub(reconfig),
+                        });
+                    }
+                }
+            }
+        }
+        for launch in sched.schedule(&mut queue, now) {
+            if let Some(&k) = frame_of.get(&launch.instance.request) {
+                if let Some(entry) = frames.get_mut(&k) {
+                    entry.2 += launch.dpr_cycles;
+                }
+            }
+            events.push(launch.finish, Event::Completion(launch.region));
+        }
+    }
+
+    if queue.open_requests() != 0 {
+        return Err(Error::SimInvariant(format!(
+            "{} requests never completed",
+            queue.open_requests()
+        )));
+    }
+
+    Ok(EdgeReport {
+        policy: cfg.scheduler.region_policy,
+        dpr_mode: mode,
+        latency,
+        dpr_stats: sched.dpr().cache().stats(),
+        frames: wl.frames,
+        event_requests,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn quick_cfg(policy: RegionPolicyKind) -> Config {
+        let mut cfg = presets::edge_scenario(policy);
+        if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+            e.frames = 120;
+            e.seed = 11;
+        }
+        cfg
+    }
+
+    #[test]
+    fn runs_all_mechanisms() {
+        for policy in RegionPolicyKind::ALL {
+            let r = run_edge(&quick_cfg(policy)).unwrap();
+            assert_eq!(r.latency.len() as u32, r.frames, "{policy:?}");
+            assert!(r.event_requests > 0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn baseline_uses_axi_and_pays_for_it() {
+        let base = run_edge(&quick_cfg(RegionPolicyKind::Baseline)).unwrap();
+        let flex = run_edge(&quick_cfg(RegionPolicyKind::FlexibleShape)).unwrap();
+        assert_eq!(base.dpr_mode, DprMode::Axi4Lite);
+        assert_eq!(flex.dpr_mode, DprMode::Fast);
+        // the paper's Fig. 5 shape: flexible+fast-DPR cuts mean latency
+        assert!(
+            flex.latency.mean_total() < base.latency.mean_total(),
+            "flex {} vs base {}",
+            flex.latency.mean_total(),
+            base.latency.mean_total()
+        );
+        // reconfig share drops from double digits to <5 %
+        assert!(flex.latency.reconfig_share() < base.latency.reconfig_share());
+        assert!(flex.latency.reconfig_share() < 0.05, "{}", flex.latency.reconfig_share());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_edge(&quick_cfg(RegionPolicyKind::VariableSize)).unwrap();
+        let b = run_edge(&quick_cfg(RegionPolicyKind::VariableSize)).unwrap();
+        assert_eq!(a.latency.mean_total(), b.latency.mean_total());
+        assert_eq!(a.event_requests, b.event_requests);
+    }
+
+    #[test]
+    fn cloud_config_rejected() {
+        let cfg = presets::cloud_scenario(RegionPolicyKind::Baseline);
+        assert!(run_edge(&cfg).is_err());
+    }
+}

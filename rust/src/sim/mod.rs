@@ -1,0 +1,18 @@
+//! Discrete-event simulation of the CGRA under multi-tasked workloads.
+//!
+//! The timing model operates at slice granularity (see DESIGN.md
+//! substitution table): task execution time = Table 1 work / throughput,
+//! DPR cost from [`crate::dpr`], resource contention from
+//! [`crate::regions`].  Two scenario drivers reproduce the paper's
+//! evaluation: [`cloud`] (§3.1, Fig. 4) and [`autonomous`] (§3.2, Fig. 5).
+
+pub mod autonomous;
+pub mod cloud;
+mod engine;
+pub mod queueing;
+pub mod trace;
+
+pub use autonomous::{run_edge, run_edge_with, EdgeReport};
+pub use cloud::{run_cloud, run_cloud_with, CloudReport};
+pub use engine::{Cycle, EventQueue};
+pub use trace::{Trace, TraceEvent};

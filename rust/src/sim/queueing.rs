@@ -1,0 +1,131 @@
+//! Analytic queueing cross-check for the DES.
+//!
+//! At light load the baseline CGRA is an M/G/1 queue: Poisson arrivals
+//! (the four tenants' superposition), a single server (the whole array),
+//! and general service times (the mix of app execution times).  The
+//! Pollaczek–Khinchine formula then predicts the mean wait exactly, so
+//! the simulator can be *validated* against closed-form theory — a test
+//! no amount of unit testing provides.
+//!
+//!   W = λ·E[S²] / (2·(1 − ρ)),  ρ = λ·E[S]
+//!
+//! The integration test `sim::queueing::tests::des_matches_mg1` drives
+//! the DES at a load where the model's assumptions hold (single-task
+//! baseline, no DPR cost, exponential arrivals) and checks the measured
+//! mean wait against the prediction within Monte-Carlo tolerance.
+
+/// M/G/1 mean waiting time (Pollaczek–Khinchine), in the same time unit
+/// as the inputs.  `lambda` = total arrival rate, `s_mean`/`s2_mean` =
+/// first and second moments of service time.
+pub fn mg1_mean_wait(lambda: f64, s_mean: f64, s2_mean: f64) -> f64 {
+    assert!(lambda > 0.0 && s_mean > 0.0 && s2_mean >= s_mean * s_mean);
+    let rho = lambda * s_mean;
+    assert!(rho < 1.0, "M/G/1 requires utilization < 1, got {rho}");
+    lambda * s2_mean / (2.0 * (1.0 - rho))
+}
+
+/// Utilization of the single server.
+pub fn mg1_utilization(lambda: f64, s_mean: f64) -> f64 {
+    lambda * s_mean
+}
+
+/// Service moments of a discrete service-time mix `(prob, time)`.
+pub fn service_moments(mix: &[(f64, f64)]) -> (f64, f64) {
+    let total_p: f64 = mix.iter().map(|(p, _)| p).sum();
+    assert!((total_p - 1.0).abs() < 1e-9, "probabilities must sum to 1");
+    let m1 = mix.iter().map(|(p, s)| p * s).sum();
+    let m2 = mix.iter().map(|(p, s)| p * s * s).sum();
+    (m1, m2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, RegionPolicyKind, WorkloadConfig};
+    use crate::sim::run_cloud;
+    use crate::tasks::{AppGraph, AppId, TaskLibrary};
+
+    #[test]
+    fn pk_formula_sanity() {
+        // M/M/1 special case: E[S²] = 2/µ² ⇒ W = ρ/(µ−λ)
+        let (lambda, mu) = (0.5, 1.0);
+        let w = mg1_mean_wait(lambda, 1.0 / mu, 2.0 / (mu * mu));
+        let expect = lambda / (mu * (mu - lambda));
+        assert!((w - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moments_of_mix() {
+        let (m1, m2) = service_moments(&[(0.5, 2.0), (0.5, 4.0)]);
+        assert_eq!(m1, 3.0);
+        assert_eq!(m2, 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn saturated_queue_rejected() {
+        mg1_mean_wait(1.0, 2.0, 8.0);
+    }
+
+    /// The DES validation: baseline CGRA at light load is M/G/1.
+    #[test]
+    fn des_matches_mg1() {
+        // Arrange identical mean inter-arrival T for all 4 tenants so the
+        // superposed process is Poisson with λ = 4/T.
+        let t_ms = 60.0;
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::Baseline);
+        if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.mean_interarrival_ms = [t_ms; 4];
+            c.duration_ms = 60_000.0; // long run for tight confidence
+            c.seed = 2027;
+        }
+
+        // Service time per app under the baseline: the whole app chain's
+        // exec at its fastest variants (greedy, whole machine), plus the
+        // (preloaded fast-DPR) reconfig per task — a few µs, negligible
+        // but included for exactness.
+        let lib = TaskLibrary::table1();
+        let cycles_per_ms = 500_000.0;
+        let service_ms = |app: AppId| -> f64 {
+            AppGraph::of(app)
+                .nodes
+                .iter()
+                .map(|tid| {
+                    let t = lib.get(tid).unwrap();
+                    t.exec_cycles(t.fastest()) as f64 / cycles_per_ms
+                })
+                .sum::<f64>()
+        };
+        let mix: Vec<(f64, f64)> = AppId::ALL.iter().map(|&a| (0.25, service_ms(a))).collect();
+        let (s1, s2) = service_moments(&mix);
+        let lambda = 4.0 / t_ms; // requests per ms
+        let predicted_wait_ms = mg1_mean_wait(lambda, s1, s2);
+
+        let report = run_cloud(&cfg).unwrap();
+        // measured mean wait = mean(TAT − exec) over all requests
+        let mean_wait_ms = report
+            .ntat
+            .records()
+            .iter()
+            .map(|r| (r.tat() - r.exec_cycles) as f64 / cycles_per_ms)
+            .sum::<f64>()
+            / report.ntat.records().len() as f64;
+
+        let rel_err = (mean_wait_ms - predicted_wait_ms).abs() / predicted_wait_ms;
+        assert!(
+            rel_err < 0.15,
+            "DES wait {mean_wait_ms:.3} ms vs M/G/1 {predicted_wait_ms:.3} ms (err {:.1}%)",
+            rel_err * 100.0
+        );
+
+        // utilization should match ρ as well
+        let rho = mg1_utilization(lambda, s1);
+        // baseline holds the whole machine while serving: busy fraction
+        // of the array equals ρ (modulo drain-window edge effects).
+        assert!(
+            (report.array_utilization - rho).abs() < 0.05,
+            "util {} vs rho {rho}",
+            report.array_utilization
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! Bounded simulation trace for debugging and example output.
+
+use std::collections::VecDeque;
+
+use crate::sim::engine::Cycle;
+
+/// One trace entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// When it happened.
+    pub at: Cycle,
+    /// What happened (pre-formatted).
+    pub what: String,
+}
+
+/// Ring-buffer trace: keeps the most recent `cap` events.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    events: VecDeque<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Trace {
+    /// Trace keeping at most `cap` events.
+    pub fn new(cap: usize) -> Self {
+        Trace { events: VecDeque::with_capacity(cap.min(4096)), cap, dropped: 0 }
+    }
+
+    /// Disabled trace (drops everything) — zero-cost for big runs.
+    pub fn disabled() -> Self {
+        Trace::new(0)
+    }
+
+    /// Record an event.
+    pub fn log(&mut self, at: Cycle, what: impl Into<String>) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(TraceEvent { at, what: what.into() });
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Number of events dropped (capacity exceeded or disabled).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Render with cycle → millisecond conversion.
+    pub fn render(&self, core_clock_mhz: u32) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let ms = e.at as f64 / (core_clock_mhz as f64 * 1e3);
+            out.push_str(&format!("[{ms:>10.3} ms] {}\n", e.what));
+        }
+        if self.dropped > 0 {
+            out.push_str(&format!("... ({} earlier events dropped)\n", self.dropped));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_buffer_keeps_latest() {
+        let mut t = Trace::new(2);
+        t.log(1, "a");
+        t.log(2, "b");
+        t.log(3, "c");
+        let got: Vec<&str> = t.events().map(|e| e.what.as_str()).collect();
+        assert_eq!(got, vec!["b", "c"]);
+        assert_eq!(t.dropped(), 1);
+    }
+
+    #[test]
+    fn disabled_trace_drops_all() {
+        let mut t = Trace::disabled();
+        t.log(1, "x");
+        assert_eq!(t.events().count(), 0);
+        assert_eq!(t.dropped(), 1);
+    }
+
+    #[test]
+    fn render_converts_to_ms() {
+        let mut t = Trace::new(4);
+        t.log(500_000, "tick");
+        let s = t.render(500);
+        assert!(s.contains("1.000 ms"), "{s}");
+    }
+}

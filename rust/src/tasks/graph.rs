@@ -1,0 +1,222 @@
+//! Application DAGs and request instances.
+//!
+//! A tenant request targets an *application*; the application expands
+//! into a chain/DAG of Table 1 tasks with dependencies the scheduler must
+//! respect (paper §3.1: "the scheduler checks if dependencies are met
+//! before scheduling the task (e.g., in ResNet-18, conv2_x depends on
+//! conv1_x)").
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+use crate::tasks::spec::TaskId;
+
+/// The four benchmark applications (paper Fig. 3a tenants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AppId {
+    /// ResNet-18 (conv2_x → conv5_x chain).
+    ResNet18,
+    /// MobileNet-v1 (three merged dw+pw groups).
+    MobileNet,
+    /// Camera pipeline (single task).
+    Camera,
+    /// Harris corner detector (single task).
+    Harris,
+}
+
+impl AppId {
+    /// All applications, tenant order of Fig. 3a.
+    pub const ALL: [AppId; 4] = [AppId::ResNet18, AppId::MobileNet, AppId::Camera, AppId::Harris];
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppId::ResNet18 => "ResNet-18",
+            AppId::MobileNet => "MobileNet",
+            AppId::Camera => "Camera pipeline",
+            AppId::Harris => "Harris",
+        }
+    }
+}
+
+impl fmt::Display for AppId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Application task graph: nodes are Table 1 tasks, edges are
+/// dependencies (predecessor indices).
+#[derive(Clone, Debug)]
+pub struct AppGraph {
+    /// Which app this is.
+    pub app: AppId,
+    /// Task nodes in topological order.
+    pub nodes: Vec<TaskId>,
+    /// `deps[i]` = indices of nodes that must complete before node `i`.
+    pub deps: Vec<Vec<usize>>,
+}
+
+impl AppGraph {
+    /// Canonical graph of an application.
+    pub fn of(app: AppId) -> AppGraph {
+        match app {
+            AppId::ResNet18 => AppGraph::chain(
+                app,
+                (2..=5)
+                    .map(|s| TaskId::new(format!("resnet18.conv{s}_x")))
+                    .collect(),
+            ),
+            AppId::MobileNet => AppGraph::chain(
+                app,
+                (2..=4)
+                    .map(|g| TaskId::new(format!("mobilenet.conv_dw_pw_{g}_x")))
+                    .collect(),
+            ),
+            AppId::Camera => AppGraph::chain(app, vec![TaskId::new("camera.pipeline")]),
+            AppId::Harris => AppGraph::chain(app, vec![TaskId::new("harris.corner")]),
+        }
+    }
+
+    /// Linear chain: node i depends on node i-1.
+    pub fn chain(app: AppId, nodes: Vec<TaskId>) -> AppGraph {
+        let deps = (0..nodes.len())
+            .map(|i| if i == 0 { vec![] } else { vec![i - 1] })
+            .collect();
+        AppGraph { app, nodes, deps }
+    }
+
+    /// Validate: deps in range, acyclic by topological-order convention.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.len() != self.deps.len() {
+            return Err(Error::Sched("graph nodes/deps length mismatch".into()));
+        }
+        for (i, preds) in self.deps.iter().enumerate() {
+            for &p in preds {
+                if p >= i {
+                    return Err(Error::Sched(format!(
+                        "graph not topologically ordered: node {i} depends on {p}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of task nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Whether the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+/// Identifier of one task instance within one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskInstanceId {
+    /// Request sequence number (coordinator-global).
+    pub request: u64,
+    /// Node index within the request's app graph.
+    pub node: usize,
+}
+
+impl fmt::Display for TaskInstanceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}#{}", self.request, self.node)
+    }
+}
+
+/// One in-flight application request (a tenant submission).
+#[derive(Clone, Debug)]
+pub struct AppRequest {
+    /// Global sequence number.
+    pub seq: u64,
+    /// Submitting tenant index (0–3 in the cloud scenario).
+    pub tenant: u32,
+    /// Application.
+    pub app: AppId,
+    /// Arrival time in simulation cycles.
+    pub arrival_cycle: u64,
+    /// Completion state per graph node.
+    pub done: Vec<bool>,
+}
+
+impl AppRequest {
+    /// New request with no completed nodes.
+    pub fn new(seq: u64, tenant: u32, app: AppId, arrival_cycle: u64) -> Self {
+        let n = AppGraph::of(app).len();
+        AppRequest { seq, tenant, app, arrival_cycle, done: vec![false; n] }
+    }
+
+    /// Whether every node has completed.
+    pub fn complete(&self) -> bool {
+        self.done.iter().all(|&d| d)
+    }
+
+    /// Nodes whose dependencies are satisfied but are not yet done.
+    pub fn ready_nodes(&self, graph: &AppGraph) -> Vec<usize> {
+        (0..graph.len())
+            .filter(|&i| !self.done[i] && graph.deps[i].iter().all(|&p| self.done[p]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_graph_is_a_4_chain() {
+        let g = AppGraph::of(AppId::ResNet18);
+        g.validate().unwrap();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.deps[0], Vec::<usize>::new());
+        assert_eq!(g.deps[3], vec![2]);
+        assert_eq!(g.nodes[0].0, "resnet18.conv2_x");
+        assert_eq!(g.nodes[3].0, "resnet18.conv5_x");
+    }
+
+    #[test]
+    fn single_task_apps() {
+        for app in [AppId::Camera, AppId::Harris] {
+            let g = AppGraph::of(app);
+            g.validate().unwrap();
+            assert_eq!(g.len(), 1);
+        }
+    }
+
+    #[test]
+    fn ready_nodes_respect_chain_deps() {
+        let g = AppGraph::of(AppId::MobileNet);
+        let mut req = AppRequest::new(0, 1, AppId::MobileNet, 0);
+        assert_eq!(req.ready_nodes(&g), vec![0]);
+        req.done[0] = true;
+        assert_eq!(req.ready_nodes(&g), vec![1]);
+        req.done[1] = true;
+        req.done[2] = true;
+        assert!(req.complete());
+        assert!(req.ready_nodes(&g).is_empty());
+    }
+
+    #[test]
+    fn invalid_graph_rejected() {
+        let g = AppGraph {
+            app: AppId::Camera,
+            nodes: vec![TaskId::new("a"), TaskId::new("b")],
+            deps: vec![vec![1], vec![]],
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn app_names_unique() {
+        let names: Vec<_> = AppId::ALL.iter().map(|a| a.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+}

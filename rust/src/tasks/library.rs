@@ -1,0 +1,232 @@
+//! The Table 1 task library — the paper's benchmark set, verbatim.
+//!
+//! | App        | Task         | Ver | Tpt | Array | GLB |
+//! |------------|--------------|-----|-----|-------|-----|
+//! | ResNet-18  | conv2_x      | a   | 64  | 2     | 7   |
+//! |            |              | b   | 256 | 6     | 7   |
+//! |            | conv3_x      | a   | 64  | 2     | 4   |
+//! |            |              | b   | 256 | 6     | 4   |
+//! |            | conv4_x      | a   | 64  | 2     | 6   |
+//! |            |              | b   | 256 | 6     | 6   |
+//! |            | conv5_x      | a   | 64  | 2     | 20  |
+//! |            |              | b   | 128 | 6     | 20  |
+//! | MobileNet  | conv_dw_pw_2 | a   | 52  | 2     | 4   |
+//! |            |              | b   | 208 | 5     | 4   |
+//! |            | conv_dw_pw_3 | a   | 52  | 2     | 4   |
+//! |            |              | b   | 104 | 3     | 4   |
+//! |            | conv_dw_pw_4 | a   | 52  | 2     | 4   |
+//! |            |              | b   | 104 | 3     | 4   |
+//! | Camera     | pipeline     | a   | 3   | 4     | 4   |
+//! |            |              | b   | 12  | 6     | 14  |
+//! | Harris     | corner       | a   | 1   | 2     | 4   |
+//! |            |              | b   | 2   | 4     | 7   |
+//! |            |              | c   | 4   | 7     | 14  |
+//!
+//! Throughput units: MACs/cycle for the ML tasks, pixels/cycle for the
+//! vision tasks, at the paper's 500 MHz clock.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::tasks::spec::{TaskId, TaskSpec, VariantSpec, WorkUnit};
+use crate::tasks::workload;
+
+/// Immutable library of task specs, keyed by [`TaskId`].
+#[derive(Clone, Debug)]
+pub struct TaskLibrary {
+    tasks: BTreeMap<TaskId, TaskSpec>,
+}
+
+impl TaskLibrary {
+    /// The paper's Table 1, with work quantities from `workload`.
+    pub fn table1() -> TaskLibrary {
+        let mut tasks = BTreeMap::new();
+        let mut insert = |spec: TaskSpec| {
+            tasks.insert(spec.id.clone(), spec);
+        };
+
+        // --- ResNet-18 stages -------------------------------------------
+        let resnet_rows: [(u32, f64, (u32, u32), f64, (u32, u32), u32); 4] = [
+            // (stage, tpt_a, (array_a, glb_a), tpt_b, (array_b, glb_b), _)
+            (2, 64.0, (2, 7), 256.0, (6, 7), 0),
+            (3, 64.0, (2, 4), 256.0, (6, 4), 0),
+            (4, 64.0, (2, 6), 256.0, (6, 6), 0),
+            (5, 64.0, (2, 20), 128.0, (6, 20), 0),
+        ];
+        for (stage, ta, (aa, ga), tb, (ab, gb), _) in resnet_rows {
+            insert(TaskSpec {
+                id: TaskId::new(format!("resnet18.conv{stage}_x")),
+                name: format!("conv{stage}_x"),
+                work: workload::resnet18_stage_macs(stage),
+                unit: WorkUnit::Macs,
+                variants: vec![
+                    VariantSpec::new('a', ta, aa, ga)
+                        .with_artifact(format!("resnet_conv{stage}_a")),
+                    VariantSpec::new('b', tb, ab, gb)
+                        .with_artifact(format!("resnet_conv{stage}_b")),
+                ],
+            });
+        }
+
+        // --- MobileNet merged dw+pw groups ------------------------------
+        let mobile_rows: [(u32, f64, (u32, u32), f64, (u32, u32)); 3] = [
+            (2, 52.0, (2, 4), 208.0, (5, 4)),
+            (3, 52.0, (2, 4), 104.0, (3, 4)),
+            (4, 52.0, (2, 4), 104.0, (3, 4)),
+        ];
+        for (group, ta, (aa, ga), tb, (ab, gb)) in mobile_rows {
+            insert(TaskSpec {
+                id: TaskId::new(format!("mobilenet.conv_dw_pw_{group}_x")),
+                name: format!("conv_dw_pw_{group}_x"),
+                work: workload::mobilenet_group_macs(group),
+                unit: WorkUnit::Macs,
+                variants: vec![
+                    VariantSpec::new('a', ta, aa, ga)
+                        .with_artifact(format!("mobilenet_dw_pw_{group}_a")),
+                    VariantSpec::new('b', tb, ab, gb)
+                        .with_artifact(format!("mobilenet_dw_pw_{group}_b")),
+                ],
+            });
+        }
+
+        // --- Camera pipeline ---------------------------------------------
+        insert(TaskSpec {
+            id: TaskId::new("camera.pipeline"),
+            name: "camera pipeline".into(),
+            work: workload::frame_pixels(),
+            unit: WorkUnit::Pixels,
+            variants: vec![
+                VariantSpec::new('a', 3.0, 4, 4).with_artifact("camera_pipeline_a"),
+                VariantSpec::new('b', 12.0, 6, 14).with_artifact("camera_pipeline_b"),
+            ],
+        });
+
+        // --- Harris corner detector ---------------------------------------
+        insert(TaskSpec {
+            id: TaskId::new("harris.corner"),
+            name: "Harris".into(),
+            work: workload::frame_pixels(),
+            unit: WorkUnit::Pixels,
+            variants: vec![
+                VariantSpec::new('a', 1.0, 2, 4).with_artifact("harris_a"),
+                VariantSpec::new('b', 2.0, 4, 7).with_artifact("harris_b"),
+                VariantSpec::new('c', 4.0, 7, 14).with_artifact("harris_c"),
+            ],
+        });
+
+        TaskLibrary { tasks }
+    }
+
+    /// Task lookup.
+    pub fn get(&self, id: &TaskId) -> Result<&TaskSpec> {
+        self.tasks
+            .get(id)
+            .ok_or_else(|| Error::Sched(format!("unknown task '{id}'")))
+    }
+
+    /// All tasks, sorted by id.
+    pub fn iter(&self) -> impl Iterator<Item = &TaskSpec> {
+        self.tasks.values()
+    }
+
+    /// Task count.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Whether the library is empty.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Insert or replace a spec (tests and ablations build custom sets).
+    pub fn insert(&mut self, spec: TaskSpec) {
+        self.tasks.insert(spec.id.clone(), spec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::spec::VariantId;
+
+    #[test]
+    fn table1_has_nine_tasks_and_nineteen_variants() {
+        let lib = TaskLibrary::table1();
+        assert_eq!(lib.len(), 9);
+        let variants: usize = lib.iter().map(|t| t.variants.len()).sum();
+        assert_eq!(variants, 19);
+    }
+
+    #[test]
+    fn conv2x_row_matches_paper() {
+        let lib = TaskLibrary::table1();
+        let t = lib.get(&TaskId::new("resnet18.conv2_x")).unwrap();
+        let a = t.variant(VariantId('a')).unwrap();
+        let b = t.variant(VariantId('b')).unwrap();
+        assert_eq!(a.throughput, 64.0);
+        assert_eq!(a.demand.array_slices, 2);
+        assert_eq!(a.demand.glb_slices, 7);
+        assert_eq!(b.throughput, 256.0);
+        assert_eq!(b.demand.array_slices, 6);
+        assert_eq!(b.demand.glb_slices, 7);
+    }
+
+    #[test]
+    fn conv5x_b_is_128_not_256() {
+        // The paper's Table 1 lists conv5_x variant b at 128 MACs/cycle
+        // (memory-bound), unlike the other stages' 256.
+        let lib = TaskLibrary::table1();
+        let t = lib.get(&TaskId::new("resnet18.conv5_x")).unwrap();
+        assert_eq!(t.fastest().throughput, 128.0);
+        assert_eq!(t.fastest().demand.glb_slices, 20);
+    }
+
+    #[test]
+    fn harris_has_three_variants() {
+        let lib = TaskLibrary::table1();
+        let t = lib.get(&TaskId::new("harris.corner")).unwrap();
+        assert_eq!(t.variants.len(), 3);
+        assert_eq!(t.fastest().ver, VariantId('c'));
+        assert_eq!(t.fastest().demand.array_slices, 7);
+    }
+
+    #[test]
+    fn all_variants_have_artifacts() {
+        let lib = TaskLibrary::table1();
+        for t in lib.iter() {
+            for v in &t.variants {
+                assert!(v.artifact.is_some(), "{} {} missing artifact", t.id, v.ver);
+            }
+        }
+    }
+
+    #[test]
+    fn exec_cycles_at_paper_clock() {
+        // conv2_x variant a: 462.4M MACs / 64 per cycle ≈ 7.23M cycles
+        // ≈ 14.5 ms at 500 MHz — sanity anchor for the cloud sim.
+        let lib = TaskLibrary::table1();
+        let t = lib.get(&TaskId::new("resnet18.conv2_x")).unwrap();
+        let cycles = t.exec_cycles(t.variant(VariantId('a')).unwrap());
+        assert_eq!(cycles, 7_225_344);
+        let ms = cycles as f64 / 500e6 * 1e3;
+        assert!((ms - 14.45).abs() < 0.01, "{ms}");
+    }
+
+    #[test]
+    fn camera_frame_time() {
+        // camera variant a: 2.07M px / 3 px-per-cycle / 500MHz ≈ 1.38 ms,
+        // comfortably under a 33 ms frame budget.
+        let lib = TaskLibrary::table1();
+        let t = lib.get(&TaskId::new("camera.pipeline")).unwrap();
+        let cycles = t.exec_cycles(t.variant(VariantId('a')).unwrap());
+        let ms = cycles as f64 / 500e6 * 1e3;
+        assert!((ms - 1.382).abs() < 0.01, "{ms}");
+    }
+
+    #[test]
+    fn unknown_task_errors() {
+        let lib = TaskLibrary::table1();
+        assert!(lib.get(&TaskId::new("nope")).is_err());
+    }
+}

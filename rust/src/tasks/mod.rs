@@ -1,0 +1,23 @@
+//! Task model: the benchmark applications of Table 1.
+//!
+//! * [`TaskSpec`] — one schedulable unit (a ResNet stage, a MobileNet
+//!   merged dw+pw stage, the camera pipeline, Harris), with its *work*
+//!   per invocation (MACs or pixels) derived from real layer shapes.
+//! * [`VariantSpec`] — one pre-compiled mapping of a task: throughput
+//!   (units/cycle) + quantized [`crate::abstraction::SliceDemand`] + the
+//!   AOT artifact that computes it functionally.  Table 1 of the paper is
+//!   reproduced verbatim by [`library::TaskLibrary::table1`].
+//! * [`graph`] — application DAGs: a tenant request is an app instance
+//!   whose tasks carry dependencies (conv2_x → conv3_x → …).
+//! * [`workload`] — the MAC/pixel work quantities behind each task,
+//!   computed from the real ResNet-18 / MobileNet-v1 layer shapes at
+//!   224×224 and a 1080p frame for the vision tasks.
+
+pub mod graph;
+pub mod library;
+mod spec;
+pub mod workload;
+
+pub use graph::{AppGraph, AppId, AppRequest, TaskInstanceId};
+pub use library::TaskLibrary;
+pub use spec::{TaskId, TaskSpec, VariantId, VariantSpec, WorkUnit};

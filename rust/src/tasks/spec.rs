@@ -1,0 +1,169 @@
+//! Task and variant descriptors.
+
+use std::fmt;
+
+use crate::abstraction::SliceDemand;
+
+/// Stable identifier of a task (e.g. `resnet18.conv2_x`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub String);
+
+impl TaskId {
+    /// Convenience constructor.
+    pub fn new(s: impl Into<String>) -> Self {
+        TaskId(s.into())
+    }
+}
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Variant letter within a task (Table 1's "Ver." column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VariantId(pub char);
+
+impl fmt::Display for VariantId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Unit in which a task's work and throughput are measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkUnit {
+    /// Multiply-accumulates (ML tasks; Table 1: MACs/cycle).
+    Macs,
+    /// Pixels (vision tasks; Table 1: pixels/cycle).
+    Pixels,
+}
+
+impl WorkUnit {
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkUnit::Macs => "MACs",
+            WorkUnit::Pixels => "pixels",
+        }
+    }
+}
+
+/// One schedulable task.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    /// Identifier.
+    pub id: TaskId,
+    /// Human-readable name (Table 1 "Task" column).
+    pub name: String,
+    /// Work per invocation, in `unit`s.
+    pub work: u64,
+    /// Unit of work / throughput.
+    pub unit: WorkUnit,
+    /// Pre-compiled variants, ordered by ascending throughput.
+    pub variants: Vec<VariantSpec>,
+}
+
+impl TaskSpec {
+    /// Variant lookup.
+    pub fn variant(&self, ver: VariantId) -> Option<&VariantSpec> {
+        self.variants.iter().find(|v| v.ver == ver)
+    }
+
+    /// Highest-throughput variant.
+    pub fn fastest(&self) -> &VariantSpec {
+        self.variants
+            .iter()
+            .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+            .expect("task with no variants")
+    }
+
+    /// Lowest-demand variant (by array slices, then GLB slices).
+    pub fn smallest(&self) -> &VariantSpec {
+        self.variants
+            .iter()
+            .min_by_key(|v| (v.demand.array_slices, v.demand.glb_slices))
+            .expect("task with no variants")
+    }
+
+    /// Execution cycles for one invocation under a variant.
+    pub fn exec_cycles(&self, v: &VariantSpec) -> u64 {
+        debug_assert!(v.throughput > 0.0);
+        (self.work as f64 / v.throughput).ceil() as u64
+    }
+}
+
+/// One pre-compiled mapping of a task (a Table 1 row).
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    /// Variant letter.
+    pub ver: VariantId,
+    /// Throughput in `unit`s per cycle (Table 1 "Tpt.").
+    pub throughput: f64,
+    /// Quantized slice demand (Table 1 "Array slices" / "GLB slices").
+    pub demand: SliceDemand,
+    /// Name of the AOT artifact that computes this variant functionally
+    /// (`artifacts/manifest.json` entry), when one exists.
+    pub artifact: Option<String>,
+}
+
+impl VariantSpec {
+    /// Construct a variant.
+    pub fn new(ver: char, throughput: f64, array_slices: u32, glb_slices: u32) -> Self {
+        VariantSpec {
+            ver: VariantId(ver),
+            throughput,
+            demand: SliceDemand::new(glb_slices, array_slices),
+            artifact: None,
+        }
+    }
+
+    /// Attach the AOT artifact name.
+    pub fn with_artifact(mut self, name: impl Into<String>) -> Self {
+        self.artifact = Some(name.into());
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_task() -> TaskSpec {
+        TaskSpec {
+            id: TaskId::new("demo"),
+            name: "demo".into(),
+            work: 1000,
+            unit: WorkUnit::Macs,
+            variants: vec![
+                VariantSpec::new('a', 10.0, 2, 4),
+                VariantSpec::new('b', 40.0, 6, 4),
+            ],
+        }
+    }
+
+    #[test]
+    fn fastest_and_smallest() {
+        let t = demo_task();
+        assert_eq!(t.fastest().ver, VariantId('b'));
+        assert_eq!(t.smallest().ver, VariantId('a'));
+    }
+
+    #[test]
+    fn exec_cycles_rounds_up() {
+        let t = demo_task();
+        let a = t.variant(VariantId('a')).unwrap();
+        assert_eq!(t.exec_cycles(a), 100);
+        let mut t2 = demo_task();
+        t2.work = 1001;
+        assert_eq!(t2.exec_cycles(a), 101);
+    }
+
+    #[test]
+    fn variant_lookup() {
+        let t = demo_task();
+        assert!(t.variant(VariantId('a')).is_some());
+        assert!(t.variant(VariantId('z')).is_none());
+    }
+}

@@ -1,0 +1,115 @@
+//! Work quantities behind each Table 1 task, from real layer shapes.
+//!
+//! Execution time in the simulator is `work / throughput` cycles, so the
+//! work amounts must be physically grounded: ResNet-18 and MobileNet-v1
+//! MAC counts are computed from their published layer shapes at 224×224
+//! input, and the vision tasks process a full 1080p frame per invocation.
+
+/// MACs of a standard conv layer: out_h·out_w·c_out·(kh·kw·c_in).
+pub fn conv_macs(out_h: u64, out_w: u64, c_in: u64, c_out: u64, kh: u64, kw: u64) -> u64 {
+    out_h * out_w * c_out * (kh * kw * c_in)
+}
+
+/// MACs of a depthwise conv layer: out_h·out_w·c·(kh·kw).
+pub fn dw_macs(out_h: u64, out_w: u64, c: u64, kh: u64, kw: u64) -> u64 {
+    out_h * out_w * c * kh * kw
+}
+
+/// ResNet-18 stage MACs (two basic blocks; stages 3–5 downsample with a
+/// strided first conv and a 1×1 projection).  He et al. 2016, Table 1.
+pub fn resnet18_stage_macs(stage: u32) -> u64 {
+    match stage {
+        // conv2_x: 56×56, 64ch, two blocks of two 3×3 convs, no projection.
+        2 => 4 * conv_macs(56, 56, 64, 64, 3, 3),
+        // conv3_x: 28×28, 64→128 with stride-2 entry + 1×1 projection.
+        3 => stage_macs(28, 64, 128),
+        // conv4_x: 14×14, 128→256.
+        4 => stage_macs(14, 128, 256),
+        // conv5_x: 7×7, 256→512.
+        5 => stage_macs(7, 256, 512),
+        _ => panic!("ResNet-18 has stages 2..=5, got {stage}"),
+    }
+}
+
+fn stage_macs(hw: u64, c_in: u64, c_out: u64) -> u64 {
+    // block 1: conv3x3 stride 2 (c_in→c_out), conv3x3 (c_out→c_out),
+    //          1×1 stride-2 projection (c_in→c_out)
+    // block 2: two conv3x3 (c_out→c_out)
+    conv_macs(hw, hw, c_in, c_out, 3, 3)
+        + conv_macs(hw, hw, c_out, c_out, 3, 3)
+        + conv_macs(hw, hw, c_in, c_out, 1, 1)
+        + 2 * conv_macs(hw, hw, c_out, c_out, 3, 3)
+}
+
+/// MobileNet-v1 merged dw+pw task MACs (Howard et al. 2017, Table 1).
+///
+/// Table 1's `conv_dw_pw_N_x` groups the depthwise+pointwise pairs that
+/// operate at one spatial resolution: group 2 = the two pairs at 56²
+/// (64→128, 128→128), group 3 = the two pairs at 28² (128→256, 256→256),
+/// group 4 = the two pairs at 14² (256→512, 512→512).
+pub fn mobilenet_group_macs(group: u32) -> u64 {
+    let (hw, c_in, c_out) = match group {
+        2 => (56, 64, 128),
+        3 => (28, 128, 256),
+        4 => (14, 256, 512),
+        _ => panic!("MobileNet groups are 2..=4, got {group}"),
+    };
+    // pair 1: dw at entry resolution (stride-2 from previous stage has
+    // already happened), pw c_in→c_out
+    let pair1 = dw_macs(hw, hw, c_in, 3, 3) + conv_macs(hw, hw, c_in, c_out, 1, 1);
+    // pair 2: dw + pw at c_out→c_out
+    let pair2 = dw_macs(hw, hw, c_out, 3, 3) + conv_macs(hw, hw, c_out, c_out, 1, 1);
+    pair1 + pair2
+}
+
+/// Pixels per 1080p frame — the camera pipeline and Harris work unit.
+pub fn frame_pixels() -> u64 {
+    1920 * 1080
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_macs_formula() {
+        // 56×56 out, 64→64, 3×3: the classic 115.6M-MAC ResNet conv.
+        assert_eq!(conv_macs(56, 56, 64, 64, 3, 3), 115_605_504);
+    }
+
+    #[test]
+    fn resnet_stage_magnitudes() {
+        // conv2_x = 4 convs of 115.6M
+        assert_eq!(resnet18_stage_macs(2), 462_422_016);
+        // stages 3–5 have identical MAC structure at halved hw / doubled ch
+        let s3 = resnet18_stage_macs(3);
+        let s4 = resnet18_stage_macs(4);
+        let s5 = resnet18_stage_macs(5);
+        assert_eq!(s3, s4);
+        assert_eq!(s4, s5);
+        // block1(57.8M + 115.6M + 6.4M) + block2(231.2M) ≈ 411M
+        assert_eq!(s3, 411_041_792);
+    }
+
+    #[test]
+    #[should_panic]
+    fn resnet_stage_bounds() {
+        resnet18_stage_macs(6);
+    }
+
+    #[test]
+    fn mobilenet_group_magnitudes() {
+        let g2 = mobilenet_group_macs(2);
+        // dw(56²·64·9)=1.8M + pw(56²·64·128)=25.7M + dw(56²·128·9)=3.6M
+        // + pw(56²·128·128)=51.4M ≈ 82.5M
+        assert_eq!(g2, 82_489_344);
+        // deeper groups shrink slightly (halved hw², doubled ch)
+        assert!(mobilenet_group_macs(3) < g2);
+        assert!(mobilenet_group_macs(4) < mobilenet_group_macs(3));
+    }
+
+    #[test]
+    fn frame_is_1080p() {
+        assert_eq!(frame_pixels(), 2_073_600);
+    }
+}

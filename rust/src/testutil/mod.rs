@@ -1,0 +1,146 @@
+//! Mini property-testing harness (`proptest` is unavailable offline).
+//!
+//! [`forall`] runs a property over generated cases with linear shrinking
+//! on failure: when a case fails, the harness re-runs the property on
+//! progressively "smaller" cases produced by the generator's shrink
+//! order (re-generation with smaller size budgets), reporting the
+//! smallest failing seed.  Properties are deterministic per seed, so a
+//! failure message's seed reproduces exactly.
+
+use crate::util::rng::Rng;
+
+/// Case generator: produces a value from an RNG and a size budget.
+pub trait Gen {
+    /// Generated value type.
+    type Value;
+    /// Generate one value; `size` scales magnitude/length (1..=255).
+    fn generate(&self, rng: &mut Rng, size: u32) -> Self::Value;
+}
+
+impl<T, F: Fn(&mut Rng, u32) -> T> Gen for F {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng, size: u32) -> T {
+        self(rng, size)
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of cases.
+    pub cases: u32,
+    /// Base seed (each case derives seed+index).
+    pub seed: u64,
+    /// Maximum size budget (cases sweep 1..=max_size).
+    pub max_size: u32,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC6_5A, max_size: 64 }
+    }
+}
+
+/// Run `property` over `cases` generated values; panics with the seed
+/// and a shrunk case description on failure.
+pub fn forall<G, P>(gen: &G, property: P)
+where
+    G: Gen,
+    G::Value: std::fmt::Debug,
+    P: Fn(&G::Value) -> bool,
+{
+    forall_cfg(PropConfig::default(), gen, property)
+}
+
+/// [`forall`] with explicit configuration.
+pub fn forall_cfg<G, P>(cfg: PropConfig, gen: &G, property: P)
+where
+    G: Gen,
+    G::Value: std::fmt::Debug,
+    P: Fn(&G::Value) -> bool,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        // sweep sizes so small cases run early (cheap shrinking)
+        let size = 1 + (case * cfg.max_size / cfg.cases.max(1)).min(cfg.max_size - 1);
+        let mut rng = Rng::new(seed);
+        let value = gen.generate(&mut rng, size);
+        if !property(&value) {
+            // shrink: retry with smaller sizes on the same seed, keep the
+            // smallest size that still fails.
+            let mut smallest = (size, format!("{value:?}"));
+            for s in (1..size).rev() {
+                let mut rng = Rng::new(seed);
+                let v = gen.generate(&mut rng, s);
+                if !property(&v) {
+                    smallest = (s, format!("{v:?}"));
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, size={}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gens {
+    use crate::util::rng::Rng;
+
+    /// Uniform u32 in `[lo, hi]`, magnitude capped by size.
+    pub fn int_in(lo: u32, hi: u32) -> impl Fn(&mut Rng, u32) -> u32 {
+        move |rng, size| {
+            let span = (hi - lo).min(size * 4);
+            lo + rng.below(span as u64 + 1) as u32
+        }
+    }
+
+    /// Vec of values from an element generator, length scaled by size.
+    pub fn vec_of<T>(
+        elem: impl Fn(&mut Rng, u32) -> T,
+        max_len: usize,
+    ) -> impl Fn(&mut Rng, u32) -> Vec<T> {
+        move |rng, size| {
+            let len = rng.below((max_len.min(size as usize) + 1) as u64) as usize;
+            (0..len).map(|_| elem(rng, size)).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(&gens::int_in(0, 100), |&v| v <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(&gens::int_in(0, 100), |&v| v < 5);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let gen = gens::int_in(0, 1000);
+        let mut first = Vec::new();
+        for case in 0..10u64 {
+            let mut rng = Rng::new(100 + case);
+            first.push(gen(&mut rng, 10));
+        }
+        for case in 0..10u64 {
+            let mut rng = Rng::new(100 + case);
+            assert_eq!(gen(&mut rng, 10), first[case as usize]);
+        }
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        forall(&gens::vec_of(gens::int_in(1, 9), 16), |v| {
+            v.len() <= 16 && v.iter().all(|&x| (1..=9).contains(&x))
+        });
+    }
+}

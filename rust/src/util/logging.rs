@@ -1,0 +1,83 @@
+//! Tiny `log` facade backend writing to stderr.
+//!
+//! The coordinator uses the standard `log` macros throughout; binaries call
+//! [`init`] once.  Level comes from `CGRA_MTE_LOG` (error|warn|info|debug|
+//! trace), defaulting to `info`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+static INITIALIZED: AtomicBool = AtomicBool::new(false);
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name (case-insensitive); `None` if unrecognized.
+pub fn parse_level(name: &str) -> Option<LevelFilter> {
+    match name.to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" | "warning" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Install the stderr logger (idempotent).
+pub fn init() {
+    if INITIALIZED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = std::env::var("CGRA_MTE_LOG")
+        .ok()
+        .and_then(|v| parse_level(&v))
+        .unwrap_or(LevelFilter::Info);
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_known_names() {
+        assert_eq!(parse_level("info"), Some(LevelFilter::Info));
+        assert_eq!(parse_level("WARN"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("warning"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("off"), Some(LevelFilter::Off));
+        assert_eq!(parse_level("nope"), None);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init(); // second call must not panic
+    }
+}

@@ -1,0 +1,44 @@
+//! Foundation utilities: PRNG, statistics, JSON, logging.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (`rand`,
+//! `serde_json`, `criterion`, `proptest`) are unavailable.  These modules
+//! provide the small, well-tested subset this project needs.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: u64, b: u64) -> u64 {
+    div_ceil(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_exact_and_ragged() {
+        assert_eq!(div_ceil(10, 5), 2);
+        assert_eq!(div_ceil(11, 5), 3);
+        assert_eq!(div_ceil(0, 5), 0);
+        assert_eq!(div_ceil(1, 1), 1);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(7, 4), 8);
+        assert_eq!(round_up(8, 4), 8);
+        assert_eq!(round_up(0, 4), 0);
+    }
+}

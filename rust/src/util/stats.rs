@@ -1,0 +1,247 @@
+//! Summary statistics and histograms for metrics and the bench harness.
+
+/// Streaming summary of a sequence of f64 samples.
+///
+/// Keeps all samples (experiments here are at most a few hundred thousand
+/// points) so exact percentiles are available; also maintains running sum
+/// for O(1) mean.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sum: f64,
+    sorted: bool,
+}
+
+impl Summary {
+    /// Empty summary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from an iterator.
+    pub fn from_iter(values: impl IntoIterator<Item = f64>) -> Self {
+        let mut s = Self::new();
+        for v in values {
+            s.add(v);
+        }
+        s
+    }
+
+    /// Record one sample.
+    pub fn add(&mut self, v: f64) {
+        debug_assert!(v.is_finite(), "non-finite sample {v}");
+        self.samples.push(v);
+        self.sum += v;
+        self.sorted = false;
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Whether no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Arithmetic mean (0 for an empty summary).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum / self.samples.len() as f64
+        }
+    }
+
+    /// Sum of all samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Population standard deviation.
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|v| (v - m) * (v - m))
+            .sum::<f64>()
+            / self.samples.len() as f64;
+        var.sqrt()
+    }
+
+    fn sorted_samples(&mut self) -> &[f64] {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+            self.sorted = true;
+        }
+        &self.samples
+    }
+
+    /// Exact percentile in `[0, 100]` by linear interpolation.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile {p}");
+        let s = self.sorted_samples();
+        if s.is_empty() {
+            return 0.0;
+        }
+        if s.len() == 1 {
+            return s[0];
+        }
+        let rank = p / 100.0 * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        s[lo] + (s[hi] - s[lo]) * frac
+    }
+
+    /// Median (p50).
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Minimum sample.
+    pub fn min(&mut self) -> f64 {
+        self.sorted_samples().first().copied().unwrap_or(0.0)
+    }
+
+    /// Maximum sample.
+    pub fn max(&mut self) -> f64 {
+        self.sorted_samples().last().copied().unwrap_or(0.0)
+    }
+
+    /// All samples (insertion order not preserved after percentile calls).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Fixed-width histogram over `[lo, hi)` with overflow/underflow buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    /// `nbuckets` equal-width buckets spanning `[lo, hi)`.
+    pub fn new(lo: f64, hi: f64, nbuckets: usize) -> Self {
+        assert!(hi > lo && nbuckets > 0);
+        Histogram { lo, hi, buckets: vec![0; nbuckets], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    /// Record one value.
+    pub fn add(&mut self, v: f64) {
+        self.count += 1;
+        if v < self.lo {
+            self.underflow += 1;
+        } else if v >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((v - self.lo) / (self.hi - self.lo) * self.buckets.len() as f64) as usize;
+            let idx = idx.min(self.buckets.len() - 1);
+            self.buckets[idx] += 1;
+        }
+    }
+
+    /// Total recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Bucket counts (excluding under/overflow).
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Values below `lo` / at-or-above `hi`.
+    pub fn outliers(&self) -> (u64, u64) {
+        (self.underflow, self.overflow)
+    }
+
+    /// Render a compact ASCII sparkline (for trace dumps / bench output).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.buckets.iter().copied().max().unwrap_or(0);
+        if max == 0 {
+            return "▁".repeat(self.buckets.len());
+        }
+        self.buckets
+            .iter()
+            .map(|&c| GLYPHS[(c * (GLYPHS.len() as u64 - 1) / max) as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_mean_and_stddev() {
+        let s = Summary::from_iter([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::from_iter((1..=100).map(|v| v as f64));
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-12);
+        assert!((s.percentile(99.0) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_empty_is_safe() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.median(), 0.0);
+        assert_eq!(s.stddev(), 0.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let mut s = Summary::from_iter([3.5]);
+        assert_eq!(s.mean(), 3.5);
+        assert_eq!(s.median(), 3.5);
+        assert_eq!(s.min(), 3.5);
+        assert_eq!(s.max(), 3.5);
+    }
+
+    #[test]
+    fn histogram_bucketing() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert!(h.buckets().iter().all(|&c| c == 1));
+        h.add(-1.0);
+        h.add(99.0);
+        assert_eq!(h.outliers(), (1, 1));
+        assert_eq!(h.count(), 12);
+    }
+
+    #[test]
+    fn histogram_sparkline_shape() {
+        let mut h = Histogram::new(0.0, 4.0, 4);
+        for _ in 0..8 {
+            h.add(0.5);
+        }
+        h.add(2.5);
+        let line = h.sparkline();
+        assert_eq!(line.chars().count(), 4);
+        assert!(line.starts_with('█'));
+    }
+}

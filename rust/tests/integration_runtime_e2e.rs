@@ -1,0 +1,90 @@
+//! End-to-end runtime integration: every artifact executes through the
+//! PJRT CPU client and matches its Python-produced golden checksum; the
+//! live coordinator serves a mixed batch with real compute.
+//!
+//! All tests skip silently when `make artifacts` has not been run.
+
+use std::path::{Path, PathBuf};
+
+use cgra_mte::config::presets;
+use cgra_mte::coordinator::{Leader, TenantId};
+use cgra_mte::runtime::{Manifest, RuntimeClient};
+use cgra_mte::tasks::{AppId, TaskLibrary};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn every_artifact_golden_verifies() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = RuntimeClient::from_dir(&dir).unwrap();
+    let names: Vec<String> = rt.manifest().iter().map(|a| a.name.clone()).collect();
+    assert!(names.len() >= 20, "{}", names.len());
+    for name in &names {
+        let out = rt.verify_golden(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(out.values.iter().all(|v| v.is_finite()), "{name}: non-finite output");
+    }
+    assert_eq!(rt.compiled_count(), names.len());
+}
+
+#[test]
+fn manifest_covers_every_table1_variant() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    manifest.verify_files().unwrap();
+    for t in TaskLibrary::table1().iter() {
+        for v in &t.variants {
+            let name = v.artifact.as_ref().expect("artifact name");
+            let spec = manifest.get(name).unwrap_or_else(|_| panic!("missing {name}"));
+            assert_eq!(spec.task, t.id.0, "{name} task mismatch");
+            assert_eq!(spec.variant, v.ver.0.to_string(), "{name} variant mismatch");
+        }
+    }
+}
+
+#[test]
+fn executions_are_reproducible() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = RuntimeClient::from_dir(&dir).unwrap();
+    for name in ["camera_pipeline_a", "mobilenet_dw_pw_3_b"] {
+        let a = rt.execute_golden(name).unwrap();
+        let b = rt.execute_golden(name).unwrap();
+        assert_eq!(a.values, b.values, "{name} not deterministic");
+    }
+}
+
+#[test]
+fn leader_serves_all_four_apps_with_real_compute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = presets::paper_default();
+    cfg.artifacts_dir = dir.display().to_string();
+    let mut leader = Leader::new(&cfg).unwrap();
+
+    let ms = 500_000u64;
+    let subs: Vec<(TenantId, AppId, u64)> = (0..8)
+        .map(|i| (TenantId((i % 4) as u32), AppId::ALL[(i % 4) as usize], i * ms))
+        .collect();
+    let stats = leader.serve(&subs).unwrap();
+
+    assert_eq!(stats.outcomes.len(), 8);
+    // ResNet expands to 4 tasks, MobileNet to 3, camera/harris to 1:
+    // 2 requests each ⇒ 2*(4+3+1+1) = 18 launches
+    assert_eq!(stats.launches, 18);
+    assert!(stats.total_compute_us > 0.0);
+    for outcome in &stats.outcomes {
+        assert!(outcome.ntat >= 1.0);
+        assert!(outcome.compute_us > 0.0);
+        assert!(outcome.final_output_sum.is_finite());
+    }
+    // machine fully drained
+    assert_eq!(leader.scheduler().regions().active_count(), 0);
+}
+
+#[test]
+fn leader_rejects_missing_artifacts_dir() {
+    let mut cfg = presets::paper_default();
+    cfg.artifacts_dir = "/nonexistent/artifacts".into();
+    assert!(Leader::new(&cfg).is_err());
+}

@@ -1,0 +1,171 @@
+//! Property tests on the region allocator: under arbitrary interleaved
+//! allocate/release sequences, the slice maps must conserve resources,
+//! regions must never overlap, and every mechanism must respect its own
+//! structural contract.
+
+use cgra_mte::abstraction::SliceDemand;
+use cgra_mte::config::{ArchConfig, RegionPolicyKind, SchedulerConfig};
+use cgra_mte::regions::{AllocOutcome, ExecutionRegion, RegionManager};
+use cgra_mte::testutil::{forall_cfg, PropConfig};
+use cgra_mte::util::rng::Rng;
+
+/// A random op sequence: (glb, array, release-probability) triples.
+fn op_seq(rng: &mut Rng, size: u32) -> Vec<(u32, u32, bool)> {
+    let len = 4 + rng.below(size as u64 * 2 + 1) as usize;
+    (0..len)
+        .map(|_| {
+            (
+                rng.range_inclusive(0, 24) as u32,
+                rng.range_inclusive(1, 8) as u32,
+                rng.chance(0.4),
+            )
+        })
+        .collect()
+}
+
+fn no_overlaps(regions: &[ExecutionRegion]) -> bool {
+    for (i, a) in regions.iter().enumerate() {
+        for b in regions.iter().skip(i + 1) {
+            for ra in &a.glb {
+                for rb in &b.glb {
+                    if ra.overlaps(rb) {
+                        return false;
+                    }
+                }
+            }
+            for ra in &a.array {
+                for rb in &b.array {
+                    if ra.overlaps(rb) {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+    true
+}
+
+fn check_policy(policy: RegionPolicyKind) {
+    let cfg = PropConfig { cases: 48, seed: 0xA110C ^ policy as u64, max_size: 24 };
+    forall_cfg(cfg, &op_seq, |ops| {
+        let arch = ArchConfig::default();
+        let sched = SchedulerConfig { region_policy: policy, ..SchedulerConfig::default() };
+        let mut mgr = RegionManager::new(&arch, &sched);
+        let mut live: Vec<ExecutionRegion> = Vec::new();
+        let mut rng = Rng::new(ops.len() as u64);
+
+        for &(glb, array, release) in ops {
+            if release && !live.is_empty() {
+                let idx = rng.below(live.len() as u64) as usize;
+                let region = live.swap_remove(idx);
+                if mgr.release(region.id).is_err() {
+                    return false;
+                }
+            } else {
+                let demand = SliceDemand::new(glb, array);
+                match mgr.try_allocate(&demand) {
+                    AllocOutcome::Allocated(r) => {
+                        // structural contract: an accepted demand is
+                        // always covered (mechanisms may over-allocate,
+                        // never under-allocate).
+                        let fp = r.footprint();
+                        if !demand.fits_within(&fp) {
+                            return false;
+                        }
+                        match policy {
+                            RegionPolicyKind::FlexibleShape => {
+                                // exact allocation, contiguous
+                                if fp != demand || !r.is_contiguous() {
+                                    return false;
+                                }
+                            }
+                            RegionPolicyKind::VariableSize => {
+                                if !r.is_contiguous() {
+                                    return false;
+                                }
+                            }
+                            _ => {}
+                        }
+                        live.push(r);
+                    }
+                    AllocOutcome::NoFit | AllocOutcome::NeverFits => {}
+                }
+            }
+            // invariants after every op
+            if !no_overlaps(&live) {
+                return false;
+            }
+            let busy: u32 = live.iter().map(|r| r.glb_slices()).sum();
+            let busy_a: u32 = live.iter().map(|r| r.array_slices()).sum();
+            let (ug, ua) = mgr.utilization();
+            if (ug * 32.0).round() as u32 != busy || (ua * 8.0).round() as u32 != busy_a {
+                return false; // conservation violated
+            }
+            let (fg, fa) = mgr.fragmentation();
+            if !(0.0..=1.0).contains(&fg) || !(0.0..=1.0).contains(&fa) {
+                return false;
+            }
+        }
+        // full teardown restores the idle machine
+        for region in live.drain(..) {
+            if mgr.release(region.id).is_err() {
+                return false;
+            }
+        }
+        let (ug, ua) = mgr.utilization();
+        ug == 0.0 && ua == 0.0 && mgr.idle()
+    });
+}
+
+#[test]
+fn allocator_invariants_baseline() {
+    check_policy(RegionPolicyKind::Baseline);
+}
+
+#[test]
+fn allocator_invariants_fixed() {
+    check_policy(RegionPolicyKind::FixedSize);
+}
+
+#[test]
+fn allocator_invariants_variable() {
+    check_policy(RegionPolicyKind::VariableSize);
+}
+
+#[test]
+fn allocator_invariants_flexible() {
+    check_policy(RegionPolicyKind::FlexibleShape);
+}
+
+#[test]
+fn allocation_is_all_or_nothing_under_failure() {
+    // when try_allocate returns NoFit, the maps must be untouched.
+    forall_cfg(
+        PropConfig { cases: 64, seed: 77, max_size: 32 },
+        &op_seq,
+        |ops| {
+            let arch = ArchConfig::default();
+            let sched = SchedulerConfig {
+                region_policy: RegionPolicyKind::FlexibleShape,
+                ..SchedulerConfig::default()
+            };
+            let mut mgr = RegionManager::new(&arch, &sched);
+            // fill the machine almost completely
+            let hog = match mgr.try_allocate(&SliceDemand::new(30, 7)) {
+                AllocOutcome::Allocated(r) => r,
+                _ => return false,
+            };
+            let (ug0, ua0) = mgr.utilization();
+            for &(glb, array, _) in ops {
+                if glb > 2 || array > 1 {
+                    let _ = mgr.try_allocate(&SliceDemand::new(glb.max(3), array.max(2)));
+                    let (ug, ua) = mgr.utilization();
+                    if (ug, ua) != (ug0, ua0) && mgr.active_count() == 1 {
+                        return false;
+                    }
+                }
+            }
+            mgr.release(hog.id).is_ok()
+        },
+    );
+}

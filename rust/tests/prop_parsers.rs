@@ -1,0 +1,132 @@
+//! Fuzz-ish property tests for the hand-rolled parsers (JSON + TOML):
+//! they must never panic on arbitrary input, and must round-trip the
+//! documents the system actually produces.
+
+use cgra_mte::config::{Config, TomlValue};
+use cgra_mte::testutil::{forall_cfg, PropConfig};
+use cgra_mte::util::json::Json;
+use cgra_mte::util::rng::Rng;
+
+/// Random byte soup biased toward structural characters.
+fn soup(rng: &mut Rng, size: u32) -> String {
+    const ALPHABET: &[u8] = br#"{}[]",:0123456789.eE+-truefalsn _ab\"#;
+    let len = rng.below(size as u64 * 8 + 1) as usize;
+    (0..len)
+        .map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize] as char)
+        .collect()
+}
+
+/// Random *valid* JSON document generator (bounded depth).
+fn valid_json(rng: &mut Rng, depth: u32) -> String {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => "null".into(),
+        1 => if rng.chance(0.5) { "true" } else { "false" }.into(),
+        2 => format!("{}", rng.uniform(-1e6, 1e6)),
+        3 => format!("\"s{}\"", rng.below(1000)),
+        4 => {
+            let n = rng.below(4);
+            let items: Vec<String> = (0..n).map(|_| valid_json(rng, depth - 1)).collect();
+            format!("[{}]", items.join(","))
+        }
+        _ => {
+            let n = rng.below(4);
+            let items: Vec<String> = (0..n)
+                .map(|i| format!("\"k{i}\":{}", valid_json(rng, depth - 1)))
+                .collect();
+            format!("{{{}}}", items.join(","))
+        }
+    }
+}
+
+#[test]
+fn json_never_panics_on_soup() {
+    forall_cfg(
+        PropConfig { cases: 300, seed: 0xF00D, max_size: 32 },
+        &soup,
+        |text| {
+            // must return Ok or Err, never panic
+            let _ = Json::parse(text);
+            true
+        },
+    );
+}
+
+#[test]
+fn json_accepts_and_round_trips_valid_documents() {
+    forall_cfg(
+        PropConfig { cases: 200, seed: 0xBEEF, max_size: 8 },
+        &|rng: &mut Rng, _| valid_json(rng, 4),
+        |doc| {
+            let Ok(v) = Json::parse(doc) else { return false };
+            // Display output must re-parse to the same value
+            match Json::parse(&v.to_string()) {
+                Ok(v2) => v == v2,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn toml_never_panics_on_soup() {
+    forall_cfg(
+        PropConfig { cases: 300, seed: 0x70D1, max_size: 32 },
+        &|rng: &mut Rng, size: u32| {
+            // line-structured soup
+            let lines = rng.below(size as u64 / 4 + 2);
+            (0..lines)
+                .map(|_| soup(rng, 8))
+                .collect::<Vec<_>>()
+                .join("\n")
+        },
+        |text| {
+            let _ = TomlValue::parse(text);
+            true
+        },
+    );
+}
+
+#[test]
+fn config_parser_never_panics_on_toml_soup() {
+    forall_cfg(
+        PropConfig { cases: 150, seed: 0xC0FF, max_size: 24 },
+        &|rng: &mut Rng, _| {
+            // plausible-looking config fragments with random values
+            let mut doc = String::new();
+            if rng.chance(0.8) {
+                doc.push_str("[arch]\n");
+                doc.push_str(&format!("cols = {}\n", rng.below(100)));
+                doc.push_str(&format!("glb_banks = {}\n", rng.below(100)));
+                doc.push_str(&format!("slice_cols = {}\n", rng.below(20)));
+            }
+            if rng.chance(0.5) {
+                doc.push_str("[scheduler]\n");
+                doc.push_str(&format!("unit_glb_slices = {}\n", rng.below(40)));
+            }
+            if rng.chance(0.5) {
+                doc.push_str("[workload]\nkind = \"cloud\"\n");
+                doc.push_str(&format!("duration_ms = {}\n", rng.below(10_000)));
+            }
+            doc
+        },
+        |doc| {
+            // parse either succeeds with a valid config or errors cleanly
+            match Config::from_toml_text(doc) {
+                Ok(cfg) => cfg.validate().is_ok(),
+                Err(_) => true,
+            }
+        },
+    );
+}
+
+#[test]
+fn real_manifest_survives_json_parser() {
+    // the actual build product, when present
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if let Ok(text) = std::fs::read_to_string(path) {
+        let v = Json::parse(&text).expect("manifest parses");
+        assert!(v.get("artifacts").is_some());
+        let shown = v.to_string();
+        assert_eq!(Json::parse(&shown).expect("round trip"), v);
+    }
+}

@@ -1,0 +1,174 @@
+//! Property tests on the scheduler + simulation: arbitrary workloads
+//! must always drain, conserve resources, and produce sane metrics
+//! under every mechanism.
+
+use cgra_mte::config::{presets, RegionPolicyKind, WorkloadConfig};
+use cgra_mte::dpr::DprMode;
+use cgra_mte::scheduler::{RequestQueue, Scheduler};
+use cgra_mte::sim::{run_cloud, run_edge};
+use cgra_mte::tasks::{AppId, AppRequest, TaskLibrary};
+use cgra_mte::testutil::{forall_cfg, PropConfig};
+use cgra_mte::util::rng::Rng;
+
+/// Random burst: (tenant, app index, arrival offset in ms).
+fn burst(rng: &mut Rng, size: u32) -> Vec<(u32, usize, u64)> {
+    let len = 1 + rng.below(size as u64 + 1) as usize;
+    (0..len)
+        .map(|_| {
+            (
+                rng.below(4) as u32,
+                rng.below(4) as usize,
+                rng.below(50),
+            )
+        })
+        .collect()
+}
+
+/// Drive a scheduler manually over a random burst; every request must
+/// finish, every region must be released, NTAT-style accounting must be
+/// non-negative.
+fn drain_burst(policy: RegionPolicyKind, burst: &[(u32, usize, u64)]) -> bool {
+    let cfg = presets::cloud_scenario(policy);
+    let mut sched = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+    sched.preload_all();
+    let mut queue = RequestQueue::new();
+
+    // submit everything up front (worst-case contention)
+    for (seq, &(tenant, app, at_ms)) in burst.iter().enumerate() {
+        let arrival = at_ms * 500_000;
+        queue.submit(AppRequest::new(seq as u64, tenant, AppId::ALL[app], arrival));
+    }
+
+    // event loop: launch, complete earliest, repeat
+    let mut now = 0u64;
+    let mut running: Vec<(u64, cgra_mte::regions::RegionId)> = Vec::new();
+    let mut safety = 0u32;
+    loop {
+        safety += 1;
+        if safety > 100_000 {
+            return false; // livelock
+        }
+        for launch in sched.schedule(&mut queue, now) {
+            if launch.finish < now {
+                return false;
+            }
+            running.push((launch.finish, launch.region));
+        }
+        if running.is_empty() {
+            break;
+        }
+        running.sort_by_key(|&(t, _)| std::cmp::Reverse(t));
+        let (t, region) = running.pop().expect("non-empty");
+        now = t;
+        let inst = match sched.complete(region) {
+            Ok(i) => i,
+            Err(_) => return false,
+        };
+        if queue.mark_complete(inst, now).is_err() {
+            return false;
+        }
+    }
+    queue.open_requests() == 0
+        && sched.regions().active_count() == 0
+        && sched.running_count() == 0
+}
+
+#[test]
+fn any_burst_drains_under_every_mechanism() {
+    for policy in RegionPolicyKind::ALL {
+        forall_cfg(
+            PropConfig { cases: 24, seed: 0x5EED ^ policy as u64, max_size: 20 },
+            &burst,
+            |b| drain_burst(policy, b),
+        );
+    }
+}
+
+#[test]
+fn cloud_sim_drains_across_seeds_and_loads() {
+    forall_cfg(
+        PropConfig { cases: 12, seed: 99, max_size: 16 },
+        &|rng: &mut Rng, size: u32| {
+            (
+                rng.next_u64(),
+                20.0 + rng.uniform(0.0, 80.0),
+                200.0 + size as f64 * 50.0,
+            )
+        },
+        |&(seed, base_rate, duration)| {
+            for policy in [RegionPolicyKind::Baseline, RegionPolicyKind::FlexibleShape] {
+                let mut cfg = presets::cloud_scenario(policy);
+                if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+                    c.seed = seed;
+                    c.duration_ms = duration;
+                    c.mean_interarrival_ms =
+                        [base_rate * 1.5, base_rate, base_rate, base_rate * 1.2];
+                }
+                let Ok(report) = run_cloud(&cfg) else { return false };
+                if report.submitted != report.completed {
+                    return false;
+                }
+                // NTAT ≥ 1 for every request by construction
+                if report.ntat.records().iter().any(|r| r.ntat() < 1.0 - 1e-9) {
+                    return false;
+                }
+                // utilizations are fractions
+                if !(0.0..=1.0).contains(&report.glb_utilization)
+                    || !(0.0..=1.0).contains(&report.array_utilization)
+                {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn edge_sim_records_every_frame_across_seeds() {
+    forall_cfg(
+        PropConfig { cases: 10, seed: 4242, max_size: 12 },
+        &|rng: &mut Rng, size: u32| (rng.next_u64(), 60 + size * 10),
+        |&(seed, frames)| {
+            for policy in [RegionPolicyKind::Baseline, RegionPolicyKind::FlexibleShape] {
+                let mut cfg = presets::edge_scenario(policy);
+                if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+                    e.seed = seed;
+                    e.frames = frames;
+                }
+                let Ok(report) = run_edge(&cfg) else { return false };
+                if report.latency.len() as u32 != frames {
+                    return false;
+                }
+                if report.latency.mean_total() <= 0.0 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn simulation_is_deterministic_per_seed() {
+    forall_cfg(
+        PropConfig { cases: 6, seed: 31337, max_size: 8 },
+        &|rng: &mut Rng, _| rng.next_u64(),
+        |&seed| {
+            let mk = || {
+                let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+                if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+                    c.seed = seed;
+                    c.duration_ms = 400.0;
+                }
+                run_cloud(&cfg).expect("runs")
+            };
+            let a = mk();
+            let b = mk();
+            a.submitted == b.submitted
+                && a.launches == b.launches
+                && a.makespan_cycles == b.makespan_cycles
+                && (a.mean_ntat_across_apps() - b.mean_ntat_across_apps()).abs() < 1e-12
+        },
+    );
+}
