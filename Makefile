@@ -1,0 +1,22 @@
+# Build-time (Layer 1/2) artifact pipeline + tier-1 shortcuts.
+#
+# `make artifacts` AOT-lowers every Table 1 task variant from JAX/Pallas
+# to HLO text plus a golden-checksum manifest (requires jax; see
+# python/compile/aot.py).  The Rust coordinator loads the result at
+# rust/artifacts/ when built with `--features xla`; without that feature
+# the deterministic stub executor serves a built-in synthetic manifest
+# and no artifacts are needed.
+
+.PHONY: build test artifacts doc
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../rust/artifacts --size small
+
+doc:
+	cargo doc --no-deps

@@ -19,7 +19,7 @@ use cgra_mte::util::rng::Rng;
 
 fn main() -> cgra_mte::Result<()> {
     let mut cfg = presets::paper_default();
-    cfg.artifacts_dir = std::env::var("CGRA_MTE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    cfg.artifacts_dir = cgra_mte::runtime::default_artifacts_dir();
 
     println!("starting leader (compiling all artifacts once — the request path never compiles)...");
     let mut leader = Leader::new(&cfg)?;

@@ -79,7 +79,7 @@ fn main() -> cgra_mte::Result<()> {
 
     // 4. Functional equivalence across destinations: the artifact
     //    computes the same output wherever the slice abstraction put it.
-    let dir = std::env::var("CGRA_MTE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let dir = cgra_mte::runtime::default_artifacts_dir();
     match RuntimeClient::from_dir(&dir) {
         Ok(mut rt) => {
             let a = rt.verify_golden("harris_a")?;

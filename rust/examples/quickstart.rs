@@ -47,12 +47,14 @@ fn main() -> cgra_mte::Result<()> {
     // 3. Flexible-shape regions (§2.3): GLB and array decoupled.
     let sched_cfg = SchedulerConfig::default();
     let mut mgr = RegionManager::new(&arch, &sched_cfg);
-    let r1 = mgr
-        .try_allocate(&SliceDemand::new(20, 2)) // conv5_x a: GLB-heavy
-        .expect_allocated("conv5_x");
-    let r2 = mgr
-        .try_allocate(&SliceDemand::new(7, 4)) // harris b: array-heavy
-        .expect_allocated("harris b");
+    // production paths handle NoFit/NeverFits; an idle paper-sized
+    // machine always fits these two demands
+    let allocate = |mgr: &mut RegionManager, demand: SliceDemand| match mgr.try_allocate(&demand) {
+        cgra_mte::regions::AllocOutcome::Allocated(r) => r,
+        other => unreachable!("{demand} must fit an idle machine, got {other:?}"),
+    };
+    let r1 = allocate(&mut mgr, SliceDemand::new(20, 2)); // conv5_x a: GLB-heavy
+    let r2 = allocate(&mut mgr, SliceDemand::new(7, 4)); // harris b: array-heavy
     println!("\ncoexisting regions (impossible under coupled mechanisms):");
     println!("  {r1}\n  {r2}");
     println!("{}", mgr.render());

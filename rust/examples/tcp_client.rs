@@ -1,0 +1,137 @@
+//! TCP client demo + loopback load generator for the worker-pool server.
+//!
+//! Starts an in-process [`cgra_mte::coordinator::Server`] on an ephemeral
+//! port (the same binary `cgra-mte serve-tcp` exposes), then acts as
+//! external tenants over real sockets via the shared
+//! [`cgra_mte::testutil::wire::WireClient`].
+//!
+//! Two modes:
+//!
+//! * **demo** (default): one request per tenant/app plus deliberate
+//!   protocol errors, printing every reply.
+//! * **load** (`--load [--connections C] [--requests N]`): measures
+//!   aggregate completed-SUBMIT throughput of C concurrent tenant
+//!   connections (N requests each) against a single-connection
+//!   synchronous baseline issuing the same C×N requests — the
+//!   EXPERIMENTS.md §Loopback-throughput check.
+//!
+//! ```sh
+//! cargo run --release --example tcp_client
+//! cargo run --release --example tcp_client -- --load --connections 4 --requests 50
+//! ```
+
+use std::net::SocketAddr;
+use std::time::Instant;
+
+use cgra_mte::config::presets;
+use cgra_mte::coordinator::Server;
+use cgra_mte::testutil::wire::WireClient;
+
+const APPS: [&str; 4] = ["resnet18", "mobilenet", "camera", "harris"];
+
+fn demo(addr: SocketAddr) -> cgra_mte::Result<()> {
+    let mut client = WireClient::connect(addr)?;
+    for line in [
+        "SUBMIT 0 resnet18",
+        "SUBMIT 1 mobilenet",
+        "SUBMIT 2 camera",
+        "SUBMIT 3 harris",
+        "SUBMIT 7 camera", // bad tenant → ERR
+        "STATS",
+        "STATS 2",
+    ] {
+        let reply = client.send(line)?;
+        println!("> {line}\n< {reply}");
+    }
+    let bye = client.send("QUIT")?;
+    println!("> QUIT\n< {bye}");
+    Ok(())
+}
+
+fn load(addr: SocketAddr, connections: u32, requests: u32) -> cgra_mte::Result<()> {
+    let total = connections * requests;
+
+    // Phase 1 — single-connection synchronous baseline: the old serving
+    // model (one blocking connection, batch of one) driven as fast as
+    // the socket allows.
+    let mut single = WireClient::connect(addr)?;
+    let t0 = Instant::now();
+    for i in 0..total {
+        let tenant = i % 4;
+        let (reply, _) = single.submit(tenant, APPS[tenant as usize])?;
+        assert!(reply.starts_with("OK"), "unexpected reply: {reply}");
+    }
+    let base_secs = t0.elapsed().as_secs_f64();
+    single.send("QUIT")?;
+    let base_tput = total as f64 / base_secs;
+    println!(
+        "baseline  — 1 connection × {total} requests: {base_secs:.3} s  ({base_tput:.0} req/s)"
+    );
+
+    // Phase 2 — C concurrent tenant connections, N requests each: the
+    // worker pool batches concurrent SUBMITs into shared scheduler
+    // invocations and overlaps socket I/O with execution.
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..connections)
+        .map(|c| {
+            std::thread::spawn(move || -> cgra_mte::Result<u32> {
+                let tenant = c % 4;
+                let mut client = WireClient::connect(addr)?;
+                let mut busy = 0;
+                for _ in 0..requests {
+                    let (reply, retries) = client.submit(tenant, APPS[tenant as usize])?;
+                    assert!(reply.starts_with("OK"), "unexpected reply: {reply}");
+                    busy += retries;
+                }
+                client.send("QUIT")?;
+                Ok(busy)
+            })
+        })
+        .collect();
+    let mut busy_total = 0;
+    for t in threads {
+        busy_total += t.join().expect("load thread panicked")?;
+    }
+    let conc_secs = t0.elapsed().as_secs_f64();
+    let conc_tput = total as f64 / conc_secs;
+    println!(
+        "concurrent — {connections} connections × {requests} requests: {conc_secs:.3} s  \
+         ({conc_tput:.0} req/s, {busy_total} BUSY retries)"
+    );
+    println!("speedup: {:.2}x aggregate completed-SUBMIT throughput", conc_tput / base_tput);
+    Ok(())
+}
+
+fn main() -> cgra_mte::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flag_val = |name: &str| -> Option<u32> {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+    };
+
+    let mut cfg = presets::paper_default();
+    cfg.artifacts_dir = cgra_mte::runtime::default_artifacts_dir();
+
+    println!("starting server (compiles all artifacts once)...");
+    let server = Server::start(&cfg, "127.0.0.1:0")?;
+    println!(
+        "server on {} ({} workers, queue depth {})\n",
+        server.addr, cfg.server.workers, cfg.server.queue_depth
+    );
+
+    let result = if args.iter().any(|a| a == "--load") {
+        load(
+            server.addr,
+            flag_val("--connections").unwrap_or(4),
+            flag_val("--requests").unwrap_or(50),
+        )
+    } else {
+        demo(server.addr)
+    };
+
+    server.shutdown();
+    println!("\nserver drained and shut down cleanly");
+    result
+}

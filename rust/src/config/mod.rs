@@ -11,6 +11,6 @@ pub mod toml;
 
 pub use schema::{
     ArchConfig, CloudWorkloadConfig, Config, DprConfig, EdgeWorkloadConfig, RegionPolicyKind,
-    SchedulerConfig, SchedulerPolicyKind, WorkloadConfig,
+    SchedulerConfig, SchedulerPolicyKind, ServerConfig, WorkloadConfig,
 };
 pub use toml::TomlValue;

@@ -346,6 +346,58 @@ impl Default for EdgeWorkloadConfig {
     }
 }
 
+/// TCP serving-front parameters (`[server]` in TOML) — the worker-pool
+/// coordinator of [`crate::coordinator::Server`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerConfig {
+    /// Scheduler worker threads draining the per-tenant admission
+    /// queues.  Each worker folds the submissions it drains into a
+    /// single scheduler invocation, so SUBMITs arriving concurrently on
+    /// different connections batch together.  TOML: `server.workers`.
+    pub workers: u32,
+    /// Bounded per-tenant admission-queue depth.  A SUBMIT that finds
+    /// its tenant's queue full is refused immediately with a `BUSY`
+    /// reply (explicit backpressure, never unbounded buffering).
+    /// TOML: `server.queue_depth`.
+    pub queue_depth: u32,
+    /// Upper bound on submissions folded into one scheduler invocation
+    /// (one `Leader::serve` batch).  Capped at 64 by validation: the
+    /// leader's router enforces a per-tenant in-flight window of 64, and
+    /// a batch larger than the window could trip it mid-serve.
+    /// TOML: `server.batch_max`.
+    pub batch_max: u32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { workers: 2, queue_depth: 32, batch_max: 8 }
+    }
+}
+
+impl ServerConfig {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.queue_depth == 0 || self.batch_max == 0 {
+            return Err(Error::Config(
+                "server.workers, server.queue_depth and server.batch_max must be positive".into(),
+            ));
+        }
+        if self.workers > 256 {
+            return Err(Error::Config(format!(
+                "server.workers ({}) is unreasonably large (max 256)",
+                self.workers
+            )));
+        }
+        if self.batch_max > 64 {
+            return Err(Error::Config(format!(
+                "server.batch_max ({}) exceeds the router's per-tenant in-flight window (64)",
+                self.batch_max
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Which workload a run drives.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WorkloadConfig {
@@ -364,9 +416,12 @@ pub struct Config {
     pub dpr: DprConfig,
     /// Scheduler + region mechanism.
     pub scheduler: SchedulerConfig,
+    /// TCP serving front (worker pool + admission queues).
+    pub server: ServerConfig,
     /// Workload.
     pub workload: WorkloadConfig,
-    /// Directory containing AOT artifacts + manifest.json.
+    /// Directory containing AOT artifacts + manifest.json, or the
+    /// `"synthetic"` sentinel for the stub backend's built-in manifest.
     pub artifacts_dir: String,
 }
 
@@ -376,6 +431,7 @@ impl Default for Config {
             arch: ArchConfig::default(),
             dpr: DprConfig::default(),
             scheduler: SchedulerConfig::default(),
+            server: ServerConfig::default(),
             workload: WorkloadConfig::Cloud(CloudWorkloadConfig::default()),
             artifacts_dir: "artifacts".into(),
         }
@@ -436,6 +492,13 @@ impl Config {
             }
             read_u32(sched, "unit_glb_slices", &mut s.unit_glb_slices)?;
             read_u32(sched, "unit_array_slices", &mut s.unit_array_slices)?;
+        }
+
+        if let Some(server) = root.get("server") {
+            let s = &mut cfg.server;
+            read_u32(server, "workers", &mut s.workers)?;
+            read_u32(server, "queue_depth", &mut s.queue_depth)?;
+            read_u32(server, "batch_max", &mut s.batch_max)?;
         }
 
         if let Some(wl) = root.get("workload") {
@@ -503,6 +566,7 @@ impl Config {
     pub fn validate(&self) -> Result<()> {
         self.arch.validate()?;
         self.dpr.validate()?;
+        self.server.validate()?;
         let s = &self.scheduler;
         if s.unit_array_slices == 0 || s.unit_glb_slices == 0 {
             return Err(Error::Config("unit region sizes must be positive".into()));
@@ -659,6 +723,25 @@ mod tests {
         assert!(Config::from_toml_text("[arch]\nglb_banks = 30\n").is_err());
         // zero clocks
         assert!(Config::from_toml_text("[arch]\ncore_clock_mhz = 0\n").is_err());
+    }
+
+    #[test]
+    fn server_knobs_parse_and_validate() {
+        let cfg = Config::from_toml_text("[server]\nworkers = 4\nqueue_depth = 128\nbatch_max = 16\n")
+            .unwrap();
+        assert_eq!(cfg.server.workers, 4);
+        assert_eq!(cfg.server.queue_depth, 128);
+        assert_eq!(cfg.server.batch_max, 16);
+        // defaults when the section is absent
+        let d = Config::default().server;
+        assert_eq!((d.workers, d.queue_depth, d.batch_max), (2, 32, 8));
+        // zero knobs rejected
+        assert!(Config::from_toml_text("[server]\nworkers = 0\n").is_err());
+        assert!(Config::from_toml_text("[server]\nqueue_depth = 0\n").is_err());
+        assert!(Config::from_toml_text("[server]\nbatch_max = 0\n").is_err());
+        assert!(Config::from_toml_text("[server]\nworkers = 1000\n").is_err());
+        // batch_max must stay within the router's in-flight window
+        assert!(Config::from_toml_text("[server]\nbatch_max = 100\n").is_err());
     }
 
     #[test]

@@ -176,6 +176,32 @@ impl Leader {
         &self.stats
     }
 
+    /// Next request sequence number the router will assign.  The TCP
+    /// server uses this to correlate a batch's submissions (admitted in
+    /// order) with the seq-stamped outcomes `serve` produces.
+    pub fn next_seq(&self) -> u64 {
+        self.router.next_seq()
+    }
+
+    /// Remove and return every completed outcome recorded so far,
+    /// resetting the per-request history (the NTAT record list included)
+    /// while preserving aggregate counters — launches, total compute
+    /// time, warmup.  The long-lived TCP server drains after every batch
+    /// so serving history cannot grow without bound; batch-scoped
+    /// callers (the `serve` CLI, examples) never drain and keep
+    /// cumulative stats.
+    pub fn drain_outcomes(&mut self) -> Vec<ServeOutcome> {
+        self.stats.ntat = NtatTracker::default();
+        std::mem::take(&mut self.stats.outcomes)
+    }
+
+    /// Open-request backlog per tenant.  `serve` drains its batch fully
+    /// on success, so a non-empty map afterwards identifies tenants
+    /// whose requests were stranded by a mid-batch error.
+    pub fn backlog_by_tenant(&self) -> BTreeMap<u32, usize> {
+        self.queue.open_requests_by_tenant()
+    }
+
     /// The scheduler (region/DPR inspection).
     pub fn scheduler(&self) -> &Scheduler {
         &self.sched
@@ -192,12 +218,50 @@ mod tests {
     use super::*;
     use crate::config::presets;
 
+    #[cfg(feature = "xla")]
     fn artifacts_available() -> bool {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .join("artifacts/manifest.json")
             .exists()
     }
 
+    /// Same batch as `serves_a_mixed_batch_end_to_end`, driven through
+    /// the stub executor's synthetic manifest — runs in every offline
+    /// `cargo test`, not just when artifacts are built.
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn serves_a_mixed_batch_on_stub_runtime() {
+        let mut cfg = presets::paper_default();
+        cfg.artifacts_dir = crate::runtime::SYNTHETIC_DIR.into();
+        let mut leader = Leader::new(&cfg).unwrap();
+        assert_eq!(leader.next_seq(), 0);
+        let cycles_per_ms = 500_000;
+        let subs = vec![
+            (TenantId(2), AppId::Camera, 0),
+            (TenantId(3), AppId::Harris, cycles_per_ms / 2),
+            (TenantId(1), AppId::MobileNet, cycles_per_ms),
+        ];
+        let stats = leader.serve(&subs).unwrap();
+        assert_eq!(stats.outcomes.len(), 3);
+        // camera (1 task) + harris (1) + mobilenet (3 chained)
+        assert_eq!(stats.launches, 5);
+        assert!(stats.total_compute_us > 0.0);
+        assert!(stats.warmup_ms > 0.0);
+        for o in &stats.outcomes {
+            assert!(o.ntat >= 1.0, "{o:?}");
+            assert!(o.final_output_sum.is_finite());
+        }
+        assert_eq!(leader.next_seq(), 3);
+        assert_eq!(leader.scheduler().regions().active_count(), 0);
+        assert!(leader.backlog_by_tenant().is_empty());
+        // draining hands the history out and resets it, keeping counters
+        let drained = leader.drain_outcomes();
+        assert_eq!(drained.len(), 3);
+        assert!(leader.stats().outcomes.is_empty());
+        assert_eq!(leader.stats().launches, 5);
+    }
+
+    #[cfg(feature = "xla")]
     #[test]
     fn serves_a_mixed_batch_end_to_end() {
         if !artifacts_available() {

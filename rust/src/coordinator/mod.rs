@@ -2,11 +2,16 @@
 //!
 //! While [`crate::sim`] reproduces the paper's evaluation in virtual
 //! time, this module is the deployable serving path: tenants submit
-//! application requests, the scheduler places them on the slice-level
+//! application requests over TCP, a sharded worker pool batches them
+//! (per-tenant bounded admission queues → N scheduler workers → one
+//! leader executor), the scheduler places them on the slice-level
 //! abstraction exactly as in the simulation, and every launched task
-//! *actually executes* its AOT artifact through the PJRT runtime —
-//! the CGRA's functional behaviour with the paper's timing model
-//! alongside.  Python never runs here.
+//! *actually executes* its artifact through the [`crate::runtime`]
+//! backend — the CGRA's functional behaviour with the paper's timing
+//! model alongside.  Python never runs here.
+//!
+//! See `server` for the wire protocol and the concurrency architecture,
+//! and `DESIGN.md` §Coordinator for the module map.
 
 mod binding;
 mod leader;
@@ -15,5 +20,5 @@ pub mod server;
 
 pub use binding::TaskBinding;
 pub use leader::{Leader, ServeOutcome, ServeStats};
-pub use router::{Router, RouterStats, TenantId};
-pub use server::{Server, parse_app};
+pub use router::{AdmissionQueues, Router, RouterStats, TenantId};
+pub use server::{parse_app, Server, TENANTS};

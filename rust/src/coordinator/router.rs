@@ -1,6 +1,17 @@
 //! Multi-tenant request router and admission.
+//!
+//! Two admission layers live here:
+//!
+//! * [`Router`] — virtual-time bookkeeping used by the [`super::Leader`]:
+//!   per-tenant in-flight windows and sequence assignment.
+//! * [`AdmissionQueues`] — the wall-clock front door of the TCP server:
+//!   bounded per-tenant queues that connection threads push into and
+//!   scheduler workers drain in round-robin batches.  A full queue
+//!   rejects immediately (the server replies `BUSY`), so backpressure is
+//!   explicit and memory is bounded.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
 
 use crate::error::{Error, Result};
 use crate::scheduler::RequestQueue;
@@ -100,6 +111,140 @@ impl Router {
     pub fn app_tasks(app: AppId) -> usize {
         AppGraph::of(app).len()
     }
+
+    /// Next sequence number that will be assigned (exposed so the server
+    /// can correlate batch submissions with their outcomes).
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+/// Internal state of [`AdmissionQueues`]: one bounded FIFO per tenant.
+#[derive(Debug)]
+struct QueueState<T> {
+    shards: Vec<VecDeque<T>>,
+    /// Closed queues reject pushes; drains continue until empty.
+    closed: bool,
+    /// Round-robin drain cursor (fairness across tenants).
+    cursor: usize,
+}
+
+/// Sharded, bounded multi-tenant admission queues.
+///
+/// Connection threads [`AdmissionQueues::try_push`] one item per SUBMIT;
+/// a full shard (or a closed queue) returns the item back so the caller
+/// can reply `BUSY` without blocking.  Scheduler workers block in
+/// [`AdmissionQueues::pop_batch`], which drains up to `max` items
+/// round-robin across tenants — one item per tenant per lap — so a
+/// flooding tenant cannot starve the others, and concurrently queued
+/// SUBMITs leave as one batch (a single scheduler invocation).
+#[derive(Debug)]
+pub struct AdmissionQueues<T> {
+    depth: usize,
+    tenants: usize,
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+}
+
+impl<T> AdmissionQueues<T> {
+    /// Queues for `tenants` tenants, each bounded to `depth` items.
+    pub fn new(tenants: usize, depth: usize) -> AdmissionQueues<T> {
+        let tenants = tenants.max(1);
+        AdmissionQueues {
+            depth: depth.max(1),
+            tenants,
+            state: Mutex::new(QueueState {
+                shards: (0..tenants).map(|_| VecDeque::new()).collect(),
+                closed: false,
+                cursor: 0,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Number of tenant shards.
+    pub fn tenants(&self) -> usize {
+        self.tenants
+    }
+
+    /// Per-tenant capacity.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Enqueue for `tenant`; returns the item back when the shard is
+    /// full, the tenant id is out of range, or the queues are closed —
+    /// the caller applies backpressure (`BUSY`).
+    pub fn try_push(&self, tenant: TenantId, item: T) -> std::result::Result<(), T> {
+        let mut s = self.state.lock().expect("admission queue poisoned");
+        let idx = tenant.0 as usize;
+        if s.closed || idx >= s.shards.len() || s.shards[idx].len() >= self.depth {
+            return Err(item);
+        }
+        s.shards[idx].push_back(item);
+        drop(s);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Items currently queued across all tenants.
+    pub fn pending(&self) -> usize {
+        let s = self.state.lock().expect("admission queue poisoned");
+        s.shards.iter().map(|q| q.len()).sum()
+    }
+
+    /// Block until items are available (or the queues close), then drain
+    /// up to `max` of them round-robin across tenants.  Returns `None`
+    /// only when the queues are closed *and* empty — workers use that as
+    /// their exit signal, so every admitted item is eventually drained.
+    pub fn pop_batch(&self, max: usize) -> Option<Vec<(TenantId, T)>> {
+        let max = max.max(1);
+        let mut s = self.state.lock().expect("admission queue poisoned");
+        loop {
+            let pending: usize = s.shards.iter().map(|q| q.len()).sum();
+            if pending > 0 {
+                let n = s.shards.len();
+                let start = s.cursor;
+                let mut out = Vec::with_capacity(max.min(pending));
+                'fill: loop {
+                    let mut took = false;
+                    for lap in 0..n {
+                        let idx = (start + lap) % n;
+                        if let Some(item) = s.shards[idx].pop_front() {
+                            out.push((TenantId(idx as u32), item));
+                            took = true;
+                            if out.len() >= max {
+                                break 'fill;
+                            }
+                        }
+                    }
+                    if !took {
+                        break;
+                    }
+                }
+                s.cursor = (s.cursor + 1) % n;
+                return Some(out);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.ready.wait(s).expect("admission queue poisoned");
+        }
+    }
+
+    /// Close the queues: further pushes are rejected, blocked workers
+    /// wake, and remaining items drain before `pop_batch` returns `None`.
+    pub fn close(&self) {
+        let mut s = self.state.lock().expect("admission queue poisoned");
+        s.closed = true;
+        drop(s);
+        self.ready.notify_all();
+    }
+
+    /// Whether [`AdmissionQueues::close`] was called.
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().expect("admission queue poisoned").closed
+    }
 }
 
 #[cfg(test)]
@@ -135,5 +280,66 @@ mod tests {
     fn app_task_counts() {
         assert_eq!(Router::app_tasks(AppId::ResNet18), 4);
         assert_eq!(Router::app_tasks(AppId::Camera), 1);
+    }
+
+    #[test]
+    fn admission_bounded_and_rejects_when_full() {
+        let q: AdmissionQueues<u32> = AdmissionQueues::new(2, 2);
+        assert_eq!((q.tenants(), q.depth()), (2, 2));
+        assert!(q.try_push(TenantId(0), 1).is_ok());
+        assert!(q.try_push(TenantId(0), 2).is_ok());
+        // shard full → item handed back
+        assert_eq!(q.try_push(TenantId(0), 3), Err(3));
+        // other tenant unaffected
+        assert!(q.try_push(TenantId(1), 4).is_ok());
+        // out-of-range tenant rejected
+        assert_eq!(q.try_push(TenantId(9), 5), Err(5));
+        assert_eq!(q.pending(), 3);
+    }
+
+    #[test]
+    fn pop_batch_drains_round_robin() {
+        let q: AdmissionQueues<u32> = AdmissionQueues::new(3, 8);
+        for i in 0..3 {
+            q.try_push(TenantId(0), 10 + i).unwrap();
+        }
+        q.try_push(TenantId(2), 30).unwrap();
+        // one item per tenant per lap: 0,2 first lap, then 0,0
+        let batch = q.pop_batch(8).unwrap();
+        let order: Vec<(u32, u32)> = batch.iter().map(|(t, v)| (t.0, *v)).collect();
+        assert_eq!(order, vec![(0, 10), (2, 30), (0, 11), (0, 12)]);
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn pop_batch_respects_max() {
+        let q: AdmissionQueues<u32> = AdmissionQueues::new(1, 8);
+        for i in 0..5 {
+            q.try_push(TenantId(0), i).unwrap();
+        }
+        assert_eq!(q.pop_batch(2).unwrap().len(), 2);
+        assert_eq!(q.pending(), 3);
+    }
+
+    #[test]
+    fn close_rejects_pushes_drains_then_signals_exit() {
+        let q: AdmissionQueues<u32> = AdmissionQueues::new(2, 4);
+        q.try_push(TenantId(1), 7).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.try_push(TenantId(0), 8), Err(8));
+        // remaining items still drain, then None
+        assert_eq!(q.pop_batch(4).unwrap().len(), 1);
+        assert!(q.pop_batch(4).is_none());
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers() {
+        let q = std::sync::Arc::new(AdmissionQueues::<u32>::new(1, 1));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_batch(4));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
     }
 }

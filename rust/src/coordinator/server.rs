@@ -1,34 +1,58 @@
-//! Minimal TCP serving front for the live coordinator.
+//! Concurrent TCP serving front: a sharded worker-pool coordinator.
 //!
-//! A line protocol good enough to drive the leader from external load
-//! generators (and to demonstrate the system as a deployable service —
-//! the request path is: socket → router → scheduler → slice allocation →
-//! fast-DPR accounting → PJRT execution → reply):
+//! The request path is: accept loop → per-connection reader threads →
+//! bounded per-tenant admission queues ([`AdmissionQueues`]) → N
+//! scheduler workers that drain round-robin batches → a single leader
+//! executor thread that owns the [`Leader`] (and with it the one fabric
+//! plus the runtime client, which is not `Send` under `--features xla`).
+//! SUBMITs arriving concurrently on different connections are folded
+//! into one scheduler invocation per batch, and workers overlap reply
+//! fan-out with the executor's next batch.
+//!
+//! Wire protocol (one line per request, one line per reply):
 //!
 //! ```text
 //! SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris>
 //!   → OK seq=<n> ntat=<x> tat_ms=<x> compute_us=<x> sum=<x>
+//!   → BUSY tenant=<t> queue_depth=<d>     (admission queue full)
+//!   → ERR <reason>
 //! STATS
-//!   → STATS inflight=<n> served=<n> launches=<n> compute_ms=<x>
+//!   → STATS served=<n> queued=<n> rejected=<n> failed=<n> pending=<n>
+//!           workers=<n> queue_depth=<n>
+//! STATS <tenant>
+//!   → STATS tenant=<t> served=<n> queued=<n> rejected=<n>
 //! QUIT
-//!   → BYE (closes the connection)
+//!   → BYE                                 (closes this connection)
+//! SHUTDOWN
+//!   → BYE shutting down                   (graceful server shutdown)
 //! ```
 //!
-//! Each SUBMIT is served synchronously (batch of one) — the protocol is
-//! deliberately simple; batching across connections is the scheduler's
-//! job in the simulated scenarios.
+//! Backpressure is explicit: each tenant's queue is bounded by
+//! `server.queue_depth` ([`crate::config::ServerConfig`]); a SUBMIT that
+//! finds it full is refused immediately with `BUSY` rather than buffered
+//! without bound.  Shutdown via [`Server::shutdown`] or the `SHUTDOWN`
+//! wire command is graceful: accepting stops, admitted submissions drain
+//! through the scheduler, replies are delivered, then all threads join.
+//! (No signal handler is installed — the std library exposes none — so
+//! Ctrl-C terminates the process immediately rather than draining.)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::config::Config;
 use crate::error::{Error, Result};
+use crate::metrics::ServeCounters;
 use crate::tasks::AppId;
 
 use super::leader::Leader;
-use super::router::TenantId;
+use super::router::{AdmissionQueues, TenantId};
+
+/// Tenants the wire protocol admits (the cloud scenario's four, Fig. 3a).
+pub const TENANTS: u32 = 4;
 
 /// Parse an application name from the wire.
 pub fn parse_app(name: &str) -> Option<AppId> {
@@ -41,147 +65,284 @@ pub fn parse_app(name: &str) -> Option<AppId> {
     }
 }
 
+/// One admitted SUBMIT awaiting a scheduler worker.
+struct SubmitJob {
+    app: AppId,
+    /// Reply line sink of the submitting connection.
+    reply: mpsc::Sender<String>,
+}
+
+/// Per-submission outcome fields extracted for wire formatting.
+struct OutcomeLine {
+    seq: u64,
+    ntat: f64,
+    tat_cycles: u64,
+    compute_us: f64,
+    sum: f64,
+}
+
+/// A batch handed from a scheduler worker to the leader executor.
+/// `resp` carries one entry per submission (in order); `None` means the
+/// scheduler produced no outcome for that seq.
+struct ExecRequest {
+    subs: Vec<(TenantId, AppId, u64)>,
+    resp: mpsc::Sender<std::result::Result<Vec<Option<OutcomeLine>>, String>>,
+}
+
+/// State shared by connection threads, workers, and STATS rendering.
+struct Shared {
+    queues: AdmissionQueues<SubmitJob>,
+    counters: ServeCounters,
+    stop: AtomicBool,
+    /// Virtual cycles per millisecond (from the core clock).
+    cycles_per_ms: u64,
+    workers: usize,
+    queue_depth: usize,
+}
+
+impl Shared {
+    fn from_config(cfg: &Config) -> Shared {
+        Shared {
+            queues: AdmissionQueues::new(TENANTS as usize, cfg.server.queue_depth as usize),
+            counters: ServeCounters::new(TENANTS as usize),
+            stop: AtomicBool::new(false),
+            cycles_per_ms: cfg.arch.core_clock_mhz as u64 * 1000,
+            workers: cfg.server.workers.max(1) as usize,
+            queue_depth: cfg.server.queue_depth as usize,
+        }
+    }
+
+    /// Begin graceful shutdown: stop accepting, reject new submissions,
+    /// let admitted ones drain.
+    fn begin_shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queues.close();
+    }
+}
+
 /// Handle one protocol line; returns the reply (without newline) and
-/// whether the connection should close.
-pub fn handle_line(leader: &mut Leader, line: &str) -> (String, bool) {
+/// whether the connection should close.  `reply_tx`/`reply_rx` are the
+/// connection's private reply channel: a successful SUBMIT parks on
+/// `reply_rx` until a scheduler worker delivers the outcome line.
+fn handle_line(
+    shared: &Shared,
+    reply_tx: &mpsc::Sender<String>,
+    reply_rx: &mpsc::Receiver<String>,
+    line: &str,
+) -> (String, bool) {
     let mut parts = line.split_whitespace();
     match parts.next().map(|s| s.to_ascii_uppercase()).as_deref() {
         Some("SUBMIT") => {
             let tenant = match parts.next().and_then(|t| t.parse::<u32>().ok()) {
-                Some(t) if t < 4 => TenantId(t),
-                _ => return ("ERR bad tenant (0-3)".into(), false),
+                Some(t) if t < TENANTS => TenantId(t),
+                _ => return (format!("ERR bad tenant (0-{})", TENANTS - 1), false),
             };
             let app = match parts.next().and_then(parse_app) {
                 Some(a) => a,
                 None => return ("ERR bad app (resnet18|mobilenet|camera|harris)".into(), false),
             };
-            match leader.serve(&[(tenant, app, 0)]) {
-                Ok(stats) => match stats.outcomes.last() {
-                    Some(o) => (
-                        format!(
-                            "OK seq={} ntat={:.2} tat_ms={:.3} compute_us={:.0} sum={:+.4}",
-                            o.seq,
-                            o.ntat,
-                            o.tat_cycles as f64 / 500e3,
-                            o.compute_us,
-                            o.final_output_sum
-                        ),
+            let job = SubmitJob { app, reply: reply_tx.clone() };
+            match shared.queues.try_push(tenant, job) {
+                Ok(()) => {
+                    shared.counters.record_queued(tenant.0 as usize);
+                    // Graceful drain delivers replies for admitted jobs
+                    // even during shutdown, so keep waiting through stop;
+                    // give up only once the pipeline has been quiescent
+                    // (stopped + nothing queued) for ~10s — the sign of a
+                    // lost worker, not a slow batch.
+                    let mut quiescent_ticks = 0u32;
+                    loop {
+                        match reply_rx.recv_timeout(Duration::from_millis(100)) {
+                            Ok(reply) => break (reply, false),
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                if shared.stop.load(Ordering::SeqCst)
+                                    && shared.queues.pending() == 0
+                                {
+                                    quiescent_ticks += 1;
+                                    if quiescent_ticks > 100 {
+                                        break ("ERR coordinator unavailable".into(), true);
+                                    }
+                                } else {
+                                    quiescent_ticks = 0;
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                break ("ERR coordinator unavailable".into(), true)
+                            }
+                        }
+                    }
+                }
+                Err(_) => {
+                    shared.counters.record_rejected(tenant.0 as usize);
+                    (
+                        format!("BUSY tenant={} queue_depth={}", tenant.0, shared.queue_depth),
                         false,
-                    ),
-                    None => ("ERR request did not complete".into(), false),
-                },
-                Err(e) => (format!("ERR {e}"), false),
+                    )
+                }
             }
         }
-        Some("STATS") => {
-            let s = leader.stats();
-            (
-                format!(
-                    "STATS served={} launches={} compute_ms={:.1} warmup_ms={:.0}",
-                    s.outcomes.len(),
-                    s.launches,
-                    s.total_compute_us / 1e3,
-                    s.warmup_ms
-                ),
-                false,
-            )
-        }
+        Some("STATS") => match parts.next() {
+            Some(t) => match t.parse::<u32>() {
+                Ok(t) if t < TENANTS => {
+                    let s = shared.counters.tenant(t as usize);
+                    (
+                        format!(
+                            "STATS tenant={t} served={} queued={} rejected={}",
+                            s.served, s.queued, s.rejected
+                        ),
+                        false,
+                    )
+                }
+                _ => (format!("ERR bad tenant (0-{})", TENANTS - 1), false),
+            },
+            None => {
+                let s = shared.counters.totals();
+                (
+                    format!(
+                        "STATS served={} queued={} rejected={} failed={} pending={} \
+                         workers={} queue_depth={}",
+                        s.served,
+                        s.queued,
+                        s.rejected,
+                        shared.counters.failed(),
+                        shared.queues.pending(),
+                        shared.workers,
+                        shared.queue_depth
+                    ),
+                    false,
+                )
+            }
+        },
         Some("QUIT") => ("BYE".into(), true),
+        Some("SHUTDOWN") => {
+            shared.begin_shutdown();
+            ("BYE shutting down".into(), true)
+        }
         Some(other) => (format!("ERR unknown command '{other}'"), false),
         None => ("ERR empty command".into(), false),
     }
 }
 
-/// A running server handle.
-pub struct Server {
-    /// Bound local address (useful with port 0).
-    pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    thread: Option<std::thread::JoinHandle<()>>,
-}
-
-impl Server {
-    /// Start serving on `bind` (e.g. `127.0.0.1:0` for an ephemeral
-    /// port).  The leader (whose PJRT client is not `Send`) is built and
-    /// owned by a single server thread, which handles connections
-    /// sequentially — the serving model of the simulated scenarios, where
-    /// one coordinator owns the machine.
-    pub fn start(cfg: &Config, bind: &str) -> Result<Server> {
-        let listener = TcpListener::bind(bind)
-            .map_err(|e| Error::io(bind.to_string(), e))?;
-        let addr = listener
-            .local_addr()
-            .map_err(|e| Error::io(bind.to_string(), e))?;
-        listener
-            .set_nonblocking(true)
-            .map_err(|e| Error::io(bind.to_string(), e))?;
-
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop_flag = stop.clone();
-        let cfg = cfg.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let thread = std::thread::spawn(move || {
-            // Leader lives entirely on this thread (PJRT client is !Send).
-            let mut leader = match Leader::new(&cfg) {
-                Ok(l) => {
-                    let _ = ready_tx.send(Ok(()));
-                    l
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            while !stop_flag.load(Ordering::SeqCst) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let _ = handle_connection(stream, &mut leader, &stop_flag);
+/// Scheduler worker: drain admission batches, hand each to the leader
+/// executor as one scheduler invocation, fan the replies back out.
+fn run_worker(shared: Arc<Shared>, exec_tx: mpsc::Sender<ExecRequest>, batch_max: usize) {
+    while let Some(batch) = shared.queues.pop_batch(batch_max) {
+        let subs: Vec<(TenantId, AppId, u64)> =
+            batch.iter().map(|(tenant, job)| (*tenant, job.app, 0)).collect();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        if exec_tx.send(ExecRequest { subs, resp: resp_tx }).is_err() {
+            for (_, job) in batch {
+                shared.counters.record_failed();
+                let _ = job.reply.send("ERR coordinator executor unavailable".into());
+            }
+            continue;
+        }
+        match resp_rx.recv() {
+            Ok(Ok(lines)) => {
+                for ((tenant, job), line) in batch.into_iter().zip(lines) {
+                    match line {
+                        Some(o) => {
+                            // count before replying so a client's
+                            // follow-up STATS observes its own request
+                            shared.counters.record_served(tenant.0 as usize);
+                            let _ = job.reply.send(format!(
+                                "OK seq={} ntat={:.2} tat_ms={:.3} compute_us={:.0} sum={:+.4}",
+                                o.seq,
+                                o.ntat,
+                                o.tat_cycles as f64 / shared.cycles_per_ms as f64,
+                                o.compute_us,
+                                o.sum
+                            ));
+                        }
+                        None => {
+                            shared.counters.record_failed();
+                            let _ = job.reply.send("ERR request did not complete".into());
+                        }
                     }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
                 }
             }
-        });
-        match ready_rx.recv() {
-            Ok(Ok(())) => Ok(Server { addr, stop, thread: Some(thread) }),
             Ok(Err(e)) => {
-                let _ = thread.join();
+                for (_, job) in batch {
+                    shared.counters.record_failed();
+                    let _ = job.reply.send(format!("ERR {e}"));
+                }
+            }
+            Err(_) => {
+                for (_, job) in batch {
+                    shared.counters.record_failed();
+                    let _ = job.reply.send("ERR coordinator executor died".into());
+                }
+            }
+        }
+    }
+}
+
+/// Leader executor: the single thread that owns the fabric.  Each
+/// received batch is one `Leader::serve` invocation; outcomes are
+/// correlated to submissions by sequence number (the router assigns them
+/// in admission order) and drained per batch so a long-lived server's
+/// history stays bounded.
+fn run_executor(cfg: &Config, mut leader: Leader, rx: mpsc::Receiver<ExecRequest>) {
+    while let Ok(req) = rx.recv() {
+        let first_seq = leader.next_seq();
+        // map the &ServeStats away immediately so the borrow of `leader`
+        // ends before the arms below drain or rebuild it
+        let served = leader.serve(&req.subs).map(|_| ()).map_err(|e| e.to_string());
+        let result = match served {
+            Ok(()) => {
+                let mut drained: std::collections::BTreeMap<u64, super::ServeOutcome> =
+                    leader.drain_outcomes().into_iter().map(|o| (o.seq, o)).collect();
+                let lines = (0..req.subs.len())
+                    .map(|i| {
+                        let seq = first_seq + i as u64;
+                        drained.remove(&seq).map(|o| OutcomeLine {
+                            seq,
+                            ntat: o.ntat,
+                            tat_cycles: o.tat_cycles,
+                            compute_us: o.compute_us,
+                            sum: o.final_output_sum,
+                        })
+                    })
+                    .collect();
+                Ok(lines)
+            }
+            Err(e) => {
+                // `serve` is not transactional: a mid-batch failure can
+                // strand admitted requests in the router/queue and would
+                // poison every later batch.  Log which tenants lost work,
+                // then rebuild the leader to a clean fabric.
+                log::error!(
+                    "batch of {} failed: {e} (stranded backlog by tenant: {:?})",
+                    req.subs.len(),
+                    leader.backlog_by_tenant()
+                );
+                match Leader::new(cfg) {
+                    Ok(fresh) => leader = fresh,
+                    Err(re) => log::error!("leader rebuild after failed batch also failed: {re}"),
+                }
                 Err(e)
             }
-            Err(_) => Err(Error::Runtime("server thread died during startup".into())),
-        }
-    }
-
-    /// Signal shutdown and join the accept loop.
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = self.thread.take() {
-            let _ = t.join();
-        }
+        };
+        let _ = req.resp.send(result);
     }
 }
 
-fn handle_connection(
-    stream: TcpStream,
-    leader: &mut Leader,
-    stop: &AtomicBool,
-) -> std::io::Result<()> {
+fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(100))).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    let (reply_tx, reply_rx) = mpsc::channel::<String>();
     loop {
-        if stop.load(Ordering::SeqCst) {
+        if shared.stop.load(Ordering::SeqCst) {
             break;
         }
-        line.clear();
         match reader.read_line(&mut line) {
             Ok(0) => break, // client closed
             Ok(_) => {
-                let (reply, close) = handle_line(leader, line.trim_end());
+                let (reply, close) = handle_line(shared, &reply_tx, &reply_rx, line.trim_end());
+                line.clear();
                 writer.write_all(reply.as_bytes())?;
                 writer.write_all(b"\n")?;
                 if close {
@@ -192,7 +353,10 @@ fn handle_connection(
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                continue; // timeout tick: re-check stop flag
+                // timeout tick: re-check the stop flag.  `read_line` has
+                // already appended any partial line it read to `line`,
+                // so do NOT clear it here — the next read completes it.
+                continue;
             }
             Err(e) => return Err(e),
         }
@@ -200,68 +364,271 @@ fn handle_connection(
     Ok(())
 }
 
+/// A running server handle.
+pub struct Server {
+    /// Bound local address (useful with port 0).
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    executor: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving on `bind` (e.g. `127.0.0.1:0` for an ephemeral
+    /// port).  Spawns the leader executor (which builds the [`Leader`]
+    /// on its own thread — the PJRT client is not `Send`),
+    /// `cfg.server.workers` scheduler workers, and the accept loop.
+    pub fn start(cfg: &Config, bind: &str) -> Result<Server> {
+        let listener =
+            TcpListener::bind(bind).map_err(|e| Error::io(bind.to_string(), e))?;
+        let addr = listener.local_addr().map_err(|e| Error::io(bind.to_string(), e))?;
+        listener.set_nonblocking(true).map_err(|e| Error::io(bind.to_string(), e))?;
+
+        let shared = Arc::new(Shared::from_config(cfg));
+
+        // Leader executor: owns scheduler + runtime for the whole server.
+        let (exec_tx, exec_rx) = mpsc::channel::<ExecRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let leader_cfg = cfg.clone();
+        let executor = std::thread::Builder::new()
+            .name("cgra-leader".into())
+            .spawn(move || {
+                let leader = match Leader::new(&leader_cfg) {
+                    Ok(l) => {
+                        let _ = ready_tx.send(Ok(()));
+                        l
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                run_executor(&leader_cfg, leader, exec_rx);
+            })
+            .map_err(|e| Error::Runtime(format!("spawn executor: {e}")))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = executor.join();
+                return Err(e);
+            }
+            Err(_) => return Err(Error::Runtime("server executor died during startup".into())),
+        }
+
+        // Scheduler workers: drain admission queues into executor batches.
+        let batch_max = cfg.server.batch_max.max(1) as usize;
+        let mut workers = Vec::with_capacity(shared.workers);
+        for i in 0..shared.workers {
+            let shared_w = shared.clone();
+            let tx = exec_tx.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("cgra-worker-{i}"))
+                .spawn(move || run_worker(shared_w, tx, batch_max))
+                .map_err(|e| Error::Runtime(format!("spawn worker {i}: {e}")))?;
+            workers.push(worker);
+        }
+        // Workers hold the only executor senders: when they exit (queues
+        // closed + drained), the executor's recv fails and it exits too.
+        drop(exec_tx);
+
+        // Accept loop: one reader thread per connection.
+        let shared_a = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("cgra-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                while !shared_a.stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let shared_c = shared_a.clone();
+                            conns.push(std::thread::spawn(move || {
+                                let _ = handle_connection(stream, &shared_c);
+                            }));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            conns.retain(|h| !h.is_finished());
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for h in conns {
+                    let _ = h.join();
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn accept loop: {e}")))?;
+
+        Ok(Server { addr, shared, accept: Some(accept), workers, executor: Some(executor) })
+    }
+
+    /// Graceful shutdown: stop accepting, drain admitted submissions,
+    /// deliver their replies, join every thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    /// Block until the `SHUTDOWN` wire command requests shutdown, then
+    /// drain and join.  (Ctrl-C/SIGTERM terminate the process without
+    /// reaching this drain path — no signal handler is installed.)
+    pub fn wait(mut self) {
+        while !self.shared.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.begin_shutdown();
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(e) = self.executor.take() {
+            let _ = e.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // idempotent: `shutdown`/`wait` already took the handles
+        self.stop_and_join();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::presets;
-    use std::io::{BufRead, BufReader, Write};
+
+    fn test_shared(depth: usize) -> Shared {
+        Shared {
+            queues: AdmissionQueues::new(TENANTS as usize, depth),
+            counters: ServeCounters::new(TENANTS as usize),
+            stop: AtomicBool::new(false),
+            cycles_per_ms: 500_000,
+            workers: 2,
+            queue_depth: depth,
+        }
+    }
+
+    fn line(shared: &Shared, input: &str) -> (String, bool) {
+        let (tx, rx) = mpsc::channel();
+        handle_line(shared, &tx, &rx, input)
+    }
 
     #[test]
-    fn parse_app_names() {
+    fn parse_app_aliases_and_rejects() {
         assert_eq!(parse_app("resnet18"), Some(AppId::ResNet18));
         assert_eq!(parse_app("ResNet-18"), Some(AppId::ResNet18));
+        assert_eq!(parse_app("RESNET"), Some(AppId::ResNet18));
+        assert_eq!(parse_app("mobilenet"), Some(AppId::MobileNet));
         assert_eq!(parse_app("CAMERA"), Some(AppId::Camera));
+        assert_eq!(parse_app("camera_pipeline"), Some(AppId::Camera));
+        assert_eq!(parse_app("harris"), Some(AppId::Harris));
         assert_eq!(parse_app("nope"), None);
-    }
-
-    fn artifacts_available() -> Option<String> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        dir.join("manifest.json")
-            .exists()
-            .then(|| dir.display().to_string())
+        assert_eq!(parse_app(""), None);
     }
 
     #[test]
-    fn protocol_errors_without_socket() {
-        let Some(dir) = artifacts_available() else { return };
-        let mut cfg = presets::paper_default();
-        cfg.artifacts_dir = dir;
-        let mut leader = Leader::new(&cfg).unwrap();
-        assert!(handle_line(&mut leader, "SUBMIT 9 camera").0.starts_with("ERR"));
-        assert!(handle_line(&mut leader, "SUBMIT 1 nope").0.starts_with("ERR"));
-        assert!(handle_line(&mut leader, "FROB").0.starts_with("ERR"));
-        assert!(handle_line(&mut leader, "").0.starts_with("ERR"));
-        let (bye, close) = handle_line(&mut leader, "QUIT");
+    fn protocol_errors_without_leader() {
+        let shared = test_shared(4);
+        assert!(line(&shared, "SUBMIT 9 camera").0.starts_with("ERR bad tenant"));
+        assert!(line(&shared, "SUBMIT x camera").0.starts_with("ERR bad tenant"));
+        assert!(line(&shared, "SUBMIT 1 nope").0.starts_with("ERR bad app"));
+        assert!(line(&shared, "FROB").0.starts_with("ERR unknown command"));
+        assert!(line(&shared, "").0.starts_with("ERR empty"));
+        assert!(line(&shared, "STATS 12").0.starts_with("ERR bad tenant"));
+        let (bye, close) = line(&shared, "QUIT");
         assert_eq!(bye, "BYE");
         assert!(close);
+        // none of the above touched the admission counters
+        assert_eq!(shared.counters.totals(), crate::metrics::TenantSnapshot::default());
     }
 
     #[test]
+    fn busy_backpressure_reply_when_queue_full() {
+        let shared = test_shared(1);
+        // fill tenant 2's queue directly (no worker is draining)
+        let (tx, _rx) = mpsc::channel();
+        shared
+            .queues
+            .try_push(TenantId(2), SubmitJob { app: AppId::Camera, reply: tx })
+            .unwrap_or_else(|_| panic!("first push fits"));
+        let (reply, close) = line(&shared, "SUBMIT 2 camera");
+        assert_eq!(reply, "BUSY tenant=2 queue_depth=1");
+        assert!(!close);
+        assert_eq!(shared.counters.tenant(2).rejected, 1);
+        // other tenants still admitted… but nothing drains them in this
+        // test, so only check the error-free tenants' rejection count
+        assert_eq!(shared.counters.tenant(0).rejected, 0);
+    }
+
+    #[test]
+    fn stats_renders_counters_and_pending() {
+        let shared = test_shared(8);
+        shared.counters.record_queued(0);
+        shared.counters.record_served(0);
+        shared.counters.record_queued(3);
+        shared.counters.record_rejected(3);
+        let (stats, close) = line(&shared, "STATS");
+        assert!(!close);
+        assert!(stats.contains("served=1"), "{stats}");
+        assert!(stats.contains("queued=2"), "{stats}");
+        assert!(stats.contains("rejected=1"), "{stats}");
+        assert!(stats.contains("pending=0"), "{stats}");
+        assert!(stats.contains("workers=2"), "{stats}");
+        let (t3, _) = line(&shared, "STATS 3");
+        assert_eq!(t3, "STATS tenant=3 served=0 queued=1 rejected=1");
+    }
+
+    #[test]
+    fn shutdown_command_begins_graceful_stop() {
+        let shared = test_shared(4);
+        let (reply, close) = line(&shared, "SHUTDOWN");
+        assert_eq!(reply, "BYE shutting down");
+        assert!(close);
+        assert!(shared.stop.load(Ordering::SeqCst));
+        assert!(shared.queues.is_closed());
+        // post-shutdown SUBMITs are refused with BUSY
+        let (reply, _) = line(&shared, "SUBMIT 0 harris");
+        assert!(reply.starts_with("BUSY"), "{reply}");
+    }
+
+    /// End-to-end over a real socket on the stub runtime backend (the
+    /// synthetic manifest needs no artifacts on disk).
+    #[cfg(not(feature = "xla"))]
+    #[test]
     fn end_to_end_over_tcp() {
-        let Some(dir) = artifacts_available() else { return };
-        let mut cfg = presets::paper_default();
-        cfg.artifacts_dir = dir;
+        use std::io::{BufRead, BufReader, Write};
+
+        let mut cfg = crate::config::presets::paper_default();
+        cfg.artifacts_dir = crate::runtime::SYNTHETIC_DIR.into();
         let server = Server::start(&cfg, "127.0.0.1:0").unwrap();
 
         let stream = std::net::TcpStream::connect(server.addr).unwrap();
         let mut writer = stream.try_clone().unwrap();
         let mut reader = BufReader::new(stream);
+        let send = |w: &mut std::net::TcpStream, r: &mut BufReader<std::net::TcpStream>, line: &str| {
+            w.write_all(format!("{line}\n").as_bytes()).unwrap();
+            let mut reply = String::new();
+            r.read_line(&mut reply).unwrap();
+            reply.trim_end().to_string()
+        };
 
-        writer.write_all(b"SUBMIT 3 harris\n").unwrap();
-        let mut reply = String::new();
-        reader.read_line(&mut reply).unwrap();
+        let reply = send(&mut writer, &mut reader, "SUBMIT 3 harris");
         assert!(reply.starts_with("OK seq=0"), "{reply}");
         assert!(reply.contains("ntat="), "{reply}");
 
-        writer.write_all(b"STATS\n").unwrap();
-        let mut stats = String::new();
-        reader.read_line(&mut stats).unwrap();
+        let stats = send(&mut writer, &mut reader, "STATS");
         assert!(stats.contains("served=1"), "{stats}");
+        let t3 = send(&mut writer, &mut reader, "STATS 3");
+        assert!(t3.contains("tenant=3 served=1 queued=1 rejected=0"), "{t3}");
 
-        writer.write_all(b"QUIT\n").unwrap();
-        let mut bye = String::new();
-        reader.read_line(&mut bye).unwrap();
-        assert_eq!(bye.trim(), "BYE");
+        let bye = send(&mut writer, &mut reader, "QUIT");
+        assert_eq!(bye, "BYE");
 
         server.shutdown();
     }

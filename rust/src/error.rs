@@ -65,6 +65,7 @@ impl Error {
     }
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())

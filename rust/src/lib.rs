@@ -16,12 +16,21 @@
 //!   ([`dpr`]), the greedy multi-task scheduler ([`scheduler`]), the
 //!   discrete-event CGRA timing model ([`sim`]), and the multi-tenant
 //!   request coordinator ([`coordinator`]).
-//! * **Runtime** — [`runtime`] loads the AOT artifacts through the PJRT C
-//!   API (`xla` crate) and executes them on the request path; Python never
-//!   runs at serve time.
+//! * **Runtime** — [`runtime`] executes the artifacts on the request
+//!   path.  Two backends serve one API: the default deterministic
+//!   in-process stub (fully offline), and the PJRT C API client
+//!   (`--features xla`).  Python never runs at serve time.
 //!
-//! See `DESIGN.md` for the architecture inventory and the experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! The serving front ([`coordinator::Server`]) is a concurrent
+//! worker-pool TCP server: per-tenant bounded admission queues, N
+//! scheduler workers batching concurrent SUBMITs into shared scheduler
+//! invocations, explicit `BUSY` backpressure, and graceful drain on
+//! shutdown.
+//!
+//! See `README.md` for the quickstart and wire protocol, `DESIGN.md`
+//! for the architecture inventory, and `EXPERIMENTS.md` for
+//! paper-vs-measured results and the bench index.
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod abstraction;
 pub mod arch;

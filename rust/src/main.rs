@@ -65,7 +65,8 @@ fn print_usage() {
            simulate-cloud     cloud scenario (§3.1 / Fig. 4)\n\
            simulate-edge      autonomous scenario (§3.2 / Fig. 5)\n\
            serve              live coordinator: schedule + execute artifacts\n\
-           serve-tcp          TCP front (--bind 127.0.0.1:7070): SUBMIT/STATS/QUIT\n\
+           serve-tcp          concurrent TCP front (--bind 127.0.0.1:7070):\n\
+                              SUBMIT/STATS/QUIT/SHUTDOWN, BUSY backpressure\n\
            verify-artifacts   golden-check every AOT artifact via PJRT\n\
            table1             print the Table 1 task library\n\
            render-arch        render the CGRA tile array (Fig. 1)\n\
@@ -77,10 +78,13 @@ fn print_usage() {
            --frames N         edge frames (default 600)\n\
            --seed S           workload RNG seed\n\
            --requests N       serve: number of requests (default 12)\n\
-           --artifacts DIR    artifacts directory (default artifacts)\n\
+           --artifacts DIR    artifacts directory (default: artifacts/ if built,\n\
+                              else the stub backend's built-in 'synthetic' set)\n\
            --config F         TOML config file (overrides defaults)\n\
            --export FILE      write per-request/per-frame CSV (simulate-*)\n\
-           --bind ADDR        serve-tcp bind address (default 127.0.0.1:7070)"
+           --bind ADDR        serve-tcp bind address (default 127.0.0.1:7070)\n\
+           --workers N        serve-tcp scheduler workers (default 2)\n\
+           --queue-depth N    serve-tcp per-tenant admission queue depth (default 32)"
     );
 }
 
@@ -219,11 +223,18 @@ fn simulate_edge(flags: &Flags) -> cgra_mte::Result<()> {
     Ok(())
 }
 
+/// Resolve the artifacts directory: explicit flag wins; otherwise the
+/// shared env-var / built-tree / synthetic-fallback resolution.
+fn resolve_artifacts_dir(flag: Option<&str>) -> String {
+    match flag {
+        Some(dir) => dir.to_string(),
+        None => cgra_mte::runtime::default_artifacts_dir(),
+    }
+}
+
 fn serve(flags: &Flags) -> cgra_mte::Result<()> {
     let mut cfg = flags.base_config(presets::paper_default())?;
-    if let Some(dir) = flags.get("artifacts") {
-        cfg.artifacts_dir = dir.to_string();
-    }
+    cfg.artifacts_dir = resolve_artifacts_dir(flags.get("artifacts"));
     let n = flags.get_u64("requests")?.unwrap_or(12);
     let mut leader = Leader::new(&cfg)?;
     println!("warmup: compiled all artifacts in {:.0} ms", leader.stats().warmup_ms);
@@ -307,26 +318,34 @@ fn sweep(flags: &Flags) -> cgra_mte::Result<()> {
 
 fn serve_tcp(flags: &Flags) -> cgra_mte::Result<()> {
     let mut cfg = flags.base_config(presets::paper_default())?;
-    if let Some(dir) = flags.get("artifacts") {
-        cfg.artifacts_dir = dir.to_string();
+    cfg.artifacts_dir = resolve_artifacts_dir(flags.get("artifacts"));
+    if let Some(w) = flags.get_u64("workers")? {
+        cfg.server.workers = w as u32;
     }
+    if let Some(d) = flags.get_u64("queue-depth")? {
+        cfg.server.queue_depth = d as u32;
+    }
+    cfg.validate()?;
     let bind = flags.get("bind").unwrap_or("127.0.0.1:7070");
     println!("compiling artifacts + binding {bind} ...");
     let server = cgra_mte::coordinator::Server::start(&cfg, bind)?;
     println!(
-        "listening on {} — protocol: SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris> | STATS | QUIT",
-        server.addr
+        "listening on {} — {} workers, queue depth {} per tenant\n\
+         protocol: SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris> | STATS [tenant] | QUIT | SHUTDOWN",
+        server.addr, cfg.server.workers, cfg.server.queue_depth
     );
-    println!("press Ctrl-C to stop");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
-    }
+    println!("send SHUTDOWN to stop gracefully (Ctrl-C terminates without draining)");
+    server.wait();
+    println!("server drained and shut down cleanly");
+    Ok(())
 }
 
 fn verify_artifacts(flags: &Flags) -> cgra_mte::Result<()> {
-    let dir = flags.get("artifacts").unwrap_or("artifacts");
-    let mut rt = cgra_mte::runtime::RuntimeClient::from_dir(dir)?;
-    rt.manifest().verify_files()?;
+    let dir = resolve_artifacts_dir(flags.get("artifacts"));
+    let mut rt = cgra_mte::runtime::RuntimeClient::from_dir(&dir)?;
+    if !rt.manifest().is_synthetic() {
+        rt.manifest().verify_files()?;
+    }
     let names: Vec<String> = rt.manifest().iter().map(|a| a.name.clone()).collect();
     let mut failures = 0;
     for name in &names {

@@ -1,0 +1,151 @@
+//! Per-tenant serving counters for the live coordinator.
+//!
+//! The worker-pool server ([`crate::coordinator::Server`]) is crossed by
+//! three thread populations — connection handlers, scheduler workers and
+//! the leader executor — so its counters are plain atomics: connection
+//! threads record admissions/rejections, workers record completions, and
+//! `STATS` renders a consistent-enough snapshot without any lock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Point-in-time snapshot of one tenant's (or the aggregate) counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantSnapshot {
+    /// SUBMITs admitted into the tenant's bounded queue.
+    pub queued: u64,
+    /// SUBMITs refused with `BUSY` (queue full / shutting down).
+    pub rejected: u64,
+    /// SUBMITs fully served (an `OK` reply was produced).
+    pub served: u64,
+}
+
+/// Lock-free per-tenant served/queued/rejected counters.
+#[derive(Debug)]
+pub struct ServeCounters {
+    queued: Vec<AtomicU64>,
+    rejected: Vec<AtomicU64>,
+    served: Vec<AtomicU64>,
+    /// Submissions that entered the scheduler but produced no outcome
+    /// (batch-level errors) — aggregate, not per-tenant.
+    failed: AtomicU64,
+}
+
+impl ServeCounters {
+    /// Counters for `tenants` tenants.
+    pub fn new(tenants: usize) -> ServeCounters {
+        let col = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        ServeCounters {
+            queued: col(tenants),
+            rejected: col(tenants),
+            served: col(tenants),
+            failed: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of tenants tracked.
+    pub fn tenants(&self) -> usize {
+        self.queued.len()
+    }
+
+    /// Record an admission for `tenant` (out-of-range ids are ignored).
+    pub fn record_queued(&self, tenant: usize) {
+        if let Some(c) = self.queued.get(tenant) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a `BUSY` rejection for `tenant`.
+    pub fn record_rejected(&self, tenant: usize) {
+        if let Some(c) = self.rejected.get(tenant) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a completed request for `tenant`.
+    pub fn record_served(&self, tenant: usize) {
+        if let Some(c) = self.served.get(tenant) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a submission lost to a batch-level error.
+    pub fn record_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of one tenant (zeros when out of range).
+    pub fn tenant(&self, tenant: usize) -> TenantSnapshot {
+        let read = |v: &[AtomicU64]| v.get(tenant).map_or(0, |c| c.load(Ordering::Relaxed));
+        TenantSnapshot {
+            queued: read(&self.queued),
+            rejected: read(&self.rejected),
+            served: read(&self.served),
+        }
+    }
+
+    /// Aggregate snapshot across all tenants.
+    pub fn totals(&self) -> TenantSnapshot {
+        let sum = |v: &[AtomicU64]| v.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        TenantSnapshot {
+            queued: sum(&self.queued),
+            rejected: sum(&self.rejected),
+            served: sum(&self.served),
+        }
+    }
+
+    /// Submissions lost to batch-level errors.
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_tenant_and_totals() {
+        let c = ServeCounters::new(4);
+        assert_eq!(c.tenants(), 4);
+        c.record_queued(0);
+        c.record_queued(0);
+        c.record_served(0);
+        c.record_queued(2);
+        c.record_rejected(2);
+        c.record_failed();
+        assert_eq!(c.tenant(0), TenantSnapshot { queued: 2, rejected: 0, served: 1 });
+        assert_eq!(c.tenant(2), TenantSnapshot { queued: 1, rejected: 1, served: 0 });
+        assert_eq!(c.tenant(3), TenantSnapshot::default());
+        assert_eq!(c.totals(), TenantSnapshot { queued: 3, rejected: 1, served: 1 });
+        assert_eq!(c.failed(), 1);
+    }
+
+    #[test]
+    fn out_of_range_tenants_are_ignored() {
+        let c = ServeCounters::new(2);
+        c.record_queued(7);
+        c.record_rejected(7);
+        c.record_served(7);
+        assert_eq!(c.totals(), TenantSnapshot::default());
+        assert_eq!(c.tenant(7), TenantSnapshot::default());
+    }
+
+    #[test]
+    fn concurrent_updates_are_not_lost() {
+        let c = std::sync::Arc::new(ServeCounters::new(1));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.record_queued(0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.tenant(0).queued, 4000);
+    }
+}

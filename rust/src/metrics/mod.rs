@@ -1,6 +1,7 @@
 //! Evaluation metrics (§3): NTAT, throughput, latency breakdown,
 //! utilization, and paper-style report tables.
 
+mod counters;
 pub mod export;
 mod latency;
 mod ntat;
@@ -8,6 +9,7 @@ mod report;
 mod throughput;
 mod utilization;
 
+pub use counters::{ServeCounters, TenantSnapshot};
 pub use latency::{FrameLatency, LatencyBreakdown};
 pub use ntat::{NtatRecord, NtatTracker};
 pub use report::{normalize, percent, ratio, Table};

@@ -21,7 +21,11 @@ pub enum AllocOutcome {
 }
 
 impl AllocOutcome {
-    /// Unwrap an allocation, panicking otherwise (test helper).
+    /// Unwrap an allocation, panicking otherwise.  A test helper only —
+    /// production paths must handle `NoFit`/`NeverFits` — so it is
+    /// compiled solely for this crate's tests, or for downstream test
+    /// suites via the `testutil` feature.
+    #[cfg(any(test, feature = "testutil"))]
     pub fn expect_allocated(self, msg: &str) -> ExecutionRegion {
         match self {
             AllocOutcome::Allocated(r) => r,

@@ -147,6 +147,77 @@ impl Manifest {
         self.dir.join(&spec.file)
     }
 
+    /// Built-in synthetic manifest for the stub runtime backend: one
+    /// small artifact per Table 1 task variant (all 19 names the task
+    /// library references) plus a `matmul_128` smoke artifact.  Golden
+    /// checksums are computed with [`crate::runtime::stub_output`] — the same function
+    /// the stub executor runs — so stub-mode golden verification passes
+    /// exactly and still catches arity/shape/ordering bugs.  Selected by
+    /// `artifacts_dir = "synthetic"` (see [`crate::runtime::SYNTHETIC_DIR`]).
+    pub fn synthetic() -> Manifest {
+        use super::inputs::{checksum_of, golden_input, stub_output};
+
+        let mut artifacts = BTreeMap::new();
+        let mut add = |name: &str, task: &str, variant: &str| {
+            let inputs = vec![
+                TensorSpec {
+                    shape: vec![16, 16],
+                    dtype: "f32".into(),
+                    range: (-1.0, 1.0),
+                    salt: 0,
+                    role: "activation".into(),
+                },
+                TensorSpec {
+                    shape: vec![16, 16],
+                    dtype: "f32".into(),
+                    range: (-0.5, 0.5),
+                    salt: 1,
+                    role: "weight".into(),
+                },
+            ];
+            let output_shape = vec![16usize, 16];
+            let args: Vec<Vec<f32>> = inputs
+                .iter()
+                .map(|t| golden_input(t.elements(), t.range.0, t.range.1, t.salt))
+                .collect();
+            let values = stub_output(name, &args, output_shape.iter().product());
+            let cs = checksum_of(&values);
+            artifacts.insert(
+                name.to_string(),
+                ArtifactSpec {
+                    name: name.to_string(),
+                    file: format!("{name}.hlo.txt"),
+                    task: task.to_string(),
+                    variant: variant.to_string(),
+                    inputs,
+                    output_shape,
+                    golden: Golden { sum: cs.sum, abs_sum: cs.abs_sum, head: cs.head },
+                    hlo_bytes: 0,
+                },
+            );
+        };
+        for t in crate::tasks::TaskLibrary::table1().iter() {
+            for v in &t.variants {
+                if let Some(name) = &v.artifact {
+                    add(name, &t.id.0, &v.ver.0.to_string());
+                }
+            }
+        }
+        add("matmul_128", "demo.matmul", "a");
+        Manifest {
+            dir: PathBuf::from(super::SYNTHETIC_DIR),
+            version: SUPPORTED_VERSION,
+            size: "synthetic".into(),
+            artifacts,
+        }
+    }
+
+    /// Whether this manifest is the built-in synthetic one (no files on
+    /// disk back it, so [`Manifest::verify_files`] does not apply).
+    pub fn is_synthetic(&self) -> bool {
+        self.dir == Path::new(super::SYNTHETIC_DIR)
+    }
+
     /// Verify files exist and sizes match the manifest.
     pub fn verify_files(&self) -> Result<()> {
         for spec in self.iter() {
@@ -295,6 +366,24 @@ mod tests {
             r#""inputs": []"#,
         );
         assert!(Manifest::parse(Path::new("."), &no_inputs).is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_covers_table1_and_self_verifies() {
+        let m = Manifest::synthetic();
+        assert!(m.is_synthetic());
+        assert_eq!(m.version, SUPPORTED_VERSION);
+        // 19 Table 1 variants + matmul_128
+        assert_eq!(m.len(), 20);
+        for t in crate::tasks::TaskLibrary::table1().iter() {
+            for v in &t.variants {
+                let name = v.artifact.as_ref().unwrap();
+                let spec = m.get(name).unwrap();
+                assert_eq!(spec.task, t.id.0);
+                assert!(spec.output_elements() > 0);
+                assert!(spec.golden.abs_sum > 0.0, "{name}: degenerate golden");
+            }
+        }
     }
 
     #[test]

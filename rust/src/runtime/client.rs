@@ -12,25 +12,8 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 
 use super::artifact::Manifest;
-use super::inputs::{checksum_of, golden_input, Checksum};
-
-/// Output of one artifact execution.
-#[derive(Clone, Debug)]
-pub struct ExecOutput {
-    /// Flattened f32 output values.
-    pub values: Vec<f32>,
-    /// Expected output shape (from the manifest).
-    pub shape: Vec<usize>,
-    /// Host wall-clock microseconds for the execute call.
-    pub exec_us: f64,
-}
-
-impl ExecOutput {
-    /// Checksum of the output.
-    pub fn checksum(&self) -> Checksum {
-        checksum_of(&self.values)
-    }
-}
+use super::exec::ExecOutput;
+use super::inputs::golden_input;
 
 /// PJRT runtime with compile-once executable caching.
 pub struct RuntimeClient {

@@ -1,0 +1,26 @@
+//! Execution output type shared by both runtime backends.
+//!
+//! The PJRT-backed client (`--features xla`) and the default in-process
+//! stub executor produce the same [`ExecOutput`], so everything above
+//! the runtime boundary (coordinator, benches, examples) is
+//! backend-agnostic.
+
+use super::inputs::{checksum_of, Checksum};
+
+/// Output of one artifact execution.
+#[derive(Clone, Debug)]
+pub struct ExecOutput {
+    /// Flattened f32 output values.
+    pub values: Vec<f32>,
+    /// Expected output shape (from the manifest).
+    pub shape: Vec<usize>,
+    /// Host wall-clock microseconds for the execute call.
+    pub exec_us: f64,
+}
+
+impl ExecOutput {
+    /// Checksum of the output.
+    pub fn checksum(&self) -> Checksum {
+        checksum_of(&self.values)
+    }
+}

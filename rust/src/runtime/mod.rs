@@ -1,21 +1,70 @@
-//! PJRT runtime: executes the AOT-compiled task artifacts (Layer 1/2).
+//! Runtime: executes the AOT-compiled task artifacts (Layer 1/2).
 //!
 //! `make artifacts` lowers every Table 1 task variant from JAX/Pallas to
-//! HLO **text** (see `python/compile/aot.py`); this module loads those
-//! files through the `xla` crate's PJRT C API bindings, compiles them
-//! once, and executes them on the request path.  Python never runs at
-//! serve time.
+//! HLO **text** (see `python/compile/aot.py`); the runtime loads those
+//! files, compiles them once, and executes them on the request path.
+//! Python never runs at serve time.
 //!
-//! * [`Manifest`] / [`ArtifactSpec`] — parsed `artifacts/manifest.json`.
+//! Two interchangeable backends provide [`RuntimeClient`]:
+//!
+//! * **stub** (default) — a deterministic in-process executor
+//!   (`stub.rs`): no external dependencies, works fully offline, and
+//!   serves the built-in synthetic manifest when `artifacts_dir` is the
+//!   [`SYNTHETIC_DIR`] sentinel.  Outputs are synthesized, not computed.
+//! * **PJRT** (`--features xla`) — the real thing (`client.rs`): HLO
+//!   text → `HloModuleProto` → compile → execute through the `xla`
+//!   crate's PJRT C API bindings, golden-verified against the manifest.
+//!
+//! * [`Manifest`] / [`ArtifactSpec`] — parsed `artifacts/manifest.json`
+//!   (or [`Manifest::synthetic`]).
 //! * [`golden_input`] — bit-identical mirror of the Python deterministic
 //!   input generator, enabling end-to-end numerics verification against
 //!   the manifest's golden checksums.
-//! * [`RuntimeClient`] — PJRT CPU client with an executable cache.
+//! * [`RuntimeClient`] — backend client with an executable cache.
 
 mod artifact;
+#[cfg(feature = "xla")]
 mod client;
+mod exec;
 mod inputs;
+#[cfg(not(feature = "xla"))]
+mod stub;
+
+/// Sentinel `artifacts_dir` value selecting the built-in synthetic
+/// manifest in stub mode (no files on disk required).
+pub const SYNTHETIC_DIR: &str = "synthetic";
+
+/// Resolve the default artifacts directory for binaries and examples.
+///
+/// `$CGRA_MTE_ARTIFACTS` always wins when set.  Under `--features xla`
+/// the first of `artifacts/` or `rust/artifacts/` (where `make
+/// artifacts` writes when invoked from the workspace root) containing a
+/// manifest is used, falling back to `artifacts` so a missing build
+/// errors loudly.  The stub backend always defaults to the built-in
+/// synthetic manifest: it cannot reproduce a real manifest's golden
+/// checksums, so auto-selecting an on-disk build would fail every
+/// golden-verified request — loading one anyway requires the env var or
+/// an explicit `--artifacts` flag.
+pub fn default_artifacts_dir() -> String {
+    if let Ok(dir) = std::env::var("CGRA_MTE_ARTIFACTS") {
+        return dir;
+    }
+    if cfg!(feature = "xla") {
+        for dir in ["artifacts", "rust/artifacts"] {
+            if std::path::Path::new(dir).join("manifest.json").exists() {
+                return dir.to_string();
+            }
+        }
+        "artifacts".to_string()
+    } else {
+        SYNTHETIC_DIR.to_string()
+    }
+}
 
 pub use artifact::{ArtifactSpec, Golden, Manifest, TensorSpec};
-pub use client::{ExecOutput, RuntimeClient};
-pub use inputs::{checksum_of, golden_input, Checksum};
+#[cfg(feature = "xla")]
+pub use client::RuntimeClient;
+pub use exec::ExecOutput;
+pub use inputs::{checksum_of, fnv1a, golden_input, stub_output, Checksum};
+#[cfg(not(feature = "xla"))]
+pub use stub::RuntimeClient;

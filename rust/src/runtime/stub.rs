@@ -1,0 +1,215 @@
+//! Deterministic in-process stub executor — the default runtime backend.
+//!
+//! Serves the exact API of the PJRT client in `client.rs` (selected with
+//! `--features xla`) so the coordinator, benches, examples and tests
+//! build and run fully offline: "compilation" records a deterministic
+//! pseudo-cost, "execution" synthesizes output tensors from the artifact
+//! name and input digests via [`stub_output`].
+//!
+//! Two manifest sources work in stub mode:
+//!
+//! * the built-in synthetic manifest ([`Manifest::synthetic`]), selected
+//!   by the [`super::SYNTHETIC_DIR`] sentinel (`artifacts_dir =
+//!   "synthetic"`): golden checksums were computed with the same stub
+//!   function, so [`RuntimeClient::verify_golden`] passes exactly;
+//! * a real `manifest.json` produced by `make artifacts`: loading works,
+//!   but golden verification will fail because the stub does not run the
+//!   HLO — use `--features xla` for real numerics.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+use super::artifact::Manifest;
+use super::exec::ExecOutput;
+use super::inputs::{golden_input, stub_output};
+
+/// Stub runtime with the PJRT client's compile-once caching shape.
+pub struct RuntimeClient {
+    manifest: Manifest,
+    /// pseudo compile wall-times per artifact, microseconds.
+    compile_us: BTreeMap<String, f64>,
+    /// memoized golden argument sets (mirrors the PJRT client).
+    golden_cache: BTreeMap<String, Vec<Vec<f32>>>,
+}
+
+impl RuntimeClient {
+    /// Create a stub client over a loaded manifest.
+    pub fn new(manifest: Manifest) -> Result<RuntimeClient> {
+        Ok(RuntimeClient {
+            manifest,
+            compile_us: BTreeMap::new(),
+            golden_cache: BTreeMap::new(),
+        })
+    }
+
+    /// Convenience: load the manifest from a directory and connect.  The
+    /// sentinel directory [`super::SYNTHETIC_DIR`] selects the built-in
+    /// synthetic manifest; any other path must contain `manifest.json`.
+    pub fn from_dir(dir: impl AsRef<Path>) -> Result<RuntimeClient> {
+        let dir = dir.as_ref();
+        if dir == Path::new(super::SYNTHETIC_DIR) {
+            return RuntimeClient::new(Manifest::synthetic());
+        }
+        RuntimeClient::new(Manifest::load(dir)?)
+    }
+
+    /// A client over the built-in synthetic manifest.
+    pub fn synthetic() -> RuntimeClient {
+        RuntimeClient::new(Manifest::synthetic()).expect("synthetic manifest is infallible")
+    }
+
+    /// Backend name (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Number of "compiled" executables resident.
+    pub fn compiled_count(&self) -> usize {
+        self.compile_us.len()
+    }
+
+    /// Compile-time (µs) of an already-compiled artifact.
+    pub fn compile_us(&self, name: &str) -> Option<f64> {
+        self.compile_us.get(name).copied()
+    }
+
+    /// Ensure an artifact is "compiled"; returns its pseudo compile time
+    /// in µs (0 if it was already cached).  The cost is deterministic
+    /// and scales with tensor volume so warmup accounting stays
+    /// meaningful.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<f64> {
+        if self.compile_us.contains_key(name) {
+            return Ok(0.0);
+        }
+        let spec = self.manifest.get(name)?;
+        let volume: usize =
+            spec.inputs.iter().map(|t| t.elements()).sum::<usize>() + spec.output_elements();
+        let us = 50.0 + volume as f64 * 0.01;
+        self.compile_us.insert(name.to_string(), us);
+        Ok(us)
+    }
+
+    /// Execute an artifact on caller-provided argument tensors (one
+    /// flattened f32 buffer per manifest input, in order).
+    pub fn execute(&mut self, name: &str, args: &[Vec<f32>]) -> Result<ExecOutput> {
+        self.ensure_compiled(name)?;
+        let spec = self.manifest.get(name)?.clone();
+        if args.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: got {} args, artifact expects {}",
+                args.len(),
+                spec.inputs.len()
+            )));
+        }
+        for (arg, input) in args.iter().zip(&spec.inputs) {
+            if arg.len() != input.elements() {
+                return Err(Error::Runtime(format!(
+                    "{name}: arg has {} elements, artifact expects {}",
+                    arg.len(),
+                    input.elements()
+                )));
+            }
+        }
+        let t0 = Instant::now();
+        let values = stub_output(name, args, spec.output_elements());
+        let exec_us = (t0.elapsed().as_secs_f64() * 1e6).max(0.01);
+        Ok(ExecOutput { values, shape: spec.output_shape.clone(), exec_us })
+    }
+
+    /// Synthesize the deterministic argument set for an artifact.
+    pub fn golden_args(&self, name: &str) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.get(name)?;
+        Ok(spec
+            .inputs
+            .iter()
+            .map(|t| golden_input(t.elements(), t.range.0, t.range.1, t.salt))
+            .collect())
+    }
+
+    /// Execute on the deterministic golden inputs (memoized).
+    pub fn execute_golden(&mut self, name: &str) -> Result<ExecOutput> {
+        if !self.golden_cache.contains_key(name) {
+            let args = self.golden_args(name)?;
+            self.golden_cache.insert(name.to_string(), args);
+        }
+        let args = self.golden_cache.get(name).expect("just inserted").clone();
+        self.execute(name, &args)
+    }
+
+    /// Execute on golden input and verify against the manifest checksum.
+    /// Returns the output on success.
+    pub fn verify_golden(&mut self, name: &str) -> Result<ExecOutput> {
+        let out = self.execute_golden(name)?;
+        let spec = self.manifest.get(name)?;
+        let cs = out.checksum();
+        if !cs.close_to(spec.golden.sum, spec.golden.abs_sum, &spec.golden.head, 1e-3) {
+            return Err(Error::Runtime(format!(
+                "{name}: golden mismatch — got sum={:.6} abs={:.6}, manifest sum={:.6} abs={:.6}",
+                cs.sum, cs.abs_sum, spec.golden.sum, spec.golden.abs_sum
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_artifacts_all_golden_verify() {
+        let mut rt = RuntimeClient::synthetic();
+        assert_eq!(rt.platform(), "stub-cpu");
+        let names: Vec<String> = rt.manifest().iter().map(|a| a.name.clone()).collect();
+        assert_eq!(names.len(), 20);
+        for name in &names {
+            let out = rt.verify_golden(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(out.shape, vec![16, 16]);
+            assert!(out.exec_us > 0.0);
+            assert!(out.values.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(rt.compiled_count(), names.len());
+        assert!(rt.compile_us("harris_a").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn executions_are_reproducible() {
+        let mut rt = RuntimeClient::synthetic();
+        let a = rt.execute_golden("camera_pipeline_a").unwrap();
+        let b = rt.execute_golden("camera_pipeline_a").unwrap();
+        assert_eq!(a.values, b.values);
+        // and distinct across artifacts
+        let c = rt.execute_golden("camera_pipeline_b").unwrap();
+        assert_ne!(a.values, c.values);
+    }
+
+    #[test]
+    fn input_arity_and_shape_checked() {
+        let mut rt = RuntimeClient::synthetic();
+        assert!(rt.execute("matmul_128", &[vec![1.0f32; 3]]).is_err());
+        assert!(rt
+            .execute("matmul_128", &[vec![0.0f32; 3], vec![0.0f32; 3]])
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_and_missing_dir_error() {
+        let mut rt = RuntimeClient::synthetic();
+        assert!(rt.execute_golden("no_such_artifact").is_err());
+        assert!(RuntimeClient::from_dir("/nonexistent/artifacts").is_err());
+    }
+
+    #[test]
+    fn sentinel_dir_selects_synthetic() {
+        let rt = RuntimeClient::from_dir(crate::runtime::SYNTHETIC_DIR).unwrap();
+        assert!(rt.manifest().is_synthetic());
+    }
+}

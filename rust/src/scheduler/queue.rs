@@ -82,6 +82,17 @@ impl RequestQueue {
         self.requests.len()
     }
 
+    /// Open (incomplete) requests per tenant — backlog introspection for
+    /// the multi-tenant serving front (the leader reports it when a
+    /// batch fails mid-serve and strands admitted requests).
+    pub fn open_requests_by_tenant(&self) -> BTreeMap<u32, usize> {
+        let mut out = BTreeMap::new();
+        for req in self.requests.values() {
+            *out.entry(req.tenant).or_insert(0) += 1;
+        }
+        out
+    }
+
     /// Mark an instance as launched (moves ready → running).
     pub fn mark_launched(&mut self, inst: TaskInstanceId) -> Result<()> {
         self.ready
@@ -172,6 +183,28 @@ mod tests {
         assert_eq!(ready.len(), 2);
         assert_eq!(ready[0].instance.request, 0);
         assert_eq!(ready[1].instance.request, 1);
+    }
+
+    #[test]
+    fn backlog_tracked_per_tenant() {
+        let mut q = RequestQueue::new();
+        q.submit(AppRequest::new(0, 0, AppId::Harris, 0));
+        q.submit(AppRequest::new(1, 2, AppId::Camera, 1));
+        q.submit(AppRequest::new(2, 2, AppId::Harris, 2));
+        let by_tenant = q.open_requests_by_tenant();
+        assert_eq!(by_tenant.get(&0), Some(&1));
+        assert_eq!(by_tenant.get(&2), Some(&2));
+        assert_eq!(by_tenant.get(&1), None);
+        // completing tenant 0's single-task request clears its backlog
+        let inst = q
+            .ready_tasks()
+            .iter()
+            .find(|r| r.tenant == 0)
+            .unwrap()
+            .instance;
+        q.mark_launched(inst).unwrap();
+        q.mark_complete(inst, 5).unwrap();
+        assert_eq!(q.open_requests_by_tenant().get(&0), None);
     }
 
     #[test]

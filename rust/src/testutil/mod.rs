@@ -1,4 +1,6 @@
-//! Mini property-testing harness (`proptest` is unavailable offline).
+//! Mini property-testing harness (`proptest` is unavailable offline),
+//! plus the [`wire`] TCP client shared by the server's loopback tests
+//! and the `tcp_client` example.
 //!
 //! [`forall`] runs a property over generated cases with linear shrinking
 //! on failure: when a case fails, the harness re-runs the property on
@@ -6,6 +8,8 @@
 //! order (re-generation with smaller size budgets), reporting the
 //! smallest failing seed.  Properties are deterministic per seed, so a
 //! failure message's seed reproduces exactly.
+
+pub mod wire;
 
 use crate::util::rng::Rng;
 

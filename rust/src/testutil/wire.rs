@@ -1,0 +1,54 @@
+//! Line-protocol TCP client for driving the coordinator's serving front.
+//!
+//! Shared by the loopback concurrency tests and the `tcp_client`
+//! example/load generator so the wire handling (one line out, one line
+//! back, retry on `BUSY` backpressure) lives in exactly one place.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use crate::error::{Error, Result};
+
+/// One-line-out, one-line-back client for the SUBMIT/STATS protocol of
+/// [`crate::coordinator::Server`].
+pub struct WireClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl WireClient {
+    /// Connect to a serving front.
+    pub fn connect(addr: SocketAddr) -> Result<WireClient> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| Error::io(addr.to_string(), e))?;
+        let writer = stream.try_clone().map_err(|e| Error::io("clone", e))?;
+        Ok(WireClient { writer, reader: BufReader::new(stream) })
+    }
+
+    /// Send one protocol line; returns the reply line (trimmed).
+    pub fn send(&mut self, line: &str) -> Result<String> {
+        self.writer
+            .write_all(format!("{line}\n").as_bytes())
+            .map_err(|e| Error::io("write", e))?;
+        let mut reply = String::new();
+        self.reader
+            .read_line(&mut reply)
+            .map_err(|e| Error::io("read", e))?;
+        Ok(reply.trim_end().to_string())
+    }
+
+    /// SUBMIT with retry on `BUSY` backpressure; returns the final
+    /// (non-BUSY) reply and how many BUSY retries it took.
+    pub fn submit(&mut self, tenant: u32, app: &str) -> Result<(String, u32)> {
+        let mut retries = 0;
+        loop {
+            let reply = self.send(&format!("SUBMIT {tenant} {app}"))?;
+            if reply.starts_with("BUSY") {
+                retries += 1;
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            return Ok((reply, retries));
+        }
+    }
+}
