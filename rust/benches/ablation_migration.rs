@@ -1,0 +1,189 @@
+//! Migration ablation — sustained utilization under a long-running
+//! churn workload with defragmentation off / greedy / cost-aware.
+//!
+//! The claim to quantify: under past-saturation churn the slice maps
+//! fragment, free-but-noncontiguous slices pile up, and `NoFit` stalls
+//! grow; live migration (checkpoint → fast-DPR relocation → GLB copy →
+//! resume) recovers that capacity, so the same offered load finishes in
+//! a shorter makespan at higher sustained utilization with fewer `NoFit`
+//! events.  Arrivals are seed-identical across the three policies —
+//! only the defrag policy differs.
+//!
+//! Output: a human table plus machine-readable `BENCH_migration.json`
+//! (schema shared with `fig4_cloud.rs` via `cgra_mte::bench::jsonw`) so
+//! the perf trajectory is tracked across PRs.
+//!
+//! `--smoke` runs one short seed — the CI liveness mode.
+
+use cgra_mte::bench::jsonw;
+use cgra_mte::config::{presets, DefragPolicyKind, RegionPolicyKind, WorkloadConfig};
+use cgra_mte::metrics::{export, Table};
+use cgra_mte::sim::{run_cloud, CloudReport};
+
+const FULL_SEEDS: [u64; 3] = [11, 23, 47];
+const SMOKE_SEEDS: [u64; 1] = [11];
+const FULL_DURATION_MS: f64 = 2_000.0;
+const SMOKE_DURATION_MS: f64 = 400.0;
+
+/// Seed-averaged metrics for one defrag policy.
+#[derive(Clone, Copy, Debug, Default)]
+struct Row {
+    glb_util: f64,
+    array_util: f64,
+    frag_glb: f64,
+    frag_arr: f64,
+    nofit: f64,
+    migrations: f64,
+    migration_cycles: f64,
+    rescued: f64,
+    mean_ntat: f64,
+    makespan: f64,
+}
+
+fn run(defrag: DefragPolicyKind, seed: u64, duration_ms: f64) -> CloudReport {
+    let mut cfg = presets::churn_scenario(RegionPolicyKind::FlexibleShape, defrag);
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.seed = seed;
+        c.duration_ms = duration_ms;
+    }
+    run_cloud(&cfg).expect("churn sim runs")
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let seeds: &[u64] = if smoke { &SMOKE_SEEDS } else { &FULL_SEEDS };
+    let duration_ms = if smoke { SMOKE_DURATION_MS } else { FULL_DURATION_MS };
+    let t0 = std::time::Instant::now();
+
+    let policies = DefragPolicyKind::ALL;
+    let mut rows = vec![Row::default(); policies.len()];
+    for (pi, policy) in policies.iter().enumerate() {
+        for &seed in seeds {
+            let r = run(*policy, seed, duration_ms);
+            assert_eq!(r.submitted, r.completed, "churn must drain");
+            let n = seeds.len() as f64;
+            let row = &mut rows[pi];
+            row.glb_util += r.glb_utilization / n;
+            row.array_util += r.array_utilization / n;
+            row.frag_glb += r.frag.0 / n;
+            row.frag_arr += r.frag.1 / n;
+            row.nofit += r.nofit_events as f64 / n;
+            row.migrations += r.migrations as f64 / n;
+            row.migration_cycles += r.migration_cycles as f64 / n;
+            row.rescued += r.rescued_launches as f64 / n;
+            row.mean_ntat += r.mean_ntat_across_apps() / n;
+            row.makespan += r.makespan_cycles as f64 / n;
+        }
+    }
+
+    let mut table = Table::new(
+        "Migration ablation — flexible-shape churn (equal offered load)",
+        &[
+            "defrag", "arr util", "glb util", "arr frag", "NoFit", "migr", "rescued",
+            "mean NTAT", "makespan Mcyc",
+        ],
+    );
+    for (pi, policy) in policies.iter().enumerate() {
+        let r = &rows[pi];
+        table.row(&[
+            policy.name().to_string(),
+            format!("{:.3}", r.array_util),
+            format!("{:.3}", r.glb_util),
+            format!("{:.3}", r.frag_arr),
+            format!("{:.0}", r.nofit),
+            format!("{:.0}", r.migrations),
+            format!("{:.0}", r.rescued),
+            format!("{:.2}", r.mean_ntat),
+            format!("{:.1}", r.makespan / 1e6),
+        ]);
+    }
+    print!("{}", table.render());
+
+    let off = &rows[0];
+    let cost_aware = &rows[2];
+    let util_gain = cost_aware.array_util - off.array_util;
+    let nofit_cut = off.nofit - cost_aware.nofit;
+    let beats = cost_aware.array_util > off.array_util && cost_aware.nofit < off.nofit;
+    println!(
+        "cost-aware vs off: array util {:.3} -> {:.3} ({:+.1}%), NoFit {:.0} -> {:.0} ({:+.0}), \
+         makespan {:.1} -> {:.1} Mcyc — {}",
+        off.array_util,
+        cost_aware.array_util,
+        util_gain / off.array_util.max(1e-9) * 100.0,
+        off.nofit,
+        cost_aware.nofit,
+        -nofit_cut,
+        off.makespan / 1e6,
+        cost_aware.makespan / 1e6,
+        if beats { "PASS (cost-aware strictly better)" } else { "FAIL" }
+    );
+
+    let row_json = |policy: DefragPolicyKind, r: &Row| {
+        jsonw::obj(&[
+            ("defrag", jsonw::str_val(policy.name())),
+            ("array_util", jsonw::num_f(r.array_util)),
+            ("glb_util", jsonw::num_f(r.glb_util)),
+            ("frag_glb", jsonw::num_f(r.frag_glb)),
+            ("frag_arr", jsonw::num_f(r.frag_arr)),
+            ("nofit_events", jsonw::num_f(r.nofit)),
+            ("migrations", jsonw::num_f(r.migrations)),
+            ("migration_cycles", jsonw::num_f(r.migration_cycles)),
+            ("rescued_launches", jsonw::num_f(r.rescued)),
+            ("mean_ntat", jsonw::num_f(r.mean_ntat)),
+            ("makespan_cycles", jsonw::num_f(r.makespan)),
+        ])
+    };
+    let doc = jsonw::obj(&[
+        ("bench", jsonw::str_val("ablation_migration")),
+        ("scenario", jsonw::str_val("cloud-churn/flexible")),
+        ("smoke", jsonw::bool_val(smoke)),
+        ("duration_ms", jsonw::num_f(duration_ms)),
+        (
+            "seeds",
+            jsonw::arr(&seeds.iter().map(|&s| jsonw::num_u(s)).collect::<Vec<_>>()),
+        ),
+        (
+            "rows",
+            jsonw::arr(
+                &policies
+                    .iter()
+                    .enumerate()
+                    .map(|(pi, p)| row_json(*p, &rows[pi]))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+        (
+            "delta",
+            jsonw::obj(&[
+                ("array_util_gain", jsonw::num_f(util_gain)),
+                (
+                    "array_util_gain_pct",
+                    jsonw::num_f(util_gain / off.array_util.max(1e-9) * 100.0),
+                ),
+                ("nofit_reduction", jsonw::num_f(nofit_cut)),
+                (
+                    "makespan_speedup",
+                    jsonw::num_f(off.makespan / cost_aware.makespan.max(1.0)),
+                ),
+                ("cost_aware_beats_off", jsonw::bool_val(beats)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_migration.json";
+    export::write_file(path, &doc).expect("write bench json");
+    println!("wrote {path}");
+    println!(
+        "bench wall time: {:.1} s ({} seeds x {} policies)",
+        t0.elapsed().as_secs_f64(),
+        seeds.len(),
+        policies.len()
+    );
+    // The acceptance criterion is enforced, not just printed: the full
+    // (seed-averaged) run must show cost-aware strictly better than off.
+    // Smoke mode stays advisory — one short seed is a liveness check,
+    // not a statistically meaningful comparison.
+    if !smoke && !beats {
+        eprintln!("acceptance FAILED: cost-aware did not strictly beat defrag-off");
+        std::process::exit(1);
+    }
+}

@@ -8,8 +8,9 @@
 //! NTAT reductions in the tens of percent and throughput gains in the
 //! 1.05–1.3× band.
 
+use cgra_mte::bench::jsonw;
 use cgra_mte::config::{presets, RegionPolicyKind, WorkloadConfig};
-use cgra_mte::metrics::{normalize, Table};
+use cgra_mte::metrics::{export, normalize, Table};
 use cgra_mte::sim::{run_cloud, CloudReport};
 use cgra_mte::tasks::AppId;
 
@@ -101,5 +102,52 @@ fn main() {
         mean(&ntat[2]),
         mean(&ntat[3])
     );
+
+    // machine-readable trajectory file (schema shared with
+    // ablation_migration via bench::jsonw)
+    let mech_json = |pi: usize, policy: RegionPolicyKind| {
+        let apps: Vec<String> = AppId::ALL
+            .iter()
+            .enumerate()
+            .map(|(ai, app)| {
+                jsonw::obj(&[
+                    ("app", jsonw::str_val(app.name())),
+                    ("ntat_norm", jsonw::num_f(normalize(ntat[pi][ai], ntat[0][ai]))),
+                    ("tput_norm", jsonw::num_f(normalize(tput[pi][ai], tput[0][ai]))),
+                ])
+            })
+            .collect();
+        jsonw::obj(&[
+            ("mechanism", jsonw::str_val(policy.name())),
+            ("mean_ntat", jsonw::num_f(mean(&ntat[pi]))),
+            ("apps", jsonw::arr(&apps)),
+        ])
+    };
+    let doc = jsonw::obj(&[
+        ("bench", jsonw::str_val("fig4_cloud")),
+        ("duration_ms", jsonw::num_f(DURATION_MS)),
+        (
+            "seeds",
+            jsonw::arr(&SEEDS.iter().map(|&s| jsonw::num_u(s)).collect::<Vec<_>>()),
+        ),
+        (
+            "rows",
+            jsonw::arr(
+                &RegionPolicyKind::ALL
+                    .iter()
+                    .enumerate()
+                    .map(|(pi, p)| mech_json(pi, *p))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+        ("flexible_ntat_norm", jsonw::num_f(flex_ntat)),
+        (
+            "flexible_tput_range",
+            jsonw::arr(&[jsonw::num_f(flex_tput_lo), jsonw::num_f(flex_tput_hi)]),
+        ),
+    ]);
+    let path = "BENCH_fig4_cloud.json";
+    export::write_file(path, &doc).expect("write bench json");
+    println!("wrote {path}");
     println!("bench wall time: {:.1} s ({} seeds x 4 mechanisms)", t0.elapsed().as_secs_f64(), SEEDS.len());
 }

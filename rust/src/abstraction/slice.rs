@@ -193,6 +193,29 @@ impl SliceMap {
         }
     }
 
+    /// Canonical free list: every maximal free run, left to right.
+    ///
+    /// Runs are maximal by construction (adjacent free slices always
+    /// merge into one range), so this is the coalesced view the
+    /// defragmentation planner ([`crate::migration`]) works from.
+    pub fn free_runs(&self) -> Vec<SliceRange> {
+        let mut out = Vec::new();
+        let mut start: Option<u32> = None;
+        for i in 0..self.len() {
+            if !self.busy[i as usize] {
+                if start.is_none() {
+                    start = Some(i);
+                }
+            } else if let Some(s) = start.take() {
+                out.push(SliceRange::new(s, i - s));
+            }
+        }
+        if let Some(s) = start {
+            out.push(SliceRange::new(s, self.len() - s));
+        }
+        out
+    }
+
     /// External fragmentation in `[0, 1]`: 1 − longest-free-run / free.
     /// Zero when all free slices are contiguous (or none are free).
     pub fn fragmentation(&self) -> f64 {
@@ -288,6 +311,28 @@ mod tests {
         let mut m = SliceMap::new(4);
         m.occupy(&SliceRange::new(1, 2));
         assert_eq!(m.render(), ".##.");
+    }
+
+    #[test]
+    fn free_runs_are_maximal_and_canonical() {
+        let mut m = SliceMap::new(8);
+        assert_eq!(m.free_runs(), vec![SliceRange::new(0, 8)]);
+        m.occupy(&SliceRange::new(2, 2)); // ..##....
+        m.occupy(&SliceRange::new(6, 1)); // ..##..#.
+        assert_eq!(
+            m.free_runs(),
+            vec![SliceRange::new(0, 2), SliceRange::new(4, 2), SliceRange::new(7, 1)]
+        );
+        // releasing in two adjacent halves still yields one merged run
+        m.release(&SliceRange::new(2, 1));
+        m.release(&SliceRange::new(3, 1));
+        assert_eq!(m.free_runs(), vec![SliceRange::new(0, 6), SliceRange::new(7, 1)]);
+        let fully_busy = {
+            let mut b = SliceMap::new(2);
+            b.occupy(&SliceRange::new(0, 2));
+            b
+        };
+        assert!(fully_busy.free_runs().is_empty());
     }
 
     #[test]

@@ -9,6 +9,69 @@ use std::time::Instant;
 
 use crate::util::stats::Summary;
 
+/// Tiny JSON writer for machine-readable bench reports (`BENCH_*.json`).
+///
+/// Bench binaries print human tables; the perf-trajectory tooling wants
+/// a stable JSON file per bench so results are comparable across PRs.
+/// Values are pre-rendered JSON fragments — use [`jsonw::str_val`],
+/// [`jsonw::num_f`], [`jsonw::num_u`], [`jsonw::bool_val`],
+/// [`jsonw::arr`], and [`jsonw::obj`] to build them; everything round-
+/// trips through [`crate::util::json::Json`].
+pub mod jsonw {
+    /// Escape a string for a JSON string literal.
+    pub fn esc(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    /// A JSON string value.
+    pub fn str_val(s: &str) -> String {
+        format!("\"{}\"", esc(s))
+    }
+
+    /// A JSON number from a float (non-finite values become `null`).
+    pub fn num_f(x: f64) -> String {
+        if x.is_finite() {
+            format!("{x:.6}")
+        } else {
+            "null".into()
+        }
+    }
+
+    /// A JSON number from an unsigned integer.
+    pub fn num_u(x: u64) -> String {
+        x.to_string()
+    }
+
+    /// A JSON boolean.
+    pub fn bool_val(b: bool) -> String {
+        b.to_string()
+    }
+
+    /// A JSON array of pre-rendered values.
+    pub fn arr(items: &[String]) -> String {
+        format!("[{}]", items.join(","))
+    }
+
+    /// A JSON object of (key, pre-rendered value) pairs.
+    pub fn obj(fields: &[(&str, String)]) -> String {
+        let body: Vec<String> =
+            fields.iter().map(|(k, v)| format!("\"{}\":{}", esc(k), v)).collect();
+        format!("{{{}}}", body.join(","))
+    }
+}
+
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -138,5 +201,33 @@ mod tests {
         let b = Bencher { warmup_iters: 0, samples: 2, iters_per_sample: 10 };
         let r = b.run("my-bench", || 42);
         assert!(r.line().contains("my-bench"));
+    }
+
+    #[test]
+    fn jsonw_output_round_trips_through_parser() {
+        use super::jsonw::*;
+        let doc = obj(&[
+            ("bench", str_val("ablation_migration")),
+            ("smoke", bool_val(true)),
+            ("seeds", arr(&[num_u(11), num_u(23)])),
+            ("util", num_f(0.625)),
+            ("nan_guard", num_f(f64::NAN)),
+            ("label", str_val("quote \" backslash \\ tab\t")),
+            (
+                "rows",
+                arr(&[obj(&[("defrag", str_val("off")), ("nofit", num_u(42))])]),
+            ),
+        ]);
+        let v = crate::util::json::Json::parse(&doc).unwrap();
+        assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("ablation_migration"));
+        assert_eq!(v.get("seeds").map(|s| s.items().len()), Some(2));
+        assert_eq!(v.req_f64("util").unwrap(), 0.625);
+        assert_eq!(v.get("nan_guard"), Some(&crate::util::json::Json::Null));
+        let rows = v.get("rows").unwrap().items();
+        assert_eq!(rows[0].req_f64("nofit").unwrap(), 42.0);
+        assert_eq!(
+            rows[0].get("defrag").and_then(|d| d.as_str()),
+            Some("off")
+        );
     }
 }

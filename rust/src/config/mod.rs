@@ -10,7 +10,8 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    ArchConfig, CloudWorkloadConfig, Config, DprConfig, EdgeWorkloadConfig, RegionPolicyKind,
-    SchedulerConfig, SchedulerPolicyKind, ServerConfig, WorkloadConfig,
+    ArchConfig, CloudWorkloadConfig, Config, DefragPolicyKind, DprConfig, EdgeWorkloadConfig,
+    MigrationCostModelKind, RegionPolicyKind, SchedulerConfig, SchedulerPolicyKind, ServerConfig,
+    WorkloadConfig,
 };
 pub use toml::TomlValue;

@@ -1,8 +1,8 @@
 //! Canonical configuration presets used by examples, benches, and tests.
 
 use crate::config::schema::{
-    CloudWorkloadConfig, Config, EdgeWorkloadConfig, RegionPolicyKind, SchedulerPolicyKind,
-    WorkloadConfig,
+    CloudWorkloadConfig, Config, DefragPolicyKind, EdgeWorkloadConfig, RegionPolicyKind,
+    SchedulerPolicyKind, WorkloadConfig,
 };
 
 /// Paper-faithful configuration: Amber-like geometry, flexible-shape
@@ -36,6 +36,38 @@ pub fn edge_scenario(policy: RegionPolicyKind) -> Config {
     cfg.scheduler.unit_glb_slices = 4;
     cfg.scheduler.unit_array_slices = 4;
     cfg.workload = WorkloadConfig::Edge(EdgeWorkloadConfig::default());
+    cfg
+}
+
+/// Long-running churn scenario: the cloud workload pushed well past
+/// saturation (~2.5× the Fig. 4 offered load) so a sustained backlog
+/// churns allocations and the slice maps fragment — the workload class
+/// the migration subsystem ([`crate::migration`]) exists for.  The
+/// defrag policy is the ablation axis (`off` / `greedy` / `cost-aware`);
+/// everything else, arrivals included, is identical across policies.
+pub fn churn_scenario(policy: RegionPolicyKind, defrag: DefragPolicyKind) -> Config {
+    let mut cfg = cloud_scenario(policy);
+    cfg.scheduler.defrag_policy = defrag;
+    cfg.scheduler.defrag_threshold = 0.1;
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.mean_interarrival_ms = [18.0, 10.0, 14.0, 11.0];
+        c.duration_ms = 2_000.0;
+        c.seed = 0xC4_12_2026;
+    }
+    cfg
+}
+
+/// Edge churn scenario: the autonomous workload with every event stream
+/// firing nearly every frame (period 1–2 instead of 3–7), stacking
+/// concurrent tasks until regions churn.  Defrag knobs as in
+/// [`churn_scenario`].
+pub fn edge_churn_scenario(policy: RegionPolicyKind, defrag: DefragPolicyKind) -> Config {
+    let mut cfg = edge_scenario(policy);
+    cfg.scheduler.defrag_policy = defrag;
+    cfg.scheduler.defrag_threshold = 0.1;
+    if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+        e.event_period_frames = (1, 2);
+    }
     cfg
 }
 
@@ -82,6 +114,10 @@ mod tests {
         for kind in RegionPolicyKind::ALL {
             cloud_scenario(kind).validate().unwrap();
             edge_scenario(kind).validate().unwrap();
+            for defrag in DefragPolicyKind::ALL {
+                churn_scenario(kind, defrag).validate().unwrap();
+                edge_churn_scenario(kind, defrag).validate().unwrap();
+            }
         }
         for w in [4, 8, 16] {
             slice_width_ablation(w).validate().unwrap();

@@ -261,6 +261,88 @@ impl SchedulerPolicyKind {
     }
 }
 
+/// When the scheduler may migrate running tasks to defragment the
+/// slice maps ([`crate::migration`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DefragPolicyKind {
+    /// Never migrate (the pre-migration behavior; a `NoFit` just waits).
+    Off,
+    /// Commit every viable compaction plan, cost be damned.
+    Greedy,
+    /// Commit a plan only when its estimated cycle cost is repaid by the
+    /// execution time of the backlogged task it unblocks.
+    CostAware,
+}
+
+impl DefragPolicyKind {
+    /// All policies, cheapest-first.
+    pub const ALL: [DefragPolicyKind; 3] = [
+        DefragPolicyKind::Off,
+        DefragPolicyKind::Greedy,
+        DefragPolicyKind::CostAware,
+    ];
+
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DefragPolicyKind::Off => "off",
+            DefragPolicyKind::Greedy => "greedy",
+            DefragPolicyKind::CostAware => "cost-aware",
+        }
+    }
+
+    /// Parse a config name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "off" => Ok(DefragPolicyKind::Off),
+            "greedy" => Ok(DefragPolicyKind::Greedy),
+            "cost-aware" | "cost_aware" => Ok(DefragPolicyKind::CostAware),
+            other => Err(Error::Config(format!("unknown defrag policy '{other}'"))),
+        }
+    }
+}
+
+/// How migration cycle cost is estimated ([`crate::migration`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MigrationCostModelKind {
+    /// Migrations are free (idealized upper bound for ablations).
+    Zero,
+    /// Checkpoint + fast-DPR restream only (GLB data assumed to stay in
+    /// place or be double-mapped).
+    DprOnly,
+    /// Checkpoint + fast-DPR restream + bank-to-bank GLB state copy —
+    /// the honest model, and the default.
+    Full,
+}
+
+impl MigrationCostModelKind {
+    /// All models, cheapest-first.
+    pub const ALL: [MigrationCostModelKind; 3] = [
+        MigrationCostModelKind::Zero,
+        MigrationCostModelKind::DprOnly,
+        MigrationCostModelKind::Full,
+    ];
+
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MigrationCostModelKind::Zero => "zero",
+            MigrationCostModelKind::DprOnly => "dpr-only",
+            MigrationCostModelKind::Full => "full",
+        }
+    }
+
+    /// Parse a config name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "zero" => Ok(MigrationCostModelKind::Zero),
+            "dpr-only" | "dpr_only" => Ok(MigrationCostModelKind::DprOnly),
+            "full" => Ok(MigrationCostModelKind::Full),
+            other => Err(Error::Config(format!("unknown migration cost model '{other}'"))),
+        }
+    }
+}
+
 /// Scheduler + region-mechanism configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
@@ -280,6 +362,16 @@ pub struct SchedulerConfig {
     /// (Fig. 4) keeps the generous any-variant baseline so its margins
     /// are conservative.
     pub baseline_single_mapping: bool,
+    /// Live-migration defragmentation policy ([`crate::migration`]).
+    /// TOML: `scheduler.defrag_policy` = "off" | "greedy" | "cost-aware".
+    pub defrag_policy: DefragPolicyKind,
+    /// Minimum external fragmentation (either slice class, `[0,1]`)
+    /// before the planner bothers proposing a compaction plan.
+    /// TOML: `scheduler.defrag_threshold`.
+    pub defrag_threshold: f64,
+    /// Cycle-cost model charged per migrated task.
+    /// TOML: `scheduler.migration_cost_model` = "zero" | "dpr-only" | "full".
+    pub migration_cost_model: MigrationCostModelKind,
 }
 
 impl Default for SchedulerConfig {
@@ -294,6 +386,9 @@ impl Default for SchedulerConfig {
             unit_glb_slices: 8,
             unit_array_slices: 2,
             baseline_single_mapping: false,
+            defrag_policy: DefragPolicyKind::Off,
+            defrag_threshold: 0.25,
+            migration_cost_model: MigrationCostModelKind::Full,
         }
     }
 }
@@ -492,6 +587,17 @@ impl Config {
             }
             read_u32(sched, "unit_glb_slices", &mut s.unit_glb_slices)?;
             read_u32(sched, "unit_array_slices", &mut s.unit_array_slices)?;
+            if let Some(v) = sched.get("defrag_policy") {
+                s.defrag_policy =
+                    DefragPolicyKind::from_name(str_of(v, "scheduler.defrag_policy")?)?;
+            }
+            read_f64(sched, "defrag_threshold", &mut s.defrag_threshold)?;
+            if let Some(v) = sched.get("migration_cost_model") {
+                s.migration_cost_model = MigrationCostModelKind::from_name(str_of(
+                    v,
+                    "scheduler.migration_cost_model",
+                )?)?;
+            }
         }
 
         if let Some(server) = root.get("server") {
@@ -570,6 +676,12 @@ impl Config {
         let s = &self.scheduler;
         if s.unit_array_slices == 0 || s.unit_glb_slices == 0 {
             return Err(Error::Config("unit region sizes must be positive".into()));
+        }
+        if !(0.0..=1.0).contains(&s.defrag_threshold) {
+            return Err(Error::Config(format!(
+                "scheduler.defrag_threshold ({}) must be within [0, 1]",
+                s.defrag_threshold
+            )));
         }
         if s.unit_array_slices > self.arch.array_slices() {
             return Err(Error::Config(format!(
@@ -758,6 +870,36 @@ mod tests {
             Config::from_toml_text("[workload]\nkind = \"cloud\"\nmean_interarrival_ms = [1.0]\n")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn defrag_knobs_parse_and_validate() {
+        let cfg = Config::from_toml_text(
+            "[scheduler]\ndefrag_policy = \"cost-aware\"\ndefrag_threshold = 0.4\nmigration_cost_model = \"dpr-only\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.scheduler.defrag_policy, DefragPolicyKind::CostAware);
+        assert_eq!(cfg.scheduler.defrag_threshold, 0.4);
+        assert_eq!(cfg.scheduler.migration_cost_model, MigrationCostModelKind::DprOnly);
+        // defaults: migration off, honest cost model
+        let d = SchedulerConfig::default();
+        assert_eq!(d.defrag_policy, DefragPolicyKind::Off);
+        assert_eq!(d.migration_cost_model, MigrationCostModelKind::Full);
+        assert!((0.0..=1.0).contains(&d.defrag_threshold));
+        // bad values rejected
+        assert!(Config::from_toml_text("[scheduler]\ndefrag_policy = \"magic\"\n").is_err());
+        assert!(Config::from_toml_text("[scheduler]\nmigration_cost_model = \"magic\"\n").is_err());
+        assert!(Config::from_toml_text("[scheduler]\ndefrag_threshold = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn defrag_names_round_trip() {
+        for kind in DefragPolicyKind::ALL {
+            assert_eq!(DefragPolicyKind::from_name(kind.name()).unwrap(), kind);
+        }
+        for kind in MigrationCostModelKind::ALL {
+            assert_eq!(MigrationCostModelKind::from_name(kind.name()).unwrap(), kind);
+        }
     }
 
     #[test]

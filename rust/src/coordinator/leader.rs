@@ -12,7 +12,8 @@ use std::collections::BTreeMap;
 use crate::config::Config;
 use crate::dpr::DprMode;
 use crate::error::{Error, Result};
-use crate::metrics::{NtatRecord, NtatTracker};
+use crate::metrics::{FragmentationGauge, NtatRecord, NtatTracker};
+use crate::migration::MigrationReport;
 use crate::regions::RegionId;
 use crate::scheduler::{RequestQueue, Scheduler};
 use crate::sim::EventQueue;
@@ -143,6 +144,14 @@ impl Leader {
             }
             let (t, Ev::Completion(region)) = events.pop().expect("peeked");
             now = t;
+            // migrations push completions out; re-queue stale events at
+            // the scheduler's authoritative finish
+            if let Some(finish) = self.sched.finish_of(region) {
+                if finish > now {
+                    events.push(finish, Ev::Completion(region));
+                    continue;
+                }
+            }
             region_info.remove(&region);
             let inst = self.sched.complete(region)?;
             if let Some(done) = self.queue.mark_complete(inst, now)? {
@@ -207,6 +216,19 @@ impl Leader {
         &self.sched
     }
 
+    /// Point-in-time fragmentation reading of the fabric.
+    pub fn fragmentation(&self) -> FragmentationGauge {
+        FragmentationGauge::read(self.sched.regions())
+    }
+
+    /// Force one compaction pass (the `DEFRAG` wire command).  Between
+    /// batches the fabric is drained, so this usually reports a no-op;
+    /// it exists as the operator-facing control-plane surface over the
+    /// same machinery the scheduler drives automatically mid-batch.
+    pub fn defrag(&mut self) -> MigrationReport {
+        self.sched.defrag_now(0)
+    }
+
     /// The artifact binding (runtime stats).
     pub fn binding(&self) -> &TaskBinding {
         &self.binding
@@ -259,6 +281,24 @@ mod tests {
         assert_eq!(drained.len(), 3);
         assert!(leader.stats().outcomes.is_empty());
         assert_eq!(leader.stats().launches, 5);
+    }
+
+    /// Between batches the fabric is drained, so the control-plane
+    /// defrag is a coherent no-op and the gauge reads zero.
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn defrag_between_batches_is_a_clean_noop() {
+        let mut cfg = presets::paper_default();
+        cfg.artifacts_dir = crate::runtime::SYNTHETIC_DIR.into();
+        let mut leader = Leader::new(&cfg).unwrap();
+        leader.serve(&[(TenantId(0), AppId::Harris, 0)]).unwrap();
+        let g = leader.fragmentation();
+        assert_eq!((g.glb_frag, g.array_frag), (0.0, 0.0));
+        assert_eq!(g.glb_free, 32);
+        let report = leader.defrag();
+        assert_eq!(report.migrated, 0);
+        assert_eq!(report.cycles, 0);
+        assert_eq!(report.frag_before, report.frag_after);
     }
 
     #[cfg(feature = "xla")]

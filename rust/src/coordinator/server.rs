@@ -18,14 +18,23 @@
 //!   → ERR <reason>
 //! STATS
 //!   → STATS served=<n> queued=<n> rejected=<n> failed=<n> pending=<n>
-//!           workers=<n> queue_depth=<n>
+//!           workers=<n> queue_depth=<n> frag_glb=<x> frag_arr=<x>
+//!           migrations=<n>
 //! STATS <tenant>
 //!   → STATS tenant=<t> served=<n> queued=<n> rejected=<n>
+//! DEFRAG
+//!   → DEFRAG migrated=<n> cycles=<n> frag_glb=<a>-><b> frag_arr=<a>-><b>
+//!   → ERR coordinator unavailable         (executor gone / shutting down)
 //! QUIT
 //!   → BYE                                 (closes this connection)
 //! SHUTDOWN
 //!   → BYE shutting down                   (graceful server shutdown)
 //! ```
+//!
+//! `frag_glb`/`frag_arr` are the leader fabric's external-fragmentation
+//! gauges ([`crate::metrics::FragmentationGauge`]), refreshed by the
+//! executor after every batch; `DEFRAG` forces one compaction pass of
+//! the live-migration subsystem ([`crate::migration`]) on the leader.
 //!
 //! Backpressure is explicit: each tenant's queue is bounded by
 //! `server.queue_depth` ([`crate::config::ServerConfig`]); a SUBMIT that
@@ -38,8 +47,8 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -81,12 +90,18 @@ struct OutcomeLine {
     sum: f64,
 }
 
-/// A batch handed from a scheduler worker to the leader executor.
-/// `resp` carries one entry per submission (in order); `None` means the
-/// scheduler produced no outcome for that seq.
-struct ExecRequest {
-    subs: Vec<(TenantId, AppId, u64)>,
-    resp: mpsc::Sender<std::result::Result<Vec<Option<OutcomeLine>>, String>>,
+/// Work handed to the leader executor thread.
+enum ExecRequest {
+    /// A batch of admitted submissions.  `resp` carries one entry per
+    /// submission (in order); `None` means the scheduler produced no
+    /// outcome for that seq.
+    Batch {
+        subs: Vec<(TenantId, AppId, u64)>,
+        resp: mpsc::Sender<std::result::Result<Vec<Option<OutcomeLine>>, String>>,
+    },
+    /// The `DEFRAG` wire command: force one compaction pass and reply
+    /// with the formatted wire line.
+    Defrag { resp: mpsc::Sender<String> },
 }
 
 /// State shared by connection threads, workers, and STATS rendering.
@@ -98,6 +113,20 @@ struct Shared {
     cycles_per_ms: u64,
     workers: usize,
     queue_depth: usize,
+    /// Channel to the leader executor for control-plane commands
+    /// (`DEFRAG`).  Dropped at shutdown so the executor can exit once
+    /// the workers finish draining.
+    exec: Mutex<Option<mpsc::Sender<ExecRequest>>>,
+    /// Latest GLB fragmentation gauge (f64 bits; executor-refreshed).
+    frag_glb_bits: AtomicU64,
+    /// Latest array fragmentation gauge (f64 bits).
+    frag_arr_bits: AtomicU64,
+    /// Cumulative live migrations across the server's lifetime —
+    /// accumulated by delta so a leader rebuild (which resets the
+    /// scheduler's own counter) never makes the published value regress.
+    migrations: AtomicU64,
+    /// Last cumulative reading taken from the current leader.
+    leader_migrations: AtomicU64,
 }
 
 impl Shared {
@@ -109,6 +138,11 @@ impl Shared {
             cycles_per_ms: cfg.arch.core_clock_mhz as u64 * 1000,
             workers: cfg.server.workers.max(1) as usize,
             queue_depth: cfg.server.queue_depth as usize,
+            exec: Mutex::new(None),
+            frag_glb_bits: AtomicU64::new(0),
+            frag_arr_bits: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            leader_migrations: AtomicU64::new(0),
         }
     }
 
@@ -117,6 +151,25 @@ impl Shared {
     fn begin_shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
         self.queues.close();
+        // drop the control-plane sender so the executor's recv() can
+        // fail once the workers (the only other senders) exit
+        if let Ok(mut exec) = self.exec.lock() {
+            *exec = None;
+        }
+    }
+
+    /// Refresh the fragmentation/migration snapshot from the leader.
+    /// `leader_total` is the *current leader's* cumulative migration
+    /// count; only the executor thread calls this, so the delta
+    /// arithmetic below is single-writer.
+    fn record_fabric(&self, frag: (f64, f64), leader_total: u64) {
+        self.frag_glb_bits.store(frag.0.to_bits(), Ordering::Relaxed);
+        self.frag_arr_bits.store(frag.1.to_bits(), Ordering::Relaxed);
+        let last = self.leader_migrations.swap(leader_total, Ordering::Relaxed);
+        // a fresh leader (post-rebuild) restarts its counter from zero:
+        // everything it reports is new; otherwise only the growth is
+        let delta = if leader_total < last { leader_total } else { leader_total - last };
+        self.migrations.fetch_add(delta, Ordering::Relaxed);
     }
 }
 
@@ -200,19 +253,43 @@ fn handle_line(
                 (
                     format!(
                         "STATS served={} queued={} rejected={} failed={} pending={} \
-                         workers={} queue_depth={}",
+                         workers={} queue_depth={} frag_glb={:.3} frag_arr={:.3} migrations={}",
                         s.served,
                         s.queued,
                         s.rejected,
                         shared.counters.failed(),
                         shared.queues.pending(),
                         shared.workers,
-                        shared.queue_depth
+                        shared.queue_depth,
+                        f64::from_bits(shared.frag_glb_bits.load(Ordering::Relaxed)),
+                        f64::from_bits(shared.frag_arr_bits.load(Ordering::Relaxed)),
+                        shared.migrations.load(Ordering::Relaxed),
                     ),
                     false,
                 )
             }
         },
+        Some("DEFRAG") => {
+            let sender = shared
+                .exec
+                .lock()
+                .ok()
+                .and_then(|guard| guard.clone());
+            match sender {
+                Some(tx) => {
+                    let (rtx, rrx) = mpsc::channel();
+                    if tx.send(ExecRequest::Defrag { resp: rtx }).is_ok() {
+                        match rrx.recv_timeout(Duration::from_secs(10)) {
+                            Ok(reply) => (reply, false),
+                            Err(_) => ("ERR defrag timed out".into(), false),
+                        }
+                    } else {
+                        ("ERR coordinator unavailable".into(), false)
+                    }
+                }
+                None => ("ERR coordinator unavailable".into(), false),
+            }
+        }
         Some("QUIT") => ("BYE".into(), true),
         Some("SHUTDOWN") => {
             shared.begin_shutdown();
@@ -230,7 +307,7 @@ fn run_worker(shared: Arc<Shared>, exec_tx: mpsc::Sender<ExecRequest>, batch_max
         let subs: Vec<(TenantId, AppId, u64)> =
             batch.iter().map(|(tenant, job)| (*tenant, job.app, 0)).collect();
         let (resp_tx, resp_rx) = mpsc::channel();
-        if exec_tx.send(ExecRequest { subs, resp: resp_tx }).is_err() {
+        if exec_tx.send(ExecRequest::Batch { subs, resp: resp_tx }).is_err() {
             for (_, job) in batch {
                 shared.counters.record_failed();
                 let _ = job.reply.send("ERR coordinator executor unavailable".into());
@@ -282,48 +359,82 @@ fn run_worker(shared: Arc<Shared>, exec_tx: mpsc::Sender<ExecRequest>, batch_max
 /// correlated to submissions by sequence number (the router assigns them
 /// in admission order) and drained per batch so a long-lived server's
 /// history stays bounded.
-fn run_executor(cfg: &Config, mut leader: Leader, rx: mpsc::Receiver<ExecRequest>) {
+fn run_executor(
+    cfg: &Config,
+    mut leader: Leader,
+    rx: mpsc::Receiver<ExecRequest>,
+    shared: &Shared,
+) {
     while let Ok(req) = rx.recv() {
-        let first_seq = leader.next_seq();
-        // map the &ServeStats away immediately so the borrow of `leader`
-        // ends before the arms below drain or rebuild it
-        let served = leader.serve(&req.subs).map(|_| ()).map_err(|e| e.to_string());
-        let result = match served {
-            Ok(()) => {
-                let mut drained: std::collections::BTreeMap<u64, super::ServeOutcome> =
-                    leader.drain_outcomes().into_iter().map(|o| (o.seq, o)).collect();
-                let lines = (0..req.subs.len())
-                    .map(|i| {
-                        let seq = first_seq + i as u64;
-                        drained.remove(&seq).map(|o| OutcomeLine {
-                            seq,
-                            ntat: o.ntat,
-                            tat_cycles: o.tat_cycles,
-                            compute_us: o.compute_us,
-                            sum: o.final_output_sum,
-                        })
-                    })
-                    .collect();
-                Ok(lines)
-            }
-            Err(e) => {
-                // `serve` is not transactional: a mid-batch failure can
-                // strand admitted requests in the router/queue and would
-                // poison every later batch.  Log which tenants lost work,
-                // then rebuild the leader to a clean fabric.
-                log::error!(
-                    "batch of {} failed: {e} (stranded backlog by tenant: {:?})",
-                    req.subs.len(),
-                    leader.backlog_by_tenant()
+        match req {
+            ExecRequest::Defrag { resp } => {
+                let r = leader.defrag();
+                let g = leader.fragmentation();
+                shared.record_fabric(
+                    (g.glb_frag, g.array_frag),
+                    leader.scheduler().migration_stats().tasks_migrated,
                 );
-                match Leader::new(cfg) {
-                    Ok(fresh) => leader = fresh,
-                    Err(re) => log::error!("leader rebuild after failed batch also failed: {re}"),
-                }
-                Err(e)
+                let _ = resp.send(format!(
+                    "DEFRAG migrated={} cycles={} frag_glb={:.3}->{:.3} frag_arr={:.3}->{:.3}",
+                    r.migrated,
+                    r.cycles,
+                    r.frag_before.0,
+                    r.frag_after.0,
+                    r.frag_before.1,
+                    r.frag_after.1,
+                ));
             }
-        };
-        let _ = req.resp.send(result);
+            ExecRequest::Batch { subs, resp } => {
+                let first_seq = leader.next_seq();
+                // map the &ServeStats away immediately so the borrow of
+                // `leader` ends before the arms below drain or rebuild it
+                let served = leader.serve(&subs).map(|_| ()).map_err(|e| e.to_string());
+                let result = match served {
+                    Ok(()) => {
+                        let mut drained: std::collections::BTreeMap<u64, super::ServeOutcome> =
+                            leader.drain_outcomes().into_iter().map(|o| (o.seq, o)).collect();
+                        let lines = (0..subs.len())
+                            .map(|i| {
+                                let seq = first_seq + i as u64;
+                                drained.remove(&seq).map(|o| OutcomeLine {
+                                    seq,
+                                    ntat: o.ntat,
+                                    tat_cycles: o.tat_cycles,
+                                    compute_us: o.compute_us,
+                                    sum: o.final_output_sum,
+                                })
+                            })
+                            .collect();
+                        Ok(lines)
+                    }
+                    Err(e) => {
+                        // `serve` is not transactional: a mid-batch failure
+                        // can strand admitted requests in the router/queue
+                        // and would poison every later batch.  Log which
+                        // tenants lost work, then rebuild the leader to a
+                        // clean fabric.
+                        log::error!(
+                            "batch of {} failed: {e} (stranded backlog by tenant: {:?})",
+                            subs.len(),
+                            leader.backlog_by_tenant()
+                        );
+                        match Leader::new(cfg) {
+                            Ok(fresh) => leader = fresh,
+                            Err(re) => {
+                                log::error!("leader rebuild after failed batch also failed: {re}")
+                            }
+                        }
+                        Err(e)
+                    }
+                };
+                let g = leader.fragmentation();
+                shared.record_fabric(
+                    (g.glb_frag, g.array_frag),
+                    leader.scheduler().migration_stats().tasks_migrated,
+                );
+                let _ = resp.send(result);
+            }
+        }
     }
 }
 
@@ -391,6 +502,7 @@ impl Server {
         let (exec_tx, exec_rx) = mpsc::channel::<ExecRequest>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let leader_cfg = cfg.clone();
+        let shared_e = shared.clone();
         let executor = std::thread::Builder::new()
             .name("cgra-leader".into())
             .spawn(move || {
@@ -404,7 +516,7 @@ impl Server {
                         return;
                     }
                 };
-                run_executor(&leader_cfg, leader, exec_rx);
+                run_executor(&leader_cfg, leader, exec_rx, &shared_e);
             })
             .map_err(|e| Error::Runtime(format!("spawn executor: {e}")))?;
         match ready_rx.recv() {
@@ -428,8 +540,13 @@ impl Server {
                 .map_err(|e| Error::Runtime(format!("spawn worker {i}: {e}")))?;
             workers.push(worker);
         }
-        // Workers hold the only executor senders: when they exit (queues
-        // closed + drained), the executor's recv fails and it exits too.
+        // Connection threads reach the executor for DEFRAG through this
+        // shared sender; `begin_shutdown` drops it, after which the
+        // workers (the remaining senders) exiting lets the executor's
+        // recv fail and the thread join.
+        if let Ok(mut exec) = shared.exec.lock() {
+            *exec = Some(exec_tx.clone());
+        }
         drop(exec_tx);
 
         // Accept loop: one reader thread per connection.
@@ -511,6 +628,11 @@ mod tests {
             cycles_per_ms: 500_000,
             workers: 2,
             queue_depth: depth,
+            exec: Mutex::new(None),
+            frag_glb_bits: AtomicU64::new(0),
+            frag_arr_bits: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            leader_migrations: AtomicU64::new(0),
         }
     }
 
@@ -580,8 +702,38 @@ mod tests {
         assert!(stats.contains("rejected=1"), "{stats}");
         assert!(stats.contains("pending=0"), "{stats}");
         assert!(stats.contains("workers=2"), "{stats}");
+        assert!(stats.contains("frag_glb=0.000"), "{stats}");
+        assert!(stats.contains("frag_arr=0.000"), "{stats}");
+        assert!(stats.contains("migrations=0"), "{stats}");
         let (t3, _) = line(&shared, "STATS 3");
         assert_eq!(t3, "STATS tenant=3 served=0 queued=1 rejected=1");
+    }
+
+    #[test]
+    fn stats_reflect_recorded_fabric_snapshot() {
+        let shared = test_shared(4);
+        shared.record_fabric((0.5, 0.25), 7);
+        let (stats, _) = line(&shared, "STATS");
+        assert!(stats.contains("frag_glb=0.500"), "{stats}");
+        assert!(stats.contains("frag_arr=0.250"), "{stats}");
+        assert!(stats.contains("migrations=7"), "{stats}");
+        // leader rebuild resets the leader-side counter to 0 then counts
+        // 2 fresh migrations: the published total must keep growing
+        shared.record_fabric((0.0, 0.0), 2);
+        let (stats, _) = line(&shared, "STATS");
+        assert!(stats.contains("migrations=9"), "{stats}");
+        // steady growth on the same leader adds only the delta
+        shared.record_fabric((0.0, 0.0), 5);
+        let (stats, _) = line(&shared, "STATS");
+        assert!(stats.contains("migrations=12"), "{stats}");
+    }
+
+    #[test]
+    fn defrag_without_executor_is_unavailable() {
+        let shared = test_shared(4);
+        let (reply, close) = line(&shared, "DEFRAG");
+        assert_eq!(reply, "ERR coordinator unavailable");
+        assert!(!close);
     }
 
     #[test]
@@ -624,8 +776,14 @@ mod tests {
 
         let stats = send(&mut writer, &mut reader, "STATS");
         assert!(stats.contains("served=1"), "{stats}");
+        assert!(stats.contains("frag_glb="), "{stats}");
         let t3 = send(&mut writer, &mut reader, "STATS 3");
         assert!(t3.contains("tenant=3 served=1 queued=1 rejected=0"), "{t3}");
+
+        // control-plane defrag: fabric is drained between batches, so
+        // this reports a clean no-op over the wire
+        let defrag = send(&mut writer, &mut reader, "DEFRAG");
+        assert!(defrag.starts_with("DEFRAG migrated=0"), "{defrag}");
 
         let bye = send(&mut writer, &mut reader, "QUIT");
         assert_eq!(bye, "BYE");

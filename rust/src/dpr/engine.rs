@@ -133,6 +133,19 @@ impl DprEngine {
         }
     }
 
+    /// Cycles to restream `bs` for a live-migration relocation
+    /// ([`crate::migration`]).  A migrating task's bitstream is by
+    /// definition resident (it was streamed at launch), so this is the
+    /// pure stream cost under fast-DPR — and the full bus write under
+    /// AXI, where migration is prohibitively slow.  Read-only: the cache
+    /// and its hit/miss counters are untouched.
+    pub fn migration_stream_cycles(&self, bs: &Bitstream) -> u64 {
+        match self.mode {
+            DprMode::Axi4Lite => self.axi.reconfig_cycles(bs),
+            DprMode::Fast => self.fast.stream_cycles(bs),
+        }
+    }
+
     /// Cost of reconfiguring `dest` (array-slice range) with `bs`.
     ///
     /// Under fast-DPR, a cache hit streams directly; relocation decides
@@ -263,6 +276,18 @@ mod tests {
         e.preload(&bs);
         assert!(!e.reconfigure(&bs, &SliceRange::new(4, 2)).cache_hit);
         assert!(e.reconfigure(&bs, &SliceRange::new(2, 2)).cache_hit);
+    }
+
+    #[test]
+    fn migration_stream_cost_matches_mode_and_keeps_cache_stats() {
+        let bs = two_slice_bs();
+        let mut fast = DprEngine::new(&arch(), &cfg(), DprMode::Fast);
+        fast.preload(&bs);
+        let hits_before = fast.cache().stats();
+        assert_eq!(fast.migration_stream_cycles(&bs), 3344);
+        assert_eq!(fast.cache().stats(), hits_before, "read-only costing");
+        let axi = DprEngine::new(&arch(), &cfg(), DprMode::Axi4Lite);
+        assert_eq!(axi.migration_stream_cycles(&bs), 133_120);
     }
 
     #[test]

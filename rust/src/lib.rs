@@ -14,6 +14,7 @@
 //!   slice-granular hardware abstraction ([`abstraction`]), flexible-shape
 //!   execution regions ([`regions`]), fast dynamic partial reconfiguration
 //!   ([`dpr`]), the greedy multi-task scheduler ([`scheduler`]), the
+//!   live-migration defragmentation subsystem ([`migration`]), the
 //!   discrete-event CGRA timing model ([`sim`]), and the multi-tenant
 //!   request coordinator ([`coordinator`]).
 //! * **Runtime** — [`runtime`] executes the artifacts on the request
@@ -41,6 +42,7 @@ pub mod coordinator;
 pub mod dpr;
 pub mod error;
 pub mod metrics;
+pub mod migration;
 pub mod regions;
 pub mod runtime;
 pub mod scheduler;

@@ -8,7 +8,7 @@ use std::fmt::Write as _;
 use std::path::Path;
 
 use crate::error::{Error, Result};
-use crate::metrics::{LatencyBreakdown, NtatTracker};
+use crate::metrics::{FragmentationGauge, LatencyBreakdown, NtatTracker};
 use crate::tasks::AppId;
 
 /// Escape one CSV field (RFC 4180 quoting).
@@ -69,6 +69,24 @@ pub fn ntat_jsonl(tracker: &NtatTracker) -> String {
         }
     }
     out
+}
+
+/// One-line JSON rendering of a fragmentation gauge — the machine-
+/// readable companion to the human `STATS frag_glb=…` wire fields, for
+/// experiment pipelines that scrape gauges into files (same pattern as
+/// [`ntat_jsonl`]).
+pub fn fragmentation_json(g: &FragmentationGauge) -> String {
+    format!(
+        r#"{{"glb_frag":{:.6},"array_frag":{:.6},"glb_free":{},"array_free":{},"glb_largest_free_run":{},"array_largest_free_run":{},"glb_unallocatable":{:.6},"array_unallocatable":{:.6}}}"#,
+        g.glb_frag,
+        g.array_frag,
+        g.glb_free,
+        g.array_free,
+        g.glb_largest_free_run,
+        g.array_largest_free_run,
+        g.glb_unallocatable,
+        g.array_unallocatable,
+    )
 }
 
 /// Frame latency breakdown as CSV (`frame,reconfig,wait_exec,total`).
@@ -146,5 +164,25 @@ mod tests {
     #[test]
     fn write_file_errors_on_bad_path() {
         assert!(write_file("/nonexistent-dir/x.csv", "x").is_err());
+    }
+
+    #[test]
+    fn fragmentation_json_parses() {
+        let g = FragmentationGauge {
+            glb_frag: 0.5,
+            array_frag: 0.25,
+            glb_free: 16,
+            array_free: 4,
+            glb_largest_free_run: 8,
+            array_largest_free_run: 3,
+            glb_unallocatable: 0.25,
+            array_unallocatable: 0.125,
+        };
+        let line = fragmentation_json(&g);
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.req_f64("glb_frag").unwrap(), 0.5);
+        assert_eq!(v.req_f64("array_frag").unwrap(), 0.25);
+        assert_eq!(v.req_f64("glb_free").unwrap(), 16.0);
+        assert_eq!(v.req_f64("array_largest_free_run").unwrap(), 3.0);
     }
 }

@@ -1,0 +1,164 @@
+//! External-fragmentation gauge and its time-weighted tracker.
+//!
+//! Fragmentation is the failure mode live migration
+//! ([`crate::migration`]) exists to repair: free slices that cannot be
+//! allocated because no contiguous run is long enough.  The gauge is a
+//! point-in-time reading of both slice maps; the tracker integrates the
+//! reading across a simulation the same way
+//! [`crate::metrics::UtilizationTracker`] integrates occupancy.
+
+use crate::regions::RegionManager;
+
+/// Point-in-time fragmentation reading for both slice classes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FragmentationGauge {
+    /// GLB-slice external fragmentation: `1 − largest-free-run ⁄ free`.
+    pub glb_frag: f64,
+    /// Array-slice external fragmentation.
+    pub array_frag: f64,
+    /// Free GLB slices.
+    pub glb_free: u32,
+    /// Free array slices.
+    pub array_free: u32,
+    /// Longest contiguous free GLB run (the largest demand placeable).
+    pub glb_largest_free_run: u32,
+    /// Longest contiguous free array run.
+    pub array_largest_free_run: u32,
+    /// Free-but-unallocatable GLB fraction: slices that are free yet
+    /// outside the largest free run, over the whole map.
+    pub glb_unallocatable: f64,
+    /// Free-but-unallocatable array fraction.
+    pub array_unallocatable: f64,
+}
+
+impl FragmentationGauge {
+    /// Read the gauge off a region manager's slice maps.
+    pub fn read(mgr: &RegionManager) -> FragmentationGauge {
+        let (glb_frag, array_frag) = mgr.fragmentation();
+        let glb = mgr.glb_map();
+        let arr = mgr.array_map();
+        let g_run = glb.longest_free_run().len;
+        let a_run = arr.longest_free_run().len;
+        let g_free = glb.free_count();
+        let a_free = arr.free_count();
+        FragmentationGauge {
+            glb_frag,
+            array_frag,
+            glb_free: g_free,
+            array_free: a_free,
+            glb_largest_free_run: g_run,
+            array_largest_free_run: a_run,
+            glb_unallocatable: (g_free - g_run) as f64 / glb.len().max(1) as f64,
+            array_unallocatable: (a_free - a_run) as f64 / arr.len().max(1) as f64,
+        }
+    }
+}
+
+/// Time-weighted mean fragmentation over a simulation.
+///
+/// Sampled at event boundaries (fragmentation is piecewise-constant
+/// between events), mirroring [`crate::metrics::UtilizationTracker`].
+#[derive(Clone, Debug, Default)]
+pub struct FragmentationTracker {
+    last_cycle: u64,
+    cur: (f64, f64),
+    integral: (f64, f64),
+}
+
+impl FragmentationTracker {
+    /// Start tracking at cycle 0 on a defragmented machine.
+    pub fn new() -> FragmentationTracker {
+        FragmentationTracker::default()
+    }
+
+    /// Advance to `now`, recording the `(glb, array)` fragmentation that
+    /// held since the previous sample.
+    pub fn sample(&mut self, now: u64, frag: (f64, f64)) {
+        debug_assert!(now >= self.last_cycle, "time went backwards");
+        let dt = (now - self.last_cycle) as f64;
+        self.integral.0 += self.cur.0 * dt;
+        self.integral.1 += self.cur.1 * dt;
+        self.cur = frag;
+        self.last_cycle = now;
+    }
+
+    /// Time-weighted mean `(glb, array)` fragmentation so far.
+    pub fn mean(&self) -> (f64, f64) {
+        if self.last_cycle == 0 {
+            return (0.0, 0.0);
+        }
+        let t = self.last_cycle as f64;
+        (self.integral.0 / t, self.integral.1 / t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abstraction::SliceDemand;
+    use crate::config::{ArchConfig, RegionPolicyKind, SchedulerConfig};
+
+    fn fragmented_mgr() -> RegionManager {
+        let sched = SchedulerConfig {
+            region_policy: RegionPolicyKind::FlexibleShape,
+            ..SchedulerConfig::default()
+        };
+        let mut m = RegionManager::new(&ArchConfig::default(), &sched);
+        let d = SliceDemand::new(8, 2);
+        let ids: Vec<_> = (0..3)
+            .map(|_| match m.try_allocate(&d) {
+                crate::regions::AllocOutcome::Allocated(r) => r.id,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        m.release(ids[1]).unwrap();
+        m
+    }
+
+    #[test]
+    fn gauge_reads_holes() {
+        let m = fragmented_mgr();
+        let g = FragmentationGauge::read(&m);
+        // array: free {2,3} ∪ {6,7} → 4 free, largest run 2
+        assert_eq!(g.array_free, 4);
+        assert_eq!(g.array_largest_free_run, 2);
+        assert!((g.array_frag - 0.5).abs() < 1e-12);
+        assert!((g.array_unallocatable - 2.0 / 8.0).abs() < 1e-12);
+        // glb: free [8..16) ∪ [24..32) → 16 free, largest run 8
+        assert_eq!(g.glb_free, 16);
+        assert_eq!(g.glb_largest_free_run, 8);
+        assert!((g.glb_frag - 0.5).abs() < 1e-12);
+        assert!((g.glb_unallocatable - 8.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gauge_is_zero_on_idle_and_packed_machines() {
+        let sched = SchedulerConfig {
+            region_policy: RegionPolicyKind::FlexibleShape,
+            ..SchedulerConfig::default()
+        };
+        let mut m = RegionManager::new(&ArchConfig::default(), &sched);
+        let g = FragmentationGauge::read(&m);
+        assert_eq!((g.glb_frag, g.array_frag), (0.0, 0.0));
+        assert_eq!(g.glb_unallocatable, 0.0);
+        let _ = m.try_allocate(&SliceDemand::new(8, 2));
+        let g2 = FragmentationGauge::read(&m);
+        assert_eq!((g2.glb_frag, g2.array_frag), (0.0, 0.0));
+    }
+
+    #[test]
+    fn tracker_integrates_piecewise() {
+        let mut t = FragmentationTracker::new();
+        t.sample(0, (0.0, 0.5));
+        t.sample(100, (1.0, 0.5)); // (0.0, 0.5) held over [0, 100)
+        t.sample(200, (0.0, 0.0)); // (1.0, 0.5) held over [100, 200)
+        let (g, a) = t.mean();
+        assert!((g - 0.5).abs() < 1e-12, "{g}");
+        assert!((a - 0.5).abs() < 1e-12, "{a}");
+    }
+
+    #[test]
+    fn empty_tracker_is_zero() {
+        assert_eq!(FragmentationTracker::new().mean(), (0.0, 0.0));
+    }
+}

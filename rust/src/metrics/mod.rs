@@ -1,8 +1,9 @@
 //! Evaluation metrics (§3): NTAT, throughput, latency breakdown,
-//! utilization, and paper-style report tables.
+//! utilization, fragmentation, and paper-style report tables.
 
 mod counters;
 pub mod export;
+mod fragmentation;
 mod latency;
 mod ntat;
 mod report;
@@ -10,6 +11,7 @@ mod throughput;
 mod utilization;
 
 pub use counters::{ServeCounters, TenantSnapshot};
+pub use fragmentation::{FragmentationGauge, FragmentationTracker};
 pub use latency::{FrameLatency, LatencyBreakdown};
 pub use ntat::{NtatRecord, NtatTracker};
 pub use report::{normalize, percent, ratio, Table};

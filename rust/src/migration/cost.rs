@@ -1,0 +1,112 @@
+//! Cycle-cost model for live migration.
+//!
+//! A migration is checkpoint → fast-DPR relocation → GLB state copy →
+//! resume.  The three components priced here:
+//!
+//! * **checkpoint** — draining the region's pipelines and quiescing its
+//!   stream ports: a fixed handshake, same order as the fast-DPR arm
+//!   overhead.
+//! * **restream** — when the array range moves, the cached bitstream is
+//!   restreamed into the new slices (the destination-register relocation
+//!   of §2.3); the caller supplies the engine's stream cycles since they
+//!   depend on the DPR mode and the bitstream.
+//! * **GLB copy** — when the GLB range moves, each source bank streams
+//!   its contents to its destination bank; banks copy pairwise in
+//!   parallel, so the cost is one bank's capacity over its port width
+//!   regardless of how many banks the region owns.
+
+use crate::config::{ArchConfig, MigrationCostModelKind};
+
+use super::planner::MigrationStep;
+
+/// Fixed checkpoint/quiesce handshake, core cycles.
+pub const CHECKPOINT_CYCLES: u64 = 64;
+
+/// Prices a [`MigrationStep`] in core cycles.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationCostModel {
+    kind: MigrationCostModelKind,
+    /// Bank-to-bank GLB copy cost (full bank over the stream port).
+    glb_copy_cycles: u64,
+}
+
+impl MigrationCostModel {
+    /// Build from architecture parameters and the configured kind.
+    pub fn new(arch: &ArchConfig, kind: MigrationCostModelKind) -> MigrationCostModel {
+        let bank_bytes = arch.glb_slice_bytes();
+        let per_cycle = arch.glb_bank_bytes_per_cycle.max(1) as u64;
+        MigrationCostModel { kind, glb_copy_cycles: bank_bytes.div_ceil(per_cycle) }
+    }
+
+    /// Configured kind.
+    pub fn kind(&self) -> MigrationCostModelKind {
+        self.kind
+    }
+
+    /// Cycles charged for one step.  `dpr_stream_cycles` is what the DPR
+    /// engine would charge to restream this region's bitstream (only
+    /// counted when the array range actually moves).
+    pub fn step_cycles(&self, step: &MigrationStep, dpr_stream_cycles: u64) -> u64 {
+        match self.kind {
+            MigrationCostModelKind::Zero => 0,
+            MigrationCostModelKind::DprOnly => {
+                CHECKPOINT_CYCLES
+                    + if step.moves_array() { dpr_stream_cycles } else { 0 }
+            }
+            MigrationCostModelKind::Full => {
+                CHECKPOINT_CYCLES
+                    + if step.moves_array() { dpr_stream_cycles } else { 0 }
+                    + if step.moves_glb() { self.glb_copy_cycles } else { 0 }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abstraction::SliceRange;
+    use crate::regions::RegionId;
+
+    fn step(moves_glb: bool, moves_array: bool) -> MigrationStep {
+        MigrationStep {
+            region: RegionId(0),
+            from_glb: SliceRange::new(8, 4),
+            to_glb: if moves_glb { SliceRange::new(0, 4) } else { SliceRange::new(8, 4) },
+            from_array: SliceRange::new(4, 2),
+            to_array: if moves_array { SliceRange::new(0, 2) } else { SliceRange::new(4, 2) },
+        }
+    }
+
+    #[test]
+    fn full_model_prices_all_components() {
+        let m = MigrationCostModel::new(&ArchConfig::default(), MigrationCostModelKind::Full);
+        // 128 KiB bank / 8 B-per-cycle = 16384 cycles
+        assert_eq!(m.step_cycles(&step(true, true), 3344), 64 + 3344 + 16_384);
+        assert_eq!(m.step_cycles(&step(false, true), 3344), 64 + 3344);
+        assert_eq!(m.step_cycles(&step(true, false), 3344), 64 + 16_384);
+    }
+
+    #[test]
+    fn dpr_only_skips_glb_copy() {
+        let m = MigrationCostModel::new(&ArchConfig::default(), MigrationCostModelKind::DprOnly);
+        assert_eq!(m.step_cycles(&step(true, true), 3344), 64 + 3344);
+        assert_eq!(m.kind(), MigrationCostModelKind::DprOnly);
+    }
+
+    #[test]
+    fn zero_model_is_free() {
+        let m = MigrationCostModel::new(&ArchConfig::default(), MigrationCostModelKind::Zero);
+        assert_eq!(m.step_cycles(&step(true, true), 3344), 0);
+    }
+
+    #[test]
+    fn migration_is_microseconds_next_to_task_runtimes() {
+        // The asymmetry that makes defragmentation worthwhile: a full
+        // migration (~20k cycles ≈ 40 µs at 500 MHz) is two orders of
+        // magnitude below the shortest Table 1 task (~520k cycles).
+        let m = MigrationCostModel::new(&ArchConfig::default(), MigrationCostModelKind::Full);
+        let worst = m.step_cycles(&step(true, true), 3344);
+        assert!(worst < 25_000, "{worst}");
+    }
+}

@@ -1,0 +1,74 @@
+//! Live task migration & fabric defragmentation.
+//!
+//! The paper's flexible-shape regions and fast DPR raise utilization,
+//! but under sustained multi-tenant churn the slice maps fragment: free
+//! slices exist, yet allocation returns `NoFit` because they are not
+//! contiguous, and throughput decays exactly where the mechanisms
+//! promise gains.  Following Mestra's observation that relocating
+//! *running* tasks between regions recovers this lost capacity, this
+//! subsystem drives the fast-DPR relocation machinery
+//! ([`crate::dpr::DprEngine`], [`crate::dpr::DprMode::Fast`]) as a
+//! defragmentation engine:
+//!
+//! * [`DefragPlanner`] scans the [`crate::regions::RegionManager`] slice
+//!   maps, and when external fragmentation exceeds
+//!   `scheduler.defrag_threshold` proposes a [`CompactionPlan`] — the
+//!   left-compaction of every movable region, expressed as
+//!   [`MigrationStep`]s.
+//! * [`MigrationCostModel`] prices each step in core cycles:
+//!   checkpoint/quiesce, fast-DPR restream into the new array-slices,
+//!   and the bank-to-bank GLB state copy
+//!   (`scheduler.migration_cost_model` selects zero / dpr-only / full).
+//! * [`execute_plan`] performs the relocations against the region
+//!   manager — array pass then GLB pass, each in ascending target order
+//!   so targets are always free — and returns the per-task
+//!   [`MigrationRecord`]s the scheduler uses to push out the migrated
+//!   tasks' completion times (checkpoint → fast-DPR relocation → GLB
+//!   state copy → resume).
+//!
+//! The scheduler ([`crate::scheduler::Scheduler`]) consults the planner
+//! whenever a ready task's every variant returns `NoFit`, commits the
+//! plan under `scheduler.defrag_policy` (`greedy` always; `cost-aware`
+//! only when the plan's cycle cost is repaid by the execution time of
+//! the task it unblocks), and charges the plan's cycles to the rescued
+//! launch so the event-driven timeline stays correct.  The coordinator
+//! exposes the same machinery through the `DEFRAG` wire command.
+
+mod cost;
+mod executor;
+mod planner;
+
+pub use cost::MigrationCostModel;
+pub use executor::{execute_plan, MigrationOutcome, MigrationRecord};
+pub use planner::{CompactionPlan, DefragPlanner, MigrationStep};
+
+/// Cumulative migration counters kept by the scheduler.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Ready tasks whose every variant returned `NoFit` at a schedule
+    /// step (counted per attempt — the backlog pressure signal).
+    pub nofit_events: u64,
+    /// Compaction plans the planner was asked for.
+    pub plans_considered: u64,
+    /// Plans that were committed and executed.
+    pub plans_committed: u64,
+    /// Individual task relocations performed.
+    pub tasks_migrated: u64,
+    /// Total cycles charged for migrations (checkpoint + DPR + copy).
+    pub migration_cycles: u64,
+    /// Launches that succeeded only because a compaction ran first.
+    pub rescued_launches: u64,
+}
+
+/// Outcome of one forced compaction pass (the `DEFRAG` wire command).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MigrationReport {
+    /// Tasks relocated.
+    pub migrated: u64,
+    /// Total migration cycles charged.
+    pub cycles: u64,
+    /// (glb, array) external fragmentation before the pass.
+    pub frag_before: (f64, f64),
+    /// (glb, array) external fragmentation after the pass.
+    pub frag_after: (f64, f64),
+}

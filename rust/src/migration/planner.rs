@@ -1,0 +1,369 @@
+//! The defragmentation planner: fragmentation detection + compaction
+//! plan synthesis over the region manager's slice maps.
+
+use crate::abstraction::{SliceDemand, SliceRange};
+use crate::config::{DefragPolicyKind, RegionPolicyKind, SchedulerConfig};
+use crate::regions::{RegionId, RegionManager};
+
+/// One proposed relocation: where a region's slices are and where the
+/// plan wants them.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MigrationStep {
+    /// Region to relocate.
+    pub region: RegionId,
+    /// Current GLB-slice range.
+    pub from_glb: SliceRange,
+    /// Target GLB-slice range.
+    pub to_glb: SliceRange,
+    /// Current array-slice range.
+    pub from_array: SliceRange,
+    /// Target array-slice range.
+    pub to_array: SliceRange,
+}
+
+impl MigrationStep {
+    /// Whether the GLB range changes (implies a bank-to-bank state copy).
+    pub fn moves_glb(&self) -> bool {
+        self.from_glb != self.to_glb
+    }
+
+    /// Whether the array range changes (implies a fast-DPR restream).
+    pub fn moves_array(&self) -> bool {
+        self.from_array != self.to_array
+    }
+}
+
+/// An ordered set of relocations that left-compacts the busy slices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CompactionPlan {
+    /// Steps, in region-discovery order.  [`crate::migration::execute_plan`]
+    /// re-sorts per slice class; the order here carries no meaning.
+    pub steps: Vec<MigrationStep>,
+}
+
+impl CompactionPlan {
+    /// Number of regions the plan moves.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Whether the plan moves nothing.
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+/// Fragmentation detector + compaction-plan synthesizer.
+///
+/// Planning is pure: the planner never mutates the region manager.  Only
+/// the flexible-shape and variable-size mechanisms can defragment — the
+/// baseline has a single region and fixed-size regions are pre-carved at
+/// immovable unit positions.
+#[derive(Clone, Copy, Debug)]
+pub struct DefragPlanner {
+    policy: DefragPolicyKind,
+    threshold: f64,
+}
+
+impl DefragPlanner {
+    /// Build from the scheduler configuration knobs.
+    pub fn new(cfg: &SchedulerConfig) -> DefragPlanner {
+        DefragPlanner { policy: cfg.defrag_policy, threshold: cfg.defrag_threshold }
+    }
+
+    /// Active defrag policy.
+    pub fn policy(&self) -> DefragPolicyKind {
+        self.policy
+    }
+
+    /// Whether the scheduler should consult the planner at all.
+    pub fn enabled(&self) -> bool {
+        self.policy != DefragPolicyKind::Off
+    }
+
+    /// Propose a plan that would let `target` allocate, or `None` when
+    /// fragmentation is below the threshold, the mechanism cannot
+    /// defragment, nothing would move, or compaction still cannot free
+    /// enough contiguous room for the demand.
+    pub fn plan(&self, mgr: &RegionManager, target: &SliceDemand) -> Option<CompactionPlan> {
+        let (fg, fa) = mgr.fragmentation();
+        if fg < self.threshold && fa < self.threshold {
+            return None;
+        }
+        if !Self::fits_after_compaction(mgr, target) {
+            return None;
+        }
+        Self::compaction(mgr)
+    }
+
+    /// Unconditional compaction plan (the `DEFRAG` wire command) —
+    /// ignores the threshold and any target demand.
+    pub fn compact(&self, mgr: &RegionManager) -> Option<CompactionPlan> {
+        Self::compaction(mgr)
+    }
+
+    /// Whether `target` fits once every movable region is packed left
+    /// (after compaction, each slice class's free slices form one run).
+    fn fits_after_compaction(mgr: &RegionManager, target: &SliceDemand) -> bool {
+        match mgr.policy() {
+            RegionPolicyKind::FlexibleShape => {
+                mgr.glb_map().free_count() >= target.glb_slices
+                    && mgr.array_map().free_count() >= target.array_slices
+            }
+            RegionPolicyKind::VariableSize => {
+                let unit = mgr.unit();
+                let used_units: u32 = mgr
+                    .active()
+                    .map(|r| r.array_slices() / unit.array_slices.max(1))
+                    .sum();
+                mgr.units_needed(target) <= mgr.unit_count().saturating_sub(used_units)
+            }
+            _ => false,
+        }
+    }
+
+    fn compaction(mgr: &RegionManager) -> Option<CompactionPlan> {
+        match mgr.policy() {
+            RegionPolicyKind::FlexibleShape => Self::compact_flexible(mgr),
+            RegionPolicyKind::VariableSize => Self::compact_variable(mgr),
+            RegionPolicyKind::Baseline | RegionPolicyKind::FixedSize => None,
+        }
+    }
+
+    /// Flexible-shape: GLB and array slices are decoupled, so each class
+    /// packs left independently, preserving relative order per class.
+    fn compact_flexible(mgr: &RegionManager) -> Option<CompactionPlan> {
+        struct Entry {
+            region: RegionId,
+            glb: SliceRange,
+            array: SliceRange,
+        }
+        let mut regions: Vec<Entry> = mgr
+            .active()
+            .filter(|r| r.is_contiguous())
+            .map(|r| Entry {
+                region: r.id,
+                glb: r.glb.first().copied().unwrap_or(SliceRange::empty()),
+                array: r.array.first().copied().unwrap_or(SliceRange::empty()),
+            })
+            .collect();
+        if regions.is_empty() {
+            return None;
+        }
+
+        // target array ranges: pack in ascending current order
+        let mut to_array: Vec<(RegionId, SliceRange)> = Vec::with_capacity(regions.len());
+        regions.sort_by_key(|e| e.array.start);
+        let mut cursor = 0u32;
+        for e in &regions {
+            to_array.push((e.region, SliceRange::new(cursor, e.array.len)));
+            cursor += e.array.len;
+        }
+        // target glb ranges: same, independently
+        let mut to_glb: Vec<(RegionId, SliceRange)> = Vec::with_capacity(regions.len());
+        regions.sort_by_key(|e| e.glb.start);
+        let mut cursor = 0u32;
+        for e in &regions {
+            to_glb.push((e.region, SliceRange::new(cursor, e.glb.len)));
+            cursor += e.glb.len;
+        }
+
+        regions.sort_by_key(|e| e.region);
+        to_array.sort_by_key(|(id, _)| *id);
+        to_glb.sort_by_key(|(id, _)| *id);
+        let steps: Vec<MigrationStep> = regions
+            .iter()
+            .zip(to_array.iter())
+            .zip(to_glb.iter())
+            .map(|((e, (_, ta)), (_, tg))| MigrationStep {
+                region: e.region,
+                from_glb: e.glb,
+                // an empty range (zero-GLB demand) never needs to move
+                to_glb: if e.glb.is_empty() { e.glb } else { *tg },
+                from_array: e.array,
+                to_array: if e.array.is_empty() { e.array } else { *ta },
+            })
+            .filter(|s| s.moves_glb() || s.moves_array())
+            .collect();
+        if steps.is_empty() {
+            None
+        } else {
+            Some(CompactionPlan { steps })
+        }
+    }
+
+    /// Variable-size: regions are spans of adjacent units whose GLB and
+    /// array ranges are linked by the unit index, so compaction works in
+    /// unit space and moves both classes together.
+    fn compact_variable(mgr: &RegionManager) -> Option<CompactionPlan> {
+        let unit = mgr.unit();
+        let ua = unit.array_slices.max(1);
+        let ug = unit.glb_slices.max(1);
+        let mut regions: Vec<(RegionId, SliceRange, SliceRange)> = mgr
+            .active()
+            .filter(|r| r.is_contiguous())
+            .map(|r| {
+                (
+                    r.id,
+                    r.glb.first().copied().unwrap_or(SliceRange::empty()),
+                    r.array.first().copied().unwrap_or(SliceRange::empty()),
+                )
+            })
+            .collect();
+        if regions.is_empty() {
+            return None;
+        }
+        regions.sort_by_key(|(_, _, array)| array.start);
+        let mut cursor_units = 0u32;
+        let mut steps = Vec::new();
+        for (id, glb, array) in regions {
+            let k = array.len / ua;
+            let to_array = SliceRange::new(cursor_units * ua, array.len);
+            let to_glb = SliceRange::new(cursor_units * ug, glb.len);
+            cursor_units += k;
+            let step = MigrationStep {
+                region: id,
+                from_glb: glb,
+                to_glb,
+                from_array: array,
+                to_array,
+            };
+            if step.moves_glb() || step.moves_array() {
+                steps.push(step);
+            }
+        }
+        if steps.is_empty() {
+            None
+        } else {
+            Some(CompactionPlan { steps })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, SchedulerConfig};
+    use crate::regions::AllocOutcome;
+
+    fn manager(policy: RegionPolicyKind) -> RegionManager {
+        let arch = ArchConfig::default(); // 32 glb, 8 array
+        let sched = SchedulerConfig {
+            region_policy: policy,
+            unit_glb_slices: 4,
+            unit_array_slices: 1,
+            ..SchedulerConfig::default()
+        };
+        RegionManager::new(&arch, &sched)
+    }
+
+    fn planner(threshold: f64) -> DefragPlanner {
+        DefragPlanner::new(&SchedulerConfig {
+            defrag_policy: DefragPolicyKind::Greedy,
+            defrag_threshold: threshold,
+            ..SchedulerConfig::default()
+        })
+    }
+
+    /// Build a fragmented flexible map: three 2-array-slice regions,
+    /// release the middle one → free array slices {2,3} and {6,7}.
+    fn fragmented_flexible() -> (RegionManager, Vec<RegionId>) {
+        let mut m = manager(RegionPolicyKind::FlexibleShape);
+        let d = SliceDemand::new(8, 2);
+        let ids: Vec<RegionId> = (0..3)
+            .map(|_| match m.try_allocate(&d) {
+                AllocOutcome::Allocated(r) => r.id,
+                other => panic!("fill: {other:?}"),
+            })
+            .collect();
+        m.release(ids[1]).unwrap();
+        (m, ids)
+    }
+
+    #[test]
+    fn plan_compacts_fragmented_flexible_map() {
+        let (m, ids) = fragmented_flexible();
+        // free array = {2,3} ∪ {6,7}: 4 free but the largest run is 2
+        let p = planner(0.25);
+        let target = SliceDemand::new(4, 4);
+        let plan = p.plan(&m, &target).expect("fragmented enough");
+        // only the last region needs to move: array [4..6) → [2..4)
+        assert_eq!(plan.len(), 1);
+        let s = plan.steps[0];
+        assert_eq!(s.region, ids[2]);
+        assert_eq!(s.from_array, SliceRange::new(4, 2));
+        assert_eq!(s.to_array, SliceRange::new(2, 2));
+        assert!(s.moves_array());
+        assert!(s.moves_glb()); // glb packs left too
+    }
+
+    #[test]
+    fn plan_respects_threshold() {
+        let (m, _) = fragmented_flexible();
+        let (fg, fa) = m.fragmentation();
+        let above = fg.max(fa) + 0.01;
+        assert!(planner(above).plan(&m, &SliceDemand::new(1, 1)).is_none());
+    }
+
+    #[test]
+    fn plan_refuses_unsatisfiable_targets() {
+        let (m, _) = fragmented_flexible();
+        // only 4 array slices are free in total: 5 can never be freed by
+        // compaction alone
+        assert!(planner(0.0).plan(&m, &SliceDemand::new(1, 5)).is_none());
+        // ... but 4 can
+        assert!(planner(0.0).plan(&m, &SliceDemand::new(1, 4)).is_some());
+    }
+
+    #[test]
+    fn compact_ignores_threshold_and_target() {
+        let (m, _) = fragmented_flexible();
+        assert!(planner(1.0).compact(&m).is_some());
+    }
+
+    #[test]
+    fn packed_map_needs_no_plan() {
+        let mut m = manager(RegionPolicyKind::FlexibleShape);
+        let _ = m.try_allocate(&SliceDemand::new(8, 2));
+        let _ = m.try_allocate(&SliceDemand::new(8, 2));
+        assert!(planner(0.0).compact(&m).is_none());
+    }
+
+    #[test]
+    fn variable_plan_moves_unit_spans() {
+        let mut m = manager(RegionPolicyKind::VariableSize);
+        // three 2-unit regions (8 glb + 2 array each), free the middle
+        let d = SliceDemand::new(8, 2);
+        let a = m.try_allocate(&d).expect_allocated("a");
+        let b = m.try_allocate(&d).expect_allocated("b");
+        let c = m.try_allocate(&d).expect_allocated("c");
+        let _ = a;
+        m.release(b.id).unwrap();
+        // a 3-unit task cannot fit in the two scattered 2-unit holes
+        let target = SliceDemand::new(12, 3);
+        let plan = planner(0.0).plan(&m, &target).expect("viable");
+        assert_eq!(plan.len(), 1);
+        let s = plan.steps[0];
+        assert_eq!(s.region, c.id);
+        // c moves from units 4..6 to units 2..4 (both classes linked)
+        assert_eq!(s.to_array, SliceRange::new(2, 2));
+        assert_eq!(s.to_glb, SliceRange::new(8, 8));
+    }
+
+    #[test]
+    fn immovable_mechanisms_never_plan() {
+        for policy in [RegionPolicyKind::Baseline, RegionPolicyKind::FixedSize] {
+            let mut m = manager(policy);
+            let _ = m.try_allocate(&SliceDemand::new(4, 1));
+            assert!(planner(0.0).compact(&m).is_none(), "{policy:?}");
+            assert!(planner(0.0).plan(&m, &SliceDemand::new(1, 1)).is_none());
+        }
+    }
+
+    #[test]
+    fn disabled_planner_reports_off() {
+        let p = DefragPlanner::new(&SchedulerConfig::default());
+        assert!(!p.enabled());
+        assert_eq!(p.policy(), DefragPolicyKind::Off);
+    }
+}

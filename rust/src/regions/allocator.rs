@@ -102,6 +102,21 @@ impl RegionManager {
         (self.glb.fragmentation(), self.array.fragmentation())
     }
 
+    /// GLB-slice occupancy map (read-only; planner/metrics input).
+    pub fn glb_map(&self) -> &SliceMap {
+        &self.glb
+    }
+
+    /// Array-slice occupancy map (read-only; planner/metrics input).
+    pub fn array_map(&self) -> &SliceMap {
+        &self.array
+    }
+
+    /// Region lookup.
+    pub fn region(&self, id: RegionId) -> Option<&ExecutionRegion> {
+        self.regions.get(&id)
+    }
+
     /// Whether `demand` could ever be satisfied by this mechanism on an
     /// idle machine (feasibility, not current availability).
     pub fn can_ever_fit(&self, demand: &SliceDemand) -> bool {
@@ -163,18 +178,78 @@ impl RegionManager {
     }
 
     /// Release a region's slices.
+    ///
+    /// A region's owned ranges are coalesced *before* release (a
+    /// fixed-size task replicated into adjacent units owns several
+    /// ranges that form one physical run), so the free list the
+    /// defragmentation planner reads is canonical immediately — no lazy
+    /// merge pass between a release and the next planning decision.
     pub fn release(&mut self, id: RegionId) -> Result<()> {
         let region = self
             .regions
             .remove(&id)
             .ok_or_else(|| Error::Alloc(format!("release of unknown region {id}")))?;
-        for r in &region.glb {
-            self.glb.release(r);
+        for r in coalesce(&region.glb) {
+            self.glb.release(&r);
         }
-        for r in &region.array {
-            self.array.release(r);
+        for r in coalesce(&region.array) {
+            self.array.release(&r);
         }
         Ok(())
+    }
+
+    /// Move a (contiguous) region's slices to new ranges — the
+    /// relocation primitive behind live migration ([`crate::migration`]).
+    ///
+    /// `None` keeps a slice class in place.  Each new range must have the
+    /// same length as the current one and must be free (the region's own
+    /// current slices count as free, so overlapping shifts are fine).
+    /// On any validation failure the occupancy maps are left exactly as
+    /// they were.
+    pub fn relocate(
+        &mut self,
+        id: RegionId,
+        new_glb: Option<SliceRange>,
+        new_array: Option<SliceRange>,
+    ) -> Result<()> {
+        let region = self
+            .regions
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::Alloc(format!("relocate of unknown region {id}")))?;
+        if !region.is_contiguous() {
+            return Err(Error::Alloc(format!(
+                "cannot relocate non-contiguous region {id} (replicated fixed-size regions are pinned)"
+            )));
+        }
+        let cur_glb = region.glb.first().copied().unwrap_or(SliceRange::empty());
+        let cur_arr = region.array.first().copied().unwrap_or(SliceRange::empty());
+        let tgt_glb = new_glb.unwrap_or(cur_glb);
+        let tgt_arr = new_array.unwrap_or(cur_arr);
+        if tgt_glb.len != cur_glb.len || tgt_arr.len != cur_arr.len {
+            return Err(Error::Alloc(format!(
+                "relocation of {id} must preserve range lengths ({cur_glb}→{tgt_glb}, {cur_arr}→{tgt_arr})"
+            )));
+        }
+        if tgt_glb.end() > self.glb.len() || tgt_arr.end() > self.array.len() {
+            return Err(Error::Alloc(format!("relocation target out of bounds for {id}")));
+        }
+        // Free the region's own slices so self-overlapping shifts pass
+        // the target check; restore them if the target is busy.
+        self.glb.release(&cur_glb);
+        self.array.release(&cur_arr);
+        if self.glb.range_free(&tgt_glb) && self.array.range_free(&tgt_arr) {
+            self.glb.occupy(&tgt_glb);
+            self.array.occupy(&tgt_arr);
+            let r = self.regions.get_mut(&id).expect("looked up above");
+            r.glb = vec![tgt_glb];
+            r.array = vec![tgt_arr];
+            Ok(())
+        } else {
+            self.glb.occupy(&cur_glb);
+            self.array.occupy(&cur_arr);
+            Err(Error::Alloc(format!("relocation target busy for {id}")))
+        }
     }
 
     /// Render occupancy maps (Fig. 2-style dump).
@@ -274,6 +349,23 @@ impl RegionManager {
         };
         AllocOutcome::Allocated(self.commit(vec![glb], vec![array], 1))
     }
+}
+
+/// Merge adjacent/overlapping ranges into maximal sorted runs.
+fn coalesce(ranges: &[SliceRange]) -> Vec<SliceRange> {
+    let mut sorted: Vec<SliceRange> =
+        ranges.iter().copied().filter(|r| !r.is_empty()).collect();
+    sorted.sort_by_key(|r| r.start);
+    let mut out: Vec<SliceRange> = Vec::with_capacity(sorted.len());
+    for r in sorted {
+        match out.last_mut() {
+            Some(last) if r.start <= last.end() => {
+                last.len = last.len.max(r.end() - last.start);
+            }
+            _ => out.push(r),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -474,6 +566,100 @@ mod tests {
         let dump = m.render();
         assert!(dump.contains("GLB   ##"));
         assert!(dump.contains("ARRAY #"));
+    }
+
+    #[test]
+    fn coalesce_merges_adjacent_runs() {
+        let merged = coalesce(&[
+            SliceRange::new(4, 2),
+            SliceRange::new(0, 2),
+            SliceRange::new(2, 2),
+            SliceRange::new(8, 1),
+            SliceRange::empty(),
+        ]);
+        assert_eq!(merged, vec![SliceRange::new(0, 6), SliceRange::new(8, 1)]);
+        assert_eq!(coalesce(&[]), Vec::<SliceRange>::new());
+    }
+
+    #[test]
+    fn release_coalesces_replicated_unit_ranges_eagerly() {
+        // A task replicated into 3 *adjacent* fixed-size units owns three
+        // ranges forming one physical run; releasing it must leave the
+        // free list canonical (one maximal run), which the planner and
+        // the fragmentation gauge rely on.
+        let mut m = mgr(RegionPolicyKind::FixedSize);
+        let r = m
+            .try_allocate_replicated(&SliceDemand::new(2, 1), 3)
+            .expect_allocated("unroll x3");
+        assert_eq!(r.glb.len(), 3);
+        m.release(r.id).unwrap();
+        assert_eq!(m.glb_map().free_runs(), vec![SliceRange::new(0, 32)]);
+        assert_eq!(m.array_map().free_runs(), vec![SliceRange::new(0, 8)]);
+        assert_eq!(m.fragmentation(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn relocate_moves_a_flexible_region() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        let a = m.try_allocate(&SliceDemand::new(4, 2)).expect_allocated("a");
+        let b = m.try_allocate(&SliceDemand::new(4, 2)).expect_allocated("b");
+        m.release(a.id).unwrap();
+        // b sits at array [2..4), glb [8..12); compact it to the origin
+        m.relocate(b.id, Some(SliceRange::new(0, 4)), Some(SliceRange::new(0, 2)))
+            .unwrap();
+        let moved = m.region(b.id).unwrap();
+        assert_eq!(moved.glb, vec![SliceRange::new(0, 4)]);
+        assert_eq!(moved.array, vec![SliceRange::new(0, 2)]);
+        assert_eq!(m.fragmentation(), (0.0, 0.0));
+        // occupancy conserved
+        assert_eq!(m.glb_map().busy_count(), 4);
+        assert_eq!(m.array_map().busy_count(), 2);
+    }
+
+    #[test]
+    fn relocate_handles_self_overlapping_shift() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        let a = m.try_allocate(&SliceDemand::new(8, 4)).expect_allocated("a");
+        // shift left by 2 array slices over its own footprint: impossible
+        // at allocation time, fine for relocation
+        let pad = m.try_allocate(&SliceDemand::new(2, 1)).expect_allocated("pad");
+        m.release(pad.id).unwrap();
+        m.relocate(a.id, Some(SliceRange::new(2, 8)), Some(SliceRange::new(1, 4)))
+            .unwrap();
+        assert_eq!(m.region(a.id).unwrap().array, vec![SliceRange::new(1, 4)]);
+        assert_eq!(m.glb_map().busy_count(), 8);
+    }
+
+    #[test]
+    fn relocate_rejects_bad_targets_without_mutating() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        let a = m.try_allocate(&SliceDemand::new(4, 2)).expect_allocated("a");
+        let b = m.try_allocate(&SliceDemand::new(4, 2)).expect_allocated("b");
+        let before = m.render();
+        // unknown region
+        assert!(m.relocate(RegionId(99), None, None).is_err());
+        // length change
+        assert!(m
+            .relocate(a.id, Some(SliceRange::new(8, 6)), None)
+            .is_err());
+        // out of bounds
+        assert!(m
+            .relocate(a.id, None, Some(SliceRange::new(7, 2)))
+            .is_err());
+        // target busy (b's slices)
+        let b_arr = b.array[0];
+        assert!(m.relocate(a.id, None, Some(b_arr)).is_err());
+        assert_eq!(m.render(), before, "failed relocation must not mutate");
+    }
+
+    #[test]
+    fn relocate_rejects_replicated_regions() {
+        let mut m = mgr(RegionPolicyKind::FixedSize);
+        let small = SliceDemand::new(2, 1);
+        let r = m.try_allocate_replicated(&small, 2).expect_allocated("x2");
+        // skip a unit so the region is genuinely multi-range
+        assert!(r.glb.len() >= 2);
+        assert!(m.relocate(r.id, None, None).is_err());
     }
 
     #[test]

@@ -2,11 +2,15 @@
 
 use std::collections::BTreeMap;
 
-use crate::abstraction::SliceRange;
+use crate::abstraction::{SliceDemand, SliceRange};
 use crate::compiler::generate_bitstream;
-use crate::config::{Config, RegionPolicyKind, SchedulerPolicyKind};
+use crate::config::{Config, DefragPolicyKind, RegionPolicyKind, SchedulerPolicyKind};
 use crate::dpr::{Bitstream, BitstreamId, DprEngine, DprMode};
 use crate::error::{Error, Result};
+use crate::migration::{
+    execute_plan, CompactionPlan, DefragPlanner, MigrationCostModel, MigrationReport,
+    MigrationStats,
+};
 use crate::regions::{AllocOutcome, ExecutionRegion, RegionId, RegionManager};
 use crate::tasks::{TaskId, TaskInstanceId, TaskLibrary, VariantId};
 
@@ -27,7 +31,8 @@ pub struct Launch {
     pub replicas: u32,
     /// Launch cycle.
     pub start: u64,
-    /// Reconfiguration cycles charged before execution.
+    /// Reconfiguration cycles charged before execution (includes the
+    /// compaction-pass wait when a defragmentation rescued this launch).
     pub dpr_cycles: u64,
     /// Execution cycles (work / effective throughput).
     pub exec_cycles: u64,
@@ -48,8 +53,36 @@ struct Option_ {
     exclusive: bool,
 }
 
+/// Attempt outcome of placing one ready task.
+enum Attempt {
+    /// Placed and charged.
+    Launched(Launch),
+    /// At least one variant could fit *eventually* but not right now —
+    /// the defragmentation trigger.  Carries every blocked variant in
+    /// policy-preference order: the planner rescues the most-preferred
+    /// one that compaction can actually make room for (a full fabric
+    /// often cannot host the fastest variant but can host a smaller one).
+    Blocked { options: Vec<(VariantId, SliceDemand)> },
+    /// No variant can ever fit in the current machine state class.
+    Impossible,
+}
+
+/// A launched task's live bookkeeping (completion + migration identity).
+#[derive(Clone, Debug)]
+struct RunningTask {
+    inst: TaskInstanceId,
+    task: TaskId,
+    ver: VariantId,
+    /// Authoritative completion cycle.  Migrations push this out; the
+    /// sims re-validate queued completion events against it (lazy
+    /// rescheduling), so timelines stay correct without retracting
+    /// events from the queue.
+    finish: u64,
+}
+
 /// Event-driven scheduler implementing the paper's greedy policy plus
-/// FCFS and fair-share ablations.
+/// FCFS and fair-share ablations, with optional live-migration
+/// defragmentation ([`crate::migration`]).
 #[derive(Clone, Debug)]
 pub struct Scheduler {
     lib: TaskLibrary,
@@ -57,12 +90,21 @@ pub struct Scheduler {
     dpr: DprEngine,
     policy: SchedulerPolicyKind,
     baseline_single_mapping: bool,
-    /// region → instance, for completion handling.
-    running: BTreeMap<RegionId, TaskInstanceId>,
+    /// region → live task, for completion handling and migration.
+    running: BTreeMap<RegionId, RunningTask>,
     /// fair-share rotation cursor.
     rr_cursor: u32,
     /// pre-generated bitstreams per (task, variant).
     bitstreams: BTreeMap<BitstreamId, Bitstream>,
+    /// Defragmentation planner (off unless `scheduler.defrag_policy`).
+    planner: DefragPlanner,
+    /// Migration cycle pricing.
+    cost_model: MigrationCostModel,
+    /// Cumulative migration counters.
+    mig_stats: MigrationStats,
+    /// Cycles a just-committed compaction charges to the next launch
+    /// (the rescued task waits for the whole migration pass).
+    pending_migration_cycles: u64,
 }
 
 impl Scheduler {
@@ -87,6 +129,10 @@ impl Scheduler {
             running: BTreeMap::new(),
             rr_cursor: 0,
             bitstreams,
+            planner: DefragPlanner::new(&cfg.scheduler),
+            cost_model: MigrationCostModel::new(&cfg.arch, cfg.scheduler.migration_cost_model),
+            mig_stats: MigrationStats::default(),
+            pending_migration_cycles: 0,
         }
     }
 
@@ -125,9 +171,29 @@ impl Scheduler {
         let ready = self.order_ready(queue.ready_tasks());
         let mut launches = Vec::new();
         for rt in ready {
-            if let Some(launch) = self.try_launch(&rt, now) {
-                queue.mark_launched(rt.instance).expect("ready implies launchable");
-                launches.push(launch);
+            match self.try_launch(&rt, now) {
+                Attempt::Launched(launch) => {
+                    queue.mark_launched(rt.instance).expect("ready implies launchable");
+                    launches.push(launch);
+                }
+                Attempt::Blocked { options } => {
+                    // Free slices exist but not contiguously: before
+                    // leaving the task waiting, ask the defragmentation
+                    // planner whether compacting the running regions
+                    // frees room, and retry once if a plan committed.
+                    self.mig_stats.nofit_events += 1;
+                    if self.planner.enabled() && self.try_defrag_for(&rt, &options, now) {
+                        if let Attempt::Launched(launch) = self.try_launch(&rt, now) {
+                            self.mig_stats.rescued_launches += 1;
+                            queue
+                                .mark_launched(rt.instance)
+                                .expect("ready implies launchable");
+                            launches.push(launch);
+                        }
+                        self.pending_migration_cycles = 0; // consumed or dropped
+                    }
+                }
+                Attempt::Impossible => {}
             }
         }
         if self.policy == SchedulerPolicyKind::FairShare {
@@ -139,12 +205,42 @@ impl Scheduler {
     /// Handle a task completion: free its region.  Returns the instance
     /// that was running there.
     pub fn complete(&mut self, region: RegionId) -> Result<TaskInstanceId> {
-        let inst = self
+        let rt = self
             .running
             .remove(&region)
             .ok_or_else(|| Error::Sched(format!("completion for idle region {region}")))?;
         self.mgr.release(region)?;
-        Ok(inst)
+        Ok(rt.inst)
+    }
+
+    /// Authoritative completion cycle of the task on `region`, if any.
+    ///
+    /// Migrations extend finish times after the Launch was emitted, so a
+    /// driver popping a completion event must re-validate it here and
+    /// re-queue at the returned cycle when it is still in the future
+    /// (lazy event rescheduling).
+    pub fn finish_of(&self, region: RegionId) -> Option<u64> {
+        self.running.get(&region).map(|r| r.finish)
+    }
+
+    /// Cumulative migration/defragmentation counters.
+    pub fn migration_stats(&self) -> MigrationStats {
+        self.mig_stats
+    }
+
+    /// Force one compaction pass right now (the coordinator's `DEFRAG`
+    /// wire command) — ignores the defrag threshold and needs no blocked
+    /// task.  Running tasks that move are charged their migration cycles.
+    pub fn defrag_now(&mut self, now: u64) -> MigrationReport {
+        let frag_before = self.mgr.fragmentation();
+        let (migrated, cycles) = match self.planner.compact(&self.mgr) {
+            None => (0, 0),
+            Some(plan) => {
+                let costs = self.step_costs(&plan);
+                self.commit_plan(&plan, &costs, now).unwrap_or((0, 0))
+            }
+        };
+        MigrationReport { migrated, cycles, frag_before, frag_after: self.mgr.fragmentation() }
     }
 
     /// Number of running tasks.
@@ -278,9 +374,10 @@ impl Scheduler {
         opts
     }
 
-    /// Try to launch one ready task; `None` if nothing fits right now.
-    fn try_launch(&mut self, rt: &ReadyTask, now: u64) -> Option<Launch> {
+    /// Try to launch one ready task.
+    fn try_launch(&mut self, rt: &ReadyTask, now: u64) -> Attempt {
         let options = self.options_for(&rt.task);
+        let mut blocked: Vec<(VariantId, SliceDemand)> = Vec::new();
         for opt in options {
             let spec = self.lib.get(&rt.task).expect("options imply spec");
             let variant = spec.variant(opt.ver).expect("option from spec").clone();
@@ -293,7 +390,13 @@ impl Scheduler {
             };
             let region: ExecutionRegion = match outcome {
                 AllocOutcome::Allocated(r) => r,
-                AllocOutcome::NoFit | AllocOutcome::NeverFits => continue,
+                AllocOutcome::NoFit => {
+                    // remember blocked variants (in preference order):
+                    // they are what a compaction should make room for
+                    blocked.push((opt.ver, variant.demand));
+                    continue;
+                }
+                AllocOutcome::NeverFits => continue,
             };
 
             // DPR: stream the variant's bitstream into the region.
@@ -305,23 +408,115 @@ impl Scheduler {
             let replicas = region.replicas.max(1);
             let eff_tpt = variant.throughput * replicas as f64;
             let exec_cycles = (spec.work as f64 / eff_tpt).ceil() as u64;
-            let finish = now + dpr_out.cycles + exec_cycles;
+            // a rescued launch also waits out the compaction pass
+            let dpr_cycles = dpr_out.cycles + self.pending_migration_cycles;
+            self.pending_migration_cycles = 0;
+            let finish = now + dpr_cycles + exec_cycles;
 
-            self.running.insert(region.id, rt.instance);
-            return Some(Launch {
+            self.running.insert(
+                region.id,
+                RunningTask { inst: rt.instance, task: rt.task.clone(), ver: opt.ver, finish },
+            );
+            return Attempt::Launched(Launch {
                 instance: rt.instance,
                 task: rt.task.clone(),
                 ver: opt.ver,
                 region: region.id,
                 replicas,
                 start: now,
-                dpr_cycles: dpr_out.cycles,
+                dpr_cycles,
                 exec_cycles,
                 finish,
                 cache_hit: dpr_out.cache_hit,
             });
         }
-        None
+        if blocked.is_empty() {
+            Attempt::Impossible
+        } else {
+            Attempt::Blocked { options: blocked }
+        }
+    }
+
+    // -------------------------------------------------- defragmentation
+
+    /// Price every step of `plan` against the running tasks' bitstreams.
+    fn step_costs(&self, plan: &CompactionPlan) -> Vec<u64> {
+        plan.steps
+            .iter()
+            .map(|step| {
+                let stream = self
+                    .running
+                    .get(&step.region)
+                    .and_then(|rt| {
+                        self.bitstreams.get(&BitstreamId::new(rt.task.0.clone(), rt.ver.0))
+                    })
+                    .map(|bs| self.dpr.migration_stream_cycles(bs))
+                    .unwrap_or(0);
+                self.cost_model.step_cycles(step, stream)
+            })
+            .collect()
+    }
+
+    /// Execute `plan` (priced by `costs`, one entry per step): relocate
+    /// regions, extend migrated tasks' finish times, and account stats.
+    /// Returns (tasks migrated, total cycles).
+    fn commit_plan(&mut self, plan: &CompactionPlan, costs: &[u64], now: u64) -> Result<(u64, u64)> {
+        let outcome = execute_plan(&mut self.mgr, plan, costs)?;
+        for rec in &outcome.records {
+            if let Some(rt) = self.running.get_mut(&rec.region) {
+                // the task pauses for its own checkpoint+move window;
+                // the remaining work simply shifts right by that much
+                rt.finish = rt.finish.max(now) + rec.cycles;
+            }
+        }
+        self.mig_stats.plans_committed += 1;
+        self.mig_stats.tasks_migrated += outcome.records.len() as u64;
+        self.mig_stats.migration_cycles += outcome.total_cycles;
+        Ok((outcome.records.len() as u64, outcome.total_cycles))
+    }
+
+    /// Ask the planner for a compaction that unblocks one of `rt`'s
+    /// blocked variants (tried in policy-preference order); commit the
+    /// first viable plan under the defrag policy.  Returns whether a
+    /// plan was executed (the caller then retries the launch).
+    fn try_defrag_for(
+        &mut self,
+        rt: &ReadyTask,
+        options: &[(VariantId, SliceDemand)],
+        now: u64,
+    ) -> bool {
+        for (ver, demand) in options {
+            self.mig_stats.plans_considered += 1;
+            let plan = match self.planner.plan(&self.mgr, demand) {
+                Some(p) => p,
+                None => continue,
+            };
+            let costs = self.step_costs(&plan);
+            if self.planner.policy() == DefragPolicyKind::CostAware {
+                // the plan is repaid when the unblocked task's execution
+                // time exceeds the cycles the migration pass costs
+                let gain = self
+                    .lib
+                    .get(&rt.task)
+                    .ok()
+                    .and_then(|spec| spec.variant(*ver).map(|v| spec.exec_cycles(v)))
+                    .unwrap_or(0);
+                if costs.iter().sum::<u64>() > gain {
+                    continue;
+                }
+            }
+            return match self.commit_plan(&plan, &costs, now) {
+                Ok((_, cycles)) => {
+                    self.pending_migration_cycles = cycles;
+                    true
+                }
+                Err(_) => {
+                    debug_assert!(false, "planner proposed an inexecutable plan");
+                    false
+                }
+            };
+        }
+        false
     }
 }
 
@@ -456,6 +651,139 @@ mod tests {
     fn complete_unknown_region_errors() {
         let mut s = sched(RegionPolicyKind::FlexibleShape);
         assert!(s.complete(RegionId(42)).is_err());
+    }
+
+    // ------------------------------------------------- defragmentation
+
+    use crate::config::{DefragPolicyKind, MigrationCostModelKind};
+
+    /// Build a deterministically fragmented machine: four Harris-a
+    /// regions (FCFS picks the smallest variant) fill the array; freeing
+    /// the 2nd and 4th leaves free array slices {2,3} ∪ {6,7} — four
+    /// free slices, largest run two — so camera-a (4 array slices) gets
+    /// `NoFit` despite enough total capacity.
+    fn fragmented_sched(defrag: DefragPolicyKind) -> (Scheduler, RequestQueue) {
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.scheduler.policy = SchedulerPolicyKind::FcfsFirstFit;
+        cfg.scheduler.defrag_policy = defrag;
+        cfg.scheduler.defrag_threshold = 0.25;
+        cfg.scheduler.migration_cost_model = MigrationCostModelKind::Full;
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        for seq in 0..4 {
+            submit(&mut q, seq, 3, AppId::Harris, 0);
+        }
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 4);
+        for l in &launches {
+            assert_eq!(l.ver, VariantId('a'), "FCFS picks the smallest variant");
+        }
+        for i in [1usize, 3] {
+            let inst = s.complete(launches[i].region).unwrap();
+            q.mark_complete(inst, 100).unwrap();
+        }
+        let (_, fa) = s.regions().fragmentation();
+        assert!(fa >= 0.25, "setup must be fragmented: {fa}");
+        (s, q)
+    }
+
+    #[test]
+    fn defrag_off_leaves_blocked_task_waiting() {
+        let (mut s, mut q) = fragmented_sched(DefragPolicyKind::Off);
+        submit(&mut q, 10, 2, AppId::Camera, 100);
+        let launches = s.schedule(&mut q, 100);
+        assert!(launches.is_empty(), "camera cannot fit in the scattered holes");
+        assert_eq!(q.ready_count(), 1);
+        assert_eq!(s.migration_stats().tasks_migrated, 0);
+    }
+
+    #[test]
+    fn greedy_defrag_rescues_a_blocked_launch() {
+        let (mut s, mut q) = fragmented_sched(DefragPolicyKind::Greedy);
+        let migrated_region = {
+            // the surviving region at array [4..6) is the one that moves
+            let mut regions: Vec<_> =
+                s.regions().active().map(|r| (r.array[0].start, r.id)).collect();
+            regions.sort();
+            regions[1].1
+        };
+        let finish_before = s.finish_of(migrated_region).unwrap();
+
+        submit(&mut q, 10, 2, AppId::Camera, 100);
+        let launches = s.schedule(&mut q, 100);
+        assert_eq!(launches.len(), 1, "compaction must rescue the launch");
+        let l = &launches[0];
+        assert_eq!(l.ver, VariantId('a'));
+
+        let stats = s.migration_stats();
+        assert!(stats.nofit_events >= 1);
+        assert_eq!(stats.plans_committed, 1);
+        assert_eq!(stats.tasks_migrated, 1);
+        assert_eq!(stats.rescued_launches, 1);
+        // full cost model: checkpoint 64 + restream 3344 + GLB copy 16384
+        assert_eq!(stats.migration_cycles, 64 + 3344 + 16_384);
+        // the rescued launch waits out the compaction pass...
+        assert!(l.dpr_cycles >= stats.migration_cycles, "{}", l.dpr_cycles);
+        // ...and the migrated task's completion moved out by its pause
+        let finish_after = s.finish_of(migrated_region).unwrap();
+        assert_eq!(finish_after, finish_before + stats.migration_cycles);
+        // the maps are compact again
+        assert_eq!(s.regions().fragmentation().1, 0.0);
+    }
+
+    #[test]
+    fn cost_aware_defrag_commits_when_repaid() {
+        // camera-a runs 691,200 cycles; the pass costs ~20k — repaid.
+        let (mut s, mut q) = fragmented_sched(DefragPolicyKind::CostAware);
+        submit(&mut q, 10, 2, AppId::Camera, 100);
+        let launches = s.schedule(&mut q, 100);
+        assert_eq!(launches.len(), 1);
+        assert_eq!(s.migration_stats().rescued_launches, 1);
+    }
+
+    #[test]
+    fn cost_aware_defrag_refuses_unrepaid_plans() {
+        // Blow the GLB banks up to 1 GiB so the bank-to-bank copy alone
+        // (134M cycles) dwarfs camera-a's 691k execution cycles.
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.arch.glb_bank_kib = 1 << 20;
+        cfg.scheduler.policy = SchedulerPolicyKind::FcfsFirstFit;
+        cfg.scheduler.defrag_policy = DefragPolicyKind::CostAware;
+        cfg.scheduler.defrag_threshold = 0.25;
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        for seq in 0..4 {
+            submit(&mut q, seq, 3, AppId::Harris, 0);
+        }
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 4);
+        for i in [1usize, 3] {
+            let inst = s.complete(launches[i].region).unwrap();
+            q.mark_complete(inst, 100).unwrap();
+        }
+        submit(&mut q, 10, 2, AppId::Camera, 100);
+        let rescued = s.schedule(&mut q, 100);
+        assert!(rescued.is_empty(), "unrepaid plan must be refused");
+        let stats = s.migration_stats();
+        assert!(stats.plans_considered >= 1);
+        assert_eq!(stats.plans_committed, 0);
+        assert_eq!(stats.tasks_migrated, 0);
+    }
+
+    #[test]
+    fn defrag_now_compacts_without_a_blocked_task() {
+        let (mut s, _q) = fragmented_sched(DefragPolicyKind::Greedy);
+        let report = s.defrag_now(100);
+        assert_eq!(report.migrated, 1);
+        assert!(report.cycles > 0);
+        assert!(report.frag_before.1 > 0.0);
+        assert_eq!(report.frag_after, (0.0, 0.0));
+        // idempotent: a second pass has nothing to do
+        let again = s.defrag_now(200);
+        assert_eq!(again.migrated, 0);
+        assert_eq!(again.cycles, 0);
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! 2. region allocation under the configured mechanism ([`crate::regions`]),
 //! 3. DPR cost accounting ([`crate::dpr`]), and
 //! 4. execution-time computation from Table 1 throughputs.
+//!
+//! When every variant of a ready task returns `NoFit` and
+//! `scheduler.defrag_policy` is enabled, the scheduler additionally
+//! consults the defragmentation planner ([`crate::migration`]) and may
+//! live-migrate running tasks to open a contiguous hole before giving
+//! up on the task for this step.
 
 mod core;
 mod queue;

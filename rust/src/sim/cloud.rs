@@ -10,7 +10,9 @@ use std::collections::BTreeMap;
 use crate::config::{CloudWorkloadConfig, Config, RegionPolicyKind, WorkloadConfig};
 use crate::dpr::{CacheStats, DprMode};
 use crate::error::{Error, Result};
-use crate::metrics::{NtatRecord, NtatTracker, ThroughputTracker, UtilizationTracker};
+use crate::metrics::{
+    FragmentationTracker, NtatRecord, NtatTracker, ThroughputTracker, UtilizationTracker,
+};
 use crate::regions::RegionId;
 use crate::scheduler::{RequestQueue, Scheduler};
 use crate::tasks::{AppGraph, AppId, AppRequest, TaskLibrary};
@@ -52,6 +54,16 @@ pub struct CloudReport {
     pub submitted: u64,
     /// Requests completed (== submitted after drain).
     pub completed: u64,
+    /// Time-weighted mean (glb, array) external fragmentation.
+    pub frag: (f64, f64),
+    /// Schedule attempts where a ready task's every variant was `NoFit`.
+    pub nofit_events: u64,
+    /// Live migrations performed by the defragmentation subsystem.
+    pub migrations: u64,
+    /// Total cycles charged for those migrations.
+    pub migration_cycles: u64,
+    /// Launches that only succeeded because a compaction ran first.
+    pub rescued_launches: u64,
 }
 
 impl CloudReport {
@@ -126,6 +138,7 @@ pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
     let mut tput = ThroughputTracker::new();
     let mut glb_util = UtilizationTracker::new(cfg.arch.glb_slices());
     let mut arr_util = UtilizationTracker::new(cfg.arch.array_slices());
+    let mut frag = FragmentationTracker::new();
 
     while let Some((now, ev)) = events.pop() {
         match ev {
@@ -144,6 +157,15 @@ pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
                 }
             }
             Event::Completion(region) => {
+                // Migrations push completions out after their events were
+                // queued: re-validate against the scheduler's
+                // authoritative finish and re-queue stale events.
+                if let Some(finish) = sched.finish_of(region) {
+                    if finish > now {
+                        events.push(finish, Event::Completion(region));
+                        continue;
+                    }
+                }
                 let inst = sched.complete(region)?;
                 if let Some(done) = queue.mark_complete(inst, now)? {
                     let (app, arrival, exec) =
@@ -169,10 +191,11 @@ pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
             }
             events.push(launch.finish, Event::Completion(launch.region));
         }
-        // utilization is piecewise-constant between events
+        // utilization/fragmentation are piecewise-constant between events
         let (ug, ua) = sched.regions().utilization();
         glb_util.sample(now, (ug * cfg.arch.glb_slices() as f64).round() as u32);
         arr_util.sample(now, (ua * cfg.arch.array_slices() as f64).round() as u32);
+        frag.sample(now, sched.regions().fragmentation());
     }
 
     if queue.open_requests() != 0 {
@@ -182,6 +205,7 @@ pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
         )));
     }
 
+    let mig = sched.migration_stats();
     Ok(CloudReport {
         policy: cfg.scheduler.region_policy,
         duration_cycles: duration,
@@ -194,6 +218,11 @@ pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
         launches,
         submitted,
         completed,
+        frag: frag.mean(),
+        nofit_events: mig.nofit_events,
+        migrations: mig.tasks_migrated,
+        migration_cycles: mig.migration_cycles,
+        rescued_launches: mig.rescued_launches,
     })
 }
 
@@ -259,5 +288,44 @@ mod tests {
     fn edge_config_rejected() {
         let cfg = presets::edge_scenario(RegionPolicyKind::Baseline);
         assert!(run_cloud(&cfg).is_err());
+    }
+
+    // ------------------------------------------------- churn + migration
+
+    use crate::config::DefragPolicyKind;
+
+    #[test]
+    fn churn_with_defrag_completes_and_migrates() {
+        let cfg =
+            presets::churn_scenario(RegionPolicyKind::FlexibleShape, DefragPolicyKind::Greedy);
+        let r = run_cloud(&cfg).unwrap();
+        assert_eq!(r.submitted, r.completed, "churn must drain fully");
+        assert!(r.nofit_events > 0, "past-saturation load must pressure the allocator");
+        assert!(r.migrations > 0, "churn fragmentation must trigger migrations");
+        assert!(r.migration_cycles > 0);
+        assert!(r.rescued_launches > 0);
+        assert!((0.0..=1.0).contains(&r.frag.0) && (0.0..=1.0).contains(&r.frag.1));
+    }
+
+    #[test]
+    fn churn_without_defrag_never_migrates() {
+        let cfg = presets::churn_scenario(RegionPolicyKind::FlexibleShape, DefragPolicyKind::Off);
+        let r = run_cloud(&cfg).unwrap();
+        assert_eq!(r.submitted, r.completed);
+        assert_eq!(r.migrations, 0);
+        assert_eq!(r.rescued_launches, 0);
+        assert!(r.nofit_events > 0);
+    }
+
+    #[test]
+    fn churn_deterministic_given_seed() {
+        let cfg =
+            presets::churn_scenario(RegionPolicyKind::FlexibleShape, DefragPolicyKind::CostAware);
+        let a = run_cloud(&cfg).unwrap();
+        let b = run_cloud(&cfg).unwrap();
+        assert_eq!(a.makespan_cycles, b.makespan_cycles);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.nofit_events, b.nofit_events);
+        assert_eq!(a.frag, b.frag);
     }
 }

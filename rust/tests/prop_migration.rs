@@ -1,0 +1,218 @@
+//! Property tests on the migration subsystem: after any interleaved
+//! sequence of allocate / release / compact operations, no two regions
+//! overlap, every live region's slice ranges stay within the machine
+//! bounds, and busy-slice totals are conserved (migration moves work, it
+//! never creates or destroys it).
+
+use cgra_mte::abstraction::SliceDemand;
+use cgra_mte::config::{
+    ArchConfig, DefragPolicyKind, RegionPolicyKind, SchedulerConfig,
+};
+use cgra_mte::migration::{execute_plan, DefragPlanner};
+use cgra_mte::regions::{AllocOutcome, ExecutionRegion, RegionManager};
+use cgra_mte::testutil::{forall_cfg, PropConfig};
+use cgra_mte::util::rng::Rng;
+
+const GLB_TOTAL: u32 = 32;
+const ARR_TOTAL: u32 = 8;
+
+/// One op: allocate (glb, array), release a random live region, or run
+/// a full compaction pass.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Alloc(u32, u32),
+    Release,
+    Compact,
+}
+
+fn op_seq(rng: &mut Rng, size: u32) -> Vec<Op> {
+    let len = 6 + rng.below(size as u64 * 2 + 1) as usize;
+    (0..len)
+        .map(|_| match rng.below(10) {
+            0..=4 => Op::Alloc(
+                rng.range_inclusive(0, 20) as u32,
+                rng.range_inclusive(1, 7) as u32,
+            ),
+            5..=7 => Op::Release,
+            _ => Op::Compact,
+        })
+        .collect()
+}
+
+fn overlaps(a: &ExecutionRegion, b: &ExecutionRegion) -> bool {
+    for ra in &a.glb {
+        for rb in &b.glb {
+            if ra.overlaps(rb) {
+                return true;
+            }
+        }
+    }
+    for ra in &a.array {
+        for rb in &b.array {
+            if ra.overlaps(rb) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Global invariants over the live set + manager.
+fn invariants_hold(mgr: &RegionManager) -> bool {
+    let live: Vec<&ExecutionRegion> = mgr.active().collect();
+    // pairwise disjoint
+    for (i, a) in live.iter().enumerate() {
+        for b in live.iter().skip(i + 1) {
+            if overlaps(a, b) {
+                return false;
+            }
+        }
+    }
+    // in bounds
+    for r in &live {
+        if r.glb.iter().any(|g| g.end() > GLB_TOTAL)
+            || r.array.iter().any(|a| a.end() > ARR_TOTAL)
+        {
+            return false;
+        }
+    }
+    // conservation: busy-slice totals equal the sum of live footprints
+    let busy_g: u32 = live.iter().map(|r| r.glb_slices()).sum();
+    let busy_a: u32 = live.iter().map(|r| r.array_slices()).sum();
+    mgr.glb_map().busy_count() == busy_g && mgr.array_map().busy_count() == busy_a
+}
+
+fn check_policy(policy: RegionPolicyKind) {
+    let cfg = PropConfig { cases: 48, seed: 0x519A7E ^ policy as u64, max_size: 24 };
+    forall_cfg(cfg, &op_seq, |ops| {
+        let arch = ArchConfig::default();
+        let sched = SchedulerConfig {
+            region_policy: policy,
+            unit_glb_slices: 4,
+            unit_array_slices: 1,
+            defrag_policy: DefragPolicyKind::Greedy,
+            defrag_threshold: 0.0,
+            ..SchedulerConfig::default()
+        };
+        let planner = DefragPlanner::new(&sched);
+        let mut mgr = RegionManager::new(&arch, &sched);
+        let mut rng = Rng::new(ops.len() as u64 + 1);
+
+        for op in ops {
+            match *op {
+                Op::Alloc(g, a) => {
+                    let _ = mgr.try_allocate(&SliceDemand::new(g, a));
+                }
+                Op::Release => {
+                    let ids: Vec<_> = mgr.active().map(|r| r.id).collect();
+                    if !ids.is_empty() {
+                        let idx = rng.below(ids.len() as u64) as usize;
+                        if mgr.release(ids[idx]).is_err() {
+                            return false;
+                        }
+                    }
+                }
+                Op::Compact => {
+                    let busy_before =
+                        (mgr.glb_map().busy_count(), mgr.array_map().busy_count());
+                    if let Some(plan) = planner.compact(&mgr) {
+                        let costs = vec![1u64; plan.len()];
+                        match execute_plan(&mut mgr, &plan, &costs) {
+                            Ok(out) => {
+                                debug_assert_eq!(out.records.len(), plan.len());
+                                // compaction conserves busy totals exactly
+                                if (mgr.glb_map().busy_count(), mgr.array_map().busy_count())
+                                    != busy_before
+                                {
+                                    return false;
+                                }
+                                // left-compaction leaves at most one free
+                                // run per class
+                                if mgr.glb_map().free_runs().len() > 1
+                                    || mgr.array_map().free_runs().len() > 1
+                                {
+                                    return false;
+                                }
+                            }
+                            Err(_) => return false, // planner proposed junk
+                        }
+                    }
+                }
+            }
+            if !invariants_hold(&mgr) {
+                return false;
+            }
+        }
+
+        // full teardown restores the idle machine regardless of how much
+        // migration happened
+        let ids: Vec<_> = mgr.active().map(|r| r.id).collect();
+        for id in ids {
+            if mgr.release(id).is_err() {
+                return false;
+            }
+        }
+        mgr.idle()
+            && mgr.glb_map().busy_count() == 0
+            && mgr.array_map().busy_count() == 0
+    });
+}
+
+#[test]
+fn migration_invariants_flexible() {
+    check_policy(RegionPolicyKind::FlexibleShape);
+}
+
+#[test]
+fn migration_invariants_variable() {
+    check_policy(RegionPolicyKind::VariableSize);
+}
+
+/// Random (not planner-driven) relocations: whether each succeeds or is
+/// rejected, the invariants must hold afterwards.
+#[test]
+fn arbitrary_relocations_preserve_invariants() {
+    let gen = |rng: &mut Rng, size: u32| {
+        let len = 4 + rng.below(size as u64 + 1) as usize;
+        (0..len)
+            .map(|_| {
+                (
+                    rng.range_inclusive(0, 34) as u32, // target glb start (may be OOB)
+                    rng.range_inclusive(0, 9) as u32,  // target array start (may be OOB)
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    forall_cfg(PropConfig { cases: 64, seed: 0xD06_F00D, max_size: 32 }, &gen, |targets| {
+        let arch = ArchConfig::default();
+        let sched = SchedulerConfig {
+            region_policy: RegionPolicyKind::FlexibleShape,
+            ..SchedulerConfig::default()
+        };
+        let mut mgr = RegionManager::new(&arch, &sched);
+        let mut ids = Vec::new();
+        for _ in 0..3 {
+            match mgr.try_allocate(&SliceDemand::new(6, 2)) {
+                AllocOutcome::Allocated(r) => ids.push(r.id),
+                other => panic!("fill: {other:?}"),
+            }
+        }
+        let mut rng = Rng::new(targets.len() as u64);
+        for &(gs, as_) in targets {
+            let id = ids[rng.below(ids.len() as u64) as usize];
+            let (glen, alen) = {
+                let r = mgr.region(id).expect("live");
+                (r.glb[0].len, r.array[0].len)
+            };
+            let _ = mgr.relocate(
+                id,
+                Some(cgra_mte::abstraction::SliceRange::new(gs, glen)),
+                Some(cgra_mte::abstraction::SliceRange::new(as_, alen)),
+            );
+            if !invariants_hold(&mgr) {
+                return false;
+            }
+        }
+        true
+    });
+}
