@@ -1,0 +1,180 @@
+//! Shard-count ablation — offered load a fabric pool sustains before
+//! its first `BUSY` rejection.
+//!
+//! The claim to quantify: the pool abstraction scales the serving path
+//! horizontally.  Each shard is a full Amber-like fabric behind one
+//! placement router with a bounded per-shard admission window; sweeping
+//! the cloud scenario's arrival rates upward, a pool with more shards
+//! must keep admitting (zero `BUSY`) at offered loads that already
+//! saturate a smaller pool.  Arrivals are seed-identical across shard
+//! counts at every scale — only the pool layout differs.
+//!
+//! Output: a human table plus machine-readable `BENCH_shards.json`
+//! (schema shared with `ablation_migration.rs` via
+//! `cgra_mte::bench::jsonw`) so the scaling trajectory is tracked
+//! across PRs.
+//!
+//! `--smoke` runs shard counts {1, 2} over a short window — the CI
+//! liveness mode.  The acceptance bar (2 shards sustain strictly more
+//! than 1 before the first rejection) is enforced in both modes: the
+//! sim is deterministic, so the comparison is stable even in smoke.
+
+use cgra_mte::bench::jsonw;
+use cgra_mte::config::{presets, PlacementPolicyKind, WorkloadConfig};
+use cgra_mte::metrics::{export, Table};
+use cgra_mte::sim::{run_cloud_pool, PoolCloudReport};
+
+/// Per-shard open-request cap: small enough that saturation shows up
+/// inside a short bench window.
+const WINDOW: u32 = 8;
+/// Arrival-rate multipliers over the Fig. 4 cloud calibration point.
+const SCALES: [f64; 8] = [0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 4.0];
+const SEED: u64 = 29;
+const FULL_SHARDS: [u32; 3] = [1, 2, 4];
+const SMOKE_SHARDS: [u32; 2] = [1, 2];
+const FULL_DURATION_MS: f64 = 1_500.0;
+const SMOKE_DURATION_MS: f64 = 300.0;
+
+fn run(shards: u32, scale: f64, duration_ms: f64) -> PoolCloudReport {
+    let mut cfg = presets::pool_scenario(shards, PlacementPolicyKind::LeastLoaded);
+    cfg.pool.admission_window = WINDOW;
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+        c.seed = SEED;
+        for rate in c.mean_interarrival_ms.iter_mut() {
+            *rate /= scale;
+        }
+    }
+    run_cloud_pool(&cfg).expect("pool sim runs")
+}
+
+/// One shard count's sweep outcome.
+struct SweepRow {
+    shards: u32,
+    /// Highest scale with zero rejections before the first rejecting
+    /// scale (ascending prefix).
+    sustained: f64,
+    /// First scale that rejected, if any.
+    first_busy: Option<f64>,
+    /// Rejections at the top of the sweep.
+    rejections_at_max: u64,
+    /// Per-scale (scale, busy_rejections, mean_ntat) detail.
+    detail: Vec<(f64, u64, f64)>,
+}
+
+fn sweep(shards: u32, duration_ms: f64) -> SweepRow {
+    let mut sustained = 0.0;
+    let mut first_busy = None;
+    let mut rejections_at_max = 0;
+    let mut detail = Vec::new();
+    for &scale in &SCALES {
+        let r = run(shards, scale, duration_ms);
+        assert_eq!(r.submitted, r.completed, "admitted requests must drain");
+        detail.push((scale, r.busy_rejections, r.mean_ntat_across_apps()));
+        rejections_at_max = r.busy_rejections;
+        if r.busy_rejections == 0 && first_busy.is_none() {
+            sustained = scale;
+        } else if first_busy.is_none() {
+            first_busy = Some(scale);
+        }
+    }
+    SweepRow { shards, sustained, first_busy, rejections_at_max, detail }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let shard_counts: &[u32] = if smoke { &SMOKE_SHARDS } else { &FULL_SHARDS };
+    let duration_ms = if smoke { SMOKE_DURATION_MS } else { FULL_DURATION_MS };
+    let t0 = std::time::Instant::now();
+
+    let rows: Vec<SweepRow> =
+        shard_counts.iter().map(|&s| sweep(s, duration_ms)).collect();
+
+    let mut table = Table::new(
+        "Shard ablation — offered load sustained before first BUSY (cloud pool)",
+        &["shards", "sustained scale", "first BUSY at", "rejections@4x"],
+    );
+    for r in &rows {
+        table.row(&[
+            r.shards.to_string(),
+            format!("{:.2}x", r.sustained),
+            r.first_busy.map_or("never".to_string(), |s| format!("{s:.2}x")),
+            r.rejections_at_max.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+
+    let one = &rows[0];
+    let two = &rows[1];
+    let beats = two.sustained > one.sustained;
+    println!(
+        "2 shards vs 1: sustained scale {:.2}x -> {:.2}x — {}",
+        one.sustained,
+        two.sustained,
+        if beats { "PASS (strictly higher offered load)" } else { "FAIL" }
+    );
+
+    let row_json = |r: &SweepRow| {
+        jsonw::obj(&[
+            ("shards", jsonw::num_u(r.shards as u64)),
+            ("sustained_scale", jsonw::num_f(r.sustained)),
+            (
+                "first_busy_scale",
+                r.first_busy.map_or("null".to_string(), jsonw::num_f),
+            ),
+            ("rejections_at_max", jsonw::num_u(r.rejections_at_max)),
+            (
+                "detail",
+                jsonw::arr(
+                    &r.detail
+                        .iter()
+                        .map(|(scale, busy, ntat)| {
+                            jsonw::obj(&[
+                                ("scale", jsonw::num_f(*scale)),
+                                ("busy_rejections", jsonw::num_u(*busy)),
+                                ("mean_ntat", jsonw::num_f(*ntat)),
+                            ])
+                        })
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    };
+    let doc = jsonw::obj(&[
+        ("bench", jsonw::str_val("ablation_shards")),
+        ("scenario", jsonw::str_val("cloud-pool/flexible")),
+        ("smoke", jsonw::bool_val(smoke)),
+        ("duration_ms", jsonw::num_f(duration_ms)),
+        ("seed", jsonw::num_u(SEED)),
+        ("admission_window", jsonw::num_u(WINDOW as u64)),
+        (
+            "scales",
+            jsonw::arr(&SCALES.iter().map(|&s| jsonw::num_f(s)).collect::<Vec<_>>()),
+        ),
+        ("rows", jsonw::arr(&rows.iter().map(row_json).collect::<Vec<_>>())),
+        (
+            "delta",
+            jsonw::obj(&[
+                ("sustained_1_shard", jsonw::num_f(one.sustained)),
+                ("sustained_2_shards", jsonw::num_f(two.sustained)),
+                ("two_beats_one", jsonw::bool_val(beats)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_shards.json";
+    export::write_file(path, &doc).expect("write bench json");
+    println!("wrote {path}");
+    println!(
+        "bench wall time: {:.1} s ({} shard counts x {} scales)",
+        t0.elapsed().as_secs_f64(),
+        shard_counts.len(),
+        SCALES.len()
+    );
+    // Acceptance is enforced, not just printed, in smoke and full alike:
+    // the simulation is deterministic, so 2 shards failing to out-sustain
+    // 1 is a regression, not noise.
+    if !beats {
+        eprintln!("acceptance FAILED: 2 shards did not sustain a strictly higher offered load");
+        std::process::exit(1);
+    }
+}

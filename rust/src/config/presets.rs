@@ -1,8 +1,8 @@
 //! Canonical configuration presets used by examples, benches, and tests.
 
 use crate::config::schema::{
-    CloudWorkloadConfig, Config, DefragPolicyKind, EdgeWorkloadConfig, RegionPolicyKind,
-    SchedulerPolicyKind, WorkloadConfig,
+    CloudWorkloadConfig, Config, DefragPolicyKind, EdgeWorkloadConfig, PlacementPolicyKind,
+    RegionPolicyKind, SchedulerPolicyKind, WorkloadConfig,
 };
 
 /// Paper-faithful configuration: Amber-like geometry, flexible-shape
@@ -71,6 +71,18 @@ pub fn edge_churn_scenario(policy: RegionPolicyKind, defrag: DefragPolicyKind) -
     cfg
 }
 
+/// A sharded fabric pool over the cloud scenario: `shards` independent
+/// flexible-shape fabrics behind one placement router
+/// ([`crate::fabric`]).  `shards = 1` reproduces [`cloud_scenario`]
+/// bit-for-bit (the golden-equivalence property in `tests/prop_pool.rs`
+/// holds the pool to that).
+pub fn pool_scenario(shards: u32, placement: PlacementPolicyKind) -> Config {
+    let mut cfg = cloud_scenario(RegionPolicyKind::FlexibleShape);
+    cfg.pool.shards = shards;
+    cfg.pool.placement = placement;
+    cfg
+}
+
 /// Ablation: array-slice width (4/8/16 columns, DESIGN.md §6.1).
 ///
 /// Widths must contain whole MEM-column periods (multiples of 4) or the
@@ -121,6 +133,11 @@ mod tests {
         }
         for w in [4, 8, 16] {
             slice_width_ablation(w).validate().unwrap();
+        }
+        for shards in [1, 2, 4] {
+            for placement in PlacementPolicyKind::ALL {
+                pool_scenario(shards, placement).validate().unwrap();
+            }
         }
         scheduler_ablation(SchedulerPolicyKind::FcfsFirstFit).validate().unwrap();
         no_relocation().validate().unwrap();

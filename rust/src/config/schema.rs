@@ -343,6 +343,100 @@ impl MigrationCostModelKind {
     }
 }
 
+/// How the fabric-pool router scores shards when placing a request
+/// ([`crate::fabric::FabricRouter`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlacementPolicyKind {
+    /// Fewest open requests, then fewest busy array slices, then lowest
+    /// shard id — the latency-spreading default.
+    LeastLoaded,
+    /// Among shards whose geometry can ever host the request's minimal
+    /// demand, the one with the tightest (smallest-capacity) shape;
+    /// least-loaded breaks ties.  On a homogeneous pool this degenerates
+    /// to least-loaded, but heterogeneous pools keep small tasks off the
+    /// big shards (the arXiv 2412.08137 provisioning argument).
+    BestFit,
+    /// Tenant affinity: a tenant's first request is placed least-loaded,
+    /// every later one lands on the same shard (bitstream caches and GLB
+    /// working sets stay warm).
+    Sticky,
+}
+
+impl PlacementPolicyKind {
+    /// All policies, in documentation order.
+    pub const ALL: [PlacementPolicyKind; 3] = [
+        PlacementPolicyKind::LeastLoaded,
+        PlacementPolicyKind::BestFit,
+        PlacementPolicyKind::Sticky,
+    ];
+
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicyKind::LeastLoaded => "least-loaded",
+            PlacementPolicyKind::BestFit => "best-fit",
+            PlacementPolicyKind::Sticky => "sticky",
+        }
+    }
+
+    /// Parse a config name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "least-loaded" | "least_loaded" => Ok(PlacementPolicyKind::LeastLoaded),
+            "best-fit" | "best_fit" => Ok(PlacementPolicyKind::BestFit),
+            "sticky" | "affinity" => Ok(PlacementPolicyKind::Sticky),
+            other => Err(Error::Config(format!("unknown placement policy '{other}'"))),
+        }
+    }
+}
+
+/// Fabric-pool (sharding) configuration (`[pool]` in TOML).
+///
+/// A pool of `shards` independent CGRA fabrics — each with its own
+/// region manager, DPR engine and scheduler state — served by one
+/// placement router ([`crate::fabric`]).  `shards = 1` is bit-for-bit
+/// the single-fabric behavior every earlier PR shipped.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolConfig {
+    /// Number of independent fabric instances.  TOML: `pool.shards`.
+    pub shards: u32,
+    /// Shard-scoring policy for request placement.
+    /// TOML: `pool.placement` = "least-loaded" | "best-fit" | "sticky".
+    pub placement: PlacementPolicyKind,
+    /// Per-shard cap on open (incomplete) requests in the pool sims and
+    /// benches; an arrival that finds *every* shard at the cap is
+    /// rejected `BUSY` instead of queued.  `0` disables the cap (the
+    /// default — single-fabric sims have no admission bound either).
+    /// TOML: `pool.admission_window`.
+    pub admission_window: u32,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            shards: 1,
+            placement: PlacementPolicyKind::LeastLoaded,
+            admission_window: 0,
+        }
+    }
+}
+
+impl PoolConfig {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(Error::Config("pool.shards must be positive".into()));
+        }
+        if self.shards > 64 {
+            return Err(Error::Config(format!(
+                "pool.shards ({}) is unreasonably large (max 64)",
+                self.shards
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Scheduler + region-mechanism configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
@@ -513,6 +607,8 @@ pub struct Config {
     pub scheduler: SchedulerConfig,
     /// TCP serving front (worker pool + admission queues).
     pub server: ServerConfig,
+    /// Fabric pool (sharding) layout + placement.
+    pub pool: PoolConfig,
     /// Workload.
     pub workload: WorkloadConfig,
     /// Directory containing AOT artifacts + manifest.json, or the
@@ -527,6 +623,7 @@ impl Default for Config {
             dpr: DprConfig::default(),
             scheduler: SchedulerConfig::default(),
             server: ServerConfig::default(),
+            pool: PoolConfig::default(),
             workload: WorkloadConfig::Cloud(CloudWorkloadConfig::default()),
             artifacts_dir: "artifacts".into(),
         }
@@ -607,6 +704,15 @@ impl Config {
             read_u32(server, "batch_max", &mut s.batch_max)?;
         }
 
+        if let Some(pool) = root.get("pool") {
+            let p = &mut cfg.pool;
+            read_u32(pool, "shards", &mut p.shards)?;
+            if let Some(v) = pool.get("placement") {
+                p.placement = PlacementPolicyKind::from_name(str_of(v, "pool.placement")?)?;
+            }
+            read_u32(pool, "admission_window", &mut p.admission_window)?;
+        }
+
         if let Some(wl) = root.get("workload") {
             let kind = wl
                 .get("kind")
@@ -673,6 +779,7 @@ impl Config {
         self.arch.validate()?;
         self.dpr.validate()?;
         self.server.validate()?;
+        self.pool.validate()?;
         let s = &self.scheduler;
         if s.unit_array_slices == 0 || s.unit_glb_slices == 0 {
             return Err(Error::Config("unit region sizes must be positive".into()));
@@ -900,6 +1007,38 @@ mod tests {
         for kind in MigrationCostModelKind::ALL {
             assert_eq!(MigrationCostModelKind::from_name(kind.name()).unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn pool_knobs_parse_and_validate() {
+        let cfg = Config::from_toml_text(
+            "[pool]\nshards = 4\nplacement = \"best-fit\"\nadmission_window = 16\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.pool.shards, 4);
+        assert_eq!(cfg.pool.placement, PlacementPolicyKind::BestFit);
+        assert_eq!(cfg.pool.admission_window, 16);
+        // defaults: single shard, least-loaded, no admission cap —
+        // exactly the pre-pool behavior
+        let d = PoolConfig::default();
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.placement, PlacementPolicyKind::LeastLoaded);
+        assert_eq!(d.admission_window, 0);
+        // bad values rejected
+        assert!(Config::from_toml_text("[pool]\nshards = 0\n").is_err());
+        assert!(Config::from_toml_text("[pool]\nshards = 100\n").is_err());
+        assert!(Config::from_toml_text("[pool]\nplacement = \"magic\"\n").is_err());
+    }
+
+    #[test]
+    fn placement_policy_names_round_trip() {
+        for kind in PlacementPolicyKind::ALL {
+            assert_eq!(PlacementPolicyKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(
+            PlacementPolicyKind::from_name("affinity").unwrap(),
+            PlacementPolicyKind::Sticky
+        );
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! and what EXPERIMENTS.md §End-to-end records.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
 
 use crate::config::Config;
 use crate::dpr::DprMode;
@@ -73,6 +75,18 @@ impl Leader {
     /// Build a leader: scheduler per `cfg`, artifacts from
     /// `cfg.artifacts_dir`, all artifacts pre-compiled (warmup).
     pub fn new(cfg: &Config) -> Result<Leader> {
+        Self::build(cfg, Router::new(64))
+    }
+
+    /// Build a *shard* leader for a sharded server: identical fabric,
+    /// but request sequence numbers come from the pool-shared counter so
+    /// completions merged across shard executors stay globally unique
+    /// and admission-ordered.
+    pub fn new_shard(cfg: &Config, seqs: Arc<AtomicU64>) -> Result<Leader> {
+        Self::build(cfg, Router::new_shared(64, seqs))
+    }
+
+    fn build(cfg: &Config, router: Router) -> Result<Leader> {
         let lib = TaskLibrary::table1();
         let mut sched = Scheduler::new(cfg, lib.clone(), DprMode::Fast);
         sched.preload_all();
@@ -82,7 +96,7 @@ impl Leader {
         Ok(Leader {
             sched,
             queue: RequestQueue::new(),
-            router: Router::new(64),
+            router,
             binding,
             stats: ServeStats { warmup_ms, ..ServeStats::default() },
         })
@@ -92,22 +106,49 @@ impl Leader {
     /// virtual cycles, running every launched task's artifact.  Returns
     /// when all requests have completed.
     pub fn serve(&mut self, submissions: &[(TenantId, AppId, u64)]) -> Result<&ServeStats> {
+        self.serve_assigning(submissions)?;
+        Ok(&self.stats)
+    }
+
+    /// [`Leader::serve`] + drain: returns one entry per submission (in
+    /// submission order) with that request's outcome, or `None` when the
+    /// scheduler produced none.  This is the sharded server's executor
+    /// path — with a pool-shared sequence counter a batch's seqs are
+    /// increasing but not necessarily contiguous (another shard may
+    /// interleave claims), so correlation must use the actually assigned
+    /// seqs rather than `next_seq` arithmetic.
+    pub fn serve_batch(
+        &mut self,
+        submissions: &[(TenantId, AppId, u64)],
+    ) -> Result<Vec<Option<ServeOutcome>>> {
+        let assigned = self.serve_assigning(submissions)?;
+        let mut drained: BTreeMap<u64, ServeOutcome> =
+            self.drain_outcomes().into_iter().map(|o| (o.seq, o)).collect();
+        Ok(assigned.iter().map(|seq| drained.remove(seq)).collect())
+    }
+
+    /// The serve loop; returns the seq assigned to each submission, in
+    /// the submissions' original order.
+    fn serve_assigning(&mut self, submissions: &[(TenantId, AppId, u64)]) -> Result<Vec<u64>> {
         // request bookkeeping: seq → (app, arrival, exec cycles, compute µs, last sum)
         let mut inflight: BTreeMap<u64, (AppId, u64, u64, f64, f64)> = BTreeMap::new();
         let mut events: EventQueue<Ev> = EventQueue::new();
         // launch bookkeeping for completion events: region → (seq, dpr+exec)
         let mut region_info: BTreeMap<RegionId, u64> = BTreeMap::new();
 
-        let mut arrivals: Vec<&(TenantId, AppId, u64)> = submissions.iter().collect();
-        arrivals.sort_by_key(|(_, _, at)| *at);
+        let mut arrivals: Vec<(usize, &(TenantId, AppId, u64))> =
+            submissions.iter().enumerate().collect();
+        arrivals.sort_by_key(|(_, s)| s.2);
+        let mut assigned: Vec<u64> = vec![0; submissions.len()];
         let mut next_arrival = 0usize;
         let mut now = 0u64;
 
         loop {
             // admit every arrival due at or before `now`
-            while next_arrival < arrivals.len() && arrivals[next_arrival].2 <= now {
-                let (tenant, app, at) = *arrivals[next_arrival];
+            while next_arrival < arrivals.len() && arrivals[next_arrival].1 .2 <= now {
+                let (idx, &(tenant, app, at)) = arrivals[next_arrival];
                 let seq = self.router.submit(&mut self.queue, tenant, app, at)?;
+                assigned[idx] = seq;
                 inflight.insert(seq, (app, at, 0, 0.0, 0.0));
                 next_arrival += 1;
             }
@@ -129,7 +170,7 @@ impl Leader {
 
             // advance to the next event: completion or arrival
             let next_event = events.peek_time();
-            let next_arr = arrivals.get(next_arrival).map(|(_, _, at)| *at);
+            let next_arr = arrivals.get(next_arrival).map(|(_, s)| s.2);
             match (next_event, next_arr) {
                 (None, None) => break,
                 (Some(e), Some(a)) if a < e => {
@@ -177,7 +218,7 @@ impl Leader {
                 });
             }
         }
-        Ok(&self.stats)
+        Ok(assigned)
     }
 
     /// Serving statistics so far.
@@ -185,9 +226,10 @@ impl Leader {
         &self.stats
     }
 
-    /// Next request sequence number the router will assign.  The TCP
-    /// server uses this to correlate a batch's submissions (admitted in
-    /// order) with the seq-stamped outcomes `serve` produces.
+    /// Next request sequence number the router will assign — exact for
+    /// a single-fabric leader; a point-in-time read for shard leaders
+    /// (the sharded server correlates batches through
+    /// [`Leader::serve_batch`] instead).
     pub fn next_seq(&self) -> u64 {
         self.router.next_seq()
     }
@@ -281,6 +323,34 @@ mod tests {
         assert_eq!(drained.len(), 3);
         assert!(leader.stats().outcomes.is_empty());
         assert_eq!(leader.stats().launches, 5);
+    }
+
+    /// A shard leader draws seqs from the pool-shared counter and
+    /// `serve_batch` correlates outcomes by the seqs actually assigned
+    /// (they need not start at zero or be contiguous pool-wide).
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn serve_batch_correlates_outcomes_in_submission_order() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+
+        let mut cfg = presets::paper_default();
+        cfg.artifacts_dir = crate::runtime::SYNTHETIC_DIR.into();
+        let seqs = Arc::new(AtomicU64::new(5));
+        let mut leader = Leader::new_shard(&cfg, seqs.clone()).unwrap();
+        let subs = vec![(TenantId(3), AppId::Harris, 0), (TenantId(2), AppId::Camera, 0)];
+        let outcomes = leader.serve_batch(&subs).unwrap();
+        assert_eq!(outcomes.len(), 2);
+        let a = outcomes[0].as_ref().expect("harris completes");
+        let b = outcomes[1].as_ref().expect("camera completes");
+        assert_eq!(a.seq, 5, "first submission gets the first shared seq");
+        assert_eq!(b.seq, 6);
+        assert_eq!(a.tenant, TenantId(3));
+        assert_eq!(b.tenant, TenantId(2));
+        // serve_batch drains: history empty, aggregate counters kept
+        assert!(leader.stats().outcomes.is_empty());
+        assert_eq!(leader.stats().launches, 2);
+        assert_eq!(seqs.load(Ordering::Relaxed), 7);
     }
 
     /// Between batches the fabric is drained, so the control-plane

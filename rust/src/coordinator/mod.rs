@@ -3,8 +3,9 @@
 //! While [`crate::sim`] reproduces the paper's evaluation in virtual
 //! time, this module is the deployable serving path: tenants submit
 //! application requests over TCP, a sharded worker pool batches them
-//! (per-tenant bounded admission queues → N scheduler workers → one
-//! leader executor), the scheduler places them on the slice-level
+//! (per-tenant bounded admission queues → N scheduler workers →
+//! `pool.shards` per-shard leader executors sharing one request-seq
+//! counter), each shard's scheduler places them on the slice-level
 //! abstraction exactly as in the simulation, and every launched task
 //! *actually executes* its artifact through the [`crate::runtime`]
 //! backend — the CGRA's functional behaviour with the paper's timing

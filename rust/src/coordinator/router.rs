@@ -11,7 +11,8 @@
 //!   explicit and memory is bounded.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::error::{Error, Result};
 use crate::scheduler::RequestQueue;
@@ -32,11 +33,22 @@ pub struct RouterStats {
     pub completed: u64,
 }
 
+/// Where a router draws request sequence numbers from: its own local
+/// counter (the single-fabric leader), or an atomic shared by every
+/// per-shard leader of a sharded server — seqs must stay globally
+/// unique and admission-ordered when N shard executors admit
+/// concurrently.
+#[derive(Clone, Debug)]
+enum SeqSource {
+    Local(u64),
+    Shared(Arc<AtomicU64>),
+}
+
 /// Routes tenant submissions into the scheduler's request queue with
 /// per-tenant bookkeeping and a simple per-tenant admission limit.
 #[derive(Clone, Debug)]
 pub struct Router {
-    next_seq: u64,
+    seq: SeqSource,
     /// in-flight request count per tenant.
     inflight: BTreeMap<TenantId, u64>,
     stats: BTreeMap<TenantId, RouterStats>,
@@ -50,11 +62,36 @@ impl Router {
     /// Router with a per-tenant in-flight cap.
     pub fn new(max_inflight: u64) -> Router {
         Router {
-            next_seq: 0,
+            seq: SeqSource::Local(0),
             inflight: BTreeMap::new(),
             stats: BTreeMap::new(),
             max_inflight: max_inflight.max(1),
             owner: BTreeMap::new(),
+        }
+    }
+
+    /// Router drawing sequence numbers from a pool-shared counter — one
+    /// per shard leader of a sharded coordinator, so completions merged
+    /// from every shard carry globally unique seqs.
+    pub fn new_shared(max_inflight: u64, seqs: Arc<AtomicU64>) -> Router {
+        Router {
+            seq: SeqSource::Shared(seqs),
+            inflight: BTreeMap::new(),
+            stats: BTreeMap::new(),
+            max_inflight: max_inflight.max(1),
+            owner: BTreeMap::new(),
+        }
+    }
+
+    /// Claim the next sequence number.
+    fn alloc_seq(&mut self) -> u64 {
+        match &mut self.seq {
+            SeqSource::Local(n) => {
+                let s = *n;
+                *n += 1;
+                s
+            }
+            SeqSource::Shared(a) => a.fetch_add(1, Ordering::Relaxed),
         }
     }
 
@@ -77,10 +114,10 @@ impl Router {
                 tenant.0, self.max_inflight
             )));
         }
-        let seq = self.next_seq;
-        self.next_seq += 1;
         *inflight += 1;
         stats.admitted += 1;
+        // the field borrows above must end before alloc_seq reborrows self
+        let seq = self.alloc_seq();
         self.owner.insert(seq, tenant);
         queue.submit(AppRequest::new(seq, tenant.0, app, now));
         Ok(seq)
@@ -112,10 +149,15 @@ impl Router {
         AppGraph::of(app).len()
     }
 
-    /// Next sequence number that will be assigned (exposed so the server
-    /// can correlate batch submissions with their outcomes).
+    /// Next sequence number that will be assigned.  Exact for a local
+    /// counter; for a pool-shared counter it is a point-in-time read
+    /// (another shard may claim it first), so sharded callers correlate
+    /// batches through `Leader::serve_batch` instead.
     pub fn next_seq(&self) -> u64 {
-        self.next_seq
+        match &self.seq {
+            SeqSource::Local(n) => *n,
+            SeqSource::Shared(a) => a.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -222,7 +264,18 @@ impl<T> AdmissionQueues<T> {
                         break;
                     }
                 }
-                s.cursor = (s.cursor + 1) % n;
+                // The next batch starts *after* the last tenant this one
+                // drained, not merely one past where it started: with
+                // `max` below the tenant count at saturation, a
+                // start-plus-one rotation re-serves the tenants right
+                // after the cursor every batch while the far tenants
+                // wait out a whole cursor revolution.  Resuming at
+                // last-served + 1 makes the drain a true round-robin
+                // (every tenant exactly once per `n/max` batches), so
+                // tenant 0 can never starve the later tenants.
+                if let Some((last, _)) = out.last() {
+                    s.cursor = (last.0 as usize + 1) % n;
+                }
                 return Some(out);
             }
             if s.closed {
@@ -309,6 +362,60 @@ mod tests {
         let order: Vec<(u32, u32)> = batch.iter().map(|(t, v)| (t.0, *v)).collect();
         assert_eq!(order, vec![(0, 10), (2, 30), (0, 11), (0, 12)]);
         assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn saturated_pop_batch_drains_tenants_round_robin() {
+        // Every tenant saturated, batches smaller than the tenant count:
+        // the rotating start offset must hand each tenant exactly one
+        // slot per revolution — tenant 0 (or any tenant adjacent to the
+        // cursor) cannot starve the others.
+        let q: AdmissionQueues<u32> = AdmissionQueues::new(4, 8);
+        for tenant in 0..4u32 {
+            for i in 0..6 {
+                q.try_push(TenantId(tenant), tenant * 10 + i).unwrap();
+            }
+        }
+        let mut served = [0u32; 4];
+        let mut batches = Vec::new();
+        for _ in 0..12 {
+            let batch = q.pop_batch(2).unwrap();
+            assert_eq!(batch.len(), 2);
+            for (t, _) in &batch {
+                served[t.0 as usize] += 1;
+            }
+            batches.push((batch[0].0 .0, batch[1].0 .0));
+        }
+        assert_eq!(q.pending(), 0);
+        assert_eq!(served, [6, 6, 6, 6], "equal service at saturation");
+        // the drain sequence is the strict rotation (0,1),(2,3),(0,1)…
+        assert_eq!(batches[0], (0, 1));
+        assert_eq!(batches[1], (2, 3));
+        assert_eq!(batches[2], (0, 1));
+        assert_eq!(batches[3], (2, 3));
+    }
+
+    #[test]
+    fn shared_seq_routers_never_collide() {
+        let seqs = Arc::new(AtomicU64::new(0));
+        let mut a = Router::new_shared(8, seqs.clone());
+        let mut b = Router::new_shared(8, seqs.clone());
+        let mut qa = RequestQueue::new();
+        let mut qb = RequestQueue::new();
+        let mut all = Vec::new();
+        for i in 0..4 {
+            all.push(a.submit(&mut qa, TenantId(0), AppId::Harris, i).unwrap());
+            all.push(b.submit(&mut qb, TenantId(1), AppId::Camera, i).unwrap());
+        }
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), all.len(), "duplicate seqs across shard routers");
+        assert_eq!(seqs.load(Ordering::Relaxed), 8);
+        assert_eq!(a.next_seq(), 8);
+        // completions resolve on the router that issued the seq
+        assert_eq!(a.complete(all[0]).unwrap(), TenantId(0));
+        assert!(b.complete(all[0]).is_err(), "foreign seq is unknown");
     }
 
     #[test]

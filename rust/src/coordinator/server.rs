@@ -2,14 +2,21 @@
 //!
 //! The request path is: accept loop → per-connection reader threads →
 //! bounded per-tenant admission queues ([`AdmissionQueues`]) → N
-//! scheduler workers that drain round-robin batches → a single leader
-//! executor thread that owns the [`Leader`] (and with it the one fabric
-//! plus the runtime client, which is not `Send` under `--features xla`).
-//! SUBMITs arriving concurrently on different connections are folded
-//! into one scheduler invocation per batch, and workers overlap reply
-//! fan-out with the executor's next batch.
+//! scheduler workers that drain round-robin batches → `pool.shards`
+//! **per-shard leader executor threads**, each owning one [`Leader`]
+//! (its own fabric, scheduler and runtime client, which is not `Send`
+//! under `--features xla`).  Workers place each batch on a shard under
+//! the `pool.placement` policy (least-loaded by outstanding batches;
+//! `sticky` pins a tenant to its first shard; `best-fit` degenerates to
+//! least-loaded here because every shard is built from the same
+//! geometry).  All shard leaders draw request seqs from one shared
+//! counter, so the per-shard completion streams merge back into a
+//! single globally-unique [`crate::coordinator::Router`] sequence,
+//! exactly as before sharding.  With `pool.shards = 1` (the default) the server is
+//! byte-for-byte the single-executor coordinator of earlier PRs.
 //!
-//! Wire protocol (one line per request, one line per reply):
+//! Wire protocol (one line per request, one line per reply, except
+//! `STATS SHARDS` which replies `1 + pool.shards` lines):
 //!
 //! ```text
 //! SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris>
@@ -19,22 +26,28 @@
 //! STATS
 //!   → STATS served=<n> queued=<n> rejected=<n> failed=<n> pending=<n>
 //!           workers=<n> queue_depth=<n> frag_glb=<x> frag_arr=<x>
-//!           migrations=<n>
+//!           migrations=<n> shards=<n>
 //! STATS <tenant>
 //!   → STATS tenant=<t> served=<n> queued=<n> rejected=<n>
+//! STATS SHARDS
+//!   → STATS shards=<n>                    (then one line per shard:)
+//!   → STATS shard=<i> frag_glb=<x> frag_arr=<x> migrations=<n> batches=<n>
 //! DEFRAG
 //!   → DEFRAG migrated=<n> cycles=<n> frag_glb=<a>-><b> frag_arr=<a>-><b>
-//!   → ERR coordinator unavailable         (executor gone / shutting down)
+//!   → ERR coordinator unavailable         (executors gone / shutting down)
 //! QUIT
 //!   → BYE                                 (closes this connection)
 //! SHUTDOWN
 //!   → BYE shutting down                   (graceful server shutdown)
 //! ```
 //!
-//! `frag_glb`/`frag_arr` are the leader fabric's external-fragmentation
-//! gauges ([`crate::metrics::FragmentationGauge`]), refreshed by the
-//! executor after every batch; `DEFRAG` forces one compaction pass of
-//! the live-migration subsystem ([`crate::migration`]) on the leader.
+//! `frag_glb`/`frag_arr` on the aggregate `STATS` line are the mean of
+//! the per-shard external-fragmentation gauges
+//! ([`crate::metrics::FragmentationGauge`]), refreshed by each executor
+//! after every batch; `migrations` is the pool-wide sum.  `DEFRAG`
+//! forces one compaction pass of the live-migration subsystem
+//! ([`crate::migration`]) on **every** shard and reports the merged
+//! outcome (summed migrated/cycles, mean fragmentation).
 //!
 //! Backpressure is explicit: each tenant's queue is bounded by
 //! `server.queue_depth` ([`crate::config::ServerConfig`]); a SUBMIT that
@@ -45,6 +58,7 @@
 //! (No signal handler is installed — the std library exposes none — so
 //! Ctrl-C terminates the process immediately rather than draining.)
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -52,7 +66,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::config::Config;
+use crate::config::{Config, PlacementPolicyKind};
 use crate::error::{Error, Result};
 use crate::metrics::ServeCounters;
 use crate::tasks::AppId;
@@ -90,7 +104,16 @@ struct OutcomeLine {
     sum: f64,
 }
 
-/// Work handed to the leader executor thread.
+/// Outcome of one shard's compaction pass (the `DEFRAG` wire command
+/// broadcasts to every shard and merges these).
+struct DefragReply {
+    migrated: u64,
+    cycles: u64,
+    before: (f64, f64),
+    after: (f64, f64),
+}
+
+/// Work handed to a shard's leader executor thread.
 enum ExecRequest {
     /// A batch of admitted submissions.  `resp` carries one entry per
     /// submission (in order); `None` means the scheduler produced no
@@ -99,9 +122,41 @@ enum ExecRequest {
         subs: Vec<(TenantId, AppId, u64)>,
         resp: mpsc::Sender<std::result::Result<Vec<Option<OutcomeLine>>, String>>,
     },
-    /// The `DEFRAG` wire command: force one compaction pass and reply
-    /// with the formatted wire line.
-    Defrag { resp: mpsc::Sender<String> },
+    /// The `DEFRAG` wire command: force one compaction pass on this
+    /// shard and report its slice of the merged reply.
+    Defrag { resp: mpsc::Sender<DefragReply> },
+}
+
+/// Per-shard gauge slots, executor-refreshed after every batch.
+struct ShardGauges {
+    /// Latest GLB fragmentation gauge (f64 bits).
+    frag_glb_bits: AtomicU64,
+    /// Latest array fragmentation gauge (f64 bits).
+    frag_arr_bits: AtomicU64,
+    /// Cumulative live migrations on this shard across the server's
+    /// lifetime — accumulated by delta so a leader rebuild (which resets
+    /// the scheduler's own counter) never makes the published value
+    /// regress.
+    migrations: AtomicU64,
+    /// Last cumulative reading taken from the shard's current leader.
+    leader_migrations: AtomicU64,
+    /// Batches executed on this shard.
+    batches: AtomicU64,
+    /// Batches dispatched but not yet answered (placement load).
+    outstanding: AtomicU64,
+}
+
+impl ShardGauges {
+    fn new() -> ShardGauges {
+        ShardGauges {
+            frag_glb_bits: AtomicU64::new(0),
+            frag_arr_bits: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            leader_migrations: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            outstanding: AtomicU64::new(0),
+        }
+    }
 }
 
 /// State shared by connection threads, workers, and STATS rendering.
@@ -113,24 +168,21 @@ struct Shared {
     cycles_per_ms: u64,
     workers: usize,
     queue_depth: usize,
-    /// Channel to the leader executor for control-plane commands
-    /// (`DEFRAG`).  Dropped at shutdown so the executor can exit once
-    /// the workers finish draining.
-    exec: Mutex<Option<mpsc::Sender<ExecRequest>>>,
-    /// Latest GLB fragmentation gauge (f64 bits; executor-refreshed).
-    frag_glb_bits: AtomicU64,
-    /// Latest array fragmentation gauge (f64 bits).
-    frag_arr_bits: AtomicU64,
-    /// Cumulative live migrations across the server's lifetime —
-    /// accumulated by delta so a leader rebuild (which resets the
-    /// scheduler's own counter) never makes the published value regress.
-    migrations: AtomicU64,
-    /// Last cumulative reading taken from the current leader.
-    leader_migrations: AtomicU64,
+    /// Batch placement policy across shard executors.
+    placement: PlacementPolicyKind,
+    /// Tenant → shard affinity (sticky placement).
+    sticky: Mutex<BTreeMap<u32, usize>>,
+    /// Channels to the per-shard leader executors, for control-plane
+    /// commands (`DEFRAG`).  Emptied at shutdown so each executor can
+    /// exit once the workers (the remaining senders) finish draining.
+    exec: Mutex<Vec<mpsc::Sender<ExecRequest>>>,
+    /// One gauge slot per shard.
+    shards: Vec<ShardGauges>,
 }
 
 impl Shared {
     fn from_config(cfg: &Config) -> Shared {
+        let shard_count = cfg.pool.shards.max(1) as usize;
         Shared {
             queues: AdmissionQueues::new(TENANTS as usize, cfg.server.queue_depth as usize),
             counters: ServeCounters::new(TENANTS as usize),
@@ -138,12 +190,16 @@ impl Shared {
             cycles_per_ms: cfg.arch.core_clock_mhz as u64 * 1000,
             workers: cfg.server.workers.max(1) as usize,
             queue_depth: cfg.server.queue_depth as usize,
-            exec: Mutex::new(None),
-            frag_glb_bits: AtomicU64::new(0),
-            frag_arr_bits: AtomicU64::new(0),
-            migrations: AtomicU64::new(0),
-            leader_migrations: AtomicU64::new(0),
+            placement: cfg.pool.placement,
+            sticky: Mutex::new(BTreeMap::new()),
+            exec: Mutex::new(Vec::new()),
+            shards: (0..shard_count).map(|_| ShardGauges::new()).collect(),
         }
+    }
+
+    /// Number of fabric shards behind this server.
+    fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
     /// Begin graceful shutdown: stop accepting, reject new submissions,
@@ -151,25 +207,98 @@ impl Shared {
     fn begin_shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
         self.queues.close();
-        // drop the control-plane sender so the executor's recv() can
+        // drop the control-plane senders so each executor's recv() can
         // fail once the workers (the only other senders) exit
         if let Ok(mut exec) = self.exec.lock() {
-            *exec = None;
+            exec.clear();
         }
     }
 
-    /// Refresh the fragmentation/migration snapshot from the leader.
-    /// `leader_total` is the *current leader's* cumulative migration
-    /// count; only the executor thread calls this, so the delta
-    /// arithmetic below is single-writer.
-    fn record_fabric(&self, frag: (f64, f64), leader_total: u64) {
-        self.frag_glb_bits.store(frag.0.to_bits(), Ordering::Relaxed);
-        self.frag_arr_bits.store(frag.1.to_bits(), Ordering::Relaxed);
-        let last = self.leader_migrations.swap(leader_total, Ordering::Relaxed);
+    /// Choose the shard a batch should execute on.  Least-loaded by
+    /// outstanding batches (lowest id breaks ties); `sticky` pins a
+    /// tenant to the shard its first batch landed on; `best-fit` has no
+    /// shape signal here (every shard shares one geometry), so it
+    /// degenerates to least-loaded.
+    ///
+    /// Deliberately *not* [`crate::fabric::FabricRouter`]: placement
+    /// here is batch-granular over lock-free load gauges on identical
+    /// shards, with no per-request demand to score feasibility against —
+    /// the router's ShardLoad probing would add a lock and fabricated
+    /// inputs for no additional signal.
+    fn pick_shard(&self, tenant: u32) -> usize {
+        if self.shards.len() <= 1 {
+            return 0;
+        }
+        let least = |shards: &[ShardGauges]| -> usize {
+            (0..shards.len())
+                .min_by_key(|&i| (shards[i].outstanding.load(Ordering::Relaxed), i))
+                .unwrap_or(0)
+        };
+        match self.placement {
+            PlacementPolicyKind::LeastLoaded | PlacementPolicyKind::BestFit => {
+                least(&self.shards)
+            }
+            PlacementPolicyKind::Sticky => {
+                let mut map = self.sticky.lock().expect("sticky map poisoned");
+                *map.entry(tenant).or_insert_with(|| least(&self.shards))
+            }
+        }
+    }
+
+    /// `pick_shard` + immediately bump the chosen shard's outstanding
+    /// gauge, so a concurrent worker scanning right after sees the load
+    /// and picks elsewhere (pick-then-reserve-later lets every
+    /// simultaneous worker pile onto the same least-loaded shard).  The
+    /// caller owns the reservation: `release_shard` on send failure or
+    /// reply receipt.
+    fn pick_and_reserve(&self, tenant: u32) -> usize {
+        let shard = self.pick_shard(tenant);
+        self.reserve_shard(shard);
+        shard
+    }
+
+    /// Bump a shard's outstanding-batch gauge.
+    fn reserve_shard(&self, shard: usize) {
+        self.shards[shard].outstanding.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drop a shard's outstanding-batch reservation.
+    fn release_shard(&self, shard: usize) {
+        self.shards[shard].outstanding.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Refresh one shard's fragmentation/migration snapshot.
+    /// `leader_total` is that shard's *current leader's* cumulative
+    /// migration count; only the shard's executor thread calls this, so
+    /// the delta arithmetic below is single-writer per slot.
+    fn record_fabric(&self, shard: usize, frag: (f64, f64), leader_total: u64) {
+        let Some(slot) = self.shards.get(shard) else {
+            return;
+        };
+        slot.frag_glb_bits.store(frag.0.to_bits(), Ordering::Relaxed);
+        slot.frag_arr_bits.store(frag.1.to_bits(), Ordering::Relaxed);
+        let last = slot.leader_migrations.swap(leader_total, Ordering::Relaxed);
         // a fresh leader (post-rebuild) restarts its counter from zero:
         // everything it reports is new; otherwise only the growth is
         let delta = if leader_total < last { leader_total } else { leader_total - last };
-        self.migrations.fetch_add(delta, Ordering::Relaxed);
+        slot.migrations.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Mean (glb, array) fragmentation across shards.
+    fn frag_mean(&self) -> (f64, f64) {
+        let n = self.shards.len().max(1) as f64;
+        let mut g = 0.0;
+        let mut a = 0.0;
+        for s in &self.shards {
+            g += f64::from_bits(s.frag_glb_bits.load(Ordering::Relaxed));
+            a += f64::from_bits(s.frag_arr_bits.load(Ordering::Relaxed));
+        }
+        (g / n, a / n)
+    }
+
+    /// Pool-wide cumulative migrations.
+    fn migrations_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.migrations.load(Ordering::Relaxed)).sum()
     }
 }
 
@@ -235,6 +364,21 @@ fn handle_line(
             }
         }
         Some("STATS") => match parts.next() {
+            Some(t) if t.eq_ignore_ascii_case("shards") => {
+                // 1 + shard_count lines: the header names how many
+                // follow, so line-oriented clients stay in sync.
+                let mut out = format!("STATS shards={}", shared.shard_count());
+                for (i, slot) in shared.shards.iter().enumerate() {
+                    out.push_str(&format!(
+                        "\nSTATS shard={i} frag_glb={:.3} frag_arr={:.3} migrations={} batches={}",
+                        f64::from_bits(slot.frag_glb_bits.load(Ordering::Relaxed)),
+                        f64::from_bits(slot.frag_arr_bits.load(Ordering::Relaxed)),
+                        slot.migrations.load(Ordering::Relaxed),
+                        slot.batches.load(Ordering::Relaxed),
+                    ));
+                }
+                (out, false)
+            }
             Some(t) => match t.parse::<u32>() {
                 Ok(t) if t < TENANTS => {
                     let s = shared.counters.tenant(t as usize);
@@ -250,10 +394,12 @@ fn handle_line(
             },
             None => {
                 let s = shared.counters.totals();
+                let frag = shared.frag_mean();
                 (
                     format!(
                         "STATS served={} queued={} rejected={} failed={} pending={} \
-                         workers={} queue_depth={} frag_glb={:.3} frag_arr={:.3} migrations={}",
+                         workers={} queue_depth={} frag_glb={:.3} frag_arr={:.3} migrations={} \
+                         shards={}",
                         s.served,
                         s.queued,
                         s.rejected,
@@ -261,34 +407,62 @@ fn handle_line(
                         shared.queues.pending(),
                         shared.workers,
                         shared.queue_depth,
-                        f64::from_bits(shared.frag_glb_bits.load(Ordering::Relaxed)),
-                        f64::from_bits(shared.frag_arr_bits.load(Ordering::Relaxed)),
-                        shared.migrations.load(Ordering::Relaxed),
+                        frag.0,
+                        frag.1,
+                        shared.migrations_total(),
+                        shared.shard_count(),
                     ),
                     false,
                 )
             }
         },
         Some("DEFRAG") => {
-            let sender = shared
+            // Broadcast a compaction pass to every shard executor and
+            // merge the replies: summed migrated/cycles, mean gauges.
+            let senders: Vec<mpsc::Sender<ExecRequest>> = shared
                 .exec
                 .lock()
-                .ok()
-                .and_then(|guard| guard.clone());
-            match sender {
-                Some(tx) => {
-                    let (rtx, rrx) = mpsc::channel();
-                    if tx.send(ExecRequest::Defrag { resp: rtx }).is_ok() {
-                        match rrx.recv_timeout(Duration::from_secs(10)) {
-                            Ok(reply) => (reply, false),
-                            Err(_) => ("ERR defrag timed out".into(), false),
-                        }
-                    } else {
-                        ("ERR coordinator unavailable".into(), false)
-                    }
-                }
-                None => ("ERR coordinator unavailable".into(), false),
+                .map(|guard| guard.clone())
+                .unwrap_or_default();
+            if senders.is_empty() {
+                return ("ERR coordinator unavailable".into(), false);
             }
+            let (rtx, rrx) = mpsc::channel();
+            let mut expected = 0usize;
+            for tx in &senders {
+                if tx.send(ExecRequest::Defrag { resp: rtx.clone() }).is_ok() {
+                    expected += 1;
+                }
+            }
+            drop(rtx);
+            if expected == 0 {
+                return ("ERR coordinator unavailable".into(), false);
+            }
+            // one overall deadline, not 10 s per shard — a 64-shard
+            // pool must not hold the connection for minutes
+            let deadline = std::time::Instant::now() + Duration::from_secs(10);
+            let mut merged: Vec<DefragReply> = Vec::with_capacity(expected);
+            for _ in 0..expected {
+                let left = deadline.saturating_duration_since(std::time::Instant::now());
+                match rrx.recv_timeout(left) {
+                    Ok(r) => merged.push(r),
+                    Err(_) => return ("ERR defrag timed out".into(), false),
+                }
+            }
+            let n = merged.len() as f64;
+            let migrated: u64 = merged.iter().map(|r| r.migrated).sum();
+            let cycles: u64 = merged.iter().map(|r| r.cycles).sum();
+            let before_g = merged.iter().map(|r| r.before.0).sum::<f64>() / n;
+            let after_g = merged.iter().map(|r| r.after.0).sum::<f64>() / n;
+            let before_a = merged.iter().map(|r| r.before.1).sum::<f64>() / n;
+            let after_a = merged.iter().map(|r| r.after.1).sum::<f64>() / n;
+            (
+                format!(
+                    "DEFRAG migrated={migrated} cycles={cycles} \
+                     frag_glb={before_g:.3}->{after_g:.3} frag_arr={before_a:.3}->{after_a:.3}",
+                ),
+                false,
+            )
         }
         Some("QUIT") => ("BYE".into(), true),
         Some("SHUTDOWN") => {
@@ -300,67 +474,127 @@ fn handle_line(
     }
 }
 
-/// Scheduler worker: drain admission batches, hand each to the leader
+/// Scheduler worker: drain admission batches, place each on a shard
 /// executor as one scheduler invocation, fan the replies back out.
-fn run_worker(shared: Arc<Shared>, exec_tx: mpsc::Sender<ExecRequest>, batch_max: usize) {
+///
+/// Sticky placement is a *per-tenant* affinity while `pop_batch`
+/// deliberately interleaves tenants, so under `sticky` the batch splits
+/// into one group per target shard (each tenant reaches its pinned
+/// fabric); the load-based policies keep the whole batch together on
+/// one shard — the shared-scheduler-invocation win.
+fn run_worker(shared: Arc<Shared>, execs: Vec<mpsc::Sender<ExecRequest>>, batch_max: usize) {
     while let Some(batch) = shared.queues.pop_batch(batch_max) {
-        let subs: Vec<(TenantId, AppId, u64)> =
-            batch.iter().map(|(tenant, job)| (*tenant, job.app, 0)).collect();
-        let (resp_tx, resp_rx) = mpsc::channel();
-        if exec_tx.send(ExecRequest::Batch { subs, resp: resp_tx }).is_err() {
-            for (_, job) in batch {
-                shared.counters.record_failed();
-                let _ = job.reply.send("ERR coordinator executor unavailable".into());
+        if shared.placement == PlacementPolicyKind::Sticky && shared.shard_count() > 1 {
+            let mut groups: BTreeMap<usize, Vec<(TenantId, SubmitJob)>> = BTreeMap::new();
+            for (tenant, job) in batch {
+                groups.entry(shared.pick_shard(tenant.0)).or_default().push((tenant, job));
             }
-            continue;
-        }
-        match resp_rx.recv() {
-            Ok(Ok(lines)) => {
-                for ((tenant, job), line) in batch.into_iter().zip(lines) {
-                    match line {
-                        Some(o) => {
-                            // count before replying so a client's
-                            // follow-up STATS observes its own request
-                            shared.counters.record_served(tenant.0 as usize);
-                            let _ = job.reply.send(format!(
-                                "OK seq={} ntat={:.2} tat_ms={:.3} compute_us={:.0} sum={:+.4}",
-                                o.seq,
-                                o.ntat,
-                                o.tat_cycles as f64 / shared.cycles_per_ms as f64,
-                                o.compute_us,
-                                o.sum
-                            ));
-                        }
-                        None => {
-                            shared.counters.record_failed();
-                            let _ = job.reply.send("ERR request did not complete".into());
-                        }
-                    }
-                }
+            // send every group before collecting any reply, so the
+            // target shard executors run the groups concurrently
+            let pending: Vec<PendingBatch> = groups
+                .into_iter()
+                .filter_map(|(shard, group)| {
+                    shared.reserve_shard(shard);
+                    send_batch(&shared, &execs, shard, group)
+                })
+                .collect();
+            for p in pending {
+                collect_batch(&shared, p);
             }
-            Ok(Err(e)) => {
-                for (_, job) in batch {
-                    shared.counters.record_failed();
-                    let _ = job.reply.send(format!("ERR {e}"));
-                }
-            }
-            Err(_) => {
-                for (_, job) in batch {
-                    shared.counters.record_failed();
-                    let _ = job.reply.send("ERR coordinator executor died".into());
-                }
+        } else {
+            let shard = shared.pick_and_reserve(batch.first().map(|(t, _)| t.0).unwrap_or(0));
+            if let Some(p) = send_batch(&shared, &execs, shard, batch) {
+                collect_batch(&shared, p);
             }
         }
     }
 }
 
-/// Leader executor: the single thread that owns the fabric.  Each
-/// received batch is one `Leader::serve` invocation; outcomes are
-/// correlated to submissions by sequence number (the router assigns them
-/// in admission order) and drained per batch so a long-lived server's
-/// history stays bounded.
+/// One dispatched batch awaiting its shard's reply.
+struct PendingBatch {
+    shard: usize,
+    batch: Vec<(TenantId, SubmitJob)>,
+    resp: mpsc::Receiver<std::result::Result<Vec<Option<OutcomeLine>>, String>>,
+}
+
+/// Send one batch to `shard`'s executor (whose outstanding gauge the
+/// caller already reserved).  On send failure the reservation is
+/// released and every job gets an error reply; otherwise the returned
+/// handle is collected later via `collect_batch`.
+fn send_batch(
+    shared: &Shared,
+    execs: &[mpsc::Sender<ExecRequest>],
+    shard: usize,
+    batch: Vec<(TenantId, SubmitJob)>,
+) -> Option<PendingBatch> {
+    let subs: Vec<(TenantId, AppId, u64)> =
+        batch.iter().map(|(tenant, job)| (*tenant, job.app, 0)).collect();
+    let (resp_tx, resp_rx) = mpsc::channel();
+    if execs[shard].send(ExecRequest::Batch { subs, resp: resp_tx }).is_err() {
+        shared.release_shard(shard);
+        for (_, job) in batch {
+            shared.counters.record_failed();
+            let _ = job.reply.send("ERR coordinator executor unavailable".into());
+        }
+        return None;
+    }
+    Some(PendingBatch { shard, batch, resp: resp_rx })
+}
+
+/// Await one dispatched batch's outcome and fan the replies out.
+fn collect_batch(shared: &Shared, pending: PendingBatch) {
+    let PendingBatch { shard, batch, resp } = pending;
+    let resp = resp.recv();
+    shared.release_shard(shard);
+    shared.shards[shard].batches.fetch_add(1, Ordering::Relaxed);
+    match resp {
+        Ok(Ok(lines)) => {
+            for ((tenant, job), line) in batch.into_iter().zip(lines) {
+                match line {
+                    Some(o) => {
+                        // count before replying so a client's follow-up
+                        // STATS observes its own request
+                        shared.counters.record_served(tenant.0 as usize);
+                        let _ = job.reply.send(format!(
+                            "OK seq={} ntat={:.2} tat_ms={:.3} compute_us={:.0} sum={:+.4}",
+                            o.seq,
+                            o.ntat,
+                            o.tat_cycles as f64 / shared.cycles_per_ms as f64,
+                            o.compute_us,
+                            o.sum
+                        ));
+                    }
+                    None => {
+                        shared.counters.record_failed();
+                        let _ = job.reply.send("ERR request did not complete".into());
+                    }
+                }
+            }
+        }
+        Ok(Err(e)) => {
+            for (_, job) in batch {
+                shared.counters.record_failed();
+                let _ = job.reply.send(format!("ERR {e}"));
+            }
+        }
+        Err(_) => {
+            for (_, job) in batch {
+                shared.counters.record_failed();
+                let _ = job.reply.send("ERR coordinator executor died".into());
+            }
+        }
+    }
+}
+
+/// Shard leader executor: the single thread that owns one shard's
+/// fabric.  Each received batch is one `Leader::serve_batch` invocation
+/// (outcomes correlated by the seqs the pool-shared router actually
+/// assigned), drained per batch so a long-lived server's history stays
+/// bounded.
 fn run_executor(
+    shard: usize,
     cfg: &Config,
+    seqs: &Arc<AtomicU64>,
     mut leader: Leader,
     rx: mpsc::Receiver<ExecRequest>,
     shared: &Shared,
@@ -371,64 +605,56 @@ fn run_executor(
                 let r = leader.defrag();
                 let g = leader.fragmentation();
                 shared.record_fabric(
+                    shard,
                     (g.glb_frag, g.array_frag),
                     leader.scheduler().migration_stats().tasks_migrated,
                 );
-                let _ = resp.send(format!(
-                    "DEFRAG migrated={} cycles={} frag_glb={:.3}->{:.3} frag_arr={:.3}->{:.3}",
-                    r.migrated,
-                    r.cycles,
-                    r.frag_before.0,
-                    r.frag_after.0,
-                    r.frag_before.1,
-                    r.frag_after.1,
-                ));
+                let _ = resp.send(DefragReply {
+                    migrated: r.migrated,
+                    cycles: r.cycles,
+                    before: r.frag_before,
+                    after: r.frag_after,
+                });
             }
             ExecRequest::Batch { subs, resp } => {
-                let first_seq = leader.next_seq();
-                // map the &ServeStats away immediately so the borrow of
-                // `leader` ends before the arms below drain or rebuild it
-                let served = leader.serve(&subs).map(|_| ()).map_err(|e| e.to_string());
-                let result = match served {
-                    Ok(()) => {
-                        let mut drained: std::collections::BTreeMap<u64, super::ServeOutcome> =
-                            leader.drain_outcomes().into_iter().map(|o| (o.seq, o)).collect();
-                        let lines = (0..subs.len())
-                            .map(|i| {
-                                let seq = first_seq + i as u64;
-                                drained.remove(&seq).map(|o| OutcomeLine {
-                                    seq,
-                                    ntat: o.ntat,
-                                    tat_cycles: o.tat_cycles,
-                                    compute_us: o.compute_us,
-                                    sum: o.final_output_sum,
-                                })
+                let result = match leader.serve_batch(&subs) {
+                    Ok(outcomes) => Ok(outcomes
+                        .into_iter()
+                        .map(|o| {
+                            o.map(|o| OutcomeLine {
+                                seq: o.seq,
+                                ntat: o.ntat,
+                                tat_cycles: o.tat_cycles,
+                                compute_us: o.compute_us,
+                                sum: o.final_output_sum,
                             })
-                            .collect();
-                        Ok(lines)
-                    }
+                        })
+                        .collect()),
                     Err(e) => {
                         // `serve` is not transactional: a mid-batch failure
                         // can strand admitted requests in the router/queue
                         // and would poison every later batch.  Log which
-                        // tenants lost work, then rebuild the leader to a
-                        // clean fabric.
+                        // tenants lost work, then rebuild this shard's
+                        // leader to a clean fabric (seqs keep drawing from
+                        // the shared counter, so no collision with peers).
                         log::error!(
-                            "batch of {} failed: {e} (stranded backlog by tenant: {:?})",
+                            "shard {shard}: batch of {} failed: {e} \
+                             (stranded backlog by tenant: {:?})",
                             subs.len(),
                             leader.backlog_by_tenant()
                         );
-                        match Leader::new(cfg) {
+                        match Leader::new_shard(cfg, seqs.clone()) {
                             Ok(fresh) => leader = fresh,
-                            Err(re) => {
-                                log::error!("leader rebuild after failed batch also failed: {re}")
-                            }
+                            Err(re) => log::error!(
+                                "shard {shard}: leader rebuild after failed batch also failed: {re}"
+                            ),
                         }
-                        Err(e)
+                        Err(e.to_string())
                     }
                 };
                 let g = leader.fragmentation();
                 shared.record_fabric(
+                    shard,
                     (g.glb_frag, g.array_frag),
                     leader.scheduler().migration_stats().tasks_migrated,
                 );
@@ -482,14 +708,15 @@ pub struct Server {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
-    executor: Option<JoinHandle<()>>,
+    executors: Vec<JoinHandle<()>>,
 }
 
 impl Server {
     /// Start serving on `bind` (e.g. `127.0.0.1:0` for an ephemeral
-    /// port).  Spawns the leader executor (which builds the [`Leader`]
-    /// on its own thread — the PJRT client is not `Send`),
-    /// `cfg.server.workers` scheduler workers, and the accept loop.
+    /// port).  Spawns one leader executor per `pool.shards` (each builds
+    /// its [`Leader`] on its own thread — the PJRT client is not
+    /// `Send`), `cfg.server.workers` scheduler workers, and the accept
+    /// loop.
     pub fn start(cfg: &Config, bind: &str) -> Result<Server> {
         let listener =
             TcpListener::bind(bind).map_err(|e| Error::io(bind.to_string(), e))?;
@@ -498,56 +725,85 @@ impl Server {
 
         let shared = Arc::new(Shared::from_config(cfg));
 
-        // Leader executor: owns scheduler + runtime for the whole server.
-        let (exec_tx, exec_rx) = mpsc::channel::<ExecRequest>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let leader_cfg = cfg.clone();
-        let shared_e = shared.clone();
-        let executor = std::thread::Builder::new()
-            .name("cgra-leader".into())
-            .spawn(move || {
-                let leader = match Leader::new(&leader_cfg) {
-                    Ok(l) => {
-                        let _ = ready_tx.send(Ok(()));
-                        l
+        // Shard leader executors: each owns one fabric + runtime; all
+        // draw request seqs from this shared counter so completions
+        // merged across shards stay globally unique.  Every executor is
+        // spawned before any readiness is awaited — leader warmup
+        // (artifact compilation) runs once in parallel, not once per
+        // shard in sequence.
+        let seqs = Arc::new(AtomicU64::new(0));
+        let mut exec_txs: Vec<mpsc::Sender<ExecRequest>> = Vec::new();
+        let mut executors: Vec<JoinHandle<()>> = Vec::new();
+        let mut readiness: Vec<mpsc::Receiver<Result<()>>> = Vec::new();
+        for shard in 0..shared.shard_count() {
+            let (exec_tx, exec_rx) = mpsc::channel::<ExecRequest>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let leader_cfg = cfg.clone();
+            let shared_e = shared.clone();
+            let seqs_e = seqs.clone();
+            let executor = std::thread::Builder::new()
+                .name(format!("cgra-leader-{shard}"))
+                .spawn(move || {
+                    let leader = match Leader::new_shard(&leader_cfg, seqs_e.clone()) {
+                        Ok(l) => {
+                            let _ = ready_tx.send(Ok(()));
+                            l
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    run_executor(shard, &leader_cfg, &seqs_e, leader, exec_rx, &shared_e);
+                })
+                .map_err(|e| Error::Runtime(format!("spawn executor {shard}: {e}")))?;
+            executors.push(executor);
+            readiness.push(ready_rx);
+            exec_txs.push(exec_tx);
+        }
+        for (shard, ready_rx) in readiness.into_iter().enumerate() {
+            let outcome = ready_rx.recv();
+            match outcome {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    drop(exec_txs);
+                    for h in executors {
+                        let _ = h.join();
                     }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
+                    return Err(e);
+                }
+                Err(_) => {
+                    drop(exec_txs);
+                    for h in executors {
+                        let _ = h.join();
                     }
-                };
-                run_executor(&leader_cfg, leader, exec_rx, &shared_e);
-            })
-            .map_err(|e| Error::Runtime(format!("spawn executor: {e}")))?;
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => {
-                let _ = executor.join();
-                return Err(e);
+                    return Err(Error::Runtime(format!(
+                        "server executor {shard} died during startup"
+                    )));
+                }
             }
-            Err(_) => return Err(Error::Runtime("server executor died during startup".into())),
         }
 
-        // Scheduler workers: drain admission queues into executor batches.
+        // Scheduler workers: drain admission queues into shard batches.
         let batch_max = cfg.server.batch_max.max(1) as usize;
         let mut workers = Vec::with_capacity(shared.workers);
         for i in 0..shared.workers {
             let shared_w = shared.clone();
-            let tx = exec_tx.clone();
+            let txs = exec_txs.clone();
             let worker = std::thread::Builder::new()
                 .name(format!("cgra-worker-{i}"))
-                .spawn(move || run_worker(shared_w, tx, batch_max))
+                .spawn(move || run_worker(shared_w, txs, batch_max))
                 .map_err(|e| Error::Runtime(format!("spawn worker {i}: {e}")))?;
             workers.push(worker);
         }
-        // Connection threads reach the executor for DEFRAG through this
-        // shared sender; `begin_shutdown` drops it, after which the
-        // workers (the remaining senders) exiting lets the executor's
-        // recv fail and the thread join.
+        // Connection threads reach the executors for DEFRAG through
+        // these shared senders; `begin_shutdown` clears them, after
+        // which the workers (the remaining senders) exiting lets each
+        // executor's recv fail and the thread join.
         if let Ok(mut exec) = shared.exec.lock() {
-            *exec = Some(exec_tx.clone());
+            *exec = exec_txs.clone();
         }
-        drop(exec_tx);
+        drop(exec_txs);
 
         // Accept loop: one reader thread per connection.
         let shared_a = shared.clone();
@@ -576,7 +832,7 @@ impl Server {
             })
             .map_err(|e| Error::Runtime(format!("spawn accept loop: {e}")))?;
 
-        Ok(Server { addr, shared, accept: Some(accept), workers, executor: Some(executor) })
+        Ok(Server { addr, shared, accept: Some(accept), workers, executors })
     }
 
     /// Graceful shutdown: stop accepting, drain admitted submissions,
@@ -603,7 +859,7 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        if let Some(e) = self.executor.take() {
+        for e in self.executors.drain(..) {
             let _ = e.join();
         }
     }
@@ -621,19 +877,14 @@ mod tests {
     use super::*;
 
     fn test_shared(depth: usize) -> Shared {
-        Shared {
-            queues: AdmissionQueues::new(TENANTS as usize, depth),
-            counters: ServeCounters::new(TENANTS as usize),
-            stop: AtomicBool::new(false),
-            cycles_per_ms: 500_000,
-            workers: 2,
-            queue_depth: depth,
-            exec: Mutex::new(None),
-            frag_glb_bits: AtomicU64::new(0),
-            frag_arr_bits: AtomicU64::new(0),
-            migrations: AtomicU64::new(0),
-            leader_migrations: AtomicU64::new(0),
-        }
+        test_shared_sharded(depth, 1)
+    }
+
+    fn test_shared_sharded(depth: usize, shards: u32) -> Shared {
+        let mut cfg = crate::config::presets::paper_default();
+        cfg.server.queue_depth = depth as u32;
+        cfg.pool.shards = shards;
+        Shared::from_config(&cfg)
     }
 
     fn line(shared: &Shared, input: &str) -> (String, bool) {
@@ -712,20 +963,74 @@ mod tests {
     #[test]
     fn stats_reflect_recorded_fabric_snapshot() {
         let shared = test_shared(4);
-        shared.record_fabric((0.5, 0.25), 7);
+        shared.record_fabric(0, (0.5, 0.25), 7);
         let (stats, _) = line(&shared, "STATS");
         assert!(stats.contains("frag_glb=0.500"), "{stats}");
         assert!(stats.contains("frag_arr=0.250"), "{stats}");
         assert!(stats.contains("migrations=7"), "{stats}");
+        assert!(stats.contains("shards=1"), "{stats}");
         // leader rebuild resets the leader-side counter to 0 then counts
         // 2 fresh migrations: the published total must keep growing
-        shared.record_fabric((0.0, 0.0), 2);
+        shared.record_fabric(0, (0.0, 0.0), 2);
         let (stats, _) = line(&shared, "STATS");
         assert!(stats.contains("migrations=9"), "{stats}");
         // steady growth on the same leader adds only the delta
-        shared.record_fabric((0.0, 0.0), 5);
+        shared.record_fabric(0, (0.0, 0.0), 5);
         let (stats, _) = line(&shared, "STATS");
         assert!(stats.contains("migrations=12"), "{stats}");
+    }
+
+    #[test]
+    fn sharded_stats_aggregate_and_per_shard_lines() {
+        let shared = test_shared_sharded(4, 2);
+        shared.record_fabric(0, (0.5, 0.25), 3);
+        shared.record_fabric(1, (0.1, 0.05), 4);
+        // the aggregate line averages gauges and sums migrations
+        let (stats, _) = line(&shared, "STATS");
+        assert!(stats.contains("frag_glb=0.300"), "{stats}");
+        assert!(stats.contains("frag_arr=0.150"), "{stats}");
+        assert!(stats.contains("migrations=7"), "{stats}");
+        assert!(stats.contains("shards=2"), "{stats}");
+        // STATS SHARDS: a header naming the line count, then one line
+        // per shard
+        let (reply, close) = line(&shared, "STATS SHARDS");
+        assert!(!close);
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines.len(), 3, "{reply}");
+        assert_eq!(lines[0], "STATS shards=2");
+        assert!(lines[1].contains("shard=0"), "{reply}");
+        assert!(lines[1].contains("frag_glb=0.500"), "{reply}");
+        assert!(lines[1].contains("migrations=3"), "{reply}");
+        assert!(lines[2].contains("shard=1"), "{reply}");
+        assert!(lines[2].contains("migrations=4"), "{reply}");
+        // out-of-range record_fabric is ignored, not a panic
+        shared.record_fabric(9, (1.0, 1.0), 100);
+        let (stats, _) = line(&shared, "STATS");
+        assert!(stats.contains("migrations=7"), "{stats}");
+    }
+
+    #[test]
+    fn pick_shard_policies_are_deterministic() {
+        // least-loaded: lowest outstanding, then lowest id
+        let shared = test_shared_sharded(4, 3);
+        assert_eq!(shared.pick_shard(0), 0);
+        shared.shards[0].outstanding.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(shared.pick_shard(0), 1);
+        shared.shards[1].outstanding.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(shared.pick_shard(0), 2);
+        // sticky: first placement least-loaded, then pinned
+        let mut cfg = crate::config::presets::paper_default();
+        cfg.pool.shards = 2;
+        cfg.pool.placement = crate::config::PlacementPolicyKind::Sticky;
+        let sticky = Shared::from_config(&cfg);
+        sticky.shards[0].outstanding.fetch_add(5, Ordering::Relaxed);
+        assert_eq!(sticky.pick_shard(3), 1);
+        sticky.shards[1].outstanding.fetch_add(50, Ordering::Relaxed);
+        assert_eq!(sticky.pick_shard(3), 1, "tenant stays pinned");
+        assert_eq!(sticky.pick_shard(2), 0, "new tenant gets least-loaded");
+        // single shard short-circuits
+        let one = test_shared(4);
+        assert_eq!(one.pick_shard(9), 0);
     }
 
     #[test]

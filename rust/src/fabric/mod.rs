@@ -1,0 +1,38 @@
+//! Sharded fabric pool: many CGRA fabrics behind one placement router.
+//!
+//! The paper's abstractions deliberately decouple compilation from
+//! allocation: a task ships pre-compiled variants with quantized slice
+//! demands, and *where* those slices live is the runtime's choice
+//! (§2.2–2.3).  Nothing in that contract limits the runtime to a single
+//! fabric — so this module generalizes the serving path from one CGRA to
+//! a **pool** of independent fabric instances:
+//!
+//! * [`FabricPool`] owns N shards, each a full [`crate::scheduler::Scheduler`]
+//!   (its own [`crate::regions::RegionManager`], [`crate::dpr::DprEngine`]
+//!   and [`crate::migration`] planner) plus its own request queue.
+//!   Shards may be heterogeneous (per-shard geometry/GLB presets via
+//!   [`FabricPool::with_shard_configs`]) — the provisioning analysis in
+//!   arXiv 2412.08137 argues per-fabric resource shapes *should* differ.
+//! * [`FabricRouter`] scores ready requests across shards under the
+//!   `pool.placement` policy ([`crate::config::PlacementPolicyKind`]):
+//!   least-loaded, best-fit-by-shape, or sticky tenant affinity.
+//! * Cross-shard rescue: when a request's minimal demand fits no shard
+//!   right now, the pool runs one compaction pass of the PR 2 migration
+//!   machinery on the cheapest shard before placing (Mestra's
+//!   observation that relocating running tasks recovers capacity,
+//!   generalized across fabric instances).
+//!
+//! `pool.shards = 1` is bit-for-bit the single-fabric behavior — the
+//! golden-equivalence property test (`tests/prop_pool.rs`) compares
+//! event traces against the plain scheduler to keep it that way.
+//!
+//! The pool simulations ([`crate::sim::run_cloud_pool`],
+//! [`crate::sim::run_edge_pool`]) drive this module in virtual time; the
+//! TCP coordinator ([`crate::coordinator::Server`]) runs the same
+//! sharding live with per-shard leader executors.
+
+mod pool;
+mod router;
+
+pub use pool::{FabricPool, PoolStats, ShardSnapshot};
+pub use router::{FabricRouter, ShardId, ShardLoad};

@@ -1,0 +1,612 @@
+//! The sharded fabric pool: N independent CGRA fabrics, one router.
+
+use std::collections::BTreeMap;
+
+use crate::abstraction::SliceDemand;
+use crate::config::{Config, PlacementPolicyKind};
+use crate::dpr::DprMode;
+use crate::error::{Error, Result};
+use crate::metrics::FragmentationGauge;
+use crate::migration::{MigrationReport, MigrationStats};
+use crate::regions::RegionId;
+use crate::scheduler::{Launch, RequestQueue, Scheduler};
+use crate::tasks::{AppGraph, AppId, AppRequest, TaskLibrary};
+
+use super::router::{FabricRouter, ShardId, ShardLoad};
+
+/// One independent fabric instance: its own scheduler (and with it its
+/// own region manager + DPR engine + migration planner) plus its own
+/// ready queue.  Shards share nothing but the router above them.
+#[derive(Clone, Debug)]
+struct FabricShard {
+    id: ShardId,
+    sched: Scheduler,
+    queue: RequestQueue,
+    /// Open (incomplete) requests placed on this shard.
+    open: u64,
+    /// Cumulative task launches on this shard.
+    launches: u64,
+}
+
+/// Cumulative pool-level counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Requests routed onto a shard.
+    pub placed: u64,
+    /// Arrivals rejected because every shard's admission window was
+    /// full (`pool.admission_window` > 0 only).
+    pub busy_rejections: u64,
+    /// Cross-shard rescue compactions: a request's minimal demand fit
+    /// no shard right now, so the cheapest shard was defragmented
+    /// before placement.
+    pub cross_shard_defrags: u64,
+}
+
+/// Point-in-time view of one shard for `STATS`/export surfaces.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    /// Shard index.
+    pub shard: u32,
+    /// Open (incomplete) requests.
+    pub open_requests: u64,
+    /// Running task count.
+    pub running: u64,
+    /// Cumulative task launches.
+    pub launches: u64,
+    /// GLB-slice busy fraction.
+    pub glb_utilization: f64,
+    /// Array-slice busy fraction.
+    pub array_utilization: f64,
+    /// Fragmentation gauge.
+    pub gauge: FragmentationGauge,
+    /// Cumulative live migrations.
+    pub migrations: u64,
+}
+
+/// A pool of [`Scheduler`]-backed fabric shards behind a
+/// [`FabricRouter`].
+///
+/// With `pool.shards = 1` every call degenerates to the single-fabric
+/// path the sims and coordinator always had: one queue, one scheduler,
+/// no cross-shard machinery — the golden-equivalence property in
+/// `tests/prop_pool.rs` holds the pool to bit-for-bit sameness.
+#[derive(Clone, Debug)]
+pub struct FabricPool {
+    shards: Vec<FabricShard>,
+    router: FabricRouter,
+    /// Per-shard open-request cap (0 = unbounded).
+    window: u64,
+    /// request seq → owning shard.
+    placed: BTreeMap<u64, ShardId>,
+    stats: PoolStats,
+    /// Memoized per-app minimal placement demand (componentwise max of
+    /// the smallest variant over the app's task graph).
+    min_demand: BTreeMap<AppId, SliceDemand>,
+}
+
+impl FabricPool {
+    /// Pool of `cfg.pool.shards` identical shards built from `cfg`.
+    pub fn new(cfg: &Config, lib: TaskLibrary, mode: DprMode) -> Result<FabricPool> {
+        cfg.pool.validate()?;
+        let cfgs = vec![cfg.clone(); cfg.pool.shards as usize];
+        Self::with_shard_configs(
+            &cfgs,
+            cfg.pool.placement,
+            cfg.pool.admission_window,
+            lib,
+            mode,
+        )
+    }
+
+    /// Heterogeneous pool: one config per shard (geometry and GLB
+    /// presets may differ — the arXiv 2412.08137 provisioning shapes).
+    /// Placement and the admission window are pool-level.
+    pub fn with_shard_configs(
+        cfgs: &[Config],
+        placement: PlacementPolicyKind,
+        admission_window: u32,
+        lib: TaskLibrary,
+        mode: DprMode,
+    ) -> Result<FabricPool> {
+        if cfgs.is_empty() {
+            return Err(Error::Config("fabric pool needs at least one shard".into()));
+        }
+        let shards: Vec<FabricShard> = cfgs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| FabricShard {
+                id: ShardId(i as u32),
+                sched: Scheduler::new(c, lib.clone(), mode),
+                queue: RequestQueue::new(),
+                open: 0,
+                launches: 0,
+            })
+            .collect();
+        let min_demand = AppId::ALL
+            .iter()
+            .map(|&app| (app, placement_demand(&lib, app)))
+            .collect();
+        Ok(FabricPool {
+            shards,
+            router: FabricRouter::new(placement),
+            window: admission_window as u64,
+            placed: BTreeMap::new(),
+            stats: PoolStats::default(),
+            min_demand,
+        })
+    }
+
+    /// Preload every shard's bitstream cache (fast-DPR warm start).
+    pub fn preload_all(&mut self) {
+        for s in &mut self.shards {
+            s.sched.preload_all();
+        }
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Cumulative pool counters.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Which shard holds request `seq`, if it is still open.
+    pub fn shard_of(&self, seq: u64) -> Option<ShardId> {
+        self.placed.get(&seq).copied()
+    }
+
+    /// A shard's scheduler (metrics / tests).
+    pub fn scheduler(&self, shard: ShardId) -> Option<&Scheduler> {
+        self.shards.get(shard.0 as usize).map(|s| &s.sched)
+    }
+
+    /// Open (incomplete) requests across the pool, per placement
+    /// accounting.
+    pub fn open_requests(&self) -> u64 {
+        self.shards.iter().map(|s| s.open).sum()
+    }
+
+    /// Open requests per the shard queues themselves (invariant checks:
+    /// must agree with [`FabricPool::open_requests`]).
+    pub fn queue_open_requests(&self) -> usize {
+        self.shards.iter().map(|s| s.queue.open_requests()).sum()
+    }
+
+    /// Ready (waiting) tasks across the pool.
+    pub fn ready_count(&self) -> usize {
+        self.shards.iter().map(|s| s.queue.ready_count()).sum()
+    }
+
+    /// Aggregate (glb, array) busy-slice counts.
+    pub fn busy_slices(&self) -> (u32, u32) {
+        let mut g = 0;
+        let mut a = 0;
+        for s in &self.shards {
+            let mgr = s.sched.regions();
+            g += mgr.glb_map().busy_count();
+            a += mgr.array_map().busy_count();
+        }
+        (g, a)
+    }
+
+    /// Aggregate (glb, array) slice capacity.
+    pub fn total_slices(&self) -> (u32, u32) {
+        let mut g = 0;
+        let mut a = 0;
+        for s in &self.shards {
+            let mgr = s.sched.regions();
+            g += mgr.glb_map().len();
+            a += mgr.array_map().len();
+        }
+        (g, a)
+    }
+
+    /// Aggregate (glb, array) busy fractions.
+    pub fn utilization(&self) -> (f64, f64) {
+        let (bg, ba) = self.busy_slices();
+        let (tg, ta) = self.total_slices();
+        (bg as f64 / tg.max(1) as f64, ba as f64 / ta.max(1) as f64)
+    }
+
+    /// Mean (glb, array) external fragmentation across shards.
+    pub fn fragmentation(&self) -> (f64, f64) {
+        let n = self.shards.len().max(1) as f64;
+        let mut g = 0.0;
+        let mut a = 0.0;
+        for s in &self.shards {
+            let f = s.sched.regions().fragmentation();
+            g += f.0;
+            a += f.1;
+        }
+        (g / n, a / n)
+    }
+
+    /// Summed migration counters across shards.
+    pub fn migration_stats(&self) -> MigrationStats {
+        let mut agg = MigrationStats::default();
+        for s in &self.shards {
+            let m = s.sched.migration_stats();
+            agg.nofit_events += m.nofit_events;
+            agg.plans_considered += m.plans_considered;
+            agg.plans_committed += m.plans_committed;
+            agg.tasks_migrated += m.tasks_migrated;
+            agg.migration_cycles += m.migration_cycles;
+            agg.rescued_launches += m.rescued_launches;
+        }
+        agg
+    }
+
+    /// Per-shard snapshots (the `STATS shard=<i>` / `pool_json` source).
+    pub fn snapshots(&self) -> Vec<ShardSnapshot> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let mgr = s.sched.regions();
+                let (ug, ua) = mgr.utilization();
+                ShardSnapshot {
+                    shard: s.id.0,
+                    open_requests: s.open,
+                    running: s.sched.running_count() as u64,
+                    launches: s.launches,
+                    glb_utilization: ug,
+                    array_utilization: ua,
+                    gauge: FragmentationGauge::read(mgr),
+                    migrations: s.sched.migration_stats().tasks_migrated,
+                }
+            })
+            .collect()
+    }
+
+    /// Route and admit one request at cycle `now`.  Returns the placed
+    /// shard, or `None` when `pool.admission_window` is set and every
+    /// shard is at the cap (the pool-level `BUSY`).
+    ///
+    /// Multi-shard pools extend the PR 2 rescue machinery across the
+    /// pool: when the request's minimal demand fits *no* shard right
+    /// now, one compaction pass runs on the cheapest defrag-enabled
+    /// shard (fewest running tasks to move) before placement — a task
+    /// should not wait fragmented when any shard could be compacted.
+    pub fn try_submit(&mut self, req: AppRequest, now: u64) -> Option<ShardId> {
+        let demand = self
+            .min_demand
+            .get(&req.app)
+            .copied()
+            .unwrap_or_else(|| SliceDemand::new(0, 0));
+        if self.window > 0 && self.shards.iter().all(|s| s.open >= self.window) {
+            self.stats.busy_rejections += 1;
+            return None;
+        }
+        let mut loads = self.loads(&demand);
+        if self.window > 0 {
+            loads.retain(|l| l.open_requests < self.window);
+        }
+        // Cross-shard defragmentation (multi-shard pools only — with a
+        // single shard the scheduler's own NoFit-triggered defrag is
+        // already the whole story, and skipping it here keeps
+        // `pool.shards = 1` bit-for-bit equivalent to the single-fabric
+        // scheduler).
+        let mut rescued_to: Option<ShardId> = None;
+        if self.shards.len() > 1 && !loads.is_empty() && loads.iter().all(|l| !l.fits_now) {
+            if let Some(victim) = self.cheapest_defrag_candidate(&loads, &demand) {
+                self.stats.cross_shard_defrags += 1;
+                let _ = self.defrag_shard(victim, now);
+                loads = self.loads(&demand);
+                if self.window > 0 {
+                    loads.retain(|l| l.open_requests < self.window);
+                }
+                // The pass was run *for this request*: when it opened
+                // room (and the window still admits the victim), place
+                // there directly — scoring by load alone could otherwise
+                // queue the request on a shard that still cannot fit it,
+                // wasting the migration cycles just charged.
+                rescued_to = loads
+                    .iter()
+                    .find(|l| l.shard == victim && l.fits_now)
+                    .map(|l| l.shard);
+            }
+        }
+        let seq = req.seq;
+        let tenant = req.tenant;
+        let shard = rescued_to.unwrap_or_else(|| self.router.place(tenant, &loads));
+        let s = &mut self.shards[shard.0 as usize];
+        s.queue.submit(req);
+        s.open += 1;
+        self.placed.insert(seq, shard);
+        self.stats.placed += 1;
+        Some(shard)
+    }
+
+    /// One scheduling step on every shard (ascending id order).  Returns
+    /// every launch tagged with its shard.
+    pub fn schedule(&mut self, now: u64) -> Vec<(ShardId, Launch)> {
+        let mut out = Vec::new();
+        for s in &mut self.shards {
+            for launch in s.sched.schedule(&mut s.queue, now) {
+                s.launches += 1;
+                out.push((s.id, launch));
+            }
+        }
+        out
+    }
+
+    /// Complete the task on `region` of `shard` at cycle `now`.  Returns
+    /// the owning request when it fully completed.
+    pub fn complete(
+        &mut self,
+        shard: ShardId,
+        region: RegionId,
+        now: u64,
+    ) -> Result<Option<AppRequest>> {
+        let s = self
+            .shards
+            .get_mut(shard.0 as usize)
+            .ok_or_else(|| Error::Sched(format!("completion on unknown shard {shard}")))?;
+        let inst = s.sched.complete(region)?;
+        let done = s.queue.mark_complete(inst, now)?;
+        if let Some(ref req) = done {
+            s.open = s.open.saturating_sub(1);
+            self.placed.remove(&req.seq);
+        }
+        Ok(done)
+    }
+
+    /// Authoritative completion cycle of the task on `shard`/`region`
+    /// (migrations push finishes out; see [`Scheduler::finish_of`]).
+    pub fn finish_of(&self, shard: ShardId, region: RegionId) -> Option<u64> {
+        self.shards
+            .get(shard.0 as usize)
+            .and_then(|s| s.sched.finish_of(region))
+    }
+
+    /// Force one compaction pass on `shard` (control-plane and
+    /// cross-shard rescue path).
+    pub fn defrag_shard(&mut self, shard: ShardId, now: u64) -> Result<MigrationReport> {
+        let s = self
+            .shards
+            .get_mut(shard.0 as usize)
+            .ok_or_else(|| Error::Sched(format!("defrag of unknown shard {shard}")))?;
+        Ok(s.sched.defrag_now(now))
+    }
+
+    // ------------------------------------------------------------ internals
+
+    /// Point-in-time router inputs for every shard.
+    fn loads(&self, demand: &SliceDemand) -> Vec<ShardLoad> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let mgr = s.sched.regions();
+                ShardLoad {
+                    shard: s.id,
+                    open_requests: s.open,
+                    busy_array: mgr.array_map().busy_count(),
+                    glb_slices: mgr.glb_map().len(),
+                    array_slices: mgr.array_map().len(),
+                    feasible: mgr.can_ever_fit(demand),
+                    fits_now: mgr.can_fit_now(demand),
+                }
+            })
+            .collect()
+    }
+
+    /// The shard whose rescue compaction is cheapest: defrag-enabled,
+    /// actually fragmented, *able to host the demand after a full
+    /// compaction* (free slices ≥ demand in both classes — without this
+    /// a saturated pool would pause and relocate running tasks with
+    /// zero chance of placing the request), fewest running tasks to
+    /// relocate (lowest id breaks ties).
+    fn cheapest_defrag_candidate(
+        &self,
+        loads: &[ShardLoad],
+        demand: &SliceDemand,
+    ) -> Option<ShardId> {
+        loads
+            .iter()
+            .filter(|l| {
+                let s = &self.shards[l.shard.0 as usize];
+                let mgr = s.sched.regions();
+                let frag = mgr.fragmentation();
+                s.sched.defrag_enabled()
+                    && (frag.0 > 0.0 || frag.1 > 0.0)
+                    && mgr.glb_map().free_count() >= demand.glb_slices
+                    && mgr.array_map().free_count() >= demand.array_slices
+            })
+            .min_by_key(|l| {
+                (
+                    self.shards[l.shard.0 as usize].sched.running_count(),
+                    l.shard.0,
+                )
+            })
+            .map(|l| l.shard)
+    }
+}
+
+/// Componentwise max, over an app's task graph, of each task's smallest
+/// variant demand — the minimal footprint any schedule of the app needs
+/// at some point, and the probe the router scores shards against.
+fn placement_demand(lib: &TaskLibrary, app: AppId) -> SliceDemand {
+    let g = AppGraph::of(app);
+    let mut d = SliceDemand::new(0, 0);
+    for t in &g.nodes {
+        if let Ok(spec) = lib.get(t) {
+            let s = &spec.smallest().demand;
+            d = SliceDemand::new(
+                d.glb_slices.max(s.glb_slices),
+                d.array_slices.max(s.array_slices),
+            );
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, DefragPolicyKind, RegionPolicyKind, SchedulerPolicyKind};
+
+    fn pool(shards: u32, placement: PlacementPolicyKind) -> FabricPool {
+        let cfg = presets::pool_scenario(shards, placement);
+        let mut p = FabricPool::new(&cfg, TaskLibrary::table1(), DprMode::Fast).unwrap();
+        p.preload_all();
+        p
+    }
+
+    fn req(seq: u64, tenant: u32, app: AppId) -> AppRequest {
+        AppRequest::new(seq, tenant, app, 0)
+    }
+
+    #[test]
+    fn single_shard_submit_schedule_complete_cycle() {
+        let mut p = pool(1, PlacementPolicyKind::LeastLoaded);
+        assert_eq!(p.shard_count(), 1);
+        assert_eq!(p.try_submit(req(0, 3, AppId::Harris), 0), Some(ShardId(0)));
+        assert_eq!(p.shard_of(0), Some(ShardId(0)));
+        let launches = p.schedule(0);
+        assert_eq!(launches.len(), 1);
+        let (shard, l) = (&launches[0].0, launches[0].1.clone());
+        assert_eq!(*shard, ShardId(0));
+        assert!(p.finish_of(ShardId(0), l.region).is_some());
+        let done = p.complete(ShardId(0), l.region, l.finish).unwrap();
+        assert_eq!(done.expect("harris is one task").seq, 0);
+        assert_eq!(p.open_requests(), 0);
+        assert_eq!(p.queue_open_requests(), 0);
+        assert_eq!(p.shard_of(0), None);
+        assert_eq!(p.stats().placed, 1);
+    }
+
+    #[test]
+    fn least_loaded_spreads_equal_requests_across_shards() {
+        let mut p = pool(2, PlacementPolicyKind::LeastLoaded);
+        let a = p.try_submit(req(0, 2, AppId::Camera), 0).unwrap();
+        let b = p.try_submit(req(1, 2, AppId::Camera), 0).unwrap();
+        assert_eq!(a, ShardId(0));
+        assert_eq!(b, ShardId(1), "second request must go to the idle shard");
+        let launches = p.schedule(0);
+        assert_eq!(launches.len(), 2);
+        assert_ne!(launches[0].0, launches[1].0);
+    }
+
+    #[test]
+    fn sticky_placement_pins_tenants() {
+        let mut p = pool(2, PlacementPolicyKind::Sticky);
+        let first = p.try_submit(req(0, 1, AppId::Harris), 0).unwrap();
+        for seq in 1..4 {
+            assert_eq!(p.try_submit(req(seq, 1, AppId::Harris), 0), Some(first));
+        }
+        // another tenant lands on the other shard (least-loaded first hop)
+        let other = p.try_submit(req(9, 2, AppId::Harris), 0).unwrap();
+        assert_ne!(other, first);
+    }
+
+    #[test]
+    fn admission_window_rejects_only_when_every_shard_is_full() {
+        let mut cfg = presets::pool_scenario(2, PlacementPolicyKind::LeastLoaded);
+        cfg.pool.admission_window = 1;
+        let mut p = FabricPool::new(&cfg, TaskLibrary::table1(), DprMode::Fast).unwrap();
+        assert!(p.try_submit(req(0, 0, AppId::Harris), 0).is_some());
+        assert!(p.try_submit(req(1, 1, AppId::Harris), 0).is_some());
+        assert_eq!(p.try_submit(req(2, 2, AppId::Harris), 0), None);
+        assert_eq!(p.stats().busy_rejections, 1);
+        // completing one request reopens the window
+        let launches = p.schedule(0);
+        let (shard, l) = (launches[0].0, launches[0].1.clone());
+        p.complete(shard, l.region, l.finish).unwrap();
+        assert!(p.try_submit(req(3, 2, AppId::Harris), l.finish).is_some());
+    }
+
+    /// Fragment shard 0 and saturate shard 1, then submit a task that
+    /// fits nowhere: the pool must defragment the cheaper shard (0: two
+    /// running tasks vs four) and place the request there.
+    #[test]
+    fn cross_shard_defrag_rescues_a_nofit_everywhere_request() {
+        let mut cfg = presets::pool_scenario(2, PlacementPolicyKind::LeastLoaded);
+        cfg.scheduler.policy = SchedulerPolicyKind::FcfsFirstFit;
+        cfg.scheduler.defrag_policy = DefragPolicyKind::Greedy;
+        cfg.scheduler.defrag_threshold = 0.25;
+        assert_eq!(cfg.scheduler.region_policy, RegionPolicyKind::FlexibleShape);
+        let mut p = FabricPool::new(&cfg, TaskLibrary::table1(), DprMode::Fast).unwrap();
+        p.preload_all();
+
+        // 8 harris-a (2 array slices each): least-loaded alternates the
+        // placements, 4 per shard, filling both arrays.
+        let mut seq = 0;
+        for _ in 0..8 {
+            p.try_submit(req(seq, 3, AppId::Harris), 0).unwrap();
+            seq += 1;
+        }
+        let launches = p.schedule(0);
+        assert_eq!(launches.len(), 8);
+        // free the 2nd and 4th launch on shard 0 only: array holes
+        // {2,3} and {6,7} — fragmented, while shard 1 stays full
+        let on_zero: Vec<_> =
+            launches.iter().filter(|(s, _)| *s == ShardId(0)).collect();
+        assert_eq!(on_zero.len(), 4);
+        for i in [1usize, 3] {
+            let (s, l) = on_zero[i];
+            p.complete(*s, l.region, 100).unwrap();
+        }
+        let frag0 = p.scheduler(ShardId(0)).unwrap().regions().fragmentation();
+        assert!(frag0.1 >= 0.25, "shard 0 must be fragmented: {frag0:?}");
+
+        // camera-a needs 4 contiguous array slices: fits neither the
+        // scattered holes of shard 0 nor full shard 1
+        let placed = p.try_submit(req(99, 2, AppId::Camera), 100).unwrap();
+        assert_eq!(placed, ShardId(0), "rescue places on the compacted shard");
+        assert_eq!(p.stats().cross_shard_defrags, 1);
+        assert!(p.migration_stats().tasks_migrated >= 1);
+        let launches = p.schedule(100);
+        assert_eq!(launches.len(), 1, "camera must launch after the rescue");
+        assert_eq!(launches[0].0, ShardId(0));
+    }
+
+    #[test]
+    fn snapshots_and_aggregates_are_coherent() {
+        let mut p = pool(2, PlacementPolicyKind::LeastLoaded);
+        p.try_submit(req(0, 2, AppId::Camera), 0).unwrap();
+        p.try_submit(req(1, 3, AppId::Harris), 0).unwrap();
+        let launches = p.schedule(0);
+        assert_eq!(launches.len(), 2);
+        let snaps = p.snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps.iter().map(|s| s.running).sum::<u64>(), 2);
+        assert_eq!(snaps.iter().map(|s| s.launches).sum::<u64>(), 2);
+        let (ug, ua) = p.utilization();
+        assert!(ug > 0.0 && ua > 0.0);
+        let (bg, ba) = p.busy_slices();
+        let (tg, ta) = p.total_slices();
+        assert_eq!((tg, ta), (64, 16), "two default shards");
+        assert!(bg <= tg && ba <= ta);
+        assert_eq!(p.open_requests(), 2);
+        assert_eq!(p.queue_open_requests(), 2);
+    }
+
+    #[test]
+    fn heterogeneous_shards_build_and_best_fit_prefers_tight_shape() {
+        let small = presets::test_small(); // 4 array slices, 8 banks
+        let big = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        let mut p = FabricPool::with_shard_configs(
+            &[big, small],
+            PlacementPolicyKind::BestFit,
+            0,
+            TaskLibrary::table1(),
+            DprMode::Fast,
+        )
+        .unwrap();
+        assert_eq!(p.shard_count(), 2);
+        // harris-a (4 glb, 2 array) fits the small shard, which is the
+        // tighter shape
+        assert_eq!(p.try_submit(req(0, 3, AppId::Harris), 0), Some(ShardId(1)));
+        assert_eq!(p.schedule(0).len(), 1);
+    }
+
+    #[test]
+    fn complete_on_unknown_shard_errors() {
+        let mut p = pool(1, PlacementPolicyKind::LeastLoaded);
+        assert!(p.complete(ShardId(9), RegionId(0), 0).is_err());
+        assert!(p.defrag_shard(ShardId(9), 0).is_err());
+        assert!(p.finish_of(ShardId(9), RegionId(0)).is_none());
+    }
+}

@@ -1,0 +1,204 @@
+//! Placement routing across fabric shards.
+//!
+//! The router is deliberately stateless about fabric internals: the pool
+//! hands it a point-in-time [`ShardLoad`] per shard and it returns the
+//! shard the request should land on.  All scoring is deterministic
+//! (total orders with shard-id tie-breaks), so pool simulations stay
+//! reproducible run-to-run.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::config::PlacementPolicyKind;
+
+/// Identity of one fabric shard within a pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ShardId(pub u32);
+
+impl fmt::Display for ShardId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "S{}", self.0)
+    }
+}
+
+/// Point-in-time placement inputs for one shard.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardLoad {
+    /// Which shard.
+    pub shard: ShardId,
+    /// Open (incomplete) requests currently placed on the shard.
+    pub open_requests: u64,
+    /// Busy array slices — the compute-pressure proxy.
+    pub busy_array: u32,
+    /// Total GLB slices (best-fit shape scoring).
+    pub glb_slices: u32,
+    /// Total array slices (best-fit shape scoring).
+    pub array_slices: u32,
+    /// Whether the shard's geometry can *ever* host the request's
+    /// minimal demand ([`crate::regions::RegionManager::can_ever_fit`]).
+    pub feasible: bool,
+    /// Whether that demand fits *right now*
+    /// ([`crate::regions::RegionManager::can_fit_now`]).
+    pub fits_now: bool,
+}
+
+/// Scores ready requests across the shards of a [`super::FabricPool`].
+#[derive(Clone, Debug)]
+pub struct FabricRouter {
+    policy: PlacementPolicyKind,
+    /// tenant → shard affinity (sticky placement).
+    sticky: BTreeMap<u32, ShardId>,
+}
+
+impl FabricRouter {
+    /// Router under the given placement policy.
+    pub fn new(policy: PlacementPolicyKind) -> FabricRouter {
+        FabricRouter { policy, sticky: BTreeMap::new() }
+    }
+
+    /// Active placement policy.
+    pub fn policy(&self) -> PlacementPolicyKind {
+        self.policy
+    }
+
+    /// Choose a shard for `tenant`'s request among `loads` (must be
+    /// non-empty).  Infeasible shards lose to feasible ones under every
+    /// policy; within the feasible set the policy's total order decides,
+    /// with the shard id as the final deterministic tie-break.
+    pub fn place(&mut self, tenant: u32, loads: &[ShardLoad]) -> ShardId {
+        debug_assert!(!loads.is_empty(), "placement over an empty pool");
+        if loads.len() == 1 {
+            return loads[0].shard;
+        }
+        match self.policy {
+            PlacementPolicyKind::LeastLoaded => Self::least_loaded(loads),
+            PlacementPolicyKind::BestFit => Self::best_fit(loads),
+            PlacementPolicyKind::Sticky => {
+                if let Some(&s) = self.sticky.get(&tenant) {
+                    match loads.iter().find(|l| l.shard == s) {
+                        Some(l) if l.feasible => return s,
+                        // present but can never host the demand: the
+                        // pin is permanently wrong — re-pin below
+                        Some(_) => {}
+                        // transiently absent (admission window full):
+                        // overflow this one request least-loaded but
+                        // keep the pin — affinity is a permanent
+                        // contract, not a per-request race
+                        None => return Self::least_loaded(loads),
+                    }
+                }
+                let s = Self::least_loaded(loads);
+                self.sticky.insert(tenant, s);
+                s
+            }
+        }
+    }
+
+    /// Fewest open requests, then fewest busy array slices, then id.
+    fn least_loaded(loads: &[ShardLoad]) -> ShardId {
+        loads
+            .iter()
+            .min_by_key(|l| (!l.feasible, l.open_requests, l.busy_array, l.shard.0))
+            .expect("non-empty loads")
+            .shard
+    }
+
+    /// Tightest feasible shape (smallest array, then GLB, capacity);
+    /// least-loaded order breaks ties, so a homogeneous pool degenerates
+    /// to least-loaded.
+    fn best_fit(loads: &[ShardLoad]) -> ShardId {
+        loads
+            .iter()
+            .min_by_key(|l| {
+                (
+                    !l.feasible,
+                    l.array_slices,
+                    l.glb_slices,
+                    l.open_requests,
+                    l.busy_array,
+                    l.shard.0,
+                )
+            })
+            .expect("non-empty loads")
+            .shard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(shard: u32, open: u64, busy: u32) -> ShardLoad {
+        ShardLoad {
+            shard: ShardId(shard),
+            open_requests: open,
+            busy_array: busy,
+            glb_slices: 32,
+            array_slices: 8,
+            feasible: true,
+            fits_now: true,
+        }
+    }
+
+    #[test]
+    fn single_shard_short_circuits() {
+        let mut r = FabricRouter::new(PlacementPolicyKind::Sticky);
+        assert_eq!(r.place(3, &[load(0, 99, 8)]), ShardId(0));
+        // the short-circuit must not record affinity state
+        assert!(r.sticky.is_empty());
+    }
+
+    #[test]
+    fn least_loaded_prefers_fewest_open_then_busy_then_id() {
+        let mut r = FabricRouter::new(PlacementPolicyKind::LeastLoaded);
+        assert_eq!(r.place(0, &[load(0, 2, 0), load(1, 1, 8)]), ShardId(1));
+        assert_eq!(r.place(0, &[load(0, 1, 4), load(1, 1, 2)]), ShardId(1));
+        assert_eq!(r.place(0, &[load(0, 1, 4), load(1, 1, 4)]), ShardId(0));
+    }
+
+    #[test]
+    fn infeasible_shards_lose_under_every_policy() {
+        for policy in PlacementPolicyKind::ALL {
+            let mut r = FabricRouter::new(policy);
+            let mut a = load(0, 0, 0);
+            a.feasible = false;
+            let b = load(1, 50, 8);
+            assert_eq!(r.place(0, &[a, b]), ShardId(1), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn best_fit_picks_tightest_feasible_shape() {
+        let mut r = FabricRouter::new(PlacementPolicyKind::BestFit);
+        let big = ShardLoad { glb_slices: 64, array_slices: 16, ..load(0, 0, 0) };
+        let small = load(1, 3, 6);
+        assert_eq!(r.place(0, &[big, small]), ShardId(1));
+        // homogeneous shapes degenerate to least-loaded
+        assert_eq!(r.place(0, &[load(0, 5, 0), load(1, 2, 0)]), ShardId(1));
+    }
+
+    #[test]
+    fn sticky_keeps_tenants_on_their_first_shard() {
+        let mut r = FabricRouter::new(PlacementPolicyKind::Sticky);
+        let first = r.place(7, &[load(0, 3, 0), load(1, 0, 0)]);
+        assert_eq!(first, ShardId(1), "first placement is least-loaded");
+        // the shard stays pinned even once it is the busier one
+        assert_eq!(r.place(7, &[load(0, 0, 0), load(1, 9, 8)]), ShardId(1));
+        // ...but a shard that cannot host the demand breaks the pin
+        let mut pinned = load(1, 9, 8);
+        pinned.feasible = false;
+        assert_eq!(r.place(7, &[load(0, 0, 0), pinned]), ShardId(0));
+    }
+
+    #[test]
+    fn sticky_pin_survives_transient_absence_from_loads() {
+        let mut r = FabricRouter::new(PlacementPolicyKind::Sticky);
+        assert_eq!(r.place(3, &[load(0, 1, 0), load(1, 0, 0)]), ShardId(1));
+        // the pinned shard is window-filtered out of this placement:
+        // the request overflows least-loaded, the pin stays put...
+        assert_eq!(r.place(3, &[load(0, 4, 0), load(2, 0, 0)]), ShardId(2));
+        assert_eq!(r.sticky.get(&3), Some(&ShardId(1)));
+        // ...and once the pinned shard is back, affinity resumes
+        assert_eq!(r.place(3, &[load(0, 0, 0), load(1, 9, 8)]), ShardId(1));
+    }
+}

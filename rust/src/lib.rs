@@ -15,8 +15,9 @@
 //!   execution regions ([`regions`]), fast dynamic partial reconfiguration
 //!   ([`dpr`]), the greedy multi-task scheduler ([`scheduler`]), the
 //!   live-migration defragmentation subsystem ([`migration`]), the
-//!   discrete-event CGRA timing model ([`sim`]), and the multi-tenant
-//!   request coordinator ([`coordinator`]).
+//!   discrete-event CGRA timing model ([`sim`]), the sharded fabric pool
+//!   with placement routing ([`fabric`]), and the multi-tenant request
+//!   coordinator ([`coordinator`]).
 //! * **Runtime** — [`runtime`] executes the artifacts on the request
 //!   path.  Two backends serve one API: the default deterministic
 //!   in-process stub (fully offline), and the PJRT C API client
@@ -41,6 +42,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dpr;
 pub mod error;
+pub mod fabric;
 pub mod metrics;
 pub mod migration;
 pub mod regions;

@@ -84,7 +84,9 @@ fn print_usage() {
            --export FILE      write per-request/per-frame CSV (simulate-*)\n\
            --bind ADDR        serve-tcp bind address (default 127.0.0.1:7070)\n\
            --workers N        serve-tcp scheduler workers (default 2)\n\
-           --queue-depth N    serve-tcp per-tenant admission queue depth (default 32)"
+           --queue-depth N    serve-tcp per-tenant admission queue depth (default 32)\n\
+           --shards N         serve-tcp fabric-pool shard count (default 1)\n\
+           --placement P      serve-tcp pool placement: least-loaded | best-fit | sticky"
     );
 }
 
@@ -325,14 +327,24 @@ fn serve_tcp(flags: &Flags) -> cgra_mte::Result<()> {
     if let Some(d) = flags.get_u64("queue-depth")? {
         cfg.server.queue_depth = d as u32;
     }
+    if let Some(s) = flags.get_u64("shards")? {
+        cfg.pool.shards = s as u32;
+    }
+    if let Some(p) = flags.get("placement") {
+        cfg.pool.placement = cgra_mte::config::PlacementPolicyKind::from_name(p)?;
+    }
     cfg.validate()?;
     let bind = flags.get("bind").unwrap_or("127.0.0.1:7070");
     println!("compiling artifacts + binding {bind} ...");
     let server = cgra_mte::coordinator::Server::start(&cfg, bind)?;
     println!(
-        "listening on {} — {} workers, queue depth {} per tenant\n\
-         protocol: SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris> | STATS [tenant] | QUIT | SHUTDOWN",
-        server.addr, cfg.server.workers, cfg.server.queue_depth
+        "listening on {} — {} workers, queue depth {} per tenant, {} fabric shard(s) ({})\n\
+         protocol: SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris> | STATS [tenant|SHARDS] | DEFRAG | QUIT | SHUTDOWN",
+        server.addr,
+        cfg.server.workers,
+        cfg.server.queue_depth,
+        cfg.pool.shards,
+        cfg.pool.placement.name()
     );
     println!("send SHUTDOWN to stop gracefully (Ctrl-C terminates without draining)");
     server.wait();

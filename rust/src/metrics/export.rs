@@ -89,6 +89,30 @@ pub fn fragmentation_json(g: &FragmentationGauge) -> String {
     )
 }
 
+/// One-line JSON rendering of a fabric pool's per-shard state — the
+/// machine-readable companion to the `STATS SHARDS` wire lines, built
+/// from [`crate::fabric::FabricPool::snapshots`].
+pub fn pool_json(shards: &[crate::fabric::ShardSnapshot]) -> String {
+    let per: Vec<String> = shards
+        .iter()
+        .map(|s| {
+            format!(
+                r#"{{"shard":{},"open_requests":{},"running":{},"launches":{},"glb_util":{:.6},"array_util":{:.6},"glb_frag":{:.6},"array_frag":{:.6},"migrations":{}}}"#,
+                s.shard,
+                s.open_requests,
+                s.running,
+                s.launches,
+                s.glb_utilization,
+                s.array_utilization,
+                s.gauge.glb_frag,
+                s.gauge.array_frag,
+                s.migrations,
+            )
+        })
+        .collect();
+    format!(r#"{{"shards":{},"per_shard":[{}]}}"#, shards.len(), per.join(","))
+}
+
 /// Frame latency breakdown as CSV (`frame,reconfig,wait_exec,total`).
 pub fn latency_csv(breakdown: &LatencyBreakdown) -> String {
     let rows: Vec<Vec<String>> = breakdown
@@ -164,6 +188,26 @@ mod tests {
     #[test]
     fn write_file_errors_on_bad_path() {
         assert!(write_file("/nonexistent-dir/x.csv", "x").is_err());
+    }
+
+    #[test]
+    fn pool_json_parses_per_shard() {
+        use crate::config::{presets, PlacementPolicyKind};
+        use crate::dpr::DprMode;
+        use crate::fabric::FabricPool;
+        use crate::tasks::TaskLibrary;
+
+        let cfg = presets::pool_scenario(2, PlacementPolicyKind::LeastLoaded);
+        let pool = FabricPool::new(&cfg, TaskLibrary::table1(), DprMode::Fast).unwrap();
+        let line = pool_json(&pool.snapshots());
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.req_f64("shards").unwrap(), 2.0);
+        let per = v.get("per_shard").unwrap().items();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].req_f64("shard").unwrap(), 0.0);
+        assert_eq!(per[1].req_f64("shard").unwrap(), 1.0);
+        assert_eq!(per[0].req_f64("running").unwrap(), 0.0);
+        assert_eq!(per[0].req_f64("glb_frag").unwrap(), 0.0);
     }
 
     #[test]

@@ -132,6 +132,44 @@ impl RegionManager {
         }
     }
 
+    /// Whether `demand` could be allocated *right now*, without mutating
+    /// the maps — the read-only twin of [`RegionManager::try_allocate`].
+    /// The fabric-pool router ([`crate::fabric`]) probes every shard with
+    /// this before falling back to a cross-shard defragmentation pass.
+    pub fn can_fit_now(&self, demand: &SliceDemand) -> bool {
+        if !self.can_ever_fit(demand) {
+            return false;
+        }
+        match self.policy {
+            RegionPolicyKind::Baseline => self.idle(),
+            RegionPolicyKind::FixedSize => (0..self.unit_count()).any(|i| {
+                let g = SliceRange::new(i * self.unit.glb_slices, self.unit.glb_slices);
+                let a = SliceRange::new(i * self.unit.array_slices, self.unit.array_slices);
+                self.glb.range_free(&g) && self.array.range_free(&a)
+            }),
+            RegionPolicyKind::VariableSize => {
+                let k = self.units_needed(demand);
+                let total = self.unit_count();
+                k <= total
+                    && (0..=(total - k)).any(|start| {
+                        let g = SliceRange::new(
+                            start * self.unit.glb_slices,
+                            k * self.unit.glb_slices,
+                        );
+                        let a = SliceRange::new(
+                            start * self.unit.array_slices,
+                            k * self.unit.array_slices,
+                        );
+                        self.glb.range_free(&g) && self.array.range_free(&a)
+                    })
+            }
+            RegionPolicyKind::FlexibleShape => {
+                self.array.find_free_run(demand.array_slices).is_some()
+                    && self.glb.find_free_run(demand.glb_slices).is_some()
+            }
+        }
+    }
+
     /// Units needed to cover `demand` when merging (variable mechanism):
     /// both slice classes must be covered by the *same* k (the merged
     /// region keeps the unit's GLB:array ratio, §2.3).
@@ -660,6 +698,28 @@ mod tests {
         // skip a unit so the region is genuinely multi-range
         assert!(r.glb.len() >= 2);
         assert!(m.relocate(r.id, None, None).is_err());
+    }
+
+    #[test]
+    fn can_fit_now_tracks_try_allocate_without_mutating() {
+        for policy in RegionPolicyKind::ALL {
+            let mut m = mgr(policy);
+            let d = SliceDemand::new(4, 1);
+            // empty machine: probe agrees with a real allocation...
+            let before = m.render();
+            assert!(m.can_fit_now(&d), "{policy:?}");
+            assert_eq!(m.render(), before, "probe must not mutate");
+            // ...and after filling the machine the probe flips to false
+            // exactly when try_allocate stops yielding regions.
+            let mut n = 0;
+            while let AllocOutcome::Allocated(_) = m.try_allocate(&d) {
+                n += 1;
+                assert!(n <= 64, "runaway allocation under {policy:?}");
+            }
+            assert!(!m.can_fit_now(&d), "{policy:?} full but probe says fit");
+            // oversized demands are never claimed to fit
+            assert!(!m.can_fit_now(&SliceDemand::new(33, 9)), "{policy:?}");
+        }
     }
 
     #[test]

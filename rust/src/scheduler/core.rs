@@ -228,6 +228,13 @@ impl Scheduler {
         self.mig_stats
     }
 
+    /// Whether the defragmentation planner is active
+    /// (`scheduler.defrag_policy` ≠ off).  The fabric pool consults this
+    /// before attempting a cross-shard rescue compaction.
+    pub fn defrag_enabled(&self) -> bool {
+        self.planner.enabled()
+    }
+
     /// Force one compaction pass right now (the coordinator's `DEFRAG`
     /// wire command) — ignores the defrag threshold and needs no blocked
     /// task.  Running tasks that move are charged their migration cycles.

@@ -19,6 +19,7 @@ use crate::tasks::{AppId, AppRequest, TaskLibrary};
 use crate::util::rng::Rng;
 
 use super::engine::{Cycle, EventQueue};
+use super::trace::Trace;
 
 /// Event-triggered applications: Harris (e.g. feature tracking on a
 /// detected object) and MobileNet (e.g. classification of a detected
@@ -79,6 +80,14 @@ pub fn run_edge(cfg: &Config) -> Result<EdgeReport> {
 
 /// [`run_edge`] with an explicit task library (used by ablations).
 pub fn run_edge_with(cfg: &Config, lib: TaskLibrary) -> Result<EdgeReport> {
+    run_edge_traced(cfg, lib, &mut Trace::disabled())
+}
+
+/// [`run_edge_with`] recording frames, arrivals, launches and frame
+/// completions into `trace` (same line grammar as
+/// [`super::pool::run_edge_pool_traced`] on a single-shard pool — the
+/// determinism and golden-equivalence tests diff the rendered traces).
+pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Result<EdgeReport> {
     let wl: &EdgeWorkloadConfig = match &cfg.workload {
         WorkloadConfig::Edge(e) => e,
         WorkloadConfig::Cloud(_) => {
@@ -118,10 +127,12 @@ pub fn run_edge_with(cfg: &Config, lib: TaskLibrary) -> Result<EdgeReport> {
         match ev {
             Event::Frame(k) => {
                 let entry = frames.entry(k).or_insert((now, 0, 0, now));
+                trace.log(now, format!("frame k={k}"));
                 // camera pipeline runs every frame
                 queue.submit(AppRequest::new(seq, 2, AppId::Camera, now));
                 frame_of.insert(seq, k);
                 entry.1 += 1;
+                trace.log(now, format!("arrive seq={seq} frame={k} app={}", AppId::Camera.name()));
                 seq += 1;
                 // event streams
                 for (i, app) in EVENT_APPS.iter().enumerate() {
@@ -129,6 +140,7 @@ pub fn run_edge_with(cfg: &Config, lib: TaskLibrary) -> Result<EdgeReport> {
                         queue.submit(AppRequest::new(seq, i as u32, *app, now));
                         frame_of.insert(seq, k);
                         frames.get_mut(&k).expect("inserted").1 += 1;
+                        trace.log(now, format!("arrive seq={seq} frame={k} app={}", app.name()));
                         seq += 1;
                         event_requests += 1;
                         let step = rng.range_inclusive(lo as u64, hi as u64) as u32;
@@ -161,6 +173,7 @@ pub fn run_edge_with(cfg: &Config, lib: TaskLibrary) -> Result<EdgeReport> {
                         let (start, _, reconfig, last) = *entry;
                         frames.remove(&k);
                         let total = last - start;
+                        trace.log(now, format!("frame-done k={k} total={total} reconfig={reconfig}"));
                         latency.record(FrameLatency {
                             reconfig_cycles: reconfig.min(total),
                             wait_exec_cycles: total.saturating_sub(reconfig),
@@ -175,6 +188,19 @@ pub fn run_edge_with(cfg: &Config, lib: TaskLibrary) -> Result<EdgeReport> {
                     entry.2 += launch.dpr_cycles;
                 }
             }
+            trace.log(
+                now,
+                format!(
+                    "launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
+                    launch.instance,
+                    launch.task,
+                    launch.ver,
+                    launch.region,
+                    launch.dpr_cycles,
+                    launch.exec_cycles,
+                    launch.finish
+                ),
+            );
             events.push(launch.finish, Event::Completion(launch.region));
         }
     }

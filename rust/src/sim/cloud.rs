@@ -19,6 +19,7 @@ use crate::tasks::{AppGraph, AppId, AppRequest, TaskLibrary};
 use crate::util::rng::Rng;
 
 use super::engine::{Cycle, EventQueue};
+use super::trace::Trace;
 
 /// Events driving the cloud simulation.
 #[derive(Clone, Debug)]
@@ -94,6 +95,16 @@ pub fn run_cloud(cfg: &Config) -> Result<CloudReport> {
 /// [`run_cloud`] with an explicit task library (ablations re-quantize
 /// Table 1 demands for non-default slice geometries).
 pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
+    run_cloud_traced(cfg, lib, &mut Trace::disabled())
+}
+
+/// [`run_cloud_with`] recording every arrival, launch and request
+/// completion into `trace` — the determinism-regression and
+/// pool-golden-equivalence tests compare these traces byte-for-byte
+/// (same line grammar as [`super::pool::run_cloud_pool_traced`], which
+/// omits the `shard=` tag on single-shard pools exactly so the traces
+/// stay comparable).
+pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Result<CloudReport> {
     let wl: &CloudWorkloadConfig = match &cfg.workload {
         WorkloadConfig::Cloud(c) => c,
         WorkloadConfig::Edge(_) => {
@@ -146,6 +157,7 @@ pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
                 // admit the request
                 queue.submit(AppRequest::new(seq, t, tenant_app(t), now));
                 inflight.insert(seq, (tenant_app(t), now, 0));
+                trace.log(now, format!("arrive seq={seq} tenant={t} app={}", tenant_app(t).name()));
                 seq += 1;
                 submitted += 1;
                 // next arrival for this tenant, within the window
@@ -173,6 +185,7 @@ pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
                             Error::SimInvariant(format!("request {} not inflight", done.seq))
                         })?;
                     completed += 1;
+                    trace.log(now, format!("done seq={} tenant={}", done.seq, done.tenant));
                     ntat.record(NtatRecord {
                         app,
                         arrival,
@@ -189,6 +202,19 @@ pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
             if let Some(entry) = inflight.get_mut(&launch.instance.request) {
                 entry.2 += launch.dpr_cycles + launch.exec_cycles;
             }
+            trace.log(
+                now,
+                format!(
+                    "launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
+                    launch.instance,
+                    launch.task,
+                    launch.ver,
+                    launch.region,
+                    launch.dpr_cycles,
+                    launch.exec_cycles,
+                    launch.finish
+                ),
+            );
             events.push(launch.finish, Event::Completion(launch.region));
         }
         // utilization/fragmentation are piecewise-constant between events

@@ -4,15 +4,22 @@
 //! substitution table): task execution time = Table 1 work / throughput,
 //! DPR cost from [`crate::dpr`], resource contention from
 //! [`crate::regions`].  Two scenario drivers reproduce the paper's
-//! evaluation: [`cloud`] (§3.1, Fig. 4) and [`autonomous`] (§3.2, Fig. 5).
+//! evaluation: [`cloud`] (§3.1, Fig. 4) and [`autonomous`] (§3.2, Fig. 5);
+//! [`pool`] generalizes both over a sharded [`crate::fabric::FabricPool`]
+//! (single-shard pools are bit-for-bit equivalent to the plain drivers).
 
 pub mod autonomous;
 pub mod cloud;
 mod engine;
+pub mod pool;
 pub mod queueing;
 pub mod trace;
 
-pub use autonomous::{run_edge, run_edge_with, EdgeReport};
-pub use cloud::{run_cloud, run_cloud_with, CloudReport};
+pub use autonomous::{run_edge, run_edge_traced, run_edge_with, EdgeReport};
+pub use cloud::{run_cloud, run_cloud_traced, run_cloud_with, CloudReport};
 pub use engine::{Cycle, EventQueue};
+pub use pool::{
+    run_cloud_pool, run_cloud_pool_traced, run_edge_pool, run_edge_pool_traced, PoolCloudReport,
+    PoolEdgeReport, ShardSimStats,
+};
 pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,661 @@
+//! Pool-scenario simulations: the cloud and autonomous drivers
+//! generalized over a sharded [`crate::fabric::FabricPool`].
+//!
+//! These mirror [`super::cloud::run_cloud`] and
+//! [`super::autonomous::run_edge`] event-for-event — same seeded RNG
+//! streams, same event ordering, same trace line grammar — so a
+//! single-shard pool reproduces the single-fabric simulations
+//! bit-for-bit (the golden-equivalence property in
+//! `tests/prop_pool.rs`).  Multi-shard pools add what a pool uniquely
+//! has: placement routing, the per-shard admission window with `BUSY`
+//! rejections, and cross-shard rescue defragmentation.
+
+use std::collections::BTreeMap;
+
+use crate::config::{
+    CloudWorkloadConfig, Config, EdgeWorkloadConfig, PlacementPolicyKind, RegionPolicyKind,
+    WorkloadConfig,
+};
+use crate::dpr::DprMode;
+use crate::error::{Error, Result};
+use crate::fabric::{FabricPool, ShardId};
+use crate::metrics::{FrameLatency, LatencyBreakdown, NtatRecord, NtatTracker, UtilizationTracker};
+use crate::regions::RegionId;
+use crate::tasks::{AppId, AppRequest, TaskLibrary};
+use crate::util::rng::Rng;
+
+use super::autonomous::{dpr_mode_for, EVENT_APPS};
+use super::cloud::tenant_app;
+use super::engine::{Cycle, EventQueue};
+use super::trace::Trace;
+
+/// Per-shard slice of a pool simulation's results.
+#[derive(Clone, Debug)]
+pub struct ShardSimStats {
+    /// Shard index.
+    pub shard: u32,
+    /// Task launches on this shard.
+    pub launches: u64,
+    /// Mean GLB busy fraction (final-state reading for idle pools).
+    pub glb_utilization: f64,
+    /// Mean array busy fraction.
+    pub array_utilization: f64,
+    /// Live migrations on this shard.
+    pub migrations: u64,
+    /// All-variants-NoFit events on this shard.
+    pub nofit_events: u64,
+}
+
+/// Result of one cloud-scenario pool run.
+#[derive(Clone, Debug)]
+pub struct PoolCloudReport {
+    /// Shards in the pool.
+    pub shards: u32,
+    /// Placement policy the run used.
+    pub placement: PlacementPolicyKind,
+    /// Region mechanism the shards used.
+    pub policy: RegionPolicyKind,
+    /// Arrival-window length in cycles.
+    pub duration_cycles: Cycle,
+    /// Cycle the last request completed.
+    pub makespan_cycles: Cycle,
+    /// NTAT per request/app (pool-wide).
+    pub ntat: NtatTracker,
+    /// Mean pool-wide GLB busy fraction.
+    pub glb_utilization: f64,
+    /// Mean pool-wide array busy fraction.
+    pub array_utilization: f64,
+    /// Total task launches.
+    pub launches: u64,
+    /// Requests submitted (admitted).
+    pub submitted: u64,
+    /// Requests completed (== submitted after drain).
+    pub completed: u64,
+    /// Arrivals rejected `BUSY` (every shard at `pool.admission_window`).
+    pub busy_rejections: u64,
+    /// Cross-shard rescue compactions the pool ran.
+    pub cross_shard_defrags: u64,
+    /// Live migrations across the pool.
+    pub migrations: u64,
+    /// Launches rescued by per-shard defragmentation.
+    pub rescued_launches: u64,
+    /// All-variants-NoFit events across the pool.
+    pub nofit_events: u64,
+    /// Per-shard breakdown.
+    pub per_shard: Vec<ShardSimStats>,
+}
+
+impl PoolCloudReport {
+    /// Mean NTAT across apps (same presentation as
+    /// [`super::cloud::CloudReport::mean_ntat_across_apps`]).
+    pub fn mean_ntat_across_apps(&self) -> f64 {
+        let m = self.ntat.mean_ntat();
+        if m.is_empty() {
+            return 0.0;
+        }
+        m.values().sum::<f64>() / m.len() as f64
+    }
+}
+
+/// Result of one autonomous-scenario pool run.
+#[derive(Clone, Debug)]
+pub struct PoolEdgeReport {
+    /// Shards in the pool.
+    pub shards: u32,
+    /// Placement policy the run used.
+    pub placement: PlacementPolicyKind,
+    /// Region mechanism the shards used.
+    pub policy: RegionPolicyKind,
+    /// DPR mode the shards used.
+    pub dpr_mode: DprMode,
+    /// Per-frame latency breakdown (pool-wide).
+    pub latency: LatencyBreakdown,
+    /// Frames simulated.
+    pub frames: u32,
+    /// Frames whose *every* arrival was `BUSY`-rejected: no task of the
+    /// frame ever ran, so it contributes no latency record —
+    /// `latency.len() == frames - rejected_frames`.
+    pub rejected_frames: u32,
+    /// Frames where *some* arrivals were rejected but at least one ran:
+    /// their latency records cover only the admitted subset, so under
+    /// overload the headline latency is measured over degraded frames —
+    /// this count makes that visible instead of silently flattering it.
+    pub partial_frames: u32,
+    /// Event-triggered requests.
+    pub event_requests: u64,
+    /// Arrivals rejected `BUSY`.
+    pub busy_rejections: u64,
+    /// Cross-shard rescue compactions.
+    pub cross_shard_defrags: u64,
+    /// Live migrations across the pool.
+    pub migrations: u64,
+    /// All-variants-NoFit events across the pool.
+    pub nofit_events: u64,
+    /// Per-shard breakdown.
+    pub per_shard: Vec<ShardSimStats>,
+}
+
+/// Events driving the cloud pool simulation.
+#[derive(Clone, Debug)]
+enum CloudEvent {
+    /// Tenant `t` submits a request.
+    Arrival(u32),
+    /// The task on a shard's region finished.
+    Completion(ShardId, RegionId),
+}
+
+/// Events driving the autonomous pool simulation.
+#[derive(Clone, Debug)]
+enum EdgeEvent {
+    /// Start of frame `k`.
+    Frame(u32),
+    /// Task completion on a shard's region.
+    Completion(ShardId, RegionId),
+}
+
+/// `shard=<i> ` prefix for trace lines — multi-shard pools only, so a
+/// single-shard pool's trace is byte-identical to the single-fabric
+/// simulator's.
+fn shard_tag(pool: &FabricPool, shard: ShardId) -> String {
+    if pool.shard_count() > 1 {
+        format!("shard={} ", shard.0)
+    } else {
+        String::new()
+    }
+}
+
+/// Collect per-shard stats at the end of a run.
+fn per_shard_stats(pool: &FabricPool) -> Vec<ShardSimStats> {
+    pool.snapshots()
+        .into_iter()
+        .map(|s| {
+            let shard = ShardId(s.shard);
+            let mig = pool
+                .scheduler(shard)
+                .map(|sch| sch.migration_stats())
+                .unwrap_or_default();
+            ShardSimStats {
+                shard: s.shard,
+                launches: s.launches,
+                glb_utilization: s.glb_utilization,
+                array_utilization: s.array_utilization,
+                migrations: mig.tasks_migrated,
+                nofit_events: mig.nofit_events,
+            }
+        })
+        .collect()
+}
+
+/// Run the cloud scenario over a fabric pool configured by `cfg.pool`.
+pub fn run_cloud_pool(cfg: &Config) -> Result<PoolCloudReport> {
+    run_cloud_pool_traced(cfg, TaskLibrary::table1(), &mut Trace::disabled())
+}
+
+/// [`run_cloud_pool`] with an explicit library and trace sink.
+pub fn run_cloud_pool_traced(
+    cfg: &Config,
+    lib: TaskLibrary,
+    trace: &mut Trace,
+) -> Result<PoolCloudReport> {
+    let wl: &CloudWorkloadConfig = match &cfg.workload {
+        WorkloadConfig::Cloud(c) => c,
+        WorkloadConfig::Edge(_) => {
+            return Err(Error::Config("run_cloud_pool requires a cloud workload".into()))
+        }
+    };
+    let mut pool = FabricPool::new(cfg, lib.clone(), DprMode::Fast)?;
+    pool.preload_all();
+
+    let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
+    let duration: Cycle = (wl.duration_ms * cycles_per_ms as f64) as u64;
+
+    let mut rng = Rng::new(wl.seed);
+    let mut tenant_rngs: Vec<Rng> = (0..4).map(|t| rng.fork(t as u64 + 1)).collect();
+
+    let mut events: EventQueue<CloudEvent> = EventQueue::new();
+    for t in 0..4u32 {
+        let dt_ms = tenant_rngs[t as usize].exponential(1.0 / wl.mean_interarrival_ms[t as usize]);
+        events.push((dt_ms * cycles_per_ms as f64) as u64, CloudEvent::Arrival(t));
+    }
+
+    let mut seq = 0u64;
+    let mut submitted = 0u64;
+    let mut completed = 0u64;
+    let mut launches = 0u64;
+
+    // per-request accounting: seq → (app, arrival, serviced cycles)
+    let mut inflight: BTreeMap<u64, (AppId, Cycle, u64)> = BTreeMap::new();
+
+    let mut ntat = NtatTracker::new();
+    let (total_glb, total_arr) = pool.total_slices();
+    let mut glb_util = UtilizationTracker::new(total_glb);
+    let mut arr_util = UtilizationTracker::new(total_arr);
+
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            CloudEvent::Arrival(t) => {
+                let app = tenant_app(t);
+                match pool.try_submit(AppRequest::new(seq, t, app, now), now) {
+                    Some(shard) => {
+                        inflight.insert(seq, (app, now, 0));
+                        submitted += 1;
+                        trace.log(
+                            now,
+                            format!(
+                                "{}arrive seq={seq} tenant={t} app={}",
+                                shard_tag(&pool, shard),
+                                app.name()
+                            ),
+                        );
+                    }
+                    None => {
+                        trace.log(now, format!("busy seq={seq} tenant={t}"));
+                    }
+                }
+                seq += 1;
+                let dt_ms =
+                    tenant_rngs[t as usize].exponential(1.0 / wl.mean_interarrival_ms[t as usize]);
+                let next = now + (dt_ms * cycles_per_ms as f64) as u64;
+                if next < duration {
+                    events.push(next, CloudEvent::Arrival(t));
+                }
+            }
+            CloudEvent::Completion(shard, region) => {
+                // migrations push completions out; re-queue stale events
+                if let Some(finish) = pool.finish_of(shard, region) {
+                    if finish > now {
+                        events.push(finish, CloudEvent::Completion(shard, region));
+                        continue;
+                    }
+                }
+                if let Some(done) = pool.complete(shard, region, now)? {
+                    let (app, arrival, exec) = inflight.remove(&done.seq).ok_or_else(|| {
+                        Error::SimInvariant(format!("request {} not inflight", done.seq))
+                    })?;
+                    completed += 1;
+                    trace.log(now, format!("done seq={} tenant={}", done.seq, done.tenant));
+                    ntat.record(NtatRecord {
+                        app,
+                        arrival,
+                        completion: now,
+                        exec_cycles: exec.max(1),
+                    });
+                }
+            }
+        }
+        for (shard, launch) in pool.schedule(now) {
+            launches += 1;
+            if let Some(entry) = inflight.get_mut(&launch.instance.request) {
+                entry.2 += launch.dpr_cycles + launch.exec_cycles;
+            }
+            trace.log(
+                now,
+                format!(
+                    "{}launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
+                    shard_tag(&pool, shard),
+                    launch.instance,
+                    launch.task,
+                    launch.ver,
+                    launch.region,
+                    launch.dpr_cycles,
+                    launch.exec_cycles,
+                    launch.finish
+                ),
+            );
+            events.push(launch.finish, CloudEvent::Completion(shard, launch.region));
+        }
+        let (busy_glb, busy_arr) = pool.busy_slices();
+        glb_util.sample(now, busy_glb);
+        arr_util.sample(now, busy_arr);
+    }
+
+    if pool.queue_open_requests() != 0 {
+        return Err(Error::SimInvariant(format!(
+            "{} requests never completed (deadlock?)",
+            pool.queue_open_requests()
+        )));
+    }
+
+    let mig = pool.migration_stats();
+    let stats = pool.stats();
+    Ok(PoolCloudReport {
+        shards: pool.shard_count() as u32,
+        placement: cfg.pool.placement,
+        policy: cfg.scheduler.region_policy,
+        duration_cycles: duration,
+        makespan_cycles: glb_util.horizon(),
+        ntat,
+        glb_utilization: glb_util.mean(),
+        array_utilization: arr_util.mean(),
+        launches,
+        submitted,
+        completed,
+        busy_rejections: stats.busy_rejections,
+        cross_shard_defrags: stats.cross_shard_defrags,
+        migrations: mig.tasks_migrated,
+        rescued_launches: mig.rescued_launches,
+        nofit_events: mig.nofit_events,
+        per_shard: per_shard_stats(&pool),
+    })
+}
+
+/// Run the autonomous scenario over a fabric pool configured by
+/// `cfg.pool`.
+pub fn run_edge_pool(cfg: &Config) -> Result<PoolEdgeReport> {
+    run_edge_pool_traced(cfg, TaskLibrary::table1(), &mut Trace::disabled())
+}
+
+/// [`run_edge_pool`] with an explicit library and trace sink.
+pub fn run_edge_pool_traced(
+    cfg: &Config,
+    lib: TaskLibrary,
+    trace: &mut Trace,
+) -> Result<PoolEdgeReport> {
+    let wl: &EdgeWorkloadConfig = match &cfg.workload {
+        WorkloadConfig::Edge(e) => e,
+        WorkloadConfig::Cloud(_) => {
+            return Err(Error::Config("run_edge_pool requires an edge workload".into()))
+        }
+    };
+    let mode = dpr_mode_for(cfg.scheduler.region_policy);
+    let mut pool = FabricPool::new(cfg, lib, mode)?;
+    if mode == DprMode::Fast {
+        pool.preload_all();
+    }
+
+    let frame_cycles = (cfg.arch.core_clock_mhz as f64 * 1e6 / wl.fps) as u64;
+    let mut rng = Rng::new(wl.seed);
+    let (lo, hi) = wl.event_period_frames;
+    let mut next_trigger: Vec<u32> = EVENT_APPS
+        .iter()
+        .map(|_| rng.range_inclusive(lo as u64, hi as u64) as u32)
+        .collect();
+
+    let mut events: EventQueue<EdgeEvent> = EventQueue::new();
+    events.push(0, EdgeEvent::Frame(0));
+
+    let mut seq = 0u64;
+    let mut event_requests = 0u64;
+    let mut rejected_frames = 0u32;
+    let mut partial_frames = 0u32;
+
+    // request seq → owning frame
+    let mut frame_of: BTreeMap<u64, u32> = BTreeMap::new();
+    // frame → (start cycle, open request count, reconfig cycles, last completion)
+    let mut frames: BTreeMap<u32, (Cycle, u32, u64, Cycle)> = BTreeMap::new();
+
+    let mut latency = LatencyBreakdown::new();
+
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            EdgeEvent::Frame(k) => {
+                frames.entry(k).or_insert((now, 0, 0, now));
+                trace.log(now, format!("frame k={k}"));
+                // camera pipeline runs every frame, then the event streams
+                let mut arrivals: Vec<(u32, AppId)> = vec![(2, AppId::Camera)];
+                for (i, app) in EVENT_APPS.iter().enumerate() {
+                    if next_trigger[i] == k {
+                        arrivals.push((i as u32, *app));
+                        event_requests += 1;
+                        let step = rng.range_inclusive(lo as u64, hi as u64) as u32;
+                        next_trigger[i] = k + step;
+                    }
+                }
+                let mut rejected_in_frame = 0u32;
+                for (tenant, app) in arrivals {
+                    match pool.try_submit(AppRequest::new(seq, tenant, app, now), now) {
+                        Some(shard) => {
+                            frame_of.insert(seq, k);
+                            frames.get_mut(&k).expect("inserted").1 += 1;
+                            trace.log(
+                                now,
+                                format!(
+                                    "{}arrive seq={seq} frame={k} app={}",
+                                    shard_tag(&pool, shard),
+                                    app.name()
+                                ),
+                            );
+                        }
+                        None => {
+                            rejected_in_frame += 1;
+                            trace.log(now, format!("busy seq={seq} frame={k}"));
+                        }
+                    }
+                    seq += 1;
+                }
+                if rejected_in_frame > 0 {
+                    if frames.get(&k).map(|e| e.1) == Some(0) {
+                        // every arrival rejected: the entry would never
+                        // see a completion — drop it now (instead of
+                        // leaking it) and account the frame
+                        frames.remove(&k);
+                        rejected_frames += 1;
+                        trace.log(now, format!("frame-rejected k={k}"));
+                    } else {
+                        // some tasks run: the frame completes, but its
+                        // latency covers a degraded subset
+                        partial_frames += 1;
+                    }
+                }
+                if k + 1 < wl.frames {
+                    events.push(now + frame_cycles, EdgeEvent::Frame(k + 1));
+                }
+            }
+            EdgeEvent::Completion(shard, region) => {
+                if let Some(finish) = pool.finish_of(shard, region) {
+                    if finish > now {
+                        events.push(finish, EdgeEvent::Completion(shard, region));
+                        continue;
+                    }
+                }
+                if let Some(done) = pool.complete(shard, region, now)? {
+                    let k = frame_of.remove(&done.seq).ok_or_else(|| {
+                        Error::SimInvariant(format!("request {} has no frame", done.seq))
+                    })?;
+                    let entry = frames.get_mut(&k).expect("frame exists");
+                    entry.1 -= 1;
+                    entry.3 = entry.3.max(now);
+                    if entry.1 == 0 {
+                        let (start, _, reconfig, last) = *entry;
+                        frames.remove(&k);
+                        let total = last - start;
+                        trace.log(
+                            now,
+                            format!("frame-done k={k} total={total} reconfig={reconfig}"),
+                        );
+                        latency.record(FrameLatency {
+                            reconfig_cycles: reconfig.min(total),
+                            wait_exec_cycles: total.saturating_sub(reconfig),
+                        });
+                    }
+                }
+            }
+        }
+        for (shard, launch) in pool.schedule(now) {
+            if let Some(&k) = frame_of.get(&launch.instance.request) {
+                if let Some(entry) = frames.get_mut(&k) {
+                    entry.2 += launch.dpr_cycles;
+                }
+            }
+            trace.log(
+                now,
+                format!(
+                    "{}launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
+                    shard_tag(&pool, shard),
+                    launch.instance,
+                    launch.task,
+                    launch.ver,
+                    launch.region,
+                    launch.dpr_cycles,
+                    launch.exec_cycles,
+                    launch.finish
+                ),
+            );
+            events.push(launch.finish, EdgeEvent::Completion(shard, launch.region));
+        }
+    }
+
+    if pool.queue_open_requests() != 0 {
+        return Err(Error::SimInvariant(format!(
+            "{} requests never completed",
+            pool.queue_open_requests()
+        )));
+    }
+
+    let mig = pool.migration_stats();
+    let stats = pool.stats();
+    Ok(PoolEdgeReport {
+        shards: pool.shard_count() as u32,
+        placement: cfg.pool.placement,
+        policy: cfg.scheduler.region_policy,
+        dpr_mode: mode,
+        latency,
+        frames: wl.frames,
+        rejected_frames,
+        partial_frames,
+        event_requests,
+        busy_rejections: stats.busy_rejections,
+        cross_shard_defrags: stats.cross_shard_defrags,
+        migrations: mig.tasks_migrated,
+        nofit_events: mig.nofit_events,
+        per_shard: per_shard_stats(&pool),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::sim::{run_cloud_traced, run_edge_traced};
+
+    fn cloud_cfg(shards: u32) -> Config {
+        let mut cfg = presets::pool_scenario(shards, PlacementPolicyKind::LeastLoaded);
+        if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.duration_ms = 400.0;
+            c.seed = 17;
+        }
+        cfg
+    }
+
+    fn render(trace: &Trace) -> String {
+        let mut out = String::new();
+        for e in trace.events() {
+            out.push_str(&format!("{} {}\n", e.at, e.what));
+        }
+        out
+    }
+
+    #[test]
+    fn single_shard_pool_matches_single_fabric_trace_and_report() {
+        let cfg = cloud_cfg(1);
+        let mut t_single = Trace::new(1 << 20);
+        let single = run_cloud_traced(&cfg, TaskLibrary::table1(), &mut t_single).unwrap();
+        let mut t_pool = Trace::new(1 << 20);
+        let pooled = run_cloud_pool_traced(&cfg, TaskLibrary::table1(), &mut t_pool).unwrap();
+        assert_eq!(render(&t_single), render(&t_pool), "traces must be byte-identical");
+        assert_eq!(single.submitted, pooled.submitted);
+        assert_eq!(single.completed, pooled.completed);
+        assert_eq!(single.launches, pooled.launches);
+        assert_eq!(single.makespan_cycles, pooled.makespan_cycles);
+        assert!((single.mean_ntat_across_apps() - pooled.mean_ntat_across_apps()).abs() < 1e-12);
+        assert_eq!(pooled.busy_rejections, 0);
+        assert_eq!(pooled.cross_shard_defrags, 0);
+    }
+
+    #[test]
+    fn two_shards_complete_the_same_offered_load_faster() {
+        let one = run_cloud_pool(&cloud_cfg(1)).unwrap();
+        let two = run_cloud_pool(&cloud_cfg(2)).unwrap();
+        assert_eq!(one.submitted, two.submitted, "arrivals are seed-identical");
+        assert_eq!(two.submitted, two.completed);
+        assert!(
+            two.mean_ntat_across_apps() <= one.mean_ntat_across_apps(),
+            "2 shards {} vs 1 shard {}",
+            two.mean_ntat_across_apps(),
+            one.mean_ntat_across_apps()
+        );
+        assert_eq!(two.per_shard.len(), 2);
+        assert!(two.per_shard.iter().all(|s| s.launches > 0), "both shards must serve");
+    }
+
+    #[test]
+    fn admission_window_produces_busy_rejections_under_overload() {
+        let mut cfg = cloud_cfg(1);
+        cfg.pool.admission_window = 1;
+        if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.mean_interarrival_ms = [4.0, 4.0, 4.0, 4.0];
+        }
+        let r = run_cloud_pool(&cfg).unwrap();
+        assert!(r.busy_rejections > 0, "overload must trip the window");
+        assert_eq!(r.submitted, r.completed, "admitted requests still drain");
+    }
+
+    #[test]
+    fn edge_pool_single_shard_matches_single_fabric() {
+        let mut cfg = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+        if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+            e.frames = 90;
+            e.seed = 23;
+        }
+        let mut t_single = Trace::new(1 << 20);
+        let single = run_edge_traced(&cfg, TaskLibrary::table1(), &mut t_single).unwrap();
+        let mut t_pool = Trace::new(1 << 20);
+        let pooled = run_edge_pool_traced(&cfg, TaskLibrary::table1(), &mut t_pool).unwrap();
+        assert_eq!(render(&t_single), render(&t_pool));
+        assert_eq!(single.event_requests, pooled.event_requests);
+        assert_eq!(single.latency.mean_total(), pooled.latency.mean_total());
+        assert_eq!(single.frames, pooled.frames);
+    }
+
+    #[test]
+    fn edge_pool_two_shards_runs_to_completion() {
+        let mut cfg = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.pool.shards = 2;
+        if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+            e.frames = 90;
+            e.seed = 23;
+        }
+        let r = run_edge_pool(&cfg).unwrap();
+        assert_eq!(r.latency.len() as u32, r.frames);
+        assert_eq!(r.shards, 2);
+        assert_eq!(r.busy_rejections, 0);
+        assert_eq!(r.rejected_frames, 0);
+        assert_eq!(r.partial_frames, 0);
+    }
+
+    /// Frames arriving faster than tasks complete, under a 1-request
+    /// window: fully rejected frames are dropped from the latency set
+    /// and accounted, never leaked as forever-open entries.
+    #[test]
+    fn edge_pool_window_accounts_fully_rejected_frames() {
+        let mut cfg = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.pool.admission_window = 1;
+        if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+            // 10 kHz frames (50 k cycles apart) vs ~10^5-cycle camera
+            // tasks: the single admission slot stays busy across frames
+            e.fps = 10_000.0;
+            e.frames = 60;
+            e.seed = 23;
+        }
+        let r = run_edge_pool(&cfg).unwrap();
+        assert!(r.busy_rejections > 0, "overload must trip the window");
+        assert!(r.rejected_frames > 0, "some frames must be fully rejected");
+        assert_eq!(
+            r.latency.len() as u32 + r.rejected_frames,
+            r.frames,
+            "every frame is either measured or accounted as rejected"
+        );
+        assert!(
+            r.partial_frames <= r.latency.len() as u32,
+            "degraded frames are a subset of the measured ones"
+        );
+    }
+
+    #[test]
+    fn wrong_workload_kind_rejected() {
+        let cloud = cloud_cfg(1);
+        assert!(run_edge_pool(&cloud).is_err());
+        let edge = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+        assert!(run_cloud_pool(&edge).is_err());
+    }
+}

@@ -37,6 +37,33 @@ impl WireClient {
         Ok(reply.trim_end().to_string())
     }
 
+    /// `STATS SHARDS`: reads the `STATS shards=<n>` header plus the `n`
+    /// per-shard lines that follow (the one multi-line reply in the
+    /// protocol), returning the per-shard lines.
+    pub fn stats_shards(&mut self) -> Result<Vec<String>> {
+        let header = self.send("STATS SHARDS")?;
+        let n: usize = header
+            .strip_prefix("STATS shards=")
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| Error::Runtime(format!("bad STATS SHARDS header: {header}")))?;
+        let mut lines = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut line = String::new();
+            let read = self
+                .reader
+                .read_line(&mut line)
+                .map_err(|e| Error::io("read", e))?;
+            if read == 0 {
+                return Err(Error::Runtime(format!(
+                    "connection closed mid-reply: got {} of {n} shard lines",
+                    lines.len()
+                )));
+            }
+            lines.push(line.trim_end().to_string());
+        }
+        Ok(lines)
+    }
+
     /// SUBMIT with retry on `BUSY` backpressure; returns the final
     /// (non-BUSY) reply and how many BUSY retries it took.
     pub fn submit(&mut self, tenant: u32, app: &str) -> Result<(String, u32)> {

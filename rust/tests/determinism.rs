@@ -1,0 +1,106 @@
+//! Determinism regression: every simulator is a pure function of its
+//! config + seed.  Each scenario (standard and churn presets, single
+//! fabric and pool) runs twice with the same seed and must produce a
+//! byte-identical event trace and a byte-identical report rendering —
+//! the seeded-RNG contract the pool refactor must not disturb.
+
+use cgra_mte::config::{
+    presets, Config, DefragPolicyKind, PlacementPolicyKind, RegionPolicyKind, WorkloadConfig,
+};
+use cgra_mte::sim::{
+    run_cloud_pool_traced, run_cloud_traced, run_edge_pool_traced, run_edge_traced, Trace,
+};
+use cgra_mte::tasks::TaskLibrary;
+
+fn render(trace: &Trace) -> String {
+    trace.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+}
+
+/// Run `f` twice; both (trace, report-debug) pairs must match exactly.
+fn assert_twice_identical<F>(what: &str, f: F)
+where
+    F: Fn(&mut Trace) -> String,
+{
+    let mut t1 = Trace::new(1 << 20);
+    let r1 = f(&mut t1);
+    let mut t2 = Trace::new(1 << 20);
+    let r2 = f(&mut t2);
+    assert_eq!(render(&t1), render(&t2), "{what}: event traces diverged");
+    assert_eq!(r1, r2, "{what}: reports diverged");
+    assert!(t1.events().next().is_some(), "{what}: trace must not be empty");
+}
+
+fn short_cloud(cfg: &mut Config, duration_ms: f64) {
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+    }
+}
+
+fn short_edge(cfg: &mut Config, frames: u32) {
+    if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+        e.frames = frames;
+    }
+}
+
+#[test]
+fn cloud_sim_trace_and_report_are_deterministic() {
+    let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+    short_cloud(&mut cfg, 500.0);
+    assert_twice_identical("cloud/standard", |t| {
+        format!("{:?}", run_cloud_traced(&cfg, TaskLibrary::table1(), t).unwrap())
+    });
+}
+
+#[test]
+fn cloud_churn_trace_and_report_are_deterministic() {
+    // churn preset from PR 2: past-saturation load + cost-aware defrag —
+    // the migration machinery must stay inside the seeded contract too
+    let mut cfg =
+        presets::churn_scenario(RegionPolicyKind::FlexibleShape, DefragPolicyKind::CostAware);
+    short_cloud(&mut cfg, 1_000.0);
+    assert_twice_identical("cloud/churn", |t| {
+        format!("{:?}", run_cloud_traced(&cfg, TaskLibrary::table1(), t).unwrap())
+    });
+}
+
+#[test]
+fn edge_sim_trace_and_report_are_deterministic() {
+    let mut cfg = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+    short_edge(&mut cfg, 150);
+    assert_twice_identical("edge/standard", |t| {
+        format!("{:?}", run_edge_traced(&cfg, TaskLibrary::table1(), t).unwrap())
+    });
+}
+
+#[test]
+fn edge_churn_trace_and_report_are_deterministic() {
+    let mut cfg = presets::edge_churn_scenario(
+        RegionPolicyKind::FlexibleShape,
+        DefragPolicyKind::Greedy,
+    );
+    short_edge(&mut cfg, 150);
+    assert_twice_identical("edge/churn", |t| {
+        format!("{:?}", run_edge_traced(&cfg, TaskLibrary::table1(), t).unwrap())
+    });
+}
+
+#[test]
+fn cloud_pool_trace_and_report_are_deterministic() {
+    for placement in PlacementPolicyKind::ALL {
+        let mut cfg = presets::pool_scenario(2, placement);
+        short_cloud(&mut cfg, 400.0);
+        assert_twice_identical("cloud/pool-2", |t| {
+            format!("{:?}", run_cloud_pool_traced(&cfg, TaskLibrary::table1(), t).unwrap())
+        });
+    }
+}
+
+#[test]
+fn edge_pool_trace_and_report_are_deterministic() {
+    let mut cfg = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+    cfg.pool.shards = 2;
+    short_edge(&mut cfg, 120);
+    assert_twice_identical("edge/pool-2", |t| {
+        format!("{:?}", run_edge_pool_traced(&cfg, TaskLibrary::table1(), t).unwrap())
+    });
+}

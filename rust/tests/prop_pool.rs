@@ -1,0 +1,293 @@
+//! Property tests on the fabric pool: under random submit / schedule /
+//! complete / defrag sequences across shards, no task instance is ever
+//! placed twice, per-shard busy-slice conservation holds (the sum of
+//! live region footprints equals the occupancy maps), placement
+//! accounting agrees with the shard queues — and a single-shard pool
+//! is operation-for-operation identical to the bare single-fabric
+//! scheduler (the golden-equivalence property that keeps
+//! `pool.shards = 1` bit-for-bit compatible).
+
+use std::collections::BTreeSet;
+
+use cgra_mte::config::{presets, DefragPolicyKind, PlacementPolicyKind, SchedulerPolicyKind};
+use cgra_mte::dpr::DprMode;
+use cgra_mte::fabric::{FabricPool, ShardId};
+use cgra_mte::scheduler::{RequestQueue, Scheduler};
+use cgra_mte::sim::{run_cloud_pool_traced, run_cloud_traced, Trace};
+use cgra_mte::tasks::{AppId, AppRequest, TaskLibrary};
+use cgra_mte::testutil::{forall_cfg, PropConfig};
+use cgra_mte::util::rng::Rng;
+
+/// One pool operation.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    /// Submit app `ALL[app % 4]` for tenant `tenant % 4`.
+    Submit(u32, u32),
+    /// One scheduling step across every shard.
+    Step,
+    /// Complete a random outstanding launch.
+    Complete,
+    /// Force a compaction pass on shard `s % shard_count`.
+    Defrag(u32),
+}
+
+fn op_seq(rng: &mut Rng, size: u32) -> Vec<Op> {
+    let len = 8 + rng.below(size as u64 * 2 + 1) as usize;
+    (0..len)
+        .map(|_| match rng.below(10) {
+            0..=3 => Op::Submit(rng.below(4) as u32, rng.below(4) as u32),
+            4..=6 => Op::Step,
+            7..=8 => Op::Complete,
+            _ => Op::Defrag(rng.below(4) as u32),
+        })
+        .collect()
+}
+
+/// Per-shard busy-slice conservation + placement-accounting coherence.
+fn pool_invariants_hold(pool: &FabricPool) -> bool {
+    for i in 0..pool.shard_count() {
+        let mgr = pool.scheduler(ShardId(i as u32)).expect("shard exists").regions();
+        let (mut g, mut a) = (0u32, 0u32);
+        for r in mgr.active() {
+            g += r.glb_slices();
+            a += r.array_slices();
+        }
+        if mgr.glb_map().busy_count() != g || mgr.array_map().busy_count() != a {
+            return false;
+        }
+    }
+    pool.open_requests() == pool.queue_open_requests() as u64
+}
+
+/// Random op sequences over a multi-shard pool: no double placement,
+/// conservation, coherent accounting, and a clean teardown.
+#[test]
+fn pool_invariants_under_random_ops() {
+    let cfg = PropConfig { cases: 40, seed: 0x5AAD_F00D, max_size: 24 };
+    forall_cfg(cfg, &op_seq, |ops| {
+        let mut pool_cfg = presets::pool_scenario(3, PlacementPolicyKind::LeastLoaded);
+        pool_cfg.scheduler.policy = SchedulerPolicyKind::FcfsFirstFit;
+        pool_cfg.scheduler.defrag_policy = DefragPolicyKind::Greedy;
+        pool_cfg.scheduler.defrag_threshold = 0.1;
+        let mut pool = FabricPool::new(&pool_cfg, TaskLibrary::table1(), DprMode::Fast)
+            .expect("pool builds");
+        pool.preload_all();
+
+        let mut rng = Rng::new(ops.len() as u64 + 7);
+        let mut now = 0u64;
+        let mut seq = 0u64;
+        // every (request, node) instance ever launched, pool-wide
+        let mut launched = BTreeSet::new();
+        // outstanding launches: (shard, region)
+        let mut outstanding: Vec<(ShardId, cgra_mte::regions::RegionId)> = Vec::new();
+
+        for op in ops {
+            now += 1_000;
+            match *op {
+                Op::Submit(tenant, app) => {
+                    let req =
+                        AppRequest::new(seq, tenant % 4, AppId::ALL[app as usize % 4], now);
+                    if pool.try_submit(req, now).is_none() {
+                        return false; // no window configured: must admit
+                    }
+                    seq += 1;
+                }
+                Op::Step => {
+                    for (shard, launch) in pool.schedule(now) {
+                        // a task instance must never be placed twice,
+                        // on any shard
+                        if !launched.insert(launch.instance) {
+                            return false;
+                        }
+                        outstanding.push((shard, launch.region));
+                    }
+                }
+                Op::Complete => {
+                    if !outstanding.is_empty() {
+                        let idx = rng.below(outstanding.len() as u64) as usize;
+                        let (shard, region) = outstanding.swap_remove(idx);
+                        if pool.complete(shard, region, now).is_err() {
+                            return false;
+                        }
+                    }
+                }
+                Op::Defrag(s) => {
+                    let shard = ShardId(s % pool.shard_count() as u32);
+                    if pool.defrag_shard(shard, now).is_err() {
+                        return false;
+                    }
+                }
+            }
+            if !pool_invariants_hold(&pool) {
+                return false;
+            }
+        }
+
+        // teardown: run everything outstanding and queued to completion
+        let mut guard = 0;
+        loop {
+            for (shard, launch) in pool.schedule(now) {
+                if !launched.insert(launch.instance) {
+                    return false;
+                }
+                outstanding.push((shard, launch.region));
+            }
+            if outstanding.is_empty() {
+                break;
+            }
+            now += 1_000;
+            let (shard, region) = outstanding.remove(0);
+            if pool.complete(shard, region, now).is_err() || !pool_invariants_hold(&pool) {
+                return false;
+            }
+            guard += 1;
+            if guard > 10_000 {
+                return false; // livelock
+            }
+        }
+        pool.open_requests() == 0 && pool.ready_count() == 0
+    });
+}
+
+/// Golden equivalence, operation level: a single-shard pool must make
+/// exactly the moves the bare scheduler makes — same launches (field
+/// for field), same completion outcomes, same defrag reports, same
+/// occupancy — for any op sequence.
+#[test]
+fn single_shard_pool_equals_bare_scheduler() {
+    let cfg = PropConfig { cases: 32, seed: 0x0601_DE9, max_size: 20 };
+    forall_cfg(cfg, &op_seq, |ops| {
+        let mut c = presets::pool_scenario(1, PlacementPolicyKind::LeastLoaded);
+        c.scheduler.policy = SchedulerPolicyKind::FcfsFirstFit;
+        c.scheduler.defrag_policy = DefragPolicyKind::Greedy;
+        c.scheduler.defrag_threshold = 0.1;
+
+        let mut pool =
+            FabricPool::new(&c, TaskLibrary::table1(), DprMode::Fast).expect("pool builds");
+        pool.preload_all();
+        let mut bare = Scheduler::new(&c, TaskLibrary::table1(), DprMode::Fast);
+        bare.preload_all();
+        let mut bare_queue = RequestQueue::new();
+
+        let mut rng = Rng::new(ops.len() as u64 + 7);
+        let mut now = 0u64;
+        let mut seq = 0u64;
+        // parallel outstanding lists (same order on both sides)
+        let mut pool_out: Vec<(ShardId, cgra_mte::regions::RegionId)> = Vec::new();
+        let mut bare_out: Vec<cgra_mte::regions::RegionId> = Vec::new();
+
+        for op in ops {
+            now += 1_000;
+            match *op {
+                Op::Submit(tenant, app) => {
+                    let a = AppId::ALL[app as usize % 4];
+                    if pool.try_submit(AppRequest::new(seq, tenant % 4, a, now), now).is_none() {
+                        return false;
+                    }
+                    bare_queue.submit(AppRequest::new(seq, tenant % 4, a, now));
+                    seq += 1;
+                }
+                Op::Step => {
+                    let pl = pool.schedule(now);
+                    let bl = bare.schedule(&mut bare_queue, now);
+                    if pl.len() != bl.len() {
+                        return false;
+                    }
+                    for ((shard, p), b) in pl.iter().zip(&bl) {
+                        // Launch has no PartialEq; the Debug rendering
+                        // covers every field
+                        if *shard != ShardId(0) || format!("{p:?}") != format!("{b:?}") {
+                            return false;
+                        }
+                        pool_out.push((*shard, p.region));
+                        bare_out.push(b.region);
+                    }
+                }
+                Op::Complete => {
+                    if !pool_out.is_empty() {
+                        let idx = rng.below(pool_out.len() as u64) as usize;
+                        let (shard, region) = pool_out.swap_remove(idx);
+                        let b_region = bare_out.swap_remove(idx);
+                        if region != b_region {
+                            return false;
+                        }
+                        let p_done = match pool.complete(shard, region, now) {
+                            Ok(d) => d.map(|r| r.seq),
+                            Err(_) => return false,
+                        };
+                        let b_inst = match bare.complete(b_region) {
+                            Ok(i) => i,
+                            Err(_) => return false,
+                        };
+                        let b_done = match bare_queue.mark_complete(b_inst, now) {
+                            Ok(d) => d.map(|r| r.seq),
+                            Err(_) => return false,
+                        };
+                        if p_done != b_done {
+                            return false;
+                        }
+                    }
+                }
+                Op::Defrag(_) => {
+                    let p_report = match pool.defrag_shard(ShardId(0), now) {
+                        Ok(r) => r,
+                        Err(_) => return false,
+                    };
+                    let b_report = bare.defrag_now(now);
+                    if p_report != b_report {
+                        return false;
+                    }
+                }
+            }
+            // occupancy must agree exactly after every operation
+            let mgr = pool.scheduler(ShardId(0)).expect("shard 0").regions();
+            let bmgr = bare.regions();
+            if mgr.render() != bmgr.render()
+                || pool.ready_count() != bare_queue.ready_count()
+                || pool.queue_open_requests() != bare_queue.open_requests()
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Golden equivalence, simulation level: `pool.shards = 1` reproduces
+/// the single-fabric cloud simulator's event trace byte-for-byte over
+/// random seeds (churn knobs included).
+#[test]
+fn single_shard_pool_sim_trace_matches_across_seeds() {
+    for (i, &seed) in [3u64, 11, 42, 0xC6_5A].iter().enumerate() {
+        let mut cfg = if i % 2 == 0 {
+            presets::pool_scenario(1, PlacementPolicyKind::LeastLoaded)
+        } else {
+            // churn preset: defrag + past-saturation load, pool added on
+            let mut c = presets::churn_scenario(
+                cgra_mte::config::RegionPolicyKind::FlexibleShape,
+                DefragPolicyKind::CostAware,
+            );
+            c.pool = presets::pool_scenario(1, PlacementPolicyKind::LeastLoaded).pool;
+            c
+        };
+        if let cgra_mte::config::WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.seed = seed;
+            c.duration_ms = 250.0;
+        }
+        let mut t_single = Trace::new(1 << 20);
+        let single =
+            run_cloud_traced(&cfg, TaskLibrary::table1(), &mut t_single).expect("single runs");
+        let mut t_pool = Trace::new(1 << 20);
+        let pooled =
+            run_cloud_pool_traced(&cfg, TaskLibrary::table1(), &mut t_pool).expect("pool runs");
+
+        let render = |t: &Trace| -> String {
+            t.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+        };
+        assert_eq!(render(&t_single), render(&t_pool), "seed {seed}: trace diverged");
+        assert_eq!(single.submitted, pooled.submitted, "seed {seed}");
+        assert_eq!(single.completed, pooled.completed, "seed {seed}");
+        assert_eq!(single.launches, pooled.launches, "seed {seed}");
+        assert_eq!(single.makespan_cycles, pooled.makespan_cycles, "seed {seed}");
+    }
+}

@@ -169,6 +169,95 @@ fn busy_backpressure_over_the_wire() {
     server.shutdown();
 }
 
+/// N clients against a 2-shard pool: per-shard completion streams merge
+/// back into one Router sequence — every SUBMIT gets an `OK` (a merge
+/// that handed a completion to the wrong shard's router would surface
+/// as `Router::complete` rejecting an unknown seq, failing the batch
+/// into `ERR` replies and a nonzero `failed` counter), seqs stay
+/// globally unique across shards, and the per-tenant counters sum
+/// across shards to the pool-wide totals.
+#[test]
+fn two_shard_pool_merges_completions_and_sums_tenant_counters() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    const PER_CONN: u32 = 6;
+    let mut cfg = stub_config();
+    cfg.pool.shards = 2;
+    cfg.server.workers = 4;
+    cfg.server.batch_max = 2;
+    let server = Server::start(&cfg, "127.0.0.1:0").unwrap();
+    let addr = server.addr;
+
+    let threads: Vec<_> = (0..4u32)
+        .map(|tenant| {
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(addr).expect("connect");
+                let seqs: Vec<u64> = (0..PER_CONN)
+                    .map(|_| {
+                        let reply = submit_ok(&mut client, tenant, APPS[tenant as usize]);
+                        let seq_field = reply
+                            .split_whitespace()
+                            .find(|f| f.starts_with("seq="))
+                            .expect("seq field");
+                        seq_field["seq=".len()..].parse().expect("seq number")
+                    })
+                    .collect();
+                client.send("QUIT").expect("quit");
+                seqs
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = threads
+        .into_iter()
+        .flat_map(|t| t.join().expect("client thread"))
+        .collect();
+    all.sort_unstable();
+    let before = all.len();
+    all.dedup();
+    assert_eq!(all.len(), before, "duplicate seqs across shard leaders");
+    assert_eq!(all.len(), 24);
+
+    let mut client = WireClient::connect(addr).expect("connect");
+    // pool-wide totals: nothing lost, nothing failed, and the aggregate
+    // line knows its shard count
+    let stats = client.send("STATS").expect("stats");
+    assert!(stats.contains("served=24"), "{stats}");
+    assert!(stats.contains("queued=24"), "{stats}");
+    assert!(stats.contains("failed=0"), "{stats}");
+    assert!(stats.contains("pending=0"), "{stats}");
+    assert!(stats.contains("shards=2"), "{stats}");
+    // per-tenant counters sum across shards to each tenant's total
+    for tenant in 0..4 {
+        let per = client.send(&format!("STATS {tenant}")).expect("stats");
+        assert!(
+            per.contains(&format!(
+                "tenant={tenant} served={PER_CONN} queued={PER_CONN} rejected="
+            )),
+            "{per}"
+        );
+    }
+    // STATS SHARDS enumerates both shards; their batch counts account
+    // for every executed batch (24 submissions / batch_max=2 ⇒ ≥ 12)
+    let shard_lines = client.stats_shards().expect("stats shards");
+    assert_eq!(shard_lines.len(), 2, "{shard_lines:?}");
+    let batches: u64 = shard_lines
+        .iter()
+        .map(|l| {
+            assert!(l.starts_with("STATS shard="), "{l}");
+            l.split_whitespace()
+                .find_map(|f| f.strip_prefix("batches="))
+                .expect("batches field")
+                .parse::<u64>()
+                .expect("batches number")
+        })
+        .sum();
+    assert!(batches >= 12, "24 submissions at batch_max=2 need ≥ 12 batches, saw {batches}");
+    // control-plane defrag broadcasts to both shards and merges
+    let defrag = client.send("DEFRAG").expect("defrag");
+    assert!(defrag.starts_with("DEFRAG migrated=0"), "{defrag}");
+    client.send("QUIT").expect("quit");
+    server.shutdown();
+}
+
 /// Acceptance check: aggregate completed-SUBMIT throughput of ≥4
 /// concurrent tenant connections strictly above the single-connection
 /// synchronous baseline (same total request count, fresh server each to
