@@ -7,7 +7,7 @@
 # the deterministic stub executor serves a built-in synthetic manifest
 # and no artifacts are needed.
 
-.PHONY: build test artifacts doc
+.PHONY: build test artifacts doc bench-smoke
 
 build:
 	cargo build --release
@@ -20,3 +20,12 @@ artifacts:
 
 doc:
 	cargo doc --no-deps
+
+# Every ablation's CI liveness mode in one command: cheap end-to-end
+# passes that also refresh the BENCH_*.json perf-trajectory files
+# (migration, shard scaling, energy cap + EDP).  Acceptance bars inside
+# each bench are enforced — a non-zero exit here is a regression.
+bench-smoke:
+	cargo bench --bench ablation_migration -- --smoke
+	cargo bench --bench ablation_shards -- --smoke
+	cargo bench --bench ablation_energy -- --smoke

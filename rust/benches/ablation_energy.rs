@@ -1,0 +1,294 @@
+//! Energy ablation — the power-cap governor and the energy-aware
+//! policies, quantified on the cloud presets.
+//!
+//! Two claims are enforced (not just printed):
+//!
+//! 1. **The cap holds.**  On the past-saturation churn preset, the
+//!    power-cap governor keeps the windowed average power at or below
+//!    `[energy].power_cap_watts`, while the uncapped run demonstrably
+//!    exceeds that level (the cap binds, it is not vacuous).  The
+//!    governor must also have actually refused options (`throttled`).
+//! 2. **Energy-aware placement + selection win on EDP.**  At equal
+//!    offered load on a sharded pool, `placement = energy-aware` +
+//!    `policy = energy-aware` achieve a strictly lower energy-delay
+//!    product (joules × drain-makespan seconds) than the
+//!    `least-loaded` + max-throughput pairing: consolidation lets
+//!    drained shards deep-sleep while the spread placement keeps every
+//!    fabric's static overhead burning.
+//!
+//! Output: a human table plus machine-readable `BENCH_energy.json`
+//! (schema shared with the other ablations via `cgra_mte::bench::jsonw`).
+//! `--smoke` shrinks durations and the pool to 2 shards — the CI
+//! liveness mode; the sim is deterministic, so both acceptance bars are
+//! enforced in smoke and full alike.
+
+use cgra_mte::bench::jsonw;
+use cgra_mte::config::{
+    presets, Config, PlacementPolicyKind, SchedulerPolicyKind, WorkloadConfig,
+};
+use cgra_mte::energy::EnergyReport;
+use cgra_mte::metrics::{export, Table};
+use cgra_mte::sim::{run_cloud, run_cloud_pool};
+
+/// Governor cap under test, watts.  Must sit above the drained-fabric
+/// bypass worst case (~2.47 W: one harris-c plus the gated floor) so
+/// the progress guarantee cannot overshoot it, and below the uncapped
+/// churn plateau (~2.7+ W) so the cap actually binds.
+const CAP_WATTS: f64 = 2.5;
+/// Tolerance on the cap check: one-shot DPR/wake charges land inside
+/// averaging windows as sub-milliwatt blips.
+const CAP_TOL: f64 = 1.01;
+/// Offered-load scale for the EDP comparison (half the Fig. 4
+/// calibration point: one fabric can host the whole load, so placement
+/// freedom — consolidate vs spread — is the differentiator).
+const EDP_LOAD_SCALE: f64 = 0.5;
+
+fn scale_load(cfg: &mut Config, scale: f64, duration_ms: f64) {
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+        for rate in c.mean_interarrival_ms.iter_mut() {
+            *rate /= scale;
+        }
+    }
+}
+
+struct CapRow {
+    label: &'static str,
+    peak_w: f64,
+    mean_w: f64,
+    total_j: f64,
+    throttled: u64,
+    makespan_ms: f64,
+    ntat: f64,
+}
+
+fn cap_run(cap: f64, duration_ms: f64) -> CapRow {
+    let mut cfg = presets::energy_cap_scenario(cap);
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+    }
+    let cycles_per_ms = cfg.arch.core_clock_mhz as f64 * 1e3;
+    let r = run_cloud(&cfg).expect("churn run");
+    assert_eq!(r.submitted, r.completed, "capped churn must still drain");
+    let e = r.energy.expect("accounting on");
+    CapRow {
+        label: if cap > 0.0 { "capped" } else { "uncapped" },
+        peak_w: e.peak_window_watts,
+        mean_w: e.mean_watts,
+        total_j: e.total_j,
+        throttled: e.throttled,
+        makespan_ms: r.makespan_cycles as f64 / cycles_per_ms,
+        ntat: r.mean_ntat_across_apps(),
+    }
+}
+
+struct EdpRow {
+    label: &'static str,
+    total_j: f64,
+    makespan_s: f64,
+    edp: f64,
+    ntat: f64,
+    mean_w: f64,
+    energy: EnergyReport,
+}
+
+fn edp_run(
+    label: &'static str,
+    shards: u32,
+    placement: PlacementPolicyKind,
+    policy: SchedulerPolicyKind,
+    duration_ms: f64,
+) -> EdpRow {
+    let mut cfg = presets::energy_pool_scenario(shards, placement);
+    cfg.scheduler.policy = policy;
+    scale_load(&mut cfg, EDP_LOAD_SCALE, duration_ms);
+    let cycles_per_s = cfg.arch.core_clock_mhz as f64 * 1e6;
+    let r = run_cloud_pool(&cfg).expect("pool run");
+    assert_eq!(r.submitted, r.completed, "offered load must drain");
+    let e = r.energy.expect("accounting on");
+    let makespan_s = r.makespan_cycles as f64 / cycles_per_s;
+    EdpRow {
+        label,
+        total_j: e.total_j,
+        makespan_s,
+        edp: e.total_j * makespan_s,
+        ntat: r.mean_ntat_across_apps(),
+        mean_w: e.mean_watts,
+        energy: e,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let churn_ms = if smoke { 600.0 } else { 2_000.0 };
+    let pool_ms = if smoke { 400.0 } else { 1_500.0 };
+    let shards = if smoke { 2 } else { 4 };
+    let t0 = std::time::Instant::now();
+
+    // ---- claim 1: the power cap holds -------------------------------
+    let uncapped = cap_run(0.0, churn_ms);
+    let capped = cap_run(CAP_WATTS, churn_ms);
+
+    let mut cap_table = Table::new(
+        "Power-cap governor — churn preset (windowed average power)",
+        &["run", "peak W", "mean W", "total J", "throttled", "makespan ms", "ntat"],
+    );
+    for r in [&uncapped, &capped] {
+        cap_table.row(&[
+            r.label.to_string(),
+            format!("{:.3}", r.peak_w),
+            format!("{:.3}", r.mean_w),
+            format!("{:.4}", r.total_j),
+            r.throttled.to_string(),
+            format!("{:.1}", r.makespan_ms),
+            format!("{:.2}", r.ntat),
+        ]);
+    }
+    print!("{}", cap_table.render());
+
+    let cap_holds = capped.peak_w <= CAP_WATTS * CAP_TOL;
+    let cap_binds = uncapped.peak_w > CAP_WATTS;
+    let governor_engaged = capped.throttled > 0;
+    println!(
+        "cap {CAP_WATTS:.1} W: capped peak {:.3} W ({}), uncapped peak {:.3} W ({}), throttled {} ({})",
+        capped.peak_w,
+        if cap_holds { "HELD" } else { "VIOLATED" },
+        uncapped.peak_w,
+        if cap_binds { "cap binds" } else { "cap vacuous" },
+        capped.throttled,
+        if governor_engaged { "governor engaged" } else { "governor idle" },
+    );
+
+    // ---- claim 2: energy-aware beats least-loaded on EDP ------------
+    let ll = edp_run(
+        "least-loaded/greedy",
+        shards,
+        PlacementPolicyKind::LeastLoaded,
+        SchedulerPolicyKind::GreedyThroughput,
+        pool_ms,
+    );
+    let ea = edp_run(
+        "energy-aware/energy-aware",
+        shards,
+        PlacementPolicyKind::EnergyAware,
+        SchedulerPolicyKind::EnergyAware,
+        pool_ms,
+    );
+
+    let mut edp_table = Table::new(
+        "Energy-delay product — equal offered load, sharded pool",
+        &["policies", "total J", "makespan s", "EDP J·s", "ntat", "mean W"],
+    );
+    for r in [&ll, &ea] {
+        edp_table.row(&[
+            r.label.to_string(),
+            format!("{:.4}", r.total_j),
+            format!("{:.4}", r.makespan_s),
+            format!("{:.5}", r.edp),
+            format!("{:.2}", r.ntat),
+            format!("{:.3}", r.mean_w),
+        ]);
+    }
+    print!("{}", edp_table.render());
+
+    let edp_wins = ea.edp < ll.edp;
+    let energy_wins = ea.total_j < ll.total_j;
+    println!(
+        "energy-aware EDP {:.5} vs least-loaded {:.5} — {} (energy {:.4} vs {:.4} J)",
+        ea.edp,
+        ll.edp,
+        if edp_wins { "PASS (strictly lower)" } else { "FAIL" },
+        ea.total_j,
+        ll.total_j,
+    );
+
+    // ---- machine-readable trajectory --------------------------------
+    let cap_json = |r: &CapRow| {
+        jsonw::obj(&[
+            ("run", jsonw::str_val(r.label)),
+            ("peak_window_watts", jsonw::num_f(r.peak_w)),
+            ("mean_watts", jsonw::num_f(r.mean_w)),
+            ("total_j", jsonw::num_f(r.total_j)),
+            ("throttled", jsonw::num_u(r.throttled)),
+            ("makespan_ms", jsonw::num_f(r.makespan_ms)),
+            ("mean_ntat", jsonw::num_f(r.ntat)),
+        ])
+    };
+    let edp_json = |r: &EdpRow| {
+        jsonw::obj(&[
+            ("policies", jsonw::str_val(r.label)),
+            ("total_j", jsonw::num_f(r.total_j)),
+            ("makespan_s", jsonw::num_f(r.makespan_s)),
+            ("edp_js", jsonw::num_f(r.edp)),
+            ("mean_ntat", jsonw::num_f(r.ntat)),
+            ("mean_watts", jsonw::num_f(r.mean_w)),
+            ("static_j", jsonw::num_f(r.energy.static_j)),
+            ("idle_j", jsonw::num_f(r.energy.idle_j)),
+            ("gated_j", jsonw::num_f(r.energy.gated_j)),
+            ("wakes", jsonw::num_u(r.energy.wakes)),
+        ])
+    };
+    let doc = jsonw::obj(&[
+        ("bench", jsonw::str_val("ablation_energy")),
+        ("scenario", jsonw::str_val("cloud-churn cap + cloud-pool EDP")),
+        ("smoke", jsonw::bool_val(smoke)),
+        ("cap_watts", jsonw::num_f(CAP_WATTS)),
+        ("edp_load_scale", jsonw::num_f(EDP_LOAD_SCALE)),
+        ("edp_shards", jsonw::num_u(shards as u64)),
+        (
+            "cap_rows",
+            jsonw::arr(&[cap_json(&uncapped), cap_json(&capped)]),
+        ),
+        ("edp_rows", jsonw::arr(&[edp_json(&ll), edp_json(&ea)])),
+        (
+            "delta",
+            jsonw::obj(&[
+                ("cap_holds", jsonw::bool_val(cap_holds)),
+                ("cap_binds", jsonw::bool_val(cap_binds)),
+                ("governor_engaged", jsonw::bool_val(governor_engaged)),
+                ("energy_aware_edp_wins", jsonw::bool_val(edp_wins)),
+                ("energy_aware_energy_wins", jsonw::bool_val(energy_wins)),
+                (
+                    "edp_ratio",
+                    jsonw::num_f(if ll.edp > 0.0 { ea.edp / ll.edp } else { f64::NAN }),
+                ),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_energy.json";
+    export::write_file(path, &doc).expect("write bench json");
+    println!("wrote {path}");
+    println!("bench wall time: {:.1} s", t0.elapsed().as_secs_f64());
+
+    // Acceptance is enforced, not just printed: the sims are
+    // deterministic, so a regression here is real, not noise.
+    let mut failed = false;
+    if !cap_holds {
+        eprintln!(
+            "acceptance FAILED: capped peak {:.3} W exceeds the {CAP_WATTS:.1} W cap",
+            capped.peak_w
+        );
+        failed = true;
+    }
+    if !cap_binds {
+        eprintln!(
+            "acceptance FAILED: uncapped peak {:.3} W never exceeded the cap (vacuous test)",
+            uncapped.peak_w
+        );
+        failed = true;
+    }
+    if !governor_engaged {
+        eprintln!("acceptance FAILED: the governor never throttled an option");
+        failed = true;
+    }
+    if !edp_wins {
+        eprintln!(
+            "acceptance FAILED: energy-aware EDP {:.5} not strictly below least-loaded {:.5}",
+            ea.edp, ll.edp
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

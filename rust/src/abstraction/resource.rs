@@ -28,10 +28,24 @@ impl RawUsage {
     /// GLB-slices must satisfy **both** the capacity and the bandwidth
     /// requirement (each bank contributes capacity *and* a stream port);
     /// array-slices must satisfy both the PE and the MEM tile counts.
+    ///
+    /// Bandwidth is measured (f64), so the slice count is taken with a
+    /// relative tolerance: a requirement that is an exact multiple of
+    /// the per-slice bandwidth must not round up to a phantom extra
+    /// slice just because the division landed at `k + 1 ulp`.
     pub fn quantize(&self, arch: &ArchConfig) -> SliceDemand {
+        debug_assert!(
+            self.glb_bw_bytes_per_sec.is_finite() && self.glb_bw_bytes_per_sec >= 0.0,
+            "glb_bw_bytes_per_sec must be finite and non-negative, got {}",
+            self.glb_bw_bytes_per_sec
+        );
         let cap_slices = div_ceil(self.glb_bytes, arch.glb_slice_bytes());
         let bw_per_slice = arch.glb_slice_bw_bytes_per_sec();
-        let bw_slices = (self.glb_bw_bytes_per_sec / bw_per_slice).ceil() as u64;
+        let ratio = (self.glb_bw_bytes_per_sec / bw_per_slice).max(0.0);
+        // relative epsilon shields exactly-divisible requirements from
+        // f64 round-off; physical bandwidths are nowhere near 2^40
+        // slices, so the shave can never drop a genuinely needed slice
+        let bw_slices = (ratio * (1.0 - 1e-12)).ceil() as u64;
         let glb = cap_slices.max(bw_slices).max(if self.glb_bytes > 0 || self.glb_bw_bytes_per_sec > 0.0 { 1 } else { 0 });
 
         let pe_slices = div_ceil(self.pe_tiles as u64, arch.pe_tiles_per_slice() as u64);
@@ -136,6 +150,77 @@ mod tests {
         let d = usage.quantize(&arch);
         // per-slice bw = 8 B/c * 500 MHz = 4 GB/s ⇒ 5 slices
         assert_eq!(d.glb_slices, 5);
+    }
+
+    #[test]
+    fn exactly_divisible_bandwidth_needs_no_phantom_slice() {
+        let arch = ArchConfig::default();
+        let per_slice = arch.glb_slice_bw_bytes_per_sec(); // 4 GB/s
+        for k in 1..=8u32 {
+            // requirements that are exact multiples of the per-slice
+            // bandwidth, including ones built from decimal arithmetic
+            // (0.1 GB steps) that is inexact in binary
+            for bw in [per_slice * k as f64, 0.1 * per_slice * (10 * k) as f64] {
+                let usage = RawUsage {
+                    glb_bytes: 0,
+                    glb_bw_bytes_per_sec: bw,
+                    pe_tiles: 1,
+                    mem_tiles: 0,
+                };
+                assert_eq!(
+                    usage.quantize(&arch).glb_slices,
+                    k,
+                    "bw {bw} must need exactly {k} slices"
+                );
+            }
+        }
+        // just past a boundary still rounds up
+        let over = RawUsage {
+            glb_bytes: 0,
+            glb_bw_bytes_per_sec: per_slice * 2.0 + 1.0,
+            pe_tiles: 1,
+            mem_tiles: 0,
+        };
+        assert_eq!(over.quantize(&arch).glb_slices, 3);
+    }
+
+    #[test]
+    fn zero_capacity_nonzero_bandwidth_still_needs_a_bank() {
+        let arch = ArchConfig::default();
+        let usage = RawUsage {
+            glb_bytes: 0,
+            glb_bw_bytes_per_sec: 1.0, // one byte per second
+            pe_tiles: 1,
+            mem_tiles: 0,
+        };
+        let d = usage.quantize(&arch);
+        assert_eq!(d.glb_slices, 1, "any streaming needs a stream port");
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    #[cfg(debug_assertions)]
+    fn nan_bandwidth_is_rejected_in_debug() {
+        let usage = RawUsage {
+            glb_bytes: 0,
+            glb_bw_bytes_per_sec: f64::NAN,
+            pe_tiles: 1,
+            mem_tiles: 0,
+        };
+        let _ = usage.quantize(&ArchConfig::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    #[cfg(debug_assertions)]
+    fn negative_bandwidth_is_rejected_in_debug() {
+        let usage = RawUsage {
+            glb_bytes: 0,
+            glb_bw_bytes_per_sec: -1.0,
+            pe_tiles: 1,
+            mem_tiles: 0,
+        };
+        let _ = usage.quantize(&ArchConfig::default());
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod toml;
 
 pub use schema::{
     ArchConfig, CloudWorkloadConfig, Config, DefragPolicyKind, DprConfig, EdgeWorkloadConfig,
-    MigrationCostModelKind, PlacementPolicyKind, PoolConfig, RegionPolicyKind, SchedulerConfig,
-    SchedulerPolicyKind, ServerConfig, WorkloadConfig,
+    EnergyConfig, MigrationCostModelKind, PlacementPolicyKind, PoolConfig, RegionPolicyKind,
+    SchedulerConfig, SchedulerPolicyKind, ServerConfig, WorkloadConfig,
 };
 pub use toml::TomlValue;

@@ -83,6 +83,41 @@ pub fn pool_scenario(shards: u32, placement: PlacementPolicyKind) -> Config {
     cfg
 }
 
+/// Cloud scenario with the energy model live: accounting + power
+/// gating on (Amber-derived `[energy]` defaults), flexible-shape
+/// regions.  `power_cap_watts` stays 0 (uncapped) — pass the cap
+/// explicitly where the governor is under test.
+pub fn energy_scenario() -> Config {
+    let mut cfg = cloud_scenario(RegionPolicyKind::FlexibleShape);
+    cfg.energy.enabled = true;
+    cfg
+}
+
+/// Churn scenario (past-saturation cloud load) with energy accounting
+/// on and the power-cap governor armed at `cap_watts` (0 = uncapped) —
+/// the `BENCH_energy.json` cap sweep.  Defrag stays off so the cap run
+/// isolates the governor from migration effects.
+pub fn energy_cap_scenario(cap_watts: f64) -> Config {
+    let mut cfg = churn_scenario(RegionPolicyKind::FlexibleShape, DefragPolicyKind::Off);
+    cfg.energy.enabled = true;
+    cfg.energy.power_cap_watts = cap_watts;
+    cfg
+}
+
+/// A sharded pool with energy accounting on — the arena where
+/// `energy-aware` placement (consolidate, let drained shards deep-
+/// sleep) is compared against `least-loaded` (spread, keep every
+/// fabric awake).  The datacenter-shard static overhead is set above
+/// the tile-level default: a deployed fabric shard carries host
+/// interface, clocking and DDR PHY overheads that dwarf a lone
+/// fabric's clock tree.
+pub fn energy_pool_scenario(shards: u32, placement: PlacementPolicyKind) -> Config {
+    let mut cfg = pool_scenario(shards, placement);
+    cfg.energy.enabled = true;
+    cfg.energy.fabric_static_pj = 2_000.0;
+    cfg
+}
+
 /// Ablation: array-slice width (4/8/16 columns, DESIGN.md §6.1).
 ///
 /// Widths must contain whole MEM-column periods (multiples of 4) or the
@@ -142,6 +177,26 @@ mod tests {
         scheduler_ablation(SchedulerPolicyKind::FcfsFirstFit).validate().unwrap();
         no_relocation().validate().unwrap();
         test_small().validate().unwrap();
+        energy_scenario().validate().unwrap();
+        energy_cap_scenario(2.5).validate().unwrap();
+        energy_cap_scenario(0.0).validate().unwrap();
+        for placement in PlacementPolicyKind::ALL {
+            energy_pool_scenario(4, placement).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn energy_presets_arm_the_model() {
+        assert!(energy_scenario().energy.enabled);
+        assert!(energy_scenario().energy.gating);
+        assert_eq!(energy_scenario().energy.power_cap_watts, 0.0);
+        let capped = energy_cap_scenario(2.5);
+        assert!(capped.energy.enabled);
+        assert_eq!(capped.energy.power_cap_watts, 2.5);
+        assert_eq!(capped.scheduler.defrag_policy, DefragPolicyKind::Off);
+        let pool = energy_pool_scenario(4, PlacementPolicyKind::EnergyAware);
+        assert_eq!(pool.pool.shards, 4);
+        assert!(pool.energy.fabric_static_pj > pool.energy.fabric_sleep_pj);
     }
 
     #[test]

@@ -180,6 +180,140 @@ impl DprConfig {
     }
 }
 
+/// Per-component energy/power model parameters (`[energy]` in TOML).
+///
+/// All per-cycle costs are in **picojoules per cycle** at the core
+/// clock; `1 pJ/cycle = 0.5 mW` at the default 500 MHz.  The defaults
+/// are an Amber-derived preset: a 16 nm CGRA with ~512 tiles and 32
+/// GLB banks lands in the low single-digit-watt range when fully
+/// active, with idle leakage about a tenth of active power and
+/// power-gated domains two orders of magnitude below idle.
+///
+/// `enabled = false` (the default) keeps every existing report, trace
+/// and golden-equivalence property bit-for-bit unchanged: no energy is
+/// accounted, no slice is gated, and no wake latency is charged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnergyConfig {
+    /// Master switch for energy accounting + power gating.
+    /// TOML: `energy.enabled`.
+    pub enabled: bool,
+    /// Power-gate unallocated slices (see `gate_min_run`).  Only
+    /// effective when `enabled`.  TOML: `energy.gating`.
+    pub gating: bool,
+    /// Minimum *contiguous free run* (slices) a power domain needs
+    /// before it can be gated: scattered holes shorter than this stay
+    /// awake at idle power — external fragmentation costs watts, and
+    /// defragmentation earns them back.  TOML: `energy.gate_min_run`.
+    pub gate_min_run: u32,
+    /// Wake latency of a gated domain, charged to the waking launch
+    /// like DPR cycles.  TOML: `energy.wake_cycles`.
+    pub wake_cycles: u64,
+    /// PE tile, computing.  TOML: `energy.pe_active_pj`.
+    pub pe_active_pj: f64,
+    /// PE tile, allocated-or-awake but not clocked into a region.
+    pub pe_idle_pj: f64,
+    /// MEM tile, computing (SRAM active).
+    pub mem_active_pj: f64,
+    /// MEM tile, idle.
+    pub mem_idle_pj: f64,
+    /// Any tile inside a power-gated domain (leakage floor).
+    pub tile_gated_pj: f64,
+    /// GLB bank held by a region (SRAM retention + clocking).
+    pub glb_active_pj: f64,
+    /// GLB bank awake but unallocated.
+    pub glb_idle_pj: f64,
+    /// GLB bank power-gated.
+    pub glb_gated_pj: f64,
+    /// Stream-port switching energy per byte moved (task streaming,
+    /// fast-DPR, migration bank copies).
+    pub glb_stream_pj_per_byte: f64,
+    /// Fraction of the peak per-bank port bandwidth an *active* bank is
+    /// assumed to stream (Table 1 rows carry slice counts, not raw
+    /// bandwidth; [`crate::abstraction::RawUsage`]-derived demands use
+    /// the measured bandwidth instead).  TOML: `energy.stream_duty`.
+    pub stream_duty: f64,
+    /// Configuration-stream energy per bit (fast-DPR and AXI alike).
+    pub dpr_pj_per_bit: f64,
+    /// Always-on fabric overhead while the fabric hosts ≥ 1 region
+    /// (clock tree, host interface).  TOML: `energy.fabric_static_pj`.
+    pub fabric_static_pj: f64,
+    /// Fabric overhead when fully drained (deep sleep) — what an
+    /// energy-aware pool placement earns by consolidating onto fewer
+    /// shards.  TOML: `energy.fabric_sleep_pj`.
+    pub fabric_sleep_pj: f64,
+    /// Power cap for the governor, watts; `0` disables the cap.
+    /// TOML: `energy.power_cap_watts`.
+    pub power_cap_watts: f64,
+    /// Averaging window (cycles) for the governor's windowed power.
+    /// TOML: `energy.power_window_cycles`.
+    pub power_window_cycles: u64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        EnergyConfig {
+            enabled: false,
+            gating: true,
+            gate_min_run: 4,
+            wake_cycles: 96,
+            pe_active_pj: 8.0,
+            pe_idle_pj: 0.8,
+            mem_active_pj: 12.0,
+            mem_idle_pj: 1.2,
+            tile_gated_pj: 0.02,
+            glb_active_pj: 20.0,
+            glb_idle_pj: 2.0,
+            glb_gated_pj: 0.05,
+            glb_stream_pj_per_byte: 1.5,
+            stream_duty: 0.6,
+            dpr_pj_per_bit: 0.15,
+            fabric_static_pj: 500.0,
+            fabric_sleep_pj: 5.0,
+            power_cap_watts: 0.0,
+            power_window_cycles: 50_000,
+        }
+    }
+}
+
+impl EnergyConfig {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        let costs = [
+            self.pe_active_pj,
+            self.pe_idle_pj,
+            self.mem_active_pj,
+            self.mem_idle_pj,
+            self.tile_gated_pj,
+            self.glb_active_pj,
+            self.glb_idle_pj,
+            self.glb_gated_pj,
+            self.glb_stream_pj_per_byte,
+            self.dpr_pj_per_bit,
+            self.fabric_static_pj,
+            self.fabric_sleep_pj,
+            self.power_cap_watts,
+        ];
+        if costs.iter().any(|c| !c.is_finite() || *c < 0.0) {
+            return Err(Error::Config(
+                "energy costs must be finite and non-negative".into(),
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.stream_duty) {
+            return Err(Error::Config(format!(
+                "energy.stream_duty ({}) must be within [0, 1]",
+                self.stream_duty
+            )));
+        }
+        if self.gate_min_run == 0 {
+            return Err(Error::Config("energy.gate_min_run must be positive".into()));
+        }
+        if self.power_window_cycles == 0 {
+            return Err(Error::Config("energy.power_window_cycles must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Execution-region formation mechanism (paper Fig. 2 a–d).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RegionPolicyKind {
@@ -236,6 +370,10 @@ pub enum SchedulerPolicyKind {
     /// Shortest-job-first: ready tasks ordered by their minimum execution
     /// time (favors the short vision tasks whose NTAT is wait-dominated).
     ShortestJobFirst,
+    /// Energy-aware: among runnable variants, pick the one minimizing
+    /// the energy-delay product (active power × exec-time²) under the
+    /// configured [`EnergyConfig`] model, instead of max throughput.
+    EnergyAware,
 }
 
 impl SchedulerPolicyKind {
@@ -246,6 +384,7 @@ impl SchedulerPolicyKind {
             SchedulerPolicyKind::FcfsFirstFit => "fcfs",
             SchedulerPolicyKind::FairShare => "fair",
             SchedulerPolicyKind::ShortestJobFirst => "sjf",
+            SchedulerPolicyKind::EnergyAware => "energy-aware",
         }
     }
 
@@ -256,6 +395,7 @@ impl SchedulerPolicyKind {
             "fcfs" => Ok(SchedulerPolicyKind::FcfsFirstFit),
             "fair" => Ok(SchedulerPolicyKind::FairShare),
             "sjf" => Ok(SchedulerPolicyKind::ShortestJobFirst),
+            "energy-aware" | "energy_aware" => Ok(SchedulerPolicyKind::EnergyAware),
             other => Err(Error::Config(format!("unknown scheduler policy '{other}'"))),
         }
     }
@@ -360,14 +500,21 @@ pub enum PlacementPolicyKind {
     /// every later one lands on the same shard (bitstream caches and GLB
     /// working sets stay warm).
     Sticky,
+    /// Route to the shard whose *marginal power* for hosting the request
+    /// is smallest under the [`EnergyConfig`] model: an already-awake
+    /// shard with idle slices beats waking gated domains, which beats
+    /// waking a deep-sleeping fabric — requests consolidate so drained
+    /// shards stay asleep.
+    EnergyAware,
 }
 
 impl PlacementPolicyKind {
     /// All policies, in documentation order.
-    pub const ALL: [PlacementPolicyKind; 3] = [
+    pub const ALL: [PlacementPolicyKind; 4] = [
         PlacementPolicyKind::LeastLoaded,
         PlacementPolicyKind::BestFit,
         PlacementPolicyKind::Sticky,
+        PlacementPolicyKind::EnergyAware,
     ];
 
     /// Stable config / display name.
@@ -376,6 +523,7 @@ impl PlacementPolicyKind {
             PlacementPolicyKind::LeastLoaded => "least-loaded",
             PlacementPolicyKind::BestFit => "best-fit",
             PlacementPolicyKind::Sticky => "sticky",
+            PlacementPolicyKind::EnergyAware => "energy-aware",
         }
     }
 
@@ -385,6 +533,7 @@ impl PlacementPolicyKind {
             "least-loaded" | "least_loaded" => Ok(PlacementPolicyKind::LeastLoaded),
             "best-fit" | "best_fit" => Ok(PlacementPolicyKind::BestFit),
             "sticky" | "affinity" => Ok(PlacementPolicyKind::Sticky),
+            "energy-aware" | "energy_aware" => Ok(PlacementPolicyKind::EnergyAware),
             other => Err(Error::Config(format!("unknown placement policy '{other}'"))),
         }
     }
@@ -609,6 +758,8 @@ pub struct Config {
     pub server: ServerConfig,
     /// Fabric pool (sharding) layout + placement.
     pub pool: PoolConfig,
+    /// Energy model, power gating, and power-cap governor.
+    pub energy: EnergyConfig,
     /// Workload.
     pub workload: WorkloadConfig,
     /// Directory containing AOT artifacts + manifest.json, or the
@@ -624,6 +775,7 @@ impl Default for Config {
             scheduler: SchedulerConfig::default(),
             server: ServerConfig::default(),
             pool: PoolConfig::default(),
+            energy: EnergyConfig::default(),
             workload: WorkloadConfig::Cloud(CloudWorkloadConfig::default()),
             artifacts_dir: "artifacts".into(),
         }
@@ -713,6 +865,29 @@ impl Config {
             read_u32(pool, "admission_window", &mut p.admission_window)?;
         }
 
+        if let Some(energy) = root.get("energy") {
+            let e = &mut cfg.energy;
+            read_bool(energy, "enabled", &mut e.enabled)?;
+            read_bool(energy, "gating", &mut e.gating)?;
+            read_u32(energy, "gate_min_run", &mut e.gate_min_run)?;
+            read_u64(energy, "wake_cycles", &mut e.wake_cycles)?;
+            read_f64(energy, "pe_active_pj", &mut e.pe_active_pj)?;
+            read_f64(energy, "pe_idle_pj", &mut e.pe_idle_pj)?;
+            read_f64(energy, "mem_active_pj", &mut e.mem_active_pj)?;
+            read_f64(energy, "mem_idle_pj", &mut e.mem_idle_pj)?;
+            read_f64(energy, "tile_gated_pj", &mut e.tile_gated_pj)?;
+            read_f64(energy, "glb_active_pj", &mut e.glb_active_pj)?;
+            read_f64(energy, "glb_idle_pj", &mut e.glb_idle_pj)?;
+            read_f64(energy, "glb_gated_pj", &mut e.glb_gated_pj)?;
+            read_f64(energy, "glb_stream_pj_per_byte", &mut e.glb_stream_pj_per_byte)?;
+            read_f64(energy, "stream_duty", &mut e.stream_duty)?;
+            read_f64(energy, "dpr_pj_per_bit", &mut e.dpr_pj_per_bit)?;
+            read_f64(energy, "fabric_static_pj", &mut e.fabric_static_pj)?;
+            read_f64(energy, "fabric_sleep_pj", &mut e.fabric_sleep_pj)?;
+            read_f64(energy, "power_cap_watts", &mut e.power_cap_watts)?;
+            read_u64(energy, "power_window_cycles", &mut e.power_window_cycles)?;
+        }
+
         if let Some(wl) = root.get("workload") {
             let kind = wl
                 .get("kind")
@@ -780,6 +955,7 @@ impl Config {
         self.dpr.validate()?;
         self.server.validate()?;
         self.pool.validate()?;
+        self.energy.validate()?;
         let s = &self.scheduler;
         if s.unit_array_slices == 0 || s.unit_glb_slices == 0 {
             return Err(Error::Config("unit region sizes must be positive".into()));
@@ -1055,8 +1231,49 @@ mod tests {
             SchedulerPolicyKind::FcfsFirstFit,
             SchedulerPolicyKind::FairShare,
             SchedulerPolicyKind::ShortestJobFirst,
+            SchedulerPolicyKind::EnergyAware,
         ] {
             assert_eq!(SchedulerPolicyKind::from_name(kind.name()).unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn energy_knobs_parse_and_validate() {
+        let cfg = Config::from_toml_text(
+            "[energy]\nenabled = true\ngating = false\ngate_min_run = 2\nwake_cycles = 128\n\
+             pe_active_pj = 10.0\npower_cap_watts = 2.5\npower_window_cycles = 25000\n",
+        )
+        .unwrap();
+        assert!(cfg.energy.enabled);
+        assert!(!cfg.energy.gating);
+        assert_eq!(cfg.energy.gate_min_run, 2);
+        assert_eq!(cfg.energy.wake_cycles, 128);
+        assert_eq!(cfg.energy.pe_active_pj, 10.0);
+        assert_eq!(cfg.energy.power_cap_watts, 2.5);
+        assert_eq!(cfg.energy.power_window_cycles, 25_000);
+        // defaults: accounting off, gating armed, uncapped
+        let d = EnergyConfig::default();
+        assert!(!d.enabled);
+        assert!(d.gating);
+        assert_eq!(d.power_cap_watts, 0.0);
+        d.validate().unwrap();
+        // bad values rejected
+        assert!(Config::from_toml_text("[energy]\npe_active_pj = -1.0\n").is_err());
+        assert!(Config::from_toml_text("[energy]\nstream_duty = 1.5\n").is_err());
+        assert!(Config::from_toml_text("[energy]\ngate_min_run = 0\n").is_err());
+        assert!(Config::from_toml_text("[energy]\npower_window_cycles = 0\n").is_err());
+    }
+
+    #[test]
+    fn energy_aware_policy_names_round_trip() {
+        assert_eq!(
+            SchedulerPolicyKind::from_name("energy-aware").unwrap(),
+            SchedulerPolicyKind::EnergyAware
+        );
+        assert_eq!(
+            PlacementPolicyKind::from_name("energy_aware").unwrap(),
+            PlacementPolicyKind::EnergyAware
+        );
+        assert_eq!(PlacementPolicyKind::ALL.len(), 4);
     }
 }

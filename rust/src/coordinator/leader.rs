@@ -194,7 +194,7 @@ impl Leader {
                 }
             }
             region_info.remove(&region);
-            let inst = self.sched.complete(region)?;
+            let inst = self.sched.complete(region, now)?;
             if let Some(done) = self.queue.mark_complete(inst, now)? {
                 let (app, arrival, exec, compute_us, last_sum) =
                     inflight.remove(&done.seq).expect("inflight");
@@ -261,6 +261,14 @@ impl Leader {
     /// Point-in-time fragmentation reading of the fabric.
     pub fn fragmentation(&self) -> FragmentationGauge {
         FragmentationGauge::read(self.sched.regions())
+    }
+
+    /// Point-in-time energy reading of the fabric: `(total joules,
+    /// windowed watts, governor throttle count)`.  All zero when
+    /// `[energy]` accounting is off.
+    pub fn energy_snapshot(&self) -> (f64, f64, u64) {
+        let e = self.sched.energy();
+        (e.total_joules(), e.current_windowed_watts(), e.throttled())
     }
 
     /// Force one compaction pass (the `DEFRAG` wire command).  Between

@@ -26,12 +26,16 @@
 //! STATS
 //!   → STATS served=<n> queued=<n> rejected=<n> failed=<n> pending=<n>
 //!           workers=<n> queue_depth=<n> frag_glb=<x> frag_arr=<x>
-//!           migrations=<n> shards=<n>
+//!           migrations=<n> shards=<n> placement=<policy>
 //! STATS <tenant>
 //!   → STATS tenant=<t> served=<n> queued=<n> rejected=<n>
 //! STATS SHARDS
 //!   → STATS shards=<n>                    (then one line per shard:)
 //!   → STATS shard=<i> frag_glb=<x> frag_arr=<x> migrations=<n> batches=<n>
+//! STATS ENERGY
+//!   → STATS shards=<n> energy_j=<x> cap_w=<x> throttle_shrinks=<n>
+//!           placement=<policy>            (then one line per shard:)
+//!   → STATS shard=<i> energy_j=<x> power_w=<x> throttled=<n>
 //! DEFRAG
 //!   → DEFRAG migrated=<n> cycles=<n> frag_glb=<a>-><b> frag_arr=<a>-><b>
 //!   → ERR coordinator unavailable         (executors gone / shutting down)
@@ -144,6 +148,16 @@ struct ShardGauges {
     batches: AtomicU64,
     /// Batches dispatched but not yet answered (placement load).
     outstanding: AtomicU64,
+    /// Latest cumulative joules (f64 bits), executor-refreshed.
+    energy_j_bits: AtomicU64,
+    /// Latest windowed-average power in watts (f64 bits).
+    power_w_bits: AtomicU64,
+    /// Milliseconds since server start when `power_w_bits` was last
+    /// refreshed — a shard only refreshes when *it* processes a batch,
+    /// so the throttle path must age readings out (see `batch_cap`).
+    power_at_ms: AtomicU64,
+    /// Latest governor throttle count of the shard's current leader.
+    throttled: AtomicU64,
 }
 
 impl ShardGauges {
@@ -155,6 +169,10 @@ impl ShardGauges {
             leader_migrations: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             outstanding: AtomicU64::new(0),
+            energy_j_bits: AtomicU64::new(0),
+            power_w_bits: AtomicU64::new(0),
+            power_at_ms: AtomicU64::new(0),
+            throttled: AtomicU64::new(0),
         }
     }
 }
@@ -172,6 +190,14 @@ struct Shared {
     placement: PlacementPolicyKind,
     /// Tenant → shard affinity (sticky placement).
     sticky: Mutex<BTreeMap<u32, usize>>,
+    /// `[energy].power_cap_watts` (0 = uncapped): workers shrink their
+    /// admission batches while any shard's windowed power exceeds it.
+    power_cap_watts: f64,
+    /// Times a worker shrank its `pop_batch` window because a shard was
+    /// over the power cap.
+    throttle_shrinks: AtomicU64,
+    /// Server start instant (ages power readings in `batch_cap`).
+    started: std::time::Instant,
     /// Channels to the per-shard leader executors, for control-plane
     /// commands (`DEFRAG`).  Emptied at shutdown so each executor can
     /// exit once the workers (the remaining senders) finish draining.
@@ -191,6 +217,9 @@ impl Shared {
             workers: cfg.server.workers.max(1) as usize,
             queue_depth: cfg.server.queue_depth as usize,
             placement: cfg.pool.placement,
+            power_cap_watts: if cfg.energy.enabled { cfg.energy.power_cap_watts } else { 0.0 },
+            throttle_shrinks: AtomicU64::new(0),
+            started: std::time::Instant::now(),
             sticky: Mutex::new(BTreeMap::new()),
             exec: Mutex::new(Vec::new()),
             shards: (0..shard_count).map(|_| ShardGauges::new()).collect(),
@@ -235,9 +264,14 @@ impl Shared {
                 .unwrap_or(0)
         };
         match self.placement {
-            PlacementPolicyKind::LeastLoaded | PlacementPolicyKind::BestFit => {
-                least(&self.shards)
-            }
+            // best-fit has no shape signal here (identical shards) and
+            // energy-aware no power signal at batch granularity beyond
+            // the outstanding gauge — both degenerate to least-loaded;
+            // the per-request energy scoring lives in the fabric pool's
+            // router ([`crate::fabric::FabricRouter`]).
+            PlacementPolicyKind::LeastLoaded
+            | PlacementPolicyKind::BestFit
+            | PlacementPolicyKind::EnergyAware => least(&self.shards),
             PlacementPolicyKind::Sticky => {
                 let mut map = self.sticky.lock().expect("sticky map poisoned");
                 *map.entry(tenant).or_insert_with(|| least(&self.shards))
@@ -282,6 +316,57 @@ impl Shared {
         // everything it reports is new; otherwise only the growth is
         let delta = if leader_total < last { leader_total } else { leader_total - last };
         slot.migrations.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Refresh one shard's energy snapshot (executor-refreshed, like
+    /// `record_fabric`).
+    fn record_energy(&self, shard: usize, joules: f64, watts: f64, throttled: u64) {
+        let Some(slot) = self.shards.get(shard) else {
+            return;
+        };
+        slot.energy_j_bits.store(joules.to_bits(), Ordering::Relaxed);
+        slot.power_w_bits.store(watts.to_bits(), Ordering::Relaxed);
+        slot
+            .power_at_ms
+            .store(self.started.elapsed().as_millis() as u64, Ordering::Relaxed);
+        slot.throttled.store(throttled, Ordering::Relaxed);
+    }
+
+    /// How long an over-cap reading keeps throttling without being
+    /// refreshed.  A shard only refreshes its gauge when it processes a
+    /// batch, so a shard that went quiet while hot must age out instead
+    /// of serializing admission forever on a stale reading.
+    const POWER_READING_FRESH_MS: u64 = 2_000;
+
+    /// Admission batch size for the next `pop_batch`: the configured
+    /// maximum, shrunk to 1 while any shard's *fresh* windowed power
+    /// reading exceeds `[energy].power_cap_watts` — the serving-path
+    /// arm of the power-cap governor (the scheduler-level governor
+    /// still gates individual launches inside each batch).
+    fn batch_cap(&self, batch_max: usize) -> usize {
+        if self.power_cap_watts <= 0.0 {
+            return batch_max;
+        }
+        let now_ms = self.started.elapsed().as_millis() as u64;
+        let over = self.shards.iter().any(|s| {
+            f64::from_bits(s.power_w_bits.load(Ordering::Relaxed)) > self.power_cap_watts
+                && now_ms.saturating_sub(s.power_at_ms.load(Ordering::Relaxed))
+                    <= Self::POWER_READING_FRESH_MS
+        });
+        if over {
+            self.throttle_shrinks.fetch_add(1, Ordering::Relaxed);
+            1
+        } else {
+            batch_max
+        }
+    }
+
+    /// Pool-wide cumulative joules.
+    fn energy_total(&self) -> f64 {
+        self.shards
+            .iter()
+            .map(|s| f64::from_bits(s.energy_j_bits.load(Ordering::Relaxed)))
+            .sum()
     }
 
     /// Mean (glb, array) fragmentation across shards.
@@ -364,6 +449,27 @@ fn handle_line(
             }
         }
         Some("STATS") => match parts.next() {
+            Some(t) if t.eq_ignore_ascii_case("energy") => {
+                // 1 + shard_count lines, same framing as STATS SHARDS:
+                // the header names how many per-shard lines follow.
+                let mut out = format!(
+                    "STATS shards={} energy_j={:.6} cap_w={:.3} throttle_shrinks={} placement={}",
+                    shared.shard_count(),
+                    shared.energy_total(),
+                    shared.power_cap_watts,
+                    shared.throttle_shrinks.load(Ordering::Relaxed),
+                    shared.placement.name(),
+                );
+                for (i, slot) in shared.shards.iter().enumerate() {
+                    out.push_str(&format!(
+                        "\nSTATS shard={i} energy_j={:.6} power_w={:.3} throttled={}",
+                        f64::from_bits(slot.energy_j_bits.load(Ordering::Relaxed)),
+                        f64::from_bits(slot.power_w_bits.load(Ordering::Relaxed)),
+                        slot.throttled.load(Ordering::Relaxed),
+                    ));
+                }
+                (out, false)
+            }
             Some(t) if t.eq_ignore_ascii_case("shards") => {
                 // 1 + shard_count lines: the header names how many
                 // follow, so line-oriented clients stay in sync.
@@ -399,7 +505,7 @@ fn handle_line(
                     format!(
                         "STATS served={} queued={} rejected={} failed={} pending={} \
                          workers={} queue_depth={} frag_glb={:.3} frag_arr={:.3} migrations={} \
-                         shards={}",
+                         shards={} placement={}",
                         s.served,
                         s.queued,
                         s.rejected,
@@ -411,6 +517,7 @@ fn handle_line(
                         frag.1,
                         shared.migrations_total(),
                         shared.shard_count(),
+                        shared.placement.name(),
                     ),
                     false,
                 )
@@ -483,7 +590,7 @@ fn handle_line(
 /// fabric); the load-based policies keep the whole batch together on
 /// one shard — the shared-scheduler-invocation win.
 fn run_worker(shared: Arc<Shared>, execs: Vec<mpsc::Sender<ExecRequest>>, batch_max: usize) {
-    while let Some(batch) = shared.queues.pop_batch(batch_max) {
+    while let Some(batch) = shared.queues.pop_batch(shared.batch_cap(batch_max)) {
         if shared.placement == PlacementPolicyKind::Sticky && shared.shard_count() > 1 {
             let mut groups: BTreeMap<usize, Vec<(TenantId, SubmitJob)>> = BTreeMap::new();
             for (tenant, job) in batch {
@@ -609,6 +716,8 @@ fn run_executor(
                     (g.glb_frag, g.array_frag),
                     leader.scheduler().migration_stats().tasks_migrated,
                 );
+                let (joules, watts, throttled) = leader.energy_snapshot();
+                shared.record_energy(shard, joules, watts, throttled);
                 let _ = resp.send(DefragReply {
                     migrated: r.migrated,
                     cycles: r.cycles,
@@ -658,6 +767,8 @@ fn run_executor(
                     (g.glb_frag, g.array_frag),
                     leader.scheduler().migration_stats().tasks_migrated,
                 );
+                let (joules, watts, throttled) = leader.energy_snapshot();
+                shared.record_energy(shard, joules, watts, throttled);
                 let _ = resp.send(result);
             }
         }
@@ -1007,6 +1118,68 @@ mod tests {
         shared.record_fabric(9, (1.0, 1.0), 100);
         let (stats, _) = line(&shared, "STATS");
         assert!(stats.contains("migrations=7"), "{stats}");
+    }
+
+    #[test]
+    fn stats_names_the_placement_policy() {
+        let shared = test_shared(4);
+        let (stats, _) = line(&shared, "STATS");
+        assert!(stats.contains("placement=least-loaded"), "{stats}");
+        let mut cfg = crate::config::presets::paper_default();
+        cfg.pool.placement = crate::config::PlacementPolicyKind::Sticky;
+        let sticky = Shared::from_config(&cfg);
+        let (stats, _) = line(&sticky, "STATS");
+        assert!(stats.contains("placement=sticky"), "{stats}");
+    }
+
+    #[test]
+    fn stats_energy_renders_header_and_per_shard_lines() {
+        let shared = test_shared_sharded(4, 2);
+        shared.record_energy(0, 1.5, 2.25, 3);
+        shared.record_energy(1, 0.5, 0.75, 0);
+        let (reply, close) = line(&shared, "STATS ENERGY");
+        assert!(!close);
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines.len(), 3, "{reply}");
+        assert!(lines[0].starts_with("STATS shards=2"), "{reply}");
+        assert!(lines[0].contains("energy_j=2.000000"), "{reply}");
+        assert!(lines[0].contains("cap_w=0.000"), "{reply}");
+        assert!(lines[0].contains("placement=least-loaded"), "{reply}");
+        assert!(lines[1].contains("shard=0"), "{reply}");
+        assert!(lines[1].contains("energy_j=1.500000"), "{reply}");
+        assert!(lines[1].contains("power_w=2.250"), "{reply}");
+        assert!(lines[1].contains("throttled=3"), "{reply}");
+        assert!(lines[2].contains("shard=1"), "{reply}");
+        // out-of-range shard writes are ignored
+        shared.record_energy(9, 100.0, 100.0, 9);
+        let (reply, _) = line(&shared, "STATS ENERGY");
+        assert!(reply.contains("energy_j=2.000000"), "{reply}");
+    }
+
+    #[test]
+    fn batch_cap_shrinks_only_over_the_power_cap() {
+        // uncapped: never shrinks, even with high recorded power
+        let uncapped = test_shared(4);
+        uncapped.record_energy(0, 1.0, 99.0, 0);
+        assert_eq!(uncapped.batch_cap(8), 8);
+        assert_eq!(uncapped.throttle_shrinks.load(Ordering::Relaxed), 0);
+        // capped: shrink to 1 while any shard reads over the cap
+        let mut cfg = crate::config::presets::paper_default();
+        cfg.energy.enabled = true;
+        cfg.energy.power_cap_watts = 2.0;
+        let capped = Shared::from_config(&cfg);
+        assert_eq!(capped.batch_cap(8), 8, "under cap");
+        capped.record_energy(0, 1.0, 2.5, 1);
+        assert_eq!(capped.batch_cap(8), 1, "over cap");
+        assert_eq!(capped.throttle_shrinks.load(Ordering::Relaxed), 1);
+        capped.record_energy(0, 1.0, 1.5, 1);
+        assert_eq!(capped.batch_cap(8), 8, "cap pressure cleared");
+        // cap configured but accounting disabled: stays inert
+        let mut off = crate::config::presets::paper_default();
+        off.energy.power_cap_watts = 2.0;
+        let off = Shared::from_config(&off);
+        off.record_energy(0, 1.0, 9.0, 0);
+        assert_eq!(off.batch_cap(8), 8);
     }
 
     #[test]

@@ -52,6 +52,12 @@ impl Bitstream {
         self.words * 4
     }
 
+    /// Size in bits — the configuration-stream energy model's input
+    /// ([`crate::energy::EnergyModel::dpr_stream_pj`] charges per bit).
+    pub fn bits(&self) -> u64 {
+        self.words * 32
+    }
+
     /// Config words per array-slice (fast-DPR streams these in parallel).
     pub fn words_per_slice(&self) -> u64 {
         debug_assert!(self.array_slices > 0);

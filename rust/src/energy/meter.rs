@@ -1,0 +1,581 @@
+//! The energy accountant: integrates power over the simulation clock.
+//!
+//! One [`EnergyAccountant`] lives inside each [`crate::scheduler::Scheduler`]
+//! (so each fabric shard meters itself).  The scheduler calls
+//! [`EnergyAccountant::advance`] at the top of every state-changing
+//! entry point (schedule / complete / defrag), integrating the *previous*
+//! power state over the elapsed cycles — power is piecewise-constant
+//! between discrete events, so the integral is exact.
+//!
+//! The accountant doubles as the **power-cap governor**: with
+//! `energy.power_cap_watts > 0` it refuses launches whose projected
+//! draw would push the fabric over the cap ([`EnergyAccountant::admits`]),
+//! which also bounds the windowed average the wire protocol reports.
+//! A drained fabric always admits one task, so a cap below a single
+//! task's draw degrades to serial execution instead of deadlocking.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::abstraction::SliceDemand;
+use crate::regions::RegionId;
+
+use super::model::{ActivePower, EnergyModel, PJ_TO_J};
+
+/// Final energy accounting of one run (all values in joules).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnergyReport {
+    /// Total energy.
+    pub total_j: f64,
+    /// PE tiles computing.
+    pub pe_j: f64,
+    /// MEM tiles computing.
+    pub mem_j: f64,
+    /// GLB banks held (retention + streaming).
+    pub glb_j: f64,
+    /// Awake-but-unallocated slices plus over-held region slices.
+    pub idle_j: f64,
+    /// Power-gated slices (leakage floor).
+    pub gated_j: f64,
+    /// Fabric overhead (static while hosting work, deep sleep drained).
+    pub static_j: f64,
+    /// Configuration streaming (launch-time DPR).
+    pub dpr_j: f64,
+    /// Live-migration restream + bank copies.
+    pub migration_j: f64,
+    /// Wake handshakes of gated domains.
+    pub wake_j: f64,
+    /// Attributed joules per task id (active + DPR + migration share).
+    pub per_task: BTreeMap<String, f64>,
+    /// Attributed joules per tenant.
+    pub per_tenant: [f64; 4],
+    /// Cycles integrated over.
+    pub horizon_cycles: u64,
+    /// Mean power over the horizon, watts.
+    pub mean_watts: f64,
+    /// Highest windowed-average power observed, watts.
+    pub peak_window_watts: f64,
+    /// Launch options the power-cap governor refused.
+    pub throttled: u64,
+    /// Gated-domain wake events charged.
+    pub wakes: u64,
+}
+
+impl EnergyReport {
+    /// Sum of the per-component counters — the conservation invariant
+    /// checks this against `total_j`.
+    pub fn component_sum_j(&self) -> f64 {
+        self.pe_j
+            + self.mem_j
+            + self.glb_j
+            + self.idle_j
+            + self.gated_j
+            + self.static_j
+            + self.dpr_j
+            + self.migration_j
+            + self.wake_j
+    }
+
+    /// Fold another shard's report into this one (pool aggregation):
+    /// joules add, the horizon is the longest shard's, peaks take the
+    /// max, and the mean is re-derived from the merged totals.
+    pub fn merge(&mut self, other: &EnergyReport, clock_mhz: u32) {
+        self.total_j += other.total_j;
+        self.pe_j += other.pe_j;
+        self.mem_j += other.mem_j;
+        self.glb_j += other.glb_j;
+        self.idle_j += other.idle_j;
+        self.gated_j += other.gated_j;
+        self.static_j += other.static_j;
+        self.dpr_j += other.dpr_j;
+        self.migration_j += other.migration_j;
+        self.wake_j += other.wake_j;
+        for (task, j) in &other.per_task {
+            *self.per_task.entry(task.clone()).or_insert(0.0) += j;
+        }
+        for (mine, theirs) in self.per_tenant.iter_mut().zip(other.per_tenant.iter()) {
+            *mine += theirs;
+        }
+        self.horizon_cycles = self.horizon_cycles.max(other.horizon_cycles);
+        self.peak_window_watts = self.peak_window_watts.max(other.peak_window_watts);
+        self.throttled += other.throttled;
+        self.wakes += other.wakes;
+        let seconds = self.horizon_cycles as f64 / (clock_mhz as f64 * 1e6);
+        self.mean_watts = if seconds > 0.0 { self.total_j / seconds } else { 0.0 };
+    }
+}
+
+/// One running region's steady-state draw and attribution identity.
+#[derive(Clone, Debug)]
+struct RegionDraw {
+    power: ActivePower,
+    task: String,
+    tenant: u32,
+}
+
+/// Integrates per-component power into joule counters and enforces the
+/// power cap (see module docs).
+#[derive(Clone, Debug)]
+pub struct EnergyAccountant {
+    enabled: bool,
+    model: EnergyModel,
+    /// Cycle the accumulators are integrated up to.
+    last: u64,
+    /// Total pJ/cycle drawn at `last` (governor's projection base).
+    last_rate_pj: f64,
+    regions: BTreeMap<RegionId, RegionDraw>,
+    // cumulative pJ per component
+    pe: f64,
+    mem: f64,
+    glb: f64,
+    idle: f64,
+    gated: f64,
+    statik: f64,
+    dpr: f64,
+    migration: f64,
+    wake: f64,
+    total: f64,
+    per_task: BTreeMap<String, f64>,
+    per_tenant: [f64; 4],
+    /// (cycle, cumulative total pJ) checkpoints for the windowed average.
+    window: VecDeque<(u64, f64)>,
+    window_cycles: u64,
+    peak_window_pj: f64,
+    cap_pj: Option<f64>,
+    throttled: u64,
+    wakes: u64,
+}
+
+impl EnergyAccountant {
+    /// Accountant over `model`; a disabled accountant is a no-op on
+    /// every path (zero cost, zero state, `report()` returns `None`).
+    pub fn new(model: EnergyModel, enabled: bool) -> EnergyAccountant {
+        let window_cycles = model.config().power_window_cycles.max(1);
+        let cap_pj = if enabled { model.cap_pj_per_cycle() } else { None };
+        EnergyAccountant {
+            enabled,
+            model,
+            last: 0,
+            last_rate_pj: 0.0,
+            regions: BTreeMap::new(),
+            pe: 0.0,
+            mem: 0.0,
+            glb: 0.0,
+            idle: 0.0,
+            gated: 0.0,
+            statik: 0.0,
+            dpr: 0.0,
+            migration: 0.0,
+            wake: 0.0,
+            total: 0.0,
+            per_task: BTreeMap::new(),
+            per_tenant: [0.0; 4],
+            window: VecDeque::new(),
+            window_cycles,
+            peak_window_pj: 0.0,
+            cap_pj,
+            throttled: 0,
+            wakes: 0,
+        }
+    }
+
+    /// Whether accounting is active.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The resolved model (policy scoring reads the same numbers the
+    /// accountant charges).
+    pub fn model(&self) -> &EnergyModel {
+        &self.model
+    }
+
+    /// Integrate the piecewise-constant power state from the last
+    /// advance up to `now`.  `idle_free` / `gated_free` are the fabric's
+    /// current unallocated slice counts per class `(glb, array)`.
+    ///
+    /// A `now` earlier than the last advance resets the integration
+    /// baseline instead of integrating backwards — the serving leader
+    /// restarts its virtual clock per batch while the fabric is drained,
+    /// so cumulative joules stay correct across batches.
+    pub fn advance(&mut self, now: u64, idle_free: (u32, u32), gated_free: (u32, u32)) {
+        if !self.enabled {
+            return;
+        }
+        if now < self.last {
+            self.last = now;
+            self.window.clear();
+            self.window.push_back((now, self.total));
+            return;
+        }
+        let dt = (now - self.last) as f64;
+        // Rates are recomputed from the *current* state on every advance
+        // — including zero-dt ones — so the governor's projection base
+        // (`last_rate_pj`) tracks completions that freed slices back to
+        // idle within the same cycle, instead of going stale until the
+        // next time-advancing event.
+        let mut pe = 0.0;
+        let mut mem = 0.0;
+        let mut glb = 0.0;
+        let mut held_idle = 0.0;
+        for draw in self.regions.values() {
+            pe += draw.power.pe_pj;
+            mem += draw.power.mem_pj;
+            glb += draw.power.glb_pj;
+            held_idle += draw.power.held_idle_pj;
+        }
+        let idle_rate = held_idle
+            + idle_free.0 as f64 * self.model.glb_slice_idle_pj()
+            + idle_free.1 as f64 * self.model.array_slice_idle_pj();
+        let gated_rate = gated_free.0 as f64 * self.model.glb_slice_gated_pj()
+            + gated_free.1 as f64 * self.model.array_slice_gated_pj();
+        let static_rate = self.model.fabric_overhead_pj(!self.regions.is_empty());
+        let rate = pe + mem + glb + idle_rate + gated_rate + static_rate;
+        if dt > 0.0 {
+            self.pe += pe * dt;
+            self.mem += mem * dt;
+            self.glb += glb * dt;
+            self.idle += idle_rate * dt;
+            self.gated += gated_rate * dt;
+            self.statik += static_rate * dt;
+            self.total += rate * dt;
+            // active + over-held energy is attributed to the task/tenant
+            for draw in self.regions.values() {
+                let pj = draw.power.total() * dt;
+                *self.per_task.entry(draw.task.clone()).or_insert(0.0) += pj;
+                self.per_tenant[draw.tenant as usize % 4] += pj;
+            }
+            self.last = now;
+        }
+        self.last_rate_pj = rate;
+        self.push_window_point(now);
+    }
+
+    fn push_window_point(&mut self, now: u64) {
+        // same cycle: keep only the latest cumulative value
+        if matches!(self.window.back(), Some(&(at, _)) if at == now) {
+            self.window.pop_back();
+        }
+        self.window.push_back((now, self.total));
+        let horizon = now.saturating_sub(self.window_cycles);
+        // keep exactly one checkpoint at or before the window boundary —
+        // cumulative energy is piecewise-linear between checkpoints, so
+        // interpolating across that entry is exact
+        while self.window.len() > 2 && self.window[1].0 <= horizon {
+            self.window.pop_front();
+        }
+        let w = self.windowed_pj_per_cycle(now);
+        if w > self.peak_window_pj {
+            self.peak_window_pj = w;
+        }
+    }
+
+    /// Average pJ/cycle over the trailing window ending at `now`.
+    ///
+    /// The denominator is always the full window length: energy before
+    /// the accounting baseline counts as zero (the fabric was off), so
+    /// the average ramps up from a cold start instead of dividing a
+    /// one-shot launch charge by a micro-span and reporting a phantom
+    /// spike.  With the governor holding the instantaneous rate at or
+    /// below the cap, this average therefore can never exceed the cap
+    /// by more than the one-shot charges amortized over a whole window.
+    fn windowed_pj_per_cycle(&self, now: u64) -> f64 {
+        let start = now.saturating_sub(self.window_cycles);
+        let Some(&(c0, e0)) = self.window.front() else { return 0.0 };
+        // cumulative energy at the window start: the baseline value if
+        // the run is younger than one window, else interpolated on the
+        // piecewise-linear segment bracketing `start` (exact — energy
+        // is linear between event checkpoints)
+        let e_start = if c0 >= start {
+            e0
+        } else {
+            let mut prev = (c0, e0);
+            let mut at_start = e0;
+            for &(c, e) in self.window.iter() {
+                if c >= start {
+                    let span = (c - prev.0) as f64;
+                    at_start = if span > 0.0 {
+                        prev.1 + (e - prev.1) * ((start - prev.0) as f64 / span)
+                    } else {
+                        e
+                    };
+                    break;
+                }
+                prev = (c, e);
+            }
+            at_start
+        };
+        (self.total - e_start).max(0.0) / self.window_cycles as f64
+    }
+
+    /// Windowed average power at `now`, watts.
+    pub fn windowed_watts(&self, now: u64) -> f64 {
+        if !self.enabled {
+            return 0.0;
+        }
+        self.model.pj_per_cycle_to_watts(self.windowed_pj_per_cycle(now))
+    }
+
+    /// Windowed average power at the last integration point, watts.
+    pub fn current_windowed_watts(&self) -> f64 {
+        self.windowed_watts(self.last)
+    }
+
+    /// Total accumulated energy, joules.
+    pub fn total_joules(&self) -> f64 {
+        self.total * PJ_TO_J
+    }
+
+    /// Power-cap governor: may a launch drawing `add` more pJ/cycle
+    /// start now?  Uncapped (or disabled) accountants always admit; a
+    /// drained fabric admits one task regardless, guaranteeing progress.
+    pub fn admits(&mut self, add: &ActivePower) -> bool {
+        let Some(cap) = self.cap_pj else { return true };
+        if self.regions.is_empty() {
+            return true;
+        }
+        if self.last_rate_pj + add.total() <= cap {
+            true
+        } else {
+            self.throttled += 1;
+            false
+        }
+    }
+
+    /// Launch options refused by the governor so far.
+    pub fn throttled(&self) -> u64 {
+        self.throttled
+    }
+
+    /// Register a launched region's steady draw and charge its one-shot
+    /// launch costs (configuration stream + domain wake).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_launch(
+        &mut self,
+        region: RegionId,
+        demand: &SliceDemand,
+        held: &SliceDemand,
+        task: &str,
+        tenant: u32,
+        dpr_words: u64,
+        cache_hit: bool,
+        woken: (u32, u32),
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let power = self.model.region_power(demand, held);
+        let dpr_pj = self.model.dpr_stream_pj(dpr_words, cache_hit);
+        let wake_pj = self.model.wake_pj(woken.0, woken.1);
+        self.dpr += dpr_pj;
+        self.wake += wake_pj;
+        self.total += dpr_pj + wake_pj;
+        if woken.0 + woken.1 > 0 {
+            self.wakes += 1;
+        }
+        *self.per_task.entry(task.to_string()).or_insert(0.0) += dpr_pj + wake_pj;
+        self.per_tenant[tenant as usize % 4] += dpr_pj + wake_pj;
+        self.regions.insert(
+            region,
+            RegionDraw { power, task: task.to_string(), tenant },
+        );
+        // the steady-state draw changed; refresh the governor's base so
+        // back-to-back admits within one scheduling step stack up
+        self.last_rate_pj += power.total();
+    }
+
+    /// Drop a completed region's draw.
+    pub fn on_complete(&mut self, region: RegionId) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(draw) = self.regions.remove(&region) {
+            self.last_rate_pj = (self.last_rate_pj - draw.power.total()).max(0.0);
+        }
+    }
+
+    /// Charge one migration step's energy to a task/tenant: the
+    /// restream/copy bill (`pj`, migration component) plus the wake
+    /// bill when the relocation target was power-gated (`wake_pj`,
+    /// wake component).
+    pub fn on_migration(&mut self, pj: f64, wake_pj: f64, task: &str, tenant: u32) {
+        if !self.enabled {
+            return;
+        }
+        self.migration += pj;
+        self.wake += wake_pj;
+        self.total += pj + wake_pj;
+        *self.per_task.entry(task.to_string()).or_insert(0.0) += pj + wake_pj;
+        self.per_tenant[tenant as usize % 4] += pj + wake_pj;
+    }
+
+    /// Final report (`None` when accounting is disabled).
+    pub fn report(&self) -> Option<EnergyReport> {
+        if !self.enabled {
+            return None;
+        }
+        let seconds = self.last as f64 / (self.model.clock_mhz() as f64 * 1e6);
+        Some(EnergyReport {
+            total_j: self.total * PJ_TO_J,
+            pe_j: self.pe * PJ_TO_J,
+            mem_j: self.mem * PJ_TO_J,
+            glb_j: self.glb * PJ_TO_J,
+            idle_j: self.idle * PJ_TO_J,
+            gated_j: self.gated * PJ_TO_J,
+            static_j: self.statik * PJ_TO_J,
+            dpr_j: self.dpr * PJ_TO_J,
+            migration_j: self.migration * PJ_TO_J,
+            wake_j: self.wake * PJ_TO_J,
+            per_task: self
+                .per_task
+                .iter()
+                .map(|(k, v)| (k.clone(), v * PJ_TO_J))
+                .collect(),
+            per_tenant: [
+                self.per_tenant[0] * PJ_TO_J,
+                self.per_tenant[1] * PJ_TO_J,
+                self.per_tenant[2] * PJ_TO_J,
+                self.per_tenant[3] * PJ_TO_J,
+            ],
+            horizon_cycles: self.last,
+            mean_watts: if seconds > 0.0 { self.total * PJ_TO_J / seconds } else { 0.0 },
+            peak_window_watts: self.model.pj_per_cycle_to_watts(self.peak_window_pj),
+            throttled: self.throttled,
+            wakes: self.wakes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, EnergyConfig};
+
+    fn meter(enabled: bool) -> EnergyAccountant {
+        let model = EnergyModel::new(&ArchConfig::default(), &EnergyConfig::default());
+        EnergyAccountant::new(model, enabled)
+    }
+
+    #[test]
+    fn disabled_meter_is_inert() {
+        let mut m = meter(false);
+        m.advance(1000, (32, 8), (0, 0));
+        m.on_launch(
+            RegionId(0),
+            &SliceDemand::new(4, 2),
+            &SliceDemand::new(4, 2),
+            "t",
+            0,
+            1000,
+            true,
+            (0, 0),
+        );
+        assert_eq!(m.total_joules(), 0.0);
+        assert!(m.report().is_none());
+        assert!(m.admits(&ActivePower::default()));
+    }
+
+    #[test]
+    fn integrates_idle_floor_and_conserves() {
+        let mut m = meter(true);
+        m.advance(0, (32, 8), (0, 0));
+        m.advance(1_000_000, (32, 8), (0, 0));
+        let r = m.report().unwrap();
+        assert!(r.total_j > 0.0);
+        assert!((r.component_sum_j() - r.total_j).abs() <= 1e-9 * r.total_j.max(1.0));
+        assert_eq!(r.pe_j, 0.0, "no region ran");
+        assert!(r.idle_j > 0.0);
+        assert!(r.static_j > 0.0);
+        assert!(r.mean_watts > 0.0);
+    }
+
+    #[test]
+    fn launch_complete_cycle_attributes_energy() {
+        let mut m = meter(true);
+        let d = SliceDemand::new(4, 2);
+        m.advance(0, (32, 8), (0, 0));
+        m.on_launch(RegionId(7), &d, &d, "harris.corner", 3, 6656, true, (4, 2));
+        m.advance(100_000, (28, 6), (0, 0));
+        m.on_complete(RegionId(7));
+        m.advance(200_000, (32, 8), (0, 0));
+        let r = m.report().unwrap();
+        assert!(r.pe_j > 0.0 && r.mem_j > 0.0 && r.glb_j > 0.0);
+        assert!(r.dpr_j > 0.0);
+        assert!(r.wake_j > 0.0);
+        assert_eq!(r.wakes, 1);
+        assert!(r.per_task["harris.corner"] > 0.0);
+        assert!(r.per_tenant[3] > 0.0);
+        assert!((r.component_sum_j() - r.total_j).abs() <= 1e-9 * r.total_j);
+        // attribution never exceeds the total
+        assert!(r.per_tenant.iter().sum::<f64>() <= r.total_j);
+    }
+
+    #[test]
+    fn windowed_power_tracks_load_changes() {
+        let cfg = EnergyConfig { power_window_cycles: 10_000, ..EnergyConfig::default() };
+        let model = EnergyModel::new(&ArchConfig::default(), &cfg);
+        let mut m = EnergyAccountant::new(model, true);
+        let d = SliceDemand::new(32, 8);
+        m.advance(0, (32, 8), (0, 0));
+        m.on_launch(RegionId(0), &d, &d, "t", 0, 0, true, (0, 0));
+        m.advance(50_000, (0, 0), (0, 0));
+        let busy_w = m.windowed_watts(50_000);
+        m.on_complete(RegionId(0));
+        m.advance(200_000, (32, 8), (0, 0));
+        let idle_w = m.windowed_watts(200_000);
+        assert!(busy_w > 4.0 * idle_w, "busy {busy_w} vs idle {idle_w}");
+        let r = m.report().unwrap();
+        assert!(r.peak_window_watts >= busy_w - 1e-9);
+    }
+
+    #[test]
+    fn governor_throttles_above_cap_but_never_deadlocks() {
+        let cfg = EnergyConfig { power_cap_watts: 1.0, ..EnergyConfig::default() };
+        let model = EnergyModel::new(&ArchConfig::default(), &cfg);
+        let big = model.region_power(&SliceDemand::new(32, 8), &SliceDemand::new(32, 8));
+        let mut m = EnergyAccountant::new(model, true);
+        // drained fabric: always admits (progress guarantee)
+        assert!(m.admits(&big));
+        m.on_launch(
+            RegionId(0),
+            &SliceDemand::new(32, 8),
+            &SliceDemand::new(32, 8),
+            "t",
+            0,
+            0,
+            true,
+            (0, 0),
+        );
+        // now over cap: further launches are refused and counted
+        assert!(!m.admits(&big));
+        assert_eq!(m.throttled(), 1);
+        m.on_complete(RegionId(0));
+        assert!(m.admits(&big), "drained again");
+    }
+
+    #[test]
+    fn clock_restart_resets_baseline_without_negative_time() {
+        let mut m = meter(true);
+        m.advance(0, (32, 8), (0, 0));
+        m.advance(100_000, (32, 8), (0, 0));
+        let before = m.total_joules();
+        // leader batch restart: clock goes back to 0
+        m.advance(0, (32, 8), (0, 0));
+        assert_eq!(m.total_joules(), before, "no backwards integration");
+        m.advance(50_000, (32, 8), (0, 0));
+        assert!(m.total_joules() > before);
+    }
+
+    #[test]
+    fn merge_sums_and_rederives_mean() {
+        let mut m1 = meter(true);
+        m1.advance(0, (32, 8), (0, 0));
+        m1.advance(100_000, (32, 8), (0, 0));
+        let mut r1 = m1.report().unwrap();
+        let r2 = r1.clone();
+        let single_mean = r1.mean_watts;
+        r1.merge(&r2, 500);
+        assert!((r1.total_j - 2.0 * r2.total_j).abs() < 1e-12);
+        assert_eq!(r1.horizon_cycles, r2.horizon_cycles);
+        assert!((r1.mean_watts - 2.0 * single_mean).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,35 @@
+//! Energy accounting, power-gated slices, and the power-cap governor.
+//!
+//! The paper's abstractions exist so a scheduler can "reason about
+//! performance, energy, and utilization for different schedules" (§1);
+//! this module supplies the missing energy axis:
+//!
+//! * [`EnergyModel`] — per-cycle active/idle/gated costs for PE tiles,
+//!   MEM tiles and GLB banks (stream-port activity derived from
+//!   bandwidth), per-bit DPR stream energy, and migration copy energy,
+//!   parameterized by the `[energy]` TOML section
+//!   ([`crate::config::EnergyConfig`], Amber-derived defaults).
+//! * [`EnergyAccountant`] — integrates power over the simulation clock
+//!   into per-task, per-tenant and per-shard joule counters
+//!   ([`EnergyReport`]), and doubles as the **power-cap governor**: with
+//!   `energy.power_cap_watts` set it refuses launches that would push
+//!   the fabric past the cap, so the windowed average power stays below
+//!   it (the `BENCH_energy.json` acceptance bar).
+//!
+//! Power gating itself lives in [`crate::regions::RegionManager`]: a
+//! free slice is gated when its maximal free run reaches
+//! `energy.gate_min_run` slices, so scattered fragmentation holes stay
+//! awake at idle power — fragmentation costs watts, and the
+//! defragmentation subsystem ([`crate::migration`]) earns them back.
+//! Waking a gated domain charges `energy.wake_cycles` to the launch,
+//! exactly like DPR cycles.
+//!
+//! With `[energy]` absent (`enabled = false`, the default) every path
+//! here is inert and all pre-existing reports and traces are
+//! bit-for-bit unchanged.
+
+mod meter;
+mod model;
+
+pub use meter::{EnergyAccountant, EnergyReport};
+pub use model::{ActivePower, EnergyModel, PJ_TO_J};

@@ -1,0 +1,301 @@
+//! Per-component energy/power model.
+//!
+//! Everything is priced in **picojoules per core-clock cycle** and
+//! converted to watts/joules only at reporting boundaries: pJ/cycle ×
+//! clock (cycles/s) × 10⁻¹² = watts, and accumulated pJ × 10⁻¹² =
+//! joules.  Keeping the integrator in pJ/cycle makes the accounting an
+//! exact piecewise-constant sum over the discrete-event clock — the
+//! energy-conservation property in `tests/prop_energy.rs` holds to
+//! floating-point round-off, and repeat runs are byte-identical.
+
+use crate::abstraction::{RawUsage, SliceDemand};
+use crate::config::{ArchConfig, EnergyConfig};
+
+/// Joules per picojoule.
+pub const PJ_TO_J: f64 = 1e-12;
+
+/// Active-power breakdown of one allocated region, pJ/cycle.
+///
+/// Split per component so the accountant can integrate PE, MEM and GLB
+/// energy into separate conservation-checked counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ActivePower {
+    /// PE tiles computing.
+    pub pe_pj: f64,
+    /// MEM tiles computing.
+    pub mem_pj: f64,
+    /// GLB banks held: retention + stream-port switching.
+    pub glb_pj: f64,
+    /// Slices held by the region beyond the variant's demand (exclusive
+    /// and replicated allocations over-hold), burning idle power.
+    pub held_idle_pj: f64,
+}
+
+impl ActivePower {
+    /// Total pJ/cycle.
+    pub fn total(&self) -> f64 {
+        self.pe_pj + self.mem_pj + self.glb_pj + self.held_idle_pj
+    }
+}
+
+/// The per-component energy model, pre-resolved against an architecture.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    cfg: EnergyConfig,
+    /// PE tiles per array-slice.
+    pe_per_slice: u32,
+    /// MEM tiles per array-slice.
+    mem_per_slice: u32,
+    /// Peak stream bytes/cycle per GLB bank.
+    bank_bytes_per_cycle: u32,
+    /// Core clock, MHz (watt conversions).
+    clock_mhz: u32,
+}
+
+impl EnergyModel {
+    /// Resolve `cfg` against the architecture geometry.
+    pub fn new(arch: &ArchConfig, cfg: &EnergyConfig) -> EnergyModel {
+        EnergyModel {
+            cfg: cfg.clone(),
+            pe_per_slice: arch.pe_tiles_per_slice(),
+            mem_per_slice: arch.mem_tiles_per_slice(),
+            bank_bytes_per_cycle: arch.glb_bank_bytes_per_cycle,
+            clock_mhz: arch.core_clock_mhz,
+        }
+    }
+
+    /// The configuration this model was built from.
+    pub fn config(&self) -> &EnergyConfig {
+        &self.cfg
+    }
+
+    /// Core clock in MHz.
+    pub fn clock_mhz(&self) -> u32 {
+        self.clock_mhz
+    }
+
+    /// Convert a pJ/cycle rate into watts at the core clock.
+    pub fn pj_per_cycle_to_watts(&self, pj: f64) -> f64 {
+        pj * self.clock_mhz as f64 * 1e6 * PJ_TO_J
+    }
+
+    /// One awake-but-unallocated array-slice, pJ/cycle.
+    pub fn array_slice_idle_pj(&self) -> f64 {
+        self.pe_per_slice as f64 * self.cfg.pe_idle_pj
+            + self.mem_per_slice as f64 * self.cfg.mem_idle_pj
+    }
+
+    /// One power-gated array-slice, pJ/cycle.
+    pub fn array_slice_gated_pj(&self) -> f64 {
+        (self.pe_per_slice + self.mem_per_slice) as f64 * self.cfg.tile_gated_pj
+    }
+
+    /// One awake-but-unallocated GLB bank, pJ/cycle.
+    pub fn glb_slice_idle_pj(&self) -> f64 {
+        self.cfg.glb_idle_pj
+    }
+
+    /// One power-gated GLB bank, pJ/cycle.
+    pub fn glb_slice_gated_pj(&self) -> f64 {
+        self.cfg.glb_gated_pj
+    }
+
+    /// One computing array-slice, pJ/cycle.
+    pub fn array_slice_active_pj(&self) -> f64 {
+        self.pe_per_slice as f64 * self.cfg.pe_active_pj
+            + self.mem_per_slice as f64 * self.cfg.mem_active_pj
+    }
+
+    /// One held GLB bank streaming `bytes_per_cycle`, pJ/cycle.
+    pub fn glb_slice_active_pj(&self, bytes_per_cycle: f64) -> f64 {
+        self.cfg.glb_active_pj + bytes_per_cycle * self.cfg.glb_stream_pj_per_byte
+    }
+
+    /// Stream rate an active bank is assumed to sustain when only slice
+    /// counts are known (Table 1 rows): peak port bandwidth × duty.
+    pub fn assumed_bank_bytes_per_cycle(&self) -> f64 {
+        self.bank_bytes_per_cycle as f64 * self.cfg.stream_duty
+    }
+
+    /// Active power of a computing region: `demand` slices computing,
+    /// plus `held` − `demand` slices held at idle rates (`held` is the
+    /// region footprint; exclusive/replicated allocations over-hold).
+    pub fn region_power(&self, demand: &SliceDemand, held: &SliceDemand) -> ActivePower {
+        let bank_bw = self.assumed_bank_bytes_per_cycle();
+        let held_glb = held.glb_slices.saturating_sub(demand.glb_slices);
+        let held_arr = held.array_slices.saturating_sub(demand.array_slices);
+        ActivePower {
+            pe_pj: demand.array_slices as f64 * self.pe_per_slice as f64 * self.cfg.pe_active_pj,
+            mem_pj: demand.array_slices as f64
+                * self.mem_per_slice as f64
+                * self.cfg.mem_active_pj,
+            glb_pj: demand.glb_slices as f64 * self.glb_slice_active_pj(bank_bw),
+            held_idle_pj: held_arr as f64 * self.array_slice_idle_pj()
+                + held_glb as f64 * self.glb_slice_idle_pj(),
+        }
+    }
+
+    /// Power a raw (un-quantized) usage draws, in watts — the
+    /// bandwidth-derived stream-port activity path for demands that
+    /// carry a measured [`RawUsage`] instead of Table 1 slice counts.
+    pub fn usage_power_watts(&self, usage: &RawUsage, arch: &ArchConfig) -> f64 {
+        let demand = usage.quantize(arch);
+        // spread the measured bandwidth across the allocated banks
+        let bytes_per_cycle = if demand.glb_slices > 0 {
+            usage.glb_bw_bytes_per_sec
+                / (arch.core_clock_mhz as f64 * 1e6)
+                / demand.glb_slices as f64
+        } else {
+            0.0
+        };
+        let pj = demand.array_slices as f64 * self.array_slice_active_pj()
+            + demand.glb_slices as f64 * self.glb_slice_active_pj(bytes_per_cycle);
+        self.pj_per_cycle_to_watts(pj)
+    }
+
+    /// Configuration-stream energy of `words` 32-bit config words, pJ.
+    /// A cache miss pays the host DMA pass on top of the GLB stream.
+    pub fn dpr_stream_pj(&self, words: u64, cache_hit: bool) -> f64 {
+        let passes = if cache_hit { 1.0 } else { 2.0 };
+        words as f64 * 32.0 * self.cfg.dpr_pj_per_bit * passes
+    }
+
+    /// Migration-step energy: restream `restream_bits` of configuration
+    /// plus copy `glb_bytes_moved` bank-to-bank, pJ.
+    pub fn migration_step_pj(&self, restream_bits: u64, glb_bytes_moved: u64) -> f64 {
+        restream_bits as f64 * self.cfg.dpr_pj_per_bit
+            + glb_bytes_moved as f64 * self.cfg.glb_stream_pj_per_byte
+    }
+
+    /// One-shot wake energy of bringing gated domains up: the woken
+    /// domains burn idle power for the wake handshake.
+    pub fn wake_pj(&self, woken_glb: u32, woken_array: u32) -> f64 {
+        self.cfg.wake_cycles as f64
+            * (woken_array as f64 * self.array_slice_idle_pj()
+                + woken_glb as f64 * self.glb_slice_idle_pj())
+    }
+
+    /// Fabric overhead pJ/cycle: deep sleep when fully drained, static
+    /// otherwise.
+    pub fn fabric_overhead_pj(&self, any_region_active: bool) -> f64 {
+        if any_region_active {
+            self.cfg.fabric_static_pj
+        } else {
+            self.cfg.fabric_sleep_pj
+        }
+    }
+
+    /// Power-cap in pJ/cycle (`None` when uncapped).
+    pub fn cap_pj_per_cycle(&self) -> Option<f64> {
+        if self.cfg.power_cap_watts > 0.0 {
+            Some(self.cfg.power_cap_watts / (self.clock_mhz as f64 * 1e6 * PJ_TO_J))
+        } else {
+            None
+        }
+    }
+
+    /// Marginal pJ/cycle the fabric would *add* by hosting `demand`,
+    /// given its current awake-idle and gated free-slice counts and
+    /// whether it is currently drained (deep sleep).  Energy-aware pool
+    /// placement minimizes this.
+    pub fn marginal_placement_pj(
+        &self,
+        demand: &SliceDemand,
+        idle_free: (u32, u32),
+        drained: bool,
+    ) -> f64 {
+        let power = self.region_power(demand, demand);
+        // slices taken from the awake-idle pool stop drawing idle power
+        let reclaimed_glb = demand.glb_slices.min(idle_free.0) as f64 * self.glb_slice_idle_pj();
+        let reclaimed_arr =
+            demand.array_slices.min(idle_free.1) as f64 * self.array_slice_idle_pj();
+        let fabric_wake = if drained {
+            self.cfg.fabric_static_pj - self.cfg.fabric_sleep_pj
+        } else {
+            0.0
+        };
+        power.total() - reclaimed_glb - reclaimed_arr + fabric_wake
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> EnergyModel {
+        EnergyModel::new(&ArchConfig::default(), &EnergyConfig::default())
+    }
+
+    #[test]
+    fn default_fabric_lands_in_the_low_watt_range() {
+        let m = model();
+        // all 8 array slices + all 32 banks computing
+        let full = SliceDemand::new(32, 8);
+        let p = m.region_power(&full, &full);
+        let watts =
+            m.pj_per_cycle_to_watts(p.total() + m.fabric_overhead_pj(true));
+        assert!((1.0..10.0).contains(&watts), "full-fabric power {watts} W");
+        // idle floor is roughly a tenth of that
+        let idle = 8.0 * m.array_slice_idle_pj() + 32.0 * m.glb_slice_idle_pj();
+        let idle_w = m.pj_per_cycle_to_watts(idle + m.fabric_overhead_pj(true));
+        assert!(idle_w < watts / 3.0, "idle {idle_w} vs active {watts}");
+        // gated floor is far below idle
+        let gated = 8.0 * m.array_slice_gated_pj() + 32.0 * m.glb_slice_gated_pj();
+        let gated_w = m.pj_per_cycle_to_watts(gated + m.fabric_overhead_pj(false));
+        assert!(gated_w < idle_w / 10.0, "gated {gated_w} vs idle {idle_w}");
+    }
+
+    #[test]
+    fn region_power_charges_overheld_slices_at_idle() {
+        let m = model();
+        let demand = SliceDemand::new(4, 2);
+        let exact = m.region_power(&demand, &demand);
+        assert_eq!(exact.held_idle_pj, 0.0);
+        let hog = m.region_power(&demand, &SliceDemand::new(32, 8));
+        assert_eq!(hog.pe_pj, exact.pe_pj);
+        assert!(hog.held_idle_pj > 0.0);
+        let expect =
+            6.0 * m.array_slice_idle_pj() + 28.0 * m.glb_slice_idle_pj();
+        assert!((hog.held_idle_pj - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn usage_power_scales_with_bandwidth() {
+        let m = model();
+        let arch = ArchConfig::default();
+        let slow = RawUsage {
+            glb_bytes: 750 * 1024,
+            glb_bw_bytes_per_sec: 1e6,
+            pe_tiles: 80,
+            mem_tiles: 17,
+        };
+        let fast = RawUsage { glb_bw_bytes_per_sec: 10e9, ..slow };
+        assert!(m.usage_power_watts(&fast, &arch) > m.usage_power_watts(&slow, &arch));
+    }
+
+    #[test]
+    fn dpr_miss_pays_double_stream_energy() {
+        let m = model();
+        assert_eq!(m.dpr_stream_pj(1000, false), 2.0 * m.dpr_stream_pj(1000, true));
+    }
+
+    #[test]
+    fn cap_conversion_round_trips() {
+        let cfg = EnergyConfig { power_cap_watts: 2.0, ..EnergyConfig::default() };
+        let m = EnergyModel::new(&ArchConfig::default(), &cfg);
+        let pj = m.cap_pj_per_cycle().unwrap();
+        assert!((m.pj_per_cycle_to_watts(pj) - 2.0).abs() < 1e-12);
+        assert!(model().cap_pj_per_cycle().is_none());
+    }
+
+    #[test]
+    fn marginal_placement_prefers_awake_idle_over_drained() {
+        let m = model();
+        let d = SliceDemand::new(4, 2);
+        let on_awake = m.marginal_placement_pj(&d, (4, 2), false);
+        let on_gated = m.marginal_placement_pj(&d, (0, 0), false);
+        let on_drained = m.marginal_placement_pj(&d, (0, 0), true);
+        assert!(on_awake < on_gated, "{on_awake} vs {on_gated}");
+        assert!(on_gated < on_drained, "{on_gated} vs {on_drained}");
+    }
+}

@@ -5,6 +5,7 @@ use std::collections::BTreeMap;
 use crate::abstraction::SliceDemand;
 use crate::config::{Config, PlacementPolicyKind};
 use crate::dpr::DprMode;
+use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
 use crate::metrics::FragmentationGauge;
 use crate::migration::{MigrationReport, MigrationStats};
@@ -61,6 +62,11 @@ pub struct ShardSnapshot {
     pub gauge: FragmentationGauge,
     /// Cumulative live migrations.
     pub migrations: u64,
+    /// Joules accumulated by the shard's accountant (0 when `[energy]`
+    /// accounting is off).
+    pub energy_j: f64,
+    /// Windowed average power at the last integration, watts.
+    pub power_w: f64,
 }
 
 /// A pool of [`Scheduler`]-backed fabric shards behind a
@@ -224,6 +230,28 @@ impl FabricPool {
         (g / n, a / n)
     }
 
+    /// Active placement policy (observability surfaces report it).
+    pub fn placement(&self) -> PlacementPolicyKind {
+        self.router.policy()
+    }
+
+    /// Pool-wide energy report integrated up to `now`: every shard's
+    /// accountant advanced and merged (`None` when `[energy]` accounting
+    /// is off).
+    pub fn energy_report(&mut self, now: u64) -> Option<EnergyReport> {
+        let mut merged: Option<EnergyReport> = None;
+        for s in &mut self.shards {
+            let clock = s.sched.energy().model().clock_mhz();
+            if let Some(r) = s.sched.energy_report(now) {
+                match merged {
+                    None => merged = Some(r),
+                    Some(ref mut m) => m.merge(&r, clock),
+                }
+            }
+        }
+        merged
+    }
+
     /// Summed migration counters across shards.
     pub fn migration_stats(&self) -> MigrationStats {
         let mut agg = MigrationStats::default();
@@ -255,6 +283,8 @@ impl FabricPool {
                     array_utilization: ua,
                     gauge: FragmentationGauge::read(mgr),
                     migrations: s.sched.migration_stats().tasks_migrated,
+                    energy_j: s.sched.energy().total_joules(),
+                    power_w: s.sched.energy().current_windowed_watts(),
                 }
             })
             .collect()
@@ -344,7 +374,7 @@ impl FabricPool {
             .shards
             .get_mut(shard.0 as usize)
             .ok_or_else(|| Error::Sched(format!("completion on unknown shard {shard}")))?;
-        let inst = s.sched.complete(region)?;
+        let inst = s.sched.complete(region, now)?;
         let done = s.queue.mark_complete(inst, now)?;
         if let Some(ref req) = done {
             s.open = s.open.saturating_sub(1);
@@ -375,6 +405,7 @@ impl FabricPool {
 
     /// Point-in-time router inputs for every shard.
     fn loads(&self, demand: &SliceDemand) -> Vec<ShardLoad> {
+        let energy_aware = self.router.policy() == PlacementPolicyKind::EnergyAware;
         self.shards
             .iter()
             .map(|s| {
@@ -387,6 +418,13 @@ impl FabricPool {
                     array_slices: mgr.array_map().len(),
                     feasible: mgr.can_ever_fit(demand),
                     fits_now: mgr.can_fit_now(demand),
+                    // scored only under the energy-aware policy; skip
+                    // the model walk otherwise
+                    marginal_pj: if energy_aware {
+                        s.sched.marginal_placement_pj(demand)
+                    } else {
+                        0.0
+                    },
                 }
             })
             .collect()
@@ -499,6 +537,49 @@ mod tests {
         // another tenant lands on the other shard (least-loaded first hop)
         let other = p.try_submit(req(9, 2, AppId::Harris), 0).unwrap();
         assert_ne!(other, first);
+    }
+
+    /// Sticky fallback end-to-end: a tenant whose pinned shard is
+    /// saturated (window-filtered out of the placement loads) must
+    /// overflow deterministically to the other shard, keep the pin, and
+    /// resume affinity once the pinned shard drains — even when the
+    /// pinned shard is then the *busier* choice.
+    #[test]
+    fn sticky_saturated_pin_falls_back_then_resticks() {
+        let mut cfg = presets::pool_scenario(2, PlacementPolicyKind::Sticky);
+        cfg.pool.admission_window = 2;
+        let mut p = FabricPool::new(&cfg, TaskLibrary::table1(), DprMode::Fast).unwrap();
+        p.preload_all();
+
+        // tenant 1 pins shard 0 and fills its admission window
+        assert_eq!(p.try_submit(req(0, 1, AppId::Harris), 0), Some(ShardId(0)));
+        assert_eq!(p.try_submit(req(1, 1, AppId::Harris), 0), Some(ShardId(0)));
+        // pinned shard saturated: both overflow requests fall back to
+        // shard 1, deterministically, without disturbing the pin
+        assert_eq!(p.try_submit(req(2, 1, AppId::Harris), 0), Some(ShardId(1)));
+        assert_eq!(p.try_submit(req(3, 1, AppId::Harris), 0), Some(ShardId(1)));
+        // every window full: pool-level BUSY
+        assert_eq!(p.try_submit(req(4, 1, AppId::Harris), 0), None);
+
+        // drain everything
+        let launches = p.schedule(0);
+        for (shard, l) in &launches {
+            p.complete(*shard, l.region, l.finish).unwrap();
+        }
+        let more = p.schedule(1_000_000_000);
+        for (shard, l) in &more {
+            p.complete(*shard, l.region, l.finish).unwrap();
+        }
+        assert_eq!(p.open_requests(), 0);
+
+        // load shard 1 less than shard 0 via another tenant, then show
+        // tenant 1 still resticks to shard 0 (affinity beats load)
+        assert_eq!(p.try_submit(req(10, 2, AppId::Harris), 0), Some(ShardId(0)));
+        assert_eq!(
+            p.try_submit(req(11, 1, AppId::Harris), 0),
+            Some(ShardId(0)),
+            "pin must resume once the shard is back under the window"
+        );
     }
 
     #[test]

@@ -40,6 +40,11 @@ pub struct ShardLoad {
     /// Whether that demand fits *right now*
     /// ([`crate::regions::RegionManager::can_fit_now`]).
     pub fits_now: bool,
+    /// Marginal pJ/cycle the shard would add by hosting the demand
+    /// ([`crate::scheduler::Scheduler::marginal_placement_pj`]) — the
+    /// energy-aware placement score.  0 for the other policies' inputs
+    /// is harmless: they never read it.
+    pub marginal_pj: f64,
 }
 
 /// Scores ready requests across the shards of a [`super::FabricPool`].
@@ -73,6 +78,7 @@ impl FabricRouter {
         match self.policy {
             PlacementPolicyKind::LeastLoaded => Self::least_loaded(loads),
             PlacementPolicyKind::BestFit => Self::best_fit(loads),
+            PlacementPolicyKind::EnergyAware => Self::energy_aware(loads),
             PlacementPolicyKind::Sticky => {
                 if let Some(&s) = self.sticky.get(&tenant) {
                     match loads.iter().find(|l| l.shard == s) {
@@ -99,6 +105,30 @@ impl FabricRouter {
         loads
             .iter()
             .min_by_key(|l| (!l.feasible, l.open_requests, l.busy_array, l.shard.0))
+            .expect("non-empty loads")
+            .shard
+    }
+
+    /// Smallest marginal power first, among shards that can host the
+    /// demand right now (queueing onto a shard that cannot fit wastes
+    /// the energy argument); least-loaded order breaks exact ties, so
+    /// requests consolidate deterministically and drained shards stay
+    /// in deep sleep.
+    fn energy_aware(loads: &[ShardLoad]) -> ShardId {
+        loads
+            .iter()
+            .min_by(|a, b| {
+                (!a.feasible, !a.fits_now)
+                    .cmp(&(!b.feasible, !b.fits_now))
+                    .then(a.marginal_pj.total_cmp(&b.marginal_pj))
+                    .then_with(|| {
+                        (a.open_requests, a.busy_array, a.shard.0).cmp(&(
+                            b.open_requests,
+                            b.busy_array,
+                            b.shard.0,
+                        ))
+                    })
+            })
             .expect("non-empty loads")
             .shard
     }
@@ -137,6 +167,7 @@ mod tests {
             array_slices: 8,
             feasible: true,
             fits_now: true,
+            marginal_pj: 0.0,
         }
     }
 
@@ -178,6 +209,25 @@ mod tests {
     }
 
     #[test]
+    fn energy_aware_minimizes_marginal_power_then_consolidates() {
+        let mut r = FabricRouter::new(PlacementPolicyKind::EnergyAware);
+        // the busier shard has the lower marginal power (its domains are
+        // already awake): consolidation wins over spreading
+        let awake = ShardLoad { marginal_pj: 100.0, ..load(0, 5, 6) };
+        let asleep = ShardLoad { marginal_pj: 600.0, ..load(1, 0, 0) };
+        assert_eq!(r.place(0, &[awake, asleep]), ShardId(0));
+        // ...but a shard that cannot host the demand right now loses
+        // regardless of its marginal power
+        let mut full = awake;
+        full.fits_now = false;
+        assert_eq!(r.place(0, &[full, asleep]), ShardId(1));
+        // exact marginal ties fall back to least-loaded order
+        let a = ShardLoad { marginal_pj: 50.0, ..load(0, 3, 0) };
+        let b = ShardLoad { marginal_pj: 50.0, ..load(1, 1, 0) };
+        assert_eq!(r.place(0, &[a, b]), ShardId(1));
+    }
+
+    #[test]
     fn sticky_keeps_tenants_on_their_first_shard() {
         let mut r = FabricRouter::new(PlacementPolicyKind::Sticky);
         let first = r.place(7, &[load(0, 3, 0), load(1, 0, 0)]);
@@ -188,6 +238,19 @@ mod tests {
         let mut pinned = load(1, 9, 8);
         pinned.feasible = false;
         assert_eq!(r.place(7, &[load(0, 0, 0), pinned]), ShardId(0));
+    }
+
+    #[test]
+    fn sticky_repins_after_infeasible_and_the_new_pin_holds() {
+        let mut r = FabricRouter::new(PlacementPolicyKind::Sticky);
+        assert_eq!(r.place(5, &[load(0, 0, 0), load(1, 1, 0)]), ShardId(0), "pin 0");
+        // the pinned shard can never host the demand: re-pin least-loaded
+        let mut bad = load(0, 0, 0);
+        bad.feasible = false;
+        assert_eq!(r.place(5, &[bad, load(1, 9, 8)]), ShardId(1), "re-pin");
+        // the new pin is durable even once shard 0 is feasible and idle
+        assert_eq!(r.place(5, &[load(0, 0, 0), load(1, 9, 8)]), ShardId(1));
+        assert_eq!(r.sticky.get(&5), Some(&ShardId(1)));
     }
 
     #[test]

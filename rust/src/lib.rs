@@ -15,9 +15,11 @@
 //!   execution regions ([`regions`]), fast dynamic partial reconfiguration
 //!   ([`dpr`]), the greedy multi-task scheduler ([`scheduler`]), the
 //!   live-migration defragmentation subsystem ([`migration`]), the
-//!   discrete-event CGRA timing model ([`sim`]), the sharded fabric pool
-//!   with placement routing ([`fabric`]), and the multi-tenant request
-//!   coordinator ([`coordinator`]).
+//!   per-component energy model, power-gated slices and power-cap
+//!   governor ([`energy`]), the discrete-event CGRA timing model
+//!   ([`sim`]), the sharded fabric pool with placement routing
+//!   ([`fabric`]), and the multi-tenant request coordinator
+//!   ([`coordinator`]).
 //! * **Runtime** — [`runtime`] executes the artifacts on the request
 //!   path.  Two backends serve one API: the default deterministic
 //!   in-process stub (fully offline), and the PJRT C API client
@@ -41,6 +43,7 @@ pub mod compiler;
 pub mod config;
 pub mod coordinator;
 pub mod dpr;
+pub mod energy;
 pub mod error;
 pub mod fabric;
 pub mod metrics;

@@ -80,13 +80,16 @@ fn print_usage() {
            --requests N       serve: number of requests (default 12)\n\
            --artifacts DIR    artifacts directory (default: artifacts/ if built,\n\
                               else the stub backend's built-in 'synthetic' set)\n\
-           --config F         TOML config file (overrides defaults)\n\
+           --config F         TOML config file (overrides defaults; an [energy]\n\
+                              section arms accounting/gating/power-cap governor)\n\
            --export FILE      write per-request/per-frame CSV (simulate-*)\n\
+           --export-energy F  write energy_json when [energy].enabled (simulate-*)\n\
            --bind ADDR        serve-tcp bind address (default 127.0.0.1:7070)\n\
            --workers N        serve-tcp scheduler workers (default 2)\n\
            --queue-depth N    serve-tcp per-tenant admission queue depth (default 32)\n\
            --shards N         serve-tcp fabric-pool shard count (default 1)\n\
-           --placement P      serve-tcp pool placement: least-loaded | best-fit | sticky"
+           --placement P      serve-tcp pool placement: least-loaded | best-fit |\n\
+                              sticky | energy-aware"
     );
 }
 
@@ -144,6 +147,21 @@ impl Flags {
     }
 }
 
+/// Shared `--export-energy` handling for the simulate commands.
+fn export_energy_json(
+    flags: &Flags,
+    energy: &cgra_mte::energy::EnergyReport,
+) -> cgra_mte::Result<()> {
+    if let Some(path) = flags.get("export-energy") {
+        cgra_mte::metrics::export::write_file(
+            path,
+            &cgra_mte::metrics::export::energy_json(energy),
+        )?;
+        println!("wrote energy JSON to {path}");
+    }
+    Ok(())
+}
+
 fn simulate_cloud(flags: &Flags) -> cgra_mte::Result<()> {
     let policy = flags.policy()?;
     let mut cfg = flags.base_config(presets::cloud_scenario(policy))?;
@@ -184,6 +202,20 @@ fn simulate_cloud(flags: &Flags) -> cgra_mte::Result<()> {
         report.glb_utilization * 100.0,
         report.dpr_stats.hit_rate() * 100.0,
     );
+    if let Some(ref energy) = report.energy {
+        println!(
+            "energy: {:.4} J total (mean {:.3} W, peak window {:.3} W); \
+             gated {:.4} J, idle {:.4} J, wakes {}, throttled {}",
+            energy.total_j,
+            energy.mean_watts,
+            energy.peak_window_watts,
+            energy.gated_j,
+            energy.idle_j,
+            energy.wakes,
+            energy.throttled,
+        );
+        export_energy_json(flags, energy)?;
+    }
     Ok(())
 }
 
@@ -221,6 +253,13 @@ fn simulate_edge(flags: &Flags) -> cgra_mte::Result<()> {
             &cgra_mte::metrics::export::latency_csv(&report.latency),
         )?;
         println!("wrote per-frame CSV to {path}");
+    }
+    if let Some(ref energy) = report.energy {
+        println!(
+            "energy: {:.4} J total (mean {:.3} W, peak window {:.3} W); wakes {}",
+            energy.total_j, energy.mean_watts, energy.peak_window_watts, energy.wakes,
+        );
+        export_energy_json(flags, energy)?;
     }
     Ok(())
 }

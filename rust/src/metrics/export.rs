@@ -91,13 +91,16 @@ pub fn fragmentation_json(g: &FragmentationGauge) -> String {
 
 /// One-line JSON rendering of a fabric pool's per-shard state — the
 /// machine-readable companion to the `STATS SHARDS` wire lines, built
-/// from [`crate::fabric::FabricPool::snapshots`].
-pub fn pool_json(shards: &[crate::fabric::ShardSnapshot]) -> String {
+/// from [`crate::fabric::FabricPool::snapshots`].  `placement` names
+/// the active routing policy
+/// ([`crate::config::PlacementPolicyKind::name`]) so operators can tell
+/// which policy a shard pool is actually running.
+pub fn pool_json(placement: &str, shards: &[crate::fabric::ShardSnapshot]) -> String {
     let per: Vec<String> = shards
         .iter()
         .map(|s| {
             format!(
-                r#"{{"shard":{},"open_requests":{},"running":{},"launches":{},"glb_util":{:.6},"array_util":{:.6},"glb_frag":{:.6},"array_frag":{:.6},"migrations":{}}}"#,
+                r#"{{"shard":{},"open_requests":{},"running":{},"launches":{},"glb_util":{:.6},"array_util":{:.6},"glb_frag":{:.6},"array_frag":{:.6},"migrations":{},"energy_j":{:.6},"power_w":{:.6}}}"#,
                 s.shard,
                 s.open_requests,
                 s.running,
@@ -107,10 +110,51 @@ pub fn pool_json(shards: &[crate::fabric::ShardSnapshot]) -> String {
                 s.gauge.glb_frag,
                 s.gauge.array_frag,
                 s.migrations,
+                s.energy_j,
+                s.power_w,
             )
         })
         .collect();
-    format!(r#"{{"shards":{},"per_shard":[{}]}}"#, shards.len(), per.join(","))
+    format!(
+        r#"{{"shards":{},"placement":"{}","per_shard":[{}]}}"#,
+        shards.len(),
+        placement,
+        per.join(",")
+    )
+}
+
+/// One-line JSON rendering of an [`crate::energy::EnergyReport`] — the
+/// machine-readable companion to `STATS ENERGY`, written by the energy
+/// ablation bench and scraped by experiment pipelines.  Per-component
+/// joules are emitted alongside the total so conservation is checkable
+/// from the export alone.
+pub fn energy_json(r: &crate::energy::EnergyReport) -> String {
+    let per_task: Vec<String> = r
+        .per_task
+        .iter()
+        .map(|(task, j)| format!(r#""{task}":{j:.9}"#))
+        .collect();
+    let per_tenant: Vec<String> = r.per_tenant.iter().map(|j| format!("{j:.9}")).collect();
+    format!(
+        r#"{{"total_j":{:.9},"pe_j":{:.9},"mem_j":{:.9},"glb_j":{:.9},"idle_j":{:.9},"gated_j":{:.9},"static_j":{:.9},"dpr_j":{:.9},"migration_j":{:.9},"wake_j":{:.9},"horizon_cycles":{},"mean_watts":{:.6},"peak_window_watts":{:.6},"throttled":{},"wakes":{},"per_tenant":[{}],"per_task":{{{}}}}}"#,
+        r.total_j,
+        r.pe_j,
+        r.mem_j,
+        r.glb_j,
+        r.idle_j,
+        r.gated_j,
+        r.static_j,
+        r.dpr_j,
+        r.migration_j,
+        r.wake_j,
+        r.horizon_cycles,
+        r.mean_watts,
+        r.peak_window_watts,
+        r.throttled,
+        r.wakes,
+        per_tenant.join(","),
+        per_task.join(","),
+    )
 }
 
 /// Frame latency breakdown as CSV (`frame,reconfig,wait_exec,total`).
@@ -199,15 +243,47 @@ mod tests {
 
         let cfg = presets::pool_scenario(2, PlacementPolicyKind::LeastLoaded);
         let pool = FabricPool::new(&cfg, TaskLibrary::table1(), DprMode::Fast).unwrap();
-        let line = pool_json(&pool.snapshots());
+        let line = pool_json(pool.placement().name(), &pool.snapshots());
         let v = crate::util::json::Json::parse(&line).unwrap();
         assert_eq!(v.req_f64("shards").unwrap(), 2.0);
+        assert_eq!(
+            v.get("placement").and_then(|p| p.as_str()),
+            Some("least-loaded"),
+            "operators must see the active placement policy"
+        );
         let per = v.get("per_shard").unwrap().items();
         assert_eq!(per.len(), 2);
         assert_eq!(per[0].req_f64("shard").unwrap(), 0.0);
         assert_eq!(per[1].req_f64("shard").unwrap(), 1.0);
         assert_eq!(per[0].req_f64("running").unwrap(), 0.0);
         assert_eq!(per[0].req_f64("glb_frag").unwrap(), 0.0);
+        assert_eq!(per[0].req_f64("energy_j").unwrap(), 0.0, "accounting off by default");
+    }
+
+    #[test]
+    fn energy_json_parses_and_conserves() {
+        use crate::config::{presets, RegionPolicyKind, WorkloadConfig};
+        use crate::sim::run_cloud;
+
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.energy.enabled = true;
+        if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.duration_ms = 200.0;
+        }
+        let r = run_cloud(&cfg).unwrap();
+        let energy = r.energy.expect("accounting enabled");
+        let line = energy_json(&energy);
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        let total = v.req_f64("total_j").unwrap();
+        assert!(total > 0.0);
+        let sum = ["pe_j", "mem_j", "glb_j", "idle_j", "gated_j", "static_j", "dpr_j",
+                   "migration_j", "wake_j"]
+            .iter()
+            .map(|k| v.req_f64(k).unwrap())
+            .sum::<f64>();
+        assert!((sum - total).abs() <= 1e-6 * total, "{sum} vs {total}");
+        assert_eq!(v.get("per_tenant").unwrap().items().len(), 4);
+        assert!(v.req_f64("mean_watts").unwrap() > 0.0);
     }
 
     #[test]

@@ -95,6 +95,14 @@ mod tests {
     }
 
     #[test]
+    fn moved_glb_slices_feeds_the_energy_model() {
+        // cycle cost is one bank's span (pairwise-parallel copies), but
+        // energy scales with every moved bank
+        assert_eq!(step(true, true).moved_glb_slices(), 4);
+        assert_eq!(step(false, true).moved_glb_slices(), 0);
+    }
+
+    #[test]
     fn zero_model_is_free() {
         let m = MigrationCostModel::new(&ArchConfig::default(), MigrationCostModelKind::Zero);
         assert_eq!(m.step_cycles(&step(true, true), 3344), 0);

@@ -11,6 +11,8 @@
 //! pass could deadlock on (A's GLB target under B's old banks while B's
 //! array target sits under A's old slices).
 
+use std::collections::BTreeMap;
+
 use crate::error::Result;
 use crate::regions::{RegionId, RegionManager};
 
@@ -25,6 +27,10 @@ pub struct MigrationRecord {
     pub cycles: u64,
     /// The step that was applied.
     pub step: MigrationStep,
+    /// `(glb, array)` power-gated domains the relocation woke
+    /// ([`crate::regions::RegionManager::relocate`]); `(0, 0)` unless
+    /// gating is armed.  The scheduler charges the wake energy.
+    pub woken: (u32, u32),
 }
 
 /// Result of executing a plan.
@@ -48,12 +54,20 @@ pub fn execute_plan(
 ) -> Result<MigrationOutcome> {
     debug_assert_eq!(plan.steps.len(), costs.len(), "one cost per step");
 
+    let mut woken: BTreeMap<RegionId, (u32, u32)> = BTreeMap::new();
+    let mut record_woken = |region: RegionId, w: (u32, u32)| {
+        let e = woken.entry(region).or_insert((0, 0));
+        e.0 += w.0;
+        e.1 += w.1;
+    };
+
     // Pass 1: array-slice relocations, ascending target start.
     let mut array_moves: Vec<&MigrationStep> =
         plan.steps.iter().filter(|s| s.moves_array()).collect();
     array_moves.sort_by_key(|s| s.to_array.start);
     for s in array_moves {
-        mgr.relocate(s.region, None, Some(s.to_array))?;
+        let w = mgr.relocate(s.region, None, Some(s.to_array))?;
+        record_woken(s.region, w);
     }
 
     // Pass 2: GLB-slice relocations, ascending target start.
@@ -61,14 +75,20 @@ pub fn execute_plan(
         plan.steps.iter().filter(|s| s.moves_glb()).collect();
     glb_moves.sort_by_key(|s| s.to_glb.start);
     for s in glb_moves {
-        mgr.relocate(s.region, Some(s.to_glb), None)?;
+        let w = mgr.relocate(s.region, Some(s.to_glb), None)?;
+        record_woken(s.region, w);
     }
 
     let records: Vec<MigrationRecord> = plan
         .steps
         .iter()
         .zip(costs.iter())
-        .map(|(s, &cycles)| MigrationRecord { region: s.region, cycles, step: *s })
+        .map(|(s, &cycles)| MigrationRecord {
+            region: s.region,
+            cycles,
+            step: *s,
+            woken: woken.get(&s.region).copied().unwrap_or((0, 0)),
+        })
         .collect();
     let total_cycles = records.iter().map(|r| r.cycles).sum();
     Ok(MigrationOutcome { records, total_cycles })

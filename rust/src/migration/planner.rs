@@ -31,6 +31,20 @@ impl MigrationStep {
     pub fn moves_array(&self) -> bool {
         self.from_array != self.to_array
     }
+
+    /// GLB slices whose bank contents the step must copy (0 when the
+    /// GLB range stays put) — the migration energy model's bank-copy
+    /// input ([`crate::energy::EnergyModel::migration_step_pj`] charges
+    /// per byte moved; the *cycle* cost model charges only one bank's
+    /// span because banks copy pairwise in parallel, but every moved
+    /// bank's bytes switch, so energy scales with this count).
+    pub fn moved_glb_slices(&self) -> u32 {
+        if self.moves_glb() {
+            self.to_glb.len
+        } else {
+            0
+        }
+    }
 }
 
 /// An ordered set of relocations that left-compacts the busy slices.

@@ -44,6 +44,11 @@ pub struct RegionManager {
     unit: SliceDemand,
     regions: BTreeMap<RegionId, ExecutionRegion>,
     next_id: u64,
+    /// Power-gate free slices ([`crate::energy`]); off by default so the
+    /// pre-energy behavior is untouched.
+    gating: bool,
+    /// Minimum contiguous free run a domain needs before it gates.
+    gate_min_run: u32,
 }
 
 impl RegionManager {
@@ -56,7 +61,48 @@ impl RegionManager {
             unit: SliceDemand::new(sched.unit_glb_slices, sched.unit_array_slices),
             regions: BTreeMap::new(),
             next_id: 0,
+            gating: false,
+            gate_min_run: 1,
         }
+    }
+
+    /// Arm power gating: a free slice is gated exactly when its maximal
+    /// free run spans at least `min_run` slices (scattered fragmentation
+    /// holes stay awake — they cost idle watts until a defragmentation
+    /// pass merges them).  Gating state is *derived* from the occupancy
+    /// maps, so release and relocation re-gate vacated slices with no
+    /// extra bookkeeping; [`RegionManager::gated_counts`] reads it and
+    /// committed allocations report the domains they woke via
+    /// [`ExecutionRegion::woken`].
+    pub fn set_gating(&mut self, enabled: bool, min_run: u32) {
+        self.gating = enabled;
+        self.gate_min_run = min_run.max(1);
+    }
+
+    /// Whether power gating is armed.
+    pub fn gating_enabled(&self) -> bool {
+        self.gating
+    }
+
+    /// Currently gated free slices, `(glb, array)`.
+    pub fn gated_counts(&self) -> (u32, u32) {
+        if !self.gating {
+            return (0, 0);
+        }
+        (
+            gated_count(&self.glb, self.gate_min_run),
+            gated_count(&self.array, self.gate_min_run),
+        )
+    }
+
+    /// Awake-but-unallocated free slices, `(glb, array)` — the idle
+    /// complement of [`RegionManager::gated_counts`].
+    pub fn idle_free_counts(&self) -> (u32, u32) {
+        let (gg, ga) = self.gated_counts();
+        (
+            self.glb.free_count() - gg,
+            self.array.free_count() - ga,
+        )
     }
 
     /// Active mechanism.
@@ -244,12 +290,19 @@ impl RegionManager {
     /// current slices count as free, so overlapping shifts are fine).
     /// On any validation failure the occupancy maps are left exactly as
     /// they were.
+    ///
+    /// Returns the `(glb, array)` slices the move woke from power
+    /// gating — a relocation target inside a gated free run transitions
+    /// those domains to active just like an allocation would, and the
+    /// migration energy accounting charges the wake ([`crate::energy`]).
+    /// Always `(0, 0)` with gating off; the vacated slices re-gate
+    /// automatically (gating is derived from the free runs).
     pub fn relocate(
         &mut self,
         id: RegionId,
         new_glb: Option<SliceRange>,
         new_array: Option<SliceRange>,
-    ) -> Result<()> {
+    ) -> Result<(u32, u32)> {
         let region = self
             .regions
             .get(&id)
@@ -272,6 +325,17 @@ impl RegionManager {
         if tgt_glb.end() > self.glb.len() || tgt_arr.end() > self.array.len() {
             return Err(Error::Alloc(format!("relocation target out of bounds for {id}")));
         }
+        // Gated domains the targets overlap, measured *before* the
+        // region's own (awake) slices are temporarily freed below, so a
+        // self-overlapping shift never counts its own slices as woken.
+        let woken = if self.gating {
+            (
+                gated_overlap(&self.glb, &[tgt_glb], self.gate_min_run),
+                gated_overlap(&self.array, &[tgt_arr], self.gate_min_run),
+            )
+        } else {
+            (0, 0)
+        };
         // Free the region's own slices so self-overlapping shifts pass
         // the target check; restore them if the target is busy.
         self.glb.release(&cur_glb);
@@ -282,7 +346,7 @@ impl RegionManager {
             let r = self.regions.get_mut(&id).expect("looked up above");
             r.glb = vec![tgt_glb];
             r.array = vec![tgt_arr];
-            Ok(())
+            Ok(woken)
         } else {
             self.glb.occupy(&cur_glb);
             self.array.occupy(&cur_arr);
@@ -303,6 +367,15 @@ impl RegionManager {
         array: Vec<SliceRange>,
         replicas: u32,
     ) -> ExecutionRegion {
+        // how many gated domains this allocation wakes (before occupying)
+        let (woken_glb, woken_array) = if self.gating {
+            (
+                gated_overlap(&self.glb, &glb, self.gate_min_run),
+                gated_overlap(&self.array, &array, self.gate_min_run),
+            )
+        } else {
+            (0, 0)
+        };
         for r in &glb {
             self.glb.occupy(r);
         }
@@ -311,7 +384,7 @@ impl RegionManager {
         }
         let id = RegionId(self.next_id);
         self.next_id += 1;
-        let region = ExecutionRegion { id, glb, array, replicas };
+        let region = ExecutionRegion { id, glb, array, replicas, woken_glb, woken_array };
         self.regions.insert(id, region.clone());
         region
     }
@@ -387,6 +460,34 @@ impl RegionManager {
         };
         AllocOutcome::Allocated(self.commit(vec![glb], vec![array], 1))
     }
+}
+
+/// Free slices of `map` lying in free runs of at least `min_run`.
+fn gated_count(map: &SliceMap, min_run: u32) -> u32 {
+    map.free_runs()
+        .iter()
+        .filter(|r| r.len >= min_run)
+        .map(|r| r.len)
+        .sum()
+}
+
+/// Slices of `ranges` that are currently gated in `map` (free runs of
+/// at least `min_run`) — what an allocation over them must wake.
+fn gated_overlap(map: &SliceMap, ranges: &[SliceRange], min_run: u32) -> u32 {
+    let mut woken = 0;
+    for run in map.free_runs() {
+        if run.len < min_run {
+            continue;
+        }
+        for r in ranges {
+            if r.overlaps(&run) {
+                let lo = r.start.max(run.start);
+                let hi = r.end().min(run.end());
+                woken += hi - lo;
+            }
+        }
+    }
+    woken
 }
 
 /// Merge adjacent/overlapping ranges into maximal sorted runs.
@@ -720,6 +821,61 @@ mod tests {
             // oversized demands are never claimed to fit
             assert!(!m.can_fit_now(&SliceDemand::new(33, 9)), "{policy:?}");
         }
+    }
+
+    // ---------------------------------------------------------- gating
+
+    #[test]
+    fn gating_off_reports_nothing_and_wakes_nothing() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        assert!(!m.gating_enabled());
+        assert_eq!(m.gated_counts(), (0, 0));
+        let r = m.try_allocate(&SliceDemand::new(4, 2)).expect_allocated("r");
+        assert_eq!(r.woken(), (0, 0));
+    }
+
+    #[test]
+    fn fresh_fabric_is_fully_gated_and_allocations_wake_it() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        m.set_gating(true, 4);
+        assert_eq!(m.gated_counts(), (32, 8), "whole-fabric free runs gate");
+        assert_eq!(m.idle_free_counts(), (0, 0));
+        let r = m.try_allocate(&SliceDemand::new(4, 2)).expect_allocated("r");
+        assert_eq!(r.woken(), (4, 2), "allocation woke its slices");
+        // remaining free runs are still ≥ 4 slices: still gated
+        assert_eq!(m.gated_counts(), (28, 6));
+    }
+
+    #[test]
+    fn fragmentation_holes_below_min_run_stay_awake() {
+        // Four 2-slice tasks fill the array; freeing the 2nd and 4th
+        // leaves free runs {2,3} and {6,7} — both shorter than
+        // gate_min_run, so those four slices burn idle power.
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        m.set_gating(true, 4);
+        let d = SliceDemand::new(4, 2);
+        let rs: Vec<_> =
+            (0..4).map(|_| m.try_allocate(&d).expect_allocated("fill")).collect();
+        m.release(rs[1].id).unwrap();
+        m.release(rs[3].id).unwrap();
+        let (_, gated_arr) = m.gated_counts();
+        assert_eq!(gated_arr, 0, "scattered 2-slice holes cannot gate");
+        assert_eq!(m.idle_free_counts().1, 4);
+        // compacting the survivors merges the holes into one gated run
+        m.relocate(rs[2].id, Some(SliceRange::new(4, 4)), Some(SliceRange::new(2, 2)))
+            .unwrap();
+        assert_eq!(m.gated_counts().1, 4, "defragmentation earns the watts back");
+        assert_eq!(m.idle_free_counts().1, 0);
+    }
+
+    #[test]
+    fn release_regates_merged_runs() {
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        m.set_gating(true, 4);
+        let a = m.try_allocate(&SliceDemand::new(16, 4)).expect_allocated("a");
+        assert_eq!(m.gated_counts(), (16, 4));
+        m.release(a.id).unwrap();
+        assert_eq!(m.gated_counts(), (32, 8), "vacated slices re-gate");
     }
 
     #[test]

@@ -30,6 +30,11 @@ pub struct ExecutionRegion {
     /// Replication factor: number of independent task copies mapped
     /// (1 except for fixed-size unrolling).
     pub replicas: u32,
+    /// GLB slices that were power-gated when this region was committed
+    /// (the allocation woke them; 0 unless gating is enabled).
+    pub woken_glb: u32,
+    /// Array slices the allocation woke (see `woken_glb`).
+    pub woken_array: u32,
 }
 
 impl ExecutionRegion {
@@ -51,6 +56,11 @@ impl ExecutionRegion {
     /// Whether the region's ranges are each contiguous single runs.
     pub fn is_contiguous(&self) -> bool {
         self.glb.len() <= 1 && self.array.len() <= 1
+    }
+
+    /// Slices the allocation woke from power gating, `(glb, array)`.
+    pub fn woken(&self) -> (u32, u32) {
+        (self.woken_glb, self.woken_array)
     }
 }
 
@@ -82,6 +92,8 @@ mod tests {
             glb: vec![SliceRange::new(0, 2), SliceRange::new(4, 2)],
             array: vec![SliceRange::new(0, 1)],
             replicas: 2,
+            woken_glb: 0,
+            woken_array: 0,
         };
         assert_eq!(r.glb_slices(), 4);
         assert_eq!(r.array_slices(), 1);
@@ -96,6 +108,8 @@ mod tests {
             glb: vec![SliceRange::new(0, 2)],
             array: vec![SliceRange::new(2, 1)],
             replicas: 1,
+            woken_glb: 0,
+            woken_array: 0,
         };
         assert_eq!(r.to_string(), "R3 glb[0..2) arr[2..3)");
     }

@@ -6,6 +6,7 @@ use crate::abstraction::{SliceDemand, SliceRange};
 use crate::compiler::generate_bitstream;
 use crate::config::{Config, DefragPolicyKind, RegionPolicyKind, SchedulerPolicyKind};
 use crate::dpr::{Bitstream, BitstreamId, DprEngine, DprMode};
+use crate::energy::{EnergyAccountant, EnergyModel, EnergyReport};
 use crate::error::{Error, Result};
 use crate::migration::{
     execute_plan, CompactionPlan, DefragPlanner, MigrationCostModel, MigrationReport,
@@ -73,6 +74,8 @@ struct RunningTask {
     inst: TaskInstanceId,
     task: TaskId,
     ver: VariantId,
+    /// Submitting tenant (energy attribution).
+    tenant: u32,
     /// Authoritative completion cycle.  Migrations push this out; the
     /// sims re-validate queued completion events against it (lazy
     /// rescheduling), so timelines stay correct without retracting
@@ -105,13 +108,23 @@ pub struct Scheduler {
     /// Cycles a just-committed compaction charges to the next launch
     /// (the rescued task waits for the whole migration pass).
     pending_migration_cycles: u64,
+    /// Energy accountant + power-cap governor ([`crate::energy`]); a
+    /// no-op unless `[energy].enabled`.
+    meter: EnergyAccountant,
+    /// Wake latency charged (like DPR cycles) to a launch that wakes
+    /// power-gated domains; 0 unless gating is armed.
+    wake_cycles: u64,
+    /// GLB bank capacity in bytes (migration copy energy).
+    glb_bank_bytes: u64,
 }
 
 impl Scheduler {
     /// Build from a config; `mode` selects the DPR path (Fig. 5 compares
     /// AXI4-Lite for the baseline vs fast-DPR for the mechanisms).
     pub fn new(cfg: &Config, lib: TaskLibrary, mode: DprMode) -> Scheduler {
-        let mgr = RegionManager::new(&cfg.arch, &cfg.scheduler);
+        let mut mgr = RegionManager::new(&cfg.arch, &cfg.scheduler);
+        let gating = cfg.energy.enabled && cfg.energy.gating;
+        mgr.set_gating(gating, cfg.energy.gate_min_run);
         let dpr = DprEngine::new(&cfg.arch, &cfg.dpr, mode);
         let mut bitstreams = BTreeMap::new();
         for t in lib.iter() {
@@ -133,6 +146,12 @@ impl Scheduler {
             cost_model: MigrationCostModel::new(&cfg.arch, cfg.scheduler.migration_cost_model),
             mig_stats: MigrationStats::default(),
             pending_migration_cycles: 0,
+            meter: EnergyAccountant::new(
+                EnergyModel::new(&cfg.arch, &cfg.energy),
+                cfg.energy.enabled,
+            ),
+            wake_cycles: if gating { cfg.energy.wake_cycles } else { 0 },
+            glb_bank_bytes: cfg.arch.glb_slice_bytes(),
         }
     }
 
@@ -160,9 +179,78 @@ impl Scheduler {
         }
     }
 
+    /// Integrate the energy accountant up to `now` under the *current*
+    /// allocation state — called at the top of every state-changing
+    /// entry point, so power is integrated piecewise-constant between
+    /// discrete events (exactly).
+    fn advance_energy(&mut self, now: u64) {
+        if self.meter.enabled() {
+            // one gated walk per event: idle is its free-count complement
+            let gated = self.mgr.gated_counts();
+            let idle = (
+                self.mgr.glb_map().free_count() - gated.0,
+                self.mgr.array_map().free_count() - gated.1,
+            );
+            self.meter.advance(now, idle, gated);
+        }
+    }
+
+    /// The energy accountant (read side: totals, windowed power).
+    pub fn energy(&self) -> &EnergyAccountant {
+        &self.meter
+    }
+
+    /// Final energy report, integrated up to `now` (`None` when
+    /// `[energy]` accounting is disabled).
+    pub fn energy_report(&mut self, now: u64) -> Option<EnergyReport> {
+        self.advance_energy(now);
+        self.meter.report()
+    }
+
+    /// Marginal pJ/cycle this fabric would add by hosting `demand` —
+    /// the energy-aware pool placement score ([`crate::fabric`]).
+    /// Reads 0 with `[energy]` accounting off, so an `energy-aware`
+    /// placement policy degenerates to least-loaded order exactly as
+    /// documented instead of consolidating on the default model costs.
+    pub fn marginal_placement_pj(&self, demand: &SliceDemand) -> f64 {
+        if !self.meter.enabled() {
+            return 0.0;
+        }
+        self.meter.model().marginal_placement_pj(
+            demand,
+            self.mgr.idle_free_counts(),
+            self.running.is_empty(),
+        )
+    }
+
+    /// Steady-state draw of one variant option: `demand` slices
+    /// computing per replica, with the held footprint an exclusive or
+    /// replicated allocation would over-hold at idle rates.  The single
+    /// source of truth for both the power-cap governor's admission
+    /// projection and the energy-aware policy's EDP ranking — they must
+    /// never disagree on an option's power.
+    fn option_power(
+        &self,
+        demand: SliceDemand,
+        replicate: u32,
+        exclusive: bool,
+    ) -> crate::energy::ActivePower {
+        let r = replicate.max(1);
+        let active = demand.scaled(r);
+        let held = if exclusive {
+            SliceDemand::new(self.mgr.glb_map().len(), self.mgr.array_map().len())
+        } else if replicate > 1 {
+            self.mgr.unit().scaled(r)
+        } else {
+            demand
+        };
+        self.meter.model().region_power(&active, &held)
+    }
+
     /// Scheduling step: launch every ready task that can be placed.
     /// Called on arrival and completion events.
     pub fn schedule(&mut self, queue: &mut RequestQueue, now: u64) -> Vec<Launch> {
+        self.advance_energy(now);
         // Single pass: no completions happen inside a step, so resource
         // availability only shrinks — a task that failed to place cannot
         // succeed later in the same step, and tasks are independent.
@@ -202,13 +290,16 @@ impl Scheduler {
         launches
     }
 
-    /// Handle a task completion: free its region.  Returns the instance
-    /// that was running there.
-    pub fn complete(&mut self, region: RegionId) -> Result<TaskInstanceId> {
+    /// Handle a task completion at cycle `now`: free its region (energy
+    /// is integrated up to `now` before the power state changes).
+    /// Returns the instance that was running there.
+    pub fn complete(&mut self, region: RegionId, now: u64) -> Result<TaskInstanceId> {
+        self.advance_energy(now);
         let rt = self
             .running
             .remove(&region)
             .ok_or_else(|| Error::Sched(format!("completion for idle region {region}")))?;
+        self.meter.on_complete(region);
         self.mgr.release(region)?;
         Ok(rt.inst)
     }
@@ -239,6 +330,7 @@ impl Scheduler {
     /// wire command) — ignores the defrag threshold and needs no blocked
     /// task.  Running tasks that move are charged their migration cycles.
     pub fn defrag_now(&mut self, now: u64) -> MigrationReport {
+        self.advance_energy(now);
         let frag_before = self.mgr.fragmentation();
         let (migrated, cycles) = match self.planner.compact(&self.mgr) {
             None => (0, 0),
@@ -261,7 +353,9 @@ impl Scheduler {
     fn order_ready(&self, mut ready: Vec<ReadyTask>) -> Vec<ReadyTask> {
         match self.policy {
             // arrival order (request seq, then node) — queue order.
-            SchedulerPolicyKind::GreedyThroughput | SchedulerPolicyKind::FcfsFirstFit => ready,
+            SchedulerPolicyKind::GreedyThroughput
+            | SchedulerPolicyKind::FcfsFirstFit
+            | SchedulerPolicyKind::EnergyAware => ready,
             SchedulerPolicyKind::FairShare => {
                 // rotate tenants so each gets the head slot in turn
                 let cursor = self.rr_cursor % 4;
@@ -377,6 +471,28 @@ impl Scheduler {
                 // smallest footprint first (ascending throughput proxy)
                 opts.sort_by(|a, b| a.eff_throughput.partial_cmp(&b.eff_throughput).unwrap());
             }
+            SchedulerPolicyKind::EnergyAware => {
+                // minimal energy-delay product first: EDP(v) = P(v)·t(v)²
+                // under the [`crate::energy::EnergyModel`]; highest
+                // throughput, then variant letter, break ties.  Keys are
+                // computed once per option, not inside the comparator.
+                let mut keyed: Vec<(f64, Option_)> = opts
+                    .into_iter()
+                    .map(|o| {
+                        let v = spec.variant(o.ver).expect("option from spec");
+                        let power =
+                            self.option_power(v.demand, o.replicate, o.exclusive).total();
+                        let t = spec.work as f64 / o.eff_throughput;
+                        (power * t * t, o)
+                    })
+                    .collect();
+                keyed.sort_by(|(ea, a), (eb, b)| {
+                    ea.total_cmp(eb)
+                        .then(b.eff_throughput.total_cmp(&a.eff_throughput))
+                        .then(a.ver.0.cmp(&b.ver.0))
+                });
+                opts = keyed.into_iter().map(|(_, o)| o).collect();
+            }
         }
         opts
     }
@@ -388,6 +504,18 @@ impl Scheduler {
         for opt in options {
             let spec = self.lib.get(&rt.task).expect("options imply spec");
             let variant = spec.variant(opt.ver).expect("option from spec").clone();
+            // Power-cap governor: refuse options whose projected draw
+            // would push the fabric over `[energy].power_cap_watts`
+            // (conservative: charges the full requested replication).
+            // Throttled options are not `blocked` — compaction cannot
+            // create power headroom, only completions can.
+            if self.meter.enabled() {
+                let projected =
+                    self.option_power(variant.demand, opt.replicate, opt.exclusive);
+                if !self.meter.admits(&projected) {
+                    continue;
+                }
+            }
             let outcome = if opt.exclusive {
                 self.mgr.try_allocate_exclusive(&variant.demand)
             } else if opt.replicate > 1 {
@@ -415,14 +543,34 @@ impl Scheduler {
             let replicas = region.replicas.max(1);
             let eff_tpt = variant.throughput * replicas as f64;
             let exec_cycles = (spec.work as f64 / eff_tpt).ceil() as u64;
-            // a rescued launch also waits out the compaction pass
-            let dpr_cycles = dpr_out.cycles + self.pending_migration_cycles;
+            // a rescued launch also waits out the compaction pass; a
+            // launch that wakes power-gated domains additionally waits
+            // out the wake handshake, charged exactly like DPR cycles
+            let woken = region.woken();
+            let wake = if woken.0 + woken.1 > 0 { self.wake_cycles } else { 0 };
+            let dpr_cycles = dpr_out.cycles + wake + self.pending_migration_cycles;
             self.pending_migration_cycles = 0;
             let finish = now + dpr_cycles + exec_cycles;
 
+            self.meter.on_launch(
+                region.id,
+                &variant.demand.scaled(replicas),
+                &region.footprint(),
+                &rt.task.0,
+                rt.tenant,
+                bs.words,
+                dpr_out.cache_hit,
+                woken,
+            );
             self.running.insert(
                 region.id,
-                RunningTask { inst: rt.instance, task: rt.task.clone(), ver: opt.ver, finish },
+                RunningTask {
+                    inst: rt.instance,
+                    task: rt.task.clone(),
+                    ver: opt.ver,
+                    tenant: rt.tenant,
+                    finish,
+                },
             );
             return Attempt::Launched(Launch {
                 instance: rt.instance,
@@ -474,6 +622,30 @@ impl Scheduler {
                 // the task pauses for its own checkpoint+move window;
                 // the remaining work simply shifts right by that much
                 rt.finish = rt.finish.max(now) + rec.cycles;
+            }
+            // joules: restream bits when the array range moved, bank
+            // copies when the GLB range moved
+            if self.meter.enabled() {
+                if let Some(rt) = self.running.get(&rec.region) {
+                    let restream_bits = if rec.step.moves_array() {
+                        self.bitstreams
+                            .get(&BitstreamId::new(rt.task.0.clone(), rt.ver.0))
+                            .map(|bs| bs.bits())
+                            .unwrap_or(0)
+                    } else {
+                        0
+                    };
+                    let glb_bytes =
+                        rec.step.moved_glb_slices() as u64 * self.glb_bank_bytes;
+                    let pj = self.meter.model().migration_step_pj(restream_bits, glb_bytes);
+                    // a relocation into a gated free run wakes those
+                    // domains exactly like an allocation would (the
+                    // wake latency hides inside the much longer
+                    // checkpoint+copy window, so only joules change)
+                    let wake_pj = self.meter.model().wake_pj(rec.woken.0, rec.woken.1);
+                    let (task, tenant) = (rt.task.0.clone(), rt.tenant);
+                    self.meter.on_migration(pj, wake_pj, &task, tenant);
+                }
             }
         }
         self.mig_stats.plans_committed += 1;
@@ -585,7 +757,7 @@ mod tests {
 
         // complete the first; next schedule launches the second
         let region = launches[0].region;
-        let inst = s.complete(region).unwrap();
+        let inst = s.complete(region, launches[0].finish).unwrap();
         q.mark_complete(inst, launches[0].finish).unwrap();
         let launches2 = s.schedule(&mut q, launches[0].finish);
         assert_eq!(launches2.len(), 1);
@@ -633,7 +805,7 @@ mod tests {
         assert_eq!(l1[0].task.0, "resnet18.conv2_x");
         // conv3 not ready until conv2 completes
         assert_eq!(q.ready_count(), 0);
-        let inst = s.complete(l1[0].region).unwrap();
+        let inst = s.complete(l1[0].region, l1[0].finish).unwrap();
         q.mark_complete(inst, l1[0].finish).unwrap();
         let l2 = s.schedule(&mut q, l1[0].finish);
         assert_eq!(l2.len(), 1);
@@ -657,7 +829,7 @@ mod tests {
     #[test]
     fn complete_unknown_region_errors() {
         let mut s = sched(RegionPolicyKind::FlexibleShape);
-        assert!(s.complete(RegionId(42)).is_err());
+        assert!(s.complete(RegionId(42), 0).is_err());
     }
 
     // ------------------------------------------------- defragmentation
@@ -687,7 +859,7 @@ mod tests {
             assert_eq!(l.ver, VariantId('a'), "FCFS picks the smallest variant");
         }
         for i in [1usize, 3] {
-            let inst = s.complete(launches[i].region).unwrap();
+            let inst = s.complete(launches[i].region, 100).unwrap();
             q.mark_complete(inst, 100).unwrap();
         }
         let (_, fa) = s.regions().fragmentation();
@@ -767,7 +939,7 @@ mod tests {
         let launches = s.schedule(&mut q, 0);
         assert_eq!(launches.len(), 4);
         for i in [1usize, 3] {
-            let inst = s.complete(launches[i].region).unwrap();
+            let inst = s.complete(launches[i].region, 100).unwrap();
             q.mark_complete(inst, 100).unwrap();
         }
         submit(&mut q, 10, 2, AppId::Camera, 100);
@@ -791,6 +963,118 @@ mod tests {
         let again = s.defrag_now(200);
         assert_eq!(again.migrated, 0);
         assert_eq!(again.cycles, 0);
+    }
+
+    // ------------------------------------------------- energy + governor
+
+    fn energy_sched(cap_watts: f64) -> Scheduler {
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.energy.enabled = true;
+        cfg.energy.power_cap_watts = cap_watts;
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        s.preload_all();
+        s
+    }
+
+    #[test]
+    fn launch_on_gated_fabric_charges_wake_cycles() {
+        let mut s = energy_sched(0.0);
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 1);
+        // identical run with energy off: the only dpr_cycles difference
+        // is the configured wake latency (default 96)
+        let mut off = sched(RegionPolicyKind::FlexibleShape);
+        off.preload_all();
+        let mut q2 = RequestQueue::new();
+        submit(&mut q2, 0, 3, AppId::Harris, 0);
+        let baseline = off.schedule(&mut q2, 0);
+        assert_eq!(
+            launches[0].dpr_cycles,
+            baseline[0].dpr_cycles + 96,
+            "wake latency is charged like DPR cycles"
+        );
+        assert_eq!(launches[0].ver, baseline[0].ver, "variant choice is unchanged");
+    }
+
+    #[test]
+    fn energy_report_accounts_a_run_and_conserves() {
+        let mut s = energy_sched(0.0);
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        let l = s.schedule(&mut q, 0)[0].clone();
+        let inst = s.complete(l.region, l.finish).unwrap();
+        q.mark_complete(inst, l.finish).unwrap();
+        let r = s.energy_report(l.finish + 1000).expect("enabled");
+        assert!(r.total_j > 0.0);
+        assert!(r.pe_j > 0.0 && r.mem_j > 0.0 && r.glb_j > 0.0 && r.dpr_j > 0.0);
+        assert!(r.wake_j > 0.0, "fresh gated fabric must charge a wake");
+        assert!((r.component_sum_j() - r.total_j).abs() <= 1e-9 * r.total_j);
+        assert!(r.per_task.contains_key("harris.corner"));
+        assert!(r.per_tenant[3] > 0.0);
+        // disabled scheduler reports nothing
+        let mut off = sched(RegionPolicyKind::FlexibleShape);
+        assert!(off.energy_report(1000).is_none());
+    }
+
+    #[test]
+    fn governor_degrades_to_smaller_variants_under_a_tight_cap() {
+        // 1.5 W: harris c (~2.2 W active) never passes the admit check
+        // once anything runs, but the drained-fabric bypass still
+        // launches the *first* task, and later tasks degrade or wait.
+        let mut s = energy_sched(1.5);
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        submit(&mut q, 1, 3, AppId::Harris, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert!(
+            !launches.is_empty(),
+            "drained fabric must always make progress under any cap"
+        );
+        let first = &launches[0];
+        // the second harris (if launched at all) got a smaller variant
+        // than the uncapped fastest choice, or waited
+        if launches.len() > 1 {
+            assert!(launches[1].ver < VariantId('c'), "{:?}", launches[1].ver);
+        }
+        assert!(s.energy().throttled() > 0, "the cap must have refused options");
+        assert_eq!(first.ver, VariantId('c'), "bypass launch is unthrottled");
+    }
+
+    #[test]
+    fn uncapped_governor_never_throttles() {
+        let mut s = energy_sched(0.0);
+        let mut q = RequestQueue::new();
+        for seq in 0..6 {
+            submit(&mut q, seq, (seq % 4) as u32, AppId::Harris, 0);
+        }
+        let _ = s.schedule(&mut q, 0);
+        assert_eq!(s.energy().throttled(), 0);
+    }
+
+    #[test]
+    fn energy_aware_policy_minimizes_edp_ordering() {
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.energy.enabled = true;
+        cfg.scheduler.policy = SchedulerPolicyKind::EnergyAware;
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 1);
+        // Table 1 harris EDP ∝ P·t²: a → 2·w², b → 4·(w/2)² = w²,
+        // c → 7·(w/4)² ≈ 0.44·w² (array-dominated) — c minimizes EDP.
+        assert_eq!(launches[0].ver, VariantId('c'));
+        // under pressure the ordering still walks the EDP ranking: with
+        // 1 array slice left nothing fits and the task waits
+        submit(&mut q, 1, 2, AppId::Camera, 0);
+        let second = s.schedule(&mut q, 0);
+        // camera: a → 4·w², b → 6·(w/4)² = 0.375·w²; only 1 slice free
+        // now, so neither fits (camera-a needs 4) and it blocks
+        assert!(second.is_empty());
+        assert_eq!(q.ready_count(), 1);
     }
 
     #[test]

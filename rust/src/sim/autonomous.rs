@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 
 use crate::config::{Config, EdgeWorkloadConfig, RegionPolicyKind, WorkloadConfig};
 use crate::dpr::{CacheStats, DprMode};
+use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
 use crate::metrics::{FrameLatency, LatencyBreakdown};
 use crate::regions::RegionId;
@@ -55,6 +56,8 @@ pub struct EdgeReport {
     pub migrations: u64,
     /// Total cycles charged for those migrations.
     pub migration_cycles: u64,
+    /// Energy accounting (`None` unless `[energy].enabled`).
+    pub energy: Option<EnergyReport>,
 }
 
 impl EdgeReport {
@@ -122,8 +125,10 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
     let mut frames: BTreeMap<u32, (Cycle, u32, u64, Cycle)> = BTreeMap::new();
 
     let mut latency = LatencyBreakdown::new();
+    let mut last_now = 0u64;
 
     while let Some((now, ev)) = events.pop() {
+        last_now = now;
         match ev {
             Event::Frame(k) => {
                 let entry = frames.entry(k).or_insert((now, 0, 0, now));
@@ -160,7 +165,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                         continue;
                     }
                 }
-                let inst = sched.complete(region)?;
+                let inst = sched.complete(region, now)?;
                 if let Some(done) = queue.mark_complete(inst, now)? {
                     let k = frame_of.remove(&done.seq).ok_or_else(|| {
                         Error::SimInvariant(format!("request {} has no frame", done.seq))
@@ -213,6 +218,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
     }
 
     let mig = sched.migration_stats();
+    let energy = sched.energy_report(last_now);
     Ok(EdgeReport {
         policy: cfg.scheduler.region_policy,
         dpr_mode: mode,
@@ -223,6 +229,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
         nofit_events: mig.nofit_events,
         migrations: mig.tasks_migrated,
         migration_cycles: mig.migration_cycles,
+        energy,
     })
 }
 

@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 
 use crate::config::{CloudWorkloadConfig, Config, RegionPolicyKind, WorkloadConfig};
 use crate::dpr::{CacheStats, DprMode};
+use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
 use crate::metrics::{
     FragmentationTracker, NtatRecord, NtatTracker, ThroughputTracker, UtilizationTracker,
@@ -65,6 +66,8 @@ pub struct CloudReport {
     pub migration_cycles: u64,
     /// Launches that only succeeded because a compaction ran first.
     pub rescued_launches: u64,
+    /// Energy accounting (`None` unless `[energy].enabled`).
+    pub energy: Option<EnergyReport>,
 }
 
 impl CloudReport {
@@ -178,7 +181,7 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
                         continue;
                     }
                 }
-                let inst = sched.complete(region)?;
+                let inst = sched.complete(region, now)?;
                 if let Some(done) = queue.mark_complete(inst, now)? {
                     let (app, arrival, exec) =
                         inflight.remove(&done.seq).ok_or_else(|| {
@@ -232,6 +235,7 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
     }
 
     let mig = sched.migration_stats();
+    let energy = sched.energy_report(glb_util.horizon());
     Ok(CloudReport {
         policy: cfg.scheduler.region_policy,
         duration_cycles: duration,
@@ -249,6 +253,7 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
         migrations: mig.tasks_migrated,
         migration_cycles: mig.migration_cycles,
         rescued_launches: mig.rescued_launches,
+        energy,
     })
 }
 

@@ -17,6 +17,7 @@ use crate::config::{
     WorkloadConfig,
 };
 use crate::dpr::DprMode;
+use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
 use crate::fabric::{FabricPool, ShardId};
 use crate::metrics::{FrameLatency, LatencyBreakdown, NtatRecord, NtatTracker, UtilizationTracker};
@@ -44,6 +45,8 @@ pub struct ShardSimStats {
     pub migrations: u64,
     /// All-variants-NoFit events on this shard.
     pub nofit_events: u64,
+    /// Joules this shard accumulated (0 when `[energy]` is off).
+    pub energy_j: f64,
 }
 
 /// Result of one cloud-scenario pool run.
@@ -81,6 +84,8 @@ pub struct PoolCloudReport {
     pub rescued_launches: u64,
     /// All-variants-NoFit events across the pool.
     pub nofit_events: u64,
+    /// Pool-wide energy accounting (`None` unless `[energy].enabled`).
+    pub energy: Option<EnergyReport>,
     /// Per-shard breakdown.
     pub per_shard: Vec<ShardSimStats>,
 }
@@ -131,6 +136,8 @@ pub struct PoolEdgeReport {
     pub migrations: u64,
     /// All-variants-NoFit events across the pool.
     pub nofit_events: u64,
+    /// Pool-wide energy accounting (`None` unless `[energy].enabled`).
+    pub energy: Option<EnergyReport>,
     /// Per-shard breakdown.
     pub per_shard: Vec<ShardSimStats>,
 }
@@ -181,6 +188,7 @@ fn per_shard_stats(pool: &FabricPool) -> Vec<ShardSimStats> {
                 array_utilization: s.array_utilization,
                 migrations: mig.tasks_migrated,
                 nofit_events: mig.nofit_events,
+                energy_j: s.energy_j,
             }
         })
         .collect()
@@ -318,6 +326,7 @@ pub fn run_cloud_pool_traced(
 
     let mig = pool.migration_stats();
     let stats = pool.stats();
+    let energy = pool.energy_report(glb_util.horizon());
     Ok(PoolCloudReport {
         shards: pool.shard_count() as u32,
         placement: cfg.pool.placement,
@@ -335,6 +344,7 @@ pub fn run_cloud_pool_traced(
         migrations: mig.tasks_migrated,
         rescued_launches: mig.rescued_launches,
         nofit_events: mig.nofit_events,
+        energy,
         per_shard: per_shard_stats(&pool),
     })
 }
@@ -385,8 +395,10 @@ pub fn run_edge_pool_traced(
     let mut frames: BTreeMap<u32, (Cycle, u32, u64, Cycle)> = BTreeMap::new();
 
     let mut latency = LatencyBreakdown::new();
+    let mut last_now = 0u64;
 
     while let Some((now, ev)) = events.pop() {
+        last_now = now;
         match ev {
             EdgeEvent::Frame(k) => {
                 frames.entry(k).or_insert((now, 0, 0, now));
@@ -504,6 +516,7 @@ pub fn run_edge_pool_traced(
 
     let mig = pool.migration_stats();
     let stats = pool.stats();
+    let energy = pool.energy_report(last_now);
     Ok(PoolEdgeReport {
         shards: pool.shard_count() as u32,
         placement: cfg.pool.placement,
@@ -518,6 +531,7 @@ pub fn run_edge_pool_traced(
         cross_shard_defrags: stats.cross_shard_defrags,
         migrations: mig.tasks_migrated,
         nofit_events: mig.nofit_events,
+        energy,
         per_shard: per_shard_stats(&pool),
     })
 }

@@ -37,15 +37,9 @@ impl WireClient {
         Ok(reply.trim_end().to_string())
     }
 
-    /// `STATS SHARDS`: reads the `STATS shards=<n>` header plus the `n`
-    /// per-shard lines that follow (the one multi-line reply in the
-    /// protocol), returning the per-shard lines.
-    pub fn stats_shards(&mut self) -> Result<Vec<String>> {
-        let header = self.send("STATS SHARDS")?;
-        let n: usize = header
-            .strip_prefix("STATS shards=")
-            .and_then(|v| v.parse().ok())
-            .ok_or_else(|| Error::Runtime(format!("bad STATS SHARDS header: {header}")))?;
+    /// Read the `n` continuation lines of a multi-line reply whose
+    /// header named the count (`STATS SHARDS` / `STATS ENERGY` framing).
+    fn read_reply_lines(&mut self, n: usize, what: &str) -> Result<Vec<String>> {
         let mut lines = Vec::with_capacity(n);
         for _ in 0..n {
             let mut line = String::new();
@@ -55,13 +49,41 @@ impl WireClient {
                 .map_err(|e| Error::io("read", e))?;
             if read == 0 {
                 return Err(Error::Runtime(format!(
-                    "connection closed mid-reply: got {} of {n} shard lines",
+                    "connection closed mid-reply: got {} of {n} {what} lines",
                     lines.len()
                 )));
             }
             lines.push(line.trim_end().to_string());
         }
         Ok(lines)
+    }
+
+    /// Shard count named by a `STATS shards=<n> …` header.
+    fn header_shard_count(header: &str, what: &str) -> Result<usize> {
+        header
+            .strip_prefix("STATS shards=")
+            .and_then(|v| v.split_whitespace().next())
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| Error::Runtime(format!("bad {what} header: {header}")))
+    }
+
+    /// `STATS SHARDS`: reads the `STATS shards=<n>` header plus the `n`
+    /// per-shard lines that follow, returning the per-shard lines.
+    pub fn stats_shards(&mut self) -> Result<Vec<String>> {
+        let header = self.send("STATS SHARDS")?;
+        let n = Self::header_shard_count(&header, "STATS SHARDS")?;
+        self.read_reply_lines(n, "shard")
+    }
+
+    /// `STATS ENERGY`: reads the `STATS shards=<n> …` header plus the
+    /// `n` per-shard energy lines that follow (same framing as
+    /// [`WireClient::stats_shards`]); returns `(header, per-shard
+    /// lines)`.
+    pub fn stats_energy(&mut self) -> Result<(String, Vec<String>)> {
+        let header = self.send("STATS ENERGY")?;
+        let n = Self::header_shard_count(&header, "STATS ENERGY")?;
+        let lines = self.read_reply_lines(n, "energy")?;
+        Ok((header, lines))
     }
 
     /// SUBMIT with retry on `BUSY` backpressure; returns the final

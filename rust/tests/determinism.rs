@@ -84,6 +84,32 @@ fn edge_churn_trace_and_report_are_deterministic() {
     });
 }
 
+/// Energy accounting is part of the seeded contract: repeat runs must
+/// produce byte-identical traces, reports *and* `energy_json` exports —
+/// floating-point integration included (single-threaded, fixed event
+/// order, so every f64 operation replays exactly).
+#[test]
+fn energy_accounting_is_byte_deterministic() {
+    use cgra_mte::metrics::export::energy_json;
+
+    let mut cfg = presets::energy_scenario();
+    short_cloud(&mut cfg, 500.0);
+    assert_twice_identical("cloud/energy", |t| {
+        let r = run_cloud_traced(&cfg, TaskLibrary::table1(), t).unwrap();
+        let energy = r.energy.as_ref().expect("accounting enabled");
+        format!("{:?}\n{}", r, energy_json(energy))
+    });
+
+    // the capped churn preset exercises the governor + gating together
+    let mut capped = presets::energy_cap_scenario(2.5);
+    short_cloud(&mut capped, 500.0);
+    assert_twice_identical("cloud/energy-capped", |t| {
+        let r = run_cloud_traced(&capped, TaskLibrary::table1(), t).unwrap();
+        let energy = r.energy.as_ref().expect("accounting enabled");
+        format!("{:?}\n{}", r, energy_json(energy))
+    });
+}
+
 #[test]
 fn cloud_pool_trace_and_report_are_deterministic() {
     for placement in PlacementPolicyKind::ALL {

@@ -215,7 +215,7 @@ fn single_shard_pool_equals_bare_scheduler() {
                             Ok(d) => d.map(|r| r.seq),
                             Err(_) => return false,
                         };
-                        let b_inst = match bare.complete(b_region) {
+                        let b_inst = match bare.complete(b_region, now) {
                             Ok(i) => i,
                             Err(_) => return false,
                         };

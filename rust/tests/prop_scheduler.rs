@@ -60,7 +60,7 @@ fn drain_burst(policy: RegionPolicyKind, burst: &[(u32, usize, u64)]) -> bool {
         running.sort_by_key(|&(t, _)| std::cmp::Reverse(t));
         let (t, region) = running.pop().expect("non-empty");
         now = t;
-        let inst = match sched.complete(region) {
+        let inst = match sched.complete(region, now) {
             Ok(i) => i,
             Err(_) => return false,
         };

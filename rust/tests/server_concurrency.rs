@@ -251,6 +251,19 @@ fn two_shard_pool_merges_completions_and_sums_tenant_counters() {
         })
         .sum();
     assert!(batches >= 12, "24 submissions at batch_max=2 need ≥ 12 batches, saw {batches}");
+    // the aggregate STATS line names the active placement policy
+    assert!(stats.contains("placement=least-loaded"), "{stats}");
+    // STATS ENERGY shares the SHARDS framing; accounting is off in this
+    // config, so every gauge reads zero but the reply is well-formed
+    let (header, energy_lines) = client.stats_energy().expect("stats energy");
+    assert!(header.contains("energy_j=0.000000"), "{header}");
+    assert!(header.contains("placement=least-loaded"), "{header}");
+    assert_eq!(energy_lines.len(), 2, "{energy_lines:?}");
+    for l in &energy_lines {
+        assert!(l.starts_with("STATS shard="), "{l}");
+        assert!(l.contains("power_w=0.000"), "{l}");
+        assert!(l.contains("throttled=0"), "{l}");
+    }
     // control-plane defrag broadcasts to both shards and merges
     let defrag = client.send("DEFRAG").expect("defrag");
     assert!(defrag.starts_with("DEFRAG migrated=0"), "{defrag}");
