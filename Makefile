@@ -29,3 +29,4 @@ bench-smoke:
 	cargo bench --bench ablation_migration -- --smoke
 	cargo bench --bench ablation_shards -- --smoke
 	cargo bench --bench ablation_energy -- --smoke
+	cargo bench --bench ablation_qos -- --smoke

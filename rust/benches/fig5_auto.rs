@@ -27,24 +27,31 @@ fn main() {
     let clk = presets::paper_default().arch.core_clock_mhz;
     let mut table = Table::new(
         "Fig. 5 — autonomous system, normalized mean frame latency",
-        &["mechanism", "DPR", "total", "reconfig", "wait+exec", "reconfig share", "mean ms"],
+        &[
+            "mechanism", "DPR", "total", "reconfig", "wait+exec", "reconfig share", "mean ms",
+            "p50 ms", "p95 ms", "p99 ms",
+        ],
     );
 
     let mut rows = Vec::new();
     for policy in RegionPolicyKind::ALL {
         let (mut total, mut reconf, mut wait) = (0.0, 0.0, 0.0);
+        let (mut p50, mut p95, mut p99) = (0.0, 0.0, 0.0);
         let mut mode = None;
         for seed in SEEDS {
             let r = run(policy, seed);
             total += r.latency.mean_total() / SEEDS.len() as f64;
             reconf += r.latency.mean_reconfig() / SEEDS.len() as f64;
             wait += r.latency.mean_wait_exec() / SEEDS.len() as f64;
+            p50 += r.p50_latency_ms(clk) / SEEDS.len() as f64;
+            p95 += r.p95_latency_ms(clk) / SEEDS.len() as f64;
+            p99 += r.p99_latency_ms(clk) / SEEDS.len() as f64;
             mode = Some(r.dpr_mode);
         }
-        rows.push((policy, mode.unwrap(), total, reconf, wait));
+        rows.push((policy, mode.unwrap(), total, reconf, wait, p50, p95, p99));
     }
     let base_total = rows[0].2;
-    for (policy, mode, total, reconf, wait) in &rows {
+    for (policy, mode, total, reconf, wait, p50, p95, p99) in &rows {
         table.row(&[
             policy.name().to_string(),
             format!("{mode:?}"),
@@ -53,6 +60,9 @@ fn main() {
             format!("{:.2}", wait / base_total),
             format!("{:.1}%", reconf / total * 100.0),
             format!("{:.3}", total / (clk as f64 * 1e3)),
+            format!("{p50:.3}"),
+            format!("{p95:.3}"),
+            format!("{p99:.3}"),
         ]);
     }
     print!("{}", table.render());

@@ -11,7 +11,8 @@ pub mod toml;
 
 pub use schema::{
     ArchConfig, CloudWorkloadConfig, Config, DefragPolicyKind, DprConfig, EdgeWorkloadConfig,
-    EnergyConfig, MigrationCostModelKind, PlacementPolicyKind, PoolConfig, RegionPolicyKind,
-    SchedulerConfig, SchedulerPolicyKind, ServerConfig, WorkloadConfig,
+    EnergyConfig, MigrationCostModelKind, PlacementPolicyKind, PoolConfig, QosClass, QosConfig,
+    QosPolicyKind, RegionPolicyKind, SchedulerConfig, SchedulerPolicyKind, ServerConfig,
+    WorkloadConfig,
 };
 pub use toml::TomlValue;

@@ -2,7 +2,7 @@
 
 use crate::config::schema::{
     CloudWorkloadConfig, Config, DefragPolicyKind, EdgeWorkloadConfig, PlacementPolicyKind,
-    RegionPolicyKind, SchedulerPolicyKind, WorkloadConfig,
+    QosClass, QosPolicyKind, RegionPolicyKind, SchedulerPolicyKind, WorkloadConfig,
 };
 
 /// Paper-faithful configuration: Amber-like geometry, flexible-shape
@@ -118,6 +118,40 @@ pub fn energy_pool_scenario(shards: u32, placement: PlacementPolicyKind) -> Conf
     cfg
 }
 
+/// Mixed-criticality preset: the paper's two workload families on one
+/// fabric ([`crate::qos`]).  The autonomous tenants — camera (2) and
+/// Harris (3) — run **Critical** with frame-scale deadlines, while the
+/// cloud-multitenant tenants — ResNet-18 (0) and MobileNet (1) — run
+/// **BestEffort** with no deadline, at the churn preset's
+/// past-saturation offered load so priorities actually matter.
+///
+/// `preemptive = true` arms the QoS subsystem's EDF ordering and
+/// checkpointed eviction; `false` keeps classes and deadlines *tracked*
+/// (for SLO reporting) but schedules strictly FIFO — the
+/// `benches/ablation_qos.rs` baseline at identical offered load.
+pub fn mixed_criticality_scenario(preemptive: bool) -> Config {
+    let mut cfg = cloud_scenario(RegionPolicyKind::FlexibleShape);
+    cfg.qos.enabled = true;
+    cfg.qos.policy = if preemptive { QosPolicyKind::Edf } else { QosPolicyKind::Fifo };
+    cfg.qos.preemption = preemptive;
+    cfg.qos.tenant_class = [
+        QosClass::BestEffort,
+        QosClass::BestEffort,
+        QosClass::Critical,
+        QosClass::Critical,
+    ];
+    // camera ≈ 1.4 ms of execution, Harris ≈ 0.5–1 ms: a 5/4 ms budget
+    // is comfortable for a prioritized schedule and hopeless for a FIFO
+    // one at this backlog.
+    cfg.qos.deadline_ms = [0.0, 0.0, 5.0, 4.0];
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.mean_interarrival_ms = [18.0, 10.0, 14.0, 11.0];
+        c.duration_ms = 2_000.0;
+        c.seed = 0xC6_05_2026;
+    }
+    cfg
+}
+
 /// Ablation: array-slice width (4/8/16 columns, DESIGN.md §6.1).
 ///
 /// Widths must contain whole MEM-column periods (multiples of 4) or the
@@ -180,6 +214,8 @@ mod tests {
         energy_scenario().validate().unwrap();
         energy_cap_scenario(2.5).validate().unwrap();
         energy_cap_scenario(0.0).validate().unwrap();
+        mixed_criticality_scenario(true).validate().unwrap();
+        mixed_criticality_scenario(false).validate().unwrap();
         for placement in PlacementPolicyKind::ALL {
             energy_pool_scenario(4, placement).validate().unwrap();
         }
@@ -197,6 +233,29 @@ mod tests {
         let pool = energy_pool_scenario(4, PlacementPolicyKind::EnergyAware);
         assert_eq!(pool.pool.shards, 4);
         assert!(pool.energy.fabric_static_pj > pool.energy.fabric_sleep_pj);
+    }
+
+    #[test]
+    fn mixed_criticality_preset_arms_qos() {
+        let edf = mixed_criticality_scenario(true);
+        assert!(edf.qos.enabled);
+        assert_eq!(edf.qos.policy, QosPolicyKind::Edf);
+        assert!(edf.qos.preemption);
+        assert_eq!(edf.qos.tenant_class[2], QosClass::Critical);
+        assert_eq!(edf.qos.tenant_class[0], QosClass::BestEffort);
+        assert!(edf.qos.deadline_ms[2] > 0.0);
+        assert_eq!(edf.qos.deadline_ms[0], 0.0);
+        let fifo = mixed_criticality_scenario(false);
+        assert_eq!(fifo.qos.policy, QosPolicyKind::Fifo);
+        assert!(!fifo.qos.preemption);
+        // equal offered load across the ablation pair
+        let (WorkloadConfig::Cloud(a), WorkloadConfig::Cloud(b)) =
+            (&edf.workload, &fifo.workload)
+        else {
+            panic!("cloud workloads expected");
+        };
+        assert_eq!(a.mean_interarrival_ms, b.mean_interarrival_ms);
+        assert_eq!(a.seed, b.seed);
     }
 
     #[test]

@@ -314,6 +314,175 @@ impl EnergyConfig {
     }
 }
 
+/// QoS priority class of a request ([`crate::qos`]).
+///
+/// Ordered so that `BestEffort < Interactive < Critical`: the scheduler
+/// compares classes directly, and preemption is only ever allowed in
+/// the strictly-ascending direction (a higher class evicts a lower one,
+/// never the reverse).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum QosClass {
+    /// Throughput-oriented background work; may be preempted and aged.
+    BestEffort,
+    /// Latency-sensitive but not safety-critical.
+    Interactive,
+    /// Hard latency budget (the autonomous workload); never preempted
+    /// by a lower class.
+    Critical,
+}
+
+impl QosClass {
+    /// All classes, lowest priority first.
+    pub const ALL: [QosClass; 3] =
+        [QosClass::BestEffort, QosClass::Interactive, QosClass::Critical];
+
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosClass::BestEffort => "best-effort",
+            QosClass::Interactive => "interactive",
+            QosClass::Critical => "critical",
+        }
+    }
+
+    /// Parse a config / wire name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "best-effort" | "best_effort" | "besteffort" => Ok(QosClass::BestEffort),
+            "interactive" => Ok(QosClass::Interactive),
+            "critical" => Ok(QosClass::Critical),
+            other => Err(Error::Config(format!("unknown QoS class '{other}'"))),
+        }
+    }
+
+    /// Index into per-class arrays (`BestEffort` = 0 … `Critical` = 2).
+    pub fn index(&self) -> usize {
+        match self {
+            QosClass::BestEffort => 0,
+            QosClass::Interactive => 1,
+            QosClass::Critical => 2,
+        }
+    }
+}
+
+/// How the QoS scheduler orders the ready frontier ([`crate::qos`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QosPolicyKind {
+    /// Arrival order — classes and deadlines are tracked for SLO
+    /// reporting but do not influence scheduling (the ablation
+    /// baseline).
+    Fifo,
+    /// Strict priority across classes, earliest-deadline-first within a
+    /// class, with BestEffort aging (`qos.aging_cycles`).
+    Edf,
+}
+
+impl QosPolicyKind {
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosPolicyKind::Fifo => "fifo",
+            QosPolicyKind::Edf => "edf",
+        }
+    }
+
+    /// Parse a config name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "fifo" => Ok(QosPolicyKind::Fifo),
+            "edf" => Ok(QosPolicyKind::Edf),
+            other => Err(Error::Config(format!("unknown QoS policy '{other}'"))),
+        }
+    }
+}
+
+/// QoS subsystem configuration (`[qos]` in TOML; [`crate::qos`]).
+///
+/// `enabled = false` (the default) is the master switch: no class
+/// ordering, no preemption, no SLO tracking — every existing preset,
+/// trace and report stays bit-for-bit unchanged (`tests/determinism.rs`
+/// holds the subsystem to that).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QosConfig {
+    /// Master switch.  TOML: `qos.enabled`.
+    pub enabled: bool,
+    /// Ready-frontier ordering.  TOML: `qos.policy` = "fifo" | "edf".
+    pub policy: QosPolicyKind,
+    /// Allow a blocked higher-class task to checkpoint-and-evict
+    /// running lower-class tasks.  Only effective under `policy =
+    /// "edf"` — the FIFO baseline never evicts regardless of this
+    /// knob.  TOML: `qos.preemption`.
+    pub preemption: bool,
+    /// Starvation guard: a BestEffort task that has waited at least
+    /// this many cycles is ordered as Interactive (it still never
+    /// preempts anyone).  0 disables aging.  TOML: `qos.aging_cycles`.
+    pub aging_cycles: u64,
+    /// Cap on victims evicted per preemption pass.
+    /// TOML: `qos.max_victims`.
+    pub max_victims: u32,
+    /// Default class per tenant (the sims and the wire SUBMIT default
+    /// when no explicit class is given).  TOML: `qos.tenant_classes`,
+    /// an array of 4 class names.
+    pub tenant_class: [QosClass; 4],
+    /// Relative deadline per tenant in milliseconds from arrival;
+    /// 0 = no deadline.  TOML: `qos.deadline_ms`, an array of 4.
+    pub deadline_ms: [f64; 4],
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            enabled: false,
+            policy: QosPolicyKind::Edf,
+            preemption: true,
+            // 10 ms at the 500 MHz core clock: long enough that genuine
+            // latency-class work always goes first, short enough that
+            // BestEffort cannot starve across even one camera frame.
+            aging_cycles: 5_000_000,
+            max_victims: 4,
+            tenant_class: [QosClass::BestEffort; 4],
+            deadline_ms: [0.0; 4],
+        }
+    }
+}
+
+impl QosConfig {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_victims == 0 {
+            return Err(Error::Config("qos.max_victims must be positive".into()));
+        }
+        if self.deadline_ms.iter().any(|d| !d.is_finite() || *d < 0.0) {
+            return Err(Error::Config(
+                "qos.deadline_ms entries must be finite and non-negative".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Default class for a tenant's requests (BestEffort when the
+    /// subsystem is disabled).
+    pub fn class_of_tenant(&self, tenant: u32) -> QosClass {
+        if !self.enabled {
+            return QosClass::BestEffort;
+        }
+        self.tenant_class[tenant as usize % 4]
+    }
+
+    /// Absolute deadline for a tenant's request arriving at
+    /// `arrival_cycle` (`None` when disabled or no budget configured).
+    pub fn deadline_of_tenant(&self, tenant: u32, arrival_cycle: u64, cycles_per_ms: u64) -> Option<u64> {
+        if !self.enabled {
+            return None;
+        }
+        let ms = self.deadline_ms[tenant as usize % 4];
+        if ms <= 0.0 {
+            return None;
+        }
+        Some(arrival_cycle + (ms * cycles_per_ms as f64) as u64)
+    }
+}
+
 /// Execution-region formation mechanism (paper Fig. 2 a–d).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RegionPolicyKind {
@@ -760,6 +929,8 @@ pub struct Config {
     pub pool: PoolConfig,
     /// Energy model, power gating, and power-cap governor.
     pub energy: EnergyConfig,
+    /// QoS: priority classes, deadlines, preemptive scheduling.
+    pub qos: QosConfig,
     /// Workload.
     pub workload: WorkloadConfig,
     /// Directory containing AOT artifacts + manifest.json, or the
@@ -776,6 +947,7 @@ impl Default for Config {
             server: ServerConfig::default(),
             pool: PoolConfig::default(),
             energy: EnergyConfig::default(),
+            qos: QosConfig::default(),
             workload: WorkloadConfig::Cloud(CloudWorkloadConfig::default()),
             artifacts_dir: "artifacts".into(),
         }
@@ -888,6 +1060,42 @@ impl Config {
             read_u64(energy, "power_window_cycles", &mut e.power_window_cycles)?;
         }
 
+        if let Some(qos) = root.get("qos") {
+            let q = &mut cfg.qos;
+            read_bool(qos, "enabled", &mut q.enabled)?;
+            if let Some(v) = qos.get("policy") {
+                q.policy = QosPolicyKind::from_name(str_of(v, "qos.policy")?)?;
+            }
+            read_bool(qos, "preemption", &mut q.preemption)?;
+            read_u64(qos, "aging_cycles", &mut q.aging_cycles)?;
+            read_u32(qos, "max_victims", &mut q.max_victims)?;
+            if let Some(v) = qos.get("tenant_classes") {
+                let arr = v.as_arr().ok_or_else(|| {
+                    Error::Config("qos.tenant_classes must be an array".into())
+                })?;
+                if arr.len() != 4 {
+                    return Err(Error::Config("qos.tenant_classes needs 4 entries".into()));
+                }
+                for (i, item) in arr.iter().enumerate() {
+                    q.tenant_class[i] =
+                        QosClass::from_name(str_of(item, "qos.tenant_classes")?)?;
+                }
+            }
+            if let Some(v) = qos.get("deadline_ms") {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| Error::Config("qos.deadline_ms must be an array".into()))?;
+                if arr.len() != 4 {
+                    return Err(Error::Config("qos.deadline_ms needs 4 entries".into()));
+                }
+                for (i, item) in arr.iter().enumerate() {
+                    q.deadline_ms[i] = item.as_float().ok_or_else(|| {
+                        Error::Config("qos.deadline_ms entries must be numbers".into())
+                    })?;
+                }
+            }
+        }
+
         if let Some(wl) = root.get("workload") {
             let kind = wl
                 .get("kind")
@@ -956,6 +1164,7 @@ impl Config {
         self.server.validate()?;
         self.pool.validate()?;
         self.energy.validate()?;
+        self.qos.validate()?;
         let s = &self.scheduler;
         if s.unit_array_slices == 0 || s.unit_glb_slices == 0 {
             return Err(Error::Config("unit region sizes must be positive".into()));
@@ -1262,6 +1471,61 @@ mod tests {
         assert!(Config::from_toml_text("[energy]\nstream_duty = 1.5\n").is_err());
         assert!(Config::from_toml_text("[energy]\ngate_min_run = 0\n").is_err());
         assert!(Config::from_toml_text("[energy]\npower_window_cycles = 0\n").is_err());
+    }
+
+    #[test]
+    fn qos_knobs_parse_and_validate() {
+        let cfg = Config::from_toml_text(
+            "[qos]\nenabled = true\npolicy = \"edf\"\npreemption = true\naging_cycles = 1000000\n\
+             max_victims = 2\ntenant_classes = [\"best-effort\", \"interactive\", \"critical\", \"critical\"]\n\
+             deadline_ms = [0.0, 5.0, 8.0, 6.0]\n",
+        )
+        .unwrap();
+        assert!(cfg.qos.enabled);
+        assert_eq!(cfg.qos.policy, QosPolicyKind::Edf);
+        assert!(cfg.qos.preemption);
+        assert_eq!(cfg.qos.aging_cycles, 1_000_000);
+        assert_eq!(cfg.qos.max_victims, 2);
+        assert_eq!(
+            cfg.qos.tenant_class,
+            [QosClass::BestEffort, QosClass::Interactive, QosClass::Critical, QosClass::Critical]
+        );
+        assert_eq!(cfg.qos.deadline_ms, [0.0, 5.0, 8.0, 6.0]);
+        // defaults: subsystem off, everything BestEffort, no deadlines
+        let d = QosConfig::default();
+        assert!(!d.enabled);
+        assert_eq!(d.policy, QosPolicyKind::Edf);
+        assert!(d.preemption);
+        assert_eq!(d.tenant_class, [QosClass::BestEffort; 4]);
+        d.validate().unwrap();
+        // bad values rejected
+        assert!(Config::from_toml_text("[qos]\npolicy = \"magic\"\n").is_err());
+        assert!(Config::from_toml_text("[qos]\ntenant_classes = [\"critical\"]\n").is_err());
+        assert!(Config::from_toml_text("[qos]\ntenant_classes = [\"x\",\"x\",\"x\",\"x\"]\n").is_err());
+        assert!(Config::from_toml_text("[qos]\ndeadline_ms = [-1.0, 0.0, 0.0, 0.0]\n").is_err());
+        assert!(Config::from_toml_text("[qos]\nmax_victims = 0\n").is_err());
+    }
+
+    #[test]
+    fn qos_class_order_and_names_round_trip() {
+        assert!(QosClass::BestEffort < QosClass::Interactive);
+        assert!(QosClass::Interactive < QosClass::Critical);
+        for class in QosClass::ALL {
+            assert_eq!(QosClass::from_name(class.name()).unwrap(), class);
+        }
+        assert_eq!(QosClass::from_name("besteffort").unwrap(), QosClass::BestEffort);
+        for kind in [QosPolicyKind::Fifo, QosPolicyKind::Edf] {
+            assert_eq!(QosPolicyKind::from_name(kind.name()).unwrap(), kind);
+        }
+        // defaults resolve per tenant only when enabled
+        let mut q = QosConfig::default();
+        q.tenant_class = [QosClass::Critical; 4];
+        q.deadline_ms = [2.0; 4];
+        assert_eq!(q.class_of_tenant(1), QosClass::BestEffort, "disabled ⇒ BestEffort");
+        assert_eq!(q.deadline_of_tenant(1, 100, 500_000), None);
+        q.enabled = true;
+        assert_eq!(q.class_of_tenant(1), QosClass::Critical);
+        assert_eq!(q.deadline_of_tenant(1, 100, 500_000), Some(100 + 1_000_000));
     }
 
     #[test]

@@ -11,11 +11,12 @@ use std::collections::BTreeMap;
 use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 
-use crate::config::Config;
+use crate::config::{Config, QosClass, QosConfig};
 use crate::dpr::DprMode;
 use crate::error::{Error, Result};
 use crate::metrics::{FragmentationGauge, NtatRecord, NtatTracker};
 use crate::migration::MigrationReport;
+use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
 use crate::scheduler::{RequestQueue, Scheduler};
 use crate::sim::EventQueue;
@@ -23,6 +24,31 @@ use crate::tasks::{AppId, TaskLibrary};
 
 use super::binding::TaskBinding;
 use super::router::{Router, TenantId};
+
+/// One submission handed to the leader: tenant, app, virtual arrival
+/// cycle, plus optional QoS overrides.  `class`/`deadline_ms` default
+/// (`None`) to the `[qos]` config's per-tenant assignment — which is
+/// BestEffort / no deadline while the subsystem is disabled.
+#[derive(Clone, Copy, Debug)]
+pub struct Submission {
+    /// Submitting tenant.
+    pub tenant: TenantId,
+    /// Application.
+    pub app: AppId,
+    /// Virtual arrival cycle.
+    pub at: u64,
+    /// Explicit QoS class (wire `SUBMIT <t> <app> <class>`).
+    pub class: Option<QosClass>,
+    /// Explicit relative deadline in milliseconds from `at`.
+    pub deadline_ms: Option<f64>,
+}
+
+impl Submission {
+    /// Submission with config-default QoS.
+    pub fn new(tenant: TenantId, app: AppId, at: u64) -> Submission {
+        Submission { tenant, app, at, class: None, deadline_ms: None }
+    }
+}
 
 /// One served request's outcome.
 #[derive(Clone, Debug)]
@@ -65,10 +91,90 @@ pub struct Leader {
     router: Router,
     binding: TaskBinding,
     stats: ServeStats,
+    /// QoS defaults for submissions without explicit class/deadline.
+    qos: QosConfig,
+    /// Virtual cycles per millisecond (deadline conversion).
+    cycles_per_ms: u64,
+    /// Bounded per-class SLO history (`STATS QOS`): cumulative counters
+    /// plus a rolling percentile window, so a long-lived server's
+    /// memory and per-report cost stay O(window).
+    slo: RollingSlo,
 }
 
 enum Ev {
     Completion(RegionId),
+}
+
+/// Bounded SLO accumulator for the long-lived serving path: per-class
+/// counters are cumulative forever, while latency percentiles and
+/// slack statistics are computed over a rolling window of the most
+/// recent records — so [`Leader::qos_report`] costs O(window) per call
+/// and memory never grows with server lifetime (the sims keep using
+/// the exact full-run [`SloTracker`]).
+struct RollingSlo {
+    /// One window per class, so a flood of BestEffort completions can
+    /// never evict the (rarer) Critical latency records.
+    windows: [std::collections::VecDeque<SloRecord>; 3],
+    cap: usize,
+    completed: [u64; 3],
+    deadlined: [u64; 3],
+    missed: [u64; 3],
+}
+
+impl RollingSlo {
+    fn new(cap: usize) -> RollingSlo {
+        RollingSlo {
+            windows: std::array::from_fn(|_| std::collections::VecDeque::new()),
+            cap: cap.max(1),
+            completed: [0; 3],
+            deadlined: [0; 3],
+            missed: [0; 3],
+        }
+    }
+
+    fn record(&mut self, rec: SloRecord) {
+        let i = rec.class.index();
+        self.completed[i] += 1;
+        if rec.deadline.is_some() {
+            self.deadlined[i] += 1;
+        }
+        if rec.missed() {
+            self.missed[i] += 1;
+        }
+        if self.windows[i].len() == self.cap {
+            self.windows[i].pop_front();
+        }
+        self.windows[i].push_back(rec);
+    }
+
+    /// Report: windowed percentiles/slack, lifetime counters.
+    fn report(&self, stats: crate::qos::QosStats) -> QosReport {
+        let mut tracker = SloTracker::new();
+        for window in &self.windows {
+            for r in window {
+                tracker.record(*r);
+            }
+        }
+        let mut report = tracker.report(stats);
+        for row in report.per_class.iter_mut() {
+            let i = row.class.index();
+            row.completed = self.completed[i];
+            row.deadlined = self.deadlined[i];
+            row.missed = self.missed[i];
+        }
+        report
+    }
+}
+
+/// Per-request in-flight bookkeeping of one serve loop.
+struct InflightReq {
+    app: AppId,
+    arrival: u64,
+    exec_cycles: u64,
+    compute_us: f64,
+    last_sum: f64,
+    class: QosClass,
+    deadline: Option<u64>,
 }
 
 impl Leader {
@@ -99,14 +205,21 @@ impl Leader {
             router,
             binding,
             stats: ServeStats { warmup_ms, ..ServeStats::default() },
+            qos: cfg.qos.clone(),
+            cycles_per_ms: cfg.arch.core_clock_mhz as u64 * 1000,
+            slo: RollingSlo::new(4096),
         })
     }
 
     /// Serve a batch of (tenant, app) submissions arriving at the given
     /// virtual cycles, running every launched task's artifact.  Returns
-    /// when all requests have completed.
+    /// when all requests have completed.  QoS classes/deadlines come
+    /// from the `[qos]` config defaults; use [`Leader::serve_batch`]
+    /// with explicit [`Submission`]s to override per request.
     pub fn serve(&mut self, submissions: &[(TenantId, AppId, u64)]) -> Result<&ServeStats> {
-        self.serve_assigning(submissions)?;
+        let subs: Vec<Submission> =
+            submissions.iter().map(|&(t, app, at)| Submission::new(t, app, at)).collect();
+        self.serve_assigning(&subs)?;
         Ok(&self.stats)
     }
 
@@ -119,7 +232,7 @@ impl Leader {
     /// seqs rather than `next_seq` arithmetic.
     pub fn serve_batch(
         &mut self,
-        submissions: &[(TenantId, AppId, u64)],
+        submissions: &[Submission],
     ) -> Result<Vec<Option<ServeOutcome>>> {
         let assigned = self.serve_assigning(submissions)?;
         let mut drained: BTreeMap<u64, ServeOutcome> =
@@ -129,48 +242,87 @@ impl Leader {
 
     /// The serve loop; returns the seq assigned to each submission, in
     /// the submissions' original order.
-    fn serve_assigning(&mut self, submissions: &[(TenantId, AppId, u64)]) -> Result<Vec<u64>> {
-        // request bookkeeping: seq → (app, arrival, exec cycles, compute µs, last sum)
-        let mut inflight: BTreeMap<u64, (AppId, u64, u64, f64, f64)> = BTreeMap::new();
+    fn serve_assigning(&mut self, submissions: &[Submission]) -> Result<Vec<u64>> {
+        // request bookkeeping by seq
+        let mut inflight: BTreeMap<u64, InflightReq> = BTreeMap::new();
         let mut events: EventQueue<Ev> = EventQueue::new();
-        // launch bookkeeping for completion events: region → (seq, dpr+exec)
+        // launch bookkeeping for completion events: region → finish
         let mut region_info: BTreeMap<RegionId, u64> = BTreeMap::new();
 
-        let mut arrivals: Vec<(usize, &(TenantId, AppId, u64))> =
-            submissions.iter().enumerate().collect();
-        arrivals.sort_by_key(|(_, s)| s.2);
+        let mut arrivals: Vec<(usize, &Submission)> = submissions.iter().enumerate().collect();
+        arrivals.sort_by_key(|(_, s)| s.at);
         let mut assigned: Vec<u64> = vec![0; submissions.len()];
         let mut next_arrival = 0usize;
         let mut now = 0u64;
 
         loop {
             // admit every arrival due at or before `now`
-            while next_arrival < arrivals.len() && arrivals[next_arrival].1 .2 <= now {
-                let (idx, &(tenant, app, at)) = arrivals[next_arrival];
-                let seq = self.router.submit(&mut self.queue, tenant, app, at)?;
+            while next_arrival < arrivals.len() && arrivals[next_arrival].1.at <= now {
+                let (idx, &sub) = arrivals[next_arrival];
+                let class = sub.class.unwrap_or_else(|| self.qos.class_of_tenant(sub.tenant.0));
+                let deadline = match sub.deadline_ms {
+                    Some(ms) if ms > 0.0 => {
+                        Some(sub.at + (ms * self.cycles_per_ms as f64) as u64)
+                    }
+                    Some(_) => None,
+                    None => self.qos.deadline_of_tenant(sub.tenant.0, sub.at, self.cycles_per_ms),
+                };
+                let seq = self.router.submit_classed(
+                    &mut self.queue,
+                    sub.tenant,
+                    sub.app,
+                    sub.at,
+                    class,
+                    deadline,
+                )?;
                 assigned[idx] = seq;
-                inflight.insert(seq, (app, at, 0, 0.0, 0.0));
+                inflight.insert(
+                    seq,
+                    InflightReq {
+                        app: sub.app,
+                        arrival: sub.at,
+                        exec_cycles: 0,
+                        compute_us: 0.0,
+                        last_sum: 0.0,
+                        class,
+                        deadline,
+                    },
+                );
                 next_arrival += 1;
             }
 
-            // schedule + functionally execute every launch
+            // schedule + functionally execute every launch.  A resumed
+            // (checkpoint-restored) launch does NOT re-run its
+            // artifact: the original launch already computed its output
+            // and charged its compute time.
             for launch in self.sched.schedule(&mut self.queue, now) {
                 self.stats.launches += 1;
-                let out = self.binding.execute(&launch.task, launch.ver)?;
                 let entry = inflight.get_mut(&launch.instance.request).ok_or_else(|| {
                     Error::SimInvariant(format!("launch for unknown request {}", launch.instance))
                 })?;
-                entry.2 += launch.dpr_cycles + launch.exec_cycles;
-                entry.3 += out.exec_us;
-                entry.4 = out.checksum().sum;
-                self.stats.total_compute_us += out.exec_us;
+                if !launch.resumed {
+                    let out = self.binding.execute(&launch.task, launch.ver)?;
+                    entry.compute_us += out.exec_us;
+                    entry.last_sum = out.checksum().sum;
+                    self.stats.total_compute_us += out.exec_us;
+                }
+                entry.exec_cycles += launch.dpr_cycles + launch.exec_cycles;
                 region_info.insert(launch.region, launch.finish);
                 events.push(launch.finish, Ev::Completion(launch.region));
+            }
+            // drain eviction records: a victim's un-run remainder
+            // re-accrues at resume, so take it back out of serviced
+            // cycles (also keeps the log from growing unboundedly in a
+            // long-lived server — counters live in qos_stats/SloTracker)
+            for p in self.sched.take_preemptions() {
+                if let Some(entry) = inflight.get_mut(&p.victim.request) {
+                    entry.exec_cycles = entry.exec_cycles.saturating_sub(p.remaining_cycles);
+                }
             }
 
             // advance to the next event: completion or arrival
             let next_event = events.peek_time();
-            let next_arr = arrivals.get(next_arrival).map(|(_, s)| s.2);
+            let next_arr = arrivals.get(next_arrival).map(|(_, s)| s.at);
             match (next_event, next_arr) {
                 (None, None) => break,
                 (Some(e), Some(a)) if a < e => {
@@ -185,6 +337,12 @@ impl Leader {
             }
             let (t, Ev::Completion(region)) = events.pop().expect("peeked");
             now = t;
+            // a preempted task's region was released; its checkpointed
+            // instance resumes on a fresh region with its own event
+            if self.sched.take_cancelled(region) {
+                region_info.remove(&region);
+                continue;
+            }
             // migrations push completions out; re-queue stale events at
             // the scheduler's authoritative finish
             if let Some(finish) = self.sched.finish_of(region) {
@@ -196,25 +354,31 @@ impl Leader {
             region_info.remove(&region);
             let inst = self.sched.complete(region, now)?;
             if let Some(done) = self.queue.mark_complete(inst, now)? {
-                let (app, arrival, exec, compute_us, last_sum) =
-                    inflight.remove(&done.seq).expect("inflight");
+                let req = inflight.remove(&done.seq).expect("inflight");
                 let tenant = self.router.complete(done.seq)?;
-                let tat = now - arrival;
-                let ntat = tat as f64 / exec.max(1) as f64;
-                self.stats.ntat.record(NtatRecord {
-                    app,
-                    arrival,
+                let tat = now - req.arrival;
+                let exec = req.exec_cycles.max(1);
+                let ntat = tat as f64 / exec as f64;
+                self.slo.record(SloRecord {
+                    class: req.class,
+                    arrival: req.arrival,
                     completion: now,
-                    exec_cycles: exec.max(1),
+                    deadline: req.deadline,
+                });
+                self.stats.ntat.record(NtatRecord {
+                    app: req.app,
+                    arrival: req.arrival,
+                    completion: now,
+                    exec_cycles: exec,
                 });
                 self.stats.outcomes.push(ServeOutcome {
                     seq: done.seq,
                     tenant,
-                    app,
+                    app: req.app,
                     tat_cycles: tat,
                     ntat,
-                    compute_us,
-                    final_output_sum: last_sum,
+                    compute_us: req.compute_us,
+                    final_output_sum: req.last_sum,
                 });
             }
         }
@@ -269,6 +433,15 @@ impl Leader {
     pub fn energy_snapshot(&self) -> (f64, f64, u64) {
         let e = self.sched.energy();
         (e.total_joules(), e.current_windowed_watts(), e.throttled())
+    }
+
+    /// Per-class SLO report over everything this leader has served —
+    /// lifetime completed/deadlined/missed counters, latency
+    /// percentiles over the most recent records — with the scheduler's
+    /// preemption counters attached.  The `STATS QOS` source; O(window)
+    /// per call.
+    pub fn qos_report(&self) -> QosReport {
+        self.slo.report(self.sched.qos_stats())
     }
 
     /// Force one compaction pass (the `DEFRAG` wire command).  Between
@@ -346,7 +519,10 @@ mod tests {
         cfg.artifacts_dir = crate::runtime::SYNTHETIC_DIR.into();
         let seqs = Arc::new(AtomicU64::new(5));
         let mut leader = Leader::new_shard(&cfg, seqs.clone()).unwrap();
-        let subs = vec![(TenantId(3), AppId::Harris, 0), (TenantId(2), AppId::Camera, 0)];
+        let subs = vec![
+            Submission::new(TenantId(3), AppId::Harris, 0),
+            Submission::new(TenantId(2), AppId::Camera, 0),
+        ];
         let outcomes = leader.serve_batch(&subs).unwrap();
         assert_eq!(outcomes.len(), 2);
         let a = outcomes[0].as_ref().expect("harris completes");
@@ -359,6 +535,38 @@ mod tests {
         assert!(leader.stats().outcomes.is_empty());
         assert_eq!(leader.stats().launches, 2);
         assert_eq!(seqs.load(Ordering::Relaxed), 7);
+    }
+
+    /// Explicit per-submission class/deadline overrides flow through the
+    /// router into the cumulative SLO report (the `STATS QOS` source).
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn explicit_qos_submissions_feed_the_slo_report() {
+        use crate::config::QosClass;
+
+        let mut cfg = presets::paper_default();
+        cfg.artifacts_dir = crate::runtime::SYNTHETIC_DIR.into();
+        let mut leader = Leader::new(&cfg).unwrap();
+        let mut met = Submission::new(TenantId(3), AppId::Harris, 0);
+        met.class = Some(QosClass::Critical);
+        met.deadline_ms = Some(60_000.0); // generous: always met
+        let mut missed = Submission::new(TenantId(2), AppId::Camera, 0);
+        missed.class = Some(QosClass::Critical);
+        missed.deadline_ms = Some(0.0001); // ~50 cycles: always missed
+        let outcomes = leader.serve_batch(&[met, missed]).unwrap();
+        assert!(outcomes.iter().all(|o| o.is_some()));
+        let report = leader.qos_report();
+        let crit = report.class(QosClass::Critical);
+        assert_eq!(crit.completed, 2);
+        assert_eq!(crit.deadlined, 2);
+        assert_eq!(crit.missed, 1);
+        assert!((crit.miss_rate() - 0.5).abs() < 1e-12);
+        // default submissions stay BestEffort with no deadline
+        let be = report.class(QosClass::BestEffort);
+        assert_eq!(be.completed, 0);
+        leader.serve(&[(TenantId(1), AppId::Harris, 0)]).unwrap();
+        assert_eq!(leader.qos_report().class(QosClass::BestEffort).completed, 1);
+        assert_eq!(leader.qos_report().class(QosClass::BestEffort).deadlined, 0);
     }
 
     /// Between batches the fabric is drained, so the control-plane

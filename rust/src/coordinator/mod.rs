@@ -20,6 +20,6 @@ mod router;
 pub mod server;
 
 pub use binding::TaskBinding;
-pub use leader::{Leader, ServeOutcome, ServeStats};
+pub use leader::{Leader, ServeOutcome, ServeStats, Submission};
 pub use router::{AdmissionQueues, Router, RouterStats, TenantId};
 pub use server::{parse_app, Server, TENANTS};

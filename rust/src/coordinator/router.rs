@@ -14,6 +14,7 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::config::QosClass;
 use crate::error::{Error, Result};
 use crate::scheduler::RequestQueue;
 use crate::tasks::{AppGraph, AppId, AppRequest};
@@ -105,6 +106,20 @@ impl Router {
         app: AppId,
         now: u64,
     ) -> Result<u64> {
+        self.submit_classed(queue, tenant, app, now, QosClass::BestEffort, None)
+    }
+
+    /// [`Router::submit`] carrying an explicit QoS class and optional
+    /// absolute deadline ([`crate::qos`]).
+    pub fn submit_classed(
+        &mut self,
+        queue: &mut RequestQueue,
+        tenant: TenantId,
+        app: AppId,
+        now: u64,
+        class: QosClass,
+        deadline: Option<u64>,
+    ) -> Result<u64> {
         let inflight = self.inflight.entry(tenant).or_insert(0);
         let stats = self.stats.entry(tenant).or_default();
         if *inflight >= self.max_inflight {
@@ -119,7 +134,7 @@ impl Router {
         // the field borrows above must end before alloc_seq reborrows self
         let seq = self.alloc_seq();
         self.owner.insert(seq, tenant);
-        queue.submit(AppRequest::new(seq, tenant.0, app, now));
+        queue.submit(AppRequest::new(seq, tenant.0, app, now).with_qos(class, deadline));
         Ok(seq)
     }
 

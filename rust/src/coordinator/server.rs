@@ -19,10 +19,13 @@
 //! `STATS SHARDS` which replies `1 + pool.shards` lines):
 //!
 //! ```text
-//! SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris>
+//! SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris> [class] [deadline_ms]
 //!   → OK seq=<n> ntat=<x> tat_ms=<x> compute_us=<x> sum=<x>
 //!   → BUSY tenant=<t> queue_depth=<d>     (admission queue full)
 //!   → ERR <reason>
+//!   class    = critical | interactive | best-effort   (default: the
+//!              `[qos]` config's per-tenant class)
+//!   deadline_ms = relative virtual-time deadline; 0 clears it
 //! STATS
 //!   → STATS served=<n> queued=<n> rejected=<n> failed=<n> pending=<n>
 //!           workers=<n> queue_depth=<n> frag_glb=<x> frag_arr=<x>
@@ -36,6 +39,11 @@
 //!   → STATS shards=<n> energy_j=<x> cap_w=<x> throttle_shrinks=<n>
 //!           placement=<policy>            (then one line per shard:)
 //!   → STATS shard=<i> energy_j=<x> power_w=<x> throttled=<n>
+//! STATS QOS
+//!   → STATS classes=3 preemptions=<n> evicted=<n> resumed=<n>
+//!                                         (then one line per class:)
+//!   → STATS class=<name> completed=<n> deadlined=<n> missed=<n>
+//!           miss_rate=<x> p50_ms=<x> p95_ms=<x> p99_ms=<x>
 //! DEFRAG
 //!   → DEFRAG migrated=<n> cycles=<n> frag_glb=<a>-><b> frag_arr=<a>-><b>
 //!   → ERR coordinator unavailable         (executors gone / shutting down)
@@ -70,12 +78,13 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::config::{Config, PlacementPolicyKind};
+use crate::config::{Config, PlacementPolicyKind, QosClass};
 use crate::error::{Error, Result};
 use crate::metrics::ServeCounters;
+use crate::qos::QosReport;
 use crate::tasks::AppId;
 
-use super::leader::Leader;
+use super::leader::{Leader, Submission};
 use super::router::{AdmissionQueues, TenantId};
 
 /// Tenants the wire protocol admits (the cloud scenario's four, Fig. 3a).
@@ -95,6 +104,10 @@ pub fn parse_app(name: &str) -> Option<AppId> {
 /// One admitted SUBMIT awaiting a scheduler worker.
 struct SubmitJob {
     app: AppId,
+    /// Explicit QoS class from the wire (`None` = config default).
+    class: Option<QosClass>,
+    /// Explicit relative deadline in ms (`None` = config default).
+    deadline_ms: Option<f64>,
     /// Reply line sink of the submitting connection.
     reply: mpsc::Sender<String>,
 }
@@ -123,7 +136,7 @@ enum ExecRequest {
     /// submission (in order); `None` means the scheduler produced no
     /// outcome for that seq.
     Batch {
-        subs: Vec<(TenantId, AppId, u64)>,
+        subs: Vec<Submission>,
         resp: mpsc::Sender<std::result::Result<Vec<Option<OutcomeLine>>, String>>,
     },
     /// The `DEFRAG` wire command: force one compaction pass on this
@@ -204,6 +217,9 @@ struct Shared {
     exec: Mutex<Vec<mpsc::Sender<ExecRequest>>>,
     /// One gauge slot per shard.
     shards: Vec<ShardGauges>,
+    /// Latest per-shard QoS report, executor-refreshed after every
+    /// batch (`STATS QOS` merges across shards).
+    qos: Mutex<Vec<Option<QosReport>>>,
 }
 
 impl Shared {
@@ -223,6 +239,7 @@ impl Shared {
             sticky: Mutex::new(BTreeMap::new()),
             exec: Mutex::new(Vec::new()),
             shards: (0..shard_count).map(|_| ShardGauges::new()).collect(),
+            qos: Mutex::new(vec![None; shard_count]),
         }
     }
 
@@ -332,6 +349,49 @@ impl Shared {
         slot.throttled.store(throttled, Ordering::Relaxed);
     }
 
+    /// Refresh one shard's QoS report (executor-refreshed, like
+    /// `record_fabric`).
+    fn record_qos(&self, shard: usize, report: QosReport) {
+        if shard >= self.shards.len() {
+            return;
+        }
+        if let Ok(mut slots) = self.qos.lock() {
+            slots[shard] = Some(report);
+        }
+    }
+
+    /// Merge the per-shard QoS reports for `STATS QOS`: counts are
+    /// summed; latency percentiles report the worst (max) shard — the
+    /// conservative read for an SLO surface.
+    fn qos_merged(&self) -> QosReport {
+        let slots = self.qos.lock().map(|g| g.clone()).unwrap_or_default();
+        let mut merged: Option<QosReport> = None;
+        for report in slots.into_iter().flatten() {
+            match merged {
+                None => merged = Some(report),
+                Some(ref mut m) => {
+                    for (row, other) in m.per_class.iter_mut().zip(report.per_class.iter()) {
+                        row.completed += other.completed;
+                        row.deadlined += other.deadlined;
+                        row.missed += other.missed;
+                        row.p50_latency = row.p50_latency.max(other.p50_latency);
+                        row.p95_latency = row.p95_latency.max(other.p95_latency);
+                        row.p99_latency = row.p99_latency.max(other.p99_latency);
+                        row.mean_slack = row.mean_slack.min(other.mean_slack);
+                        row.min_slack = row.min_slack.min(other.min_slack);
+                    }
+                    m.preemptions += report.preemptions;
+                    m.victims_evicted += report.victims_evicted;
+                    m.victims_resumed += report.victims_resumed;
+                    m.preempt_cycles += report.preempt_cycles;
+                }
+            }
+        }
+        merged.unwrap_or_else(|| {
+            crate::qos::SloTracker::new().report(crate::qos::QosStats::default())
+        })
+    }
+
     /// How long an over-cap reading keeps throttling without being
     /// refreshed.  A shard only refreshes its gauge when it processes a
     /// batch, so a shard that went quiet while hot must age out instead
@@ -408,7 +468,27 @@ fn handle_line(
                 Some(a) => a,
                 None => return ("ERR bad app (resnet18|mobilenet|camera|harris)".into(), false),
             };
-            let job = SubmitJob { app, reply: reply_tx.clone() };
+            // optional: [class] [deadline_ms]
+            let mut class: Option<QosClass> = None;
+            let mut deadline_ms: Option<f64> = None;
+            if let Some(tok) = parts.next() {
+                match QosClass::from_name(&tok.to_ascii_lowercase()) {
+                    Ok(c) => class = Some(c),
+                    Err(_) => {
+                        return (
+                            "ERR bad class (critical|interactive|best-effort)".into(),
+                            false,
+                        )
+                    }
+                }
+                if let Some(tok) = parts.next() {
+                    match tok.parse::<f64>() {
+                        Ok(ms) if ms.is_finite() && ms >= 0.0 => deadline_ms = Some(ms),
+                        _ => return ("ERR bad deadline_ms".into(), false),
+                    }
+                }
+            }
+            let job = SubmitJob { app, class, deadline_ms, reply: reply_tx.clone() };
             match shared.queues.try_push(tenant, job) {
                 Ok(()) => {
                     shared.counters.record_queued(tenant.0 as usize);
@@ -449,6 +529,33 @@ fn handle_line(
             }
         }
         Some("STATS") => match parts.next() {
+            Some(t) if t.eq_ignore_ascii_case("qos") => {
+                // 1 + 3 lines: header names the class-line count.
+                let merged = shared.qos_merged();
+                let to_ms = |cycles: f64| cycles / shared.cycles_per_ms as f64;
+                let mut out = format!(
+                    "STATS classes={} preemptions={} evicted={} resumed={}",
+                    merged.per_class.len(),
+                    merged.preemptions,
+                    merged.victims_evicted,
+                    merged.victims_resumed,
+                );
+                for row in &merged.per_class {
+                    out.push_str(&format!(
+                        "\nSTATS class={} completed={} deadlined={} missed={} miss_rate={:.3} \
+                         p50_ms={:.3} p95_ms={:.3} p99_ms={:.3}",
+                        row.class.name(),
+                        row.completed,
+                        row.deadlined,
+                        row.missed,
+                        row.miss_rate(),
+                        to_ms(row.p50_latency),
+                        to_ms(row.p95_latency),
+                        to_ms(row.p99_latency),
+                    ));
+                }
+                (out, false)
+            }
             Some(t) if t.eq_ignore_ascii_case("energy") => {
                 // 1 + shard_count lines, same framing as STATS SHARDS:
                 // the header names how many per-shard lines follow.
@@ -634,8 +741,16 @@ fn send_batch(
     shard: usize,
     batch: Vec<(TenantId, SubmitJob)>,
 ) -> Option<PendingBatch> {
-    let subs: Vec<(TenantId, AppId, u64)> =
-        batch.iter().map(|(tenant, job)| (*tenant, job.app, 0)).collect();
+    let subs: Vec<Submission> = batch
+        .iter()
+        .map(|(tenant, job)| Submission {
+            tenant: *tenant,
+            app: job.app,
+            at: 0,
+            class: job.class,
+            deadline_ms: job.deadline_ms,
+        })
+        .collect();
     let (resp_tx, resp_rx) = mpsc::channel();
     if execs[shard].send(ExecRequest::Batch { subs, resp: resp_tx }).is_err() {
         shared.release_shard(shard);
@@ -769,6 +884,7 @@ fn run_executor(
                 );
                 let (joules, watts, throttled) = leader.energy_snapshot();
                 shared.record_energy(shard, joules, watts, throttled);
+                shared.record_qos(shard, leader.qos_report());
                 let _ = resp.send(result);
             }
         }
@@ -1022,6 +1138,9 @@ mod tests {
         assert!(line(&shared, "SUBMIT 9 camera").0.starts_with("ERR bad tenant"));
         assert!(line(&shared, "SUBMIT x camera").0.starts_with("ERR bad tenant"));
         assert!(line(&shared, "SUBMIT 1 nope").0.starts_with("ERR bad app"));
+        assert!(line(&shared, "SUBMIT 1 camera magic").0.starts_with("ERR bad class"));
+        assert!(line(&shared, "SUBMIT 1 camera critical soon").0.starts_with("ERR bad deadline"));
+        assert!(line(&shared, "SUBMIT 1 camera critical -5").0.starts_with("ERR bad deadline"));
         assert!(line(&shared, "FROB").0.starts_with("ERR unknown command"));
         assert!(line(&shared, "").0.starts_with("ERR empty"));
         assert!(line(&shared, "STATS 12").0.starts_with("ERR bad tenant"));
@@ -1039,7 +1158,10 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         shared
             .queues
-            .try_push(TenantId(2), SubmitJob { app: AppId::Camera, reply: tx })
+            .try_push(
+                TenantId(2),
+                SubmitJob { app: AppId::Camera, class: None, deadline_ms: None, reply: tx },
+            )
             .unwrap_or_else(|_| panic!("first push fits"));
         let (reply, close) = line(&shared, "SUBMIT 2 camera");
         assert_eq!(reply, "BUSY tenant=2 queue_depth=1");
@@ -1157,6 +1279,48 @@ mod tests {
     }
 
     #[test]
+    fn stats_qos_renders_header_and_merged_class_lines() {
+        use crate::qos::{QosStats, SloRecord, SloTracker};
+
+        let shared = test_shared_sharded(4, 2);
+        // empty: header + 3 zeroed class lines
+        let (reply, close) = line(&shared, "STATS QOS");
+        assert!(!close);
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines.len(), 4, "{reply}");
+        assert_eq!(lines[0], "STATS classes=3 preemptions=0 evicted=0 resumed=0");
+        assert!(lines[1].contains("class=best-effort completed=0"), "{reply}");
+        // record two shards and check the merge: counts sum, p99 is max
+        let mut a = SloTracker::new();
+        a.record(SloRecord {
+            class: crate::config::QosClass::Critical,
+            arrival: 0,
+            completion: 500_000, // 1 ms at 500 MHz
+            deadline: Some(400_000),
+        });
+        shared.record_qos(0, a.report(QosStats { preemptions: 2, ..Default::default() }));
+        let mut b = SloTracker::new();
+        b.record(SloRecord {
+            class: crate::config::QosClass::Critical,
+            arrival: 0,
+            completion: 1_500_000, // 3 ms
+            deadline: None,
+        });
+        shared.record_qos(1, b.report(QosStats::default()));
+        let (reply, _) = line(&shared, "STATS QOS");
+        let lines: Vec<&str> = reply.lines().collect();
+        assert!(lines[0].contains("preemptions=2"), "{reply}");
+        let crit = lines.iter().find(|l| l.contains("class=critical")).unwrap();
+        assert!(crit.contains("completed=2"), "{reply}");
+        assert!(crit.contains("deadlined=1"), "{reply}");
+        assert!(crit.contains("missed=1"), "{reply}");
+        assert!(crit.contains("miss_rate=1.000"), "{reply}");
+        assert!(crit.contains("p99_ms=3.000"), "worst shard wins: {reply}");
+        // out-of-range shard writes are ignored
+        shared.record_qos(9, SloTracker::new().report(QosStats::default()));
+    }
+
+    #[test]
     fn batch_cap_shrinks_only_over_the_power_cap() {
         // uncapped: never shrinks, even with high recorded power
         let uncapped = test_shared(4);
@@ -1257,6 +1421,22 @@ mod tests {
         assert!(stats.contains("frag_glb="), "{stats}");
         let t3 = send(&mut writer, &mut reader, "STATS 3");
         assert!(t3.contains("tenant=3 served=1 queued=1 rejected=0"), "{t3}");
+
+        // a classed SUBMIT with a generous deadline is served and the
+        // QoS surface reflects it (header + 3 class lines)
+        let reply = send(&mut writer, &mut reader, "SUBMIT 3 harris critical 60000");
+        assert!(reply.starts_with("OK seq=1"), "{reply}");
+        writer.write_all(b"STATS QOS\n").unwrap();
+        let mut qos_lines = Vec::new();
+        for _ in 0..4 {
+            let mut l = String::new();
+            reader.read_line(&mut l).unwrap();
+            qos_lines.push(l.trim_end().to_string());
+        }
+        assert!(qos_lines[0].starts_with("STATS classes=3"), "{qos_lines:?}");
+        let crit = qos_lines.iter().find(|l| l.contains("class=critical")).unwrap();
+        assert!(crit.contains("completed=1"), "{qos_lines:?}");
+        assert!(crit.contains("missed=0"), "{qos_lines:?}");
 
         // control-plane defrag: fabric is drained between batches, so
         // this reports a clean no-op over the wire

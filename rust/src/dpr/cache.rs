@@ -5,9 +5,21 @@
 //! Cached bitstreams consume real bank capacity, so the cache has a
 //! budget: a fraction of total GLB bytes reserved for configuration
 //! storage (Amber dedicates every other bank; we default to half).
-//! Eviction is LRU.
+//! Eviction is LRU, with two refinements the preemption engine relies
+//! on ([`crate::qos`]):
+//!
+//! * **Pinning** — the scheduler pins the bitstream of every running or
+//!   launching task ([`BitstreamCache::pin`]), so eviction can never
+//!   discard configuration state that a checkpointed victim's fast-DPR
+//!   relaunch (or a live migration's restream) is about to need.  Pins
+//!   are counted, since several regions may run the same variant.
+//! * **O(1) membership** — residency and byte accounting live in a
+//!   `HashMap` index; the LRU order is a lazily-invalidated deque of
+//!   `(use_seq, id)` stamps (a lookup pushes a fresh stamp instead of
+//!   repositioning, and eviction skips stale stamps), so `lookup` and
+//!   `insert` no longer scan the whole deque per call.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::config::ArchConfig;
 
@@ -36,11 +48,28 @@ impl CacheStats {
     }
 }
 
-/// LRU bitstream cache with a byte budget.
+/// One resident bitstream.
+#[derive(Clone, Debug)]
+struct Entry {
+    bytes: u64,
+    /// Stamp of the entry's most recent use; deque stamps below this
+    /// are stale.
+    last_use: u64,
+    /// Pin count: > 0 exempts the entry from eviction.
+    pins: u32,
+}
+
+/// LRU bitstream cache with a byte budget, pinning, and an O(1)
+/// residency index.
 #[derive(Clone, Debug)]
 pub struct BitstreamCache {
-    /// LRU order: front = least recently used.
-    entries: VecDeque<(BitstreamId, u64)>,
+    /// Residency index: id → entry.
+    index: HashMap<BitstreamId, Entry>,
+    /// Recency stamps, oldest first.  An id may appear several times;
+    /// only the stamp equal to its entry's `last_use` is live.
+    order: VecDeque<(u64, BitstreamId)>,
+    /// Monotonic use counter feeding the stamps.
+    use_seq: u64,
     capacity_bytes: u64,
     used_bytes: u64,
     stats: CacheStats,
@@ -56,7 +85,9 @@ impl BitstreamCache {
     /// Explicit byte budget.
     pub fn with_capacity(capacity_bytes: u64) -> Self {
         BitstreamCache {
-            entries: VecDeque::new(),
+            index: HashMap::new(),
+            order: VecDeque::new(),
+            use_seq: 0,
             capacity_bytes,
             used_bytes: 0,
             stats: CacheStats::default(),
@@ -75,12 +106,12 @@ impl BitstreamCache {
 
     /// Cached entry count.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.index.len()
     }
 
     /// Whether nothing is cached.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.index.is_empty()
     }
 
     /// Counters.
@@ -88,34 +119,101 @@ impl BitstreamCache {
         self.stats
     }
 
-    /// Whether `id` is resident; refreshes LRU position when it is.
+    /// Push a fresh recency stamp for `id` (O(1) amortized — stale
+    /// stamps are skipped lazily at eviction time, and the deque is
+    /// compacted whenever stale stamps outnumber live entries, so it
+    /// stays O(entries) even across eviction-free runs with millions of
+    /// lookups).
+    fn touch(&mut self, id: &BitstreamId) {
+        self.use_seq += 1;
+        let seq = self.use_seq;
+        if let Some(e) = self.index.get_mut(id) {
+            e.last_use = seq;
+        }
+        self.order.push_back((seq, id.clone()));
+        if self.order.len() > 16 && self.order.len() > 2 * self.index.len() {
+            let index = &self.index;
+            self.order
+                .retain(|(s, i)| index.get(i).map(|e| e.last_use == *s).unwrap_or(false));
+        }
+    }
+
+    /// Whether `id` is resident; refreshes its LRU position when it is.
     pub fn lookup(&mut self, id: &BitstreamId) -> bool {
-        if let Some(pos) = self.entries.iter().position(|(e, _)| e == id) {
-            let entry = self.entries.remove(pos).expect("position valid");
-            self.entries.push_back(entry);
+        if self.index.contains_key(id) {
+            self.touch(id);
             true
         } else {
             false
         }
     }
 
-    /// Insert (idempotent), evicting LRU entries to fit the budget.
-    /// Bitstreams larger than the whole budget are not cached.
+    /// Pin a resident bitstream against eviction (counted; no-op when
+    /// absent — e.g. the AXI mode's empty cache, or an over-budget
+    /// bitstream that was never admitted).
+    pub fn pin(&mut self, id: &BitstreamId) {
+        if let Some(e) = self.index.get_mut(id) {
+            e.pins += 1;
+        }
+    }
+
+    /// Drop one pin (saturating; no-op when absent).
+    pub fn unpin(&mut self, id: &BitstreamId) {
+        if let Some(e) = self.index.get_mut(id) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    /// Current pin count of a resident bitstream (0 when absent).
+    pub fn pins(&self, id: &BitstreamId) -> u32 {
+        self.index.get(id).map(|e| e.pins).unwrap_or(0)
+    }
+
+    /// Insert (idempotent), evicting LRU *unpinned* entries to fit the
+    /// budget.  Bitstreams that cannot fit even after evicting every
+    /// unpinned entry are not cached (pinned residents are never
+    /// sacrificed for a newcomer).
     pub fn insert(&mut self, bs: &Bitstream) {
-        if self.entries.iter().any(|(e, _)| *e == bs.id) {
+        if self.index.contains_key(&bs.id) {
             return;
         }
         let bytes = bs.bytes();
         if bytes > self.capacity_bytes {
             return;
         }
+        // room check against what eviction could ever reclaim
+        let pinned_bytes: u64 =
+            self.index.values().filter(|e| e.pins > 0).map(|e| e.bytes).sum();
+        if pinned_bytes + bytes > self.capacity_bytes {
+            return;
+        }
         while self.used_bytes + bytes > self.capacity_bytes {
-            let (_, evicted) = self.entries.pop_front().expect("used>0 implies entries");
-            self.used_bytes -= evicted;
+            let Some((seq, id)) = self.order.pop_front() else {
+                debug_assert!(false, "used_bytes > 0 implies live stamps");
+                break;
+            };
+            // stale stamp (the entry was touched since, or is gone) — skip
+            let (live, pinned) = match self.index.get(&id) {
+                Some(e) => (e.last_use == seq, e.pins > 0),
+                None => (false, false),
+            };
+            if !live {
+                continue;
+            }
+            if pinned {
+                // re-stamp at the back so the pinned entry is only
+                // reconsidered after everything else; the pinned-bytes
+                // guard above ensures an unpinned victim still exists
+                self.touch(&id);
+                continue;
+            }
+            let evicted = self.index.remove(&id).expect("live entry");
+            self.used_bytes -= evicted.bytes;
             self.stats.evictions += 1;
         }
-        self.entries.push_back((bs.id.clone(), bytes));
+        self.index.insert(bs.id.clone(), Entry { bytes, last_use: 0, pins: 0 });
         self.used_bytes += bytes;
+        self.touch(&bs.id);
     }
 
     /// Record a hit (engine bookkeeping).
@@ -143,6 +241,10 @@ mod tests {
         }
     }
 
+    fn id(name: &str) -> BitstreamId {
+        BitstreamId::new(name, 'a')
+    }
+
     #[test]
     fn default_budget_is_half_glb() {
         let c = BitstreamCache::new(&ArchConfig::default());
@@ -152,9 +254,9 @@ mod tests {
     #[test]
     fn insert_lookup_cycle() {
         let mut c = BitstreamCache::with_capacity(1024);
-        assert!(!c.lookup(&BitstreamId::new("x", 'a')));
+        assert!(!c.lookup(&id("x")));
         c.insert(&bs("x", 10));
-        assert!(c.lookup(&BitstreamId::new("x", 'a')));
+        assert!(c.lookup(&id("x")));
         assert_eq!(c.used_bytes(), 40);
         // idempotent
         c.insert(&bs("x", 10));
@@ -167,11 +269,11 @@ mod tests {
         c.insert(&bs("a", 10)); // 40 B
         c.insert(&bs("b", 10));
         c.insert(&bs("c", 10)); // full: a,b,c
-        assert!(c.lookup(&BitstreamId::new("a", 'a'))); // refresh a
+        assert!(c.lookup(&id("a"))); // refresh a
         c.insert(&bs("d", 10)); // evicts b (LRU)
-        assert!(!c.lookup(&BitstreamId::new("b", 'a')));
-        assert!(c.lookup(&BitstreamId::new("a", 'a')));
-        assert!(c.lookup(&BitstreamId::new("c", 'a')));
+        assert!(!c.lookup(&id("b")));
+        assert!(c.lookup(&id("a")));
+        assert!(c.lookup(&id("c")));
         assert_eq!(c.stats().evictions, 1);
     }
 
@@ -191,5 +293,144 @@ mod tests {
         c.record_hit();
         c.record_miss();
         assert!((c.stats().hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    // ------------------------------------------------------------ pinning
+
+    #[test]
+    fn pinned_entries_survive_eviction_pressure() {
+        let mut c = BitstreamCache::with_capacity(120);
+        c.insert(&bs("running", 10)); // LRU — would be the first victim
+        c.insert(&bs("b", 10));
+        c.insert(&bs("c", 10));
+        c.pin(&id("running"));
+        c.insert(&bs("d", 10)); // must evict b, not the pinned LRU
+        assert!(c.lookup(&id("running")), "pinned bitstream must stay resident");
+        assert!(!c.lookup(&id("b")));
+        assert!(c.lookup(&id("d")));
+        // unpin makes it evictable again
+        c.unpin(&id("running"));
+        c.insert(&bs("e", 10));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.used_bytes(), 120);
+    }
+
+    #[test]
+    fn pins_are_counted_across_concurrent_runners() {
+        let mut c = BitstreamCache::with_capacity(80);
+        c.insert(&bs("shared", 10));
+        c.pin(&id("shared"));
+        c.pin(&id("shared")); // two regions run the same variant
+        assert_eq!(c.pins(&id("shared")), 2);
+        c.unpin(&id("shared"));
+        assert_eq!(c.pins(&id("shared")), 1, "one completion leaves one pin");
+        c.insert(&bs("b", 10));
+        c.insert(&bs("c", 10)); // evicts unpinned "b", never "shared"
+        assert!(c.lookup(&id("shared")), "still-pinned entry survives");
+        assert!(c.lookup(&id("c")));
+        assert!(!c.lookup(&id("b")));
+        // pin/unpin on absent ids are safe no-ops
+        c.pin(&id("ghost"));
+        c.unpin(&id("ghost"));
+        assert_eq!(c.pins(&id("ghost")), 0);
+        c.unpin(&id("shared"));
+        c.unpin(&id("shared")); // saturating below zero
+        assert_eq!(c.pins(&id("shared")), 0);
+    }
+
+    #[test]
+    fn fully_pinned_cache_refuses_newcomers_without_evicting() {
+        let mut c = BitstreamCache::with_capacity(80);
+        c.insert(&bs("a", 10));
+        c.insert(&bs("b", 10));
+        c.pin(&id("a"));
+        c.pin(&id("b"));
+        c.insert(&bs("c", 10));
+        assert_eq!(c.len(), 2, "no room ever reclaimable: newcomer dropped");
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.used_bytes(), 80);
+    }
+
+    // --------------------------------------------- eviction edge cases
+
+    #[test]
+    fn exact_fit_insert_takes_the_whole_budget() {
+        let mut c = BitstreamCache::with_capacity(80);
+        c.insert(&bs("a", 10));
+        c.insert(&bs("b", 10)); // 80/80 used — exactly full
+        assert_eq!(c.used_bytes(), 80);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 0);
+        // an exact-fit replacement evicts precisely the LRU entry
+        c.insert(&bs("c", 10));
+        assert_eq!(c.used_bytes(), 80);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(!c.lookup(&id("a")));
+    }
+
+    #[test]
+    fn reinsert_never_double_counts_used_bytes() {
+        let mut c = BitstreamCache::with_capacity(200);
+        for _ in 0..5 {
+            c.insert(&bs("x", 10));
+        }
+        assert_eq!(c.used_bytes(), 40);
+        assert_eq!(c.len(), 1);
+        // interleave lookups (stale-stamp pressure) and re-inserts
+        for _ in 0..5 {
+            assert!(c.lookup(&id("x")));
+            c.insert(&bs("x", 10));
+        }
+        assert_eq!(c.used_bytes(), 40);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn stale_stamps_do_not_evict_recently_used_entries() {
+        let mut c = BitstreamCache::with_capacity(120);
+        c.insert(&bs("a", 10));
+        c.insert(&bs("b", 10));
+        c.insert(&bs("c", 10));
+        // touch "a" many times: the deque now holds several stale "a"
+        // stamps ahead of b/c
+        for _ in 0..10 {
+            assert!(c.lookup(&id("a")));
+        }
+        c.insert(&bs("d", 10));
+        assert!(c.lookup(&id("a")), "hot entry must survive its stale stamps");
+        assert!(!c.lookup(&id("b")), "true LRU is evicted");
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn recency_stamps_stay_bounded_across_eviction_free_runs() {
+        let mut c = BitstreamCache::with_capacity(1024);
+        c.insert(&bs("a", 10));
+        c.insert(&bs("b", 10));
+        for _ in 0..10_000 {
+            assert!(c.lookup(&id("a")));
+            assert!(c.lookup(&id("b")));
+        }
+        // compaction keeps the stamp deque O(entries), not O(lookups)
+        assert!(c.order.len() <= 17, "stamps must compact: {}", c.order.len());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.used_bytes(), 80);
+        // LRU semantics survive compaction
+        c.insert(&bs("filler", 200)); // 800 B: forces eviction pressure
+        assert!(c.lookup(&id("filler")));
+    }
+
+    #[test]
+    fn eviction_frees_until_the_newcomer_fits() {
+        let mut c = BitstreamCache::with_capacity(120);
+        c.insert(&bs("a", 10));
+        c.insert(&bs("b", 10));
+        c.insert(&bs("c", 10));
+        c.insert(&bs("big", 25)); // 100 B: evicts a, b and c
+        assert_eq!(c.stats().evictions, 3);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 100);
+        assert!(c.lookup(&id("big")));
     }
 }

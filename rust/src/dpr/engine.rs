@@ -133,6 +133,20 @@ impl DprEngine {
         }
     }
 
+    /// Pin a resident bitstream against cache eviction — the scheduler
+    /// pins every running/launching task's bitstream so a preemption
+    /// relaunch ([`crate::qos`]) or migration restream can never find
+    /// its configuration state evicted.  Counted; no-op under AXI mode
+    /// (nothing is cached there).
+    pub fn pin(&mut self, id: &super::bitstream::BitstreamId) {
+        self.cache.pin(id);
+    }
+
+    /// Drop one pin (no-op when absent).
+    pub fn unpin(&mut self, id: &super::bitstream::BitstreamId) {
+        self.cache.unpin(id);
+    }
+
     /// Cycles to restream `bs` for a live-migration relocation
     /// ([`crate::migration`]).  A migrating task's bitstream is by
     /// definition resident (it was streamed at launch), so this is the
@@ -288,6 +302,48 @@ mod tests {
         assert_eq!(fast.cache().stats(), hits_before, "read-only costing");
         let axi = DprEngine::new(&arch(), &cfg(), DprMode::Axi4Lite);
         assert_eq!(axi.migration_stream_cycles(&bs), 133_120);
+    }
+
+    #[test]
+    fn engine_hit_miss_counters_track_reconfigurations() {
+        let mut e = DprEngine::new(&arch(), &cfg(), DprMode::Fast);
+        let bs = two_slice_bs();
+        assert_eq!(e.cache().stats(), crate::dpr::CacheStats::default());
+        let _ = e.reconfigure(&bs, &SliceRange::new(0, 2)); // miss + insert
+        let _ = e.reconfigure(&bs, &SliceRange::new(2, 2)); // hit
+        let _ = e.reconfigure(&bs, &SliceRange::new(4, 2)); // hit
+        let s = e.cache().stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 1, 0));
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        // AXI mode records nothing: it never consults the cache
+        let mut axi = DprEngine::new(&arch(), &cfg(), DprMode::Axi4Lite);
+        let _ = axi.reconfigure(&bs, &SliceRange::new(0, 2));
+        assert_eq!(axi.cache().stats(), crate::dpr::CacheStats::default());
+    }
+
+    #[test]
+    fn engine_pin_protects_a_running_tasks_bitstream() {
+        // capacity for exactly one two-slice bitstream
+        let mut e = DprEngine::new(&arch(), &cfg(), DprMode::Fast);
+        e.cache = BitstreamCache::with_capacity(2 * 6656 * 4);
+        let running = two_slice_bs();
+        let _ = e.reconfigure(&running, &SliceRange::new(0, 2));
+        e.pin(&running.id);
+        // another task's bitstream cannot displace the pinned one
+        let mut other = two_slice_bs();
+        other.id = BitstreamId::new("harris.corner", 'b');
+        let out = e.reconfigure(&other, &SliceRange::new(2, 2));
+        assert!(!out.cache_hit);
+        let relaunch = e.reconfigure(&running, &SliceRange::new(4, 2));
+        assert!(relaunch.cache_hit, "preemption relaunch must find the bitstream resident");
+        // after completion the pin drops and the entry becomes evictable
+        e.unpin(&running.id);
+        let _ = e.reconfigure(&other, &SliceRange::new(2, 2));
+        assert!(!e.cache().is_empty());
+        // pin/unpin are harmless no-ops under AXI mode
+        let mut axi = DprEngine::new(&arch(), &cfg(), DprMode::Axi4Lite);
+        axi.pin(&running.id);
+        axi.unpin(&running.id);
     }
 
     #[test]

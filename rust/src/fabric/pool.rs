@@ -7,8 +7,10 @@ use crate::config::{Config, PlacementPolicyKind};
 use crate::dpr::DprMode;
 use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
+use crate::config::QosClass;
 use crate::metrics::FragmentationGauge;
 use crate::migration::{MigrationReport, MigrationStats};
+use crate::qos::{PreemptionRecord, QosStats};
 use crate::regions::RegionId;
 use crate::scheduler::{Launch, RequestQueue, Scheduler};
 use crate::tasks::{AppGraph, AppId, AppRequest, TaskLibrary};
@@ -309,7 +311,7 @@ impl FabricPool {
             self.stats.busy_rejections += 1;
             return None;
         }
-        let mut loads = self.loads(&demand);
+        let mut loads = self.loads(&demand, req.class, now);
         if self.window > 0 {
             loads.retain(|l| l.open_requests < self.window);
         }
@@ -323,7 +325,7 @@ impl FabricPool {
             if let Some(victim) = self.cheapest_defrag_candidate(&loads, &demand) {
                 self.stats.cross_shard_defrags += 1;
                 let _ = self.defrag_shard(victim, now);
-                loads = self.loads(&demand);
+                loads = self.loads(&demand, req.class, now);
                 if self.window > 0 {
                     loads.retain(|l| l.open_requests < self.window);
                 }
@@ -340,7 +342,8 @@ impl FabricPool {
         }
         let seq = req.seq;
         let tenant = req.tenant;
-        let shard = rescued_to.unwrap_or_else(|| self.router.place(tenant, &loads));
+        let class = req.class;
+        let shard = rescued_to.unwrap_or_else(|| self.router.place(tenant, class, &loads));
         let s = &mut self.shards[shard.0 as usize];
         s.queue.submit(req);
         s.open += 1;
@@ -391,6 +394,42 @@ impl FabricPool {
             .and_then(|s| s.sched.finish_of(region))
     }
 
+    /// Whether `shard`/`region`'s queued completion event was
+    /// invalidated by a preemption (consumes the marker; see
+    /// [`crate::scheduler::Scheduler::take_cancelled`]).
+    pub fn take_cancelled(&mut self, shard: ShardId, region: RegionId) -> bool {
+        self.shards
+            .get_mut(shard.0 as usize)
+            .map(|s| s.sched.take_cancelled(region))
+            .unwrap_or(false)
+    }
+
+    /// Drain every shard's eviction records since the last call, tagged
+    /// with the shard (ascending shard order).
+    pub fn take_preemptions(&mut self) -> Vec<(ShardId, PreemptionRecord)> {
+        let mut out = Vec::new();
+        for s in &mut self.shards {
+            for p in s.sched.take_preemptions() {
+                out.push((s.id, p));
+            }
+        }
+        out
+    }
+
+    /// Summed preemption counters across shards ([`crate::qos`]).
+    pub fn qos_stats(&self) -> QosStats {
+        let mut agg = QosStats::default();
+        for s in &self.shards {
+            let q = s.sched.qos_stats();
+            agg.preemptions += q.preemptions;
+            agg.victims_evicted += q.victims_evicted;
+            agg.victims_resumed += q.victims_resumed;
+            agg.preempt_cycles += q.preempt_cycles;
+            agg.rescued_by_preemption += q.rescued_by_preemption;
+        }
+        agg
+    }
+
     /// Force one compaction pass on `shard` (control-plane and
     /// cross-shard rescue path).
     pub fn defrag_shard(&mut self, shard: ShardId, now: u64) -> Result<MigrationReport> {
@@ -404,7 +443,7 @@ impl FabricPool {
     // ------------------------------------------------------------ internals
 
     /// Point-in-time router inputs for every shard.
-    fn loads(&self, demand: &SliceDemand) -> Vec<ShardLoad> {
+    fn loads(&self, demand: &SliceDemand, class: QosClass, now: u64) -> Vec<ShardLoad> {
         let energy_aware = self.router.policy() == PlacementPolicyKind::EnergyAware;
         self.shards
             .iter()
@@ -424,6 +463,12 @@ impl FabricPool {
                         s.sched.marginal_placement_pj(demand)
                     } else {
                         0.0
+                    },
+                    // scored only for Critical requests ([`crate::qos`])
+                    be_runway: if class == QosClass::Critical {
+                        s.sched.lower_class_runway(class, now)
+                    } else {
+                        0
                     },
                 }
             })
@@ -681,6 +726,40 @@ mod tests {
         // tighter shape
         assert_eq!(p.try_submit(req(0, 3, AppId::Harris), 0), Some(ShardId(1)));
         assert_eq!(p.schedule(0).len(), 1);
+    }
+
+    #[test]
+    fn pool_preemption_invalidates_events_and_resumes_victims() {
+        let mut cfg = presets::pool_scenario(1, PlacementPolicyKind::LeastLoaded);
+        cfg.qos.enabled = true; // EDF + preemption defaults
+        let mut p = FabricPool::new(&cfg, TaskLibrary::table1(), DprMode::Fast).unwrap();
+        p.preload_all();
+        // BestEffort harris grabs the fastest variant
+        p.try_submit(req(0, 3, AppId::Harris), 0).unwrap();
+        let l1 = p.schedule(0);
+        assert_eq!(l1.len(), 1);
+        let (shard, victim) = (l1[0].0, l1[0].1.clone());
+        // a Critical camera evicts it
+        p.try_submit(req(1, 2, AppId::Camera).with_qos(QosClass::Critical, None), 10)
+            .unwrap();
+        let l2 = p.schedule(10);
+        assert_eq!(l2.len(), 1, "preemption must rescue the critical launch");
+        assert_eq!(p.qos_stats().victims_evicted, 1);
+        let pre = p.take_preemptions();
+        assert_eq!(pre.len(), 1);
+        assert_eq!(pre[0].0, shard);
+        assert_eq!(pre[0].1.victim_region, victim.region);
+        // the stale completion event is invalidated exactly once
+        assert!(p.take_cancelled(shard, victim.region));
+        assert!(!p.take_cancelled(shard, victim.region));
+        // drain: camera completes, the victim resumes and completes
+        p.complete(shard, l2[0].1.region, l2[0].1.finish).unwrap();
+        let l3 = p.schedule(l2[0].1.finish);
+        assert_eq!(l3.len(), 1, "checkpointed victim resumes");
+        p.complete(shard, l3[0].1.region, l3[0].1.finish).unwrap();
+        assert_eq!(p.open_requests(), 0);
+        assert_eq!(p.qos_stats().victims_resumed, 1);
+        assert_eq!(p.busy_slices(), (0, 0), "preempt/resume conserves slices");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use crate::config::PlacementPolicyKind;
+use crate::config::{PlacementPolicyKind, QosClass};
 
 /// Identity of one fabric shard within a pool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -45,6 +45,13 @@ pub struct ShardLoad {
     /// energy-aware placement score.  0 for the other policies' inputs
     /// is harmless: they never read it.
     pub marginal_pj: f64,
+    /// Longest remaining runway (cycles) of running tasks *below* the
+    /// placed request's class
+    /// ([`crate::scheduler::Scheduler::lower_class_runway`]) — the
+    /// class-aware placement score: a Critical request avoids shards
+    /// where long-runway BestEffort work stands in its way.  0 for
+    /// non-Critical requests (never read).
+    pub be_runway: u64,
 }
 
 /// Scores ready requests across the shards of a [`super::FabricPool`].
@@ -70,10 +77,21 @@ impl FabricRouter {
     /// non-empty).  Infeasible shards lose to feasible ones under every
     /// policy; within the feasible set the policy's total order decides,
     /// with the shard id as the final deterministic tie-break.
-    pub fn place(&mut self, tenant: u32, loads: &[ShardLoad]) -> ShardId {
+    ///
+    /// A **Critical** request overrides the configured policy (sticky
+    /// affinity included) with the class-aware order: shards that can
+    /// host the demand right now, then the shortest lower-class runway
+    /// (`be_runway`), then least-loaded — Critical work lands where it
+    /// will not queue behind (or have to preempt) long-running
+    /// BestEffort tasks.  With the QoS subsystem disabled every request
+    /// is BestEffort and this path never runs.
+    pub fn place(&mut self, tenant: u32, class: QosClass, loads: &[ShardLoad]) -> ShardId {
         debug_assert!(!loads.is_empty(), "placement over an empty pool");
         if loads.len() == 1 {
             return loads[0].shard;
+        }
+        if class == QosClass::Critical {
+            return Self::critical_first(loads);
         }
         match self.policy {
             PlacementPolicyKind::LeastLoaded => Self::least_loaded(loads),
@@ -98,6 +116,25 @@ impl FabricRouter {
                 s
             }
         }
+    }
+
+    /// Class-aware order for Critical requests: fits-now first, then
+    /// shortest lower-class runway, then least-loaded order.
+    fn critical_first(loads: &[ShardLoad]) -> ShardId {
+        loads
+            .iter()
+            .min_by_key(|l| {
+                (
+                    !l.feasible,
+                    !l.fits_now,
+                    l.be_runway,
+                    l.open_requests,
+                    l.busy_array,
+                    l.shard.0,
+                )
+            })
+            .expect("non-empty loads")
+            .shard
     }
 
     /// Fewest open requests, then fewest busy array slices, then id.
@@ -168,13 +205,14 @@ mod tests {
             feasible: true,
             fits_now: true,
             marginal_pj: 0.0,
+            be_runway: 0,
         }
     }
 
     #[test]
     fn single_shard_short_circuits() {
         let mut r = FabricRouter::new(PlacementPolicyKind::Sticky);
-        assert_eq!(r.place(3, &[load(0, 99, 8)]), ShardId(0));
+        assert_eq!(r.place(3, QosClass::BestEffort, &[load(0, 99, 8)]), ShardId(0));
         // the short-circuit must not record affinity state
         assert!(r.sticky.is_empty());
     }
@@ -182,9 +220,9 @@ mod tests {
     #[test]
     fn least_loaded_prefers_fewest_open_then_busy_then_id() {
         let mut r = FabricRouter::new(PlacementPolicyKind::LeastLoaded);
-        assert_eq!(r.place(0, &[load(0, 2, 0), load(1, 1, 8)]), ShardId(1));
-        assert_eq!(r.place(0, &[load(0, 1, 4), load(1, 1, 2)]), ShardId(1));
-        assert_eq!(r.place(0, &[load(0, 1, 4), load(1, 1, 4)]), ShardId(0));
+        assert_eq!(r.place(0, QosClass::BestEffort, &[load(0, 2, 0), load(1, 1, 8)]), ShardId(1));
+        assert_eq!(r.place(0, QosClass::BestEffort, &[load(0, 1, 4), load(1, 1, 2)]), ShardId(1));
+        assert_eq!(r.place(0, QosClass::BestEffort, &[load(0, 1, 4), load(1, 1, 4)]), ShardId(0));
     }
 
     #[test]
@@ -194,7 +232,7 @@ mod tests {
             let mut a = load(0, 0, 0);
             a.feasible = false;
             let b = load(1, 50, 8);
-            assert_eq!(r.place(0, &[a, b]), ShardId(1), "{policy:?}");
+            assert_eq!(r.place(0, QosClass::BestEffort, &[a, b]), ShardId(1), "{policy:?}");
         }
     }
 
@@ -203,9 +241,9 @@ mod tests {
         let mut r = FabricRouter::new(PlacementPolicyKind::BestFit);
         let big = ShardLoad { glb_slices: 64, array_slices: 16, ..load(0, 0, 0) };
         let small = load(1, 3, 6);
-        assert_eq!(r.place(0, &[big, small]), ShardId(1));
+        assert_eq!(r.place(0, QosClass::BestEffort, &[big, small]), ShardId(1));
         // homogeneous shapes degenerate to least-loaded
-        assert_eq!(r.place(0, &[load(0, 5, 0), load(1, 2, 0)]), ShardId(1));
+        assert_eq!(r.place(0, QosClass::BestEffort, &[load(0, 5, 0), load(1, 2, 0)]), ShardId(1));
     }
 
     #[test]
@@ -215,53 +253,79 @@ mod tests {
         // already awake): consolidation wins over spreading
         let awake = ShardLoad { marginal_pj: 100.0, ..load(0, 5, 6) };
         let asleep = ShardLoad { marginal_pj: 600.0, ..load(1, 0, 0) };
-        assert_eq!(r.place(0, &[awake, asleep]), ShardId(0));
+        assert_eq!(r.place(0, QosClass::BestEffort, &[awake, asleep]), ShardId(0));
         // ...but a shard that cannot host the demand right now loses
         // regardless of its marginal power
         let mut full = awake;
         full.fits_now = false;
-        assert_eq!(r.place(0, &[full, asleep]), ShardId(1));
+        assert_eq!(r.place(0, QosClass::BestEffort, &[full, asleep]), ShardId(1));
         // exact marginal ties fall back to least-loaded order
         let a = ShardLoad { marginal_pj: 50.0, ..load(0, 3, 0) };
         let b = ShardLoad { marginal_pj: 50.0, ..load(1, 1, 0) };
-        assert_eq!(r.place(0, &[a, b]), ShardId(1));
+        assert_eq!(r.place(0, QosClass::BestEffort, &[a, b]), ShardId(1));
+    }
+
+    #[test]
+    fn critical_requests_avoid_long_runway_best_effort_shards() {
+        for policy in PlacementPolicyKind::ALL {
+            let mut r = FabricRouter::new(policy);
+            // shard 0 looks least-loaded but hosts a long-runway
+            // BestEffort task; shard 1 is busier but clear
+            let hosting = ShardLoad { be_runway: 1_000_000, ..load(0, 0, 2) };
+            let clear = load(1, 3, 4);
+            assert_eq!(
+                r.place(0, QosClass::Critical, &[hosting, clear]),
+                ShardId(1),
+                "{policy:?}: critical must avoid the long-runway shard"
+            );
+            // a BestEffort request on the same loads ignores the runway
+            assert_eq!(r.place(0, QosClass::BestEffort, &[hosting, clear]), ShardId(0));
+            // ...but a shard that cannot fit right now loses anyway
+            let mut full = clear;
+            full.fits_now = false;
+            assert_eq!(
+                r.place(0, QosClass::Critical, &[hosting, full]),
+                ShardId(0),
+                "{policy:?}: fits-now dominates the runway score"
+            );
+        }
     }
 
     #[test]
     fn sticky_keeps_tenants_on_their_first_shard() {
         let mut r = FabricRouter::new(PlacementPolicyKind::Sticky);
-        let first = r.place(7, &[load(0, 3, 0), load(1, 0, 0)]);
+        let first = r.place(7, QosClass::BestEffort, &[load(0, 3, 0), load(1, 0, 0)]);
         assert_eq!(first, ShardId(1), "first placement is least-loaded");
         // the shard stays pinned even once it is the busier one
-        assert_eq!(r.place(7, &[load(0, 0, 0), load(1, 9, 8)]), ShardId(1));
+        assert_eq!(r.place(7, QosClass::BestEffort, &[load(0, 0, 0), load(1, 9, 8)]), ShardId(1));
         // ...but a shard that cannot host the demand breaks the pin
         let mut pinned = load(1, 9, 8);
         pinned.feasible = false;
-        assert_eq!(r.place(7, &[load(0, 0, 0), pinned]), ShardId(0));
+        assert_eq!(r.place(7, QosClass::BestEffort, &[load(0, 0, 0), pinned]), ShardId(0));
     }
 
     #[test]
     fn sticky_repins_after_infeasible_and_the_new_pin_holds() {
         let mut r = FabricRouter::new(PlacementPolicyKind::Sticky);
-        assert_eq!(r.place(5, &[load(0, 0, 0), load(1, 1, 0)]), ShardId(0), "pin 0");
+        assert_eq!(r.place(5, QosClass::BestEffort, &[load(0, 0, 0), load(1, 1, 0)]), ShardId(0), "pin 0");
         // the pinned shard can never host the demand: re-pin least-loaded
         let mut bad = load(0, 0, 0);
         bad.feasible = false;
-        assert_eq!(r.place(5, &[bad, load(1, 9, 8)]), ShardId(1), "re-pin");
+        assert_eq!(r.place(5, QosClass::BestEffort, &[bad, load(1, 9, 8)]), ShardId(1), "re-pin");
         // the new pin is durable even once shard 0 is feasible and idle
-        assert_eq!(r.place(5, &[load(0, 0, 0), load(1, 9, 8)]), ShardId(1));
+        assert_eq!(r.place(5, QosClass::BestEffort, &[load(0, 0, 0), load(1, 9, 8)]), ShardId(1));
         assert_eq!(r.sticky.get(&5), Some(&ShardId(1)));
     }
 
     #[test]
     fn sticky_pin_survives_transient_absence_from_loads() {
         let mut r = FabricRouter::new(PlacementPolicyKind::Sticky);
-        assert_eq!(r.place(3, &[load(0, 1, 0), load(1, 0, 0)]), ShardId(1));
+        assert_eq!(r.place(3, QosClass::BestEffort, &[load(0, 1, 0), load(1, 0, 0)]), ShardId(1));
         // the pinned shard is window-filtered out of this placement:
         // the request overflows least-loaded, the pin stays put...
-        assert_eq!(r.place(3, &[load(0, 4, 0), load(2, 0, 0)]), ShardId(2));
+        assert_eq!(r.place(3, QosClass::BestEffort, &[load(0, 4, 0), load(2, 0, 0)]), ShardId(2));
         assert_eq!(r.sticky.get(&3), Some(&ShardId(1)));
         // ...and once the pinned shard is back, affinity resumes
-        assert_eq!(r.place(3, &[load(0, 0, 0), load(1, 9, 8)]), ShardId(1));
+        assert_eq!(r.place(3, QosClass::BestEffort, &[load(0, 0, 0), load(1, 9, 8)]), ShardId(1));
     }
 }

@@ -16,7 +16,9 @@
 //!   ([`dpr`]), the greedy multi-task scheduler ([`scheduler`]), the
 //!   live-migration defragmentation subsystem ([`migration`]), the
 //!   per-component energy model, power-gated slices and power-cap
-//!   governor ([`energy`]), the discrete-event CGRA timing model
+//!   governor ([`energy`]), the QoS layer — priority classes, deadlines
+//!   and preemptive scheduling with checkpointed eviction ([`qos`]) —
+//!   the discrete-event CGRA timing model
 //!   ([`sim`]), the sharded fabric pool with placement routing
 //!   ([`fabric`]), and the multi-tenant request coordinator
 //!   ([`coordinator`]).
@@ -48,6 +50,7 @@ pub mod error;
 pub mod fabric;
 pub mod metrics;
 pub mod migration;
+pub mod qos;
 pub mod regions;
 pub mod runtime;
 pub mod scheduler;

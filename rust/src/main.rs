@@ -216,7 +216,33 @@ fn simulate_cloud(flags: &Flags) -> cgra_mte::Result<()> {
         );
         export_energy_json(flags, energy)?;
     }
+    print_qos(report.qos.as_ref(), cfg.arch.core_clock_mhz);
     Ok(())
+}
+
+/// Render the per-class SLO summary when the QoS subsystem is on.
+fn print_qos(qos: Option<&cgra_mte::qos::QosReport>, clock_mhz: u32) {
+    let Some(qos) = qos else { return };
+    let cycles_per_ms = clock_mhz as f64 * 1e3;
+    for row in &qos.per_class {
+        if row.completed == 0 {
+            continue;
+        }
+        println!(
+            "qos[{}]: completed {}, missed {}/{} (miss rate {:.3}), p50 {:.3} ms, p99 {:.3} ms",
+            row.class.name(),
+            row.completed,
+            row.missed,
+            row.deadlined,
+            row.miss_rate(),
+            row.p50_latency / cycles_per_ms,
+            row.p99_latency / cycles_per_ms,
+        );
+    }
+    println!(
+        "qos: {} preemption passes, {} victims evicted, {} resumed ({} cycles charged)",
+        qos.preemptions, qos.victims_evicted, qos.victims_resumed, qos.preempt_cycles,
+    );
 }
 
 fn simulate_edge(flags: &Flags) -> cgra_mte::Result<()> {
@@ -261,6 +287,7 @@ fn simulate_edge(flags: &Flags) -> cgra_mte::Result<()> {
         );
         export_energy_json(flags, energy)?;
     }
+    print_qos(report.qos.as_ref(), clk);
     Ok(())
 }
 

@@ -157,6 +157,41 @@ pub fn energy_json(r: &crate::energy::EnergyReport) -> String {
     )
 }
 
+/// One-line JSON rendering of a [`crate::qos::QosReport`] — the
+/// machine-readable companion to `STATS QOS`, written by the QoS
+/// ablation bench and scraped by experiment pipelines.  Latencies are
+/// in cycles (the report is clock-agnostic); `miss_rate` is over
+/// deadlined requests only.
+pub fn qos_json(r: &crate::qos::QosReport) -> String {
+    let per_class: Vec<String> = r
+        .per_class
+        .iter()
+        .map(|c| {
+            format!(
+                r#"{{"class":"{}","completed":{},"deadlined":{},"missed":{},"miss_rate":{:.6},"p50_latency":{:.3},"p95_latency":{:.3},"p99_latency":{:.3},"mean_slack":{:.3},"min_slack":{:.3}}}"#,
+                c.class.name(),
+                c.completed,
+                c.deadlined,
+                c.missed,
+                c.miss_rate(),
+                c.p50_latency,
+                c.p95_latency,
+                c.p99_latency,
+                c.mean_slack,
+                c.min_slack,
+            )
+        })
+        .collect();
+    format!(
+        r#"{{"preemptions":{},"victims_evicted":{},"victims_resumed":{},"preempt_cycles":{},"per_class":[{}]}}"#,
+        r.preemptions,
+        r.victims_evicted,
+        r.victims_resumed,
+        r.preempt_cycles,
+        per_class.join(","),
+    )
+}
+
 /// Frame latency breakdown as CSV (`frame,reconfig,wait_exec,total`).
 pub fn latency_csv(breakdown: &LatencyBreakdown) -> String {
     let rows: Vec<Vec<String>> = breakdown
@@ -284,6 +319,38 @@ mod tests {
         assert!((sum - total).abs() <= 1e-6 * total, "{sum} vs {total}");
         assert_eq!(v.get("per_tenant").unwrap().items().len(), 4);
         assert!(v.req_f64("mean_watts").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn qos_json_parses_and_counts_classes() {
+        use crate::qos::{QosStats, SloRecord, SloTracker};
+
+        let mut t = SloTracker::new();
+        t.record(SloRecord {
+            class: crate::config::QosClass::Critical,
+            arrival: 0,
+            completion: 120,
+            deadline: Some(100),
+        });
+        t.record(SloRecord {
+            class: crate::config::QosClass::BestEffort,
+            arrival: 0,
+            completion: 900,
+            deadline: None,
+        });
+        let report = t.report(QosStats { preemptions: 1, victims_evicted: 1, ..Default::default() });
+        let line = qos_json(&report);
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.req_f64("preemptions").unwrap(), 1.0);
+        let per = v.get("per_class").unwrap().items();
+        assert_eq!(per.len(), 3);
+        let crit = per
+            .iter()
+            .find(|c| c.get("class").and_then(|s| s.as_str()) == Some("critical"))
+            .expect("critical row");
+        assert_eq!(crit.req_f64("missed").unwrap(), 1.0);
+        assert_eq!(crit.req_f64("miss_rate").unwrap(), 1.0);
+        assert!(crit.req_f64("mean_slack").unwrap() < 0.0);
     }
 
     #[test]

@@ -81,9 +81,25 @@ impl LatencyBreakdown {
         &self.frames
     }
 
+    /// Percentile of total frame latency (the SLO tracker's p50/p95/p99
+    /// companions to the Fig. 5 means).
+    pub fn percentile_total(&self, p: f64) -> f64 {
+        Summary::from_iter(self.frames.iter().map(|f| f.total() as f64)).percentile(p)
+    }
+
+    /// p50 (median) of total frame latency.
+    pub fn p50_total(&self) -> f64 {
+        self.percentile_total(50.0)
+    }
+
+    /// p95 of total frame latency.
+    pub fn p95_total(&self) -> f64 {
+        self.percentile_total(95.0)
+    }
+
     /// p99 of total frame latency.
     pub fn p99_total(&self) -> f64 {
-        Summary::from_iter(self.frames.iter().map(|f| f.total() as f64)).percentile(99.0)
+        self.percentile_total(99.0)
     }
 }
 
@@ -118,5 +134,21 @@ mod tests {
         }
         b.record(FrameLatency { reconfig_cycles: 0, wait_exec_cycles: 1000 });
         assert!(b.p99_total() > 100.0);
+    }
+
+    #[test]
+    fn percentile_family_is_monotone() {
+        let mut b = LatencyBreakdown::new();
+        for i in 1..=100u64 {
+            b.record(FrameLatency { reconfig_cycles: 0, wait_exec_cycles: i * 10 });
+        }
+        assert!((b.p50_total() - 505.0).abs() < 1e-9);
+        assert!(b.p50_total() <= b.p95_total());
+        assert!(b.p95_total() <= b.p99_total());
+        assert_eq!(b.percentile_total(100.0), 1000.0);
+        // empty breakdown reads zeros, not a panic
+        let empty = LatencyBreakdown::new();
+        assert_eq!(empty.p50_total(), 0.0);
+        assert_eq!(empty.p95_total(), 0.0);
     }
 }

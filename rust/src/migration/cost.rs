@@ -43,6 +43,29 @@ impl MigrationCostModel {
         self.kind
     }
 
+    /// Cycles a preemptive *eviction* charges the victim's region before
+    /// it frees: the quiesce handshake, plus (under the full model) the
+    /// GLB state copy-out that preserves the checkpoint — the same
+    /// checkpoint path a migration pays, minus the restream, since the
+    /// evicted task is not reinstalled anywhere yet ([`crate::qos`]).
+    pub fn checkpoint_cycles(&self) -> u64 {
+        match self.kind {
+            MigrationCostModelKind::Zero => 0,
+            MigrationCostModelKind::DprOnly => CHECKPOINT_CYCLES,
+            MigrationCostModelKind::Full => CHECKPOINT_CYCLES + self.glb_copy_cycles,
+        }
+    }
+
+    /// Extra cycles a checkpointed victim's *resume* launch pays on top
+    /// of the DPR restream (which the engine prices): the GLB state
+    /// copy-in under the full model, nothing otherwise.
+    pub fn resume_extra_cycles(&self) -> u64 {
+        match self.kind {
+            MigrationCostModelKind::Zero | MigrationCostModelKind::DprOnly => 0,
+            MigrationCostModelKind::Full => self.glb_copy_cycles,
+        }
+    }
+
     /// Cycles charged for one step.  `dpr_stream_cycles` is what the DPR
     /// engine would charge to restream this region's bitstream (only
     /// counted when the array range actually moves).
@@ -100,6 +123,20 @@ mod tests {
         // energy scales with every moved bank
         assert_eq!(step(true, true).moved_glb_slices(), 4);
         assert_eq!(step(false, true).moved_glb_slices(), 0);
+    }
+
+    #[test]
+    fn checkpoint_and_resume_pricing_tracks_the_kind() {
+        let arch = ArchConfig::default();
+        let full = MigrationCostModel::new(&arch, MigrationCostModelKind::Full);
+        assert_eq!(full.checkpoint_cycles(), 64 + 16_384);
+        assert_eq!(full.resume_extra_cycles(), 16_384);
+        let dpr = MigrationCostModel::new(&arch, MigrationCostModelKind::DprOnly);
+        assert_eq!(dpr.checkpoint_cycles(), 64);
+        assert_eq!(dpr.resume_extra_cycles(), 0);
+        let zero = MigrationCostModel::new(&arch, MigrationCostModelKind::Zero);
+        assert_eq!(zero.checkpoint_cycles(), 0);
+        assert_eq!(zero.resume_extra_cycles(), 0);
     }
 
     #[test]

@@ -1,0 +1,86 @@
+//! QoS subsystem: priority classes, deadlines, and preemptive
+//! scheduling with checkpointed eviction.
+//!
+//! The paper's headline autonomous-workload win comes from a scheduler
+//! that favors latency-critical tasks and can act on that preference
+//! immediately through fast DPR.  This module supplies the policy layer
+//! the mechanisms enable (Mestra, arXiv:2604.04694, makes the same
+//! argument for virtualized CGRAs — eviction/migration is what turns a
+//! run-to-completion fabric into a schedulable one):
+//!
+//! * **Classes + deadlines** — every [`crate::tasks::AppRequest`]
+//!   carries a [`QosClass`] (`Critical | Interactive | BestEffort`) and
+//!   an optional absolute deadline.  With `qos.policy = "edf"` the ready
+//!   frontier is ordered strictly by class, earliest-deadline-first
+//!   within a class, with a starvation-proof aging knob
+//!   (`qos.aging_cycles`) that promotes long-waiting BestEffort work to
+//!   Interactive *ordering* (it still never preempts anyone) —
+//!   [`order_ready`].
+//! * **Preemption engine** — when a higher-class task's every variant
+//!   returns `NoFit` (and defragmentation could not rescue it), the
+//!   scheduler checkpoints and evicts running strictly-lower-class
+//!   tasks ([`select_victims`]), priced by the existing
+//!   [`crate::migration::MigrationCostModel`] checkpoint path; the
+//!   victim later resumes via a fast-DPR relaunch of its checkpointed
+//!   variant with its remaining cycles, paying the restream plus the
+//!   GLB state copy-in.  Evictions and resumes are energy-accounted
+//!   exactly like migrations ([`crate::energy`]).
+//! * **SLO tracker** — [`SloTracker`] folds completed requests into
+//!   per-class deadline-miss rates, slack statistics and p50/p95/p99
+//!   latency ([`QosReport`]), surfaced in the sim reports, the `STATS
+//!   QOS` wire reply and [`crate::metrics::export::qos_json`].
+//!
+//! `[qos].enabled = false` (the default) disables every path above;
+//! `tests/determinism.rs` holds existing presets to bit-for-bit
+//! unchanged traces and reports.
+
+mod order;
+mod preempt;
+mod slo;
+
+pub use crate::config::{QosClass, QosConfig, QosPolicyKind};
+pub use order::order_ready;
+pub(crate) use preempt::eviction_order;
+pub use preempt::{select_victims, VictimCandidate};
+pub use slo::{ClassSlo, QosReport, SloRecord, SloTracker};
+
+use crate::regions::RegionId;
+use crate::tasks::{TaskId, TaskInstanceId};
+
+/// Cumulative preemption counters kept by the scheduler.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QosStats {
+    /// Preemption passes that evicted at least one victim.
+    pub preemptions: u64,
+    /// Individual running tasks checkpointed and evicted.
+    pub victims_evicted: u64,
+    /// Checkpointed tasks that resumed (relaunched).
+    pub victims_resumed: u64,
+    /// Total cycles charged for checkpoints and resume copy-ins.
+    pub preempt_cycles: u64,
+    /// Launches that succeeded only because a preemption ran first.
+    pub rescued_by_preemption: u64,
+}
+
+/// One eviction performed by the preemption engine — drained by the
+/// simulation drivers ([`crate::scheduler::Scheduler::take_preemptions`])
+/// for trace lines and invariant checks.
+#[derive(Clone, Debug)]
+pub struct PreemptionRecord {
+    /// The evicted instance.
+    pub victim: TaskInstanceId,
+    /// Its task.
+    pub victim_task: TaskId,
+    /// Its class (always strictly below the preemptor's).
+    pub victim_class: QosClass,
+    /// The region it was evicted from.
+    pub victim_region: RegionId,
+    /// The blocked instance the eviction ran for.
+    pub preemptor: TaskInstanceId,
+    /// The preemptor's class.
+    pub preemptor_class: QosClass,
+    /// Execution cycles the victim still owes at resume.
+    pub remaining_cycles: u64,
+    /// Checkpoint cycles charged for this eviction.
+    pub checkpoint_cycles: u64,
+}

@@ -1,0 +1,132 @@
+//! Ready-frontier ordering: strict classes, EDF within a class, aging.
+
+use crate::config::QosClass;
+use crate::scheduler::ReadyTask;
+
+/// Class a task is *ordered* as: its own class, except that a
+/// BestEffort task whose *request* has been in the system at least
+/// `aging_cycles` is promoted to Interactive ordering (the starvation
+/// guard).  Aging is measured from the request's arrival — not from the
+/// instance's last ready transition — so a checkpointed eviction
+/// (which re-enters the ready frontier with a fresh `ready_cycle`)
+/// can never reset the starvation clock.  Aging affects queue position
+/// only — an aged task never gains preemption rights and is still a
+/// legal victim.
+pub(crate) fn effective_class(rt: &ReadyTask, now: u64, aging_cycles: u64) -> QosClass {
+    if rt.class == QosClass::BestEffort
+        && aging_cycles > 0
+        && now.saturating_sub(rt.arrival_cycle) >= aging_cycles
+    {
+        QosClass::Interactive
+    } else {
+        rt.class
+    }
+}
+
+/// Order the ready frontier under the EDF QoS policy:
+///
+/// 1. effective class, highest first (strict priority across classes);
+/// 2. earliest absolute deadline first within a class (tasks without a
+///    deadline sort after every deadlined peer);
+/// 3. request arrival, then instance id — the deterministic tie-break
+///    that also makes the ordering a stable refinement of FIFO.
+pub fn order_ready(mut ready: Vec<ReadyTask>, now: u64, aging_cycles: u64) -> Vec<ReadyTask> {
+    ready.sort_by_key(|rt| {
+        (
+            std::cmp::Reverse(effective_class(rt, now, aging_cycles)),
+            rt.deadline.unwrap_or(u64::MAX),
+            rt.arrival_cycle,
+            rt.instance,
+        )
+    });
+    ready
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::{TaskId, TaskInstanceId};
+
+    fn rt(
+        seq: u64,
+        class: QosClass,
+        deadline: Option<u64>,
+        ready: u64,
+        arrival: u64,
+    ) -> ReadyTask {
+        ReadyTask {
+            instance: TaskInstanceId { request: seq, node: 0 },
+            task: TaskId::new("t"),
+            tenant: 0,
+            ready_cycle: ready,
+            arrival_cycle: arrival,
+            class,
+            deadline,
+        }
+    }
+
+    #[test]
+    fn strict_class_order_then_edf() {
+        let ready = vec![
+            rt(0, QosClass::BestEffort, None, 0, 0),
+            rt(1, QosClass::Critical, Some(900), 0, 5),
+            rt(2, QosClass::Critical, Some(100), 0, 9),
+            rt(3, QosClass::Interactive, None, 0, 1),
+        ];
+        let order: Vec<u64> =
+            order_ready(ready, 0, 0).iter().map(|r| r.instance.request).collect();
+        // critical first (EDF inside), then interactive, then best-effort
+        assert_eq!(order, vec![2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn deadlineless_sorts_after_deadlined_within_class() {
+        let ready = vec![
+            rt(0, QosClass::Critical, None, 0, 0),
+            rt(1, QosClass::Critical, Some(1_000_000), 0, 50),
+        ];
+        let order: Vec<u64> =
+            order_ready(ready, 0, 0).iter().map(|r| r.instance.request).collect();
+        assert_eq!(order, vec![1, 0]);
+    }
+
+    #[test]
+    fn eviction_cannot_reset_the_aging_clock() {
+        // a just-preempted instance re-enters the frontier with a fresh
+        // ready_cycle; aging still counts from the request's arrival
+        let ready = vec![
+            rt(0, QosClass::Interactive, None, 999, 999),
+            rt(1, QosClass::BestEffort, None, 990, 0), // re-queued at 990, arrived at 0
+        ];
+        let order: Vec<u64> =
+            order_ready(ready, 1_000, 100).iter().map(|r| r.instance.request).collect();
+        assert_eq!(order, vec![1, 0], "aged by arrival despite the fresh ready cycle");
+    }
+
+    #[test]
+    fn aging_promotes_long_waiting_best_effort_over_fresh_interactive() {
+        let ready = vec![
+            rt(0, QosClass::Interactive, None, 90, 90),
+            rt(1, QosClass::BestEffort, None, 0, 0), // waited 100 ≥ 100
+        ];
+        let aged: Vec<u64> =
+            order_ready(ready.clone(), 100, 100).iter().map(|r| r.instance.request).collect();
+        // equal effective class: arrival breaks the tie, so the aged
+        // task (arrival 0) goes first
+        assert_eq!(aged, vec![1, 0]);
+        // without aging the interactive task keeps strict priority
+        let unaged: Vec<u64> =
+            order_ready(ready, 100, 0).iter().map(|r| r.instance.request).collect();
+        assert_eq!(unaged, vec![0, 1]);
+        // aging never reaches critical ordering
+        let vs_critical = vec![
+            rt(0, QosClass::Critical, None, 100, 100),
+            rt(1, QosClass::BestEffort, None, 0, 0),
+        ];
+        let order: Vec<u64> = order_ready(vs_critical, 1_000_000, 10)
+            .iter()
+            .map(|r| r.instance.request)
+            .collect();
+        assert_eq!(order, vec![0, 1], "aged BestEffort caps at Interactive");
+    }
+}

@@ -1,0 +1,247 @@
+//! SLO tracking: per-class deadline-miss rates, slack and latency tails.
+
+use crate::config::QosClass;
+use crate::util::stats::{Histogram, Summary};
+
+use super::QosStats;
+
+/// One completed request, as the SLO tracker sees it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloRecord {
+    /// QoS class of the request.
+    pub class: QosClass,
+    /// Arrival cycle.
+    pub arrival: u64,
+    /// Completion cycle.
+    pub completion: u64,
+    /// Absolute deadline, if the request carried one.
+    pub deadline: Option<u64>,
+}
+
+impl SloRecord {
+    /// Turn-around latency in cycles.
+    pub fn latency(&self) -> u64 {
+        self.completion.saturating_sub(self.arrival)
+    }
+
+    /// Signed slack in cycles (deadline − completion); `None` without a
+    /// deadline.  Negative = missed.
+    pub fn slack(&self) -> Option<i64> {
+        self.deadline.map(|d| d as i64 - self.completion as i64)
+    }
+
+    /// Whether the request missed its deadline.
+    pub fn missed(&self) -> bool {
+        matches!(self.slack(), Some(s) if s < 0)
+    }
+}
+
+/// Per-class SLO summary (one row of [`QosReport`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSlo {
+    /// The class this row summarizes.
+    pub class: QosClass,
+    /// Requests completed.
+    pub completed: u64,
+    /// Completed requests that carried a deadline.
+    pub deadlined: u64,
+    /// Deadlined requests that finished late.
+    pub missed: u64,
+    /// p50 turn-around latency, cycles.
+    pub p50_latency: f64,
+    /// p95 turn-around latency, cycles.
+    pub p95_latency: f64,
+    /// p99 turn-around latency, cycles.
+    pub p99_latency: f64,
+    /// Mean signed slack over deadlined requests, cycles (negative =
+    /// late on average).  0 when nothing carried a deadline.
+    pub mean_slack: f64,
+    /// Minimum signed slack, cycles (the worst case).  0 when nothing
+    /// carried a deadline.
+    pub min_slack: f64,
+}
+
+impl ClassSlo {
+    /// Deadline-miss fraction over deadlined requests (0 when none).
+    pub fn miss_rate(&self) -> f64 {
+        if self.deadlined == 0 {
+            0.0
+        } else {
+            self.missed as f64 / self.deadlined as f64
+        }
+    }
+}
+
+/// End-of-run QoS report: one [`ClassSlo`] per class plus the
+/// preemption counters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QosReport {
+    /// Per-class rows, lowest class first ([`QosClass::ALL`] order).
+    pub per_class: Vec<ClassSlo>,
+    /// Preemption passes that evicted at least one victim.
+    pub preemptions: u64,
+    /// Running tasks checkpointed and evicted.
+    pub victims_evicted: u64,
+    /// Checkpointed tasks that resumed.
+    pub victims_resumed: u64,
+    /// Total checkpoint/resume cycles charged.
+    pub preempt_cycles: u64,
+}
+
+impl QosReport {
+    /// The row for `class`.
+    pub fn class(&self, class: QosClass) -> &ClassSlo {
+        &self.per_class[class.index()]
+    }
+}
+
+/// Accumulates completed requests and renders [`QosReport`]s.
+#[derive(Clone, Debug, Default)]
+pub struct SloTracker {
+    records: Vec<SloRecord>,
+}
+
+impl SloTracker {
+    /// Empty tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request.
+    pub fn record(&mut self, rec: SloRecord) {
+        debug_assert!(rec.completion >= rec.arrival, "completion before arrival");
+        self.records.push(rec);
+    }
+
+    /// All records.
+    pub fn records(&self) -> &[SloRecord] {
+        &self.records
+    }
+
+    /// Total completed requests.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Whether nothing completed yet.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Latency summary for one class (cycles).
+    pub fn latency_summary(&self, class: QosClass) -> Summary {
+        Summary::from_iter(
+            self.records.iter().filter(|r| r.class == class).map(|r| r.latency() as f64),
+        )
+    }
+
+    /// Slack histogram for one class over `[lo, hi)` cycles with
+    /// `buckets` equal-width buckets (negative = missed).
+    pub fn slack_histogram(&self, class: QosClass, lo: f64, hi: f64, buckets: usize) -> Histogram {
+        let mut h = Histogram::new(lo, hi, buckets);
+        for r in self.records.iter().filter(|r| r.class == class) {
+            if let Some(s) = r.slack() {
+                h.add(s as f64);
+            }
+        }
+        h
+    }
+
+    /// Fold into a report, attaching the scheduler's preemption
+    /// counters.
+    pub fn report(&self, stats: QosStats) -> QosReport {
+        let per_class = QosClass::ALL
+            .iter()
+            .map(|&class| {
+                let mut lat = self.latency_summary(class);
+                let slacks: Vec<f64> = self
+                    .records
+                    .iter()
+                    .filter(|r| r.class == class)
+                    .filter_map(|r| r.slack().map(|s| s as f64))
+                    .collect();
+                let completed =
+                    self.records.iter().filter(|r| r.class == class).count() as u64;
+                let missed = self
+                    .records
+                    .iter()
+                    .filter(|r| r.class == class && r.missed())
+                    .count() as u64;
+                let mut slack = Summary::from_iter(slacks.iter().copied());
+                ClassSlo {
+                    class,
+                    completed,
+                    deadlined: slacks.len() as u64,
+                    missed,
+                    p50_latency: lat.percentile(50.0),
+                    p95_latency: lat.percentile(95.0),
+                    p99_latency: lat.percentile(99.0),
+                    mean_slack: slack.mean(),
+                    min_slack: slack.min(),
+                }
+            })
+            .collect();
+        QosReport {
+            per_class,
+            preemptions: stats.preemptions,
+            victims_evicted: stats.victims_evicted,
+            victims_resumed: stats.victims_resumed,
+            preempt_cycles: stats.preempt_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(class: QosClass, arrival: u64, completion: u64, deadline: Option<u64>) -> SloRecord {
+        SloRecord { class, arrival, completion, deadline }
+    }
+
+    #[test]
+    fn slack_and_miss_math() {
+        let on_time = rec(QosClass::Critical, 0, 80, Some(100));
+        assert_eq!(on_time.slack(), Some(20));
+        assert!(!on_time.missed());
+        let late = rec(QosClass::Critical, 0, 130, Some(100));
+        assert_eq!(late.slack(), Some(-30));
+        assert!(late.missed());
+        assert_eq!(rec(QosClass::BestEffort, 0, 50, None).slack(), None);
+    }
+
+    #[test]
+    fn report_rows_cover_all_classes_in_order() {
+        let mut t = SloTracker::new();
+        t.record(rec(QosClass::Critical, 0, 80, Some(100)));
+        t.record(rec(QosClass::Critical, 0, 130, Some(100)));
+        t.record(rec(QosClass::BestEffort, 0, 500, None));
+        let r = t.report(QosStats { preemptions: 2, victims_evicted: 3, ..Default::default() });
+        assert_eq!(r.per_class.len(), 3);
+        assert_eq!(r.per_class[0].class, QosClass::BestEffort);
+        assert_eq!(r.per_class[2].class, QosClass::Critical);
+        let crit = r.class(QosClass::Critical);
+        assert_eq!(crit.completed, 2);
+        assert_eq!(crit.deadlined, 2);
+        assert_eq!(crit.missed, 1);
+        assert!((crit.miss_rate() - 0.5).abs() < 1e-12);
+        assert!((crit.mean_slack - (-5.0)).abs() < 1e-12);
+        assert_eq!(crit.min_slack, -30.0);
+        assert!(crit.p99_latency >= crit.p50_latency);
+        let be = r.class(QosClass::BestEffort);
+        assert_eq!(be.deadlined, 0);
+        assert_eq!(be.miss_rate(), 0.0);
+        assert_eq!(r.preemptions, 2);
+        assert_eq!(r.victims_evicted, 3);
+    }
+
+    #[test]
+    fn slack_histogram_counts_only_deadlined_records() {
+        let mut t = SloTracker::new();
+        t.record(rec(QosClass::Critical, 0, 80, Some(100))); // slack 20
+        t.record(rec(QosClass::Critical, 0, 130, Some(100))); // slack -30
+        t.record(rec(QosClass::Critical, 0, 10, None));
+        let h = t.slack_histogram(QosClass::Critical, -50.0, 50.0, 4);
+        assert_eq!(h.count(), 2);
+    }
+}

@@ -1,10 +1,13 @@
 //! The scheduler core: policy-driven variant selection + region binding.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::abstraction::{SliceDemand, SliceRange};
 use crate::compiler::generate_bitstream;
-use crate::config::{Config, DefragPolicyKind, RegionPolicyKind, SchedulerPolicyKind};
+use crate::config::{
+    Config, DefragPolicyKind, QosClass, QosConfig, QosPolicyKind, RegionPolicyKind,
+    SchedulerPolicyKind,
+};
 use crate::dpr::{Bitstream, BitstreamId, DprEngine, DprMode};
 use crate::energy::{EnergyAccountant, EnergyModel, EnergyReport};
 use crate::error::{Error, Result};
@@ -12,6 +15,7 @@ use crate::migration::{
     execute_plan, CompactionPlan, DefragPlanner, MigrationCostModel, MigrationReport,
     MigrationStats,
 };
+use crate::qos::{self, PreemptionRecord, QosStats, VictimCandidate};
 use crate::regions::{AllocOutcome, ExecutionRegion, RegionId, RegionManager};
 use crate::tasks::{TaskId, TaskInstanceId, TaskLibrary, VariantId};
 
@@ -41,6 +45,10 @@ pub struct Launch {
     pub finish: u64,
     /// Whether the bitstream was GLB-resident (fast-DPR hit).
     pub cache_hit: bool,
+    /// Whether this launch resumes a checkpointed (preempted) instance
+    /// — its state is restored, not recomputed, so the functional layer
+    /// must not execute the artifact again ([`crate::qos`]).
+    pub resumed: bool,
 }
 
 /// A variant option considered by the policy, with effective throughput.
@@ -76,11 +84,29 @@ struct RunningTask {
     ver: VariantId,
     /// Submitting tenant (energy attribution).
     tenant: u32,
+    /// QoS class (preemption eligibility; [`crate::qos`]).
+    class: QosClass,
+    /// Absolute deadline, if any (victim-selection ordering).
+    deadline: Option<u64>,
     /// Authoritative completion cycle.  Migrations push this out; the
     /// sims re-validate queued completion events against it (lazy
     /// rescheduling), so timelines stay correct without retracting
     /// events from the queue.
     finish: u64,
+}
+
+/// State saved for a preempted task awaiting resume ([`crate::qos`]).
+#[derive(Clone, Debug)]
+struct Checkpoint {
+    task: TaskId,
+    ver: VariantId,
+    tenant: u32,
+    class: QosClass,
+    deadline: Option<u64>,
+    /// Exact footprint the task held (resume re-allocates this shape).
+    demand: SliceDemand,
+    /// Execution cycles still owed at eviction time.
+    remaining: u64,
 }
 
 /// Event-driven scheduler implementing the paper's greedy policy plus
@@ -116,6 +142,22 @@ pub struct Scheduler {
     wake_cycles: u64,
     /// GLB bank capacity in bytes (migration copy energy).
     glb_bank_bytes: u64,
+    /// QoS knobs ([`crate::qos`]); every QoS path is gated on
+    /// `qos.enabled`.
+    qos: QosConfig,
+    /// Checkpointed (preempted) instances awaiting resume.
+    checkpoints: BTreeMap<TaskInstanceId, Checkpoint>,
+    /// Regions whose queued completion events were invalidated by an
+    /// eviction — drivers consume these via
+    /// [`Scheduler::take_cancelled`] and drop the stale event.
+    cancelled: BTreeSet<RegionId>,
+    /// Cumulative preemption counters.
+    qos_stats: QosStats,
+    /// Evictions since the last [`Scheduler::take_preemptions`] drain.
+    preempt_log: Vec<PreemptionRecord>,
+    /// Cycles the current schedule step's preemption pass charges to
+    /// the rescued launch (victims checkpoint in parallel: the max).
+    pending_preempt_cycles: u64,
 }
 
 impl Scheduler {
@@ -152,6 +194,12 @@ impl Scheduler {
             ),
             wake_cycles: if gating { cfg.energy.wake_cycles } else { 0 },
             glb_bank_bytes: cfg.arch.glb_slice_bytes(),
+            qos: cfg.qos.clone(),
+            checkpoints: BTreeMap::new(),
+            cancelled: BTreeSet::new(),
+            qos_stats: QosStats::default(),
+            preempt_log: Vec::new(),
+            pending_preempt_cycles: 0,
         }
     }
 
@@ -256,7 +304,7 @@ impl Scheduler {
         // succeed later in the same step, and tasks are independent.
         // (§Perf L3: a rescan-after-every-launch variant was O(ready²)
         // and dominated heavy-backlog simulations.)
-        let ready = self.order_ready(queue.ready_tasks());
+        let ready = self.order_ready(queue.ready_tasks(), now);
         let mut launches = Vec::new();
         for rt in ready {
             match self.try_launch(&rt, now) {
@@ -270,6 +318,7 @@ impl Scheduler {
                     // planner whether compacting the running regions
                     // frees room, and retry once if a plan committed.
                     self.mig_stats.nofit_events += 1;
+                    let mut rescued = false;
                     if self.planner.enabled() && self.try_defrag_for(&rt, &options, now) {
                         if let Attempt::Launched(launch) = self.try_launch(&rt, now) {
                             self.mig_stats.rescued_launches += 1;
@@ -277,8 +326,23 @@ impl Scheduler {
                                 .mark_launched(rt.instance)
                                 .expect("ready implies launchable");
                             launches.push(launch);
+                            rescued = true;
                         }
                         self.pending_migration_cycles = 0; // consumed or dropped
+                    }
+                    // Compaction could not (or may not) help: a
+                    // higher-class task may checkpoint-and-evict
+                    // running strictly-lower-class tasks instead
+                    // ([`crate::qos`]).
+                    if !rescued && self.try_preempt_for(&rt, &options, queue, now) {
+                        if let Attempt::Launched(launch) = self.try_launch(&rt, now) {
+                            self.qos_stats.rescued_by_preemption += 1;
+                            queue
+                                .mark_launched(rt.instance)
+                                .expect("ready implies launchable");
+                            launches.push(launch);
+                        }
+                        self.pending_preempt_cycles = 0; // consumed or dropped
                     }
                 }
                 Attempt::Impossible => {}
@@ -301,6 +365,7 @@ impl Scheduler {
             .ok_or_else(|| Error::Sched(format!("completion for idle region {region}")))?;
         self.meter.on_complete(region);
         self.mgr.release(region)?;
+        self.dpr.unpin(&BitstreamId::new(rt.task.0.clone(), rt.ver.0));
         Ok(rt.inst)
     }
 
@@ -347,10 +412,309 @@ impl Scheduler {
         self.running.len()
     }
 
+    // ----------------------------------------------------------------- qos
+
+    /// Cumulative preemption counters ([`crate::qos`]).
+    pub fn qos_stats(&self) -> QosStats {
+        self.qos_stats
+    }
+
+    /// Checkpointed (evicted, not yet resumed) instances.
+    pub fn checkpointed_count(&self) -> usize {
+        self.checkpoints.len()
+    }
+
+    /// Whether `region`'s queued completion event was invalidated by a
+    /// preemption.  Consumes the marker: a driver popping a completion
+    /// event calls this first and drops the event when it returns true.
+    /// Always false with the QoS subsystem disabled (the set stays
+    /// empty), so existing drivers keep their strict invariant checks.
+    pub fn take_cancelled(&mut self, region: RegionId) -> bool {
+        self.cancelled.remove(&region)
+    }
+
+    /// Drain the evictions performed since the last call (trace lines +
+    /// property checks in the drivers).
+    pub fn take_preemptions(&mut self) -> Vec<PreemptionRecord> {
+        std::mem::take(&mut self.preempt_log)
+    }
+
+    /// Longest remaining runway (cycles past `now`) over running tasks
+    /// of class strictly below `class` — the class-aware pool placement
+    /// signal ([`crate::fabric`]): a Critical request avoids shards
+    /// where long-runway BestEffort work would stand in its way.
+    pub fn lower_class_runway(&self, class: QosClass, now: u64) -> u64 {
+        self.running
+            .values()
+            .filter(|r| r.class < class)
+            .map(|r| r.finish.saturating_sub(now))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Resume a checkpointed instance: re-allocate its saved footprint,
+    /// restream its saved variant (fast-DPR; the bitstream stayed
+    /// pinned), pay the GLB state copy-in, and run the remaining
+    /// cycles.
+    fn try_resume(&mut self, rt: &ReadyTask, ck: &Checkpoint, now: u64) -> Attempt {
+        // Power governor: a resume is still a launch.  Refused options
+        // are not `Blocked` — neither compaction nor preemption can
+        // create power headroom.
+        if self.meter.enabled() {
+            let projected = self.option_power(ck.demand, 0, false);
+            if !self.meter.admits(&projected) {
+                return Attempt::Impossible;
+            }
+        }
+        let region: ExecutionRegion = match self.mgr.try_allocate(&ck.demand) {
+            AllocOutcome::Allocated(r) => r,
+            AllocOutcome::NoFit => {
+                return Attempt::Blocked { options: vec![(ck.ver, ck.demand)] }
+            }
+            AllocOutcome::NeverFits => return Attempt::Impossible,
+        };
+        let bs_id = BitstreamId::new(ck.task.0.clone(), ck.ver.0);
+        let bs = self.bitstreams.get(&bs_id).expect("pre-generated").clone();
+        let dest = region.array.first().copied().unwrap_or(SliceRange::empty());
+        let dpr_out = self.dpr.reconfigure(&bs, &dest);
+        let restore = self.cost_model.resume_extra_cycles();
+        let woken = region.woken();
+        let wake = if woken.0 + woken.1 > 0 { self.wake_cycles } else { 0 };
+        let dpr_cycles = dpr_out.cycles
+            + restore
+            + wake
+            + self.pending_migration_cycles
+            + self.pending_preempt_cycles;
+        self.pending_migration_cycles = 0;
+        self.pending_preempt_cycles = 0;
+        let exec_cycles = ck.remaining;
+        let finish = now + dpr_cycles + exec_cycles;
+
+        self.meter.on_launch(
+            region.id,
+            &ck.demand,
+            &region.footprint(),
+            &ck.task.0,
+            ck.tenant,
+            bs.words,
+            dpr_out.cache_hit,
+            woken,
+        );
+        if self.meter.enabled() && restore > 0 {
+            // GLB state copy-in, energy-accounted like a migration's
+            // bank copy
+            let pj = self
+                .meter
+                .model()
+                .migration_step_pj(0, ck.demand.glb_slices as u64 * self.glb_bank_bytes);
+            self.meter.on_migration(pj, 0.0, &ck.task.0, ck.tenant);
+        }
+        // no new pin: the resumed launch inherits the pin its original
+        // launch took (evictions keep it), so pins stay balanced against
+        // the single unpin at completion
+        self.qos_stats.victims_resumed += 1;
+        self.qos_stats.preempt_cycles += restore;
+        self.checkpoints.remove(&rt.instance);
+        self.running.insert(
+            region.id,
+            RunningTask {
+                inst: rt.instance,
+                task: ck.task.clone(),
+                ver: ck.ver,
+                tenant: ck.tenant,
+                class: ck.class,
+                deadline: ck.deadline,
+                finish,
+            },
+        );
+        Attempt::Launched(Launch {
+            instance: rt.instance,
+            task: ck.task.clone(),
+            ver: ck.ver,
+            region: region.id,
+            replicas: 1,
+            start: now,
+            dpr_cycles,
+            exec_cycles,
+            finish,
+            cache_hit: dpr_out.cache_hit,
+            resumed: true,
+        })
+    }
+
+    /// Checkpoint-and-evict running strictly-lower-class tasks so one
+    /// of `rt`'s blocked variants can fit.  Returns whether any victims
+    /// were evicted (the caller then retries the launch, which waits
+    /// out the checkpoint window via `pending_preempt_cycles`).
+    fn try_preempt_for(
+        &mut self,
+        rt: &ReadyTask,
+        options: &[(VariantId, SliceDemand)],
+        queue: &mut RequestQueue,
+        now: u64,
+    ) -> bool {
+        // Preemption requires the EDF policy: `policy = "fifo"` is the
+        // documented scheduling-neutral baseline (classes tracked for
+        // SLO only), so it must never evict regardless of the
+        // `preemption` knob's default.
+        if !self.qos.enabled
+            || !self.qos.preemption
+            || self.qos.policy != QosPolicyKind::Edf
+        {
+            return false;
+        }
+        // Baseline's whole-machine regions have nothing to carve out,
+        // and replicated fixed-size regions resume with a different
+        // replica count (a different effective throughput): both are
+        // excluded as victims, the former wholesale.
+        if self.mgr.policy() == RegionPolicyKind::Baseline {
+            return false;
+        }
+        let mut candidates: Vec<VictimCandidate> = Vec::new();
+        for (&region, r) in self.running.iter() {
+            if r.class >= rt.class || r.finish <= now {
+                continue;
+            }
+            // evictable = a plain contiguous region whose footprint the
+            // mechanism can re-allocate later (this excludes fixed-size
+            // exclusive whole-machine fallbacks, whose footprint no unit
+            // can ever host again)
+            let movable = self
+                .mgr
+                .region(region)
+                .map(|reg| {
+                    reg.replicas <= 1
+                        && reg.is_contiguous()
+                        && self.mgr.can_ever_fit(&reg.footprint())
+                })
+                .unwrap_or(false);
+            if movable {
+                candidates.push(VictimCandidate {
+                    region,
+                    class: r.class,
+                    deadline: r.deadline,
+                    remaining: r.finish.saturating_sub(now),
+                });
+            }
+        }
+        if candidates.is_empty() {
+            return false;
+        }
+        qos::eviction_order(&mut candidates);
+        // Blocked options carry single-copy demands.  That is sound for
+        // every mechanism: fixed-size replication launches with however
+        // many units are free (≥ 1), so freeing one copy's worth always
+        // rescues the launch, and an exclusive option's oversized demand
+        // simply never passes the probe (no victim is evicted for it).
+        for (_, demand) in options {
+            let Some(victims) = qos::select_victims(
+                &self.mgr,
+                &candidates,
+                demand,
+                self.qos.max_victims as usize,
+            ) else {
+                continue;
+            };
+            // commit: checkpoint every victim; they quiesce in
+            // parallel, so the rescued launch waits out the longest
+            // checkpoint, not the sum
+            let mut pass_cycles = 0u64;
+            for region in victims {
+                match self.evict(region, rt, queue, now) {
+                    Ok(cycles) => pass_cycles = pass_cycles.max(cycles),
+                    Err(_) => {
+                        debug_assert!(false, "victim {region} was not evictable");
+                    }
+                }
+            }
+            self.pending_preempt_cycles = pass_cycles;
+            self.qos_stats.preemptions += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Checkpoint one victim off `region`: stop its energy draw, charge
+    /// the checkpoint (quiesce + GLB copy-out), free the region, park
+    /// the instance back on the ready frontier, and invalidate its
+    /// queued completion event.  Returns the checkpoint cycles charged.
+    fn evict(
+        &mut self,
+        region: RegionId,
+        preemptor: &ReadyTask,
+        queue: &mut RequestQueue,
+        now: u64,
+    ) -> Result<u64> {
+        let victim = self
+            .running
+            .remove(&region)
+            .ok_or_else(|| Error::Sched(format!("eviction of idle region {region}")))?;
+        debug_assert!(
+            victim.class < preemptor.class,
+            "preemption must be strictly class-ascending"
+        );
+        let footprint = self
+            .mgr
+            .region(region)
+            .map(|r| r.footprint())
+            .unwrap_or_else(|| SliceDemand::new(0, 0));
+        let remaining = victim.finish.saturating_sub(now).max(1);
+        let cycles = self.cost_model.checkpoint_cycles();
+        self.meter.on_complete(region);
+        if self.meter.enabled() {
+            // GLB state copy-out, energy-accounted like a migration's
+            // bank copy (no restream: nothing is reinstalled yet)
+            let pj = self
+                .meter
+                .model()
+                .migration_step_pj(0, footprint.glb_slices as u64 * self.glb_bank_bytes);
+            self.meter.on_migration(pj, 0.0, &victim.task.0, victim.tenant);
+        }
+        self.mgr.release(region)?;
+        // deliberately NOT unpinned: the checkpoint's fast-DPR relaunch
+        // depends on the bitstream staying GLB-resident across the
+        // eviction window; the pin transfers to the resumed launch and
+        // drops at its completion
+        queue.mark_preempted(victim.inst, now)?;
+        self.cancelled.insert(region);
+        self.checkpoints.insert(
+            victim.inst,
+            Checkpoint {
+                task: victim.task.clone(),
+                ver: victim.ver,
+                tenant: victim.tenant,
+                class: victim.class,
+                deadline: victim.deadline,
+                demand: footprint,
+                remaining,
+            },
+        );
+        self.qos_stats.victims_evicted += 1;
+        self.qos_stats.preempt_cycles += cycles;
+        self.preempt_log.push(PreemptionRecord {
+            victim: victim.inst,
+            victim_task: victim.task,
+            victim_class: victim.class,
+            victim_region: region,
+            preemptor: preemptor.instance,
+            preemptor_class: preemptor.class,
+            remaining_cycles: remaining,
+            checkpoint_cycles: cycles,
+        });
+        Ok(cycles)
+    }
+
     // ------------------------------------------------------------- policy
 
     /// Order the ready list according to the task-selection policy.
-    fn order_ready(&self, mut ready: Vec<ReadyTask>) -> Vec<ReadyTask> {
+    /// With the QoS subsystem enabled under its EDF policy, class order
+    /// (strict), deadlines (EDF within class) and BestEffort aging take
+    /// precedence over the base policy's ordering ([`crate::qos`]).
+    fn order_ready(&self, ready: Vec<ReadyTask>, now: u64) -> Vec<ReadyTask> {
+        if self.qos.enabled && self.qos.policy == QosPolicyKind::Edf {
+            return qos::order_ready(ready, now, self.qos.aging_cycles);
+        }
+        let mut ready = ready;
         match self.policy {
             // arrival order (request seq, then node) — queue order.
             SchedulerPolicyKind::GreedyThroughput
@@ -497,8 +861,13 @@ impl Scheduler {
         opts
     }
 
-    /// Try to launch one ready task.
+    /// Try to launch one ready task.  A checkpointed (preempted)
+    /// instance takes the resume path instead: its saved variant, its
+    /// saved footprint, its remaining cycles.
     fn try_launch(&mut self, rt: &ReadyTask, now: u64) -> Attempt {
+        if let Some(ck) = self.checkpoints.get(&rt.instance).cloned() {
+            return self.try_resume(rt, &ck, now);
+        }
         let options = self.options_for(&rt.task);
         let mut blocked: Vec<(VariantId, SliceDemand)> = Vec::new();
         for opt in options {
@@ -548,8 +917,12 @@ impl Scheduler {
             // out the wake handshake, charged exactly like DPR cycles
             let woken = region.woken();
             let wake = if woken.0 + woken.1 > 0 { self.wake_cycles } else { 0 };
-            let dpr_cycles = dpr_out.cycles + wake + self.pending_migration_cycles;
+            let dpr_cycles = dpr_out.cycles
+                + wake
+                + self.pending_migration_cycles
+                + self.pending_preempt_cycles;
             self.pending_migration_cycles = 0;
+            self.pending_preempt_cycles = 0;
             let finish = now + dpr_cycles + exec_cycles;
 
             self.meter.on_launch(
@@ -562,6 +935,9 @@ impl Scheduler {
                 dpr_out.cache_hit,
                 woken,
             );
+            // the running task's configuration state must stay GLB-
+            // resident for migration restreams and preemption relaunches
+            self.dpr.pin(&bs_id);
             self.running.insert(
                 region.id,
                 RunningTask {
@@ -569,6 +945,8 @@ impl Scheduler {
                     task: rt.task.clone(),
                     ver: opt.ver,
                     tenant: rt.tenant,
+                    class: rt.class,
+                    deadline: rt.deadline,
                     finish,
                 },
             );
@@ -583,6 +961,7 @@ impl Scheduler {
                 exec_cycles,
                 finish,
                 cache_hit: dpr_out.cache_hit,
+                resumed: false,
             });
         }
         if blocked.is_empty() {
@@ -1075,6 +1454,163 @@ mod tests {
         // now, so neither fits (camera-a needs 4) and it blocks
         assert!(second.is_empty());
         assert_eq!(q.ready_count(), 1);
+    }
+
+    // ------------------------------------------------- qos + preemption
+
+    use crate::config::{QosClass, QosPolicyKind};
+
+    fn qos_sched(preemptive: bool) -> Scheduler {
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.qos.enabled = true;
+        cfg.qos.policy = QosPolicyKind::Edf;
+        cfg.qos.preemption = preemptive;
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        s.preload_all();
+        s
+    }
+
+    #[test]
+    fn critical_preempts_best_effort_and_victim_resumes_exactly_once() {
+        let mut s = qos_sched(true);
+        let mut q = RequestQueue::new();
+        // BestEffort harris grabs the fastest variant (7 array slices)
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        let l1 = s.schedule(&mut q, 0);
+        assert_eq!(l1.len(), 1);
+        assert_eq!(l1[0].ver, VariantId('c'));
+        let victim_region = l1[0].region;
+        let victim_finish = l1[0].finish;
+
+        // a Critical camera arrives: no variant fits → harris is evicted
+        q.submit(
+            AppRequest::new(1, 2, AppId::Camera, 10)
+                .with_qos(QosClass::Critical, Some(5_000_000)),
+        );
+        let l2 = s.schedule(&mut q, 10);
+        assert_eq!(l2.len(), 1, "preemption must rescue the critical launch");
+        assert_eq!(l2[0].task.0, "camera.pipeline");
+        let stats = s.qos_stats();
+        assert_eq!(stats.preemptions, 1);
+        assert_eq!(stats.victims_evicted, 1);
+        assert_eq!(stats.rescued_by_preemption, 1);
+        assert_eq!(s.checkpointed_count(), 1);
+        // the rescued launch waits out the checkpoint (full model)
+        let ckpt = s.cost_model.checkpoint_cycles();
+        assert_eq!(ckpt, 64 + 16_384);
+        assert!(l2[0].dpr_cycles >= ckpt, "{}", l2[0].dpr_cycles);
+        // the eviction record is strictly class-ascending
+        let log = s.take_preemptions();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].victim_class, QosClass::BestEffort);
+        assert_eq!(log[0].preemptor_class, QosClass::Critical);
+        assert_eq!(log[0].victim_region, victim_region);
+        assert_eq!(log[0].remaining_cycles, victim_finish - 10);
+        // the victim's stale completion event is invalidated exactly once
+        assert!(s.take_cancelled(victim_region));
+        assert!(!s.take_cancelled(victim_region));
+
+        // camera completes → harris resumes with its saved variant and
+        // its remaining cycles
+        let inst = s.complete(l2[0].region, l2[0].finish).unwrap();
+        q.mark_complete(inst, l2[0].finish).unwrap();
+        let l3 = s.schedule(&mut q, l2[0].finish);
+        assert_eq!(l3.len(), 1, "checkpointed victim must resume");
+        assert_eq!(l3[0].task.0, "harris.corner");
+        assert_eq!(l3[0].ver, VariantId('c'), "resume keeps the checkpointed variant");
+        assert_eq!(l3[0].exec_cycles, victim_finish - 10);
+        assert!(l3[0].cache_hit, "pinned bitstream must still be resident");
+        // resume pays the GLB state copy-in on top of the restream
+        assert!(l3[0].dpr_cycles >= s.cost_model.resume_extra_cycles());
+        assert_eq!(s.qos_stats().victims_resumed, 1);
+        assert_eq!(s.checkpointed_count(), 0);
+
+        // drain: completion happens exactly once, resources conserved
+        let inst = s.complete(l3[0].region, l3[0].finish).unwrap();
+        let done = q.mark_complete(inst, l3[0].finish).unwrap();
+        assert!(done.is_some(), "victim's request completes exactly once");
+        assert_eq!(s.running_count(), 0);
+        assert_eq!(s.regions().glb_map().busy_count(), 0);
+        assert_eq!(s.regions().array_map().busy_count(), 0);
+        assert_eq!(q.open_requests(), 0);
+    }
+
+    #[test]
+    fn lower_classes_never_preempt_higher_or_equal() {
+        let mut s = qos_sched(true);
+        let mut q = RequestQueue::new();
+        // Critical harris-c holds 7 of 8 array slices
+        q.submit(AppRequest::new(0, 3, AppId::Harris, 0).with_qos(QosClass::Critical, None));
+        assert_eq!(s.schedule(&mut q, 0).len(), 1);
+        // BestEffort, Interactive and equal-class Critical camera all
+        // block without evicting anyone
+        for (seq, class) in [
+            (1, QosClass::BestEffort),
+            (2, QosClass::Interactive),
+            (3, QosClass::Critical),
+        ] {
+            q.submit(AppRequest::new(seq, 2, AppId::Camera, 10).with_qos(class, Some(100)));
+        }
+        let launches = s.schedule(&mut q, 10);
+        assert!(launches.is_empty(), "nothing may evict the critical task");
+        assert_eq!(s.qos_stats().victims_evicted, 0);
+        assert_eq!(q.ready_count(), 3);
+        assert_eq!(s.lower_class_runway(QosClass::Critical, 10), 0, "no lower-class runway");
+    }
+
+    #[test]
+    fn preemption_disabled_blocks_instead_of_evicting() {
+        let mut s = qos_sched(false);
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0); // BestEffort
+        assert_eq!(s.schedule(&mut q, 0).len(), 1);
+        q.submit(AppRequest::new(1, 2, AppId::Camera, 10).with_qos(QosClass::Critical, None));
+        assert!(s.schedule(&mut q, 10).is_empty());
+        assert_eq!(s.qos_stats(), crate::qos::QosStats::default());
+        assert_eq!(s.checkpointed_count(), 0);
+    }
+
+    #[test]
+    fn fifo_policy_never_preempts_even_with_the_knob_set() {
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.qos.enabled = true;
+        cfg.qos.policy = QosPolicyKind::Fifo;
+        cfg.qos.preemption = true; // the default — fifo must override it
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0); // BestEffort fills the array
+        assert_eq!(s.schedule(&mut q, 0).len(), 1);
+        q.submit(AppRequest::new(1, 2, AppId::Camera, 10).with_qos(QosClass::Critical, None));
+        assert!(s.schedule(&mut q, 10).is_empty(), "fifo is scheduling-neutral");
+        assert_eq!(s.qos_stats().victims_evicted, 0);
+    }
+
+    #[test]
+    fn edf_orders_criticals_by_deadline() {
+        let mut s = qos_sched(true);
+        let mut q = RequestQueue::new();
+        // two critical harris requests; only one fits at the fastest
+        // variant — the earlier deadline must win the head slot even
+        // though it arrived later
+        q.submit(AppRequest::new(0, 3, AppId::Harris, 0).with_qos(QosClass::Critical, Some(9_000_000)));
+        q.submit(AppRequest::new(1, 3, AppId::Harris, 5).with_qos(QosClass::Critical, Some(1_000_000)));
+        let launches = s.schedule(&mut q, 10);
+        assert!(!launches.is_empty());
+        assert_eq!(launches[0].instance.request, 1, "EDF head slot");
+    }
+
+    #[test]
+    fn best_effort_runway_feeds_class_aware_placement() {
+        let mut s = qos_sched(true);
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0); // BestEffort
+        let l = s.schedule(&mut q, 0);
+        let runway = s.lower_class_runway(QosClass::Critical, 0);
+        assert_eq!(runway, l[0].finish);
+        assert_eq!(s.lower_class_runway(QosClass::BestEffort, 0), 0);
+        // past the finish the runway saturates to zero
+        assert_eq!(s.lower_class_runway(QosClass::Critical, l[0].finish + 1), 0);
     }
 
     #[test]

@@ -21,6 +21,12 @@
 //! consults the defragmentation planner ([`crate::migration`]) and may
 //! live-migrate running tasks to open a contiguous hole before giving
 //! up on the task for this step.
+//!
+//! With the QoS subsystem enabled ([`crate::qos`]), the ready frontier
+//! is ordered by strict class priority + EDF instead of the base
+//! policy, and a still-blocked higher-class task may checkpoint-and-
+//! evict running strictly-lower-class tasks; the victims resume later
+//! from their checkpoints with their remaining cycles.
 
 mod core;
 mod queue;

@@ -2,6 +2,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::config::QosClass;
 use crate::error::{Error, Result};
 use crate::tasks::{AppGraph, AppRequest, TaskId, TaskInstanceId};
 
@@ -18,6 +19,10 @@ pub struct ReadyTask {
     pub ready_cycle: u64,
     /// Cycle at which the *request* arrived (for TAT).
     pub arrival_cycle: u64,
+    /// QoS class of the owning request ([`crate::qos`]).
+    pub class: QosClass,
+    /// Absolute deadline of the owning request, if any.
+    pub deadline: Option<u64>,
 }
 
 /// In-flight application requests and their ready frontier.
@@ -62,6 +67,8 @@ impl RequestQueue {
                     tenant: req.tenant,
                     ready_cycle,
                     arrival_cycle: req.arrival_cycle,
+                    class: req.class,
+                    deadline: req.deadline,
                 }
             })
             .collect()
@@ -99,6 +106,19 @@ impl RequestQueue {
             .remove(&inst)
             .ok_or_else(|| Error::Sched(format!("{inst} launched but not ready")))?;
         self.running.insert(inst, ());
+        Ok(())
+    }
+
+    /// Move a *running* instance back to the ready frontier at `now` —
+    /// the checkpointed-eviction path ([`crate::qos`]).  The instance's
+    /// completion state is untouched, so its graph successors stay
+    /// blocked and the request completes exactly once, after the resumed
+    /// instance finishes.
+    pub fn mark_preempted(&mut self, inst: TaskInstanceId, now: u64) -> Result<()> {
+        self.running
+            .remove(&inst)
+            .ok_or_else(|| Error::Sched(format!("{inst} preempted but not running")))?;
+        self.ready.insert(inst, now);
         Ok(())
     }
 
@@ -213,9 +233,36 @@ mod tests {
         q.submit(AppRequest::new(0, 0, AppId::Camera, 0));
         let inst = q.ready_tasks()[0].instance;
         assert!(q.mark_complete(inst, 1).is_err()); // not launched yet
+        assert!(q.mark_preempted(inst, 1).is_err()); // not running yet
         q.mark_launched(inst).unwrap();
         assert!(q.mark_launched(inst).is_err()); // double launch
         q.mark_complete(inst, 1).unwrap();
         assert!(q.mark_complete(inst, 2).is_err()); // double complete
+    }
+
+    #[test]
+    fn preemption_cycles_running_back_to_ready_and_completes_once() {
+        use crate::config::QosClass;
+        let mut q = RequestQueue::new();
+        q.submit(
+            AppRequest::new(0, 3, AppId::Harris, 10).with_qos(QosClass::Critical, Some(500)),
+        );
+        let rt = q.ready_tasks()[0].clone();
+        assert_eq!(rt.class, QosClass::Critical);
+        assert_eq!(rt.deadline, Some(500));
+        q.mark_launched(rt.instance).unwrap();
+        // evict: instance returns to ready with a fresh ready cycle
+        q.mark_preempted(rt.instance, 200).unwrap();
+        assert_eq!(q.ready_count(), 1);
+        assert_eq!(q.running_count(), 0);
+        let again = &q.ready_tasks()[0];
+        assert_eq!(again.ready_cycle, 200);
+        assert_eq!(again.arrival_cycle, 10, "TAT stays anchored to arrival");
+        assert_eq!(again.class, QosClass::Critical);
+        // resume + complete exactly once
+        q.mark_launched(again.instance).unwrap();
+        let done = q.mark_complete(rt.instance, 400).unwrap();
+        assert!(done.is_some(), "single-task request completes");
+        assert!(q.mark_complete(rt.instance, 401).is_err());
     }
 }

@@ -14,6 +14,7 @@ use crate::dpr::{CacheStats, DprMode};
 use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
 use crate::metrics::{FrameLatency, LatencyBreakdown};
+use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
 use crate::scheduler::{RequestQueue, Scheduler};
 use crate::tasks::{AppId, AppRequest, TaskLibrary};
@@ -58,12 +59,29 @@ pub struct EdgeReport {
     pub migration_cycles: u64,
     /// Energy accounting (`None` unless `[energy].enabled`).
     pub energy: Option<EnergyReport>,
+    /// Per-class SLO report (`None` unless `[qos].enabled`).
+    pub qos: Option<QosReport>,
 }
 
 impl EdgeReport {
     /// Mean frame latency in milliseconds.
     pub fn mean_latency_ms(&self, core_clock_mhz: u32) -> f64 {
         self.latency.mean_total() / (core_clock_mhz as f64 * 1e3)
+    }
+
+    /// p50 frame latency in milliseconds (Fig. 5 companion tails).
+    pub fn p50_latency_ms(&self, core_clock_mhz: u32) -> f64 {
+        self.latency.p50_total() / (core_clock_mhz as f64 * 1e3)
+    }
+
+    /// p95 frame latency in milliseconds.
+    pub fn p95_latency_ms(&self, core_clock_mhz: u32) -> f64 {
+        self.latency.p95_total() / (core_clock_mhz as f64 * 1e3)
+    }
+
+    /// p99 frame latency in milliseconds.
+    pub fn p99_latency_ms(&self, core_clock_mhz: u32) -> f64 {
+        self.latency.p99_total() / (core_clock_mhz as f64 * 1e3)
     }
 }
 
@@ -104,6 +122,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
     }
 
     let frame_cycles = (cfg.arch.core_clock_mhz as f64 * 1e6 / wl.fps) as u64;
+    let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
     let mut rng = Rng::new(wl.seed);
     // next trigger frame per event stream
     let (lo, hi) = wl.event_period_frames;
@@ -125,6 +144,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
     let mut frames: BTreeMap<u32, (Cycle, u32, u64, Cycle)> = BTreeMap::new();
 
     let mut latency = LatencyBreakdown::new();
+    let mut slo = SloTracker::new();
     let mut last_now = 0u64;
 
     while let Some((now, ev)) = events.pop() {
@@ -134,7 +154,10 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                 let entry = frames.entry(k).or_insert((now, 0, 0, now));
                 trace.log(now, format!("frame k={k}"));
                 // camera pipeline runs every frame
-                queue.submit(AppRequest::new(seq, 2, AppId::Camera, now));
+                queue.submit(AppRequest::new(seq, 2, AppId::Camera, now).with_qos(
+                    cfg.qos.class_of_tenant(2),
+                    cfg.qos.deadline_of_tenant(2, now, cycles_per_ms),
+                ));
                 frame_of.insert(seq, k);
                 entry.1 += 1;
                 trace.log(now, format!("arrive seq={seq} frame={k} app={}", AppId::Camera.name()));
@@ -142,7 +165,10 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                 // event streams
                 for (i, app) in EVENT_APPS.iter().enumerate() {
                     if next_trigger[i] == k {
-                        queue.submit(AppRequest::new(seq, i as u32, *app, now));
+                        queue.submit(AppRequest::new(seq, i as u32, *app, now).with_qos(
+                            cfg.qos.class_of_tenant(i as u32),
+                            cfg.qos.deadline_of_tenant(i as u32, now, cycles_per_ms),
+                        ));
                         frame_of.insert(seq, k);
                         frames.get_mut(&k).expect("inserted").1 += 1;
                         trace.log(now, format!("arrive seq={seq} frame={k} app={}", app.name()));
@@ -157,6 +183,10 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                 }
             }
             Event::Completion(region) => {
+                // preempted: the region was released, the event is stale
+                if sched.take_cancelled(region) {
+                    continue;
+                }
                 // migrations push completions out; re-queue stale events
                 // at the scheduler's authoritative finish
                 if let Some(finish) = sched.finish_of(region) {
@@ -167,6 +197,14 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                 }
                 let inst = sched.complete(region, now)?;
                 if let Some(done) = queue.mark_complete(inst, now)? {
+                    if cfg.qos.enabled {
+                        slo.record(SloRecord {
+                            class: done.class,
+                            arrival: done.arrival_cycle,
+                            completion: now,
+                            deadline: done.deadline,
+                        });
+                    }
                     let k = frame_of.remove(&done.seq).ok_or_else(|| {
                         Error::SimInvariant(format!("request {} has no frame", done.seq))
                     })?;
@@ -187,7 +225,24 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                 }
             }
         }
-        for launch in sched.schedule(&mut queue, now) {
+        let step_launches = sched.schedule(&mut queue, now);
+        for p in sched.take_preemptions() {
+            trace.log(
+                now,
+                format!(
+                    "preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
+                    p.victim,
+                    p.victim_task,
+                    p.victim_class.name(),
+                    p.preemptor,
+                    p.preemptor_class.name(),
+                    p.victim_region,
+                    p.remaining_cycles,
+                    p.checkpoint_cycles
+                ),
+            );
+        }
+        for launch in step_launches {
             if let Some(&k) = frame_of.get(&launch.instance.request) {
                 if let Some(entry) = frames.get_mut(&k) {
                     entry.2 += launch.dpr_cycles;
@@ -217,8 +272,10 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
         )));
     }
 
+    debug_assert_eq!(sched.checkpointed_count(), 0, "drained run leaves no checkpoints");
     let mig = sched.migration_stats();
     let energy = sched.energy_report(last_now);
+    let qos = if cfg.qos.enabled { Some(slo.report(sched.qos_stats())) } else { None };
     Ok(EdgeReport {
         policy: cfg.scheduler.region_policy,
         dpr_mode: mode,
@@ -230,6 +287,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
         migrations: mig.tasks_migrated,
         migration_cycles: mig.migration_cycles,
         energy,
+        qos,
     })
 }
 

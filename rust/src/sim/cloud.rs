@@ -14,6 +14,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{
     FragmentationTracker, NtatRecord, NtatTracker, ThroughputTracker, UtilizationTracker,
 };
+use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
 use crate::scheduler::{RequestQueue, Scheduler};
 use crate::tasks::{AppGraph, AppId, AppRequest, TaskLibrary};
@@ -68,6 +69,8 @@ pub struct CloudReport {
     pub rescued_launches: u64,
     /// Energy accounting (`None` unless `[energy].enabled`).
     pub energy: Option<EnergyReport>,
+    /// Per-class SLO report (`None` unless `[qos].enabled`).
+    pub qos: Option<QosReport>,
 }
 
 impl CloudReport {
@@ -153,12 +156,17 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
     let mut glb_util = UtilizationTracker::new(cfg.arch.glb_slices());
     let mut arr_util = UtilizationTracker::new(cfg.arch.array_slices());
     let mut frag = FragmentationTracker::new();
+    let mut slo = SloTracker::new();
 
     while let Some((now, ev)) = events.pop() {
         match ev {
             Event::Arrival(t) => {
-                // admit the request
-                queue.submit(AppRequest::new(seq, t, tenant_app(t), now));
+                // admit the request (class/deadline resolve to
+                // BestEffort/None while `[qos]` is disabled)
+                queue.submit(AppRequest::new(seq, t, tenant_app(t), now).with_qos(
+                    cfg.qos.class_of_tenant(t),
+                    cfg.qos.deadline_of_tenant(t, now, cycles_per_ms),
+                ));
                 inflight.insert(seq, (tenant_app(t), now, 0));
                 trace.log(now, format!("arrive seq={seq} tenant={t} app={}", tenant_app(t).name()));
                 seq += 1;
@@ -172,6 +180,12 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
                 }
             }
             Event::Completion(region) => {
+                // A preempted task's region was released and its event
+                // invalidated; the checkpointed instance resumes on a
+                // fresh region with its own completion event.
+                if sched.take_cancelled(region) {
+                    continue;
+                }
                 // Migrations push completions out after their events were
                 // queued: re-validate against the scheduler's
                 // authoritative finish and re-queue stale events.
@@ -189,6 +203,14 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
                         })?;
                     completed += 1;
                     trace.log(now, format!("done seq={} tenant={}", done.seq, done.tenant));
+                    if cfg.qos.enabled {
+                        slo.record(SloRecord {
+                            class: done.class,
+                            arrival,
+                            completion: now,
+                            deadline: done.deadline,
+                        });
+                    }
                     ntat.record(NtatRecord {
                         app,
                         arrival,
@@ -200,7 +222,30 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
             }
         }
         // scheduler is triggered on every arrival/completion (§3.1)
-        for launch in sched.schedule(&mut queue, now) {
+        let step_launches = sched.schedule(&mut queue, now);
+        for p in sched.take_preemptions() {
+            // the victim's un-run remainder re-accrues at resume; take
+            // it back out so serviced cycles (the NTAT denominator)
+            // count real service, not the evicted window twice
+            if let Some(entry) = inflight.get_mut(&p.victim.request) {
+                entry.2 = entry.2.saturating_sub(p.remaining_cycles);
+            }
+            trace.log(
+                now,
+                format!(
+                    "preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
+                    p.victim,
+                    p.victim_task,
+                    p.victim_class.name(),
+                    p.preemptor,
+                    p.preemptor_class.name(),
+                    p.victim_region,
+                    p.remaining_cycles,
+                    p.checkpoint_cycles
+                ),
+            );
+        }
+        for launch in step_launches {
             launches += 1;
             if let Some(entry) = inflight.get_mut(&launch.instance.request) {
                 entry.2 += launch.dpr_cycles + launch.exec_cycles;
@@ -234,8 +279,10 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
         )));
     }
 
+    debug_assert_eq!(sched.checkpointed_count(), 0, "drained run leaves no checkpoints");
     let mig = sched.migration_stats();
     let energy = sched.energy_report(glb_util.horizon());
+    let qos = if cfg.qos.enabled { Some(slo.report(sched.qos_stats())) } else { None };
     Ok(CloudReport {
         policy: cfg.scheduler.region_policy,
         duration_cycles: duration,
@@ -254,6 +301,7 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
         migration_cycles: mig.migration_cycles,
         rescued_launches: mig.rescued_launches,
         energy,
+        qos,
     })
 }
 

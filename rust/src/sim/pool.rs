@@ -21,6 +21,7 @@ use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
 use crate::fabric::{FabricPool, ShardId};
 use crate::metrics::{FrameLatency, LatencyBreakdown, NtatRecord, NtatTracker, UtilizationTracker};
+use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
 use crate::tasks::{AppId, AppRequest, TaskLibrary};
 use crate::util::rng::Rng;
@@ -86,6 +87,8 @@ pub struct PoolCloudReport {
     pub nofit_events: u64,
     /// Pool-wide energy accounting (`None` unless `[energy].enabled`).
     pub energy: Option<EnergyReport>,
+    /// Pool-wide per-class SLO report (`None` unless `[qos].enabled`).
+    pub qos: Option<QosReport>,
     /// Per-shard breakdown.
     pub per_shard: Vec<ShardSimStats>,
 }
@@ -138,6 +141,8 @@ pub struct PoolEdgeReport {
     pub nofit_events: u64,
     /// Pool-wide energy accounting (`None` unless `[energy].enabled`).
     pub energy: Option<EnergyReport>,
+    /// Pool-wide per-class SLO report (`None` unless `[qos].enabled`).
+    pub qos: Option<QosReport>,
     /// Per-shard breakdown.
     pub per_shard: Vec<ShardSimStats>,
 }
@@ -235,6 +240,7 @@ pub fn run_cloud_pool_traced(
     let mut inflight: BTreeMap<u64, (AppId, Cycle, u64)> = BTreeMap::new();
 
     let mut ntat = NtatTracker::new();
+    let mut slo = SloTracker::new();
     let (total_glb, total_arr) = pool.total_slices();
     let mut glb_util = UtilizationTracker::new(total_glb);
     let mut arr_util = UtilizationTracker::new(total_arr);
@@ -243,7 +249,11 @@ pub fn run_cloud_pool_traced(
         match ev {
             CloudEvent::Arrival(t) => {
                 let app = tenant_app(t);
-                match pool.try_submit(AppRequest::new(seq, t, app, now), now) {
+                let req = AppRequest::new(seq, t, app, now).with_qos(
+                    cfg.qos.class_of_tenant(t),
+                    cfg.qos.deadline_of_tenant(t, now, cycles_per_ms),
+                );
+                match pool.try_submit(req, now) {
                     Some(shard) => {
                         inflight.insert(seq, (app, now, 0));
                         submitted += 1;
@@ -269,6 +279,10 @@ pub fn run_cloud_pool_traced(
                 }
             }
             CloudEvent::Completion(shard, region) => {
+                // preempted: the region was released, the event is stale
+                if pool.take_cancelled(shard, region) {
+                    continue;
+                }
                 // migrations push completions out; re-queue stale events
                 if let Some(finish) = pool.finish_of(shard, region) {
                     if finish > now {
@@ -282,6 +296,14 @@ pub fn run_cloud_pool_traced(
                     })?;
                     completed += 1;
                     trace.log(now, format!("done seq={} tenant={}", done.seq, done.tenant));
+                    if cfg.qos.enabled {
+                        slo.record(SloRecord {
+                            class: done.class,
+                            arrival,
+                            completion: now,
+                            deadline: done.deadline,
+                        });
+                    }
                     ntat.record(NtatRecord {
                         app,
                         arrival,
@@ -291,7 +313,30 @@ pub fn run_cloud_pool_traced(
                 }
             }
         }
-        for (shard, launch) in pool.schedule(now) {
+        let step_launches = pool.schedule(now);
+        for (shard, p) in pool.take_preemptions() {
+            // un-run remainder re-accrues at resume: keep serviced
+            // cycles (the NTAT denominator) honest
+            if let Some(entry) = inflight.get_mut(&p.victim.request) {
+                entry.2 = entry.2.saturating_sub(p.remaining_cycles);
+            }
+            trace.log(
+                now,
+                format!(
+                    "{}preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
+                    shard_tag(&pool, shard),
+                    p.victim,
+                    p.victim_task,
+                    p.victim_class.name(),
+                    p.preemptor,
+                    p.preemptor_class.name(),
+                    p.victim_region,
+                    p.remaining_cycles,
+                    p.checkpoint_cycles
+                ),
+            );
+        }
+        for (shard, launch) in step_launches {
             launches += 1;
             if let Some(entry) = inflight.get_mut(&launch.instance.request) {
                 entry.2 += launch.dpr_cycles + launch.exec_cycles;
@@ -327,6 +372,7 @@ pub fn run_cloud_pool_traced(
     let mig = pool.migration_stats();
     let stats = pool.stats();
     let energy = pool.energy_report(glb_util.horizon());
+    let qos = if cfg.qos.enabled { Some(slo.report(pool.qos_stats())) } else { None };
     Ok(PoolCloudReport {
         shards: pool.shard_count() as u32,
         placement: cfg.pool.placement,
@@ -345,6 +391,7 @@ pub fn run_cloud_pool_traced(
         rescued_launches: mig.rescued_launches,
         nofit_events: mig.nofit_events,
         energy,
+        qos,
         per_shard: per_shard_stats(&pool),
     })
 }
@@ -374,6 +421,7 @@ pub fn run_edge_pool_traced(
     }
 
     let frame_cycles = (cfg.arch.core_clock_mhz as f64 * 1e6 / wl.fps) as u64;
+    let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
     let mut rng = Rng::new(wl.seed);
     let (lo, hi) = wl.event_period_frames;
     let mut next_trigger: Vec<u32> = EVENT_APPS
@@ -395,6 +443,7 @@ pub fn run_edge_pool_traced(
     let mut frames: BTreeMap<u32, (Cycle, u32, u64, Cycle)> = BTreeMap::new();
 
     let mut latency = LatencyBreakdown::new();
+    let mut slo = SloTracker::new();
     let mut last_now = 0u64;
 
     while let Some((now, ev)) = events.pop() {
@@ -415,7 +464,11 @@ pub fn run_edge_pool_traced(
                 }
                 let mut rejected_in_frame = 0u32;
                 for (tenant, app) in arrivals {
-                    match pool.try_submit(AppRequest::new(seq, tenant, app, now), now) {
+                    let req = AppRequest::new(seq, tenant, app, now).with_qos(
+                        cfg.qos.class_of_tenant(tenant),
+                        cfg.qos.deadline_of_tenant(tenant, now, cycles_per_ms),
+                    );
+                    match pool.try_submit(req, now) {
                         Some(shard) => {
                             frame_of.insert(seq, k);
                             frames.get_mut(&k).expect("inserted").1 += 1;
@@ -454,6 +507,10 @@ pub fn run_edge_pool_traced(
                 }
             }
             EdgeEvent::Completion(shard, region) => {
+                // preempted: the region was released, the event is stale
+                if pool.take_cancelled(shard, region) {
+                    continue;
+                }
                 if let Some(finish) = pool.finish_of(shard, region) {
                     if finish > now {
                         events.push(finish, EdgeEvent::Completion(shard, region));
@@ -461,6 +518,14 @@ pub fn run_edge_pool_traced(
                     }
                 }
                 if let Some(done) = pool.complete(shard, region, now)? {
+                    if cfg.qos.enabled {
+                        slo.record(SloRecord {
+                            class: done.class,
+                            arrival: done.arrival_cycle,
+                            completion: now,
+                            deadline: done.deadline,
+                        });
+                    }
                     let k = frame_of.remove(&done.seq).ok_or_else(|| {
                         Error::SimInvariant(format!("request {} has no frame", done.seq))
                     })?;
@@ -483,7 +548,25 @@ pub fn run_edge_pool_traced(
                 }
             }
         }
-        for (shard, launch) in pool.schedule(now) {
+        let step_launches = pool.schedule(now);
+        for (shard, p) in pool.take_preemptions() {
+            trace.log(
+                now,
+                format!(
+                    "{}preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
+                    shard_tag(&pool, shard),
+                    p.victim,
+                    p.victim_task,
+                    p.victim_class.name(),
+                    p.preemptor,
+                    p.preemptor_class.name(),
+                    p.victim_region,
+                    p.remaining_cycles,
+                    p.checkpoint_cycles
+                ),
+            );
+        }
+        for (shard, launch) in step_launches {
             if let Some(&k) = frame_of.get(&launch.instance.request) {
                 if let Some(entry) = frames.get_mut(&k) {
                     entry.2 += launch.dpr_cycles;
@@ -517,6 +600,7 @@ pub fn run_edge_pool_traced(
     let mig = pool.migration_stats();
     let stats = pool.stats();
     let energy = pool.energy_report(last_now);
+    let qos = if cfg.qos.enabled { Some(slo.report(pool.qos_stats())) } else { None };
     Ok(PoolEdgeReport {
         shards: pool.shard_count() as u32,
         placement: cfg.pool.placement,
@@ -532,6 +616,7 @@ pub fn run_edge_pool_traced(
         migrations: mig.tasks_migrated,
         nofit_events: mig.nofit_events,
         energy,
+        qos,
         per_shard: per_shard_stats(&pool),
     })
 }

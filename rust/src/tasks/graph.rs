@@ -8,6 +8,7 @@
 
 use std::fmt;
 
+use crate::config::QosClass;
 use crate::error::{Error, Result};
 use crate::tasks::spec::TaskId;
 
@@ -140,15 +141,35 @@ pub struct AppRequest {
     pub app: AppId,
     /// Arrival time in simulation cycles.
     pub arrival_cycle: u64,
+    /// QoS priority class ([`crate::qos`]); `BestEffort` unless the QoS
+    /// subsystem assigns one.
+    pub class: QosClass,
+    /// Absolute completion deadline in cycles (`None` = no deadline).
+    pub deadline: Option<u64>,
     /// Completion state per graph node.
     pub done: Vec<bool>,
 }
 
 impl AppRequest {
-    /// New request with no completed nodes.
+    /// New request with no completed nodes, BestEffort, no deadline.
     pub fn new(seq: u64, tenant: u32, app: AppId, arrival_cycle: u64) -> Self {
         let n = AppGraph::of(app).len();
-        AppRequest { seq, tenant, app, arrival_cycle, done: vec![false; n] }
+        AppRequest {
+            seq,
+            tenant,
+            app,
+            arrival_cycle,
+            class: QosClass::BestEffort,
+            deadline: None,
+            done: vec![false; n],
+        }
+    }
+
+    /// Attach a QoS class and optional absolute deadline.
+    pub fn with_qos(mut self, class: QosClass, deadline: Option<u64>) -> Self {
+        self.class = class;
+        self.deadline = deadline;
+        self
     }
 
     /// Whether every node has completed.

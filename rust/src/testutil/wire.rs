@@ -86,6 +86,19 @@ impl WireClient {
         Ok((header, lines))
     }
 
+    /// `STATS QOS`: reads the `STATS classes=<n> …` header plus the `n`
+    /// per-class lines that follow; returns `(header, class lines)`.
+    pub fn stats_qos(&mut self) -> Result<(String, Vec<String>)> {
+        let header = self.send("STATS QOS")?;
+        let n: usize = header
+            .strip_prefix("STATS classes=")
+            .and_then(|v| v.split_whitespace().next())
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| Error::Runtime(format!("bad STATS QOS header: {header}")))?;
+        let lines = self.read_reply_lines(n, "class")?;
+        Ok((header, lines))
+    }
+
     /// SUBMIT with retry on `BUSY` backpressure; returns the final
     /// (non-BUSY) reply and how many BUSY retries it took.
     pub fn submit(&mut self, tenant: u32, app: &str) -> Result<(String, u32)> {

@@ -110,6 +110,54 @@ fn energy_accounting_is_byte_deterministic() {
     });
 }
 
+/// The QoS subsystem is part of the seeded contract: the
+/// mixed-criticality preset (EDF + preemption, checkpointed evictions,
+/// SLO tracking) must replay byte-identically, `qos_json` included.
+#[test]
+fn qos_mixed_criticality_is_byte_deterministic() {
+    use cgra_mte::metrics::export::qos_json;
+
+    let mut cfg = presets::mixed_criticality_scenario(true);
+    short_cloud(&mut cfg, 600.0);
+    assert_twice_identical("cloud/qos-mixed", |t| {
+        let r = run_cloud_traced(&cfg, TaskLibrary::table1(), t).unwrap();
+        let qos = r.qos.as_ref().expect("qos enabled");
+        assert!(qos.victims_evicted > 0, "the preset must exercise preemption");
+        format!("{:?}\n{}", r, qos_json(qos))
+    });
+
+    // the FIFO ablation arm of the same preset replays too
+    let mut fifo = presets::mixed_criticality_scenario(false);
+    short_cloud(&mut fifo, 600.0);
+    assert_twice_identical("cloud/qos-fifo", |t| {
+        let r = run_cloud_traced(&fifo, TaskLibrary::table1(), t).unwrap();
+        format!("{:?}\n{}", r, qos_json(r.qos.as_ref().expect("qos enabled")))
+    });
+}
+
+/// With no `[qos]` section (the default `enabled = false`), the
+/// existing presets replay bit-for-bit — and their reports carry no QoS
+/// payload at all (the master-switch guarantee; `tests/prop_qos.rs`
+/// additionally proves configured-but-disabled knobs change nothing).
+#[test]
+fn qos_disabled_default_presets_carry_no_qos_payload() {
+    let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+    short_cloud(&mut cfg, 400.0);
+    let mut t = Trace::new(1 << 20);
+    let r = run_cloud_traced(&cfg, TaskLibrary::table1(), &mut t).unwrap();
+    assert!(r.qos.is_none());
+    assert!(
+        t.events().all(|e| !e.what.starts_with("preempt ")),
+        "no preemption may occur with [qos] absent"
+    );
+
+    let mut edge = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+    short_edge(&mut edge, 120);
+    let mut te = Trace::new(1 << 20);
+    let re = run_edge_traced(&edge, TaskLibrary::table1(), &mut te).unwrap();
+    assert!(re.qos.is_none());
+}
+
 #[test]
 fn cloud_pool_trace_and_report_are_deterministic() {
     for placement in PlacementPolicyKind::ALL {

@@ -1,0 +1,184 @@
+//! QoS subsystem invariants on the mixed-criticality preset:
+//!
+//! 1. **Strict class ascent** — no task is ever preempted by a task of
+//!    an equal or lower class; in particular a Critical task is never a
+//!    victim (checked against every `preempt` trace line).
+//! 2. **Exactly-once completion** — every checkpointed victim
+//!    eventually resumes and its request completes exactly once
+//!    (`submitted == completed`, zero checkpoints at drain, resumes
+//!    equal evictions; the queue errors on any double completion).
+//! 3. **Resource conservation** — preempt/resume cycles never leak or
+//!    double-book slices (trace-level: every evicted region's launch
+//!    exists; end-state: full drain with the scheduler's own invariant
+//!    checks live throughout the run).
+//! 4. **Master switch** — with `[qos].enabled = false`, configured
+//!    classes/deadlines change nothing: traces and reports are
+//!    byte-identical to the plain preset.
+
+use std::collections::BTreeMap;
+
+use cgra_mte::config::{presets, QosClass, WorkloadConfig};
+use cgra_mte::sim::{run_cloud, run_cloud_traced, Trace};
+use cgra_mte::tasks::TaskLibrary;
+
+fn class_rank(name: &str) -> u32 {
+    match name {
+        "best-effort" => 0,
+        "interactive" => 1,
+        "critical" => 2,
+        other => panic!("unknown class in trace: {other}"),
+    }
+}
+
+fn field<'a>(line: &'a str, key: &str) -> &'a str {
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key).and_then(|v| v.strip_prefix('=')))
+        .unwrap_or_else(|| panic!("missing {key}= in '{line}'"))
+}
+
+fn mixed_cfg(preemptive: bool, duration_ms: f64) -> cgra_mte::config::Config {
+    let mut cfg = presets::mixed_criticality_scenario(preemptive);
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+    }
+    cfg
+}
+
+#[test]
+fn preemption_is_strictly_class_ascending_and_never_evicts_critical() {
+    let cfg = mixed_cfg(true, 800.0);
+    let mut trace = Trace::new(1 << 22);
+    let report = run_cloud_traced(&cfg, TaskLibrary::table1(), &mut trace).unwrap();
+    let qos = report.qos.expect("preset enables qos");
+    assert!(qos.preemptions > 0, "the scenario must actually preempt");
+
+    let mut preempt_lines = 0u64;
+    for e in trace.events() {
+        if !e.what.starts_with("preempt ") {
+            continue;
+        }
+        preempt_lines += 1;
+        let victim = class_rank(field(&e.what, "class"));
+        let preemptor = class_rank(field(&e.what, "byclass"));
+        assert!(
+            victim < preemptor,
+            "preemption must be strictly class-ascending: {}",
+            e.what
+        );
+        assert_ne!(
+            field(&e.what, "class"),
+            "critical",
+            "a critical task must never be a victim: {}",
+            e.what
+        );
+    }
+    assert_eq!(preempt_lines, qos.victims_evicted, "every eviction is traced");
+}
+
+#[test]
+fn victims_resume_and_complete_exactly_once_with_conservation() {
+    let cfg = mixed_cfg(true, 800.0);
+    let mut trace = Trace::new(1 << 22);
+    let report = run_cloud_traced(&cfg, TaskLibrary::table1(), &mut trace).unwrap();
+    let qos = report.qos.expect("qos on");
+
+    // exactly-once: the run drains fully (the sim errors on double
+    // completion or stranded requests), every eviction is matched by a
+    // resume, and nothing stays checkpointed
+    assert_eq!(report.submitted, report.completed);
+    assert!(qos.victims_evicted > 0);
+    assert_eq!(qos.victims_resumed, qos.victims_evicted, "every victim resumes");
+
+    // conservation at the trace level: each preempted instance was
+    // launched before its eviction and launched again afterwards, and
+    // every region name in a preempt line matches that instance's most
+    // recent launch region
+    let mut last_region: BTreeMap<String, String> = BTreeMap::new();
+    let mut resumes_owed: BTreeMap<String, u64> = BTreeMap::new();
+    for e in trace.events() {
+        if e.what.starts_with("launch ") {
+            let inst = field(&e.what, "inst").to_string();
+            last_region.insert(inst.clone(), field(&e.what, "region").to_string());
+            if let Some(owed) = resumes_owed.get_mut(&inst) {
+                *owed = owed.saturating_sub(1);
+            }
+        } else if e.what.starts_with("preempt ") {
+            let inst = field(&e.what, "inst").to_string();
+            let region = field(&e.what, "region");
+            assert_eq!(
+                last_region.get(&inst).map(String::as_str),
+                Some(region),
+                "evicted region must be the instance's live launch region: {}",
+                e.what
+            );
+            *resumes_owed.entry(inst).or_insert(0) += 1;
+        }
+    }
+    assert!(
+        resumes_owed.values().all(|&owed| owed == 0),
+        "every preempted instance must relaunch: {resumes_owed:?}"
+    );
+
+    // per-class accounting covers every request exactly once
+    let total: u64 = qos.per_class.iter().map(|c| c.completed).sum();
+    assert_eq!(total, report.completed);
+    // BestEffort is delayed, not starved: it completes everything too
+    assert!(qos.class(QosClass::BestEffort).completed > 0);
+}
+
+#[test]
+fn preemptive_edf_beats_fifo_on_critical_latency_at_equal_load() {
+    // the bench enforces this with full rigor; the property here is the
+    // cheap smoke-scale version so `cargo test` alone catches ordering
+    // regressions
+    let fifo = run_cloud(&mixed_cfg(false, 600.0)).unwrap();
+    let edf = run_cloud(&mixed_cfg(true, 600.0)).unwrap();
+    assert_eq!(fifo.submitted, edf.submitted, "equal offered load");
+    let fq = fifo.qos.expect("qos on");
+    let eq = edf.qos.expect("qos on");
+    let (fc, ec) = (fq.class(QosClass::Critical), eq.class(QosClass::Critical));
+    assert!(fc.missed > 0, "fifo must miss deadlines at this load");
+    assert!(
+        ec.p99_latency < fc.p99_latency,
+        "edf p99 {} vs fifo p99 {}",
+        ec.p99_latency,
+        fc.p99_latency
+    );
+    assert!(
+        ec.miss_rate() < fc.miss_rate(),
+        "edf miss {} vs fifo miss {}",
+        ec.miss_rate(),
+        fc.miss_rate()
+    );
+    assert_eq!(fq.preemptions, 0, "fifo never preempts");
+    assert!(eq.preemptions > 0, "edf must preempt under this load");
+}
+
+#[test]
+fn disabled_qos_with_configured_knobs_changes_nothing() {
+    let render = |trace: &Trace| -> String {
+        trace.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+    };
+    // plain preset, qos section untouched
+    let mut plain_cfg = presets::cloud_scenario(cgra_mte::config::RegionPolicyKind::FlexibleShape);
+    if let WorkloadConfig::Cloud(ref mut c) = plain_cfg.workload {
+        c.duration_ms = 400.0;
+    }
+    let mut t_plain = Trace::new(1 << 20);
+    let plain = run_cloud_traced(&plain_cfg, TaskLibrary::table1(), &mut t_plain).unwrap();
+
+    // same preset with every knob set but the master switch off
+    let mut knobs = plain_cfg.clone();
+    knobs.qos.preemption = true;
+    knobs.qos.tenant_class =
+        [QosClass::Critical, QosClass::Interactive, QosClass::Critical, QosClass::Critical];
+    knobs.qos.deadline_ms = [1.0, 1.0, 1.0, 1.0];
+    knobs.qos.aging_cycles = 1;
+    assert!(!knobs.qos.enabled);
+    let mut t_knobs = Trace::new(1 << 20);
+    let with_knobs = run_cloud_traced(&knobs, TaskLibrary::table1(), &mut t_knobs).unwrap();
+
+    assert_eq!(render(&t_plain), render(&t_knobs), "traces must be byte-identical");
+    assert_eq!(format!("{plain:?}"), format!("{with_knobs:?}"), "reports must match");
+    assert!(plain.qos.is_none() && with_knobs.qos.is_none());
+}
