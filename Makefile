@@ -7,7 +7,7 @@
 # the deterministic stub executor serves a built-in synthetic manifest
 # and no artifacts are needed.
 
-.PHONY: build test artifacts doc bench-smoke
+.PHONY: build test artifacts doc bench-smoke bench-simperf
 
 build:
 	cargo build --release
@@ -30,3 +30,12 @@ bench-smoke:
 	cargo bench --bench ablation_shards -- --smoke
 	cargo bench --bench ablation_energy -- --smoke
 	cargo bench --bench ablation_qos -- --smoke
+	cargo bench --bench simperf -- --smoke
+
+# Simulator hot-path throughput (events/sec) with the >10% perf-
+# regression gate against rust/benches/simperf_baseline.json; writes
+# BENCH_simperf.json.  Full (non-smoke) mode for trustworthy numbers —
+# regenerate the committed baseline with UPDATE_SIMPERF_BASELINE=1 after
+# a validated perf change.
+bench-simperf:
+	cargo bench --bench simperf

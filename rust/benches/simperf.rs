@@ -1,0 +1,211 @@
+//! Simulator hot-path throughput bench with a perf-regression gate.
+//!
+//! Measures end-to-end simulator throughput — processed events per
+//! wall-clock second — on the presets the hot-path overhaul targets:
+//! the past-saturation churn preset, the mixed-criticality QoS preset,
+//! and the 2-shard pool preset.  "Events" is the deterministic count of
+//! arrivals + completions + launches a run processes, so the metric is
+//! `fixed work / measured wall time`; the minimum wall time across
+//! samples is used (least scheduler noise).
+//!
+//! Output: `BENCH_simperf.json` (shared `cgra_mte::bench::jsonw`
+//! schema).  Regression gate: when a committed baseline exists at
+//! `benches/simperf_baseline.json`, any scenario whose events/sec falls
+//! below 90% of its baseline fails the bench (exit 1) — the CI leg runs
+//! `--smoke`.  When no baseline exists the bench writes one and passes
+//! (bootstrap); regenerate deliberately with
+//! `UPDATE_SIMPERF_BASELINE=1` after a validated perf change and commit
+//! the refreshed baseline alongside it.
+
+use std::time::Instant;
+
+use cgra_mte::bench::jsonw;
+use cgra_mte::config::{
+    presets, Config, DefragPolicyKind, PlacementPolicyKind, RegionPolicyKind, WorkloadConfig,
+};
+use cgra_mte::metrics::export;
+use cgra_mte::sim::{run_cloud, run_cloud_pool};
+use cgra_mte::util::json::Json;
+
+const GATE_FRACTION: f64 = 0.9; // fail below 90% of baseline events/sec
+
+struct Scenario {
+    name: &'static str,
+    cfg: Config,
+    pool: bool,
+}
+
+fn scenarios(smoke: bool) -> Vec<Scenario> {
+    let dur = |full: f64| if smoke { full / 4.0 } else { full };
+    let mut churn =
+        presets::churn_scenario(RegionPolicyKind::FlexibleShape, DefragPolicyKind::CostAware);
+    set_duration(&mut churn, dur(4_000.0));
+    let mut qos = presets::mixed_criticality_scenario(true);
+    set_duration(&mut qos, dur(3_000.0));
+    let mut pool = presets::pool_scenario(2, PlacementPolicyKind::LeastLoaded);
+    set_duration(&mut pool, dur(2_000.0));
+    vec![
+        Scenario { name: "churn", cfg: churn, pool: false },
+        Scenario { name: "mixed-criticality", cfg: qos, pool: false },
+        Scenario { name: "pool-2", cfg: pool, pool: true },
+    ]
+}
+
+fn set_duration(cfg: &mut Config, duration_ms: f64) {
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+    }
+}
+
+/// Deterministic per-run event count: arrivals + completions + launches.
+fn events(s: &Scenario) -> u64 {
+    if s.pool {
+        let r = run_cloud_pool(&s.cfg).expect("pool run");
+        r.submitted + r.completed + r.launches
+    } else {
+        let r = run_cloud(&s.cfg).expect("cloud run");
+        r.submitted + r.completed + r.launches
+    }
+}
+
+struct Row {
+    name: &'static str,
+    events: u64,
+    best_wall_s: f64,
+    events_per_sec: f64,
+}
+
+fn measure(s: &Scenario, samples: u32) -> Row {
+    // the sim is a pure function of the config: the event count is
+    // fixed work, checked for determinism before timing
+    let n = events(s);
+    assert_eq!(n, events(s), "{}: event count must be deterministic", s.name);
+    assert!(n > 0, "{}: empty run measures nothing", s.name);
+    let mut best = f64::INFINITY;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(events(s));
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Row { name: s.name, events: n, best_wall_s: best, events_per_sec: n as f64 / best }
+}
+
+fn baseline_path() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("benches/simperf_baseline.json")
+}
+
+/// Baseline events/sec per scenario, if a baseline file is committed.
+fn read_baseline() -> Option<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(baseline_path()).ok()?;
+    let doc = Json::parse(&text).ok()?;
+    let mut out = Vec::new();
+    for row in doc.get("rows")?.items() {
+        let name = row.get("scenario")?.as_str()?.to_string();
+        let eps = row.req_f64("events_per_sec").ok()?;
+        out.push((name, eps));
+    }
+    Some(out)
+}
+
+fn rows_json(rows: &[Row]) -> String {
+    jsonw::arr(
+        &rows
+            .iter()
+            .map(|r| {
+                jsonw::obj(&[
+                    ("scenario", jsonw::str_val(r.name)),
+                    ("events", jsonw::num_u(r.events)),
+                    ("best_wall_s", jsonw::num_f(r.best_wall_s)),
+                    ("events_per_sec", jsonw::num_f(r.events_per_sec)),
+                ])
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let samples = if smoke { 3 } else { 8 };
+    let t0 = Instant::now();
+
+    let rows: Vec<Row> = scenarios(smoke).iter().map(|s| measure(s, samples)).collect();
+
+    let mode = if smoke { "smoke" } else { "full" };
+    println!("simperf — simulator hot-path throughput ({mode} mode)");
+    for r in &rows {
+        println!(
+            "  {:<18} {:>12} events   {:>9.4} s best   {:>14.0} events/s",
+            r.name, r.events, r.best_wall_s, r.events_per_sec
+        );
+    }
+
+    // ---- regression gate against the committed baseline
+    let update = std::env::var("UPDATE_SIMPERF_BASELINE").map_or(false, |v| v == "1");
+    let baseline = if update { None } else { read_baseline() };
+    let mut gate_status = "bootstrapped";
+    let mut failures = Vec::new();
+    let mut checked = Vec::new();
+    if let Some(base) = &baseline {
+        gate_status = "pass";
+        for r in &rows {
+            match base.iter().find(|(n, _)| n == r.name) {
+                Some((_, base_eps)) => {
+                    let ratio = r.events_per_sec / base_eps;
+                    checked.push((r.name, *base_eps, ratio));
+                    if ratio < GATE_FRACTION {
+                        failures.push(format!(
+                            "{}: {:.0} events/s is {:.1}% of baseline {:.0} (floor {:.0}%)",
+                            r.name,
+                            r.events_per_sec,
+                            ratio * 100.0,
+                            base_eps,
+                            GATE_FRACTION * 100.0
+                        ));
+                    }
+                }
+                None => failures.push(format!(
+                    "{}: scenario missing from baseline — regenerate with UPDATE_SIMPERF_BASELINE=1",
+                    r.name
+                )),
+            }
+        }
+        for (name, base_eps, ratio) in &checked {
+            println!(
+                "  gate {:<13} baseline {:>12.0} events/s   current/baseline = {:.2}",
+                name, base_eps, ratio
+            );
+        }
+    } else {
+        let doc = jsonw::obj(&[
+            ("bench", jsonw::str_val("simperf-baseline")),
+            ("smoke", jsonw::bool_val(smoke)),
+            ("rows", rows_json(&rows)),
+        ]);
+        export::write_file(baseline_path(), &doc).expect("write baseline json");
+        println!(
+            "  {} baseline at {}",
+            if update { "regenerated" } else { "bootstrapped" },
+            baseline_path().display()
+        );
+    }
+
+    let doc = jsonw::obj(&[
+        ("bench", jsonw::str_val("simperf")),
+        ("smoke", jsonw::bool_val(smoke)),
+        ("samples", jsonw::num_u(samples as u64)),
+        ("gate_fraction", jsonw::num_f(GATE_FRACTION)),
+        ("gate_status", jsonw::str_val(if failures.is_empty() { gate_status } else { "fail" })),
+        ("rows", rows_json(&rows)),
+    ]);
+    let path = "BENCH_simperf.json";
+    export::write_file(path, &doc).expect("write bench json");
+    println!("wrote {path}");
+    println!("bench wall time: {:.1} s", t0.elapsed().as_secs_f64());
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("perf regression FAILED: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -92,15 +92,32 @@ impl fmt::Display for SliceRange {
 /// This is the "simplified and quantized view of hardware resources"
 /// (§2.3) the scheduler sees: a bitmap of free/busy slices with
 /// contiguous-run queries.
+///
+/// Alongside the bitmap, the map incrementally maintains the canonical
+/// free-run list (sorted, maximal, coalesced) and the free-slice count,
+/// updated on every [`occupy`](SliceMap::occupy)/
+/// [`release`](SliceMap::release) instead of being recomputed per
+/// query.  All run queries (`find_free_run*`, `longest_free_run`,
+/// `free_runs`, `free_count`, `fragmentation`) read the index; the
+/// bitmap stays authoritative for `range_free`, `render`, and the
+/// debug-mode consistency oracle (`tests/prop_simperf.rs` checks the
+/// index against a from-scratch bitmap recompute under random
+/// occupy/release sequences).
 #[derive(Clone, Debug)]
 pub struct SliceMap {
     busy: Vec<bool>,
+    /// Maximal free runs, sorted by start — the incrementally
+    /// maintained index.
+    runs: Vec<SliceRange>,
+    /// Free slice count (== sum of `runs` lengths).
+    free: u32,
 }
 
 impl SliceMap {
     /// All-free map of `n` slices.
     pub fn new(n: u32) -> Self {
-        SliceMap { busy: vec![false; n as usize] }
+        let runs = if n > 0 { vec![SliceRange::new(0, n)] } else { Vec::new() };
+        SliceMap { busy: vec![false; n as usize], runs, free: n }
     }
 
     /// Total slice count.
@@ -115,7 +132,7 @@ impl SliceMap {
 
     /// Free slice count.
     pub fn free_count(&self) -> u32 {
-        self.busy.iter().filter(|&&b| !b).count() as u32
+        self.free
     }
 
     /// Busy slice count.
@@ -139,38 +156,24 @@ impl SliceMap {
         if len == 0 {
             return Some(SliceRange::new(from.min(self.len()), 0));
         }
-        let n = self.len();
-        if len > n {
-            return None;
-        }
-        let mut run = 0u32;
-        for i in from..n {
-            if self.busy[i as usize] {
-                run = 0;
-            } else {
-                run += 1;
-                if run == len {
-                    return Some(SliceRange::new(i + 1 - len, len));
-                }
+        for r in &self.runs {
+            if r.end() <= from {
+                continue;
+            }
+            let start = r.start.max(from);
+            if start + len <= r.end() {
+                return Some(SliceRange::new(start, len));
             }
         }
         None
     }
 
-    /// Longest free contiguous run anywhere.
+    /// Longest free contiguous run anywhere (leftmost on ties).
     pub fn longest_free_run(&self) -> SliceRange {
-        let (mut best, mut run_start, mut run) = (SliceRange::empty(), 0u32, 0u32);
-        for i in 0..self.len() {
-            if self.busy[i as usize] {
-                run = 0;
-            } else {
-                if run == 0 {
-                    run_start = i;
-                }
-                run += 1;
-                if run > best.len {
-                    best = SliceRange::new(run_start, run);
-                }
+        let mut best = SliceRange::empty();
+        for r in &self.runs {
+            if r.len > best.len {
+                best = *r;
             }
         }
         best
@@ -180,9 +183,32 @@ impl SliceMap {
     /// double-allocation is a scheduler bug, not a recoverable state.
     pub fn occupy(&mut self, range: &SliceRange) {
         debug_assert!(self.range_free(range), "double-occupancy of {range}");
+        if range.is_empty() {
+            return;
+        }
         for i in range.iter() {
             self.busy[i as usize] = true;
         }
+        // A contiguous all-free range lies inside exactly one maximal
+        // free run: split it around the newly busy span.
+        let idx = self.runs.partition_point(|r| r.start <= range.start) - 1;
+        let run = self.runs[idx];
+        debug_assert!(run.start <= range.start && range.end() <= run.end());
+        let left = SliceRange::new(run.start, range.start - run.start);
+        let right = SliceRange::new(range.end(), run.end() - range.end());
+        match (left.is_empty(), right.is_empty()) {
+            (true, true) => {
+                self.runs.remove(idx);
+            }
+            (false, true) => self.runs[idx] = left,
+            (true, false) => self.runs[idx] = right,
+            (false, false) => {
+                self.runs[idx] = left;
+                self.runs.insert(idx + 1, right);
+            }
+        }
+        self.free -= range.len;
+        self.debug_check_index();
     }
 
     /// Mark `range` free.
@@ -191,6 +217,31 @@ impl SliceMap {
             debug_assert!(self.busy[i as usize], "double-release of slice {i}");
             self.busy[i as usize] = false;
         }
+        if range.is_empty() {
+            return;
+        }
+        // Insert the freed span, coalescing with adjacent runs so the
+        // list stays maximal.
+        let idx = self.runs.partition_point(|r| r.start < range.start);
+        let mut merged = *range;
+        if idx > 0 && self.runs[idx - 1].end() == merged.start {
+            let left = self.runs.remove(idx - 1);
+            merged = SliceRange::new(left.start, left.len + merged.len);
+            // removal shifted the right neighbour down to idx - 1
+            if idx - 1 < self.runs.len() && self.runs[idx - 1].start == merged.end() {
+                let right = self.runs.remove(idx - 1);
+                merged = SliceRange::new(merged.start, merged.len + right.len);
+            }
+            self.runs.insert(idx - 1, merged);
+        } else {
+            if idx < self.runs.len() && self.runs[idx].start == merged.end() {
+                let right = self.runs.remove(idx);
+                merged = SliceRange::new(merged.start, merged.len + right.len);
+            }
+            self.runs.insert(idx, merged);
+        }
+        self.free += range.len;
+        self.debug_check_index();
     }
 
     /// Canonical free list: every maximal free run, left to right.
@@ -199,21 +250,13 @@ impl SliceMap {
     /// merge into one range), so this is the coalesced view the
     /// defragmentation planner ([`crate::migration`]) works from.
     pub fn free_runs(&self) -> Vec<SliceRange> {
-        let mut out = Vec::new();
-        let mut start: Option<u32> = None;
-        for i in 0..self.len() {
-            if !self.busy[i as usize] {
-                if start.is_none() {
-                    start = Some(i);
-                }
-            } else if let Some(s) = start.take() {
-                out.push(SliceRange::new(s, i - s));
-            }
-        }
-        if let Some(s) = start {
-            out.push(SliceRange::new(s, self.len() - s));
-        }
-        out
+        self.runs.clone()
+    }
+
+    /// Borrowed view of the free-run index (no allocation) — the hot
+    /// path for power-gating and fragmentation sampling.
+    pub fn free_runs_ref(&self) -> &[SliceRange] {
+        &self.runs
     }
 
     /// External fragmentation in `[0, 1]`: 1 − longest-free-run / free.
@@ -224,6 +267,35 @@ impl SliceMap {
             return 0.0;
         }
         1.0 - self.longest_free_run().len as f64 / free as f64
+    }
+
+    /// Debug-mode oracle: the incremental index must always equal a
+    /// from-scratch recompute over the bitmap.
+    #[inline]
+    fn debug_check_index(&self) {
+        #[cfg(debug_assertions)]
+        {
+            let mut scan = Vec::new();
+            let mut start: Option<u32> = None;
+            for i in 0..self.len() {
+                if !self.busy[i as usize] {
+                    if start.is_none() {
+                        start = Some(i);
+                    }
+                } else if let Some(s) = start.take() {
+                    scan.push(SliceRange::new(s, i - s));
+                }
+            }
+            if let Some(s) = start {
+                scan.push(SliceRange::new(s, self.len() - s));
+            }
+            debug_assert_eq!(self.runs, scan, "free-run index diverged from bitmap");
+            debug_assert_eq!(
+                self.free,
+                scan.iter().map(|r| r.len).sum::<u32>(),
+                "free counter diverged from bitmap"
+            );
+        }
     }
 
     /// Render as `.`/`#` occupancy string (trace output, Fig. 2 dumps).

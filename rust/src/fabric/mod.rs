@@ -34,5 +34,5 @@
 mod pool;
 mod router;
 
-pub use pool::{FabricPool, PoolStats, ShardSnapshot};
+pub use pool::{FabricPool, PoolCompletion, PoolStats, ShardSnapshot};
 pub use router::{FabricRouter, ShardId, ShardLoad};

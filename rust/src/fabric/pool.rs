@@ -12,7 +12,7 @@ use crate::metrics::FragmentationGauge;
 use crate::migration::{MigrationReport, MigrationStats};
 use crate::qos::{PreemptionRecord, QosStats};
 use crate::regions::RegionId;
-use crate::scheduler::{Launch, RequestQueue, Scheduler};
+use crate::scheduler::{CompletionOutcome, Launch, RequestQueue, Scheduler};
 use crate::tasks::{AppGraph, AppId, AppRequest, TaskLibrary};
 
 use super::router::{FabricRouter, ShardId, ShardLoad};
@@ -43,6 +43,22 @@ pub struct PoolStats {
     /// no shard right now, so the cheapest shard was defragmented
     /// before placement.
     pub cross_shard_defrags: u64,
+}
+
+/// Outcome of [`FabricPool::drain_completion`] — the pool-level
+/// analogue of [`crate::scheduler::CompletionOutcome`], with the
+/// per-shard queue already advanced on `Done`.
+#[derive(Clone, Debug)]
+pub enum PoolCompletion {
+    /// The completion event was invalidated by a preemption; the marker
+    /// is consumed.
+    Cancelled,
+    /// A migration pushed the finish out to the returned cycle; the
+    /// caller should re-queue the event there.
+    Stale(u64),
+    /// The task completed; `Some` carries the owning request when it
+    /// fully completed.
+    Done(Option<AppRequest>),
 }
 
 /// Point-in-time view of one shard for `STATS`/export surfaces.
@@ -384,6 +400,33 @@ impl FabricPool {
             self.placed.remove(&req.seq);
         }
         Ok(done)
+    }
+
+    /// Drain one completion event on `shard`/`region` in a single pass —
+    /// the pool-level analogue of
+    /// [`crate::scheduler::Scheduler::drain_completion`], folding in the
+    /// per-shard queue bookkeeping that [`FabricPool::complete`] does.
+    pub fn drain_completion(
+        &mut self,
+        shard: ShardId,
+        region: RegionId,
+        now: u64,
+    ) -> Result<PoolCompletion> {
+        let s = self
+            .shards
+            .get_mut(shard.0 as usize)
+            .ok_or_else(|| Error::Sched(format!("completion on unknown shard {shard}")))?;
+        let inst = match s.sched.drain_completion(region, now)? {
+            CompletionOutcome::Cancelled => return Ok(PoolCompletion::Cancelled),
+            CompletionOutcome::Stale(finish) => return Ok(PoolCompletion::Stale(finish)),
+            CompletionOutcome::Done(inst) => inst,
+        };
+        let done = s.queue.mark_complete(inst, now)?;
+        if let Some(ref req) = done {
+            s.open = s.open.saturating_sub(1);
+            self.placed.remove(&req.seq);
+        }
+        Ok(PoolCompletion::Done(done))
     }
 
     /// Authoritative completion cycle of the task on `shard`/`region`

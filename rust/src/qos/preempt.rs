@@ -1,6 +1,8 @@
 //! Victim selection for checkpointed eviction.
 //!
-//! Selection is a *dry run*: the region manager is cloned, candidate
+//! Selection is a *dry run*: on a reusable fit-probe scratch borrowed
+//! from the region manager ([`crate::regions::RegionManager::fit_probe`]
+//! — just the two occupancy maps, never a full manager clone), candidate
 //! victims are released one by one in eviction-preference order, and
 //! the probe stops at the first prefix whose release makes the blocked
 //! demand allocatable ([`crate::regions::RegionManager::can_fit_now`]).
@@ -9,7 +11,7 @@
 
 use crate::abstraction::SliceDemand;
 use crate::config::QosClass;
-use crate::regions::{RegionId, RegionManager};
+use crate::regions::{FitProbe, RegionId};
 
 /// One running task the preemption engine may evict.
 #[derive(Clone, Copy, Debug)]
@@ -44,8 +46,14 @@ pub(crate) fn eviction_order(candidates: &mut [VictimCandidate]) {
 /// [`eviction_order`]) whose eviction makes `demand` allocatable.
 /// Returns `None` when no prefix within the cap unblocks the demand —
 /// in which case nothing should be evicted at all.
+///
+/// The dry run happens on `probe`, a reusable scratch the caller builds
+/// once per preemption pass ([`crate::regions::RegionManager::fit_probe`])
+/// and this function rewinds before each evaluation — repeated
+/// what-ifs over several blocked options share one pair of scratch
+/// maps instead of cloning the region manager per call.
 pub fn select_victims(
-    mgr: &RegionManager,
+    probe: &mut FitProbe<'_>,
     candidates: &[VictimCandidate],
     demand: &SliceDemand,
     max_victims: usize,
@@ -53,7 +61,7 @@ pub fn select_victims(
     if candidates.is_empty() || max_victims == 0 {
         return None;
     }
-    let mut probe = mgr.clone();
+    probe.reset();
     let mut chosen = Vec::new();
     for c in candidates.iter().take(max_victims) {
         if probe.release(c.region).is_err() {
@@ -117,20 +125,25 @@ mod tests {
             .map(|&r| cand(r, QosClass::BestEffort, None, 100))
             .collect();
         // camera-a needs 4 array slices: two adjacent victims suffice
-        let victims =
-            select_victims(&m, &cands, &SliceDemand::new(4, 4), 4).expect("must unblock");
+        let mut probe = m.fit_probe();
+        let victims = select_victims(&mut probe, &cands, &SliceDemand::new(4, 4), 4)
+            .expect("must unblock");
         assert_eq!(victims.len(), 2, "prefix stops as soon as the demand fits");
         // the probe never mutated the real manager
         assert_eq!(m.active_count(), 4);
-        // a cap below the needed prefix refuses to evict anyone
-        assert!(select_victims(&m, &cands, &SliceDemand::new(4, 4), 1).is_none());
+        // the *same* probe is reusable: it rewinds itself per call
+        assert!(select_victims(&mut probe, &cands, &SliceDemand::new(4, 4), 1).is_none());
         // an impossible demand refuses too
-        assert!(select_victims(&m, &cands, &SliceDemand::new(40, 9), 4).is_none());
+        assert!(select_victims(&mut probe, &cands, &SliceDemand::new(40, 9), 4).is_none());
+        // and after the refusals the full selection still works
+        let again = select_victims(&mut probe, &cands, &SliceDemand::new(4, 4), 4)
+            .expect("probe state rewinds");
+        assert_eq!(again, victims);
     }
 
     #[test]
     fn empty_candidates_select_nothing() {
         let m = mgr();
-        assert!(select_victims(&m, &[], &SliceDemand::new(1, 1), 4).is_none());
+        assert!(select_victims(&mut m.fit_probe(), &[], &SliceDemand::new(1, 1), 4).is_none());
     }
 }

@@ -183,15 +183,22 @@ impl RegionManager {
     /// The fabric-pool router ([`crate::fabric`]) probes every shard with
     /// this before falling back to a cross-shard defragmentation pass.
     pub fn can_fit_now(&self, demand: &SliceDemand) -> bool {
+        self.fits_on(&self.glb, &self.array, self.idle(), demand)
+    }
+
+    /// The fit predicate behind [`RegionManager::can_fit_now`],
+    /// parameterized over the occupancy state so [`FitProbe`] what-ifs
+    /// evaluate it against scratch maps without cloning the manager.
+    fn fits_on(&self, glb: &SliceMap, array: &SliceMap, idle: bool, demand: &SliceDemand) -> bool {
         if !self.can_ever_fit(demand) {
             return false;
         }
         match self.policy {
-            RegionPolicyKind::Baseline => self.idle(),
+            RegionPolicyKind::Baseline => idle,
             RegionPolicyKind::FixedSize => (0..self.unit_count()).any(|i| {
                 let g = SliceRange::new(i * self.unit.glb_slices, self.unit.glb_slices);
                 let a = SliceRange::new(i * self.unit.array_slices, self.unit.array_slices);
-                self.glb.range_free(&g) && self.array.range_free(&a)
+                glb.range_free(&g) && array.range_free(&a)
             }),
             RegionPolicyKind::VariableSize => {
                 let k = self.units_needed(demand);
@@ -206,13 +213,28 @@ impl RegionManager {
                             start * self.unit.array_slices,
                             k * self.unit.array_slices,
                         );
-                        self.glb.range_free(&g) && self.array.range_free(&a)
+                        glb.range_free(&g) && array.range_free(&a)
                     })
             }
             RegionPolicyKind::FlexibleShape => {
-                self.array.find_free_run(demand.array_slices).is_some()
-                    && self.glb.find_free_run(demand.glb_slices).is_some()
+                array.find_free_run(demand.array_slices).is_some()
+                    && glb.find_free_run(demand.glb_slices).is_some()
             }
+        }
+    }
+
+    /// Borrow a reusable what-if scratch over this manager's occupancy
+    /// state.  Dry runs (preemption victim selection, defrag probes)
+    /// release regions on the probe and re-evaluate the fit predicate
+    /// without ever cloning the manager's region table; [`FitProbe::reset`]
+    /// rewinds the scratch to the live state in place, reusing its
+    /// allocations across successive what-ifs.
+    pub fn fit_probe(&self) -> FitProbe<'_> {
+        FitProbe {
+            mgr: self,
+            glb: self.glb.clone(),
+            array: self.array.clone(),
+            active: self.regions.len(),
         }
     }
 
@@ -462,9 +484,60 @@ impl RegionManager {
     }
 }
 
+/// Reusable what-if scratch for fit dry-runs ([`RegionManager::fit_probe`]).
+///
+/// Holds only the two occupancy maps (a few dozen slices each) — the
+/// manager's region table, policy and unit geometry are consulted
+/// through the borrow, so building or resetting a probe never touches
+/// the heap beyond the slice bitmaps and their run indexes.
+#[derive(Debug)]
+pub struct FitProbe<'a> {
+    mgr: &'a RegionManager,
+    glb: SliceMap,
+    array: SliceMap,
+    active: usize,
+}
+
+impl FitProbe<'_> {
+    /// Rewind the scratch to the manager's live occupancy state,
+    /// reusing the existing map allocations.
+    pub fn reset(&mut self) {
+        self.glb.clone_from(&self.mgr.glb);
+        self.array.clone_from(&self.mgr.array);
+        self.active = self.mgr.regions.len();
+    }
+
+    /// What-if release of `id`'s slices on the scratch maps.  The
+    /// region table itself is untouched; releasing the same region
+    /// twice between resets is a caller bug (double-release asserts in
+    /// debug builds, like the underlying maps).
+    pub fn release(&mut self, id: RegionId) -> Result<()> {
+        let region = self
+            .mgr
+            .region(id)
+            .ok_or_else(|| Error::Alloc(format!("probe release of unknown region {id}")))?;
+        for r in coalesce(&region.glb) {
+            self.glb.release(&r);
+        }
+        for r in coalesce(&region.array) {
+            self.array.release(&r);
+        }
+        self.active -= 1;
+        Ok(())
+    }
+
+    /// [`RegionManager::can_fit_now`] evaluated against the scratch
+    /// state.
+    pub fn can_fit_now(&self, demand: &SliceDemand) -> bool {
+        self.mgr.fits_on(&self.glb, &self.array, self.active == 0, demand)
+    }
+}
+
 /// Free slices of `map` lying in free runs of at least `min_run`.
+/// Reads the incrementally maintained run index — this walk happens
+/// once per event when energy accounting is on, so it must not allocate.
 fn gated_count(map: &SliceMap, min_run: u32) -> u32 {
-    map.free_runs()
+    map.free_runs_ref()
         .iter()
         .filter(|r| r.len >= min_run)
         .map(|r| r.len)
@@ -475,7 +548,7 @@ fn gated_count(map: &SliceMap, min_run: u32) -> u32 {
 /// at least `min_run`) — what an allocation over them must wake.
 fn gated_overlap(map: &SliceMap, ranges: &[SliceRange], min_run: u32) -> u32 {
     let mut woken = 0;
-    for run in map.free_runs() {
+    for run in map.free_runs_ref().iter().copied() {
         if run.len < min_run {
             continue;
         }

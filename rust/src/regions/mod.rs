@@ -25,5 +25,5 @@
 mod allocator;
 mod region;
 
-pub use allocator::{AllocOutcome, RegionManager};
+pub use allocator::{AllocOutcome, FitProbe, RegionManager};
 pub use region::{ExecutionRegion, RegionId};

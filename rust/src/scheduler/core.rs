@@ -52,7 +52,7 @@ pub struct Launch {
 }
 
 /// A variant option considered by the policy, with effective throughput.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 struct Option_ {
     ver: VariantId,
     eff_throughput: f64,
@@ -60,6 +60,19 @@ struct Option_ {
     replicate: u32,
     /// Fall back to exclusive whole-machine allocation.
     exclusive: bool,
+}
+
+/// What draining one queued completion event resolved to
+/// ([`Scheduler::drain_completion`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompletionOutcome {
+    /// The event was invalidated by a preemption; drop it.
+    Cancelled,
+    /// A migration pushed the finish out past the event's cycle;
+    /// re-queue at the carried authoritative finish.
+    Stale(u64),
+    /// The task genuinely finished: region freed, instance returned.
+    Done(TaskInstanceId),
 }
 
 /// Attempt outcome of placing one ready task.
@@ -125,6 +138,11 @@ pub struct Scheduler {
     rr_cursor: u32,
     /// pre-generated bitstreams per (task, variant).
     bitstreams: BTreeMap<BitstreamId, Bitstream>,
+    /// Variant options per task in policy preference order, precomputed
+    /// at construction — every input ([`TaskLibrary`] demands and
+    /// throughputs, mechanism geometry, energy model) is config-time
+    /// constant, so the per-launch enumeration + sort is paid once.
+    options: BTreeMap<TaskId, Vec<Option_>>,
     /// Defragmentation planner (off unless `scheduler.defrag_policy`).
     planner: DefragPlanner,
     /// Migration cycle pricing.
@@ -175,7 +193,7 @@ impl Scheduler {
                 bitstreams.insert(bs.id.clone(), bs);
             }
         }
-        Scheduler {
+        let mut sched = Scheduler {
             lib,
             mgr,
             dpr,
@@ -184,6 +202,7 @@ impl Scheduler {
             running: BTreeMap::new(),
             rr_cursor: 0,
             bitstreams,
+            options: BTreeMap::new(),
             planner: DefragPlanner::new(&cfg.scheduler),
             cost_model: MigrationCostModel::new(&cfg.arch, cfg.scheduler.migration_cost_model),
             mig_stats: MigrationStats::default(),
@@ -200,7 +219,13 @@ impl Scheduler {
             qos_stats: QosStats::default(),
             preempt_log: Vec::new(),
             pending_preempt_cycles: 0,
+        };
+        let ids: Vec<TaskId> = sched.lib.iter().map(|t| t.id.clone()).collect();
+        for id in ids {
+            let opts = sched.options_for(&id);
+            sched.options.insert(id, opts);
         }
+        sched
     }
 
     /// Task library in use.
@@ -299,12 +324,21 @@ impl Scheduler {
     /// Called on arrival and completion events.
     pub fn schedule(&mut self, queue: &mut RequestQueue, now: u64) -> Vec<Launch> {
         self.advance_energy(now);
+        // Empty-frontier fast path: nothing to order or place.  The
+        // fair-share cursor still advances exactly as on the slow path,
+        // so the rotation phase is independent of backlog shape.
+        if queue.ready_count() == 0 {
+            if self.policy == SchedulerPolicyKind::FairShare {
+                self.rr_cursor = self.rr_cursor.wrapping_add(1);
+            }
+            return Vec::new();
+        }
         // Single pass: no completions happen inside a step, so resource
         // availability only shrinks — a task that failed to place cannot
         // succeed later in the same step, and tasks are independent.
         // (§Perf L3: a rescan-after-every-launch variant was O(ready²)
         // and dominated heavy-backlog simulations.)
-        let ready = self.order_ready(queue.ready_tasks(), now);
+        let ready = self.order_ready(queue.ready_tasks(), queue.tenant_span(), now);
         let mut launches = Vec::new();
         for rt in ready {
             match self.try_launch(&rt, now) {
@@ -352,6 +386,26 @@ impl Scheduler {
             self.rr_cursor = self.rr_cursor.wrapping_add(1);
         }
         launches
+    }
+
+    /// Drain one queued completion event for `region` in a single pass:
+    /// consume a pending cancellation marker, re-validate the event
+    /// against the authoritative finish cycle (migrations push
+    /// completions out after their events were queued), and only then
+    /// commit the completion.  One scheduler entry point instead of the
+    /// `take_cancelled` → [`Scheduler::finish_of`] →
+    /// [`Scheduler::complete`] triple every driver used to chain —
+    /// same observable outcomes, one lookup walk.
+    pub fn drain_completion(&mut self, region: RegionId, now: u64) -> Result<CompletionOutcome> {
+        if self.cancelled.remove(&region) {
+            return Ok(CompletionOutcome::Cancelled);
+        }
+        if let Some(rt) = self.running.get(&region) {
+            if rt.finish > now {
+                return Ok(CompletionOutcome::Stale(rt.finish));
+            }
+        }
+        self.complete(region, now).map(CompletionOutcome::Done)
     }
 
     /// Handle a task completion at cycle `now`: free its region (energy
@@ -474,9 +528,10 @@ impl Scheduler {
             AllocOutcome::NeverFits => return Attempt::Impossible,
         };
         let bs_id = BitstreamId::new(ck.task.0.clone(), ck.ver.0);
-        let bs = self.bitstreams.get(&bs_id).expect("pre-generated").clone();
+        let bs = self.bitstreams.get(&bs_id).expect("pre-generated");
         let dest = region.array.first().copied().unwrap_or(SliceRange::empty());
-        let dpr_out = self.dpr.reconfigure(&bs, &dest);
+        let dpr_out = self.dpr.reconfigure(bs, &dest);
+        let bs_words = bs.words;
         let restore = self.cost_model.resume_extra_cycles();
         let woken = region.woken();
         let wake = if woken.0 + woken.1 > 0 { self.wake_cycles } else { 0 };
@@ -496,7 +551,7 @@ impl Scheduler {
             &region.footprint(),
             &ck.task.0,
             ck.tenant,
-            bs.words,
+            bs_words,
             dpr_out.cache_hit,
             woken,
         );
@@ -606,32 +661,40 @@ impl Scheduler {
         // many units are free (≥ 1), so freeing one copy's worth always
         // rescues the launch, and an exclusive option's oversized demand
         // simply never passes the probe (no victim is evicted for it).
+        // One reusable scratch probe serves every option's dry run —
+        // the selection never clones the region manager.
+        let mut probe = self.mgr.fit_probe();
+        let mut selected = None;
         for (_, demand) in options {
-            let Some(victims) = qos::select_victims(
-                &self.mgr,
+            if let Some(victims) = qos::select_victims(
+                &mut probe,
                 &candidates,
                 demand,
                 self.qos.max_victims as usize,
-            ) else {
-                continue;
-            };
-            // commit: checkpoint every victim; they quiesce in
-            // parallel, so the rescued launch waits out the longest
-            // checkpoint, not the sum
-            let mut pass_cycles = 0u64;
-            for region in victims {
-                match self.evict(region, rt, queue, now) {
-                    Ok(cycles) => pass_cycles = pass_cycles.max(cycles),
-                    Err(_) => {
-                        debug_assert!(false, "victim {region} was not evictable");
-                    }
+            ) {
+                selected = Some(victims);
+                break;
+            }
+        }
+        drop(probe);
+        let Some(victims) = selected else {
+            return false;
+        };
+        // commit: checkpoint every victim; they quiesce in
+        // parallel, so the rescued launch waits out the longest
+        // checkpoint, not the sum
+        let mut pass_cycles = 0u64;
+        for region in victims {
+            match self.evict(region, rt, queue, now) {
+                Ok(cycles) => pass_cycles = pass_cycles.max(cycles),
+                Err(_) => {
+                    debug_assert!(false, "victim {region} was not evictable");
                 }
             }
-            self.pending_preempt_cycles = pass_cycles;
-            self.qos_stats.preemptions += 1;
-            return true;
         }
-        false
+        self.pending_preempt_cycles = pass_cycles;
+        self.qos_stats.preemptions += 1;
+        true
     }
 
     /// Checkpoint one victim off `region`: stop its energy draw, charge
@@ -710,7 +773,7 @@ impl Scheduler {
     /// With the QoS subsystem enabled under its EDF policy, class order
     /// (strict), deadlines (EDF within class) and BestEffort aging take
     /// precedence over the base policy's ordering ([`crate::qos`]).
-    fn order_ready(&self, ready: Vec<ReadyTask>, now: u64) -> Vec<ReadyTask> {
+    fn order_ready(&self, ready: Vec<ReadyTask>, tenant_span: u32, now: u64) -> Vec<ReadyTask> {
         if self.qos.enabled && self.qos.policy == QosPolicyKind::Edf {
             return qos::order_ready(ready, now, self.qos.aging_cycles);
         }
@@ -721,9 +784,13 @@ impl Scheduler {
             | SchedulerPolicyKind::FcfsFirstFit
             | SchedulerPolicyKind::EnergyAware => ready,
             SchedulerPolicyKind::FairShare => {
-                // rotate tenants so each gets the head slot in turn
-                let cursor = self.rr_cursor % 4;
-                ready.sort_by_key(|r| ((r.tenant + 4 - cursor) % 4, r.instance));
+                // rotate tenants so each gets the head slot in turn.
+                // The modulus is the submitted tenant-id span, derived
+                // from the queue — a hard-coded `% 4` made any 5th
+                // tenant alias onto tenant 0's rotation slot.
+                let n = tenant_span.max(1);
+                let cursor = self.rr_cursor % n;
+                ready.sort_by_key(|r| ((r.tenant % n + n - cursor) % n, r.instance));
                 ready
             }
             SchedulerPolicyKind::ShortestJobFirst => {
@@ -828,12 +895,14 @@ impl Scheduler {
             SchedulerPolicyKind::GreedyThroughput
             | SchedulerPolicyKind::FairShare
             | SchedulerPolicyKind::ShortestJobFirst => {
-                // paper: highest throughput first
-                opts.sort_by(|a, b| b.eff_throughput.partial_cmp(&a.eff_throughput).unwrap());
+                // paper: highest throughput first.  `total_cmp` keeps the
+                // sort total even for NaN throughputs (a degenerate
+                // zero-work variant used to panic `partial_cmp`'s unwrap).
+                opts.sort_by(|a, b| b.eff_throughput.total_cmp(&a.eff_throughput));
             }
             SchedulerPolicyKind::FcfsFirstFit => {
                 // smallest footprint first (ascending throughput proxy)
-                opts.sort_by(|a, b| a.eff_throughput.partial_cmp(&b.eff_throughput).unwrap());
+                opts.sort_by(|a, b| a.eff_throughput.total_cmp(&b.eff_throughput));
             }
             SchedulerPolicyKind::EnergyAware => {
                 // minimal energy-delay product first: EDP(v) = P(v)·t(v)²
@@ -868,7 +937,12 @@ impl Scheduler {
         if let Some(ck) = self.checkpoints.get(&rt.instance).cloned() {
             return self.try_resume(rt, &ck, now);
         }
-        let options = self.options_for(&rt.task);
+        // cached preference order (`Option_` is `Copy`: the clone is a
+        // flat memcpy, not a re-enumeration + sort per attempt)
+        let options = match self.options.get(&rt.task) {
+            Some(opts) => opts.clone(),
+            None => self.options_for(&rt.task),
+        };
         let mut blocked: Vec<(VariantId, SliceDemand)> = Vec::new();
         for opt in options {
             let spec = self.lib.get(&rt.task).expect("options imply spec");
@@ -903,11 +977,14 @@ impl Scheduler {
                 AllocOutcome::NeverFits => continue,
             };
 
-            // DPR: stream the variant's bitstream into the region.
+            // DPR: stream the variant's bitstream into the region
+            // (borrowed in place — the bitstream table and the DPR
+            // engine are disjoint fields, so no per-launch clone).
             let bs_id = BitstreamId::new(rt.task.0.clone(), opt.ver.0);
-            let bs = self.bitstreams.get(&bs_id).expect("pre-generated").clone();
+            let bs = self.bitstreams.get(&bs_id).expect("pre-generated");
             let dest = region.array.first().copied().unwrap_or(SliceRange::empty());
-            let dpr_out = self.dpr.reconfigure(&bs, &dest);
+            let dpr_out = self.dpr.reconfigure(bs, &dest);
+            let bs_words = bs.words;
 
             let replicas = region.replicas.max(1);
             let eff_tpt = variant.throughput * replicas as f64;
@@ -931,7 +1008,7 @@ impl Scheduler {
                 &region.footprint(),
                 &rt.task.0,
                 rt.tenant,
-                bs.words,
+                bs_words,
                 dpr_out.cache_hit,
                 woken,
             );
@@ -1611,6 +1688,200 @@ mod tests {
         assert_eq!(s.lower_class_runway(QosClass::BestEffort, 0), 0);
         // past the finish the runway saturates to zero
         assert_eq!(s.lower_class_runway(QosClass::Critical, l[0].finish + 1), 0);
+    }
+
+    // ------------------------------------------- frontier ordering + sorts
+
+    #[test]
+    fn fair_share_derives_rotation_modulus_from_tenant_span() {
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.scheduler.policy = SchedulerPolicyKind::FairShare;
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        let mut q = RequestQueue::new();
+        for t in 0..5u32 {
+            submit(&mut q, t as u64, t, AppId::Harris, 0);
+        }
+        assert_eq!(q.tenant_span(), 5);
+        let order = |s: &Scheduler, q: &RequestQueue| -> Vec<u32> {
+            s.order_ready(q.ready_tasks(), q.tenant_span(), 0)
+                .iter()
+                .map(|r| r.tenant)
+                .collect()
+        };
+        // cursor 0: plain tenant order
+        assert_eq!(order(&s, &q), vec![0, 1, 2, 3, 4]);
+        // Regression: after four rotation steps tenant 4 must win the
+        // head slot.  The old hard-coded `% 4` modulus aliased tenant 4
+        // onto tenant 0's slot, so it could never lead the frontier.
+        s.rr_cursor = 4;
+        assert_eq!(order(&s, &q), vec![4, 0, 1, 2, 3]);
+        // the rotation is periodic in the derived span, not in 4
+        s.rr_cursor = 9;
+        assert_eq!(order(&s, &q), vec![4, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn fair_share_five_tenants_all_reach_the_head_slot() {
+        // End-to-end slice of the same regression: five tenants keep the
+        // frontier saturated; every tenant must get launches, because
+        // every tenant periodically holds the head slot.
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.scheduler.policy = SchedulerPolicyKind::FairShare;
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        let mut seq = 0u64;
+        for round in 0..5u64 {
+            for t in 0..5u32 {
+                submit(&mut q, seq, t, AppId::Harris, round * 10);
+                seq += 1;
+            }
+        }
+        let mut launched_tenants = std::collections::BTreeSet::new();
+        let mut now = 0u64;
+        let mut pending: Vec<Launch> = Vec::new();
+        for _ in 0..200 {
+            for l in s.schedule(&mut q, now) {
+                pending.push(l);
+            }
+            if q.ready_count() == 0 && pending.is_empty() {
+                break;
+            }
+            pending.sort_by_key(|l| l.finish);
+            if let Some(l) = pending.first().cloned() {
+                pending.remove(0);
+                now = l.finish;
+                let inst = s.complete(l.region, now).unwrap();
+                let rt_tenant = inst.request % 5;
+                launched_tenants.insert(rt_tenant as u32);
+                q.mark_complete(inst, now).unwrap();
+            }
+        }
+        assert_eq!(
+            launched_tenants.len(),
+            5,
+            "all five tenants must be served: {launched_tenants:?}"
+        );
+    }
+
+    #[test]
+    fn degenerate_variant_throughputs_never_panic_the_option_sort() {
+        // Regression: `partial_cmp(..).unwrap()` panicked on NaN
+        // throughputs; `total_cmp` keeps the sort total.  A zero-work /
+        // zero-throughput variant yields NaN and ±inf effective
+        // throughputs in derived quantities — construction (which
+        // precomputes every task's option order) must survive all of it.
+        use crate::tasks::{TaskSpec, VariantSpec, WorkUnit};
+        let mut lib = TaskLibrary::table1();
+        lib.insert(TaskSpec {
+            id: TaskId::new("degenerate.zero"),
+            name: "degenerate zero-cycle task".into(),
+            work: 0,
+            unit: WorkUnit::Macs,
+            variants: vec![
+                VariantSpec::new('a', f64::NAN, 2, 4),
+                VariantSpec::new('b', 1.0, 2, 4),
+                VariantSpec::new('c', 0.0, 2, 4),
+            ],
+        });
+        for policy in [
+            SchedulerPolicyKind::GreedyThroughput,
+            SchedulerPolicyKind::FcfsFirstFit,
+            SchedulerPolicyKind::FairShare,
+            SchedulerPolicyKind::ShortestJobFirst,
+        ] {
+            let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+            cfg.scheduler.policy = policy;
+            let s = Scheduler::new(&cfg, lib.clone(), DprMode::Fast);
+            let opts = &s.options[&TaskId::new("degenerate.zero")];
+            assert_eq!(opts.len(), 3, "{policy:?}");
+            // total_cmp is a total order: NaN sorts above +inf, which
+            // sorts above finite values — descending policies lead with
+            // the NaN variant, ascending (FCFS) ends with it.
+            match policy {
+                SchedulerPolicyKind::FcfsFirstFit => {
+                    assert!(opts[2].eff_throughput.is_nan(), "{policy:?}")
+                }
+                _ => assert!(opts[0].eff_throughput.is_nan(), "{policy:?}"),
+            }
+        }
+        // the ordinary Table 1 tasks are untouched by the degenerate spec
+        let cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        let mut s = Scheduler::new(&cfg, lib, DprMode::Fast);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        assert_eq!(s.schedule(&mut q, 0).len(), 1);
+    }
+
+    #[test]
+    fn precomputed_options_match_a_fresh_enumeration() {
+        // The cache is filled at construction; every task's cached order
+        // must be exactly what `options_for` would compute now.
+        for policy in RegionPolicyKind::ALL {
+            let s = sched(policy);
+            for t in s.lib.iter() {
+                let fresh = s.options_for(&t.id);
+                let cached = &s.options[&t.id];
+                assert_eq!(cached.len(), fresh.len(), "{policy:?} {}", t.id);
+                for (c, f) in cached.iter().zip(fresh.iter()) {
+                    assert_eq!(c.ver, f.ver, "{policy:?} {}", t.id);
+                    assert_eq!(c.replicate, f.replicate);
+                    assert_eq!(c.exclusive, f.exclusive);
+                    assert!(c.eff_throughput.total_cmp(&f.eff_throughput).is_eq());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drain_completion_resolves_all_three_outcomes() {
+        let mut s = sched(RegionPolicyKind::FlexibleShape);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        let l = s.schedule(&mut q, 0)[0].clone();
+        // early event: the task has not finished yet → Stale(finish)
+        assert_eq!(
+            s.drain_completion(l.region, l.finish - 1).unwrap(),
+            CompletionOutcome::Stale(l.finish)
+        );
+        // on-time event → Done(instance)
+        match s.drain_completion(l.region, l.finish).unwrap() {
+            CompletionOutcome::Done(inst) => {
+                assert_eq!(inst, l.instance);
+                q.mark_complete(inst, l.finish).unwrap();
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        // unknown region errors exactly like `complete`
+        assert!(s.drain_completion(RegionId(99), 0).is_err());
+    }
+
+    #[test]
+    fn drain_completion_consumes_cancellation_markers() {
+        let mut s = qos_sched(true);
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        let l1 = s.schedule(&mut q, 0);
+        let victim_region = l1[0].region;
+        q.submit(
+            AppRequest::new(1, 2, AppId::Camera, 10)
+                .with_qos(QosClass::Critical, Some(5_000_000)),
+        );
+        assert_eq!(s.schedule(&mut q, 10).len(), 1);
+        // the victim's stale completion event resolves Cancelled once…
+        assert_eq!(
+            s.drain_completion(victim_region, l1[0].finish).unwrap(),
+            CompletionOutcome::Cancelled
+        );
+        // …and the marker is consumed (the region now belongs to the
+        // preemptor, so a second drain is a Stale or Done for *it*, or
+        // an error if the id was never reused — never Cancelled again)
+        assert_ne!(
+            s.drain_completion(victim_region, 0).ok(),
+            Some(CompletionOutcome::Cancelled)
+        );
     }
 
     #[test]

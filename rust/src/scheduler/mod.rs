@@ -31,5 +31,5 @@
 mod core;
 mod queue;
 
-pub use core::{Launch, Scheduler};
+pub use core::{CompletionOutcome, Launch, Scheduler};
 pub use queue::{ReadyTask, RequestQueue};

@@ -35,6 +35,10 @@ pub struct RequestQueue {
     ready: BTreeMap<TaskInstanceId, u64>,
     /// instances currently running (launched, not complete).
     running: BTreeMap<TaskInstanceId, ()>,
+    /// One past the highest tenant id ever submitted (monotone) — the
+    /// fair-share rotation modulus is derived from this, not from a
+    /// hard-coded tenant count.
+    tenant_span: u32,
 }
 
 impl RequestQueue {
@@ -45,6 +49,7 @@ impl RequestQueue {
 
     /// Admit a request; its root task(s) become ready immediately.
     pub fn submit(&mut self, req: AppRequest) {
+        self.tenant_span = self.tenant_span.max(req.tenant + 1);
         let graph = AppGraph::of(req.app);
         for node in req.ready_nodes(&graph) {
             self.ready
@@ -77,6 +82,13 @@ impl RequestQueue {
     /// Number of ready (waiting) tasks.
     pub fn ready_count(&self) -> usize {
         self.ready.len()
+    }
+
+    /// One past the highest tenant id ever submitted (0 before any
+    /// submission).  Monotone over the queue's lifetime, so round-robin
+    /// rotations derived from it stay stable as requests drain.
+    pub fn tenant_span(&self) -> u32 {
+        self.tenant_span
     }
 
     /// Number of running tasks.

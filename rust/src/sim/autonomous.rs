@@ -16,7 +16,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{FrameLatency, LatencyBreakdown};
 use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
-use crate::scheduler::{RequestQueue, Scheduler};
+use crate::scheduler::{CompletionOutcome, RequestQueue, Scheduler};
 use crate::tasks::{AppId, AppRequest, TaskLibrary};
 use crate::util::rng::Rng;
 
@@ -152,7 +152,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
         match ev {
             Event::Frame(k) => {
                 let entry = frames.entry(k).or_insert((now, 0, 0, now));
-                trace.log(now, format!("frame k={k}"));
+                trace.log_with(now, || format!("frame k={k}"));
                 // camera pipeline runs every frame
                 queue.submit(AppRequest::new(seq, 2, AppId::Camera, now).with_qos(
                     cfg.qos.class_of_tenant(2),
@@ -160,7 +160,9 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                 ));
                 frame_of.insert(seq, k);
                 entry.1 += 1;
-                trace.log(now, format!("arrive seq={seq} frame={k} app={}", AppId::Camera.name()));
+                trace.log_with(now, || {
+                    format!("arrive seq={seq} frame={k} app={}", AppId::Camera.name())
+                });
                 seq += 1;
                 // event streams
                 for (i, app) in EVENT_APPS.iter().enumerate() {
@@ -171,7 +173,9 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                         ));
                         frame_of.insert(seq, k);
                         frames.get_mut(&k).expect("inserted").1 += 1;
-                        trace.log(now, format!("arrive seq={seq} frame={k} app={}", app.name()));
+                        trace.log_with(now, || {
+                            format!("arrive seq={seq} frame={k} app={}", app.name())
+                        });
                         seq += 1;
                         event_requests += 1;
                         let step = rng.range_inclusive(lo as u64, hi as u64) as u32;
@@ -183,19 +187,17 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                 }
             }
             Event::Completion(region) => {
-                // preempted: the region was released, the event is stale
-                if sched.take_cancelled(region) {
-                    continue;
-                }
-                // migrations push completions out; re-queue stale events
-                // at the scheduler's authoritative finish
-                if let Some(finish) = sched.finish_of(region) {
-                    if finish > now {
+                // Single-pass drain: consume a preemption's cancellation
+                // marker, re-queue migration-stale events at their
+                // authoritative finish, or commit the completion.
+                let inst = match sched.drain_completion(region, now)? {
+                    CompletionOutcome::Cancelled => continue,
+                    CompletionOutcome::Stale(finish) => {
                         events.push(finish, Event::Completion(region));
                         continue;
                     }
-                }
-                let inst = sched.complete(region, now)?;
+                    CompletionOutcome::Done(inst) => inst,
+                };
                 if let Some(done) = queue.mark_complete(inst, now)? {
                     if cfg.qos.enabled {
                         slo.record(SloRecord {
@@ -216,7 +218,9 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                         let (start, _, reconfig, last) = *entry;
                         frames.remove(&k);
                         let total = last - start;
-                        trace.log(now, format!("frame-done k={k} total={total} reconfig={reconfig}"));
+                        trace.log_with(now, || {
+                            format!("frame-done k={k} total={total} reconfig={reconfig}")
+                        });
                         latency.record(FrameLatency {
                             reconfig_cycles: reconfig.min(total),
                             wait_exec_cycles: total.saturating_sub(reconfig),
@@ -227,8 +231,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
         }
         let step_launches = sched.schedule(&mut queue, now);
         for p in sched.take_preemptions() {
-            trace.log(
-                now,
+            trace.log_with(now, || {
                 format!(
                     "preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
                     p.victim,
@@ -239,8 +242,8 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                     p.victim_region,
                     p.remaining_cycles,
                     p.checkpoint_cycles
-                ),
-            );
+                )
+            });
         }
         for launch in step_launches {
             if let Some(&k) = frame_of.get(&launch.instance.request) {
@@ -248,8 +251,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                     entry.2 += launch.dpr_cycles;
                 }
             }
-            trace.log(
-                now,
+            trace.log_with(now, || {
                 format!(
                     "launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
                     launch.instance,
@@ -259,8 +261,8 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                     launch.dpr_cycles,
                     launch.exec_cycles,
                     launch.finish
-                ),
-            );
+                )
+            });
             events.push(launch.finish, Event::Completion(launch.region));
         }
     }

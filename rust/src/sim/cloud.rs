@@ -16,7 +16,7 @@ use crate::metrics::{
 };
 use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
-use crate::scheduler::{RequestQueue, Scheduler};
+use crate::scheduler::{CompletionOutcome, RequestQueue, Scheduler};
 use crate::tasks::{AppGraph, AppId, AppRequest, TaskLibrary};
 use crate::util::rng::Rng;
 
@@ -168,7 +168,9 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
                     cfg.qos.deadline_of_tenant(t, now, cycles_per_ms),
                 ));
                 inflight.insert(seq, (tenant_app(t), now, 0));
-                trace.log(now, format!("arrive seq={seq} tenant={t} app={}", tenant_app(t).name()));
+                trace.log_with(now, || {
+                    format!("arrive seq={seq} tenant={t} app={}", tenant_app(t).name())
+                });
                 seq += 1;
                 submitted += 1;
                 // next arrival for this tenant, within the window
@@ -180,29 +182,26 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
                 }
             }
             Event::Completion(region) => {
-                // A preempted task's region was released and its event
-                // invalidated; the checkpointed instance resumes on a
-                // fresh region with its own completion event.
-                if sched.take_cancelled(region) {
-                    continue;
-                }
-                // Migrations push completions out after their events were
-                // queued: re-validate against the scheduler's
-                // authoritative finish and re-queue stale events.
-                if let Some(finish) = sched.finish_of(region) {
-                    if finish > now {
+                // Single-pass drain: consume a preemption's cancellation
+                // marker, re-queue migration-stale events at their
+                // authoritative finish, or commit the completion.
+                let inst = match sched.drain_completion(region, now)? {
+                    CompletionOutcome::Cancelled => continue,
+                    CompletionOutcome::Stale(finish) => {
                         events.push(finish, Event::Completion(region));
                         continue;
                     }
-                }
-                let inst = sched.complete(region, now)?;
+                    CompletionOutcome::Done(inst) => inst,
+                };
                 if let Some(done) = queue.mark_complete(inst, now)? {
                     let (app, arrival, exec) =
                         inflight.remove(&done.seq).ok_or_else(|| {
                             Error::SimInvariant(format!("request {} not inflight", done.seq))
                         })?;
                     completed += 1;
-                    trace.log(now, format!("done seq={} tenant={}", done.seq, done.tenant));
+                    trace.log_with(now, || {
+                        format!("done seq={} tenant={}", done.seq, done.tenant)
+                    });
                     if cfg.qos.enabled {
                         slo.record(SloRecord {
                             class: done.class,
@@ -230,8 +229,7 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
             if let Some(entry) = inflight.get_mut(&p.victim.request) {
                 entry.2 = entry.2.saturating_sub(p.remaining_cycles);
             }
-            trace.log(
-                now,
+            trace.log_with(now, || {
                 format!(
                     "preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
                     p.victim,
@@ -242,16 +240,15 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
                     p.victim_region,
                     p.remaining_cycles,
                     p.checkpoint_cycles
-                ),
-            );
+                )
+            });
         }
         for launch in step_launches {
             launches += 1;
             if let Some(entry) = inflight.get_mut(&launch.instance.request) {
                 entry.2 += launch.dpr_cycles + launch.exec_cycles;
             }
-            trace.log(
-                now,
+            trace.log_with(now, || {
                 format!(
                     "launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
                     launch.instance,
@@ -261,8 +258,8 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
                     launch.dpr_cycles,
                     launch.exec_cycles,
                     launch.finish
-                ),
-            );
+                )
+            });
             events.push(launch.finish, Event::Completion(launch.region));
         }
         // utilization/fragmentation are piecewise-constant between events

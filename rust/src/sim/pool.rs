@@ -19,7 +19,7 @@ use crate::config::{
 use crate::dpr::DprMode;
 use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
-use crate::fabric::{FabricPool, ShardId};
+use crate::fabric::{FabricPool, PoolCompletion, ShardId};
 use crate::metrics::{FrameLatency, LatencyBreakdown, NtatRecord, NtatTracker, UtilizationTracker};
 use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
@@ -257,17 +257,16 @@ pub fn run_cloud_pool_traced(
                     Some(shard) => {
                         inflight.insert(seq, (app, now, 0));
                         submitted += 1;
-                        trace.log(
-                            now,
+                        trace.log_with(now, || {
                             format!(
                                 "{}arrive seq={seq} tenant={t} app={}",
                                 shard_tag(&pool, shard),
                                 app.name()
-                            ),
-                        );
+                            )
+                        });
                     }
                     None => {
-                        trace.log(now, format!("busy seq={seq} tenant={t}"));
+                        trace.log_with(now, || format!("busy seq={seq} tenant={t}"));
                     }
                 }
                 seq += 1;
@@ -279,23 +278,24 @@ pub fn run_cloud_pool_traced(
                 }
             }
             CloudEvent::Completion(shard, region) => {
-                // preempted: the region was released, the event is stale
-                if pool.take_cancelled(shard, region) {
-                    continue;
-                }
-                // migrations push completions out; re-queue stale events
-                if let Some(finish) = pool.finish_of(shard, region) {
-                    if finish > now {
+                let done = match pool.drain_completion(shard, region, now)? {
+                    // preempted: the region was released, the event is stale
+                    PoolCompletion::Cancelled => continue,
+                    // migrations push completions out; re-queue stale events
+                    PoolCompletion::Stale(finish) => {
                         events.push(finish, CloudEvent::Completion(shard, region));
                         continue;
                     }
-                }
-                if let Some(done) = pool.complete(shard, region, now)? {
+                    PoolCompletion::Done(done) => done,
+                };
+                if let Some(done) = done {
                     let (app, arrival, exec) = inflight.remove(&done.seq).ok_or_else(|| {
                         Error::SimInvariant(format!("request {} not inflight", done.seq))
                     })?;
                     completed += 1;
-                    trace.log(now, format!("done seq={} tenant={}", done.seq, done.tenant));
+                    trace.log_with(now, || {
+                        format!("done seq={} tenant={}", done.seq, done.tenant)
+                    });
                     if cfg.qos.enabled {
                         slo.record(SloRecord {
                             class: done.class,
@@ -320,8 +320,7 @@ pub fn run_cloud_pool_traced(
             if let Some(entry) = inflight.get_mut(&p.victim.request) {
                 entry.2 = entry.2.saturating_sub(p.remaining_cycles);
             }
-            trace.log(
-                now,
+            trace.log_with(now, || {
                 format!(
                     "{}preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
                     shard_tag(&pool, shard),
@@ -333,16 +332,15 @@ pub fn run_cloud_pool_traced(
                     p.victim_region,
                     p.remaining_cycles,
                     p.checkpoint_cycles
-                ),
-            );
+                )
+            });
         }
         for (shard, launch) in step_launches {
             launches += 1;
             if let Some(entry) = inflight.get_mut(&launch.instance.request) {
                 entry.2 += launch.dpr_cycles + launch.exec_cycles;
             }
-            trace.log(
-                now,
+            trace.log_with(now, || {
                 format!(
                     "{}launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
                     shard_tag(&pool, shard),
@@ -353,8 +351,8 @@ pub fn run_cloud_pool_traced(
                     launch.dpr_cycles,
                     launch.exec_cycles,
                     launch.finish
-                ),
-            );
+                )
+            });
             events.push(launch.finish, CloudEvent::Completion(shard, launch.region));
         }
         let (busy_glb, busy_arr) = pool.busy_slices();
@@ -451,7 +449,7 @@ pub fn run_edge_pool_traced(
         match ev {
             EdgeEvent::Frame(k) => {
                 frames.entry(k).or_insert((now, 0, 0, now));
-                trace.log(now, format!("frame k={k}"));
+                trace.log_with(now, || format!("frame k={k}"));
                 // camera pipeline runs every frame, then the event streams
                 let mut arrivals: Vec<(u32, AppId)> = vec![(2, AppId::Camera)];
                 for (i, app) in EVENT_APPS.iter().enumerate() {
@@ -472,18 +470,17 @@ pub fn run_edge_pool_traced(
                         Some(shard) => {
                             frame_of.insert(seq, k);
                             frames.get_mut(&k).expect("inserted").1 += 1;
-                            trace.log(
-                                now,
+                            trace.log_with(now, || {
                                 format!(
                                     "{}arrive seq={seq} frame={k} app={}",
                                     shard_tag(&pool, shard),
                                     app.name()
-                                ),
-                            );
+                                )
+                            });
                         }
                         None => {
                             rejected_in_frame += 1;
-                            trace.log(now, format!("busy seq={seq} frame={k}"));
+                            trace.log_with(now, || format!("busy seq={seq} frame={k}"));
                         }
                     }
                     seq += 1;
@@ -495,7 +492,7 @@ pub fn run_edge_pool_traced(
                         // leaking it) and account the frame
                         frames.remove(&k);
                         rejected_frames += 1;
-                        trace.log(now, format!("frame-rejected k={k}"));
+                        trace.log_with(now, || format!("frame-rejected k={k}"));
                     } else {
                         // some tasks run: the frame completes, but its
                         // latency covers a degraded subset
@@ -507,17 +504,17 @@ pub fn run_edge_pool_traced(
                 }
             }
             EdgeEvent::Completion(shard, region) => {
-                // preempted: the region was released, the event is stale
-                if pool.take_cancelled(shard, region) {
-                    continue;
-                }
-                if let Some(finish) = pool.finish_of(shard, region) {
-                    if finish > now {
+                let done = match pool.drain_completion(shard, region, now)? {
+                    // preempted: the region was released, the event is stale
+                    PoolCompletion::Cancelled => continue,
+                    // migrations push completions out; re-queue stale events
+                    PoolCompletion::Stale(finish) => {
                         events.push(finish, EdgeEvent::Completion(shard, region));
                         continue;
                     }
-                }
-                if let Some(done) = pool.complete(shard, region, now)? {
+                    PoolCompletion::Done(done) => done,
+                };
+                if let Some(done) = done {
                     if cfg.qos.enabled {
                         slo.record(SloRecord {
                             class: done.class,
@@ -536,10 +533,9 @@ pub fn run_edge_pool_traced(
                         let (start, _, reconfig, last) = *entry;
                         frames.remove(&k);
                         let total = last - start;
-                        trace.log(
-                            now,
-                            format!("frame-done k={k} total={total} reconfig={reconfig}"),
-                        );
+                        trace.log_with(now, || {
+                            format!("frame-done k={k} total={total} reconfig={reconfig}")
+                        });
                         latency.record(FrameLatency {
                             reconfig_cycles: reconfig.min(total),
                             wait_exec_cycles: total.saturating_sub(reconfig),
@@ -550,8 +546,7 @@ pub fn run_edge_pool_traced(
         }
         let step_launches = pool.schedule(now);
         for (shard, p) in pool.take_preemptions() {
-            trace.log(
-                now,
+            trace.log_with(now, || {
                 format!(
                     "{}preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
                     shard_tag(&pool, shard),
@@ -563,8 +558,8 @@ pub fn run_edge_pool_traced(
                     p.victim_region,
                     p.remaining_cycles,
                     p.checkpoint_cycles
-                ),
-            );
+                )
+            });
         }
         for (shard, launch) in step_launches {
             if let Some(&k) = frame_of.get(&launch.instance.request) {
@@ -572,8 +567,7 @@ pub fn run_edge_pool_traced(
                     entry.2 += launch.dpr_cycles;
                 }
             }
-            trace.log(
-                now,
+            trace.log_with(now, || {
                 format!(
                     "{}launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
                     shard_tag(&pool, shard),
@@ -584,8 +578,8 @@ pub fn run_edge_pool_traced(
                     launch.dpr_cycles,
                     launch.exec_cycles,
                     launch.finish
-                ),
-            );
+                )
+            });
             events.push(launch.finish, EdgeEvent::Completion(shard, launch.region));
         }
     }

@@ -32,6 +32,14 @@ impl Trace {
         Trace::new(0)
     }
 
+    /// Whether the trace retains anything at all.  Hot simulation loops
+    /// consult this (or use [`Trace::log_with`]) so disabled traces pay
+    /// neither the `format!` nor the call.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
     /// Record an event.
     pub fn log(&mut self, at: Cycle, what: impl Into<String>) {
         if self.cap == 0 {
@@ -43,6 +51,23 @@ impl Trace {
             self.dropped += 1;
         }
         self.events.push_back(TraceEvent { at, what: what.into() });
+    }
+
+    /// Record an event, rendering the message lazily: `what` runs only
+    /// when the trace is enabled, so a [`Trace::disabled`] trace (the
+    /// bench configuration) skips the string formatting entirely.
+    /// Unlike [`Trace::log`], a disabled trace does not count the event
+    /// as dropped — it was never materialized.
+    #[inline]
+    pub fn log_with<F, S>(&mut self, at: Cycle, what: F)
+    where
+        F: FnOnce() -> S,
+        S: Into<String>,
+    {
+        if self.cap == 0 {
+            return;
+        }
+        self.log(at, what());
     }
 
     /// Retained events, oldest first.
@@ -90,6 +115,32 @@ mod tests {
         t.log(1, "x");
         assert_eq!(t.events().count(), 0);
         assert_eq!(t.dropped(), 1);
+    }
+
+    #[test]
+    fn log_with_skips_closure_when_disabled() {
+        let mut t = Trace::disabled();
+        assert!(!t.enabled());
+        let mut calls = 0u32;
+        t.log_with(1, || {
+            calls += 1;
+            "x"
+        });
+        assert_eq!(calls, 0, "closure must not run on a disabled trace");
+        assert_eq!(t.events().count(), 0);
+        assert_eq!(t.dropped(), 0, "never-materialized events are not dropped");
+    }
+
+    #[test]
+    fn log_with_logs_normally_when_enabled() {
+        let mut t = Trace::new(2);
+        assert!(t.enabled());
+        t.log_with(1, || format!("a{}", 1));
+        t.log_with(2, || "b");
+        t.log_with(3, || "c");
+        let got: Vec<&str> = t.events().map(|e| e.what.as_str()).collect();
+        assert_eq!(got, vec!["b", "c"]);
+        assert_eq!(t.dropped(), 1, "ring overflow still counts as dropped");
     }
 
     #[test]

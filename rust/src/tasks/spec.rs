@@ -71,11 +71,12 @@ impl TaskSpec {
         self.variants.iter().find(|v| v.ver == ver)
     }
 
-    /// Highest-throughput variant.
+    /// Highest-throughput variant.  `total_cmp` keeps the selection
+    /// total (and panic-free) even for degenerate NaN throughputs.
     pub fn fastest(&self) -> &VariantSpec {
         self.variants
             .iter()
-            .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+            .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
             .expect("task with no variants")
     }
 

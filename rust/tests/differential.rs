@@ -1,0 +1,334 @@
+//! Differential-equivalence harness: the hot-path overhaul (binary-heap
+//! event queue, incremental free-run index, reusable fit-probe scratch,
+//! single-pass completion draining) must not change a single observable
+//! byte of any simulation.
+//!
+//! Every preset scenario plus 24 randomized seeded configurations runs
+//! under the full traced pipeline; the event trace and the `{:?}` report
+//! rendering are digested (FNV-1a 64) and compared against the
+//! checked-in goldens in `tests/goldens/differential.txt`.  Each
+//! scenario additionally runs twice in-process and must be
+//! byte-identical with itself — the same-seed contract that holds with
+//! or without goldens.
+//!
+//! Goldens bootstrap: when the goldens file does not exist yet, the
+//! harness writes it and passes — from then on any behavioural drift
+//! fails the suite.  `UPDATE_GOLDENS=1 cargo test --test differential`
+//! regenerates it after an *intended* observable change (review the diff
+//! of the goldens file like code).
+//!
+//! FairShare scheduling is deliberately absent here: PR 6 fixed its
+//! hard-coded 4-tenant rotation modulus (now derived from the live
+//! tenant span), an intended behavioural change whose new ordering is
+//! pinned by `scheduler/core.rs` unit tests instead.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+
+use cgra_mte::config::{
+    presets, Config, DefragPolicyKind, PlacementPolicyKind, RegionPolicyKind,
+    SchedulerPolicyKind, WorkloadConfig,
+};
+use cgra_mte::sim::{
+    run_cloud_pool_traced, run_cloud_traced, run_edge_pool_traced, run_edge_traced, Trace,
+};
+use cgra_mte::tasks::TaskLibrary;
+
+/// FNV-1a 64-bit — tiny, dependency-free, stable across platforms.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Which traced runner drives a scenario.
+#[derive(Clone, Copy)]
+enum Runner {
+    Cloud,
+    CloudPool,
+    Edge,
+    EdgePool,
+}
+
+struct Case {
+    name: String,
+    digest: u64,
+    events: usize,
+}
+
+/// Raw cycle-stamped trace lines — byte-exact, no ms rounding.
+fn render(trace: &Trace) -> String {
+    trace.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+}
+
+/// Run `cfg` under `runner` with a fresh trace; return (trace, report).
+fn run_once(cfg: &Config, runner: Runner) -> (String, String) {
+    let mut t = Trace::new(1 << 20);
+    let report = match runner {
+        Runner::Cloud => {
+            format!("{:?}", run_cloud_traced(cfg, TaskLibrary::table1(), &mut t).unwrap())
+        }
+        Runner::CloudPool => {
+            format!("{:?}", run_cloud_pool_traced(cfg, TaskLibrary::table1(), &mut t).unwrap())
+        }
+        Runner::Edge => {
+            format!("{:?}", run_edge_traced(cfg, TaskLibrary::table1(), &mut t).unwrap())
+        }
+        Runner::EdgePool => {
+            format!("{:?}", run_edge_pool_traced(cfg, TaskLibrary::table1(), &mut t).unwrap())
+        }
+    };
+    (render(&t), report)
+}
+
+/// Run twice, assert in-process byte-identity, digest the first run.
+fn run_case(name: &str, cfg: &Config, runner: Runner) -> Case {
+    let (trace1, report1) = run_once(cfg, runner);
+    let (trace2, report2) = run_once(cfg, runner);
+    assert_eq!(trace1, trace2, "{name}: same-seed traces diverged in-process");
+    assert_eq!(report1, report2, "{name}: same-seed reports diverged in-process");
+    assert!(!trace1.is_empty(), "{name}: trace must not be empty");
+    let events = trace1.lines().count();
+    let mut blob = trace1;
+    blob.push('\u{1e}'); // record separator between trace and report
+    blob.push_str(&report1);
+    Case { name: name.to_string(), digest: fnv1a(blob.as_bytes()), events }
+}
+
+fn short_cloud(cfg: &mut Config, duration_ms: f64) {
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+    }
+}
+
+fn reseed_cloud(cfg: &mut Config, seed: u64) {
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.seed = seed;
+    }
+}
+
+fn short_edge(cfg: &mut Config, frames: u32) {
+    if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+        e.frames = frames;
+    }
+}
+
+fn reseed_edge(cfg: &mut Config, seed: u64) {
+    if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+        e.seed = seed;
+    }
+}
+
+/// All fixed preset scenarios (FairShare excluded, see module docs).
+fn preset_cases() -> Vec<Case> {
+    let mut cases = Vec::new();
+
+    for policy in RegionPolicyKind::ALL {
+        let mut cfg = presets::cloud_scenario(policy);
+        short_cloud(&mut cfg, 400.0);
+        cases.push(run_case(&format!("cloud/{policy:?}"), &cfg, Runner::Cloud));
+    }
+    for sched in [SchedulerPolicyKind::FcfsFirstFit, SchedulerPolicyKind::ShortestJobFirst] {
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.scheduler.policy = sched;
+        short_cloud(&mut cfg, 400.0);
+        cases.push(run_case(&format!("cloud/{sched:?}"), &cfg, Runner::Cloud));
+    }
+    for defrag in DefragPolicyKind::ALL {
+        let mut cfg = presets::churn_scenario(RegionPolicyKind::FlexibleShape, defrag);
+        short_cloud(&mut cfg, 800.0);
+        cases.push(run_case(&format!("churn/{defrag:?}"), &cfg, Runner::Cloud));
+    }
+
+    let mut edge = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+    short_edge(&mut edge, 150);
+    cases.push(run_case("edge/FlexibleShape", &edge, Runner::Edge));
+    let mut edge_churn =
+        presets::edge_churn_scenario(RegionPolicyKind::FlexibleShape, DefragPolicyKind::Greedy);
+    short_edge(&mut edge_churn, 150);
+    cases.push(run_case("edge/churn-Greedy", &edge_churn, Runner::Edge));
+
+    let mut energy = presets::energy_scenario();
+    short_cloud(&mut energy, 400.0);
+    cases.push(run_case("energy/accounting", &energy, Runner::Cloud));
+    let mut capped = presets::energy_cap_scenario(2.5);
+    short_cloud(&mut capped, 400.0);
+    cases.push(run_case("energy/cap-2.5w", &capped, Runner::Cloud));
+
+    for preemptive in [true, false] {
+        let mut cfg = presets::mixed_criticality_scenario(preemptive);
+        short_cloud(&mut cfg, 600.0);
+        let tag = if preemptive { "edf" } else { "fifo" };
+        cases.push(run_case(&format!("qos/{tag}"), &cfg, Runner::Cloud));
+    }
+
+    let mut one = presets::pool_scenario(1, PlacementPolicyKind::LeastLoaded);
+    short_cloud(&mut one, 400.0);
+    cases.push(run_case("pool/1-shard", &one, Runner::CloudPool));
+    for placement in PlacementPolicyKind::ALL {
+        let mut cfg = presets::pool_scenario(2, placement);
+        short_cloud(&mut cfg, 400.0);
+        cases.push(run_case(&format!("pool/2-{placement:?}"), &cfg, Runner::CloudPool));
+    }
+    let mut epool = presets::energy_pool_scenario(2, PlacementPolicyKind::LeastLoaded);
+    short_cloud(&mut epool, 400.0);
+    cases.push(run_case("pool/2-energy", &epool, Runner::CloudPool));
+    let mut edge_pool = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+    edge_pool.pool.shards = 2;
+    short_edge(&mut edge_pool, 120);
+    cases.push(run_case("pool/edge-2", &edge_pool, Runner::EdgePool));
+
+    cases
+}
+
+/// Deterministic splitmix64 over the trace index — no ambient entropy,
+/// so the randomized fleet is identical on every run of the harness.
+struct Mix(u64);
+
+impl Mix {
+    fn new(i: u64) -> Self {
+        Mix(0x9e3779b97f4a7c15u64.wrapping_mul(i.wrapping_add(1)))
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    fn pick(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// 24 randomized seeded configurations spanning every runner family,
+/// region mechanism, (non-FairShare) scheduler policy and defrag knob.
+fn randomized_cases() -> Vec<Case> {
+    let scheds = [
+        SchedulerPolicyKind::GreedyThroughput,
+        SchedulerPolicyKind::FcfsFirstFit,
+        SchedulerPolicyKind::ShortestJobFirst,
+    ];
+    let mut cases = Vec::new();
+    for i in 0..24u64 {
+        let mut mx = Mix::new(i);
+        let seed = mx.next() | 1;
+        let case = match i % 4 {
+            0 => {
+                let region = RegionPolicyKind::ALL[mx.pick(4) as usize];
+                let sched = scheds[mx.pick(3) as usize];
+                let mut cfg = presets::cloud_scenario(region);
+                cfg.scheduler.policy = sched;
+                short_cloud(&mut cfg, 200.0 + mx.pick(4) as f64 * 100.0);
+                reseed_cloud(&mut cfg, seed);
+                run_case(&format!("rand/{i:02}-cloud"), &cfg, Runner::Cloud)
+            }
+            1 => {
+                let defrag = DefragPolicyKind::ALL[mx.pick(3) as usize];
+                let mut cfg =
+                    presets::churn_scenario(RegionPolicyKind::FlexibleShape, defrag);
+                short_cloud(&mut cfg, 400.0 + mx.pick(3) as f64 * 200.0);
+                reseed_cloud(&mut cfg, seed);
+                run_case(&format!("rand/{i:02}-churn"), &cfg, Runner::Cloud)
+            }
+            2 => {
+                let placement = PlacementPolicyKind::ALL[mx.pick(4) as usize];
+                let shards = 1 + mx.pick(3) as u32;
+                let mut cfg = presets::pool_scenario(shards, placement);
+                short_cloud(&mut cfg, 200.0 + mx.pick(3) as f64 * 100.0);
+                reseed_cloud(&mut cfg, seed);
+                run_case(&format!("rand/{i:02}-pool"), &cfg, Runner::CloudPool)
+            }
+            _ => {
+                let region = RegionPolicyKind::ALL[mx.pick(4) as usize];
+                let mut cfg = presets::edge_scenario(region);
+                short_edge(&mut cfg, 80 + mx.pick(5) as u32 * 20);
+                reseed_edge(&mut cfg, seed);
+                run_case(&format!("rand/{i:02}-edge"), &cfg, Runner::Edge)
+            }
+        };
+        cases.push(case);
+    }
+    cases
+}
+
+fn goldens_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens/differential.txt")
+}
+
+fn render_goldens(cases: &[Case]) -> String {
+    let mut out = String::new();
+    for c in cases {
+        writeln!(out, "{} {:016x} {}", c.name, c.digest, c.events).unwrap();
+    }
+    out
+}
+
+/// One test drives every scenario: a single writer for the goldens file
+/// (test binaries run `#[test]` fns concurrently) and one canonical
+/// ordering for its lines.
+#[test]
+fn all_scenarios_match_goldens() {
+    let mut cases = preset_cases();
+    cases.extend(randomized_cases());
+    let rendered = render_goldens(&cases);
+    let path = goldens_path();
+
+    let update = std::env::var("UPDATE_GOLDENS").map_or(false, |v| v == "1");
+    let previous = fs::read_to_string(&path).ok();
+    match previous {
+        Some(prev) if !update => {
+            if prev == rendered {
+                return;
+            }
+            // per-scenario diagnostics before failing
+            let old: BTreeMap<&str, &str> = prev
+                .lines()
+                .filter_map(|l| l.split_once(' '))
+                .collect();
+            let mut msg = String::from("differential goldens mismatch:\n");
+            for c in &cases {
+                let line = format!("{:016x} {}", c.digest, c.events);
+                match old.get(c.name.as_str()) {
+                    None => writeln!(msg, "  {}: missing from goldens (new scenario?)", c.name)
+                        .unwrap(),
+                    Some(&prev_line) if prev_line != line => writeln!(
+                        msg,
+                        "  {}: trace/report diverged (golden {prev_line}, got {line})",
+                        c.name
+                    )
+                    .unwrap(),
+                    Some(_) => {}
+                }
+            }
+            for name in old.keys() {
+                if !cases.iter().any(|c| c.name == *name) {
+                    writeln!(msg, "  {name}: golden has no matching scenario").unwrap();
+                }
+            }
+            msg.push_str(
+                "byte-identity broken — if the observable change is intended, regenerate \
+                 with UPDATE_GOLDENS=1 and review the goldens diff",
+            );
+            panic!("{msg}");
+        }
+        _ => {
+            // bootstrap (first run) or explicit regeneration
+            fs::create_dir_all(path.parent().unwrap()).expect("create goldens dir");
+            fs::write(&path, &rendered).expect("write goldens");
+            eprintln!(
+                "differential: {} goldens for {} scenarios at {}",
+                if update { "regenerated" } else { "bootstrapped" },
+                cases.len(),
+                path.display()
+            );
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Property tests for the simulator hot-path data structures.
+//!
+//! The throughput overhaul replaced linear scans with incrementally
+//! maintained structures; these properties pin the structures to their
+//! simple oracles under arbitrary random interleavings:
+//!
+//! * the binary-heap [`EventQueue`] must pop in `(time, insertion
+//!   order)` — FIFO among simultaneous events — for any push/pop mix;
+//! * the [`SliceMap`] free-run index (updated in place on every
+//!   occupy/release) must equal a from-scratch recompute over the
+//!   authoritative busy bitmap after every operation;
+//! * the [`RegionManager`]'s read-only fit predicate (shared with the
+//!   reusable [`cgra_mte::regions::FitProbe`] scratch) must agree with
+//!   both a fresh probe and the actual allocation outcome across random
+//!   allocate/release/relocate sequences.
+
+use cgra_mte::abstraction::{SliceDemand, SliceMap, SliceRange};
+use cgra_mte::config::{ArchConfig, RegionPolicyKind, SchedulerConfig};
+use cgra_mte::regions::{AllocOutcome, ExecutionRegion, RegionManager};
+use cgra_mte::sim::EventQueue;
+use cgra_mte::testutil::{forall_cfg, PropConfig};
+use cgra_mte::util::rng::Rng;
+
+// ---------------------------------------------------------- event queue
+
+/// Random op stream: `(dt, pop)` — push at `now + dt` (small deltas make
+/// ties common), or pop when `pop` is set.
+fn eq_ops(rng: &mut Rng, size: u32) -> Vec<(u64, bool)> {
+    let len = 4 + rng.below(size as u64 * 4 + 1) as usize;
+    (0..len).map(|_| (rng.below(4), rng.chance(0.35))).collect()
+}
+
+#[test]
+fn event_queue_pops_in_time_then_insertion_order() {
+    forall_cfg(PropConfig { cases: 96, seed: 0x51AFE7, max_size: 48 }, &eq_ops, |ops| {
+        let mut q = EventQueue::new();
+        // oracle: pending (at, seq, id) triples; pop order is min (at, seq)
+        let mut model: Vec<(u64, u64, u64)> = Vec::new();
+        let mut seq = 0u64;
+        for &(dt, pop) in ops {
+            if pop && !model.is_empty() {
+                let k = model
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, m)| (m.0, m.1))
+                    .map(|(i, _)| i)
+                    .expect("non-empty model");
+                let (at, _, id) = model.remove(k);
+                if q.pop() != Some((at, id)) {
+                    return false;
+                }
+            } else {
+                let at = q.now() + dt;
+                q.push(at, seq);
+                model.push((at, seq, seq));
+                seq += 1;
+            }
+        }
+        // drain: the remaining events come out in full (time, seq) order
+        while let Some((at, id)) = q.pop() {
+            let k = match model.iter().enumerate().min_by_key(|(_, m)| (m.0, m.1)) {
+                Some((i, _)) => i,
+                None => return false,
+            };
+            let (want_at, _, want_id) = model.remove(k);
+            if (at, id) != (want_at, want_id) {
+                return false;
+            }
+        }
+        model.is_empty()
+    });
+}
+
+// ------------------------------------------------------- free-run index
+
+/// From-scratch recompute of the maximal free runs, reading only the
+/// authoritative bitmap (via single-slice `range_free` queries) — fully
+/// independent of the incremental index it checks.
+fn oracle_runs(m: &SliceMap) -> Vec<SliceRange> {
+    let mut runs = Vec::new();
+    let mut start: Option<u32> = None;
+    for i in 0..m.len() {
+        if m.range_free(&SliceRange::new(i, 1)) {
+            if start.is_none() {
+                start = Some(i);
+            }
+        } else if let Some(s) = start.take() {
+            runs.push(SliceRange::new(s, i - s));
+        }
+    }
+    if let Some(s) = start {
+        runs.push(SliceRange::new(s, m.len() - s));
+    }
+    runs
+}
+
+/// Random op stream: `(len, from, release)` — occupy the leftmost free
+/// run of `len` at/after `from`, or release a random live range.
+fn sm_ops(rng: &mut Rng, size: u32) -> Vec<(u32, u32, bool)> {
+    let len = 8 + rng.below(size as u64 * 3 + 1) as usize;
+    (0..len)
+        .map(|_| {
+            (
+                rng.range_inclusive(1, 5) as u32,
+                rng.range_inclusive(0, 31) as u32,
+                rng.chance(0.45),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn free_run_index_matches_bitmap_recompute() {
+    forall_cfg(PropConfig { cases: 96, seed: 0x1DEA5, max_size: 40 }, &sm_ops, |ops| {
+        let mut m = SliceMap::new(32);
+        let mut live: Vec<SliceRange> = Vec::new();
+        let mut rng = Rng::new(ops.len() as u64);
+        for &(len, from, release) in ops {
+            if release && !live.is_empty() {
+                let idx = rng.below(live.len() as u64) as usize;
+                let r = live.swap_remove(idx);
+                m.release(&r);
+            } else if let Some(r) = m.find_free_run_from(from, len) {
+                m.occupy(&r);
+                live.push(r);
+            }
+            let oracle = oracle_runs(&m);
+            if m.free_runs() != oracle {
+                return false;
+            }
+            if m.free_count() != oracle.iter().map(|r| r.len).sum::<u32>() {
+                return false;
+            }
+            // derived queries read the same index
+            let longest = oracle.iter().max_by_key(|r| r.len).copied();
+            if m.longest_free_run().len != longest.map_or(0, |r| r.len) {
+                return false;
+            }
+        }
+        // full teardown coalesces back to one all-free run
+        for r in live.drain(..) {
+            m.release(&r);
+        }
+        m.free_runs() == oracle_runs(&m) && m.free_count() == 32
+    });
+}
+
+// ------------------------------------------- manager + fit-probe scratch
+
+/// Random op stream: `(glb, array, action)` — allocate (action ≥ 2),
+/// release (0), or relocate-to-leftmost (1).
+fn mgr_ops(rng: &mut Rng, size: u32) -> Vec<(u32, u32, u64)> {
+    let len = 6 + rng.below(size as u64 * 2 + 1) as usize;
+    (0..len)
+        .map(|_| {
+            (
+                rng.range_inclusive(0, 20) as u32,
+                rng.range_inclusive(1, 7) as u32,
+                rng.below(5),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn fit_predicate_agrees_with_probe_and_allocation_outcome() {
+    forall_cfg(PropConfig { cases: 64, seed: 0xF17B07, max_size: 32 }, &mgr_ops, |ops| {
+        let arch = ArchConfig::default();
+        let sched = SchedulerConfig {
+            region_policy: RegionPolicyKind::FlexibleShape,
+            ..SchedulerConfig::default()
+        };
+        let mut mgr = RegionManager::new(&arch, &sched);
+        let mut live: Vec<ExecutionRegion> = Vec::new();
+        let mut rng = Rng::new(ops.len() as u64 ^ 0x9E37);
+        for &(glb, array, action) in ops {
+            match action {
+                0 if !live.is_empty() => {
+                    let idx = rng.below(live.len() as u64) as usize;
+                    let r = live.swap_remove(idx);
+                    if mgr.release(r.id).is_err() {
+                        return false;
+                    }
+                }
+                1 if !live.is_empty() => {
+                    // relocate to the leftmost free runs; a target that
+                    // is free right now must always be accepted, and the
+                    // index must absorb the move (checked internally by
+                    // the debug oracle on every occupy/release).
+                    let idx = rng.below(live.len() as u64) as usize;
+                    let (id, gl, al) =
+                        (live[idx].id, live[idx].glb_slices(), live[idx].array_slices());
+                    let tgt_g = mgr.glb_map().find_free_run(gl);
+                    let tgt_a = mgr.array_map().find_free_run(al);
+                    if let (Some(g), Some(a)) = (tgt_g, tgt_a) {
+                        if mgr.relocate(id, Some(g), Some(a)).is_err() {
+                            return false;
+                        }
+                        live[idx].glb = vec![g];
+                        live[idx].array = vec![a];
+                    }
+                }
+                _ => {
+                    let demand = SliceDemand::new(glb, array);
+                    let fits = mgr.can_fit_now(&demand);
+                    // a fresh probe with no what-if releases sees the
+                    // live occupancy — it must agree with the manager
+                    if mgr.fit_probe().can_fit_now(&demand) != fits {
+                        return false;
+                    }
+                    match mgr.try_allocate(&demand) {
+                        AllocOutcome::Allocated(r) => {
+                            if !fits {
+                                return false;
+                            }
+                            live.push(r);
+                        }
+                        AllocOutcome::NoFit => {
+                            if fits {
+                                return false;
+                            }
+                        }
+                        AllocOutcome::NeverFits => {}
+                    }
+                }
+            }
+            // conservation: region bookkeeping matches the maps
+            let busy_g: u32 = live.iter().map(|r| r.glb_slices()).sum();
+            let busy_a: u32 = live.iter().map(|r| r.array_slices()).sum();
+            if mgr.glb_map().busy_count() != busy_g
+                || mgr.array_map().busy_count() != busy_a
+            {
+                return false;
+            }
+        }
+        for r in live.drain(..) {
+            if mgr.release(r.id).is_err() {
+                return false;
+            }
+        }
+        mgr.idle()
+    });
+}
+
+#[test]
+fn probe_reset_rewinds_what_if_releases() {
+    // One probe, many what-ifs: releasing regions on the probe must not
+    // leak into the next what-if after reset(), and must never touch the
+    // underlying manager.
+    let arch = ArchConfig::default();
+    let sched = SchedulerConfig {
+        region_policy: RegionPolicyKind::FlexibleShape,
+        ..SchedulerConfig::default()
+    };
+    let mut mgr = RegionManager::new(&arch, &sched);
+    let a = match mgr.try_allocate(&SliceDemand::new(16, 4)) {
+        AllocOutcome::Allocated(r) => r,
+        _ => panic!("first allocation must fit"),
+    };
+    let b = match mgr.try_allocate(&SliceDemand::new(16, 4)) {
+        AllocOutcome::Allocated(r) => r,
+        _ => panic!("second allocation must fit"),
+    };
+    let big = SliceDemand::new(20, 6);
+    assert!(!mgr.can_fit_now(&big), "machine is full");
+
+    let mut probe = mgr.fit_probe();
+    assert!(!probe.can_fit_now(&big));
+    probe.release(a.id).unwrap();
+    probe.release(b.id).unwrap();
+    assert!(probe.can_fit_now(&big), "what-if with both victims freed");
+    probe.reset();
+    assert!(!probe.can_fit_now(&big), "reset rewinds the what-if");
+    probe.release(a.id).unwrap();
+    assert!(!probe.can_fit_now(&big), "one victim is not enough");
+    drop(probe);
+    // the manager never saw any of it
+    assert!(!mgr.can_fit_now(&big));
+    assert_eq!(mgr.active_count(), 2);
+    mgr.release(a.id).unwrap();
+    mgr.release(b.id).unwrap();
+    assert!(mgr.idle());
+}
