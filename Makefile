@@ -7,7 +7,7 @@
 # the deterministic stub executor serves a built-in synthetic manifest
 # and no artifacts are needed.
 
-.PHONY: build test artifacts doc bench-smoke bench-simperf
+.PHONY: build test artifacts doc bench-smoke bench-noc bench-simperf
 
 build:
 	cargo build --release
@@ -30,7 +30,14 @@ bench-smoke:
 	cargo bench --bench ablation_shards -- --smoke
 	cargo bench --bench ablation_energy -- --smoke
 	cargo bench --bench ablation_qos -- --smoke
+	cargo bench --bench ablation_noc -- --smoke
 	cargo bench --bench simperf -- --smoke
+
+# NoC ablation at full duration: comm-aware vs oblivious placement on
+# the streaming-pipeline preset plus the churn guard arm; writes
+# BENCH_noc.json and enforces the comm-aware-wins acceptance bars.
+bench-noc:
+	cargo bench --bench ablation_noc
 
 # Simulator hot-path throughput (events/sec) with the >10% perf-
 # regression gate against rust/benches/simperf_baseline.json; writes

@@ -1,0 +1,206 @@
+//! NoC ablation — comm-aware vs oblivious placement on the
+//! streaming-pipeline preset, at identical offered load.
+//!
+//! The enforced claim: with two tenants running the three-stage
+//! camera → demosaic → Harris chain (explicit inter-stage frame
+//! streams) next to a camera and a Harris tenant at saturating rates,
+//! **comm-aware placement** (corridor scoring + producer affinity)
+//! strictly beats **oblivious placement** (first-fit, contention still
+//! charged) on pipeline makespan — and the win is non-vacuous: the
+//! oblivious schedule actually pays contention cycles, streams are
+//! actually placed, and the comm-aware schedule actually lands
+//! affinity hits.  A churn guard arm re-runs the past-saturation
+//! defrag workload with the NoC armed and requires comm-aware not to
+//! regress it.
+//!
+//! Output: a human table plus machine-readable `BENCH_noc.json`
+//! (schema shared with the other ablations via `cgra_mte::bench::jsonw`;
+//! per-run NoC counters use `cgra_mte::metrics::export::noc_json`'s
+//! field names).  `--smoke` shrinks the duration — the CI liveness
+//! mode; the sim is deterministic, so the acceptance bars are enforced
+//! in smoke and full alike.
+
+use cgra_mte::bench::jsonw;
+use cgra_mte::config::{presets, Config, NocPlacementKind, WorkloadConfig};
+use cgra_mte::metrics::{export, Table};
+use cgra_mte::noc::NocReport;
+use cgra_mte::sim::run_cloud;
+
+struct Row {
+    label: &'static str,
+    noc: NocReport,
+    submitted: u64,
+    completed: u64,
+    migrations: u64,
+    makespan_ms: f64,
+    ntat: f64,
+}
+
+fn run(label: &'static str, mut cfg: Config, duration_ms: f64) -> Row {
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+    }
+    let cycles_per_ms = cfg.arch.core_clock_mhz as f64 * 1e3;
+    let r = run_cloud(&cfg).expect("noc ablation run");
+    Row {
+        label,
+        noc: r.noc.expect("[noc] enabled by the preset"),
+        submitted: r.submitted,
+        completed: r.completed,
+        migrations: r.migrations,
+        makespan_ms: r.makespan_cycles as f64 / cycles_per_ms,
+        ntat: r.mean_ntat_across_apps(),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let duration_ms = if smoke { 600.0 } else { 2_000.0 };
+    let t0 = std::time::Instant::now();
+
+    let aware = run(
+        "pipeline comm-aware",
+        presets::pipeline_scenario(NocPlacementKind::CommAware),
+        duration_ms,
+    );
+    let obliv = run(
+        "pipeline oblivious",
+        presets::pipeline_scenario(NocPlacementKind::Oblivious),
+        duration_ms,
+    );
+    let churn_aware = run(
+        "churn comm-aware",
+        presets::noc_churn_scenario(NocPlacementKind::CommAware),
+        duration_ms,
+    );
+    let churn_obliv = run(
+        "churn oblivious",
+        presets::noc_churn_scenario(NocPlacementKind::Oblivious),
+        duration_ms,
+    );
+
+    let mut table = Table::new(
+        "NoC — comm-aware vs oblivious placement, equal offered load",
+        &[
+            "placement", "streams", "contended", "contention cyc", "affinity",
+            "mean slow", "peak slow", "makespan ms", "ntat",
+        ],
+    );
+    for r in [&aware, &obliv, &churn_aware, &churn_obliv] {
+        table.row(&[
+            r.label.to_string(),
+            r.noc.streams_placed.to_string(),
+            r.noc.contended_launches.to_string(),
+            r.noc.contention_cycles.to_string(),
+            r.noc.affinity_hits.to_string(),
+            format!("{:.3}", r.noc.mean_slowdown),
+            format!("{:.3}", r.noc.peak_slowdown),
+            format!("{:.1}", r.makespan_ms),
+            format!("{:.2}", r.ntat),
+        ]);
+    }
+    print!("{}", table.render());
+
+    let makespan_wins = aware.makespan_ms < obliv.makespan_ms;
+    let streams_engaged = obliv.noc.streams_placed > 0 && aware.noc.streams_placed > 0;
+    let contention_engaged = obliv.noc.contended_launches > 0;
+    let affinity_engaged = aware.noc.affinity_hits > 0;
+    let drains = aware.submitted == aware.completed && obliv.submitted == obliv.completed;
+    let churn_ok = churn_aware.makespan_ms <= churn_obliv.makespan_ms * 1.05;
+    println!(
+        "pipeline makespan {:.1} ms (comm-aware) vs {:.1} ms (oblivious) — {}; churn {:.1} vs {:.1} — {}",
+        aware.makespan_ms,
+        obliv.makespan_ms,
+        if makespan_wins { "PASS" } else { "FAIL" },
+        churn_aware.makespan_ms,
+        churn_obliv.makespan_ms,
+        if churn_ok { "PASS" } else { "FAIL" },
+    );
+
+    let row_json = |r: &Row| {
+        jsonw::obj(&[
+            ("placement", jsonw::str_val(r.label)),
+            ("noc", export::noc_json(&r.noc)),
+            ("submitted", jsonw::num_u(r.submitted)),
+            ("completed", jsonw::num_u(r.completed)),
+            ("migrations", jsonw::num_u(r.migrations)),
+            ("makespan_ms", jsonw::num_f(r.makespan_ms)),
+            ("mean_ntat", jsonw::num_f(r.ntat)),
+        ])
+    };
+    let doc = jsonw::obj(&[
+        ("bench", jsonw::str_val("ablation_noc")),
+        ("scenario", jsonw::str_val("streaming pipeline: comm-aware vs oblivious")),
+        ("smoke", jsonw::bool_val(smoke)),
+        ("duration_ms", jsonw::num_f(duration_ms)),
+        (
+            "rows",
+            jsonw::arr(&[
+                row_json(&aware),
+                row_json(&obliv),
+                row_json(&churn_aware),
+                row_json(&churn_obliv),
+            ]),
+        ),
+        (
+            "delta",
+            jsonw::obj(&[
+                ("comm_aware_makespan_wins", jsonw::bool_val(makespan_wins)),
+                ("contention_engaged", jsonw::bool_val(contention_engaged)),
+                ("affinity_engaged", jsonw::bool_val(affinity_engaged)),
+                ("churn_no_regression", jsonw::bool_val(churn_ok)),
+                (
+                    "makespan_ratio",
+                    jsonw::num_f(if obliv.makespan_ms > 0.0 {
+                        aware.makespan_ms / obliv.makespan_ms
+                    } else {
+                        f64::NAN
+                    }),
+                ),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_noc.json";
+    export::write_file(path, &doc).expect("write bench json");
+    println!("wrote {path}");
+    println!("bench wall time: {:.1} s", t0.elapsed().as_secs_f64());
+
+    // Acceptance is enforced, not just printed.
+    let mut failed = false;
+    if !makespan_wins {
+        eprintln!(
+            "acceptance FAILED: comm-aware makespan {:.1} ms not strictly below oblivious {:.1} ms",
+            aware.makespan_ms, obliv.makespan_ms
+        );
+        failed = true;
+    }
+    if !streams_engaged {
+        eprintln!("acceptance FAILED: no streams placed (vacuous comparison)");
+        failed = true;
+    }
+    if !contention_engaged {
+        eprintln!("acceptance FAILED: the oblivious schedule never paid contention (vacuous)");
+        failed = true;
+    }
+    if !affinity_engaged {
+        eprintln!("acceptance FAILED: comm-aware placement never landed an affinity hit");
+        failed = true;
+    }
+    if !drains {
+        eprintln!(
+            "acceptance FAILED: offered load did not drain ({}/{} aware, {}/{} oblivious)",
+            aware.completed, aware.submitted, obliv.completed, obliv.submitted
+        );
+        failed = true;
+    }
+    if !churn_ok {
+        eprintln!(
+            "acceptance FAILED: comm-aware churn makespan {:.1} ms regressed past oblivious {:.1} ms +5%",
+            churn_aware.makespan_ms, churn_obliv.makespan_ms
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

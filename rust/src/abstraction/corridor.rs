@@ -1,0 +1,309 @@
+//! Corridor-granular interconnect bandwidth tracking.
+//!
+//! The mesh routes every GLB↔region stream along the top row and then
+//! down the destination columns ([`crate::arch::Interconnect`]).  The
+//! vertical track bundles above each array-slice — one **corridor** per
+//! array-slice, `tracks_per_dir × slice_cols` tracks wide — are
+//! therefore a shared, finite resource exactly like GLB capacity or
+//! compute slices.  `CorridorMap` promotes them to a first-class
+//! partitioned resource: regions *demand* tracks across the corridors
+//! their streams traverse, the map *grants* at most the physical
+//! capacity per corridor, and the surplus (demand beyond capacity) is
+//! the oversubscription the contention model ([`crate::noc`]) charges.
+//!
+//! Unlike the slice maps, corridors never refuse an allocation: wires
+//! are time-multiplexed, so oversubscription slows streams instead of
+//! blocking placement.  The map mirrors [`super::SliceMap`]'s
+//! incremental-index discipline — the total-demand and oversubscribed-
+//! corridor counters are maintained on every occupy/release and checked
+//! against a from-scratch recompute by the debug-mode oracle.
+
+use std::fmt;
+
+use super::slice::SliceRange;
+
+/// The corridors one region's streams traverse: a contiguous corridor
+/// index range, each corridor charged `tracks` of demand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CorridorSpan {
+    /// Corridor indices crossed (corridor = array-slice index).
+    pub range: SliceRange,
+    /// Track demand charged to every corridor in `range` (one track per
+    /// concurrently streaming GLB bank).
+    pub tracks: u32,
+}
+
+impl CorridorSpan {
+    /// New span.
+    pub fn new(range: SliceRange, tracks: u32) -> Self {
+        CorridorSpan { range, tracks }
+    }
+
+    /// A span demanding nothing.
+    pub fn empty() -> Self {
+        CorridorSpan { range: SliceRange::empty(), tracks: 0 }
+    }
+
+    /// Whether the span charges no demand.
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty() || self.tracks == 0
+    }
+}
+
+impl fmt::Display for CorridorSpan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}×{}", self.range, self.tracks)
+    }
+}
+
+/// Per-corridor track-demand tracker (see module docs).
+#[derive(Clone, Debug)]
+pub struct CorridorMap {
+    /// Demanded tracks per corridor (may exceed `capacity`).
+    demand: Vec<u32>,
+    /// Physical tracks per corridor (`tracks_per_dir × slice_cols`).
+    capacity: u32,
+    /// Incrementally maintained sum of `demand`.
+    total_demand: u64,
+    /// Incrementally maintained count of corridors with
+    /// `demand > capacity`.
+    oversubscribed: u32,
+}
+
+impl CorridorMap {
+    /// All-idle map of `corridors` corridors, `capacity` tracks each.
+    pub fn new(corridors: u32, capacity: u32) -> Self {
+        CorridorMap {
+            demand: vec![0; corridors as usize],
+            capacity: capacity.max(1),
+            total_demand: 0,
+            oversubscribed: 0,
+        }
+    }
+
+    /// Corridor count (== array-slice count).
+    pub fn corridors(&self) -> u32 {
+        self.demand.len() as u32
+    }
+
+    /// Physical track capacity per corridor.
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    /// Demanded tracks on corridor `c` (may exceed capacity).
+    pub fn demand(&self, c: u32) -> u32 {
+        self.demand[c as usize]
+    }
+
+    /// Tracks actually granted on corridor `c`: physical wires are the
+    /// hard ceiling, surplus demand time-multiplexes.  The conservation
+    /// invariant (`tests/prop_noc.rs`) is exactly
+    /// `granted(c) <= capacity()` for every corridor.
+    pub fn granted(&self, c: u32) -> u32 {
+        self.demand[c as usize].min(self.capacity)
+    }
+
+    /// Total demanded tracks over all corridors.
+    pub fn total_demand(&self) -> u64 {
+        self.total_demand
+    }
+
+    /// Whether no corridor carries any demand.
+    pub fn is_idle(&self) -> bool {
+        self.total_demand == 0
+    }
+
+    /// Corridors whose demand exceeds capacity.
+    pub fn oversubscribed_count(&self) -> u32 {
+        self.oversubscribed
+    }
+
+    /// Oversubscription factor of corridor `c`: `demand / capacity`,
+    /// floored at 1.0 (an undersubscribed corridor runs at full speed).
+    pub fn oversub(&self, c: u32) -> f64 {
+        (self.demand[c as usize] as f64 / self.capacity as f64).max(1.0)
+    }
+
+    /// Worst oversubscription over the corridors of `range` (1.0 when
+    /// the range is empty or nothing is contended).
+    pub fn max_oversub_in(&self, range: &SliceRange) -> f64 {
+        let mut worst = 1.0f64;
+        for c in range.iter() {
+            if c >= self.corridors() {
+                break;
+            }
+            let o = self.oversub(c);
+            if o > worst {
+                worst = o;
+            }
+        }
+        worst
+    }
+
+    /// Worst oversubscription of `range` if `span` were occupied on top
+    /// of the current state — the communication-aware placement score
+    /// (a dry run; the map is not mutated).
+    pub fn projected_oversub(&self, span: &CorridorSpan) -> f64 {
+        let mut worst = 1.0f64;
+        for c in span.range.iter() {
+            if c >= self.corridors() {
+                break;
+            }
+            let d = self.demand[c as usize] + span.tracks;
+            let o = (d as f64 / self.capacity as f64).max(1.0);
+            if o > worst {
+                worst = o;
+            }
+        }
+        worst
+    }
+
+    /// Charge `span`'s demand.
+    pub fn occupy(&mut self, span: &CorridorSpan) {
+        if span.is_empty() {
+            return;
+        }
+        debug_assert!(
+            span.range.end() <= self.corridors(),
+            "corridor span {span} out of range"
+        );
+        for c in span.range.iter() {
+            let d = &mut self.demand[c as usize];
+            let was_over = *d > self.capacity;
+            *d += span.tracks;
+            if !was_over && *d > self.capacity {
+                self.oversubscribed += 1;
+            }
+        }
+        self.total_demand += span.range.len as u64 * span.tracks as u64;
+        self.debug_check_index();
+    }
+
+    /// Return `span`'s demand.  Panics (debug) when releasing demand
+    /// that was never charged — an unbalanced release is a region-
+    /// lifecycle bug, not a recoverable state.
+    pub fn release(&mut self, span: &CorridorSpan) {
+        if span.is_empty() {
+            return;
+        }
+        for c in span.range.iter() {
+            let d = &mut self.demand[c as usize];
+            debug_assert!(*d >= span.tracks, "corridor {c} demand underflow");
+            let was_over = *d > self.capacity;
+            *d = d.saturating_sub(span.tracks);
+            if was_over && *d <= self.capacity {
+                self.oversubscribed -= 1;
+            }
+        }
+        self.total_demand =
+            self.total_demand.saturating_sub(span.range.len as u64 * span.tracks as u64);
+        self.debug_check_index();
+    }
+
+    /// Debug-mode oracle: the incremental counters must always equal a
+    /// from-scratch recompute over the demand vector.
+    #[inline]
+    fn debug_check_index(&self) {
+        #[cfg(debug_assertions)]
+        {
+            let total: u64 = self.demand.iter().map(|&d| d as u64).sum();
+            debug_assert_eq!(self.total_demand, total, "total-demand counter diverged");
+            let over = self.demand.iter().filter(|&&d| d > self.capacity).count() as u32;
+            debug_assert_eq!(self.oversubscribed, over, "oversubscribed counter diverged");
+        }
+    }
+
+    /// Render per-corridor demand as `demand/capacity` cells.
+    pub fn render(&self) -> String {
+        self.demand
+            .iter()
+            .map(|d| format!("{d}/{}", self.capacity))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map() -> CorridorMap {
+        // paper geometry: 8 corridors, 5 tracks × 4 cols = 20 each
+        CorridorMap::new(8, 20)
+    }
+
+    #[test]
+    fn fresh_map_is_idle() {
+        let m = map();
+        assert_eq!(m.corridors(), 8);
+        assert_eq!(m.capacity(), 20);
+        assert!(m.is_idle());
+        assert_eq!(m.oversubscribed_count(), 0);
+        assert_eq!(m.max_oversub_in(&SliceRange::new(0, 8)), 1.0);
+    }
+
+    #[test]
+    fn occupy_release_round_trip() {
+        let mut m = map();
+        let s = CorridorSpan::new(SliceRange::new(1, 3), 7);
+        m.occupy(&s);
+        assert_eq!(m.demand(1), 7);
+        assert_eq!(m.demand(3), 7);
+        assert_eq!(m.demand(0), 0);
+        assert_eq!(m.total_demand(), 21);
+        m.release(&s);
+        assert!(m.is_idle());
+        assert_eq!(m.demand(2), 0);
+    }
+
+    #[test]
+    fn grants_are_capped_at_capacity() {
+        let mut m = map();
+        let s = CorridorSpan::new(SliceRange::new(0, 2), 14);
+        m.occupy(&s);
+        m.occupy(&s);
+        assert_eq!(m.demand(0), 28);
+        assert_eq!(m.granted(0), 20, "grant never exceeds the physical tracks");
+        assert_eq!(m.oversubscribed_count(), 2);
+        assert!((m.oversub(0) - 1.4).abs() < 1e-12);
+        assert_eq!(m.oversub(5), 1.0);
+    }
+
+    #[test]
+    fn max_oversub_scans_the_span() {
+        let mut m = map();
+        m.occupy(&CorridorSpan::new(SliceRange::new(2, 1), 30));
+        assert!((m.max_oversub_in(&SliceRange::new(0, 8)) - 1.5).abs() < 1e-12);
+        assert_eq!(m.max_oversub_in(&SliceRange::new(4, 4)), 1.0);
+        assert_eq!(m.max_oversub_in(&SliceRange::empty()), 1.0);
+    }
+
+    #[test]
+    fn projected_oversub_is_a_dry_run() {
+        let mut m = map();
+        m.occupy(&CorridorSpan::new(SliceRange::new(0, 4), 15));
+        let probe = CorridorSpan::new(SliceRange::new(0, 2), 10);
+        assert!((m.projected_oversub(&probe) - 1.25).abs() < 1e-12);
+        // the map did not change
+        assert_eq!(m.demand(0), 15);
+        let clear = CorridorSpan::new(SliceRange::new(4, 2), 10);
+        assert_eq!(m.projected_oversub(&clear), 1.0);
+    }
+
+    #[test]
+    fn empty_spans_are_no_ops() {
+        let mut m = map();
+        m.occupy(&CorridorSpan::empty());
+        m.occupy(&CorridorSpan::new(SliceRange::new(0, 3), 0));
+        m.release(&CorridorSpan::empty());
+        assert!(m.is_idle());
+    }
+
+    #[test]
+    fn render_shows_demand_over_capacity() {
+        let mut m = CorridorMap::new(2, 20);
+        m.occupy(&CorridorSpan::new(SliceRange::new(0, 1), 4));
+        assert_eq!(m.render(), "4/20 0/20");
+    }
+}

@@ -7,9 +7,16 @@
 //! scheduler trade in: the compiler expresses a task variant's footprint
 //! as a [`SliceDemand`], and the scheduler allocates [`SliceRange`]s of
 //! the physical [`SliceMap`].
+//!
+//! A fourth resource — interconnect bandwidth — is tracked at corridor
+//! granularity by [`CorridorMap`] (see `corridor` module docs): unlike
+//! slices it never blocks placement, but oversubscribed corridors slow
+//! the streams that share them.
 
+mod corridor;
 mod resource;
 mod slice;
 
+pub use corridor::{CorridorMap, CorridorSpan};
 pub use resource::{RawUsage, SliceDemand};
 pub use slice::{maps_for, ArraySliceId, GlbSliceId, SliceMap, SliceRange};

@@ -47,13 +47,30 @@ impl Interconnect {
     /// Estimate a route from a GLB IO column to a destination column.
     ///
     /// Data enters at the top of `io_col` and travels horizontally along
-    /// the top row then down the destination column; each extra
-    /// concurrent stream through the same corridor consumes one track.
-    pub fn route(&self, io_col: u32, dest_col: u32, concurrent_streams: u32) -> RouteEstimate {
-        let io_col = io_col.min(self.cols.saturating_sub(1));
-        let dest_col = dest_col.min(self.cols.saturating_sub(1));
+    /// the top row then down the destination column through the
+    /// region's `dest_rows` occupied rows; each extra concurrent stream
+    /// through the same corridor consumes one track.
+    ///
+    /// Columns outside the fabric are a caller-geometry bug: debug
+    /// builds assert, release builds report the route infeasible rather
+    /// than inventing a short route to a clamped column.
+    pub fn route(
+        &self,
+        io_col: u32,
+        dest_col: u32,
+        dest_rows: u32,
+        concurrent_streams: u32,
+    ) -> RouteEstimate {
+        debug_assert!(
+            io_col < self.cols && dest_col < self.cols,
+            "route columns ({io_col}, {dest_col}) outside fabric of {} cols",
+            self.cols
+        );
+        if io_col >= self.cols || dest_col >= self.cols {
+            return RouteEstimate { hops: u32::MAX, feasible: false };
+        }
         let horiz = io_col.abs_diff(dest_col);
-        let hops = horiz + self.rows / 2; // average vertical descent
+        let hops = horiz + dest_rows.min(self.rows);
         RouteEstimate { hops, feasible: concurrent_streams < self.tracks_per_dir }
     }
 
@@ -75,15 +92,26 @@ mod tests {
 
     #[test]
     fn straight_down_route_is_short() {
-        let r = ic().route(4, 4, 0);
+        let r = ic().route(4, 4, 16, 0);
         assert!(r.feasible);
-        assert_eq!(r.hops, 8); // vertical average only
+        assert_eq!(r.hops, 16); // full-height descent, no horizontal hops
+    }
+
+    #[test]
+    fn vertical_cost_tracks_region_row_span() {
+        // A shallow region prices cheaper than a full-height one.
+        let shallow = ic().route(4, 4, 4, 0).hops;
+        let tall = ic().route(4, 4, 16, 0).hops;
+        assert_eq!(shallow, 4);
+        assert_eq!(tall, 16);
+        // ... and the span is capped at the fabric height.
+        assert_eq!(ic().route(4, 4, 99, 0).hops, 16);
     }
 
     #[test]
     fn horizontal_distance_adds_hops() {
-        let near = ic().route(0, 2, 0).hops;
-        let far = ic().route(0, 30, 0).hops;
+        let near = ic().route(0, 2, 16, 0).hops;
+        let far = ic().route(0, 30, 16, 0).hops;
         assert!(far > near);
         assert_eq!(far - near, 28);
     }
@@ -91,8 +119,8 @@ mod tests {
     #[test]
     fn track_budget_limits_streams() {
         let i = ic();
-        assert!(i.route(0, 8, 4).feasible);
-        assert!(!i.route(0, 8, 5).feasible);
+        assert!(i.route(0, 8, 16, 4).feasible);
+        assert!(!i.route(0, 8, 16, 5).feasible);
     }
 
     #[test]
@@ -103,9 +131,14 @@ mod tests {
         assert_eq!(Interconnect::new(&arch).route_words_per_tile(32), 64);
     }
 
+    // Out-of-range columns are a caller bug: debug builds assert
+    // loudly, release builds refuse the route instead of silently
+    // clamping to a fake short route (the old behavior).
     #[test]
-    fn out_of_range_cols_clamped() {
-        let r = ic().route(999, 999, 0);
-        assert_eq!(r.hops, 8);
+    #[cfg_attr(debug_assertions, should_panic(expected = "outside fabric"))]
+    fn out_of_range_cols_are_infeasible() {
+        let r = ic().route(999, 999, 16, 0);
+        assert!(!r.feasible);
+        assert_eq!(r.hops, u32::MAX);
     }
 }

@@ -11,8 +11,8 @@ pub mod toml;
 
 pub use schema::{
     ArchConfig, CloudWorkloadConfig, Config, DefragPolicyKind, DprConfig, EdgeWorkloadConfig,
-    EnergyConfig, MigrationCostModelKind, PlacementPolicyKind, PoolConfig, QosClass, QosConfig,
-    QosPolicyKind, RegionPolicyKind, SchedulerConfig, SchedulerPolicyKind, ServerConfig,
-    WorkloadConfig,
+    EnergyConfig, MigrationCostModelKind, NocConfig, NocPlacementKind, PlacementPolicyKind,
+    PoolConfig, QosClass, QosConfig, QosPolicyKind, RegionPolicyKind, SchedulerConfig,
+    SchedulerPolicyKind, ServerConfig, WorkloadConfig,
 };
 pub use toml::TomlValue;

@@ -1,9 +1,11 @@
 //! Canonical configuration presets used by examples, benches, and tests.
 
 use crate::config::schema::{
-    CloudWorkloadConfig, Config, DefragPolicyKind, EdgeWorkloadConfig, PlacementPolicyKind,
-    QosClass, QosPolicyKind, RegionPolicyKind, SchedulerPolicyKind, WorkloadConfig,
+    CloudWorkloadConfig, Config, DefragPolicyKind, EdgeWorkloadConfig, NocPlacementKind,
+    PlacementPolicyKind, QosClass, QosPolicyKind, RegionPolicyKind, SchedulerPolicyKind,
+    WorkloadConfig,
 };
+use crate::tasks::AppId;
 
 /// Paper-faithful configuration: Amber-like geometry, flexible-shape
 /// regions, greedy scheduler, cloud workload.
@@ -80,6 +82,39 @@ pub fn pool_scenario(shards: u32, placement: PlacementPolicyKind) -> Config {
     let mut cfg = cloud_scenario(RegionPolicyKind::FlexibleShape);
     cfg.pool.shards = shards;
     cfg.pool.placement = placement;
+    cfg
+}
+
+/// Streaming-pipeline scenario: the cloud driver with two tenants
+/// submitting the three-stage camera → demosaic → Harris chain
+/// ([`crate::tasks::AppId::Pipeline`], explicit inter-stage frame
+/// streams) next to a camera and a Harris tenant, at rates that keep a
+/// backlog of stream-heavy stages contending for corridor bandwidth.
+/// The `[noc]` subsystem is on; `placement` is the ablation axis —
+/// `CommAware` scores corridors and honors producer affinity,
+/// `Oblivious` places first-fit while contention is still charged.
+/// Arrivals are identical across the pair.
+pub fn pipeline_scenario(placement: NocPlacementKind) -> Config {
+    let mut cfg = cloud_scenario(RegionPolicyKind::FlexibleShape);
+    cfg.noc.enabled = true;
+    cfg.noc.placement = placement;
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.tenant_apps = Some([AppId::Pipeline, AppId::Camera, AppId::Pipeline, AppId::Harris]);
+        c.mean_interarrival_ms = [12.0, 12.0, 12.0, 14.0];
+        c.duration_ms = 2_000.0;
+        c.seed = 0x0C_07_2026;
+    }
+    cfg
+}
+
+/// Churn scenario (past-saturation Fig. 3a tenants, cost-aware defrag)
+/// with the `[noc]` subsystem armed — the guard arm of
+/// `benches/ablation_noc.rs`: comm-aware placement must not regress the
+/// migration-heavy workload the defragmenter was built for.
+pub fn noc_churn_scenario(placement: NocPlacementKind) -> Config {
+    let mut cfg = churn_scenario(RegionPolicyKind::FlexibleShape, DefragPolicyKind::CostAware);
+    cfg.noc.enabled = true;
+    cfg.noc.placement = placement;
     cfg
 }
 
@@ -219,6 +254,10 @@ mod tests {
         for placement in PlacementPolicyKind::ALL {
             energy_pool_scenario(4, placement).validate().unwrap();
         }
+        for placement in [NocPlacementKind::CommAware, NocPlacementKind::Oblivious] {
+            pipeline_scenario(placement).validate().unwrap();
+            noc_churn_scenario(placement).validate().unwrap();
+        }
     }
 
     #[test]
@@ -256,6 +295,28 @@ mod tests {
         };
         assert_eq!(a.mean_interarrival_ms, b.mean_interarrival_ms);
         assert_eq!(a.seed, b.seed);
+    }
+
+    #[test]
+    fn pipeline_presets_arm_the_noc() {
+        let aware = pipeline_scenario(NocPlacementKind::CommAware);
+        assert!(aware.noc.enabled);
+        assert_eq!(aware.noc.placement, NocPlacementKind::CommAware);
+        let obliv = pipeline_scenario(NocPlacementKind::Oblivious);
+        assert_eq!(obliv.noc.placement, NocPlacementKind::Oblivious);
+        // equal offered load across the ablation pair, pipeline tenants on
+        let (WorkloadConfig::Cloud(a), WorkloadConfig::Cloud(b)) =
+            (&aware.workload, &obliv.workload)
+        else {
+            panic!("cloud workloads expected");
+        };
+        assert_eq!(a.tenant_apps.unwrap()[0], AppId::Pipeline);
+        assert_eq!(a.tenant_apps, b.tenant_apps);
+        assert_eq!(a.mean_interarrival_ms, b.mean_interarrival_ms);
+        assert_eq!(a.seed, b.seed);
+        let churn = noc_churn_scenario(NocPlacementKind::CommAware);
+        assert!(churn.noc.enabled);
+        assert_eq!(churn.scheduler.defrag_policy, DefragPolicyKind::CostAware);
     }
 
     #[test]

@@ -4,6 +4,7 @@ use std::path::Path;
 
 use crate::config::toml::TomlValue;
 use crate::error::{Error, Result};
+use crate::tasks::AppId;
 
 /// CGRA architecture parameters (paper §2.1, Amber-like defaults).
 #[derive(Clone, Debug, PartialEq)]
@@ -483,6 +484,93 @@ impl QosConfig {
     }
 }
 
+/// How placement treats corridor bandwidth when the NoC model is on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NocPlacementKind {
+    /// Score candidate runs by projected corridor oversubscription and
+    /// honor producer-affinity hints from the app DAG.
+    CommAware,
+    /// Ignore corridors when placing (first-fit, as before); contention
+    /// is still charged — this is the ablation baseline.
+    Oblivious,
+}
+
+impl NocPlacementKind {
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            NocPlacementKind::CommAware => "comm-aware",
+            NocPlacementKind::Oblivious => "oblivious",
+        }
+    }
+
+    /// Parse a config name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "comm-aware" => Ok(NocPlacementKind::CommAware),
+            "oblivious" => Ok(NocPlacementKind::Oblivious),
+            other => Err(Error::Config(format!("unknown NoC placement '{other}'"))),
+        }
+    }
+}
+
+/// NoC bandwidth-provisioning configuration (`[noc]` in TOML;
+/// [`crate::noc`]).
+///
+/// `enabled = false` (the default) is the master switch: no corridor is
+/// tracked, no stream is charged, no placement decision changes —
+/// every existing preset, trace and report stays bit-for-bit unchanged
+/// (`tests/prop_noc.rs` holds the subsystem to that, same discipline as
+/// `[energy]` and `[qos]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NocConfig {
+    /// Master switch.  TOML: `noc.enabled`.
+    pub enabled: bool,
+    /// Placement flavor.  TOML: `noc.placement` =
+    /// "comm-aware" | "oblivious".
+    pub placement: NocPlacementKind,
+    /// Fraction of a task's execution that is stream-bandwidth-bound
+    /// (stretched by corridor oversubscription).  TOML:
+    /// `noc.comm_fraction`, within [0, 1].
+    pub comm_fraction: f64,
+    /// Use app-DAG producer positions as placement hints so consumer
+    /// stages land on the corridors their input already lives in.
+    /// TOML: `noc.stream_affinity`.
+    pub stream_affinity: bool,
+    /// Make the defragmenter's packing order follow GLB home columns
+    /// (narrowing corridor spans) instead of pure array order.
+    /// TOML: `noc.defrag_align`.
+    pub defrag_align: bool,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        NocConfig {
+            enabled: false,
+            placement: NocPlacementKind::CommAware,
+            // Table 1 tasks stream operands continuously but re-use
+            // tiles heavily; ~a third of the steady-state cycles are
+            // bandwidth-bound at the 8 B/cycle bank rate.
+            comm_fraction: 0.35,
+            stream_affinity: true,
+            defrag_align: true,
+        }
+    }
+}
+
+impl NocConfig {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.comm_fraction) || !self.comm_fraction.is_finite() {
+            return Err(Error::Config(format!(
+                "noc.comm_fraction ({}) must be within [0, 1]",
+                self.comm_fraction
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Execution-region formation mechanism (paper Fig. 2 a–d).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RegionPolicyKind {
@@ -814,6 +902,12 @@ pub struct CloudWorkloadConfig {
     pub duration_ms: f64,
     /// RNG seed.
     pub seed: u64,
+    /// Override which app each tenant submits.  `None` (the default)
+    /// keeps the paper's Fig. 3a tenant set (ResNet-18, MobileNet,
+    /// camera, Harris); the streaming-pipeline presets use this to put
+    /// [`AppId::Pipeline`] chains on the fabric.  TOML:
+    /// `workload.tenant_apps`, an array of 4 app names.
+    pub tenant_apps: Option<[AppId; 4]>,
 }
 
 impl Default for CloudWorkloadConfig {
@@ -825,6 +919,7 @@ impl Default for CloudWorkloadConfig {
             mean_interarrival_ms: [40.0, 25.0, 40.0, 30.0],
             duration_ms: 10_000.0,
             seed: 0xC6_5A_2023,
+            tenant_apps: None,
         }
     }
 }
@@ -931,6 +1026,8 @@ pub struct Config {
     pub energy: EnergyConfig,
     /// QoS: priority classes, deadlines, preemptive scheduling.
     pub qos: QosConfig,
+    /// NoC bandwidth provisioning: corridors, contention, placement.
+    pub noc: NocConfig,
     /// Workload.
     pub workload: WorkloadConfig,
     /// Directory containing AOT artifacts + manifest.json, or the
@@ -948,6 +1045,7 @@ impl Default for Config {
             pool: PoolConfig::default(),
             energy: EnergyConfig::default(),
             qos: QosConfig::default(),
+            noc: NocConfig::default(),
             workload: WorkloadConfig::Cloud(CloudWorkloadConfig::default()),
             artifacts_dir: "artifacts".into(),
         }
@@ -1096,6 +1194,17 @@ impl Config {
             }
         }
 
+        if let Some(noc) = root.get("noc") {
+            let n = &mut cfg.noc;
+            read_bool(noc, "enabled", &mut n.enabled)?;
+            if let Some(v) = noc.get("placement") {
+                n.placement = NocPlacementKind::from_name(str_of(v, "noc.placement")?)?;
+            }
+            read_f64(noc, "comm_fraction", &mut n.comm_fraction)?;
+            read_bool(noc, "stream_affinity", &mut n.stream_affinity)?;
+            read_bool(noc, "defrag_align", &mut n.defrag_align)?;
+        }
+
         if let Some(wl) = root.get("workload") {
             let kind = wl
                 .get("kind")
@@ -1121,6 +1230,21 @@ impl Config {
                                 Error::Config("mean_interarrival_ms entries must be numbers".into())
                             })?;
                         }
+                    }
+                    if let Some(v) = wl.get("tenant_apps") {
+                        let arr = v.as_arr().ok_or_else(|| {
+                            Error::Config("workload.tenant_apps must be an array".into())
+                        })?;
+                        if arr.len() != 4 {
+                            return Err(Error::Config(
+                                "workload.tenant_apps needs 4 tenant entries".into(),
+                            ));
+                        }
+                        let mut apps = [AppId::ResNet18; 4];
+                        for (i, item) in arr.iter().enumerate() {
+                            apps[i] = AppId::from_name(str_of(item, "workload.tenant_apps")?)?;
+                        }
+                        c.tenant_apps = Some(apps);
                     }
                     cfg.workload = WorkloadConfig::Cloud(c);
                 }
@@ -1165,6 +1289,7 @@ impl Config {
         self.pool.validate()?;
         self.energy.validate()?;
         self.qos.validate()?;
+        self.noc.validate()?;
         let s = &self.scheduler;
         if s.unit_array_slices == 0 || s.unit_glb_slices == 0 {
             return Err(Error::Config("unit region sizes must be positive".into()));

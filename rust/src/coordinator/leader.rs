@@ -193,10 +193,20 @@ impl Leader {
     }
 
     fn build(cfg: &Config, router: Router) -> Result<Leader> {
-        let lib = TaskLibrary::table1();
+        let runtime = crate::runtime::RuntimeClient::from_dir(&cfg.artifacts_dir)?;
+        // Serve wire `pipeline` requests only when the manifest carries
+        // the demosaic artifacts: the built-in synthetic manifest always
+        // does, while an on-disk artifact build may predate the stage —
+        // such a leader keeps the paper-exact Table 1 library.
+        let lib = if runtime.manifest().get("demosaic_a").is_ok()
+            && runtime.manifest().get("demosaic_b").is_ok()
+        {
+            TaskLibrary::table1_pipeline()
+        } else {
+            TaskLibrary::table1()
+        };
         let mut sched = Scheduler::new(cfg, lib.clone(), DprMode::Fast);
         sched.preload_all();
-        let runtime = crate::runtime::RuntimeClient::from_dir(&cfg.artifacts_dir)?;
         let mut binding = TaskBinding::new(runtime, lib);
         let warmup_ms = binding.warmup()?;
         Ok(Leader {
@@ -433,6 +443,12 @@ impl Leader {
     pub fn energy_snapshot(&self) -> (f64, f64, u64) {
         let e = self.sched.energy();
         (e.total_joules(), e.current_windowed_watts(), e.throttled())
+    }
+
+    /// NoC contention report of this leader's fabric (`None` unless
+    /// `[noc]` is enabled).  The `STATS NOC` source.
+    pub fn noc_report(&self) -> Option<crate::noc::NocReport> {
+        self.sched.noc_report()
     }
 
     /// Per-class SLO report over everything this leader has served —

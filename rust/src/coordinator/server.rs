@@ -19,7 +19,7 @@
 //! `STATS SHARDS` which replies `1 + pool.shards` lines):
 //!
 //! ```text
-//! SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris> [class] [deadline_ms]
+//! SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris|pipeline> [class] [deadline_ms]
 //!   → OK seq=<n> ntat=<x> tat_ms=<x> compute_us=<x> sum=<x>
 //!   → BUSY tenant=<t> queue_depth=<d>     (admission queue full)
 //!   → ERR <reason>
@@ -44,6 +44,11 @@
 //!                                         (then one line per class:)
 //!   → STATS class=<name> completed=<n> deadlined=<n> missed=<n>
 //!           miss_rate=<x> p50_ms=<x> p95_ms=<x> p99_ms=<x>
+//! STATS NOC
+//!   → STATS noc=off                       (`[noc]` disabled)
+//!   → STATS noc=on streams=<n> contended=<n> contention_cycles=<n>
+//!           stream_in_cycles=<n> affinity_hits=<n> mean_slowdown=<x>
+//!           peak_slowdown=<x> corridors=<n> capacity=<n>
 //! DEFRAG
 //!   → DEFRAG migrated=<n> cycles=<n> frag_glb=<a>-><b> frag_arr=<a>-><b>
 //!   → ERR coordinator unavailable         (executors gone / shutting down)
@@ -81,6 +86,7 @@ use std::time::Duration;
 use crate::config::{Config, PlacementPolicyKind, QosClass};
 use crate::error::{Error, Result};
 use crate::metrics::ServeCounters;
+use crate::noc::NocReport;
 use crate::qos::QosReport;
 use crate::tasks::AppId;
 
@@ -97,6 +103,7 @@ pub fn parse_app(name: &str) -> Option<AppId> {
         "mobilenet" => Some(AppId::MobileNet),
         "camera" | "camera_pipeline" => Some(AppId::Camera),
         "harris" => Some(AppId::Harris),
+        "pipeline" | "streaming_pipeline" => Some(AppId::Pipeline),
         _ => None,
     }
 }
@@ -220,6 +227,10 @@ struct Shared {
     /// Latest per-shard QoS report, executor-refreshed after every
     /// batch (`STATS QOS` merges across shards).
     qos: Mutex<Vec<Option<QosReport>>>,
+    /// Latest per-shard NoC contention report, executor-refreshed after
+    /// every batch (`STATS NOC` merges across shards; all `None` while
+    /// `[noc]` is disabled).
+    noc: Mutex<Vec<Option<NocReport>>>,
 }
 
 impl Shared {
@@ -240,6 +251,7 @@ impl Shared {
             exec: Mutex::new(Vec::new()),
             shards: (0..shard_count).map(|_| ShardGauges::new()).collect(),
             qos: Mutex::new(vec![None; shard_count]),
+            noc: Mutex::new(vec![None; shard_count]),
         }
     }
 
@@ -360,6 +372,31 @@ impl Shared {
         }
     }
 
+    /// Refresh one shard's NoC report (executor-refreshed, like
+    /// `record_fabric`; `None` while `[noc]` is disabled).
+    fn record_noc(&self, shard: usize, report: Option<NocReport>) {
+        if shard >= self.shards.len() {
+            return;
+        }
+        if let Ok(mut slots) = self.noc.lock() {
+            slots[shard] = report;
+        }
+    }
+
+    /// Merge the per-shard NoC reports for `STATS NOC` (`None` when no
+    /// shard has one — `[noc]` disabled).
+    fn noc_merged(&self) -> Option<NocReport> {
+        let slots = self.noc.lock().map(|g| g.clone()).unwrap_or_default();
+        let mut merged: Option<NocReport> = None;
+        for report in slots.into_iter().flatten() {
+            match merged {
+                None => merged = Some(report),
+                Some(ref mut m) => m.merge(&report),
+            }
+        }
+        merged
+    }
+
     /// Merge the per-shard QoS reports for `STATS QOS`: counts are
     /// summed; latency percentiles report the worst (max) shard — the
     /// conservative read for an SLO surface.
@@ -466,7 +503,12 @@ fn handle_line(
             };
             let app = match parts.next().and_then(parse_app) {
                 Some(a) => a,
-                None => return ("ERR bad app (resnet18|mobilenet|camera|harris)".into(), false),
+                None => {
+                    return (
+                        "ERR bad app (resnet18|mobilenet|camera|harris|pipeline)".into(),
+                        false,
+                    )
+                }
             };
             // optional: [class] [deadline_ms]
             let mut class: Option<QosClass> = None;
@@ -555,6 +597,26 @@ fn handle_line(
                     ));
                 }
                 (out, false)
+            }
+            Some(t) if t.eq_ignore_ascii_case("noc") => {
+                let reply = match shared.noc_merged() {
+                    None => "STATS noc=off".to_string(),
+                    Some(r) => format!(
+                        "STATS noc=on streams={} contended={} contention_cycles={} \
+                         stream_in_cycles={} affinity_hits={} mean_slowdown={:.3} \
+                         peak_slowdown={:.3} corridors={} capacity={}",
+                        r.streams_placed,
+                        r.contended_launches,
+                        r.contention_cycles,
+                        r.stream_in_cycles,
+                        r.affinity_hits,
+                        r.mean_slowdown,
+                        r.peak_slowdown,
+                        r.corridors,
+                        r.capacity,
+                    ),
+                };
+                (reply, false)
             }
             Some(t) if t.eq_ignore_ascii_case("energy") => {
                 // 1 + shard_count lines, same framing as STATS SHARDS:
@@ -885,6 +947,7 @@ fn run_executor(
                 let (joules, watts, throttled) = leader.energy_snapshot();
                 shared.record_energy(shard, joules, watts, throttled);
                 shared.record_qos(shard, leader.qos_report());
+                shared.record_noc(shard, leader.noc_report());
                 let _ = resp.send(result);
             }
         }
@@ -1128,6 +1191,8 @@ mod tests {
         assert_eq!(parse_app("CAMERA"), Some(AppId::Camera));
         assert_eq!(parse_app("camera_pipeline"), Some(AppId::Camera));
         assert_eq!(parse_app("harris"), Some(AppId::Harris));
+        assert_eq!(parse_app("pipeline"), Some(AppId::Pipeline));
+        assert_eq!(parse_app("STREAMING_PIPELINE"), Some(AppId::Pipeline));
         assert_eq!(parse_app("nope"), None);
         assert_eq!(parse_app(""), None);
     }
@@ -1321,6 +1386,52 @@ mod tests {
     }
 
     #[test]
+    fn stats_noc_renders_off_then_merged_report() {
+        let shared = test_shared_sharded(4, 2);
+        // no shard has reported: the subsystem reads as off
+        let (reply, close) = line(&shared, "STATS NOC");
+        assert!(!close);
+        assert_eq!(reply, "STATS noc=off");
+        let hot = NocReport {
+            streams_placed: 2,
+            contended_launches: 1,
+            contention_cycles: 100,
+            stream_in_cycles: 43_200,
+            affinity_hits: 1,
+            mean_slowdown: 1.5,
+            peak_slowdown: 2.0,
+            corridors: 8,
+            capacity: 20,
+        };
+        let cold = NocReport {
+            streams_placed: 2,
+            contended_launches: 0,
+            contention_cycles: 0,
+            stream_in_cycles: 0,
+            affinity_hits: 0,
+            mean_slowdown: 1.0,
+            peak_slowdown: 1.0,
+            corridors: 8,
+            capacity: 20,
+        };
+        shared.record_noc(0, Some(hot));
+        shared.record_noc(1, Some(cold));
+        let (reply, _) = line(&shared, "STATS NOC");
+        assert!(reply.contains("noc=on"), "{reply}");
+        assert!(reply.contains("streams=4"), "{reply}");
+        assert!(reply.contains("contended=1"), "{reply}");
+        assert!(reply.contains("stream_in_cycles=43200"), "{reply}");
+        // weighted mean: (1.5·2 + 1.0·2) / 4
+        assert!(reply.contains("mean_slowdown=1.250"), "{reply}");
+        assert!(reply.contains("peak_slowdown=2.000"), "{reply}");
+        assert!(reply.contains("corridors=8 capacity=20"), "{reply}");
+        // out-of-range shard writes are ignored
+        shared.record_noc(9, Some(hot));
+        let (reply, _) = line(&shared, "STATS NOC");
+        assert!(reply.contains("streams=4"), "{reply}");
+    }
+
+    #[test]
     fn batch_cap_shrinks_only_over_the_power_cap() {
         // uncapped: never shrinks, even with high recorded power
         let uncapped = test_shared(4);
@@ -1437,6 +1548,14 @@ mod tests {
         let crit = qos_lines.iter().find(|l| l.contains("class=critical")).unwrap();
         assert!(crit.contains("completed=1"), "{qos_lines:?}");
         assert!(crit.contains("missed=0"), "{qos_lines:?}");
+
+        // the pipeline app is servable over the wire (the synthetic
+        // manifest carries its demosaic artifacts); with `[noc]` off
+        // the contention surface stays dark
+        let reply = send(&mut writer, &mut reader, "SUBMIT 0 pipeline");
+        assert!(reply.starts_with("OK seq=2"), "{reply}");
+        let noc = send(&mut writer, &mut reader, "STATS NOC");
+        assert_eq!(noc, "STATS noc=off");
 
         // control-plane defrag: fabric is drained between batches, so
         // this reports a clean no-op over the wire

@@ -347,7 +347,10 @@ impl EnergyAccountant {
     }
 
     /// Register a launched region's steady draw and charge its one-shot
-    /// launch costs (configuration stream + domain wake).
+    /// launch costs (configuration stream + domain wake).  `duty_scale`
+    /// scales the assumed GLB stream duty for the region's steady draw
+    /// (the NoC contention path, [`crate::noc`]); pass 1.0 when corridor
+    /// tracking is off for a bit-exact legacy draw.
     #[allow(clippy::too_many_arguments)]
     pub fn on_launch(
         &mut self,
@@ -359,11 +362,12 @@ impl EnergyAccountant {
         dpr_words: u64,
         cache_hit: bool,
         woken: (u32, u32),
+        duty_scale: f64,
     ) {
         if !self.enabled {
             return;
         }
-        let power = self.model.region_power(demand, held);
+        let power = self.model.region_power_scaled(demand, held, duty_scale);
         let dpr_pj = self.model.dpr_stream_pj(dpr_words, cache_hit);
         let wake_pj = self.model.wake_pj(woken.0, woken.1);
         self.dpr += dpr_pj;
@@ -468,6 +472,7 @@ mod tests {
             1000,
             true,
             (0, 0),
+            1.0,
         );
         assert_eq!(m.total_joules(), 0.0);
         assert!(m.report().is_none());
@@ -493,7 +498,7 @@ mod tests {
         let mut m = meter(true);
         let d = SliceDemand::new(4, 2);
         m.advance(0, (32, 8), (0, 0));
-        m.on_launch(RegionId(7), &d, &d, "harris.corner", 3, 6656, true, (4, 2));
+        m.on_launch(RegionId(7), &d, &d, "harris.corner", 3, 6656, true, (4, 2), 1.0);
         m.advance(100_000, (28, 6), (0, 0));
         m.on_complete(RegionId(7));
         m.advance(200_000, (32, 8), (0, 0));
@@ -516,7 +521,7 @@ mod tests {
         let mut m = EnergyAccountant::new(model, true);
         let d = SliceDemand::new(32, 8);
         m.advance(0, (32, 8), (0, 0));
-        m.on_launch(RegionId(0), &d, &d, "t", 0, 0, true, (0, 0));
+        m.on_launch(RegionId(0), &d, &d, "t", 0, 0, true, (0, 0), 1.0);
         m.advance(50_000, (0, 0), (0, 0));
         let busy_w = m.windowed_watts(50_000);
         m.on_complete(RegionId(0));
@@ -544,6 +549,7 @@ mod tests {
             0,
             true,
             (0, 0),
+            1.0,
         );
         // now over cap: further launches are refused and counted
         assert!(!m.admits(&big));

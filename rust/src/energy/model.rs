@@ -121,7 +121,22 @@ impl EnergyModel {
     /// plus `held` − `demand` slices held at idle rates (`held` is the
     /// region footprint; exclusive/replicated allocations over-hold).
     pub fn region_power(&self, demand: &SliceDemand, held: &SliceDemand) -> ActivePower {
-        let bank_bw = self.assumed_bank_bytes_per_cycle();
+        self.region_power_scaled(demand, held, 1.0)
+    }
+
+    /// [`Self::region_power`] with the assumed stream duty scaled by
+    /// `duty_scale` — the NoC contention path ([`crate::noc`]): a region
+    /// whose corridors are oversubscribed streams at a fraction of the
+    /// assumed port bandwidth, so its GLB stream energy per cycle drops
+    /// by the same factor (the cycles stretch instead).  `duty_scale`
+    /// of 1.0 reproduces [`Self::region_power`] bit-for-bit.
+    pub fn region_power_scaled(
+        &self,
+        demand: &SliceDemand,
+        held: &SliceDemand,
+        duty_scale: f64,
+    ) -> ActivePower {
+        let bank_bw = self.assumed_bank_bytes_per_cycle() * duty_scale;
         let held_glb = held.glb_slices.saturating_sub(demand.glb_slices);
         let held_arr = held.array_slices.saturating_sub(demand.array_slices);
         ActivePower {

@@ -10,6 +10,7 @@ use crate::error::{Error, Result};
 use crate::config::QosClass;
 use crate::metrics::FragmentationGauge;
 use crate::migration::{MigrationReport, MigrationStats};
+use crate::noc::NocReport;
 use crate::qos::{PreemptionRecord, QosStats};
 use crate::regions::RegionId;
 use crate::scheduler::{CompletionOutcome, Launch, RequestQueue, Scheduler};
@@ -146,9 +147,14 @@ impl FabricPool {
                 launches: 0,
             })
             .collect();
+        // Pipeline rides along: `placement_demand` skips graph nodes the
+        // library cannot resolve, so a plain-Table-1 pool still gets a
+        // sane (camera ∪ harris) probe for stray pipeline requests.
         let min_demand = AppId::ALL
             .iter()
-            .map(|&app| (app, placement_demand(&lib, app)))
+            .copied()
+            .chain([AppId::Pipeline])
+            .map(|app| (app, placement_demand(&lib, app)))
             .collect();
         Ok(FabricPool {
             shards,
@@ -264,6 +270,21 @@ impl FabricPool {
                 match merged {
                     None => merged = Some(r),
                     Some(ref mut m) => m.merge(&r, clock),
+                }
+            }
+        }
+        merged
+    }
+
+    /// Merged NoC contention report across shards (`None` unless
+    /// `[noc]` is enabled).
+    pub fn noc_report(&self) -> Option<NocReport> {
+        let mut merged: Option<NocReport> = None;
+        for s in &self.shards {
+            if let Some(r) = s.sched.noc_report() {
+                match merged {
+                    None => merged = Some(r),
+                    Some(ref mut m) => m.merge(&r),
                 }
             }
         }
@@ -513,6 +534,8 @@ impl FabricPool {
                     } else {
                         0
                     },
+                    // 0.0 on every shard unless `[noc]` is armed
+                    corridor_pressure: mgr.corridor_pressure(),
                 }
             })
             .collect()

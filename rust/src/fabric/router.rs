@@ -52,6 +52,12 @@ pub struct ShardLoad {
     /// where long-runway BestEffort work stands in its way.  0 for
     /// non-Critical requests (never read).
     pub be_runway: u64,
+    /// Worst corridor oversubscription currently on the shard
+    /// ([`crate::regions::RegionManager::corridor_pressure`]) — the
+    /// comm-aware pool signal: otherwise-equal shards tie-break toward
+    /// the colder interconnect.  0.0 with `[noc]` off on every shard,
+    /// so the legacy orders are untouched.
+    pub corridor_pressure: f64,
 }
 
 /// Scores ready requests across the shards of a [`super::FabricPool`].
@@ -123,25 +129,27 @@ impl FabricRouter {
     fn critical_first(loads: &[ShardLoad]) -> ShardId {
         loads
             .iter()
-            .min_by_key(|l| {
-                (
-                    !l.feasible,
-                    !l.fits_now,
-                    l.be_runway,
-                    l.open_requests,
-                    l.busy_array,
-                    l.shard.0,
-                )
+            .min_by(|a, b| {
+                (!a.feasible, !a.fits_now, a.be_runway, a.open_requests, a.busy_array)
+                    .cmp(&(!b.feasible, !b.fits_now, b.be_runway, b.open_requests, b.busy_array))
+                    .then(a.corridor_pressure.total_cmp(&b.corridor_pressure))
+                    .then(a.shard.0.cmp(&b.shard.0))
             })
             .expect("non-empty loads")
             .shard
     }
 
-    /// Fewest open requests, then fewest busy array slices, then id.
+    /// Fewest open requests, then fewest busy array slices, then the
+    /// coldest interconnect, then id.
     fn least_loaded(loads: &[ShardLoad]) -> ShardId {
         loads
             .iter()
-            .min_by_key(|l| (!l.feasible, l.open_requests, l.busy_array, l.shard.0))
+            .min_by(|a, b| {
+                (!a.feasible, a.open_requests, a.busy_array)
+                    .cmp(&(!b.feasible, b.open_requests, b.busy_array))
+                    .then(a.corridor_pressure.total_cmp(&b.corridor_pressure))
+                    .then(a.shard.0.cmp(&b.shard.0))
+            })
             .expect("non-empty loads")
             .shard
     }
@@ -159,11 +167,10 @@ impl FabricRouter {
                     .cmp(&(!b.feasible, !b.fits_now))
                     .then(a.marginal_pj.total_cmp(&b.marginal_pj))
                     .then_with(|| {
-                        (a.open_requests, a.busy_array, a.shard.0).cmp(&(
-                            b.open_requests,
-                            b.busy_array,
-                            b.shard.0,
-                        ))
+                        (a.open_requests, a.busy_array)
+                            .cmp(&(b.open_requests, b.busy_array))
+                            .then(a.corridor_pressure.total_cmp(&b.corridor_pressure))
+                            .then(a.shard.0.cmp(&b.shard.0))
                     })
             })
             .expect("non-empty loads")
@@ -176,15 +183,11 @@ impl FabricRouter {
     fn best_fit(loads: &[ShardLoad]) -> ShardId {
         loads
             .iter()
-            .min_by_key(|l| {
-                (
-                    !l.feasible,
-                    l.array_slices,
-                    l.glb_slices,
-                    l.open_requests,
-                    l.busy_array,
-                    l.shard.0,
-                )
+            .min_by(|a, b| {
+                (!a.feasible, a.array_slices, a.glb_slices, a.open_requests, a.busy_array)
+                    .cmp(&(!b.feasible, b.array_slices, b.glb_slices, b.open_requests, b.busy_array))
+                    .then(a.corridor_pressure.total_cmp(&b.corridor_pressure))
+                    .then(a.shard.0.cmp(&b.shard.0))
             })
             .expect("non-empty loads")
             .shard
@@ -206,6 +209,7 @@ mod tests {
             fits_now: true,
             marginal_pj: 0.0,
             be_runway: 0,
+            corridor_pressure: 0.0,
         }
     }
 
@@ -289,6 +293,34 @@ mod tests {
                 "{policy:?}: fits-now dominates the runway score"
             );
         }
+    }
+
+    #[test]
+    fn corridor_pressure_breaks_equal_load_ties() {
+        // equal open/busy: the colder interconnect wins under every
+        // non-sticky policy order
+        for policy in [
+            PlacementPolicyKind::LeastLoaded,
+            PlacementPolicyKind::BestFit,
+            PlacementPolicyKind::EnergyAware,
+        ] {
+            let mut r = FabricRouter::new(policy);
+            let hot = ShardLoad { corridor_pressure: 1.4, ..load(0, 2, 4) };
+            let cold = ShardLoad { corridor_pressure: 1.0, ..load(1, 2, 4) };
+            assert_eq!(r.place(0, QosClass::BestEffort, &[hot, cold]), ShardId(1), "{policy:?}");
+            // ...but load still dominates pressure
+            let busy_cold = ShardLoad { corridor_pressure: 1.0, ..load(1, 5, 4) };
+            assert_eq!(
+                r.place(0, QosClass::BestEffort, &[hot, busy_cold]),
+                ShardId(0),
+                "{policy:?}"
+            );
+        }
+        // critical path: pressure tie-breaks after the runway order
+        let mut r = FabricRouter::new(PlacementPolicyKind::LeastLoaded);
+        let hot = ShardLoad { corridor_pressure: 2.0, ..load(0, 1, 2) };
+        let cold = ShardLoad { corridor_pressure: 1.0, ..load(1, 1, 2) };
+        assert_eq!(r.place(0, QosClass::Critical, &[hot, cold]), ShardId(1));
     }
 
     #[test]

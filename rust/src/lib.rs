@@ -18,6 +18,8 @@
 //!   per-component energy model, power-gated slices and power-cap
 //!   governor ([`energy`]), the QoS layer — priority classes, deadlines
 //!   and preemptive scheduling with checkpointed eviction ([`qos`]) —
+//!   corridor-granular NoC bandwidth provisioning with contention-charged
+//!   streams and communication-aware placement ([`noc`]),
 //!   the discrete-event CGRA timing model
 //!   ([`sim`]), the sharded fabric pool with placement routing
 //!   ([`fabric`]), and the multi-tenant request coordinator
@@ -50,6 +52,7 @@ pub mod error;
 pub mod fabric;
 pub mod metrics;
 pub mod migration;
+pub mod noc;
 pub mod qos;
 pub mod regions;
 pub mod runtime;

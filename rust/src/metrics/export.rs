@@ -192,6 +192,26 @@ pub fn qos_json(r: &crate::qos::QosReport) -> String {
     )
 }
 
+/// One-line JSON rendering of a [`crate::noc::NocReport`] — the
+/// machine-readable companion to `STATS NOC`, written by the NoC
+/// ablation bench and scraped by experiment pipelines.  Slowdowns are
+/// multiplicative factors (1.0 = an uncontended corridor); cycle
+/// counters are in core cycles.
+pub fn noc_json(r: &crate::noc::NocReport) -> String {
+    format!(
+        r#"{{"streams_placed":{},"contended_launches":{},"contention_cycles":{},"stream_in_cycles":{},"affinity_hits":{},"mean_slowdown":{:.6},"peak_slowdown":{:.6},"corridors":{},"capacity":{}}}"#,
+        r.streams_placed,
+        r.contended_launches,
+        r.contention_cycles,
+        r.stream_in_cycles,
+        r.affinity_hits,
+        r.mean_slowdown,
+        r.peak_slowdown,
+        r.corridors,
+        r.capacity,
+    )
+}
+
 /// Frame latency breakdown as CSV (`frame,reconfig,wait_exec,total`).
 pub fn latency_csv(breakdown: &LatencyBreakdown) -> String {
     let rows: Vec<Vec<String>> = breakdown
@@ -351,6 +371,30 @@ mod tests {
         assert_eq!(crit.req_f64("missed").unwrap(), 1.0);
         assert_eq!(crit.req_f64("miss_rate").unwrap(), 1.0);
         assert!(crit.req_f64("mean_slack").unwrap() < 0.0);
+    }
+
+    #[test]
+    fn noc_json_parses() {
+        let r = crate::noc::NocReport {
+            streams_placed: 12,
+            contended_launches: 3,
+            contention_cycles: 4_500,
+            stream_in_cycles: 86_400,
+            affinity_hits: 7,
+            mean_slowdown: 1.125,
+            peak_slowdown: 1.75,
+            corridors: 8,
+            capacity: 20,
+        };
+        let line = noc_json(&r);
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.req_f64("streams_placed").unwrap(), 12.0);
+        assert_eq!(v.req_f64("contended_launches").unwrap(), 3.0);
+        assert_eq!(v.req_f64("stream_in_cycles").unwrap(), 86_400.0);
+        assert_eq!(v.req_f64("mean_slowdown").unwrap(), 1.125);
+        assert_eq!(v.req_f64("peak_slowdown").unwrap(), 1.75);
+        assert_eq!(v.req_f64("corridors").unwrap(), 8.0);
+        assert_eq!(v.req_f64("capacity").unwrap(), 20.0);
     }
 
     #[test]

@@ -77,12 +77,26 @@ impl CompactionPlan {
 pub struct DefragPlanner {
     policy: DefragPolicyKind,
     threshold: f64,
+    /// Communication-aware packing ([`crate::noc`]): compaction orders
+    /// the array class by each region's GLB home position, so compute
+    /// lands under the banks feeding it and corridor spans shrink.
+    comm_aware: bool,
 }
 
 impl DefragPlanner {
     /// Build from the scheduler configuration knobs.
     pub fn new(cfg: &SchedulerConfig) -> DefragPlanner {
-        DefragPlanner { policy: cfg.defrag_policy, threshold: cfg.defrag_threshold }
+        DefragPlanner {
+            policy: cfg.defrag_policy,
+            threshold: cfg.defrag_threshold,
+            comm_aware: false,
+        }
+    }
+
+    /// Arm (or disarm) the communication-aware packing objective — set
+    /// by the scheduler from `[noc] enabled` + `defrag_align`.
+    pub fn set_comm_aware(&mut self, on: bool) {
+        self.comm_aware = on;
     }
 
     /// Active defrag policy.
@@ -107,13 +121,13 @@ impl DefragPlanner {
         if !Self::fits_after_compaction(mgr, target) {
             return None;
         }
-        Self::compaction(mgr)
+        self.compaction(mgr)
     }
 
     /// Unconditional compaction plan (the `DEFRAG` wire command) —
     /// ignores the threshold and any target demand.
     pub fn compact(&self, mgr: &RegionManager) -> Option<CompactionPlan> {
-        Self::compaction(mgr)
+        self.compaction(mgr)
     }
 
     /// Whether `target` fits once every movable region is packed left
@@ -136,9 +150,9 @@ impl DefragPlanner {
         }
     }
 
-    fn compaction(mgr: &RegionManager) -> Option<CompactionPlan> {
+    fn compaction(&self, mgr: &RegionManager) -> Option<CompactionPlan> {
         match mgr.policy() {
-            RegionPolicyKind::FlexibleShape => Self::compact_flexible(mgr),
+            RegionPolicyKind::FlexibleShape => self.compact_flexible(mgr),
             RegionPolicyKind::VariableSize => Self::compact_variable(mgr),
             RegionPolicyKind::Baseline | RegionPolicyKind::FixedSize => None,
         }
@@ -146,13 +160,21 @@ impl DefragPlanner {
 
     /// Flexible-shape: GLB and array slices are decoupled, so each class
     /// packs left independently, preserving relative order per class.
-    fn compact_flexible(mgr: &RegionManager) -> Option<CompactionPlan> {
+    ///
+    /// Comm-aware mode instead packs the array class in GLB-home order
+    /// (compute under its banks).  That permutes the array class, which
+    /// can form relocation cycles the two-pass executor cannot break —
+    /// so the permuted plan is dry-run checked against the executor's
+    /// target-order schedule and the order-preserving plan is used
+    /// whenever the permuted one would wedge.
+    fn compact_flexible(&self, mgr: &RegionManager) -> Option<CompactionPlan> {
+        #[derive(Clone, Copy)]
         struct Entry {
             region: RegionId,
             glb: SliceRange,
             array: SliceRange,
         }
-        let mut regions: Vec<Entry> = mgr
+        let regions: Vec<Entry> = mgr
             .active()
             .filter(|r| r.is_contiguous())
             .map(|r| Entry {
@@ -165,45 +187,106 @@ impl DefragPlanner {
             return None;
         }
 
-        // target array ranges: pack in ascending current order
-        let mut to_array: Vec<(RegionId, SliceRange)> = Vec::with_capacity(regions.len());
-        regions.sort_by_key(|e| e.array.start);
-        let mut cursor = 0u32;
-        for e in &regions {
-            to_array.push((e.region, SliceRange::new(cursor, e.array.len)));
-            cursor += e.array.len;
-        }
-        // target glb ranges: same, independently
-        let mut to_glb: Vec<(RegionId, SliceRange)> = Vec::with_capacity(regions.len());
-        regions.sort_by_key(|e| e.glb.start);
-        let mut cursor = 0u32;
-        for e in &regions {
-            to_glb.push((e.region, SliceRange::new(cursor, e.glb.len)));
-            cursor += e.glb.len;
-        }
+        let build = |array_by_glb: bool| -> Vec<MigrationStep> {
+            let mut rs = regions.clone();
+            // target array ranges: pack in ascending current order, or
+            // in GLB-home order under the comm-aware objective
+            let mut to_array: Vec<(RegionId, SliceRange)> = Vec::with_capacity(rs.len());
+            if array_by_glb {
+                rs.sort_by_key(|e| (e.glb.start, e.array.start));
+            } else {
+                rs.sort_by_key(|e| e.array.start);
+            }
+            let mut cursor = 0u32;
+            for e in &rs {
+                to_array.push((e.region, SliceRange::new(cursor, e.array.len)));
+                cursor += e.array.len;
+            }
+            // target glb ranges: ascending current order, independently
+            let mut to_glb: Vec<(RegionId, SliceRange)> = Vec::with_capacity(rs.len());
+            rs.sort_by_key(|e| e.glb.start);
+            let mut cursor = 0u32;
+            for e in &rs {
+                to_glb.push((e.region, SliceRange::new(cursor, e.glb.len)));
+                cursor += e.glb.len;
+            }
 
-        regions.sort_by_key(|e| e.region);
-        to_array.sort_by_key(|(id, _)| *id);
-        to_glb.sort_by_key(|(id, _)| *id);
-        let steps: Vec<MigrationStep> = regions
-            .iter()
-            .zip(to_array.iter())
-            .zip(to_glb.iter())
-            .map(|((e, (_, ta)), (_, tg))| MigrationStep {
-                region: e.region,
-                from_glb: e.glb,
-                // an empty range (zero-GLB demand) never needs to move
-                to_glb: if e.glb.is_empty() { e.glb } else { *tg },
-                from_array: e.array,
-                to_array: if e.array.is_empty() { e.array } else { *ta },
-            })
-            .filter(|s| s.moves_glb() || s.moves_array())
-            .collect();
+            rs.sort_by_key(|e| e.region);
+            to_array.sort_by_key(|(id, _)| *id);
+            to_glb.sort_by_key(|(id, _)| *id);
+            rs.iter()
+                .zip(to_array.iter())
+                .zip(to_glb.iter())
+                .map(|((e, (_, ta)), (_, tg))| MigrationStep {
+                    region: e.region,
+                    from_glb: e.glb,
+                    // an empty range (zero-GLB demand) never needs to move
+                    to_glb: if e.glb.is_empty() { e.glb } else { *tg },
+                    from_array: e.array,
+                    to_array: if e.array.is_empty() { e.array } else { *ta },
+                })
+                .filter(|s| s.moves_glb() || s.moves_array())
+                .collect()
+        };
+
+        let steps = if self.comm_aware {
+            let occupancy: Vec<(RegionId, SliceRange, SliceRange)> =
+                regions.iter().map(|e| (e.region, e.glb, e.array)).collect();
+            let comm = build(true);
+            if Self::steps_apply_cleanly(&occupancy, &comm) {
+                comm
+            } else {
+                build(false)
+            }
+        } else {
+            build(false)
+        };
         if steps.is_empty() {
             None
         } else {
             Some(CompactionPlan { steps })
         }
+    }
+
+    /// Dry-run `steps` through the executor's schedule (array pass then
+    /// GLB pass, each in ascending target order) over the given
+    /// `(region, glb, array)` occupancy: true iff no target ever
+    /// overlaps a region that has not vacated yet.
+    fn steps_apply_cleanly(
+        occupancy: &[(RegionId, SliceRange, SliceRange)],
+        steps: &[MigrationStep],
+    ) -> bool {
+        fn pass_applies(mut held: Vec<(RegionId, SliceRange)>, moves: Vec<(RegionId, SliceRange)>) -> bool {
+            // `moves` arrives sorted ascending by target start
+            for (region, target) in moves {
+                if held.iter().any(|(id, r)| *id != region && r.overlaps(&target)) {
+                    return false;
+                }
+                if let Some(slot) = held.iter_mut().find(|(id, _)| *id == region) {
+                    slot.1 = target;
+                }
+            }
+            true
+        }
+        let mut array_moves: Vec<(RegionId, SliceRange)> = steps
+            .iter()
+            .filter(|s| s.moves_array())
+            .map(|s| (s.region, s.to_array))
+            .collect();
+        array_moves.sort_by_key(|(_, r)| r.start);
+        let mut glb_moves: Vec<(RegionId, SliceRange)> = steps
+            .iter()
+            .filter(|s| s.moves_glb())
+            .map(|s| (s.region, s.to_glb))
+            .collect();
+        glb_moves.sort_by_key(|(_, r)| r.start);
+        pass_applies(
+            occupancy.iter().map(|&(id, _, a)| (id, a)).collect(),
+            array_moves,
+        ) && pass_applies(
+            occupancy.iter().map(|&(id, g, _)| (id, g)).collect(),
+            glb_moves,
+        )
     }
 
     /// Variable-size: regions are spans of adjacent units whose GLB and
@@ -379,5 +462,59 @@ mod tests {
         let p = DefragPlanner::new(&SchedulerConfig::default());
         assert!(!p.enabled());
         assert_eq!(p.policy(), DefragPolicyKind::Off);
+    }
+
+    #[test]
+    fn comm_aware_packs_array_class_in_glb_order() {
+        // R1 g[0,8) a[0,1), R2 g[8,16) a[1,2); shove R1's array run to
+        // [2,3) so the array order (R2, R1) inverts the GLB order.
+        let mut m = manager(RegionPolicyKind::FlexibleShape);
+        let d = SliceDemand::new(8, 1);
+        let r1 = m.try_allocate(&d).expect_allocated("r1").id;
+        let r2 = m.try_allocate(&d).expect_allocated("r2").id;
+        m.relocate(r1, None, Some(SliceRange::new(2, 1))).unwrap();
+
+        // order-preserving compaction shuffles both regions down
+        let plain = planner(0.0).compact(&m).expect("fragmented");
+        assert_eq!(plain.len(), 2);
+
+        // comm-aware compaction instead slots R1 under its banks: one
+        // move, and the array order now mirrors the GLB order
+        let mut p = planner(0.0);
+        p.set_comm_aware(true);
+        let plan = p.compact(&m).expect("fragmented");
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.steps[0].region, r1);
+        assert_eq!(plan.steps[0].to_array, SliceRange::new(0, 1));
+        assert!(!plan.steps[0].moves_glb());
+        let _ = r2;
+    }
+
+    #[test]
+    fn comm_aware_falls_back_when_the_permutation_would_wedge() {
+        // R1 g[0,4) a[0,2), R3 g[8,12) a[4,6); the hole from a released
+        // middle region is refilled by R4 g[12,20) a[2,4).  GLB order
+        // (R1, R3, R4) asks the array class to swap R3 and R4 — a cycle
+        // the two-pass executor cannot break, so the planner must fall
+        // back to the order-preserving packing.
+        let mut m = manager(RegionPolicyKind::FlexibleShape);
+        let d = SliceDemand::new(4, 2);
+        let _r1 = m.try_allocate(&d).expect_allocated("r1").id;
+        let r2 = m.try_allocate(&d).expect_allocated("r2").id;
+        let _r3 = m.try_allocate(&d).expect_allocated("r3").id;
+        m.release(r2).unwrap();
+        let r4 = m.try_allocate(&SliceDemand::new(8, 2)).expect_allocated("r4");
+        assert_eq!(r4.array[0], SliceRange::new(2, 2));
+        assert_eq!(r4.glb[0], SliceRange::new(12, 8));
+
+        let mut p = planner(0.0);
+        p.set_comm_aware(true);
+        let aware = p.compact(&m).expect("fragmented");
+        let plain = planner(0.0).compact(&m).expect("fragmented");
+        assert_eq!(aware, plain, "unexecutable permutation must fall back");
+        // and the fallback plan actually executes
+        let costs = vec![0u64; aware.len()];
+        crate::migration::execute_plan(&mut m, &aware, &costs).unwrap();
+        assert_eq!(m.fragmentation(), (0.0, 0.0));
     }
 }

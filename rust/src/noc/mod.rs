@@ -1,0 +1,332 @@
+//! Network-on-chip bandwidth provisioning (the fourth resource axis).
+//!
+//! The paper's abstraction partitions GLB capacity, GLB bandwidth and
+//! compute; the interconnect moving data between them was previously
+//! unmodeled, so every policy treated regions as communication-free.
+//! This module closes that gap:
+//!
+//! * [`crate::abstraction::CorridorMap`] tracks per-corridor track
+//!   budgets, occupied/released in lockstep with region alloc/free by
+//!   [`crate::regions::RegionManager`];
+//! * [`ContentionModel`] charges a launching task for shared-corridor
+//!   occupancy — an oversubscribed corridor time-multiplexes its
+//!   tracks, so effective stream bandwidth drops by the
+//!   oversubscription factor, lengthening the communication-bound part
+//!   of execution and scaling the energy model's stream duty down by
+//!   the same factor (slower streams burn fewer pJ *per cycle* over
+//!   more cycles);
+//! * [`NocStats`]/[`NocReport`] surface what the model charged, for
+//!   `STATS NOC`, [`crate::metrics::export::noc_json`] and the
+//!   `ablation_noc` bench.
+//!
+//! Everything here is gated behind `[noc] enabled` (default **off**):
+//! with the switch off no corridor is ever occupied, every slowdown is
+//! exactly 1.0 and traces stay byte-identical to the pre-NoC goldens
+//! (`tests/prop_noc.rs`).
+
+use crate::abstraction::{CorridorSpan, SliceRange};
+use crate::config::{ArchConfig, NocConfig};
+
+/// Derive the corridor span a region's streams occupy.
+///
+/// Streams enter at the region's GLB banks on the top row and descend
+/// through the vertical corridors of the array-slices the region spans;
+/// a stream whose bank sits left or right of the compute run also
+/// crosses every corridor in between.  The span is therefore the
+/// bounding range of the GLB banks' home corridors and the array run
+/// itself, and every corridor in it is charged one track per held GLB
+/// slice (each bank sustains one stream).
+pub fn span_for(
+    glb: &[SliceRange],
+    array: &[SliceRange],
+    banks_per_corridor: u32,
+    corridors: u32,
+) -> CorridorSpan {
+    let bpc = banks_per_corridor.max(1);
+    let mut lo = u32::MAX;
+    let mut hi = 0u32;
+    let mut tracks = 0u32;
+    for r in glb {
+        if r.is_empty() {
+            continue;
+        }
+        tracks += r.len;
+        lo = lo.min(r.start / bpc);
+        hi = hi.max((r.end() - 1) / bpc);
+    }
+    for r in array {
+        if r.is_empty() {
+            continue;
+        }
+        lo = lo.min(r.start);
+        hi = hi.max(r.end() - 1);
+    }
+    if tracks == 0 || lo == u32::MAX {
+        return CorridorSpan::empty();
+    }
+    let hi = hi.min(corridors.saturating_sub(1));
+    let lo = lo.min(hi);
+    CorridorSpan::new(SliceRange::new(lo, hi - lo + 1), tracks)
+}
+
+/// Static launch-time pricing of corridor contention.
+///
+/// The model is deliberately simple and deterministic: at launch the
+/// worst oversubscription `s ≥ 1.0` along the region's corridor span is
+/// sampled once and baked into the task's execution estimate, exactly
+/// like DPR cycles are.  A task spending `comm_fraction` of its cycles
+/// streaming runs for `exec × ((1 − f) + f·s)` cycles instead of
+/// `exec`.
+#[derive(Clone, Copy, Debug)]
+pub struct ContentionModel {
+    /// Master switch (mirrors `[noc] enabled`).
+    pub enabled: bool,
+    /// Fraction of a task's execution that is stream-bandwidth-bound.
+    pub comm_fraction: f64,
+    /// Bytes one GLB bank streams per cycle (from the arch).
+    pub bank_bytes_per_cycle: u32,
+}
+
+impl ContentionModel {
+    /// Model for `arch` under `cfg`.
+    pub fn new(arch: &ArchConfig, cfg: &NocConfig) -> Self {
+        ContentionModel {
+            enabled: cfg.enabled,
+            comm_fraction: cfg.comm_fraction,
+            bank_bytes_per_cycle: arch.glb_bank_bytes_per_cycle,
+        }
+    }
+
+    /// A disabled model (charges nothing).
+    pub fn disabled() -> Self {
+        ContentionModel { enabled: false, comm_fraction: 0.0, bank_bytes_per_cycle: 8 }
+    }
+
+    /// Execution cycles after charging contention: the communication-
+    /// bound fraction stretches by `slowdown`, the compute-bound rest
+    /// is unaffected.  Identity when disabled or uncontended.
+    pub fn charged_exec(&self, exec_cycles: u64, slowdown: f64) -> u64 {
+        if !self.enabled || slowdown <= 1.0 {
+            return exec_cycles;
+        }
+        let f = self.comm_fraction.clamp(0.0, 1.0);
+        let stretch = (1.0 - f) + f * slowdown;
+        (exec_cycles as f64 * stretch).ceil() as u64
+    }
+
+    /// Cycles to stream `bytes` of producer output into a region
+    /// holding `glb_slices` banks, at contended effective bandwidth.
+    /// This prices the explicit inter-stage edges of pipeline DAGs
+    /// ([`crate::tasks::AppGraph::stream_in_bytes`]); it lands on the
+    /// reconfiguration side of the launch (data staged before compute).
+    pub fn stream_in_cycles(&self, bytes: u64, glb_slices: u32, slowdown: f64) -> u64 {
+        if !self.enabled || bytes == 0 {
+            return 0;
+        }
+        let bw = (self.bank_bytes_per_cycle as u64 * glb_slices.max(1) as u64).max(1);
+        let base = bytes.div_ceil(bw);
+        (base as f64 * slowdown.max(1.0)).ceil() as u64
+    }
+
+    /// Stream-duty scale for the energy model: a corridor granting
+    /// `1/s` of the demanded tracks moves `1/s` of the bytes per cycle,
+    /// so the per-cycle GLB streaming energy drops by the same factor.
+    pub fn duty_scale(&self, slowdown: f64) -> f64 {
+        if !self.enabled || slowdown <= 1.0 {
+            1.0
+        } else {
+            1.0 / slowdown
+        }
+    }
+}
+
+/// Counters the scheduler accumulates while the NoC model is live.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NocStats {
+    /// Regions whose streams were placed on corridors.
+    pub streams_placed: u64,
+    /// Launches that sampled a slowdown > 1.0.
+    pub contended_launches: u64,
+    /// Extra execution cycles charged by contention stretching.
+    pub contention_cycles: u64,
+    /// Cycles spent staging inter-stage pipeline bytes.
+    pub stream_in_cycles: u64,
+    /// Launches placed using a producer-affinity hint.
+    pub affinity_hits: u64,
+    /// Sum of sampled launch slowdowns (for the mean).
+    pub slowdown_sum: f64,
+    /// Worst slowdown sampled at any launch.
+    pub peak_slowdown: f64,
+}
+
+impl NocStats {
+    /// Record one launch's sampled contention.
+    pub fn on_launch(&mut self, slowdown: f64, charged: u64, stream_in: u64, hinted: bool) {
+        self.streams_placed += 1;
+        if slowdown > 1.0 {
+            self.contended_launches += 1;
+        }
+        self.contention_cycles += charged;
+        self.stream_in_cycles += stream_in;
+        if hinted {
+            self.affinity_hits += 1;
+        }
+        self.slowdown_sum += slowdown;
+        if slowdown > self.peak_slowdown {
+            self.peak_slowdown = slowdown;
+        }
+    }
+
+    /// Freeze into a report.
+    pub fn report(&self, corridors: u32, capacity: u32) -> NocReport {
+        NocReport {
+            streams_placed: self.streams_placed,
+            contended_launches: self.contended_launches,
+            contention_cycles: self.contention_cycles,
+            stream_in_cycles: self.stream_in_cycles,
+            affinity_hits: self.affinity_hits,
+            mean_slowdown: if self.streams_placed == 0 {
+                1.0
+            } else {
+                self.slowdown_sum / self.streams_placed as f64
+            },
+            peak_slowdown: self.peak_slowdown.max(1.0),
+            corridors,
+            capacity,
+        }
+    }
+}
+
+/// End-of-run NoC summary (per scheduler; shards merge theirs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NocReport {
+    /// Regions whose streams were placed on corridors.
+    pub streams_placed: u64,
+    /// Launches that saw a slowdown > 1.0.
+    pub contended_launches: u64,
+    /// Extra execution cycles charged by contention.
+    pub contention_cycles: u64,
+    /// Cycles staging inter-stage pipeline bytes.
+    pub stream_in_cycles: u64,
+    /// Launches placed via producer-affinity hints.
+    pub affinity_hits: u64,
+    /// Mean sampled launch slowdown (1.0 = uncontended).
+    pub mean_slowdown: f64,
+    /// Worst sampled launch slowdown.
+    pub peak_slowdown: f64,
+    /// Corridor count of the fabric.
+    pub corridors: u32,
+    /// Tracks per corridor.
+    pub capacity: u32,
+}
+
+impl NocReport {
+    /// Merge another shard's report into this one (weighted mean).
+    pub fn merge(&mut self, other: &NocReport) {
+        let n = self.streams_placed + other.streams_placed;
+        if n > 0 {
+            self.mean_slowdown = (self.mean_slowdown * self.streams_placed as f64
+                + other.mean_slowdown * other.streams_placed as f64)
+                / n as f64;
+        }
+        self.streams_placed = n;
+        self.contended_launches += other.contended_launches;
+        self.contention_cycles += other.contention_cycles;
+        self.stream_in_cycles += other.stream_in_cycles;
+        self.affinity_hits += other.affinity_hits;
+        self.peak_slowdown = self.peak_slowdown.max(other.peak_slowdown);
+        self.corridors = self.corridors.max(other.corridors);
+        self.capacity = self.capacity.max(other.capacity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(enabled: bool) -> ContentionModel {
+        ContentionModel { enabled, comm_fraction: 0.4, bank_bytes_per_cycle: 8 }
+    }
+
+    #[test]
+    fn span_bounds_glb_corridors_and_array_run() {
+        // banks 8..14 (corridors 2..=3 at 4 banks/corridor), array 5..=6
+        let s = span_for(
+            &[SliceRange::new(8, 6)],
+            &[SliceRange::new(5, 2)],
+            4,
+            8,
+        );
+        assert_eq!(s.range, SliceRange::new(2, 5)); // corridors 2..=6
+        assert_eq!(s.tracks, 6);
+    }
+
+    #[test]
+    fn aligned_region_spans_only_its_own_corridors() {
+        // banks 0..8 over corridors 0..=1, array 0..=1: perfectly aligned
+        let s = span_for(&[SliceRange::new(0, 8)], &[SliceRange::new(0, 2)], 4, 8);
+        assert_eq!(s.range, SliceRange::new(0, 2));
+        assert_eq!(s.tracks, 8);
+    }
+
+    #[test]
+    fn empty_footprint_yields_empty_span() {
+        assert!(span_for(&[], &[SliceRange::new(0, 2)], 4, 8).is_empty());
+    }
+
+    #[test]
+    fn charged_exec_stretches_comm_fraction_only() {
+        let m = model(true);
+        // s=1.5, f=0.4 → stretch = 0.6 + 0.4*1.5 = 1.2
+        assert_eq!(m.charged_exec(1000, 1.5), 1200);
+        assert_eq!(m.charged_exec(1000, 1.0), 1000);
+        assert_eq!(model(false).charged_exec(1000, 2.0), 1000);
+    }
+
+    #[test]
+    fn stream_in_scales_with_banks_and_slowdown() {
+        let m = model(true);
+        // 3200 bytes over 4 banks × 8 B/cyc = 100 cycles uncontended
+        assert_eq!(m.stream_in_cycles(3200, 4, 1.0), 100);
+        assert_eq!(m.stream_in_cycles(3200, 4, 2.0), 200);
+        assert_eq!(m.stream_in_cycles(0, 4, 2.0), 0);
+        assert_eq!(model(false).stream_in_cycles(3200, 4, 2.0), 0);
+    }
+
+    #[test]
+    fn duty_scale_inverts_slowdown() {
+        let m = model(true);
+        assert_eq!(m.duty_scale(1.0), 1.0);
+        assert!((m.duty_scale(2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(model(false).duty_scale(2.0), 1.0);
+    }
+
+    #[test]
+    fn stats_accumulate_and_report() {
+        let mut st = NocStats::default();
+        st.on_launch(1.0, 0, 0, false);
+        st.on_launch(1.5, 200, 50, true);
+        let r = st.report(8, 20);
+        assert_eq!(r.streams_placed, 2);
+        assert_eq!(r.contended_launches, 1);
+        assert_eq!(r.contention_cycles, 200);
+        assert_eq!(r.stream_in_cycles, 50);
+        assert_eq!(r.affinity_hits, 1);
+        assert!((r.mean_slowdown - 1.25).abs() < 1e-12);
+        assert!((r.peak_slowdown - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reports_merge_weighted() {
+        let mut a = NocStats::default();
+        a.on_launch(1.0, 0, 0, false);
+        let mut b = NocStats::default();
+        b.on_launch(2.0, 100, 0, false);
+        b.on_launch(2.0, 100, 0, false);
+        let mut ra = a.report(8, 20);
+        ra.merge(&b.report(8, 20));
+        assert_eq!(ra.streams_placed, 3);
+        assert!((ra.mean_slowdown - (1.0 + 2.0 + 2.0) / 3.0).abs() < 1e-12);
+        assert!((ra.peak_slowdown - 2.0).abs() < 1e-12);
+    }
+}

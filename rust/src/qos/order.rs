@@ -62,6 +62,7 @@ mod tests {
             arrival_cycle: arrival,
             class,
             deadline,
+            stream_in_bytes: 0,
         }
     }
 

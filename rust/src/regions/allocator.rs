@@ -2,11 +2,31 @@
 
 use std::collections::BTreeMap;
 
-use crate::abstraction::{SliceDemand, SliceMap, SliceRange};
+use crate::abstraction::{CorridorMap, CorridorSpan, SliceDemand, SliceMap, SliceRange};
 use crate::config::{ArchConfig, RegionPolicyKind, SchedulerConfig};
 use crate::error::{Error, Result};
+use crate::noc::span_for;
 
 use super::region::{ExecutionRegion, RegionId};
+
+/// Corridor-bandwidth bookkeeping armed by [`RegionManager::set_noc`].
+///
+/// Spans are occupied in [`RegionManager`]'s `commit`, released in
+/// `release` and moved in `relocate` — the exact lockstep discipline the
+/// slice maps follow, so corridor demand can never leak past a region's
+/// lifetime (`tests/prop_noc.rs` round-trips it).
+#[derive(Clone, Debug)]
+struct NocState {
+    map: CorridorMap,
+    /// GLB banks per corridor (`glb_slices / array_slices`).
+    banks_per_corridor: u32,
+    /// Live region → the span it occupies.
+    spans: BTreeMap<RegionId, CorridorSpan>,
+    /// Score flexible placements by projected corridor oversubscription.
+    comm_aware: bool,
+    /// Worst oversubscription observed at any commit.
+    peak_oversub: f64,
+}
 
 /// Result of an allocation attempt.
 #[derive(Clone, Debug, PartialEq)]
@@ -49,6 +69,9 @@ pub struct RegionManager {
     gating: bool,
     /// Minimum contiguous free run a domain needs before it gates.
     gate_min_run: u32,
+    /// Corridor-bandwidth tracking ([`crate::noc`]); `None` (the
+    /// default) keeps the pre-NoC behavior bit-for-bit.
+    noc: Option<NocState>,
 }
 
 impl RegionManager {
@@ -63,7 +86,74 @@ impl RegionManager {
             next_id: 0,
             gating: false,
             gate_min_run: 1,
+            noc: None,
         }
+    }
+
+    /// Arm corridor-bandwidth tracking ([`crate::noc`]): one corridor
+    /// per array-slice, `tracks_per_dir × slice_cols` tracks each.
+    /// Every subsequent commit/release/relocate keeps the corridor map
+    /// in lockstep with the slice maps.  With `comm_aware`, flexible
+    /// placement additionally scores candidate runs by projected
+    /// corridor oversubscription (and honors allocation hints).
+    pub fn set_noc(&mut self, arch: &ArchConfig, comm_aware: bool) {
+        let corridors = arch.array_slices().max(1);
+        let capacity = (arch.tracks_per_dir * arch.slice_cols).max(1);
+        let banks_per_corridor = (arch.glb_slices() / corridors).max(1);
+        self.noc = Some(NocState {
+            map: CorridorMap::new(corridors, capacity),
+            banks_per_corridor,
+            spans: BTreeMap::new(),
+            comm_aware,
+            peak_oversub: 1.0,
+        });
+    }
+
+    /// Whether corridor tracking is armed.
+    pub fn noc_enabled(&self) -> bool {
+        self.noc.is_some()
+    }
+
+    /// The corridor map, when tracking is armed.
+    pub fn corridor_map(&self) -> Option<&CorridorMap> {
+        self.noc.as_ref().map(|n| &n.map)
+    }
+
+    /// The corridor span region `id` occupies (empty when tracking is
+    /// off or the region holds no streams).
+    pub fn corridor_span(&self, id: RegionId) -> CorridorSpan {
+        self.noc
+            .as_ref()
+            .and_then(|n| n.spans.get(&id).copied())
+            .unwrap_or_else(CorridorSpan::empty)
+    }
+
+    /// Worst oversubscription along region `id`'s corridor span, the
+    /// region's own demand included (1.0 when tracking is off).
+    pub fn corridor_slowdown(&self, id: RegionId) -> f64 {
+        match &self.noc {
+            Some(n) => match n.spans.get(&id) {
+                Some(span) => n.map.max_oversub_in(&span.range),
+                None => 1.0,
+            },
+            None => 1.0,
+        }
+    }
+
+    /// Current worst corridor oversubscription across the fabric — the
+    /// pool router's communication-pressure signal.  0.0 when tracking
+    /// is off (mirrors the other policy-specific shard gauges).
+    pub fn corridor_pressure(&self) -> f64 {
+        match &self.noc {
+            Some(n) => (0..n.map.corridors()).map(|c| n.map.oversub(c)).fold(1.0, f64::max),
+            None => 0.0,
+        }
+    }
+
+    /// Worst oversubscription observed at any commit since tracking was
+    /// armed (1.0 = never contended; 0.0 when tracking is off).
+    pub fn corridor_peak_oversub(&self) -> f64 {
+        self.noc.as_ref().map(|n| n.peak_oversub).unwrap_or(0.0)
     }
 
     /// Arm power gating: a free slice is gated exactly when its maximal
@@ -249,11 +339,20 @@ impl RegionManager {
 
     /// Attempt to allocate a region for `demand` under the mechanism.
     pub fn try_allocate(&mut self, demand: &SliceDemand) -> AllocOutcome {
+        self.try_allocate_hinted(demand, None)
+    }
+
+    /// [`RegionManager::try_allocate`] with an optional array-slice
+    /// placement hint (a producer region's position, from the app DAG).
+    /// The hint only steers the flexible mechanism under comm-aware NoC
+    /// placement — every other configuration ignores it, keeping the
+    /// pre-NoC allocation order bit-for-bit.
+    pub fn try_allocate_hinted(&mut self, demand: &SliceDemand, hint: Option<u32>) -> AllocOutcome {
         match self.policy {
             RegionPolicyKind::Baseline => self.alloc_baseline(demand),
             RegionPolicyKind::FixedSize => self.alloc_fixed(demand, 1),
             RegionPolicyKind::VariableSize => self.alloc_variable(demand),
-            RegionPolicyKind::FlexibleShape => self.alloc_flexible(demand),
+            RegionPolicyKind::FlexibleShape => self.alloc_flexible(demand, hint),
         }
     }
 
@@ -300,6 +399,11 @@ impl RegionManager {
         }
         for r in coalesce(&region.array) {
             self.array.release(&r);
+        }
+        if let Some(noc) = &mut self.noc {
+            if let Some(span) = noc.spans.remove(&id) {
+                noc.map.release(&span);
+            }
         }
         Ok(())
     }
@@ -368,6 +472,19 @@ impl RegionManager {
             let r = self.regions.get_mut(&id).expect("looked up above");
             r.glb = vec![tgt_glb];
             r.array = vec![tgt_arr];
+            if let Some(noc) = &mut self.noc {
+                if let Some(old) = noc.spans.remove(&id) {
+                    noc.map.release(&old);
+                }
+                let span = span_for(
+                    &[tgt_glb],
+                    &[tgt_arr],
+                    noc.banks_per_corridor,
+                    noc.map.corridors(),
+                );
+                noc.map.occupy(&span);
+                noc.spans.insert(id, span);
+            }
             Ok(woken)
         } else {
             self.glb.occupy(&cur_glb);
@@ -408,6 +525,16 @@ impl RegionManager {
         self.next_id += 1;
         let region = ExecutionRegion { id, glb, array, replicas, woken_glb, woken_array };
         self.regions.insert(id, region.clone());
+        if let Some(noc) = &mut self.noc {
+            let span =
+                span_for(&region.glb, &region.array, noc.banks_per_corridor, noc.map.corridors());
+            noc.map.occupy(&span);
+            let oversub = noc.map.max_oversub_in(&span.range);
+            if oversub > noc.peak_oversub {
+                noc.peak_oversub = oversub;
+            }
+            noc.spans.insert(id, span);
+        }
         region
     }
 
@@ -458,9 +585,12 @@ impl RegionManager {
         AllocOutcome::NoFit
     }
 
-    fn alloc_flexible(&mut self, demand: &SliceDemand) -> AllocOutcome {
+    fn alloc_flexible(&mut self, demand: &SliceDemand, hint: Option<u32>) -> AllocOutcome {
         if demand.glb_slices > self.glb.len() || demand.array_slices > self.array.len() {
             return AllocOutcome::NeverFits;
+        }
+        if let Some((glb, array)) = self.comm_aware_flexible_choice(demand, hint) {
+            return AllocOutcome::Allocated(self.commit(vec![glb], vec![array], 1));
         }
         // Decoupled, exact, contiguous allocation (Fig. 2d).  Prefer to
         // anchor the GLB range near the array range's IO columns: first
@@ -481,6 +611,76 @@ impl RegionManager {
             None => return AllocOutcome::NoFit,
         };
         AllocOutcome::Allocated(self.commit(vec![glb], vec![array], 1))
+    }
+
+    /// Communication-aware flexible placement: enumerate candidate
+    /// (array run, GLB run) pairs and pick the one whose corridor span
+    /// projects the least oversubscription, breaking ties toward the
+    /// producer hint, then the narrowest span, then the leftmost run.
+    /// `None` when comm-aware placement is off *or* nothing fits — the
+    /// caller then takes the first-fit path (which agrees on fit).
+    fn comm_aware_flexible_choice(
+        &self,
+        demand: &SliceDemand,
+        hint: Option<u32>,
+    ) -> Option<(SliceRange, SliceRange)> {
+        let noc = self.noc.as_ref().filter(|n| n.comm_aware)?;
+        let need_a = demand.array_slices;
+        let need_g = demand.glb_slices;
+        if need_a == 0 || need_g == 0 {
+            return None;
+        }
+        let banks_per_slice = (self.glb.len() / self.array.len().max(1)).max(1);
+        // Exhaustive over array anchor positions (the array map is a
+        // handful of slices) × per-GLB-run {aligned, leftmost} anchors:
+        // deterministic and cheap, with enough freedom to dodge a hot
+        // corridor that first-fit would pile onto.
+        let mut best: Option<((f64, u32, u32, u32), (SliceRange, SliceRange))> = None;
+        for run in self.array.free_runs_ref() {
+            if run.len < need_a {
+                continue;
+            }
+            for astart in run.start..=(run.end() - need_a) {
+                let array = SliceRange::new(astart, need_a);
+                let preferred = astart * banks_per_slice;
+                for grun in self.glb.free_runs_ref() {
+                    if grun.len < need_g {
+                        continue;
+                    }
+                    let glast = grun.end() - need_g;
+                    let aligned = preferred.clamp(grun.start, glast);
+                    for (gi, gstart) in [aligned, grun.start].into_iter().enumerate() {
+                        if gi == 1 && gstart == aligned {
+                            continue;
+                        }
+                        let glb = SliceRange::new(gstart, need_g);
+                        let span = span_for(
+                            &[glb],
+                            &[array],
+                            noc.banks_per_corridor,
+                            noc.map.corridors(),
+                        );
+                        let oversub = noc.map.projected_oversub(&span);
+                        let hint_dist = hint.map(|h| h.abs_diff(astart)).unwrap_or(0);
+                        let key = (oversub, hint_dist, span.range.len, astart);
+                        let better = match &best {
+                            None => true,
+                            Some((k, _)) => match key.0.total_cmp(&k.0) {
+                                std::cmp::Ordering::Less => true,
+                                std::cmp::Ordering::Greater => false,
+                                std::cmp::Ordering::Equal => {
+                                    (key.1, key.2, key.3) < (k.1, k.2, k.3)
+                                }
+                            },
+                        };
+                        if better {
+                            best = Some((key, (glb, array)));
+                        }
+                    }
+                }
+            }
+        }
+        best.map(|(_, choice)| choice)
     }
 }
 
@@ -949,6 +1149,118 @@ mod tests {
         assert_eq!(m.gated_counts(), (16, 4));
         m.release(a.id).unwrap();
         assert_eq!(m.gated_counts(), (32, 8), "vacated slices re-gate");
+    }
+
+    // ------------------------------------------------------------- noc
+
+    fn noc_mgr(comm_aware: bool) -> RegionManager {
+        let arch = ArchConfig::default();
+        let mut m = mgr(RegionPolicyKind::FlexibleShape);
+        m.set_noc(&arch, comm_aware);
+        m
+    }
+
+    #[test]
+    fn noc_off_reports_nothing() {
+        let m = mgr(RegionPolicyKind::FlexibleShape);
+        assert!(!m.noc_enabled());
+        assert!(m.corridor_map().is_none());
+        assert_eq!(m.corridor_pressure(), 0.0);
+        assert_eq!(m.corridor_slowdown(RegionId(0)), 1.0);
+    }
+
+    #[test]
+    fn corridors_track_region_lifecycle() {
+        let mut m = noc_mgr(false);
+        let r = m.try_allocate(&SliceDemand::new(8, 2)).expect_allocated("r");
+        let span = m.corridor_span(r.id);
+        assert!(!span.is_empty());
+        assert_eq!(span.tracks, 8);
+        let map = m.corridor_map().unwrap();
+        assert_eq!(map.total_demand(), span.range.len as u64 * 8);
+        m.release(r.id).unwrap();
+        assert!(m.corridor_map().unwrap().is_idle(), "release returns corridor demand");
+    }
+
+    #[test]
+    fn relocation_moves_corridor_demand() {
+        let mut m = noc_mgr(false);
+        let a = m.try_allocate(&SliceDemand::new(4, 2)).expect_allocated("a");
+        let b = m.try_allocate(&SliceDemand::new(4, 2)).expect_allocated("b");
+        m.release(a.id).unwrap();
+        let before = m.corridor_map().unwrap().total_demand();
+        m.relocate(b.id, Some(SliceRange::new(0, 4)), Some(SliceRange::new(0, 2)))
+            .unwrap();
+        let map = m.corridor_map().unwrap();
+        assert_eq!(map.total_demand(), before, "demand conserved across the move");
+        assert_eq!(map.demand(0), 4, "demand followed the region to the origin");
+        m.release(b.id).unwrap();
+        assert!(m.corridor_map().unwrap().is_idle());
+    }
+
+    #[test]
+    fn slowdown_reflects_oversubscription() {
+        let mut m = noc_mgr(false);
+        // Two 14-bank regions forced onto overlapping corridors: the
+        // second lands its GLB wherever it fits, widening its span.
+        let a = m.try_allocate(&SliceDemand::new(14, 1)).expect_allocated("a");
+        let b = m.try_allocate(&SliceDemand::new(14, 1)).expect_allocated("b");
+        let worst = m.corridor_slowdown(a.id).max(m.corridor_slowdown(b.id));
+        assert!(worst > 1.0, "28 demanded tracks over 20 must contend, got {worst}");
+        assert!(m.corridor_pressure() > 1.0);
+        assert!(m.corridor_peak_oversub() > 1.0);
+    }
+
+    #[test]
+    fn comm_aware_placement_dodges_hot_corridors() {
+        // Oblivious: both regions' GLB runs pile left → overlap.
+        let mut obl = noc_mgr(false);
+        let o1 = obl.try_allocate(&SliceDemand::new(14, 1)).expect_allocated("o1");
+        let o2 = obl.try_allocate(&SliceDemand::new(14, 1)).expect_allocated("o2");
+        let obl_worst = obl.corridor_slowdown(o1.id).max(obl.corridor_slowdown(o2.id));
+        // Comm-aware: the second region picks an array run whose
+        // aligned GLB corridors are still cold.
+        let mut aware = noc_mgr(true);
+        let a1 = aware.try_allocate(&SliceDemand::new(14, 1)).expect_allocated("a1");
+        let a2 = aware.try_allocate(&SliceDemand::new(14, 1)).expect_allocated("a2");
+        let aware_worst = aware.corridor_slowdown(a1.id).max(aware.corridor_slowdown(a2.id));
+        assert!(
+            aware_worst < obl_worst,
+            "comm-aware ({aware_worst}) must beat oblivious ({obl_worst})"
+        );
+        assert_eq!(aware.corridor_slowdown(a2.id), 1.0, "second region fully dodged");
+    }
+
+    #[test]
+    fn placement_hint_pulls_region_toward_producer() {
+        let mut m = noc_mgr(true);
+        // Uncontended fabric: the hint is the only differentiator.
+        let r = m
+            .try_allocate_hinted(&SliceDemand::new(4, 2), Some(5))
+            .expect_allocated("hinted");
+        assert_eq!(r.array[0].start, 5, "consumer lands on the producer's slices");
+        // Without comm-aware NoC the hint is ignored.
+        let mut plain = mgr(RegionPolicyKind::FlexibleShape);
+        let p = plain
+            .try_allocate_hinted(&SliceDemand::new(4, 2), Some(5))
+            .expect_allocated("plain");
+        assert_eq!(p.array[0].start, 0, "pre-NoC first-fit unchanged");
+    }
+
+    #[test]
+    fn comm_aware_agrees_with_first_fit_on_feasibility() {
+        // Fill the fabric under both flavors: same number of regions fit.
+        for aware in [false, true] {
+            let mut m = noc_mgr(aware);
+            let d = SliceDemand::new(4, 1);
+            let mut n = 0;
+            while let AllocOutcome::Allocated(_) = m.try_allocate(&d) {
+                n += 1;
+                assert!(n <= 64, "runaway");
+            }
+            assert_eq!(n, 8, "aware={aware}");
+            assert_eq!(m.try_allocate(&d), AllocOutcome::NoFit);
+        }
     }
 
     #[test]

@@ -148,8 +148,9 @@ impl Manifest {
     }
 
     /// Built-in synthetic manifest for the stub runtime backend: one
-    /// small artifact per Table 1 task variant (all 19 names the task
-    /// library references) plus a `matmul_128` smoke artifact.  Golden
+    /// small artifact per task variant of the pipeline-extended Table 1
+    /// library (the 19 paper names plus the two demosaic stages) and a
+    /// `matmul_128` smoke artifact.  Golden
     /// checksums are computed with [`crate::runtime::stub_output`] — the same function
     /// the stub executor runs — so stub-mode golden verification passes
     /// exactly and still catches arity/shape/ordering bugs.  Selected by
@@ -196,7 +197,7 @@ impl Manifest {
                 },
             );
         };
-        for t in crate::tasks::TaskLibrary::table1().iter() {
+        for t in crate::tasks::TaskLibrary::table1_pipeline().iter() {
             for v in &t.variants {
                 if let Some(name) = &v.artifact {
                     add(name, &t.id.0, &v.ver.0.to_string());
@@ -373,9 +374,9 @@ mod tests {
         let m = Manifest::synthetic();
         assert!(m.is_synthetic());
         assert_eq!(m.version, SUPPORTED_VERSION);
-        // 19 Table 1 variants + matmul_128
-        assert_eq!(m.len(), 20);
-        for t in crate::tasks::TaskLibrary::table1().iter() {
+        // 19 Table 1 variants + 2 demosaic stages + matmul_128
+        assert_eq!(m.len(), 22);
+        for t in crate::tasks::TaskLibrary::table1_pipeline().iter() {
             for v in &t.variants {
                 let name = v.artifact.as_ref().unwrap();
                 let spec = m.get(name).unwrap();

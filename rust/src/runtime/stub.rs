@@ -169,7 +169,7 @@ mod tests {
         let mut rt = RuntimeClient::synthetic();
         assert_eq!(rt.platform(), "stub-cpu");
         let names: Vec<String> = rt.manifest().iter().map(|a| a.name.clone()).collect();
-        assert_eq!(names.len(), 20);
+        assert_eq!(names.len(), 22);
         for name in &names {
             let out = rt.verify_golden(name).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(out.shape, vec![16, 16]);

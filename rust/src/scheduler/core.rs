@@ -5,8 +5,8 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::abstraction::{SliceDemand, SliceRange};
 use crate::compiler::generate_bitstream;
 use crate::config::{
-    Config, DefragPolicyKind, QosClass, QosConfig, QosPolicyKind, RegionPolicyKind,
-    SchedulerPolicyKind,
+    Config, DefragPolicyKind, NocPlacementKind, QosClass, QosConfig, QosPolicyKind,
+    RegionPolicyKind, SchedulerPolicyKind,
 };
 use crate::dpr::{Bitstream, BitstreamId, DprEngine, DprMode};
 use crate::energy::{EnergyAccountant, EnergyModel, EnergyReport};
@@ -15,6 +15,7 @@ use crate::migration::{
     execute_plan, CompactionPlan, DefragPlanner, MigrationCostModel, MigrationReport,
     MigrationStats,
 };
+use crate::noc::{ContentionModel, NocReport, NocStats};
 use crate::qos::{self, PreemptionRecord, QosStats, VictimCandidate};
 use crate::regions::{AllocOutcome, ExecutionRegion, RegionId, RegionManager};
 use crate::tasks::{TaskId, TaskInstanceId, TaskLibrary, VariantId};
@@ -176,7 +177,25 @@ pub struct Scheduler {
     /// Cycles the current schedule step's preemption pass charges to
     /// the rescued launch (victims checkpoint in parallel: the max).
     pending_preempt_cycles: u64,
+    /// NoC contention pricing ([`crate::noc`]); identity with `[noc]`
+    /// disabled.
+    noc_model: ContentionModel,
+    /// Feed producer-affinity hints into placement (`[noc]`
+    /// `stream_affinity` under comm-aware placement).
+    noc_affinity: bool,
+    /// Cumulative NoC counters (advanced only while corridor tracking
+    /// is armed).
+    noc_stats: NocStats,
+    /// request seq → array-slice start of its most recently completed
+    /// node — the producer position a consumer launch is pulled toward.
+    /// Bounded (oldest request pruned) so long runs cannot grow it.
+    affinity: BTreeMap<u64, u32>,
 }
+
+/// Producer-affinity table bound: requests tracked at once.  4096 open
+/// pipelines per shard is far past every preset; the bound only guards
+/// against pathological drivers that never complete requests.
+const AFFINITY_CAP: usize = 4096;
 
 impl Scheduler {
     /// Build from a config; `mode` selects the DPR path (Fig. 5 compares
@@ -185,6 +204,11 @@ impl Scheduler {
         let mut mgr = RegionManager::new(&cfg.arch, &cfg.scheduler);
         let gating = cfg.energy.enabled && cfg.energy.gating;
         mgr.set_gating(gating, cfg.energy.gate_min_run);
+        if cfg.noc.enabled {
+            mgr.set_noc(&cfg.arch, cfg.noc.placement == NocPlacementKind::CommAware);
+        }
+        let mut planner = DefragPlanner::new(&cfg.scheduler);
+        planner.set_comm_aware(cfg.noc.enabled && cfg.noc.defrag_align);
         let dpr = DprEngine::new(&cfg.arch, &cfg.dpr, mode);
         let mut bitstreams = BTreeMap::new();
         for t in lib.iter() {
@@ -203,7 +227,7 @@ impl Scheduler {
             rr_cursor: 0,
             bitstreams,
             options: BTreeMap::new(),
-            planner: DefragPlanner::new(&cfg.scheduler),
+            planner,
             cost_model: MigrationCostModel::new(&cfg.arch, cfg.scheduler.migration_cost_model),
             mig_stats: MigrationStats::default(),
             pending_migration_cycles: 0,
@@ -219,6 +243,12 @@ impl Scheduler {
             qos_stats: QosStats::default(),
             preempt_log: Vec::new(),
             pending_preempt_cycles: 0,
+            noc_model: ContentionModel::new(&cfg.arch, &cfg.noc),
+            noc_affinity: cfg.noc.enabled
+                && cfg.noc.stream_affinity
+                && cfg.noc.placement == NocPlacementKind::CommAware,
+            noc_stats: NocStats::default(),
+            affinity: BTreeMap::new(),
         };
         let ids: Vec<TaskId> = sched.lib.iter().map(|t| t.id.clone()).collect();
         for id in ids {
@@ -417,6 +447,22 @@ impl Scheduler {
             .running
             .remove(&region)
             .ok_or_else(|| Error::Sched(format!("completion for idle region {region}")))?;
+        // Remember where this request's stage ran (read before release —
+        // the region is gone afterwards): its successors stream their
+        // input from here, so placement pulls them toward this column.
+        if self.noc_affinity {
+            if let Some(start) = self
+                .mgr
+                .region(region)
+                .and_then(|r| r.array.first())
+                .map(|a| a.start)
+            {
+                self.affinity.insert(rt.inst.request, start);
+                while self.affinity.len() > AFFINITY_CAP {
+                    self.affinity.pop_first();
+                }
+            }
+        }
         self.meter.on_complete(region);
         self.mgr.release(region)?;
         self.dpr.unpin(&BitstreamId::new(rt.task.0.clone(), rt.ver.0));
@@ -464,6 +510,12 @@ impl Scheduler {
     /// Number of running tasks.
     pub fn running_count(&self) -> usize {
         self.running.len()
+    }
+
+    /// End-of-run NoC summary (`None` unless `[noc]` is enabled).
+    pub fn noc_report(&self) -> Option<NocReport> {
+        let map = self.mgr.corridor_map()?;
+        Some(self.noc_stats.report(map.corridors(), map.capacity()))
     }
 
     // ----------------------------------------------------------------- qos
@@ -542,7 +594,12 @@ impl Scheduler {
             + self.pending_preempt_cycles;
         self.pending_migration_cycles = 0;
         self.pending_preempt_cycles = 0;
+        // The remaining cycles were already contention-charged at the
+        // original launch — re-charging them here would compound the
+        // bill.  The *energy* duty does track the new placement: the
+        // resumed region streams at whatever its new corridors grant.
         let exec_cycles = ck.remaining;
+        let slowdown = self.mgr.corridor_slowdown(region.id);
         let finish = now + dpr_cycles + exec_cycles;
 
         self.meter.on_launch(
@@ -554,7 +611,13 @@ impl Scheduler {
             bs_words,
             dpr_out.cache_hit,
             woken,
+            self.noc_model.duty_scale(slowdown),
         );
+        if self.mgr.noc_enabled() {
+            // a resume re-lands the stream on corridors; nothing new is
+            // charged (cycles were priced at the original launch)
+            self.noc_stats.on_launch(slowdown, 0, 0, false);
+        }
         if self.meter.enabled() && restore > 0 {
             // GLB state copy-in, energy-accounted like a migration's
             // bank copy
@@ -943,6 +1006,14 @@ impl Scheduler {
             Some(opts) => opts.clone(),
             None => self.options_for(&rt.task),
         };
+        // Producer-affinity hint: pull a consumer stage toward the array
+        // columns where its request's previous stage just ran, so its
+        // corridor span overlaps the banks its input bytes sit in.
+        let hint = if self.noc_affinity && rt.stream_in_bytes > 0 {
+            self.affinity.get(&rt.instance.request).copied()
+        } else {
+            None
+        };
         let mut blocked: Vec<(VariantId, SliceDemand)> = Vec::new();
         for opt in options {
             let spec = self.lib.get(&rt.task).expect("options imply spec");
@@ -964,7 +1035,7 @@ impl Scheduler {
             } else if opt.replicate > 1 {
                 self.mgr.try_allocate_replicated(&variant.demand, opt.replicate)
             } else {
-                self.mgr.try_allocate(&variant.demand)
+                self.mgr.try_allocate_hinted(&variant.demand, hint)
             };
             let region: ExecutionRegion = match outcome {
                 AllocOutcome::Allocated(r) => r,
@@ -988,7 +1059,19 @@ impl Scheduler {
 
             let replicas = region.replicas.max(1);
             let eff_tpt = variant.throughput * replicas as f64;
-            let exec_cycles = (spec.work as f64 / eff_tpt).ceil() as u64;
+            let base_exec = (spec.work as f64 / eff_tpt).ceil() as u64;
+            // Contention sample: worst oversubscription along the
+            // region's corridor span, frozen into this launch like DPR
+            // cycles are (1.0 whenever corridor tracking is off).
+            let slowdown = self.mgr.corridor_slowdown(region.id);
+            let exec_cycles = self.noc_model.charged_exec(base_exec, slowdown);
+            // inter-stage pipeline bytes are staged into the region's
+            // banks before compute, at contended effective bandwidth
+            let stream_in = self.noc_model.stream_in_cycles(
+                rt.stream_in_bytes,
+                region.footprint().glb_slices,
+                slowdown,
+            );
             // a rescued launch also waits out the compaction pass; a
             // launch that wakes power-gated domains additionally waits
             // out the wake handshake, charged exactly like DPR cycles
@@ -996,6 +1079,7 @@ impl Scheduler {
             let wake = if woken.0 + woken.1 > 0 { self.wake_cycles } else { 0 };
             let dpr_cycles = dpr_out.cycles
                 + wake
+                + stream_in
                 + self.pending_migration_cycles
                 + self.pending_preempt_cycles;
             self.pending_migration_cycles = 0;
@@ -1011,7 +1095,16 @@ impl Scheduler {
                 bs_words,
                 dpr_out.cache_hit,
                 woken,
+                self.noc_model.duty_scale(slowdown),
             );
+            if self.mgr.noc_enabled() {
+                self.noc_stats.on_launch(
+                    slowdown,
+                    exec_cycles - base_exec,
+                    stream_in,
+                    hint.is_some(),
+                );
+            }
             // the running task's configuration state must stay GLB-
             // resident for migration restreams and preemption relaunches
             self.dpr.pin(&bs_id);
@@ -1894,5 +1987,92 @@ mod tests {
         // camera b: 2,073,600 px / 12 px-per-cycle = 172,800 cycles
         assert_eq!(l.exec_cycles, 172_800);
         assert_eq!(l.finish, l.start + l.dpr_cycles + l.exec_cycles);
+    }
+
+    // --------------------------------------------------------------- noc
+
+    fn pipeline_sched(noc: bool) -> Scheduler {
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.noc.enabled = noc;
+        Scheduler::new(&cfg, TaskLibrary::table1_pipeline(), DprMode::Fast)
+    }
+
+    /// Drive one Pipeline request through its first two stages (camera →
+    /// demosaic) and return both launches.
+    fn run_two_pipeline_stages(s: &mut Scheduler) -> (Launch, Launch) {
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 0, AppId::Pipeline, 0);
+        let l1 = s.schedule(&mut q, 0)[0].clone();
+        let inst = s.complete(l1.region, l1.finish).unwrap();
+        q.mark_complete(inst, l1.finish).unwrap();
+        let l2 = s.schedule(&mut q, l1.finish)[0].clone();
+        (l1, l2)
+    }
+
+    #[test]
+    fn pipeline_stage_pays_stream_in_only_when_noc_is_on() {
+        let mut off = pipeline_sched(false);
+        let (off1, off2) = run_two_pipeline_stages(&mut off);
+        assert!(off.noc_report().is_none(), "disabled NoC reports nothing");
+
+        let mut on = pipeline_sched(true);
+        let (on1, on2) = run_two_pipeline_stages(&mut on);
+        // the graph source streams nothing in; on an otherwise-idle
+        // fabric comm-aware placement agrees with first-fit, so stage 1
+        // is cycle-identical
+        assert_eq!(on1.region, off1.region);
+        assert_eq!(on1.dpr_cycles, off1.dpr_cycles);
+        assert_eq!(on1.exec_cycles, off1.exec_cycles);
+        // stage 2 (demosaic b: 12 GLB banks) stages a 1080p 16-bit frame
+        // before compute: 4,147,200 B over 12 banks × 8 B/cycle =
+        // 43,200 cycles at slowdown 1.0
+        assert_eq!(on2.exec_cycles, off2.exec_cycles, "uncontended: no exec stretch");
+        assert_eq!(on2.dpr_cycles, off2.dpr_cycles + 43_200);
+
+        let r = on.noc_report().expect("enabled NoC reports");
+        assert_eq!(r.streams_placed, 2);
+        assert_eq!(r.stream_in_cycles, 43_200);
+        assert_eq!(r.contended_launches, 0, "one region at a time never contends");
+        assert_eq!(r.mean_slowdown, 1.0);
+        assert_eq!(r.affinity_hits, 1, "stage 2 placed with stage 1's position hint");
+        assert_eq!(r.corridors, 8);
+        assert_eq!(r.capacity, 20);
+    }
+
+    #[test]
+    fn noc_disabled_keeps_fig3a_launches_untouched() {
+        // knobs without the master switch change nothing, even with the
+        // pipeline-capable library loaded
+        let mut plain = sched(RegionPolicyKind::FlexibleShape);
+        let mut knobs = {
+            let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+            cfg.noc.comm_fraction = 0.9;
+            cfg.noc.placement = crate::config::NocPlacementKind::Oblivious;
+            cfg.noc.stream_affinity = false;
+            Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast)
+        };
+        for s in [&mut plain, &mut knobs] {
+            s.preload_all();
+        }
+        let mut qa = RequestQueue::new();
+        let mut qb = RequestQueue::new();
+        for (seq, app) in
+            [AppId::Camera, AppId::Harris, AppId::ResNet18, AppId::MobileNet].iter().enumerate()
+        {
+            submit(&mut qa, seq as u64, seq as u32, *app, 0);
+            submit(&mut qb, seq as u64, seq as u32, *app, 0);
+        }
+        let la = plain.schedule(&mut qa, 0);
+        let lb = knobs.schedule(&mut qb, 0);
+        assert_eq!(la.len(), lb.len());
+        for (a, b) in la.iter().zip(lb.iter()) {
+            assert_eq!(a.region, b.region);
+            assert_eq!(a.ver, b.ver);
+            assert_eq!(a.dpr_cycles, b.dpr_cycles);
+            assert_eq!(a.exec_cycles, b.exec_cycles);
+            assert_eq!(a.finish, b.finish);
+        }
+        assert!(knobs.noc_report().is_none());
     }
 }

@@ -23,6 +23,10 @@ pub struct ReadyTask {
     pub class: QosClass,
     /// Absolute deadline of the owning request, if any.
     pub deadline: Option<u64>,
+    /// Bytes this node streams in from its graph predecessors before it
+    /// can compute ([`AppGraph::stream_in_bytes`]); priced by the NoC
+    /// contention model at launch.
+    pub stream_in_bytes: u64,
 }
 
 /// In-flight application requests and their ready frontier.
@@ -74,6 +78,7 @@ impl RequestQueue {
                     arrival_cycle: req.arrival_cycle,
                     class: req.class,
                     deadline: req.deadline,
+                    stream_in_bytes: graph.stream_in_bytes[inst.node],
                 }
             })
             .collect()

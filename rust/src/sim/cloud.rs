@@ -14,6 +14,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{
     FragmentationTracker, NtatRecord, NtatTracker, ThroughputTracker, UtilizationTracker,
 };
+use crate::noc::NocReport;
 use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
 use crate::scheduler::{CompletionOutcome, RequestQueue, Scheduler};
@@ -71,6 +72,8 @@ pub struct CloudReport {
     pub energy: Option<EnergyReport>,
     /// Per-class SLO report (`None` unless `[qos].enabled`).
     pub qos: Option<QosReport>,
+    /// NoC contention report (`None` unless `[noc].enabled`).
+    pub noc: Option<NocReport>,
 }
 
 impl CloudReport {
@@ -90,12 +93,37 @@ pub fn tenant_app(tenant: u32) -> AppId {
     AppId::ALL[tenant as usize % 4]
 }
 
+/// Tenant → application under a workload's optional
+/// `workload.tenant_apps` override (the streaming-pipeline presets);
+/// the Fig. 3a set otherwise.
+pub fn tenant_app_of(wl: &CloudWorkloadConfig, tenant: u32) -> AppId {
+    match &wl.tenant_apps {
+        Some(apps) => apps[tenant as usize % 4],
+        None => tenant_app(tenant),
+    }
+}
+
+/// Task library the configured workload needs: Table 1, extended with
+/// the demosaic stage when any tenant submits [`AppId::Pipeline`].
+pub fn workload_library(cfg: &Config) -> TaskLibrary {
+    let pipeline = matches!(
+        &cfg.workload,
+        WorkloadConfig::Cloud(c)
+            if c.tenant_apps.is_some_and(|apps| apps.contains(&AppId::Pipeline))
+    );
+    if pipeline {
+        TaskLibrary::table1_pipeline()
+    } else {
+        TaskLibrary::table1()
+    }
+}
+
 /// Run the cloud scenario under `cfg`.
 ///
 /// All mechanisms use fast-DPR here — Fig. 4 isolates the region
 /// mechanisms; Fig. 5 is where the DPR paths are compared.
 pub fn run_cloud(cfg: &Config) -> Result<CloudReport> {
-    run_cloud_with(cfg, TaskLibrary::table1())
+    run_cloud_with(cfg, workload_library(cfg))
 }
 
 /// [`run_cloud`] with an explicit task library (ablations re-quantize
@@ -141,12 +169,17 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
 
     // per-request accounting: seq → (app, arrival, serviced cycles)
     let mut inflight: BTreeMap<u64, (AppId, Cycle, u64)> = BTreeMap::new();
-    // app → total work per request (sum of its task works)
-    let app_work: BTreeMap<AppId, u64> = AppId::ALL
-        .iter()
-        .map(|&app| {
+    // app → total work per request (sum of its task works), over the
+    // apps the tenants actually submit (the map collapses duplicates)
+    let app_work: BTreeMap<AppId, u64> = (0..4u32)
+        .map(|t| tenant_app_of(wl, t))
+        .map(|app| {
             let g = AppGraph::of(app);
-            let w = g.nodes.iter().map(|t| lib.get(t).expect("table1").work).sum();
+            let w = g
+                .nodes
+                .iter()
+                .map(|t| lib.get(t).expect("library resolves workload tasks").work)
+                .sum();
             (app, w)
         })
         .collect();
@@ -163,13 +196,14 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
             Event::Arrival(t) => {
                 // admit the request (class/deadline resolve to
                 // BestEffort/None while `[qos]` is disabled)
-                queue.submit(AppRequest::new(seq, t, tenant_app(t), now).with_qos(
+                let app = tenant_app_of(wl, t);
+                queue.submit(AppRequest::new(seq, t, app, now).with_qos(
                     cfg.qos.class_of_tenant(t),
                     cfg.qos.deadline_of_tenant(t, now, cycles_per_ms),
                 ));
-                inflight.insert(seq, (tenant_app(t), now, 0));
+                inflight.insert(seq, (app, now, 0));
                 trace.log_with(now, || {
-                    format!("arrive seq={seq} tenant={t} app={}", tenant_app(t).name())
+                    format!("arrive seq={seq} tenant={t} app={}", app.name())
                 });
                 seq += 1;
                 submitted += 1;
@@ -280,6 +314,7 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
     let mig = sched.migration_stats();
     let energy = sched.energy_report(glb_util.horizon());
     let qos = if cfg.qos.enabled { Some(slo.report(sched.qos_stats())) } else { None };
+    let noc = sched.noc_report();
     Ok(CloudReport {
         policy: cfg.scheduler.region_policy,
         duration_cycles: duration,
@@ -299,6 +334,7 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
         rescued_launches: mig.rescued_launches,
         energy,
         qos,
+        noc,
     })
 }
 
@@ -391,6 +427,39 @@ mod tests {
         assert_eq!(r.migrations, 0);
         assert_eq!(r.rescued_launches, 0);
         assert!(r.nofit_events > 0);
+    }
+
+    // --------------------------------------------------------------- noc
+
+    #[test]
+    fn pipeline_tenants_drain_with_noc_accounting() {
+        let mut cfg = quick_cfg(RegionPolicyKind::FlexibleShape);
+        cfg.noc.enabled = true;
+        if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.tenant_apps =
+                Some([AppId::Pipeline, AppId::Camera, AppId::Pipeline, AppId::Harris]);
+        }
+        // `run_cloud` resolves the pipeline-capable library on its own
+        let r = run_cloud(&cfg).unwrap();
+        assert_eq!(r.submitted, r.completed);
+        let noc = r.noc.expect("noc enabled yields a report");
+        assert!(noc.streams_placed > 0);
+        assert!(noc.stream_in_cycles > 0, "pipeline stages must stage frames");
+        assert!(noc.mean_slowdown >= 1.0);
+    }
+
+    #[test]
+    fn tenant_apps_override_without_noc_still_drains() {
+        // the workload override is usable on its own: no [noc] switch,
+        // no report, but Pipeline requests resolve and complete
+        let mut cfg = quick_cfg(RegionPolicyKind::FlexibleShape);
+        if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.tenant_apps =
+                Some([AppId::Pipeline, AppId::Pipeline, AppId::Camera, AppId::Harris]);
+        }
+        let r = run_cloud(&cfg).unwrap();
+        assert_eq!(r.submitted, r.completed);
+        assert!(r.noc.is_none());
     }
 
     #[test]

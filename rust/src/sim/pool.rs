@@ -21,13 +21,14 @@ use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
 use crate::fabric::{FabricPool, PoolCompletion, ShardId};
 use crate::metrics::{FrameLatency, LatencyBreakdown, NtatRecord, NtatTracker, UtilizationTracker};
+use crate::noc::NocReport;
 use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
 use crate::tasks::{AppId, AppRequest, TaskLibrary};
 use crate::util::rng::Rng;
 
 use super::autonomous::{dpr_mode_for, EVENT_APPS};
-use super::cloud::tenant_app;
+use super::cloud::{tenant_app_of, workload_library};
 use super::engine::{Cycle, EventQueue};
 use super::trace::Trace;
 
@@ -89,6 +90,8 @@ pub struct PoolCloudReport {
     pub energy: Option<EnergyReport>,
     /// Pool-wide per-class SLO report (`None` unless `[qos].enabled`).
     pub qos: Option<QosReport>,
+    /// Merged NoC contention report (`None` unless `[noc].enabled`).
+    pub noc: Option<NocReport>,
     /// Per-shard breakdown.
     pub per_shard: Vec<ShardSimStats>,
 }
@@ -143,6 +146,8 @@ pub struct PoolEdgeReport {
     pub energy: Option<EnergyReport>,
     /// Pool-wide per-class SLO report (`None` unless `[qos].enabled`).
     pub qos: Option<QosReport>,
+    /// Merged NoC contention report (`None` unless `[noc].enabled`).
+    pub noc: Option<NocReport>,
     /// Per-shard breakdown.
     pub per_shard: Vec<ShardSimStats>,
 }
@@ -201,7 +206,7 @@ fn per_shard_stats(pool: &FabricPool) -> Vec<ShardSimStats> {
 
 /// Run the cloud scenario over a fabric pool configured by `cfg.pool`.
 pub fn run_cloud_pool(cfg: &Config) -> Result<PoolCloudReport> {
-    run_cloud_pool_traced(cfg, TaskLibrary::table1(), &mut Trace::disabled())
+    run_cloud_pool_traced(cfg, workload_library(cfg), &mut Trace::disabled())
 }
 
 /// [`run_cloud_pool`] with an explicit library and trace sink.
@@ -248,7 +253,7 @@ pub fn run_cloud_pool_traced(
     while let Some((now, ev)) = events.pop() {
         match ev {
             CloudEvent::Arrival(t) => {
-                let app = tenant_app(t);
+                let app = tenant_app_of(wl, t);
                 let req = AppRequest::new(seq, t, app, now).with_qos(
                     cfg.qos.class_of_tenant(t),
                     cfg.qos.deadline_of_tenant(t, now, cycles_per_ms),
@@ -390,6 +395,7 @@ pub fn run_cloud_pool_traced(
         nofit_events: mig.nofit_events,
         energy,
         qos,
+        noc: pool.noc_report(),
         per_shard: per_shard_stats(&pool),
     })
 }
@@ -611,6 +617,7 @@ pub fn run_edge_pool_traced(
         nofit_events: mig.nofit_events,
         energy,
         qos,
+        noc: pool.noc_report(),
         per_shard: per_shard_stats(&pool),
     })
 }

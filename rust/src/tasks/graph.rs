@@ -12,7 +12,8 @@ use crate::config::QosClass;
 use crate::error::{Error, Result};
 use crate::tasks::spec::TaskId;
 
-/// The four benchmark applications (paper Fig. 3a tenants).
+/// The benchmark applications (paper Fig. 3a tenants, plus the
+/// streaming-pipeline chain the NoC scenarios add).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum AppId {
     /// ResNet-18 (conv2_x → conv5_x chain).
@@ -23,10 +24,18 @@ pub enum AppId {
     Camera,
     /// Harris corner detector (single task).
     Harris,
+    /// Streaming camera→demosaic→Harris chain with explicit inter-stage
+    /// frame bytes ([`crate::noc`] scenarios).  Its demosaic stage lives
+    /// in [`crate::tasks::TaskLibrary::table1_pipeline`], not the plain
+    /// Table 1.
+    Pipeline,
 }
 
 impl AppId {
-    /// All applications, tenant order of Fig. 3a.
+    /// The paper's Fig. 3a tenant set, in tenant order.  Deliberately
+    /// *excludes* [`AppId::Pipeline`]: the default cloud workload maps
+    /// tenants over this array, and the pipeline app only enters via
+    /// `workload.tenant_apps` overrides.
     pub const ALL: [AppId; 4] = [AppId::ResNet18, AppId::MobileNet, AppId::Camera, AppId::Harris];
 
     /// Display name.
@@ -36,6 +45,30 @@ impl AppId {
             AppId::MobileNet => "MobileNet",
             AppId::Camera => "Camera pipeline",
             AppId::Harris => "Harris",
+            AppId::Pipeline => "Streaming pipeline",
+        }
+    }
+
+    /// Stable config / wire name (the SUBMIT app argument).
+    pub fn config_name(&self) -> &'static str {
+        match self {
+            AppId::ResNet18 => "resnet18",
+            AppId::MobileNet => "mobilenet",
+            AppId::Camera => "camera",
+            AppId::Harris => "harris",
+            AppId::Pipeline => "pipeline",
+        }
+    }
+
+    /// Parse a config / wire name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "resnet18" => Ok(AppId::ResNet18),
+            "mobilenet" => Ok(AppId::MobileNet),
+            "camera" => Ok(AppId::Camera),
+            "harris" => Ok(AppId::Harris),
+            "pipeline" => Ok(AppId::Pipeline),
+            other => Err(Error::Config(format!("unknown app '{other}'"))),
         }
     }
 }
@@ -56,7 +89,16 @@ pub struct AppGraph {
     pub nodes: Vec<TaskId>,
     /// `deps[i]` = indices of nodes that must complete before node `i`.
     pub deps: Vec<Vec<usize>>,
+    /// `stream_in_bytes[i]` = bytes node `i` streams in from its
+    /// predecessors over the NoC before it can compute (0 for graph
+    /// sources and for the pre-NoC apps, whose operands arrive
+    /// off-chip).  Priced by [`crate::noc::ContentionModel`].
+    pub stream_in_bytes: Vec<u64>,
 }
+
+/// Bytes per 1080p frame handed between pipeline stages (16-bit
+/// raw/RGB-ish planes; what the camera stage emits per invocation).
+pub const FRAME_STREAM_BYTES: u64 = 1920 * 1080 * 2;
 
 impl AppGraph {
     /// Canonical graph of an application.
@@ -76,21 +118,39 @@ impl AppGraph {
             ),
             AppId::Camera => AppGraph::chain(app, vec![TaskId::new("camera.pipeline")]),
             AppId::Harris => AppGraph::chain(app, vec![TaskId::new("harris.corner")]),
+            AppId::Pipeline => AppGraph::chain_with_streams(
+                app,
+                vec![
+                    TaskId::new("camera.pipeline"),
+                    TaskId::new("pipeline.demosaic"),
+                    TaskId::new("harris.corner"),
+                ],
+                vec![0, FRAME_STREAM_BYTES, FRAME_STREAM_BYTES],
+            ),
         }
     }
 
-    /// Linear chain: node i depends on node i-1.
+    /// Linear chain: node i depends on node i-1, no inter-stage streams.
     pub fn chain(app: AppId, nodes: Vec<TaskId>) -> AppGraph {
+        let n = nodes.len();
+        AppGraph::chain_with_streams(app, nodes, vec![0; n])
+    }
+
+    /// Linear chain with explicit per-node stream-in bytes.
+    pub fn chain_with_streams(app: AppId, nodes: Vec<TaskId>, stream_in_bytes: Vec<u64>) -> AppGraph {
         let deps = (0..nodes.len())
             .map(|i| if i == 0 { vec![] } else { vec![i - 1] })
             .collect();
-        AppGraph { app, nodes, deps }
+        AppGraph { app, nodes, deps, stream_in_bytes }
     }
 
     /// Validate: deps in range, acyclic by topological-order convention.
     pub fn validate(&self) -> Result<()> {
         if self.nodes.len() != self.deps.len() {
             return Err(Error::Sched("graph nodes/deps length mismatch".into()));
+        }
+        if self.nodes.len() != self.stream_in_bytes.len() {
+            return Err(Error::Sched("graph nodes/stream_in_bytes length mismatch".into()));
         }
         for (i, preds) in self.deps.iter().enumerate() {
             for &p in preds {
@@ -228,8 +288,37 @@ mod tests {
             app: AppId::Camera,
             nodes: vec![TaskId::new("a"), TaskId::new("b")],
             deps: vec![vec![1], vec![]],
+            stream_in_bytes: vec![0, 0],
         };
         assert!(g.validate().is_err());
+        let g = AppGraph {
+            app: AppId::Camera,
+            nodes: vec![TaskId::new("a")],
+            deps: vec![vec![]],
+            stream_in_bytes: vec![],
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn pipeline_graph_streams_frames_between_stages() {
+        let g = AppGraph::of(AppId::Pipeline);
+        g.validate().unwrap();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.nodes[1].0, "pipeline.demosaic");
+        assert_eq!(g.stream_in_bytes, vec![0, FRAME_STREAM_BYTES, FRAME_STREAM_BYTES]);
+        // the paper's Fig. 3a apps stream nothing between stages
+        for app in AppId::ALL {
+            assert!(AppGraph::of(app).stream_in_bytes.iter().all(|&b| b == 0));
+        }
+    }
+
+    #[test]
+    fn app_config_names_round_trip() {
+        for app in AppId::ALL.into_iter().chain([AppId::Pipeline]) {
+            assert_eq!(AppId::from_name(app.config_name()).unwrap(), app);
+        }
+        assert!(AppId::from_name("unknown").is_err());
     }
 
     #[test]

@@ -117,6 +117,28 @@ impl TaskLibrary {
         TaskLibrary { tasks }
     }
 
+    /// Table 1 plus the streaming-pipeline demosaic stage.
+    ///
+    /// Kept out of [`TaskLibrary::table1`] so the paper-faithful presets
+    /// (and their bitstream-preload and DPR-cache behavior) stay
+    /// byte-identical; used wherever [`crate::tasks::AppId::Pipeline`]
+    /// requests can appear — the NoC presets and the coordinator's wire
+    /// front.
+    pub fn table1_pipeline() -> TaskLibrary {
+        let mut lib = TaskLibrary::table1();
+        lib.insert(TaskSpec {
+            id: TaskId::new("pipeline.demosaic"),
+            name: "demosaic".into(),
+            work: workload::frame_pixels(),
+            unit: WorkUnit::Pixels,
+            variants: vec![
+                VariantSpec::new('a', 2.0, 2, 6).with_artifact("demosaic_a"),
+                VariantSpec::new('b', 8.0, 4, 12).with_artifact("demosaic_b"),
+            ],
+        });
+        lib
+    }
+
     /// Task lookup.
     pub fn get(&self, id: &TaskId) -> Result<&TaskSpec> {
         self.tasks
@@ -222,6 +244,20 @@ mod tests {
         let cycles = t.exec_cycles(t.variant(VariantId('a')).unwrap());
         let ms = cycles as f64 / 500e6 * 1e3;
         assert!((ms - 1.382).abs() < 0.01, "{ms}");
+    }
+
+    #[test]
+    fn pipeline_library_extends_table1() {
+        let lib = TaskLibrary::table1_pipeline();
+        assert_eq!(lib.len(), 10, "table1 + demosaic");
+        let t = lib.get(&TaskId::new("pipeline.demosaic")).unwrap();
+        assert_eq!(t.variants.len(), 2);
+        assert_eq!(t.fastest().demand.array_slices, 4);
+        // every node of the pipeline app graph resolves in this library
+        let g = crate::tasks::AppGraph::of(crate::tasks::AppId::Pipeline);
+        for node in &g.nodes {
+            lib.get(node).unwrap();
+        }
     }
 
     #[test]

@@ -99,6 +99,16 @@ impl WireClient {
         Ok((header, lines))
     }
 
+    /// `STATS NOC`: single-line reply — `STATS noc=off` while `[noc]`
+    /// is disabled, else `STATS noc=on …` with the merged counters.
+    pub fn stats_noc(&mut self) -> Result<String> {
+        let reply = self.send("STATS NOC")?;
+        if !reply.starts_with("STATS noc=") {
+            return Err(Error::Runtime(format!("bad STATS NOC reply: {reply}")));
+        }
+        Ok(reply)
+    }
+
     /// SUBMIT with retry on `BUSY` backpressure; returns the final
     /// (non-BUSY) reply and how many BUSY retries it took.
     pub fn submit(&mut self, tenant: u32, app: &str) -> Result<(String, u32)> {

@@ -1,0 +1,191 @@
+//! NoC subsystem invariants:
+//!
+//! 1. **Corridor conservation** — under arbitrary interleaved
+//!    occupy/release traffic, no corridor ever grants more tracks than
+//!    it physically has, and the incrementally maintained totals match
+//!    the live span multiset exactly.
+//! 2. **Alloc/release lockstep** — the allocator keeps the corridor map
+//!    in lockstep with the slice maps under every region mechanism:
+//!    each live region's span is charged while it runs, and releasing
+//!    every region restores an all-idle corridor map.
+//! 3. **Master switch** — with `[noc].enabled = false`, configured
+//!    placement/affinity/fraction knobs change nothing: traces and
+//!    reports are byte-identical to the plain preset and no NoC report
+//!    surfaces.
+//! 4. **Pipeline preset engages the subsystem** — the ablation scenario
+//!    actually places streams, the oblivious arm actually pays
+//!    contention, and the offered load drains fully either way.
+
+use cgra_mte::abstraction::{CorridorMap, CorridorSpan, SliceDemand, SliceRange};
+use cgra_mte::config::{
+    presets, ArchConfig, NocPlacementKind, RegionPolicyKind, SchedulerConfig, WorkloadConfig,
+};
+use cgra_mte::regions::{AllocOutcome, ExecutionRegion, RegionManager};
+use cgra_mte::sim::{run_cloud, run_cloud_traced, Trace};
+use cgra_mte::tasks::TaskLibrary;
+use cgra_mte::testutil::{forall_cfg, PropConfig};
+use cgra_mte::util::rng::Rng;
+
+/// A random traffic sequence over the paper geometry's 8 corridors:
+/// (start, len, tracks, release-probability) tuples.
+fn span_seq(rng: &mut Rng, size: u32) -> Vec<(u32, u32, u32, bool)> {
+    let len = 4 + rng.below(size as u64 * 2 + 1) as usize;
+    (0..len)
+        .map(|_| {
+            let start = rng.below(8) as u32;
+            let span_len = rng.range_inclusive(1, (8 - start) as u64) as u32;
+            let tracks = rng.range_inclusive(1, 12) as u32;
+            (start, span_len, tracks, rng.chance(0.4))
+        })
+        .collect()
+}
+
+#[test]
+fn grants_never_exceed_capacity_and_totals_stay_exact() {
+    let cfg = PropConfig { cases: 64, seed: 0xC0881D08, max_size: 24 };
+    forall_cfg(cfg, &span_seq, |ops| {
+        // paper geometry: 8 corridors, 5 tracks × 4 cols = 20 each
+        let mut m = CorridorMap::new(8, 20);
+        let mut live: Vec<CorridorSpan> = Vec::new();
+        let mut rng = Rng::new(ops.len() as u64 + 1);
+        for &(start, span_len, tracks, release) in ops {
+            if release && !live.is_empty() {
+                let idx = rng.below(live.len() as u64) as usize;
+                m.release(&live.swap_remove(idx));
+            } else {
+                let s = CorridorSpan::new(SliceRange::new(start, span_len), tracks);
+                m.occupy(&s);
+                live.push(s);
+            }
+            // conservation: grants are capped by the physical wires, the
+            // oversubscription factor never dips below parity
+            for c in 0..m.corridors() {
+                if m.granted(c) > m.capacity() || m.oversub(c) < 1.0 {
+                    return false;
+                }
+            }
+            // exactness: the incremental total equals the live multiset
+            let expect: u64 = live.iter().map(|s| s.range.len as u64 * s.tracks as u64).sum();
+            if m.total_demand() != expect {
+                return false;
+            }
+        }
+        for s in live.drain(..) {
+            m.release(&s);
+        }
+        m.is_idle() && m.oversubscribed_count() == 0
+    });
+}
+
+#[test]
+fn allocator_keeps_the_corridor_map_in_lockstep() {
+    for policy in RegionPolicyKind::ALL {
+        for comm_aware in [false, true] {
+            let arch = ArchConfig::default();
+            let sched = SchedulerConfig { region_policy: policy, ..SchedulerConfig::default() };
+            let mut mgr = RegionManager::new(&arch, &sched);
+            mgr.set_noc(&arch, comm_aware);
+            assert!(mgr.noc_enabled());
+            assert!(mgr.corridor_map().unwrap().is_idle());
+
+            let mut rng = Rng::new(0x11_0C ^ policy as u64 ^ comm_aware as u64);
+            let mut live: Vec<ExecutionRegion> = Vec::new();
+            for _ in 0..200 {
+                if rng.chance(0.4) && !live.is_empty() {
+                    let idx = rng.below(live.len() as u64) as usize;
+                    let region = live.swap_remove(idx);
+                    mgr.release(region.id).unwrap();
+                } else {
+                    let demand = SliceDemand::new(
+                        rng.range_inclusive(0, 12) as u32,
+                        rng.range_inclusive(1, 4) as u32,
+                    );
+                    if let AllocOutcome::Allocated(r) = mgr.try_allocate(&demand) {
+                        // lockstep: the committed span is charged now
+                        let span = mgr.corridor_span(r.id);
+                        let map = mgr.corridor_map().unwrap();
+                        for c in span.range.iter() {
+                            assert!(
+                                map.demand(c) >= span.tracks,
+                                "{policy:?}: corridor {c} missing region {}'s demand",
+                                r.id
+                            );
+                        }
+                        live.push(r);
+                    }
+                }
+            }
+            for region in live.drain(..) {
+                mgr.release(region.id).unwrap();
+            }
+            let map = mgr.corridor_map().unwrap();
+            assert!(
+                map.is_idle(),
+                "{policy:?} comm_aware={comm_aware}: corridor demand leaked: {}",
+                map.render()
+            );
+            assert_eq!(map.oversubscribed_count(), 0);
+            assert!(mgr.idle());
+        }
+    }
+}
+
+#[test]
+fn disabled_noc_with_configured_knobs_changes_nothing() {
+    let render = |trace: &Trace| -> String {
+        trace.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+    };
+    // plain preset, noc section untouched
+    let mut plain_cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+    if let WorkloadConfig::Cloud(ref mut c) = plain_cfg.workload {
+        c.duration_ms = 400.0;
+    }
+    let mut t_plain = Trace::new(1 << 20);
+    let plain = run_cloud_traced(&plain_cfg, TaskLibrary::table1(), &mut t_plain).unwrap();
+
+    // same preset with every knob set but the master switch off
+    let mut knobs = plain_cfg.clone();
+    knobs.noc.placement = NocPlacementKind::Oblivious;
+    knobs.noc.comm_fraction = 0.9;
+    knobs.noc.stream_affinity = false;
+    knobs.noc.defrag_align = false;
+    assert!(!knobs.noc.enabled);
+    let mut t_knobs = Trace::new(1 << 20);
+    let with_knobs = run_cloud_traced(&knobs, TaskLibrary::table1(), &mut t_knobs).unwrap();
+
+    assert_eq!(render(&t_plain), render(&t_knobs), "traces must be byte-identical");
+    assert_eq!(format!("{plain:?}"), format!("{with_knobs:?}"), "reports must match");
+    assert!(plain.noc.is_none() && with_knobs.noc.is_none());
+}
+
+#[test]
+fn pipeline_preset_places_streams_charges_contention_and_drains() {
+    let shorten = |mut cfg: cgra_mte::config::Config| {
+        if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+            c.duration_ms = 400.0;
+        }
+        cfg
+    };
+    let aware_cfg = shorten(presets::pipeline_scenario(NocPlacementKind::CommAware));
+    let aware = run_cloud(&aware_cfg).unwrap();
+    assert_eq!(aware.submitted, aware.completed, "offered load must drain");
+    let noc = aware.noc.expect("[noc] enabled by the preset");
+    assert!(noc.streams_placed > 0, "pipeline stages must place streams");
+    assert!(noc.mean_slowdown >= 1.0);
+    assert!(noc.peak_slowdown >= noc.mean_slowdown);
+    assert_eq!(noc.corridors, 8);
+    assert_eq!(noc.capacity, 20);
+
+    // the ablation's oblivious arm is well-formed at the same load and
+    // the comparison is non-vacuous: first-fit placement pays contention
+    let obliv_cfg = shorten(presets::pipeline_scenario(NocPlacementKind::Oblivious));
+    let obliv = run_cloud(&obliv_cfg).unwrap();
+    assert_eq!(obliv.submitted, aware.submitted, "equal offered load");
+    assert_eq!(obliv.submitted, obliv.completed);
+    let onoc = obliv.noc.expect("[noc] enabled by the preset");
+    assert!(onoc.streams_placed > 0);
+    assert!(
+        onoc.contended_launches > 0,
+        "oblivious placement must contend at saturating load"
+    );
+}

@@ -264,6 +264,9 @@ fn two_shard_pool_merges_completions_and_sums_tenant_counters() {
         assert!(l.contains("power_w=0.000"), "{l}");
         assert!(l.contains("throttled=0"), "{l}");
     }
+    // STATS NOC: `[noc]` is off in this config, so the surface is dark
+    let noc = client.stats_noc().expect("stats noc");
+    assert_eq!(noc, "STATS noc=off");
     // control-plane defrag broadcasts to both shards and merges
     let defrag = client.send("DEFRAG").expect("defrag");
     assert!(defrag.starts_with("DEFRAG migrated=0"), "{defrag}");
