@@ -7,7 +7,7 @@
 # the deterministic stub executor serves a built-in synthetic manifest
 # and no artifacts are needed.
 
-.PHONY: build test artifacts doc bench-smoke bench-noc bench-simperf
+.PHONY: build test artifacts doc bench-smoke bench-noc bench-simperf bench-serve
 
 build:
 	cargo build --release
@@ -32,6 +32,7 @@ bench-smoke:
 	cargo bench --bench ablation_qos -- --smoke
 	cargo bench --bench ablation_noc -- --smoke
 	cargo bench --bench simperf -- --smoke
+	cargo bench --bench serve_saturation -- --smoke
 
 # NoC ablation at full duration: comm-aware vs oblivious placement on
 # the streaming-pipeline preset plus the churn guard arm; writes
@@ -46,3 +47,11 @@ bench-noc:
 # a validated perf change.
 bench-simperf:
 	cargo bench --bench simperf
+
+# Serving-front saturation: a 10k-idle-connection army (clamped to the
+# fd limit) plus closed-loop load against the threaded front, the
+# reactor front (text), and the reactor front (binary framing); writes
+# BENCH_serve.json and enforces the reactor-beats-thread-per-conn gate
+# on accepted QPS and p99.  Raise `ulimit -n` for the full army.
+bench-serve:
+	cargo bench --bench serve_saturation

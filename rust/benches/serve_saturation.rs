@@ -1,0 +1,345 @@
+//! Open-loop serving-front saturation bench: a standing army of idle
+//! connections plus closed-loop load generators, run against three
+//! arms — the thread-per-connection front (text), the reactor front
+//! (text), and the reactor front (binary framing) — each on a fresh
+//! server.
+//!
+//! The idle army is where the fronts diverge: a thread-per-connection
+//! server pays one blocked thread and a 100 ms-timeout read tick per
+//! idle socket forever (10 000 idle conns ≈ 100 000 wakeups/s of pure
+//! overhead), while the reactor pays nothing until a socket turns
+//! readable.  The army is sized to 10 000 in full mode, clamped to what
+//! the process fd limit allows (each loopback connection costs two fds
+//! in-process — client end + accepted end).
+//!
+//! Gate (full mode only): the reactor-text arm must beat the threaded
+//! arm on accepted QPS outright, with p99 latency no worse than 1.25×
+//! the threaded front's (headroom for wall-clock noise; QPS is the
+//! primary signal).  `--smoke` runs a tiny army as a CI liveness check
+//! and does not enforce the gate — wall-clock comparisons on loaded
+//! shared runners are noise, not signal.
+//!
+//! Output: `BENCH_serve.json` (shared `cgra_mte::bench::jsonw` schema).
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use cgra_mte::bench::jsonw;
+use cgra_mte::config::{presets, Config, ServerModeKind};
+use cgra_mte::coordinator::frame::Opcode;
+use cgra_mte::coordinator::Server;
+use cgra_mte::metrics::export;
+use cgra_mte::testutil::wire::{BinWireClient, WireClient};
+
+const APPS: [&str; 4] = ["resnet18", "mobilenet", "camera", "harris"];
+
+/// p99 headroom over the threaded arm: QPS is the primary gate signal,
+/// latency only has to stay in the same league.
+const P99_HEADROOM: f64 = 1.25;
+
+struct ArmSpec {
+    name: &'static str,
+    mode: ServerModeKind,
+    binary: bool,
+}
+
+const ARMS: [ArmSpec; 3] = [
+    ArmSpec { name: "threaded-text", mode: ServerModeKind::Threaded, binary: false },
+    ArmSpec { name: "reactor-text", mode: ServerModeKind::Reactor, binary: false },
+    ArmSpec { name: "reactor-binary", mode: ServerModeKind::Reactor, binary: true },
+];
+
+struct ArmResult {
+    name: &'static str,
+    protocol: &'static str,
+    idle_conns: usize,
+    load_conns: u32,
+    ok: u64,
+    busy: u64,
+    err: u64,
+    accepted_qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+/// Soft fd limit of this process (`/proc/self/limits` on Linux; a
+/// conservative constant elsewhere).
+#[cfg(target_os = "linux")]
+fn fd_soft_limit() -> u64 {
+    std::fs::read_to_string("/proc/self/limits")
+        .ok()
+        .and_then(|text| {
+            text.lines()
+                .find(|l| l.starts_with("Max open files"))
+                .and_then(|l| l.split_whitespace().nth(3))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(1024)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn fd_soft_limit() -> u64 {
+    1024
+}
+
+fn serve_config(mode: ServerModeKind) -> Config {
+    let mut cfg = presets::paper_default();
+    cfg.artifacts_dir = cgra_mte::runtime::SYNTHETIC_DIR.into();
+    cfg.server.mode = mode;
+    cfg.server.workers = 2;
+    cfg.server.queue_depth = 64;
+    cfg
+}
+
+/// Build the standing army of idle connections, paced so accept queues
+/// never overflow.  Returns however many connected (the fd clamp should
+/// make failures rare).
+fn idle_army(addr: std::net::SocketAddr, target: usize) -> Vec<TcpStream> {
+    let mut army = Vec::with_capacity(target);
+    for i in 0..target {
+        match TcpStream::connect(addr) {
+            Ok(s) => army.push(s),
+            Err(_) => {
+                // give the accept side a beat, then try once more
+                std::thread::sleep(Duration::from_millis(20));
+                match TcpStream::connect(addr) {
+                    Ok(s) => army.push(s),
+                    Err(_) => break,
+                }
+            }
+        }
+        if i % 64 == 63 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    army
+}
+
+/// One closed-loop load connection: `per_conn` requests, one in seven a
+/// SUBMIT (BUSY counted, not retried), the rest single-line STATS.
+/// Returns (ok, busy, err, per-request latencies in ms).
+fn load_text(addr: std::net::SocketAddr, tenant: u32, per_conn: u32) -> (u64, u64, u64, Vec<f64>) {
+    let (mut ok, mut busy, mut err) = (0u64, 0u64, 0u64);
+    let mut lat = Vec::with_capacity(per_conn as usize);
+    let mut client = match WireClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return (0, 0, u64::from(per_conn), lat),
+    };
+    for i in 0..per_conn {
+        let line = if i % 7 == 0 {
+            format!("SUBMIT {tenant} {}", APPS[tenant as usize])
+        } else {
+            "STATS".to_string()
+        };
+        let t0 = Instant::now();
+        match client.send(&line) {
+            Ok(reply) => {
+                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                if reply.starts_with("BUSY") {
+                    busy += 1;
+                } else if reply.starts_with("ERR") {
+                    err += 1;
+                } else {
+                    ok += 1;
+                }
+            }
+            Err(_) => {
+                err += 1;
+                break;
+            }
+        }
+    }
+    let _ = client.send("QUIT");
+    (ok, busy, err, lat)
+}
+
+/// The binary-framing twin of [`load_text`].
+fn load_binary(
+    addr: std::net::SocketAddr,
+    tenant: u32,
+    per_conn: u32,
+) -> (u64, u64, u64, Vec<f64>) {
+    let (mut ok, mut busy, mut err) = (0u64, 0u64, 0u64);
+    let mut lat = Vec::with_capacity(per_conn as usize);
+    let mut client = match BinWireClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return (0, 0, u64::from(per_conn), lat),
+    };
+    for i in 0..per_conn {
+        let (op, t, payload): (Opcode, u16, &str) = if i % 7 == 0 {
+            (Opcode::Submit, tenant as u16, APPS[tenant as usize])
+        } else {
+            (Opcode::Stats, 0, "")
+        };
+        let t0 = Instant::now();
+        match client.request(op, t, payload.as_bytes()) {
+            Ok(reply) => {
+                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                match reply.opcode {
+                    Opcode::ReplyBusy => busy += 1,
+                    Opcode::ReplyErr => err += 1,
+                    _ => ok += 1,
+                }
+            }
+            Err(_) => {
+                err += 1;
+                break;
+            }
+        }
+    }
+    let _ = client.quit();
+    (ok, busy, err, lat)
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn run_arm(spec: &ArmSpec, idle_target: usize, load_conns: u32, per_conn: u32) -> ArmResult {
+    let server = Server::start(&serve_config(spec.mode), "127.0.0.1:0").expect("server start");
+    let addr = server.addr;
+
+    let army = idle_army(addr, idle_target);
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..load_conns)
+        .map(|c| {
+            let binary = spec.binary;
+            std::thread::spawn(move || {
+                let tenant = c % 4;
+                if binary {
+                    load_binary(addr, tenant, per_conn)
+                } else {
+                    load_text(addr, tenant, per_conn)
+                }
+            })
+        })
+        .collect();
+    let (mut ok, mut busy, mut err) = (0u64, 0u64, 0u64);
+    let mut lat = Vec::new();
+    for t in threads {
+        let (o, b, e, l) = t.join().expect("load thread panicked");
+        ok += o;
+        busy += b;
+        err += e;
+        lat.extend(l);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let idle_conns = army.len();
+    drop(army);
+    server.shutdown();
+
+    lat.sort_by(f64::total_cmp);
+    ArmResult {
+        name: spec.name,
+        protocol: if spec.binary { "binary" } else { "text" },
+        idle_conns,
+        load_conns,
+        ok,
+        busy,
+        err,
+        accepted_qps: ok as f64 / elapsed.max(1e-9),
+        p50_ms: percentile(&lat, 0.50),
+        p99_ms: percentile(&lat, 0.99),
+    }
+}
+
+fn arms_json(arms: &[ArmResult]) -> String {
+    jsonw::arr(
+        &arms
+            .iter()
+            .map(|r| {
+                jsonw::obj(&[
+                    ("arm", jsonw::str_val(r.name)),
+                    ("protocol", jsonw::str_val(r.protocol)),
+                    ("idle_conns", jsonw::num_u(r.idle_conns as u64)),
+                    ("load_conns", jsonw::num_u(u64::from(r.load_conns))),
+                    ("ok", jsonw::num_u(r.ok)),
+                    ("busy", jsonw::num_u(r.busy)),
+                    ("err", jsonw::num_u(r.err)),
+                    ("accepted_qps", jsonw::num_f(r.accepted_qps)),
+                    ("p50_ms", jsonw::num_f(r.p50_ms)),
+                    ("p99_ms", jsonw::num_f(r.p99_ms)),
+                    ("busy_rate", jsonw::num_f(r.busy as f64 / (r.ok + r.busy).max(1) as f64)),
+                ])
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let t0 = Instant::now();
+
+    // each loopback connection costs two fds in this process; leave 256
+    // for everything else (artifacts, sockets, the listener, stdio)
+    let fd_budget = (fd_soft_limit().saturating_sub(256) / 2) as usize;
+    let idle_target = if smoke { 16 } else { 10_000.min(fd_budget.max(64)) };
+    let load_conns = if smoke { 4 } else { 64 };
+    let per_conn = if smoke { 12 } else { 150 };
+
+    let mode = if smoke { "smoke" } else { "full" };
+    println!("serve-saturation — serving-front comparison ({mode} mode)");
+    println!("  idle army target {idle_target} (fd budget {fd_budget})");
+    println!("  load: {load_conns} conns × {per_conn} requests each");
+
+    let results: Vec<ArmResult> =
+        ARMS.iter().map(|spec| run_arm(spec, idle_target, load_conns, per_conn)).collect();
+
+    for r in &results {
+        println!(
+            "  {:<15} idle={:<5} ok={:<6} busy={:<5} err={:<3} {:>8.0} req/s  p50 {:>6.2} ms  p99 {:>6.2} ms",
+            r.name, r.idle_conns, r.ok, r.busy, r.err, r.accepted_qps, r.p50_ms, r.p99_ms
+        );
+    }
+
+    // ---- the reactor-beats-thread-per-conn gate (full mode only)
+    let threaded = &results[0];
+    let reactor = &results[1];
+    let qps_wins = reactor.accepted_qps > threaded.accepted_qps;
+    let p99_holds = reactor.p99_ms <= threaded.p99_ms * P99_HEADROOM;
+    let gate_pass = qps_wins && p99_holds;
+    if !smoke {
+        println!(
+            "  gate: reactor {:.0} req/s vs threaded {:.0} req/s ({}), \
+             p99 {:.2} ms vs {:.2} ms ×{P99_HEADROOM} ({})",
+            reactor.accepted_qps,
+            threaded.accepted_qps,
+            if qps_wins { "pass" } else { "FAIL" },
+            reactor.p99_ms,
+            threaded.p99_ms,
+            if p99_holds { "pass" } else { "FAIL" },
+        );
+    }
+
+    let doc = jsonw::obj(&[
+        ("bench", jsonw::str_val("serve-saturation")),
+        ("smoke", jsonw::bool_val(smoke)),
+        ("idle_conns_target", jsonw::num_u(idle_target as u64)),
+        ("load_conns", jsonw::num_u(u64::from(load_conns))),
+        ("requests_per_conn", jsonw::num_u(u64::from(per_conn))),
+        ("p99_headroom", jsonw::num_f(P99_HEADROOM)),
+        ("gate_enforced", jsonw::bool_val(!smoke)),
+        ("gate_reactor_beats_threaded", jsonw::bool_val(gate_pass)),
+        ("arms", arms_json(&results)),
+    ]);
+    let path = "BENCH_serve.json";
+    export::write_file(path, &doc).expect("write bench json");
+    println!("wrote {path}");
+    println!("bench wall time: {:.1} s", t0.elapsed().as_secs_f64());
+
+    // liveness floor in both modes: every arm must have served cleanly
+    for r in &results {
+        if r.ok == 0 || r.err > 0 {
+            eprintln!("liveness FAILED: arm {} ok={} err={}", r.name, r.ok, r.err);
+            std::process::exit(1);
+        }
+    }
+    if !smoke && !gate_pass {
+        eprintln!("serve-saturation gate FAILED: the reactor front must beat thread-per-conn");
+        std::process::exit(1);
+    }
+}

@@ -13,6 +13,6 @@ pub use schema::{
     ArchConfig, CloudWorkloadConfig, Config, DefragPolicyKind, DprConfig, EdgeWorkloadConfig,
     EnergyConfig, MigrationCostModelKind, NocConfig, NocPlacementKind, PlacementPolicyKind,
     PoolConfig, QosClass, QosConfig, QosPolicyKind, RegionPolicyKind, SchedulerConfig,
-    SchedulerPolicyKind, ServerConfig, WorkloadConfig,
+    SchedulerPolicyKind, ServerConfig, ServerModeKind, WireProtocolKind, WorkloadConfig,
 };
 pub use toml::TomlValue;

@@ -948,6 +948,87 @@ impl Default for EdgeWorkloadConfig {
     }
 }
 
+/// Which socket-facing front the serving coordinator runs
+/// ([`crate::coordinator::Server`]).  Both fronts share the scheduler
+/// side (admission queues, workers, shard executors) and the protocol
+/// core, so replies are byte-identical across modes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ServerModeKind {
+    /// Thread-per-connection: the accept loop spawns one blocking
+    /// reader thread per client.  Simple and debuggable, but ten
+    /// thousand idle connections cost ten thousand parked threads each
+    /// waking on a 100 ms read-timeout tick.
+    Threaded,
+    /// Single nonblocking event loop (epoll on Linux, a portable scan
+    /// fallback elsewhere) owning every socket: idle connections cost
+    /// nothing, and the binary framing's request ids let one connection
+    /// multiplex many in-flight requests.
+    Reactor,
+}
+
+impl ServerModeKind {
+    /// All modes, in documentation order.
+    pub const ALL: [ServerModeKind; 2] = [ServerModeKind::Threaded, ServerModeKind::Reactor];
+
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServerModeKind::Threaded => "threaded",
+            ServerModeKind::Reactor => "reactor",
+        }
+    }
+
+    /// Parse a config name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "threaded" | "thread-per-conn" | "thread_per_conn" => Ok(ServerModeKind::Threaded),
+            "reactor" | "event-loop" | "event_loop" => Ok(ServerModeKind::Reactor),
+            other => Err(Error::Config(format!("unknown server mode '{other}'"))),
+        }
+    }
+}
+
+/// Which wire encodings the serving front accepts.  The reactor
+/// negotiates per connection from the first byte on the wire: `0xC6`
+/// (the binary frame magic, [`crate::coordinator::frame`]) selects the
+/// binary framing, anything else the line-oriented text protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WireProtocolKind {
+    /// Accept both encodings, negotiated by the first byte (default).
+    Auto,
+    /// Text protocol only: a connection opening with the frame magic is
+    /// refused.
+    Text,
+    /// Binary framing only: a connection opening with anything else is
+    /// refused.  Reactor mode only — the threaded front speaks text.
+    Binary,
+}
+
+impl WireProtocolKind {
+    /// All protocol selections, in documentation order.
+    pub const ALL: [WireProtocolKind; 3] =
+        [WireProtocolKind::Auto, WireProtocolKind::Text, WireProtocolKind::Binary];
+
+    /// Stable config / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireProtocolKind::Auto => "auto",
+            WireProtocolKind::Text => "text",
+            WireProtocolKind::Binary => "binary",
+        }
+    }
+
+    /// Parse a config name.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "auto" | "both" => Ok(WireProtocolKind::Auto),
+            "text" => Ok(WireProtocolKind::Text),
+            "binary" | "framed" => Ok(WireProtocolKind::Binary),
+            other => Err(Error::Config(format!("unknown wire protocol '{other}'"))),
+        }
+    }
+}
+
 /// TCP serving-front parameters (`[server]` in TOML) — the worker-pool
 /// coordinator of [`crate::coordinator::Server`].
 #[derive(Clone, Debug, PartialEq)]
@@ -968,11 +1049,29 @@ pub struct ServerConfig {
     /// a batch larger than the window could trip it mid-serve.
     /// TOML: `server.batch_max`.
     pub batch_max: u32,
+    /// Socket-facing front: thread-per-connection or the nonblocking
+    /// reactor.  TOML: `server.mode`.
+    pub mode: ServerModeKind,
+    /// Wire encodings accepted (reactor negotiates per connection from
+    /// the first byte).  TOML: `server.protocol`.
+    pub protocol: WireProtocolKind,
+    /// Reactor-only idle reaper: a connection that has not *completed a
+    /// request* for this long (raw bytes don't count, so slow-loris
+    /// dribbling can't hold a socket) is closed.  `0` disables the
+    /// reaper.  TOML: `server.idle_timeout_ms`.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { workers: 2, queue_depth: 32, batch_max: 8 }
+        ServerConfig {
+            workers: 2,
+            queue_depth: 32,
+            batch_max: 8,
+            mode: ServerModeKind::Threaded,
+            protocol: WireProtocolKind::Auto,
+            idle_timeout_ms: 0,
+        }
     }
 }
 
@@ -995,6 +1094,13 @@ impl ServerConfig {
                 "server.batch_max ({}) exceeds the router's per-tenant in-flight window (64)",
                 self.batch_max
             )));
+        }
+        if self.mode == ServerModeKind::Threaded && self.protocol == WireProtocolKind::Binary {
+            return Err(Error::Config(
+                "server.protocol = \"binary\" requires server.mode = \"reactor\" \
+                 (the threaded front speaks the text protocol only)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -1124,6 +1230,13 @@ impl Config {
             read_u32(server, "workers", &mut s.workers)?;
             read_u32(server, "queue_depth", &mut s.queue_depth)?;
             read_u32(server, "batch_max", &mut s.batch_max)?;
+            if let Some(v) = server.get("mode") {
+                s.mode = ServerModeKind::from_name(str_of(v, "server.mode")?)?;
+            }
+            if let Some(v) = server.get("protocol") {
+                s.protocol = WireProtocolKind::from_name(str_of(v, "server.protocol")?)?;
+            }
+            read_u64(server, "idle_timeout_ms", &mut s.idle_timeout_ms)?;
         }
 
         if let Some(pool) = root.get("pool") {
@@ -1464,6 +1577,9 @@ mod tests {
         // defaults when the section is absent
         let d = Config::default().server;
         assert_eq!((d.workers, d.queue_depth, d.batch_max), (2, 32, 8));
+        assert_eq!(d.mode, ServerModeKind::Threaded);
+        assert_eq!(d.protocol, WireProtocolKind::Auto);
+        assert_eq!(d.idle_timeout_ms, 0);
         // zero knobs rejected
         assert!(Config::from_toml_text("[server]\nworkers = 0\n").is_err());
         assert!(Config::from_toml_text("[server]\nqueue_depth = 0\n").is_err());
@@ -1471,6 +1587,33 @@ mod tests {
         assert!(Config::from_toml_text("[server]\nworkers = 1000\n").is_err());
         // batch_max must stay within the router's in-flight window
         assert!(Config::from_toml_text("[server]\nbatch_max = 100\n").is_err());
+    }
+
+    #[test]
+    fn server_mode_and_protocol_parse_and_validate() {
+        let cfg = Config::from_toml_text(
+            "[server]\nmode = \"reactor\"\nprotocol = \"binary\"\nidle_timeout_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.mode, ServerModeKind::Reactor);
+        assert_eq!(cfg.server.protocol, WireProtocolKind::Binary);
+        assert_eq!(cfg.server.idle_timeout_ms, 250);
+        // name round-trips plus aliases
+        for kind in ServerModeKind::ALL {
+            assert_eq!(ServerModeKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(ServerModeKind::from_name("event-loop").unwrap(), ServerModeKind::Reactor);
+        for kind in WireProtocolKind::ALL {
+            assert_eq!(WireProtocolKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(WireProtocolKind::from_name("framed").unwrap(), WireProtocolKind::Binary);
+        // unknown names rejected
+        assert!(Config::from_toml_text("[server]\nmode = \"magic\"\n").is_err());
+        assert!(Config::from_toml_text("[server]\nprotocol = \"magic\"\n").is_err());
+        // binary-only needs the reactor front (the threaded one is text)
+        assert!(Config::from_toml_text("[server]\nprotocol = \"binary\"\n").is_err());
+        let ok = Config::from_toml_text("[server]\nmode = \"reactor\"\nprotocol = \"text\"\n");
+        assert!(ok.is_ok());
     }
 
     #[test]

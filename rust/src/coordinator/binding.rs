@@ -4,7 +4,9 @@
 //! artifact (from the Table 1 library's `artifact` field), executes it
 //! through PJRT, and optionally verifies the golden checksum — giving the
 //! live coordinator bit-real task outputs next to the slice-level timing
-//! model.
+//! model.  Execution happens on shard executor threads regardless of
+//! which socket front admitted the request, so the reactor's single
+//! event-loop thread never blocks on PJRT.
 
 use crate::error::{Error, Result};
 use crate::runtime::{ExecOutput, RuntimeClient};

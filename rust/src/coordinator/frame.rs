@@ -1,0 +1,380 @@
+//! Length-prefixed binary framing for the serving front.
+//!
+//! The text protocol of [`crate::coordinator::server`] is one line per
+//! request and per reply — easy to drive from `nc`, but every request
+//! costs a linear newline scan and a UTF-8 pass, and a reply cannot be
+//! correlated to its request, so a connection can only be used
+//! synchronously.  The binary framing fixes both: a fixed 20-byte
+//! header carries the opcode, the tenant, a client-chosen request id
+//! (echoed on the reply, so one connection can multiplex many in-flight
+//! requests), and the payload length, followed by the payload bytes.
+//!
+//! Wire layout (all multi-byte fields little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  C6 47 52 41          ("\xC6GRA")
+//! 4       1     version (currently 1)
+//! 5       1     opcode ([`Opcode`])
+//! 6       2     tenant (u16; requests only, zero in replies)
+//! 8       8     req_id (u64; echoed verbatim on the reply)
+//! 16      4     payload length (u32, ≤ [`MAX_PAYLOAD`])
+//! 20      len   payload
+//! ```
+//!
+//! The first magic byte is `0xC6` — not valid ASCII and not the first
+//! byte of any text-protocol verb — so a server can negotiate the
+//! protocol from the first byte a connection sends (see
+//! [`crate::config::WireProtocolKind`]).
+//!
+//! Request payloads reuse the text protocol's argument syntax (a SUBMIT
+//! payload is `<app> [class] [deadline_ms]`; the tenant rides in the
+//! header).  Reply payloads are the *exact* text-protocol reply bytes,
+//! including embedded newlines for multi-line `STATS` surfaces — which
+//! is what lets the conformance suite assert byte-identical behavior
+//! across both protocols.
+//!
+//! [`decode`] is incremental and zero-copy: it borrows the payload
+//! straight out of the caller's receive buffer and reports exactly how
+//! many bytes one frame consumed, so a reactor can feed it partial
+//! reads and coalesced multi-frame buffers alike.  Decoding is a pure
+//! function of the buffer prefix, which makes the byte-at-a-time and
+//! whole-buffer decode paths trivially equivalent (property-tested in
+//! `tests/prop_frame.rs`).
+
+use std::fmt;
+
+/// Frame magic: `0xC6` then `"GRA"`.
+pub const MAGIC: [u8; 4] = [0xC6, 0x47, 0x52, 0x41];
+
+/// Current framing version.
+pub const VERSION: u8 = 1;
+
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 20;
+
+/// Maximum payload length a peer may send; larger length prefixes are
+/// rejected before any buffering ([`FrameError::Oversized`]).
+pub const MAX_PAYLOAD: usize = 64 * 1024;
+
+/// Frame opcodes.  Requests occupy the low range, replies the high bit;
+/// a reply's opcode mirrors the first token of the text-protocol reply
+/// line it carries ([`Opcode::for_reply_line`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Opcode {
+    /// `SUBMIT`: payload `<app> [class] [deadline_ms]`, tenant in header.
+    Submit,
+    /// `STATS`: payload is the subcommand bytes (empty for aggregate).
+    Stats,
+    /// `DEFRAG`: empty payload.
+    Defrag,
+    /// `QUIT`: close this connection after the reply.
+    Quit,
+    /// `SHUTDOWN`: graceful server shutdown.
+    Shutdown,
+    /// Reply carrying an `OK …` line.
+    ReplyOk,
+    /// Reply carrying a `BUSY …` backpressure line.
+    ReplyBusy,
+    /// Reply carrying an `ERR …` line.
+    ReplyErr,
+    /// Reply carrying a (possibly multi-line) `STATS …` payload.
+    ReplyStats,
+    /// Reply carrying a `DEFRAG …` line.
+    ReplyDefrag,
+    /// Reply carrying a `BYE …` line.
+    ReplyBye,
+}
+
+impl Opcode {
+    /// Wire encoding of this opcode.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Opcode::Submit => 0x01,
+            Opcode::Stats => 0x02,
+            Opcode::Defrag => 0x03,
+            Opcode::Quit => 0x04,
+            Opcode::Shutdown => 0x05,
+            Opcode::ReplyOk => 0x81,
+            Opcode::ReplyBusy => 0x82,
+            Opcode::ReplyErr => 0x83,
+            Opcode::ReplyStats => 0x84,
+            Opcode::ReplyDefrag => 0x85,
+            Opcode::ReplyBye => 0x86,
+        }
+    }
+
+    /// Decode a wire opcode byte.
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        match v {
+            0x01 => Some(Opcode::Submit),
+            0x02 => Some(Opcode::Stats),
+            0x03 => Some(Opcode::Defrag),
+            0x04 => Some(Opcode::Quit),
+            0x05 => Some(Opcode::Shutdown),
+            0x81 => Some(Opcode::ReplyOk),
+            0x82 => Some(Opcode::ReplyBusy),
+            0x83 => Some(Opcode::ReplyErr),
+            0x84 => Some(Opcode::ReplyStats),
+            0x85 => Some(Opcode::ReplyDefrag),
+            0x86 => Some(Opcode::ReplyBye),
+            _ => None,
+        }
+    }
+
+    /// Whether this opcode is a client request (as opposed to a reply).
+    pub fn is_request(self) -> bool {
+        self.as_u8() & 0x80 == 0
+    }
+
+    /// Reply opcode for a text-protocol reply line, keyed on its first
+    /// token.  Unknown shapes map to [`Opcode::ReplyErr`] — every reply
+    /// the server emits starts with one of the five known tokens.
+    pub fn for_reply_line(line: &str) -> Opcode {
+        match line.split_whitespace().next() {
+            Some("OK") => Opcode::ReplyOk,
+            Some("BUSY") => Opcode::ReplyBusy,
+            Some("STATS") => Opcode::ReplyStats,
+            Some("DEFRAG") => Opcode::ReplyDefrag,
+            Some("BYE") => Opcode::ReplyBye,
+            _ => Opcode::ReplyErr,
+        }
+    }
+}
+
+/// A decode failure.  Every variant is a protocol violation that the
+/// server answers with one `ERR bad frame: …` reply before closing the
+/// connection — a malformed peer can never desynchronize the stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Byte at `offset` (< 4) does not match [`MAGIC`].
+    BadMagic { byte: u8, offset: usize },
+    /// Unsupported framing version.
+    BadVersion(u8),
+    /// Unknown opcode byte.
+    BadOpcode(u8),
+    /// Length prefix exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic { byte, offset } => {
+                write!(f, "bad magic byte 0x{byte:02x} at offset {offset}")
+            }
+            FrameError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            FrameError::BadOpcode(v) => write!(f, "unknown opcode 0x{v:02x}"),
+            FrameError::Oversized(n) => {
+                write!(f, "payload length {n} exceeds {MAX_PAYLOAD}")
+            }
+        }
+    }
+}
+
+/// One decoded frame, borrowing its payload from the receive buffer.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Frame<'a> {
+    /// Frame opcode.
+    pub opcode: Opcode,
+    /// Tenant id (requests; zero in replies).
+    pub tenant: u16,
+    /// Client-chosen request id, echoed on the reply.
+    pub req_id: u64,
+    /// Payload bytes (borrowed, zero-copy).
+    pub payload: &'a [u8],
+}
+
+/// Total encoded size of a frame with a `payload_len`-byte payload.
+pub fn encoded_len(payload_len: usize) -> usize {
+    HEADER_LEN + payload_len
+}
+
+/// Append one encoded frame to `out`.
+///
+/// Panics (debug assertion) if `payload` exceeds [`MAX_PAYLOAD`] — the
+/// server's replies are bounded well below it and clients must chunk.
+pub fn encode_into(out: &mut Vec<u8>, opcode: Opcode, tenant: u16, req_id: u64, payload: &[u8]) {
+    debug_assert!(payload.len() <= MAX_PAYLOAD, "frame payload too large");
+    out.reserve(encoded_len(payload.len()));
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(opcode.as_u8());
+    out.extend_from_slice(&tenant.to_le_bytes());
+    out.extend_from_slice(&req_id.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Encode one frame into a fresh buffer.
+pub fn encode(opcode: Opcode, tenant: u16, req_id: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(encoded_len(payload.len()));
+    encode_into(&mut out, opcode, tenant, req_id, payload);
+    out
+}
+
+/// Incrementally decode one frame from the front of `buf`.
+///
+/// * `Ok(None)` — the buffer holds a valid prefix of a frame; feed more
+///   bytes and call again.
+/// * `Ok(Some((frame, consumed)))` — one complete frame; the caller
+///   should drop the first `consumed` bytes afterwards.  Bytes past
+///   `consumed` (a coalesced next frame) are untouched.
+/// * `Err(_)` — protocol violation, detected at the earliest byte that
+///   proves it (a bad magic byte errors before the header completes).
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame<'_>, usize)>, FrameError> {
+    for (offset, &byte) in buf.iter().take(MAGIC.len()).enumerate() {
+        if byte != MAGIC[offset] {
+            return Err(FrameError::BadMagic { byte, offset });
+        }
+    }
+    if buf.len() > 4 && buf[4] != VERSION {
+        return Err(FrameError::BadVersion(buf[4]));
+    }
+    if buf.len() > 5 && Opcode::from_u8(buf[5]).is_none() {
+        return Err(FrameError::BadOpcode(buf[5]));
+    }
+    if buf.len() >= HEADER_LEN {
+        let len = u32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]);
+        if len as usize > MAX_PAYLOAD {
+            return Err(FrameError::Oversized(len));
+        }
+        let total = HEADER_LEN + len as usize;
+        if buf.len() >= total {
+            let opcode = Opcode::from_u8(buf[5]).expect("opcode validated above");
+            return Ok(Some((
+                Frame {
+                    opcode,
+                    tenant: u16::from_le_bytes([buf[6], buf[7]]),
+                    req_id: u64::from_le_bytes([
+                        buf[8], buf[9], buf[10], buf[11], buf[12], buf[13], buf[14], buf[15],
+                    ]),
+                    payload: &buf[HEADER_LEN..total],
+                },
+                total,
+            )));
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let buf = encode(Opcode::Submit, 3, 0xDEAD_BEEF_CAFE_F00D, b"harris critical 4.0");
+        assert_eq!(buf.len(), encoded_len(19));
+        let (frame, consumed) = decode(&buf).unwrap().expect("complete frame");
+        assert_eq!(consumed, buf.len());
+        assert_eq!(frame.opcode, Opcode::Submit);
+        assert_eq!(frame.tenant, 3);
+        assert_eq!(frame.req_id, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(frame.payload, b"harris critical 4.0");
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let buf = encode(Opcode::Defrag, 0, 7, b"");
+        let (frame, consumed) = decode(&buf).unwrap().expect("complete frame");
+        assert_eq!(consumed, HEADER_LEN);
+        assert_eq!(frame.opcode, Opcode::Defrag);
+        assert!(frame.payload.is_empty());
+    }
+
+    #[test]
+    fn truncated_prefixes_need_more_bytes() {
+        let buf = encode(Opcode::Stats, 1, 2, b"SHARDS");
+        for cut in 0..buf.len() {
+            assert_eq!(decode(&buf[..cut]).unwrap(), None, "cut at {cut}");
+        }
+        assert!(decode(&buf).unwrap().is_some());
+    }
+
+    #[test]
+    fn coalesced_frames_decode_in_sequence() {
+        let mut buf = encode(Opcode::Stats, 0, 1, b"");
+        encode_into(&mut buf, Opcode::Quit, 0, 2, b"");
+        let (first, consumed) = decode(&buf).unwrap().expect("first frame");
+        assert_eq!(first.opcode, Opcode::Stats);
+        assert_eq!(first.req_id, 1);
+        let (second, rest) = decode(&buf[consumed..]).unwrap().expect("second frame");
+        assert_eq!(second.opcode, Opcode::Quit);
+        assert_eq!(second.req_id, 2);
+        assert_eq!(consumed + rest, buf.len());
+    }
+
+    #[test]
+    fn bad_magic_detected_at_first_divergent_byte() {
+        assert_eq!(decode(&[0x00]), Err(FrameError::BadMagic { byte: 0x00, offset: 0 }));
+        // first byte right, second wrong: caught with only two bytes seen
+        assert_eq!(
+            decode(&[MAGIC[0], 0xFF]),
+            Err(FrameError::BadMagic { byte: 0xFF, offset: 1 })
+        );
+    }
+
+    #[test]
+    fn bad_version_and_opcode_rejected_early() {
+        let mut buf = encode(Opcode::Quit, 0, 0, b"");
+        buf[4] = 9;
+        assert_eq!(decode(&buf[..5]), Err(FrameError::BadVersion(9)));
+        let mut buf = encode(Opcode::Quit, 0, 0, b"");
+        buf[5] = 0x7F;
+        assert_eq!(decode(&buf[..6]), Err(FrameError::BadOpcode(0x7F)));
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_buffering() {
+        let mut buf = encode(Opcode::Submit, 0, 0, b"x");
+        buf[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode(&buf), Err(FrameError::Oversized(u32::MAX)));
+        // ... and the exact boundary is accepted
+        let big = vec![0u8; MAX_PAYLOAD];
+        let buf = encode(Opcode::Submit, 0, 0, &big);
+        let (frame, consumed) = decode(&buf).unwrap().expect("max-size frame");
+        assert_eq!(frame.payload.len(), MAX_PAYLOAD);
+        assert_eq!(consumed, buf.len());
+    }
+
+    #[test]
+    fn opcode_bytes_roundtrip_and_classify() {
+        for op in [
+            Opcode::Submit,
+            Opcode::Stats,
+            Opcode::Defrag,
+            Opcode::Quit,
+            Opcode::Shutdown,
+            Opcode::ReplyOk,
+            Opcode::ReplyBusy,
+            Opcode::ReplyErr,
+            Opcode::ReplyStats,
+            Opcode::ReplyDefrag,
+            Opcode::ReplyBye,
+        ] {
+            assert_eq!(Opcode::from_u8(op.as_u8()), Some(op));
+            assert_eq!(op.is_request(), op.as_u8() < 0x80);
+        }
+        assert_eq!(Opcode::from_u8(0x00), None);
+        assert_eq!(Opcode::from_u8(0xFF), None);
+    }
+
+    #[test]
+    fn reply_opcode_mirrors_text_reply_token() {
+        assert_eq!(Opcode::for_reply_line("OK seq=0 ntat=1.00"), Opcode::ReplyOk);
+        assert_eq!(Opcode::for_reply_line("BUSY tenant=2 queue_depth=32"), Opcode::ReplyBusy);
+        assert_eq!(Opcode::for_reply_line("ERR bad app"), Opcode::ReplyErr);
+        assert_eq!(Opcode::for_reply_line("STATS served=0"), Opcode::ReplyStats);
+        assert_eq!(Opcode::for_reply_line("DEFRAG migrated=0"), Opcode::ReplyDefrag);
+        assert_eq!(Opcode::for_reply_line("BYE shutting down"), Opcode::ReplyBye);
+        assert_eq!(Opcode::for_reply_line(""), Opcode::ReplyErr);
+    }
+
+    #[test]
+    fn magic_first_byte_is_outside_ascii() {
+        // protocol negotiation hinges on this: no text-protocol line can
+        // begin with the binary magic
+        assert!(MAGIC[0] >= 0x80);
+    }
+}

@@ -6,6 +6,12 @@
 //! timing model; wall time measures the actual compute cost of the
 //! functional layer.  This is what `examples/cloud_multitenant.rs` runs
 //! and what EXPERIMENTS.md §End-to-end records.
+//!
+//! The leader is wire-agnostic: both serving fronts (threaded and
+//! reactor, either wire encoding) funnel into the same
+//! [`Submission`]s here, which is what lets
+//! `tests/protocol_conformance.rs` assert byte-identical replies and
+//! identical final STATS digests across all of them.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::AtomicU64;

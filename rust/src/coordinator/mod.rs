@@ -15,7 +15,9 @@
 //! and `DESIGN.md` §Coordinator for the module map.
 
 mod binding;
+pub mod frame;
 mod leader;
+mod reactor;
 mod router;
 pub mod server;
 

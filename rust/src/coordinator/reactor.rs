@@ -1,0 +1,1125 @@
+//! Nonblocking event-loop serving front (`server.mode = "reactor"`).
+//!
+//! One thread owns every client socket: a hand-rolled reactor over
+//! `epoll` (declared directly against the platform libc — the crate
+//! keeps its zero-heavy-deps stance) with a portable nonblocking-scan
+//! fallback for platforms without epoll or when `epoll_create1` fails.
+//! Each connection is a small state machine — protocol negotiation on
+//! the first byte, incremental buffer parsing, an in-order pending-reply
+//! queue — so ten thousand idle connections cost zero wakeups, where the
+//! thread-per-connection front pays a 100 ms-timeout `read` tick per
+//! connection forever.
+//!
+//! The scheduler side is *unchanged*: requests land in the same
+//! [`AdmissionQueues`](super::router::AdmissionQueues) behind the same
+//! [`admit`](super::server) / [`stats_reply`](super::server) /
+//! [`defrag_reply`](super::server) protocol core the threaded front
+//! uses, with the same counters, BUSY backpressure, and graceful-drain
+//! semantics — the conformance suite (`tests/protocol_conformance.rs`)
+//! holds the two fronts byte-identical.
+//!
+//! Reply routing: an admitted SUBMIT allocates an in-order *pending
+//! slot* on its connection and hands the scheduler worker a
+//! [`CompletionSink`]; the worker's reply travels over an mpsc channel
+//! back to the reactor, which a self-pipe waker nudges out of its poll
+//! wait.  A generation counter on each connection slot keeps a late
+//! completion for a closed connection from reaching whoever reused the
+//! slot.  `DEFRAG` — a blocking broadcast over every shard executor —
+//! runs on a dedicated control thread so the event loop never blocks.
+//!
+//! Graceful drain mirrors the threaded front: on shutdown the listener
+//! closes, connections owed nothing close immediately, connections with
+//! in-flight submissions stay until their replies flush (bounded by the
+//! same 10 s quiescence deadline), then the loop exits.
+//!
+//! An optional idle timeout (`server.idle_timeout_ms`) reaps
+//! connections that have not *completed a request* recently — raw bytes
+//! do not count as progress, so a slow-loris peer dribbling one byte
+//! per tick cannot hold a socket open indefinitely.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::WireProtocolKind;
+use crate::error::{Error, Result};
+
+use super::frame;
+use super::server::{admit, defrag_reply, parse_submit, stats_reply, ReplySink, Shared};
+
+/// Hard cap on concurrently open connections (slab slots).
+const MAX_CONNS: usize = 65_536;
+/// Longest accepted text-protocol line (bytes before the newline).
+const MAX_LINE: usize = 64 * 1024;
+/// Per-connection write-buffer cap: a peer that stops reading while
+/// replies accumulate past this is closed rather than buffered without
+/// bound.
+const WBUF_CAP: usize = 1024 * 1024;
+/// Base poll timeout: the loop re-checks the stop flag and the idle
+/// sweep at least this often (mirrors the threaded front's 100 ms read
+/// tick — but paid once per *loop*, not once per connection).
+const POLL_TIMEOUT_MS: i32 = 100;
+/// How long a draining shutdown waits for in-flight replies before
+/// force-closing (the threaded front's quiescence deadline).
+const DRAIN_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Poller token of the TCP listener.
+const TOKEN_LISTENER: u64 = u64::MAX;
+/// Poller token of the self-pipe waker.
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+
+// ---------------------------------------------------------------------
+// Self-pipe waker
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod wake {
+    use std::io::{Read, Write};
+    use std::os::unix::net::UnixStream;
+
+    /// Write half of the self-pipe: worker/control threads nudge the
+    /// event loop out of its poll wait by writing one byte.
+    pub struct Waker {
+        tx: UnixStream,
+    }
+
+    /// Read half, registered with the poller and drained on wakeup.
+    pub(super) struct WakeRx {
+        pub(super) rx: UnixStream,
+    }
+
+    pub(super) fn pair() -> std::io::Result<(Waker, WakeRx)> {
+        let (tx, rx) = UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok((Waker { tx }, WakeRx { rx }))
+    }
+
+    impl Waker {
+        /// Best-effort wake: a full pipe already guarantees a pending
+        /// wakeup, so the result is deliberately ignored.
+        pub fn wake(&self) {
+            let _ = (&self.tx).write(&[1u8]);
+        }
+    }
+
+    impl WakeRx {
+        /// Discard every buffered wake byte.
+        pub(super) fn drain(&mut self) {
+            let mut sink = [0u8; 64];
+            loop {
+                match self.rx.read(&mut sink) {
+                    Ok(0) => break,
+                    Ok(_) => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod wake {
+    /// No socketpair on this platform: the scan poller's bounded sleep
+    /// (≤ 1 ms when idle) picks completions up instead.
+    pub struct Waker;
+    pub(super) struct WakeRx;
+
+    pub(super) fn pair() -> std::io::Result<(Waker, WakeRx)> {
+        Ok((Waker, WakeRx))
+    }
+
+    impl Waker {
+        pub fn wake(&self) {}
+    }
+
+    impl WakeRx {
+        pub(super) fn drain(&mut self) {}
+    }
+}
+
+pub(super) use wake::Waker;
+
+// ---------------------------------------------------------------------
+// epoll FFI (linux) + portable scan fallback
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Minimal `epoll` declarations.  Every Rust binary on Linux links
+    //! the platform libc already; declaring the four entry points here
+    //! keeps the crate free of a `libc` dependency.
+
+    pub(super) const EPOLL_CLOEXEC: i32 = 0o2000000;
+    pub(super) const EPOLL_CTL_ADD: i32 = 1;
+    pub(super) const EPOLL_CTL_DEL: i32 = 2;
+    pub(super) const EPOLL_CTL_MOD: i32 = 3;
+    pub(super) const EPOLLIN: u32 = 0x1;
+    pub(super) const EPOLLOUT: u32 = 0x4;
+    pub(super) const EPOLLERR: u32 = 0x8;
+    pub(super) const EPOLLHUP: u32 = 0x10;
+
+    /// `struct epoll_event`.  Packed on x86-64, where the kernel ABI
+    /// leaves no padding between the 32-bit mask and the 64-bit data
+    /// word; fields must be read by value, never by reference.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub(super) struct EpollEvent {
+        pub(super) events: u32,
+        pub(super) data: u64,
+    }
+
+    extern "C" {
+        pub(super) fn epoll_create1(flags: i32) -> i32;
+        pub(super) fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub(super) fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout: i32,
+        ) -> i32;
+        pub(super) fn close(fd: i32) -> i32;
+    }
+}
+
+/// Raw-fd alias: a real descriptor where epoll exists, unit elsewhere
+/// (the scan poller never looks at it).
+#[cfg(target_os = "linux")]
+type Fd = i32;
+#[cfg(not(target_os = "linux"))]
+type Fd = ();
+
+#[cfg(target_os = "linux")]
+fn fd_of<T: std::os::fd::AsRawFd>(t: &T) -> Fd {
+    t.as_raw_fd()
+}
+#[cfg(not(target_os = "linux"))]
+fn fd_of<T>(_t: &T) -> Fd {}
+
+/// One epoll instance (closed on drop).
+#[cfg(target_os = "linux")]
+struct Epoll {
+    epfd: i32,
+}
+
+#[cfg(target_os = "linux")]
+impl Epoll {
+    fn new() -> std::io::Result<Epoll> {
+        // SAFETY: plain syscall with no pointer arguments.
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Epoll { epfd })
+    }
+
+    fn ctl(&self, op: i32, fd: i32, mask: u32, token: u64) -> std::io::Result<()> {
+        let mut ev = sys::EpollEvent { events: mask, data: token };
+        // SAFETY: `ev` outlives the call; the kernel copies it out.
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Wait for events, appending `(token, readable, writable)` tuples.
+    fn wait(&self, out: &mut Vec<(u64, bool, bool)>, timeout_ms: i32) -> std::io::Result<()> {
+        const CAP: usize = 256;
+        let mut events = [sys::EpollEvent { events: 0, data: 0 }; CAP];
+        // SAFETY: the buffer is valid for CAP entries and the kernel
+        // writes at most `maxevents` of them.
+        let n = unsafe { sys::epoll_wait(self.epfd, events.as_mut_ptr(), CAP as i32, timeout_ms) };
+        if n < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for ev in events.iter().take(n as usize) {
+            // copy packed fields by value (a reference would be UB)
+            let mask = ev.events;
+            let token = ev.data;
+            // error/hangup surfaces as readability: the read path maps
+            // it to a clean close
+            let readable = mask & (sys::EPOLLIN | sys::EPOLLERR | sys::EPOLLHUP) != 0;
+            let writable = mask & (sys::EPOLLOUT | sys::EPOLLERR | sys::EPOLLHUP) != 0;
+            out.push((token, readable, writable));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        // SAFETY: closing the fd we created; double-close is impossible
+        // because Drop runs once.
+        unsafe {
+            sys::close(self.epfd);
+        }
+    }
+}
+
+/// Readiness source: epoll where available, else a nonblocking scan of
+/// every socket with a bounded idle sleep.
+enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(Epoll),
+    Scan,
+}
+
+impl Poller {
+    fn new() -> Poller {
+        #[cfg(target_os = "linux")]
+        {
+            match Epoll::new() {
+                Ok(ep) => return Poller::Epoll(ep),
+                Err(e) => log::warn!("epoll_create1 failed ({e}); using scan poller"),
+            }
+        }
+        Poller::Scan
+    }
+
+    fn is_scan(&self) -> bool {
+        matches!(self, Poller::Scan)
+    }
+
+    fn add(&self, fd: Fd, token: u64, writable: bool) {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(ep) => {
+                let mask = sys::EPOLLIN | if writable { sys::EPOLLOUT } else { 0 };
+                if let Err(e) = ep.ctl(sys::EPOLL_CTL_ADD, fd, mask, token) {
+                    log::warn!("epoll add failed for token {token}: {e}");
+                }
+            }
+            Poller::Scan => {
+                let _ = (fd, token, writable);
+            }
+        }
+    }
+
+    fn modify(&self, fd: Fd, token: u64, writable: bool) {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(ep) => {
+                let mask = sys::EPOLLIN | if writable { sys::EPOLLOUT } else { 0 };
+                if let Err(e) = ep.ctl(sys::EPOLL_CTL_MOD, fd, mask, token) {
+                    log::warn!("epoll modify failed for token {token}: {e}");
+                }
+            }
+            Poller::Scan => {
+                let _ = (fd, token, writable);
+            }
+        }
+    }
+
+    fn del(&self, fd: Fd) {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(ep) => {
+                // dropping the socket would deregister it anyway; the
+                // explicit DEL just keeps the interest list tight
+                let _ = ep.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0);
+            }
+            Poller::Scan => {
+                let _ = fd;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Completion routing
+// ---------------------------------------------------------------------
+
+/// One reply line routed from a scheduler worker (or the control
+/// thread) back to the event loop.
+pub(super) struct Completion {
+    conn: usize,
+    gen: u64,
+    slot: u64,
+    line: String,
+}
+
+/// The reactor half of a [`ReplySink`]: identifies the connection (by
+/// slab index + generation) and the in-order pending slot the reply
+/// fulfills, and wakes the event loop after enqueueing.
+#[derive(Clone)]
+pub(super) struct CompletionSink {
+    tx: mpsc::Sender<Completion>,
+    waker: Arc<Waker>,
+    conn: usize,
+    gen: u64,
+    slot: u64,
+}
+
+impl CompletionSink {
+    /// Deliver one reply line to the event loop (best-effort, like the
+    /// threaded front's channel send).
+    pub(super) fn deliver(&self, line: String) {
+        let _ = self.tx.send(Completion {
+            conn: self.conn,
+            gen: self.gen,
+            slot: self.slot,
+            line,
+        });
+        self.waker.wake();
+    }
+}
+
+/// Control-plane work offloaded from the event loop.
+enum ControlMsg {
+    /// Run the blocking DEFRAG broadcast and complete `slot`.
+    Defrag { conn: usize, gen: u64, slot: u64 },
+}
+
+// ---------------------------------------------------------------------
+// Per-connection state machine
+// ---------------------------------------------------------------------
+
+/// Wire protocol a connection negotiated (from its first byte).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Proto {
+    /// Nothing received yet.
+    Unknown,
+    /// Line-oriented text protocol.
+    Text,
+    /// Length-prefixed binary framing ([`frame`]).
+    Binary,
+}
+
+/// A reply owed to the peer, delivered in request order.
+struct Pending {
+    /// Per-connection slot id ([`Conn::alloc_slot`]).
+    slot: u64,
+    /// Request id echoed on binary replies (0 on text).
+    req_id: u64,
+    /// `None` while the scheduler still owes the line.
+    line: Option<String>,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Generation guard against slab-slot reuse (see [`Completion`]).
+    gen: u64,
+    proto: Proto,
+    /// Unparsed received bytes.
+    rbuf: Vec<u8>,
+    /// Encoded-but-unsent reply bytes (`wpos` = flushed prefix).
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Replies owed, in request order.
+    pending: VecDeque<Pending>,
+    next_slot: u64,
+    /// Last instant a *complete request* was parsed (raw bytes do not
+    /// count — the slow-loris distinction) or the connection opened.
+    last_progress: Instant,
+    /// Stop reading and close once every owed reply has flushed.
+    close_after_flush: bool,
+    /// Whether the poller registration currently includes writability.
+    want_write: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, gen: u64) -> Conn {
+        Conn {
+            stream,
+            gen,
+            proto: Proto::Unknown,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            next_slot: 0,
+            last_progress: Instant::now(),
+            close_after_flush: false,
+            want_write: false,
+        }
+    }
+
+    /// Allocate the next in-order pending-reply slot.
+    fn alloc_slot(&mut self, req_id: u64) -> u64 {
+        self.next_slot += 1;
+        let slot = self.next_slot;
+        self.pending.push_back(Pending { slot, req_id, line: None });
+        slot
+    }
+
+    /// Fulfill a pending slot with its reply line.
+    fn fulfill(&mut self, slot: u64, line: String) {
+        if let Some(p) = self.pending.iter_mut().find(|p| p.slot == slot) {
+            p.line = Some(line);
+        }
+    }
+
+    /// Push an immediately-ready reply (STATS, errors, BYE, BUSY).
+    fn push_reply(&mut self, req_id: u64, line: String, close: bool) {
+        let slot = self.alloc_slot(req_id);
+        self.fulfill(slot, line);
+        if close {
+            self.close_after_flush = true;
+        }
+    }
+
+    /// Whether the peer is owed nothing (safe to reap/close).
+    fn drained(&self) -> bool {
+        self.pending.is_empty() && self.wpos >= self.wbuf.len()
+    }
+}
+
+/// What to do with a connection after servicing it.
+#[derive(Debug, PartialEq, Eq)]
+enum Verdict {
+    Keep,
+    Close,
+}
+
+/// Shared-state handles the per-connection service path needs; bundled
+/// so the borrow of one `Conn` out of the slab stays disjoint from
+/// them.
+struct Ctx<'a> {
+    shared: &'a Shared,
+    completions: &'a mpsc::Sender<Completion>,
+    waker: &'a Arc<Waker>,
+    control: Option<&'a mpsc::Sender<ControlMsg>>,
+    protocol: WireProtocolKind,
+    stopping: bool,
+}
+
+/// Pull every available byte off the socket into `rbuf`.  Returns
+/// `false` once the peer has closed or errored (no further requests).
+fn read_into(conn: &mut Conn) -> bool {
+    let mut tmp = [0u8; 16 * 1024];
+    loop {
+        match conn.stream.read(&mut tmp) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&tmp[..n]);
+                if n < tmp.len() {
+                    // short read: the socket buffer is drained, and
+                    // level-triggered readiness re-reports any race
+                    return true;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Parse and dispatch every complete request currently buffered.
+fn parse_and_dispatch(ctx: &Ctx<'_>, conn: &mut Conn, idx: usize) {
+    let mut off = 0usize;
+    while !conn.close_after_flush {
+        if conn.proto == Proto::Unknown {
+            match conn.rbuf.get(off) {
+                None => break,
+                Some(&b) if b == frame::MAGIC[0] => {
+                    if ctx.protocol == WireProtocolKind::Text {
+                        conn.push_reply(0, "ERR binary protocol disabled".into(), true);
+                        break;
+                    }
+                    conn.proto = Proto::Binary;
+                }
+                Some(_) => {
+                    if ctx.protocol == WireProtocolKind::Binary {
+                        conn.push_reply(0, "ERR text protocol disabled".into(), true);
+                        break;
+                    }
+                    conn.proto = Proto::Text;
+                }
+            }
+        }
+        let buf = &conn.rbuf[off..];
+        if buf.is_empty() {
+            break;
+        }
+        match conn.proto {
+            Proto::Text => match buf.iter().position(|&b| b == b'\n') {
+                None => {
+                    if buf.len() > MAX_LINE {
+                        conn.push_reply(0, "ERR line too long".into(), true);
+                    }
+                    break;
+                }
+                Some(pos) => {
+                    let line = match std::str::from_utf8(&buf[..pos]) {
+                        Ok(s) => s.trim_end().to_string(),
+                        Err(_) => {
+                            conn.push_reply(0, "ERR invalid utf-8".into(), true);
+                            off += pos + 1;
+                            break;
+                        }
+                    };
+                    off += pos + 1;
+                    dispatch_text(ctx, conn, idx, &line);
+                }
+            },
+            Proto::Binary => match frame::decode(buf) {
+                Ok(None) => break,
+                Ok(Some((f, consumed))) => {
+                    let req_id = f.req_id;
+                    let action = frame_action(ctx, &f);
+                    off += consumed;
+                    apply_action(ctx, conn, idx, req_id, action);
+                }
+                Err(e) => {
+                    conn.push_reply(0, format!("ERR bad frame: {e}"), true);
+                    break;
+                }
+            },
+            Proto::Unknown => unreachable!("negotiated above"),
+        }
+    }
+    if off > 0 {
+        // `off` only advances on complete requests, so this is the
+        // progress signal the idle sweep trusts
+        conn.rbuf.drain(..off);
+        conn.last_progress = Instant::now();
+    }
+}
+
+/// Owned dispatch decision for one binary frame (owned so the borrow of
+/// the receive buffer ends before the connection is mutated).
+enum FrameAction {
+    Immediate { line: String, close: bool },
+    Submit(super::server::ParsedSubmit),
+    Defrag,
+}
+
+fn frame_action(ctx: &Ctx<'_>, f: &frame::Frame<'_>) -> FrameAction {
+    let utf8_err = || FrameAction::Immediate {
+        line: "ERR bad frame: payload not utf-8".into(),
+        close: true,
+    };
+    match f.opcode {
+        frame::Opcode::Submit => match std::str::from_utf8(f.payload) {
+            Err(_) => utf8_err(),
+            Ok(args) => {
+                match parse_submit(Some(f.tenant as u32), args.split_whitespace()) {
+                    Ok(p) => FrameAction::Submit(p),
+                    Err(e) => FrameAction::Immediate { line: e, close: false },
+                }
+            }
+        },
+        frame::Opcode::Stats => match std::str::from_utf8(f.payload) {
+            Err(_) => utf8_err(),
+            Ok(sub) => FrameAction::Immediate {
+                line: stats_reply(ctx.shared, sub.split_whitespace().next()),
+                close: false,
+            },
+        },
+        frame::Opcode::Defrag => FrameAction::Defrag,
+        frame::Opcode::Quit => FrameAction::Immediate { line: "BYE".into(), close: true },
+        frame::Opcode::Shutdown => {
+            ctx.shared.begin_shutdown();
+            FrameAction::Immediate { line: "BYE shutting down".into(), close: true }
+        }
+        reply => FrameAction::Immediate {
+            line: format!("ERR bad frame: reply opcode 0x{:02x} in request", reply.as_u8()),
+            close: true,
+        },
+    }
+}
+
+fn apply_action(ctx: &Ctx<'_>, conn: &mut Conn, idx: usize, req_id: u64, action: FrameAction) {
+    match action {
+        FrameAction::Immediate { line, close } => conn.push_reply(req_id, line, close),
+        FrameAction::Submit(p) => dispatch_submit(ctx, conn, idx, req_id, p),
+        FrameAction::Defrag => dispatch_defrag(ctx, conn, idx, req_id),
+    }
+}
+
+fn dispatch_text(ctx: &Ctx<'_>, conn: &mut Conn, idx: usize, line: &str) {
+    let mut parts = line.split_whitespace();
+    match parts.next().map(|s| s.to_ascii_uppercase()).as_deref() {
+        Some("SUBMIT") => {
+            let tenant = parts.next().and_then(|t| t.parse::<u32>().ok());
+            match parse_submit(tenant, parts) {
+                Err(e) => conn.push_reply(0, e, false),
+                Ok(p) => dispatch_submit(ctx, conn, idx, 0, p),
+            }
+        }
+        Some("STATS") => conn.push_reply(0, stats_reply(ctx.shared, parts.next()), false),
+        Some("DEFRAG") => dispatch_defrag(ctx, conn, idx, 0),
+        Some("QUIT") => conn.push_reply(0, "BYE".into(), true),
+        Some("SHUTDOWN") => {
+            ctx.shared.begin_shutdown();
+            conn.push_reply(0, "BYE shutting down".into(), true);
+        }
+        Some(other) => conn.push_reply(0, format!("ERR unknown command '{other}'"), false),
+        None => conn.push_reply(0, "ERR empty command".into(), false),
+    }
+}
+
+fn dispatch_submit(
+    ctx: &Ctx<'_>,
+    conn: &mut Conn,
+    idx: usize,
+    req_id: u64,
+    p: super::server::ParsedSubmit,
+) {
+    let slot = conn.alloc_slot(req_id);
+    let sink = ReplySink::Reactor(CompletionSink {
+        tx: ctx.completions.clone(),
+        waker: ctx.waker.clone(),
+        conn: idx,
+        gen: conn.gen,
+        slot,
+    });
+    if let Some(busy) = admit(ctx.shared, p, sink) {
+        conn.fulfill(slot, busy);
+    }
+}
+
+fn dispatch_defrag(ctx: &Ctx<'_>, conn: &mut Conn, idx: usize, req_id: u64) {
+    let slot = conn.alloc_slot(req_id);
+    let sent = ctx.control.is_some_and(|tx| {
+        tx.send(ControlMsg::Defrag { conn: idx, gen: conn.gen, slot }).is_ok()
+    });
+    if !sent {
+        conn.fulfill(slot, "ERR coordinator unavailable".into());
+    }
+}
+
+/// Encode every leading ready reply and push the write buffer to the
+/// socket.
+fn flush(conn: &mut Conn) -> Verdict {
+    while conn.pending.front().is_some_and(|p| p.line.is_some()) {
+        let p = conn.pending.pop_front().expect("front checked above");
+        let line = p.line.expect("readiness checked above");
+        match conn.proto {
+            Proto::Binary => {
+                let op = frame::Opcode::for_reply_line(&line);
+                frame::encode_into(&mut conn.wbuf, op, 0, p.req_id, line.as_bytes());
+            }
+            _ => {
+                conn.wbuf.extend_from_slice(line.as_bytes());
+                conn.wbuf.push(b'\n');
+            }
+        }
+    }
+    if conn.wbuf.len() - conn.wpos > WBUF_CAP {
+        // peer stopped reading while replies piled up
+        return Verdict::Close;
+    }
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return Verdict::Close,
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return Verdict::Close,
+        }
+    }
+    if conn.wpos >= conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+        if conn.close_after_flush && conn.pending.is_empty() {
+            return Verdict::Close;
+        }
+    } else if conn.wpos >= 64 * 1024 {
+        // reclaim the flushed prefix of a large partially-sent buffer
+        conn.wbuf.drain(..conn.wpos);
+        conn.wpos = 0;
+    }
+    Verdict::Keep
+}
+
+/// Service one connection after a readiness event (or scan pass).
+fn service_conn(ctx: &Ctx<'_>, conn: &mut Conn, idx: usize, readable: bool) -> Verdict {
+    if readable && !conn.close_after_flush && !ctx.stopping {
+        if !read_into(conn) {
+            // peer closed/errored: flush anything owed, then close
+            conn.close_after_flush = true;
+        }
+        parse_and_dispatch(ctx, conn, idx);
+    }
+    flush(conn)
+}
+
+// ---------------------------------------------------------------------
+// The event loop
+// ---------------------------------------------------------------------
+
+/// Handle to a running reactor front.
+pub(super) struct ReactorHandle {
+    pub(super) join: JoinHandle<()>,
+    /// Wakes the loop so an externally-set stop flag is seen promptly.
+    pub(super) waker: Arc<Waker>,
+}
+
+/// Spawn the reactor event loop (and its DEFRAG control thread) over an
+/// already-bound nonblocking listener.
+pub(super) fn spawn(
+    shared: Arc<Shared>,
+    listener: TcpListener,
+    protocol: WireProtocolKind,
+    idle_timeout: Option<Duration>,
+) -> Result<ReactorHandle> {
+    let (waker, wake_rx) =
+        wake::pair().map_err(|e| Error::Runtime(format!("reactor waker: {e}")))?;
+    let waker = Arc::new(waker);
+    let (completions_tx, completions_rx) = mpsc::channel::<Completion>();
+    let (control_tx, control_rx) = mpsc::channel::<ControlMsg>();
+
+    let control = {
+        let shared = shared.clone();
+        let completions = completions_tx.clone();
+        let waker = waker.clone();
+        std::thread::Builder::new()
+            .name("cgra-control".into())
+            .spawn(move || {
+                while let Ok(msg) = control_rx.recv() {
+                    match msg {
+                        ControlMsg::Defrag { conn, gen, slot } => {
+                            let line = defrag_reply(&shared);
+                            let _ = completions.send(Completion { conn, gen, slot, line });
+                            waker.wake();
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn control thread: {e}")))?
+    };
+
+    let waker_r = waker.clone();
+    let join = std::thread::Builder::new()
+        .name("cgra-reactor".into())
+        .spawn(move || {
+            let reactor = Reactor {
+                shared,
+                listener: Some(listener),
+                poller: Poller::new(),
+                wake_rx,
+                conns: Vec::new(),
+                free: Vec::new(),
+                live: 0,
+                next_gen: 0,
+                completions_rx,
+                completions_tx,
+                waker: waker_r,
+                control_tx: Some(control_tx),
+                protocol,
+                idle_timeout,
+                stopping: false,
+                stop_at: None,
+                last_sweep: Instant::now(),
+                progress: true,
+            };
+            reactor.run();
+            // control_tx dropped with the reactor: the control thread's
+            // recv fails once queued work drains, then it joins
+            let _ = control.join();
+        })
+        .map_err(|e| Error::Runtime(format!("spawn reactor: {e}")))?;
+
+    Ok(ReactorHandle { join, waker })
+}
+
+struct Reactor {
+    shared: Arc<Shared>,
+    listener: Option<TcpListener>,
+    poller: Poller,
+    wake_rx: wake::WakeRx,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    live: usize,
+    next_gen: u64,
+    completions_rx: mpsc::Receiver<Completion>,
+    completions_tx: mpsc::Sender<Completion>,
+    waker: Arc<Waker>,
+    control_tx: Option<mpsc::Sender<ControlMsg>>,
+    protocol: WireProtocolKind,
+    idle_timeout: Option<Duration>,
+    stopping: bool,
+    stop_at: Option<Instant>,
+    last_sweep: Instant,
+    /// Whether the previous pass did any work (scan-poller pacing).
+    progress: bool,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        if let Some(l) = &self.listener {
+            self.poller.add(fd_of(l), TOKEN_LISTENER, false);
+        }
+        #[cfg(unix)]
+        self.poller.add(fd_of(&self.wake_rx.rx), TOKEN_WAKER, false);
+
+        let mut ready: Vec<(u64, bool, bool)> = Vec::new();
+        loop {
+            if !self.stopping && self.shared.stop.load(Ordering::SeqCst) {
+                self.enter_stopping();
+            }
+            if self.stopping {
+                self.reap(|c| c.drained());
+                let deadline_passed =
+                    self.stop_at.map(|t| t.elapsed() > DRAIN_DEADLINE).unwrap_or(true);
+                if self.live == 0 || deadline_passed {
+                    break;
+                }
+            }
+
+            ready.clear();
+            if self.poller.is_scan() {
+                if !self.progress {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                ready.push((TOKEN_LISTENER, true, true));
+                ready.push((TOKEN_WAKER, true, false));
+                for idx in 0..self.conns.len() {
+                    if self.conns[idx].is_some() {
+                        ready.push((idx as u64, true, true));
+                    }
+                }
+            } else {
+                #[cfg(target_os = "linux")]
+                if let Poller::Epoll(ep) = &self.poller {
+                    if let Err(e) = ep.wait(&mut ready, POLL_TIMEOUT_MS) {
+                        log::error!("epoll_wait failed: {e}; reactor exiting");
+                        break;
+                    }
+                }
+            }
+
+            self.progress = false;
+            for &(token, readable, _writable) in &ready {
+                match token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.wake_rx.drain(),
+                    idx => self.on_conn(idx as usize, readable),
+                }
+            }
+            self.drain_completions();
+            self.maybe_sweep();
+        }
+    }
+
+    fn enter_stopping(&mut self) {
+        self.stopping = true;
+        self.stop_at = Some(Instant::now());
+        if let Some(l) = self.listener.take() {
+            self.poller.del(fd_of(&l));
+        }
+        // stop forwarding control-plane work so the control thread can
+        // exit once its queue drains
+        self.control_tx = None;
+    }
+
+    /// Close every connection matching `pred`.
+    fn reap(&mut self, pred: impl Fn(&Conn) -> bool) {
+        let mut doomed = Vec::new();
+        for (i, slot) in self.conns.iter().enumerate() {
+            if let Some(c) = slot {
+                if pred(c) {
+                    doomed.push(i);
+                }
+            }
+        }
+        for idx in doomed {
+            self.close_conn(idx);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        if self.stopping {
+            return;
+        }
+        let Some(listener) = &self.listener else { return };
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    self.progress = true;
+                    if self.live >= MAX_CONNS {
+                        drop(stream); // over the slab cap: refuse
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    self.next_gen += 1;
+                    let conn = Conn::new(stream, self.next_gen);
+                    let idx = match self.free.pop() {
+                        Some(i) => {
+                            self.conns[i] = Some(conn);
+                            i
+                        }
+                        None => {
+                            self.conns.push(Some(conn));
+                            self.conns.len() - 1
+                        }
+                    };
+                    self.live += 1;
+                    let fd = fd_of(&self.conns[idx].as_ref().expect("just placed").stream);
+                    self.poller.add(fd, idx as u64, false);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn on_conn(&mut self, idx: usize, readable: bool) {
+        let ctx = Ctx {
+            shared: &self.shared,
+            completions: &self.completions_tx,
+            waker: &self.waker,
+            control: self.control_tx.as_ref(),
+            protocol: self.protocol,
+            stopping: self.stopping,
+        };
+        let verdict = match self.conns.get_mut(idx).and_then(|s| s.as_mut()) {
+            None => return,
+            Some(conn) => {
+                let before = conn.rbuf.len() + conn.pending.len() + conn.wbuf.len();
+                let v = service_conn(&ctx, conn, idx, readable);
+                let after = conn.rbuf.len() + conn.pending.len() + conn.wbuf.len();
+                if before != after || v == Verdict::Close {
+                    self.progress = true;
+                }
+                v
+            }
+        };
+        match verdict {
+            Verdict::Close => self.close_conn(idx),
+            Verdict::Keep => self.sync_write_interest(idx),
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        while let Ok(c) = self.completions_rx.try_recv() {
+            self.progress = true;
+            let verdict = match self.conns.get_mut(c.conn).and_then(|s| s.as_mut()) {
+                None => continue,
+                Some(conn) => {
+                    if conn.gen != c.gen {
+                        continue; // slot was reused by a newer connection
+                    }
+                    conn.fulfill(c.slot, c.line);
+                    conn.last_progress = Instant::now();
+                    flush(conn)
+                }
+            };
+            match verdict {
+                Verdict::Close => self.close_conn(c.conn),
+                Verdict::Keep => self.sync_write_interest(c.conn),
+            }
+        }
+    }
+
+    fn sync_write_interest(&mut self, idx: usize) {
+        let Some(conn) = self.conns.get_mut(idx).and_then(|s| s.as_mut()) else {
+            return;
+        };
+        let want = conn.wpos < conn.wbuf.len();
+        if want != conn.want_write {
+            conn.want_write = want;
+            self.poller.modify(fd_of(&conn.stream), idx as u64, want);
+        }
+    }
+
+    fn close_conn(&mut self, idx: usize) {
+        if let Some(slot) = self.conns.get_mut(idx) {
+            if let Some(conn) = slot.take() {
+                self.poller.del(fd_of(&conn.stream));
+                self.live -= 1;
+                self.free.push(idx);
+                self.progress = true;
+            }
+        }
+    }
+
+    /// Reap idle connections (those owed nothing whose last completed
+    /// request is older than the configured idle timeout).
+    fn maybe_sweep(&mut self) {
+        let Some(timeout) = self.idle_timeout else { return };
+        let interval = (timeout / 4).max(Duration::from_millis(10));
+        let now = Instant::now();
+        if now.duration_since(self.last_sweep) < interval {
+            return;
+        }
+        self.last_sweep = now;
+        self.reap(|c| c.drained() && now.duration_since(c.last_progress) > timeout);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(unix)]
+    #[test]
+    fn waker_pair_wakes_and_drains() {
+        let (waker, mut rx) = wake::pair().unwrap();
+        waker.wake();
+        waker.wake();
+        // drain consumes everything without blocking
+        rx.drain();
+        let mut probe = [0u8; 8];
+        // nonblocking: nothing left
+        assert!(matches!(
+            (&rx.rx).read(&mut probe),
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock
+        ));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_reports_readiness_with_tokens() {
+        use std::os::unix::net::UnixStream;
+
+        let ep = Epoll::new().unwrap();
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        ep.ctl(sys::EPOLL_CTL_ADD, fd_of(&a), sys::EPOLLIN, 42).unwrap();
+        let mut out = Vec::new();
+        ep.wait(&mut out, 0).unwrap();
+        assert!(out.is_empty(), "no data yet: {out:?}");
+        (&b).write_all(&[9u8]).unwrap();
+        let mut out = Vec::new();
+        ep.wait(&mut out, 1000).unwrap();
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].0, 42);
+        assert!(out[0].1, "readable");
+        ep.ctl(sys::EPOLL_CTL_DEL, fd_of(&a), 0, 0).unwrap();
+    }
+
+    #[test]
+    fn conn_pending_replies_stay_in_request_order() {
+        // a loopback listener gives us a real TcpStream to build a Conn
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let peer = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_nonblocking(true).unwrap();
+        let mut conn = Conn::new(stream, 1);
+        conn.proto = Proto::Text;
+        let first = conn.alloc_slot(0);
+        let second = conn.alloc_slot(0);
+        // out-of-order fulfillment must not reorder delivery
+        conn.fulfill(second, "OK second".into());
+        assert_eq!(flush(&mut conn), Verdict::Keep);
+        assert!(conn.wbuf.is_empty(), "first reply still owed");
+        conn.fulfill(first, "OK first".into());
+        assert_eq!(flush(&mut conn), Verdict::Keep);
+        let mut got = String::new();
+        let mut reader = std::io::BufReader::new(&peer);
+        std::io::BufRead::read_line(&mut reader, &mut got).unwrap();
+        assert_eq!(got, "OK first\n");
+        got.clear();
+        std::io::BufRead::read_line(&mut reader, &mut got).unwrap();
+        assert_eq!(got, "OK second\n");
+        assert!(conn.drained());
+    }
+}

@@ -5,8 +5,10 @@
 //! * [`Router`] — virtual-time bookkeeping used by the [`super::Leader`]:
 //!   per-tenant in-flight windows and sequence assignment.
 //! * [`AdmissionQueues`] — the wall-clock front door of the TCP server:
-//!   bounded per-tenant queues that connection threads push into and
-//!   scheduler workers drain in round-robin batches.  A full queue
+//!   bounded per-tenant queues that the socket front pushes into
+//!   (connection threads under `server.mode = "threaded"`, the single
+//!   reactor thread under `"reactor"` — the queues are front-agnostic)
+//!   and scheduler workers drain in round-robin batches.  A full queue
 //!   rejects immediately (the server replies `BUSY`), so backpressure is
 //!   explicit and memory is bounded.
 

@@ -15,6 +15,19 @@
 //! exactly as before sharding.  With `pool.shards = 1` (the default) the server is
 //! byte-for-byte the single-executor coordinator of earlier PRs.
 //!
+//! This module owns the **thread-per-connection** front (`server.mode =
+//! "threaded"`, the default): the accept loop spawns one blocking
+//! reader thread per client.  `server.mode = "reactor"` swaps the
+//! socket-facing layer for the nonblocking event loop in
+//! `coordinator/reactor.rs` — same admission queues, workers, executors
+//! and counters; only how bytes reach them changes.  Both fronts (and
+//! both wire encodings — the text protocol below and the binary
+//! framing of [`crate::coordinator::frame`]) funnel through one
+//! protocol core in this module (`parse_submit` / `admit` /
+//! `stats_reply` / `defrag_reply`), which is what lets the conformance
+//! suite (`tests/protocol_conformance.rs`) hold every reply
+//! byte-identical across fronts.
+//!
 //! Wire protocol (one line per request, one line per reply, except
 //! `STATS SHARDS` which replies `1 + pool.shards` lines):
 //!
@@ -83,7 +96,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::config::{Config, PlacementPolicyKind, QosClass};
+use crate::config::{Config, PlacementPolicyKind, QosClass, ServerModeKind};
 use crate::error::{Error, Result};
 use crate::metrics::ServeCounters;
 use crate::noc::NocReport;
@@ -108,6 +121,30 @@ pub fn parse_app(name: &str) -> Option<AppId> {
     }
 }
 
+/// Where a submission's reply line goes: the threaded front's
+/// per-connection channel, or the reactor front's completion routing.
+pub(super) enum ReplySink {
+    /// Thread-per-connection front: the reader thread parks on the
+    /// receiving half until a worker sends the outcome line.
+    Channel(mpsc::Sender<String>),
+    /// Reactor front: routes the line to the event loop by connection
+    /// slot + generation, then wakes it.
+    Reactor(super::reactor::CompletionSink),
+}
+
+impl ReplySink {
+    /// Best-effort delivery (a connection that vanished mid-flight is
+    /// not an error — the counters were already updated).
+    pub(super) fn deliver(&self, line: String) {
+        match self {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(line);
+            }
+            ReplySink::Reactor(sink) => sink.deliver(line),
+        }
+    }
+}
+
 /// One admitted SUBMIT awaiting a scheduler worker.
 struct SubmitJob {
     app: AppId,
@@ -116,7 +153,68 @@ struct SubmitJob {
     /// Explicit relative deadline in ms (`None` = config default).
     deadline_ms: Option<f64>,
     /// Reply line sink of the submitting connection.
-    reply: mpsc::Sender<String>,
+    reply: ReplySink,
+}
+
+/// A validated SUBMIT, independent of front and wire encoding (the
+/// text line and the binary frame both parse into this).
+pub(super) struct ParsedSubmit {
+    tenant: TenantId,
+    app: AppId,
+    class: Option<QosClass>,
+    deadline_ms: Option<f64>,
+}
+
+/// Parse the SUBMIT argument list shared by both wire encodings:
+/// `<app> [class] [deadline_ms]`, with the tenant already split off by
+/// the caller (the text front reads it from the line, the binary front
+/// from the frame header).  Errors are complete reply lines.
+pub(super) fn parse_submit<'a>(
+    tenant: Option<u32>,
+    mut parts: impl Iterator<Item = &'a str>,
+) -> std::result::Result<ParsedSubmit, String> {
+    let tenant = match tenant {
+        Some(t) if t < TENANTS => TenantId(t),
+        _ => return Err(format!("ERR bad tenant (0-{})", TENANTS - 1)),
+    };
+    let app = match parts.next().and_then(parse_app) {
+        Some(a) => a,
+        None => return Err("ERR bad app (resnet18|mobilenet|camera|harris|pipeline)".into()),
+    };
+    // optional: [class] [deadline_ms]
+    let mut class: Option<QosClass> = None;
+    let mut deadline_ms: Option<f64> = None;
+    if let Some(tok) = parts.next() {
+        match QosClass::from_name(&tok.to_ascii_lowercase()) {
+            Ok(c) => class = Some(c),
+            Err(_) => return Err("ERR bad class (critical|interactive|best-effort)".into()),
+        }
+        if let Some(tok) = parts.next() {
+            match tok.parse::<f64>() {
+                Ok(ms) if ms.is_finite() && ms >= 0.0 => deadline_ms = Some(ms),
+                _ => return Err("ERR bad deadline_ms".into()),
+            }
+        }
+    }
+    Ok(ParsedSubmit { tenant, app, class, deadline_ms })
+}
+
+/// Admit a validated SUBMIT into its tenant's bounded queue.  `None`
+/// means admitted (the reply arrives later through `sink`); `Some` is
+/// the immediate `BUSY` backpressure reply.
+pub(super) fn admit(shared: &Shared, p: ParsedSubmit, sink: ReplySink) -> Option<String> {
+    let ParsedSubmit { tenant, app, class, deadline_ms } = p;
+    let job = SubmitJob { app, class, deadline_ms, reply: sink };
+    match shared.queues.try_push(tenant, job) {
+        Ok(()) => {
+            shared.counters.record_queued(tenant.0 as usize);
+            None
+        }
+        Err(_) => {
+            shared.counters.record_rejected(tenant.0 as usize);
+            Some(format!("BUSY tenant={} queue_depth={}", tenant.0, shared.queue_depth))
+        }
+    }
 }
 
 /// Per-submission outcome fields extracted for wire formatting.
@@ -197,11 +295,12 @@ impl ShardGauges {
     }
 }
 
-/// State shared by connection threads, workers, and STATS rendering.
-struct Shared {
+/// State shared by connection threads (or the reactor), workers, and
+/// STATS rendering.
+pub(super) struct Shared {
     queues: AdmissionQueues<SubmitJob>,
     counters: ServeCounters,
-    stop: AtomicBool,
+    pub(super) stop: AtomicBool,
     /// Virtual cycles per millisecond (from the core clock).
     cycles_per_ms: u64,
     workers: usize,
@@ -262,7 +361,7 @@ impl Shared {
 
     /// Begin graceful shutdown: stop accepting, reject new submissions,
     /// let admitted ones drain.
-    fn begin_shutdown(&self) {
+    pub(super) fn begin_shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
         self.queues.close();
         // drop the control-plane senders so each executor's recv() can
@@ -497,43 +596,14 @@ fn handle_line(
     let mut parts = line.split_whitespace();
     match parts.next().map(|s| s.to_ascii_uppercase()).as_deref() {
         Some("SUBMIT") => {
-            let tenant = match parts.next().and_then(|t| t.parse::<u32>().ok()) {
-                Some(t) if t < TENANTS => TenantId(t),
-                _ => return (format!("ERR bad tenant (0-{})", TENANTS - 1), false),
+            let tenant = parts.next().and_then(|t| t.parse::<u32>().ok());
+            let parsed = match parse_submit(tenant, parts) {
+                Ok(p) => p,
+                Err(e) => return (e, false),
             };
-            let app = match parts.next().and_then(parse_app) {
-                Some(a) => a,
+            match admit(shared, parsed, ReplySink::Channel(reply_tx.clone())) {
+                Some(busy) => (busy, false),
                 None => {
-                    return (
-                        "ERR bad app (resnet18|mobilenet|camera|harris|pipeline)".into(),
-                        false,
-                    )
-                }
-            };
-            // optional: [class] [deadline_ms]
-            let mut class: Option<QosClass> = None;
-            let mut deadline_ms: Option<f64> = None;
-            if let Some(tok) = parts.next() {
-                match QosClass::from_name(&tok.to_ascii_lowercase()) {
-                    Ok(c) => class = Some(c),
-                    Err(_) => {
-                        return (
-                            "ERR bad class (critical|interactive|best-effort)".into(),
-                            false,
-                        )
-                    }
-                }
-                if let Some(tok) = parts.next() {
-                    match tok.parse::<f64>() {
-                        Ok(ms) if ms.is_finite() && ms >= 0.0 => deadline_ms = Some(ms),
-                        _ => return ("ERR bad deadline_ms".into(), false),
-                    }
-                }
-            }
-            let job = SubmitJob { app, class, deadline_ms, reply: reply_tx.clone() };
-            match shared.queues.try_push(tenant, job) {
-                Ok(()) => {
-                    shared.counters.record_queued(tenant.0 as usize);
                     // Graceful drain delivers replies for admitted jobs
                     // even during shutdown, so keep waiting through stop;
                     // give up only once the pipeline has been quiescent
@@ -561,185 +631,10 @@ fn handle_line(
                         }
                     }
                 }
-                Err(_) => {
-                    shared.counters.record_rejected(tenant.0 as usize);
-                    (
-                        format!("BUSY tenant={} queue_depth={}", tenant.0, shared.queue_depth),
-                        false,
-                    )
-                }
             }
         }
-        Some("STATS") => match parts.next() {
-            Some(t) if t.eq_ignore_ascii_case("qos") => {
-                // 1 + 3 lines: header names the class-line count.
-                let merged = shared.qos_merged();
-                let to_ms = |cycles: f64| cycles / shared.cycles_per_ms as f64;
-                let mut out = format!(
-                    "STATS classes={} preemptions={} evicted={} resumed={}",
-                    merged.per_class.len(),
-                    merged.preemptions,
-                    merged.victims_evicted,
-                    merged.victims_resumed,
-                );
-                for row in &merged.per_class {
-                    out.push_str(&format!(
-                        "\nSTATS class={} completed={} deadlined={} missed={} miss_rate={:.3} \
-                         p50_ms={:.3} p95_ms={:.3} p99_ms={:.3}",
-                        row.class.name(),
-                        row.completed,
-                        row.deadlined,
-                        row.missed,
-                        row.miss_rate(),
-                        to_ms(row.p50_latency),
-                        to_ms(row.p95_latency),
-                        to_ms(row.p99_latency),
-                    ));
-                }
-                (out, false)
-            }
-            Some(t) if t.eq_ignore_ascii_case("noc") => {
-                let reply = match shared.noc_merged() {
-                    None => "STATS noc=off".to_string(),
-                    Some(r) => format!(
-                        "STATS noc=on streams={} contended={} contention_cycles={} \
-                         stream_in_cycles={} affinity_hits={} mean_slowdown={:.3} \
-                         peak_slowdown={:.3} corridors={} capacity={}",
-                        r.streams_placed,
-                        r.contended_launches,
-                        r.contention_cycles,
-                        r.stream_in_cycles,
-                        r.affinity_hits,
-                        r.mean_slowdown,
-                        r.peak_slowdown,
-                        r.corridors,
-                        r.capacity,
-                    ),
-                };
-                (reply, false)
-            }
-            Some(t) if t.eq_ignore_ascii_case("energy") => {
-                // 1 + shard_count lines, same framing as STATS SHARDS:
-                // the header names how many per-shard lines follow.
-                let mut out = format!(
-                    "STATS shards={} energy_j={:.6} cap_w={:.3} throttle_shrinks={} placement={}",
-                    shared.shard_count(),
-                    shared.energy_total(),
-                    shared.power_cap_watts,
-                    shared.throttle_shrinks.load(Ordering::Relaxed),
-                    shared.placement.name(),
-                );
-                for (i, slot) in shared.shards.iter().enumerate() {
-                    out.push_str(&format!(
-                        "\nSTATS shard={i} energy_j={:.6} power_w={:.3} throttled={}",
-                        f64::from_bits(slot.energy_j_bits.load(Ordering::Relaxed)),
-                        f64::from_bits(slot.power_w_bits.load(Ordering::Relaxed)),
-                        slot.throttled.load(Ordering::Relaxed),
-                    ));
-                }
-                (out, false)
-            }
-            Some(t) if t.eq_ignore_ascii_case("shards") => {
-                // 1 + shard_count lines: the header names how many
-                // follow, so line-oriented clients stay in sync.
-                let mut out = format!("STATS shards={}", shared.shard_count());
-                for (i, slot) in shared.shards.iter().enumerate() {
-                    out.push_str(&format!(
-                        "\nSTATS shard={i} frag_glb={:.3} frag_arr={:.3} migrations={} batches={}",
-                        f64::from_bits(slot.frag_glb_bits.load(Ordering::Relaxed)),
-                        f64::from_bits(slot.frag_arr_bits.load(Ordering::Relaxed)),
-                        slot.migrations.load(Ordering::Relaxed),
-                        slot.batches.load(Ordering::Relaxed),
-                    ));
-                }
-                (out, false)
-            }
-            Some(t) => match t.parse::<u32>() {
-                Ok(t) if t < TENANTS => {
-                    let s = shared.counters.tenant(t as usize);
-                    (
-                        format!(
-                            "STATS tenant={t} served={} queued={} rejected={}",
-                            s.served, s.queued, s.rejected
-                        ),
-                        false,
-                    )
-                }
-                _ => (format!("ERR bad tenant (0-{})", TENANTS - 1), false),
-            },
-            None => {
-                let s = shared.counters.totals();
-                let frag = shared.frag_mean();
-                (
-                    format!(
-                        "STATS served={} queued={} rejected={} failed={} pending={} \
-                         workers={} queue_depth={} frag_glb={:.3} frag_arr={:.3} migrations={} \
-                         shards={} placement={}",
-                        s.served,
-                        s.queued,
-                        s.rejected,
-                        shared.counters.failed(),
-                        shared.queues.pending(),
-                        shared.workers,
-                        shared.queue_depth,
-                        frag.0,
-                        frag.1,
-                        shared.migrations_total(),
-                        shared.shard_count(),
-                        shared.placement.name(),
-                    ),
-                    false,
-                )
-            }
-        },
-        Some("DEFRAG") => {
-            // Broadcast a compaction pass to every shard executor and
-            // merge the replies: summed migrated/cycles, mean gauges.
-            let senders: Vec<mpsc::Sender<ExecRequest>> = shared
-                .exec
-                .lock()
-                .map(|guard| guard.clone())
-                .unwrap_or_default();
-            if senders.is_empty() {
-                return ("ERR coordinator unavailable".into(), false);
-            }
-            let (rtx, rrx) = mpsc::channel();
-            let mut expected = 0usize;
-            for tx in &senders {
-                if tx.send(ExecRequest::Defrag { resp: rtx.clone() }).is_ok() {
-                    expected += 1;
-                }
-            }
-            drop(rtx);
-            if expected == 0 {
-                return ("ERR coordinator unavailable".into(), false);
-            }
-            // one overall deadline, not 10 s per shard — a 64-shard
-            // pool must not hold the connection for minutes
-            let deadline = std::time::Instant::now() + Duration::from_secs(10);
-            let mut merged: Vec<DefragReply> = Vec::with_capacity(expected);
-            for _ in 0..expected {
-                let left = deadline.saturating_duration_since(std::time::Instant::now());
-                match rrx.recv_timeout(left) {
-                    Ok(r) => merged.push(r),
-                    Err(_) => return ("ERR defrag timed out".into(), false),
-                }
-            }
-            let n = merged.len() as f64;
-            let migrated: u64 = merged.iter().map(|r| r.migrated).sum();
-            let cycles: u64 = merged.iter().map(|r| r.cycles).sum();
-            let before_g = merged.iter().map(|r| r.before.0).sum::<f64>() / n;
-            let after_g = merged.iter().map(|r| r.after.0).sum::<f64>() / n;
-            let before_a = merged.iter().map(|r| r.before.1).sum::<f64>() / n;
-            let after_a = merged.iter().map(|r| r.after.1).sum::<f64>() / n;
-            (
-                format!(
-                    "DEFRAG migrated={migrated} cycles={cycles} \
-                     frag_glb={before_g:.3}->{after_g:.3} frag_arr={before_a:.3}->{after_a:.3}",
-                ),
-                false,
-            )
-        }
+        Some("STATS") => (stats_reply(shared, parts.next()), false),
+        Some("DEFRAG") => (defrag_reply(shared), false),
         Some("QUIT") => ("BYE".into(), true),
         Some("SHUTDOWN") => {
             shared.begin_shutdown();
@@ -748,6 +643,170 @@ fn handle_line(
         Some(other) => (format!("ERR unknown command '{other}'"), false),
         None => ("ERR empty command".into(), false),
     }
+}
+
+/// Render any `STATS [sub]` reply.  Shared by both fronts and both wire
+/// encodings; multi-line surfaces join with `\n` and their header line
+/// names how many follow.
+pub(super) fn stats_reply(shared: &Shared, sub: Option<&str>) -> String {
+    match sub {
+        Some(t) if t.eq_ignore_ascii_case("qos") => {
+            // 1 + 3 lines: header names the class-line count.
+            let merged = shared.qos_merged();
+            let to_ms = |cycles: f64| cycles / shared.cycles_per_ms as f64;
+            let mut out = format!(
+                "STATS classes={} preemptions={} evicted={} resumed={}",
+                merged.per_class.len(),
+                merged.preemptions,
+                merged.victims_evicted,
+                merged.victims_resumed,
+            );
+            for row in &merged.per_class {
+                out.push_str(&format!(
+                    "\nSTATS class={} completed={} deadlined={} missed={} miss_rate={:.3} \
+                     p50_ms={:.3} p95_ms={:.3} p99_ms={:.3}",
+                    row.class.name(),
+                    row.completed,
+                    row.deadlined,
+                    row.missed,
+                    row.miss_rate(),
+                    to_ms(row.p50_latency),
+                    to_ms(row.p95_latency),
+                    to_ms(row.p99_latency),
+                ));
+            }
+            out
+        }
+        Some(t) if t.eq_ignore_ascii_case("noc") => match shared.noc_merged() {
+            None => "STATS noc=off".to_string(),
+            Some(r) => format!(
+                "STATS noc=on streams={} contended={} contention_cycles={} \
+                 stream_in_cycles={} affinity_hits={} mean_slowdown={:.3} \
+                 peak_slowdown={:.3} corridors={} capacity={}",
+                r.streams_placed,
+                r.contended_launches,
+                r.contention_cycles,
+                r.stream_in_cycles,
+                r.affinity_hits,
+                r.mean_slowdown,
+                r.peak_slowdown,
+                r.corridors,
+                r.capacity,
+            ),
+        },
+        Some(t) if t.eq_ignore_ascii_case("energy") => {
+            // 1 + shard_count lines, same framing as STATS SHARDS:
+            // the header names how many per-shard lines follow.
+            let mut out = format!(
+                "STATS shards={} energy_j={:.6} cap_w={:.3} throttle_shrinks={} placement={}",
+                shared.shard_count(),
+                shared.energy_total(),
+                shared.power_cap_watts,
+                shared.throttle_shrinks.load(Ordering::Relaxed),
+                shared.placement.name(),
+            );
+            for (i, slot) in shared.shards.iter().enumerate() {
+                out.push_str(&format!(
+                    "\nSTATS shard={i} energy_j={:.6} power_w={:.3} throttled={}",
+                    f64::from_bits(slot.energy_j_bits.load(Ordering::Relaxed)),
+                    f64::from_bits(slot.power_w_bits.load(Ordering::Relaxed)),
+                    slot.throttled.load(Ordering::Relaxed),
+                ));
+            }
+            out
+        }
+        Some(t) if t.eq_ignore_ascii_case("shards") => {
+            // 1 + shard_count lines: the header names how many
+            // follow, so line-oriented clients stay in sync.
+            let mut out = format!("STATS shards={}", shared.shard_count());
+            for (i, slot) in shared.shards.iter().enumerate() {
+                out.push_str(&format!(
+                    "\nSTATS shard={i} frag_glb={:.3} frag_arr={:.3} migrations={} batches={}",
+                    f64::from_bits(slot.frag_glb_bits.load(Ordering::Relaxed)),
+                    f64::from_bits(slot.frag_arr_bits.load(Ordering::Relaxed)),
+                    slot.migrations.load(Ordering::Relaxed),
+                    slot.batches.load(Ordering::Relaxed),
+                ));
+            }
+            out
+        }
+        Some(t) => match t.parse::<u32>() {
+            Ok(t) if t < TENANTS => {
+                let s = shared.counters.tenant(t as usize);
+                format!(
+                    "STATS tenant={t} served={} queued={} rejected={}",
+                    s.served, s.queued, s.rejected
+                )
+            }
+            _ => format!("ERR bad tenant (0-{})", TENANTS - 1),
+        },
+        None => {
+            let s = shared.counters.totals();
+            let frag = shared.frag_mean();
+            format!(
+                "STATS served={} queued={} rejected={} failed={} pending={} \
+                 workers={} queue_depth={} frag_glb={:.3} frag_arr={:.3} migrations={} \
+                 shards={} placement={}",
+                s.served,
+                s.queued,
+                s.rejected,
+                shared.counters.failed(),
+                shared.queues.pending(),
+                shared.workers,
+                shared.queue_depth,
+                frag.0,
+                frag.1,
+                shared.migrations_total(),
+                shared.shard_count(),
+                shared.placement.name(),
+            )
+        }
+    }
+}
+
+/// Run the `DEFRAG` wire command: broadcast a compaction pass to every
+/// shard executor and merge the replies (summed migrated/cycles, mean
+/// gauges).  Shared by both fronts; the reactor runs it on its control
+/// thread so the event loop never blocks on the broadcast.
+pub(super) fn defrag_reply(shared: &Shared) -> String {
+    let senders: Vec<mpsc::Sender<ExecRequest>> =
+        shared.exec.lock().map(|guard| guard.clone()).unwrap_or_default();
+    if senders.is_empty() {
+        return "ERR coordinator unavailable".into();
+    }
+    let (rtx, rrx) = mpsc::channel();
+    let mut expected = 0usize;
+    for tx in &senders {
+        if tx.send(ExecRequest::Defrag { resp: rtx.clone() }).is_ok() {
+            expected += 1;
+        }
+    }
+    drop(rtx);
+    if expected == 0 {
+        return "ERR coordinator unavailable".into();
+    }
+    // one overall deadline, not 10 s per shard — a 64-shard pool must
+    // not hold the connection for minutes
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut merged: Vec<DefragReply> = Vec::with_capacity(expected);
+    for _ in 0..expected {
+        let left = deadline.saturating_duration_since(std::time::Instant::now());
+        match rrx.recv_timeout(left) {
+            Ok(r) => merged.push(r),
+            Err(_) => return "ERR defrag timed out".into(),
+        }
+    }
+    let n = merged.len() as f64;
+    let migrated: u64 = merged.iter().map(|r| r.migrated).sum();
+    let cycles: u64 = merged.iter().map(|r| r.cycles).sum();
+    let before_g = merged.iter().map(|r| r.before.0).sum::<f64>() / n;
+    let after_g = merged.iter().map(|r| r.after.0).sum::<f64>() / n;
+    let before_a = merged.iter().map(|r| r.before.1).sum::<f64>() / n;
+    let after_a = merged.iter().map(|r| r.after.1).sum::<f64>() / n;
+    format!(
+        "DEFRAG migrated={migrated} cycles={cycles} \
+         frag_glb={before_g:.3}->{after_g:.3} frag_arr={before_a:.3}->{after_a:.3}",
+    )
 }
 
 /// Scheduler worker: drain admission batches, place each on a shard
@@ -818,7 +877,7 @@ fn send_batch(
         shared.release_shard(shard);
         for (_, job) in batch {
             shared.counters.record_failed();
-            let _ = job.reply.send("ERR coordinator executor unavailable".into());
+            job.reply.deliver("ERR coordinator executor unavailable".into());
         }
         return None;
     }
@@ -839,7 +898,7 @@ fn collect_batch(shared: &Shared, pending: PendingBatch) {
                         // count before replying so a client's follow-up
                         // STATS observes its own request
                         shared.counters.record_served(tenant.0 as usize);
-                        let _ = job.reply.send(format!(
+                        job.reply.deliver(format!(
                             "OK seq={} ntat={:.2} tat_ms={:.3} compute_us={:.0} sum={:+.4}",
                             o.seq,
                             o.ntat,
@@ -850,7 +909,7 @@ fn collect_batch(shared: &Shared, pending: PendingBatch) {
                     }
                     None => {
                         shared.counters.record_failed();
-                        let _ = job.reply.send("ERR request did not complete".into());
+                        job.reply.deliver("ERR request did not complete".into());
                     }
                 }
             }
@@ -858,13 +917,13 @@ fn collect_batch(shared: &Shared, pending: PendingBatch) {
         Ok(Err(e)) => {
             for (_, job) in batch {
                 shared.counters.record_failed();
-                let _ = job.reply.send(format!("ERR {e}"));
+                job.reply.deliver(format!("ERR {e}"));
             }
         }
         Err(_) => {
             for (_, job) in batch {
                 shared.counters.record_failed();
-                let _ = job.reply.send("ERR coordinator executor died".into());
+                job.reply.deliver("ERR coordinator executor died".into());
             }
         }
     }
@@ -997,6 +1056,7 @@ pub struct Server {
     pub addr: std::net::SocketAddr,
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
+    reactor: Option<super::reactor::ReactorHandle>,
     workers: Vec<JoinHandle<()>>,
     executors: Vec<JoinHandle<()>>,
 }
@@ -1005,8 +1065,9 @@ impl Server {
     /// Start serving on `bind` (e.g. `127.0.0.1:0` for an ephemeral
     /// port).  Spawns one leader executor per `pool.shards` (each builds
     /// its [`Leader`] on its own thread — the PJRT client is not
-    /// `Send`), `cfg.server.workers` scheduler workers, and the accept
-    /// loop.
+    /// `Send`), `cfg.server.workers` scheduler workers, and the
+    /// socket-facing front `server.mode` selects (the thread-per-
+    /// connection accept loop, or the nonblocking reactor).
     pub fn start(cfg: &Config, bind: &str) -> Result<Server> {
         let listener =
             TcpListener::bind(bind).map_err(|e| Error::io(bind.to_string(), e))?;
@@ -1095,34 +1156,61 @@ impl Server {
         }
         drop(exec_txs);
 
-        // Accept loop: one reader thread per connection.
-        let shared_a = shared.clone();
-        let accept = std::thread::Builder::new()
-            .name("cgra-accept".into())
-            .spawn(move || {
-                let mut conns: Vec<JoinHandle<()>> = Vec::new();
-                while !shared_a.stop.load(Ordering::SeqCst) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let shared_c = shared_a.clone();
-                            conns.push(std::thread::spawn(move || {
-                                let _ = handle_connection(stream, &shared_c);
-                            }));
+        // Socket-facing front.  Threaded: an accept loop spawning one
+        // reader thread per connection.  Reactor: a single nonblocking
+        // event loop owning every socket (coordinator/reactor.rs).
+        let (accept, reactor) = match cfg.server.mode {
+            ServerModeKind::Threaded => {
+                let shared_a = shared.clone();
+                let accept = std::thread::Builder::new()
+                    .name("cgra-accept".into())
+                    .spawn(move || {
+                        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                        while !shared_a.stop.load(Ordering::SeqCst) {
+                            match listener.accept() {
+                                Ok((stream, _)) => {
+                                    let shared_c = shared_a.clone();
+                                    let spawned = std::thread::Builder::new()
+                                        .name("cgra-conn".into())
+                                        .spawn(move || {
+                                            let _ = handle_connection(stream, &shared_c);
+                                        });
+                                    match spawned {
+                                        Ok(h) => conns.push(h),
+                                        // thread exhaustion: refuse this
+                                        // connection, keep accepting
+                                        Err(e) => {
+                                            log::warn!("connection thread spawn failed: {e}")
+                                        }
+                                    }
+                                }
+                                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                    conns.retain(|h| !h.is_finished());
+                                    std::thread::sleep(Duration::from_millis(5));
+                                }
+                                Err(_) => break,
+                            }
                         }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            conns.retain(|h| !h.is_finished());
-                            std::thread::sleep(Duration::from_millis(5));
+                        for h in conns {
+                            let _ = h.join();
                         }
-                        Err(_) => break,
-                    }
-                }
-                for h in conns {
-                    let _ = h.join();
-                }
-            })
-            .map_err(|e| Error::Runtime(format!("spawn accept loop: {e}")))?;
+                    })
+                    .map_err(|e| Error::Runtime(format!("spawn accept loop: {e}")))?;
+                (Some(accept), None)
+            }
+            ServerModeKind::Reactor => {
+                let idle = cfg.server.idle_timeout_ms;
+                let handle = super::reactor::spawn(
+                    shared.clone(),
+                    listener,
+                    cfg.server.protocol,
+                    (idle > 0).then(|| Duration::from_millis(idle)),
+                )?;
+                (None, Some(handle))
+            }
+        };
 
-        Ok(Server { addr, shared, accept: Some(accept), workers, executors })
+        Ok(Server { addr, shared, accept, reactor, workers, executors })
     }
 
     /// Graceful shutdown: stop accepting, drain admitted submissions,
@@ -1145,6 +1233,12 @@ impl Server {
         self.shared.begin_shutdown();
         if let Some(a) = self.accept.take() {
             let _ = a.join();
+        }
+        if let Some(r) = self.reactor.take() {
+            // nudge the event loop out of its poll wait so it observes
+            // the stop flag promptly, then let it drain and exit
+            r.waker.wake();
+            let _ = r.join.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -1217,6 +1311,24 @@ mod tests {
     }
 
     #[test]
+    fn parse_submit_validates_like_the_text_front() {
+        // the binary front hands the tenant in from the frame header
+        assert!(parse_submit(None, "camera".split_whitespace()).is_err());
+        assert!(parse_submit(Some(9), "camera".split_whitespace()).is_err());
+        assert!(parse_submit(Some(1), "nope".split_whitespace()).is_err());
+        assert!(parse_submit(Some(1), "camera magic".split_whitespace()).is_err());
+        assert!(parse_submit(Some(1), "camera critical -5".split_whitespace()).is_err());
+        let p = parse_submit(Some(2), "camera critical 5".split_whitespace()).unwrap();
+        assert_eq!(p.tenant, TenantId(2));
+        assert_eq!(p.app, AppId::Camera);
+        assert_eq!(p.class, Some(QosClass::Critical));
+        assert_eq!(p.deadline_ms, Some(5.0));
+        let bare = parse_submit(Some(0), "harris".split_whitespace()).unwrap();
+        assert_eq!(bare.class, None);
+        assert_eq!(bare.deadline_ms, None);
+    }
+
+    #[test]
     fn busy_backpressure_reply_when_queue_full() {
         let shared = test_shared(1);
         // fill tenant 2's queue directly (no worker is draining)
@@ -1225,7 +1337,12 @@ mod tests {
             .queues
             .try_push(
                 TenantId(2),
-                SubmitJob { app: AppId::Camera, class: None, deadline_ms: None, reply: tx },
+                SubmitJob {
+                    app: AppId::Camera,
+                    class: None,
+                    deadline_ms: None,
+                    reply: ReplySink::Channel(tx),
+                },
             )
             .unwrap_or_else(|_| panic!("first push fits"));
         let (reply, close) = line(&shared, "SUBMIT 2 camera");

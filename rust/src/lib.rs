@@ -33,7 +33,11 @@
 //! worker-pool TCP server: per-tenant bounded admission queues, N
 //! scheduler workers batching concurrent SUBMITs into shared scheduler
 //! invocations, explicit `BUSY` backpressure, and graceful drain on
-//! shutdown.
+//! shutdown.  The socket-facing layer is selectable: the default
+//! thread-per-connection front, or a single-threaded nonblocking
+//! reactor (`server.mode = "reactor"`, epoll on Linux) that makes idle
+//! connections ~free and speaks an optional length-prefixed binary
+//! framing ([`coordinator::frame`]) negotiated per connection.
 //!
 //! See `README.md` for the quickstart and wire protocol, `DESIGN.md`
 //! for the architecture inventory, and `EXPERIMENTS.md` for

@@ -89,7 +89,11 @@ fn print_usage() {
            --queue-depth N    serve-tcp per-tenant admission queue depth (default 32)\n\
            --shards N         serve-tcp fabric-pool shard count (default 1)\n\
            --placement P      serve-tcp pool placement: least-loaded | best-fit |\n\
-                              sticky | energy-aware"
+                              sticky | energy-aware\n\
+           --mode M           serve-tcp front: threaded | reactor (default threaded)\n\
+           --protocol P       serve-tcp wire protocol: auto | text | binary\n\
+                              (binary requires --mode reactor)\n\
+           --idle-timeout-ms N  serve-tcp reactor idle-connection sweep (0 = off)"
     );
 }
 
@@ -399,14 +403,25 @@ fn serve_tcp(flags: &Flags) -> cgra_mte::Result<()> {
     if let Some(p) = flags.get("placement") {
         cfg.pool.placement = cgra_mte::config::PlacementPolicyKind::from_name(p)?;
     }
+    if let Some(m) = flags.get("mode") {
+        cfg.server.mode = cgra_mte::config::ServerModeKind::from_name(m)?;
+    }
+    if let Some(p) = flags.get("protocol") {
+        cfg.server.protocol = cgra_mte::config::WireProtocolKind::from_name(p)?;
+    }
+    if let Some(t) = flags.get_u64("idle-timeout-ms")? {
+        cfg.server.idle_timeout_ms = t;
+    }
     cfg.validate()?;
     let bind = flags.get("bind").unwrap_or("127.0.0.1:7070");
     println!("compiling artifacts + binding {bind} ...");
     let server = cgra_mte::coordinator::Server::start(&cfg, bind)?;
     println!(
-        "listening on {} — {} workers, queue depth {} per tenant, {} fabric shard(s) ({})\n\
+        "listening on {} — {} front ({} wire), {} workers, queue depth {} per tenant, {} fabric shard(s) ({})\n\
          protocol: SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris> | STATS [tenant|SHARDS] | DEFRAG | QUIT | SHUTDOWN",
         server.addr,
+        cfg.server.mode.name(),
+        cfg.server.protocol.name(),
         cfg.server.workers,
         cfg.server.queue_depth,
         cfg.pool.shards,

@@ -4,9 +4,10 @@
 //! example/load generator so the wire handling (one line out, one line
 //! back, retry on `BUSY` backpressure) lives in exactly one place.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 
+use crate::coordinator::frame::{self, Opcode};
 use crate::error::{Error, Result};
 
 /// One-line-out, one-line-back client for the SUBMIT/STATS protocol of
@@ -109,6 +110,32 @@ impl WireClient {
         Ok(reply)
     }
 
+    /// Send one protocol line and read the *whole* reply, following the
+    /// count-framing rule: a `STATS shards=<n>` or `STATS classes=<n>`
+    /// header is followed by `n` continuation lines; everything else is
+    /// one line.  Multi-line replies come back joined with `\n` —
+    /// byte-identical to the binary protocol's reply payload, which is
+    /// what the conformance suite compares.
+    pub fn send_blob(&mut self, line: &str) -> Result<String> {
+        let header = self.send(line)?;
+        let n = ["STATS shards=", "STATS classes="]
+            .iter()
+            .find_map(|p| header.strip_prefix(p))
+            .and_then(|v| v.split_whitespace().next())
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(0);
+        if n == 0 {
+            return Ok(header);
+        }
+        let lines = self.read_reply_lines(n, "continuation")?;
+        let mut blob = header;
+        for l in lines {
+            blob.push('\n');
+            blob.push_str(&l);
+        }
+        Ok(blob)
+    }
+
     /// SUBMIT with retry on `BUSY` backpressure; returns the final
     /// (non-BUSY) reply and how many BUSY retries it took.
     pub fn submit(&mut self, tenant: u32, app: &str) -> Result<(String, u32)> {
@@ -122,5 +149,103 @@ impl WireClient {
             }
             return Ok((reply, retries));
         }
+    }
+}
+
+/// One reply frame from the binary protocol, decoded into owned fields.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BinReply {
+    /// Reply opcode (`ReplyOk`, `ReplyBusy`, `ReplyStats`, …).
+    pub opcode: Opcode,
+    /// Request id echoed back from the matching request frame.
+    pub req_id: u64,
+    /// Reply payload: the exact text-protocol reply bytes (multi-line
+    /// replies such as `STATS SHARDS` arrive as one frame).
+    pub text: String,
+}
+
+/// Length-prefixed binary-framing client for the reactor front
+/// (`server.protocol = "binary"` / `"auto"`).  One request frame out,
+/// one reply frame back — the framed twin of [`WireClient`].
+pub struct BinWireClient {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    next_req_id: u64,
+}
+
+impl BinWireClient {
+    /// Connect to a serving front speaking the framed protocol.
+    pub fn connect(addr: SocketAddr) -> Result<BinWireClient> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| Error::io(addr.to_string(), e))?;
+        Ok(BinWireClient { stream, rbuf: Vec::new(), next_req_id: 1 })
+    }
+
+    /// Send one request frame (auto-assigned request id) and block for
+    /// its reply frame.
+    pub fn request(&mut self, opcode: Opcode, tenant: u16, payload: &[u8]) -> Result<BinReply> {
+        let req_id = self.next_req_id;
+        self.next_req_id += 1;
+        let wire = frame::encode(opcode, tenant, req_id, payload);
+        self.stream.write_all(&wire).map_err(|e| Error::io("write frame", e))?;
+        self.read_reply()
+    }
+
+    /// Block until one complete reply frame is decodable from the
+    /// connection, consuming it from the read buffer.
+    pub fn read_reply(&mut self) -> Result<BinReply> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            let (done, consumed) = {
+                match frame::decode(&self.rbuf) {
+                    Ok(Some((f, consumed))) => {
+                        let text = String::from_utf8(f.payload.to_vec()).map_err(|_| {
+                            Error::Runtime("reply payload not utf-8".into())
+                        })?;
+                        (Some(BinReply { opcode: f.opcode, req_id: f.req_id, text }), consumed)
+                    }
+                    Ok(None) => (None, 0),
+                    Err(e) => return Err(Error::Runtime(format!("bad reply frame: {e}"))),
+                }
+            };
+            if let Some(reply) = done {
+                self.rbuf.drain(..consumed);
+                return Ok(reply);
+            }
+            let n = self.stream.read(&mut chunk).map_err(|e| Error::io("read frame", e))?;
+            if n == 0 {
+                return Err(Error::Runtime("connection closed mid-frame".into()));
+            }
+            self.rbuf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    /// Framed SUBMIT with retry on BUSY backpressure; returns the final
+    /// (non-BUSY) reply and how many BUSY retries it took.  The payload
+    /// mirrors the text form minus the tenant, which rides the header:
+    /// `<app> [class] [deadline_ms]`.
+    pub fn submit(&mut self, tenant: u16, args: &str) -> Result<(BinReply, u32)> {
+        let mut retries = 0;
+        loop {
+            let reply = self.request(Opcode::Submit, tenant, args.as_bytes())?;
+            if reply.opcode == Opcode::ReplyBusy {
+                retries += 1;
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            return Ok((reply, retries));
+        }
+    }
+
+    /// Framed STATS; `sub` is the subcommand payload (`""` for the
+    /// aggregate line, `"SHARDS"`, `"ENERGY"`, `"QOS"`, `"NOC"`, or a
+    /// tenant number).
+    pub fn stats(&mut self, sub: &str) -> Result<BinReply> {
+        self.request(Opcode::Stats, 0, sub.as_bytes())
+    }
+
+    /// Framed QUIT; returns the `BYE` reply.
+    pub fn quit(&mut self) -> Result<BinReply> {
+        self.request(Opcode::Quit, 0, b"")
     }
 }

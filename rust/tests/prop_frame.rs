@@ -1,0 +1,173 @@
+//! Property tests for the binary wire framing
+//! (`coordinator::frame`): encode→decode round-trips over arbitrary
+//! opcodes/tenants/request-ids/payloads, coalesced multi-frame buffers,
+//! and the incremental-decode guarantee that feeding a buffer one byte
+//! at a time produces exactly the whole-buffer result.  These are the
+//! codec-level half of the protocol conformance story — the live-server
+//! half is `tests/protocol_conformance.rs`.
+
+use cgra_mte::coordinator::frame::{self, Frame, FrameError, Opcode};
+use cgra_mte::testutil::{forall, forall_cfg, PropConfig};
+use cgra_mte::util::rng::Rng;
+
+const ALL_OPCODES: [Opcode; 11] = [
+    Opcode::Submit,
+    Opcode::Stats,
+    Opcode::Defrag,
+    Opcode::Quit,
+    Opcode::Shutdown,
+    Opcode::ReplyOk,
+    Opcode::ReplyBusy,
+    Opcode::ReplyErr,
+    Opcode::ReplyStats,
+    Opcode::ReplyDefrag,
+    Opcode::ReplyBye,
+];
+
+/// One arbitrary frame: opcode, tenant, req_id, payload bytes.
+#[derive(Clone, Debug)]
+struct ArbFrame {
+    opcode: Opcode,
+    tenant: u16,
+    req_id: u64,
+    payload: Vec<u8>,
+}
+
+fn arb_frame(rng: &mut Rng, size: u32) -> ArbFrame {
+    // payload length scales with the size budget so shrinking finds
+    // small counterexamples; cap well past one read-chunk boundary.
+    let max_len = (size as usize * 64).min(frame::MAX_PAYLOAD);
+    let len = rng.below(max_len as u64 + 1) as usize;
+    ArbFrame {
+        opcode: *rng.choose(&ALL_OPCODES),
+        tenant: rng.next_u64() as u16,
+        req_id: rng.next_u64(),
+        payload: (0..len).map(|_| rng.next_u64() as u8).collect(),
+    }
+}
+
+fn arb_frames(rng: &mut Rng, size: u32) -> Vec<ArbFrame> {
+    let n = 1 + rng.below(4) as usize;
+    (0..n).map(|_| arb_frame(rng, size)).collect()
+}
+
+fn encodes_back(f: &ArbFrame, decoded: &Frame<'_>) -> bool {
+    decoded.opcode == f.opcode
+        && decoded.tenant == f.tenant
+        && decoded.req_id == f.req_id
+        && decoded.payload == &f.payload[..]
+}
+
+#[test]
+fn encode_decode_roundtrips_every_field() {
+    forall(&arb_frame, |f| {
+        let buf = frame::encode(f.opcode, f.tenant, f.req_id, &f.payload);
+        if buf.len() != frame::encoded_len(f.payload.len()) {
+            return false;
+        }
+        match frame::decode(&buf) {
+            Ok(Some((decoded, consumed))) => consumed == buf.len() && encodes_back(f, &decoded),
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn empty_and_max_size_payloads_roundtrip() {
+    for len in [0usize, 1, frame::MAX_PAYLOAD - 1, frame::MAX_PAYLOAD] {
+        let payload = vec![0xA5u8; len];
+        let buf = frame::encode(Opcode::Submit, 2, 99, &payload);
+        let (decoded, consumed) = frame::decode(&buf).unwrap().expect("complete frame");
+        assert_eq!(consumed, frame::HEADER_LEN + len);
+        assert_eq!(decoded.payload.len(), len);
+    }
+}
+
+#[test]
+fn coalesced_multi_frame_buffers_decode_in_order() {
+    forall(&arb_frames, |frames| {
+        let mut buf = Vec::new();
+        for f in frames {
+            frame::encode_into(&mut buf, f.opcode, f.tenant, f.req_id, &f.payload);
+        }
+        let mut off = 0;
+        for f in frames {
+            match frame::decode(&buf[off..]) {
+                Ok(Some((decoded, consumed))) => {
+                    if !encodes_back(f, &decoded) {
+                        return false;
+                    }
+                    off += consumed;
+                }
+                _ => return false,
+            }
+        }
+        off == buf.len()
+    });
+}
+
+/// The incremental contract: every strict prefix of a valid frame is
+/// `Ok(None)` ("need more bytes"), and the byte-at-a-time path yields
+/// the same frame as the whole-buffer path — i.e. decoding is a pure
+/// function of the buffer prefix with no internal state to desync.
+#[test]
+fn byte_at_a_time_decode_equals_whole_buffer_decode() {
+    // fewer cases: each case scans every prefix of the encoding.
+    let cfg = PropConfig { cases: 32, max_size: 32, ..PropConfig::default() };
+    forall_cfg(cfg, &arb_frame, |f| {
+        let buf = frame::encode(f.opcode, f.tenant, f.req_id, &f.payload);
+        for cut in 0..buf.len() {
+            if frame::decode(&buf[..cut]) != Ok(None) {
+                return false;
+            }
+        }
+        match frame::decode(&buf) {
+            Ok(Some((decoded, consumed))) => consumed == buf.len() && encodes_back(f, &decoded),
+            _ => false,
+        }
+    });
+}
+
+/// Trailing bytes after a complete frame (the next frame, or garbage)
+/// never change what the first decode returns.
+#[test]
+fn trailing_bytes_do_not_affect_the_first_frame() {
+    forall(&arb_frame, |f| {
+        let clean = frame::encode(f.opcode, f.tenant, f.req_id, &f.payload);
+        let mut dirty = clean.clone();
+        dirty.extend_from_slice(&[0x00, 0xFF, 0xC6, 0x47]);
+        let a = frame::decode(&clean);
+        let b = frame::decode(&dirty);
+        match (a, b) {
+            (Ok(Some((fa, ca))), Ok(Some((fb, cb)))) => ca == cb && fa == fb,
+            _ => false,
+        }
+    });
+}
+
+/// Corrupting any single magic/version/opcode byte of a valid frame is
+/// caught (as the matching error) no later than the full header.
+#[test]
+fn single_byte_header_corruption_is_always_detected() {
+    let cfg = PropConfig { cases: 48, max_size: 16, ..PropConfig::default() };
+    forall_cfg(cfg, &arb_frame, |f| {
+        let buf = frame::encode(f.opcode, f.tenant, f.req_id, &f.payload);
+        for offset in 0..6 {
+            let mut bad = buf.clone();
+            bad[offset] ^= 0xFF; // guaranteed to differ from the original
+            let got = frame::decode(&bad[..frame::HEADER_LEN.min(bad.len())]);
+            let ok = match offset {
+                0..=3 => {
+                    let byte = frame::MAGIC[offset] ^ 0xFF;
+                    got == Err(FrameError::BadMagic { byte, offset })
+                }
+                4 => got == Err(FrameError::BadVersion(frame::VERSION ^ 0xFF)),
+                _ => matches!(got, Err(FrameError::BadOpcode(_))),
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    });
+}

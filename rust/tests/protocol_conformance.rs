@@ -1,0 +1,186 @@
+//! Differential protocol conformance: the same scripted session runs
+//! against (a) the threaded front speaking text, (b) the reactor front
+//! speaking text, and (c) the reactor front speaking binary framing —
+//! each on a fresh server with an identical config — and every reply
+//! must be byte-identical across all three arms (modulo the one
+//! wall-clock field, `compute_us=`, which is masked).  The script ends
+//! on the full STATS report surface, so the three arms also prove
+//! identical final server state, not just identical reply formatting.
+//!
+//! Everything here is strictly sequential (one request in flight at a
+//! time, one arm at a time), which is what makes seq numbers, virtual
+//! time, and checksums deterministic across arms.
+#![cfg(not(feature = "xla"))]
+
+use std::sync::Mutex;
+
+use cgra_mte::config::{presets, Config, ServerModeKind};
+use cgra_mte::coordinator::frame::Opcode;
+use cgra_mte::coordinator::Server;
+use cgra_mte::testutil::wire::{BinWireClient, WireClient};
+
+/// Serializes against the other loopback server suites.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn stub_config(mode: ServerModeKind) -> Config {
+    let mut cfg = presets::paper_default();
+    cfg.artifacts_dir = cgra_mte::runtime::SYNTHETIC_DIR.into();
+    cfg.server.mode = mode;
+    cfg
+}
+
+/// One scripted step, expressible in both wire encodings.
+enum Step {
+    /// SUBMIT: tenant plus the argument tail (`<app> [class] [deadline]`).
+    Submit { tenant: u32, args: &'static str },
+    /// STATS with a subcommand (`""` for the aggregate line).
+    Stats(&'static str),
+    Defrag,
+    Quit,
+}
+
+/// The conformance script.  Covers every request verb, every STATS
+/// surface, every SUBMIT parse error, and ends on the full report
+/// digest (aggregate + SHARDS + ENERGY + QOS) so final server state is
+/// compared too.  No BUSY is possible: one request in flight against
+/// the default queue depth.
+const SCRIPT: &[Step] = &[
+    Step::Submit { tenant: 0, args: "resnet18" },
+    Step::Submit { tenant: 1, args: "mobilenet" },
+    Step::Submit { tenant: 2, args: "camera critical 60000" },
+    Step::Submit { tenant: 3, args: "harris best-effort" },
+    Step::Submit { tenant: 1, args: "pipeline" },
+    Step::Submit { tenant: 9, args: "camera" },
+    Step::Submit { tenant: 0, args: "nosuchapp" },
+    Step::Submit { tenant: 0, args: "camera wrongclass" },
+    Step::Submit { tenant: 0, args: "camera critical soon" },
+    Step::Stats("2"),
+    Step::Stats("NOC"),
+    Step::Defrag,
+    Step::Stats(""),
+    Step::Stats("SHARDS"),
+    Step::Stats("ENERGY"),
+    Step::Stats("QOS"),
+    Step::Quit,
+];
+
+/// Mask the single wall-clock field so transcripts compare stably.
+fn mask(blob: &str) -> String {
+    blob.lines()
+        .map(|line| {
+            line.split(' ')
+                .map(|field| {
+                    if field.starts_with("compute_us=") { "compute_us=X" } else { field }
+                })
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Run the script over the text protocol; returns masked reply blobs.
+fn run_text(mode: ServerModeKind) -> Vec<String> {
+    let server = Server::start(&stub_config(mode), "127.0.0.1:0").unwrap();
+    let mut client = WireClient::connect(server.addr).expect("connect");
+    let mut transcript = Vec::new();
+    for step in SCRIPT {
+        let line = match step {
+            Step::Submit { tenant, args } => format!("SUBMIT {tenant} {args}"),
+            Step::Stats("") => "STATS".to_string(),
+            Step::Stats(sub) => format!("STATS {sub}"),
+            Step::Defrag => "DEFRAG".to_string(),
+            Step::Quit => "QUIT".to_string(),
+        };
+        transcript.push(mask(&client.send_blob(&line).expect("reply")));
+    }
+    server.shutdown();
+    transcript
+}
+
+/// Run the script over the binary framing (reactor only); returns
+/// masked reply payloads, asserting the framing invariants (reply
+/// opcode mirrors the text token, request ids echo back) as it goes.
+fn run_binary() -> Vec<String> {
+    let server =
+        Server::start(&stub_config(ServerModeKind::Reactor), "127.0.0.1:0").unwrap();
+    let mut client = BinWireClient::connect(server.addr).expect("connect");
+    let mut transcript = Vec::new();
+    let mut expected_req_id = 0u64;
+    for step in SCRIPT {
+        let (opcode, tenant, payload): (Opcode, u16, &str) = match step {
+            Step::Submit { tenant, args } => (Opcode::Submit, *tenant as u16, *args),
+            Step::Stats(sub) => (Opcode::Stats, 0, *sub),
+            Step::Defrag => (Opcode::Defrag, 0, ""),
+            Step::Quit => (Opcode::Quit, 0, ""),
+        };
+        let reply = client.request(opcode, tenant, payload.as_bytes()).expect("reply");
+        expected_req_id += 1;
+        assert_eq!(reply.req_id, expected_req_id, "req_id echo");
+        assert_eq!(
+            reply.opcode,
+            Opcode::for_reply_line(&reply.text),
+            "reply opcode must mirror the text reply token: {}",
+            reply.text
+        );
+        transcript.push(mask(&reply.text));
+    }
+    server.shutdown();
+    transcript
+}
+
+#[test]
+fn text_and_binary_protocols_are_byte_identical_across_fronts() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let threaded = run_text(ServerModeKind::Threaded);
+    let reactor_text = run_text(ServerModeKind::Reactor);
+    let reactor_binary = run_binary();
+
+    assert_eq!(threaded.len(), SCRIPT.len());
+    for (i, ((a, b), c)) in
+        threaded.iter().zip(&reactor_text).zip(&reactor_binary).enumerate()
+    {
+        assert_eq!(a, b, "step {i}: threaded-text vs reactor-text");
+        assert_eq!(a, c, "step {i}: threaded-text vs reactor-binary");
+    }
+
+    // the masked OK lines still carry the deterministic fields
+    assert!(threaded[0].starts_with("OK seq=0 ntat="), "{}", threaded[0]);
+    assert!(threaded[0].contains("compute_us=X"), "{}", threaded[0]);
+    // parse errors surfaced identically
+    assert_eq!(threaded[5], "ERR bad tenant (0-3)");
+    assert_eq!(threaded[6], "ERR bad app (resnet18|mobilenet|camera|harris|pipeline)");
+    // the digest steps really were multi-line report surfaces
+    assert!(threaded[13].starts_with("STATS shards="), "{}", threaded[13]);
+    assert!(threaded[13].lines().count() >= 2, "{}", threaded[13]);
+    assert!(threaded[15].starts_with("STATS classes="), "{}", threaded[15]);
+    assert_eq!(threaded[16], "BYE");
+}
+
+/// Text-only session shapes (unknown verbs, empty lines) have no frame
+/// encoding; the two text fronts must still agree on them byte for
+/// byte.
+#[test]
+fn text_only_error_shapes_match_across_fronts() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let mut transcripts = Vec::new();
+    for mode in [ServerModeKind::Threaded, ServerModeKind::Reactor] {
+        let server = Server::start(&stub_config(mode), "127.0.0.1:0").unwrap();
+        let mut client = WireClient::connect(server.addr).expect("connect");
+        let mut t = Vec::new();
+        for line in ["FROB 1 camera", "", "   ", "submit 0 camera", "QUIT"] {
+            t.push(client.send(line).expect("reply"));
+        }
+        server.shutdown();
+        transcripts.push(t);
+    }
+    assert_eq!(transcripts[0][0], "ERR unknown command 'FROB'");
+    assert_eq!(transcripts[0][1], "ERR empty command");
+    assert_eq!(transcripts[0][2], "ERR empty command");
+    // verbs are case-insensitive on both fronts
+    assert!(transcripts[0][3].starts_with("OK seq="), "{}", transcripts[0][3]);
+    assert_eq!(transcripts[0][4], "BYE");
+    let masked: Vec<Vec<String>> =
+        transcripts.iter().map(|t| t.iter().map(|b| mask(b)).collect()).collect();
+    assert_eq!(masked[0], masked[1]);
+}

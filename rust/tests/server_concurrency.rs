@@ -13,10 +13,12 @@
 //! small CI runners.
 #![cfg(not(feature = "xla"))]
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use cgra_mte::config::{presets, Config};
+use cgra_mte::config::{presets, Config, ServerModeKind};
 use cgra_mte::coordinator::Server;
 use cgra_mte::testutil::wire::WireClient;
 
@@ -28,6 +30,12 @@ static SERIAL: Mutex<()> = Mutex::new(());
 fn stub_config() -> Config {
     let mut cfg = presets::paper_default();
     cfg.artifacts_dir = cgra_mte::runtime::SYNTHETIC_DIR.into();
+    cfg
+}
+
+fn reactor_config() -> Config {
+    let mut cfg = stub_config();
+    cfg.server.mode = ServerModeKind::Reactor;
     cfg
 }
 
@@ -333,4 +341,164 @@ fn concurrent_throughput_beats_single_connection_baseline() {
         "worker-pool server not faster: concurrent {conc_tput:.0} req/s \
          vs single-connection baseline {base_tput:.0} req/s"
     );
+}
+
+/// Reconnect storm against the reactor front: many short-lived
+/// connections (connect → SUBMIT → QUIT → drop) from concurrent
+/// threads.  Slab slots are recycled through the free list with a
+/// generation bump each time; a stale completion or a leaked pending
+/// slot would surface as a lost reply (hang), a cross-connection reply,
+/// or a counter leak in the conservation check at the end.
+#[test]
+fn reactor_reconnect_storm_conserves_admission_counters() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    const THREADS: u32 = 4;
+    const RECONNECTS: u32 = 20;
+    let server = Server::start(&reactor_config(), "127.0.0.1:0").unwrap();
+    let addr = server.addr;
+
+    let threads: Vec<_> = (0..THREADS)
+        .map(|tenant| {
+            std::thread::spawn(move || {
+                for _ in 0..RECONNECTS {
+                    let mut client = WireClient::connect(addr).expect("connect");
+                    submit_ok(&mut client, tenant, APPS[tenant as usize]);
+                    assert_eq!(client.send("QUIT").expect("quit"), "BYE");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("storm thread panicked");
+    }
+
+    let total = THREADS * RECONNECTS;
+    let mut client = WireClient::connect(addr).expect("connect");
+    let stats = client.send("STATS").expect("stats");
+    assert!(stats.contains(&format!("served={total}")), "{stats}");
+    assert!(stats.contains(&format!("queued={total}")), "{stats}");
+    assert!(stats.contains("failed=0"), "{stats}");
+    assert!(stats.contains("pending=0"), "{stats}");
+    client.send("QUIT").expect("quit");
+    server.shutdown();
+}
+
+/// Slow-loris defense: with `idle_timeout_ms` armed, a peer dribbling
+/// one byte per tick without ever completing a request is reaped —
+/// raw bytes do not count as progress — while a client that keeps
+/// completing requests across the same wall-clock span stays connected,
+/// and the server serves fresh clients afterwards.
+#[test]
+fn reactor_idle_timeout_reaps_slow_loris_but_not_active_clients() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = reactor_config();
+    cfg.server.idle_timeout_ms = 150;
+    let server = Server::start(&cfg, "127.0.0.1:0").unwrap();
+    let addr = server.addr;
+
+    // the active client: completes a request every ~50 ms for well past
+    // the idle timeout — progress keeps it alive
+    let active = std::thread::spawn(move || {
+        let mut client = WireClient::connect(addr).expect("connect");
+        for _ in 0..10 {
+            submit_ok(&mut client, 0, "harris");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        assert_eq!(client.send("QUIT").expect("quit"), "BYE");
+    });
+
+    // the slow loris: one byte of a never-finished line per 30 ms tick
+    let mut loris = TcpStream::connect(addr).expect("connect");
+    loris.set_read_timeout(Some(Duration::from_millis(30))).expect("read timeout");
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut closed = false;
+    while Instant::now() < deadline {
+        if loris.write_all(b"S").is_err() {
+            closed = true;
+            break;
+        }
+        let mut probe = [0u8; 16];
+        match loris.read(&mut probe) {
+            Ok(0) => {
+                closed = true;
+                break;
+            }
+            Ok(_) => continue, // no reply is ever owed; tolerate noise
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => {
+                closed = true;
+                break;
+            }
+        }
+    }
+    assert!(closed, "slow-loris connection outlived the idle timeout");
+    active.join().expect("active client panicked");
+
+    // liveness + conservation after the reap
+    let mut client = WireClient::connect(addr).expect("connect");
+    submit_ok(&mut client, 1, "camera");
+    let stats = client.send("STATS").expect("stats");
+    assert!(stats.contains("served=11"), "{stats}");
+    assert!(stats.contains("queued=11"), "{stats}");
+    assert!(stats.contains("failed=0"), "{stats}");
+    assert!(stats.contains("pending=0"), "{stats}");
+    client.send("QUIT").expect("quit");
+    server.shutdown();
+}
+
+/// The reactor front under BUSY backpressure: depth-1 queues, four
+/// connections hammering one tenant.  Every reply is OK or a
+/// well-formed BUSY, totals conserve, and the server survives — the
+/// reactor twin of `busy_backpressure_over_the_wire`.
+#[test]
+fn reactor_busy_backpressure_over_the_wire() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = reactor_config();
+    cfg.server.queue_depth = 1;
+    cfg.server.workers = 1;
+    cfg.server.batch_max = 1;
+    let server = Server::start(&cfg, "127.0.0.1:0").unwrap();
+    let addr = server.addr;
+
+    let threads: Vec<_> = (0..4u32)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(addr).expect("connect");
+                let mut busy = 0u32;
+                let mut ok = 0u32;
+                for _ in 0..10 {
+                    let reply = client.send("SUBMIT 0 camera").expect("submit");
+                    if reply.starts_with("BUSY") {
+                        assert_eq!(reply, "BUSY tenant=0 queue_depth=1");
+                        busy += 1;
+                    } else {
+                        assert!(reply.starts_with("OK "), "{reply}");
+                        ok += 1;
+                    }
+                }
+                client.send("QUIT").expect("quit");
+                (ok, busy)
+            })
+        })
+        .collect();
+    let (mut ok_total, mut busy_total) = (0, 0);
+    for t in threads {
+        let (ok, busy) = t.join().expect("thread");
+        ok_total += ok;
+        busy_total += busy;
+    }
+    assert_eq!(ok_total + busy_total, 40);
+    assert!(ok_total > 0, "nothing served");
+
+    let mut client = WireClient::connect(addr).expect("connect");
+    let stats = client.send("STATS").expect("stats");
+    assert!(stats.contains(&format!("served={ok_total}")), "{stats}");
+    assert!(stats.contains(&format!("rejected={busy_total}")), "{stats}");
+    client.send("QUIT").expect("quit");
+    server.shutdown();
 }
