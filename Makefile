@@ -7,7 +7,7 @@
 # the deterministic stub executor serves a built-in synthetic manifest
 # and no artifacts are needed.
 
-.PHONY: build test artifacts doc bench-smoke bench-noc bench-simperf bench-serve
+.PHONY: build test artifacts doc bench-smoke bench-noc bench-simperf bench-serve bench-obs
 
 build:
 	cargo build --release
@@ -33,6 +33,7 @@ bench-smoke:
 	cargo bench --bench ablation_noc -- --smoke
 	cargo bench --bench simperf -- --smoke
 	cargo bench --bench serve_saturation -- --smoke
+	cargo bench --bench obs_overhead -- --smoke
 
 # NoC ablation at full duration: comm-aware vs oblivious placement on
 # the streaming-pipeline preset plus the churn guard arm; writes
@@ -55,3 +56,9 @@ bench-simperf:
 # on accepted QPS and p99.  Raise `ulimit -n` for the full army.
 bench-serve:
 	cargo bench --bench serve_saturation
+
+# Observability overhead: the simperf presets with [obs] off vs on,
+# writing BENCH_obs.json and enforcing the ≤5% events/sec overhead gate
+# for the full journal + metrics-registry instrumentation.
+bench-obs:
+	cargo bench --bench obs_overhead

@@ -1,0 +1,164 @@
+//! Observability overhead bench with a hard gate.
+//!
+//! Runs the simperf presets twice per scenario — `[obs]` disabled and
+//! `[obs]` enabled (lifecycle journal + metrics registry live) — over
+//! identical fixed work and compares events/sec.  The observability
+//! contract is that the full instrumentation costs at most 5%
+//! throughput: the gate fails the bench (exit 1) when any scenario's
+//! obs-on events/sec drops below 95% of the obs-off rate measured in
+//! the same process.  Off/on samples are interleaved so machine drift
+//! hits both arms alike, and the minimum wall time per arm is used
+//! (least scheduler noise).
+//!
+//! Output: `BENCH_obs.json` (shared `cgra_mte::bench::jsonw` schema).
+//! The CI leg runs `--smoke` (quarter-length runs, fewer samples).
+
+use std::time::Instant;
+
+use cgra_mte::bench::jsonw;
+use cgra_mte::config::{
+    presets, Config, DefragPolicyKind, PlacementPolicyKind, RegionPolicyKind, WorkloadConfig,
+};
+use cgra_mte::metrics::export;
+use cgra_mte::obs::Obs;
+use cgra_mte::sim::{run_cloud_observed, run_cloud_pool_observed, Trace};
+use cgra_mte::tasks::TaskLibrary;
+
+const MAX_OVERHEAD: f64 = 0.05; // full obs may cost at most 5% events/sec
+const JOURNAL_CAP: usize = 1 << 16;
+
+struct Scenario {
+    name: &'static str,
+    cfg: Config,
+    pool: bool,
+}
+
+fn scenarios(smoke: bool) -> Vec<Scenario> {
+    let dur = |full: f64| if smoke { full / 4.0 } else { full };
+    let mut churn =
+        presets::churn_scenario(RegionPolicyKind::FlexibleShape, DefragPolicyKind::CostAware);
+    set_duration(&mut churn, dur(2_000.0));
+    let mut qos = presets::mixed_criticality_scenario(true);
+    set_duration(&mut qos, dur(1_500.0));
+    let mut pool = presets::pool_scenario(2, PlacementPolicyKind::LeastLoaded);
+    set_duration(&mut pool, dur(1_000.0));
+    vec![
+        Scenario { name: "churn", cfg: churn, pool: false },
+        Scenario { name: "mixed-criticality", cfg: qos, pool: false },
+        Scenario { name: "pool-2", cfg: pool, pool: true },
+    ]
+}
+
+fn set_duration(cfg: &mut Config, duration_ms: f64) {
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+    }
+}
+
+/// One run through the observed entry point; returns the deterministic
+/// event count (arrivals + completions + launches).  The trace stays
+/// disabled in both arms — this bench isolates the obs cost.
+fn run(s: &Scenario, obs: &mut Obs) -> u64 {
+    let mut trace = Trace::disabled();
+    if s.pool {
+        let r = run_cloud_pool_observed(&s.cfg, TaskLibrary::table1(), &mut trace, obs)
+            .expect("pool run");
+        r.submitted + r.completed + r.launches
+    } else {
+        let r =
+            run_cloud_observed(&s.cfg, TaskLibrary::table1(), &mut trace, obs).expect("cloud run");
+        r.submitted + r.completed + r.launches
+    }
+}
+
+struct Row {
+    name: &'static str,
+    events: u64,
+    off_eps: f64,
+    on_eps: f64,
+    overhead: f64,
+}
+
+fn measure(s: &Scenario, samples: u32) -> Row {
+    // obs must be workload-transparent: same fixed work in both arms
+    let n = run(s, &mut Obs::disabled());
+    let n_on = run(s, &mut Obs::enabled(JOURNAL_CAP));
+    assert_eq!(n, n_on, "{}: enabling obs changed the event count", s.name);
+    assert!(n > 0, "{}: empty run measures nothing", s.name);
+    let mut best_off = f64::INFINITY;
+    let mut best_on = f64::INFINITY;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(run(s, &mut Obs::disabled()));
+        best_off = best_off.min(t0.elapsed().as_secs_f64());
+        let mut obs = Obs::enabled(JOURNAL_CAP);
+        let t1 = Instant::now();
+        std::hint::black_box(run(s, &mut obs));
+        best_on = best_on.min(t1.elapsed().as_secs_f64());
+    }
+    let off_eps = n as f64 / best_off;
+    let on_eps = n as f64 / best_on;
+    Row { name: s.name, events: n, off_eps, on_eps, overhead: 1.0 - on_eps / off_eps }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let samples = if smoke { 3 } else { 8 };
+    let t0 = Instant::now();
+
+    let rows: Vec<Row> = scenarios(smoke).iter().map(|s| measure(s, samples)).collect();
+
+    let mode = if smoke { "smoke" } else { "full" };
+    println!("obs_overhead — observability cost on the simperf presets ({mode} mode)");
+    let mut failures = Vec::new();
+    for r in &rows {
+        println!(
+            "  {:<18} {:>12} events   {:>14.0} ev/s off   {:>14.0} ev/s on   {:>+6.2}% overhead",
+            r.name, r.events, r.off_eps, r.on_eps, r.overhead * 100.0
+        );
+        if r.overhead > MAX_OVERHEAD {
+            failures.push(format!(
+                "{}: obs costs {:.1}% events/sec (cap {:.0}%)",
+                r.name,
+                r.overhead * 100.0,
+                MAX_OVERHEAD * 100.0
+            ));
+        }
+    }
+
+    let doc = jsonw::obj(&[
+        ("bench", jsonw::str_val("obs_overhead")),
+        ("smoke", jsonw::bool_val(smoke)),
+        ("samples", jsonw::num_u(samples as u64)),
+        ("max_overhead", jsonw::num_f(MAX_OVERHEAD)),
+        ("gate_status", jsonw::str_val(if failures.is_empty() { "pass" } else { "fail" })),
+        (
+            "rows",
+            jsonw::arr(
+                &rows
+                    .iter()
+                    .map(|r| {
+                        jsonw::obj(&[
+                            ("scenario", jsonw::str_val(r.name)),
+                            ("events", jsonw::num_u(r.events)),
+                            ("events_per_sec_off", jsonw::num_f(r.off_eps)),
+                            ("events_per_sec_on", jsonw::num_f(r.on_eps)),
+                            ("overhead", jsonw::num_f(r.overhead)),
+                        ])
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ]);
+    let path = "BENCH_obs.json";
+    export::write_file(path, &doc).expect("write bench json");
+    println!("wrote {path}");
+    println!("bench wall time: {:.1} s", t0.elapsed().as_secs_f64());
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("obs overhead gate FAILED: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -11,8 +11,9 @@ pub mod toml;
 
 pub use schema::{
     ArchConfig, CloudWorkloadConfig, Config, DefragPolicyKind, DprConfig, EdgeWorkloadConfig,
-    EnergyConfig, MigrationCostModelKind, NocConfig, NocPlacementKind, PlacementPolicyKind,
-    PoolConfig, QosClass, QosConfig, QosPolicyKind, RegionPolicyKind, SchedulerConfig,
+    EnergyConfig, MigrationCostModelKind, NocConfig, NocPlacementKind, ObsConfig,
+    PlacementPolicyKind, PoolConfig, QosClass, QosConfig, QosPolicyKind, RegionPolicyKind,
+    SchedulerConfig,
     SchedulerPolicyKind, ServerConfig, ServerModeKind, WireProtocolKind, WorkloadConfig,
 };
 pub use toml::TomlValue;

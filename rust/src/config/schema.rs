@@ -571,6 +571,42 @@ impl NocConfig {
     }
 }
 
+/// `[obs]` — end-to-end observability ([`crate::obs`]): the typed
+/// metrics registry, the request-scoped lifecycle journal and its
+/// exporters (the `METRICS` wire command, Perfetto JSON).
+///
+/// Off by default with a hard byte-identity requirement: disabled
+/// observability must not change any sim or serving output (the
+/// differential goldens enforce this), same discipline as `[energy]`,
+/// `[qos]` and `[noc]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Master switch.  TOML: `obs.enabled`.
+    pub enabled: bool,
+    /// Lifecycle-journal capacity in events; the journal is a ring, so
+    /// the newest `journal_cap` events are retained.  TOML:
+    /// `obs.journal_cap`.
+    pub journal_cap: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { enabled: false, journal_cap: 65_536 }
+    }
+}
+
+impl ObsConfig {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.enabled && self.journal_cap == 0 {
+            return Err(Error::Config(
+                "obs.journal_cap must be positive when obs.enabled".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Execution-region formation mechanism (paper Fig. 2 a–d).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RegionPolicyKind {
@@ -1134,6 +1170,8 @@ pub struct Config {
     pub qos: QosConfig,
     /// NoC bandwidth provisioning: corridors, contention, placement.
     pub noc: NocConfig,
+    /// Observability: metrics registry, lifecycle journal, exporters.
+    pub obs: ObsConfig,
     /// Workload.
     pub workload: WorkloadConfig,
     /// Directory containing AOT artifacts + manifest.json, or the
@@ -1152,6 +1190,7 @@ impl Default for Config {
             energy: EnergyConfig::default(),
             qos: QosConfig::default(),
             noc: NocConfig::default(),
+            obs: ObsConfig::default(),
             workload: WorkloadConfig::Cloud(CloudWorkloadConfig::default()),
             artifacts_dir: "artifacts".into(),
         }
@@ -1318,6 +1357,14 @@ impl Config {
             read_bool(noc, "defrag_align", &mut n.defrag_align)?;
         }
 
+        if let Some(obs) = root.get("obs") {
+            let o = &mut cfg.obs;
+            read_bool(obs, "enabled", &mut o.enabled)?;
+            let mut cap = o.journal_cap as u64;
+            read_u64(obs, "journal_cap", &mut cap)?;
+            o.journal_cap = cap as usize;
+        }
+
         if let Some(wl) = root.get("workload") {
             let kind = wl
                 .get("kind")
@@ -1403,6 +1450,7 @@ impl Config {
         self.energy.validate()?;
         self.qos.validate()?;
         self.noc.validate()?;
+        self.obs.validate()?;
         let s = &self.scheduler;
         if s.unit_array_slices == 0 || s.unit_glb_slices == 0 {
             return Err(Error::Config("unit region sizes must be positive".into()));

@@ -213,6 +213,7 @@ impl Leader {
         };
         let mut sched = Scheduler::new(cfg, lib.clone(), DprMode::Fast);
         sched.preload_all();
+        sched.set_obs(cfg.obs.enabled);
         let mut binding = TaskBinding::new(runtime, lib);
         let warmup_ms = binding.warmup()?;
         Ok(Leader {
@@ -436,6 +437,13 @@ impl Leader {
     /// The scheduler (region/DPR inspection).
     pub fn scheduler(&self) -> &Scheduler {
         &self.sched
+    }
+
+    /// Drain the scheduler's observability instants — the defrag and
+    /// migration events recorded while `[obs].enabled` armed them
+    /// (always empty otherwise).
+    pub fn take_obs_events(&mut self) -> Vec<(u64, crate::obs::JournalKind)> {
+        self.sched.take_obs_events()
     }
 
     /// Point-in-time fragmentation reading of the fabric.

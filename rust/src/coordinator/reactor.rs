@@ -49,7 +49,9 @@ use crate::config::WireProtocolKind;
 use crate::error::{Error, Result};
 
 use super::frame;
-use super::server::{admit, defrag_reply, parse_submit, stats_reply, ReplySink, Shared};
+use super::server::{
+    admit, defrag_reply, metrics_reply, parse_submit, stats_reply, ReplySink, Shared,
+};
 
 /// Hard cap on concurrently open connections (slab slots).
 const MAX_CONNS: usize = 65_536;
@@ -650,6 +652,7 @@ fn dispatch_text(ctx: &Ctx<'_>, conn: &mut Conn, idx: usize, line: &str) {
             }
         }
         Some("STATS") => conn.push_reply(0, stats_reply(ctx.shared, parts.next()), false),
+        Some("METRICS") => conn.push_reply(0, metrics_reply(ctx.shared), false),
         Some("DEFRAG") => dispatch_defrag(ctx, conn, idx, 0),
         Some("QUIT") => conn.push_reply(0, "BYE".into(), true),
         Some("SHUTDOWN") => {

@@ -62,6 +62,10 @@
 //!   → STATS noc=on streams=<n> contended=<n> contention_cycles=<n>
 //!           stream_in_cycles=<n> affinity_hits=<n> mean_slowdown=<x>
 //!           peak_slowdown=<x> corridors=<n> capacity=<n>
+//! METRICS
+//!   → METRICS lines=<n>                   (then n exposition lines:)
+//!   → <Prometheus-style text — serving counters always, plus the
+//!     `[obs]` metrics registry when `obs.enabled`>
 //! DEFRAG
 //!   → DEFRAG migrated=<n> cycles=<n> frag_glb=<a>-><b> frag_arr=<a>-><b>
 //!   → ERR coordinator unavailable         (executors gone / shutting down)
@@ -100,10 +104,11 @@ use crate::config::{Config, PlacementPolicyKind, QosClass, ServerModeKind};
 use crate::error::{Error, Result};
 use crate::metrics::ServeCounters;
 use crate::noc::NocReport;
+use crate::obs::{Journal, JournalKind, MetricsRegistry, NO_REQ};
 use crate::qos::QosReport;
 use crate::tasks::AppId;
 
-use super::leader::{Leader, Submission};
+use super::leader::{Leader, ServeOutcome, Submission};
 use super::router::{AdmissionQueues, TenantId};
 
 /// Tenants the wire protocol admits (the cloud scenario's four, Fig. 3a).
@@ -330,6 +335,20 @@ pub(super) struct Shared {
     /// every batch (`STATS NOC` merges across shards; all `None` while
     /// `[noc]` is disabled).
     noc: Mutex<Vec<Option<NocReport>>>,
+    /// Observability surfaces (`[obs].enabled`): the typed metrics
+    /// registry every shard executor exports into after each batch, and
+    /// the request-lifecycle journal they append to.  `None` keeps the
+    /// serving path identical to earlier, obs-less builds.
+    pub(super) obs: Option<ObsShared>,
+}
+
+/// Server-side observability state shared by executors and both fronts.
+pub(super) struct ObsShared {
+    /// Typed metrics registry; the `METRICS` wire command renders it.
+    pub(super) registry: MetricsRegistry,
+    /// Request-lifecycle journal, fed from served outcomes and the
+    /// scheduler's migration/defrag instants.
+    pub(super) journal: Mutex<Journal>,
 }
 
 impl Shared {
@@ -351,6 +370,10 @@ impl Shared {
             shards: (0..shard_count).map(|_| ShardGauges::new()).collect(),
             qos: Mutex::new(vec![None; shard_count]),
             noc: Mutex::new(vec![None; shard_count]),
+            obs: cfg.obs.enabled.then(|| ObsShared {
+                registry: MetricsRegistry::new(),
+                journal: Mutex::new(Journal::new(cfg.obs.journal_cap)),
+            }),
         }
     }
 
@@ -634,6 +657,7 @@ fn handle_line(
             }
         }
         Some("STATS") => (stats_reply(shared, parts.next()), false),
+        Some("METRICS") => (metrics_reply(shared), false),
         Some("DEFRAG") => (defrag_reply(shared), false),
         Some("QUIT") => ("BYE".into(), true),
         Some("SHUTDOWN") => {
@@ -762,6 +786,37 @@ pub(super) fn stats_reply(shared: &Shared, sub: Option<&str>) -> String {
             )
         }
     }
+}
+
+/// Render the `METRICS` reply: a Prometheus-style text exposition of
+/// the serving counters (always) plus the `[obs]` registry (when
+/// enabled), framed like `STATS SHARDS` — the header names how many
+/// exposition lines follow so line-oriented clients stay in sync.
+///
+/// The admission identity `queued == served + failed + inflight` holds
+/// *within one reply*: `inflight` is derived from the same counter
+/// snapshot the other three lines render, not sampled separately.
+pub(super) fn metrics_reply(shared: &Shared) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    let totals = shared.counters.totals();
+    let failed = shared.counters.failed();
+    let inflight = totals.queued.saturating_sub(totals.served + failed);
+    lines.push(format!("cgra_serve_queued_total {}", totals.queued));
+    lines.push(format!("cgra_serve_served_total {}", totals.served));
+    lines.push(format!("cgra_serve_failed_total {failed}"));
+    lines.push(format!("cgra_serve_rejected_total {}", totals.rejected));
+    lines.push(format!("cgra_serve_inflight {inflight}"));
+    lines.push(format!("cgra_serve_shards {}", shared.shard_count()));
+    lines.push(format!("cgra_serve_migrations_total {}", shared.migrations_total()));
+    if let Some(obs) = &shared.obs {
+        lines.extend(obs.registry.render().lines().map(str::to_string));
+    }
+    let mut out = format!("METRICS lines={}", lines.len());
+    for l in &lines {
+        out.push('\n');
+        out.push_str(l);
+    }
+    out
 }
 
 /// Run the `DEFRAG` wire command: broadcast a compaction pass to every
@@ -929,6 +984,19 @@ fn collect_batch(shared: &Shared, pending: PendingBatch) {
     }
 }
 
+/// Append one batch's served outcomes to the lifecycle journal: each
+/// request's completion, stamped at its batch-relative completion cycle
+/// (server submissions arrive at virtual cycle 0, so the turnaround IS
+/// the completion instant) — the serving-path arm of the journal the
+/// sim drivers feed through [`crate::obs::Obs::observe`].
+fn record_outcomes(obs: &ObsShared, shard: u32, outcomes: &[Option<ServeOutcome>]) {
+    if let Ok(mut j) = obs.journal.lock() {
+        for o in outcomes.iter().flatten() {
+            j.stage(o.tat_cycles, o.seq, shard, JournalKind::Completed { tenant: o.tenant.0 });
+        }
+    }
+}
+
 /// Shard leader executor: the single thread that owns one shard's
 /// fabric.  Each received batch is one `Leader::serve_batch` invocation
 /// (outcomes correlated by the seqs the pool-shared router actually
@@ -963,18 +1031,23 @@ fn run_executor(
             }
             ExecRequest::Batch { subs, resp } => {
                 let result = match leader.serve_batch(&subs) {
-                    Ok(outcomes) => Ok(outcomes
-                        .into_iter()
-                        .map(|o| {
-                            o.map(|o| OutcomeLine {
-                                seq: o.seq,
-                                ntat: o.ntat,
-                                tat_cycles: o.tat_cycles,
-                                compute_us: o.compute_us,
-                                sum: o.final_output_sum,
+                    Ok(outcomes) => {
+                        if let Some(obs) = &shared.obs {
+                            record_outcomes(obs, shard as u32, &outcomes);
+                        }
+                        Ok(outcomes
+                            .into_iter()
+                            .map(|o| {
+                                o.map(|o| OutcomeLine {
+                                    seq: o.seq,
+                                    ntat: o.ntat,
+                                    tat_cycles: o.tat_cycles,
+                                    compute_us: o.compute_us,
+                                    sum: o.final_output_sum,
+                                })
                             })
-                        })
-                        .collect()),
+                            .collect())
+                    }
                     Err(e) => {
                         // `serve` is not transactional: a mid-batch failure
                         // can strand admitted requests in the router/queue
@@ -983,6 +1056,7 @@ fn run_executor(
                         // leader to a clean fabric (seqs keep drawing from
                         // the shared counter, so no collision with peers).
                         log::error!(
+                            target: "cgra_mte::coordinator::leader",
                             "shard {shard}: batch of {} failed: {e} \
                              (stranded backlog by tenant: {:?})",
                             subs.len(),
@@ -991,6 +1065,7 @@ fn run_executor(
                         match Leader::new_shard(cfg, seqs.clone()) {
                             Ok(fresh) => leader = fresh,
                             Err(re) => log::error!(
+                                target: "cgra_mte::coordinator::leader",
                                 "shard {shard}: leader rebuild after failed batch also failed: {re}"
                             ),
                         }
@@ -1007,6 +1082,16 @@ fn run_executor(
                 shared.record_energy(shard, joules, watts, throttled);
                 shared.record_qos(shard, leader.qos_report());
                 shared.record_noc(shard, leader.noc_report());
+                if let Some(obs) = &shared.obs {
+                    let sl = shard.to_string();
+                    obs.registry.counter("cgra_serve_batches_total", &[("shard", &sl)]).inc();
+                    leader.scheduler().export_metrics(&obs.registry, Some(shard as u32));
+                    if let Ok(mut j) = obs.journal.lock() {
+                        for (at, kind) in leader.take_obs_events() {
+                            j.stage(at, NO_REQ, shard as u32, kind);
+                        }
+                    }
+                }
                 let _ = resp.send(result);
             }
         }

@@ -11,6 +11,7 @@ use crate::config::QosClass;
 use crate::metrics::FragmentationGauge;
 use crate::migration::{MigrationReport, MigrationStats};
 use crate::noc::NocReport;
+use crate::obs::{JournalKind, MetricsRegistry};
 use crate::qos::{PreemptionRecord, QosStats};
 use crate::regions::RegionId;
 use crate::scheduler::{CompletionOutcome, Launch, RequestQueue, Scheduler};
@@ -478,6 +479,36 @@ impl FabricPool {
             }
         }
         out
+    }
+
+    /// Arm (or disarm) observability-instant collection on every
+    /// shard's scheduler ([`Scheduler::set_obs`]).
+    pub fn set_obs(&mut self, armed: bool) {
+        for s in &mut self.shards {
+            s.sched.set_obs(armed);
+        }
+    }
+
+    /// Drain every shard's journal instants (defrag passes, task
+    /// migrations) since the last call, tagged with the shard index
+    /// (ascending shard order).  Always empty while disarmed.
+    pub fn take_obs_events(&mut self) -> Vec<(u32, u64, JournalKind)> {
+        let mut out = Vec::new();
+        for s in &mut self.shards {
+            for (at, kind) in s.sched.take_obs_events() {
+                out.push((s.id.0, at, kind));
+            }
+        }
+        out
+    }
+
+    /// Export every shard's cumulative subsystem counters into an
+    /// observability registry, shard-labelled
+    /// ([`Scheduler::export_metrics`]).
+    pub fn export_metrics(&self, reg: &MetricsRegistry) {
+        for s in &self.shards {
+            s.sched.export_metrics(reg, Some(s.id.0));
+        }
     }
 
     /// Summed preemption counters across shards ([`crate::qos`]).

@@ -57,6 +57,7 @@ pub mod fabric;
 pub mod metrics;
 pub mod migration;
 pub mod noc;
+pub mod obs;
 pub mod qos;
 pub mod regions;
 pub mod runtime;

@@ -137,6 +137,34 @@ mod tests {
     }
 
     #[test]
+    fn single_sample_pins_every_percentile() {
+        let mut b = LatencyBreakdown::new();
+        b.record(FrameLatency { reconfig_cycles: 40, wait_exec_cycles: 160 });
+        // with one sample there is nothing to interpolate between: every
+        // percentile reads that sample
+        for p in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(b.percentile_total(p), 200.0, "p{p}");
+        }
+        assert_eq!(b.mean_total(), 200.0);
+    }
+
+    #[test]
+    fn duplicate_heavy_input_keeps_percentiles_at_the_mode() {
+        let mut b = LatencyBreakdown::new();
+        for _ in 0..999 {
+            b.record(FrameLatency { reconfig_cycles: 0, wait_exec_cycles: 500 });
+        }
+        b.record(FrameLatency { reconfig_cycles: 0, wait_exec_cycles: 700 });
+        // one outlier in a thousand duplicates moves nothing below p100:
+        // the interpolation indices for p50/p95/p99 all land inside the
+        // run of 500s
+        assert_eq!(b.p50_total(), 500.0);
+        assert_eq!(b.p95_total(), 500.0);
+        assert_eq!(b.p99_total(), 500.0);
+        assert_eq!(b.percentile_total(100.0), 700.0);
+    }
+
+    #[test]
     fn percentile_family_is_monotone() {
         let mut b = LatencyBreakdown::new();
         for i in 1..=100u64 {

@@ -1,0 +1,144 @@
+//! Structured simulation events — the shared vocabulary between the
+//! human-readable [`crate::sim::Trace`] and the request-scoped
+//! [`crate::obs::Journal`].
+//!
+//! Every trace line the sim drivers used to `format!` inline is now one
+//! [`SimEvent`] variant; the `Display` impl reproduces the legacy line
+//! **byte for byte** (the differential goldens digest rendered traces,
+//! so this grammar is pinned).  The optional `shard` field carries the
+//! pool drivers' `shard={n} ` prefix — it is `Some` only when the pool
+//! has more than one shard, and only the arrive/launch/preempt lines
+//! ever carry it (matching the historical `shard_tag` behavior).
+
+use std::fmt;
+
+use crate::qos::PreemptionRecord;
+use crate::scheduler::Launch;
+
+/// A structured simulation event with an exact legacy text rendering.
+#[derive(Clone, Debug)]
+pub enum SimEvent {
+    /// A cloud request entered the admission queue.
+    Arrive { shard: Option<u32>, seq: u64, tenant: u32, app: &'static str },
+    /// An edge frame task entered the admission queue.
+    ArriveFrame { shard: Option<u32>, seq: u64, tenant: u32, frame: u32, app: &'static str },
+    /// A cloud request was rejected by admission (queue full).
+    Busy { seq: u64, tenant: u32 },
+    /// An edge frame task was rejected by admission.
+    BusyFrame { seq: u64, frame: u32 },
+    /// A cloud request completed.
+    Done { seq: u64, tenant: u32 },
+    /// An edge frame tick started.
+    Frame { k: u32 },
+    /// All tasks of an edge frame completed.
+    FrameDone { k: u32, total: u64, reconfig: u64 },
+    /// An entire edge frame was rejected at admission.
+    FrameRejected { k: u32 },
+    /// The scheduler placed a task instance on a region.
+    Launch { shard: Option<u32>, launch: Launch },
+    /// The QoS engine checkpointed and evicted a running task.
+    Preempt { shard: Option<u32>, rec: PreemptionRecord },
+}
+
+impl SimEvent {
+    /// Shard the event happened on (0 for single-fabric sims).
+    pub fn shard_id(&self) -> u32 {
+        match self {
+            SimEvent::Arrive { shard, .. }
+            | SimEvent::ArriveFrame { shard, .. }
+            | SimEvent::Launch { shard, .. }
+            | SimEvent::Preempt { shard, .. } => shard.unwrap_or(0),
+            _ => 0,
+        }
+    }
+}
+
+fn shard_tag(f: &mut fmt::Formatter<'_>, shard: &Option<u32>) -> fmt::Result {
+    if let Some(s) = shard {
+        write!(f, "shard={s} ")?;
+    }
+    Ok(())
+}
+
+impl fmt::Display for SimEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimEvent::Arrive { shard, seq, tenant, app } => {
+                shard_tag(f, shard)?;
+                write!(f, "arrive seq={seq} tenant={tenant} app={app}")
+            }
+            SimEvent::ArriveFrame { shard, seq, frame, app, .. } => {
+                shard_tag(f, shard)?;
+                write!(f, "arrive seq={seq} frame={frame} app={app}")
+            }
+            SimEvent::Busy { seq, tenant } => write!(f, "busy seq={seq} tenant={tenant}"),
+            SimEvent::BusyFrame { seq, frame } => write!(f, "busy seq={seq} frame={frame}"),
+            SimEvent::Done { seq, tenant } => write!(f, "done seq={seq} tenant={tenant}"),
+            SimEvent::Frame { k } => write!(f, "frame k={k}"),
+            SimEvent::FrameDone { k, total, reconfig } => {
+                write!(f, "frame-done k={k} total={total} reconfig={reconfig}")
+            }
+            SimEvent::FrameRejected { k } => write!(f, "frame-rejected k={k}"),
+            SimEvent::Launch { shard, launch } => {
+                shard_tag(f, shard)?;
+                write!(
+                    f,
+                    "launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
+                    launch.instance,
+                    launch.task,
+                    launch.ver,
+                    launch.region,
+                    launch.dpr_cycles,
+                    launch.exec_cycles,
+                    launch.finish
+                )
+            }
+            SimEvent::Preempt { shard, rec } => {
+                shard_tag(f, shard)?;
+                write!(
+                    f,
+                    "preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
+                    rec.victim,
+                    rec.victim_task,
+                    rec.victim_class.name(),
+                    rec.preemptor,
+                    rec.preemptor_class.name(),
+                    rec.victim_region,
+                    rec.remaining_cycles,
+                    rec.checkpoint_cycles
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_legacy_grammar() {
+        let ev = SimEvent::Arrive { shard: None, seq: 3, tenant: 1, app: "MobileNet" };
+        assert_eq!(ev.to_string(), "arrive seq=3 tenant=1 app=MobileNet");
+        let ev = SimEvent::Arrive { shard: Some(2), seq: 3, tenant: 1, app: "MobileNet" };
+        assert_eq!(ev.to_string(), "shard=2 arrive seq=3 tenant=1 app=MobileNet");
+        let ev = SimEvent::ArriveFrame { shard: None, seq: 9, tenant: 2, frame: 4, app: "Camera" };
+        assert_eq!(ev.to_string(), "arrive seq=9 frame=4 app=Camera");
+        assert_eq!(SimEvent::Busy { seq: 7, tenant: 0 }.to_string(), "busy seq=7 tenant=0");
+        assert_eq!(SimEvent::BusyFrame { seq: 7, frame: 2 }.to_string(), "busy seq=7 frame=2");
+        assert_eq!(SimEvent::Done { seq: 5, tenant: 3 }.to_string(), "done seq=5 tenant=3");
+        assert_eq!(SimEvent::Frame { k: 11 }.to_string(), "frame k=11");
+        assert_eq!(
+            SimEvent::FrameDone { k: 1, total: 800, reconfig: 60 }.to_string(),
+            "frame-done k=1 total=800 reconfig=60"
+        );
+        assert_eq!(SimEvent::FrameRejected { k: 6 }.to_string(), "frame-rejected k=6");
+    }
+
+    #[test]
+    fn shard_id_defaults_to_zero() {
+        assert_eq!(SimEvent::Frame { k: 0 }.shard_id(), 0);
+        let ev = SimEvent::Arrive { shard: Some(3), seq: 0, tenant: 0, app: "x" };
+        assert_eq!(ev.shard_id(), 3);
+    }
+}

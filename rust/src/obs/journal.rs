@@ -1,0 +1,505 @@
+//! Request-scoped lifecycle journal.
+//!
+//! The journal records cycle-stamped stage transitions keyed by request
+//! id (`seq` on the wire and in the cloud sims, the task-graph request
+//! id inside the scheduler): submitted → admitted → queued → placed →
+//! reconfiguring → executing → preempted/migrated → completed.  Sim
+//! drivers feed it by expanding each [`SimEvent`]; the serving path
+//! feeds it directly from the leader loop.  Storage is a bounded ring
+//! (oldest events drop first, like [`crate::sim::Trace`]) and the
+//! whole journal folds to an FNV-1a digest so determinism is checkable
+//! with one `u64` comparison across runs.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use super::event::SimEvent;
+
+/// Request id used for fabric-level events (frames, defrag) that do
+/// not belong to a single request.
+pub const NO_REQ: u64 = u64::MAX;
+
+/// A lifecycle stage transition or fabric-level instant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JournalKind {
+    /// Request arrived from the workload / wire.
+    Submitted { tenant: u32, app: String },
+    /// Admission accepted the request (serving path).
+    Admitted,
+    /// Request entered the scheduler queue.
+    Queued,
+    /// Admission rejected the request (queue full / power cap).
+    Rejected,
+    /// Scheduler bound a task instance to a region.
+    Placed { task: String, region: u64 },
+    /// DPR engine loading the bitstream onto the region.
+    Reconfiguring { region: u64, cycles: u64, cache_hit: bool },
+    /// Task body executing on the region.
+    Executing { region: u64, cycles: u64 },
+    /// QoS engine checkpointed and evicted the task.
+    Preempted { region: u64, remaining: u64, ckpt: u64 },
+    /// A checkpointed task was relaunched.
+    Resumed { region: u64 },
+    /// Request finished.
+    Completed { tenant: u32 },
+    /// Edge frame tick (fabric-level).
+    FrameStart { k: u32 },
+    /// Edge frame fully completed (fabric-level).
+    FrameDone { k: u32, total: u64, reconfig: u64 },
+    /// Edge frame rejected at admission (fabric-level).
+    FrameRejected { k: u32 },
+    /// Defragmentation pass (fabric-level instant).
+    Defrag { migrated: u64, cycles: u64 },
+    /// Live migration moved a task between regions.
+    Migrated { task: String, from: u64, to: u64, cycles: u64 },
+}
+
+impl JournalKind {
+    fn discriminant(&self) -> u64 {
+        match self {
+            JournalKind::Submitted { .. } => 1,
+            JournalKind::Admitted => 2,
+            JournalKind::Queued => 3,
+            JournalKind::Rejected => 4,
+            JournalKind::Placed { .. } => 5,
+            JournalKind::Reconfiguring { .. } => 6,
+            JournalKind::Executing { .. } => 7,
+            JournalKind::Preempted { .. } => 8,
+            JournalKind::Resumed { .. } => 9,
+            JournalKind::Completed { .. } => 10,
+            JournalKind::FrameStart { .. } => 11,
+            JournalKind::FrameDone { .. } => 12,
+            JournalKind::FrameRejected { .. } => 13,
+            JournalKind::Defrag { .. } => 14,
+            JournalKind::Migrated { .. } => 15,
+        }
+    }
+
+    /// Stable stage name (Perfetto slice names, exposition labels).
+    pub fn stage_name(&self) -> &'static str {
+        match self {
+            JournalKind::Submitted { .. } => "submitted",
+            JournalKind::Admitted => "admitted",
+            JournalKind::Queued => "queued",
+            JournalKind::Rejected => "rejected",
+            JournalKind::Placed { .. } => "placed",
+            JournalKind::Reconfiguring { .. } => "reconfiguring",
+            JournalKind::Executing { .. } => "executing",
+            JournalKind::Preempted { .. } => "preempted",
+            JournalKind::Resumed { .. } => "resumed",
+            JournalKind::Completed { .. } => "completed",
+            JournalKind::FrameStart { .. } => "frame",
+            JournalKind::FrameDone { .. } => "frame-done",
+            JournalKind::FrameRejected { .. } => "frame-rejected",
+            JournalKind::Defrag { .. } => "defrag",
+            JournalKind::Migrated { .. } => "migrated",
+        }
+    }
+}
+
+/// One journal entry: cycle stamp, request key, shard, stage payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalEvent {
+    /// Cycle the transition happened at.
+    pub at: u64,
+    /// Request id ([`NO_REQ`] for fabric-level events).
+    pub req: u64,
+    /// Shard the event happened on (0 for single-fabric runs).
+    pub shard: u32,
+    /// Stage transition payload.
+    pub kind: JournalKind,
+}
+
+/// FNV-1a 64 running hash.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    fn bytes(&mut self, s: &[u8]) {
+        self.u64(s.len() as u64);
+        for &b in s {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+}
+
+/// Per-request lifecycle summary with per-stage durations (cycles).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReqSummary {
+    /// Owning tenant (from the Submitted/Completed events).
+    pub tenant: u32,
+    /// Application name, when known.
+    pub app: Option<String>,
+    /// Cycle the request was submitted.
+    pub submitted_at: u64,
+    /// Cycle the request completed (None if still in flight/rejected).
+    pub completed_at: Option<u64>,
+    /// Submitted → first reconfig/execute start (admission + queueing).
+    pub queued_cycles: u64,
+    /// Total cycles spent in DPR reconfiguration.
+    pub reconfig_cycles: u64,
+    /// Total cycles of execution time scheduled.
+    pub exec_cycles: u64,
+    /// Times the request was preempted.
+    pub preemptions: u32,
+    /// Times the request was live-migrated.
+    pub migrations: u32,
+    /// Whether admission rejected the request.
+    pub rejected: bool,
+}
+
+impl ReqSummary {
+    /// End-to-end turnaround in cycles, when the request completed.
+    pub fn turnaround(&self) -> Option<u64> {
+        self.completed_at.map(|c| c.saturating_sub(self.submitted_at))
+    }
+}
+
+/// Bounded, digestable event journal.
+#[derive(Clone, Debug)]
+pub struct Journal {
+    events: VecDeque<JournalEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Journal {
+    /// Journal retaining up to `cap` events (0 disables recording).
+    pub fn new(cap: usize) -> Journal {
+        Journal { events: VecDeque::new(), cap, dropped: 0 }
+    }
+
+    /// Journal that records nothing.
+    pub fn disabled() -> Journal {
+        Journal::new(0)
+    }
+
+    /// Whether events are being retained.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Append one event (oldest drops first past capacity).
+    pub fn push(&mut self, ev: JournalEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    /// Record a stage transition.
+    pub fn stage(&mut self, at: u64, req: u64, shard: u32, kind: JournalKind) {
+        self.push(JournalEvent { at, req, shard, kind });
+    }
+
+    /// Expand a structured sim event into its lifecycle stages.
+    pub fn observe_sim(&mut self, at: u64, shard: u32, ev: &SimEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        match ev {
+            SimEvent::Arrive { seq, tenant, app, .. } => {
+                self.stage(
+                    at,
+                    *seq,
+                    shard,
+                    JournalKind::Submitted { tenant: *tenant, app: (*app).to_string() },
+                );
+                self.stage(at, *seq, shard, JournalKind::Queued);
+            }
+            SimEvent::ArriveFrame { seq, tenant, app, .. } => {
+                self.stage(
+                    at,
+                    *seq,
+                    shard,
+                    JournalKind::Submitted { tenant: *tenant, app: (*app).to_string() },
+                );
+                self.stage(at, *seq, shard, JournalKind::Queued);
+            }
+            SimEvent::Busy { seq, .. } | SimEvent::BusyFrame { seq, .. } => {
+                self.stage(at, *seq, shard, JournalKind::Rejected);
+            }
+            SimEvent::Done { seq, tenant } => {
+                self.stage(at, *seq, shard, JournalKind::Completed { tenant: *tenant });
+            }
+            SimEvent::Frame { k } => {
+                self.stage(at, NO_REQ, shard, JournalKind::FrameStart { k: *k });
+            }
+            SimEvent::FrameDone { k, total, reconfig } => {
+                self.stage(
+                    at,
+                    NO_REQ,
+                    shard,
+                    JournalKind::FrameDone { k: *k, total: *total, reconfig: *reconfig },
+                );
+            }
+            SimEvent::FrameRejected { k } => {
+                self.stage(at, NO_REQ, shard, JournalKind::FrameRejected { k: *k });
+            }
+            SimEvent::Launch { launch, .. } => {
+                let req = launch.instance.request;
+                let region = launch.region.0;
+                if launch.resumed {
+                    self.stage(at, req, shard, JournalKind::Resumed { region });
+                } else {
+                    self.stage(
+                        at,
+                        req,
+                        shard,
+                        JournalKind::Placed { task: launch.task.0.clone(), region },
+                    );
+                }
+                if launch.dpr_cycles > 0 {
+                    self.stage(
+                        launch.start,
+                        req,
+                        shard,
+                        JournalKind::Reconfiguring {
+                            region,
+                            cycles: launch.dpr_cycles,
+                            cache_hit: launch.cache_hit,
+                        },
+                    );
+                }
+                self.stage(
+                    launch.start + launch.dpr_cycles,
+                    req,
+                    shard,
+                    JournalKind::Executing { region, cycles: launch.exec_cycles },
+                );
+            }
+            SimEvent::Preempt { rec, .. } => {
+                self.stage(
+                    at,
+                    rec.victim.request,
+                    shard,
+                    JournalKind::Preempted {
+                        region: rec.victim_region.0,
+                        remaining: rec.remaining_cycles,
+                        ckpt: rec.checkpoint_cycles,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &JournalEvent> {
+        self.events.iter()
+    }
+
+    /// Number of retained events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether the journal holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events dropped past capacity.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// FNV-1a digest over every retained event (and the dropped
+    /// count), canonical across runs: two identical deterministic runs
+    /// must produce equal digests.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.u64(self.dropped);
+        for ev in &self.events {
+            h.u64(ev.at);
+            h.u64(ev.req);
+            h.u64(ev.shard as u64);
+            h.u64(ev.kind.discriminant());
+            match &ev.kind {
+                JournalKind::Submitted { tenant, app } => {
+                    h.u64(*tenant as u64);
+                    h.bytes(app.as_bytes());
+                }
+                JournalKind::Admitted | JournalKind::Queued | JournalKind::Rejected => {}
+                JournalKind::Placed { task, region } => {
+                    h.bytes(task.as_bytes());
+                    h.u64(*region);
+                }
+                JournalKind::Reconfiguring { region, cycles, cache_hit } => {
+                    h.u64(*region);
+                    h.u64(*cycles);
+                    h.u64(*cache_hit as u64);
+                }
+                JournalKind::Executing { region, cycles } => {
+                    h.u64(*region);
+                    h.u64(*cycles);
+                }
+                JournalKind::Preempted { region, remaining, ckpt } => {
+                    h.u64(*region);
+                    h.u64(*remaining);
+                    h.u64(*ckpt);
+                }
+                JournalKind::Resumed { region } => h.u64(*region),
+                JournalKind::Completed { tenant } => h.u64(*tenant as u64),
+                JournalKind::FrameStart { k } | JournalKind::FrameRejected { k } => {
+                    h.u64(*k as u64)
+                }
+                JournalKind::FrameDone { k, total, reconfig } => {
+                    h.u64(*k as u64);
+                    h.u64(*total);
+                    h.u64(*reconfig);
+                }
+                JournalKind::Defrag { migrated, cycles } => {
+                    h.u64(*migrated);
+                    h.u64(*cycles);
+                }
+                JournalKind::Migrated { task, from, to, cycles } => {
+                    h.bytes(task.as_bytes());
+                    h.u64(*from);
+                    h.u64(*to);
+                    h.u64(*cycles);
+                }
+            }
+        }
+        h.0
+    }
+
+    /// Fold the journal into per-request lifecycle summaries.
+    pub fn summaries(&self) -> BTreeMap<u64, ReqSummary> {
+        let mut out: BTreeMap<u64, ReqSummary> = BTreeMap::new();
+        for ev in &self.events {
+            if ev.req == NO_REQ {
+                continue;
+            }
+            let s = out.entry(ev.req).or_default();
+            match &ev.kind {
+                JournalKind::Submitted { tenant, app } => {
+                    s.tenant = *tenant;
+                    s.app = Some(app.clone());
+                    s.submitted_at = ev.at;
+                }
+                JournalKind::Admitted | JournalKind::Queued => {}
+                JournalKind::Rejected => s.rejected = true,
+                JournalKind::Placed { .. } | JournalKind::Resumed { .. } => {}
+                JournalKind::Reconfiguring { cycles, .. } => {
+                    if s.reconfig_cycles == 0 && s.exec_cycles == 0 {
+                        s.queued_cycles = ev.at.saturating_sub(s.submitted_at);
+                    }
+                    s.reconfig_cycles += cycles;
+                }
+                JournalKind::Executing { cycles, .. } => {
+                    if s.reconfig_cycles == 0 && s.exec_cycles == 0 {
+                        s.queued_cycles = ev.at.saturating_sub(s.submitted_at);
+                    }
+                    s.exec_cycles += cycles;
+                }
+                JournalKind::Preempted { .. } => s.preemptions += 1,
+                JournalKind::Completed { tenant } => {
+                    s.tenant = *tenant;
+                    s.completed_at = Some(ev.at);
+                }
+                JournalKind::Migrated { .. } => s.migrations += 1,
+                JournalKind::FrameStart { .. }
+                | JournalKind::FrameDone { .. }
+                | JournalKind::FrameRejected { .. }
+                | JournalKind::Defrag { .. } => {}
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Journal {
+        let mut j = Journal::new(1024);
+        j.stage(10, 1, 0, JournalKind::Submitted { tenant: 2, app: "Harris".into() });
+        j.stage(10, 1, 0, JournalKind::Queued);
+        j.stage(50, 1, 0, JournalKind::Placed { task: "harris".into(), region: 3 });
+        j.stage(50, 1, 0, JournalKind::Reconfiguring { region: 3, cycles: 40, cache_hit: false });
+        j.stage(90, 1, 0, JournalKind::Executing { region: 3, cycles: 200 });
+        j.stage(290, 1, 0, JournalKind::Completed { tenant: 2 });
+        j
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let a = sample();
+        let b = sample();
+        assert_eq!(a.digest(), b.digest(), "identical journals must digest equal");
+        let mut c = sample();
+        c.stage(300, 2, 0, JournalKind::Rejected);
+        assert_ne!(a.digest(), c.digest(), "digest must see new events");
+    }
+
+    #[test]
+    fn summaries_compute_stage_durations() {
+        let s = sample().summaries();
+        let r = &s[&1];
+        assert_eq!(r.tenant, 2);
+        assert_eq!(r.app.as_deref(), Some("Harris"));
+        assert_eq!(r.submitted_at, 10);
+        assert_eq!(r.queued_cycles, 40, "submitted at 10, reconfig started at 50");
+        assert_eq!(r.reconfig_cycles, 40);
+        assert_eq!(r.exec_cycles, 200);
+        assert_eq!(r.turnaround(), Some(280));
+        assert_eq!(r.preemptions, 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_digest_counts_drops() {
+        let mut j = Journal::new(2);
+        j.stage(1, 1, 0, JournalKind::Queued);
+        j.stage(2, 2, 0, JournalKind::Queued);
+        let before = j.digest();
+        j.stage(3, 3, 0, JournalKind::Queued);
+        assert_eq!(j.len(), 2);
+        assert_eq!(j.dropped(), 1);
+        assert_ne!(j.digest(), before);
+        // disabled journal records nothing
+        let mut d = Journal::disabled();
+        d.stage(1, 1, 0, JournalKind::Queued);
+        assert!(d.is_empty());
+        assert!(!d.enabled());
+    }
+
+    #[test]
+    fn observe_sim_expands_launch_lifecycle() {
+        use crate::regions::RegionId;
+        use crate::scheduler::Launch;
+        use crate::tasks::{TaskId, TaskInstanceId, VariantId};
+        let mut j = Journal::new(64);
+        let launch = Launch {
+            instance: TaskInstanceId { request: 7, node: 0 },
+            task: TaskId("conv".into()),
+            ver: VariantId('a'),
+            region: RegionId(2),
+            replicas: 1,
+            start: 100,
+            dpr_cycles: 30,
+            exec_cycles: 500,
+            finish: 630,
+            cache_hit: true,
+            resumed: false,
+        };
+        j.observe_sim(100, 1, &SimEvent::Launch { shard: Some(1), launch });
+        let kinds: Vec<&'static str> = j.events().map(|e| e.kind.stage_name()).collect();
+        assert_eq!(kinds, vec!["placed", "reconfiguring", "executing"]);
+        assert!(j.events().all(|e| e.req == 7 && e.shard == 1));
+        let exec = j.events().find(|e| e.kind.stage_name() == "executing").unwrap();
+        assert_eq!(exec.at, 130, "execution starts after DPR");
+    }
+}

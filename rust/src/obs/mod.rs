@@ -1,0 +1,133 @@
+//! End-to-end observability: typed metrics, lifecycle journal, exporters.
+//!
+//! Three pieces, all behind the `[obs]` config section:
+//!
+//! * [`MetricsRegistry`] — named atomic counters / gauges / log-linear
+//!   histograms with Prometheus-style label sets and text exposition
+//!   ([`MetricsRegistry::render`]), served over the wire as the
+//!   `METRICS` command on both serving fronts.
+//! * [`Journal`] — the request-scoped lifecycle journal: cycle-stamped
+//!   stage transitions (submitted → admitted → queued → placed →
+//!   reconfiguring → executing → preempted/migrated → completed) keyed
+//!   by request id, foldable to per-request stage durations
+//!   ([`Journal::summaries`]) and an FNV-1a determinism digest
+//!   ([`Journal::digest`]).
+//! * [`perfetto`] — a Chrome `trace_event` JSON exporter rendering the
+//!   journal as a timeline (one track per shard region, slices per
+//!   task stage, instants for DPR/defrag/preemption) loadable in
+//!   `ui.perfetto.dev`.
+//!
+//! **Determinism contract:** with `[obs] enabled = false` (the
+//! default) every code path is byte-identical to a build without this
+//! module — the sim drivers pass [`Obs::disabled`] and never construct
+//! an event unless the human-readable trace wants it too.  With obs
+//! enabled, recording is deterministic: two runs of the same config
+//! produce equal journal digests and equal Perfetto documents.
+
+pub mod event;
+pub mod journal;
+pub mod perfetto;
+pub mod registry;
+
+pub use event::SimEvent;
+pub use journal::{Journal, JournalEvent, JournalKind, ReqSummary, NO_REQ};
+pub use registry::{Counter, Gauge, HistSnapshot, Histogram, MetricsRegistry};
+
+use crate::config::Config;
+use crate::sim::Trace;
+
+/// Observability context threaded through the sim drivers and serving
+/// leaders: a journal plus a shared metrics registry, with a master
+/// switch so disabled observability costs one branch per event site.
+#[derive(Clone, Debug)]
+pub struct Obs {
+    on: bool,
+    /// Lifecycle journal (empty and non-recording when disabled).
+    pub journal: Journal,
+    /// Shared metrics registry.
+    pub registry: MetricsRegistry,
+}
+
+impl Obs {
+    /// Observability off: records nothing, exports nothing.
+    pub fn disabled() -> Obs {
+        Obs { on: false, journal: Journal::disabled(), registry: MetricsRegistry::new() }
+    }
+
+    /// Observability on with a journal capacity.
+    pub fn enabled(journal_cap: usize) -> Obs {
+        Obs { on: true, journal: Journal::new(journal_cap), registry: MetricsRegistry::new() }
+    }
+
+    /// Build from the `[obs]` config section.
+    pub fn from_config(cfg: &Config) -> Obs {
+        if cfg.obs.enabled {
+            Obs::enabled(cfg.obs.journal_cap)
+        } else {
+            Obs::disabled()
+        }
+    }
+
+    /// Whether observability is recording.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.on
+    }
+
+    /// Journal a structured sim event (no-op when disabled).
+    #[inline]
+    pub fn observe(&mut self, at: u64, shard: u32, ev: &SimEvent) {
+        if self.on {
+            self.journal.observe_sim(at, shard, ev);
+        }
+    }
+}
+
+/// Emit one structured event to both the human-readable trace and the
+/// journal, constructing it only if at least one consumer is active —
+/// the disabled-everything path pays a single branch, preserving the
+/// old `log_with` laziness guarantee.
+#[inline]
+pub fn note<F>(trace: &mut Trace, obs: &mut Obs, at: u64, shard: u32, make: F)
+where
+    F: FnOnce() -> SimEvent,
+{
+    if trace.enabled() || obs.on() {
+        let ev = make();
+        obs.observe(at, shard, &ev);
+        trace.emit(at, ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_obs_records_nothing() {
+        let mut obs = Obs::disabled();
+        assert!(!obs.on());
+        obs.observe(5, 0, &SimEvent::Frame { k: 1 });
+        assert!(obs.journal.is_empty());
+    }
+
+    #[test]
+    fn note_is_lazy_when_both_consumers_are_off() {
+        let mut trace = Trace::disabled();
+        let mut obs = Obs::disabled();
+        let mut calls = 0u32;
+        note(&mut trace, &mut obs, 1, 0, || {
+            calls += 1;
+            SimEvent::Frame { k: 0 }
+        });
+        assert_eq!(calls, 0, "event must not be constructed");
+
+        let mut obs = Obs::enabled(16);
+        note(&mut trace, &mut obs, 1, 0, || {
+            calls += 1;
+            SimEvent::Frame { k: 0 }
+        });
+        assert_eq!(calls, 1, "journal-only consumer still sees events");
+        assert_eq!(obs.journal.len(), 1);
+    }
+}

@@ -1,0 +1,381 @@
+//! Perfetto / Chrome `trace_event` JSON export of a lifecycle journal.
+//!
+//! Renders the [`Journal`] as a timeline loadable in `ui.perfetto.dev`
+//! (or `chrome://tracing`): one *process* per shard, one *thread*
+//! (track) per execution region plus a `fabric` track per shard for
+//! admission-level events, complete `"X"` slices for the
+//! reconfiguring/executing stages, and `"i"` instants for placement,
+//! preemption, defragmentation and migration.  Timestamps convert
+//! cycles to microseconds at the fabric clock.
+//!
+//! The document is built directly from [`Json`] values, so the output
+//! is guaranteed to round-trip through the in-tree parser
+//! ([`Json::parse`]) and is byte-deterministic (`Json::Obj` is a
+//! sorted map).
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use crate::util::json::Json;
+
+use super::journal::{Journal, JournalKind, NO_REQ};
+
+/// Reserved `tid` for the per-shard fabric (admission) track; region
+/// tracks use `region + 1`.
+const FABRIC_TID: u64 = 0;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// One trace event row.
+#[allow(clippy::too_many_arguments)]
+fn event(
+    name: &str,
+    ph: &str,
+    ts_us: f64,
+    dur_us: Option<f64>,
+    pid: u32,
+    tid: u64,
+    scope: Option<&str>,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str(ph.to_string())),
+        ("ts", Json::Num(ts_us)),
+        ("pid", num(pid as u64)),
+        ("tid", num(tid)),
+    ];
+    if let Some(d) = dur_us {
+        pairs.push(("dur", Json::Num(d)));
+    }
+    if let Some(s) = scope {
+        pairs.push(("s", Json::Str(s.to_string())));
+    }
+    if !args.is_empty() {
+        pairs.push(("args", obj(args)));
+    }
+    obj(pairs)
+}
+
+fn meta(name: &str, pid: u32, tid: u64, label: &str) -> Json {
+    event(name, "M", 0.0, None, pid, tid, None, vec![("name", Json::Str(label.to_string()))])
+}
+
+/// Export the journal as a Chrome `trace_event` document.
+///
+/// `mhz` is the fabric core clock in MHz (cycles per microsecond);
+/// values of 0 are treated as 1 to keep timestamps finite.
+pub fn export(journal: &Journal, mhz: u64) -> Json {
+    let per_us = if mhz == 0 { 1.0 } else { mhz as f64 };
+    let us = |cycles: u64| cycles as f64 / per_us;
+
+    let mut shards: BTreeSet<u32> = BTreeSet::new();
+    let mut tracks: BTreeSet<(u32, u64)> = BTreeSet::new();
+    let mut rows: Vec<Json> = Vec::new();
+
+    for ev in journal.events() {
+        shards.insert(ev.shard);
+        let req = ev.req;
+        let req_arg = |mut extra: Vec<(&'static str, Json)>| {
+            if req != NO_REQ {
+                extra.insert(0, ("req", num(req)));
+            }
+            extra
+        };
+        match &ev.kind {
+            JournalKind::Submitted { tenant, app } => {
+                rows.push(event(
+                    "submitted",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    FABRIC_TID,
+                    Some("t"),
+                    req_arg(vec![
+                        ("app", Json::Str(app.clone())),
+                        ("tenant", num(*tenant as u64)),
+                    ]),
+                ));
+            }
+            JournalKind::Admitted | JournalKind::Queued => {
+                rows.push(event(
+                    ev.kind.stage_name(),
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    FABRIC_TID,
+                    Some("t"),
+                    req_arg(vec![]),
+                ));
+            }
+            JournalKind::Rejected => {
+                rows.push(event(
+                    "rejected",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    FABRIC_TID,
+                    Some("t"),
+                    req_arg(vec![]),
+                ));
+            }
+            JournalKind::Placed { task, region } => {
+                tracks.insert((ev.shard, *region));
+                rows.push(event(
+                    "placed",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    region + 1,
+                    Some("t"),
+                    req_arg(vec![("task", Json::Str(task.clone()))]),
+                ));
+            }
+            JournalKind::Reconfiguring { region, cycles, cache_hit } => {
+                tracks.insert((ev.shard, *region));
+                rows.push(event(
+                    "reconfiguring",
+                    "X",
+                    us(ev.at),
+                    Some(us(*cycles)),
+                    ev.shard,
+                    region + 1,
+                    None,
+                    req_arg(vec![
+                        ("cache_hit", Json::Bool(*cache_hit)),
+                        ("cycles", num(*cycles)),
+                    ]),
+                ));
+            }
+            JournalKind::Executing { region, cycles } => {
+                tracks.insert((ev.shard, *region));
+                rows.push(event(
+                    "executing",
+                    "X",
+                    us(ev.at),
+                    Some(us(*cycles)),
+                    ev.shard,
+                    region + 1,
+                    None,
+                    req_arg(vec![("cycles", num(*cycles))]),
+                ));
+            }
+            JournalKind::Preempted { region, remaining, ckpt } => {
+                tracks.insert((ev.shard, *region));
+                rows.push(event(
+                    "preempted",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    region + 1,
+                    Some("t"),
+                    req_arg(vec![("ckpt", num(*ckpt)), ("remaining", num(*remaining))]),
+                ));
+            }
+            JournalKind::Resumed { region } => {
+                tracks.insert((ev.shard, *region));
+                rows.push(event(
+                    "resumed",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    region + 1,
+                    Some("t"),
+                    req_arg(vec![]),
+                ));
+            }
+            JournalKind::Completed { tenant } => {
+                rows.push(event(
+                    "completed",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    FABRIC_TID,
+                    Some("t"),
+                    req_arg(vec![("tenant", num(*tenant as u64))]),
+                ));
+            }
+            JournalKind::FrameStart { k } => {
+                rows.push(event(
+                    "frame",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    FABRIC_TID,
+                    Some("t"),
+                    vec![("k", num(*k as u64))],
+                ));
+            }
+            JournalKind::FrameDone { k, total, reconfig } => {
+                rows.push(event(
+                    "frame-done",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    FABRIC_TID,
+                    Some("t"),
+                    vec![
+                        ("k", num(*k as u64)),
+                        ("reconfig", num(*reconfig)),
+                        ("total", num(*total)),
+                    ],
+                ));
+            }
+            JournalKind::FrameRejected { k } => {
+                rows.push(event(
+                    "frame-rejected",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    FABRIC_TID,
+                    Some("t"),
+                    vec![("k", num(*k as u64))],
+                ));
+            }
+            JournalKind::Defrag { migrated, cycles } => {
+                rows.push(event(
+                    "defrag",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    FABRIC_TID,
+                    Some("p"),
+                    vec![("cycles", num(*cycles)), ("migrated", num(*migrated))],
+                ));
+            }
+            JournalKind::Migrated { task, from, to, cycles } => {
+                tracks.insert((ev.shard, *to));
+                rows.push(event(
+                    "migrated",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    to + 1,
+                    Some("t"),
+                    req_arg(vec![
+                        ("cycles", num(*cycles)),
+                        ("from", num(*from)),
+                        ("task", Json::Str(task.clone())),
+                        ("to", num(*to)),
+                    ]),
+                ));
+            }
+        }
+    }
+
+    // Name the tracks up front so Perfetto groups them sensibly.
+    let mut all: Vec<Json> = Vec::new();
+    for &s in &shards {
+        all.push(meta("process_name", s, FABRIC_TID, &format!("shard {s}")));
+        all.push(meta("thread_name", s, FABRIC_TID, "fabric"));
+    }
+    for &(s, r) in &tracks {
+        all.push(meta("thread_name", s, r + 1, &format!("R{r}")));
+    }
+    all.extend(rows);
+
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    doc.insert("traceEvents".to_string(), Json::Arr(all));
+    Json::Obj(doc)
+}
+
+/// [`export`] rendered to a JSON string.
+pub fn export_string(journal: &Journal, mhz: u64) -> String {
+    export(journal, mhz).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_journal() -> Journal {
+        let mut j = Journal::new(256);
+        j.stage(0, 4, 0, JournalKind::Submitted { tenant: 1, app: "Harris".into() });
+        j.stage(0, 4, 0, JournalKind::Queued);
+        j.stage(20, 4, 0, JournalKind::Placed { task: "harris".into(), region: 2 });
+        j.stage(20, 4, 0, JournalKind::Reconfiguring { region: 2, cycles: 50, cache_hit: false });
+        j.stage(70, 4, 0, JournalKind::Executing { region: 2, cycles: 400 });
+        j.stage(200, 4, 0, JournalKind::Preempted { region: 2, remaining: 270, ckpt: 10 });
+        j.stage(300, 4, 1, JournalKind::Defrag { migrated: 2, cycles: 120 });
+        j.stage(470, 4, 0, JournalKind::Completed { tenant: 1 });
+        j
+    }
+
+    #[test]
+    fn export_round_trips_through_util_json() {
+        let text = export_string(&sample_journal(), 500);
+        let parsed = Json::parse(&text).expect("exporter must emit valid JSON");
+        assert_eq!(parsed.to_string(), text, "parse → render must be the identity");
+    }
+
+    #[test]
+    fn export_has_tracks_slices_and_instants() {
+        let doc = export(&sample_journal(), 500);
+        let events = match doc {
+            Json::Obj(ref m) => match &m["traceEvents"] {
+                Json::Arr(v) => v.clone(),
+                other => panic!("traceEvents not an array: {other}"),
+            },
+            ref other => panic!("not an object: {other}"),
+        };
+        let names: Vec<String> = events
+            .iter()
+            .filter_map(|e| match e {
+                Json::Obj(m) => match (&m["name"], &m["ph"]) {
+                    (Json::Str(n), Json::Str(p)) => Some(format!("{p}:{n}")),
+                    _ => None,
+                },
+                _ => None,
+            })
+            .collect();
+        for want in [
+            "M:process_name",
+            "M:thread_name",
+            "i:submitted",
+            "X:reconfiguring",
+            "X:executing",
+            "i:preempted",
+            "i:defrag",
+            "i:completed",
+        ] {
+            assert!(names.iter().any(|n| n == want), "missing {want} in {names:?}");
+        }
+        // 500 MHz: 50 cycles = 0.1 µs
+        let reconf = events
+            .iter()
+            .find_map(|e| match e {
+                Json::Obj(m) if m["name"] == Json::Str("reconfiguring".into()) => Some(m.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(reconf["dur"], Json::Num(0.1));
+        assert_eq!(reconf["ts"], Json::Num(0.04));
+    }
+
+    #[test]
+    fn empty_journal_exports_empty_event_list() {
+        let doc = export(&Journal::disabled(), 500);
+        let text = doc.to_string();
+        assert!(text.contains("\"traceEvents\":[]"), "{text}");
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,509 @@
+//! Typed metrics registry: named counters, gauges and log-linear
+//! histograms with Prometheus-style label sets and text exposition.
+//!
+//! Series handles are cheap `Arc`-backed atomics, so the registry can
+//! be shared across the serving threads (connection handlers, shard
+//! executors) without locks on the hot path — the registry mutex is
+//! taken only at registration and exposition time.  All values are
+//! integers or f64-bit gauges; exposition iterates `BTreeMap`s, so the
+//! rendered text is deterministic for a deterministic run.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Label set: sorted `(key, value)` pairs.
+pub type Labels = Vec<(String, String)>;
+
+/// Build a sorted label set from `(key, value)` pairs.
+pub fn labels(pairs: &[(&str, &str)]) -> Labels {
+    let mut v: Labels =
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    v.sort();
+    v
+}
+
+/// A monotonically increasing counter.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Increment by one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite with a sampled cumulative total (for subsystems that
+    /// keep their own counters and export point-in-time snapshots).
+    #[inline]
+    pub fn set_total(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time f64 gauge.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+// ------------------------------------------------------------ histogram
+
+/// Sub-bucket resolution: each power-of-two octave splits into
+/// `1 << SUB_BITS` linear buckets (≤ 12.5 % relative bucket width).
+const SUB_BITS: u32 = 3;
+const SUB: usize = 1 << SUB_BITS;
+/// Bucket count covering the full u64 range (values below `2·SUB` are
+/// exact; see [`bucket_index`]).
+pub const HIST_BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB;
+
+/// Bucket index of `v` in the log-linear layout.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < (2 * SUB as u64) {
+        return v as usize; // exact region: 0..16 one bucket per value
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS + 1
+    let sub = ((v >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    ((msb - SUB_BITS) as usize + 1) * SUB + sub
+}
+
+/// `[lo, hi)` value range of bucket `idx` (inverse of [`bucket_index`]).
+fn bucket_bounds(idx: usize) -> (u64, u64) {
+    if idx < 2 * SUB {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let oct = (idx / SUB - 1) as u32 + SUB_BITS; // exponent of the octave base
+    let sub = (idx % SUB) as u64;
+    let width = 1u64 << (oct - SUB_BITS);
+    let lo = (1u64 << oct) + sub * width;
+    (lo, lo.saturating_add(width))
+}
+
+/// Shared histogram storage.
+#[derive(Debug)]
+struct HistCore {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+/// A log-linear histogram of u64 observations (cycles, bytes, µs).
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram(Arc::new(HistCore {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }))
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot (quantiles, merging).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.0.sum.load(Ordering::Relaxed),
+            count: self.0.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned histogram snapshot: mergeable across shards, queryable for
+/// interpolated quantiles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    buckets: Vec<u64>,
+    /// Sum of all observations.
+    pub sum: u64,
+    /// Number of observations.
+    pub count: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: vec![0; HIST_BUCKETS], sum: 0, count: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Empty snapshot.
+    pub fn new() -> HistSnapshot {
+        HistSnapshot::default()
+    }
+
+    /// Record into the snapshot directly (single-threaded collectors).
+    pub fn observe(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Merge another snapshot in.  Bucket-wise addition, so merging is
+    /// commutative and associative — shard merge order cannot change
+    /// any quantile.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    /// Mean observation (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// Interpolated quantile `q ∈ [0, 1]` (0 when empty).  Exact for
+    /// values in the exact region (< 16); within one sub-bucket width
+    /// (≤ 12.5 %) otherwise.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let mut before = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (before + c) as f64 > target {
+                let (lo, hi) = bucket_bounds(idx);
+                let within = (target - before as f64) / c as f64;
+                return lo as f64 + within * (hi - lo) as f64;
+            }
+            before += c;
+        }
+        // numeric fallback: the highest populated bucket's lower bound
+        let idx = self.buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+        bucket_bounds(idx).0 as f64
+    }
+
+    /// Non-empty `(le_exclusive, cumulative_count)` bucket boundaries.
+    pub fn cumulative(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((bucket_bounds(idx).1, cum));
+            }
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------------- registry
+
+type SeriesKey = (String, Labels);
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<SeriesKey, Arc<AtomicU64>>,
+    gauges: BTreeMap<SeriesKey, Arc<AtomicU64>>,
+    hists: BTreeMap<SeriesKey, Histogram>,
+}
+
+/// A registry of named metric series.  Cloning shares the underlying
+/// store (the serving fronts hand one registry to every shard
+/// executor).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().next().is_some_and(|c| c.is_ascii_lowercase() || c == '_')
+        && name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+impl MetricsRegistry {
+    /// Fresh empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Register (or look up) a counter series.
+    pub fn counter(&self, name: &str, lbls: &[(&str, &str)]) -> Counter {
+        debug_assert!(valid_name(name), "bad metric name {name:?}");
+        let key = (name.to_string(), labels(lbls));
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        Counter(inner.counters.entry(key).or_insert_with(|| Arc::new(AtomicU64::new(0))).clone())
+    }
+
+    /// Register (or look up) a gauge series.
+    pub fn gauge(&self, name: &str, lbls: &[(&str, &str)]) -> Gauge {
+        debug_assert!(valid_name(name), "bad metric name {name:?}");
+        let key = (name.to_string(), labels(lbls));
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        Gauge(
+            inner
+                .gauges
+                .entry(key)
+                .or_insert_with(|| Arc::new(AtomicU64::new(0f64.to_bits())))
+                .clone(),
+        )
+    }
+
+    /// Register (or look up) a histogram series.
+    pub fn histogram(&self, name: &str, lbls: &[(&str, &str)]) -> Histogram {
+        debug_assert!(valid_name(name), "bad metric name {name:?}");
+        let key = (name.to_string(), labels(lbls));
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.hists.entry(key).or_insert_with(Histogram::new).clone()
+    }
+
+    /// Convenience: set a sampled cumulative counter in one call.
+    pub fn set_counter(&self, name: &str, lbls: &[(&str, &str)], v: u64) {
+        self.counter(name, lbls).set_total(v);
+    }
+
+    /// Convenience: set a gauge in one call.
+    pub fn set_gauge(&self, name: &str, lbls: &[(&str, &str)], v: f64) {
+        self.gauge(name, lbls).set(v);
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` headers plus one line
+    /// per series, sorted by name then labels; histograms render
+    /// cumulative `_bucket{le=…}` lines (only populated boundaries),
+    /// `_sum` and `_count`.  Deterministic for deterministic inputs.
+    pub fn render(&self) -> String {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = String::new();
+        let mut last_header = String::new();
+        let mut typed_header = |out: &mut String, name: &str, kind: &str| {
+            if last_header != name {
+                let _ = writeln!(out, "# TYPE {name} {kind}");
+                last_header = name.to_string();
+            }
+        };
+        for ((name, lbls), v) in &inner.counters {
+            typed_header(&mut out, name, "counter");
+            let _ = writeln!(out, "{}{} {}", name, render_labels(lbls), v.load(Ordering::Relaxed));
+        }
+        for ((name, lbls), v) in &inner.gauges {
+            typed_header(&mut out, name, "gauge");
+            let _ = writeln!(
+                out,
+                "{}{} {}",
+                name,
+                render_labels(lbls),
+                fmt_f64(f64::from_bits(v.load(Ordering::Relaxed)))
+            );
+        }
+        for ((name, lbls), h) in &inner.hists {
+            typed_header(&mut out, name, "histogram");
+            let snap = h.snapshot();
+            for (le, cum) in snap.cumulative() {
+                let mut with_le = lbls.clone();
+                with_le.push(("le".to_string(), le.to_string()));
+                with_le.sort();
+                let _ = writeln!(out, "{}_bucket{} {}", name, render_labels(&with_le), cum);
+            }
+            let mut inf = lbls.clone();
+            inf.push(("le".to_string(), "+Inf".to_string()));
+            inf.sort();
+            let _ = writeln!(out, "{}_bucket{} {}", name, render_labels(&inf), snap.count);
+            let _ = writeln!(out, "{}_sum{} {}", name, render_labels(lbls), snap.sum);
+            let _ = writeln!(out, "{}_count{} {}", name, render_labels(lbls), snap.count);
+        }
+        out
+    }
+}
+
+fn render_labels(lbls: &Labels) -> String {
+    if lbls.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> =
+        lbls.iter().map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "\\\""))).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_and_bounds_are_inverse() {
+        for v in [0u64, 1, 7, 15, 16, 17, 100, 1000, 65_535, 1 << 40, u64::MAX] {
+            let idx = bucket_index(v);
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(lo <= v && (v < hi || hi == u64::MAX), "v={v} idx={idx} lo={lo} hi={hi}");
+        }
+        // buckets are contiguous through the log-linear region
+        for idx in 0..1000 {
+            let (_, hi) = bucket_bounds(idx);
+            let (lo2, _) = bucket_bounds(idx + 1);
+            assert_eq!(hi, lo2, "gap at idx {idx}");
+        }
+    }
+
+    #[test]
+    fn counters_and_gauges_render() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("cgra_test_total", &[("shard", "0"), ("class", "critical")]);
+        c.inc();
+        c.add(2);
+        reg.set_gauge("cgra_test_gauge", &[], 1.5);
+        let text = reg.render();
+        assert!(text.contains("cgra_test_total{class=\"critical\",shard=\"0\"} 3"), "{text}");
+        assert!(text.contains("# TYPE cgra_test_total counter"), "{text}");
+        assert!(text.contains("cgra_test_gauge 1.5"), "{text}");
+        // re-registration returns the same series
+        reg.counter("cgra_test_total", &[("class", "critical"), ("shard", "0")]).inc();
+        let relabeled = reg.counter("cgra_test_total", &[("shard", "0"), ("class", "critical")]);
+        assert_eq!(relabeled.get(), 4);
+    }
+
+    #[test]
+    fn histogram_exposition_has_cumulative_buckets() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("cgra_test_cycles", &[]);
+        for v in [1u64, 1, 2, 100] {
+            h.observe(v);
+        }
+        let text = reg.render();
+        assert!(text.contains("# TYPE cgra_test_cycles histogram"), "{text}");
+        assert!(text.contains("cgra_test_cycles_bucket{le=\"2\"} 2"), "{text}");
+        assert!(text.contains("cgra_test_cycles_bucket{le=\"3\"} 3"), "{text}");
+        assert!(text.contains("cgra_test_cycles_bucket{le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("cgra_test_cycles_sum 104"), "{text}");
+        assert!(text.contains("cgra_test_cycles_count 4"), "{text}");
+    }
+
+    #[test]
+    fn quantile_empty_single_and_duplicates() {
+        let empty = HistSnapshot::new();
+        assert_eq!(empty.quantile(0.5), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+
+        let mut one = HistSnapshot::new();
+        one.observe(7);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(one.quantile(q), 7.0, "single sample is every quantile");
+        }
+
+        // duplicate-heavy: 1000 copies of the same exact-region value
+        let mut dup = HistSnapshot::new();
+        for _ in 0..1000 {
+            dup.observe(5);
+        }
+        for q in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            let got = dup.quantile(q);
+            assert!((5.0..6.0).contains(&got), "q={q} got {got}");
+        }
+        assert_eq!(dup.mean(), 5.0);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_error_bound() {
+        let mut h = HistSnapshot::new();
+        for v in 1..=10_000u64 {
+            h.observe(v);
+        }
+        for (q, want) in [(0.5, 5000.0), (0.9, 9000.0), (0.99, 9900.0)] {
+            let got = h.quantile(q);
+            let err = (got - want).abs() / want;
+            assert!(err < 0.13, "q={q}: got {got}, want ~{want}, err {err}");
+        }
+        assert_eq!(h.quantile(0.0), 1.0);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let mk = |vals: &[u64]| {
+            let mut h = HistSnapshot::new();
+            for &v in vals {
+                h.observe(v);
+            }
+            h
+        };
+        // three shard-weighted snapshots of very different sizes
+        let a = mk(&(0..500).map(|i| i * 3 + 1).collect::<Vec<_>>());
+        let b = mk(&[42u64; 10_000]);
+        let c = mk(&(0..7).map(|i| 1u64 << (i * 4)).collect::<Vec<_>>());
+
+        let orders: Vec<Vec<&HistSnapshot>> = vec![
+            vec![&a, &b, &c],
+            vec![&c, &b, &a],
+            vec![&b, &a, &c],
+        ];
+        let merged: Vec<HistSnapshot> = orders
+            .into_iter()
+            .map(|order| {
+                let mut m = HistSnapshot::new();
+                for h in order {
+                    m.merge(h);
+                }
+                m
+            })
+            .collect();
+        for m in &merged[1..] {
+            assert_eq!(m, &merged[0], "merge must be order-independent");
+        }
+        for q in [0.01, 0.5, 0.999] {
+            assert_eq!(merged[0].quantile(q), merged[1].quantile(q));
+        }
+        assert_eq!(merged[0].count, 500 + 10_000 + 7);
+    }
+
+    #[test]
+    fn atomic_histogram_matches_snapshot_collector() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("cgra_x", &[]);
+        let mut direct = HistSnapshot::new();
+        for v in [0u64, 3, 900, 1 << 33] {
+            h.observe(v);
+            direct.observe(v);
+        }
+        assert_eq!(h.snapshot(), direct);
+    }
+}

@@ -16,6 +16,7 @@ use crate::migration::{
     MigrationStats,
 };
 use crate::noc::{ContentionModel, NocReport, NocStats};
+use crate::obs::{JournalKind, MetricsRegistry};
 use crate::qos::{self, PreemptionRecord, QosStats, VictimCandidate};
 use crate::regions::{AllocOutcome, ExecutionRegion, RegionId, RegionManager};
 use crate::tasks::{TaskId, TaskInstanceId, TaskLibrary, VariantId};
@@ -190,6 +191,12 @@ pub struct Scheduler {
     /// node — the producer position a consumer launch is pulled toward.
     /// Bounded (oldest request pruned) so long runs cannot grow it.
     affinity: BTreeMap<u64, u32>,
+    /// Journal instants (defrag passes, migrations) awaiting a
+    /// [`Scheduler::take_obs_events`] drain; never populated unless
+    /// `obs_armed` ([`crate::obs`]).
+    obs_log: Vec<(u64, JournalKind)>,
+    /// Whether an observability context is listening.
+    obs_armed: bool,
 }
 
 /// Producer-affinity table bound: requests tracked at once.  4096 open
@@ -249,6 +256,8 @@ impl Scheduler {
                 && cfg.noc.placement == NocPlacementKind::CommAware,
             noc_stats: NocStats::default(),
             affinity: BTreeMap::new(),
+            obs_log: Vec::new(),
+            obs_armed: false,
         };
         let ids: Vec<TaskId> = sched.lib.iter().map(|t| t.id.clone()).collect();
         for id in ids {
@@ -516,6 +525,58 @@ impl Scheduler {
     pub fn noc_report(&self) -> Option<NocReport> {
         let map = self.mgr.corridor_map()?;
         Some(self.noc_stats.report(map.corridors(), map.capacity()))
+    }
+
+    // ----------------------------------------------------------------- obs
+
+    /// Arm (or disarm) collection of journal instants for the `[obs]`
+    /// subsystem.  Disarmed (the default) the scheduler records
+    /// nothing — the zero-overhead guarantee for obs-off runs.
+    pub fn set_obs(&mut self, armed: bool) {
+        self.obs_armed = armed;
+    }
+
+    /// Drain the journal instants (defrag passes, task migrations)
+    /// recorded since the last call.  Always empty while disarmed.
+    pub fn take_obs_events(&mut self) -> Vec<(u64, JournalKind)> {
+        std::mem::take(&mut self.obs_log)
+    }
+
+    /// Export cumulative subsystem counters into an observability
+    /// registry (`[obs]`): DPR cache, migration/defrag engine, QoS
+    /// preemptor, NoC model and energy accountant.  `shard` labels
+    /// every series when this scheduler runs inside a pool shard.
+    pub fn export_metrics(&self, reg: &MetricsRegistry, shard: Option<u32>) {
+        let shard_label = shard.map(|s| s.to_string());
+        let mut base: Vec<(&str, &str)> = Vec::new();
+        if let Some(s) = shard_label.as_deref() {
+            base.push(("shard", s));
+        }
+        let cache = self.dpr.cache().stats();
+        reg.set_counter("cgra_dpr_cache_hits_total", &base, cache.hits);
+        reg.set_counter("cgra_dpr_cache_misses_total", &base, cache.misses);
+        reg.set_counter("cgra_dpr_cache_evictions_total", &base, cache.evictions);
+        let m = &self.mig_stats;
+        reg.set_counter("cgra_mig_nofit_events_total", &base, m.nofit_events);
+        reg.set_counter("cgra_mig_plans_committed_total", &base, m.plans_committed);
+        reg.set_counter("cgra_mig_tasks_migrated_total", &base, m.tasks_migrated);
+        reg.set_counter("cgra_mig_cycles_total", &base, m.migration_cycles);
+        reg.set_counter("cgra_mig_rescued_launches_total", &base, m.rescued_launches);
+        let q = &self.qos_stats;
+        reg.set_counter("cgra_qos_preemptions_total", &base, q.preemptions);
+        reg.set_counter("cgra_qos_victims_evicted_total", &base, q.victims_evicted);
+        reg.set_counter("cgra_qos_victims_resumed_total", &base, q.victims_resumed);
+        reg.set_counter("cgra_qos_preempt_cycles_total", &base, q.preempt_cycles);
+        let n = &self.noc_stats;
+        reg.set_counter("cgra_noc_streams_placed_total", &base, n.streams_placed);
+        reg.set_counter("cgra_noc_contended_launches_total", &base, n.contended_launches);
+        reg.set_counter("cgra_noc_contention_cycles_total", &base, n.contention_cycles);
+        if self.meter.enabled() {
+            reg.set_gauge("cgra_energy_joules_total", &base, self.meter.total_joules());
+        }
+        let (ug, ua) = self.mgr.utilization();
+        reg.set_gauge("cgra_sched_glb_utilization", &base, ug);
+        reg.set_gauge("cgra_sched_array_utilization", &base, ua);
     }
 
     // ----------------------------------------------------------------- qos
@@ -1200,6 +1261,24 @@ impl Scheduler {
         self.mig_stats.plans_committed += 1;
         self.mig_stats.tasks_migrated += outcome.records.len() as u64;
         self.mig_stats.migration_cycles += outcome.total_cycles;
+        if self.obs_armed {
+            for rec in &outcome.records {
+                if let Some(rt) = self.running.get(&rec.region) {
+                    let kind = JournalKind::Migrated {
+                        task: rt.task.0.clone(),
+                        from: rec.step.from_array.start as u64,
+                        to: rec.step.to_array.start as u64,
+                        cycles: rec.cycles,
+                    };
+                    self.obs_log.push((now, kind));
+                }
+            }
+            let defrag = JournalKind::Defrag {
+                migrated: outcome.records.len() as u64,
+                cycles: outcome.total_cycles,
+            };
+            self.obs_log.push((now, defrag));
+        }
         Ok((outcome.records.len() as u64, outcome.total_cycles))
     }
 

@@ -14,6 +14,7 @@ use crate::dpr::{CacheStats, DprMode};
 use crate::energy::EnergyReport;
 use crate::error::{Error, Result};
 use crate::metrics::{FrameLatency, LatencyBreakdown};
+use crate::obs::{self, NO_REQ, Obs, SimEvent};
 use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
 use crate::scheduler::{CompletionOutcome, RequestQueue, Scheduler};
@@ -109,6 +110,19 @@ pub fn run_edge_with(cfg: &Config, lib: TaskLibrary) -> Result<EdgeReport> {
 /// [`super::pool::run_edge_pool_traced`] on a single-shard pool — the
 /// determinism and golden-equivalence tests diff the rendered traces).
 pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Result<EdgeReport> {
+    run_edge_observed(cfg, lib, trace, &mut Obs::disabled())
+}
+
+/// [`run_edge_traced`] with an observability context: structured events
+/// additionally feed the lifecycle journal, and end-of-run counters are
+/// exported into `obs.registry`.  With [`Obs::disabled`] this is
+/// byte-identical to the plain traced run.
+pub fn run_edge_observed(
+    cfg: &Config,
+    lib: TaskLibrary,
+    trace: &mut Trace,
+    obs: &mut Obs,
+) -> Result<EdgeReport> {
     let wl: &EdgeWorkloadConfig = match &cfg.workload {
         WorkloadConfig::Edge(e) => e,
         WorkloadConfig::Cloud(_) => {
@@ -120,6 +134,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
     if mode == DprMode::Fast {
         sched.preload_all();
     }
+    sched.set_obs(obs.on());
 
     let frame_cycles = (cfg.arch.core_clock_mhz as f64 * 1e6 / wl.fps) as u64;
     let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
@@ -152,7 +167,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
         match ev {
             Event::Frame(k) => {
                 let entry = frames.entry(k).or_insert((now, 0, 0, now));
-                trace.log_with(now, || format!("frame k={k}"));
+                obs::note(trace, obs, now, 0, || SimEvent::Frame { k });
                 // camera pipeline runs every frame
                 queue.submit(AppRequest::new(seq, 2, AppId::Camera, now).with_qos(
                     cfg.qos.class_of_tenant(2),
@@ -160,8 +175,9 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                 ));
                 frame_of.insert(seq, k);
                 entry.1 += 1;
-                trace.log_with(now, || {
-                    format!("arrive seq={seq} frame={k} app={}", AppId::Camera.name())
+                obs::note(trace, obs, now, 0, || {
+                    let app = AppId::Camera.name();
+                    SimEvent::ArriveFrame { shard: None, seq, tenant: 2, frame: k, app }
                 });
                 seq += 1;
                 // event streams
@@ -173,8 +189,12 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                         ));
                         frame_of.insert(seq, k);
                         frames.get_mut(&k).expect("inserted").1 += 1;
-                        trace.log_with(now, || {
-                            format!("arrive seq={seq} frame={k} app={}", app.name())
+                        obs::note(trace, obs, now, 0, || SimEvent::ArriveFrame {
+                            shard: None,
+                            seq,
+                            tenant: i as u32,
+                            frame: k,
+                            app: app.name(),
                         });
                         seq += 1;
                         event_requests += 1;
@@ -218,8 +238,8 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                         let (start, _, reconfig, last) = *entry;
                         frames.remove(&k);
                         let total = last - start;
-                        trace.log_with(now, || {
-                            format!("frame-done k={k} total={total} reconfig={reconfig}")
+                        obs::note(trace, obs, now, 0, || {
+                            SimEvent::FrameDone { k, total, reconfig }
                         });
                         latency.record(FrameLatency {
                             reconfig_cycles: reconfig.min(total),
@@ -231,19 +251,7 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
         }
         let step_launches = sched.schedule(&mut queue, now);
         for p in sched.take_preemptions() {
-            trace.log_with(now, || {
-                format!(
-                    "preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
-                    p.victim,
-                    p.victim_task,
-                    p.victim_class.name(),
-                    p.preemptor,
-                    p.preemptor_class.name(),
-                    p.victim_region,
-                    p.remaining_cycles,
-                    p.checkpoint_cycles
-                )
-            });
+            obs::note(trace, obs, now, 0, || SimEvent::Preempt { shard: None, rec: p });
         }
         for launch in step_launches {
             if let Some(&k) = frame_of.get(&launch.instance.request) {
@@ -251,19 +259,15 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
                     entry.2 += launch.dpr_cycles;
                 }
             }
-            trace.log_with(now, || {
-                format!(
-                    "launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
-                    launch.instance,
-                    launch.task,
-                    launch.ver,
-                    launch.region,
-                    launch.dpr_cycles,
-                    launch.exec_cycles,
-                    launch.finish
-                )
+            obs::note(trace, obs, now, 0, || {
+                SimEvent::Launch { shard: None, launch: launch.clone() }
             });
             events.push(launch.finish, Event::Completion(launch.region));
+        }
+        if obs.on() {
+            for (at, kind) in sched.take_obs_events() {
+                obs.journal.stage(at, NO_REQ, 0, kind);
+            }
         }
     }
 
@@ -275,6 +279,16 @@ pub fn run_edge_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Res
     }
 
     debug_assert_eq!(sched.checkpointed_count(), 0, "drained run leaves no checkpoints");
+    if obs.on() {
+        let reg = &obs.registry;
+        reg.set_counter("cgra_sim_frames_total", &[], wl.frames as u64);
+        reg.set_counter("cgra_sim_event_requests_total", &[], event_requests);
+        let lat = reg.histogram("cgra_frame_latency_cycles", &[]);
+        for f in latency.frames() {
+            lat.observe(f.total());
+        }
+        sched.export_metrics(reg, None);
+    }
     let mig = sched.migration_stats();
     let energy = sched.energy_report(last_now);
     let qos = if cfg.qos.enabled { Some(slo.report(sched.qos_stats())) } else { None };

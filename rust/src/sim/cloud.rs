@@ -15,6 +15,7 @@ use crate::metrics::{
     FragmentationTracker, NtatRecord, NtatTracker, ThroughputTracker, UtilizationTracker,
 };
 use crate::noc::NocReport;
+use crate::obs::{self, NO_REQ, Obs, SimEvent};
 use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
 use crate::scheduler::{CompletionOutcome, RequestQueue, Scheduler};
@@ -139,6 +140,20 @@ pub fn run_cloud_with(cfg: &Config, lib: TaskLibrary) -> Result<CloudReport> {
 /// omits the `shard=` tag on single-shard pools exactly so the traces
 /// stay comparable).
 pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Result<CloudReport> {
+    run_cloud_observed(cfg, lib, trace, &mut Obs::disabled())
+}
+
+/// [`run_cloud_traced`] with an observability context: every structured
+/// event additionally feeds the lifecycle journal, and end-of-run
+/// counters are exported into `obs.registry`.  With [`Obs::disabled`]
+/// this is byte-identical to the plain traced run (the differential
+/// goldens pin that equivalence).
+pub fn run_cloud_observed(
+    cfg: &Config,
+    lib: TaskLibrary,
+    trace: &mut Trace,
+    obs: &mut Obs,
+) -> Result<CloudReport> {
     let wl: &CloudWorkloadConfig = match &cfg.workload {
         WorkloadConfig::Cloud(c) => c,
         WorkloadConfig::Edge(_) => {
@@ -147,6 +162,7 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
     };
     let mut sched = Scheduler::new(cfg, lib.clone(), DprMode::Fast);
     sched.preload_all();
+    sched.set_obs(obs.on());
 
     let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
     let duration: Cycle = (wl.duration_ms * cycles_per_ms as f64) as u64;
@@ -190,6 +206,7 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
     let mut arr_util = UtilizationTracker::new(cfg.arch.array_slices());
     let mut frag = FragmentationTracker::new();
     let mut slo = SloTracker::new();
+    let tat = obs.on().then(|| obs.registry.histogram("cgra_req_turnaround_cycles", &[]));
 
     while let Some((now, ev)) = events.pop() {
         match ev {
@@ -202,8 +219,8 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
                     cfg.qos.deadline_of_tenant(t, now, cycles_per_ms),
                 ));
                 inflight.insert(seq, (app, now, 0));
-                trace.log_with(now, || {
-                    format!("arrive seq={seq} tenant={t} app={}", app.name())
+                obs::note(trace, obs, now, 0, || {
+                    SimEvent::Arrive { shard: None, seq, tenant: t, app: app.name() }
                 });
                 seq += 1;
                 submitted += 1;
@@ -233,9 +250,12 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
                             Error::SimInvariant(format!("request {} not inflight", done.seq))
                         })?;
                     completed += 1;
-                    trace.log_with(now, || {
-                        format!("done seq={} tenant={}", done.seq, done.tenant)
+                    obs::note(trace, obs, now, 0, || {
+                        SimEvent::Done { seq: done.seq, tenant: done.tenant }
                     });
+                    if let Some(h) = &tat {
+                        h.observe(now - arrival);
+                    }
                     if cfg.qos.enabled {
                         slo.record(SloRecord {
                             class: done.class,
@@ -263,38 +283,22 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
             if let Some(entry) = inflight.get_mut(&p.victim.request) {
                 entry.2 = entry.2.saturating_sub(p.remaining_cycles);
             }
-            trace.log_with(now, || {
-                format!(
-                    "preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
-                    p.victim,
-                    p.victim_task,
-                    p.victim_class.name(),
-                    p.preemptor,
-                    p.preemptor_class.name(),
-                    p.victim_region,
-                    p.remaining_cycles,
-                    p.checkpoint_cycles
-                )
-            });
+            obs::note(trace, obs, now, 0, || SimEvent::Preempt { shard: None, rec: p });
         }
         for launch in step_launches {
             launches += 1;
             if let Some(entry) = inflight.get_mut(&launch.instance.request) {
                 entry.2 += launch.dpr_cycles + launch.exec_cycles;
             }
-            trace.log_with(now, || {
-                format!(
-                    "launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
-                    launch.instance,
-                    launch.task,
-                    launch.ver,
-                    launch.region,
-                    launch.dpr_cycles,
-                    launch.exec_cycles,
-                    launch.finish
-                )
+            obs::note(trace, obs, now, 0, || {
+                SimEvent::Launch { shard: None, launch: launch.clone() }
             });
             events.push(launch.finish, Event::Completion(launch.region));
+        }
+        if obs.on() {
+            for (at, kind) in sched.take_obs_events() {
+                obs.journal.stage(at, NO_REQ, 0, kind);
+            }
         }
         // utilization/fragmentation are piecewise-constant between events
         let (ug, ua) = sched.regions().utilization();
@@ -311,6 +315,15 @@ pub fn run_cloud_traced(cfg: &Config, lib: TaskLibrary, trace: &mut Trace) -> Re
     }
 
     debug_assert_eq!(sched.checkpointed_count(), 0, "drained run leaves no checkpoints");
+    if obs.on() {
+        let reg = &obs.registry;
+        reg.set_counter("cgra_sim_submitted_total", &[], submitted);
+        reg.set_counter("cgra_sim_completed_total", &[], completed);
+        reg.set_counter("cgra_sched_launch_total", &[], launches);
+        reg.set_gauge("cgra_glb_utilization", &[], glb_util.mean());
+        reg.set_gauge("cgra_array_utilization", &[], arr_util.mean());
+        sched.export_metrics(reg, None);
+    }
     let mig = sched.migration_stats();
     let energy = sched.energy_report(glb_util.horizon());
     let qos = if cfg.qos.enabled { Some(slo.report(sched.qos_stats())) } else { None };

@@ -15,11 +15,11 @@ pub mod pool;
 pub mod queueing;
 pub mod trace;
 
-pub use autonomous::{run_edge, run_edge_traced, run_edge_with, EdgeReport};
-pub use cloud::{run_cloud, run_cloud_traced, run_cloud_with, CloudReport};
+pub use autonomous::{run_edge, run_edge_observed, run_edge_traced, run_edge_with, EdgeReport};
+pub use cloud::{run_cloud, run_cloud_observed, run_cloud_traced, run_cloud_with, CloudReport};
 pub use engine::{Cycle, EventQueue};
 pub use pool::{
-    run_cloud_pool, run_cloud_pool_traced, run_edge_pool, run_edge_pool_traced, PoolCloudReport,
-    PoolEdgeReport, ShardSimStats,
+    run_cloud_pool, run_cloud_pool_observed, run_cloud_pool_traced, run_edge_pool,
+    run_edge_pool_observed, run_edge_pool_traced, PoolCloudReport, PoolEdgeReport, ShardSimStats,
 };
-pub use trace::{Trace, TraceEvent};
+pub use trace::{Trace, TraceEvent, TraceKind};

@@ -22,6 +22,7 @@ use crate::error::{Error, Result};
 use crate::fabric::{FabricPool, PoolCompletion, ShardId};
 use crate::metrics::{FrameLatency, LatencyBreakdown, NtatRecord, NtatTracker, UtilizationTracker};
 use crate::noc::NocReport;
+use crate::obs::{self, NO_REQ, Obs, SimEvent};
 use crate::qos::{QosReport, SloRecord, SloTracker};
 use crate::regions::RegionId;
 use crate::tasks::{AppId, AppRequest, TaskLibrary};
@@ -170,17 +171,6 @@ enum EdgeEvent {
     Completion(ShardId, RegionId),
 }
 
-/// `shard=<i> ` prefix for trace lines — multi-shard pools only, so a
-/// single-shard pool's trace is byte-identical to the single-fabric
-/// simulator's.
-fn shard_tag(pool: &FabricPool, shard: ShardId) -> String {
-    if pool.shard_count() > 1 {
-        format!("shard={} ", shard.0)
-    } else {
-        String::new()
-    }
-}
-
 /// Collect per-shard stats at the end of a run.
 fn per_shard_stats(pool: &FabricPool) -> Vec<ShardSimStats> {
     pool.snapshots()
@@ -215,6 +205,19 @@ pub fn run_cloud_pool_traced(
     lib: TaskLibrary,
     trace: &mut Trace,
 ) -> Result<PoolCloudReport> {
+    run_cloud_pool_observed(cfg, lib, trace, &mut Obs::disabled())
+}
+
+/// [`run_cloud_pool_traced`] with an observability context: structured
+/// events feed the lifecycle journal (shard-tagged), and end-of-run
+/// counters are exported into `obs.registry` with `shard` labels.
+/// With [`Obs::disabled`] this is byte-identical to the traced run.
+pub fn run_cloud_pool_observed(
+    cfg: &Config,
+    lib: TaskLibrary,
+    trace: &mut Trace,
+    obs: &mut Obs,
+) -> Result<PoolCloudReport> {
     let wl: &CloudWorkloadConfig = match &cfg.workload {
         WorkloadConfig::Cloud(c) => c,
         WorkloadConfig::Edge(_) => {
@@ -223,6 +226,11 @@ pub fn run_cloud_pool_traced(
     };
     let mut pool = FabricPool::new(cfg, lib.clone(), DprMode::Fast)?;
     pool.preload_all();
+    pool.set_obs(obs.on());
+    // the `shard=` trace tag (and journal shard ids) appear on
+    // multi-shard pools only, keeping single-shard traces byte-identical
+    // to the single-fabric simulator's
+    let multi = pool.shard_count() > 1;
 
     let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
     let duration: Cycle = (wl.duration_ms * cycles_per_ms as f64) as u64;
@@ -246,6 +254,7 @@ pub fn run_cloud_pool_traced(
 
     let mut ntat = NtatTracker::new();
     let mut slo = SloTracker::new();
+    let tat = obs.on().then(|| obs.registry.histogram("cgra_req_turnaround_cycles", &[]));
     let (total_glb, total_arr) = pool.total_slices();
     let mut glb_util = UtilizationTracker::new(total_glb);
     let mut arr_util = UtilizationTracker::new(total_arr);
@@ -262,16 +271,15 @@ pub fn run_cloud_pool_traced(
                     Some(shard) => {
                         inflight.insert(seq, (app, now, 0));
                         submitted += 1;
-                        trace.log_with(now, || {
-                            format!(
-                                "{}arrive seq={seq} tenant={t} app={}",
-                                shard_tag(&pool, shard),
-                                app.name()
-                            )
+                        obs::note(trace, obs, now, shard.0, || SimEvent::Arrive {
+                            shard: multi.then_some(shard.0),
+                            seq,
+                            tenant: t,
+                            app: app.name(),
                         });
                     }
                     None => {
-                        trace.log_with(now, || format!("busy seq={seq} tenant={t}"));
+                        obs::note(trace, obs, now, 0, || SimEvent::Busy { seq, tenant: t });
                     }
                 }
                 seq += 1;
@@ -298,9 +306,12 @@ pub fn run_cloud_pool_traced(
                         Error::SimInvariant(format!("request {} not inflight", done.seq))
                     })?;
                     completed += 1;
-                    trace.log_with(now, || {
-                        format!("done seq={} tenant={}", done.seq, done.tenant)
+                    obs::note(trace, obs, now, shard.0, || {
+                        SimEvent::Done { seq: done.seq, tenant: done.tenant }
                     });
+                    if let Some(h) = &tat {
+                        h.observe(now - arrival);
+                    }
                     if cfg.qos.enabled {
                         slo.record(SloRecord {
                             class: done.class,
@@ -325,19 +336,8 @@ pub fn run_cloud_pool_traced(
             if let Some(entry) = inflight.get_mut(&p.victim.request) {
                 entry.2 = entry.2.saturating_sub(p.remaining_cycles);
             }
-            trace.log_with(now, || {
-                format!(
-                    "{}preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
-                    shard_tag(&pool, shard),
-                    p.victim,
-                    p.victim_task,
-                    p.victim_class.name(),
-                    p.preemptor,
-                    p.preemptor_class.name(),
-                    p.victim_region,
-                    p.remaining_cycles,
-                    p.checkpoint_cycles
-                )
+            obs::note(trace, obs, now, shard.0, || {
+                SimEvent::Preempt { shard: multi.then_some(shard.0), rec: p }
             });
         }
         for (shard, launch) in step_launches {
@@ -345,20 +345,16 @@ pub fn run_cloud_pool_traced(
             if let Some(entry) = inflight.get_mut(&launch.instance.request) {
                 entry.2 += launch.dpr_cycles + launch.exec_cycles;
             }
-            trace.log_with(now, || {
-                format!(
-                    "{}launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
-                    shard_tag(&pool, shard),
-                    launch.instance,
-                    launch.task,
-                    launch.ver,
-                    launch.region,
-                    launch.dpr_cycles,
-                    launch.exec_cycles,
-                    launch.finish
-                )
+            obs::note(trace, obs, now, shard.0, || SimEvent::Launch {
+                shard: multi.then_some(shard.0),
+                launch: launch.clone(),
             });
             events.push(launch.finish, CloudEvent::Completion(shard, launch.region));
+        }
+        if obs.on() {
+            for (s, at, kind) in pool.take_obs_events() {
+                obs.journal.stage(at, NO_REQ, s, kind);
+            }
         }
         let (busy_glb, busy_arr) = pool.busy_slices();
         glb_util.sample(now, busy_glb);
@@ -372,6 +368,14 @@ pub fn run_cloud_pool_traced(
         )));
     }
 
+    if obs.on() {
+        let reg = &obs.registry;
+        reg.set_counter("cgra_sim_submitted_total", &[], submitted);
+        reg.set_counter("cgra_sim_completed_total", &[], completed);
+        reg.set_counter("cgra_sched_launch_total", &[], launches);
+        reg.set_counter("cgra_pool_busy_rejections_total", &[], pool.stats().busy_rejections);
+        pool.export_metrics(reg);
+    }
     let mig = pool.migration_stats();
     let stats = pool.stats();
     let energy = pool.energy_report(glb_util.horizon());
@@ -412,6 +416,17 @@ pub fn run_edge_pool_traced(
     lib: TaskLibrary,
     trace: &mut Trace,
 ) -> Result<PoolEdgeReport> {
+    run_edge_pool_observed(cfg, lib, trace, &mut Obs::disabled())
+}
+
+/// [`run_edge_pool_traced`] with an observability context (see
+/// [`run_cloud_pool_observed`] for the contract).
+pub fn run_edge_pool_observed(
+    cfg: &Config,
+    lib: TaskLibrary,
+    trace: &mut Trace,
+    obs: &mut Obs,
+) -> Result<PoolEdgeReport> {
     let wl: &EdgeWorkloadConfig = match &cfg.workload {
         WorkloadConfig::Edge(e) => e,
         WorkloadConfig::Cloud(_) => {
@@ -423,6 +438,8 @@ pub fn run_edge_pool_traced(
     if mode == DprMode::Fast {
         pool.preload_all();
     }
+    pool.set_obs(obs.on());
+    let multi = pool.shard_count() > 1;
 
     let frame_cycles = (cfg.arch.core_clock_mhz as f64 * 1e6 / wl.fps) as u64;
     let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
@@ -455,7 +472,7 @@ pub fn run_edge_pool_traced(
         match ev {
             EdgeEvent::Frame(k) => {
                 frames.entry(k).or_insert((now, 0, 0, now));
-                trace.log_with(now, || format!("frame k={k}"));
+                obs::note(trace, obs, now, 0, || SimEvent::Frame { k });
                 // camera pipeline runs every frame, then the event streams
                 let mut arrivals: Vec<(u32, AppId)> = vec![(2, AppId::Camera)];
                 for (i, app) in EVENT_APPS.iter().enumerate() {
@@ -476,17 +493,19 @@ pub fn run_edge_pool_traced(
                         Some(shard) => {
                             frame_of.insert(seq, k);
                             frames.get_mut(&k).expect("inserted").1 += 1;
-                            trace.log_with(now, || {
-                                format!(
-                                    "{}arrive seq={seq} frame={k} app={}",
-                                    shard_tag(&pool, shard),
-                                    app.name()
-                                )
+                            obs::note(trace, obs, now, shard.0, || SimEvent::ArriveFrame {
+                                shard: multi.then_some(shard.0),
+                                seq,
+                                tenant,
+                                frame: k,
+                                app: app.name(),
                             });
                         }
                         None => {
                             rejected_in_frame += 1;
-                            trace.log_with(now, || format!("busy seq={seq} frame={k}"));
+                            obs::note(trace, obs, now, 0, || {
+                                SimEvent::BusyFrame { seq, frame: k }
+                            });
                         }
                     }
                     seq += 1;
@@ -498,7 +517,7 @@ pub fn run_edge_pool_traced(
                         // leaking it) and account the frame
                         frames.remove(&k);
                         rejected_frames += 1;
-                        trace.log_with(now, || format!("frame-rejected k={k}"));
+                        obs::note(trace, obs, now, 0, || SimEvent::FrameRejected { k });
                     } else {
                         // some tasks run: the frame completes, but its
                         // latency covers a degraded subset
@@ -539,8 +558,8 @@ pub fn run_edge_pool_traced(
                         let (start, _, reconfig, last) = *entry;
                         frames.remove(&k);
                         let total = last - start;
-                        trace.log_with(now, || {
-                            format!("frame-done k={k} total={total} reconfig={reconfig}")
+                        obs::note(trace, obs, now, 0, || {
+                            SimEvent::FrameDone { k, total, reconfig }
                         });
                         latency.record(FrameLatency {
                             reconfig_cycles: reconfig.min(total),
@@ -552,19 +571,8 @@ pub fn run_edge_pool_traced(
         }
         let step_launches = pool.schedule(now);
         for (shard, p) in pool.take_preemptions() {
-            trace.log_with(now, || {
-                format!(
-                    "{}preempt inst={} task={} class={} by={} byclass={} region={} remaining={} ckpt={}",
-                    shard_tag(&pool, shard),
-                    p.victim,
-                    p.victim_task,
-                    p.victim_class.name(),
-                    p.preemptor,
-                    p.preemptor_class.name(),
-                    p.victim_region,
-                    p.remaining_cycles,
-                    p.checkpoint_cycles
-                )
+            obs::note(trace, obs, now, shard.0, || {
+                SimEvent::Preempt { shard: multi.then_some(shard.0), rec: p }
             });
         }
         for (shard, launch) in step_launches {
@@ -573,20 +581,16 @@ pub fn run_edge_pool_traced(
                     entry.2 += launch.dpr_cycles;
                 }
             }
-            trace.log_with(now, || {
-                format!(
-                    "{}launch inst={} task={} ver={} region={} dpr={} exec={} finish={}",
-                    shard_tag(&pool, shard),
-                    launch.instance,
-                    launch.task,
-                    launch.ver,
-                    launch.region,
-                    launch.dpr_cycles,
-                    launch.exec_cycles,
-                    launch.finish
-                )
+            obs::note(trace, obs, now, shard.0, || SimEvent::Launch {
+                shard: multi.then_some(shard.0),
+                launch: launch.clone(),
             });
             events.push(launch.finish, EdgeEvent::Completion(shard, launch.region));
+        }
+        if obs.on() {
+            for (s, at, kind) in pool.take_obs_events() {
+                obs.journal.stage(at, NO_REQ, s, kind);
+            }
         }
     }
 
@@ -595,6 +599,18 @@ pub fn run_edge_pool_traced(
             "{} requests never completed",
             pool.queue_open_requests()
         )));
+    }
+
+    if obs.on() {
+        let reg = &obs.registry;
+        reg.set_counter("cgra_sim_frames_total", &[], wl.frames as u64);
+        reg.set_counter("cgra_sim_event_requests_total", &[], event_requests);
+        reg.set_counter("cgra_pool_busy_rejections_total", &[], pool.stats().busy_rejections);
+        let lat = reg.histogram("cgra_frame_latency_cycles", &[]);
+        for f in latency.frames() {
+            lat.observe(f.total());
+        }
+        pool.export_metrics(reg);
     }
 
     let mig = pool.migration_stats();
@@ -640,7 +656,7 @@ mod tests {
     fn render(trace: &Trace) -> String {
         let mut out = String::new();
         for e in trace.events() {
-            out.push_str(&format!("{} {}\n", e.at, e.what));
+            out.push_str(&format!("{} {}\n", e.at, e.what()));
         }
         out
     }

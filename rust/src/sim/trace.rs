@@ -1,16 +1,51 @@
 //! Bounded simulation trace for debugging and example output.
+//!
+//! Since the observability PR the trace is structured: each entry is a
+//! [`TraceKind`] — either a typed [`SimEvent`] emitted by the sim
+//! drivers (also consumed by the lifecycle journal,
+//! [`crate::obs::Journal`]) or a raw pre-formatted string for ad-hoc
+//! notes.  Rendering is unchanged byte-for-byte: `SimEvent`'s
+//! `Display` reproduces the legacy line grammar exactly, which the
+//! differential goldens enforce.
 
 use std::collections::VecDeque;
+use std::fmt;
 
+use crate::obs::SimEvent;
 use crate::sim::engine::Cycle;
 
+/// What a trace entry records.
+#[derive(Clone, Debug)]
+pub enum TraceKind {
+    /// Pre-formatted free text.
+    Raw(String),
+    /// A structured simulation event.
+    Sim(SimEvent),
+}
+
+impl fmt::Display for TraceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceKind::Raw(s) => f.write_str(s),
+            TraceKind::Sim(ev) => write!(f, "{ev}"),
+        }
+    }
+}
+
 /// One trace entry.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct TraceEvent {
     /// When it happened.
     pub at: Cycle,
-    /// What happened (pre-formatted).
-    pub what: String,
+    /// What happened.
+    pub kind: TraceKind,
+}
+
+impl TraceEvent {
+    /// The entry rendered as its (legacy-stable) trace line.
+    pub fn what(&self) -> String {
+        self.kind.to_string()
+    }
 }
 
 /// Ring-buffer trace: keeps the most recent `cap` events.
@@ -40,17 +75,31 @@ impl Trace {
         self.cap > 0
     }
 
-    /// Record an event.
+    fn push(&mut self, at: Cycle, kind: TraceKind) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(TraceEvent { at, kind });
+    }
+
+    /// Record a raw text event.
     pub fn log(&mut self, at: Cycle, what: impl Into<String>) {
         if self.cap == 0 {
             self.dropped += 1;
             return;
         }
-        if self.events.len() == self.cap {
-            self.events.pop_front();
-            self.dropped += 1;
+        self.push(at, TraceKind::Raw(what.into()));
+    }
+
+    /// Record a structured event (no-op when disabled — the caller
+    /// normally gates on [`Trace::enabled`] via [`crate::obs::note`],
+    /// so a disabled trace never counts it as dropped).
+    pub fn emit(&mut self, at: Cycle, ev: SimEvent) {
+        if self.cap == 0 {
+            return;
         }
-        self.events.push_back(TraceEvent { at, what: what.into() });
+        self.push(at, TraceKind::Sim(ev));
     }
 
     /// Record an event, rendering the message lazily: `what` runs only
@@ -85,7 +134,7 @@ impl Trace {
         let mut out = String::new();
         for e in &self.events {
             let ms = e.at as f64 / (core_clock_mhz as f64 * 1e3);
-            out.push_str(&format!("[{ms:>10.3} ms] {}\n", e.what));
+            out.push_str(&format!("[{ms:>10.3} ms] {}\n", e.kind));
         }
         if self.dropped > 0 {
             out.push_str(&format!("... ({} earlier events dropped)\n", self.dropped));
@@ -104,7 +153,7 @@ mod tests {
         t.log(1, "a");
         t.log(2, "b");
         t.log(3, "c");
-        let got: Vec<&str> = t.events().map(|e| e.what.as_str()).collect();
+        let got: Vec<String> = t.events().map(|e| e.what()).collect();
         assert_eq!(got, vec!["b", "c"]);
         assert_eq!(t.dropped(), 1);
     }
@@ -138,9 +187,22 @@ mod tests {
         t.log_with(1, || format!("a{}", 1));
         t.log_with(2, || "b");
         t.log_with(3, || "c");
-        let got: Vec<&str> = t.events().map(|e| e.what.as_str()).collect();
+        let got: Vec<String> = t.events().map(|e| e.what()).collect();
         assert_eq!(got, vec!["b", "c"]);
         assert_eq!(t.dropped(), 1, "ring overflow still counts as dropped");
+    }
+
+    #[test]
+    fn structured_events_render_like_legacy_lines() {
+        let mut t = Trace::new(4);
+        t.emit(7, SimEvent::Arrive { shard: None, seq: 0, tenant: 3, app: "Harris" });
+        t.log(9, "raw note");
+        let got: Vec<String> = t.events().map(|e| e.what()).collect();
+        assert_eq!(got, vec!["arrive seq=0 tenant=3 app=Harris", "raw note"]);
+        // disabled emit is silent, mirroring log_with
+        let mut d = Trace::disabled();
+        d.emit(1, SimEvent::Frame { k: 0 });
+        assert_eq!(d.dropped(), 0);
     }
 
     #[test]

@@ -136,6 +136,18 @@ impl WireClient {
         Ok(blob)
     }
 
+    /// `METRICS`: reads the `METRICS lines=<n>` header plus the `n`
+    /// Prometheus-style exposition lines that follow, returning the
+    /// exposition lines (comment lines included).
+    pub fn metrics(&mut self) -> Result<Vec<String>> {
+        let header = self.send("METRICS")?;
+        let n: usize = header
+            .strip_prefix("METRICS lines=")
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| Error::Runtime(format!("bad METRICS header: {header}")))?;
+        self.read_reply_lines(n, "metrics")
+    }
+
     /// SUBMIT with retry on `BUSY` backpressure; returns the final
     /// (non-BUSY) reply and how many BUSY retries it took.
     pub fn submit(&mut self, tenant: u32, app: &str) -> Result<(String, u32)> {

@@ -1,10 +1,17 @@
 //! Tiny `log` facade backend writing to stderr.
 //!
-//! The coordinator uses the standard `log` macros throughout; binaries call
-//! [`init`] once.  Level comes from `CGRA_MTE_LOG` (error|warn|info|debug|
-//! trace), defaulting to `info`.
+//! The coordinator uses the standard `log` macros throughout; binaries
+//! call [`init`] once.  `CGRA_MTE_LOG` configures it with an
+//! env_logger-style spec: a default level plus per-target overrides,
+//! e.g. `info,coordinator=debug` or
+//! `warn,cgra_mte::coordinator::reactor=trace`.  A target override
+//! matches any record whose target contains the given fragment as a
+//! path segment prefix (`coordinator` matches
+//! `cgra_mte::coordinator::leader`); the most specific (longest)
+//! matching override wins.  Defaults to `info`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 
 use log::{Level, LevelFilter, Metadata, Record};
 
@@ -12,10 +19,109 @@ struct StderrLogger;
 
 static LOGGER: StderrLogger = StderrLogger;
 static INITIALIZED: AtomicBool = AtomicBool::new(false);
+static SPEC: OnceLock<LogSpec> = OnceLock::new();
+
+/// A parsed `CGRA_MTE_LOG` spec: default level + per-target overrides.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LogSpec {
+    /// Level for records no override matches.
+    pub default: LevelFilter,
+    /// `(target fragment, level)` overrides, as written in the spec.
+    pub overrides: Vec<(String, LevelFilter)>,
+}
+
+impl Default for LogSpec {
+    fn default() -> Self {
+        LogSpec { default: LevelFilter::Info, overrides: Vec::new() }
+    }
+}
+
+impl LogSpec {
+    /// Parse `default[,target=level]...`.  Unrecognized pieces are
+    /// ignored (logging must never take a process down); a bare
+    /// `target=level` list without a leading default keeps `info`.
+    pub fn parse(spec: &str) -> LogSpec {
+        let mut out = LogSpec::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once('=') {
+                None => {
+                    if let Some(level) = parse_level(part) {
+                        out.default = level;
+                    }
+                }
+                Some((target, level)) => {
+                    if let Some(level) = parse_level(level) {
+                        out.overrides.push((target.trim().to_string(), level));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Effective level for a record target: the longest matching
+    /// override, else the default.  An override matches when the target
+    /// equals it, or when it appears as a `::`-delimited segment-prefix
+    /// anywhere in the target path.
+    pub fn level_for(&self, target: &str) -> LevelFilter {
+        let mut best_len = 0usize;
+        let mut level = self.default;
+        for (frag, l) in &self.overrides {
+            // `>=`: among equally specific overrides the last one wins
+            if frag.len() >= best_len && target_matches(target, frag) {
+                best_len = frag.len();
+                level = *l;
+            }
+        }
+        level
+    }
+
+    /// Most verbose level any target can reach — what `log::max_level`
+    /// must be set to so the facade forwards everything the spec wants.
+    pub fn max_level(&self) -> LevelFilter {
+        self.overrides.iter().map(|(_, l)| *l).fold(self.default, |a, b| a.max(b))
+    }
+}
+
+/// Does `frag` match `target` as a path-segment prefix?  `coordinator`
+/// matches `cgra_mte::coordinator::reactor` and `coordinator`; it does
+/// not match `coordinators` or `my_coordinator`.
+fn target_matches(target: &str, frag: &str) -> bool {
+    if frag.is_empty() {
+        return false;
+    }
+    // walk every `::` boundary (plus the start) and test a prefix match
+    // that ends at the target's end or at another `::`
+    let mut starts = vec![0usize];
+    let mut idx = 0;
+    while let Some(found) = target[idx..].find("::") {
+        idx += found + 2;
+        starts.push(idx);
+    }
+    for s in starts {
+        let rest = &target[s..];
+        if let Some(tail) = rest.strip_prefix(frag) {
+            if tail.is_empty() || tail.starts_with("::") {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn spec() -> &'static LogSpec {
+    SPEC.get_or_init(|| {
+        std::env::var("CGRA_MTE_LOG").ok().map(|v| LogSpec::parse(&v)).unwrap_or_default()
+    })
+}
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
+        metadata.level() <= spec().level_for(metadata.target())
     }
 
     fn log(&self, record: &Record) {
@@ -37,7 +143,7 @@ impl log::Log for StderrLogger {
 
 /// Parse a level name (case-insensitive); `None` if unrecognized.
 pub fn parse_level(name: &str) -> Option<LevelFilter> {
-    match name.to_ascii_lowercase().as_str() {
+    match name.trim().to_ascii_lowercase().as_str() {
         "off" => Some(LevelFilter::Off),
         "error" => Some(LevelFilter::Error),
         "warn" | "warning" => Some(LevelFilter::Warn),
@@ -53,12 +159,9 @@ pub fn init() {
     if INITIALIZED.swap(true, Ordering::SeqCst) {
         return;
     }
-    let level = std::env::var("CGRA_MTE_LOG")
-        .ok()
-        .and_then(|v| parse_level(&v))
-        .unwrap_or(LevelFilter::Info);
+    let max = spec().max_level();
     if log::set_logger(&LOGGER).is_ok() {
-        log::set_max_level(level);
+        log::set_max_level(max);
     }
 }
 
@@ -73,6 +176,37 @@ mod tests {
         assert_eq!(parse_level("warning"), Some(LevelFilter::Warn));
         assert_eq!(parse_level("off"), Some(LevelFilter::Off));
         assert_eq!(parse_level("nope"), None);
+    }
+
+    #[test]
+    fn spec_parses_default_and_overrides() {
+        let s = LogSpec::parse("info,coordinator=debug,cgra_mte::coordinator::reactor=trace");
+        assert_eq!(s.default, LevelFilter::Info);
+        assert_eq!(s.overrides.len(), 2);
+        assert_eq!(s.level_for("cgra_mte::scheduler::core"), LevelFilter::Info);
+        assert_eq!(s.level_for("cgra_mte::coordinator::leader"), LevelFilter::Debug);
+        // longest (most specific) override wins
+        assert_eq!(s.level_for("cgra_mte::coordinator::reactor"), LevelFilter::Trace);
+        assert_eq!(s.max_level(), LevelFilter::Trace);
+    }
+
+    #[test]
+    fn spec_matches_segment_prefixes_only() {
+        let s = LogSpec::parse("warn,coordinator=debug");
+        assert_eq!(s.level_for("coordinator"), LevelFilter::Debug);
+        assert_eq!(s.level_for("cgra_mte::coordinator"), LevelFilter::Debug);
+        // not a path segment: must not match
+        assert_eq!(s.level_for("cgra_mte::coordinators"), LevelFilter::Warn);
+        assert_eq!(s.level_for("my_coordinator::x"), LevelFilter::Warn);
+    }
+
+    #[test]
+    fn spec_tolerates_garbage_and_bare_overrides() {
+        let s = LogSpec::parse("bogus,server=warp,reactor=debug,, ");
+        // unknown default level and unknown override level are ignored
+        assert_eq!(s.default, LevelFilter::Info);
+        assert_eq!(s.overrides, vec![("reactor".to_string(), LevelFilter::Debug)]);
+        assert_eq!(s.level_for("cgra_mte::coordinator::reactor"), LevelFilter::Debug);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use cgra_mte::sim::{
 use cgra_mte::tasks::TaskLibrary;
 
 fn render(trace: &Trace) -> String {
-    trace.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+    trace.events().map(|e| format!("{} {}\n", e.at, e.what())).collect()
 }
 
 /// Run `f` twice; both (trace, report-debug) pairs must match exactly.
@@ -148,7 +148,7 @@ fn qos_disabled_default_presets_carry_no_qos_payload() {
     let r = run_cloud_traced(&cfg, TaskLibrary::table1(), &mut t).unwrap();
     assert!(r.qos.is_none());
     assert!(
-        t.events().all(|e| !e.what.starts_with("preempt ")),
+        t.events().all(|e| !e.what().starts_with("preempt ")),
         "no preemption may occur with [qos] absent"
     );
 

@@ -63,7 +63,7 @@ struct Case {
 
 /// Raw cycle-stamped trace lines — byte-exact, no ms rounding.
 fn render(trace: &Trace) -> String {
-    trace.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+    trace.events().map(|e| format!("{} {}\n", e.at, e.what())).collect()
 }
 
 /// Run `cfg` under `runner` with a fresh trace; return (trace, report).

@@ -19,7 +19,7 @@ use cgra_mte::sim::{
 use cgra_mte::tasks::TaskLibrary;
 
 fn render(trace: &Trace) -> String {
-    trace.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+    trace.events().map(|e| format!("{} {}\n", e.at, e.what())).collect()
 }
 
 fn assert_conserves(r: &EnergyReport, what: &str) {

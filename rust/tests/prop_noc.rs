@@ -133,7 +133,7 @@ fn allocator_keeps_the_corridor_map_in_lockstep() {
 #[test]
 fn disabled_noc_with_configured_knobs_changes_nothing() {
     let render = |trace: &Trace| -> String {
-        trace.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+        trace.events().map(|e| format!("{} {}\n", e.at, e.what())).collect()
     };
     // plain preset, noc section untouched
     let mut plain_cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);

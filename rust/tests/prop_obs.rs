@@ -1,0 +1,150 @@
+//! End-to-end observability properties over the sim drivers:
+//!
+//! 1. **Transparency** — running with obs *enabled* produces the exact
+//!    trace bytes and report rendering of the obs-disabled run (the
+//!    differential goldens pin the disabled path; this pins enabled
+//!    against it).
+//! 2. **Determinism** — two obs-enabled runs of the same seeded config
+//!    produce identical journal digests and identical metrics
+//!    expositions.
+//! 3. **Round-trip** — the Perfetto export of a real run's journal
+//!    parses with the in-tree JSON parser and carries the trace_event
+//!    shape ui.perfetto.dev expects.
+
+use cgra_mte::config::{presets, Config, RegionPolicyKind, WorkloadConfig};
+use cgra_mte::obs::{perfetto, Obs};
+use cgra_mte::sim::{
+    run_cloud_observed, run_cloud_traced, run_edge_observed, run_edge_pool_observed,
+    run_edge_pool_traced, run_edge_traced, Trace,
+};
+use cgra_mte::tasks::TaskLibrary;
+use cgra_mte::util::json::Json;
+
+fn render(trace: &Trace) -> String {
+    trace.events().map(|e| format!("{} {}\n", e.at, e.what())).collect()
+}
+
+fn short_cloud(cfg: &mut Config, duration_ms: f64) {
+    if let WorkloadConfig::Cloud(ref mut c) = cfg.workload {
+        c.duration_ms = duration_ms;
+    }
+}
+
+fn short_edge(cfg: &mut Config, frames: u32) {
+    if let WorkloadConfig::Edge(ref mut e) = cfg.workload {
+        e.frames = frames;
+    }
+}
+
+#[test]
+fn cloud_obs_enabled_is_trace_transparent_and_deterministic() {
+    let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+    short_cloud(&mut cfg, 400.0);
+
+    let mut t_off = Trace::new(1 << 20);
+    let r_off = run_cloud_traced(&cfg, TaskLibrary::table1(), &mut t_off).unwrap();
+
+    let run = || {
+        let mut t = Trace::new(1 << 20);
+        let mut obs = Obs::enabled(1 << 16);
+        let r = run_cloud_observed(&cfg, TaskLibrary::table1(), &mut t, &mut obs).unwrap();
+        (render(&t), format!("{r:?}"), obs)
+    };
+    let (trace_a, report_a, obs_a) = run();
+    let (trace_b, report_b, obs_b) = run();
+
+    // transparency: obs-on changes no trace byte and no report field
+    assert_eq!(render(&t_off), trace_a, "obs-enabled trace diverged from obs-disabled");
+    assert_eq!(format!("{r_off:?}"), report_a, "obs-enabled report diverged");
+
+    // determinism: identical journals (digest + event count) and
+    // identical metric expositions across repeat runs
+    assert!(!obs_a.journal.is_empty(), "enabled journal recorded nothing");
+    assert_eq!(obs_a.journal.len(), obs_b.journal.len());
+    assert_eq!(obs_a.journal.digest(), obs_b.journal.digest());
+    assert_eq!(obs_a.registry.render(), obs_b.registry.render());
+    assert_eq!(trace_a, trace_b);
+    assert_eq!(report_a, report_b);
+
+    // the exposition carries the sim-level series
+    let exposition = obs_a.registry.render();
+    assert!(exposition.contains("cgra_sim_submitted_total"), "{exposition}");
+    assert!(exposition.contains("cgra_req_turnaround_cycles_count"), "{exposition}");
+}
+
+#[test]
+fn edge_obs_enabled_is_trace_transparent() {
+    let mut cfg = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+    short_edge(&mut cfg, 120);
+
+    let mut t_off = Trace::new(1 << 20);
+    let r_off = run_edge_traced(&cfg, TaskLibrary::table1(), &mut t_off).unwrap();
+
+    let mut t_on = Trace::new(1 << 20);
+    let mut obs = Obs::enabled(1 << 16);
+    let r_on = run_edge_observed(&cfg, TaskLibrary::table1(), &mut t_on, &mut obs).unwrap();
+
+    assert_eq!(render(&t_off), render(&t_on));
+    assert_eq!(format!("{r_off:?}"), format!("{r_on:?}"));
+    assert!(!obs.journal.is_empty());
+    let exposition = obs.registry.render();
+    assert!(exposition.contains("cgra_sim_frames_total"), "{exposition}");
+    assert!(exposition.contains("cgra_frame_latency_cycles_count"), "{exposition}");
+}
+
+#[test]
+fn sharded_pool_obs_is_transparent_and_digest_deterministic() {
+    let mut cfg = presets::edge_scenario(RegionPolicyKind::FlexibleShape);
+    cfg.pool.shards = 2;
+    short_edge(&mut cfg, 100);
+
+    let mut t_off = Trace::new(1 << 20);
+    let r_off = run_edge_pool_traced(&cfg, TaskLibrary::table1(), &mut t_off).unwrap();
+
+    let run = || {
+        let mut t = Trace::new(1 << 20);
+        let mut obs = Obs::enabled(1 << 16);
+        let r = run_edge_pool_observed(&cfg, TaskLibrary::table1(), &mut t, &mut obs).unwrap();
+        (render(&t), format!("{r:?}"), obs)
+    };
+    let (trace_a, report_a, obs_a) = run();
+    let (trace_b, _, obs_b) = run();
+
+    assert_eq!(render(&t_off), trace_a);
+    assert_eq!(format!("{r_off:?}"), report_a);
+    assert_eq!(trace_a, trace_b);
+    assert_eq!(obs_a.journal.digest(), obs_b.journal.digest());
+    // shard tags in the journal agree with the trace's `shard=` prefixes
+    assert!(obs_a.journal.events().any(|e| e.shard == 0));
+    let trace_saw_shard_1 = trace_a.contains("shard=1 ");
+    let journal_saw_shard_1 = obs_a.journal.events().any(|e| e.shard == 1);
+    assert_eq!(trace_saw_shard_1, journal_saw_shard_1, "journal shard tags diverge from trace");
+}
+
+#[test]
+fn perfetto_export_of_a_real_run_round_trips_the_json_parser() {
+    let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+    short_cloud(&mut cfg, 300.0);
+    let mut t = Trace::new(1 << 20);
+    let mut obs = Obs::from_config(&cfg);
+    // from_config honors the [obs] gate: disabled by default
+    assert!(!obs.on());
+    cfg.obs.enabled = true;
+    obs = Obs::from_config(&cfg);
+    run_cloud_observed(&cfg, TaskLibrary::table1(), &mut t, &mut obs).unwrap();
+
+    let text = perfetto::export_string(&obs.journal, cfg.arch.core_clock_mhz as u64);
+    let json = Json::parse(&text).expect("perfetto export must be valid JSON");
+    assert_eq!(json.to_string(), text, "parse → render must be the identity");
+    let events = json.get("traceEvents").expect("traceEvents key");
+    let Json::Arr(items) = events else {
+        panic!("traceEvents is not an array");
+    };
+    assert!(!items.is_empty(), "no trace events exported");
+    for ev in items {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).expect("ph field");
+        assert!(["X", "i", "M"].contains(&ph), "unexpected phase {ph}");
+        assert!(ev.get("pid").is_some());
+    }
+    assert_eq!(json.get("displayTimeUnit").and_then(|u| u.as_str()), Some("ms"));
+}

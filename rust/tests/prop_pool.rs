@@ -282,7 +282,7 @@ fn single_shard_pool_sim_trace_matches_across_seeds() {
             run_cloud_pool_traced(&cfg, TaskLibrary::table1(), &mut t_pool).expect("pool runs");
 
         let render = |t: &Trace| -> String {
-            t.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+            t.events().map(|e| format!("{} {}\n", e.at, e.what())).collect()
         };
         assert_eq!(render(&t_single), render(&t_pool), "seed {seed}: trace diverged");
         assert_eq!(single.submitted, pooled.submitted, "seed {seed}");

@@ -54,22 +54,23 @@ fn preemption_is_strictly_class_ascending_and_never_evicts_critical() {
 
     let mut preempt_lines = 0u64;
     for e in trace.events() {
-        if !e.what.starts_with("preempt ") {
+        let what = e.what();
+        if !what.starts_with("preempt ") {
             continue;
         }
         preempt_lines += 1;
-        let victim = class_rank(field(&e.what, "class"));
-        let preemptor = class_rank(field(&e.what, "byclass"));
+        let victim = class_rank(field(&what, "class"));
+        let preemptor = class_rank(field(&what, "byclass"));
         assert!(
             victim < preemptor,
             "preemption must be strictly class-ascending: {}",
-            e.what
+            what
         );
         assert_ne!(
-            field(&e.what, "class"),
+            field(&what, "class"),
             "critical",
             "a critical task must never be a victim: {}",
-            e.what
+            what
         );
     }
     assert_eq!(preempt_lines, qos.victims_evicted, "every eviction is traced");
@@ -96,20 +97,21 @@ fn victims_resume_and_complete_exactly_once_with_conservation() {
     let mut last_region: BTreeMap<String, String> = BTreeMap::new();
     let mut resumes_owed: BTreeMap<String, u64> = BTreeMap::new();
     for e in trace.events() {
-        if e.what.starts_with("launch ") {
-            let inst = field(&e.what, "inst").to_string();
-            last_region.insert(inst.clone(), field(&e.what, "region").to_string());
+        let what = e.what();
+        if what.starts_with("launch ") {
+            let inst = field(&what, "inst").to_string();
+            last_region.insert(inst.clone(), field(&what, "region").to_string());
             if let Some(owed) = resumes_owed.get_mut(&inst) {
                 *owed = owed.saturating_sub(1);
             }
-        } else if e.what.starts_with("preempt ") {
-            let inst = field(&e.what, "inst").to_string();
-            let region = field(&e.what, "region");
+        } else if what.starts_with("preempt ") {
+            let inst = field(&what, "inst").to_string();
+            let region = field(&what, "region");
             assert_eq!(
                 last_region.get(&inst).map(String::as_str),
                 Some(region),
                 "evicted region must be the instance's live launch region: {}",
-                e.what
+                what
             );
             *resumes_owed.entry(inst).or_insert(0) += 1;
         }
@@ -157,7 +159,7 @@ fn preemptive_edf_beats_fifo_on_critical_latency_at_equal_load() {
 #[test]
 fn disabled_qos_with_configured_knobs_changes_nothing() {
     let render = |trace: &Trace| -> String {
-        trace.events().map(|e| format!("{} {}\n", e.at, e.what)).collect()
+        trace.events().map(|e| format!("{} {}\n", e.at, e.what())).collect()
     };
     // plain preset, qos section untouched
     let mut plain_cfg = presets::cloud_scenario(cgra_mte::config::RegionPolicyKind::FlexibleShape);

@@ -282,6 +282,83 @@ fn two_shard_pool_merges_completions_and_sums_tenant_counters() {
     server.shutdown();
 }
 
+/// Parse one Prometheus exposition line into `(series, value)`;
+/// `# TYPE` comment lines return `None`.  Panics on anything malformed
+/// — this is the wire-format contract of the `METRICS` command.
+fn parse_metric(line: &str) -> Option<(String, f64)> {
+    if line.starts_with('#') {
+        assert!(line.starts_with("# TYPE "), "bad comment line: {line}");
+        return None;
+    }
+    let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+    let name = series.split('{').next().expect("series name");
+    assert!(
+        !name.is_empty()
+            && name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+        "bad metric name: {line}"
+    );
+    let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+    Some((series.to_string(), v))
+}
+
+/// `METRICS` scraped mid-load on an obs-enabled server: every scrape's
+/// exposition parses line by line, and the admission identity
+/// `queued == served + failed + inflight` holds *within each reply*
+/// even while four connections race it (inflight is derived from the
+/// same snapshot, so the books always balance).
+#[test]
+fn metrics_scrape_mid_load_parses_and_conserves() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    const PER_CONN: u32 = 8;
+    let mut cfg = stub_config();
+    cfg.obs.enabled = true;
+    let server = Server::start(&cfg, "127.0.0.1:0").unwrap();
+    let addr = server.addr;
+
+    let load: Vec<_> = (0..4u32)
+        .map(|tenant| {
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(addr).expect("connect");
+                for _ in 0..PER_CONN {
+                    submit_ok(&mut client, tenant, APPS[tenant as usize]);
+                }
+                client.send("QUIT").expect("quit");
+            })
+        })
+        .collect();
+
+    let mut scraper = WireClient::connect(addr).expect("connect");
+    for _ in 0..10 {
+        let lines = scraper.metrics().expect("metrics");
+        let series: std::collections::BTreeMap<String, f64> =
+            lines.iter().filter_map(|l| parse_metric(l)).collect();
+        let get = |k: &str| *series.get(k).unwrap_or_else(|| panic!("missing {k}"));
+        let queued = get("cgra_serve_queued_total");
+        let served = get("cgra_serve_served_total");
+        let failed = get("cgra_serve_failed_total");
+        let inflight = get("cgra_serve_inflight");
+        assert_eq!(queued, served + failed + inflight, "identity broke: {lines:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for t in load {
+        t.join().expect("load thread panicked");
+    }
+
+    // after the load drains: everything served, nothing in flight, and
+    // the [obs] registry contributed the executor-fed series
+    let lines = scraper.metrics().expect("metrics");
+    let series: std::collections::BTreeMap<String, f64> =
+        lines.iter().filter_map(|l| parse_metric(l)).collect();
+    let total = (4 * PER_CONN) as f64;
+    assert_eq!(series.get("cgra_serve_queued_total"), Some(&total));
+    assert_eq!(series.get("cgra_serve_served_total"), Some(&total));
+    assert_eq!(series.get("cgra_serve_inflight"), Some(&0.0));
+    assert!(series.keys().any(|k| k.starts_with("cgra_serve_batches_total")), "{lines:?}");
+    assert!(series.keys().any(|k| k.starts_with("cgra_dpr_cache_hits_total")), "{lines:?}");
+    scraper.send("QUIT").expect("quit");
+    server.shutdown();
+}
+
 /// Acceptance check: aggregate completed-SUBMIT throughput of ≥4
 /// concurrent tenant connections strictly above the single-connection
 /// synchronous baseline (same total request count, fresh server each to
