@@ -1,14 +1,20 @@
 //! Observability overhead bench with a hard gate.
 //!
-//! Runs the simperf presets twice per scenario — `[obs]` disabled and
-//! `[obs]` enabled (lifecycle journal + metrics registry live) — over
-//! identical fixed work and compares events/sec.  The observability
-//! contract is that the full instrumentation costs at most 5%
-//! throughput: the gate fails the bench (exit 1) when any scenario's
-//! obs-on events/sec drops below 95% of the obs-off rate measured in
-//! the same process.  Off/on samples are interleaved so machine drift
-//! hits both arms alike, and the minimum wall time per arm is used
-//! (least scheduler noise).
+//! Runs the simperf presets three times per scenario — `[obs]`
+//! disabled, `[obs]` enabled (lifecycle journal + metrics registry
+//! live), and *full* obs (journal + registry + decision-provenance
+//! ring + SLO burn-rate watchdog) — over identical fixed work and
+//! compares events/sec.  The observability contract is two-tiered: the
+//! baseline instrumentation costs at most 5% throughput and the full
+//! stack at most 8%; the gate fails the bench (exit 1) when any
+//! scenario's obs-on events/sec drops below those fractions of the
+//! obs-off rate measured in the same process.  Off/on/full samples are
+//! interleaved so machine drift hits all arms alike, and the minimum
+//! wall time per arm is used (least scheduler noise).
+//!
+//! A smoke leg also cuts a flight record from the full-obs run and
+//! round-trips it through the in-tree JSON parser + validator — the
+//! postmortem artifact format is part of the gate.
 //!
 //! Output: `BENCH_obs.json` (shared `cgra_mte::bench::jsonw` schema).
 //! The CI leg runs `--smoke` (quarter-length runs, fewer samples).
@@ -17,14 +23,16 @@ use std::time::Instant;
 
 use cgra_mte::bench::jsonw;
 use cgra_mte::config::{
-    presets, Config, DefragPolicyKind, PlacementPolicyKind, RegionPolicyKind, WorkloadConfig,
+    presets, Config, DefragPolicyKind, ObsConfig, PlacementPolicyKind, RegionPolicyKind,
+    WorkloadConfig,
 };
 use cgra_mte::metrics::export;
 use cgra_mte::obs::Obs;
 use cgra_mte::sim::{run_cloud_observed, run_cloud_pool_observed, Trace};
 use cgra_mte::tasks::TaskLibrary;
 
-const MAX_OVERHEAD: f64 = 0.05; // full obs may cost at most 5% events/sec
+const MAX_OVERHEAD: f64 = 0.05; // journal + registry may cost at most 5% events/sec
+const MAX_OVERHEAD_FULL: f64 = 0.08; // + provenance + watchdog: at most 8%
 const JOURNAL_CAP: usize = 1 << 16;
 
 struct Scenario {
@@ -55,6 +63,18 @@ fn set_duration(cfg: &mut Config, duration_ms: f64) {
     }
 }
 
+/// The `[obs]` knob set of the full arm: journal + registry +
+/// provenance ring + burn-rate watchdog, all live.
+fn full_obs_config() -> ObsConfig {
+    ObsConfig {
+        enabled: true,
+        journal_cap: JOURNAL_CAP,
+        provenance: true,
+        watchdog: true,
+        ..ObsConfig::default()
+    }
+}
+
 /// One run through the observed entry point; returns the deterministic
 /// event count (arrivals + completions + launches).  The trace stays
 /// disabled in both arms — this bench isolates the obs cost.
@@ -76,17 +96,22 @@ struct Row {
     events: u64,
     off_eps: f64,
     on_eps: f64,
+    full_eps: f64,
     overhead: f64,
+    overhead_full: f64,
 }
 
 fn measure(s: &Scenario, samples: u32) -> Row {
-    // obs must be workload-transparent: same fixed work in both arms
+    // obs must be workload-transparent: same fixed work in every arm
     let n = run(s, &mut Obs::disabled());
     let n_on = run(s, &mut Obs::enabled(JOURNAL_CAP));
     assert_eq!(n, n_on, "{}: enabling obs changed the event count", s.name);
+    let n_full = run(s, &mut Obs::from_obs_config(&full_obs_config()));
+    assert_eq!(n, n_full, "{}: provenance/watchdog changed the event count", s.name);
     assert!(n > 0, "{}: empty run measures nothing", s.name);
     let mut best_off = f64::INFINITY;
     let mut best_on = f64::INFINITY;
+    let mut best_full = f64::INFINITY;
     for _ in 0..samples {
         let t0 = Instant::now();
         std::hint::black_box(run(s, &mut Obs::disabled()));
@@ -95,10 +120,52 @@ fn measure(s: &Scenario, samples: u32) -> Row {
         let t1 = Instant::now();
         std::hint::black_box(run(s, &mut obs));
         best_on = best_on.min(t1.elapsed().as_secs_f64());
+        let mut obs = Obs::from_obs_config(&full_obs_config());
+        let t2 = Instant::now();
+        std::hint::black_box(run(s, &mut obs));
+        best_full = best_full.min(t2.elapsed().as_secs_f64());
     }
     let off_eps = n as f64 / best_off;
     let on_eps = n as f64 / best_on;
-    Row { name: s.name, events: n, off_eps, on_eps, overhead: 1.0 - on_eps / off_eps }
+    let full_eps = n as f64 / best_full;
+    Row {
+        name: s.name,
+        events: n,
+        off_eps,
+        on_eps,
+        full_eps,
+        overhead: 1.0 - on_eps / off_eps,
+        overhead_full: 1.0 - full_eps / off_eps,
+    }
+}
+
+/// Cut a flight record from a live full-obs run and round-trip it
+/// through the in-tree JSON parser + validator.  Panics (failing the
+/// bench) if the postmortem artifact format regressed.
+fn flight_roundtrip() {
+    let s = &scenarios(true)[0]; // churn, quarter length
+    let ocfg = full_obs_config();
+    let mut obs = Obs::from_obs_config(&ocfg);
+    let events = run(s, &mut obs);
+    let doc = cgra_mte::obs::flight_record(
+        "bench:roundtrip",
+        events,
+        &obs.journal,
+        obs.provenance.as_ref(),
+        &obs.registry,
+        &ocfg,
+    );
+    let rendered = format!("{doc}");
+    let parsed =
+        cgra_mte::util::json::Json::parse(&rendered).expect("flight record re-parses");
+    let summary =
+        cgra_mte::obs::validate_flight_record(&parsed).expect("flight record validates");
+    assert_eq!(summary.reason, "bench:roundtrip");
+    assert!(summary.journal_events > 0, "flight record carries no journal tail");
+    println!(
+        "flight-record round-trip ok: {} journal events, {} decisions, {} metric lines",
+        summary.journal_events, summary.decisions, summary.metric_lines
+    );
 }
 
 fn main() {
@@ -113,8 +180,15 @@ fn main() {
     let mut failures = Vec::new();
     for r in &rows {
         println!(
-            "  {:<18} {:>12} events   {:>14.0} ev/s off   {:>14.0} ev/s on   {:>+6.2}% overhead",
-            r.name, r.events, r.off_eps, r.on_eps, r.overhead * 100.0
+            "  {:<18} {:>12} events   {:>13.0} ev/s off   {:>13.0} ev/s on ({:>+5.2}%)   \
+             {:>13.0} ev/s full ({:>+5.2}%)",
+            r.name,
+            r.events,
+            r.off_eps,
+            r.on_eps,
+            r.overhead * 100.0,
+            r.full_eps,
+            r.overhead_full * 100.0
         );
         if r.overhead > MAX_OVERHEAD {
             failures.push(format!(
@@ -124,13 +198,24 @@ fn main() {
                 MAX_OVERHEAD * 100.0
             ));
         }
+        if r.overhead_full > MAX_OVERHEAD_FULL {
+            failures.push(format!(
+                "{}: full obs (provenance + watchdog) costs {:.1}% events/sec (cap {:.0}%)",
+                r.name,
+                r.overhead_full * 100.0,
+                MAX_OVERHEAD_FULL * 100.0
+            ));
+        }
     }
+
+    flight_roundtrip();
 
     let doc = jsonw::obj(&[
         ("bench", jsonw::str_val("obs_overhead")),
         ("smoke", jsonw::bool_val(smoke)),
         ("samples", jsonw::num_u(samples as u64)),
         ("max_overhead", jsonw::num_f(MAX_OVERHEAD)),
+        ("max_overhead_full", jsonw::num_f(MAX_OVERHEAD_FULL)),
         ("gate_status", jsonw::str_val(if failures.is_empty() { "pass" } else { "fail" })),
         (
             "rows",
@@ -143,7 +228,9 @@ fn main() {
                             ("events", jsonw::num_u(r.events)),
                             ("events_per_sec_off", jsonw::num_f(r.off_eps)),
                             ("events_per_sec_on", jsonw::num_f(r.on_eps)),
+                            ("events_per_sec_full", jsonw::num_f(r.full_eps)),
                             ("overhead", jsonw::num_f(r.overhead)),
+                            ("overhead_full", jsonw::num_f(r.overhead_full)),
                         ])
                     })
                     .collect::<Vec<_>>(),

@@ -587,11 +587,64 @@ pub struct ObsConfig {
     /// the newest `journal_cap` events are retained.  TOML:
     /// `obs.journal_cap`.
     pub journal_cap: usize,
+    /// Decision-provenance switch (layer 2): record *why* the
+    /// scheduler chose a variant/shard/victim/defrag plan, queryable
+    /// over the wire with `EXPLAIN <req_id>`.  Requires `enabled`.
+    /// TOML: `obs.provenance`.
+    pub provenance: bool,
+    /// Provenance-ring capacity in decision records (ring semantics,
+    /// like the journal).  TOML: `obs.provenance_cap`.
+    pub provenance_cap: usize,
+    /// SLO burn-rate watchdog switch: multi-window burn rates over the
+    /// per-class SLO stream plus per-shard utilization/power anomaly
+    /// scoring, raising typed alerts into the registry and journal.
+    /// Requires `enabled`.  TOML: `obs.watchdog`.
+    pub watchdog: bool,
+    /// Fast burn-rate window, in deadlined completions per class.
+    /// TOML: `obs.slo_fast_window`.
+    pub slo_fast_window: usize,
+    /// Slow burn-rate window, in deadlined completions per class.
+    /// TOML: `obs.slo_slow_window`.
+    pub slo_slow_window: usize,
+    /// SLO error budget: the tolerated deadline-miss fraction a burn
+    /// rate of 1.0 corresponds to.  TOML: `obs.slo_budget`.
+    pub slo_budget: f64,
+    /// Fast-window burn-rate alert threshold (multiples of budget).
+    /// TOML: `obs.burn_fast`.
+    pub burn_fast: f64,
+    /// Slow-window burn-rate alert threshold (multiples of budget);
+    /// both windows must burn above threshold to fire (the classic
+    /// multi-window guard against blips and stale alerts).  TOML:
+    /// `obs.burn_slow`.
+    pub burn_slow: f64,
+    /// Per-shard anomaly threshold in standard deviations: a
+    /// utilization or power sample further than this from the shard's
+    /// running mean raises an anomaly alert.  TOML:
+    /// `obs.anomaly_sigma`.
+    pub anomaly_sigma: f64,
+    /// Per-subscriber `WATCH` queue capacity in events: a subscriber
+    /// falling further behind than this has events dropped-and-counted
+    /// rather than blocking the serving front.  TOML:
+    /// `obs.watch_queue_cap`.
+    pub watch_queue_cap: usize,
 }
 
 impl Default for ObsConfig {
     fn default() -> Self {
-        ObsConfig { enabled: false, journal_cap: 65_536 }
+        ObsConfig {
+            enabled: false,
+            journal_cap: 65_536,
+            provenance: false,
+            provenance_cap: 4096,
+            watchdog: false,
+            slo_fast_window: 32,
+            slo_slow_window: 256,
+            slo_budget: 0.01,
+            burn_fast: 8.0,
+            burn_slow: 2.0,
+            anomaly_sigma: 4.0,
+            watch_queue_cap: 1024,
+        }
     }
 }
 
@@ -601,6 +654,39 @@ impl ObsConfig {
         if self.enabled && self.journal_cap == 0 {
             return Err(Error::Config(
                 "obs.journal_cap must be positive when obs.enabled".into(),
+            ));
+        }
+        if (self.provenance || self.watchdog) && !self.enabled {
+            return Err(Error::Config(
+                "obs.provenance / obs.watchdog require obs.enabled".into(),
+            ));
+        }
+        if self.provenance && self.provenance_cap == 0 {
+            return Err(Error::Config(
+                "obs.provenance_cap must be positive when obs.provenance".into(),
+            ));
+        }
+        if self.watchdog {
+            if self.slo_fast_window == 0 || self.slo_slow_window < self.slo_fast_window {
+                return Err(Error::Config(
+                    "obs watchdog windows need 0 < slo_fast_window <= slo_slow_window".into(),
+                ));
+            }
+            if !(self.slo_budget > 0.0 && self.slo_budget <= 1.0) {
+                return Err(Error::Config(format!(
+                    "obs.slo_budget ({}) must be within (0, 1]",
+                    self.slo_budget
+                )));
+            }
+            if self.burn_fast <= 0.0 || self.burn_slow <= 0.0 || self.anomaly_sigma <= 0.0 {
+                return Err(Error::Config(
+                    "obs.burn_fast / obs.burn_slow / obs.anomaly_sigma must be positive".into(),
+                ));
+            }
+        }
+        if self.enabled && self.watch_queue_cap == 0 {
+            return Err(Error::Config(
+                "obs.watch_queue_cap must be positive when obs.enabled".into(),
             ));
         }
         Ok(())
@@ -1363,6 +1449,24 @@ impl Config {
             let mut cap = o.journal_cap as u64;
             read_u64(obs, "journal_cap", &mut cap)?;
             o.journal_cap = cap as usize;
+            read_bool(obs, "provenance", &mut o.provenance)?;
+            let mut pcap = o.provenance_cap as u64;
+            read_u64(obs, "provenance_cap", &mut pcap)?;
+            o.provenance_cap = pcap as usize;
+            read_bool(obs, "watchdog", &mut o.watchdog)?;
+            let mut fast = o.slo_fast_window as u64;
+            read_u64(obs, "slo_fast_window", &mut fast)?;
+            o.slo_fast_window = fast as usize;
+            let mut slow = o.slo_slow_window as u64;
+            read_u64(obs, "slo_slow_window", &mut slow)?;
+            o.slo_slow_window = slow as usize;
+            read_f64(obs, "slo_budget", &mut o.slo_budget)?;
+            read_f64(obs, "burn_fast", &mut o.burn_fast)?;
+            read_f64(obs, "burn_slow", &mut o.burn_slow)?;
+            read_f64(obs, "anomaly_sigma", &mut o.anomaly_sigma)?;
+            let mut wcap = o.watch_queue_cap as u64;
+            read_u64(obs, "watch_queue_cap", &mut wcap)?;
+            o.watch_queue_cap = wcap as usize;
         }
 
         if let Some(wl) = root.get("workload") {
@@ -1820,6 +1924,45 @@ mod tests {
         assert!(Config::from_toml_text("[qos]\ntenant_classes = [\"x\",\"x\",\"x\",\"x\"]\n").is_err());
         assert!(Config::from_toml_text("[qos]\ndeadline_ms = [-1.0, 0.0, 0.0, 0.0]\n").is_err());
         assert!(Config::from_toml_text("[qos]\nmax_victims = 0\n").is_err());
+    }
+
+    #[test]
+    fn obs_knobs_parse_and_validate() {
+        let cfg = Config::from_toml_text(
+            "[obs]\nenabled = true\njournal_cap = 1024\nprovenance = true\nprovenance_cap = 128\n\
+             watchdog = true\nslo_fast_window = 8\nslo_slow_window = 64\nslo_budget = 0.05\n\
+             burn_fast = 10.0\nburn_slow = 3.0\nanomaly_sigma = 2.5\nwatch_queue_cap = 16\n",
+        )
+        .unwrap();
+        assert!(cfg.obs.enabled && cfg.obs.provenance && cfg.obs.watchdog);
+        assert_eq!(cfg.obs.journal_cap, 1024);
+        assert_eq!(cfg.obs.provenance_cap, 128);
+        assert_eq!((cfg.obs.slo_fast_window, cfg.obs.slo_slow_window), (8, 64));
+        assert_eq!(cfg.obs.slo_budget, 0.05);
+        assert_eq!((cfg.obs.burn_fast, cfg.obs.burn_slow), (10.0, 3.0));
+        assert_eq!(cfg.obs.anomaly_sigma, 2.5);
+        assert_eq!(cfg.obs.watch_queue_cap, 16);
+        // defaults: everything off, caps positive
+        let d = ObsConfig::default();
+        assert!(!d.enabled && !d.provenance && !d.watchdog);
+        d.validate().unwrap();
+        // bad combinations rejected
+        assert!(Config::from_toml_text("[obs]\nprovenance = true\n").is_err());
+        assert!(Config::from_toml_text("[obs]\nwatchdog = true\n").is_err());
+        assert!(Config::from_toml_text("[obs]\nenabled = true\njournal_cap = 0\n").is_err());
+        assert!(Config::from_toml_text(
+            "[obs]\nenabled = true\nprovenance = true\nprovenance_cap = 0\n"
+        )
+        .is_err());
+        assert!(Config::from_toml_text(
+            "[obs]\nenabled = true\nwatchdog = true\nslo_fast_window = 64\nslo_slow_window = 8\n"
+        )
+        .is_err());
+        assert!(Config::from_toml_text(
+            "[obs]\nenabled = true\nwatchdog = true\nslo_budget = 0.0\n"
+        )
+        .is_err());
+        assert!(Config::from_toml_text("[obs]\nenabled = true\nwatch_queue_cap = 0\n").is_err());
     }
 
     #[test]

@@ -72,6 +72,12 @@ pub enum Opcode {
     Quit,
     /// `SHUTDOWN`: graceful server shutdown.
     Shutdown,
+    /// `EXPLAIN`: payload is the decimal request sequence number.
+    Explain,
+    /// `WATCH`: subscribe this connection to the live journal stream.
+    Watch,
+    /// `DUMP`: cut a flight-recorder snapshot; empty payload.
+    Dump,
     /// Reply carrying an `OK …` line.
     ReplyOk,
     /// Reply carrying a `BUSY …` backpressure line.
@@ -84,6 +90,15 @@ pub enum Opcode {
     ReplyDefrag,
     /// Reply carrying a `BYE …` line.
     ReplyBye,
+    /// Reply carrying a (multi-line) `EXPLAIN …` decision chain.
+    ReplyExplain,
+    /// Reply carrying a `WATCH ok` / `WATCH done …` line.
+    ReplyWatch,
+    /// Reply carrying a `DUMP …` flight-recorder snapshot.
+    ReplyDump,
+    /// Unsolicited `EVENT …` line pushed to a watching connection
+    /// (req_id zero — events are not replies to any request).
+    ReplyEvent,
 }
 
 impl Opcode {
@@ -95,12 +110,19 @@ impl Opcode {
             Opcode::Defrag => 0x03,
             Opcode::Quit => 0x04,
             Opcode::Shutdown => 0x05,
+            Opcode::Explain => 0x06,
+            Opcode::Watch => 0x07,
+            Opcode::Dump => 0x08,
             Opcode::ReplyOk => 0x81,
             Opcode::ReplyBusy => 0x82,
             Opcode::ReplyErr => 0x83,
             Opcode::ReplyStats => 0x84,
             Opcode::ReplyDefrag => 0x85,
             Opcode::ReplyBye => 0x86,
+            Opcode::ReplyExplain => 0x87,
+            Opcode::ReplyWatch => 0x88,
+            Opcode::ReplyDump => 0x89,
+            Opcode::ReplyEvent => 0x8A,
         }
     }
 
@@ -112,12 +134,19 @@ impl Opcode {
             0x03 => Some(Opcode::Defrag),
             0x04 => Some(Opcode::Quit),
             0x05 => Some(Opcode::Shutdown),
+            0x06 => Some(Opcode::Explain),
+            0x07 => Some(Opcode::Watch),
+            0x08 => Some(Opcode::Dump),
             0x81 => Some(Opcode::ReplyOk),
             0x82 => Some(Opcode::ReplyBusy),
             0x83 => Some(Opcode::ReplyErr),
             0x84 => Some(Opcode::ReplyStats),
             0x85 => Some(Opcode::ReplyDefrag),
             0x86 => Some(Opcode::ReplyBye),
+            0x87 => Some(Opcode::ReplyExplain),
+            0x88 => Some(Opcode::ReplyWatch),
+            0x89 => Some(Opcode::ReplyDump),
+            0x8A => Some(Opcode::ReplyEvent),
             _ => None,
         }
     }
@@ -129,7 +158,7 @@ impl Opcode {
 
     /// Reply opcode for a text-protocol reply line, keyed on its first
     /// token.  Unknown shapes map to [`Opcode::ReplyErr`] — every reply
-    /// the server emits starts with one of the five known tokens.
+    /// the server emits starts with one of the known tokens.
     pub fn for_reply_line(line: &str) -> Opcode {
         match line.split_whitespace().next() {
             Some("OK") => Opcode::ReplyOk,
@@ -137,6 +166,10 @@ impl Opcode {
             Some("STATS") => Opcode::ReplyStats,
             Some("DEFRAG") => Opcode::ReplyDefrag,
             Some("BYE") => Opcode::ReplyBye,
+            Some("EXPLAIN") => Opcode::ReplyExplain,
+            Some("WATCH") => Opcode::ReplyWatch,
+            Some("DUMP") => Opcode::ReplyDump,
+            Some("EVENT") => Opcode::ReplyEvent,
             _ => Opcode::ReplyErr,
         }
     }
@@ -346,12 +379,19 @@ mod tests {
             Opcode::Defrag,
             Opcode::Quit,
             Opcode::Shutdown,
+            Opcode::Explain,
+            Opcode::Watch,
+            Opcode::Dump,
             Opcode::ReplyOk,
             Opcode::ReplyBusy,
             Opcode::ReplyErr,
             Opcode::ReplyStats,
             Opcode::ReplyDefrag,
             Opcode::ReplyBye,
+            Opcode::ReplyExplain,
+            Opcode::ReplyWatch,
+            Opcode::ReplyDump,
+            Opcode::ReplyEvent,
         ] {
             assert_eq!(Opcode::from_u8(op.as_u8()), Some(op));
             assert_eq!(op.is_request(), op.as_u8() < 0x80);
@@ -368,6 +408,20 @@ mod tests {
         assert_eq!(Opcode::for_reply_line("STATS served=0"), Opcode::ReplyStats);
         assert_eq!(Opcode::for_reply_line("DEFRAG migrated=0"), Opcode::ReplyDefrag);
         assert_eq!(Opcode::for_reply_line("BYE shutting down"), Opcode::ReplyBye);
+        assert_eq!(
+            Opcode::for_reply_line("EXPLAIN req=3 lines=2"),
+            Opcode::ReplyExplain
+        );
+        assert_eq!(Opcode::for_reply_line("WATCH ok"), Opcode::ReplyWatch);
+        assert_eq!(
+            Opcode::for_reply_line("WATCH done events=4 dropped=0"),
+            Opcode::ReplyWatch
+        );
+        assert_eq!(Opcode::for_reply_line("DUMP lines=1"), Opcode::ReplyDump);
+        assert_eq!(
+            Opcode::for_reply_line("EVENT at=12 shard=0 req=3 completed tenant=1"),
+            Opcode::ReplyEvent
+        );
         assert_eq!(Opcode::for_reply_line(""), Opcode::ReplyErr);
     }
 

@@ -214,6 +214,7 @@ impl Leader {
         let mut sched = Scheduler::new(cfg, lib.clone(), DprMode::Fast);
         sched.preload_all();
         sched.set_obs(cfg.obs.enabled);
+        sched.set_provenance(cfg.obs.enabled && cfg.obs.provenance);
         let mut binding = TaskBinding::new(runtime, lib);
         let warmup_ms = binding.warmup()?;
         Ok(Leader {
@@ -444,6 +445,14 @@ impl Leader {
     /// (always empty otherwise).
     pub fn take_obs_events(&mut self) -> Vec<(u64, crate::obs::JournalKind)> {
         self.sched.take_obs_events()
+    }
+
+    /// Drain the scheduler's decision-provenance records — variant
+    /// choices, NoFit root causes, preemption rankings, defrag verdicts
+    /// — recorded while `[obs].provenance` armed them (always empty
+    /// otherwise).  The `EXPLAIN` wire source.
+    pub fn take_decisions(&mut self) -> Vec<crate::obs::Decision> {
+        self.sched.take_decisions()
     }
 
     /// Point-in-time fragmentation reading of the fabric.

@@ -50,7 +50,8 @@ use crate::error::{Error, Result};
 
 use super::frame;
 use super::server::{
-    admit, defrag_reply, metrics_reply, parse_submit, stats_reply, ReplySink, Shared,
+    admit, defrag_reply, dump_reply, explain_reply, metrics_reply, parse_submit, stats_reply,
+    ReplySink, Shared, WATCH_DRAIN_MAX,
 };
 
 /// Hard cap on concurrently open connections (slab slots).
@@ -428,6 +429,10 @@ struct Conn {
     close_after_flush: bool,
     /// Whether the poller registration currently includes writability.
     want_write: bool,
+    /// Live `WATCH` subscription: `(hub token, req_id of the WATCH
+    /// request)`.  While set, published journal events are pushed as
+    /// `EVENT` replies and the next complete request ends the stream.
+    watch: Option<(u64, u64)>,
 }
 
 impl Conn {
@@ -444,6 +449,7 @@ impl Conn {
             last_progress: Instant::now(),
             close_after_flush: false,
             want_write: false,
+            watch: None,
         }
     }
 
@@ -563,16 +569,26 @@ fn parse_and_dispatch(ctx: &Ctx<'_>, conn: &mut Conn, idx: usize) {
                         }
                     };
                     off += pos + 1;
-                    dispatch_text(ctx, conn, idx, &line);
+                    if conn.watch.is_some() {
+                        // any complete request on a watching connection
+                        // ends the stream; the request is consumed
+                        end_watch(ctx.shared, conn);
+                    } else {
+                        dispatch_text(ctx, conn, idx, &line);
+                    }
                 }
             },
             Proto::Binary => match frame::decode(buf) {
                 Ok(None) => break,
                 Ok(Some((f, consumed))) => {
-                    let req_id = f.req_id;
-                    let action = frame_action(ctx, &f);
                     off += consumed;
-                    apply_action(ctx, conn, idx, req_id, action);
+                    if conn.watch.is_some() {
+                        end_watch(ctx.shared, conn);
+                    } else {
+                        let req_id = f.req_id;
+                        let action = frame_action(ctx, &f);
+                        apply_action(ctx, conn, idx, req_id, action);
+                    }
                 }
                 Err(e) => {
                     conn.push_reply(0, format!("ERR bad frame: {e}"), true);
@@ -596,6 +612,33 @@ enum FrameAction {
     Immediate { line: String, close: bool },
     Submit(super::server::ParsedSubmit),
     Defrag,
+    Watch,
+}
+
+/// Begin a `WATCH` subscription on this connection (both encodings).
+fn begin_watch(shared: &Shared, conn: &mut Conn, req_id: u64) {
+    match &shared.obs {
+        None => conn.push_reply(req_id, "ERR obs disabled".into(), false),
+        Some(obs) => {
+            conn.watch = Some((obs.watch.subscribe(), req_id));
+            conn.push_reply(req_id, "WATCH ok".into(), false);
+        }
+    }
+}
+
+/// End a live `WATCH`: flush any still-queued events, unsubscribe, and
+/// push the `WATCH done` trailer (echoing the subscribing request id).
+fn end_watch(shared: &Shared, conn: &mut Conn) {
+    let Some((token, req_id)) = conn.watch.take() else {
+        return;
+    };
+    if let Some(obs) = &shared.obs {
+        for ev in obs.watch.drain(token, usize::MAX) {
+            conn.push_reply(0, format!("EVENT {ev}"), false);
+        }
+        let (delivered, dropped) = obs.watch.unsubscribe(token).unwrap_or((0, 0));
+        conn.push_reply(req_id, format!("WATCH done events={delivered} dropped={dropped}"), false);
+    }
 }
 
 fn frame_action(ctx: &Ctx<'_>, f: &frame::Frame<'_>) -> FrameAction {
@@ -621,6 +664,18 @@ fn frame_action(ctx: &Ctx<'_>, f: &frame::Frame<'_>) -> FrameAction {
             },
         },
         frame::Opcode::Defrag => FrameAction::Defrag,
+        frame::Opcode::Explain => match std::str::from_utf8(f.payload) {
+            Err(_) => utf8_err(),
+            Ok(arg) => FrameAction::Immediate {
+                line: explain_reply(ctx.shared, arg.split_whitespace().next()),
+                close: false,
+            },
+        },
+        frame::Opcode::Watch => FrameAction::Watch,
+        frame::Opcode::Dump => FrameAction::Immediate {
+            line: dump_reply(ctx.shared),
+            close: false,
+        },
         frame::Opcode::Quit => FrameAction::Immediate { line: "BYE".into(), close: true },
         frame::Opcode::Shutdown => {
             ctx.shared.begin_shutdown();
@@ -638,6 +693,7 @@ fn apply_action(ctx: &Ctx<'_>, conn: &mut Conn, idx: usize, req_id: u64, action:
         FrameAction::Immediate { line, close } => conn.push_reply(req_id, line, close),
         FrameAction::Submit(p) => dispatch_submit(ctx, conn, idx, req_id, p),
         FrameAction::Defrag => dispatch_defrag(ctx, conn, idx, req_id),
+        FrameAction::Watch => begin_watch(ctx.shared, conn, req_id),
     }
 }
 
@@ -653,6 +709,9 @@ fn dispatch_text(ctx: &Ctx<'_>, conn: &mut Conn, idx: usize, line: &str) {
         }
         Some("STATS") => conn.push_reply(0, stats_reply(ctx.shared, parts.next()), false),
         Some("METRICS") => conn.push_reply(0, metrics_reply(ctx.shared), false),
+        Some("EXPLAIN") => conn.push_reply(0, explain_reply(ctx.shared, parts.next()), false),
+        Some("WATCH") => begin_watch(ctx.shared, conn, 0),
+        Some("DUMP") => conn.push_reply(0, dump_reply(ctx.shared), false),
         Some("DEFRAG") => dispatch_defrag(ctx, conn, idx, 0),
         Some("QUIT") => conn.push_reply(0, "BYE".into(), true),
         Some("SHUTDOWN") => {
@@ -772,6 +831,12 @@ pub(super) fn spawn(
     let (waker, wake_rx) =
         wake::pair().map_err(|e| Error::Runtime(format!("reactor waker: {e}")))?;
     let waker = Arc::new(waker);
+    if let Some(obs) = &shared.obs {
+        // journal publishes land on executor threads; nudge the event
+        // loop so watchers see them without waiting for the poll tick
+        let w = waker.clone();
+        obs.watch.set_notifier(Arc::new(move || w.wake()));
+    }
     let (completions_tx, completions_rx) = mpsc::channel::<Completion>();
     let (control_tx, control_rx) = mpsc::channel::<ControlMsg>();
 
@@ -904,6 +969,7 @@ impl Reactor {
                 }
             }
             self.drain_completions();
+            self.drain_watchers();
             self.maybe_sweep();
         }
     }
@@ -917,6 +983,21 @@ impl Reactor {
         // stop forwarding control-plane work so the control thread can
         // exit once its queue drains
         self.control_tx = None;
+        // end every live WATCH so the trailer flushes before the
+        // drained-connection reap sees the socket as owed-nothing
+        let mut touched = Vec::new();
+        for (idx, slot) in self.conns.iter_mut().enumerate() {
+            if let Some(conn) = slot.as_mut() {
+                if conn.watch.is_some() {
+                    end_watch(&self.shared, conn);
+                    let _ = flush(conn);
+                    touched.push(idx);
+                }
+            }
+        }
+        for idx in touched {
+            self.sync_write_interest(idx);
+        }
     }
 
     /// Close every connection matching `pred`.
@@ -1036,6 +1117,11 @@ impl Reactor {
     fn close_conn(&mut self, idx: usize) {
         if let Some(slot) = self.conns.get_mut(idx) {
             if let Some(conn) = slot.take() {
+                // release a live WATCH subscription so the hub stops
+                // queueing (and counting drops) for a dead peer
+                if let (Some((token, _)), Some(obs)) = (conn.watch, self.shared.obs.as_ref()) {
+                    let _ = obs.watch.unsubscribe(token);
+                }
                 self.poller.del(fd_of(&conn.stream));
                 self.live -= 1;
                 self.free.push(idx);
@@ -1044,8 +1130,40 @@ impl Reactor {
         }
     }
 
+    /// Push freshly-published journal events to every watching
+    /// connection (a quiet subscriber is owed nothing until the hub has
+    /// queued something for it).
+    fn drain_watchers(&mut self) {
+        let Some(obs) = self.shared.obs.as_ref() else { return };
+        if !obs.watch.has_subscribers() {
+            return;
+        }
+        let mut verdicts = Vec::new();
+        for (idx, slot) in self.conns.iter_mut().enumerate() {
+            let Some(conn) = slot.as_mut() else { continue };
+            let Some((token, _)) = conn.watch else { continue };
+            let events = obs.watch.drain(token, WATCH_DRAIN_MAX);
+            if events.is_empty() {
+                continue;
+            }
+            self.progress = true;
+            for ev in events {
+                conn.push_reply(0, format!("EVENT {ev}"), false);
+            }
+            conn.last_progress = Instant::now();
+            verdicts.push((idx, flush(conn)));
+        }
+        for (idx, v) in verdicts {
+            match v {
+                Verdict::Close => self.close_conn(idx),
+                Verdict::Keep => self.sync_write_interest(idx),
+            }
+        }
+    }
+
     /// Reap idle connections (those owed nothing whose last completed
-    /// request is older than the configured idle timeout).
+    /// request is older than the configured idle timeout).  Watching
+    /// connections are exempt: a quiet stream is still a live stream.
     fn maybe_sweep(&mut self) {
         let Some(timeout) = self.idle_timeout else { return };
         let interval = (timeout / 4).max(Duration::from_millis(10));
@@ -1054,7 +1172,9 @@ impl Reactor {
             return;
         }
         self.last_sweep = now;
-        self.reap(|c| c.drained() && now.duration_since(c.last_progress) > timeout);
+        self.reap(|c| {
+            c.watch.is_none() && c.drained() && now.duration_since(c.last_progress) > timeout
+        });
     }
 }
 

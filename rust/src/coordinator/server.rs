@@ -63,9 +63,26 @@
 //!           stream_in_cycles=<n> affinity_hits=<n> mean_slowdown=<x>
 //!           peak_slowdown=<x> corridors=<n> capacity=<n>
 //! METRICS
-//!   → METRICS lines=<n>                   (then n exposition lines:)
+//!   → METRICS lines=<n> dropped=<n>       (then n exposition lines:)
 //!   → <Prometheus-style text — serving counters always, plus the
-//!     `[obs]` metrics registry when `obs.enabled`>
+//!     `[obs]` metrics registry when `obs.enabled`; `dropped` counts
+//!     journal events lost to the ring cap>
+//! EXPLAIN <req>
+//!   → EXPLAIN req=<r> lines=<n>           (then n decision-chain lines:)
+//!   → <every journal event and provenance decision recorded for that
+//!     request seq — lifecycle stages, variant choices with rejected
+//!     alternatives, NoFit root causes, preemption rankings>
+//!   → ERR obs disabled                    (`[obs]` off)
+//! WATCH
+//!   → WATCH ok                            (then, until the client
+//!     sends any line or closes, one line per live journal event:)
+//!   → EVENT <journal line>
+//!   → WATCH done events=<n> dropped=<n>   (drops = slow-subscriber
+//!     queue overflow; the stream never blocks the serving path)
+//! DUMP
+//!   → DUMP lines=1                        (then one line:)
+//!   → <flight-recorder JSON: journal tail + provenance ring tail +
+//!     metrics exposition + `[obs]` config>
 //! DEFRAG
 //!   → DEFRAG migrated=<n> cycles=<n> frag_glb=<a>-><b> frag_arr=<a>-><b>
 //!   → ERR coordinator unavailable         (executors gone / shutting down)
@@ -100,11 +117,14 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::config::{Config, PlacementPolicyKind, QosClass, ServerModeKind};
+use crate::config::{Config, ObsConfig, PlacementPolicyKind, QosClass, ServerModeKind};
 use crate::error::{Error, Result};
 use crate::metrics::ServeCounters;
 use crate::noc::NocReport;
-use crate::obs::{Journal, JournalKind, MetricsRegistry, NO_REQ};
+use crate::obs::{
+    flight_record, Alert, Journal, JournalEvent, JournalKind, MetricsRegistry, ProvenanceRing,
+    WatchHub, Watchdog, NO_REQ,
+};
 use crate::qos::QosReport;
 use crate::tasks::AppId;
 
@@ -340,6 +360,9 @@ pub(super) struct Shared {
     /// the request-lifecycle journal they append to.  `None` keeps the
     /// serving path identical to earlier, obs-less builds.
     pub(super) obs: Option<ObsShared>,
+    /// `--dump-metrics` artifact path: flight-recorder snapshots are
+    /// written here on watchdog alerts and at shutdown.
+    dump_metrics: Option<std::path::PathBuf>,
 }
 
 /// Server-side observability state shared by executors and both fronts.
@@ -349,6 +372,59 @@ pub(super) struct ObsShared {
     /// Request-lifecycle journal, fed from served outcomes and the
     /// scheduler's migration/defrag instants.
     pub(super) journal: Mutex<Journal>,
+    /// Decision-provenance ring (`[obs].provenance`): the structured
+    /// why behind every scheduler choice, queryable via `EXPLAIN`.
+    pub(super) provenance: Option<Mutex<ProvenanceRing>>,
+    /// Live-stream hub for `WATCH` subscribers.  Always present —
+    /// publishing is a no-op without subscribers, and a full subscriber
+    /// queue drops-and-counts rather than blocking the serving path.
+    pub(super) watch: WatchHub,
+    /// SLO burn-rate / utilization / power watchdog (`[obs].watchdog`),
+    /// fed by every shard executor and polled after each batch.
+    pub(super) watchdog: Option<Mutex<Watchdog>>,
+    /// The `[obs]` config block, embedded into flight records.
+    pub(super) obs_cfg: ObsConfig,
+}
+
+impl ObsShared {
+    /// Append one event to the journal, mirroring its rendered line to
+    /// any `WATCH` subscribers first so the stream order matches the
+    /// journal order.
+    pub(super) fn stage(&self, at: u64, req: u64, shard: u32, kind: JournalKind) {
+        let ev = JournalEvent { at, req, shard, kind };
+        if self.watch.has_subscribers() {
+            self.watch.publish(&ev.to_string());
+        }
+        if let Ok(mut j) = self.journal.lock() {
+            j.push(ev);
+        }
+    }
+
+    /// Journal + count + stream one watchdog alert — the serving-front
+    /// arm of [`crate::obs::Obs::raise_alert`].
+    pub(super) fn raise_alert(&self, alert: &Alert) {
+        self.registry
+            .counter("cgra_obs_alerts_total", &[("kind", alert.kind.name())])
+            .inc();
+        self.stage(
+            alert.at,
+            NO_REQ,
+            alert.shard,
+            JournalKind::Alert { what: alert.kind.to_string() },
+        );
+    }
+
+    /// Cut one flight-recorder snapshot: journal tail + provenance ring
+    /// tail + metrics exposition + `[obs]` config, as a JSON document.
+    /// `None` only under lock poisoning.
+    pub(super) fn flight(&self, reason: &str, at: u64) -> Option<crate::util::json::Json> {
+        let journal = self.journal.lock().ok()?;
+        let prov = match &self.provenance {
+            Some(ring) => Some(ring.lock().ok()?),
+            None => None,
+        };
+        Some(flight_record(reason, at, &journal, prov.as_deref(), &self.registry, &self.obs_cfg))
+    }
 }
 
 impl Shared {
@@ -370,10 +446,54 @@ impl Shared {
             shards: (0..shard_count).map(|_| ShardGauges::new()).collect(),
             qos: Mutex::new(vec![None; shard_count]),
             noc: Mutex::new(vec![None; shard_count]),
-            obs: cfg.obs.enabled.then(|| ObsShared {
-                registry: MetricsRegistry::new(),
-                journal: Mutex::new(Journal::new(cfg.obs.journal_cap)),
+            obs: cfg.obs.enabled.then(|| {
+                let registry = MetricsRegistry::new();
+                registry.build_info();
+                ObsShared {
+                    registry,
+                    journal: Mutex::new(Journal::new(cfg.obs.journal_cap)),
+                    provenance: cfg
+                        .obs
+                        .provenance
+                        .then(|| Mutex::new(ProvenanceRing::new(cfg.obs.provenance_cap))),
+                    watch: WatchHub::new(cfg.obs.watch_queue_cap),
+                    watchdog: cfg.obs.watchdog.then(|| Mutex::new(Watchdog::new(&cfg.obs))),
+                    obs_cfg: cfg.obs.clone(),
+                }
             }),
+            dump_metrics: None,
+        }
+    }
+
+    /// Write a flight-recorder snapshot to the `--dump-metrics` path
+    /// (temp file + rename, so a reader never observes a half-written
+    /// artifact).  With `[obs]` disabled the artifact degrades to the
+    /// plain metrics exposition.  No-op without a configured path.
+    pub(super) fn dump_flight(&self, reason: &str) {
+        let Some(path) = &self.dump_metrics else {
+            return;
+        };
+        let body = match &self.obs {
+            Some(obs) => {
+                let at = self.started.elapsed().as_millis() as u64;
+                match obs.flight(reason, at) {
+                    Some(doc) => format!("{doc}\n"),
+                    None => return,
+                }
+            }
+            None => {
+                let reply = metrics_reply(self);
+                let mut body = String::new();
+                for l in reply.lines().skip(1) {
+                    body.push_str(l);
+                    body.push('\n');
+                }
+                body
+            }
+        };
+        let tmp = path.with_extension("tmp");
+        if std::fs::write(&tmp, body).is_ok() {
+            let _ = std::fs::rename(&tmp, path);
         }
     }
 
@@ -658,6 +778,11 @@ fn handle_line(
         }
         Some("STATS") => (stats_reply(shared, parts.next()), false),
         Some("METRICS") => (metrics_reply(shared), false),
+        Some("EXPLAIN") => (explain_reply(shared, parts.next()), false),
+        Some("DUMP") => (dump_reply(shared), false),
+        // both fronts stream WATCH at the socket layer when obs is on;
+        // reaching the shared dispatcher means there is nothing to watch
+        Some("WATCH") => ("ERR obs disabled".into(), false),
         Some("DEFRAG") => (defrag_reply(shared), false),
         Some("QUIT") => ("BYE".into(), true),
         Some("SHUTDOWN") => {
@@ -808,15 +933,68 @@ pub(super) fn metrics_reply(shared: &Shared) -> String {
     lines.push(format!("cgra_serve_inflight {inflight}"));
     lines.push(format!("cgra_serve_shards {}", shared.shard_count()));
     lines.push(format!("cgra_serve_migrations_total {}", shared.migrations_total()));
+    let mut dropped = 0u64;
     if let Some(obs) = &shared.obs {
+        if let Ok(j) = obs.journal.lock() {
+            dropped = j.dropped();
+        }
+        obs.registry.set_counter("cgra_obs_journal_dropped_total", &[], dropped);
+        obs.registry.set_counter(
+            "cgra_obs_watch_dropped_total",
+            &[],
+            obs.watch.dropped_total(),
+        );
         lines.extend(obs.registry.render().lines().map(str::to_string));
     }
-    let mut out = format!("METRICS lines={}", lines.len());
+    let mut out = format!("METRICS lines={} dropped={dropped}", lines.len());
     for l in &lines {
         out.push('\n');
         out.push_str(l);
     }
     out
+}
+
+/// Render the `EXPLAIN <req>` reply: the full decision chain recorded
+/// for one request sequence number — its journal lifecycle events, then
+/// every provenance decision (variant selection with rejected
+/// alternatives, NoFit root causes, preemption victim rankings) —
+/// framed like `METRICS` (the header names how many lines follow).
+pub(super) fn explain_reply(shared: &Shared, arg: Option<&str>) -> String {
+    let Some(obs) = &shared.obs else {
+        return "ERR obs disabled".into();
+    };
+    let Some(req) = arg.and_then(|a| a.parse::<u64>().ok()) else {
+        return "ERR bad req (decimal sequence number)".into();
+    };
+    let mut lines: Vec<String> = Vec::new();
+    if let Ok(j) = obs.journal.lock() {
+        lines.extend(j.events_for(req).map(|e| e.to_string()));
+    }
+    if let Some(ring) = &obs.provenance {
+        if let Ok(r) = ring.lock() {
+            lines.extend(r.for_req(req).into_iter().map(|d| d.to_string()));
+        }
+    }
+    let mut out = format!("EXPLAIN req={req} lines={}", lines.len());
+    for l in &lines {
+        out.push('\n');
+        out.push_str(l);
+    }
+    out
+}
+
+/// Render the `DUMP` reply: one flight-recorder JSON document cut at
+/// the instant of the request (header line + one JSON line, so the
+/// `METRICS`-style count framing holds).
+pub(super) fn dump_reply(shared: &Shared) -> String {
+    let Some(obs) = &shared.obs else {
+        return "ERR obs disabled".into();
+    };
+    let at = shared.started.elapsed().as_millis() as u64;
+    match obs.flight("verb:DUMP", at) {
+        Some(doc) => format!("DUMP lines=1\n{doc}"),
+        None => "ERR flight recorder unavailable".into(),
+    }
 }
 
 /// Run the `DEFRAG` wire command: broadcast a compaction pass to every
@@ -990,10 +1168,8 @@ fn collect_batch(shared: &Shared, pending: PendingBatch) {
 /// the completion instant) — the serving-path arm of the journal the
 /// sim drivers feed through [`crate::obs::Obs::observe`].
 fn record_outcomes(obs: &ObsShared, shard: u32, outcomes: &[Option<ServeOutcome>]) {
-    if let Ok(mut j) = obs.journal.lock() {
-        for o in outcomes.iter().flatten() {
-            j.stage(o.tat_cycles, o.seq, shard, JournalKind::Completed { tenant: o.tenant.0 });
-        }
+    for o in outcomes.iter().flatten() {
+        obs.stage(o.tat_cycles, o.seq, shard, JournalKind::Completed { tenant: o.tenant.0 });
     }
 }
 
@@ -1080,20 +1256,120 @@ fn run_executor(
                 );
                 let (joules, watts, throttled) = leader.energy_snapshot();
                 shared.record_energy(shard, joules, watts, throttled);
-                shared.record_qos(shard, leader.qos_report());
-                shared.record_noc(shard, leader.noc_report());
+                let qos_report = leader.qos_report();
                 if let Some(obs) = &shared.obs {
                     let sl = shard.to_string();
                     obs.registry.counter("cgra_serve_batches_total", &[("shard", &sl)]).inc();
                     leader.scheduler().export_metrics(&obs.registry, Some(shard as u32));
-                    if let Ok(mut j) = obs.journal.lock() {
-                        for (at, kind) in leader.take_obs_events() {
-                            j.stage(at, NO_REQ, shard as u32, kind);
+                    for (at, kind) in leader.take_obs_events() {
+                        obs.stage(at, NO_REQ, shard as u32, kind);
+                    }
+                    if let Some(ring) = &obs.provenance {
+                        let taken = leader.take_decisions();
+                        if !taken.is_empty() {
+                            if let Ok(mut r) = ring.lock() {
+                                for mut d in taken {
+                                    d.shard = shard as u32;
+                                    r.push(d);
+                                }
+                            }
+                        }
+                    }
+                    if let Some(wd) = &obs.watchdog {
+                        let alerts = match wd.lock() {
+                            Ok(mut w) => {
+                                for row in &qos_report.per_class {
+                                    w.absorb_cumulative(row.class, row.deadlined, row.missed);
+                                }
+                                let (_, ua) = leader.scheduler().regions().utilization();
+                                w.sample_util(shard as u32, ua);
+                                if watts > 0.0 {
+                                    w.sample_power(shard as u32, watts);
+                                }
+                                w.poll(shared.started.elapsed().as_millis() as u64)
+                            }
+                            Err(_) => Vec::new(),
+                        };
+                        for a in &alerts {
+                            obs.raise_alert(a);
+                        }
+                        if !alerts.is_empty() {
+                            shared.dump_flight("alert");
                         }
                     }
                 }
+                shared.record_qos(shard, qos_report);
+                shared.record_noc(shard, leader.noc_report());
                 let _ = resp.send(result);
             }
+        }
+    }
+}
+
+/// Per-iteration drain cap while streaming a `WATCH` subscription.
+pub(super) const WATCH_DRAIN_MAX: usize = 256;
+
+/// Stream journal events to a `WATCH` subscriber on the threaded front:
+/// `WATCH ok`, then one `EVENT <journal line>` per published event,
+/// until the client sends any line (which ends the watch and is
+/// consumed, not executed), the peer closes, or the server stops — then
+/// `WATCH done events=<delivered> dropped=<dropped>`.  Returns whether
+/// the connection should close (peer gone).
+fn serve_watch(
+    shared: &Shared,
+    obs: &ObsShared,
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+) -> std::io::Result<bool> {
+    let token = obs.watch.subscribe();
+    let res = watch_loop(shared, obs, token, writer, reader, line);
+    let (delivered, dropped) = obs.watch.unsubscribe(token).unwrap_or((0, 0));
+    match res {
+        // peer closed mid-watch: no one is listening for the trailer
+        Ok(true) => Ok(true),
+        Ok(false) => {
+            writer.write_all(
+                format!("WATCH done events={delivered} dropped={dropped}\n").as_bytes(),
+            )?;
+            Ok(false)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Inner loop of [`serve_watch`]; returns whether the peer closed.  The
+/// connection's existing 100 ms read timeout doubles as the poll tick.
+fn watch_loop(
+    shared: &Shared,
+    obs: &ObsShared,
+    token: u64,
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+) -> std::io::Result<bool> {
+    writer.write_all(b"WATCH ok\n")?;
+    loop {
+        for ev in obs.watch.drain(token, WATCH_DRAIN_MAX) {
+            writer.write_all(format!("EVENT {ev}\n").as_bytes())?;
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return Ok(false);
+        }
+        match reader.read_line(line) {
+            Ok(0) => return Ok(true),
+            Ok(_) => {
+                line.clear();
+                // deliver anything already queued before the trailer
+                for ev in obs.watch.drain(token, WATCH_DRAIN_MAX) {
+                    writer.write_all(format!("EVENT {ev}\n").as_bytes())?;
+                }
+                return Ok(false);
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e),
         }
     }
 }
@@ -1112,6 +1388,20 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
         match reader.read_line(&mut line) {
             Ok(0) => break, // client closed
             Ok(_) => {
+                let is_watch = line
+                    .split_whitespace()
+                    .next()
+                    .is_some_and(|t| t.eq_ignore_ascii_case("WATCH"));
+                if is_watch {
+                    if let Some(obs) = &shared.obs {
+                        line.clear();
+                        if serve_watch(shared, obs, &mut writer, &mut reader, &mut line)? {
+                            break;
+                        }
+                        continue;
+                    }
+                    // obs off: fall through to the dispatcher's ERR
+                }
                 let (reply, close) = handle_line(shared, &reply_tx, &reply_rx, line.trim_end());
                 line.clear();
                 writer.write_all(reply.as_bytes())?;
@@ -1154,12 +1444,26 @@ impl Server {
     /// socket-facing front `server.mode` selects (the thread-per-
     /// connection accept loop, or the nonblocking reactor).
     pub fn start(cfg: &Config, bind: &str) -> Result<Server> {
+        Server::start_with_dump(cfg, bind, None)
+    }
+
+    /// [`Server::start`] plus a `--dump-metrics` artifact path: the
+    /// server writes a flight-recorder snapshot there whenever the
+    /// watchdog raises an alert and again at shutdown (atomically, via
+    /// temp file + rename; last write wins).
+    pub fn start_with_dump(
+        cfg: &Config,
+        bind: &str,
+        dump_metrics: Option<std::path::PathBuf>,
+    ) -> Result<Server> {
         let listener =
             TcpListener::bind(bind).map_err(|e| Error::io(bind.to_string(), e))?;
         let addr = listener.local_addr().map_err(|e| Error::io(bind.to_string(), e))?;
         listener.set_nonblocking(true).map_err(|e| Error::io(bind.to_string(), e))?;
 
-        let shared = Arc::new(Shared::from_config(cfg));
+        let mut inner = Shared::from_config(cfg);
+        inner.dump_metrics = dump_metrics;
+        let shared = Arc::new(inner);
 
         // Shard leader executors: each owns one fabric + runtime; all
         // draw request seqs from this shared counter so completions
@@ -1328,8 +1632,17 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // `drain` leaves the vec empty, so the Drop-after-shutdown
+        // second call skips the dump instead of rewriting it
+        let had_executors = !self.executors.is_empty();
         for e in self.executors.drain(..) {
             let _ = e.join();
+        }
+        if had_executors {
+            // final-state artifact, after every executor exported its
+            // last batch (alert-time snapshots were already written;
+            // the shutdown record supersedes them with the full journal)
+            self.shared.dump_flight("shutdown");
         }
     }
 }
@@ -1702,6 +2015,156 @@ mod tests {
         // post-shutdown SUBMITs are refused with BUSY
         let (reply, _) = line(&shared, "SUBMIT 0 harris");
         assert!(reply.starts_with("BUSY"), "{reply}");
+    }
+
+    fn test_shared_obs() -> Shared {
+        let mut cfg = crate::config::presets::paper_default();
+        cfg.obs.enabled = true;
+        cfg.obs.provenance = true;
+        Shared::from_config(&cfg)
+    }
+
+    #[test]
+    fn obs_verbs_error_while_obs_disabled() {
+        let shared = test_shared(4);
+        assert_eq!(line(&shared, "EXPLAIN 0").0, "ERR obs disabled");
+        assert_eq!(line(&shared, "DUMP").0, "ERR obs disabled");
+        assert_eq!(line(&shared, "WATCH").0, "ERR obs disabled");
+    }
+
+    #[test]
+    fn explain_renders_the_request_decision_chain() {
+        let shared = test_shared_obs();
+        let obs = shared.obs.as_ref().unwrap();
+        obs.stage(10, 3, 0, JournalKind::Completed { tenant: 1 });
+        if let Some(ring) = &obs.provenance {
+            let d = crate::obs::Decision::new(
+                8,
+                3,
+                crate::obs::DecisionKind::NoFit { task: "harris".into(), alts: vec![] },
+            );
+            ring.lock().unwrap().push(d);
+        }
+        let (reply, close) = line(&shared, "EXPLAIN 3");
+        assert!(!close);
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines[0], "EXPLAIN req=3 lines=2", "{reply}");
+        assert!(lines[1].contains("req=3"), "{reply}");
+        assert!(lines[1].contains("completed"), "{reply}");
+        assert!(lines[2].contains("nofit"), "{reply}");
+        // an unknown request is an empty chain, not an error
+        assert_eq!(line(&shared, "EXPLAIN 99").0, "EXPLAIN req=99 lines=0");
+        assert!(line(&shared, "EXPLAIN x").0.starts_with("ERR bad req"));
+        assert!(line(&shared, "EXPLAIN").0.starts_with("ERR bad req"));
+    }
+
+    #[test]
+    fn dump_reply_is_a_valid_flight_record() {
+        let shared = test_shared_obs();
+        shared.obs.as_ref().unwrap().stage(5, 1, 0, JournalKind::Completed { tenant: 2 });
+        let (reply, close) = line(&shared, "DUMP");
+        assert!(!close);
+        let mut it = reply.lines();
+        assert_eq!(it.next().unwrap(), "DUMP lines=1");
+        let doc = crate::util::json::Json::parse(it.next().unwrap()).unwrap();
+        let summary = crate::obs::validate_flight_record(&doc).unwrap();
+        assert_eq!(summary.reason, "verb:DUMP");
+        assert_eq!(summary.journal_events, 1);
+    }
+
+    #[test]
+    fn metrics_header_counts_journal_drops() {
+        let mut cfg = crate::config::presets::paper_default();
+        cfg.obs.enabled = true;
+        cfg.obs.journal_cap = 2;
+        let shared = Shared::from_config(&cfg);
+        let obs = shared.obs.as_ref().unwrap();
+        for i in 0..5u64 {
+            obs.stage(i, i, 0, JournalKind::Completed { tenant: 0 });
+        }
+        let (reply, _) = line(&shared, "METRICS");
+        let header = reply.lines().next().unwrap().to_string();
+        assert!(header.ends_with("dropped=3"), "{header}");
+        assert!(reply.contains("cgra_obs_journal_dropped_total 3"), "{reply}");
+        assert!(reply.contains("cgra_obs_watch_dropped_total 0"), "{reply}");
+        // the header's count still names the exposition length exactly
+        let n: usize = header
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("lines="))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(reply.lines().count(), 1 + n, "{reply}");
+        // obs off: the field is present and zero
+        let off = test_shared(4);
+        let (reply, _) = line(&off, "METRICS");
+        assert!(reply.lines().next().unwrap().ends_with("dropped=0"), "{reply}");
+    }
+
+    #[test]
+    fn staged_events_mirror_to_watch_subscribers() {
+        let shared = test_shared_obs();
+        let obs = shared.obs.as_ref().unwrap();
+        // no subscriber: publishing is skipped, the journal still grows
+        obs.stage(1, 7, 0, JournalKind::Completed { tenant: 0 });
+        assert_eq!(obs.watch.published_total(), 0);
+        let token = obs.watch.subscribe();
+        obs.stage(2, 8, 0, JournalKind::Completed { tenant: 1 });
+        let got = obs.watch.drain(token, 16);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].contains("req=8"), "{got:?}");
+        assert_eq!(obs.journal.lock().unwrap().len(), 2);
+        assert_eq!(obs.watch.unsubscribe(token), Some((1, 0)));
+    }
+
+    #[test]
+    fn raised_alerts_reach_journal_registry_and_stream() {
+        let shared = test_shared_obs();
+        let obs = shared.obs.as_ref().unwrap();
+        let token = obs.watch.subscribe();
+        let alert = Alert {
+            at: 40,
+            shard: 1,
+            kind: crate::obs::AlertKind::UtilAnomaly { value: 0.9, mean: 0.2, sigma: 4.0 },
+        };
+        obs.raise_alert(&alert);
+        let streamed = obs.watch.drain(token, 8);
+        assert_eq!(streamed.len(), 1, "{streamed:?}");
+        assert!(streamed[0].contains("alert"), "{streamed:?}");
+        assert!(streamed[0].contains("util-anomaly"), "{streamed:?}");
+        obs.watch.unsubscribe(token);
+        let (reply, _) = line(&shared, "METRICS");
+        assert!(
+            reply.contains("cgra_obs_alerts_total{kind=\"util-anomaly\"} 1"),
+            "{reply}"
+        );
+    }
+
+    #[test]
+    fn dump_flight_writes_an_atomic_artifact() {
+        let dir = std::env::temp_dir().join(format!(
+            "cgra-dump-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flight.json");
+        let mut shared = test_shared_obs();
+        shared.dump_metrics = Some(path.clone());
+        shared.obs.as_ref().unwrap().stage(3, 0, 0, JournalKind::Completed { tenant: 0 });
+        shared.dump_flight("alert");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let summary = crate::obs::validate_flight_record(&doc).unwrap();
+        assert_eq!(summary.reason, "alert");
+        assert_eq!(summary.journal_events, 1);
+        // obs disabled: degrades to the plain exposition
+        let mut plain = test_shared(4);
+        plain.dump_metrics = Some(path.clone());
+        plain.dump_flight("shutdown");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("cgra_serve_served_total"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// End-to-end over a real socket on the stub runtime backend (the

@@ -11,7 +11,7 @@ use crate::config::QosClass;
 use crate::metrics::FragmentationGauge;
 use crate::migration::{MigrationReport, MigrationStats};
 use crate::noc::NocReport;
-use crate::obs::{JournalKind, MetricsRegistry};
+use crate::obs::{Decision, DecisionKind, JournalKind, MetricsRegistry, ShardScore};
 use crate::qos::{PreemptionRecord, QosStats};
 use crate::regions::RegionId;
 use crate::scheduler::{CompletionOutcome, Launch, RequestQueue, Scheduler};
@@ -108,6 +108,12 @@ pub struct FabricPool {
     /// Memoized per-app minimal placement demand (componentwise max of
     /// the smallest variant over the app's task graph).
     min_demand: BTreeMap<AppId, SliceDemand>,
+    /// Pool-level placement decisions awaiting a
+    /// [`FabricPool::take_decisions`] drain; never populated unless
+    /// `prov_armed` ([`crate::obs::provenance`]).
+    prov_log: Vec<Decision>,
+    /// Whether decision provenance is armed (mirrors the shards).
+    prov_armed: bool,
 }
 
 impl FabricPool {
@@ -164,6 +170,8 @@ impl FabricPool {
             placed: BTreeMap::new(),
             stats: PoolStats::default(),
             min_demand,
+            prov_log: Vec::new(),
+            prov_armed: false,
         })
     }
 
@@ -347,6 +355,19 @@ impl FabricPool {
             .unwrap_or_else(|| SliceDemand::new(0, 0));
         if self.window > 0 && self.shards.iter().all(|s| s.open >= self.window) {
             self.stats.busy_rejections += 1;
+            if self.prov_armed {
+                let shards = score_loads(&self.loads(&demand, req.class, now));
+                self.prov_log.push(Decision::new(
+                    now,
+                    req.seq,
+                    DecisionKind::Placement {
+                        tenant: req.tenant,
+                        chosen: None,
+                        rescued: None,
+                        shards,
+                    },
+                ));
+            }
             return None;
         }
         let mut loads = self.loads(&demand, req.class, now);
@@ -382,6 +403,20 @@ impl FabricPool {
         let tenant = req.tenant;
         let class = req.class;
         let shard = rescued_to.unwrap_or_else(|| self.router.place(tenant, class, &loads));
+        if self.prov_armed {
+            let mut d = Decision::new(
+                now,
+                seq,
+                DecisionKind::Placement {
+                    tenant,
+                    chosen: Some(shard.0),
+                    rescued: rescued_to.map(|s| s.0),
+                    shards: score_loads(&loads),
+                },
+            );
+            d.shard = shard.0;
+            self.prov_log.push(d);
+        }
         let s = &mut self.shards[shard.0 as usize];
         s.queue.submit(req);
         s.open += 1;
@@ -502,6 +537,31 @@ impl FabricPool {
         out
     }
 
+    /// Arm (or disarm) decision-provenance collection pool-wide: the
+    /// router's placement choices plus every shard scheduler's choice
+    /// points ([`Scheduler::set_provenance`]).
+    pub fn set_provenance(&mut self, armed: bool) {
+        self.prov_armed = armed;
+        for s in &mut self.shards {
+            s.sched.set_provenance(armed);
+        }
+    }
+
+    /// Drain the pool's placement decisions plus every shard's
+    /// scheduler decisions since the last call, shard-stamped
+    /// (placements first, then shards in ascending order).  Always
+    /// empty while disarmed.
+    pub fn take_decisions(&mut self) -> Vec<Decision> {
+        let mut out = std::mem::take(&mut self.prov_log);
+        for s in &mut self.shards {
+            for mut d in s.sched.take_decisions() {
+                d.shard = s.id.0;
+                out.push(d);
+            }
+        }
+        out
+    }
+
     /// Export every shard's cumulative subsystem counters into an
     /// observability registry, shard-labelled
     /// ([`Scheduler::export_metrics`]).
@@ -602,6 +662,24 @@ impl FabricPool {
             })
             .map(|l| l.shard)
     }
+}
+
+/// Provenance view of the router's scoring inputs
+/// ([`crate::obs::provenance`]).
+fn score_loads(loads: &[ShardLoad]) -> Vec<ShardScore> {
+    loads
+        .iter()
+        .map(|l| ShardScore {
+            shard: l.shard.0,
+            open: l.open_requests,
+            feasible: l.feasible,
+            fits_now: l.fits_now,
+            busy: l.busy_array as f64 / l.array_slices.max(1) as f64,
+            corridor: l.corridor_pressure,
+            marginal_pj: l.marginal_pj,
+            be_runway: l.be_runway,
+        })
+        .collect()
 }
 
 /// Componentwise max, over an app's task graph, of each task's smallest
@@ -857,6 +935,54 @@ mod tests {
         assert_eq!(p.open_requests(), 0);
         assert_eq!(p.qos_stats().victims_resumed, 1);
         assert_eq!(p.busy_slices(), (0, 0), "preempt/resume conserves slices");
+    }
+
+    #[test]
+    fn provenance_tags_placement_and_shard_decisions() {
+        let mut p = pool(2, PlacementPolicyKind::LeastLoaded);
+        p.set_provenance(true);
+        p.try_submit(req(0, 2, AppId::Camera), 0).unwrap();
+        p.try_submit(req(1, 2, AppId::Camera), 0).unwrap();
+        p.schedule(0);
+        let ds = p.take_decisions();
+        let placements: Vec<_> = ds
+            .iter()
+            .filter(|d| matches!(d.kind, DecisionKind::Placement { .. }))
+            .collect();
+        assert_eq!(placements.len(), 2, "one placement decision per submit");
+        match &placements[1].kind {
+            DecisionKind::Placement { chosen, rescued, shards, .. } => {
+                assert_eq!(*chosen, Some(1), "least-loaded sends #1 to the idle shard");
+                assert_eq!(*rescued, None);
+                assert_eq!(shards.len(), 2, "every shard is scored");
+            }
+            other => panic!("unexpected kind {other:?}"),
+        }
+        // shard schedulers' variant decisions arrive shard-stamped
+        let variant_shards: std::collections::BTreeSet<u32> = ds
+            .iter()
+            .filter(|d| matches!(d.kind, DecisionKind::Variant { .. }))
+            .map(|d| d.shard)
+            .collect();
+        assert_eq!(variant_shards.len(), 2, "both shards launched: {ds:?}");
+        assert!(p.take_decisions().is_empty(), "drain empties the logs");
+    }
+
+    #[test]
+    fn provenance_records_busy_rejection_as_unplaced() {
+        let mut cfg = presets::pool_scenario(2, PlacementPolicyKind::LeastLoaded);
+        cfg.pool.admission_window = 1;
+        let mut p = FabricPool::new(&cfg, TaskLibrary::table1(), DprMode::Fast).unwrap();
+        p.set_provenance(true);
+        p.try_submit(req(0, 0, AppId::Harris), 0).unwrap();
+        p.try_submit(req(1, 1, AppId::Harris), 0).unwrap();
+        assert_eq!(p.try_submit(req(2, 2, AppId::Harris), 0), None);
+        let ds = p.take_decisions();
+        let rejected = ds.iter().find(|d| d.req == 2).expect("rejection must be recorded");
+        match &rejected.kind {
+            DecisionKind::Placement { chosen, .. } => assert_eq!(*chosen, None),
+            other => panic!("unexpected kind {other:?}"),
+        }
     }
 
     #[test]

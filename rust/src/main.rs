@@ -93,7 +93,9 @@ fn print_usage() {
            --mode M           serve-tcp front: threaded | reactor (default threaded)\n\
            --protocol P       serve-tcp wire protocol: auto | text | binary\n\
                               (binary requires --mode reactor)\n\
-           --idle-timeout-ms N  serve-tcp reactor idle-connection sweep (0 = off)"
+           --idle-timeout-ms N  serve-tcp reactor idle-connection sweep (0 = off)\n\
+           --dump-metrics F   serve-tcp: write a final flight record (obs on) or\n\
+                              metrics exposition (obs off) to F on shutdown"
     );
 }
 
@@ -414,11 +416,13 @@ fn serve_tcp(flags: &Flags) -> cgra_mte::Result<()> {
     }
     cfg.validate()?;
     let bind = flags.get("bind").unwrap_or("127.0.0.1:7070");
+    let dump = flags.get("dump-metrics").map(std::path::PathBuf::from);
     println!("compiling artifacts + binding {bind} ...");
-    let server = cgra_mte::coordinator::Server::start(&cfg, bind)?;
+    let server = cgra_mte::coordinator::Server::start_with_dump(&cfg, bind, dump)?;
     println!(
         "listening on {} — {} front ({} wire), {} workers, queue depth {} per tenant, {} fabric shard(s) ({})\n\
-         protocol: SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris> | STATS [tenant|SHARDS] | DEFRAG | QUIT | SHUTDOWN",
+         protocol: SUBMIT <tenant 0-3> <resnet18|mobilenet|camera|harris|pipeline> | STATS [tenant|SHARDS] | METRICS |\n\
+         EXPLAIN <req> | WATCH | DUMP | DEFRAG | QUIT | SHUTDOWN",
         server.addr,
         cfg.server.mode.name(),
         cfg.server.protocol.name(),

@@ -1,0 +1,222 @@
+//! Flight recorder: one-shot postmortem snapshots.
+//!
+//! On a watchdog alert or an explicit `DUMP` wire verb the serving
+//! front folds the journal tail, the decision-provenance ring, the
+//! full metrics exposition and the active `[obs]` config into a single
+//! JSON artifact.  The document is built from [`crate::util::json`]
+//! values, so it round-trips the in-tree parser byte-for-byte
+//! (sorted-key one-line rendering) — a dumped record is also the test
+//! fixture for reading one back.
+
+use std::collections::BTreeMap;
+
+use crate::config::ObsConfig;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::journal::Journal;
+use super::provenance::ProvenanceRing;
+use super::registry::MetricsRegistry;
+
+/// Format version stamped into every record.
+pub const FLIGHT_VERSION: u64 = 1;
+
+/// Events / decisions retained per section — bounds the artifact (and
+/// the framed `DUMP` reply) regardless of ring capacities.
+pub const FLIGHT_TAIL: usize = 128;
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Snapshot everything into one postmortem document.
+///
+/// `reason` is free-form provenance for why the dump happened
+/// (`"verb:DUMP"`, `"alert:slo-burn ..."`, `"shutdown"`).
+pub fn flight_record(
+    reason: &str,
+    at: u64,
+    journal: &Journal,
+    provenance: Option<&ProvenanceRing>,
+    registry: &MetricsRegistry,
+    cfg: &ObsConfig,
+) -> Json {
+    let total = journal.len();
+    let tail_skip = total.saturating_sub(FLIGHT_TAIL);
+    let events: Vec<Json> =
+        journal.events().skip(tail_skip).map(|e| Json::Str(e.to_string())).collect();
+    let journal_doc = obj(vec![
+        ("digest", Json::Str(format!("{:016x}", journal.digest()))),
+        ("dropped", num(journal.dropped())),
+        ("retained", num(total as u64)),
+        ("events", Json::Arr(events)),
+    ]);
+    let metrics: Vec<Json> =
+        registry.render().lines().map(|l| Json::Str(l.to_string())).collect();
+    let config_doc = obj(vec![
+        ("enabled", Json::Bool(cfg.enabled)),
+        ("journal_cap", num(cfg.journal_cap as u64)),
+        ("provenance", Json::Bool(cfg.provenance)),
+        ("provenance_cap", num(cfg.provenance_cap as u64)),
+        ("watchdog", Json::Bool(cfg.watchdog)),
+        ("slo_fast_window", num(cfg.slo_fast_window as u64)),
+        ("slo_slow_window", num(cfg.slo_slow_window as u64)),
+        ("slo_budget", Json::Num(cfg.slo_budget)),
+        ("burn_fast", Json::Num(cfg.burn_fast)),
+        ("burn_slow", Json::Num(cfg.burn_slow)),
+        ("anomaly_sigma", Json::Num(cfg.anomaly_sigma)),
+        ("watch_queue_cap", num(cfg.watch_queue_cap as u64)),
+    ]);
+    obj(vec![
+        ("flight_record", num(FLIGHT_VERSION)),
+        ("reason", Json::Str(reason.to_string())),
+        ("at", num(at)),
+        ("journal", journal_doc),
+        ("provenance", provenance.map_or(Json::Null, |r| r.to_json(FLIGHT_TAIL))),
+        ("metrics", Json::Arr(metrics)),
+        ("config", config_doc),
+    ])
+}
+
+/// Validated shape of a parsed flight record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlightSummary {
+    /// Format version ([`FLIGHT_VERSION`]).
+    pub version: u64,
+    /// Why the record was cut.
+    pub reason: String,
+    /// Cycle / timestamp of the snapshot.
+    pub at: u64,
+    /// Journal event lines retained in the record.
+    pub journal_events: usize,
+    /// Journal events dropped by the ring before the snapshot.
+    pub journal_dropped: u64,
+    /// Provenance decision lines retained (0 when provenance was off).
+    pub decisions: usize,
+    /// Metric exposition lines.
+    pub metric_lines: usize,
+}
+
+/// Parse-and-validate a flight record document (the bench smoke leg
+/// and the round-trip tests load dumps back through this).
+pub fn validate_flight_record(doc: &Json) -> Result<FlightSummary> {
+    let version = doc.req_u64("flight_record")?;
+    if version != FLIGHT_VERSION {
+        return Err(Error::parse(
+            "$.flight_record",
+            format!("unsupported version {version} (expected {FLIGHT_VERSION})"),
+        ));
+    }
+    let journal = doc.req("journal")?;
+    let digest = journal.req_str("digest")?;
+    if digest.len() != 16 || !digest.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(Error::parse("$.journal.digest", "expected 16 hex digits"));
+    }
+    let events = journal.req("events")?.items();
+    if events.iter().any(|e| e.as_str().is_none()) {
+        return Err(Error::parse("$.journal.events", "expected string event lines"));
+    }
+    let decisions = match doc.req("provenance")? {
+        Json::Null => 0,
+        prov => {
+            prov.req_u64("recorded")?;
+            prov.req("decisions")?.items().len()
+        }
+    };
+    let cfg = doc.req("config")?;
+    cfg.req_u64("journal_cap")?;
+    Ok(FlightSummary {
+        version,
+        reason: doc.req_str("reason")?.to_string(),
+        at: doc.req_u64("at")?,
+        journal_events: events.len(),
+        journal_dropped: journal.req_u64("dropped")?,
+        decisions,
+        metric_lines: doc.req("metrics")?.items().len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::journal::JournalKind;
+    use crate::obs::provenance::{Decision, DecisionKind};
+
+    fn sample_record() -> Json {
+        let mut j = Journal::new(256);
+        j.stage(10, 1, 0, JournalKind::Queued);
+        j.stage(20, 1, 0, JournalKind::Completed { tenant: 3 });
+        j.stage(25, super::super::NO_REQ, 0, JournalKind::Alert { what: "slo-burn test".into() });
+        let mut ring = ProvenanceRing::new(64);
+        ring.push(Decision::new(
+            12,
+            1,
+            DecisionKind::Variant {
+                task: "conv".into(),
+                chosen: 'a',
+                replicas: 1,
+                score: 2.0,
+                resumed: false,
+                alts: vec![],
+            },
+        ));
+        let reg = MetricsRegistry::new();
+        reg.build_info();
+        reg.counter("cgra_flight_test_total", &[]).add(7);
+        flight_record("verb:DUMP", 25, &j, Some(&ring), &reg, &ObsConfig::default())
+    }
+
+    #[test]
+    fn record_round_trips_the_in_tree_parser() {
+        let doc = sample_record();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("flight record must parse");
+        assert_eq!(parsed, doc, "display/parse round-trip must be lossless");
+        let s = validate_flight_record(&parsed).expect("valid record");
+        assert_eq!(s.version, FLIGHT_VERSION);
+        assert_eq!(s.reason, "verb:DUMP");
+        assert_eq!(s.at, 25);
+        assert_eq!(s.journal_events, 3);
+        assert_eq!(s.decisions, 1);
+        assert!(s.metric_lines >= 3, "build info + counter series: {}", s.metric_lines);
+    }
+
+    #[test]
+    fn journal_tail_is_bounded() {
+        let mut j = Journal::new(4096);
+        for i in 0..(FLIGHT_TAIL as u64 + 50) {
+            j.stage(i, i, 0, JournalKind::Queued);
+        }
+        let doc = flight_record("t", 0, &j, None, &MetricsRegistry::new(), &ObsConfig::default());
+        let s = validate_flight_record(&doc).unwrap();
+        assert_eq!(s.journal_events, FLIGHT_TAIL, "tail must cap the artifact");
+        assert_eq!(s.decisions, 0, "provenance-off dumps validate too");
+        // the tail keeps the *newest* events
+        let first = doc.req("journal").unwrap().req("events").unwrap().items()[0]
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert!(first.starts_with("at=50 "), "{first}");
+    }
+
+    #[test]
+    fn validation_rejects_malformed_records() {
+        let doc = sample_record();
+        let mut m = match doc.clone() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("flight_record".into(), Json::Num(99.0));
+        assert!(validate_flight_record(&Json::Obj(m)).is_err(), "wrong version");
+        let mut m = match doc {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("journal");
+        assert!(validate_flight_record(&Json::Obj(m)).is_err(), "missing journal");
+    }
+}

@@ -12,6 +12,7 @@
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
+use std::fmt;
 
 use super::event::SimEvent;
 
@@ -52,6 +53,9 @@ pub enum JournalKind {
     Defrag { migrated: u64, cycles: u64 },
     /// Live migration moved a task between regions.
     Migrated { task: String, from: u64, to: u64, cycles: u64 },
+    /// Watchdog alert (fabric-level instant; `what` is the rendered
+    /// [`crate::obs::watchdog::AlertKind`]).
+    Alert { what: String },
 }
 
 impl JournalKind {
@@ -72,6 +76,7 @@ impl JournalKind {
             JournalKind::FrameRejected { .. } => 13,
             JournalKind::Defrag { .. } => 14,
             JournalKind::Migrated { .. } => 15,
+            JournalKind::Alert { .. } => 16,
         }
     }
 
@@ -93,6 +98,7 @@ impl JournalKind {
             JournalKind::FrameRejected { .. } => "frame-rejected",
             JournalKind::Defrag { .. } => "defrag",
             JournalKind::Migrated { .. } => "migrated",
+            JournalKind::Alert { .. } => "alert",
         }
     }
 }
@@ -108,6 +114,50 @@ pub struct JournalEvent {
     pub shard: u32,
     /// Stage transition payload.
     pub kind: JournalKind,
+}
+
+impl fmt::Display for JournalEvent {
+    /// Deterministic one-line rendering shared by `EXPLAIN` replies,
+    /// `WATCH` event streaming, and the flight recorder.  Grammar:
+    /// `at=<cycle> shard=<s> req=<id|-> <stage> [payload fields]`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "at={} shard={} req=", self.at, self.shard)?;
+        if self.req == NO_REQ {
+            write!(f, "-")?;
+        } else {
+            write!(f, "{}", self.req)?;
+        }
+        write!(f, " {}", self.kind.stage_name())?;
+        match &self.kind {
+            JournalKind::Submitted { tenant, app } => write!(f, " tenant={tenant} app={app}"),
+            JournalKind::Admitted | JournalKind::Queued | JournalKind::Rejected => Ok(()),
+            JournalKind::Placed { task, region } => write!(f, " task={task} region={region}"),
+            JournalKind::Reconfiguring { region, cycles, cache_hit } => {
+                write!(f, " region={region} cycles={cycles} cache_hit={cache_hit}")
+            }
+            JournalKind::Executing { region, cycles } => {
+                write!(f, " region={region} cycles={cycles}")
+            }
+            JournalKind::Preempted { region, remaining, ckpt } => {
+                write!(f, " region={region} remaining={remaining} ckpt={ckpt}")
+            }
+            JournalKind::Resumed { region } => write!(f, " region={region}"),
+            JournalKind::Completed { tenant } => write!(f, " tenant={tenant}"),
+            JournalKind::FrameStart { k } | JournalKind::FrameRejected { k } => {
+                write!(f, " k={k}")
+            }
+            JournalKind::FrameDone { k, total, reconfig } => {
+                write!(f, " k={k} total={total} reconfig={reconfig}")
+            }
+            JournalKind::Defrag { migrated, cycles } => {
+                write!(f, " migrated={migrated} cycles={cycles}")
+            }
+            JournalKind::Migrated { task, from, to, cycles } => {
+                write!(f, " task={task} from={from} to={to} cycles={cycles}")
+            }
+            JournalKind::Alert { what } => write!(f, " {what}"),
+        }
+    }
 }
 
 /// FNV-1a 64 running hash.
@@ -300,6 +350,11 @@ impl Journal {
         self.events.iter()
     }
 
+    /// Retained events for one request id, oldest first (`EXPLAIN`).
+    pub fn events_for(&self, req: u64) -> impl Iterator<Item = &JournalEvent> {
+        self.events.iter().filter(move |e| e.req == req)
+    }
+
     /// Number of retained events.
     pub fn len(&self) -> usize {
         self.events.len()
@@ -370,6 +425,7 @@ impl Journal {
                     h.u64(*to);
                     h.u64(*cycles);
                 }
+                JournalKind::Alert { what } => h.bytes(what.as_bytes()),
             }
         }
         h.0
@@ -413,7 +469,8 @@ impl Journal {
                 JournalKind::FrameStart { .. }
                 | JournalKind::FrameDone { .. }
                 | JournalKind::FrameRejected { .. }
-                | JournalKind::Defrag { .. } => {}
+                | JournalKind::Defrag { .. }
+                | JournalKind::Alert { .. } => {}
             }
         }
         out
@@ -474,6 +531,31 @@ mod tests {
         d.stage(1, 1, 0, JournalKind::Queued);
         assert!(d.is_empty());
         assert!(!d.enabled());
+    }
+
+    #[test]
+    fn event_lines_are_deterministic() {
+        let j = sample();
+        let lines: Vec<String> = j.events().map(|e| e.to_string()).collect();
+        assert_eq!(lines[0], "at=10 shard=0 req=1 submitted tenant=2 app=Harris");
+        assert_eq!(lines[2], "at=50 shard=0 req=1 placed task=harris region=3");
+        assert_eq!(lines[3], "at=50 shard=0 req=1 reconfiguring region=3 cycles=40 cache_hit=false");
+        let alert = JournalEvent {
+            at: 99,
+            req: NO_REQ,
+            shard: 2,
+            kind: JournalKind::Alert { what: "slo-burn class=critical fast=9.00 slow=2.50".into() },
+        };
+        assert_eq!(
+            alert.to_string(),
+            "at=99 shard=2 req=- alert slo-burn class=critical fast=9.00 slow=2.50"
+        );
+        // Alert digests and filters like any fabric-level event.
+        let mut a = sample();
+        a.push(alert.clone());
+        assert_ne!(a.digest(), sample().digest());
+        assert_eq!(a.events_for(1).count(), 6);
+        assert_eq!(a.events_for(NO_REQ).count(), 1);
     }
 
     #[test]

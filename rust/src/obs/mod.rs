@@ -25,20 +25,32 @@
 //! produce equal journal digests and equal Perfetto documents.
 
 pub mod event;
+pub mod flight;
 pub mod journal;
 pub mod perfetto;
+pub mod provenance;
 pub mod registry;
+pub mod watch;
+pub mod watchdog;
 
 pub use event::SimEvent;
+pub use flight::{flight_record, validate_flight_record, FlightSummary, FLIGHT_TAIL};
 pub use journal::{Journal, JournalEvent, JournalKind, ReqSummary, NO_REQ};
+pub use provenance::{
+    AltVerdict, Decision, DecisionKind, ProvenanceRing, ShardScore, VariantAlt, VictimRank,
+};
 pub use registry::{Counter, Gauge, HistSnapshot, Histogram, MetricsRegistry};
+pub use watch::WatchHub;
+pub use watchdog::{Alert, AlertKind, Watchdog};
 
-use crate::config::Config;
+use crate::config::{Config, ObsConfig};
 use crate::sim::Trace;
 
 /// Observability context threaded through the sim drivers and serving
-/// leaders: a journal plus a shared metrics registry, with a master
-/// switch so disabled observability costs one branch per event site.
+/// leaders: a journal plus a shared metrics registry (and, when the
+/// `[obs]` knobs ask for them, the decision-provenance ring and the
+/// burn-rate watchdog), with a master switch so disabled observability
+/// costs one branch per event site.
 #[derive(Clone, Debug)]
 pub struct Obs {
     on: bool,
@@ -46,26 +58,55 @@ pub struct Obs {
     pub journal: Journal,
     /// Shared metrics registry.
     pub registry: MetricsRegistry,
+    /// Decision-provenance ring (`[obs] provenance = true`).
+    pub provenance: Option<ProvenanceRing>,
+    /// SLO burn-rate watchdog (`[obs] watchdog = true`).
+    pub watchdog: Option<Watchdog>,
 }
 
 impl Obs {
     /// Observability off: records nothing, exports nothing.
     pub fn disabled() -> Obs {
-        Obs { on: false, journal: Journal::disabled(), registry: MetricsRegistry::new() }
+        Obs {
+            on: false,
+            journal: Journal::disabled(),
+            registry: MetricsRegistry::new(),
+            provenance: None,
+            watchdog: None,
+        }
     }
 
-    /// Observability on with a journal capacity.
+    /// Observability on with a journal capacity (no provenance ring or
+    /// watchdog — the PR 9 baseline the overhead bench measures).
     pub fn enabled(journal_cap: usize) -> Obs {
-        Obs { on: true, journal: Journal::new(journal_cap), registry: MetricsRegistry::new() }
+        Obs {
+            on: true,
+            journal: Journal::new(journal_cap),
+            registry: MetricsRegistry::new(),
+            provenance: None,
+            watchdog: None,
+        }
+    }
+
+    /// Build from the `[obs]` knob set.
+    pub fn from_obs_config(ocfg: &ObsConfig) -> Obs {
+        if !ocfg.enabled {
+            return Obs::disabled();
+        }
+        let mut obs = Obs::enabled(ocfg.journal_cap);
+        obs.registry.build_info();
+        if ocfg.provenance {
+            obs.provenance = Some(ProvenanceRing::new(ocfg.provenance_cap));
+        }
+        if ocfg.watchdog {
+            obs.watchdog = Some(Watchdog::new(ocfg));
+        }
+        obs
     }
 
     /// Build from the `[obs]` config section.
     pub fn from_config(cfg: &Config) -> Obs {
-        if cfg.obs.enabled {
-            Obs::enabled(cfg.obs.journal_cap)
-        } else {
-            Obs::disabled()
-        }
+        Obs::from_obs_config(&cfg.obs)
     }
 
     /// Whether observability is recording.
@@ -74,12 +115,37 @@ impl Obs {
         self.on
     }
 
+    /// Whether decision provenance is recording.
+    #[inline]
+    pub fn provenance_on(&self) -> bool {
+        self.provenance.is_some()
+    }
+
     /// Journal a structured sim event (no-op when disabled).
     #[inline]
     pub fn observe(&mut self, at: u64, shard: u32, ev: &SimEvent) {
         if self.on {
             self.journal.observe_sim(at, shard, ev);
         }
+    }
+
+    /// Record one provenance decision (no-op without the ring).
+    #[inline]
+    pub fn record_decision(&mut self, d: Decision) {
+        if let Some(ring) = &mut self.provenance {
+            ring.push(d);
+        }
+    }
+
+    /// Journal a watchdog alert and count it in the registry.
+    pub fn raise_alert(&mut self, alert: &Alert) {
+        self.journal.stage(
+            alert.at,
+            NO_REQ,
+            alert.shard,
+            JournalKind::Alert { what: alert.kind.to_string() },
+        );
+        self.registry.counter("cgra_obs_alerts_total", &[("kind", alert.kind.name())]).inc();
     }
 }
 

@@ -19,6 +19,7 @@ use std::collections::BTreeSet;
 use crate::util::json::Json;
 
 use super::journal::{Journal, JournalKind, NO_REQ};
+use super::provenance::ProvenanceRing;
 
 /// Reserved `tid` for the per-shard fabric (admission) track; region
 /// tracks use `region + 1`.
@@ -278,6 +279,18 @@ pub fn export(journal: &Journal, mhz: u64) -> Json {
                     ]),
                 ));
             }
+            JournalKind::Alert { what } => {
+                rows.push(event(
+                    "alert",
+                    "i",
+                    us(ev.at),
+                    None,
+                    ev.shard,
+                    FABRIC_TID,
+                    Some("g"),
+                    vec![("what", Json::Str(what.clone()))],
+                ));
+            }
         }
     }
 
@@ -301,6 +314,81 @@ pub fn export(journal: &Journal, mhz: u64) -> Json {
 /// [`export`] rendered to a JSON string.
 pub fn export_string(journal: &Journal, mhz: u64) -> String {
     export(journal, mhz).to_string()
+}
+
+/// Reserved `tid` for the per-shard decision-provenance track.
+const DECISIONS_TID: u64 = 999_999;
+
+/// Export the journal plus the decision-provenance ring: the base
+/// [`export`] document extended with one instant per decision on a
+/// per-shard `decisions` track, and Chrome *flow* events (`ph:"s"` →
+/// `ph:"f"`, id = decision seq) linking each request-scoped decision
+/// to that request's first `executing` lifecycle slice — Perfetto
+/// draws the arrow from *why* to *what ran*.
+pub fn export_full(journal: &Journal, prov: Option<&ProvenanceRing>, mhz: u64) -> Json {
+    let mut doc = export(journal, mhz);
+    let Some(ring) = prov else { return doc };
+    let per_us = if mhz == 0 { 1.0 } else { mhz as f64 };
+    let us = |cycles: u64| cycles as f64 / per_us;
+
+    // First executing slice per request: flow arrows land there.
+    let mut exec_at: BTreeMap<u64, (u32, u64, u64)> = BTreeMap::new();
+    for ev in journal.events() {
+        if let JournalKind::Executing { region, .. } = &ev.kind {
+            exec_at.entry(ev.req).or_insert((ev.shard, *region, ev.at));
+        }
+    }
+
+    let mut shards: BTreeSet<u32> = BTreeSet::new();
+    let mut rows: Vec<Json> = Vec::new();
+    for d in ring.decisions() {
+        shards.insert(d.shard);
+        let mut args = vec![("line", Json::Str(d.to_string())), ("seq", num(d.seq))];
+        if d.req != NO_REQ {
+            args.insert(0, ("req", num(d.req)));
+        }
+        rows.push(event(
+            d.kind.name(),
+            "i",
+            us(d.at),
+            None,
+            d.shard,
+            DECISIONS_TID,
+            Some("t"),
+            args,
+        ));
+        if d.req == NO_REQ {
+            continue;
+        }
+        let Some(&(eshard, eregion, eat)) = exec_at.get(&d.req) else { continue };
+        let flow = |ph: &str, ts: f64, pid: u32, tid: u64| {
+            let mut pairs = vec![
+                ("name", Json::Str(format!("decision:{}", d.kind.name()))),
+                ("cat", Json::Str("provenance".to_string())),
+                ("ph", Json::Str(ph.to_string())),
+                ("id", num(d.seq)),
+                ("ts", Json::Num(ts)),
+                ("pid", num(pid as u64)),
+                ("tid", num(tid)),
+            ];
+            if ph == "f" {
+                pairs.push(("bp", Json::Str("e".to_string())));
+            }
+            obj(pairs)
+        };
+        rows.push(flow("s", us(d.at), d.shard, DECISIONS_TID));
+        rows.push(flow("f", us(eat), eshard, eregion + 1));
+    }
+
+    if let Json::Obj(m) = &mut doc {
+        if let Some(Json::Arr(events)) = m.get_mut("traceEvents") {
+            for &s in &shards {
+                events.push(meta("thread_name", s, DECISIONS_TID, "decisions"));
+            }
+            events.extend(rows);
+        }
+    }
+    doc
 }
 
 #[cfg(test)]
@@ -369,6 +457,68 @@ mod tests {
             .unwrap();
         assert_eq!(reconf["dur"], Json::Num(0.1));
         assert_eq!(reconf["ts"], Json::Num(0.04));
+    }
+
+    #[test]
+    fn export_full_links_decisions_to_slices() {
+        use crate::obs::provenance::{Decision, DecisionKind};
+        let mut j = sample_journal();
+        j.stage(480, NO_REQ, 0, JournalKind::Alert { what: "slo-burn class=critical".into() });
+        let mut ring = ProvenanceRing::new(16);
+        ring.push(Decision::new(
+            18,
+            4,
+            DecisionKind::Variant {
+                task: "harris".into(),
+                chosen: 'a',
+                replicas: 1,
+                score: 3.0,
+                resumed: false,
+                alts: vec![],
+            },
+        ));
+        ring.push(Decision::new(
+            300,
+            NO_REQ,
+            DecisionKind::Defrag {
+                task: "sum".into(),
+                ver: 'b',
+                moves: 1,
+                cost: 100,
+                gain: 400,
+                accepted: true,
+            },
+        ));
+        let doc = export_full(&j, Some(&ring), 500);
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text, "round-trip");
+        let events = doc.get("traceEvents").unwrap().items();
+        let phs: Vec<(&str, &str)> = events
+            .iter()
+            .filter_map(|e| match (e.get("name"), e.get("ph")) {
+                (Some(Json::Str(n)), Some(Json::Str(p))) => Some((n.as_str(), p.as_str())),
+                _ => None,
+            })
+            .collect();
+        assert!(phs.contains(&("variant", "i")), "decision instant: {phs:?}");
+        assert!(phs.contains(&("defrag", "i")), "fabric-scoped decision instant");
+        assert!(phs.contains(&("alert", "i")), "alert instant");
+        assert!(phs.contains(&("decision:variant", "s")), "flow start");
+        assert!(phs.contains(&("decision:variant", "f")), "flow finish");
+        // the flow finish must land on the executing slice's track/ts
+        let finish = events
+            .iter()
+            .find(|e| {
+                e.get("ph") == Some(&Json::Str("f".into()))
+                    && e.get("name") == Some(&Json::Str("decision:variant".into()))
+            })
+            .unwrap();
+        assert_eq!(finish.get("tid"), Some(&Json::Num(3.0)), "region 2 track");
+        assert_eq!(finish.get("ts"), Some(&Json::Num(0.14)), "executing at cycle 70 @500MHz");
+        // fabric-scoped decisions produce no flow pair
+        assert!(!phs.contains(&("decision:defrag", "s")));
+        // without a ring, export_full degrades to the base export
+        assert_eq!(export_full(&j, None, 500).to_string(), export(&j, 500).to_string());
     }
 
     #[test]

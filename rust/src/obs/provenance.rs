@@ -1,0 +1,551 @@
+//! Decision provenance — *why* the scheduler chose what it chose.
+//!
+//! The lifecycle [`crate::obs::Journal`] records *what* happened
+//! (submitted → placed → executing → completed); this module records
+//! the reasoning at every scheduler choice point as structured
+//! [`Decision`] records in a bounded ring:
+//!
+//! * variant selection — the chosen mapping plus every rejected
+//!   alternative with its policy score and root cause
+//!   ([`AltVerdict`]: slice NoFit, power-cap refusal, never-fits),
+//! * all-variants-NoFit events with per-alternative causes,
+//! * preemption victim ranking (candidates in eviction order, which
+//!   were evicted),
+//! * defragmentation plan accept/reject with the cost-model numbers
+//!   (migration cycles vs. rescued execution gain),
+//! * pool placement scoring per shard (feasibility, load, corridor
+//!   pressure, energy margin, best-effort runway).
+//!
+//! The ring is queryable by request id (the `EXPLAIN <req_id>` wire
+//! verb), renders to a deterministic one-line-per-decision text
+//! grammar, folds to an FNV-1a digest (the determinism regression
+//! hook, like [`crate::obs::Journal::digest`]), and exports to JSON
+//! for the flight recorder.  Overflow drops the oldest record and
+//! counts it, so truncated postmortems are detectable.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use crate::util::json::Json;
+
+use super::journal::NO_REQ;
+
+/// Why a variant alternative was not (or was) launched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AltVerdict {
+    /// This alternative was selected and launched.
+    Chosen,
+    /// Free slices exist but not contiguously (the defrag trigger).
+    NoFitSlices,
+    /// The power-cap governor refused the projected draw.
+    PowerCap,
+    /// No machine state can ever host this alternative.
+    NeverFits,
+    /// A preferred alternative was chosen first; this one was never
+    /// attempted.
+    NotTried,
+}
+
+impl AltVerdict {
+    /// Stable wire/text name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AltVerdict::Chosen => "chosen",
+            AltVerdict::NoFitSlices => "nofit-slices",
+            AltVerdict::PowerCap => "power-cap",
+            AltVerdict::NeverFits => "never-fits",
+            AltVerdict::NotTried => "not-tried",
+        }
+    }
+}
+
+/// One variant alternative the selection policy walked.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantAlt {
+    /// Variant letter.
+    pub ver: char,
+    /// Policy score (effective throughput under the active policy's
+    /// preference order).
+    pub score: f64,
+    /// Replication factor the option requested (0 = plain).
+    pub replicate: u32,
+    /// Outcome for this alternative.
+    pub verdict: AltVerdict,
+}
+
+/// One shard's placement score at admission time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardScore {
+    /// Shard id.
+    pub shard: u32,
+    /// Open requests in the shard's admission window.
+    pub open: u64,
+    /// Whether the demand can ever fit this shard.
+    pub feasible: bool,
+    /// Whether the demand fits right now (no defrag needed).
+    pub fits_now: bool,
+    /// Busy array-slice fraction.
+    pub busy: f64,
+    /// Corridor bandwidth pressure (0 when `[noc]` is off).
+    pub corridor: f64,
+    /// Marginal placement power in pJ/cycle (0 when `[energy]` is off).
+    pub marginal_pj: f64,
+    /// Longest lower-class runway in cycles (Critical placement).
+    pub be_runway: u64,
+}
+
+/// One preemption victim candidate, in eviction order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VictimRank {
+    /// Region the candidate runs on.
+    pub region: u64,
+    /// Candidate's QoS class name.
+    pub class: &'static str,
+    /// Remaining runway in cycles.
+    pub remaining: u64,
+    /// Whether the selection actually evicted it.
+    pub evicted: bool,
+}
+
+/// The reasoning payload of one decision record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DecisionKind {
+    /// A launch's variant selection: the chosen mapping plus every
+    /// alternative walked before (rejected, with cause) and after
+    /// (never attempted) it in policy preference order.
+    Variant {
+        /// Task launched.
+        task: String,
+        /// Chosen variant letter.
+        chosen: char,
+        /// Replicas granted.
+        replicas: u32,
+        /// Chosen option's policy score.
+        score: f64,
+        /// Whether this was a checkpoint resume.
+        resumed: bool,
+        /// Every alternative in preference order.
+        alts: Vec<VariantAlt>,
+    },
+    /// Every alternative failed; per-alternative root causes.
+    NoFit {
+        /// Task that could not launch.
+        task: String,
+        /// Every alternative with its failure cause.
+        alts: Vec<VariantAlt>,
+    },
+    /// Preemption victim selection for a blocked higher-class task.
+    Preempt {
+        /// The blocked preemptor's task.
+        task: String,
+        /// Candidates in eviction order with the evicted subset marked.
+        candidates: Vec<VictimRank>,
+        /// How many victims were checkpointed and evicted.
+        evicted: u32,
+    },
+    /// Defragmentation plan accept/reject with cost-model numbers.
+    Defrag {
+        /// Task the plan would rescue.
+        task: String,
+        /// Blocked variant the plan targets.
+        ver: char,
+        /// Relocation steps in the plan.
+        moves: u32,
+        /// Total migration cycles the plan costs.
+        cost: u64,
+        /// Execution cycles the rescued variant earns back.
+        gain: u64,
+        /// Whether the plan was committed.
+        accepted: bool,
+    },
+    /// Pool placement scoring across shards at admission.
+    Placement {
+        /// Submitting tenant.
+        tenant: u32,
+        /// Shard chosen (`None` = rejected BUSY).
+        chosen: Option<u32>,
+        /// Shard rescued via cross-shard defrag, if any.
+        rescued: Option<u32>,
+        /// Every shard's score.
+        shards: Vec<ShardScore>,
+    },
+}
+
+impl DecisionKind {
+    /// Stable one-word name (digest + rendering).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecisionKind::Variant { .. } => "variant",
+            DecisionKind::NoFit { .. } => "nofit",
+            DecisionKind::Preempt { .. } => "preempt",
+            DecisionKind::Defrag { .. } => "defrag",
+            DecisionKind::Placement { .. } => "placement",
+        }
+    }
+}
+
+/// One decision record: where, when, for which request, and why.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    /// Cycle the decision was made.
+    pub at: u64,
+    /// Owning request seq ([`NO_REQ`] for fabric-scoped decisions).
+    pub req: u64,
+    /// Shard the decision was made on (0 single-fabric).
+    pub shard: u32,
+    /// Monotonic decision number, assigned by the ring at push.
+    pub seq: u64,
+    /// The reasoning payload.
+    pub kind: DecisionKind,
+}
+
+impl Decision {
+    /// Build a record; the ring assigns `seq` on push.
+    pub fn new(at: u64, req: u64, kind: DecisionKind) -> Decision {
+        Decision { at, req, shard: 0, seq: 0, kind }
+    }
+}
+
+fn fmt_score(f: &mut fmt::Formatter<'_>, v: f64) -> fmt::Result {
+    // integral scores print as integers (the deterministic convention
+    // shared with the registry exposition)
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        write!(f, "{}", v as i64)
+    } else {
+        write!(f, "{v:.3}")
+    }
+}
+
+impl fmt::Display for Decision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "at={} shard={} ", self.at, self.shard)?;
+        if self.req == NO_REQ {
+            write!(f, "req=- ")?;
+        } else {
+            write!(f, "req={} ", self.req)?;
+        }
+        match &self.kind {
+            DecisionKind::Variant { task, chosen, replicas, score, resumed, alts } => {
+                write!(f, "variant task={task} chosen={chosen} repl={replicas} score=")?;
+                fmt_score(f, *score)?;
+                if *resumed {
+                    write!(f, " resumed")?;
+                }
+                write!(f, " alts=[")?;
+                for (i, a) in alts.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(f, "{}:", a.ver)?;
+                    fmt_score(f, a.score)?;
+                    write!(f, ":{}", a.verdict.name())?;
+                }
+                write!(f, "]")
+            }
+            DecisionKind::NoFit { task, alts } => {
+                write!(f, "nofit task={task} alts=[")?;
+                for (i, a) in alts.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(f, "{}:", a.ver)?;
+                    fmt_score(f, a.score)?;
+                    write!(f, ":{}", a.verdict.name())?;
+                }
+                write!(f, "]")
+            }
+            DecisionKind::Preempt { task, candidates, evicted } => {
+                write!(f, "preempt task={task} evicted={evicted} candidates=[")?;
+                for (i, c) in candidates.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(
+                        f,
+                        "r{}:{}:{}:{}",
+                        c.region,
+                        c.class,
+                        c.remaining,
+                        if c.evicted { "evicted" } else { "kept" }
+                    )?;
+                }
+                write!(f, "]")
+            }
+            DecisionKind::Defrag { task, ver, moves, cost, gain, accepted } => {
+                write!(
+                    f,
+                    "defrag task={task} ver={ver} moves={moves} cost={cost} gain={gain} {}",
+                    if *accepted { "accepted" } else { "rejected" }
+                )
+            }
+            DecisionKind::Placement { tenant, chosen, rescued, shards } => {
+                write!(f, "placement tenant={tenant} chosen=")?;
+                match chosen {
+                    Some(s) => write!(f, "{s}")?,
+                    None => write!(f, "busy")?,
+                }
+                if let Some(r) = rescued {
+                    write!(f, " rescued={r}")?;
+                }
+                write!(f, " shards=[")?;
+                for (i, s) in shards.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(
+                        f,
+                        "{}:open={}:feasible={}:fits={}:busy=",
+                        s.shard, s.open, s.feasible, s.fits_now
+                    )?;
+                    fmt_score(f, s.busy)?;
+                    if s.corridor != 0.0 {
+                        write!(f, ":corridor=")?;
+                        fmt_score(f, s.corridor)?;
+                    }
+                    if s.marginal_pj != 0.0 {
+                        write!(f, ":pj=")?;
+                        fmt_score(f, s.marginal_pj)?;
+                    }
+                    if s.be_runway != 0 {
+                        write!(f, ":runway={}", s.be_runway)?;
+                    }
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Bounded ring of decision records with drop-and-count overflow.
+#[derive(Clone, Debug, Default)]
+pub struct ProvenanceRing {
+    ring: VecDeque<Decision>,
+    cap: usize,
+    dropped: u64,
+    next_seq: u64,
+}
+
+impl ProvenanceRing {
+    /// Ring retaining the newest `cap` decisions.
+    pub fn new(cap: usize) -> ProvenanceRing {
+        ProvenanceRing { ring: VecDeque::new(), cap: cap.max(1), dropped: 0, next_seq: 0 }
+    }
+
+    /// Append a decision, assigning its monotonic seq; drops (and
+    /// counts) the oldest record when full.
+    pub fn push(&mut self, mut d: Decision) {
+        d.seq = self.next_seq;
+        self.next_seq += 1;
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(d);
+    }
+
+    /// Retained decisions, oldest first.
+    pub fn decisions(&self) -> impl Iterator<Item = &Decision> {
+        self.ring.iter()
+    }
+
+    /// Retained decisions owned by request `req`, oldest first.
+    pub fn for_req(&self, req: u64) -> Vec<&Decision> {
+        self.ring.iter().filter(|d| d.req == req).collect()
+    }
+
+    /// Retained record count.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Whether the ring holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Decisions dropped to overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total decisions ever recorded (retained + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// FNV-1a digest over the deterministic text rendering — two runs
+    /// of the same config must produce equal digests.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(&self.dropped.to_le_bytes());
+        for d in &self.ring {
+            eat(&d.seq.to_le_bytes());
+            eat(d.to_string().as_bytes());
+        }
+        h
+    }
+
+    /// Export the newest `tail` decisions (plus ring counters) as JSON
+    /// for the flight recorder.
+    pub fn to_json(&self, tail: usize) -> Json {
+        let skip = self.ring.len().saturating_sub(tail);
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("recorded".into(), Json::Num(self.recorded() as f64));
+        obj.insert("dropped".into(), Json::Num(self.dropped as f64));
+        obj.insert("digest".into(), Json::Str(format!("{:016x}", self.digest())));
+        obj.insert(
+            "decisions".into(),
+            Json::Arr(
+                self.ring
+                    .iter()
+                    .skip(skip)
+                    .map(|d| {
+                        let mut e = std::collections::BTreeMap::new();
+                        e.insert("seq".into(), Json::Num(d.seq as f64));
+                        e.insert("at".into(), Json::Num(d.at as f64));
+                        e.insert("shard".into(), Json::Num(d.shard as f64));
+                        if d.req != NO_REQ {
+                            e.insert("req".into(), Json::Num(d.req as f64));
+                        }
+                        e.insert("kind".into(), Json::Str(d.kind.name().into()));
+                        e.insert("line".into(), Json::Str(d.to_string()));
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn variant_decision(req: u64, at: u64) -> Decision {
+        Decision::new(
+            at,
+            req,
+            DecisionKind::Variant {
+                task: "harris.corner".into(),
+                chosen: 'c',
+                replicas: 1,
+                score: 4.0,
+                resumed: false,
+                alts: vec![
+                    VariantAlt {
+                        ver: 'c',
+                        score: 4.0,
+                        replicate: 0,
+                        verdict: AltVerdict::Chosen,
+                    },
+                    VariantAlt {
+                        ver: 'b',
+                        score: 2.0,
+                        replicate: 0,
+                        verdict: AltVerdict::NotTried,
+                    },
+                ],
+            },
+        )
+    }
+
+    #[test]
+    fn rendering_grammar_is_stable() {
+        let d = variant_decision(3, 120);
+        assert_eq!(
+            d.to_string(),
+            "at=120 shard=0 req=3 variant task=harris.corner chosen=c repl=1 score=4 \
+             alts=[c:4:chosen b:2:not-tried]"
+        );
+        let nf = Decision::new(
+            9,
+            NO_REQ,
+            DecisionKind::Defrag {
+                task: "camera.pipeline".into(),
+                ver: 'b',
+                moves: 2,
+                cost: 900,
+                gain: 400,
+                accepted: false,
+            },
+        );
+        assert_eq!(
+            nf.to_string(),
+            "at=9 shard=0 req=- defrag task=camera.pipeline ver=b moves=2 cost=900 gain=400 \
+             rejected"
+        );
+        let p = Decision::new(
+            5,
+            7,
+            DecisionKind::Placement {
+                tenant: 2,
+                chosen: Some(1),
+                rescued: None,
+                shards: vec![ShardScore {
+                    shard: 1,
+                    open: 3,
+                    feasible: true,
+                    fits_now: false,
+                    busy: 0.5,
+                    corridor: 0.0,
+                    marginal_pj: 0.0,
+                    be_runway: 0,
+                }],
+            },
+        );
+        assert_eq!(
+            p.to_string(),
+            "at=5 shard=0 req=7 placement tenant=2 chosen=1 \
+             shards=[1:open=3:feasible=true:fits=false:busy=0.500]"
+        );
+    }
+
+    #[test]
+    fn ring_drops_and_counts_and_queries_by_req() {
+        let mut ring = ProvenanceRing::new(2);
+        ring.push(variant_decision(1, 10));
+        ring.push(variant_decision(2, 20));
+        ring.push(variant_decision(2, 30));
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.dropped(), 1);
+        assert_eq!(ring.recorded(), 3);
+        assert_eq!(ring.for_req(1).len(), 0, "oldest record was dropped");
+        let two = ring.for_req(2);
+        assert_eq!(two.len(), 2);
+        assert!(two[0].seq < two[1].seq, "query preserves decision order");
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_content_sensitive() {
+        let mut a = ProvenanceRing::new(8);
+        let mut b = ProvenanceRing::new(8);
+        for i in 0..4 {
+            a.push(variant_decision(i, i * 10));
+            b.push(variant_decision(i, i * 10));
+        }
+        assert_eq!(a.digest(), b.digest());
+        b.push(variant_decision(9, 90));
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn json_export_bounds_the_tail() {
+        let mut ring = ProvenanceRing::new(8);
+        for i in 0..6 {
+            ring.push(variant_decision(i, i));
+        }
+        let doc = ring.to_json(2);
+        assert_eq!(doc.req("decisions").unwrap().items().len(), 2);
+        assert_eq!(doc.req_u64("recorded").unwrap(), 6);
+        // round-trips the in-tree parser
+        let back = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(back.to_string(), doc.to_string());
+    }
+}

@@ -240,6 +240,7 @@ struct Inner {
     counters: BTreeMap<SeriesKey, Arc<AtomicU64>>,
     gauges: BTreeMap<SeriesKey, Arc<AtomicU64>>,
     hists: BTreeMap<SeriesKey, Histogram>,
+    help: BTreeMap<String, String>,
 }
 
 /// A registry of named metric series.  Cloning shares the underlying
@@ -302,16 +303,36 @@ impl MetricsRegistry {
         self.gauge(name, lbls).set(v);
     }
 
-    /// Prometheus-style text exposition: `# TYPE` headers plus one line
-    /// per series, sorted by name then labels; histograms render
-    /// cumulative `_bucket{le=…}` lines (only populated boundaries),
-    /// `_sum` and `_count`.  Deterministic for deterministic inputs.
+    /// Attach a `# HELP` description to a metric name (idempotent).
+    pub fn describe(&self, name: &str, help: &str) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.help.entry(name.to_string()).or_insert_with(|| help.to_string());
+    }
+
+    /// Register the constant `cgra_build_info{version,git} 1` gauge so
+    /// scrapers can join every series onto the producing build.
+    pub fn build_info(&self) {
+        let version = env!("CARGO_PKG_VERSION");
+        let git = option_env!("GIT_HASH").unwrap_or("unknown");
+        self.describe("cgra_build_info", "build metadata of the exporting binary (constant 1)");
+        self.set_gauge("cgra_build_info", &[("version", version), ("git", git)], 1.0);
+    }
+
+    /// Prometheus-style text exposition: `# HELP` / `# TYPE` headers
+    /// plus one line per series, sorted by name then labels; histograms
+    /// render cumulative `_bucket{le=…}` lines (only populated
+    /// boundaries), `_sum` and `_count`.  Deterministic for
+    /// deterministic inputs.
     pub fn render(&self) -> String {
         let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let mut out = String::new();
         let mut last_header = String::new();
+        let help = &inner.help;
         let mut typed_header = |out: &mut String, name: &str, kind: &str| {
             if last_header != name {
+                if let Some(h) = help.get(name) {
+                    let _ = writeln!(out, "# HELP {name} {h}");
+                }
                 let _ = writeln!(out, "# TYPE {name} {kind}");
                 last_header = name.to_string();
             }
@@ -401,6 +422,32 @@ mod tests {
         reg.counter("cgra_test_total", &[("class", "critical"), ("shard", "0")]).inc();
         let relabeled = reg.counter("cgra_test_total", &[("shard", "0"), ("class", "critical")]);
         assert_eq!(relabeled.get(), 4);
+    }
+
+    #[test]
+    fn help_lines_and_build_info_render() {
+        let reg = MetricsRegistry::new();
+        reg.describe("cgra_helped_total", "a described counter");
+        reg.counter("cgra_helped_total", &[]).inc();
+        reg.counter("cgra_bare_total", &[]).inc();
+        reg.build_info();
+        let text = reg.render();
+        assert!(text.contains("# HELP cgra_helped_total a described counter\n"), "{text}");
+        assert!(text.contains("# TYPE cgra_helped_total counter"), "{text}");
+        // undescribed series still get a TYPE header, just no HELP
+        assert!(!text.contains("# HELP cgra_bare_total"), "{text}");
+        assert!(text.contains("# HELP cgra_build_info"), "{text}");
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("cgra_build_info{"))
+            .expect("build info series");
+        assert!(line.contains("version=\""), "{line}");
+        assert!(line.contains("git=\""), "{line}");
+        assert!(line.ends_with(" 1"), "{line}");
+        // HELP precedes TYPE for the same metric
+        let help_at = text.find("# HELP cgra_helped_total").unwrap();
+        let type_at = text.find("# TYPE cgra_helped_total").unwrap();
+        assert!(help_at < type_at);
     }
 
     #[test]

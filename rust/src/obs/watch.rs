@@ -1,0 +1,264 @@
+//! Live telemetry streaming hub backing the `WATCH` wire verb.
+//!
+//! Both serving fronts publish rendered journal/metric event lines
+//! into one [`WatchHub`]; each subscribed connection owns a bounded
+//! queue that the connection drains at its own pace.  A slow consumer
+//! never blocks the publisher (the shard executors or the reactor
+//! loop): when its queue is full the new event is **dropped and
+//! counted** — per subscriber and hub-wide — so backpressure shows up
+//! as a number instead of a stall.  An optional notifier hook lets the
+//! reactor wake its poll loop when fresh events arrive.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Wake-up hook invoked after events are published (reactor waker).
+pub type Notifier = Arc<dyn Fn() + Send + Sync>;
+
+struct Subscriber {
+    token: u64,
+    queue: VecDeque<String>,
+    delivered: u64,
+    dropped: u64,
+}
+
+struct HubInner {
+    subs: Vec<Subscriber>,
+    next_token: u64,
+    dropped_total: u64,
+    published_total: u64,
+    notifier: Option<Notifier>,
+}
+
+impl fmt::Debug for HubInner {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("HubInner")
+            .field("subs", &self.subs.len())
+            .field("next_token", &self.next_token)
+            .field("dropped_total", &self.dropped_total)
+            .field("published_total", &self.published_total)
+            .finish()
+    }
+}
+
+/// Shared fan-out hub with bounded per-subscriber queues.
+#[derive(Clone, Debug)]
+pub struct WatchHub {
+    inner: Arc<Mutex<HubInner>>,
+    cap: usize,
+}
+
+impl WatchHub {
+    /// Hub whose subscriber queues hold up to `queue_cap` events.
+    pub fn new(queue_cap: usize) -> WatchHub {
+        WatchHub {
+            inner: Arc::new(Mutex::new(HubInner {
+                subs: Vec::new(),
+                next_token: 1,
+                dropped_total: 0,
+                published_total: 0,
+                notifier: None,
+            })),
+            cap: queue_cap.max(1),
+        }
+    }
+
+    /// Install the publish wake-up hook (replaces any previous one).
+    pub fn set_notifier(&self, f: Notifier) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.notifier = Some(f);
+    }
+
+    /// Register a subscriber; the token addresses its queue.
+    pub fn subscribe(&self) -> u64 {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let token = inner.next_token;
+        inner.next_token += 1;
+        inner.subs.push(Subscriber {
+            token,
+            queue: VecDeque::new(),
+            delivered: 0,
+            dropped: 0,
+        });
+        token
+    }
+
+    /// Remove a subscriber; returns its `(delivered, dropped)` totals.
+    pub fn unsubscribe(&self, token: u64) -> Option<(u64, u64)> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let idx = inner.subs.iter().position(|s| s.token == token)?;
+        let s = inner.subs.swap_remove(idx);
+        Some((s.delivered, s.dropped))
+    }
+
+    /// Whether anyone is listening (publishers can skip rendering).
+    pub fn has_subscribers(&self) -> bool {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        !inner.subs.is_empty()
+    }
+
+    /// Fan one event line out to every subscriber.  Full queues drop
+    /// the new event and count it; nothing ever blocks.
+    pub fn publish(&self, line: &str) {
+        let notifier = {
+            let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            if inner.subs.is_empty() {
+                return;
+            }
+            inner.published_total += 1;
+            let cap = self.cap;
+            let mut newly_dropped = 0u64;
+            for s in &mut inner.subs {
+                if s.queue.len() >= cap {
+                    s.dropped += 1;
+                    newly_dropped += 1;
+                } else {
+                    s.queue.push_back(line.to_string());
+                }
+            }
+            inner.dropped_total += newly_dropped;
+            inner.notifier.clone()
+        };
+        if let Some(f) = notifier {
+            f();
+        }
+    }
+
+    /// Fan a batch out (one lock acquisition, one wake-up).
+    pub fn publish_all<I: IntoIterator<Item = String>>(&self, lines: I) {
+        let notifier = {
+            let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            if inner.subs.is_empty() {
+                return;
+            }
+            let cap = self.cap;
+            let mut published = 0u64;
+            let mut newly_dropped = 0u64;
+            for line in lines {
+                published += 1;
+                for s in &mut inner.subs {
+                    if s.queue.len() >= cap {
+                        s.dropped += 1;
+                        newly_dropped += 1;
+                    } else {
+                        s.queue.push_back(line.clone());
+                    }
+                }
+            }
+            inner.published_total += published;
+            inner.dropped_total += newly_dropped;
+            if published == 0 {
+                None
+            } else {
+                inner.notifier.clone()
+            }
+        };
+        if let Some(f) = notifier {
+            f();
+        }
+    }
+
+    /// Pop up to `max` queued events for `token`, oldest first.
+    pub fn drain(&self, token: u64, max: usize) -> Vec<String> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(s) = inner.subs.iter_mut().find(|s| s.token == token) else {
+            return Vec::new();
+        };
+        let n = s.queue.len().min(max);
+        let out: Vec<String> = s.queue.drain(..n).collect();
+        s.delivered += out.len() as u64;
+        out
+    }
+
+    /// Per-subscriber `(queued, delivered, dropped)` snapshot.
+    pub fn stats(&self, token: u64) -> Option<(usize, u64, u64)> {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner
+            .subs
+            .iter()
+            .find(|s| s.token == token)
+            .map(|s| (s.queue.len(), s.delivered, s.dropped))
+    }
+
+    /// Events dropped hub-wide across all subscribers.
+    pub fn dropped_total(&self) -> u64 {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.dropped_total
+    }
+
+    /// Events published while at least one subscriber was registered.
+    pub fn published_total(&self) -> u64 {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.published_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn publish_is_ordered_and_bounded() {
+        let hub = WatchHub::new(3);
+        let t = hub.subscribe();
+        for i in 0..5 {
+            hub.publish(&format!("ev{i}"));
+        }
+        // queue holds the oldest 3; the 2 overflow events were dropped
+        assert_eq!(hub.drain(t, 10), vec!["ev0", "ev1", "ev2"]);
+        assert_eq!(hub.stats(t), Some((0, 3, 2)));
+        assert_eq!(hub.dropped_total(), 2);
+        // draining frees capacity again
+        hub.publish("ev5");
+        assert_eq!(hub.drain(t, 10), vec!["ev5"]);
+        assert_eq!(hub.unsubscribe(t), Some((4, 2)));
+        assert!(!hub.has_subscribers());
+    }
+
+    #[test]
+    fn slow_subscriber_does_not_affect_fast_one() {
+        let hub = WatchHub::new(2);
+        let slow = hub.subscribe();
+        let fast = hub.subscribe();
+        for i in 0..6 {
+            hub.publish(&format!("e{i}"));
+            // fast consumer drains every event immediately
+            assert_eq!(hub.drain(fast, 10).len(), 1);
+        }
+        let (_, fast_delivered, fast_dropped) = hub.stats(fast).unwrap();
+        assert_eq!((fast_delivered, fast_dropped), (6, 0));
+        let (queued, _, slow_dropped) = hub.stats(slow).unwrap();
+        assert_eq!(queued, 2, "slow queue pinned at cap");
+        assert_eq!(slow_dropped, 4, "overflow counted, not blocked");
+    }
+
+    #[test]
+    fn publish_without_subscribers_is_free() {
+        let hub = WatchHub::new(4);
+        hub.publish("nobody listening");
+        assert_eq!(hub.published_total(), 0);
+        let t = hub.subscribe();
+        hub.publish_all(vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(hub.published_total(), 2);
+        assert_eq!(hub.drain(t, 1), vec!["a"]);
+        assert_eq!(hub.drain(t, 10), vec!["b"]);
+    }
+
+    #[test]
+    fn notifier_fires_on_publish() {
+        let hub = WatchHub::new(4);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        hub.set_notifier(Arc::new(move || {
+            h2.fetch_add(1, Ordering::SeqCst);
+        }));
+        hub.publish("no subscriber — no wake");
+        assert_eq!(hits.load(Ordering::SeqCst), 0);
+        let _t = hub.subscribe();
+        hub.publish("wake");
+        hub.publish_all(vec!["batch".to_string()]);
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+}

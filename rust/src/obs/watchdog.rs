@@ -1,0 +1,407 @@
+//! SLO burn-rate watchdog: multi-window burn rates over the per-class
+//! SLO stream plus per-shard utilization/power anomaly scoring.
+//!
+//! Burn rate is the SRE convention: the deadline-miss fraction inside
+//! a window divided by the error budget (`obs.slo_budget`), so a burn
+//! of 1.0 spends budget exactly as fast as allowed.  Two windows guard
+//! each class — a *fast* window (newest `obs.slo_fast_window`
+//! deadlined completions) that reacts quickly, and a *slow* window
+//! (`obs.slo_slow_window`) that filters blips: an [`Alert`] fires only
+//! while **both** burn above their thresholds, and latches so a
+//! sustained violation raises one alert, not one per completion.
+//!
+//! Shard anomaly scoring keeps a running mean/variance (Welford) per
+//! shard over utilization and power samples; a sample further than
+//! `obs.anomaly_sigma` standard deviations from the mean raises a
+//! typed anomaly alert (also latched per excursion).
+//!
+//! Windows are measured in *completions*, not wall cycles, so the
+//! watchdog is deterministic in both the virtual-time simulators and
+//! the serving path.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+
+use crate::config::{ObsConfig, QosClass};
+
+/// What a raised alert is about.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlertKind {
+    /// A class is burning SLO budget above threshold in both windows.
+    SloBurn {
+        /// Affected class.
+        class: QosClass,
+        /// Fast-window burn rate (budget multiples).
+        fast: f64,
+        /// Slow-window burn rate.
+        slow: f64,
+    },
+    /// A shard utilization sample left the running-mean envelope.
+    UtilAnomaly {
+        /// Sampled busy fraction.
+        value: f64,
+        /// Running mean at sample time.
+        mean: f64,
+        /// Standard-deviation distance.
+        sigma: f64,
+    },
+    /// A shard power sample left the running-mean envelope.
+    PowerAnomaly {
+        /// Sampled watts.
+        value: f64,
+        /// Running mean at sample time.
+        mean: f64,
+        /// Standard-deviation distance.
+        sigma: f64,
+    },
+}
+
+impl AlertKind {
+    /// Stable label value (registry + journal).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlertKind::SloBurn { .. } => "slo-burn",
+            AlertKind::UtilAnomaly { .. } => "util-anomaly",
+            AlertKind::PowerAnomaly { .. } => "power-anomaly",
+        }
+    }
+}
+
+/// One typed alert raised by [`Watchdog::poll`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Alert {
+    /// Cycle the alert was raised.
+    pub at: u64,
+    /// Shard the alert concerns (0 for class-wide SLO burns on a
+    /// single fabric).
+    pub shard: u32,
+    /// What fired.
+    pub kind: AlertKind,
+}
+
+impl fmt::Display for AlertKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AlertKind::SloBurn { class, fast, slow } => {
+                write!(f, "slo-burn class={} fast={:.2} slow={:.2}", class.name(), fast, slow)
+            }
+            AlertKind::UtilAnomaly { value, mean, sigma } => {
+                write!(f, "util-anomaly value={value:.3} mean={mean:.3} sigma={sigma:.1}")
+            }
+            AlertKind::PowerAnomaly { value, mean, sigma } => {
+                write!(f, "power-anomaly value={value:.3} mean={mean:.3} sigma={sigma:.1}")
+            }
+        }
+    }
+}
+
+impl fmt::Display for Alert {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "alert at={} shard={} {}", self.at, self.shard, self.kind)
+    }
+}
+
+/// Running mean/variance (Welford's online algorithm).
+#[derive(Clone, Debug, Default)]
+struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        (self.m2 / (self.n - 1) as f64).sqrt()
+    }
+}
+
+/// Samples a shard stream needs before anomaly scoring engages — a
+/// cold mean is meaningless.
+const MIN_ANOMALY_SAMPLES: u64 = 16;
+
+#[derive(Clone, Debug, Default)]
+struct ShardStream {
+    stats: Welford,
+    /// Pending excursion awaiting the next poll (value, mean, sigma).
+    pending: Option<(f64, f64, f64)>,
+    latched: bool,
+}
+
+impl ShardStream {
+    fn sample(&mut self, x: f64, threshold: f64) {
+        let dev = self.stats.stddev();
+        if self.stats.n >= MIN_ANOMALY_SAMPLES && dev > 0.0 {
+            let sigma = (x - self.stats.mean).abs() / dev;
+            if sigma > threshold {
+                if !self.latched {
+                    self.pending = Some((x, self.stats.mean, sigma));
+                    self.latched = true;
+                }
+            } else {
+                self.latched = false;
+            }
+        }
+        self.stats.push(x);
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct ShardState {
+    util: ShardStream,
+    power: ShardStream,
+}
+
+/// The burn-rate watchdog; see the module docs for semantics.
+#[derive(Clone, Debug)]
+pub struct Watchdog {
+    fast_window: usize,
+    slow_window: usize,
+    budget: f64,
+    burn_fast: f64,
+    burn_slow: f64,
+    anomaly_sigma: f64,
+    /// Per-class miss history, newest at the back (slow-window bound).
+    misses: [VecDeque<bool>; 3],
+    latched: [bool; 3],
+    /// Cumulative-counter absorption state per class: (deadlined,
+    /// missed) seen so far ([`Watchdog::absorb_cumulative`]).
+    absorbed: [(u64, u64); 3],
+    shards: BTreeMap<u32, ShardState>,
+    alerts_raised: u64,
+}
+
+impl Watchdog {
+    /// Build from the `[obs]` knobs.
+    pub fn new(cfg: &ObsConfig) -> Watchdog {
+        Watchdog {
+            fast_window: cfg.slo_fast_window.max(1),
+            slow_window: cfg.slo_slow_window.max(cfg.slo_fast_window).max(1),
+            budget: cfg.slo_budget,
+            burn_fast: cfg.burn_fast,
+            burn_slow: cfg.burn_slow,
+            anomaly_sigma: cfg.anomaly_sigma,
+            misses: std::array::from_fn(|_| VecDeque::new()),
+            latched: [false; 3],
+            absorbed: [(0, 0); 3],
+            shards: BTreeMap::new(),
+            alerts_raised: 0,
+        }
+    }
+
+    /// Record one deadlined completion (sims call this per request).
+    pub fn record_completion(&mut self, class: QosClass, missed: bool) {
+        let w = &mut self.misses[class.index()];
+        if w.len() == self.slow_window {
+            w.pop_front();
+        }
+        w.push_back(missed);
+    }
+
+    /// Absorb cumulative per-class counters (the serving path reads
+    /// lifetime `deadlined`/`missed` totals per batch): the delta since
+    /// the last call is replayed as individual completions, misses
+    /// last — ordering within one batch is unknown, and trailing the
+    /// misses keeps the fast window maximally sensitive.
+    pub fn absorb_cumulative(&mut self, class: QosClass, deadlined: u64, missed: u64) {
+        let i = class.index();
+        let (seen_d, seen_m) = self.absorbed[i];
+        let new_d = deadlined.saturating_sub(seen_d);
+        let new_m = missed.saturating_sub(seen_m).min(new_d);
+        for _ in 0..new_d - new_m {
+            self.record_completion(class, false);
+        }
+        for _ in 0..new_m {
+            self.record_completion(class, true);
+        }
+        self.absorbed[i] = (deadlined, missed);
+    }
+
+    /// Feed one shard utilization sample (busy fraction).
+    pub fn sample_util(&mut self, shard: u32, busy: f64) {
+        let th = self.anomaly_sigma;
+        self.shards.entry(shard).or_default().util.sample(busy, th);
+    }
+
+    /// Feed one shard power sample (watts).
+    pub fn sample_power(&mut self, shard: u32, watts: f64) {
+        let th = self.anomaly_sigma;
+        self.shards.entry(shard).or_default().power.sample(watts, th);
+    }
+
+    /// Burn rates (fast, slow) for a class right now.
+    pub fn burn_rates(&self, class: QosClass) -> (f64, f64) {
+        let w = &self.misses[class.index()];
+        let rate = |window: usize| -> f64 {
+            let n = w.len().min(window);
+            if n == 0 {
+                return 0.0;
+            }
+            let missed = w.iter().rev().take(n).filter(|&&m| m).count();
+            (missed as f64 / n as f64) / self.budget
+        };
+        (rate(self.fast_window), rate(self.slow_window))
+    }
+
+    /// Evaluate every condition and return the alerts that newly fired
+    /// (latched: a sustained violation alerts once per excursion).
+    pub fn poll(&mut self, at: u64) -> Vec<Alert> {
+        let mut alerts = Vec::new();
+        for class in QosClass::ALL {
+            let i = class.index();
+            // the fast window must be full before it can testify —
+            // a single early miss is not a 1.0 miss rate
+            if self.misses[i].len() < self.fast_window {
+                continue;
+            }
+            let (fast, slow) = self.burn_rates(class);
+            let firing = fast >= self.burn_fast && slow >= self.burn_slow;
+            if firing && !self.latched[i] {
+                self.latched[i] = true;
+                alerts.push(Alert { at, shard: 0, kind: AlertKind::SloBurn { class, fast, slow } });
+            } else if !firing {
+                self.latched[i] = false;
+            }
+        }
+        for (&shard, st) in self.shards.iter_mut() {
+            if let Some((value, mean, sigma)) = st.util.pending.take() {
+                alerts.push(Alert { at, shard, kind: AlertKind::UtilAnomaly { value, mean, sigma } });
+            }
+            if let Some((value, mean, sigma)) = st.power.pending.take() {
+                alerts
+                    .push(Alert { at, shard, kind: AlertKind::PowerAnomaly { value, mean, sigma } });
+            }
+        }
+        self.alerts_raised += alerts.len() as u64;
+        alerts
+    }
+
+    /// Total alerts raised over this watchdog's lifetime.
+    pub fn alerts_raised(&self) -> u64 {
+        self.alerts_raised
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ObsConfig {
+        ObsConfig {
+            enabled: true,
+            watchdog: true,
+            slo_fast_window: 4,
+            slo_slow_window: 16,
+            slo_budget: 0.1,
+            burn_fast: 5.0,
+            burn_slow: 2.0,
+            anomaly_sigma: 3.0,
+            ..ObsConfig::default()
+        }
+    }
+
+    #[test]
+    fn burn_alert_needs_both_windows_and_latches() {
+        let mut w = Watchdog::new(&cfg());
+        // 12 met completions: slow window healthy
+        for _ in 0..12 {
+            w.record_completion(QosClass::Critical, false);
+        }
+        assert!(w.poll(100).is_empty());
+        // 2 misses: fast window burns (2/4 = 0.5 → 5.0×budget) but the
+        // slow window (2/14) is only ~1.43×budget — no alert yet
+        w.record_completion(QosClass::Critical, true);
+        w.record_completion(QosClass::Critical, true);
+        assert!(w.poll(200).is_empty(), "slow window must also burn");
+        // sustained misses push the slow window over 2× budget
+        for _ in 0..4 {
+            w.record_completion(QosClass::Critical, true);
+        }
+        let alerts = w.poll(300);
+        assert_eq!(alerts.len(), 1);
+        match &alerts[0].kind {
+            AlertKind::SloBurn { class, fast, slow } => {
+                assert_eq!(*class, QosClass::Critical);
+                assert!(*fast >= 5.0 && *slow >= 2.0, "fast={fast} slow={slow}");
+            }
+            k => panic!("wrong kind {k:?}"),
+        }
+        // latched: still burning, no second alert
+        w.record_completion(QosClass::Critical, true);
+        assert!(w.poll(400).is_empty());
+        // recovery unlatches; a fresh excursion fires again
+        for _ in 0..16 {
+            w.record_completion(QosClass::Critical, false);
+        }
+        assert!(w.poll(500).is_empty());
+        for _ in 0..6 {
+            w.record_completion(QosClass::Critical, true);
+        }
+        assert_eq!(w.poll(600).len(), 1);
+        assert_eq!(w.alerts_raised(), 2);
+    }
+
+    #[test]
+    fn cumulative_absorption_matches_per_completion_feed() {
+        let mut a = Watchdog::new(&cfg());
+        let mut b = Watchdog::new(&cfg());
+        for _ in 0..10 {
+            a.record_completion(QosClass::Interactive, false);
+        }
+        for _ in 0..5 {
+            a.record_completion(QosClass::Interactive, true);
+        }
+        b.absorb_cumulative(QosClass::Interactive, 10, 0);
+        b.absorb_cumulative(QosClass::Interactive, 15, 5);
+        assert_eq!(
+            a.burn_rates(QosClass::Interactive),
+            b.burn_rates(QosClass::Interactive)
+        );
+        // counters are cumulative: replaying the same totals is a no-op
+        b.absorb_cumulative(QosClass::Interactive, 15, 5);
+        assert_eq!(
+            a.burn_rates(QosClass::Interactive),
+            b.burn_rates(QosClass::Interactive)
+        );
+    }
+
+    #[test]
+    fn anomaly_fires_on_outlier_and_latches_per_excursion() {
+        let mut w = Watchdog::new(&cfg());
+        for _ in 0..32 {
+            w.sample_util(1, 0.50);
+            w.sample_util(1, 0.52);
+        }
+        assert!(w.poll(10).is_empty(), "steady stream never alerts");
+        w.sample_util(1, 0.95);
+        let alerts = w.poll(20);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].shard, 1);
+        assert_eq!(alerts[0].kind.name(), "util-anomaly");
+        // still excursed: latched
+        w.sample_util(1, 0.96);
+        assert!(w.poll(30).is_empty());
+    }
+
+    #[test]
+    fn power_anomaly_is_typed_separately() {
+        let mut w = Watchdog::new(&cfg());
+        for i in 0..32 {
+            w.sample_power(0, 10.0 + (i % 2) as f64 * 0.2);
+        }
+        w.sample_power(0, 40.0);
+        let alerts = w.poll(50);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].kind.name(), "power-anomaly");
+        assert!(alerts[0].to_string().starts_with("alert at=50 shard=0 power-anomaly"));
+    }
+}

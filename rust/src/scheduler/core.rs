@@ -16,7 +16,9 @@ use crate::migration::{
     MigrationStats,
 };
 use crate::noc::{ContentionModel, NocReport, NocStats};
-use crate::obs::{JournalKind, MetricsRegistry};
+use crate::obs::{
+    AltVerdict, Decision, DecisionKind, JournalKind, MetricsRegistry, VariantAlt, VictimRank,
+};
 use crate::qos::{self, PreemptionRecord, QosStats, VictimCandidate};
 use crate::regions::{AllocOutcome, ExecutionRegion, RegionId, RegionManager};
 use crate::tasks::{TaskId, TaskInstanceId, TaskLibrary, VariantId};
@@ -62,6 +64,17 @@ struct Option_ {
     replicate: u32,
     /// Fall back to exclusive whole-machine allocation.
     exclusive: bool,
+}
+
+/// Provenance view of one preference-order option
+/// ([`crate::obs::provenance`]).
+fn alt_of(opt: &Option_, verdict: AltVerdict) -> VariantAlt {
+    VariantAlt {
+        ver: opt.ver.0,
+        score: opt.eff_throughput,
+        replicate: opt.replicate,
+        verdict,
+    }
 }
 
 /// What draining one queued completion event resolved to
@@ -197,6 +210,12 @@ pub struct Scheduler {
     obs_log: Vec<(u64, JournalKind)>,
     /// Whether an observability context is listening.
     obs_armed: bool,
+    /// Decision-provenance records awaiting a
+    /// [`Scheduler::take_decisions`] drain; never populated unless
+    /// `prov_armed` ([`crate::obs::provenance`]).
+    prov_log: Vec<Decision>,
+    /// Whether a decision-provenance ring is listening.
+    prov_armed: bool,
 }
 
 /// Producer-affinity table bound: requests tracked at once.  4096 open
@@ -258,6 +277,8 @@ impl Scheduler {
             affinity: BTreeMap::new(),
             obs_log: Vec::new(),
             obs_armed: false,
+            prov_log: Vec::new(),
+            prov_armed: false,
         };
         let ids: Vec<TaskId> = sched.lib.iter().map(|t| t.id.clone()).collect();
         for id in ids {
@@ -542,6 +563,20 @@ impl Scheduler {
         std::mem::take(&mut self.obs_log)
     }
 
+    /// Arm (or disarm) decision-provenance collection.  Disarmed (the
+    /// default) no choice point records anything — the same
+    /// zero-overhead guarantee as [`Scheduler::set_obs`].
+    pub fn set_provenance(&mut self, armed: bool) {
+        self.prov_armed = armed;
+    }
+
+    /// Drain the decision records (variant selection, NoFit causes,
+    /// preemption rankings, defrag accept/reject) accumulated since the
+    /// last call.  Always empty while disarmed.
+    pub fn take_decisions(&mut self) -> Vec<Decision> {
+        std::mem::take(&mut self.prov_log)
+    }
+
     /// Export cumulative subsystem counters into an observability
     /// registry (`[obs]`): DPR cache, migration/defrag engine, QoS
     /// preemptor, NoC model and energy accountant.  `shard` labels
@@ -619,6 +654,23 @@ impl Scheduler {
             .unwrap_or(0)
     }
 
+    /// Provenance: a refused / blocked resume attempt.  A checkpoint
+    /// carries exactly one saved variant, so the record is a one-alt
+    /// NoFit naming the root cause.
+    fn resume_nofit(&mut self, rt: &ReadyTask, ck: &Checkpoint, now: u64, verdict: AltVerdict) {
+        if !self.prov_armed {
+            return;
+        }
+        self.prov_log.push(Decision::new(
+            now,
+            rt.instance.request,
+            DecisionKind::NoFit {
+                task: ck.task.0.clone(),
+                alts: vec![VariantAlt { ver: ck.ver.0, score: 0.0, replicate: 0, verdict }],
+            },
+        ));
+    }
+
     /// Resume a checkpointed instance: re-allocate its saved footprint,
     /// restream its saved variant (fast-DPR; the bitstream stayed
     /// pinned), pay the GLB state copy-in, and run the remaining
@@ -630,15 +682,20 @@ impl Scheduler {
         if self.meter.enabled() {
             let projected = self.option_power(ck.demand, 0, false);
             if !self.meter.admits(&projected) {
+                self.resume_nofit(rt, ck, now, AltVerdict::PowerCap);
                 return Attempt::Impossible;
             }
         }
         let region: ExecutionRegion = match self.mgr.try_allocate(&ck.demand) {
             AllocOutcome::Allocated(r) => r,
             AllocOutcome::NoFit => {
-                return Attempt::Blocked { options: vec![(ck.ver, ck.demand)] }
+                self.resume_nofit(rt, ck, now, AltVerdict::NoFitSlices);
+                return Attempt::Blocked { options: vec![(ck.ver, ck.demand)] };
             }
-            AllocOutcome::NeverFits => return Attempt::Impossible,
+            AllocOutcome::NeverFits => {
+                self.resume_nofit(rt, ck, now, AltVerdict::NeverFits);
+                return Attempt::Impossible;
+            }
         };
         let bs_id = BitstreamId::new(ck.task.0.clone(), ck.ver.0);
         let bs = self.bitstreams.get(&bs_id).expect("pre-generated");
@@ -693,6 +750,25 @@ impl Scheduler {
         // the single unpin at completion
         self.qos_stats.victims_resumed += 1;
         self.qos_stats.preempt_cycles += restore;
+        if self.prov_armed {
+            self.prov_log.push(Decision::new(
+                now,
+                rt.instance.request,
+                DecisionKind::Variant {
+                    task: ck.task.0.clone(),
+                    chosen: ck.ver.0,
+                    replicas: 1,
+                    score: 0.0,
+                    resumed: true,
+                    alts: vec![VariantAlt {
+                        ver: ck.ver.0,
+                        score: 0.0,
+                        replicate: 0,
+                        verdict: AltVerdict::Chosen,
+                    }],
+                },
+            ));
+        }
         self.checkpoints.remove(&rt.instance);
         self.running.insert(
             region.id,
@@ -801,6 +877,27 @@ impl Scheduler {
             }
         }
         drop(probe);
+        if self.prov_armed {
+            let chosen: &[RegionId] = selected.as_deref().unwrap_or(&[]);
+            let ranks: Vec<VictimRank> = candidates
+                .iter()
+                .map(|c| VictimRank {
+                    region: c.region.0,
+                    class: c.class.name(),
+                    remaining: c.remaining,
+                    evicted: chosen.contains(&c.region),
+                })
+                .collect();
+            self.prov_log.push(Decision::new(
+                now,
+                rt.instance.request,
+                DecisionKind::Preempt {
+                    task: rt.task.0.clone(),
+                    candidates: ranks,
+                    evicted: chosen.len() as u32,
+                },
+            ));
+        }
         let Some(victims) = selected else {
             return false;
         };
@@ -1076,7 +1173,10 @@ impl Scheduler {
             None
         };
         let mut blocked: Vec<(VariantId, SliceDemand)> = Vec::new();
-        for opt in options {
+        // Provenance: verdict per walked option, in preference order
+        // (empty and never pushed to while disarmed).
+        let mut alts: Vec<VariantAlt> = Vec::new();
+        for (idx, &opt) in options.iter().enumerate() {
             let spec = self.lib.get(&rt.task).expect("options imply spec");
             let variant = spec.variant(opt.ver).expect("option from spec").clone();
             // Power-cap governor: refuse options whose projected draw
@@ -1088,6 +1188,9 @@ impl Scheduler {
                 let projected =
                     self.option_power(variant.demand, opt.replicate, opt.exclusive);
                 if !self.meter.admits(&projected) {
+                    if self.prov_armed {
+                        alts.push(alt_of(&opt, AltVerdict::PowerCap));
+                    }
                     continue;
                 }
             }
@@ -1104,9 +1207,17 @@ impl Scheduler {
                     // remember blocked variants (in preference order):
                     // they are what a compaction should make room for
                     blocked.push((opt.ver, variant.demand));
+                    if self.prov_armed {
+                        alts.push(alt_of(&opt, AltVerdict::NoFitSlices));
+                    }
                     continue;
                 }
-                AllocOutcome::NeverFits => continue,
+                AllocOutcome::NeverFits => {
+                    if self.prov_armed {
+                        alts.push(alt_of(&opt, AltVerdict::NeverFits));
+                    }
+                    continue;
+                }
             };
 
             // DPR: stream the variant's bitstream into the region
@@ -1181,6 +1292,24 @@ impl Scheduler {
                     finish,
                 },
             );
+            if self.prov_armed {
+                alts.push(alt_of(&opt, AltVerdict::Chosen));
+                for later in &options[idx + 1..] {
+                    alts.push(alt_of(later, AltVerdict::NotTried));
+                }
+                self.prov_log.push(Decision::new(
+                    now,
+                    rt.instance.request,
+                    DecisionKind::Variant {
+                        task: rt.task.0.clone(),
+                        chosen: opt.ver.0,
+                        replicas,
+                        score: opt.eff_throughput,
+                        resumed: false,
+                        alts: std::mem::take(&mut alts),
+                    },
+                ));
+            }
             return Attempt::Launched(Launch {
                 instance: rt.instance,
                 task: rt.task.clone(),
@@ -1194,6 +1323,13 @@ impl Scheduler {
                 cache_hit: dpr_out.cache_hit,
                 resumed: false,
             });
+        }
+        if self.prov_armed && !alts.is_empty() {
+            self.prov_log.push(Decision::new(
+                now,
+                rt.instance.request,
+                DecisionKind::NoFit { task: rt.task.0.clone(), alts },
+            ));
         }
         if blocked.is_empty() {
             Attempt::Impossible
@@ -1299,18 +1435,49 @@ impl Scheduler {
                 None => continue,
             };
             let costs = self.step_costs(&plan);
-            if self.planner.policy() == DefragPolicyKind::CostAware {
-                // the plan is repaid when the unblocked task's execution
-                // time exceeds the cycles the migration pass costs
-                let gain = self
-                    .lib
+            let total_cost: u64 = costs.iter().sum();
+            // the plan is repaid when the unblocked task's execution
+            // time exceeds the cycles the migration pass costs
+            let cost_aware = self.planner.policy() == DefragPolicyKind::CostAware;
+            let gain = if cost_aware || self.prov_armed {
+                self.lib
                     .get(&rt.task)
                     .ok()
                     .and_then(|spec| spec.variant(*ver).map(|v| spec.exec_cycles(v)))
-                    .unwrap_or(0);
-                if costs.iter().sum::<u64>() > gain {
-                    continue;
+                    .unwrap_or(0)
+            } else {
+                0
+            };
+            if cost_aware && total_cost > gain {
+                if self.prov_armed {
+                    self.prov_log.push(Decision::new(
+                        now,
+                        rt.instance.request,
+                        DecisionKind::Defrag {
+                            task: rt.task.0.clone(),
+                            ver: ver.0,
+                            moves: plan.steps.len() as u32,
+                            cost: total_cost,
+                            gain,
+                            accepted: false,
+                        },
+                    ));
                 }
+                continue;
+            }
+            if self.prov_armed {
+                self.prov_log.push(Decision::new(
+                    now,
+                    rt.instance.request,
+                    DecisionKind::Defrag {
+                        task: rt.task.0.clone(),
+                        ver: ver.0,
+                        moves: plan.steps.len() as u32,
+                        cost: total_cost,
+                        gain,
+                        accepted: true,
+                    },
+                ));
             }
             return match self.commit_plan(&plan, &costs, now) {
                 Ok((_, cycles)) => {
@@ -2153,5 +2320,157 @@ mod tests {
             assert_eq!(a.finish, b.finish);
         }
         assert!(knobs.noc_report().is_none());
+    }
+
+    // ------------------------------------------------ decision provenance
+
+    #[test]
+    fn provenance_disarmed_records_nothing() {
+        let mut s = sched(RegionPolicyKind::FlexibleShape);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 2, AppId::Camera, 0);
+        submit(&mut q, 1, 3, AppId::Harris, 0);
+        s.schedule(&mut q, 0);
+        assert!(s.take_decisions().is_empty());
+    }
+
+    #[test]
+    fn provenance_records_variant_choice_with_rejected_alternatives() {
+        let mut s = sched(RegionPolicyKind::FlexibleShape);
+        s.set_provenance(true);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        // camera takes 14 GLB + 6 array; harris then falls back to a
+        submit(&mut q, 0, 2, AppId::Camera, 0);
+        submit(&mut q, 1, 3, AppId::Harris, 0);
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 2);
+        let ds = s.take_decisions();
+        let harris: Vec<_> = ds
+            .iter()
+            .filter(|d| d.req == 1 && matches!(d.kind, DecisionKind::Variant { .. }))
+            .collect();
+        assert_eq!(harris.len(), 1, "one variant decision per launch");
+        match &harris[0].kind {
+            DecisionKind::Variant { chosen, alts, resumed, .. } => {
+                assert_eq!(*chosen, 'a');
+                assert!(!resumed);
+                assert_eq!(
+                    alts.iter().filter(|a| a.verdict == AltVerdict::Chosen).count(),
+                    1
+                );
+                assert!(
+                    alts.iter().any(|a| a.verdict != AltVerdict::Chosen),
+                    "rejected alternatives must be recorded: {alts:?}"
+                );
+            }
+            other => panic!("unexpected kind {other:?}"),
+        }
+        assert!(s.take_decisions().is_empty(), "drain empties the log");
+    }
+
+    #[test]
+    fn provenance_records_preemption_ranking_and_resume() {
+        let mut s = qos_sched(true);
+        s.set_provenance(true);
+        let mut q = RequestQueue::new();
+        submit(&mut q, 0, 3, AppId::Harris, 0);
+        s.schedule(&mut q, 0);
+        s.take_decisions();
+        q.submit(
+            AppRequest::new(1, 2, AppId::Camera, 10)
+                .with_qos(QosClass::Critical, Some(5_000_000)),
+        );
+        let l2 = s.schedule(&mut q, 10);
+        assert_eq!(l2.len(), 1);
+        let ds = s.take_decisions();
+        let preempt = ds
+            .iter()
+            .find(|d| matches!(d.kind, DecisionKind::Preempt { .. }))
+            .expect("eviction must leave a preempt decision");
+        assert_eq!(preempt.req, 1);
+        match &preempt.kind {
+            DecisionKind::Preempt { candidates, evicted, .. } => {
+                assert_eq!(*evicted, 1);
+                assert_eq!(candidates.len(), 1);
+                assert!(candidates[0].evicted);
+                assert_eq!(candidates[0].class, "best-effort");
+            }
+            other => panic!("unexpected kind {other:?}"),
+        }
+        assert!(
+            ds.iter().any(|d| matches!(d.kind, DecisionKind::NoFit { .. })),
+            "the blocked first attempt must leave a nofit root cause"
+        );
+
+        // complete the critical task → the victim resumes, provenanced
+        let inst = s.complete(l2[0].region, l2[0].finish).unwrap();
+        q.mark_complete(inst, l2[0].finish).unwrap();
+        let l3 = s.schedule(&mut q, l2[0].finish);
+        assert_eq!(l3.len(), 1);
+        let ds = s.take_decisions();
+        assert!(
+            ds.iter().any(|d| matches!(
+                d.kind,
+                DecisionKind::Variant { resumed: true, .. }
+            )),
+            "resume must record a resumed variant decision: {ds:?}"
+        );
+    }
+
+    #[test]
+    fn provenance_records_defrag_accept_and_cost_reject() {
+        let (mut s, mut q) = fragmented_sched(DefragPolicyKind::Greedy);
+        s.set_provenance(true);
+        submit(&mut q, 10, 2, AppId::Camera, 100);
+        assert_eq!(s.schedule(&mut q, 100).len(), 1);
+        let ds = s.take_decisions();
+        let accepted = ds
+            .iter()
+            .find(|d| matches!(d.kind, DecisionKind::Defrag { accepted: true, .. }))
+            .expect("committed plan must be provenanced");
+        match &accepted.kind {
+            DecisionKind::Defrag { moves, cost, .. } => {
+                assert_eq!(*moves, 1);
+                assert_eq!(*cost, 64 + 3344 + 16_384);
+            }
+            other => panic!("unexpected kind {other:?}"),
+        }
+
+        // cost-aware reject: blow up the GLB bank size so the copy is
+        // never repaid (mirrors cost_aware_defrag_refuses_unrepaid_plans)
+        let mut cfg = presets::cloud_scenario(RegionPolicyKind::FlexibleShape);
+        cfg.arch.glb_bank_kib = 1 << 20;
+        cfg.scheduler.policy = SchedulerPolicyKind::FcfsFirstFit;
+        cfg.scheduler.defrag_policy = DefragPolicyKind::CostAware;
+        cfg.scheduler.defrag_threshold = 0.25;
+        let mut s = Scheduler::new(&cfg, TaskLibrary::table1(), DprMode::Fast);
+        s.set_provenance(true);
+        s.preload_all();
+        let mut q = RequestQueue::new();
+        for seq in 0..4 {
+            submit(&mut q, seq, 3, AppId::Harris, 0);
+        }
+        let launches = s.schedule(&mut q, 0);
+        assert_eq!(launches.len(), 4);
+        for i in [1usize, 3] {
+            let inst = s.complete(launches[i].region, 100).unwrap();
+            q.mark_complete(inst, 100).unwrap();
+        }
+        s.take_decisions();
+        submit(&mut q, 10, 2, AppId::Camera, 100);
+        assert!(s.schedule(&mut q, 100).is_empty());
+        let ds = s.take_decisions();
+        let rejected = ds
+            .iter()
+            .find(|d| matches!(d.kind, DecisionKind::Defrag { accepted: false, .. }))
+            .expect("cost-aware refusal must be provenanced");
+        match &rejected.kind {
+            DecisionKind::Defrag { cost, gain, .. } => {
+                assert!(cost > gain, "refusal implies cost {cost} > gain {gain}");
+            }
+            other => panic!("unexpected kind {other:?}"),
+        }
     }
 }

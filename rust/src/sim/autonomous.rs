@@ -135,6 +135,7 @@ pub fn run_edge_observed(
         sched.preload_all();
     }
     sched.set_obs(obs.on());
+    sched.set_provenance(obs.provenance_on());
 
     let frame_cycles = (cfg.arch.core_clock_mhz as f64 * 1e6 / wl.fps) as u64;
     let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
@@ -227,6 +228,15 @@ pub fn run_edge_observed(
                             deadline: done.deadline,
                         });
                     }
+                    if let Some(wd) = obs.watchdog.as_mut() {
+                        let rec = SloRecord {
+                            class: done.class,
+                            arrival: done.arrival_cycle,
+                            completion: now,
+                            deadline: done.deadline,
+                        };
+                        wd.record_completion(done.class, rec.missed());
+                    }
                     let k = frame_of.remove(&done.seq).ok_or_else(|| {
                         Error::SimInvariant(format!("request {} has no frame", done.seq))
                     })?;
@@ -268,6 +278,25 @@ pub fn run_edge_observed(
             for (at, kind) in sched.take_obs_events() {
                 obs.journal.stage(at, NO_REQ, 0, kind);
             }
+            if obs.provenance_on() {
+                for d in sched.take_decisions() {
+                    obs.record_decision(d);
+                }
+            }
+        }
+        let alerts = if let Some(wd) = obs.watchdog.as_mut() {
+            let (_, ua) = sched.regions().utilization();
+            wd.sample_util(0, ua);
+            let watts = sched.energy().current_windowed_watts();
+            if watts > 0.0 {
+                wd.sample_power(0, watts);
+            }
+            wd.poll(now)
+        } else {
+            Vec::new()
+        };
+        for a in &alerts {
+            obs.raise_alert(a);
         }
     }
 
@@ -287,6 +316,7 @@ pub fn run_edge_observed(
         for f in latency.frames() {
             lat.observe(f.total());
         }
+        reg.set_counter("cgra_obs_journal_dropped_total", &[], obs.journal.dropped());
         sched.export_metrics(reg, None);
     }
     let mig = sched.migration_stats();

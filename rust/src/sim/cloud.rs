@@ -163,6 +163,7 @@ pub fn run_cloud_observed(
     let mut sched = Scheduler::new(cfg, lib.clone(), DprMode::Fast);
     sched.preload_all();
     sched.set_obs(obs.on());
+    sched.set_provenance(obs.provenance_on());
 
     let cycles_per_ms = cfg.arch.core_clock_mhz as u64 * 1000;
     let duration: Cycle = (wl.duration_ms * cycles_per_ms as f64) as u64;
@@ -264,6 +265,15 @@ pub fn run_cloud_observed(
                             deadline: done.deadline,
                         });
                     }
+                    if let Some(wd) = obs.watchdog.as_mut() {
+                        let rec = SloRecord {
+                            class: done.class,
+                            arrival,
+                            completion: now,
+                            deadline: done.deadline,
+                        };
+                        wd.record_completion(done.class, rec.missed());
+                    }
                     ntat.record(NtatRecord {
                         app,
                         arrival,
@@ -299,12 +309,30 @@ pub fn run_cloud_observed(
             for (at, kind) in sched.take_obs_events() {
                 obs.journal.stage(at, NO_REQ, 0, kind);
             }
+            if obs.provenance_on() {
+                for d in sched.take_decisions() {
+                    obs.record_decision(d);
+                }
+            }
         }
         // utilization/fragmentation are piecewise-constant between events
         let (ug, ua) = sched.regions().utilization();
         glb_util.sample(now, (ug * cfg.arch.glb_slices() as f64).round() as u32);
         arr_util.sample(now, (ua * cfg.arch.array_slices() as f64).round() as u32);
         frag.sample(now, sched.regions().fragmentation());
+        let alerts = if let Some(wd) = obs.watchdog.as_mut() {
+            wd.sample_util(0, ua);
+            let watts = sched.energy().current_windowed_watts();
+            if watts > 0.0 {
+                wd.sample_power(0, watts);
+            }
+            wd.poll(now)
+        } else {
+            Vec::new()
+        };
+        for a in &alerts {
+            obs.raise_alert(a);
+        }
     }
 
     if queue.open_requests() != 0 {
@@ -322,6 +350,7 @@ pub fn run_cloud_observed(
         reg.set_counter("cgra_sched_launch_total", &[], launches);
         reg.set_gauge("cgra_glb_utilization", &[], glb_util.mean());
         reg.set_gauge("cgra_array_utilization", &[], arr_util.mean());
+        reg.set_counter("cgra_obs_journal_dropped_total", &[], obs.journal.dropped());
         sched.export_metrics(reg, None);
     }
     let mig = sched.migration_stats();

@@ -227,6 +227,7 @@ pub fn run_cloud_pool_observed(
     let mut pool = FabricPool::new(cfg, lib.clone(), DprMode::Fast)?;
     pool.preload_all();
     pool.set_obs(obs.on());
+    pool.set_provenance(obs.provenance_on());
     // the `shard=` trace tag (and journal shard ids) appear on
     // multi-shard pools only, keeping single-shard traces byte-identical
     // to the single-fabric simulator's
@@ -320,6 +321,15 @@ pub fn run_cloud_pool_observed(
                             deadline: done.deadline,
                         });
                     }
+                    if let Some(wd) = obs.watchdog.as_mut() {
+                        let rec = SloRecord {
+                            class: done.class,
+                            arrival,
+                            completion: now,
+                            deadline: done.deadline,
+                        };
+                        wd.record_completion(done.class, rec.missed());
+                    }
                     ntat.record(NtatRecord {
                         app,
                         arrival,
@@ -355,10 +365,33 @@ pub fn run_cloud_pool_observed(
             for (s, at, kind) in pool.take_obs_events() {
                 obs.journal.stage(at, NO_REQ, s, kind);
             }
+            if obs.provenance_on() {
+                for d in pool.take_decisions() {
+                    obs.record_decision(d);
+                }
+            }
         }
         let (busy_glb, busy_arr) = pool.busy_slices();
         glb_util.sample(now, busy_glb);
         arr_util.sample(now, busy_arr);
+        let alerts = if let Some(wd) = obs.watchdog.as_mut() {
+            for i in 0..pool.shard_count() {
+                if let Some(sch) = pool.scheduler(ShardId(i as u32)) {
+                    let (_, ua) = sch.regions().utilization();
+                    wd.sample_util(i as u32, ua);
+                    let watts = sch.energy().current_windowed_watts();
+                    if watts > 0.0 {
+                        wd.sample_power(i as u32, watts);
+                    }
+                }
+            }
+            wd.poll(now)
+        } else {
+            Vec::new()
+        };
+        for a in &alerts {
+            obs.raise_alert(a);
+        }
     }
 
     if pool.queue_open_requests() != 0 {
@@ -374,6 +407,7 @@ pub fn run_cloud_pool_observed(
         reg.set_counter("cgra_sim_completed_total", &[], completed);
         reg.set_counter("cgra_sched_launch_total", &[], launches);
         reg.set_counter("cgra_pool_busy_rejections_total", &[], pool.stats().busy_rejections);
+        reg.set_counter("cgra_obs_journal_dropped_total", &[], obs.journal.dropped());
         pool.export_metrics(reg);
     }
     let mig = pool.migration_stats();
@@ -439,6 +473,7 @@ pub fn run_edge_pool_observed(
         pool.preload_all();
     }
     pool.set_obs(obs.on());
+    pool.set_provenance(obs.provenance_on());
     let multi = pool.shard_count() > 1;
 
     let frame_cycles = (cfg.arch.core_clock_mhz as f64 * 1e6 / wl.fps) as u64;
@@ -548,6 +583,15 @@ pub fn run_edge_pool_observed(
                             deadline: done.deadline,
                         });
                     }
+                    if let Some(wd) = obs.watchdog.as_mut() {
+                        let rec = SloRecord {
+                            class: done.class,
+                            arrival: done.arrival_cycle,
+                            completion: now,
+                            deadline: done.deadline,
+                        };
+                        wd.record_completion(done.class, rec.missed());
+                    }
                     let k = frame_of.remove(&done.seq).ok_or_else(|| {
                         Error::SimInvariant(format!("request {} has no frame", done.seq))
                     })?;
@@ -591,6 +635,29 @@ pub fn run_edge_pool_observed(
             for (s, at, kind) in pool.take_obs_events() {
                 obs.journal.stage(at, NO_REQ, s, kind);
             }
+            if obs.provenance_on() {
+                for d in pool.take_decisions() {
+                    obs.record_decision(d);
+                }
+            }
+        }
+        let alerts = if let Some(wd) = obs.watchdog.as_mut() {
+            for i in 0..pool.shard_count() {
+                if let Some(sch) = pool.scheduler(ShardId(i as u32)) {
+                    let (_, ua) = sch.regions().utilization();
+                    wd.sample_util(i as u32, ua);
+                    let watts = sch.energy().current_windowed_watts();
+                    if watts > 0.0 {
+                        wd.sample_power(i as u32, watts);
+                    }
+                }
+            }
+            wd.poll(now)
+        } else {
+            Vec::new()
+        };
+        for a in &alerts {
+            obs.raise_alert(a);
         }
     }
 
@@ -610,6 +677,7 @@ pub fn run_edge_pool_observed(
         for f in latency.frames() {
             lat.observe(f.total());
         }
+        reg.set_counter("cgra_obs_journal_dropped_total", &[], obs.journal.dropped());
         pool.export_metrics(reg);
     }
 

@@ -110,20 +110,38 @@ impl WireClient {
         Ok(reply)
     }
 
+    /// Continuation-line count named by a multi-line reply header
+    /// (`STATS shards=`/`classes=`, `METRICS lines=`, `EXPLAIN …
+    /// lines=`, `DUMP lines=`); 0 for single-line replies.
+    fn continuation_count(header: &str) -> usize {
+        let framed = header.starts_with("STATS shards=")
+            || header.starts_with("STATS classes=")
+            || header.starts_with("METRICS lines=")
+            || header.starts_with("EXPLAIN req=")
+            || header.starts_with("DUMP lines=");
+        if !framed {
+            return 0;
+        }
+        header
+            .split_whitespace()
+            .find_map(|tok| {
+                tok.strip_prefix("lines=")
+                    .or_else(|| tok.strip_prefix("shards="))
+                    .or_else(|| tok.strip_prefix("classes="))
+            })
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0)
+    }
+
     /// Send one protocol line and read the *whole* reply, following the
-    /// count-framing rule: a `STATS shards=<n>` or `STATS classes=<n>`
-    /// header is followed by `n` continuation lines; everything else is
-    /// one line.  Multi-line replies come back joined with `\n` —
-    /// byte-identical to the binary protocol's reply payload, which is
-    /// what the conformance suite compares.
+    /// count-framing rule: a header naming a continuation count
+    /// ([`Self::continuation_count`]) is followed by that many lines;
+    /// everything else is one line.  Multi-line replies come back
+    /// joined with `\n` — byte-identical to the binary protocol's reply
+    /// payload, which is what the conformance suite compares.
     pub fn send_blob(&mut self, line: &str) -> Result<String> {
         let header = self.send(line)?;
-        let n = ["STATS shards=", "STATS classes="]
-            .iter()
-            .find_map(|p| header.strip_prefix(p))
-            .and_then(|v| v.split_whitespace().next())
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(0);
+        let n = Self::continuation_count(&header);
         if n == 0 {
             return Ok(header);
         }
@@ -136,16 +154,96 @@ impl WireClient {
         Ok(blob)
     }
 
-    /// `METRICS`: reads the `METRICS lines=<n>` header plus the `n`
-    /// Prometheus-style exposition lines that follow, returning the
-    /// exposition lines (comment lines included).
+    /// `METRICS`: reads the `METRICS lines=<n> dropped=<d>` header plus
+    /// the `n` Prometheus-style exposition lines that follow, returning
+    /// the exposition lines (comment lines included).
     pub fn metrics(&mut self) -> Result<Vec<String>> {
+        Ok(self.metrics_full()?.1)
+    }
+
+    /// `METRICS` returning `(header, exposition lines)` — the header
+    /// also carries the journal-drop count (`dropped=<d>`).
+    pub fn metrics_full(&mut self) -> Result<(String, Vec<String>)> {
         let header = self.send("METRICS")?;
         let n: usize = header
             .strip_prefix("METRICS lines=")
+            .and_then(|v| v.split_whitespace().next())
             .and_then(|v| v.parse().ok())
             .ok_or_else(|| Error::Runtime(format!("bad METRICS header: {header}")))?;
-        self.read_reply_lines(n, "metrics")
+        let lines = self.read_reply_lines(n, "metrics")?;
+        Ok((header, lines))
+    }
+
+    /// `EXPLAIN <req>`: reads the `EXPLAIN req=<r> lines=<n>` header
+    /// plus the `n` decision-chain lines; returns `(header, lines)`.
+    pub fn explain(&mut self, req: u64) -> Result<(String, Vec<String>)> {
+        let header = self.send(&format!("EXPLAIN {req}"))?;
+        let n: usize = header
+            .starts_with("EXPLAIN req=")
+            .then(|| {
+                header
+                    .split_whitespace()
+                    .find_map(|tok| tok.strip_prefix("lines="))
+                    .and_then(|v| v.parse().ok())
+            })
+            .flatten()
+            .ok_or_else(|| Error::Runtime(format!("bad EXPLAIN header: {header}")))?;
+        let lines = self.read_reply_lines(n, "explain")?;
+        Ok((header, lines))
+    }
+
+    /// `DUMP`: reads the `DUMP lines=1` header and returns the one-line
+    /// flight-record JSON that follows.
+    pub fn dump(&mut self) -> Result<String> {
+        let header = self.send("DUMP")?;
+        if header != "DUMP lines=1" {
+            return Err(Error::Runtime(format!("bad DUMP header: {header}")));
+        }
+        Ok(self.read_reply_lines(1, "dump")?.remove(0))
+    }
+
+    /// `WATCH`: subscribe to the live journal stream.  Events published
+    /// after the `WATCH ok` reply are queued server-side whether or not
+    /// the client is reading yet; collect them with
+    /// [`WireClient::watch_finish`].
+    pub fn watch_subscribe(&mut self) -> Result<()> {
+        let ok = self.send("WATCH")?;
+        if ok != "WATCH ok" {
+            return Err(Error::Runtime(format!("bad WATCH reply: {ok}")));
+        }
+        Ok(())
+    }
+
+    /// Read until `min_events` `EVENT` lines have arrived on a live
+    /// watch, then end the stream (any request line does) and return
+    /// `(events, trailer)` — the trailer is the `WATCH done events=<d>
+    /// dropped=<n>` line; events that were in flight when the stream
+    /// ended are included.
+    pub fn watch_finish(&mut self, min_events: usize) -> Result<(Vec<String>, String)> {
+        let mut events = Vec::new();
+        while events.len() < min_events {
+            let line = self.read_reply_lines(1, "watch")?.remove(0);
+            events.push(line);
+        }
+        // any request line ends the stream (consumed, not executed)
+        self.writer
+            .write_all(b"STOP\n")
+            .map_err(|e| Error::io("write", e))?;
+        loop {
+            let line = self.read_reply_lines(1, "watch")?.remove(0);
+            if line.starts_with("WATCH done") {
+                return Ok((events, line));
+            }
+            events.push(line);
+        }
+    }
+
+    /// [`WireClient::watch_subscribe`] + [`WireClient::watch_finish`]
+    /// in one call, for sessions where the event source is already
+    /// running.
+    pub fn watch_collect(&mut self, min_events: usize) -> Result<(Vec<String>, String)> {
+        self.watch_subscribe()?;
+        self.watch_finish(min_events)
     }
 
     /// SUBMIT with retry on `BUSY` backpressure; returns the final
@@ -259,5 +357,47 @@ impl BinWireClient {
     /// Framed QUIT; returns the `BYE` reply.
     pub fn quit(&mut self) -> Result<BinReply> {
         self.request(Opcode::Quit, 0, b"")
+    }
+
+    /// Framed EXPLAIN; the payload is the decimal request sequence
+    /// number.
+    pub fn explain(&mut self, req: u64) -> Result<BinReply> {
+        self.request(Opcode::Explain, 0, req.to_string().as_bytes())
+    }
+
+    /// Framed DUMP; the reply payload is `DUMP lines=1\n<json>`.
+    pub fn dump(&mut self) -> Result<BinReply> {
+        self.request(Opcode::Dump, 0, b"")
+    }
+
+    /// Framed WATCH: subscribe to the live journal stream (events are
+    /// queued server-side from the `WATCH ok` reply onward).
+    pub fn watch_subscribe(&mut self) -> Result<()> {
+        let ok = self.request(Opcode::Watch, 0, b"")?;
+        if ok.text != "WATCH ok" {
+            return Err(Error::Runtime(format!("bad WATCH reply: {}", ok.text)));
+        }
+        Ok(())
+    }
+
+    /// Read `min_events` `EVENT` frames on a live watch, end the stream
+    /// with a no-op request (consumed by the server, not executed), and
+    /// return `(event frames, trailer frame)`.
+    pub fn watch_finish(&mut self, min_events: usize) -> Result<(Vec<BinReply>, BinReply)> {
+        let mut events = Vec::new();
+        while events.len() < min_events {
+            events.push(self.read_reply()?);
+        }
+        let req_id = self.next_req_id;
+        self.next_req_id += 1;
+        let wire = frame::encode(Opcode::Stats, 0, req_id, b"");
+        self.stream.write_all(&wire).map_err(|e| Error::io("write frame", e))?;
+        loop {
+            let r = self.read_reply()?;
+            if r.text.starts_with("WATCH done") {
+                return Ok((events, r));
+            }
+            events.push(r);
+        }
     }
 }

@@ -283,11 +283,15 @@ fn two_shard_pool_merges_completions_and_sums_tenant_counters() {
 }
 
 /// Parse one Prometheus exposition line into `(series, value)`;
-/// `# TYPE` comment lines return `None`.  Panics on anything malformed
-/// — this is the wire-format contract of the `METRICS` command.
+/// `# HELP` / `# TYPE` comment lines return `None`.  Panics on anything
+/// malformed — this is the wire-format contract of the `METRICS`
+/// command.
 fn parse_metric(line: &str) -> Option<(String, f64)> {
     if line.starts_with('#') {
-        assert!(line.starts_with("# TYPE "), "bad comment line: {line}");
+        assert!(
+            line.starts_with("# TYPE ") || line.starts_with("# HELP "),
+            "bad comment line: {line}"
+        );
         return None;
     }
     let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
@@ -357,6 +361,74 @@ fn metrics_scrape_mid_load_parses_and_conserves() {
     assert!(series.keys().any(|k| k.starts_with("cgra_dpr_cache_hits_total")), "{lines:?}");
     scraper.send("QUIT").expect("quit");
     server.shutdown();
+}
+
+/// The WATCH hub under backpressure on both fronts: a cap-1
+/// per-subscriber queue and a submission burst that outruns the
+/// threaded front's 100 ms drain tick.  The submission path must never
+/// stall (the hub drops instead of blocking), every event published
+/// while subscribed is either delivered or counted as dropped, and the
+/// drop count surfaces in both the `WATCH done` trailer and the
+/// METRICS exposition.
+#[test]
+fn watch_backpressure_drops_and_counts_instead_of_blocking() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    const BURST: u64 = 12;
+    for mode in [ServerModeKind::Threaded, ServerModeKind::Reactor] {
+        let mut cfg = stub_config();
+        cfg.server.mode = mode;
+        cfg.obs.enabled = true;
+        cfg.obs.watch_queue_cap = 1;
+        let server = Server::start(&cfg, "127.0.0.1:0").unwrap();
+        let addr = server.addr;
+
+        let mut watcher = WireClient::connect(addr).expect("connect watcher");
+        watcher.watch_subscribe().expect("subscribe");
+
+        // the burst: the executors publish each journal event the
+        // moment it is recorded — a full subscriber queue must drop,
+        // never stall the submission path
+        let mut loader = WireClient::connect(addr).expect("connect loader");
+        for i in 0..BURST {
+            let tenant = (i % 4) as u32;
+            submit_ok(&mut loader, tenant, APPS[tenant as usize]);
+        }
+
+        let (events, trailer) = watcher.watch_finish(0).expect("watch finish");
+        let field = |k: &str| -> u64 {
+            trailer
+                .split_whitespace()
+                .find_map(|f| f.strip_prefix(k))
+                .unwrap_or_else(|| panic!("no {k} in {trailer}"))
+                .parse()
+                .unwrap_or_else(|_| panic!("bad {k} in {trailer}"))
+        };
+        let (delivered, dropped) = (field("events="), field("dropped="));
+        assert_eq!(delivered as usize, events.len(), "{trailer}");
+        // conservation: every event published while subscribed was
+        // either delivered or dropped — none blocked, none lost
+        assert!(
+            delivered + dropped >= BURST,
+            "{mode:?}: {delivered} delivered + {dropped} dropped < burst of {BURST}"
+        );
+        if mode == ServerModeKind::Threaded {
+            // the burst lands inside at most a couple of 100 ms drain
+            // windows, so the cap-1 queue must have overflowed
+            assert!(dropped > 0, "no drops despite cap-1 queue: {trailer}");
+            // the hub-wide counter agrees with the trailer
+            let (_, lines) = loader.metrics_full().expect("metrics");
+            let series: std::collections::BTreeMap<String, f64> =
+                lines.iter().filter_map(|l| parse_metric(l)).collect();
+            assert_eq!(
+                series.get("cgra_obs_watch_dropped_total"),
+                Some(&(dropped as f64)),
+                "{lines:?}"
+            );
+        }
+        loader.send("QUIT").expect("quit");
+        watcher.send("QUIT").expect("quit");
+        server.shutdown();
+    }
 }
 
 /// Acceptance check: aggregate completed-SUBMIT throughput of ≥4
